@@ -1,0 +1,113 @@
+//! Deployment pipeline: from a distilled kernel model to the smallest
+//! sketch that preserves accuracy, saved as a self-contained edge
+//! artifact (RSSK) and verified after reload.
+//!
+//! This is the workflow a practitioner follows after `make artifacts`:
+//! sweep sketch sizes (seconds — no retraining), pick the knee of the
+//! accuracy/memory curve subject to a tolerance vs the exact kernel
+//! model, ship the binary sketch.
+//!
+//! Run: `cargo run --release --example distill_deploy [dataset] [tol]`
+
+use repsketch::data::{Dataset, Task};
+use repsketch::kernel::{KernelModel, KernelParams};
+use repsketch::metrics::cost;
+use repsketch::nn::{Mlp, MlpScratch};
+use repsketch::runtime::registry::DatasetMeta;
+use repsketch::sketch::{QueryScratch, RaceSketch, SketchConfig};
+
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "adult".into());
+    let tol: f32 = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.01);
+    let root = repsketch::artifacts_dir();
+    anyhow::ensure!(root.join(".stamp").exists(),
+                    "run `make artifacts` first");
+    let dir = root.join(&name);
+    let meta = DatasetMeta::load(&dir)?;
+    let ds = Dataset::load_artifact(&root, &name, "test", meta.dim,
+                                    meta.task)?;
+    let kp = KernelParams::load(dir.join("kernel_params.bin"))?;
+    let kernel = KernelModel::new(kp.clone());
+    let teacher = Mlp::load(dir.join("nn_weights.bin"))?;
+
+    // Reference scores.
+    let mut ms = MlpScratch::default();
+    let nn_preds: Vec<f32> =
+        ds.rows().map(|r| teacher.forward_with(r, &mut ms)).collect();
+    let kern_preds: Vec<f32> =
+        ds.rows().map(|r| kernel.predict(r)).collect();
+    let nn_score = ds.score(&nn_preds);
+    let kern_score = ds.score(&kern_preds);
+    println!(
+        "{name}: teacher={nn_score:.4}  kernel={kern_score:.4}  \
+         (tolerance {tol})"
+    );
+
+    // Sweep (rows, cols) ladders; keep the cheapest config within
+    // tolerance of the kernel model's score.
+    println!(
+        "\n{:>6} {:>6} {:>10} {:>10} {:>10} {:>8}",
+        "L", "R", "params", "vs NN", "score", "ok?"
+    );
+    let mut best: Option<(usize, usize, usize, f32)> = None;
+    for rows in [100usize, 200, 300, 500, 1000, 2000] {
+        for cols in [8usize, 16, 32] {
+            let sk = RaceSketch::build(
+                &kp,
+                &SketchConfig { rows, cols, ..Default::default() },
+            );
+            let mut qs = QueryScratch::default();
+            let preds: Vec<f32> =
+                ds.rows().map(|r| sk.query_with(r, &mut qs)).collect();
+            let score = ds.score(&preds);
+            let ok = match meta.task {
+                Task::Classification => score >= kern_score - tol,
+                Task::Regression => score <= kern_score + tol,
+            };
+            let params = sk.param_count();
+            println!(
+                "{rows:>6} {cols:>6} {params:>10} {:>9.1}x {score:>10.4} \
+                 {:>8}",
+                teacher.param_count() as f64 / params as f64,
+                if ok { "yes" } else { "-" }
+            );
+            if ok && best.map(|(_, _, bp, _)| params < bp).unwrap_or(true) {
+                best = Some((rows, cols, params, score));
+            }
+        }
+    }
+
+    let (rows, cols, params, score) =
+        best.ok_or_else(|| anyhow::anyhow!("no config within tolerance"))?;
+    println!(
+        "\nselected L={rows} R={cols}: {params} params \
+         ({} MB at the paper's 64-bit convention), score {score:.4}, \
+         {:.1}x smaller than the teacher",
+        cost::fmt_mb(params),
+        teacher.param_count() as f64 / params as f64
+    );
+
+    // Ship + verify.
+    let sk = RaceSketch::build(
+        &kp,
+        &SketchConfig { rows, cols, ..Default::default() },
+    );
+    let out = std::env::temp_dir().join(format!("{name}_edge_sketch.bin"));
+    sk.save(&out)?;
+    let reloaded = RaceSketch::load(&out)?;
+    let mut qs = QueryScratch::default();
+    let preds: Vec<f32> =
+        ds.rows().map(|r| reloaded.query_with(r, &mut qs)).collect();
+    let reloaded_score = ds.score(&preds);
+    assert_eq!(score, reloaded_score, "reload changed predictions");
+    println!(
+        "deploy artifact {} ({} bytes) verified after reload — \
+         distill_deploy OK",
+        out.display(),
+        reloaded.serialized_size()
+    );
+    Ok(())
+}

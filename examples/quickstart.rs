@@ -1,0 +1,71 @@
+//! Quickstart: the Representer-Sketch workflow on a self-contained toy
+//! problem — no artifacts required.
+//!
+//! 1. Author a weighted kernel model (normally distilled from a neural
+//!    network by `make artifacts`; here hand-built).
+//! 2. Fold it into a RACE sketch (Algorithm 1).
+//! 3. Query with add/sub hashing + counter reads (Algorithm 2) and
+//!    compare against the exact weighted KDE.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use repsketch::kernel::{KernelModel, KernelParams};
+use repsketch::sketch::{QueryScratch, RaceSketch, SketchConfig};
+use repsketch::util::rng::SplitMix64;
+
+fn main() {
+    // --- 1. a weighted kernel model over R^8 ------------------------------
+    let (d, p, m) = (8usize, 8usize, 64usize);
+    let mut rng = SplitMix64::new(42);
+    let mut a = vec![0.0f32; d * p]; // identity projection (d == p)
+    for i in 0..d {
+        a[i * p + i] = 1.0;
+    }
+    let kp = KernelParams {
+        d,
+        p,
+        m,
+        a,
+        x: (0..m * p).map(|_| rng.next_gaussian() as f32).collect(),
+        alpha: (0..m).map(|_| 0.5 + rng.next_f32()).collect(),
+        width: 2.5,
+        lsh_seed: 0xC0FFEE,
+        k_per_row: 2,
+        default_rows: 400,
+        default_cols: 16,
+    };
+    let exact = KernelModel::new(kp.clone());
+
+    // --- 2. sketch it ------------------------------------------------------
+    let sketch = RaceSketch::build(&kp, &SketchConfig::default());
+    println!(
+        "sketch: {} rows x {} cols = {} counters ({} bytes serialized)",
+        sketch.rows,
+        sketch.cols,
+        sketch.counter_count(),
+        sketch.serialized_size()
+    );
+    println!(
+        "kernel model: {} params | sketch: {} params | FLOPs/query: {}",
+        kp.param_count(),
+        sketch.param_count(),
+        sketch.flops_per_query()
+    );
+
+    // --- 3. query ----------------------------------------------------------
+    let mut scratch = QueryScratch::default();
+    println!("\n{:>4} {:>12} {:>12} {:>9}", "q#", "exact f_K", "sketch",
+             "rel err");
+    let mut worst = 0.0f32;
+    for i in 0..8 {
+        let q: Vec<f32> =
+            (0..d).map(|_| rng.next_gaussian() as f32).collect();
+        let want = exact.predict(&q);
+        let got = sketch.query_with(&q, &mut scratch);
+        let rel = (got - want).abs() / want.abs().max(1e-6);
+        worst = worst.max(rel);
+        println!("{i:>4} {want:>12.4} {got:>12.4} {:>8.2}%", rel * 100.0);
+    }
+    assert!(worst < 0.25, "sketch estimate diverged: {worst}");
+    println!("\nquickstart OK (worst rel err {:.2}%)", worst * 100.0);
+}

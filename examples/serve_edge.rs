@@ -1,0 +1,181 @@
+//! **End-to-end driver** (EXPERIMENTS.md §E2E): serve every dataset over
+//! TCP with all backends registered — the Representer-Sketch hot path,
+//! the rust NN/Kernel engines, and the PJRT executables compiled from the
+//! JAX/Pallas AOT artifacts — then drive a real batched client workload
+//! through the socket and report accuracy, latency and throughput per
+//! backend.
+//!
+//! This proves all layers compose: L1 Pallas kernel → L2 JAX model → HLO
+//! text → rust PJRT runtime → dynamic batcher → router → TCP, with
+//! Python nowhere on the request path.
+//!
+//! Run: `cargo run --release --example serve_edge [n_requests_per_lane]`
+
+use repsketch::coordinator::batcher::BatcherConfig;
+use repsketch::coordinator::{
+    backend, BackendKind, Request, Response, Router, RouterConfig, Server,
+};
+use repsketch::data::Dataset;
+use repsketch::runtime::registry::DatasetBundle;
+use repsketch::runtime::Runtime;
+use std::io::{BufRead, BufReader, Write};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const BACKENDS: [BackendKind; 4] = [
+    BackendKind::Sketch,
+    BackendKind::NnRust,
+    BackendKind::KernelRust,
+    BackendKind::NnPjrt,
+];
+
+fn main() -> anyhow::Result<()> {
+    let n_per_lane: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2000);
+    let root = repsketch::artifacts_dir();
+    anyhow::ensure!(root.join(".stamp").exists(),
+                    "run `make artifacts` first");
+
+    // --- build the router with every lane ---------------------------------
+    let mut router = Router::new();
+    let cfg = RouterConfig {
+        batcher: BatcherConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 65_536,
+        },
+    };
+    let datasets = ["adult", "phishing", "skin", "susy", "abalone",
+                    "yearmsd"];
+    let mut testsets = Vec::new();
+    for name in datasets {
+        let bundle = DatasetBundle::load(&root, name)?;
+        let meta = bundle.meta.clone();
+        let ds = Dataset::load_artifact(&root, name, "test", meta.dim,
+                                        meta.task)?;
+        let sketch = bundle.sketch.clone();
+        router.add_lane(name, BackendKind::Sketch, move || {
+            Ok(Box::new(backend::SketchEngine::new(sketch)) as _)
+        }, &cfg);
+        let mlp = bundle.mlp.clone();
+        router.add_lane(name, BackendKind::NnRust, move || {
+            Ok(Box::new(backend::MlpEngine::new(mlp)) as _)
+        }, &cfg);
+        let kp = bundle.kernel.params.clone();
+        router.add_lane(name, BackendKind::KernelRust, move || {
+            Ok(Box::new(backend::KernelEngine {
+                model: repsketch::kernel::KernelModel::new(kp),
+            }) as _)
+        }, &cfg);
+        let dir = root.join(name);
+        let (batch, dim) = (meta.aot_batch, meta.dim);
+        router.add_lane(name, BackendKind::NnPjrt, move || {
+            let rt = Runtime::cpu()?;
+            Ok(Box::new(backend::PjrtEngine {
+                exe: rt.load_hlo(dir.join("nn.hlo.txt"), batch, dim)?,
+            }) as _)
+        }, &cfg);
+        testsets.push((name, ds));
+    }
+    let router = Arc::new(router);
+
+    // --- TCP server --------------------------------------------------------
+    let server = Server::bind(router.clone(), "127.0.0.1:0")?;
+    let addr = server.local_addr();
+    let stop = server.stop_handle();
+    let server_thread = std::thread::spawn(move || server.serve());
+    println!("serving 6 datasets x {} backends on {addr}\n", BACKENDS.len());
+
+    // --- drive load through the socket, one lane at a time ----------------
+    println!(
+        "{:<10} {:<12} {:>8} {:>9} {:>10} {:>10} {:>12}",
+        "dataset", "backend", "metric", "p50(us)", "p99(us)", "mean(us)",
+        "throughput"
+    );
+    println!("{}", "-".repeat(78));
+    for (name, ds) in &testsets {
+        for kind in BACKENDS {
+            let stream = std::net::TcpStream::connect(addr)?;
+            stream.set_nodelay(true)?;
+            let mut w = stream.try_clone()?;
+            let reader = BufReader::new(stream);
+            let n = n_per_lane.min(ds.len());
+            // writer: stream all requests
+            let reqs: Vec<String> = (0..n)
+                .map(|i| {
+                    let mut line = Request {
+                        id: i as u64 + 1,
+                        model: name.to_string(),
+                        backend: kind,
+                        features: ds.row(i).to_vec(),
+                    }
+                    .to_line();
+                    line.push('\n');
+                    line
+                })
+                .collect();
+            let t0 = Instant::now();
+            let writer = std::thread::spawn(move || {
+                for line in reqs {
+                    if w.write_all(line.as_bytes()).is_err() {
+                        break;
+                    }
+                }
+            });
+            // reader: collect responses
+            let mut preds = vec![0.0f32; n];
+            let mut lats = Vec::with_capacity(n);
+            let mut seen = 0usize;
+            for line in reader.lines() {
+                let resp = Response::parse_line(&line?)
+                    .map_err(|e| anyhow::anyhow!(e))?;
+                let y = resp.result.map_err(|e| anyhow::anyhow!(e))?;
+                preds[(resp.id - 1) as usize] = y;
+                lats.push(resp.latency_us);
+                seen += 1;
+                if seen == n {
+                    break;
+                }
+            }
+            let wall = t0.elapsed();
+            writer.join().ok();
+            lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let sub = Dataset {
+                dim: ds.dim,
+                task: ds.task,
+                x: ds.x[..n * ds.dim].to_vec(),
+                y: ds.y[..n].to_vec(),
+            };
+            let metric = sub.score(&preds);
+            let q = |p: f64| lats[((lats.len() - 1) as f64 * p) as usize];
+            println!(
+                "{:<10} {:<12} {:>8.3} {:>9.0} {:>10.0} {:>10.0} {:>9.0}/s",
+                name,
+                kind.name(),
+                metric,
+                q(0.5),
+                q(0.99),
+                lats.iter().sum::<f64>() / lats.len() as f64,
+                n as f64 / wall.as_secs_f64(),
+            );
+        }
+    }
+
+    println!("\nlane stats:");
+    for (model, kind, submitted, batches, lat) in router.lane_stats() {
+        if submitted > 0 {
+            println!(
+                "  {model}/{kind}: {submitted} reqs in {batches} batches \
+                 (avg batch {:.1}) | {lat}",
+                submitted as f64 / batches.max(1) as f64
+            );
+        }
+    }
+
+    stop.store(true, std::sync::atomic::Ordering::Release);
+    let _ = server_thread.join();
+    println!("\nserve_edge OK");
+    Ok(())
+}

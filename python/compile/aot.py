@@ -1,0 +1,255 @@
+"""AOT build orchestrator (`make artifacts`).
+
+Per dataset: generate data, train the teacher MLP, distill the weighted
+LSH-kernel model, train the Figure-2 baselines (pruning / KD), and emit:
+
+    artifacts/data/<ds>/{train,test}.libsvm
+    artifacts/<ds>/nn.hlo.txt            teacher forward, batch 32
+    artifacts/<ds>/kernel.hlo.txt        kernel model forward (through the
+                                         L1 Pallas KDE kernel), batch 32
+    artifacts/<ds>/nn_weights.bin        RSNN — rust MLP engine weights
+    artifacts/<ds>/kernel_params.bin     RSKP — sketch construction params
+    artifacts/<ds>/pruned_ot_r{N}.bin    one-time pruned @ Nx reduction
+    artifacts/<ds>/pruned_mt_r{N}.bin    multi-time pruned @ Nx reduction
+    artifacts/<ds>/kd_h{W}.bin           KD student, hidden width W
+    artifacts/<ds>/meta.json             config + build-time metrics
+    artifacts/fixtures/parity.json       cross-language LSH test vectors
+
+HLO is exported as *text* (not serialized proto): jax >= 0.5 emits protos
+with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+Usage: python -m compile.aot [--out DIR] [--datasets a,b] [--force]
+Env:   RS_FAST=1 for a quick low-epoch build (dev only).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import binio, datasets, model, train
+from .kernels import ref
+
+AOT_BATCH = 32  # fixed batch for the PJRT executables; callers pad.
+
+# Figure-2 sweep settings.
+PRUNE_REDUCTIONS = [2, 4, 8, 16, 32, 64, 128]
+KD_WIDTHS = [128, 48, 16, 6]
+
+# Kernel-model hyperparameters per dataset: projected dim p, number of
+# representer points M, LSH bucket width r, default sketch rows L.
+KERNEL_HP = {
+    "adult":    dict(p=8,  m=512, width=2.5, rows=500),
+    "phishing": dict(p=8,  m=512, width=2.5, rows=300),
+    "skin":     dict(p=3,  m=256, width=2.0, rows=300),
+    "susy":     dict(p=10, m=768, width=2.5, rows=1000),
+    "abalone":  dict(p=6,  m=256, width=2.0, rows=300),
+    "yearmsd":  dict(p=12, m=512, width=2.5, rows=500),
+}
+DEFAULT_COLS = 16  # sketch columns R ("R less than 20", paper §3.4)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants: the default printer elides big weight
+    # constants as a literal "{...}", which the rust-side text parser
+    # happily mis-parses into zeros — the artifact must be self-contained.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export_hlo(fn, example_args, path: str) -> None:
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+
+
+def metric(pred, y, task: str) -> float:
+    pred = np.asarray(pred); y = np.asarray(y)
+    if task == "classification":
+        return float(((pred > 0) == (y > 0.5)).mean())
+    return float(np.abs(pred - y).mean())
+
+
+def batched_eval(fn, x, batch=4096):
+    outs = [np.asarray(fn(jnp.asarray(x[i:i + batch])))
+            for i in range(0, x.shape[0], batch)]
+    return np.concatenate(outs)
+
+
+def build_dataset(name: str, out_root: str, force: bool) -> None:
+    spec = datasets.SPECS[name]
+    ds_dir = os.path.join(out_root, name)
+    meta_path = os.path.join(ds_dir, "meta.json")
+    if os.path.exists(meta_path) and not force:
+        print(f"[{name}] cached, skipping")
+        return
+    os.makedirs(ds_dir, exist_ok=True)
+    hp = KERNEL_HP[name]
+
+    print(f"[{name}] generating data (d={spec.dim}, task={spec.task})")
+    xtr, ytr, xte, yte = datasets.materialize(name, out_root)
+
+    # ---- teacher --------------------------------------------------------
+    print(f"[{name}] training teacher MLP {spec.hidden}")
+    teacher = model.init_mlp(spec.seed ^ 1, spec.dim, spec.hidden)
+    teacher = train.train_mlp(teacher, xtr, ytr, spec.task, epochs=40)
+    t_out_tr = batched_eval(lambda xb: model.mlp_fwd(teacher, xb), xtr)
+    t_out_te = batched_eval(lambda xb: model.mlp_fwd(teacher, xb), xte)
+    nn_metric = metric(t_out_te, yte, spec.task)
+    print(f"[{name}] teacher test metric: {nn_metric:.4f}")
+    binio.write_nn(os.path.join(ds_dir, "nn_weights.bin"), teacher)
+    export_hlo(lambda xb: (model.mlp_fwd(teacher, xb),),
+               (jax.ShapeDtypeStruct((AOT_BATCH, spec.dim), jnp.float32),),
+               os.path.join(ds_dir, "nn.hlo.txt"))
+
+    # ---- kernel distillation -------------------------------------------
+    print(f"[{name}] distilling kernel model "
+          f"(p={hp['p']}, M={hp['m']}, r={hp['width']}, K={spec.rs_k})")
+    kp = model.init_kernel_model(spec.seed ^ 2, spec.dim, hp["p"], hp["m"],
+                                 x_init=xtr)
+    kp, dloss = train.distill_kernel(
+        kp, xtr, t_out_tr, width=hp["width"], k_per_row=spec.rs_k)
+    k_out_te = batched_eval(
+        lambda xb: model.kernel_fwd_ref(kp, xb, width=hp["width"],
+                                        k_per_row=spec.rs_k), xte)
+    kernel_metric = metric(k_out_te, yte, spec.task)
+    print(f"[{name}] kernel test metric: {kernel_metric:.4f} "
+          f"(distill mse {dloss:.4f})")
+    lsh_seed = (spec.seed * 0x10001) & 0xFFFFFFFFFFFFFFFF
+    binio.write_kernel_params(
+        os.path.join(ds_dir, "kernel_params.bin"),
+        kp["a"], kp["x"], kp["alpha"], width=hp["width"], lsh_seed=lsh_seed,
+        k_per_row=spec.rs_k, default_rows=hp["rows"],
+        default_cols=DEFAULT_COLS)
+    export_hlo(
+        lambda xb: (model.kernel_fwd_pallas(kp, xb, width=hp["width"],
+                                            k_per_row=spec.rs_k),),
+        (jax.ShapeDtypeStruct((AOT_BATCH, spec.dim), jnp.float32),),
+        os.path.join(ds_dir, "kernel.hlo.txt"))
+
+    # ---- figure-2 baselines --------------------------------------------
+    baselines = {}
+    if name in datasets.FIGURE2_DATASETS:
+        teacher_params = model.mlp_param_count(teacher)
+        print(f"[{name}] one-time pruning sweep {PRUNE_REDUCTIONS}")
+        for red in PRUNE_REDUCTIONS:
+            sparsity = 1.0 - 1.0 / red
+            tuned, mask = train.prune_one_time(
+                teacher, xtr, ytr, spec.task, sparsity, epochs=8)
+            binio.write_nn(os.path.join(ds_dir, f"pruned_ot_r{red}.bin"),
+                           tuned)
+            baselines[f"pruned_ot_r{red}"] = {
+                "nnz": train.nnz_params(tuned, mask)}
+        print(f"[{name}] multi-time (iterative) pruning ladder")
+        params = teacher
+        for red in PRUNE_REDUCTIONS:
+            sparsity = 1.0 - 1.0 / red
+            mask = train.global_magnitude_mask(params, sparsity)
+            params = [(w * mw, b * mb)
+                      for (w, b), (mw, mb) in zip(params, mask)]
+            params = train.train_mlp(params, xtr, ytr, spec.task, epochs=6,
+                                     mask=mask, seed=17 + red)
+            binio.write_nn(os.path.join(ds_dir, f"pruned_mt_r{red}.bin"),
+                           params)
+            baselines[f"pruned_mt_r{red}"] = {
+                "nnz": train.nnz_params(params, mask)}
+        print(f"[{name}] KD students {KD_WIDTHS}")
+        for w in KD_WIDTHS:
+            student = train.kd_student(t_out_tr, xtr, ytr, spec.task, (w,))
+            binio.write_nn(os.path.join(ds_dir, f"kd_h{w}.bin"), student)
+            baselines[f"kd_h{w}"] = {
+                "params": model.mlp_param_count(student)}
+
+    # ---- meta ------------------------------------------------------------
+    meta = {
+        "name": name,
+        "dim": spec.dim,
+        "task": spec.task,
+        "n_train": spec.n_train,
+        "n_test": spec.n_test,
+        "hidden": list(spec.hidden),
+        "nn_params": model.mlp_param_count(teacher),
+        "kernel": {
+            "p": hp["p"], "m": hp["m"], "width": hp["width"],
+            "k_per_row": spec.rs_k, "lsh_seed": lsh_seed,
+            "default_rows": hp["rows"], "default_cols": DEFAULT_COLS,
+            "params": model.kernel_param_count(kp),
+        },
+        "aot_batch": AOT_BATCH,
+        "train_metrics": {"nn": nn_metric, "kernel": kernel_metric},
+        "baselines": baselines,
+        "fast_build": train.FAST,
+    }
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"[{name}] done -> {meta_path}")
+
+
+def write_parity_fixtures(out_root: str) -> None:
+    """Cross-language LSH/sketch test vectors replayed by rust tests."""
+    fx_dir = os.path.join(out_root, "fixtures")
+    os.makedirs(fx_dir, exist_ok=True)
+    rng = np.random.default_rng(7)
+    dim, n_hashes, width, seed = 11, 24, 2.5, 0xDEADBEEF
+    k_per_row, n_cols, n_rows = 3, 13, 8
+    x = rng.normal(size=(5, dim)).astype(np.float32)
+    proj, bias = ref.gen_l2lsh_params(seed, dim, n_hashes, width)
+    codes = np.asarray(ref.l2lsh_codes(x, proj, bias, width))
+    cols = ref.rehash_columns(codes, k_per_row, n_cols)
+    pts = rng.normal(size=(17, dim)).astype(np.float32)
+    alpha = rng.normal(size=17).astype(np.float32)
+    kde = np.asarray(ref.weighted_kde(x, pts, alpha, width, k_per_row))
+    pproj, pbias = ref.gen_l2lsh_params(seed, dim, n_rows * k_per_row, width)
+    sketch = ref.build_sketch(pts, alpha, pproj, pbias, width, k_per_row,
+                              n_rows, n_cols)
+    qcodes = np.asarray(ref.l2lsh_codes(x, pproj, pbias, width))
+    qcols = ref.rehash_columns(qcodes, k_per_row, n_cols)
+    mom = ref.query_sketch_mom(sketch, qcols, 4)
+    mean = ref.query_sketch_mean(sketch, qcols)
+    fixture = {
+        "dim": dim, "n_hashes": n_hashes, "width": width, "seed": seed,
+        "k_per_row": k_per_row, "n_cols": n_cols, "n_rows": n_rows,
+        "x": x.tolist(),
+        "splitmix_first8": [int(v) for v in
+                            ref.splitmix64_stream(seed, 8)],
+        "codes": codes.tolist(), "cols": cols.tolist(),
+        "points": pts.tolist(), "alpha": alpha.tolist(),
+        "kde": kde.tolist(),
+        "sketch": sketch.tolist(),
+        "query_cols": qcols.tolist(),
+        "mom_g4": mom.tolist(), "mean": mean.tolist(),
+    }
+    with open(os.path.join(fx_dir, "parity.json"), "w") as f:
+        json.dump(fixture, f)
+    print(f"fixtures -> {fx_dir}/parity.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--datasets", default=",".join(datasets.SPECS))
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    out_root = os.path.abspath(args.out)
+    os.makedirs(out_root, exist_ok=True)
+    write_parity_fixtures(out_root)
+    for name in args.datasets.split(","):
+        build_dataset(name.strip(), out_root, args.force)
+    # Build stamp consumed by the Makefile.
+    with open(os.path.join(out_root, ".stamp"), "w") as f:
+        f.write("ok\n")
+    print("artifacts complete")
+
+
+if __name__ == "__main__":
+    main()

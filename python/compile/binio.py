@@ -1,0 +1,59 @@
+"""Binary artifact writers — mirrored by rust/src/nn/loader.rs and
+rust/src/sketch/builder.rs.
+
+All encodings are little-endian.  Formats:
+
+RSNN v1 (MLP weights, dense; pruned models are dense-with-zeros and the
+rust loader converts to CSR):
+    magic  b"RSNN" | u32 version | u32 n_layers
+    per layer: u32 out_dim | u32 in_dim | f32 W[out*in] (row-major) |
+               f32 b[out]
+
+RSKP v1 (kernel-model / sketch-construction parameters):
+    magic  b"RSKP" | u32 version
+    u32 d | u32 p | u32 m
+    f32 A[d*p] (row-major) | f32 X[m*p] (row-major) | f32 alpha[m]
+    f32 width | u64 lsh_seed | u32 k_per_row
+    u32 default_rows (L) | u32 default_cols (R)
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+
+def write_nn(path: str, params) -> None:
+    with open(path, "wb") as f:
+        f.write(b"RSNN")
+        f.write(struct.pack("<II", 1, len(params)))
+        for w, b in params:
+            w = np.asarray(w, np.float32)
+            b = np.asarray(b, np.float32)
+            out_dim, in_dim = w.shape
+            f.write(struct.pack("<II", out_dim, in_dim))
+            f.write(w.tobytes(order="C"))
+            f.write(b.tobytes(order="C"))
+
+
+def write_kernel_params(path: str, a, x, alpha, *, width: float,
+                        lsh_seed: int, k_per_row: int, default_rows: int,
+                        default_cols: int) -> None:
+    a = np.asarray(a, np.float32)
+    x = np.asarray(x, np.float32)
+    alpha = np.asarray(alpha, np.float32)
+    d, p = a.shape
+    m = x.shape[0]
+    assert x.shape[1] == p and alpha.shape == (m,)
+    with open(path, "wb") as f:
+        f.write(b"RSKP")
+        f.write(struct.pack("<I", 1))
+        f.write(struct.pack("<III", d, p, m))
+        f.write(a.tobytes(order="C"))
+        f.write(x.tobytes(order="C"))
+        f.write(alpha.tobytes(order="C"))
+        f.write(struct.pack("<f", width))
+        f.write(struct.pack("<Q", lsh_seed))
+        f.write(struct.pack("<I", k_per_row))
+        f.write(struct.pack("<II", default_rows, default_cols))

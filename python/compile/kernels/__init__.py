@@ -1,0 +1,4 @@
+"""L1 Pallas kernels for Representer Sketch (interpret=True on CPU)."""
+from .l2lsh_hash import l2lsh_hash
+from .weighted_kde import weighted_kde
+from .sketch_lookup import sketch_lookup

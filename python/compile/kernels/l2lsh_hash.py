@@ -1,0 +1,74 @@
+"""Pallas kernel: batched L2-LSH hash codes.
+
+Computes ``codes[b, t] = floor((x[b] . proj[:, t] + bias[t]) / width)`` for a
+batch of (projected) queries — the hash stage of Representer-Sketch
+inference (paper §3.4, "Computation Requirement").
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the projection is a
+``(B, d) x (d, H)`` matmul tiled for VMEM with a 2-D grid over (batch tile,
+hash tile); each grid step holds one query tile and one projection tile and
+feeds the MXU.  The ±1 sparse structure is kept dense here — on TPU the MXU
+makes the dense form cheaper than gather-based sparsity; the *rust* hot path
+is where sparsity is exploited (add/sub only), which is the deployment story
+of the paper.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, and the AOT HLO consumed by the rust runtime must be plain HLO.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hash_kernel(x_ref, proj_ref, bias_ref, inv_w_ref, o_ref):
+    """One (batch-tile, hash-tile) grid step."""
+    z = jnp.dot(x_ref[...], proj_ref[...], preferred_element_type=jnp.float32)
+    z = (z + bias_ref[...][None, :]) * inv_w_ref[0]
+    o_ref[...] = jnp.floor(z).astype(jnp.int32)
+
+
+def _pad_to(n: int, block: int) -> int:
+    return (n + block - 1) // block * block
+
+
+@functools.partial(jax.jit, static_argnames=("width", "block_b", "block_h"))
+def l2lsh_hash(x, proj, bias, *, width: float, block_b: int = 32,
+               block_h: int = 128):
+    """L2-LSH codes for a batch.
+
+    Args:
+      x: (B, d) float32 queries (already projected by A^T if asymmetric).
+      proj: (d, H) float32 ±1-sparse projection matrix (H = L * K hashes).
+      bias: (H,) float32 uniform offsets in [0, width).
+      width: LSH bucket width r (static).
+
+    Returns:
+      (B, H) int32 hash codes.
+    """
+    b, d = x.shape
+    h = proj.shape[1]
+    bp, hp = _pad_to(b, block_b), _pad_to(h, block_h)
+    x = jnp.pad(x.astype(jnp.float32), ((0, bp - b), (0, 0)))
+    projp = jnp.pad(proj.astype(jnp.float32), ((0, 0), (0, hp - h)))
+    biasp = jnp.pad(bias.astype(jnp.float32), (0, hp - h))
+    inv_w = jnp.full((1,), 1.0 / width, jnp.float32)
+
+    out = pl.pallas_call(
+        _hash_kernel,
+        grid=(bp // block_b, hp // block_h),
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, block_h), lambda i, j: (0, j)),
+            pl.BlockSpec((block_h,), lambda i, j: (j,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_h), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bp, hp), jnp.int32),
+        interpret=True,
+    )(x, projp, biasp, inv_w)
+    return out[:b, :h]

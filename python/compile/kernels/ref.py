@@ -1,0 +1,179 @@
+"""Pure-jnp / numpy oracles for the L1 Pallas kernels.
+
+This file is the *semantic contract* of the whole stack:
+
+  * `splitmix64_stream` / parameter generation here must match
+    `rust/src/lsh/rng.rs` bit-for-bit (the rust sketch builder and the
+    python kernels must derive identical LSH functions from a seed);
+  * `l2lsh_codes` / `rehash_columns` must match `rust/src/lsh/` exactly
+    (integer semantics, wrapping arithmetic);
+  * `collision_prob` / `weighted_kde` must match `rust/src/kernel/` to
+    float tolerance.
+
+The Pallas kernels in this package are tested against these oracles, and
+`make artifacts` dumps fixtures from these oracles that the rust test suite
+replays (rust/tests/artifacts.rs), closing the cross-language loop.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+from jax.scipy.special import erfc
+
+MASK64 = (1 << 64) - 1
+
+# Achlioptas-sparse ±1 projections have entry variance 1/3, so projected
+# distances shrink by 1/sqrt(3) relative to the unit-variance p-stable
+# scheme the closed-form collision probability assumes (DESIGN.md §4).
+SPARSE_SCALE = 1.0 / np.sqrt(3.0)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic PRNG (splitmix64) — mirrored in rust/src/lsh/rng.rs
+# ---------------------------------------------------------------------------
+
+def splitmix64_stream(seed: int, n: int) -> np.ndarray:
+    """First n outputs of splitmix64 seeded with `seed`, as uint64."""
+    out = np.empty(n, dtype=np.uint64)
+    state = seed & MASK64
+    for i in range(n):
+        state = (state + 0x9E3779B97F4A7C15) & MASK64
+        z = state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        z = z ^ (z >> 31)
+        out[i] = z
+    return out
+
+
+def uniform01(seed: int, n: int) -> np.ndarray:
+    """n uniforms in [0,1): high 53 bits / 2^53 (same recipe in rust)."""
+    u = splitmix64_stream(seed, n)
+    return ((u >> np.uint64(11)).astype(np.float64)) / float(1 << 53)
+
+
+# ---------------------------------------------------------------------------
+# LSH parameter generation — mirrored in rust/src/lsh/l2.rs
+# ---------------------------------------------------------------------------
+
+BIAS_SEED_XOR = 0xB1A5B1A5B1A5B1A5
+
+
+def gen_l2lsh_params(seed: int, dim: int, n_hashes: int, width: float):
+    """Achlioptas-sparse ±1 projections + uniform biases.
+
+    Returns (proj, bias): proj is (dim, n_hashes) float32 with entries in
+    {-1, 0, +1} (P[+1] = P[-1] = 1/6), bias is (n_hashes,) float32 in
+    [0, width).  Stream order: projection entries hash-major (hash t outer,
+    coordinate i inner) from `seed`; biases from `seed ^ BIAS_SEED_XOR`.
+    """
+    u = uniform01(seed, n_hashes * dim).reshape(n_hashes, dim)
+    proj = np.zeros((n_hashes, dim), dtype=np.float32)
+    proj[u < 1.0 / 6.0] = 1.0
+    proj[u > 5.0 / 6.0] = -1.0
+    bias = (uniform01(seed ^ BIAS_SEED_XOR, n_hashes) * width).astype(
+        np.float32)
+    return np.ascontiguousarray(proj.T), bias  # (dim, H), (H,)
+
+
+# ---------------------------------------------------------------------------
+# Hashing oracles
+# ---------------------------------------------------------------------------
+
+def l2lsh_codes(x, proj, bias, width: float):
+    """L2-LSH codes: floor((x @ proj + bias) / width) as int32.  x: (B, d)."""
+    z = jnp.asarray(x, jnp.float32) @ jnp.asarray(proj, jnp.float32)
+    return jnp.floor((z + bias) / jnp.float32(width)).astype(jnp.int32)
+
+
+FNV_OFFSET = 0x811C9DC5
+FNV_PRIME = 0x01000193
+ROW_SALT = 0x9E3779B1
+
+
+def rehash_columns(codes, k_per_row: int, n_cols: int):
+    """Map K concatenated codes per row to a column index in [0, R).
+
+    codes: (B, L*K) int32, hash-major layout (row l owns codes
+    [l*K, (l+1)*K)).  FNV-1a over the K codes, salted by the row index —
+    wrapping uint32 arithmetic, mirrored in rust/src/lsh/concat.rs.
+    """
+    codes = np.asarray(codes)
+    b, h = codes.shape
+    assert h % k_per_row == 0
+    n_rows = h // k_per_row
+    c = codes.reshape(b, n_rows, k_per_row).astype(np.uint32)
+    rows = np.arange(n_rows, dtype=np.uint64)
+    acc = (FNV_OFFSET ^ ((rows * ROW_SALT) & 0xFFFFFFFF)).astype(np.uint64)
+    acc = np.broadcast_to(acc, (b, n_rows)).copy()
+    for k in range(k_per_row):
+        acc = ((acc ^ c[:, :, k]) * FNV_PRIME) & 0xFFFFFFFF
+    return (acc % n_cols).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Kernel function oracles
+# ---------------------------------------------------------------------------
+
+def collision_prob(c, width: float):
+    """Datar et al. L2-LSH collision probability p(c) for unit-variance
+    projections; p(0) = 1.  c may be an array."""
+    c = jnp.maximum(jnp.asarray(c, jnp.float32), jnp.float32(1e-9))
+    t = jnp.float32(width) / c
+    # 1 - 2*Phi(-t) - 2/(sqrt(2 pi) t) * (1 - exp(-t^2 / 2))
+    phi_neg = 0.5 * erfc(t / jnp.sqrt(jnp.float32(2.0)))
+    tail = (2.0 / (jnp.sqrt(2.0 * jnp.float32(np.pi)) * t)) * (
+        1.0 - jnp.exp(-0.5 * t * t))
+    return jnp.clip(1.0 - 2.0 * phi_neg - tail, 0.0, 1.0)
+
+
+def row_kernel(c, width: float, k_per_row: int):
+    """Effective kernel of one sketch row: K concatenated sparse hashes.
+    Sparse ±1 projections scale distances by 1/sqrt(3)."""
+    return collision_prob(jnp.asarray(c) * SPARSE_SCALE, width) ** k_per_row
+
+
+def weighted_kde(q, points, alpha, width: float, k_per_row: int):
+    """f_K(q) = sum_j alpha_j * row_kernel(||q - x_j||).  q: (B, p)."""
+    q = jnp.asarray(q, jnp.float32)
+    points = jnp.asarray(points, jnp.float32)
+    d2 = (jnp.sum(q * q, axis=1, keepdims=True)
+          + jnp.sum(points * points, axis=1)[None, :]
+          - 2.0 * q @ points.T)
+    dist = jnp.sqrt(jnp.maximum(d2, 0.0))
+    return row_kernel(dist, width, k_per_row) @ jnp.asarray(alpha, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Sketch oracles (Algorithms 1 and 2 of the paper)
+# ---------------------------------------------------------------------------
+
+def build_sketch(points, alpha, proj, bias, width, k_per_row, n_rows, n_cols):
+    """Algorithm 1: S[l, h_l(x_j)] += alpha_j.  Returns (L, R) float32."""
+    codes = np.asarray(l2lsh_codes(points, proj, bias, width))
+    cols = rehash_columns(codes, k_per_row, n_cols)  # (M, L)
+    sketch = np.zeros((n_rows, n_cols), dtype=np.float32)
+    for j in range(points.shape[0]):
+        for l in range(n_rows):
+            sketch[l, cols[j, l]] += alpha[j]
+    return sketch
+
+
+def query_sketch_mean(sketch, cols):
+    """Mean over rows of S[l, col_l].  cols: (B, L) int32."""
+    s = np.asarray(sketch)
+    c = np.asarray(cols)
+    vals = s[np.arange(s.shape[0])[None, :], c]  # (B, L)
+    return vals.mean(axis=1)
+
+
+def query_sketch_mom(sketch, cols, groups: int):
+    """Algorithm 2: median of g group means."""
+    s = np.asarray(sketch)
+    c = np.asarray(cols)
+    vals = s[np.arange(s.shape[0])[None, :], c]  # (B, L)
+    b, l = vals.shape
+    m = l // groups
+    gm = vals[:, : groups * m].reshape(b, groups, m).mean(axis=2)
+    return np.median(gm, axis=1)

@@ -1,0 +1,113 @@
+"""L2: JAX model definitions — MLP teacher and weighted-kernel model.
+
+The teacher `f_N` is the paper's per-dataset MLP (Table 2 architectures).
+The kernel model `f_K` is the weighted LSH-kernel representation of §3.4:
+
+    f_K(q) = sum_j alpha_j * K(A^T q, x_j)
+
+with learnable points x_j in a projected space R^p (asymmetric LSH, §4.3),
+weights alpha_j, and projection A in R^{d x p}.  K is the L2-LSH
+collision-probability kernel raised to the concatenation power (ref.py).
+
+Two forward paths exist for f_K:
+  * `kernel_fwd_ref`  — pure-jnp (fast; used inside the training loop);
+  * `kernel_fwd_pallas` — calls the L1 Pallas kernel (used for AOT export,
+    so the artifact the rust runtime executes flows through Layer 1).
+Both are pytest-checked to agree (python/tests/).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels.weighted_kde import weighted_kde as _pallas_weighted_kde
+
+
+# ---------------------------------------------------------------------------
+# MLP teacher
+# ---------------------------------------------------------------------------
+
+def init_mlp(seed: int, in_dim: int, hidden, out_dim: int = 1):
+    """He-initialized MLP params: list of (W: (out, in), b: (out,))."""
+    rng = np.random.default_rng(seed)
+    dims = [in_dim, *hidden, out_dim]
+    params = []
+    for i in range(len(dims) - 1):
+        fan_in = dims[i]
+        w = rng.normal(0.0, np.sqrt(2.0 / fan_in), size=(dims[i + 1], fan_in))
+        b = np.zeros(dims[i + 1])
+        params.append((jnp.asarray(w, jnp.float32),
+                       jnp.asarray(b, jnp.float32)))
+    return params
+
+
+def mlp_fwd(params, x):
+    """ReLU MLP forward; returns (B,) raw output (logit / regression)."""
+    h = x
+    for w, b in params[:-1]:
+        h = jax.nn.relu(h @ w.T + b)
+    w, b = params[-1]
+    return (h @ w.T + b)[:, 0]
+
+
+def mlp_param_count(params) -> int:
+    return int(sum(w.size + b.size for w, b in params))
+
+
+# ---------------------------------------------------------------------------
+# Kernel model (f_K)
+# ---------------------------------------------------------------------------
+
+def init_kernel_model(seed: int, d: int, p: int, m: int, x_init=None):
+    """Initial kernel-model params.
+
+    A: (d, p) random orthogonal-ish projection; X: (M, p) points initialized
+    from projected data rows (if given) else Gaussian; alpha: zeros.
+    """
+    rng = np.random.default_rng(seed)
+    a = rng.normal(0.0, 1.0 / np.sqrt(d), size=(d, p))
+    if x_init is not None:
+        idx = rng.choice(x_init.shape[0], size=m, replace=x_init.shape[0] < m)
+        x = np.asarray(x_init)[idx] @ a
+        x += 0.05 * rng.normal(size=x.shape)
+    else:
+        x = rng.normal(size=(m, p))
+    alpha = np.zeros(m)
+    return {
+        "a": jnp.asarray(a, jnp.float32),
+        "x": jnp.asarray(x, jnp.float32),
+        "alpha": jnp.asarray(alpha, jnp.float32),
+    }
+
+
+def kernel_fwd_ref(kp, q, *, width: float, k_per_row: int):
+    """f_K forward, pure-jnp path (training)."""
+    proj = q @ kp["a"]
+    return ref.weighted_kde(proj, kp["x"], kp["alpha"], width, k_per_row)
+
+
+def kernel_fwd_pallas(kp, q, *, width: float, k_per_row: int):
+    """f_K forward through the L1 Pallas kernel (AOT export path)."""
+    proj = q @ kp["a"]
+    return _pallas_weighted_kde(proj, kp["x"], kp["alpha"],
+                                width=width, k_per_row=k_per_row)
+
+
+def kernel_param_count(kp) -> int:
+    return int(kp["a"].size + kp["x"].size + kp["alpha"].size)
+
+
+# ---------------------------------------------------------------------------
+# Metrics
+# ---------------------------------------------------------------------------
+
+def accuracy(pred_logit, y) -> float:
+    """Binary classification accuracy; y in {0, 1}, logit threshold 0."""
+    return float(jnp.mean(((pred_logit > 0.0).astype(jnp.float32) == y)))
+
+
+def mae(pred, y) -> float:
+    return float(jnp.mean(jnp.abs(pred - y)))

@@ -1,0 +1,93 @@
+"""Regenerate the HLO artifacts from the saved binary weights — no
+retraining.  Used when only the export path changed (or artifacts were
+built with an older exporter).
+
+Usage: python -m compile.regen_hlo [--out ../artifacts]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import aot, model
+
+
+def read_nn(path: str):
+    """Inverse of binio.write_nn."""
+    with open(path, "rb") as f:
+        data = f.read()
+    assert data[:4] == b"RSNN"
+    ver, n_layers = struct.unpack_from("<II", data, 4)
+    assert ver == 1
+    off = 12
+    params = []
+    for _ in range(n_layers):
+        out_dim, in_dim = struct.unpack_from("<II", data, off)
+        off += 8
+        w = np.frombuffer(data, np.float32, out_dim * in_dim, off)
+        off += out_dim * in_dim * 4
+        b = np.frombuffer(data, np.float32, out_dim, off)
+        off += out_dim * 4
+        params.append((jnp.asarray(w.reshape(out_dim, in_dim)),
+                       jnp.asarray(b)))
+    return params
+
+
+def read_kernel_params(path: str):
+    """Inverse of binio.write_kernel_params."""
+    with open(path, "rb") as f:
+        data = f.read()
+    assert data[:4] == b"RSKP"
+    d, p, m = struct.unpack_from("<III", data, 8)
+    off = 20
+    a = np.frombuffer(data, np.float32, d * p, off).reshape(d, p)
+    off += d * p * 4
+    x = np.frombuffer(data, np.float32, m * p, off).reshape(m, p)
+    off += m * p * 4
+    alpha = np.frombuffer(data, np.float32, m, off)
+    off += m * 4
+    width, = struct.unpack_from("<f", data, off)
+    k_per_row, = struct.unpack_from("<I", data, off + 12)
+    kp = {"a": jnp.asarray(a), "x": jnp.asarray(x),
+          "alpha": jnp.asarray(alpha)}
+    return kp, float(width), int(k_per_row)
+
+
+def regen(ds_dir: str) -> None:
+    meta = json.load(open(os.path.join(ds_dir, "meta.json")))
+    dim, batch = meta["dim"], meta["aot_batch"]
+    teacher = read_nn(os.path.join(ds_dir, "nn_weights.bin"))
+    aot.export_hlo(
+        lambda xb: (model.mlp_fwd(teacher, xb),),
+        (jax.ShapeDtypeStruct((batch, dim), jnp.float32),),
+        os.path.join(ds_dir, "nn.hlo.txt"))
+    kp, width, k = read_kernel_params(
+        os.path.join(ds_dir, "kernel_params.bin"))
+    aot.export_hlo(
+        lambda xb: (model.kernel_fwd_pallas(kp, xb, width=width,
+                                            k_per_row=k),),
+        (jax.ShapeDtypeStruct((batch, dim), jnp.float32),),
+        os.path.join(ds_dir, "kernel.hlo.txt"))
+    print(f"regenerated HLO for {ds_dir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    root = os.path.abspath(args.out)
+    for name in sorted(os.listdir(root)):
+        ds_dir = os.path.join(root, name)
+        if os.path.exists(os.path.join(ds_dir, "meta.json")):
+            regen(ds_dir)
+
+
+if __name__ == "__main__":
+    main()

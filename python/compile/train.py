@@ -1,0 +1,217 @@
+"""Build-time training: teacher, kernel distillation, pruning, KD baselines.
+
+Everything here runs exactly once (`make artifacts`) and never on the
+request path.  A hand-rolled Adam keeps dependencies to jax+numpy.
+
+Baselines (paper §4.2):
+  * one-time pruning  — global L1-magnitude prune to a target sparsity,
+    then fine-tune once                                   [Han et al. 15]
+  * multi-time pruning — iterative prune/fine-tune ladder [Han et al. 15]
+  * knowledge distillation — small students trained on teacher outputs
+    (for scalar-output tabular models, Hinton-style logit matching reduces
+    to MSE on the teacher logit plus the task loss)       [Hinton et al. 22]
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model
+
+FAST = os.environ.get("RS_FAST", "") == "1"
+
+
+def _epochs(n: int) -> int:
+    return max(2, n // 8) if FAST else n
+
+
+# ---------------------------------------------------------------------------
+# Adam
+# ---------------------------------------------------------------------------
+
+def adam_init(params):
+    return {"m": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(
+        lambda mm, g: b1 * mm + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(
+        lambda vv, g: b2 * vv + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda mm: mm / (1 - b1 ** t), m)
+    vh = jax.tree_util.tree_map(lambda vv: vv / (1 - b2 ** t), v)
+    new = jax.tree_util.tree_map(
+        lambda pp, mm, vv: pp - lr * mm / (jnp.sqrt(vv) + eps),
+        params, mh, vh)
+    return new, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def task_loss(pred, y, task: str):
+    if task == "classification":
+        # BCE with logits.
+        return jnp.mean(jnp.maximum(pred, 0) - pred * y
+                        + jnp.log1p(jnp.exp(-jnp.abs(pred))))
+    return jnp.mean((pred - y) ** 2)
+
+
+# ---------------------------------------------------------------------------
+# Teacher training
+# ---------------------------------------------------------------------------
+
+def train_mlp(params, x, y, task: str, *, epochs=40, batch=256, lr=1e-3,
+              mask=None, seed=0, distill_target=None, verbose=False):
+    """Train (or fine-tune) an MLP.  If `mask` is given (same pytree shape
+    as params, 0/1), weights are re-masked after every step — this is how
+    pruned fine-tuning keeps the sparsity pattern.  If `distill_target` is
+    given, the loss is MSE to that target (teacher outputs) instead of the
+    task loss."""
+    n = x.shape[0]
+    x = jnp.asarray(x); y = jnp.asarray(y)
+    tgt = None if distill_target is None else jnp.asarray(distill_target)
+
+    def loss_fn(p, xb, yb, tb):
+        pred = model.mlp_fwd(p, xb)
+        if tgt is not None:
+            return jnp.mean((pred - tb) ** 2)
+        return task_loss(pred, yb, task)
+
+    @jax.jit
+    def step(p, opt, xb, yb, tb):
+        loss, grads = jax.value_and_grad(loss_fn)(p, xb, yb, tb)
+        p, opt = adam_update(p, grads, opt, lr)
+        if mask is not None:
+            p = [(w * mw, b * mb) for (w, b), (mw, mb) in zip(p, mask)]
+        return p, opt, loss
+
+    opt = adam_init(params)
+    rng = np.random.default_rng(seed)
+    steps_per_epoch = max(1, n // batch)
+    for _ in range(_epochs(epochs)):
+        perm = rng.permutation(n)
+        for s in range(steps_per_epoch):
+            idx = perm[s * batch:(s + 1) * batch]
+            tb = tgt[idx] if tgt is not None else jnp.zeros(len(idx))
+            params, opt, loss = step(params, opt, x[idx], y[idx], tb)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Kernel distillation (paper §3.4)
+# ---------------------------------------------------------------------------
+
+def distill_kernel(kp, x, teacher_out, *, width, k_per_row, epochs=60,
+                   batch=512, lr=5e-3, seed=1):
+    """Train (alpha, X, A) so f_K matches the teacher outputs (MSE)."""
+    n = x.shape[0]
+    x = jnp.asarray(x)
+    t = jnp.asarray(teacher_out)
+
+    def loss_fn(p, xb, tb):
+        pred = model.kernel_fwd_ref(p, xb, width=width, k_per_row=k_per_row)
+        return jnp.mean((pred - tb) ** 2)
+
+    @jax.jit
+    def step(p, opt, xb, tb):
+        loss, grads = jax.value_and_grad(loss_fn)(p, xb, tb)
+        p, opt = adam_update(p, grads, opt, lr)
+        return p, opt, loss
+
+    opt = adam_init(kp)
+    rng = np.random.default_rng(seed)
+    steps_per_epoch = max(1, n // batch)
+    loss = jnp.inf
+    for _ in range(_epochs(epochs)):
+        perm = rng.permutation(n)
+        for s in range(steps_per_epoch):
+            idx = perm[s * batch:(s + 1) * batch]
+            kp, opt, loss = step(kp, opt, x[idx], t[idx])
+    return kp, float(loss)
+
+
+# ---------------------------------------------------------------------------
+# Pruning baselines
+# ---------------------------------------------------------------------------
+
+def global_magnitude_mask(params, sparsity: float):
+    """0/1 mask zeroing the `sparsity` fraction of smallest-|w| weights
+    across the whole model (biases kept)."""
+    allw = jnp.concatenate([jnp.abs(w).ravel() for w, _ in params])
+    k = int(sparsity * allw.size)
+    thresh = jnp.sort(allw)[k] if k > 0 else -1.0
+    return [((jnp.abs(w) >= thresh).astype(jnp.float32), jnp.ones_like(b))
+            for w, b in params]
+
+
+def nnz_params(params, mask) -> int:
+    """Parameter count of the pruned model under a sparse (CSR-style)
+    storage convention: surviving weights + all biases."""
+    total = 0
+    for (w, b), (mw, _) in zip(params, mask):
+        total += int(mw.sum()) + b.size
+    return total
+
+
+def prune_one_time(teacher, x, y, task, sparsity, *, epochs=10, seed=2):
+    mask = global_magnitude_mask(teacher, sparsity)
+    pruned = [(w * mw, b * mb) for (w, b), (mw, mb) in zip(teacher, mask)]
+    tuned = train_mlp(pruned, x, y, task, epochs=epochs, mask=mask, seed=seed)
+    return tuned, mask
+
+
+def prune_multi_time(teacher, x, y, task, target_sparsity, *, rounds=5,
+                     epochs_per_round=6, seed=3):
+    """Iterative prune/fine-tune: geometric ladder up to the target."""
+    params = teacher
+    # density ladder: d_i = d_target^(i/rounds)
+    for i in range(1, rounds + 1):
+        s = 1.0 - (1.0 - target_sparsity) ** (i / rounds)
+        mask = global_magnitude_mask(params, s)
+        params = [(w * mw, b * mb) for (w, b), (mw, mb) in zip(params, mask)]
+        params = train_mlp(params, x, y, task, epochs=epochs_per_round,
+                           mask=mask, seed=seed + i)
+    return params, mask
+
+
+# ---------------------------------------------------------------------------
+# Knowledge distillation baseline
+# ---------------------------------------------------------------------------
+
+def kd_student(teacher_out, x, y, task, hidden, *, epochs=25, seed=4,
+               alpha_mix=0.7):
+    """Train a small student on a mix of teacher outputs and task loss."""
+    student = model.init_mlp(seed, x.shape[1], hidden)
+    n = x.shape[0]
+    x = jnp.asarray(x); y = jnp.asarray(y)
+    t = jnp.asarray(teacher_out)
+
+    def loss_fn(p, xb, yb, tb):
+        pred = model.mlp_fwd(p, xb)
+        return (alpha_mix * jnp.mean((pred - tb) ** 2)
+                + (1 - alpha_mix) * task_loss(pred, yb, task))
+
+    @jax.jit
+    def step(p, opt, xb, yb, tb):
+        loss, grads = jax.value_and_grad(loss_fn)(p, xb, yb, tb)
+        return (*adam_update(p, grads, opt, 1e-3), loss)
+
+    opt = adam_init(student)
+    rng = np.random.default_rng(seed)
+    batch = 256
+    for _ in range(_epochs(epochs)):
+        perm = rng.permutation(n)
+        for s in range(max(1, n // batch)):
+            idx = perm[s * batch:(s + 1) * batch]
+            student, opt, loss = step(student, opt, x[idx], y[idx], t[idx])
+    return student

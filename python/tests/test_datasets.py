@@ -1,0 +1,86 @@
+"""Data substrate tests: determinism, shapes, libsvm format, learnability."""
+
+import io
+import os
+import tempfile
+
+import numpy as np
+
+from compile import datasets
+
+
+def test_all_specs_generate_correct_shapes():
+    for name, spec in datasets.SPECS.items():
+        xtr, ytr, xte, yte = datasets.generate(spec)
+        assert xtr.shape == (spec.n_train, spec.dim), name
+        assert xte.shape == (spec.n_test, spec.dim), name
+        assert ytr.shape == (spec.n_train,) and yte.shape == (spec.n_test,)
+        assert xtr.dtype == np.float32
+
+
+def test_generation_deterministic():
+    spec = datasets.SPECS["abalone"]
+    a = datasets.generate(spec)
+    b = datasets.generate(spec)
+    for u, v in zip(a, b):
+        np.testing.assert_array_equal(u, v)
+
+
+def test_classification_labels_binary_and_balancedish():
+    for name in ("adult", "phishing", "skin", "susy"):
+        spec = datasets.SPECS[name]
+        _, ytr, _, _ = datasets.generate(spec)
+        assert set(np.unique(ytr)) <= {0.0, 1.0}
+        frac = ytr.mean()
+        assert 0.2 < frac < 0.8, (name, frac)
+
+
+def test_regression_targets_standardized():
+    for name in ("abalone", "yearmsd"):
+        spec = datasets.SPECS[name]
+        _, ytr, _, yte = datasets.generate(spec)
+        y = np.concatenate([ytr, yte])
+        assert abs(y.mean()) < 0.05
+        assert abs(y.std() - 1.0) < 0.05
+
+
+def test_binary_feature_datasets_are_binary():
+    for name in ("adult", "phishing"):
+        spec = datasets.SPECS[name]
+        xtr, _, _, _ = datasets.generate(spec)
+        assert set(np.unique(xtr)) <= {0.0, 1.0}
+
+
+def test_libsvm_format_roundtrip():
+    x = np.array([[0.0, 1.5, 0.0], [2.0, 0.0, -1.0]], np.float32)
+    y = np.array([1.0, 0.0], np.float32)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "t.libsvm")
+        datasets.write_libsvm(path, x, y, "classification")
+        lines = open(path).read().strip().split("\n")
+    assert lines[0].startswith("+1 ") and lines[1].startswith("-1 ")
+    # sparse: zeros omitted, 1-based indices
+    assert lines[0].split()[1].startswith("2:")
+    assert lines[1].split()[1].startswith("1:")
+
+
+def test_signal_is_learnable_by_linear_probe():
+    """The synthetic tasks must be non-trivially learnable (else the whole
+    reproduction is vacuous): a ridge linear probe beats chance / gets
+    positive R^2."""
+    for name, spec in datasets.SPECS.items():
+        xtr, ytr, xte, yte = datasets.generate(spec)
+        xtr_, xte_ = xtr[:4000], xte[:2000]
+        ytr_, yte_ = ytr[:4000], yte[:2000]
+        xb = np.hstack([xtr_, np.ones((len(xtr_), 1))])
+        w = np.linalg.lstsq(
+            xb.T @ xb + 1e-3 * np.eye(xb.shape[1]), xb.T @ ytr_,
+            rcond=None)[0]
+        pred = np.hstack([xte_, np.ones((len(xte_), 1))]) @ w
+        if spec.task == "classification":
+            acc = ((pred > 0.5) == (yte_ > 0.5)).mean()
+            assert acc > 0.6, (name, acc)
+        else:
+            ss_res = np.sum((pred - yte_) ** 2)
+            ss_tot = np.sum((yte_ - yte_.mean()) ** 2)
+            assert 1 - ss_res / ss_tot > 0.1, name

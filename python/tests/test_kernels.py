@@ -1,0 +1,166 @@
+"""L1 correctness: Pallas kernels vs pure-jnp/numpy oracles (ref.py).
+
+Hypothesis sweeps shapes and parameters; every property asserts
+allclose/exact-equality against the oracle.  This is the core correctness
+signal for the compute layer the AOT artifacts flow through.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.l2lsh_hash import l2lsh_hash
+from compile.kernels.weighted_kde import weighted_kde
+from compile.kernels.sketch_lookup import sketch_lookup
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _data(seed, *shape):
+    return np.random.default_rng(seed).normal(size=shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# l2lsh_hash
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(b=st.integers(1, 70), d=st.integers(1, 40), h=st.integers(1, 200),
+       width=st.floats(0.5, 8.0), seed=st.integers(0, 2**32 - 1))
+def test_hash_matches_ref(b, d, h, width, seed):
+    x = _data(seed, b, d)
+    proj, bias = ref.gen_l2lsh_params(seed, d, h, width)
+    expect = np.asarray(ref.l2lsh_codes(x, proj, bias, width))
+    got = np.asarray(l2lsh_hash(x, proj, bias, width=width))
+    assert got.dtype == np.int32
+    assert np.array_equal(expect, got)
+
+
+@settings(**SETTINGS)
+@given(bb=st.sampled_from([4, 16, 32, 64]), bh=st.sampled_from([32, 128]))
+def test_hash_block_shape_invariance(bb, bh):
+    """Tiling must not change results (padding correctness)."""
+    x = _data(1, 37, 19)
+    proj, bias = ref.gen_l2lsh_params(9, 19, 77, 3.0)
+    base = np.asarray(l2lsh_hash(x, proj, bias, width=3.0))
+    tiled = np.asarray(
+        l2lsh_hash(x, proj, bias, width=3.0, block_b=bb, block_h=bh))
+    assert np.array_equal(base, tiled)
+
+
+def test_hash_shift_by_width_increments_code():
+    """Moving a point by width along a +1 projection coordinate bumps the
+    code by exactly 1 (structural LSH property)."""
+    d, h, width = 8, 64, 2.0
+    proj, bias = ref.gen_l2lsh_params(3, d, h, width)
+    x = _data(0, 1, d)
+    c0 = np.asarray(ref.l2lsh_codes(x, proj, bias, width))
+    # shift along projection direction of hash 0
+    t = 0
+    a = proj[:, t]
+    if np.allclose(a, 0):
+        pytest.skip("all-zero projection row")
+    x2 = x + width * a[None, :] / (a @ a)
+    c1 = np.asarray(ref.l2lsh_codes(x2, proj, bias, width))
+    assert c1[0, t] == c0[0, t] + 1
+
+
+# ---------------------------------------------------------------------------
+# weighted_kde
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(b=st.integers(1, 40), p=st.integers(1, 24), m=st.integers(1, 200),
+       width=st.floats(0.5, 6.0), k=st.integers(1, 4),
+       seed=st.integers(0, 2**31))
+def test_kde_matches_ref(b, p, m, width, k, seed):
+    q = _data(seed, b, p)
+    pts = _data(seed + 1, m, p)
+    alpha = _data(seed + 2, m)
+    expect = np.asarray(ref.weighted_kde(q, pts, alpha, width, k))
+    got = np.asarray(weighted_kde(q, pts, alpha, width=width, k_per_row=k))
+    np.testing.assert_allclose(expect, got, rtol=2e-4, atol=2e-4)
+
+
+def test_kde_query_at_point_dominated_by_its_weight():
+    """K(0)=1: querying exactly at an isolated heavy point returns ~alpha."""
+    p = 4
+    pts = np.zeros((1, p), np.float32)
+    alpha = np.array([3.5], np.float32)
+    got = np.asarray(weighted_kde(pts, pts, alpha, width=2.0, k_per_row=2))
+    np.testing.assert_allclose(got, [3.5], rtol=1e-5)
+
+
+def test_kde_linear_in_alpha():
+    q = _data(0, 6, 5)
+    pts = _data(1, 30, 5)
+    a1 = _data(2, 30)
+    a2 = _data(3, 30)
+    f = lambda a: np.asarray(weighted_kde(q, pts, a, width=2.0, k_per_row=1))
+    np.testing.assert_allclose(f(a1) + f(a2), f(a1 + a2), rtol=1e-3,
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# sketch_lookup
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(b=st.integers(1, 20), l=st.integers(8, 64), r=st.integers(2, 50),
+       g=st.sampled_from([2, 4, 8]), seed=st.integers(0, 2**31))
+def test_lookup_matches_ref(b, l, r, g, seed):
+    rng = np.random.default_rng(seed)
+    sketch = rng.normal(size=(l, r)).astype(np.float32)
+    cols = rng.integers(0, r, size=(b, l)).astype(np.int32)
+    expect = ref.query_sketch_mom(sketch, cols, g)
+    got = np.asarray(sketch_lookup(cols, sketch, groups=g))
+    np.testing.assert_allclose(expect, got, rtol=1e-5, atol=1e-5)
+
+
+def test_lookup_constant_sketch_returns_constant():
+    sketch = np.full((16, 8), 2.25, np.float32)
+    cols = np.zeros((3, 16), np.int32)
+    got = np.asarray(sketch_lookup(cols, sketch, groups=4))
+    np.testing.assert_allclose(got, 2.25, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# collision probability / row kernel properties
+# ---------------------------------------------------------------------------
+
+def test_collision_prob_monotone_decreasing():
+    c = np.linspace(0.01, 20.0, 200)
+    p = np.asarray(ref.collision_prob(c, 2.5))
+    assert np.all(np.diff(p) <= 1e-7)
+    assert p[0] > 0.95 and p[-1] < 0.2
+
+
+def test_collision_prob_bounds():
+    c = np.abs(np.random.default_rng(0).normal(size=100)) * 10
+    p = np.asarray(ref.collision_prob(c, 3.0))
+    assert np.all(p >= 0) and np.all(p <= 1)
+
+
+def test_collision_prob_matches_monte_carlo():
+    """Closed form vs empirical collision rate of actual sparse LSH."""
+    d, width, n_hashes = 16, 3.0, 4000
+    rng = np.random.default_rng(5)
+    x = rng.normal(size=d).astype(np.float32)
+    for dist in (0.5, 1.5, 3.0):
+        delta = rng.normal(size=d)
+        delta = delta / np.linalg.norm(delta) * dist
+        y = (x + delta).astype(np.float32)
+        proj, bias = ref.gen_l2lsh_params(11, d, n_hashes, width)
+        cx = np.asarray(ref.l2lsh_codes(x[None], proj, bias, width))[0]
+        cy = np.asarray(ref.l2lsh_codes(y[None], proj, bias, width))[0]
+        emp = (cx == cy).mean()
+        theory = float(ref.row_kernel(dist, width, 1))
+        assert abs(emp - theory) < 0.06, (dist, emp, theory)
+
+
+def test_row_kernel_concat_power():
+    c = np.array([1.0, 2.0])
+    p1 = np.asarray(ref.row_kernel(c, 2.0, 1))
+    p3 = np.asarray(ref.row_kernel(c, 2.0, 3))
+    np.testing.assert_allclose(p3, p1 ** 3, rtol=1e-5)

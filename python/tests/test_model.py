@@ -1,0 +1,130 @@
+"""L2 model tests: MLP shapes/semantics, kernel model paths agree,
+training moves losses, pruning masks behave, binio round-trip."""
+
+import os
+import struct
+import tempfile
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import binio, datasets, model, train
+
+
+def test_mlp_shapes_and_param_count():
+    params = model.init_mlp(0, 10, (32, 16))
+    x = jnp.zeros((5, 10))
+    out = model.mlp_fwd(params, x)
+    assert out.shape == (5,)
+    assert model.mlp_param_count(params) == (10 * 32 + 32) + (32 * 16 + 16) \
+        + (16 * 1 + 1)
+
+
+def test_mlp_relu_piecewise_linearity():
+    """MLP with zero bias is positively homogeneous: f(2x) = 2^depth-ish —
+    at least f(0) = bias-only path."""
+    params = model.init_mlp(1, 4, (8,))
+    zero_out = model.mlp_fwd(params, jnp.zeros((1, 4)))
+    # f(0) = final bias (all hidden relu(b)=max(b,0) path) — just finite.
+    assert np.isfinite(float(zero_out[0]))
+
+
+def test_kernel_fwd_paths_agree():
+    rng = np.random.default_rng(0)
+    kp = model.init_kernel_model(3, 12, 5, 40)
+    kp["alpha"] = jnp.asarray(rng.normal(size=40), jnp.float32)
+    q = rng.normal(size=(9, 12)).astype(np.float32)
+    a = np.asarray(model.kernel_fwd_ref(kp, q, width=2.0, k_per_row=2))
+    b = np.asarray(model.kernel_fwd_pallas(kp, q, width=2.0, k_per_row=2))
+    np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+def test_train_mlp_reduces_loss():
+    spec = datasets.SPECS["skin"]
+    xtr, ytr, _, _ = datasets.generate(spec)
+    xtr, ytr = xtr[:2000], ytr[:2000]
+    params = model.init_mlp(0, spec.dim, (16,))
+    before = model.accuracy(model.mlp_fwd(params, jnp.asarray(xtr)),
+                            jnp.asarray(ytr))
+    params = train.train_mlp(params, xtr, ytr, "classification", epochs=20,
+                             lr=1e-2)
+    after = model.accuracy(model.mlp_fwd(params, jnp.asarray(xtr)),
+                           jnp.asarray(ytr))
+    assert after > max(before, 0.7)
+
+
+def test_global_magnitude_mask_sparsity():
+    params = model.init_mlp(0, 20, (40, 20))
+    mask = train.global_magnitude_mask(params, 0.75)
+    total = sum(int(mw.size) for mw, _ in mask)
+    kept = sum(int(mw.sum()) for mw, _ in mask)
+    assert abs(kept / total - 0.25) < 0.02
+    # biases untouched
+    assert all(int(mb.sum()) == mb.size for _, mb in mask)
+
+
+def test_pruned_finetune_keeps_mask():
+    spec = datasets.SPECS["skin"]
+    xtr, ytr, _, _ = datasets.generate(spec)
+    xtr, ytr = xtr[:1000], ytr[:1000]
+    teacher = model.init_mlp(0, spec.dim, (16, 8))
+    teacher = train.train_mlp(teacher, xtr, ytr, "classification", epochs=3)
+    tuned, mask = train.prune_one_time(teacher, xtr, ytr, "classification",
+                                       0.8, epochs=2)
+    for (w, _), (mw, _) in zip(tuned, mask):
+        assert np.all(np.asarray(w)[np.asarray(mw) == 0] == 0)
+
+
+def test_binio_nn_roundtrip_bytes():
+    params = model.init_mlp(0, 3, (4,))
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "nn.bin")
+        binio.write_nn(path, params)
+        with open(path, "rb") as f:
+            data = f.read()
+        assert data[:4] == b"RSNN"
+        ver, n_layers = struct.unpack_from("<II", data, 4)
+        assert (ver, n_layers) == (1, 2)
+        out_dim, in_dim = struct.unpack_from("<II", data, 12)
+        assert (out_dim, in_dim) == (4, 3)
+        w = np.frombuffer(data, np.float32, 12, offset=20).reshape(4, 3)
+        np.testing.assert_allclose(w, np.asarray(params[0][0]))
+
+
+def test_binio_kernel_params_layout():
+    rng = np.random.default_rng(1)
+    a = rng.normal(size=(6, 3)).astype(np.float32)
+    x = rng.normal(size=(5, 3)).astype(np.float32)
+    alpha = rng.normal(size=5).astype(np.float32)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "kp.bin")
+        binio.write_kernel_params(path, a, x, alpha, width=2.5,
+                                  lsh_seed=42, k_per_row=3, default_rows=10,
+                                  default_cols=8)
+        with open(path, "rb") as f:
+            data = f.read()
+        assert data[:4] == b"RSKP"
+        d_, p_, m_ = struct.unpack_from("<III", data, 8)
+        assert (d_, p_, m_) == (6, 3, 5)
+        off = 20
+        a2 = np.frombuffer(data, np.float32, 18, offset=off).reshape(6, 3)
+        np.testing.assert_allclose(a2, a)
+        off += 18 * 4 + 15 * 4 + 5 * 4
+        width, = struct.unpack_from("<f", data, off)
+        seed, = struct.unpack_from("<Q", data, off + 4)
+        k, = struct.unpack_from("<I", data, off + 12)
+        rows, cols = struct.unpack_from("<II", data, off + 16)
+        assert (round(width, 3), seed, k, rows, cols) == (2.5, 42, 3, 10, 8)
+
+
+def test_distill_kernel_reduces_mse():
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(800, 6)).astype(np.float32)
+    target = np.sin(x[:, 0]) + 0.5 * x[:, 1]
+    kp = model.init_kernel_model(0, 6, 4, 64, x_init=x)
+    kp2, loss = train.distill_kernel(kp, x, target, width=2.0, k_per_row=1,
+                                     epochs=8, lr=1e-2)
+    pred0 = np.asarray(model.kernel_fwd_ref(kp, jnp.asarray(x), width=2.0,
+                                            k_per_row=1))
+    mse0 = float(np.mean((pred0 - target) ** 2))
+    assert loss < mse0

@@ -1,0 +1,52 @@
+"""regen_hlo binary readers must invert binio writers exactly, and the
+AOT caching contract must hold (stamp/meta skip logic)."""
+
+import os
+import tempfile
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import binio, model, regen_hlo
+
+
+def test_read_nn_inverts_write_nn():
+    params = model.init_mlp(7, 5, (8, 3))
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "nn.bin")
+        binio.write_nn(path, params)
+        loaded = regen_hlo.read_nn(path)
+    assert len(loaded) == len(params)
+    for (w, b), (w2, b2) in zip(params, loaded):
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(w2))
+        np.testing.assert_array_equal(np.asarray(b), np.asarray(b2))
+
+
+def test_read_kernel_params_inverts_writer():
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(7, 4)).astype(np.float32)
+    x = rng.normal(size=(9, 4)).astype(np.float32)
+    alpha = rng.normal(size=9).astype(np.float32)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "kp.bin")
+        binio.write_kernel_params(path, a, x, alpha, width=1.75,
+                                  lsh_seed=123456789, k_per_row=2,
+                                  default_rows=64, default_cols=16)
+        kp, width, k = regen_hlo.read_kernel_params(path)
+    np.testing.assert_array_equal(np.asarray(kp["a"]), a)
+    np.testing.assert_array_equal(np.asarray(kp["x"]), x)
+    np.testing.assert_array_equal(np.asarray(kp["alpha"]), alpha)
+    assert (round(width, 4), k) == (1.75, 2)
+
+
+def test_roundtrip_preserves_forward_pass():
+    params = model.init_mlp(3, 6, (10,))
+    xb = jnp.asarray(np.random.default_rng(1).normal(size=(4, 6)),
+                     jnp.float32)
+    want = np.asarray(model.mlp_fwd(params, xb))
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "nn.bin")
+        binio.write_nn(path, params)
+        loaded = regen_hlo.read_nn(path)
+    got = np.asarray(model.mlp_fwd(loaded, xb))
+    np.testing.assert_allclose(want, got, rtol=1e-6)

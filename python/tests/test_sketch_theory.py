@@ -1,0 +1,109 @@
+"""§3.2.1 theory sanity: the sketch is an unbiased estimator of the
+weighted KDE (Theorem 1) and the MoM error shrinks ~ 1/sqrt(L) (Theorem 2).
+
+These tests exercise the oracle implementations (ref.py) — the same math
+the rust sketch must satisfy (rust/tests mirror them on the rust side).
+"""
+
+import numpy as np
+
+from compile.kernels import ref
+
+
+def _sketch_estimates(points, alpha, queries, width, k, n_rows, n_cols,
+                      seed):
+    proj, bias = ref.gen_l2lsh_params(seed, points.shape[1],
+                                      n_rows * k, width)
+    sketch = ref.build_sketch(points, alpha, proj, bias, width, k,
+                              n_rows, n_cols)
+    codes = np.asarray(ref.l2lsh_codes(queries, proj, bias, width))
+    cols = ref.rehash_columns(codes, k, n_cols)
+    return sketch, cols
+
+
+def _debias(est, alpha_sum, n_cols):
+    """Rehashing to R columns adds a uniform 1/R collision floor:
+    E[S[l, h_l(q)]] = (1 - 1/R) f_K(q) + sum(alpha)/R.  Invert it."""
+    return (est - alpha_sum / n_cols) / (1.0 - 1.0 / n_cols)
+
+
+def test_sketch_unbiased_for_weighted_kde():
+    """Mean estimate over many rows converges to f_K (after debiasing the
+    uniform rehash floor)."""
+    rng = np.random.default_rng(0)
+    m, d, width, k = 40, 6, 2.5, 1
+    points = rng.normal(size=(m, d)).astype(np.float32)
+    alpha = rng.uniform(0.5, 1.5, size=m).astype(np.float32)
+    queries = rng.normal(size=(8, d)).astype(np.float32)
+    # NOTE: the sketch's effective kernel is the *sparse projection* kernel
+    # with distance scale 1/sqrt(3); ref.weighted_kde uses the same scale.
+    exact = np.asarray(ref.weighted_kde(queries, points, alpha, width, k))
+
+    n_rows, n_cols = 4000, 32
+    sketch, cols = _sketch_estimates(points, alpha, queries, width, k,
+                                     n_rows, n_cols, seed=123)
+    est = _debias(ref.query_sketch_mean(sketch, cols), alpha.sum(), n_cols)
+    # With 4000 rows the standard error is small; relative error per query
+    # should be tight and the estimate strongly correlated with the truth.
+    rel = np.abs(est - exact) / np.maximum(np.abs(exact), 1.0)
+    assert rel.max() < 0.15, (est, exact)
+    assert rel.mean() < 0.05, (est, exact)
+    assert np.corrcoef(est, exact)[0, 1] > 0.95
+
+
+def test_mom_error_decays_with_rows():
+    """Median-of-means error at L rows ~ C/sqrt(L): quadrupling L should
+    roughly halve the error (allow 30% slack, averaged over queries)."""
+    rng = np.random.default_rng(1)
+    m, d, width, k = 60, 5, 2.0, 1
+    points = rng.normal(size=(m, d)).astype(np.float32)
+    alpha = rng.uniform(0.2, 1.0, size=m).astype(np.float32)
+    queries = rng.normal(size=(16, d)).astype(np.float32)
+    exact = np.asarray(ref.weighted_kde(queries, points, alpha, width, k))
+    n_cols = 32
+
+    def mean_abs_err(n_rows, seeds):
+        errs = []
+        for s in seeds:
+            sketch, cols = _sketch_estimates(points, alpha, queries, width,
+                                             k, n_rows, n_cols, seed=s)
+            est = _debias(ref.query_sketch_mom(sketch, cols, 8),
+                          alpha.sum(), n_cols)
+            errs.append(np.abs(est - exact).mean())
+        return np.mean(errs)
+
+    e_small = mean_abs_err(100, seeds=range(5))
+    e_large = mean_abs_err(1600, seeds=range(5, 10))
+    # sqrt(1600/100) = 4x stderr reduction in theory; the median-of-means
+    # estimator also carries a small skew bias the extra rows cannot
+    # remove, so require a robust >= 1.4x decrease.
+    assert e_large < e_small / 1.4, (e_small, e_large)
+
+
+def test_sketch_additive_in_points():
+    """Building from D1 ∪ D2 equals building from D1 plus building from D2
+    (counter additivity — the streaming/mergeability property of RACE)."""
+    rng = np.random.default_rng(2)
+    d, width, k, n_rows, n_cols = 4, 2.0, 2, 16, 8
+    p1 = rng.normal(size=(10, d)).astype(np.float32)
+    p2 = rng.normal(size=(7, d)).astype(np.float32)
+    a1 = rng.normal(size=10).astype(np.float32)
+    a2 = rng.normal(size=7).astype(np.float32)
+    proj, bias = ref.gen_l2lsh_params(77, d, n_rows * k, width)
+    s_all = ref.build_sketch(np.vstack([p1, p2]), np.concatenate([a1, a2]),
+                             proj, bias, width, k, n_rows, n_cols)
+    s1 = ref.build_sketch(p1, a1, proj, bias, width, k, n_rows, n_cols)
+    s2 = ref.build_sketch(p2, a2, proj, bias, width, k, n_rows, n_cols)
+    np.testing.assert_allclose(s_all, s1 + s2, atol=1e-5)
+
+
+def test_row_sum_preserved():
+    """Every row's counters sum to sum(alpha) — mass conservation."""
+    rng = np.random.default_rng(3)
+    d, width, k, n_rows, n_cols = 5, 2.0, 1, 12, 16
+    pts = rng.normal(size=(25, d)).astype(np.float32)
+    alpha = rng.normal(size=25).astype(np.float32)
+    proj, bias = ref.gen_l2lsh_params(5, d, n_rows * k, width)
+    sketch = ref.build_sketch(pts, alpha, proj, bias, width, k, n_rows,
+                              n_cols)
+    np.testing.assert_allclose(sketch.sum(axis=1), alpha.sum(), rtol=1e-4)

@@ -1,0 +1,135 @@
+//! Coordinator bench (§Perf L3): batcher overhead and end-to-end router
+//! throughput under concurrent load, per backend.  L3 must not be the
+//! bottleneck relative to the raw engines (hot_path bench).
+//!
+//! Run: `cargo bench --bench coordinator`
+
+use repsketch::coordinator::batcher::BatcherConfig;
+use repsketch::coordinator::{
+    backend, BackendKind, Request, Router, RouterConfig,
+};
+use repsketch::data::Dataset;
+use repsketch::runtime::registry::DatasetBundle;
+use repsketch::util::bench;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn throughput(
+    router: &Arc<Router>,
+    model: &str,
+    kind: BackendKind,
+    rows: &[Vec<f32>],
+    n_clients: usize,
+    n_per_client: usize,
+) -> f64 {
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let router = router.clone();
+        let rows = rows.to_vec();
+        let model = model.to_string();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..n_per_client {
+                let resp = router.call(Request {
+                    id: (c * n_per_client + i) as u64,
+                    model: model.clone(),
+                    backend: kind,
+                    features: rows[i % rows.len()].clone(),
+                });
+                resp.result.expect("response");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    (n_clients * n_per_client) as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() -> anyhow::Result<()> {
+    let root = repsketch::artifacts_dir();
+    anyhow::ensure!(root.join(".stamp").exists(),
+                    "run `make artifacts` first");
+    let name = "adult";
+    let bundle = DatasetBundle::load(&root, name)?;
+    let meta = bundle.meta.clone();
+    let ds =
+        Dataset::load_artifact(&root, name, "test", meta.dim, meta.task)?;
+    let rows: Vec<Vec<f32>> =
+        (0..256).map(|i| ds.row(i % ds.len()).to_vec()).collect();
+
+    // --- raw engine baseline (no coordinator) ------------------------------
+    bench::header();
+    let mut qs = repsketch::sketch::QueryScratch::default();
+    let mut i = 0;
+    let raw = bench::run("raw rs_query (no coordinator)", || {
+        std::hint::black_box(
+            bundle.sketch.query_with(&rows[i % rows.len()], &mut qs),
+        );
+        i += 1;
+    });
+    raw.print();
+
+    // --- router with a single in-process caller ---------------------------
+    let mk_router = |max_batch: usize, max_wait_us: u64| {
+        let mut router = Router::new();
+        let cfg = RouterConfig {
+            batcher: BatcherConfig {
+                max_batch,
+                max_wait: Duration::from_micros(max_wait_us),
+                queue_cap: 1 << 16,
+            },
+        };
+        let sketch = bundle.sketch.clone();
+        router.add_lane(name, BackendKind::Sketch, move || {
+            Ok(Box::new(backend::SketchEngine::new(sketch)) as _)
+        }, &cfg);
+        let mlp = bundle.mlp.clone();
+        router.add_lane(name, BackendKind::NnRust, move || {
+            Ok(Box::new(backend::MlpEngine::new(mlp)) as _)
+        }, &cfg);
+        Arc::new(router)
+    };
+
+    let router = mk_router(32, 200);
+    let mut j = 0;
+    bench::run("router rs (1 client, batch<=32)", || {
+        let resp = router.call(Request {
+            id: j as u64,
+            model: name.into(),
+            backend: BackendKind::Sketch,
+            features: rows[j % rows.len()].clone(),
+        });
+        std::hint::black_box(resp.result.unwrap());
+        j += 1;
+    })
+    .print();
+
+    // --- concurrent throughput, batching policies --------------------------
+    println!("\n== concurrent throughput (16 clients x 500 reqs) ==");
+    for (mb, mw) in [(1usize, 0u64), (8, 200), (32, 200), (128, 500)] {
+        let router = mk_router(mb, mw);
+        let tput = throughput(
+            &router,
+            name,
+            BackendKind::Sketch,
+            &rows,
+            16,
+            500,
+        );
+        println!(
+            "  rs  max_batch={mb:<4} max_wait={mw:>4}us -> {tput:>10.0} \
+             req/s"
+        );
+    }
+    for (mb, mw) in [(32usize, 200u64)] {
+        let router = mk_router(mb, mw);
+        let tput =
+            throughput(&router, name, BackendKind::NnRust, &rows, 16, 200);
+        println!(
+            "  nn  max_batch={mb:<4} max_wait={mw:>4}us -> {tput:>10.0} \
+             req/s"
+        );
+    }
+    Ok(())
+}

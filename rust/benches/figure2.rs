@@ -1,0 +1,44 @@
+//! Figure-2 bench: regenerates the accuracy vs memory-reduction frontier
+//! (RS vs one-time/multi-time pruning vs KD) for the four panel datasets,
+//! and times how long a full sketch rebuild takes at each ladder point —
+//! the "no retraining" operational claim.
+//!
+//! Run: `cargo bench --bench figure2`
+
+use repsketch::experiments::figure2;
+use repsketch::kernel::KernelParams;
+use repsketch::sketch::{RaceSketch, SketchConfig};
+use repsketch::util::bench;
+
+fn main() -> anyhow::Result<()> {
+    let root = repsketch::artifacts_dir();
+    anyhow::ensure!(root.join(".stamp").exists(),
+                    "run `make artifacts` first");
+
+    let mut panels = Vec::new();
+    for name in repsketch::experiments::FIGURE2_DATASETS {
+        let panel = figure2::eval_panel(&root, name)?;
+        figure2::print_panel(&panel);
+        panels.push(panel);
+    }
+    let csv = figure2::to_csv(&panels);
+    let out = root.join("figure2.csv");
+    std::fs::write(&out, csv)?;
+    println!("\ncsv -> {}", out.display());
+
+    // Sketch (re)build cost along the ladder — why Figure 2's RS curve is
+    // free to sweep while pruning/KD need full retraining per point.
+    println!("\n== sketch build cost (adult) ==");
+    bench::header();
+    let kp = KernelParams::load(root.join("adult/kernel_params.bin"))?;
+    for rows in figure2::RS_ROW_LADDER {
+        bench::run(&format!("build L={rows} R=16 (M={})", kp.m), || {
+            std::hint::black_box(RaceSketch::build(
+                &kp,
+                &SketchConfig { rows, ..Default::default() },
+            ));
+        })
+        .print();
+    }
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! Hot-path microbenchmarks (§Perf): the Representer-Sketch query
+//! pipeline stage by stage, against the NN / Kernel engines, on every
+//! dataset.  This is the paper's computation-cost claim measured in
+//! wall-clock rather than FLOPs.
+//!
+//! Run: `cargo bench --bench hot_path [dataset]`
+
+use repsketch::data::Dataset;
+use repsketch::nn::{MlpScratch, SparseMlp};
+use repsketch::runtime::registry::DatasetBundle;
+use repsketch::sketch::QueryScratch;
+use repsketch::util::bench;
+
+fn main() -> anyhow::Result<()> {
+    let filter = std::env::args().nth(1);
+    let root = repsketch::artifacts_dir();
+    anyhow::ensure!(root.join(".stamp").exists(),
+                    "run `make artifacts` first");
+    bench::header();
+    for name in repsketch::experiments::DATASETS {
+        if let Some(f) = &filter {
+            if f != name {
+                continue;
+            }
+        }
+        let bundle = DatasetBundle::load(&root, name)?;
+        let meta = &bundle.meta;
+        let ds = Dataset::load_artifact(&root, name, "test", meta.dim,
+                                        meta.task)?;
+        let rows: Vec<Vec<f32>> =
+            (0..256.min(ds.len())).map(|i| ds.row(i).to_vec()).collect();
+
+        // full RS query
+        let mut qs = QueryScratch::default();
+        let sketch = &bundle.sketch;
+        let mut i = 0usize;
+        bench::run(&format!("{name}/rs_query (L={})", sketch.rows), || {
+            let r = &rows[i % rows.len()];
+            std::hint::black_box(sketch.query_with(r, &mut qs));
+            i += 1;
+        })
+        .print();
+
+        // NN dense forward
+        let mut ms = MlpScratch::default();
+        let mlp = &bundle.mlp;
+        let mut j = 0usize;
+        bench::run(
+            &format!("{name}/nn_forward ({} params)", mlp.param_count()),
+            || {
+                let r = &rows[j % rows.len()];
+                std::hint::black_box(mlp.forward_with(r, &mut ms));
+                j += 1;
+            },
+        )
+        .print();
+
+        // Pruned sparse forward at 16x (where available)
+        let pruned_path = root.join(name).join("pruned_mt_r16.bin");
+        if pruned_path.exists() {
+            let sparse = SparseMlp::from_dense(
+                &repsketch::nn::Mlp::load(&pruned_path)?,
+            );
+            let mut ss = MlpScratch::default();
+            let mut k = 0usize;
+            bench::run(
+                &format!("{name}/pruned16_forward ({} nnz)", sparse.nnz()),
+                || {
+                    let r = &rows[k % rows.len()];
+                    std::hint::black_box(sparse.forward_with(r, &mut ss));
+                    k += 1;
+                },
+            )
+            .print();
+        }
+
+        // exact kernel model
+        let kern = &bundle.kernel;
+        let mut l = 0usize;
+        bench::run(
+            &format!("{name}/kernel_exact (M={})", kern.params.m),
+            || {
+                let r = &rows[l % rows.len()];
+                std::hint::black_box(kern.predict(r));
+                l += 1;
+            },
+        )
+        .print();
+        println!();
+    }
+    Ok(())
+}

@@ -1,0 +1,95 @@
+//! Table-1 bench: regenerates the paper's Table 1 (accuracy / memory /
+//! FLOPs) and adds measured end-to-end wall-clock per query for each
+//! column — NN vs Kernel vs RS, plus the PJRT variants.
+//!
+//! Run: `cargo bench --bench table1`
+
+use repsketch::data::Dataset;
+use repsketch::experiments::table1;
+use repsketch::nn::MlpScratch;
+use repsketch::runtime::registry::DatasetBundle;
+use repsketch::runtime::Runtime;
+use repsketch::sketch::QueryScratch;
+use repsketch::util::bench;
+
+fn main() -> anyhow::Result<()> {
+    let root = repsketch::artifacts_dir();
+    anyhow::ensure!(root.join(".stamp").exists(),
+                    "run `make artifacts` first");
+
+    // Accuracy/memory/FLOPs table (the paper's rows).
+    let mut rows = Vec::new();
+    for name in repsketch::experiments::DATASETS {
+        let bundle = DatasetBundle::load(&root, name)?;
+        rows.push(table1::eval_dataset(&root, &bundle)?);
+    }
+    table1::print_table(&rows);
+
+    // Wall-clock column.
+    println!("\n== measured latency per query ==");
+    bench::header();
+    let rt = Runtime::cpu()?;
+    for name in repsketch::experiments::DATASETS {
+        let bundle = DatasetBundle::load(&root, name)?;
+        let meta = &bundle.meta;
+        let ds = Dataset::load_artifact(&root, name, "test", meta.dim,
+                                        meta.task)?;
+        let queries: Vec<Vec<f32>> =
+            (0..128.min(ds.len())).map(|i| ds.row(i).to_vec()).collect();
+
+        let mut qs = QueryScratch::default();
+        let mut i = 0;
+        bench::run(&format!("{name}/RS"), || {
+            std::hint::black_box(
+                bundle.sketch.query_with(&queries[i % queries.len()],
+                                         &mut qs),
+            );
+            i += 1;
+        })
+        .print();
+
+        let mut ms = MlpScratch::default();
+        let mut j = 0;
+        bench::run(&format!("{name}/NN-rust"), || {
+            std::hint::black_box(
+                bundle.mlp.forward_with(&queries[j % queries.len()],
+                                        &mut ms),
+            );
+            j += 1;
+        })
+        .print();
+
+        let mut l = 0;
+        bench::run(&format!("{name}/Kernel-rust"), || {
+            std::hint::black_box(
+                bundle.kernel.predict(&queries[l % queries.len()]),
+            );
+            l += 1;
+        })
+        .print();
+
+        // PJRT batched (amortized per query at the AOT batch size).
+        let exe = rt.load_hlo(
+            root.join(name).join("nn.hlo.txt"),
+            meta.aot_batch,
+            meta.dim,
+        )?;
+        let batch_refs: Vec<&[f32]> = queries
+            .iter()
+            .take(meta.aot_batch)
+            .map(|r| r.as_slice())
+            .collect();
+        let res = bench::run(&format!("{name}/NN-pjrt(batch32)"), || {
+            std::hint::black_box(exe.run_batch(&batch_refs).unwrap());
+        });
+        let mut per_query = res.clone();
+        per_query.name = format!("{name}/NN-pjrt(per-query)");
+        per_query.mean_ns /= meta.aot_batch as f64;
+        per_query.p50_ns /= meta.aot_batch as f64;
+        per_query.p99_ns /= meta.aot_batch as f64;
+        res.print();
+        per_query.print();
+        println!();
+    }
+    Ok(())
+}

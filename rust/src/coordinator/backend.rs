@@ -1,0 +1,167 @@
+//! Inference backends the router can dispatch to.
+//!
+//! Every dataset exposes up to five variants — the exact comparison
+//! matrix of the paper's evaluation:
+//!
+//! | kind      | engine                         | paper column |
+//! |-----------|--------------------------------|--------------|
+//! | `rs`      | RaceSketch (pure rust hot path)| RS           |
+//! | `nn`      | rust dense MLP                 | NN           |
+//! | `kernel`  | rust exact weighted KDE        | Kernel       |
+//! | `nn-pjrt` | PJRT executable of nn.hlo.txt  | NN (XLA)     |
+//! | `kernel-pjrt` | PJRT of kernel.hlo.txt (L1 Pallas) | Kernel (XLA) |
+
+use crate::kernel::KernelModel;
+use crate::nn::{Mlp, MlpScratch};
+use crate::runtime::Executable;
+use crate::sketch::{QueryScratch, RaceSketch};
+
+/// Which backend variant a request targets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    Sketch,
+    NnRust,
+    KernelRust,
+    NnPjrt,
+    KernelPjrt,
+}
+
+impl BackendKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Sketch => "rs",
+            BackendKind::NnRust => "nn",
+            BackendKind::KernelRust => "kernel",
+            BackendKind::NnPjrt => "nn-pjrt",
+            BackendKind::KernelPjrt => "kernel-pjrt",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        Some(match s {
+            "rs" | "sketch" => BackendKind::Sketch,
+            "nn" | "nn-rust" => BackendKind::NnRust,
+            "kernel" | "kernel-rust" => BackendKind::KernelRust,
+            "nn-pjrt" => BackendKind::NnPjrt,
+            "kernel-pjrt" => BackendKind::KernelPjrt,
+            _ => return None,
+        })
+    }
+
+    pub const ALL: [BackendKind; 5] = [
+        BackendKind::Sketch,
+        BackendKind::NnRust,
+        BackendKind::KernelRust,
+        BackendKind::NnPjrt,
+        BackendKind::KernelPjrt,
+    ];
+}
+
+/// A batch-evaluating engine.  Instances are created *and used* on their
+/// lane's worker thread (see `Router::add_lane`), so no `Send` bound —
+/// which is what lets non-`Send` PJRT executables serve traffic.
+pub trait Engine {
+    /// Expected input dimensionality.
+    fn dim(&self) -> usize;
+    /// Evaluate a batch of feature rows into scalars.
+    fn eval_batch(&mut self, rows: &[Vec<f32>]) -> anyhow::Result<Vec<f32>>;
+}
+
+/// RS hot path.
+pub struct SketchEngine {
+    pub sketch: RaceSketch,
+    scratch: QueryScratch,
+}
+
+impl SketchEngine {
+    pub fn new(sketch: RaceSketch) -> Self {
+        Self { sketch, scratch: QueryScratch::default() }
+    }
+}
+
+impl Engine for SketchEngine {
+    fn dim(&self) -> usize {
+        self.sketch.d
+    }
+
+    fn eval_batch(&mut self, rows: &[Vec<f32>]) -> anyhow::Result<Vec<f32>> {
+        Ok(rows
+            .iter()
+            .map(|r| self.sketch.query_with(r, &mut self.scratch))
+            .collect())
+    }
+}
+
+/// Rust dense MLP.
+pub struct MlpEngine {
+    pub mlp: Mlp,
+    scratch: MlpScratch,
+}
+
+impl MlpEngine {
+    pub fn new(mlp: Mlp) -> Self {
+        Self { mlp, scratch: MlpScratch::default() }
+    }
+}
+
+impl Engine for MlpEngine {
+    fn dim(&self) -> usize {
+        self.mlp.input_dim()
+    }
+
+    fn eval_batch(&mut self, rows: &[Vec<f32>]) -> anyhow::Result<Vec<f32>> {
+        Ok(rows
+            .iter()
+            .map(|r| self.mlp.forward_with(r, &mut self.scratch))
+            .collect())
+    }
+}
+
+/// Rust exact weighted KDE.
+pub struct KernelEngine {
+    pub model: KernelModel,
+}
+
+impl Engine for KernelEngine {
+    fn dim(&self) -> usize {
+        self.model.params.d
+    }
+
+    fn eval_batch(&mut self, rows: &[Vec<f32>]) -> anyhow::Result<Vec<f32>> {
+        Ok(rows.iter().map(|r| self.model.predict(r)).collect())
+    }
+}
+
+/// PJRT executable (AOT artifact).
+pub struct PjrtEngine {
+    pub exe: Executable,
+}
+
+impl Engine for PjrtEngine {
+    fn dim(&self) -> usize {
+        self.exe.dim
+    }
+
+    fn eval_batch(&mut self, rows: &[Vec<f32>]) -> anyhow::Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(rows.len());
+        for chunk in rows.chunks(self.exe.batch) {
+            let refs: Vec<&[f32]> =
+                chunk.iter().map(|r| r.as_slice()).collect();
+            out.extend(self.exe.run_batch(&refs)?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_roundtrip() {
+        for k in BackendKind::ALL {
+            assert_eq!(BackendKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(BackendKind::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,275 @@
+//! Dynamic batcher: size-or-deadline batching with a bounded queue.
+//!
+//! Requests accumulate in a FIFO; a worker receives a batch as soon as
+//! either (a) `max_batch` requests are waiting, or (b) the oldest waiting
+//! request has aged past `max_wait`.  The queue is bounded (`queue_cap`)
+//! — submission fails fast when the system is saturated, which is the
+//! backpressure contract the server surfaces to clients.
+
+use super::protocol::{Request, Response};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub queue_cap: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 1024,
+        }
+    }
+}
+
+/// A queued request together with its reply channel and enqueue time.
+pub struct Pending {
+    pub req: Request,
+    pub enqueued: Instant,
+    pub resp_tx: Sender<Response>,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    QueueFull,
+    Closed,
+}
+
+#[derive(Default)]
+struct State {
+    queue: VecDeque<Pending>,
+}
+
+/// Size-or-deadline dynamic batcher.
+pub struct DynamicBatcher {
+    cfg: BatcherConfig,
+    state: Mutex<State>,
+    cv: Condvar,
+    closed: AtomicBool,
+    pub submitted: AtomicU64,
+    pub batches: AtomicU64,
+}
+
+impl DynamicBatcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        Self {
+            cfg,
+            state: Mutex::new(State::default()),
+            cv: Condvar::new(),
+            closed: AtomicBool::new(false),
+            submitted: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+        }
+    }
+
+    pub fn config(&self) -> &BatcherConfig {
+        &self.cfg
+    }
+
+    /// Enqueue a request; fails fast on saturation or shutdown.
+    pub fn submit(&self, p: Pending) -> Result<(), SubmitError> {
+        if self.closed.load(Ordering::Acquire) {
+            return Err(SubmitError::Closed);
+        }
+        let mut st = self.state.lock().unwrap();
+        if st.queue.len() >= self.cfg.queue_cap {
+            return Err(SubmitError::QueueFull);
+        }
+        st.queue.push_back(p);
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        drop(st);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    pub fn depth(&self) -> usize {
+        self.state.lock().unwrap().queue.len()
+    }
+
+    /// Block until a batch is ready (or `None` after close + drain).
+    pub fn next_batch(&self) -> Option<Vec<Pending>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if !st.queue.is_empty() {
+                let ready_by_size = st.queue.len() >= self.cfg.max_batch;
+                let oldest_age = st.queue.front().unwrap().enqueued.elapsed();
+                let ready_by_age = oldest_age >= self.cfg.max_wait;
+                if ready_by_size
+                    || ready_by_age
+                    || self.closed.load(Ordering::Acquire)
+                {
+                    let n = st.queue.len().min(self.cfg.max_batch);
+                    let batch: Vec<Pending> = st.queue.drain(..n).collect();
+                    self.batches.fetch_add(1, Ordering::Relaxed);
+                    return Some(batch);
+                }
+                // Wait out the remaining age budget.
+                let remaining = self.cfg.max_wait - oldest_age;
+                let (g, _) = self.cv.wait_timeout(st, remaining).unwrap();
+                st = g;
+            } else {
+                if self.closed.load(Ordering::Acquire) {
+                    return None;
+                }
+                let (g, _) = self
+                    .cv
+                    .wait_timeout(st, Duration::from_millis(50))
+                    .unwrap();
+                st = g;
+            }
+        }
+    }
+
+    /// Stop accepting new work and wake all workers to drain.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+        self.cv.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::BackendKind;
+    use std::sync::mpsc::channel;
+    use std::sync::Arc;
+
+    fn mk_pending(id: u64) -> (Pending, std::sync::mpsc::Receiver<Response>) {
+        let (tx, rx) = channel();
+        (
+            Pending {
+                req: Request {
+                    id,
+                    model: "m".into(),
+                    backend: BackendKind::Sketch,
+                    features: vec![0.0],
+                },
+                enqueued: Instant::now(),
+                resp_tx: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn batch_forms_at_max_size() {
+        let b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_secs(10),
+            queue_cap: 100,
+        });
+        let mut rxs = Vec::new();
+        for i in 0..4 {
+            let (p, rx) = mk_pending(i);
+            b.submit(p).unwrap();
+            rxs.push(rx);
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 4);
+        // FIFO order preserved
+        let ids: Vec<u64> = batch.iter().map(|p| p.req.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn batch_fires_on_deadline() {
+        let b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 100,
+            max_wait: Duration::from_millis(5),
+            queue_cap: 100,
+        });
+        let (p, _rx) = mk_pending(1);
+        let t0 = Instant::now();
+        b.submit(p).unwrap();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(4), "{waited:?}");
+        assert!(waited < Duration::from_millis(500), "{waited:?}");
+    }
+
+    #[test]
+    fn queue_cap_enforced() {
+        let b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_secs(10),
+            queue_cap: 2,
+        });
+        let (p1, _r1) = mk_pending(1);
+        let (p2, _r2) = mk_pending(2);
+        let (p3, _r3) = mk_pending(3);
+        assert!(b.submit(p1).is_ok());
+        assert!(b.submit(p2).is_ok());
+        assert_eq!(b.submit(p3).unwrap_err(), SubmitError::QueueFull);
+    }
+
+    #[test]
+    fn close_rejects_and_drains() {
+        let b = DynamicBatcher::new(BatcherConfig::default());
+        let (p, _r) = mk_pending(1);
+        b.submit(p).unwrap();
+        b.close();
+        let (p2, _r2) = mk_pending(2);
+        assert_eq!(b.submit(p2).unwrap_err(), SubmitError::Closed);
+        // drain remaining then None
+        assert_eq!(b.next_batch().unwrap().len(), 1);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn concurrent_producers_no_loss() {
+        let b = Arc::new(DynamicBatcher::new(BatcherConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 100_000,
+        }));
+        let n_threads = 4;
+        let per_thread = 500;
+        let mut handles = Vec::new();
+        for t in 0..n_threads {
+            let b = b.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per_thread {
+                    let (p, _rx) = mk_pending((t * per_thread + i) as u64);
+                    b.submit(p).unwrap();
+                }
+            }));
+        }
+        let consumer = {
+            let b = b.clone();
+            std::thread::spawn(move || {
+                let mut seen = std::collections::HashSet::new();
+                let mut max_batch_seen = 0;
+                while seen.len() < n_threads * per_thread {
+                    if let Some(batch) = b.next_batch() {
+                        max_batch_seen = max_batch_seen.max(batch.len());
+                        for p in batch {
+                            assert!(seen.insert(p.req.id), "dup {}", p.req.id);
+                        }
+                    }
+                }
+                (seen.len(), max_batch_seen)
+            })
+        };
+        for h in handles {
+            h.join().unwrap();
+        }
+        let (seen, max_batch_seen) = consumer.join().unwrap();
+        assert_eq!(seen, n_threads * per_thread);
+        assert!(max_batch_seen <= 16);
+        b.close();
+    }
+}

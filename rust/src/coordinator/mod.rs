@@ -1,0 +1,32 @@
+//! L3 serving coordinator — the deployment wrapper around the sketch and
+//! its baselines: request router, dynamic batcher, backend engines, TCP
+//! JSON-line server, metrics, and bounded-queue backpressure.
+//!
+//! Architecture (vLLM-router-shaped, scaled to an edge-inference system):
+//!
+//! ```text
+//!        TCP / in-process clients
+//!                 │  submit(Request)
+//!                 ▼
+//!            ┌─────────┐    per-(model, backend) bounded queues
+//!            │ Router  ├──► ┌──────────────┐
+//!            └─────────┘    │ DynamicBatch │──► worker thread ──► Engine
+//!                           │  (size/age)  │        │ (RS hot path /
+//!                           └──────────────┘        │  rust NN / PJRT)
+//!                                                   ▼
+//!                                          per-request responses
+//! ```
+//!
+//! Python is never on this path; the PJRT backends execute AOT artifacts.
+
+pub mod backend;
+pub mod batcher;
+pub mod protocol;
+pub mod router;
+pub mod server;
+
+pub use backend::{BackendKind, Engine};
+pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use protocol::{Request, Response};
+pub use router::{Router, RouterConfig, SubmitError};
+pub use server::Server;

@@ -1,0 +1,151 @@
+//! Wire/request types for the coordinator and the TCP JSON-line protocol.
+//!
+//! One request per line:
+//! `{"id": 7, "model": "adult", "backend": "rs", "x": [..d floats..]}`
+//! One response per line:
+//! `{"id": 7, "y": 0.42, "us": 13.5}` or `{"id": 7, "error": "..."}`.
+
+use super::backend::BackendKind;
+use crate::util::json::{self, Json};
+
+/// An inference request routed through the coordinator.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub model: String,
+    pub backend: BackendKind,
+    pub features: Vec<f32>,
+}
+
+/// The coordinator's answer.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub result: Result<f32, String>,
+    /// Queue + execution latency in microseconds.
+    pub latency_us: f64,
+}
+
+impl Request {
+    pub fn parse_line(line: &str) -> Result<Request, String> {
+        let j = json::parse(line)?;
+        let id = j
+            .get("id")
+            .and_then(|v| v.as_u64())
+            .ok_or("missing/invalid id")?;
+        let model = j
+            .get("model")
+            .and_then(|v| v.as_str())
+            .ok_or("missing model")?
+            .to_string();
+        let backend = match j.get("backend").and_then(|v| v.as_str()) {
+            Some(s) => BackendKind::parse(s).ok_or("unknown backend")?,
+            None => BackendKind::Sketch,
+        };
+        let features = j.get("x").ok_or("missing x")?.as_f32_flat();
+        if features.is_empty() {
+            return Err("empty feature vector".into());
+        }
+        Ok(Request { id, model, backend, features })
+    }
+
+    pub fn to_line(&self) -> String {
+        let x = Json::Arr(
+            self.features.iter().map(|&v| Json::num(v as f64)).collect(),
+        );
+        json::obj(vec![
+            ("id", Json::from_u64(self.id)),
+            ("model", Json::Str(self.model.clone())),
+            ("backend", Json::Str(self.backend.name().into())),
+            ("x", x),
+        ])
+        .to_string()
+    }
+}
+
+impl Response {
+    pub fn to_line(&self) -> String {
+        match &self.result {
+            Ok(y) => json::obj(vec![
+                ("id", Json::from_u64(self.id)),
+                ("y", Json::num(*y as f64)),
+                ("us", Json::num(self.latency_us)),
+            ])
+            .to_string(),
+            Err(e) => json::obj(vec![
+                ("id", Json::from_u64(self.id)),
+                ("error", Json::Str(e.clone())),
+            ])
+            .to_string(),
+        }
+    }
+
+    pub fn parse_line(line: &str) -> Result<Response, String> {
+        let j = json::parse(line)?;
+        let id = j.get("id").and_then(|v| v.as_u64()).ok_or("missing id")?;
+        if let Some(err) = j.get("error").and_then(|v| v.as_str()) {
+            return Ok(Response {
+                id,
+                result: Err(err.to_string()),
+                latency_us: 0.0,
+            });
+        }
+        let y = j
+            .get("y")
+            .and_then(|v| v.as_f64())
+            .ok_or("missing y")? as f32;
+        let us = j.get("us").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        Ok(Response { id, result: Ok(y), latency_us: us })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let r = Request {
+            id: 42,
+            model: "adult".into(),
+            backend: BackendKind::NnRust,
+            features: vec![1.0, -0.5, 0.0],
+        };
+        let line = r.to_line();
+        let r2 = Request::parse_line(&line).unwrap();
+        assert_eq!(r2.id, 42);
+        assert_eq!(r2.model, "adult");
+        assert_eq!(r2.backend, BackendKind::NnRust);
+        assert_eq!(r2.features, r.features);
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let ok = Response { id: 1, result: Ok(0.5), latency_us: 12.5 };
+        let p = Response::parse_line(&ok.to_line()).unwrap();
+        assert_eq!(p.id, 1);
+        assert_eq!(p.result.unwrap(), 0.5);
+        let err = Response {
+            id: 2,
+            result: Err("boom".into()),
+            latency_us: 0.0,
+        };
+        let p2 = Response::parse_line(&err.to_line()).unwrap();
+        assert!(p2.result.is_err());
+    }
+
+    #[test]
+    fn default_backend_is_sketch() {
+        let r =
+            Request::parse_line(r#"{"id":1,"model":"m","x":[1]}"#).unwrap();
+        assert_eq!(r.backend, BackendKind::Sketch);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Request::parse_line("{}").is_err());
+        assert!(Request::parse_line(r#"{"id":1,"model":"m","x":[]}"#)
+            .is_err());
+        assert!(Request::parse_line("not json").is_err());
+    }
+}

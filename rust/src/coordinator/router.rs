@@ -1,0 +1,362 @@
+//! Request router: owns one dynamic batcher + worker thread per
+//! (model, backend) lane, dispatches submissions, tracks latency
+//! histograms, and handles shutdown.
+
+use super::backend::{BackendKind, Engine};
+use super::batcher::{BatcherConfig, DynamicBatcher, Pending};
+use super::protocol::{Request, Response};
+use crate::metrics::LatencyHistogram;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+use std::time::Instant;
+
+pub use super::batcher::SubmitError;
+
+/// Router-wide configuration.
+#[derive(Clone, Debug, Default)]
+pub struct RouterConfig {
+    pub batcher: BatcherConfig,
+}
+
+struct Lane {
+    batcher: Arc<DynamicBatcher>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    latency: Arc<LatencyHistogram>,
+}
+
+/// Routes requests to per-(model, backend) lanes.
+pub struct Router {
+    lanes: HashMap<(String, BackendKind), Lane>,
+    pub rejected: AtomicU64,
+}
+
+impl Router {
+    pub fn new() -> Self {
+        Self { lanes: HashMap::new(), rejected: AtomicU64::new(0) }
+    }
+
+    /// Register a lane: a backend engine served by one worker thread.
+    ///
+    /// The engine is constructed *inside* the worker via `factory` — PJRT
+    /// executables are not `Send` (the xla crate holds `Rc`s), so they
+    /// must live and die on the thread that runs them.  If construction
+    /// fails, the lane stays up and answers every request with the error.
+    pub fn add_lane<F>(
+        &mut self,
+        model: &str,
+        kind: BackendKind,
+        factory: F,
+        cfg: &RouterConfig,
+    ) where
+        F: FnOnce() -> anyhow::Result<Box<dyn Engine>> + Send + 'static,
+    {
+        let batcher = Arc::new(DynamicBatcher::new(cfg.batcher.clone()));
+        let latency = Arc::new(LatencyHistogram::new());
+        let worker = {
+            let batcher = batcher.clone();
+            let latency = latency.clone();
+            let label = format!("{model}/{}", kind.name());
+            std::thread::Builder::new()
+                .name(format!("lane-{label}"))
+                .spawn(move || match factory() {
+                    Ok(mut engine) => {
+                        while let Some(batch) = batcher.next_batch() {
+                            Self::run_batch(&mut *engine, batch, &latency);
+                        }
+                    }
+                    Err(e) => {
+                        let msg = format!("engine init failed: {e}");
+                        while let Some(batch) = batcher.next_batch() {
+                            for p in batch {
+                                let _ = p.resp_tx.send(Response {
+                                    id: p.req.id,
+                                    result: Err(msg.clone()),
+                                    latency_us: 0.0,
+                                });
+                            }
+                        }
+                    }
+                })
+                .expect("spawn lane worker")
+        };
+        self.lanes.insert(
+            (model.to_string(), kind),
+            Lane { batcher, worker: Some(worker), latency },
+        );
+    }
+
+    fn run_batch(
+        engine: &mut dyn Engine,
+        batch: Vec<Pending>,
+        latency: &LatencyHistogram,
+    ) {
+        let rows: Vec<Vec<f32>> =
+            batch.iter().map(|p| p.req.features.clone()).collect();
+        let dim = engine.dim();
+        // Validate dims up front so one bad request cannot poison a batch.
+        let mut ok_idx = Vec::with_capacity(batch.len());
+        let mut ok_rows = Vec::with_capacity(batch.len());
+        for (i, (p, row)) in batch.iter().zip(rows).enumerate() {
+            if row.len() == dim {
+                ok_idx.push(i);
+                ok_rows.push(row);
+            } else {
+                let _ = p.resp_tx.send(Response {
+                    id: p.req.id,
+                    result: Err(format!(
+                        "dim mismatch: got {}, want {dim}",
+                        row.len()
+                    )),
+                    latency_us: 0.0,
+                });
+            }
+        }
+        let outs = engine.eval_batch(&ok_rows);
+        match outs {
+            Ok(values) => {
+                for (slot, value) in ok_idx.iter().zip(values) {
+                    let p = &batch[*slot];
+                    let dur = p.enqueued.elapsed();
+                    latency.record(dur);
+                    let _ = p.resp_tx.send(Response {
+                        id: p.req.id,
+                        result: Ok(value),
+                        latency_us: dur.as_nanos() as f64 / 1e3,
+                    });
+                }
+            }
+            Err(e) => {
+                for slot in &ok_idx {
+                    let p = &batch[*slot];
+                    let _ = p.resp_tx.send(Response {
+                        id: p.req.id,
+                        result: Err(format!("engine error: {e}")),
+                        latency_us: 0.0,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Submit a request; the response arrives on the returned channel.
+    pub fn submit(&self, req: Request) -> Result<Receiver<Response>, SubmitError> {
+        let key = (req.model.clone(), req.backend);
+        let lane = match self.lanes.get(&key) {
+            Some(l) => l,
+            None => {
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                // Unknown lane: answer immediately with an error response.
+                let (tx, rx) = channel();
+                let _ = tx.send(Response {
+                    id: req.id,
+                    result: Err(format!(
+                        "no lane for model={} backend={}",
+                        req.model,
+                        req.backend.name()
+                    )),
+                    latency_us: 0.0,
+                });
+                return Ok(rx);
+            }
+        };
+        let (tx, rx) = channel();
+        lane.batcher
+            .submit(Pending { req, enqueued: Instant::now(), resp_tx: tx })
+            .map(|()| rx)
+            .map_err(|e| {
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                e
+            })
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn call(&self, req: Request) -> Response {
+        let id = req.id;
+        match self.submit(req) {
+            Ok(rx) => rx.recv().unwrap_or(Response {
+                id,
+                result: Err("worker dropped".into()),
+                latency_us: 0.0,
+            }),
+            Err(e) => Response {
+                id,
+                result: Err(format!("rejected: {e:?}")),
+                latency_us: 0.0,
+            },
+        }
+    }
+
+    pub fn lane_stats(&self) -> Vec<(String, String, u64, u64, String)> {
+        self.lanes
+            .iter()
+            .map(|((m, k), lane)| {
+                (
+                    m.clone(),
+                    k.name().to_string(),
+                    lane.batcher.submitted.load(Ordering::Relaxed),
+                    lane.batcher.batches.load(Ordering::Relaxed),
+                    lane.latency.summary(),
+                )
+            })
+            .collect()
+    }
+
+    pub fn latency_of(&self, model: &str, kind: BackendKind)
+        -> Option<Arc<LatencyHistogram>> {
+        self.lanes
+            .get(&(model.to_string(), kind))
+            .map(|l| l.latency.clone())
+    }
+
+    /// Graceful shutdown: close all lanes, join workers (drains queues).
+    pub fn shutdown(&mut self) {
+        for lane in self.lanes.values() {
+            lane.batcher.close();
+        }
+        for lane in self.lanes.values_mut() {
+            if let Some(h) = lane.worker.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl Default for Router {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Test engine: y = sum(x) (+ optional failure injection).
+    struct SumEngine {
+        dim: usize,
+        fail: bool,
+    }
+
+    impl Engine for SumEngine {
+        fn dim(&self) -> usize {
+            self.dim
+        }
+
+        fn eval_batch(&mut self, rows: &[Vec<f32>])
+            -> anyhow::Result<Vec<f32>> {
+            if self.fail {
+                anyhow::bail!("injected failure");
+            }
+            Ok(rows.iter().map(|r| r.iter().sum()).collect())
+        }
+    }
+
+    fn mk_router(fail: bool) -> Router {
+        let mut r = Router::new();
+        r.add_lane(
+            "m",
+            BackendKind::Sketch,
+            move || Ok(Box::new(SumEngine { dim: 3, fail }) as Box<dyn Engine>),
+            &RouterConfig::default(),
+        );
+        r
+    }
+
+    fn req(id: u64, x: Vec<f32>) -> Request {
+        Request {
+            id,
+            model: "m".into(),
+            backend: BackendKind::Sketch,
+            features: x,
+        }
+    }
+
+    #[test]
+    fn routes_and_answers() {
+        let r = mk_router(false);
+        let resp = r.call(req(1, vec![1.0, 2.0, 3.0]));
+        assert_eq!(resp.id, 1);
+        assert_eq!(resp.result.unwrap(), 6.0);
+        assert!(resp.latency_us > 0.0);
+    }
+
+    #[test]
+    fn unknown_lane_gets_error_response() {
+        let r = mk_router(false);
+        let resp = r.call(Request {
+            id: 9,
+            model: "nope".into(),
+            backend: BackendKind::Sketch,
+            features: vec![1.0],
+        });
+        assert!(resp.result.is_err());
+        assert_eq!(r.rejected.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn dim_mismatch_isolated_within_batch() {
+        let r = mk_router(false);
+        let bad = r.call(req(1, vec![1.0]));
+        assert!(bad.result.is_err());
+        let good = r.call(req(2, vec![1.0, 1.0, 1.0]));
+        assert_eq!(good.result.unwrap(), 3.0);
+    }
+
+    #[test]
+    fn engine_failure_reported_not_lost() {
+        let r = mk_router(true);
+        let resp = r.call(req(1, vec![1.0, 2.0, 3.0]));
+        assert!(resp.result.unwrap_err().contains("injected"));
+    }
+
+    #[test]
+    fn every_request_gets_exactly_one_response() {
+        // The central no-loss/no-dup invariant under concurrency.
+        let r = std::sync::Arc::new(mk_router(false));
+        let n_threads = 8;
+        let per_thread = 200u64;
+        let mut handles = Vec::new();
+        for t in 0..n_threads {
+            let r = r.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                for i in 0..per_thread {
+                    let id = t * per_thread + i;
+                    let resp =
+                        r.call(req(id, vec![id as f32, 0.0, 1.0]));
+                    assert_eq!(resp.id, id);
+                    got.push((id, resp.result.unwrap()));
+                }
+                got
+            }));
+        }
+        let mut all = std::collections::HashMap::new();
+        for h in handles {
+            for (id, v) in h.join().unwrap() {
+                assert!(all.insert(id, v).is_none(), "dup id {id}");
+                assert_eq!(v, id as f32 + 1.0);
+            }
+        }
+        assert_eq!(all.len(), (n_threads * per_thread) as usize);
+    }
+
+    #[test]
+    fn stats_track_submissions() {
+        let r = mk_router(false);
+        for i in 0..10 {
+            let _ = r.call(req(i, vec![0.0, 0.0, 0.0]));
+        }
+        let stats = r.lane_stats();
+        assert_eq!(stats.len(), 1);
+        assert_eq!(stats[0].2, 10); // submitted
+        assert!(stats[0].3 >= 1); // batches
+    }
+}

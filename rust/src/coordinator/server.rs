@@ -1,0 +1,135 @@
+//! TCP JSON-line server on top of the router.
+//!
+//! One OS thread per connection (edge-scale concurrency); requests stream
+//! in as JSON lines, responses stream out as they complete (a per-
+//! connection writer thread serializes them).  Malformed lines produce an
+//! error response with id 0 rather than killing the connection; queue-full
+//! backpressure is surfaced as an error response for that id.
+
+use super::protocol::{Request, Response};
+use super::router::Router;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+
+pub struct Server {
+    router: Arc<Router>,
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    pub connections: Arc<AtomicU64>,
+}
+
+impl Server {
+    /// Bind to an address ("127.0.0.1:0" for an ephemeral port).
+    pub fn bind(router: Arc<Router>, addr: &str) -> anyhow::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        Ok(Self {
+            router,
+            listener,
+            stop: Arc::new(AtomicBool::new(false)),
+            connections: Arc::new(AtomicU64::new(0)),
+        })
+    }
+
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.listener.local_addr().unwrap()
+    }
+
+    /// Serve until `stop_handle` flips; call from a dedicated thread.
+    pub fn serve(&self) {
+        self.listener.set_nonblocking(true).ok();
+        loop {
+            if self.stop.load(Ordering::Acquire) {
+                break;
+            }
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    self.connections.fetch_add(1, Ordering::Relaxed);
+                    let router = self.router.clone();
+                    let stop = self.stop.clone();
+                    std::thread::spawn(move || {
+                        handle_conn(stream, router, stop);
+                    });
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(_) => break,
+            }
+        }
+    }
+
+    pub fn stop_handle(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    router: Arc<Router>,
+    stop: Arc<AtomicBool>,
+) {
+    stream.set_nodelay(true).ok();
+    let reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    // Writer thread: serializes responses from all in-flight requests.
+    let (out_tx, out_rx) = mpsc::channel::<Response>();
+    let mut wstream = stream;
+    let writer = std::thread::spawn(move || {
+        for resp in out_rx {
+            let mut line = resp.to_line();
+            line.push('\n');
+            if wstream.write_all(line.as_bytes()).is_err() {
+                break;
+            }
+        }
+    });
+
+    for line in reader.lines() {
+        if stop.load(Ordering::Acquire) {
+            break;
+        }
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        match Request::parse_line(&line) {
+            Ok(req) => {
+                let id = req.id;
+                match router.submit(req) {
+                    Ok(rx) => {
+                        // Forward the response asynchronously.
+                        let out_tx = out_tx.clone();
+                        std::thread::spawn(move || {
+                            if let Ok(resp) = rx.recv() {
+                                let _ = out_tx.send(resp);
+                            }
+                        });
+                    }
+                    Err(e) => {
+                        let _ = out_tx.send(Response {
+                            id,
+                            result: Err(format!("backpressure: {e:?}")),
+                            latency_us: 0.0,
+                        });
+                    }
+                }
+            }
+            Err(e) => {
+                let _ = out_tx.send(Response {
+                    id: 0,
+                    result: Err(format!("bad request: {e}")),
+                    latency_us: 0.0,
+                });
+            }
+        }
+    }
+    drop(out_tx);
+    let _ = writer.join();
+}

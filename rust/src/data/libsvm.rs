@@ -1,0 +1,138 @@
+//! libsvm sparse text format parser.
+//!
+//! Each line: `<label> <index>:<value> <index>:<value> ...` with 1-based,
+//! strictly increasing indices.  Classification labels `+1/-1` (or `1/0`)
+//! map to `{1, 0}`; regression labels parse as floats.
+
+use super::{Dataset, Task};
+use anyhow::{bail, Context, Result};
+
+pub fn parse_libsvm(text: &str, dim: usize, task: Task) -> Result<Dataset> {
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_ascii_whitespace();
+        let label_tok = parts.next().context("missing label")?;
+        let label = match task {
+            Task::Classification => match label_tok {
+                "+1" | "1" => 1.0,
+                "-1" | "0" => 0.0,
+                other => bail!("line {}: bad class label {other:?}", ln + 1),
+            },
+            Task::Regression => label_tok
+                .parse::<f32>()
+                .with_context(|| format!("line {}: bad label", ln + 1))?,
+        };
+        let row_start = x.len();
+        x.resize(row_start + dim, 0.0);
+        let mut prev_idx = 0usize;
+        for feat in parts {
+            let (idx_s, val_s) = feat
+                .split_once(':')
+                .with_context(|| format!("line {}: bad feature {feat:?}", ln + 1))?;
+            let idx: usize = idx_s
+                .parse()
+                .with_context(|| format!("line {}: bad index", ln + 1))?;
+            if idx == 0 || idx > dim {
+                bail!("line {}: index {idx} out of range 1..={dim}", ln + 1);
+            }
+            if idx <= prev_idx {
+                bail!("line {}: indices not increasing", ln + 1);
+            }
+            prev_idx = idx;
+            let val: f32 = val_s
+                .parse()
+                .with_context(|| format!("line {}: bad value", ln + 1))?;
+            x[row_start + idx - 1] = val;
+        }
+        y.push(label);
+    }
+    Ok(Dataset { dim, task, x, y })
+}
+
+/// Emit libsvm text (mirrors `datasets.py::write_libsvm`).
+pub fn to_libsvm(ds: &Dataset) -> String {
+    let mut out = String::new();
+    for i in 0..ds.len() {
+        match ds.task {
+            Task::Classification => {
+                out.push_str(if ds.y[i] > 0.5 { "+1" } else { "-1" });
+            }
+            Task::Regression => {
+                out.push_str(&format!("{:.6}", ds.y[i]));
+            }
+        }
+        for (j, &v) in ds.row(i).iter().enumerate() {
+            if v != 0.0 {
+                out.push_str(&format!(" {}:{:.6}", j + 1, v));
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_classification() {
+        let ds = parse_libsvm("+1 1:0.5 3:2\n-1 2:-1\n", 3,
+                              Task::Classification).unwrap();
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds.row(0), &[0.5, 0.0, 2.0]);
+        assert_eq!(ds.row(1), &[0.0, -1.0, 0.0]);
+        assert_eq!(ds.y, vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn parse_regression() {
+        let ds =
+            parse_libsvm("-0.25 1:1\n1.5 2:2\n", 2, Task::Regression).unwrap();
+        assert_eq!(ds.y, vec![-0.25, 1.5]);
+    }
+
+    #[test]
+    fn skips_blank_and_comment_lines() {
+        let ds = parse_libsvm("\n# header\n+1 1:1\n\n", 1,
+                              Task::Classification).unwrap();
+        assert_eq!(ds.len(), 1);
+    }
+
+    #[test]
+    fn rejects_out_of_range_index() {
+        assert!(parse_libsvm("+1 4:1\n", 3, Task::Classification).is_err());
+        assert!(parse_libsvm("+1 0:1\n", 3, Task::Classification).is_err());
+    }
+
+    #[test]
+    fn rejects_non_increasing_indices() {
+        assert!(
+            parse_libsvm("+1 2:1 2:2\n", 3, Task::Classification).is_err()
+        );
+        assert!(
+            parse_libsvm("+1 3:1 1:2\n", 3, Task::Classification).is_err()
+        );
+    }
+
+    #[test]
+    fn rejects_bad_label() {
+        assert!(parse_libsvm("2 1:1\n", 1, Task::Classification).is_err());
+        assert!(parse_libsvm("abc 1:1\n", 1, Task::Regression).is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let ds = parse_libsvm("+1 1:0.5 2:-2\n-1 3:1\n", 3,
+                              Task::Classification).unwrap();
+        let text = to_libsvm(&ds);
+        let ds2 = parse_libsvm(&text, 3, Task::Classification).unwrap();
+        assert_eq!(ds.x, ds2.x);
+        assert_eq!(ds.y, ds2.y);
+    }
+}

@@ -1,0 +1,134 @@
+//! Data substrate: libsvm parsing, dataset containers, and a rust-side
+//! synthetic generator for self-contained tests/benches.
+//!
+//! The artifacts pipeline materializes the paper's six datasets (or their
+//! synthetic stand-ins — DESIGN.md §4) as standard libsvm text files, so
+//! real UCI downloads drop in with no code change.
+
+pub mod libsvm;
+pub mod synthetic;
+
+pub use libsvm::parse_libsvm;
+
+/// Task type of a dataset (paper Table 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    Classification,
+    Regression,
+}
+
+impl Task {
+    pub fn from_str(s: &str) -> anyhow::Result<Task> {
+        match s {
+            "classification" => Ok(Task::Classification),
+            "regression" => Ok(Task::Regression),
+            other => anyhow::bail!("unknown task {other:?}"),
+        }
+    }
+}
+
+/// An in-memory dataset: dense rows + targets.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub dim: usize,
+    pub task: Task,
+    /// Row-major (n, dim).
+    pub x: Vec<f32>,
+    /// Targets: classification => {0, 1}; regression => float.
+    pub y: Vec<f32>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.dim..(i + 1) * self.dim]
+    }
+
+    pub fn rows(&self) -> impl Iterator<Item = &[f32]> {
+        self.x.chunks_exact(self.dim)
+    }
+
+    /// Load `artifacts/data/<name>/{train|test}.libsvm`.
+    pub fn load_artifact(
+        root: &std::path::Path,
+        name: &str,
+        split: &str,
+        dim: usize,
+        task: Task,
+    ) -> anyhow::Result<Dataset> {
+        let path = root.join("data").join(name).join(format!("{split}.libsvm"));
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("read {path:?}: {e}"))?;
+        parse_libsvm(&text, dim, task)
+    }
+
+    /// Score predictions against targets: classification accuracy
+    /// (logit > 0) or MAE.
+    pub fn score(&self, preds: &[f32]) -> f32 {
+        assert_eq!(preds.len(), self.len());
+        match self.task {
+            Task::Classification => {
+                let correct = preds
+                    .iter()
+                    .zip(&self.y)
+                    .filter(|(p, y)| (**p > 0.0) == (**y > 0.5))
+                    .count();
+                correct as f32 / self.len() as f32
+            }
+            Task::Regression => {
+                preds
+                    .iter()
+                    .zip(&self.y)
+                    .map(|(p, y)| (p - y).abs())
+                    .sum::<f32>()
+                    / self.len() as f32
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn score_classification() {
+        let ds = Dataset {
+            dim: 1,
+            task: Task::Classification,
+            x: vec![0.0; 4],
+            y: vec![1.0, 0.0, 1.0, 0.0],
+        };
+        assert_eq!(ds.score(&[2.0, -1.0, -3.0, 0.5]), 0.5);
+    }
+
+    #[test]
+    fn score_regression_mae() {
+        let ds = Dataset {
+            dim: 1,
+            task: Task::Regression,
+            x: vec![0.0; 2],
+            y: vec![1.0, -1.0],
+        };
+        assert!((ds.score(&[2.0, -1.5]) - 0.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn row_access() {
+        let ds = Dataset {
+            dim: 2,
+            task: Task::Regression,
+            x: vec![1.0, 2.0, 3.0, 4.0],
+            y: vec![0.0, 0.0],
+        };
+        assert_eq!(ds.row(1), &[3.0, 4.0]);
+        assert_eq!(ds.rows().count(), 2);
+    }
+}

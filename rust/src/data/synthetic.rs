@@ -1,0 +1,134 @@
+//! Rust-side synthetic workload generator — self-contained data for unit
+//! tests, property tests, and benches that must not depend on `make
+//! artifacts` having run.  (The *evaluation* datasets come from the python
+//! pipeline; this generator mirrors its latent-signal recipe but does not
+//! need to match it numerically.)
+
+use super::{Dataset, Task};
+use crate::util::rng::SplitMix64;
+
+/// Configuration for a synthetic dataset.
+#[derive(Clone, Debug)]
+pub struct SyntheticSpec {
+    pub n: usize,
+    pub dim: usize,
+    pub latent_dim: usize,
+    pub task: Task,
+    pub noise: f32,
+    pub seed: u64,
+}
+
+impl Default for SyntheticSpec {
+    fn default() -> Self {
+        Self {
+            n: 1000,
+            dim: 10,
+            latent_dim: 4,
+            task: Task::Classification,
+            noise: 0.2,
+            seed: 7,
+        }
+    }
+}
+
+/// Generate a dataset: latent Gaussian code -> fixed random tanh net
+/// signal; features are an affine view of the code plus noise.
+pub fn generate(spec: &SyntheticSpec) -> Dataset {
+    let mut rng = SplitMix64::new(spec.seed);
+    let k = spec.latent_dim;
+    // Random 2-layer tanh net over the latent code.
+    let h1 = 16usize;
+    let w1: Vec<f32> = (0..k * h1)
+        .map(|_| rng.next_gaussian() as f32 * (1.2 / (k as f32).sqrt()))
+        .collect();
+    let w2: Vec<f32> = (0..h1)
+        .map(|_| rng.next_gaussian() as f32 / (h1 as f32).sqrt())
+        .collect();
+    let view: Vec<f32> = (0..k * spec.dim)
+        .map(|_| rng.next_gaussian() as f32 / (k as f32).sqrt())
+        .collect();
+
+    let mut x = Vec::with_capacity(spec.n * spec.dim);
+    let mut signal = Vec::with_capacity(spec.n);
+    for _ in 0..spec.n {
+        let z: Vec<f32> = (0..k).map(|_| rng.next_gaussian() as f32).collect();
+        // signal
+        let mut s = 0.0f32;
+        for j in 0..h1 {
+            let mut a = 0.0f32;
+            for i in 0..k {
+                a += z[i] * w1[i * h1 + j];
+            }
+            s += a.tanh() * w2[j];
+        }
+        signal.push(s);
+        // features
+        for dcol in 0..spec.dim {
+            let mut v = 0.0f32;
+            for i in 0..k {
+                v += z[i] * view[i * spec.dim + dcol];
+            }
+            x.push(v + spec.noise * rng.next_gaussian() as f32);
+        }
+    }
+    // standardize signal
+    let mean = signal.iter().sum::<f32>() / spec.n as f32;
+    let var = signal.iter().map(|s| (s - mean) * (s - mean)).sum::<f32>()
+        / spec.n as f32;
+    let std = var.sqrt().max(1e-9);
+    let y: Vec<f32> = signal
+        .iter()
+        .map(|s| {
+            let v = (s - mean) / std
+                + spec.noise * rng.next_gaussian() as f32;
+            match spec.task {
+                Task::Classification => (v > 0.0) as u32 as f32,
+                Task::Regression => v,
+            }
+        })
+        .collect();
+    Dataset { dim: spec.dim, task: spec.task, x, y }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let spec = SyntheticSpec::default();
+        let a = generate(&spec);
+        let b = generate(&spec);
+        assert_eq!(a.len(), 1000);
+        assert_eq!(a.x.len(), 1000 * 10);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn classification_labels_binary_balancedish() {
+        let ds = generate(&SyntheticSpec { n: 4000, ..Default::default() });
+        assert!(ds.y.iter().all(|&v| v == 0.0 || v == 1.0));
+        let frac = ds.y.iter().sum::<f32>() / ds.len() as f32;
+        assert!((0.25..0.75).contains(&frac), "{frac}");
+    }
+
+    #[test]
+    fn regression_standardized() {
+        let ds = generate(&SyntheticSpec {
+            n: 5000,
+            task: Task::Regression,
+            noise: 0.1,
+            ..Default::default()
+        });
+        let mean = ds.y.iter().sum::<f32>() / ds.len() as f32;
+        assert!(mean.abs() < 0.1, "{mean}");
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = generate(&SyntheticSpec::default());
+        let b = generate(&SyntheticSpec { seed: 8, ..Default::default() });
+        assert_ne!(a.x, b.x);
+    }
+}

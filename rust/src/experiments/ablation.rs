@@ -1,0 +1,73 @@
+//! Ablations over the sketch's design choices (DESIGN.md §5):
+//!
+//! * estimator — median-of-means (paper Alg. 2 / Lemma 1) vs plain mean;
+//! * debiasing — correcting the uniform 1/R rehash-collision floor
+//!   (our implementation refinement over the paper) vs raw estimates;
+//! * columns R — counter range vs accuracy;
+//! * groups g — MoM group count.
+//!
+//! Each variant is evaluated on the full test split of one dataset at the
+//! default L.
+
+use crate::data::Dataset;
+use crate::kernel::KernelParams;
+use crate::runtime::registry::DatasetMeta;
+use crate::sketch::{QueryScratch, RaceSketch, SketchConfig};
+use anyhow::Result;
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct AblationRow {
+    pub label: String,
+    pub metric: f32,
+    pub params: usize,
+}
+
+pub fn run(root: &Path, dataset: &str) -> Result<Vec<AblationRow>> {
+    let dir = root.join(dataset);
+    let meta = DatasetMeta::load(&dir)?;
+    let kp = KernelParams::load(dir.join("kernel_params.bin"))?;
+    let ds = Dataset::load_artifact(root, dataset, "test", meta.dim,
+                                    meta.task)?;
+
+    let eval = |cfg: &SketchConfig| -> (f32, usize) {
+        let sk = RaceSketch::build(&kp, cfg);
+        let mut s = QueryScratch::default();
+        let preds: Vec<f32> =
+            ds.rows().map(|r| sk.query_with(r, &mut s)).collect();
+        (ds.score(&preds), sk.param_count())
+    };
+
+    let base = SketchConfig::default();
+    let mut rows = Vec::new();
+    let mut push = |label: &str, cfg: SketchConfig| {
+        let (metric, params) = eval(&cfg);
+        rows.push(AblationRow { label: label.to_string(), metric, params });
+    };
+
+    push("default (MoM g=8, debias, R=16)", base.clone());
+    push("estimator: mean", SketchConfig { use_mom: false, ..base.clone() });
+    push("debias: off", SketchConfig { debias: false, ..base.clone() });
+    push(
+        "debias: off + mean",
+        SketchConfig { debias: false, use_mom: false, ..base.clone() },
+    );
+    for g in [2usize, 4, 16] {
+        push(&format!("groups g={g}"),
+             SketchConfig { groups: g, ..base.clone() });
+    }
+    for cols in [4usize, 8, 32, 64] {
+        push(&format!("columns R={cols}"),
+             SketchConfig { cols, ..base.clone() });
+    }
+    Ok(rows)
+}
+
+pub fn print_rows(dataset: &str, task_label: &str, rows: &[AblationRow]) {
+    println!("\n== Ablation ({dataset}, metric = {task_label}) ==");
+    println!("{:<36} {:>10} {:>10}", "variant", "metric", "params");
+    println!("{}", "-".repeat(58));
+    for r in rows {
+        println!("{:<36} {:>10.4} {:>10}", r.label, r.metric, r.params);
+    }
+}

@@ -1,0 +1,190 @@
+//! Figure 2: accuracy versus memory-reduction-rate frontier —
+//! Representer Sketch vs one-time pruning, multi-time pruning, and
+//! knowledge distillation (panels a–d: adult, phishing, skin, abalone).
+//!
+//! RS points come from re-building the sketch at a ladder of row counts
+//! (no retraining needed — the whole point of sketch-time compression);
+//! baseline points come from the pruned / KD artifacts the python
+//! pipeline trained.
+
+use crate::data::Dataset;
+use crate::kernel::KernelParams;
+use crate::nn::{Mlp, MlpScratch, SparseMlp};
+use crate::runtime::registry::DatasetMeta;
+use crate::sketch::{QueryScratch, RaceSketch, SketchConfig};
+use anyhow::Result;
+use std::path::Path;
+
+/// One point on a Figure-2 curve.
+#[derive(Clone, Debug)]
+pub struct CurvePoint {
+    /// Memory reduction rate vs the teacher (x-axis, log scale).
+    pub reduction: f64,
+    /// Accuracy (cls) or MAE (reg) on the test split (y-axis).
+    pub metric: f32,
+}
+
+/// All curves for one dataset panel.
+#[derive(Clone, Debug)]
+pub struct Panel {
+    pub name: String,
+    pub nn_metric: f32,
+    pub nn_params: usize,
+    pub rs: Vec<CurvePoint>,
+    pub prune_one_time: Vec<CurvePoint>,
+    pub prune_multi_time: Vec<CurvePoint>,
+    pub kd: Vec<CurvePoint>,
+}
+
+/// Sketch-row ladder used for the RS curve.
+pub const RS_ROW_LADDER: [usize; 7] = [50, 100, 200, 300, 500, 1000, 2000];
+/// Pruning reduction levels trained by the python pipeline.
+pub const PRUNE_REDUCTIONS: [usize; 7] = [2, 4, 8, 16, 32, 64, 128];
+/// KD student widths trained by the python pipeline.
+pub const KD_WIDTHS: [usize; 4] = [128, 48, 16, 6];
+
+pub fn eval_panel(root: &Path, name: &str) -> Result<Panel> {
+    let dir = root.join(name);
+    let meta = DatasetMeta::load(&dir)?;
+    let ds = Dataset::load_artifact(root, name, "test", meta.dim, meta.task)?;
+    let teacher = Mlp::load(dir.join("nn_weights.bin"))?;
+    let nn_params = teacher.param_count();
+    let mut scratch = MlpScratch::default();
+    let nn_preds: Vec<f32> = ds
+        .rows()
+        .map(|r| teacher.forward_with(r, &mut scratch))
+        .collect();
+    let nn_metric = ds.score(&nn_preds);
+
+    // --- RS ladder -------------------------------------------------------
+    let kp = KernelParams::load(dir.join("kernel_params.bin"))?;
+    let mut rs = Vec::new();
+    for rows in RS_ROW_LADDER {
+        let sk = RaceSketch::build(
+            &kp,
+            &SketchConfig { rows, ..Default::default() },
+        );
+        let mut qs = QueryScratch::default();
+        let preds: Vec<f32> =
+            ds.rows().map(|r| sk.query_with(r, &mut qs)).collect();
+        rs.push(CurvePoint {
+            reduction: nn_params as f64 / sk.param_count() as f64,
+            metric: ds.score(&preds),
+        });
+    }
+
+    // --- pruning ----------------------------------------------------------
+    let mut prune_one_time = Vec::new();
+    let mut prune_multi_time = Vec::new();
+    for red in PRUNE_REDUCTIONS {
+        for (prefix, out) in [
+            ("pruned_ot_r", &mut prune_one_time),
+            ("pruned_mt_r", &mut prune_multi_time),
+        ] {
+            let path = dir.join(format!("{prefix}{red}.bin"));
+            if !path.exists() {
+                continue;
+            }
+            let dense = Mlp::load(&path)?;
+            let sparse = SparseMlp::from_dense(&dense);
+            let mut s = MlpScratch::default();
+            let preds: Vec<f32> =
+                ds.rows().map(|r| sparse.forward_with(r, &mut s)).collect();
+            out.push(CurvePoint {
+                reduction: nn_params as f64 / sparse.param_count() as f64,
+                metric: ds.score(&preds),
+            });
+        }
+    }
+
+    // --- knowledge distillation -------------------------------------------
+    let mut kd = Vec::new();
+    for w in KD_WIDTHS {
+        let path = dir.join(format!("kd_h{w}.bin"));
+        if !path.exists() {
+            continue;
+        }
+        let student = Mlp::load(&path)?;
+        let mut s = MlpScratch::default();
+        let preds: Vec<f32> =
+            ds.rows().map(|r| student.forward_with(r, &mut s)).collect();
+        kd.push(CurvePoint {
+            reduction: nn_params as f64 / student.param_count() as f64,
+            metric: ds.score(&preds),
+        });
+    }
+
+    Ok(Panel {
+        name: name.to_string(),
+        nn_metric,
+        nn_params,
+        rs,
+        prune_one_time,
+        prune_multi_time,
+        kd,
+    })
+}
+
+fn fmt_curve(points: &[CurvePoint]) -> String {
+    points
+        .iter()
+        .map(|p| format!("{:>7.1}x:{:>6.3}", p.reduction, p.metric))
+        .collect::<Vec<_>>()
+        .join("  ")
+}
+
+pub fn print_panel(panel: &Panel) {
+    println!(
+        "\n-- Figure 2 panel: {} (teacher metric {:.3}, {} params) --",
+        panel.name, panel.nn_metric, panel.nn_params
+    );
+    println!("  {:<18} {}", "RS:", fmt_curve(&panel.rs));
+    println!("  {:<18} {}", "One-Time Prune:",
+             fmt_curve(&panel.prune_one_time));
+    println!("  {:<18} {}", "Multi-Time Prune:",
+             fmt_curve(&panel.prune_multi_time));
+    println!("  {:<18} {}", "KD:", fmt_curve(&panel.kd));
+}
+
+pub fn to_csv(panels: &[Panel]) -> String {
+    let mut out =
+        String::from("dataset,method,memory_reduction,metric\n");
+    for p in panels {
+        let mut emit = |method: &str, pts: &[CurvePoint]| {
+            for pt in pts {
+                out.push_str(&format!(
+                    "{},{},{:.3},{}\n",
+                    p.name, method, pt.reduction, pt.metric
+                ));
+            }
+        };
+        emit("rs", &p.rs);
+        emit("prune_one_time", &p.prune_one_time);
+        emit("prune_multi_time", &p.prune_multi_time);
+        emit("kd", &p.kd);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_emits_all_series() {
+        let panel = Panel {
+            name: "x".into(),
+            nn_metric: 0.9,
+            nn_params: 1000,
+            rs: vec![CurvePoint { reduction: 10.0, metric: 0.89 }],
+            prune_one_time: vec![CurvePoint { reduction: 2.0, metric: 0.9 }],
+            prune_multi_time: vec![],
+            kd: vec![CurvePoint { reduction: 5.0, metric: 0.85 }],
+        };
+        let csv = to_csv(&[panel]);
+        assert!(csv.contains("x,rs,10.000,0.89"));
+        assert!(csv.contains("x,prune_one_time,2.000,0.9"));
+        assert!(csv.contains("x,kd,5.000,0.85"));
+        assert!(!csv.contains("prune_multi_time,"));
+    }
+}

@@ -1,0 +1,57 @@
+//! Experiment harness — regenerates every table and figure of the paper's
+//! evaluation (§4) from the artifacts tree.
+//!
+//! | exp | paper artifact | module |
+//! |-----|----------------|--------|
+//! | `table1` | Table 1: accuracy / memory / FLOPs, NN vs Kernel vs RS | [`table1`] |
+//! | `table2` | Table 2: dataset + parameter inventory | [`table2`] |
+//! | `figure2` | Figure 2(a–d): accuracy vs memory-reduction frontier vs pruning/KD | [`figure2`] |
+//! | `theory` | §3.2.1 sanity: MoM error ~ 1/sqrt(L) | [`theory`] |
+//!
+//! Each module returns structured rows (testable) and offers a
+//! `print_*` that renders the paper-style table to stdout.
+
+pub mod ablation;
+pub mod figure2;
+pub mod table1;
+pub mod table2;
+pub mod theory;
+
+/// Datasets in canonical paper order.
+pub const DATASETS: [&str; 6] =
+    ["adult", "phishing", "skin", "susy", "abalone", "yearmsd"];
+
+/// The four datasets shown in Figure 2 panels (a)–(d).
+pub const FIGURE2_DATASETS: [&str; 4] =
+    ["adult", "phishing", "skin", "abalone"];
+
+/// Paper-reported Table 1 values for side-by-side comparison
+/// (accuracy columns: NN, Kernel, RS; memory MB: NN, RS).
+pub struct PaperRow {
+    pub name: &'static str,
+    pub acc: [f64; 3],
+    pub mem_mb: [f64; 2],
+    pub mem_reduction: f64,
+    pub flops_reduction: f64,
+}
+
+pub const PAPER_TABLE1: [PaperRow; 6] = [
+    PaperRow { name: "adult", acc: [0.820, 0.829, 0.829],
+               mem_mb: [1.82, 0.016], mem_reduction: 114.0,
+               flops_reduction: 59.0 },
+    PaperRow { name: "phishing", acc: [0.954, 0.954, 0.954],
+               mem_mb: [1.60, 0.031], mem_reduction: 51.0,
+               flops_reduction: 20.0 },
+    PaperRow { name: "skin", acc: [0.999, 0.997, 0.997],
+               mem_mb: [0.338, 0.019], mem_reduction: 17.8,
+               flops_reduction: 11.0 },
+    PaperRow { name: "susy", acc: [0.803, 0.802, 0.790],
+               mem_mb: [5.73, 0.41], mem_reduction: 69.0,
+               flops_reduction: 4.0 },
+    PaperRow { name: "abalone", acc: [1.51, 1.52, 1.51],
+               mem_mb: [0.28, 0.006], mem_reduction: 46.0,
+               flops_reduction: 14.0 },
+    PaperRow { name: "yearmsd", acc: [12.06, 12.05, 11.24],
+               mem_mb: [6.25, 0.12], mem_reduction: 50.0,
+               flops_reduction: 10.0 },
+];

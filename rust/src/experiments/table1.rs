@@ -1,0 +1,169 @@
+//! Table 1: accuracy, memory and FLOPs for NN / Kernel / RS per dataset.
+//!
+//! All three models are evaluated in rust on the held-out test split; the
+//! cost columns use the paper's §4.3 conventions (`metrics::cost`).
+
+use crate::data::{Dataset, Task};
+use crate::metrics::cost;
+use crate::nn::MlpScratch;
+use crate::runtime::registry::DatasetBundle;
+use crate::sketch::QueryScratch;
+use anyhow::Result;
+use std::path::Path;
+
+/// One measured Table-1 row.
+#[derive(Clone, Debug)]
+pub struct Table1Row {
+    pub name: String,
+    pub task: Task,
+    /// [NN, Kernel, RS] — accuracy (cls) or MAE (reg).
+    pub metric: [f32; 3],
+    /// Parameter counts [NN, Kernel, RS].
+    pub params: [usize; 3],
+    /// FLOPs per query [NN, Kernel, RS].
+    pub flops: [usize; 3],
+}
+
+impl Table1Row {
+    pub fn mem_reduction(&self) -> f64 {
+        self.params[0] as f64 / self.params[2] as f64
+    }
+
+    pub fn flops_reduction(&self) -> f64 {
+        self.flops[0] as f64 / self.flops[2] as f64
+    }
+}
+
+/// Evaluate one dataset bundle into a Table-1 row.
+pub fn eval_dataset(root: &Path, bundle: &DatasetBundle) -> Result<Table1Row> {
+    let meta = &bundle.meta;
+    let ds = Dataset::load_artifact(root, &meta.name, "test", meta.dim,
+                                    meta.task)?;
+    let mut nn_scratch = MlpScratch::default();
+    let nn_preds: Vec<f32> = ds
+        .rows()
+        .map(|r| bundle.mlp.forward_with(r, &mut nn_scratch))
+        .collect();
+    let kern_preds: Vec<f32> =
+        ds.rows().map(|r| bundle.kernel.predict(r)).collect();
+    let mut s = QueryScratch::default();
+    let rs_preds: Vec<f32> =
+        ds.rows().map(|r| bundle.sketch.query_with(r, &mut s)).collect();
+
+    let kp = &bundle.kernel.params;
+    Ok(Table1Row {
+        name: meta.name.clone(),
+        task: meta.task,
+        metric: [
+            ds.score(&nn_preds),
+            ds.score(&kern_preds),
+            ds.score(&rs_preds),
+        ],
+        params: [
+            bundle.mlp.param_count(),
+            kp.param_count(),
+            bundle.sketch.param_count(),
+        ],
+        flops: [
+            bundle.mlp.flops_per_query(),
+            cost::kernel_model_flops(kp.d, kp.p, kp.m),
+            bundle.sketch.flops_per_query(),
+        ],
+    })
+}
+
+/// Render the paper-style table, with the paper's own numbers inlined for
+/// shape comparison.
+pub fn print_table(rows: &[Table1Row]) {
+    println!("\n== Table 1: accuracy / memory / FLOPs (measured) ==");
+    println!(
+        "{:<10} {:>8} {:>8} {:>8} | {:>9} {:>9} {:>6} | {:>9} {:>9} {:>6}",
+        "dataset", "NN", "Kernel", "RS", "NN(MB)", "RS(MB)", "red.",
+        "NN FLOPs", "RS FLOPs", "red."
+    );
+    println!("{}", "-".repeat(104));
+    for r in rows {
+        println!(
+            "{:<10} {:>8.3} {:>8.3} {:>8.3} | {:>9} {:>9} {:>5.1}x | \
+             {:>9} {:>9} {:>5.1}x",
+            r.name,
+            r.metric[0],
+            r.metric[1],
+            r.metric[2],
+            cost::fmt_mb(r.params[0]),
+            cost::fmt_mb(r.params[2]),
+            r.mem_reduction(),
+            cost::fmt_flops(r.flops[0]),
+            cost::fmt_flops(r.flops[2]),
+            r.flops_reduction(),
+        );
+    }
+    println!("\n-- paper-reported values (for shape comparison) --");
+    for p in &super::PAPER_TABLE1 {
+        println!(
+            "{:<10} {:>8.3} {:>8.3} {:>8.3} | {:>9.3} {:>9.3} {:>5.1}x | \
+             {:>9} {:>9} {:>5.1}x",
+            p.name, p.acc[0], p.acc[1], p.acc[2], p.mem_mb[0], p.mem_mb[1],
+            p.mem_reduction, "-", "-", p.flops_reduction
+        );
+    }
+}
+
+/// CSV for downstream plotting.
+pub fn to_csv(rows: &[Table1Row]) -> String {
+    let mut out = String::from(
+        "dataset,task,nn_metric,kernel_metric,rs_metric,nn_params,\
+         kernel_params,rs_params,nn_flops,kernel_flops,rs_flops,\
+         mem_reduction,flops_reduction\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "{},{:?},{},{},{},{},{},{},{},{},{},{:.2},{:.2}\n",
+            r.name,
+            r.task,
+            r.metric[0],
+            r.metric[1],
+            r.metric[2],
+            r.params[0],
+            r.params[1],
+            r.params[2],
+            r.flops[0],
+            r.flops[1],
+            r.flops[2],
+            r.mem_reduction(),
+            r.flops_reduction(),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row() -> Table1Row {
+        Table1Row {
+            name: "t".into(),
+            task: Task::Classification,
+            metric: [0.9, 0.89, 0.88],
+            params: [100_000, 5_000, 1_000],
+            flops: [200_000, 10_000, 2_000],
+        }
+    }
+
+    #[test]
+    fn reductions() {
+        let r = row();
+        assert!((r.mem_reduction() - 100.0).abs() < 1e-9);
+        assert!((r.flops_reduction() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn csv_has_header_and_row() {
+        let csv = to_csv(&[row()]);
+        let lines: Vec<&str> = csv.trim().split('\n').collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("dataset,"));
+        assert!(lines[1].starts_with("t,Classification,0.9,"));
+    }
+}

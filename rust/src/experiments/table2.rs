@@ -1,0 +1,39 @@
+//! Table 2: dataset information and parameter settings.
+
+use crate::runtime::registry::DatasetMeta;
+
+pub fn print_table(metas: &[DatasetMeta]) {
+    println!("\n== Table 2: datasets and parameter settings ==");
+    println!(
+        "{:<10} {:<14} {:>5} {:>7} {:>7} {:<22} {:>6} {:>3} {:>5} {:>5}",
+        "dataset", "task", "dim", "train", "test", "NN hidden", "L", "K",
+        "R", "p"
+    );
+    println!("{}", "-".repeat(94));
+    for m in metas {
+        let hidden = m
+            .hidden
+            .iter()
+            .map(|h| h.to_string())
+            .collect::<Vec<_>>()
+            .join("/");
+        println!(
+            "{:<10} {:<14} {:>5} {:>7} {:>7} {:<22} {:>6} {:>3} {:>5} {:>5}",
+            m.name,
+            format!("{:?}", m.task).to_lowercase(),
+            m.dim,
+            "-",
+            "-",
+            hidden,
+            m.default_rows,
+            m.k_per_row,
+            m.default_cols,
+            m.kernel_p,
+        );
+    }
+    println!(
+        "\n(L = sketch rows / hash repetitions, K = concatenation power, \
+         R = counter columns, p = projected dim; paper Table 2 lists the \
+         repetition count in its 'R' column — see DESIGN.md §4.)"
+    );
+}

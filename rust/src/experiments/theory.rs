@@ -1,0 +1,118 @@
+//! §3.2.1 theory check: median-of-means sketch error vs row count.
+//!
+//! Theorem 2 predicts |Z(q) − f_K(q)| = O(1/sqrt(L)).  We build sketches
+//! at a ladder of L against one dataset's kernel model and report the
+//! mean absolute error vs the exact KDE, plus the fitted decay exponent
+//! (should be ≈ −0.5 until the debiased-rehash noise floor).
+
+use crate::data::Dataset;
+use crate::kernel::{KernelModel, KernelParams};
+use crate::sketch::{QueryScratch, RaceSketch, SketchConfig};
+use anyhow::Result;
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct TheoryPoint {
+    pub rows: usize,
+    pub mean_abs_err: f64,
+    pub rel_err: f64,
+}
+
+pub const ROW_LADDER: [usize; 6] = [25, 50, 100, 400, 1600, 6400];
+
+pub fn run(root: &Path, dataset: &str, n_queries: usize)
+    -> Result<Vec<TheoryPoint>> {
+    let dir = root.join(dataset);
+    let kp = KernelParams::load(dir.join("kernel_params.bin"))?;
+    let meta = crate::runtime::registry::DatasetMeta::load(&dir)?;
+    let ds = Dataset::load_artifact(root, dataset, "test", meta.dim,
+                                    meta.task)?;
+    let model = KernelModel::new(kp.clone());
+    let n = n_queries.min(ds.len());
+    let exact: Vec<f32> =
+        (0..n).map(|i| model.predict(ds.row(i))).collect();
+    let scale = exact.iter().map(|v| v.abs() as f64).sum::<f64>()
+        / n as f64;
+
+    let mut out = Vec::new();
+    for rows in ROW_LADDER {
+        let sk = RaceSketch::build(
+            &kp,
+            &SketchConfig { rows, ..Default::default() },
+        );
+        let mut s = QueryScratch::default();
+        let err: f64 = (0..n)
+            .map(|i| {
+                (sk.query_with(ds.row(i), &mut s) - exact[i]).abs() as f64
+            })
+            .sum::<f64>()
+            / n as f64;
+        out.push(TheoryPoint {
+            rows,
+            mean_abs_err: err,
+            rel_err: err / scale.max(1e-9),
+        });
+    }
+    Ok(out)
+}
+
+/// Least-squares slope of log(err) vs log(rows).
+pub fn decay_exponent(points: &[TheoryPoint]) -> f64 {
+    let n = points.len() as f64;
+    let (mut sx, mut sy, mut sxx, mut sxy) = (0.0, 0.0, 0.0, 0.0);
+    for p in points {
+        let x = (p.rows as f64).ln();
+        let y = p.mean_abs_err.max(1e-12).ln();
+        sx += x;
+        sy += y;
+        sxx += x * x;
+        sxy += x * y;
+    }
+    (n * sxy - sx * sy) / (n * sxx - sx * sx)
+}
+
+pub fn print_points(dataset: &str, points: &[TheoryPoint]) {
+    println!("\n== Theory check ({dataset}): MoM error vs rows L ==");
+    println!("{:>8} {:>14} {:>10}", "L", "mean |err|", "rel err");
+    for p in points {
+        println!("{:>8} {:>14.5} {:>9.1}%", p.rows, p.mean_abs_err,
+                 p.rel_err * 100.0);
+    }
+    println!(
+        "fitted decay exponent: {:.3}  (Theorem 2 predicts -0.5 until \
+         the rehash noise floor)",
+        decay_exponent(points)
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decay_exponent_recovers_slope() {
+        // err = C * rows^-0.5 exactly -> slope -0.5.
+        let pts: Vec<TheoryPoint> = [25usize, 100, 400, 1600]
+            .iter()
+            .map(|&rows| TheoryPoint {
+                rows,
+                mean_abs_err: 10.0 / (rows as f64).sqrt(),
+                rel_err: 0.0,
+            })
+            .collect();
+        assert!((decay_exponent(&pts) + 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decay_exponent_flat_is_zero() {
+        let pts: Vec<TheoryPoint> = [10usize, 100, 1000]
+            .iter()
+            .map(|&rows| TheoryPoint {
+                rows,
+                mean_abs_err: 2.0,
+                rel_err: 0.0,
+            })
+            .collect();
+        assert!(decay_exponent(&pts).abs() < 1e-9);
+    }
+}

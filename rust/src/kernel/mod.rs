@@ -1,0 +1,190 @@
+//! The universal LSH kernel (paper §3.3) and the exact weighted kernel
+//! density `f_K` (paper Eq. 3) — the "Kernel" column of Table 1.
+//!
+//! [`collision_prob`] is the closed-form L2-LSH collision probability of
+//! Datar et al.; [`row_kernel`] raises it to the concatenation power K and
+//! applies the 1/√3 distance scale of Achlioptas-sparse projections;
+//! [`KernelParams`] loads the distilled model (`kernel_params.bin`,
+//! RSKP format) and [`KernelModel`] evaluates `f_K` exactly in O(M·p).
+
+pub mod params;
+
+pub use params::KernelParams;
+
+use crate::util::math::norm_cdf;
+
+/// Distance scale for Achlioptas-sparse ±1 projections (entry variance
+/// 1/3) relative to the unit-variance p-stable scheme.  See ref.py.
+pub const SPARSE_SCALE: f64 = 0.577_350_269_189_625_8; // 1/sqrt(3)
+
+/// Datar et al. L2-LSH collision probability `p(c)` for unit-variance
+/// projections and bucket width `width`; `p(0) = 1`.
+pub fn collision_prob(c: f64, width: f64) -> f64 {
+    let c = c.max(1e-9);
+    let t = width / c;
+    let phi_neg = norm_cdf(-t);
+    let tail = (2.0 / ((2.0 * std::f64::consts::PI).sqrt() * t))
+        * (1.0 - (-0.5 * t * t).exp());
+    (1.0 - 2.0 * phi_neg - tail).clamp(0.0, 1.0)
+}
+
+/// Effective kernel of one sketch row: K concatenated sparse hashes.
+pub fn row_kernel(c: f64, width: f64, k_per_row: u32) -> f64 {
+    collision_prob(c * SPARSE_SCALE, width).powi(k_per_row as i32)
+}
+
+/// The exact weighted-KDE model `f_K(q) = Σ_j α_j K(A^T q, x_j)`.
+pub struct KernelModel {
+    pub params: KernelParams,
+}
+
+impl KernelModel {
+    pub fn new(params: KernelParams) -> Self {
+        Self { params }
+    }
+
+    /// Project a query into the learned space: `q' = A^T q` (p floats).
+    pub fn project(&self, q: &[f32], out: &mut [f32]) {
+        let kp = &self.params;
+        debug_assert_eq!(q.len(), kp.d);
+        debug_assert_eq!(out.len(), kp.p);
+        out.fill(0.0);
+        // A is (d, p) row-major.
+        for (i, &qi) in q.iter().enumerate() {
+            if qi == 0.0 {
+                continue;
+            }
+            let row = &kp.a[i * kp.p..(i + 1) * kp.p];
+            for (o, &aij) in out.iter_mut().zip(row) {
+                *o += qi * aij;
+            }
+        }
+    }
+
+    /// Exact `f_K` for a raw query (projects, then sums over M points).
+    pub fn predict(&self, q: &[f32]) -> f32 {
+        let mut proj = vec![0.0f32; self.params.p];
+        self.project(q, &mut proj);
+        self.predict_projected(&proj)
+    }
+
+    /// Exact `f_K` for an already-projected query.
+    pub fn predict_projected(&self, proj: &[f32]) -> f32 {
+        let kp = &self.params;
+        let mut acc = 0.0f64;
+        for j in 0..kp.m {
+            let xj = &kp.x[j * kp.p..(j + 1) * kp.p];
+            let mut d2 = 0.0f32;
+            for (a, b) in proj.iter().zip(xj) {
+                let diff = a - b;
+                d2 += diff * diff;
+            }
+            let dist = (d2 as f64).sqrt();
+            acc += kp.alpha[j] as f64
+                * row_kernel(dist, kp.width as f64, kp.k_per_row);
+        }
+        acc as f32
+    }
+
+    /// Batch predict.
+    pub fn predict_batch(&self, queries: &[Vec<f32>]) -> Vec<f32> {
+        queries.iter().map(|q| self.predict(q)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collision_prob_monotone_and_bounded() {
+        let mut prev = 1.0;
+        for i in 1..200 {
+            let c = i as f64 * 0.1;
+            let p = collision_prob(c, 2.5);
+            assert!((0.0..=1.0).contains(&p));
+            assert!(p <= prev + 1e-12, "not monotone at c={c}");
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn collision_prob_limits() {
+        assert!(collision_prob(1e-6, 2.0) > 0.999);
+        assert!(collision_prob(1e4, 2.0) < 1e-3);
+    }
+
+    #[test]
+    fn row_kernel_power() {
+        let p1 = row_kernel(1.5, 2.0, 1);
+        let p3 = row_kernel(1.5, 2.0, 3);
+        assert!((p3 - p1.powi(3)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kde_query_at_heavy_point() {
+        // Single point with weight 3.5; querying at the point gives ~3.5.
+        let kp = KernelParams {
+            d: 2,
+            p: 2,
+            m: 1,
+            a: vec![1.0, 0.0, 0.0, 1.0], // identity
+            x: vec![0.4, -0.2],
+            alpha: vec![3.5],
+            width: 2.0,
+            lsh_seed: 0,
+            k_per_row: 2,
+            default_rows: 10,
+            default_cols: 8,
+        };
+        let model = KernelModel::new(kp);
+        let v = model.predict(&[0.4, -0.2]);
+        assert!((v - 3.5).abs() < 1e-4, "{v}");
+    }
+
+    #[test]
+    fn kde_linear_in_alpha() {
+        let mk = |alpha: Vec<f32>| {
+            KernelModel::new(KernelParams {
+                d: 3,
+                p: 3,
+                m: 2,
+                a: vec![1., 0., 0., 0., 1., 0., 0., 0., 1.],
+                x: vec![0.1, 0.2, 0.3, -0.5, 0.0, 0.5],
+                alpha,
+                width: 2.0,
+                lsh_seed: 0,
+                k_per_row: 1,
+                default_rows: 4,
+                default_cols: 4,
+            })
+        };
+        let q = [0.2f32, -0.1, 0.4];
+        let f1 = mk(vec![1.0, 0.0]).predict(&q);
+        let f2 = mk(vec![0.0, 1.0]).predict(&q);
+        let f12 = mk(vec![1.0, 1.0]).predict(&q);
+        assert!((f1 + f2 - f12).abs() < 1e-5);
+    }
+
+    #[test]
+    fn projection_is_matmul() {
+        // A = [[1,2],[3,4],[5,6]] (d=3, p=2); q = [1, 1, 1] -> [9, 12].
+        let kp = KernelParams {
+            d: 3,
+            p: 2,
+            m: 0,
+            a: vec![1., 2., 3., 4., 5., 6.],
+            x: vec![],
+            alpha: vec![],
+            width: 1.0,
+            lsh_seed: 0,
+            k_per_row: 1,
+            default_rows: 1,
+            default_cols: 2,
+        };
+        let model = KernelModel::new(kp);
+        let mut out = vec![0.0; 2];
+        model.project(&[1.0, 1.0, 1.0], &mut out);
+        assert_eq!(out, vec![9.0, 12.0]);
+    }
+}

@@ -1,0 +1,214 @@
+//! RSKP binary format — the distilled kernel model emitted by
+//! `python/compile/binio.py::write_kernel_params`.  Layout (little-endian):
+//!
+//! ```text
+//! magic b"RSKP" | u32 version
+//! u32 d | u32 p | u32 m
+//! f32 A[d*p] (row-major) | f32 X[m*p] (row-major) | f32 alpha[m]
+//! f32 width | u64 lsh_seed | u32 k_per_row
+//! u32 default_rows (L) | u32 default_cols (R)
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::io::Read;
+use std::path::Path;
+
+/// Distilled kernel-model parameters (everything needed to evaluate the
+/// exact `f_K` *and* to build a Representer Sketch of any size).
+#[derive(Clone, Debug)]
+pub struct KernelParams {
+    /// Input dimensionality d.
+    pub d: usize,
+    /// Projected dimensionality p (asymmetric LSH, paper §4.3).
+    pub p: usize,
+    /// Number of representer points M.
+    pub m: usize,
+    /// Projection A, (d, p) row-major.
+    pub a: Vec<f32>,
+    /// Learned points X, (M, p) row-major.
+    pub x: Vec<f32>,
+    /// Learned weights α, (M,).
+    pub alpha: Vec<f32>,
+    /// LSH bucket width r.
+    pub width: f32,
+    /// Seed from which all hash functions are derived.
+    pub lsh_seed: u64,
+    /// Concatenation power K.
+    pub k_per_row: u32,
+    /// Default sketch rows L (Table-2 setting for this dataset).
+    pub default_rows: usize,
+    /// Default sketch columns R.
+    pub default_cols: usize,
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("truncated RSKP file at byte {}", self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>> {
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+impl KernelParams {
+    pub fn input_dim(&self) -> usize {
+        self.d
+    }
+
+    /// Parameter count under the paper's convention: sketch is separate;
+    /// this is the *kernel model* cost (A + X + alpha).
+    pub fn param_count(&self) -> usize {
+        self.d * self.p + self.m * self.p + self.m
+    }
+
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let mut buf = Vec::new();
+        std::fs::File::open(path.as_ref())
+            .with_context(|| format!("open {:?}", path.as_ref()))?
+            .read_to_end(&mut buf)?;
+        Self::parse(&buf)
+    }
+
+    pub fn parse(buf: &[u8]) -> Result<Self> {
+        if buf.len() < 8 || &buf[..4] != b"RSKP" {
+            bail!("not an RSKP file");
+        }
+        let mut c = Cursor { b: buf, i: 4 };
+        let version = c.u32()?;
+        if version != 1 {
+            bail!("unsupported RSKP version {version}");
+        }
+        let d = c.u32()? as usize;
+        let p = c.u32()? as usize;
+        let m = c.u32()? as usize;
+        let a = c.f32_vec(d * p)?;
+        let x = c.f32_vec(m * p)?;
+        let alpha = c.f32_vec(m)?;
+        let width = c.f32()?;
+        let lsh_seed = c.u64()?;
+        let k_per_row = c.u32()?;
+        let default_rows = c.u32()? as usize;
+        let default_cols = c.u32()? as usize;
+        if c.i != buf.len() {
+            bail!("trailing bytes in RSKP file");
+        }
+        if width <= 0.0 || k_per_row == 0 || default_cols < 2 {
+            bail!("invalid RSKP parameters");
+        }
+        Ok(Self {
+            d,
+            p,
+            m,
+            a,
+            x,
+            alpha,
+            width,
+            lsh_seed,
+            k_per_row,
+            default_rows,
+            default_cols,
+        })
+    }
+
+    /// Serialize back to RSKP bytes (round-trip and rust-side authoring,
+    /// e.g. examples that build their own kernel models).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(b"RSKP");
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&(self.d as u32).to_le_bytes());
+        out.extend_from_slice(&(self.p as u32).to_le_bytes());
+        out.extend_from_slice(&(self.m as u32).to_le_bytes());
+        for v in self.a.iter().chain(&self.x).chain(&self.alpha) {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.extend_from_slice(&self.width.to_le_bytes());
+        out.extend_from_slice(&self.lsh_seed.to_le_bytes());
+        out.extend_from_slice(&self.k_per_row.to_le_bytes());
+        out.extend_from_slice(&(self.default_rows as u32).to_le_bytes());
+        out.extend_from_slice(&(self.default_cols as u32).to_le_bytes());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> KernelParams {
+        KernelParams {
+            d: 3,
+            p: 2,
+            m: 2,
+            a: vec![1., 2., 3., 4., 5., 6.],
+            x: vec![0.1, 0.2, 0.3, 0.4],
+            alpha: vec![0.5, -0.5],
+            width: 2.5,
+            lsh_seed: 0xDEAD_BEEF,
+            k_per_row: 3,
+            default_rows: 100,
+            default_cols: 16,
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let kp = sample();
+        let bytes = kp.to_bytes();
+        let kp2 = KernelParams::parse(&bytes).unwrap();
+        assert_eq!(kp2.d, kp.d);
+        assert_eq!(kp2.a, kp.a);
+        assert_eq!(kp2.alpha, kp.alpha);
+        assert_eq!(kp2.lsh_seed, kp.lsh_seed);
+        assert_eq!(kp2.default_cols, kp.default_cols);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut bytes = sample().to_bytes();
+        bytes[0] = b'X';
+        assert!(KernelParams::parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let bytes = sample().to_bytes();
+        for cut in [5, 12, bytes.len() - 1] {
+            assert!(KernelParams::parse(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn rejects_trailing() {
+        let mut bytes = sample().to_bytes();
+        bytes.push(0);
+        assert!(KernelParams::parse(&bytes).is_err());
+    }
+}

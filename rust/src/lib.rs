@@ -1,0 +1,35 @@
+//! # repsketch
+//!
+//! A production-grade reproduction of *"Efficient Inference via Universal
+//! LSH Kernel"* (Liu, Coleman, Shrivastava, 2021) — the **Representer
+//! Sketch** system: neural-network inference compressed into a weighted
+//! RACE sketch queried with add/subtract hashing and counter lookups.
+//!
+//! The stack has three layers (see `DESIGN.md`):
+//!
+//! * **L1/L2 (build time, Python)** — Pallas kernels + JAX models, AOT
+//!   lowered to HLO text consumed by [`runtime`].
+//! * **L3 (this crate)** — the deployment story: [`lsh`] hash families,
+//!   the weighted RACE [`sketch`], an exact [`kernel`] density baseline,
+//!   a dense/sparse [`nn`] inference engine for the paper's baselines, a
+//!   serving [`coordinator`] (router + dynamic batcher), and the
+//!   [`experiments`] harness regenerating every table and figure of the
+//!   paper's evaluation.
+
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod kernel;
+pub mod lsh;
+pub mod metrics;
+pub mod nn;
+pub mod runtime;
+pub mod sketch;
+pub mod util;
+
+/// Root of the artifacts tree produced by `make artifacts`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("RS_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,135 @@
+//! K-wise hash concatenation → column index (paper §3.4: "each LSH
+//! function h_l is constructed by concatenating K independent LSH
+//! functions ... mapped to Z using a suitable transformation").
+//!
+//! The transformation is FNV-1a over the K codes, salted by the row index,
+//! reduced mod R.  Wrapping u32 arithmetic — EXACTLY mirrored by
+//! `ref.py::rehash_columns` (the parity fixture locks both sides).
+
+pub const FNV_OFFSET: u32 = 0x811C_9DC5;
+pub const FNV_PRIME: u32 = 0x0100_0193;
+pub const ROW_SALT: u32 = 0x9E37_79B1;
+
+/// Column index in [0, n_cols) for row `row` given that row's K codes.
+#[inline]
+pub fn rehash_row(row: u32, codes: &[i32], n_cols: u32) -> u32 {
+    let mut acc = FNV_OFFSET ^ row.wrapping_mul(ROW_SALT);
+    for &c in codes {
+        acc = (acc ^ (c as u32)).wrapping_mul(FNV_PRIME);
+    }
+    acc % n_cols
+}
+
+/// Rehash a full code vector (L rows × K codes, hash-major) into per-row
+/// column indices.  §Perf: the default column counts are powers of two,
+/// where `% n_cols` (one div per row, 20-40 cycles) reduces to a mask —
+/// results are identical, so python parity is preserved for every R.
+pub fn rehash_all(codes: &[i32], k_per_row: usize, n_cols: u32, out: &mut [u32]) {
+    debug_assert_eq!(codes.len() % k_per_row, 0);
+    let n_rows = codes.len() / k_per_row;
+    debug_assert_eq!(out.len(), n_rows);
+    if n_cols.is_power_of_two() {
+        let mask = n_cols - 1;
+        for (l, slot) in out.iter_mut().enumerate() {
+            let mut acc = FNV_OFFSET ^ (l as u32).wrapping_mul(ROW_SALT);
+            for &c in &codes[l * k_per_row..(l + 1) * k_per_row] {
+                acc = (acc ^ (c as u32)).wrapping_mul(FNV_PRIME);
+            }
+            *slot = acc & mask;
+        }
+    } else {
+        for (l, slot) in out.iter_mut().enumerate() {
+            *slot = rehash_row(
+                l as u32,
+                &codes[l * k_per_row..(l + 1) * k_per_row],
+                n_cols,
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn in_range() {
+        forall(
+            1,
+            500,
+            |rng| {
+                let k = 1 + rng.next_range(4);
+                let codes: Vec<i32> = (0..k)
+                    .map(|_| rng.next_u64() as i32)
+                    .collect();
+                let cols = 1 + rng.next_range(64) as u32;
+                let row = rng.next_u64() as u32;
+                (row, codes, cols)
+            },
+            |(row, codes, cols)| {
+                let c = rehash_row(*row, codes, *cols);
+                if c < *cols {
+                    Ok(())
+                } else {
+                    Err(format!("col {c} >= {cols}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn row_salt_decorrelates_rows() {
+        // Same codes in different rows must map to different columns
+        // often (else rows would be perfectly correlated).
+        let codes = [3i32, -7, 11];
+        let mut distinct = std::collections::HashSet::new();
+        for row in 0..64u32 {
+            distinct.insert(rehash_row(row, &codes, 1024));
+        }
+        assert!(distinct.len() > 48, "only {} distinct", distinct.len());
+    }
+
+    #[test]
+    fn sensitive_to_each_code() {
+        let base = [5i32, 9, -2];
+        let c0 = rehash_row(0, &base, 1 << 20);
+        for i in 0..3 {
+            let mut m = base;
+            m[i] += 1;
+            assert_ne!(rehash_row(0, &m, 1 << 20), c0, "code {i} ignored");
+        }
+    }
+
+    #[test]
+    fn rehash_all_matches_rehash_row() {
+        let codes: Vec<i32> = (0..12).map(|i| i * 3 - 5).collect();
+        let mut out = vec![0u32; 4];
+        rehash_all(&codes, 3, 17, &mut out);
+        for l in 0..4 {
+            assert_eq!(
+                out[l],
+                rehash_row(l as u32, &codes[l * 3..(l + 1) * 3], 17)
+            );
+        }
+    }
+
+    #[test]
+    fn distribution_roughly_uniform() {
+        // Hash many random code tuples into 16 columns; chi-square-ish.
+        let mut counts = [0usize; 16];
+        let mut rng = crate::util::rng::SplitMix64::new(3);
+        let n = 16_000;
+        for _ in 0..n {
+            let codes = [rng.next_u64() as i32, rng.next_u64() as i32];
+            counts[rehash_row(0, &codes, 16) as usize] += 1;
+        }
+        let expect = n / 16;
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64 - expect as f64).abs() < expect as f64 * 0.15,
+                "bucket {i}: {c} vs {expect}"
+            );
+        }
+    }
+}

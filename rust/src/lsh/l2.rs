@@ -1,0 +1,354 @@
+//! L2 (p-stable) LSH with Achlioptas-sparse {−1, 0, +1} projections.
+//!
+//! `h_t(x) = floor((a_t · x + b_t) / r)` where `a_t` has P[±1] = 1/6 each
+//! (Achlioptas, s = 3) and `b_t ~ U[0, r)`.  Parameter generation is a
+//! pure function of the seed and matches `ref.py::gen_l2lsh_params`
+//! bit-for-bit (hash-major stream from `seed`; biases from
+//! `seed ^ BIAS_SEED_XOR`).
+//!
+//! Two evaluation paths:
+//! * `hash_into` — the **hot path**: CSR-style sparse ±1 accumulation,
+//!   i.e. only additions and subtractions (the paper's energy story).
+//! * `dense_projection` — materialize the (d, H) matrix for parity tests
+//!   and for feeding the L1 Pallas kernel's dense layout.
+
+use super::LshFamily;
+use crate::util::rng::SplitMix64;
+
+/// Seed offset for the bias stream (mirrors ref.py BIAS_SEED_XOR).
+pub const BIAS_SEED_XOR: u64 = 0xB1A5_B1A5_B1A5_B1A5;
+
+/// One L2-LSH family: `n_hashes` functions over `dim` inputs.
+#[derive(Clone, Debug)]
+pub struct SparseL2Lsh {
+    dim: usize,
+    n_hashes: usize,
+    /// Bucket width r.
+    pub width: f32,
+    /// Per-hash sparse rows: flat +1 indices / −1 indices with offsets
+    /// (CSR).  `pos_idx[pos_off[t]..pos_off[t+1]]` are coordinates added.
+    pos_off: Vec<u32>,
+    pos_idx: Vec<u32>,
+    neg_off: Vec<u32>,
+    neg_idx: Vec<u32>,
+    bias: Vec<f32>,
+    inv_width: f32,
+    /// Coordinate-major (CSC) view for the batched hot path: for input
+    /// coordinate i, `csc_entries[csc_off[i]..csc_off[i+1]]` lists the
+    /// hash functions touching it, sign packed in the top bit
+    /// (§Perf: turns H small sparse dot products into p sequential
+    /// scatter walks over an L1-resident accumulator).
+    csc_off: Vec<u32>,
+    csc_entries: Vec<u32>,
+}
+
+const SIGN_BIT: u32 = 1 << 31;
+
+/// Branchless floor-to-i32 (§Perf: `f32::floor` lowers to a libm PLT call
+/// on this toolchain — 8% of the query profile).  Exact for |v| < 2^31,
+/// which L2-LSH code magnitudes satisfy by construction (values are
+/// (a·x + b)/r over standardized data).
+#[inline(always)]
+fn fast_floor(v: f32) -> i32 {
+    let t = v as i32;
+    t - ((v < t as f32) as i32)
+}
+
+impl SparseL2Lsh {
+    /// Deterministically generate the family from a seed.
+    pub fn generate(seed: u64, dim: usize, n_hashes: usize, width: f32) -> Self {
+        let mut rng = SplitMix64::new(seed);
+        let mut pos_off = Vec::with_capacity(n_hashes + 1);
+        let mut neg_off = Vec::with_capacity(n_hashes + 1);
+        let mut pos_idx = Vec::new();
+        let mut neg_idx = Vec::new();
+        pos_off.push(0);
+        neg_off.push(0);
+        for _t in 0..n_hashes {
+            for i in 0..dim {
+                let u = rng.next_f64();
+                if u < 1.0 / 6.0 {
+                    pos_idx.push(i as u32);
+                } else if u > 5.0 / 6.0 {
+                    neg_idx.push(i as u32);
+                }
+            }
+            pos_off.push(pos_idx.len() as u32);
+            neg_off.push(neg_idx.len() as u32);
+        }
+        let mut brng = SplitMix64::new(seed ^ BIAS_SEED_XOR);
+        let bias: Vec<f32> =
+            (0..n_hashes).map(|_| (brng.next_f64() * width as f64) as f32).collect();
+
+        // Build the coordinate-major view (counting sort by coordinate).
+        let mut counts = vec![0u32; dim + 1];
+        for t in 0..n_hashes {
+            for &i in &pos_idx[pos_off[t] as usize..pos_off[t + 1] as usize]
+            {
+                counts[i as usize + 1] += 1;
+            }
+            for &i in &neg_idx[neg_off[t] as usize..neg_off[t + 1] as usize]
+            {
+                counts[i as usize + 1] += 1;
+            }
+        }
+        for i in 0..dim {
+            counts[i + 1] += counts[i];
+        }
+        let csc_off = counts.clone();
+        let mut fill = counts;
+        let mut csc_entries =
+            vec![0u32; *csc_off.last().unwrap() as usize];
+        for t in 0..n_hashes {
+            for &i in &pos_idx[pos_off[t] as usize..pos_off[t + 1] as usize]
+            {
+                csc_entries[fill[i as usize] as usize] = t as u32;
+                fill[i as usize] += 1;
+            }
+            for &i in &neg_idx[neg_off[t] as usize..neg_off[t + 1] as usize]
+            {
+                csc_entries[fill[i as usize] as usize] = t as u32 | SIGN_BIT;
+                fill[i as usize] += 1;
+            }
+        }
+
+        Self {
+            dim,
+            n_hashes,
+            width,
+            pos_off,
+            pos_idx,
+            neg_off,
+            neg_idx,
+            bias,
+            inv_width: 1.0 / width,
+            csc_off,
+            csc_entries,
+        }
+    }
+
+    /// Batched hot-path hashing: coordinate-major accumulation into a
+    /// caller-provided f32 buffer, then a single floor pass.  Identical
+    /// results to `hash_into` (tested), substantially faster when
+    /// n_hashes ≫ dim (the sketch regime: H = L·K, dim = p ≤ 16).
+    #[inline]
+    pub fn hash_into_acc(&self, x: &[f32], acc: &mut [f32],
+                         out: &mut [i32]) {
+        debug_assert_eq!(x.len(), self.dim);
+        debug_assert_eq!(acc.len(), self.n_hashes);
+        debug_assert_eq!(out.len(), self.n_hashes);
+        acc.copy_from_slice(&self.bias);
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let lo = self.csc_off[i] as usize;
+            let hi = self.csc_off[i + 1] as usize;
+            let xi_bits = xi.to_bits();
+            for &e in &self.csc_entries[lo..hi] {
+                let t = (e & !SIGN_BIT) as usize;
+                // Branchless sign application: the packed sign bit is
+                // exactly the f32 sign-bit position (§Perf: the ± branch
+                // mispredicts ~50% otherwise).
+                let signed = f32::from_bits(xi_bits ^ (e & SIGN_BIT));
+                // SAFETY: t < n_hashes by construction.
+                unsafe { *acc.get_unchecked_mut(t) += signed };
+            }
+        }
+        for (o, &a) in out.iter_mut().zip(acc.iter()) {
+            *o = fast_floor(a * self.inv_width);
+        }
+    }
+
+    /// Materialize the dense (dim, n_hashes) ±1 projection (column-major
+    /// by hash): `out[i * n_hashes + t]`.
+    pub fn dense_projection(&self) -> Vec<f32> {
+        let mut m = vec![0.0f32; self.dim * self.n_hashes];
+        for t in 0..self.n_hashes {
+            for &i in &self.pos_idx
+                [self.pos_off[t] as usize..self.pos_off[t + 1] as usize]
+            {
+                m[i as usize * self.n_hashes + t] = 1.0;
+            }
+            for &i in &self.neg_idx
+                [self.neg_off[t] as usize..self.neg_off[t + 1] as usize]
+            {
+                m[i as usize * self.n_hashes + t] = -1.0;
+            }
+        }
+        m
+    }
+
+    pub fn bias(&self) -> &[f32] {
+        &self.bias
+    }
+
+    /// Number of nonzero projection entries (for FLOPs accounting:
+    /// expected ≈ dim * n_hashes / 3).
+    pub fn nnz(&self) -> usize {
+        self.pos_idx.len() + self.neg_idx.len()
+    }
+}
+
+impl LshFamily for SparseL2Lsh {
+    fn n_hashes(&self) -> usize {
+        self.n_hashes
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    #[inline]
+    fn hash_into(&self, x: &[f32], out: &mut [i32]) {
+        debug_assert_eq!(x.len(), self.dim);
+        debug_assert_eq!(out.len(), self.n_hashes);
+        for t in 0..self.n_hashes {
+            let mut acc = self.bias[t];
+            // Add/subtract only — the paper's §3.4 hot loop.
+            for &i in &self.pos_idx
+                [self.pos_off[t] as usize..self.pos_off[t + 1] as usize]
+            {
+                acc += x[i as usize];
+            }
+            for &i in &self.neg_idx
+                [self.neg_off[t] as usize..self.neg_off[t + 1] as usize]
+            {
+                acc -= x[i as usize];
+            }
+            out[t] = fast_floor(acc * self.inv_width);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, gens};
+
+    #[test]
+    fn deterministic_generation() {
+        let a = SparseL2Lsh::generate(9, 10, 20, 2.0);
+        let b = SparseL2Lsh::generate(9, 10, 20, 2.0);
+        assert_eq!(a.bias, b.bias);
+        assert_eq!(a.pos_idx, b.pos_idx);
+        assert_eq!(a.neg_idx, b.neg_idx);
+    }
+
+    #[test]
+    fn sparsity_about_one_third() {
+        let f = SparseL2Lsh::generate(3, 50, 400, 2.0);
+        let frac = f.nnz() as f64 / (50.0 * 400.0);
+        assert!((frac - 1.0 / 3.0).abs() < 0.02, "nnz frac {frac}");
+    }
+
+    #[test]
+    fn bias_in_range() {
+        let f = SparseL2Lsh::generate(4, 5, 100, 3.5);
+        assert!(f.bias.iter().all(|&b| (0.0..3.5).contains(&b)));
+    }
+
+    #[test]
+    fn sparse_matches_dense_projection() {
+        let f = SparseL2Lsh::generate(17, 13, 31, 2.5);
+        let m = f.dense_projection();
+        forall(
+            5,
+            50,
+            |rng| gens::vec_f32(rng, 13, 1.0),
+            |x| {
+                let sparse = f.hash(x);
+                // dense recompute
+                for t in 0..31 {
+                    let mut acc = f.bias[t];
+                    for i in 0..13 {
+                        acc += m[i * 31 + t] * x[i];
+                    }
+                    let code = (acc / 2.5).floor() as i32;
+                    if code != sparse[t] {
+                        return Err(format!(
+                            "hash {t}: dense {code} vs sparse {}",
+                            sparse[t]
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn csc_path_matches_row_path() {
+        // hash_into_acc must agree with hash_into bit-for-bit.
+        forall(
+            99,
+            60,
+            |rng| {
+                let dim = 1 + rng.next_range(24);
+                let h = 1 + rng.next_range(300);
+                let f = SparseL2Lsh::generate(rng.next_u64(), dim, h, 2.0);
+                let x = gens::vec_f32(rng, dim, 1.5);
+                (f, x)
+            },
+            |(f, x)| {
+                let want = f.hash(x);
+                let mut acc = vec![0.0f32; f.n_hashes()];
+                let mut got = vec![0i32; f.n_hashes()];
+                f.hash_into_acc(x, &mut acc, &mut got);
+                if want == got {
+                    Ok(())
+                } else {
+                    Err("csc path diverged".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn nearby_points_collide_more() {
+        // Structural LSH property (Definition 2.1): closer pairs collide
+        // with higher empirical probability.
+        let dim = 16;
+        let f = SparseL2Lsh::generate(7, dim, 2000, 3.0);
+        let mut rng = SplitMix64::new(1);
+        let x = gens::vec_f32(&mut rng, dim, 1.0);
+        let mk_at = |dist: f32, rng: &mut SplitMix64| {
+            let mut d = gens::vec_f32(rng, dim, 1.0);
+            let n = (d.iter().map(|v| v * v).sum::<f32>()).sqrt();
+            d.iter_mut().for_each(|v| *v *= dist / n);
+            x.iter().zip(&d).map(|(a, b)| a + b).collect::<Vec<_>>()
+        };
+        let hx = f.hash(&x);
+        let rate = |y: &[f32]| {
+            let hy = f.hash(y);
+            hx.iter().zip(&hy).filter(|(a, b)| a == b).count() as f64
+                / hx.len() as f64
+        };
+        let near = rate(&mk_at(0.5, &mut rng));
+        let mid = rate(&mk_at(2.0, &mut rng));
+        let far = rate(&mk_at(6.0, &mut rng));
+        assert!(near > mid && mid > far, "{near} {mid} {far}");
+    }
+
+    #[test]
+    fn translation_by_width_shifts_code() {
+        // Shifting x so a·x increases by exactly width increments the code.
+        let f = SparseL2Lsh::generate(2, 6, 40, 2.0);
+        let x = vec![0.3f32; 6];
+        let codes = f.hash(&x);
+        // Build a shift along hash 0's projection direction.
+        let m = f.dense_projection();
+        let a0: Vec<f32> = (0..6).map(|i| m[i * 40]).collect();
+        let norm2: f32 = a0.iter().map(|v| v * v).sum();
+        if norm2 == 0.0 {
+            return; // empty projection row; nothing to assert
+        }
+        let y: Vec<f32> = x
+            .iter()
+            .zip(&a0)
+            .map(|(xi, ai)| xi + ai * 2.0 / norm2)
+            .collect();
+        let cy = f.hash(&y);
+        assert_eq!(cy[0], codes[0] + 1);
+    }
+}

@@ -1,0 +1,36 @@
+//! Locality-sensitive hashing (paper §2.2).
+//!
+//! * [`l2`] — the L2 (p-stable) LSH family with Achlioptas-sparse ±1
+//!   projections: `h(x) = floor((a·x + b) / r)`.  The sparse structure is
+//!   the paper's "addition and subtraction only" hashing (§3.4), and the
+//!   collision probability is the universal LSH kernel of §3.3.
+//! * [`srp`] — sign random projections (angular LSH), included as the
+//!   second classic family for the library's generality; not used by the
+//!   sketch defaults.
+//! * [`concat`] — K-wise concatenation rehashed to a column index in
+//!   [0, R) (FNV-1a, row-salted) — identical to the python side.
+//! * [`rng`] — re-export of the shared splitmix64.
+
+pub mod concat;
+pub mod l2;
+pub mod srp;
+
+pub use concat::rehash_row;
+pub use l2::SparseL2Lsh;
+pub use srp::SrpLsh;
+
+/// A hash family mapping vectors to integer codes.
+pub trait LshFamily {
+    /// Number of independent hash functions.
+    fn n_hashes(&self) -> usize;
+    /// Input dimensionality.
+    fn dim(&self) -> usize;
+    /// Compute all codes for `x` into `out` (len == n_hashes()).
+    fn hash_into(&self, x: &[f32], out: &mut [i32]);
+
+    fn hash(&self, x: &[f32]) -> Vec<i32> {
+        let mut out = vec![0; self.n_hashes()];
+        self.hash_into(x, &mut out);
+        out
+    }
+}

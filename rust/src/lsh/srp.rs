@@ -1,0 +1,144 @@
+//! Sign random projections (SimHash) — angular-distance LSH.
+//!
+//! `h_t(x) = sign(a_t · x)` with the same Achlioptas-sparse ±1 projections
+//! as [`super::l2`].  Collision probability `1 − θ(x, y)/π` (Goemans–
+//! Williamson).  Not used by the Representer-Sketch defaults but part of
+//! the LSH substrate (paper §2.2 lists it as a canonical LSH kernel).
+
+use super::LshFamily;
+use crate::util::rng::SplitMix64;
+
+#[derive(Clone, Debug)]
+pub struct SrpLsh {
+    dim: usize,
+    n_hashes: usize,
+    pos_off: Vec<u32>,
+    pos_idx: Vec<u32>,
+    neg_off: Vec<u32>,
+    neg_idx: Vec<u32>,
+}
+
+impl SrpLsh {
+    pub fn generate(seed: u64, dim: usize, n_hashes: usize) -> Self {
+        let mut rng = SplitMix64::new(seed);
+        let (mut pos_off, mut neg_off) = (vec![0u32], vec![0u32]);
+        let (mut pos_idx, mut neg_idx) = (Vec::new(), Vec::new());
+        for _ in 0..n_hashes {
+            for i in 0..dim {
+                let u = rng.next_f64();
+                if u < 1.0 / 6.0 {
+                    pos_idx.push(i as u32);
+                } else if u > 5.0 / 6.0 {
+                    neg_idx.push(i as u32);
+                }
+            }
+            pos_off.push(pos_idx.len() as u32);
+            neg_off.push(neg_idx.len() as u32);
+        }
+        Self { dim, n_hashes, pos_off, pos_idx, neg_off, neg_idx }
+    }
+
+    /// Theoretical collision probability for angle theta (radians).
+    pub fn collision_prob(theta: f64) -> f64 {
+        1.0 - theta / std::f64::consts::PI
+    }
+}
+
+impl LshFamily for SrpLsh {
+    fn n_hashes(&self) -> usize {
+        self.n_hashes
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    #[inline]
+    fn hash_into(&self, x: &[f32], out: &mut [i32]) {
+        for t in 0..self.n_hashes {
+            let mut acc = 0.0f32;
+            for &i in &self.pos_idx
+                [self.pos_off[t] as usize..self.pos_off[t + 1] as usize]
+            {
+                acc += x[i as usize];
+            }
+            for &i in &self.neg_idx
+                [self.neg_off[t] as usize..self.neg_off[t + 1] as usize]
+            {
+                acc -= x[i as usize];
+            }
+            out[t] = (acc >= 0.0) as i32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn codes_are_binary() {
+        let f = SrpLsh::generate(1, 8, 64);
+        let mut rng = SplitMix64::new(2);
+        let x: Vec<f32> =
+            (0..8).map(|_| rng.next_gaussian() as f32).collect();
+        assert!(f.hash(&x).iter().all(|&c| c == 0 || c == 1));
+    }
+
+    #[test]
+    fn scale_invariant() {
+        let f = SrpLsh::generate(3, 12, 128);
+        let mut rng = SplitMix64::new(4);
+        let x: Vec<f32> =
+            (0..12).map(|_| rng.next_gaussian() as f32).collect();
+        let x2: Vec<f32> = x.iter().map(|v| v * 7.5).collect();
+        assert_eq!(f.hash(&x), f.hash(&x2));
+    }
+
+    #[test]
+    fn antipodal_flips_most_codes() {
+        let f = SrpLsh::generate(5, 10, 500);
+        let mut rng = SplitMix64::new(6);
+        let x: Vec<f32> =
+            (0..10).map(|_| rng.next_gaussian() as f32).collect();
+        let neg: Vec<f32> = x.iter().map(|v| -v).collect();
+        let hx = f.hash(&x);
+        let hn = f.hash(&neg);
+        let agree = hx.iter().zip(&hn).filter(|(a, b)| a == b).count();
+        // sign(-a·x) != sign(a·x) except when a·x == 0 (empty rows).
+        assert!(agree < 60, "agree {agree}");
+    }
+
+    #[test]
+    fn collision_rate_tracks_angle() {
+        let f = SrpLsh::generate(7, 24, 4000);
+        let mut rng = SplitMix64::new(8);
+        let x: Vec<f32> =
+            (0..24).map(|_| rng.next_gaussian() as f32).collect();
+        // Construct y at a 45-degree angle from x in a random plane.
+        let mut z: Vec<f32> =
+            (0..24).map(|_| rng.next_gaussian() as f32).collect();
+        let xn = x.iter().map(|v| v * v).sum::<f32>().sqrt();
+        let dot = x.iter().zip(&z).map(|(a, b)| a * b).sum::<f32>();
+        // Gram-Schmidt z against x.
+        z.iter_mut()
+            .zip(&x)
+            .for_each(|(zi, xi)| *zi -= dot / (xn * xn) * xi);
+        let zn = z.iter().map(|v| v * v).sum::<f32>().sqrt();
+        let theta = std::f64::consts::FRAC_PI_4;
+        let y: Vec<f32> = x
+            .iter()
+            .zip(&z)
+            .map(|(xi, zi)| {
+                xi / xn * (theta.cos() as f32) + zi / zn * (theta.sin() as f32)
+            })
+            .collect();
+        let hx = f.hash(&x);
+        let hy = f.hash(&y);
+        let rate = hx.iter().zip(&hy).filter(|(a, b)| a == b).count() as f64
+            / hx.len() as f64;
+        let want = SrpLsh::collision_prob(theta);
+        assert!((rate - want).abs() < 0.05, "rate {rate} want {want}");
+    }
+}

@@ -1,0 +1,343 @@
+//! `repsketch` CLI — leader entrypoint.
+//!
+//! ```text
+//! repsketch exp table1 [--csv FILE]        regenerate paper Table 1
+//! repsketch exp table2                     regenerate paper Table 2
+//! repsketch exp figure2 [--csv FILE]       regenerate paper Figure 2
+//! repsketch exp theory [--dataset NAME]    §3.2.1 error-decay check
+//! repsketch serve [--addr A] [--pjrt]      TCP JSON-line inference server
+//! repsketch eval --dataset NAME [--backend rs|nn|kernel]
+//! repsketch build-sketch --dataset NAME [--rows L] [--cols R] --out FILE
+//! ```
+//!
+//! Artifacts root defaults to ./artifacts (override with RS_ARTIFACTS).
+
+use anyhow::{bail, Context, Result};
+use repsketch::coordinator::{
+    backend, BackendKind, Request, Router, RouterConfig, Server,
+};
+use repsketch::data::Dataset;
+use repsketch::experiments::{ablation, figure2, table1, table2, theory};
+use repsketch::kernel::KernelParams;
+use repsketch::runtime::registry::{DatasetBundle, DatasetMeta};
+use repsketch::runtime::Runtime;
+use repsketch::sketch::{RaceSketch, SketchConfig};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Tiny flag parser: positional args + `--key value` pairs.
+struct Flags {
+    pos: Vec<String>,
+    kv: HashMap<String, String>,
+}
+
+fn parse_flags(args: &[String]) -> Flags {
+    let mut pos = Vec::new();
+    let mut kv = HashMap::new();
+    let mut it = args.iter().peekable();
+    while let Some(a) = it.next() {
+        if let Some(key) = a.strip_prefix("--") {
+            let val = match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    it.next().unwrap().clone()
+                }
+                _ => "true".to_string(),
+            };
+            kv.insert(key.to_string(), val);
+        } else {
+            pos.push(a.clone());
+        }
+    }
+    Flags { pos, kv }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "exp" => cmd_exp(rest),
+        "serve" => cmd_serve(rest),
+        "eval" => cmd_eval(rest),
+        "build-sketch" => cmd_build_sketch(rest),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (try `repsketch help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "repsketch — Representer Sketch inference system\n\n\
+         usage:\n  \
+         repsketch exp table1 [--csv FILE]\n  \
+         repsketch exp table2\n  \
+         repsketch exp figure2 [--csv FILE]\n  \
+         repsketch exp theory [--dataset adult]\n  \
+         repsketch exp ablation [--dataset adult]\n  \
+         repsketch serve [--addr 127.0.0.1:7878] [--pjrt] [--datasets a,b]\n  \
+         repsketch eval --dataset NAME [--backend rs|nn|kernel]\n  \
+         repsketch build-sketch --dataset NAME [--rows L] [--cols R] --out FILE"
+    );
+}
+
+fn dataset_names(flags: &Flags) -> Vec<String> {
+    flags
+        .kv
+        .get("datasets")
+        .map(|s| s.split(',').map(|x| x.trim().to_string()).collect())
+        .unwrap_or_else(|| {
+            repsketch::experiments::DATASETS
+                .iter()
+                .map(|s| s.to_string())
+                .collect()
+        })
+}
+
+fn cmd_exp(args: &[String]) -> Result<()> {
+    let Some(which) = args.first() else {
+        bail!("exp: missing experiment name");
+    };
+    let flags = parse_flags(&args[1..]);
+    let root = repsketch::artifacts_dir();
+    anyhow::ensure!(
+        root.join(".stamp").exists(),
+        "artifacts missing — run `make artifacts`"
+    );
+    match which.as_str() {
+        "table1" => {
+            let mut rows = Vec::new();
+            for name in dataset_names(&flags) {
+                let bundle = DatasetBundle::load(&root, &name)?;
+                rows.push(table1::eval_dataset(&root, &bundle)?);
+            }
+            table1::print_table(&rows);
+            if let Some(path) = flags.kv.get("csv") {
+                std::fs::write(path, table1::to_csv(&rows))?;
+                println!("\ncsv -> {path}");
+            }
+        }
+        "table2" => {
+            let metas: Vec<DatasetMeta> = dataset_names(&flags)
+                .iter()
+                .map(|n| DatasetMeta::load(&root.join(n)))
+                .collect::<Result<_>>()?;
+            table2::print_table(&metas);
+        }
+        "figure2" => {
+            let names = flags
+                .kv
+                .get("datasets")
+                .map(|s| {
+                    s.split(',').map(|x| x.trim().to_string()).collect()
+                })
+                .unwrap_or_else(|| {
+                    repsketch::experiments::FIGURE2_DATASETS
+                        .iter()
+                        .map(|s| s.to_string())
+                        .collect::<Vec<_>>()
+                });
+            let mut panels = Vec::new();
+            for name in names {
+                let panel = figure2::eval_panel(&root, &name)?;
+                figure2::print_panel(&panel);
+                panels.push(panel);
+            }
+            if let Some(path) = flags.kv.get("csv") {
+                std::fs::write(path, figure2::to_csv(&panels))?;
+                println!("\ncsv -> {path}");
+            }
+        }
+        "ablation" => {
+            let dataset = flags
+                .kv
+                .get("dataset")
+                .map(|s| s.as_str())
+                .unwrap_or("adult");
+            let rows = ablation::run(&root, dataset)?;
+            let meta = DatasetMeta::load(&root.join(dataset))?;
+            let label = match meta.task {
+                repsketch::data::Task::Classification => "accuracy",
+                repsketch::data::Task::Regression => "mae",
+            };
+            ablation::print_rows(dataset, label, &rows);
+        }
+        "theory" => {
+            let dataset = flags
+                .kv
+                .get("dataset")
+                .map(|s| s.as_str())
+                .unwrap_or("adult");
+            let points = theory::run(&root, dataset, 512)?;
+            theory::print_points(dataset, &points);
+        }
+        other => bail!("unknown experiment {other:?}"),
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args);
+    let root = repsketch::artifacts_dir();
+    let name = flags.kv.get("dataset").context("--dataset required")?;
+    let backend = flags
+        .kv
+        .get("backend")
+        .map(|s| BackendKind::parse(s).context("bad backend"))
+        .unwrap_or(Ok(BackendKind::Sketch))?;
+    let bundle = DatasetBundle::load(&root, name)?;
+    let meta = &bundle.meta;
+    let ds =
+        Dataset::load_artifact(&root, name, "test", meta.dim, meta.task)?;
+    let preds: Vec<f32> = match backend {
+        BackendKind::Sketch => {
+            let mut s = repsketch::sketch::QueryScratch::default();
+            ds.rows().map(|r| bundle.sketch.query_with(r, &mut s)).collect()
+        }
+        BackendKind::NnRust => {
+            let mut s = repsketch::nn::MlpScratch::default();
+            ds.rows().map(|r| bundle.mlp.forward_with(r, &mut s)).collect()
+        }
+        BackendKind::KernelRust => {
+            ds.rows().map(|r| bundle.kernel.predict(r)).collect()
+        }
+        BackendKind::NnPjrt | BackendKind::KernelPjrt => {
+            let rt = Runtime::cpu()?;
+            let file = if backend == BackendKind::NnPjrt {
+                "nn.hlo.txt"
+            } else {
+                "kernel.hlo.txt"
+            };
+            let exe = rt.load_hlo(
+                root.join(name).join(file),
+                meta.aot_batch,
+                meta.dim,
+            )?;
+            exe.run_all(&ds.x, ds.dim)?
+        }
+    };
+    let score = ds.score(&preds);
+    let label = match meta.task {
+        repsketch::data::Task::Classification => "accuracy",
+        repsketch::data::Task::Regression => "mae",
+    };
+    println!(
+        "{name} backend={} {label}={score:.4} (n={})",
+        backend.name(),
+        ds.len()
+    );
+    Ok(())
+}
+
+fn cmd_build_sketch(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args);
+    let root = repsketch::artifacts_dir();
+    let name = flags.kv.get("dataset").context("--dataset required")?;
+    let out = flags.kv.get("out").context("--out required")?;
+    let kp = KernelParams::load(root.join(name).join("kernel_params.bin"))?;
+    let cfg = SketchConfig {
+        rows: flags
+            .kv
+            .get("rows")
+            .map(|s| s.parse())
+            .transpose()?
+            .unwrap_or(0),
+        cols: flags
+            .kv
+            .get("cols")
+            .map(|s| s.parse())
+            .transpose()?
+            .unwrap_or(0),
+        ..Default::default()
+    };
+    let sk = RaceSketch::build(&kp, &cfg);
+    sk.save(out)?;
+    println!(
+        "sketch {}x{} ({} params, {} bytes) -> {out}",
+        sk.rows,
+        sk.cols,
+        sk.param_count(),
+        sk.serialized_size()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args);
+    let _ = &flags.pos;
+    let root = repsketch::artifacts_dir();
+    let addr = flags
+        .kv
+        .get("addr")
+        .cloned()
+        .unwrap_or_else(|| "127.0.0.1:7878".to_string());
+    let with_pjrt = flags.kv.contains_key("pjrt");
+    let mut router = Router::new();
+    let cfg = RouterConfig::default();
+    for name in dataset_names(&flags) {
+        let bundle = DatasetBundle::load(&root, &name)
+            .with_context(|| format!("load {name}"))?;
+        let meta = bundle.meta.clone();
+        let sketch = bundle.sketch.clone();
+        let mlp = bundle.mlp.clone();
+        let kp = bundle.kernel.params.clone();
+        router.add_lane(&name, BackendKind::Sketch, move || {
+            Ok(Box::new(backend::SketchEngine::new(sketch)) as _)
+        }, &cfg);
+        router.add_lane(&name, BackendKind::NnRust, move || {
+            Ok(Box::new(backend::MlpEngine::new(mlp)) as _)
+        }, &cfg);
+        router.add_lane(&name, BackendKind::KernelRust, move || {
+            Ok(Box::new(backend::KernelEngine {
+                model: repsketch::kernel::KernelModel::new(kp),
+            }) as _)
+        }, &cfg);
+        if with_pjrt {
+            let dir = root.join(&name);
+            let (batch, dim) = (meta.aot_batch, meta.dim);
+            let nn_path = dir.join("nn.hlo.txt");
+            router.add_lane(&name, BackendKind::NnPjrt, move || {
+                let rt = Runtime::cpu()?;
+                Ok(Box::new(backend::PjrtEngine {
+                    exe: rt.load_hlo(nn_path, batch, dim)?,
+                }) as _)
+            }, &cfg);
+            let kern_path = dir.join("kernel.hlo.txt");
+            router.add_lane(&name, BackendKind::KernelPjrt, move || {
+                let rt = Runtime::cpu()?;
+                Ok(Box::new(backend::PjrtEngine {
+                    exe: rt.load_hlo(kern_path, batch, dim)?,
+                }) as _)
+            }, &cfg);
+        }
+        println!("registered {name} (dim={})", meta.dim);
+    }
+    let router = Arc::new(router);
+    let server = Server::bind(router.clone(), &addr)?;
+    println!("serving on {}", server.local_addr());
+    println!(
+        "protocol: one JSON per line, e.g. \
+         {}",
+        Request {
+            id: 1,
+            model: "adult".into(),
+            backend: BackendKind::Sketch,
+            features: vec![0.0; 3],
+        }
+        .to_line()
+    );
+    server.serve();
+    Ok(())
+}

@@ -1,0 +1,156 @@
+//! Lock-free-ish latency histogram for the serving layer: log-spaced
+//! buckets from 100 ns to ~100 s, atomic counters, quantile readout.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const BUCKETS: usize = 64;
+const BASE_NS: f64 = 100.0;
+/// Geometric growth chosen so bucket 63 ≈ 134 s.
+const GROWTH: f64 = 1.39;
+
+/// Histogram of durations.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    counts: [AtomicU64; BUCKETS],
+    sum_ns: AtomicU64,
+    n: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_ns: AtomicU64::new(0),
+            n: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_for(ns: u64) -> usize {
+        if ns as f64 <= BASE_NS {
+            return 0;
+        }
+        let b = ((ns as f64 / BASE_NS).ln() / GROWTH.ln()).floor() as usize;
+        b.min(BUCKETS - 1)
+    }
+
+    /// Upper bound (ns) of bucket `i`.
+    fn bucket_upper(i: usize) -> f64 {
+        BASE_NS * GROWTH.powi(i as i32 + 1)
+    }
+
+    pub fn record(&self, dur: std::time::Duration) {
+        self.record_ns(dur.as_nanos() as u64);
+    }
+
+    pub fn record_ns(&self, ns: u64) {
+        self.counts[Self::bucket_for(ns)].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.n.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_ns.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Approximate quantile (bucket upper bound).
+    pub fn quantile_ns(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let target = (q * n as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for i in 0..BUCKETS {
+            acc += self.counts[i].load(Ordering::Relaxed);
+            if acc >= target {
+                return Self::bucket_upper(i);
+            }
+        }
+        Self::bucket_upper(BUCKETS - 1)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.1}us p50={:.1}us p99={:.1}us",
+            self.count(),
+            self.mean_ns() / 1e3,
+            self.quantile_ns(0.5) / 1e3,
+            self.quantile_ns(0.99) / 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean_ns(), 0.0);
+        assert_eq!(h.quantile_ns(0.5), 0.0);
+    }
+
+    #[test]
+    fn mean_exact() {
+        let h = LatencyHistogram::new();
+        h.record_ns(1000);
+        h.record_ns(3000);
+        assert_eq!(h.mean_ns(), 2000.0);
+    }
+
+    #[test]
+    fn quantiles_ordered_and_bracketing() {
+        let h = LatencyHistogram::new();
+        for i in 1..=1000u64 {
+            h.record_ns(i * 1000); // 1us .. 1ms
+        }
+        let p50 = h.quantile_ns(0.5);
+        let p99 = h.quantile_ns(0.99);
+        assert!(p50 <= p99);
+        // log-bucket resolution: within a GROWTH factor of truth
+        assert!(p50 > 500_000.0 / GROWTH && p50 < 500_000.0 * GROWTH * GROWTH,
+                "{p50}");
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let h = std::sync::Arc::new(LatencyHistogram::new());
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let h = h.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000u64 {
+                    h.record_ns((t * 1000 + i) * 10);
+                }
+            }));
+        }
+        for j in handles {
+            j.join().unwrap();
+        }
+        assert_eq!(h.count(), 4000);
+    }
+
+    #[test]
+    fn huge_values_clamped() {
+        let h = LatencyHistogram::new();
+        h.record_ns(u64::MAX / 2);
+        assert_eq!(h.count(), 1);
+        assert!(h.quantile_ns(1.0) > 0.0);
+    }
+}

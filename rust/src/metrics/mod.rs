@@ -1,0 +1,11 @@
+//! Cost accounting (paper §4.3 conventions), the energy model (Horowitz
+//! ISSCC'14 numbers the paper cites), and latency histograms for the
+//! serving layer.
+
+pub mod cost;
+pub mod energy;
+pub mod latency;
+
+pub use cost::{CostReport, MemoryUnit};
+pub use energy::EnergyModel;
+pub use latency::LatencyHistogram;

@@ -1,0 +1,243 @@
+//! RSNN format loader + dense MLP forward.
+//!
+//! Layout (little-endian), written by `python/compile/binio.py::write_nn`:
+//!
+//! ```text
+//! magic b"RSNN" | u32 version | u32 n_layers
+//! per layer: u32 out_dim | u32 in_dim | f32 W[out*in] (row-major) |
+//!            f32 b[out]
+//! ```
+//!
+//! Semantics (must match `model.py::mlp_fwd`): ReLU between layers, final
+//! layer linear, scalar output (out_dim of the last layer is 1).
+
+use super::MlpScratch;
+use anyhow::{bail, Context, Result};
+use std::io::Read;
+use std::path::Path;
+
+/// One dense layer: `y = W x + b` with W (out, in) row-major.
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub out_dim: usize,
+    pub in_dim: usize,
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+/// Dense MLP.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub layers: Vec<Layer>,
+}
+
+impl Mlp {
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let mut buf = Vec::new();
+        std::fs::File::open(path.as_ref())
+            .with_context(|| format!("open {:?}", path.as_ref()))?
+            .read_to_end(&mut buf)?;
+        Self::parse(&buf)
+    }
+
+    pub fn parse(buf: &[u8]) -> Result<Self> {
+        if buf.len() < 12 || &buf[..4] != b"RSNN" {
+            bail!("not an RSNN file");
+        }
+        let rd_u32 = |i: usize| -> u32 {
+            u32::from_le_bytes(buf[i..i + 4].try_into().unwrap())
+        };
+        let version = rd_u32(4);
+        if version != 1 {
+            bail!("unsupported RSNN version {version}");
+        }
+        let n_layers = rd_u32(8) as usize;
+        let mut i = 12usize;
+        let mut layers = Vec::with_capacity(n_layers);
+        for li in 0..n_layers {
+            if i + 8 > buf.len() {
+                bail!("truncated RSNN header, layer {li}");
+            }
+            let out_dim = rd_u32(i) as usize;
+            let in_dim = rd_u32(i + 4) as usize;
+            i += 8;
+            let wn = out_dim * in_dim;
+            if i + (wn + out_dim) * 4 > buf.len() {
+                bail!("truncated RSNN weights, layer {li}");
+            }
+            let w: Vec<f32> = buf[i..i + wn * 4]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            i += wn * 4;
+            let b: Vec<f32> = buf[i..i + out_dim * 4]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            i += out_dim * 4;
+            layers.push(Layer { out_dim, in_dim, w, b });
+        }
+        if i != buf.len() {
+            bail!("trailing bytes in RSNN file");
+        }
+        let mlp = Self { layers };
+        mlp.validate()?;
+        Ok(mlp)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.layers.is_empty() {
+            bail!("empty MLP");
+        }
+        for w in self.layers.windows(2) {
+            if w[0].out_dim != w[1].in_dim {
+                bail!(
+                    "layer dim mismatch: {} -> {}",
+                    w[0].out_dim,
+                    w[1].in_dim
+                );
+            }
+        }
+        Ok(())
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.layers[0].in_dim
+    }
+
+    pub fn output_dim(&self) -> usize {
+        self.layers.last().unwrap().out_dim
+    }
+
+    pub fn max_dim(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.in_dim.max(l.out_dim))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Total parameter count (weights + biases).
+    pub fn param_count(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.out_dim * l.in_dim + l.out_dim)
+            .sum()
+    }
+
+    /// FLOPs per single-sample forward: 2·out·in per matmul (mul+add),
+    /// the fvcore convention the paper uses.
+    pub fn flops_per_query(&self) -> usize {
+        self.layers.iter().map(|l| 2 * l.out_dim * l.in_dim).sum()
+    }
+
+    /// Count of exactly-zero weights (pruned models).
+    pub fn zero_weights(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.w.iter().filter(|&&v| v == 0.0).count())
+            .sum()
+    }
+
+    /// Scalar forward (out_dim == 1), zero-allocation with scratch.
+    pub fn forward_with(&self, x: &[f32], s: &mut MlpScratch) -> f32 {
+        debug_assert_eq!(x.len(), self.input_dim());
+        let max = self.max_dim();
+        let (cur, next) = s.buffers(max);
+        cur[..x.len()].copy_from_slice(x);
+        let mut cur_len = x.len();
+        let n_layers = self.layers.len();
+        let mut src = cur;
+        let mut dst = next;
+        for (li, layer) in self.layers.iter().enumerate() {
+            let last = li + 1 == n_layers;
+            for o in 0..layer.out_dim {
+                let row = &layer.w[o * layer.in_dim..(o + 1) * layer.in_dim];
+                let mut acc = layer.b[o];
+                for (wi, xi) in row.iter().zip(&src[..cur_len]) {
+                    acc += wi * xi;
+                }
+                dst[o] = if last { acc } else { acc.max(0.0) };
+            }
+            cur_len = layer.out_dim;
+            std::mem::swap(&mut src, &mut dst);
+        }
+        src[0]
+    }
+
+    pub fn forward(&self, x: &[f32]) -> f32 {
+        let mut s = MlpScratch::default();
+        self.forward_with(x, &mut s)
+    }
+
+    pub fn forward_batch(&self, xs: &[Vec<f32>]) -> Vec<f32> {
+        let mut s = MlpScratch::default();
+        xs.iter().map(|x| self.forward_with(x, &mut s)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-build RSNN bytes for a known tiny net.
+    fn tiny_bytes() -> Vec<u8> {
+        // layer 0: 2x2 W=[[1,0],[0,-1]] b=[0, 0.5]; layer 1: 1x2 W=[[1,1]] b=[0.25]
+        let mut b = Vec::new();
+        b.extend_from_slice(b"RSNN");
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&2u32.to_le_bytes());
+        b.extend_from_slice(&2u32.to_le_bytes()); // out
+        b.extend_from_slice(&2u32.to_le_bytes()); // in
+        for v in [1.0f32, 0.0, 0.0, -1.0, 0.0, 0.5] {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&2u32.to_le_bytes());
+        for v in [1.0f32, 1.0, 0.25] {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        b
+    }
+
+    #[test]
+    fn parse_and_forward() {
+        let mlp = Mlp::parse(&tiny_bytes()).unwrap();
+        assert_eq!(mlp.input_dim(), 2);
+        assert_eq!(mlp.param_count(), 6 + 3);
+        // x=[2, 1]: h = relu([2, 0.5-1]) = [2, 0]; out = 2 + 0 + 0.25
+        assert!((mlp.forward(&[2.0, 1.0]) - 2.25).abs() < 1e-6);
+        // x=[0, -3]: h = relu([0, 3.5]) = [0, 3.5]; out = 3.75
+        assert!((mlp.forward(&[0.0, -3.0]) - 3.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn flops_convention() {
+        let mlp = Mlp::parse(&tiny_bytes()).unwrap();
+        assert_eq!(mlp.flops_per_query(), 2 * 2 * 2 + 2 * 1 * 2);
+    }
+
+    #[test]
+    fn rejects_dim_mismatch() {
+        let mut bytes = tiny_bytes();
+        // corrupt second layer's in_dim (offset: 12 + 8 + 6*4 + 4)
+        let off = 12 + 8 + 24 + 4;
+        bytes[off..off + 4].copy_from_slice(&9u32.to_le_bytes());
+        assert!(Mlp::parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let bytes = tiny_bytes();
+        assert!(Mlp::parse(&bytes[..bytes.len() - 2]).is_err());
+    }
+
+    #[test]
+    fn scratch_reuse_consistent() {
+        let mlp = Mlp::parse(&tiny_bytes()).unwrap();
+        let mut s = MlpScratch::default();
+        let a = mlp.forward_with(&[1.0, 2.0], &mut s);
+        let b = mlp.forward_with(&[1.0, 2.0], &mut s);
+        assert_eq!(a, b);
+    }
+}

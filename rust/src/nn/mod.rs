@@ -1,0 +1,33 @@
+//! MLP inference engine — the NN / pruned / KD baselines of the paper's
+//! evaluation, runnable without XLA (the PJRT path in [`crate::runtime`]
+//! cross-checks numerics).
+//!
+//! * [`Mlp`] — dense forward (`y = relu(Wx+b) ...`), RSNN loader.
+//! * [`SparseMlp`] — CSR forward for pruned models: only surviving
+//!   weights are stored/multiplied, matching how an embedded deployment
+//!   would actually exploit pruning.
+
+pub mod loader;
+pub mod sparse;
+
+pub use loader::Mlp;
+pub use sparse::SparseMlp;
+
+/// Shared forward-pass scratch to avoid per-call allocation.
+#[derive(Clone, Debug, Default)]
+pub struct MlpScratch {
+    bufs: [Vec<f32>; 2],
+}
+
+impl MlpScratch {
+    pub(crate) fn buffers(&mut self, max_dim: usize)
+        -> (&mut Vec<f32>, &mut Vec<f32>) {
+        for b in &mut self.bufs {
+            if b.len() < max_dim {
+                b.resize(max_dim, 0.0);
+            }
+        }
+        let [a, b] = &mut self.bufs;
+        (a, b)
+    }
+}

@@ -1,0 +1,205 @@
+//! CSR sparse MLP — inference for pruned models.
+//!
+//! Pruned artifacts are shipped dense-with-zeros (RSNN); this converts
+//! each layer to CSR so the forward pass touches only surviving weights —
+//! the storage/compute model under which the paper's pruning baseline is
+//! scored (its memory cost is the nnz count).
+
+use super::{loader::Mlp, MlpScratch};
+
+/// One CSR layer.
+#[derive(Clone, Debug)]
+pub struct CsrLayer {
+    pub out_dim: usize,
+    pub in_dim: usize,
+    /// Row offsets, len out_dim + 1.
+    pub row_off: Vec<u32>,
+    /// Column indices of nonzeros.
+    pub col_idx: Vec<u32>,
+    /// Nonzero values.
+    pub vals: Vec<f32>,
+    pub bias: Vec<f32>,
+}
+
+/// Sparse MLP (CSR per layer).
+#[derive(Clone, Debug)]
+pub struct SparseMlp {
+    pub layers: Vec<CsrLayer>,
+}
+
+impl SparseMlp {
+    /// Convert from a dense MLP, dropping exact zeros.
+    pub fn from_dense(mlp: &Mlp) -> Self {
+        let layers = mlp
+            .layers
+            .iter()
+            .map(|l| {
+                let mut row_off = Vec::with_capacity(l.out_dim + 1);
+                let mut col_idx = Vec::new();
+                let mut vals = Vec::new();
+                row_off.push(0u32);
+                for o in 0..l.out_dim {
+                    for i in 0..l.in_dim {
+                        let v = l.w[o * l.in_dim + i];
+                        if v != 0.0 {
+                            col_idx.push(i as u32);
+                            vals.push(v);
+                        }
+                    }
+                    row_off.push(col_idx.len() as u32);
+                }
+                CsrLayer {
+                    out_dim: l.out_dim,
+                    in_dim: l.in_dim,
+                    row_off,
+                    col_idx,
+                    vals,
+                    bias: l.b.clone(),
+                }
+            })
+            .collect();
+        Self { layers }
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.layers[0].in_dim
+    }
+
+    pub fn max_dim(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.in_dim.max(l.out_dim))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Nonzero weight count.
+    pub fn nnz(&self) -> usize {
+        self.layers.iter().map(|l| l.vals.len()).sum()
+    }
+
+    /// Parameter count under sparse storage: nnz weights + biases.
+    /// (Index overhead is excluded, matching the paper's nnz convention.)
+    pub fn param_count(&self) -> usize {
+        self.nnz() + self.layers.iter().map(|l| l.bias.len()).sum::<usize>()
+    }
+
+    /// FLOPs per query: 2·nnz (mul + add per surviving weight).
+    pub fn flops_per_query(&self) -> usize {
+        2 * self.nnz()
+    }
+
+    pub fn forward_with(&self, x: &[f32], s: &mut MlpScratch) -> f32 {
+        let max = self.max_dim();
+        let (cur, next) = s.buffers(max);
+        cur[..x.len()].copy_from_slice(x);
+        let n_layers = self.layers.len();
+        let mut src = cur;
+        let mut dst = next;
+        for (li, layer) in self.layers.iter().enumerate() {
+            let last = li + 1 == n_layers;
+            for o in 0..layer.out_dim {
+                let lo = layer.row_off[o] as usize;
+                let hi = layer.row_off[o + 1] as usize;
+                let mut acc = layer.bias[o];
+                for (ci, v) in layer.col_idx[lo..hi].iter().zip(&layer.vals[lo..hi]) {
+                    acc += v * src[*ci as usize];
+                }
+                dst[o] = if last { acc } else { acc.max(0.0) };
+            }
+            std::mem::swap(&mut src, &mut dst);
+        }
+        src[0]
+    }
+
+    pub fn forward(&self, x: &[f32]) -> f32 {
+        let mut s = MlpScratch::default();
+        self.forward_with(x, &mut s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::loader::Layer;
+    use crate::util::prop::{forall, gens};
+    use crate::util::rng::SplitMix64;
+
+    fn random_pruned_mlp(rng: &mut SplitMix64, dims: &[usize], keep: f64)
+        -> Mlp {
+        let layers = dims
+            .windows(2)
+            .map(|w| {
+                let (i, o) = (w[0], w[1]);
+                Layer {
+                    out_dim: o,
+                    in_dim: i,
+                    w: (0..o * i)
+                        .map(|_| {
+                            if rng.next_f64() < keep {
+                                rng.next_gaussian() as f32
+                            } else {
+                                0.0
+                            }
+                        })
+                        .collect(),
+                    b: (0..o).map(|_| rng.next_gaussian() as f32 * 0.1)
+                        .collect(),
+                }
+            })
+            .collect();
+        Mlp { layers }
+    }
+
+    #[test]
+    fn sparse_matches_dense_forward() {
+        forall(
+            1,
+            40,
+            |rng| {
+                let mlp = random_pruned_mlp(rng, &[7, 12, 5, 1], 0.4);
+                let x = gens::vec_f32(rng, 7, 1.0);
+                (mlp, x)
+            },
+            |(mlp, x)| {
+                let dense = mlp.forward(x);
+                let sparse = SparseMlp::from_dense(mlp).forward(x);
+                if (dense - sparse).abs() < 1e-4 {
+                    Ok(())
+                } else {
+                    Err(format!("dense {dense} sparse {sparse}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn nnz_counts_only_nonzeros() {
+        let mut rng = SplitMix64::new(2);
+        let mlp = random_pruned_mlp(&mut rng, &[10, 8, 1], 0.3);
+        let sparse = SparseMlp::from_dense(&mlp);
+        let dense_nonzero: usize = mlp
+            .layers
+            .iter()
+            .map(|l| l.w.iter().filter(|&&v| v != 0.0).count())
+            .sum();
+        assert_eq!(sparse.nnz(), dense_nonzero);
+        assert!(sparse.nnz() < 10 * 8 + 8);
+    }
+
+    #[test]
+    fn flops_is_twice_nnz() {
+        let mut rng = SplitMix64::new(3);
+        let mlp = random_pruned_mlp(&mut rng, &[6, 4, 1], 0.5);
+        let sparse = SparseMlp::from_dense(&mlp);
+        assert_eq!(sparse.flops_per_query(), 2 * sparse.nnz());
+    }
+
+    #[test]
+    fn fully_dense_roundtrip() {
+        let mut rng = SplitMix64::new(4);
+        let mlp = random_pruned_mlp(&mut rng, &[5, 5, 1], 1.0);
+        let sparse = SparseMlp::from_dense(&mlp);
+        assert_eq!(sparse.nnz(), 5 * 5 + 5);
+    }
+}

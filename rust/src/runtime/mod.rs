@@ -1,0 +1,111 @@
+//! PJRT runtime — loads the AOT artifacts (`*.hlo.txt`, produced once by
+//! `make artifacts`) and executes them from the rust request path.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serialized protos carry 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).  All executables are
+//! compiled once at load and reused; the AOT batch size is fixed (32) and
+//! the executor pads partial batches.
+
+pub mod registry;
+
+pub use registry::ModelRegistry;
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A compiled, ready-to-run XLA executable with a fixed (batch, dim)
+/// input signature and scalar-per-row output.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub batch: usize,
+    pub dim: usize,
+}
+
+/// Wrapper over one PJRT CPU client and its loaded executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact with a declared (batch, dim) signature.
+    pub fn load_hlo<P: AsRef<Path>>(
+        &self,
+        path: P,
+        batch: usize,
+        dim: usize,
+    ) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.as_ref().to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parse HLO text {:?}", path.as_ref()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {:?}", path.as_ref()))?;
+        Ok(Executable { exe, batch, dim })
+    }
+}
+
+impl Executable {
+    /// Run one padded batch: `rows.len() <= batch`, each row `dim` floats.
+    /// Returns one scalar per input row.
+    pub fn run_batch(&self, rows: &[&[f32]]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            rows.len() <= self.batch,
+            "batch {} exceeds executable batch {}",
+            rows.len(),
+            self.batch
+        );
+        let mut flat = vec![0.0f32; self.batch * self.dim];
+        for (i, row) in rows.iter().enumerate() {
+            anyhow::ensure!(
+                row.len() == self.dim,
+                "row {} has dim {} != {}",
+                i,
+                row.len(),
+                self.dim
+            );
+            flat[i * self.dim..(i + 1) * self.dim].copy_from_slice(row);
+        }
+        let lit = xla::Literal::vec1(&flat)
+            .reshape(&[self.batch as i64, self.dim as i64])?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0]
+            .to_literal_sync()?;
+        // AOT lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<f32>()?;
+        anyhow::ensure!(
+            values.len() == self.batch,
+            "output size {} != batch {}",
+            values.len(),
+            self.batch
+        );
+        Ok(values[..rows.len()].to_vec())
+    }
+
+    /// Convenience: run many rows by chunking into padded batches.
+    pub fn run_all(&self, x: &[f32], dim: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(dim == self.dim, "dim mismatch");
+        let n = x.len() / dim;
+        let mut out = Vec::with_capacity(n);
+        for chunk_start in (0..n).step_by(self.batch) {
+            let end = (chunk_start + self.batch).min(n);
+            let rows: Vec<&[f32]> = (chunk_start..end)
+                .map(|i| &x[i * dim..(i + 1) * dim])
+                .collect();
+            out.extend(self.run_batch(&rows)?);
+        }
+        Ok(out)
+    }
+}

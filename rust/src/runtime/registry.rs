@@ -1,0 +1,187 @@
+//! Model registry: discovers dataset artifacts, loads executables and
+//! binary weights on demand, and hands the coordinator a uniform view of
+//! every backend variant (NN-PJRT / NN-rust / Kernel-PJRT / Kernel-rust /
+//! Representer Sketch).
+
+use super::{Executable, Runtime};
+use crate::data::Task;
+use crate::kernel::{KernelModel, KernelParams};
+use crate::nn::Mlp;
+use crate::sketch::{RaceSketch, SketchConfig};
+use crate::util::json::{self, Json};
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Parsed `meta.json` for one dataset.
+#[derive(Clone, Debug)]
+pub struct DatasetMeta {
+    pub name: String,
+    pub dim: usize,
+    pub task: Task,
+    pub hidden: Vec<usize>,
+    pub nn_params: usize,
+    pub aot_batch: usize,
+    pub kernel_p: usize,
+    pub kernel_m: usize,
+    pub kernel_width: f64,
+    pub k_per_row: usize,
+    pub default_rows: usize,
+    pub default_cols: usize,
+    pub train_nn_metric: f64,
+    pub train_kernel_metric: f64,
+    /// (artifact stem, param count) for figure-2 baselines.
+    pub baselines: Vec<(String, usize)>,
+}
+
+impl DatasetMeta {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("meta.json"))
+            .with_context(|| format!("read {:?}/meta.json", dir))?;
+        let j = json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parse meta.json: {e}"))?;
+        let req = |p: &[&str]| -> Result<&Json> {
+            j.at(p).with_context(|| format!("meta.json missing {p:?}"))
+        };
+        let mut baselines = Vec::new();
+        if let Some(Json::Obj(b)) = j.get("baselines") {
+            for (k, v) in b {
+                let n = v
+                    .get("nnz")
+                    .or_else(|| v.get("params"))
+                    .and_then(|x| x.as_usize())
+                    .unwrap_or(0);
+                baselines.push((k.clone(), n));
+            }
+        }
+        Ok(Self {
+            name: req(&["name"])?.as_str().unwrap_or_default().to_string(),
+            dim: req(&["dim"])?.as_usize().context("dim")?,
+            task: Task::from_str(
+                req(&["task"])?.as_str().context("task")?,
+            )?,
+            hidden: req(&["hidden"])?
+                .as_arr()
+                .context("hidden")?
+                .iter()
+                .filter_map(|v| v.as_usize())
+                .collect(),
+            nn_params: req(&["nn_params"])?.as_usize().context("nn_params")?,
+            aot_batch: req(&["aot_batch"])?.as_usize().unwrap_or(32),
+            kernel_p: req(&["kernel", "p"])?.as_usize().context("p")?,
+            kernel_m: req(&["kernel", "m"])?.as_usize().context("m")?,
+            kernel_width: req(&["kernel", "width"])?
+                .as_f64()
+                .context("width")?,
+            k_per_row: req(&["kernel", "k_per_row"])?
+                .as_usize()
+                .context("k")?,
+            default_rows: req(&["kernel", "default_rows"])?
+                .as_usize()
+                .context("rows")?,
+            default_cols: req(&["kernel", "default_cols"])?
+                .as_usize()
+                .context("cols")?,
+            train_nn_metric: j
+                .at(&["train_metrics", "nn"])
+                .and_then(|v| v.as_f64())
+                .unwrap_or(f64::NAN),
+            train_kernel_metric: j
+                .at(&["train_metrics", "kernel"])
+                .and_then(|v| v.as_f64())
+                .unwrap_or(f64::NAN),
+            baselines,
+        })
+    }
+}
+
+/// All loaded artifacts for one dataset.
+pub struct DatasetBundle {
+    pub meta: DatasetMeta,
+    pub dir: PathBuf,
+    pub mlp: Mlp,
+    pub kernel: KernelModel,
+    pub sketch: RaceSketch,
+    /// PJRT executables (None until `load_executables`).
+    pub nn_exe: Option<Executable>,
+    pub kernel_exe: Option<Executable>,
+}
+
+impl DatasetBundle {
+    /// Load binary artifacts (cheap; no XLA compilation).
+    pub fn load(root: &Path, name: &str) -> Result<Self> {
+        let dir = root.join(name);
+        let meta = DatasetMeta::load(&dir)?;
+        let mlp = Mlp::load(dir.join("nn_weights.bin"))?;
+        let kp = KernelParams::load(dir.join("kernel_params.bin"))?;
+        let sketch = RaceSketch::build(&kp, &SketchConfig::default());
+        anyhow::ensure!(mlp.input_dim() == meta.dim, "nn dim mismatch");
+        anyhow::ensure!(kp.d == meta.dim, "kernel dim mismatch");
+        Ok(Self {
+            meta,
+            dir,
+            mlp,
+            kernel: KernelModel::new(kp),
+            sketch,
+            nn_exe: None,
+            kernel_exe: None,
+        })
+    }
+
+    /// Compile the PJRT executables (slow; only when the XLA path is
+    /// actually served).
+    pub fn load_executables(&mut self, rt: &Runtime) -> Result<()> {
+        if self.nn_exe.is_none() {
+            self.nn_exe = Some(rt.load_hlo(
+                self.dir.join("nn.hlo.txt"),
+                self.meta.aot_batch,
+                self.meta.dim,
+            )?);
+        }
+        if self.kernel_exe.is_none() {
+            self.kernel_exe = Some(rt.load_hlo(
+                self.dir.join("kernel.hlo.txt"),
+                self.meta.aot_batch,
+                self.meta.dim,
+            )?);
+        }
+        Ok(())
+    }
+
+    /// Rebuild the sketch at a different size (Figure-2 sweeps).
+    pub fn rebuild_sketch(&mut self, cfg: &SketchConfig) -> Result<()> {
+        let kp = KernelParams::load(self.dir.join("kernel_params.bin"))?;
+        self.sketch = RaceSketch::build(&kp, cfg);
+        Ok(())
+    }
+}
+
+/// Registry over the whole artifacts tree.
+pub struct ModelRegistry {
+    pub root: PathBuf,
+    pub bundles: Vec<DatasetBundle>,
+}
+
+impl ModelRegistry {
+    /// Dataset names in canonical paper order.
+    pub const DATASETS: [&'static str; 6] =
+        ["adult", "phishing", "skin", "susy", "abalone", "yearmsd"];
+
+    pub fn load(root: &Path, names: &[&str]) -> Result<Self> {
+        let mut bundles = Vec::new();
+        for name in names {
+            bundles.push(
+                DatasetBundle::load(root, name)
+                    .with_context(|| format!("load dataset {name}"))?,
+            );
+        }
+        Ok(Self { root: root.to_path_buf(), bundles })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&DatasetBundle> {
+        self.bundles.iter().find(|b| b.meta.name == name)
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut DatasetBundle> {
+        self.bundles.iter_mut().find(|b| b.meta.name == name)
+    }
+}

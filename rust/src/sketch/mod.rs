@@ -1,0 +1,524 @@
+//! The Representer Sketch — a weighted RACE sketch (paper §3.2, Alg. 1/2).
+//!
+//! An (L × R) array of f32 counters.  Construction folds the M learned
+//! representer points in: `S[l, h_l(x_j)] += α_j`.  A query hashes with
+//! the same L functions (derived from the stored seed), reads L counters,
+//! and returns the median-of-means (or mean) — optionally debiased for
+//! the uniform collision floor the K-wise rehash introduces.
+//!
+//! This module is the **deployment hot path**: after `build`, inference
+//! needs only the projection `A^T q` (d·p mul-adds), `L·K` sparse ±1
+//! hashes (additions/subtractions only), `L` rehashes and `L` counter
+//! reads — no neural network, no XLA, no Python.
+
+pub mod multiclass;
+pub mod serde;
+
+pub use multiclass::MultiSketch;
+
+use crate::kernel::KernelParams;
+use crate::lsh::{concat, LshFamily, SparseL2Lsh};
+
+/// Sketch-size / estimator configuration.
+#[derive(Clone, Debug)]
+pub struct SketchConfig {
+    /// Rows L (repetitions).  0 = use the dataset default from RSKP.
+    pub rows: usize,
+    /// Columns R (counter range).  0 = use the dataset default.
+    pub cols: usize,
+    /// Median-of-means groups g (paper Lemma 1: g = 8 log(1/δ)).
+    pub groups: usize,
+    /// Use the median-of-means estimator (vs plain mean).
+    pub use_mom: bool,
+    /// Debias the uniform 1/R rehash collision floor:
+    /// `E[S[l, h_l(q)]] = (1 − 1/R) f_K(q) + Σα / R`.
+    pub debias: bool,
+}
+
+impl Default for SketchConfig {
+    fn default() -> Self {
+        Self { rows: 0, cols: 0, groups: 8, use_mom: true, debias: true }
+    }
+}
+
+/// Reusable per-thread query scratch (zero allocation on the hot path).
+#[derive(Clone, Debug, Default)]
+pub struct QueryScratch {
+    proj: Vec<f32>,
+    acc: Vec<f32>,
+    codes: Vec<i32>,
+    cols: Vec<u32>,
+    group_means: Vec<f32>,
+}
+
+/// The weighted RACE sketch plus everything needed to query it.
+#[derive(Clone, Debug)]
+pub struct RaceSketch {
+    /// Counters, (rows, cols) row-major.
+    data: Vec<f32>,
+    pub rows: usize,
+    pub cols: usize,
+    pub k_per_row: u32,
+    pub groups: usize,
+    pub use_mom: bool,
+    pub debias: bool,
+    /// Sum of all α (for debiasing).
+    pub alpha_sum: f32,
+    /// Input projection A (d, p) row-major; empty => queries arrive
+    /// already projected (d == p).
+    a: Vec<f32>,
+    pub d: usize,
+    pub p: usize,
+    /// The L·K hash functions over the projected space.
+    lsh: SparseL2Lsh,
+    pub lsh_seed: u64,
+    pub width: f32,
+}
+
+impl RaceSketch {
+    /// Build from distilled kernel params (Algorithm 1).  Milliseconds
+    /// even for L=2000 — this is why sketch sizes can be swept without
+    /// retraining (Figure 2).
+    pub fn build(kp: &KernelParams, cfg: &SketchConfig) -> Self {
+        let rows = if cfg.rows == 0 { kp.default_rows } else { cfg.rows };
+        let cols = if cfg.cols == 0 { kp.default_cols } else { cfg.cols };
+        let n_hashes = rows * kp.k_per_row as usize;
+        let lsh = SparseL2Lsh::generate(kp.lsh_seed, kp.p, n_hashes, kp.width);
+        let mut data = vec![0.0f32; rows * cols];
+        let mut codes = vec![0i32; n_hashes];
+        let mut cidx = vec![0u32; rows];
+        for j in 0..kp.m {
+            let xj = &kp.x[j * kp.p..(j + 1) * kp.p];
+            lsh.hash_into(xj, &mut codes);
+            concat::rehash_all(&codes, kp.k_per_row as usize, cols as u32,
+                               &mut cidx);
+            for (l, &c) in cidx.iter().enumerate() {
+                data[l * cols + c as usize] += kp.alpha[j];
+            }
+        }
+        Self {
+            data,
+            rows,
+            cols,
+            k_per_row: kp.k_per_row,
+            groups: cfg.groups.max(1),
+            use_mom: cfg.use_mom,
+            debias: cfg.debias,
+            alpha_sum: kp.alpha.iter().sum(),
+            a: kp.a.clone(),
+            d: kp.d,
+            p: kp.p,
+            lsh,
+            lsh_seed: kp.lsh_seed,
+            width: kp.width,
+        }
+    }
+
+    /// Counter storage size (the paper's memory unit: L·R counters).
+    pub fn counter_count(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Total parameter count incl. the projection (paper §4.3:
+    /// `R*L + d*p`).
+    pub fn param_count(&self) -> usize {
+        self.counter_count() + self.d * self.p
+    }
+
+    pub fn counters(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Merge another sketch built with identical parameters (RACE
+    /// counters are additive — streaming/distributed construction).
+    pub fn merge(&mut self, other: &RaceSketch) -> anyhow::Result<()> {
+        if self.rows != other.rows
+            || self.cols != other.cols
+            || self.lsh_seed != other.lsh_seed
+            || self.k_per_row != other.k_per_row
+        {
+            anyhow::bail!("sketch parameter mismatch");
+        }
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+        self.alpha_sum += other.alpha_sum;
+        Ok(())
+    }
+
+    #[inline]
+    fn ensure_scratch(&self, s: &mut QueryScratch) {
+        s.proj.resize(self.p, 0.0);
+        s.acc.resize(self.rows * self.k_per_row as usize, 0.0);
+        s.codes.resize(self.rows * self.k_per_row as usize, 0);
+        s.cols.resize(self.rows, 0);
+        s.group_means.resize(self.groups, 0.0);
+    }
+
+    /// Full hot path: raw query in R^d -> prediction.  Zero allocation.
+    pub fn query_with(&self, q: &[f32], s: &mut QueryScratch) -> f32 {
+        self.ensure_scratch(s);
+        debug_assert_eq!(q.len(), self.d);
+        // 1. project: q' = A^T q  (A is (d, p) row-major).  Take the
+        // buffer out of the scratch to satisfy the borrow checker without
+        // cloning (perf: this was a per-query allocation before §Perf).
+        let mut proj = std::mem::take(&mut s.proj);
+        proj.resize(self.p, 0.0);
+        proj.fill(0.0);
+        for (i, &qi) in q.iter().enumerate() {
+            if qi == 0.0 {
+                continue;
+            }
+            let row = &self.a[i * self.p..(i + 1) * self.p];
+            for (o, &aij) in proj.iter_mut().zip(row) {
+                *o += qi * aij;
+            }
+        }
+        let out = self.query_projected_with(&proj, s);
+        s.proj = proj;
+        out
+    }
+
+    /// Hot path for an already-projected query.
+    pub fn query_projected_with(&self, proj: &[f32], s: &mut QueryScratch)
+        -> f32 {
+        self.ensure_scratch(s);
+        // 2. hash: add/sub only (coordinate-major hot path, §Perf)
+        self.lsh.hash_into_acc(proj, &mut s.acc, &mut s.codes);
+        // 3. rehash to columns
+        concat::rehash_all(&s.codes, self.k_per_row as usize,
+                           self.cols as u32, &mut s.cols);
+        // 4. gather + estimate
+        let est = if self.use_mom {
+            self.median_of_means(&s.cols, &mut s.group_means)
+        } else {
+            self.mean(&s.cols)
+        };
+        if self.debias {
+            let r = self.cols as f32;
+            (est - self.alpha_sum / r) / (1.0 - 1.0 / r)
+        } else {
+            est
+        }
+    }
+
+    /// Convenience allocating query.
+    pub fn query(&self, q: &[f32]) -> f32 {
+        let mut s = QueryScratch::default();
+        self.query_with(q, &mut s)
+    }
+
+    fn mean(&self, cols: &[u32]) -> f32 {
+        let mut acc = 0.0f32;
+        for (l, &c) in cols.iter().enumerate() {
+            acc += self.data[l * self.cols + c as usize];
+        }
+        acc / self.rows as f32
+    }
+
+    /// Algorithm 2: median of g group means.
+    fn median_of_means(&self, cols: &[u32], gm: &mut [f32]) -> f32 {
+        let g = gm.len();
+        let m = (self.rows / g).max(1);
+        let used = g.min(self.rows); // if rows < groups fall back
+        if self.rows < g {
+            return self.mean(cols);
+        }
+        for (gi, slot) in gm.iter_mut().enumerate().take(used) {
+            let mut acc = 0.0f32;
+            for l in gi * m..(gi + 1) * m {
+                acc += self.data[l * self.cols + cols[l] as usize];
+            }
+            *slot = acc / m as f32;
+        }
+        // median of gm[0..used] without allocation: insertion sort (g<=16)
+        let gm = &mut gm[..used];
+        for i in 1..gm.len() {
+            let mut j = i;
+            while j > 0 && gm[j - 1] > gm[j] {
+                gm.swap(j - 1, j);
+                j -= 1;
+            }
+        }
+        if used % 2 == 1 {
+            gm[used / 2]
+        } else {
+            0.5 * (gm[used / 2 - 1] + gm[used / 2])
+        }
+    }
+
+    // -- staged pipeline (crate-internal; used by MultiSketch to share
+    //    one hash pass across class sketches) --------------------------
+
+    pub(crate) fn ensure_scratch_pub(&self, s: &mut QueryScratch) {
+        self.ensure_scratch(s);
+    }
+
+    /// Stage 1: project the raw query into `s.proj`.
+    pub(crate) fn project_pub(&self, q: &[f32], s: &mut QueryScratch) {
+        s.proj.fill(0.0);
+        for (i, &qi) in q.iter().enumerate() {
+            if qi == 0.0 {
+                continue;
+            }
+            let row = &self.a[i * self.p..(i + 1) * self.p];
+            for (o, &aij) in s.proj.iter_mut().zip(row) {
+                *o += qi * aij;
+            }
+        }
+    }
+
+    /// Stage 2: hash the projected query and fill `s.cols`.
+    pub(crate) fn hash_pub(&self, proj: &[f32], s: &mut QueryScratch) {
+        self.lsh.hash_into_acc(proj, &mut s.acc, &mut s.codes);
+        concat::rehash_all(&s.codes, self.k_per_row as usize,
+                           self.cols as u32, &mut s.cols);
+    }
+
+    /// Stage 3: estimate from already-computed columns.
+    pub(crate) fn estimate_from_cols_pub(&self, s: &mut QueryScratch) -> f32 {
+        let mut gm = std::mem::take(&mut s.group_means);
+        let est = if self.use_mom {
+            self.median_of_means(&s.cols, &mut gm)
+        } else {
+            self.mean(&s.cols)
+        };
+        s.group_means = gm;
+        if self.debias {
+            let r = self.cols as f32;
+            (est - self.alpha_sum / r) / (1.0 - 1.0 / r)
+        } else {
+            est
+        }
+    }
+
+    /// FLOPs per query under the paper's §4.3 accounting:
+    /// projection `2 d p` + hashing `p·K·L / 3` + aggregation `L`.
+    pub fn flops_per_query(&self) -> usize {
+        2 * self.d * self.p
+            + (self.p * self.k_per_row as usize * self.rows) / 3
+            + self.rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::KernelModel;
+    use crate::util::prop::{forall, gens};
+    use crate::util::rng::SplitMix64;
+
+    fn random_kp(
+        rng: &mut SplitMix64,
+        d: usize,
+        p: usize,
+        m: usize,
+    ) -> KernelParams {
+        // identity-ish A when d == p, else random
+        let a: Vec<f32> = if d == p {
+            let mut a = vec![0.0; d * p];
+            for i in 0..d {
+                a[i * p + i] = 1.0;
+            }
+            a
+        } else {
+            (0..d * p).map(|_| rng.next_gaussian() as f32 * 0.5).collect()
+        };
+        KernelParams {
+            d,
+            p,
+            m,
+            a,
+            x: (0..m * p).map(|_| rng.next_gaussian() as f32).collect(),
+            alpha: (0..m).map(|_| 0.5 + rng.next_f32()).collect(),
+            width: 2.0,
+            lsh_seed: rng.next_u64(),
+            k_per_row: 1,
+            default_rows: 64,
+            default_cols: 16,
+        }
+    }
+
+    #[test]
+    fn mass_conservation_per_row() {
+        let mut rng = SplitMix64::new(1);
+        let kp = random_kp(&mut rng, 4, 4, 30);
+        let sk = RaceSketch::build(&kp, &SketchConfig::default());
+        let want: f32 = kp.alpha.iter().sum();
+        for l in 0..sk.rows {
+            let got: f32 =
+                sk.data[l * sk.cols..(l + 1) * sk.cols].iter().sum();
+            assert!((got - want).abs() < 1e-3, "row {l}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn merge_equals_joint_build() {
+        let mut rng = SplitMix64::new(2);
+        let kp = random_kp(&mut rng, 5, 5, 20);
+        let (mut kp1, mut kp2) = (kp.clone(), kp.clone());
+        kp1.m = 12;
+        kp1.x = kp.x[..12 * 5].to_vec();
+        kp1.alpha = kp.alpha[..12].to_vec();
+        kp2.m = 8;
+        kp2.x = kp.x[12 * 5..].to_vec();
+        kp2.alpha = kp.alpha[12..].to_vec();
+        let cfg = SketchConfig::default();
+        let joint = RaceSketch::build(&kp, &cfg);
+        let mut s1 = RaceSketch::build(&kp1, &cfg);
+        let s2 = RaceSketch::build(&kp2, &cfg);
+        s1.merge(&s2).unwrap();
+        for (a, b) in s1.data.iter().zip(&joint.data) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        assert!((s1.alpha_sum - joint.alpha_sum).abs() < 1e-4);
+    }
+
+    #[test]
+    fn merge_rejects_mismatched() {
+        let mut rng = SplitMix64::new(3);
+        let kp = random_kp(&mut rng, 4, 4, 10);
+        let mut s1 = RaceSketch::build(
+            &kp,
+            &SketchConfig { rows: 32, ..Default::default() },
+        );
+        let s2 = RaceSketch::build(
+            &kp,
+            &SketchConfig { rows: 64, ..Default::default() },
+        );
+        assert!(s1.merge(&s2).is_err());
+    }
+
+    #[test]
+    fn estimates_track_exact_kde() {
+        // Theorem 1/2 on the rust side: with many rows, sketch estimates
+        // approximate the exact weighted KDE.
+        let mut rng = SplitMix64::new(4);
+        let kp = random_kp(&mut rng, 6, 6, 40);
+        let model = KernelModel::new(kp.clone());
+        let sk = RaceSketch::build(
+            &kp,
+            &SketchConfig {
+                rows: 4000,
+                cols: 32,
+                groups: 8,
+                use_mom: false,
+                debias: true,
+            },
+        );
+        let mut worst_rel = 0.0f32;
+        let mut scratch = QueryScratch::default();
+        for _ in 0..10 {
+            let q: Vec<f32> =
+                (0..6).map(|_| rng.next_gaussian() as f32).collect();
+            let exact = model.predict(&q);
+            let est = sk.query_with(&q, &mut scratch);
+            let rel = (est - exact).abs() / exact.abs().max(1.0);
+            worst_rel = worst_rel.max(rel);
+        }
+        assert!(worst_rel < 0.2, "worst rel err {worst_rel}");
+    }
+
+    #[test]
+    fn mom_error_decays_with_rows() {
+        let mut rng = SplitMix64::new(5);
+        let kp = random_kp(&mut rng, 5, 5, 50);
+        let model = KernelModel::new(kp.clone());
+        let queries: Vec<Vec<f32>> = (0..12)
+            .map(|_| (0..5).map(|_| rng.next_gaussian() as f32).collect())
+            .collect();
+        let mean_err = |rows: usize, seed_bump: u64| {
+            let mut kp2 = kp.clone();
+            kp2.lsh_seed ^= seed_bump;
+            let sk = RaceSketch::build(
+                &kp2,
+                &SketchConfig {
+                    rows,
+                    cols: 32,
+                    groups: 8,
+                    use_mom: true,
+                    debias: true,
+                },
+            );
+            let mut s = QueryScratch::default();
+            queries
+                .iter()
+                .map(|q| (sk.query_with(q, &mut s) - model.predict(q)).abs())
+                .sum::<f32>()
+                / queries.len() as f32
+        };
+        let e_small = (0..4).map(|i| mean_err(64, i)).sum::<f32>() / 4.0;
+        let e_large = (0..4).map(|i| mean_err(1024, i + 9)).sum::<f32>() / 4.0;
+        assert!(
+            e_large < e_small / 1.4,
+            "e64 {e_small} vs e1024 {e_large}"
+        );
+    }
+
+    #[test]
+    fn query_matches_alloc_free_path() {
+        let mut rng = SplitMix64::new(6);
+        let kp = random_kp(&mut rng, 8, 4, 20);
+        let sk = RaceSketch::build(&kp, &SketchConfig::default());
+        forall(
+            7,
+            30,
+            |rng| gens::vec_f32(rng, 8, 1.0),
+            |q| {
+                let a = sk.query(q);
+                let mut s = QueryScratch::default();
+                let b = sk.query_with(q, &mut s);
+                // scratch reuse must not change results
+                let c = sk.query_with(q, &mut s);
+                if a == b && b == c {
+                    Ok(())
+                } else {
+                    Err(format!("{a} {b} {c}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn flops_accounting_formula() {
+        let mut rng = SplitMix64::new(8);
+        let kp = random_kp(&mut rng, 10, 4, 5);
+        let sk = RaceSketch::build(
+            &kp,
+            &SketchConfig { rows: 300, cols: 16, ..Default::default() },
+        );
+        assert_eq!(
+            sk.flops_per_query(),
+            2 * 10 * 4 + (4 * 1 * 300) / 3 + 300
+        );
+    }
+
+    #[test]
+    fn groups_larger_than_rows_falls_back_to_mean() {
+        let mut rng = SplitMix64::new(9);
+        let kp = random_kp(&mut rng, 4, 4, 10);
+        let sk = RaceSketch::build(
+            &kp,
+            &SketchConfig {
+                rows: 4,
+                cols: 8,
+                groups: 8,
+                use_mom: true,
+                debias: false,
+            },
+        );
+        let q = vec![0.1f32; 4];
+        let mom = sk.query(&q);
+        let sk_mean = RaceSketch::build(
+            &kp,
+            &SketchConfig {
+                rows: 4,
+                cols: 8,
+                groups: 8,
+                use_mom: false,
+                debias: false,
+            },
+        );
+        assert_eq!(mom, sk_mean.query(&q));
+    }
+}

@@ -1,0 +1,207 @@
+//! Multi-class Representer Sketch — the paper's §4.6 limitation/future
+//! work ("the sketch size grows linearly with the number of classes...
+//! we believe this issue can be mitigated").
+//!
+//! A `MultiSketch` holds one weighted counter array per class but shares
+//! a single set of LSH functions, so a query hashes ONCE (the dominant
+//! cost) and reads one counter per row per class.  Marginal cost per
+//! extra class is `L` reads + the MoM aggregation — the hash computation
+//! (`p·K·L/3` adds) is amortized, which is exactly the mitigation the
+//! paper gestures at.  Prediction is the argmax of the per-class
+//! estimates.
+
+use super::{QueryScratch, RaceSketch, SketchConfig};
+use crate::kernel::KernelParams;
+
+/// One sketch per class, shared hash functions.
+pub struct MultiSketch {
+    /// Class sketches; all built with identical (seed, L, R, K).
+    pub classes: Vec<RaceSketch>,
+}
+
+impl MultiSketch {
+    /// Build from per-class kernel params.  All classes must share
+    /// d/p/A/seed/width/K (they differ in points and weights).
+    pub fn build(per_class: &[KernelParams], cfg: &SketchConfig)
+        -> anyhow::Result<Self> {
+        anyhow::ensure!(!per_class.is_empty(), "no classes");
+        let first = &per_class[0];
+        for kp in per_class.iter().skip(1) {
+            anyhow::ensure!(
+                kp.d == first.d
+                    && kp.p == first.p
+                    && kp.lsh_seed == first.lsh_seed
+                    && kp.k_per_row == first.k_per_row
+                    && (kp.width - first.width).abs() < 1e-9,
+                "class kernel params must share hash configuration"
+            );
+        }
+        Ok(Self {
+            classes: per_class
+                .iter()
+                .map(|kp| RaceSketch::build(kp, cfg))
+                .collect(),
+        })
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.classes.len()
+    }
+
+    /// Per-class scores.  Hashes once (through class 0's functions —
+    /// identical across classes by construction), then reads each class's
+    /// counters.
+    pub fn scores_with(&self, q: &[f32], s: &mut QueryScratch,
+                       out: &mut Vec<f32>) {
+        out.clear();
+        let first = &self.classes[0];
+        // Hash once via the shared pipeline: project + hash + rehash.
+        first.ensure_scratch_pub(s);
+        first.project_pub(q, s);
+        let proj = std::mem::take(&mut s.proj);
+        first.hash_pub(&proj, s);
+        s.proj = proj;
+        // Per-class gather + estimate over the SAME columns.
+        for sk in &self.classes {
+            debug_assert_eq!(sk.cols, first.cols);
+            out.push(sk.estimate_from_cols_pub(s));
+        }
+    }
+
+    /// Argmax class for a query.
+    pub fn predict(&self, q: &[f32], s: &mut QueryScratch) -> usize {
+        let mut scores = Vec::with_capacity(self.n_classes());
+        self.scores_with(q, s, &mut scores);
+        scores
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    /// Total parameter count: per-class counters + ONE shared projection.
+    pub fn param_count(&self) -> usize {
+        let first = &self.classes[0];
+        self.classes.len() * first.counter_count() + first.d * first.p
+    }
+
+    /// FLOPs per query: one hash pass + per-class aggregation.
+    pub fn flops_per_query(&self) -> usize {
+        let first = &self.classes[0];
+        first.flops_per_query()
+            + (self.classes.len() - 1) * first.rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    /// Three Gaussian blobs in R^4; class c's kernel params hold its own
+    /// training points with weight 1.
+    fn blob_params(seed: u64) -> (Vec<KernelParams>, Vec<(Vec<f32>, usize)>) {
+        let mut rng = SplitMix64::new(seed);
+        let d = 4usize;
+        let centers = [
+            vec![3.0f32, 0.0, 0.0, 0.0],
+            vec![0.0f32, 3.0, 0.0, 0.0],
+            vec![0.0f32, 0.0, 3.0, 0.0],
+        ];
+        let mut a = vec![0.0f32; d * d];
+        for i in 0..d {
+            a[i * d + i] = 1.0;
+        }
+        let mut per_class = Vec::new();
+        let mut test = Vec::new();
+        for (c, center) in centers.iter().enumerate() {
+            let m = 40;
+            let mut x = Vec::new();
+            for _ in 0..m {
+                for j in 0..d {
+                    x.push(center[j] + 0.6 * rng.next_gaussian() as f32);
+                }
+            }
+            for _ in 0..20 {
+                let pt: Vec<f32> = (0..d)
+                    .map(|j| center[j] + 0.6 * rng.next_gaussian() as f32)
+                    .collect();
+                test.push((pt, c));
+            }
+            per_class.push(KernelParams {
+                d,
+                p: d,
+                m,
+                a: a.clone(),
+                x,
+                alpha: vec![1.0; m],
+                width: 2.0,
+                lsh_seed: 0xAB,
+                k_per_row: 1,
+                default_rows: 200,
+                default_cols: 16,
+            });
+        }
+        (per_class, test)
+    }
+
+    #[test]
+    fn classifies_blobs() {
+        let (per_class, test) = blob_params(3);
+        let ms =
+            MultiSketch::build(&per_class, &SketchConfig::default()).unwrap();
+        let mut s = QueryScratch::default();
+        let correct = test
+            .iter()
+            .filter(|(pt, c)| ms.predict(pt, &mut s) == *c)
+            .count();
+        let acc = correct as f64 / test.len() as f64;
+        assert!(acc > 0.9, "multiclass acc {acc}");
+    }
+
+    #[test]
+    fn scores_match_individual_sketches() {
+        let (per_class, test) = blob_params(5);
+        let cfg = SketchConfig::default();
+        let ms = MultiSketch::build(&per_class, &cfg).unwrap();
+        let singles: Vec<RaceSketch> =
+            per_class.iter().map(|kp| RaceSketch::build(kp, &cfg)).collect();
+        let mut s = QueryScratch::default();
+        let mut s2 = QueryScratch::default();
+        let mut scores = Vec::new();
+        for (pt, _) in test.iter().take(10) {
+            ms.scores_with(pt, &mut s, &mut scores);
+            for (c, single) in singles.iter().enumerate() {
+                let want = single.query_with(pt, &mut s2);
+                assert!(
+                    (scores[c] - want).abs() < 1e-5,
+                    "class {c}: {} vs {want}",
+                    scores[c]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_mismatched_hash_config() {
+        let (mut per_class, _) = blob_params(7);
+        per_class[1].lsh_seed = 0xCD;
+        assert!(
+            MultiSketch::build(&per_class, &SketchConfig::default()).is_err()
+        );
+    }
+
+    #[test]
+    fn shared_hashing_amortizes_flops() {
+        let (per_class, _) = blob_params(9);
+        let ms =
+            MultiSketch::build(&per_class, &SketchConfig::default()).unwrap();
+        let single = &ms.classes[0];
+        // 3 classes cost far less than 3 independent sketch queries.
+        assert!(
+            ms.flops_per_query()
+                < 2 * single.flops_per_query()
+        );
+    }
+}

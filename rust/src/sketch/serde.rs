@@ -1,0 +1,203 @@
+//! RSSK binary serialization for built sketches — lets an edge device load
+//! a ready sketch without the kernel params.  Layout (little-endian):
+//!
+//! ```text
+//! magic b"RSSK" | u32 version
+//! u32 rows | u32 cols | u32 k_per_row | u32 groups
+//! u8 use_mom | u8 debias | u16 pad
+//! u32 d | u32 p | f32 width | u64 lsh_seed | f32 alpha_sum
+//! f32 A[d*p] | f32 counters[rows*cols]
+//! ```
+
+use super::RaceSketch;
+use crate::lsh::SparseL2Lsh;
+use anyhow::{bail, Context, Result};
+use std::io::Read;
+use std::path::Path;
+
+impl RaceSketch {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(
+            64 + 4 * (self.d * self.p + self.counter_count()),
+        );
+        out.extend_from_slice(b"RSSK");
+        out.extend_from_slice(&1u32.to_le_bytes());
+        for v in [
+            self.rows as u32,
+            self.cols as u32,
+            self.k_per_row,
+            self.groups as u32,
+        ] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.push(self.use_mom as u8);
+        out.push(self.debias as u8);
+        out.extend_from_slice(&[0u8; 2]);
+        out.extend_from_slice(&(self.d as u32).to_le_bytes());
+        out.extend_from_slice(&(self.p as u32).to_le_bytes());
+        out.extend_from_slice(&self.width.to_le_bytes());
+        out.extend_from_slice(&self.lsh_seed.to_le_bytes());
+        out.extend_from_slice(&self.alpha_sum.to_le_bytes());
+        for v in self.a.iter().chain(self.counters()) {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_bytes())
+            .with_context(|| format!("write {:?}", path.as_ref()))
+    }
+
+    pub fn from_bytes(buf: &[u8]) -> Result<Self> {
+        if buf.len() < 8 || &buf[..4] != b"RSSK" {
+            bail!("not an RSSK file");
+        }
+        struct Cur<'a> {
+            b: &'a [u8],
+            i: usize,
+        }
+        impl<'a> Cur<'a> {
+            fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+                if self.i + n > self.b.len() {
+                    bail!("truncated RSSK");
+                }
+                let s = &self.b[self.i..self.i + n];
+                self.i += n;
+                Ok(s)
+            }
+            fn u32(&mut self) -> Result<u32> {
+                Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+            }
+            fn f32(&mut self) -> Result<f32> {
+                Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+            }
+            fn u64(&mut self) -> Result<u64> {
+                Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+            }
+        }
+        let mut c = Cur { b: buf, i: 4 };
+        let version = c.u32()?;
+        if version != 1 {
+            bail!("unsupported RSSK version {version}");
+        }
+        let rows = c.u32()? as usize;
+        let cols = c.u32()? as usize;
+        let k_per_row = c.u32()?;
+        let groups = c.u32()? as usize;
+        let flags = c.take(4)?;
+        let use_mom = flags[0] != 0;
+        let debias = flags[1] != 0;
+        let d = c.u32()? as usize;
+        let p = c.u32()? as usize;
+        let width = c.f32()?;
+        let lsh_seed = c.u64()?;
+        let alpha_sum = c.f32()?;
+        let i = c.i;
+        let need = (d * p + rows * cols) * 4;
+        if buf.len() != i + need {
+            bail!("RSSK size mismatch: have {}, want {}", buf.len(), i + need);
+        }
+        let mut floats = buf[i..]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()));
+        let a: Vec<f32> = floats.by_ref().take(d * p).collect();
+        let data: Vec<f32> = floats.collect();
+        let lsh = SparseL2Lsh::generate(
+            lsh_seed,
+            p,
+            rows * k_per_row as usize,
+            width,
+        );
+        Ok(Self {
+            data,
+            rows,
+            cols,
+            k_per_row,
+            groups,
+            use_mom,
+            debias,
+            alpha_sum,
+            a,
+            d,
+            p,
+            lsh,
+            lsh_seed,
+            width,
+        })
+    }
+
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let mut buf = Vec::new();
+        std::fs::File::open(path.as_ref())
+            .with_context(|| format!("open {:?}", path.as_ref()))?
+            .read_to_end(&mut buf)?;
+        Self::from_bytes(&buf)
+    }
+
+    /// Memory footprint in bytes of the serialized deployment artifact
+    /// (52-byte header + projection + counters).
+    pub fn serialized_size(&self) -> usize {
+        52 + 4 * (self.d * self.p + self.counter_count())
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{QueryScratch, RaceSketch, SketchConfig};
+    use crate::kernel::KernelParams;
+    use crate::util::rng::SplitMix64;
+
+    fn sample_sketch() -> RaceSketch {
+        let mut rng = SplitMix64::new(11);
+        let kp = KernelParams {
+            d: 6,
+            p: 3,
+            m: 25,
+            a: (0..18).map(|_| rng.next_gaussian() as f32).collect(),
+            x: (0..75).map(|_| rng.next_gaussian() as f32).collect(),
+            alpha: (0..25).map(|_| rng.next_f32()).collect(),
+            width: 2.0,
+            lsh_seed: 0xFEED,
+            k_per_row: 2,
+            default_rows: 50,
+            default_cols: 16,
+        };
+        RaceSketch::build(&kp, &SketchConfig::default())
+    }
+
+    #[test]
+    fn roundtrip_preserves_queries() {
+        let sk = sample_sketch();
+        let bytes = sk.to_bytes();
+        let sk2 = RaceSketch::from_bytes(&bytes).unwrap();
+        let mut s = QueryScratch::default();
+        let mut rng = SplitMix64::new(12);
+        for _ in 0..20 {
+            let q: Vec<f32> =
+                (0..6).map(|_| rng.next_gaussian() as f32).collect();
+            assert_eq!(sk.query_with(&q, &mut s), sk2.query_with(&q, &mut s));
+        }
+    }
+
+    #[test]
+    fn serialized_size_matches() {
+        let sk = sample_sketch();
+        assert_eq!(sk.to_bytes().len(), sk.serialized_size());
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let sk = sample_sketch();
+        let mut bytes = sk.to_bytes();
+        bytes.truncate(bytes.len() - 3);
+        assert!(RaceSketch::from_bytes(&bytes).is_err());
+        let bytes2 = {
+            let mut b = sk.to_bytes();
+            b[0] = b'Z';
+            b
+        };
+        assert!(RaceSketch::from_bytes(&bytes2).is_err());
+    }
+}

@@ -1,0 +1,98 @@
+//! Micro-benchmark harness (offline image has no criterion).
+//!
+//! `Bench::run` measures a closure with warmup + timed iterations and
+//! reports mean / p50 / p99 / throughput.  Used by all `cargo bench`
+//! targets (`harness = false`).
+
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>12} {:>12} {:>12} {:>14}",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+            format!("{:.0}/s", self.per_sec()),
+        );
+    }
+}
+
+pub fn header() {
+    println!(
+        "{:<44} {:>12} {:>12} {:>12} {:>14}",
+        "benchmark", "mean", "p50", "p99", "throughput"
+    );
+    println!("{}", "-".repeat(98));
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0}ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+/// Time `f` with automatic iteration-count calibration.
+pub fn run<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    // Warmup + calibrate: target ~0.5 s of measurement, <= 10k iters.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_nanos().max(1) as f64;
+    let iters = ((5e8 / once) as usize).clamp(10, 10_000);
+    for _ in 0..iters.min(50) {
+        f(); // warmup
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let q = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        p50_ns: q(0.5),
+        p99_ns: q(0.99),
+        min_ns: samples[0],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = run("noop-ish", || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p99_ns >= r.p50_ns);
+        assert!(r.min_ns <= r.mean_ns * 1.5);
+    }
+}

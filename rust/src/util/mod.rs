@@ -1,0 +1,10 @@
+//! Small self-contained utilities: deterministic RNG, a minimal JSON
+//! parser/emitter, special-function math, and a micro property-test
+//! harness.  The offline build image vendors no serde_json / proptest /
+//! criterion, so these live in-tree (DESIGN.md §4).
+
+pub mod bench;
+pub mod json;
+pub mod math;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,87 @@
+//! Micro property-test harness (the offline image vendors no proptest).
+//!
+//! `forall(seed, cases, gen, prop)` runs `prop` over `cases` inputs drawn
+//! from `gen`; on failure it reports the case index and seed so the run is
+//! reproducible.  Shrinking is intentionally out of scope — generators
+//! here are built to produce small cases with reasonable probability.
+
+use super::rng::SplitMix64;
+
+/// Run a property over `cases` generated inputs; panics with the seed on
+/// the first failure.
+pub fn forall<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut SplitMix64) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = SplitMix64::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed (seed={seed}, case={case}): {msg}\n\
+                 input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gens {
+    use super::SplitMix64;
+
+    pub fn usize_in(rng: &mut SplitMix64, lo: usize, hi: usize) -> usize {
+        lo + rng.next_range(hi - lo + 1)
+    }
+
+    pub fn f32_in(rng: &mut SplitMix64, lo: f32, hi: f32) -> f32 {
+        lo + rng.next_f32() * (hi - lo)
+    }
+
+    pub fn vec_f32(rng: &mut SplitMix64, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| (rng.next_gaussian() as f32) * scale).collect()
+    }
+
+    pub fn matrix_f32(
+        rng: &mut SplitMix64,
+        rows: usize,
+        cols: usize,
+        scale: f32,
+    ) -> Vec<Vec<f32>> {
+        (0..rows).map(|_| vec_f32(rng, cols, scale)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(
+            1,
+            200,
+            |rng| rng.next_range(100),
+            |&x| {
+                if x < 100 {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(2, 50, |rng| rng.next_range(10), |&x| {
+            if x < 5 {
+                Ok(())
+            } else {
+                Err(format!("{x} >= 5"))
+            }
+        });
+    }
+}

@@ -1,0 +1,221 @@
+//! Cross-language parity: replay `artifacts/fixtures/parity.json` (dumped
+//! by the python oracles) through the rust LSH / kernel / sketch stack.
+//! Hash codes and columns must match EXACTLY (bit-level contract); float
+//! quantities to tolerance.
+
+use repsketch::kernel::{row_kernel, KernelParams};
+use repsketch::lsh::{concat, LshFamily, SparseL2Lsh};
+use repsketch::sketch::{QueryScratch, RaceSketch, SketchConfig};
+use repsketch::util::json::{self, Json};
+use repsketch::util::rng::SplitMix64;
+
+fn fixture() -> Json {
+    let path = repsketch::artifacts_dir().join("fixtures/parity.json");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("run `make artifacts` first: {e}"));
+    json::parse(&text).expect("parse parity.json")
+}
+
+fn rows_of(j: &Json, key: &str) -> Vec<Vec<f32>> {
+    j.get(key)
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|r| r.as_f32_flat())
+        .collect()
+}
+
+#[test]
+fn splitmix64_matches_python() {
+    let fx = fixture();
+    let seed = fx.get("seed").unwrap().as_u64().unwrap();
+    let want: Vec<u64> = fx
+        .get("splitmix_first8")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_u64().unwrap())
+        .collect();
+    let mut rng = SplitMix64::new(seed);
+    let got: Vec<u64> = (0..8).map(|_| rng.next_u64()).collect();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn hash_codes_match_python_exactly() {
+    let fx = fixture();
+    let seed = fx.get("seed").unwrap().as_u64().unwrap();
+    let dim = fx.get("dim").unwrap().as_usize().unwrap();
+    let n_hashes = fx.get("n_hashes").unwrap().as_usize().unwrap();
+    let width = fx.get("width").unwrap().as_f64().unwrap() as f32;
+    let lsh = SparseL2Lsh::generate(seed, dim, n_hashes, width);
+    let xs = rows_of(&fx, "x");
+    let want: Vec<Vec<i64>> = fx
+        .get("codes")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|r| r.as_i64_flat())
+        .collect();
+    for (x, wrow) in xs.iter().zip(&want) {
+        let got = lsh.hash(x);
+        let got64: Vec<i64> = got.iter().map(|&c| c as i64).collect();
+        assert_eq!(&got64, wrow, "codes diverge for {x:?}");
+    }
+}
+
+#[test]
+fn rehash_columns_match_python_exactly() {
+    let fx = fixture();
+    let k = fx.get("k_per_row").unwrap().as_usize().unwrap();
+    let n_cols = fx.get("n_cols").unwrap().as_usize().unwrap();
+    let codes: Vec<Vec<i64>> = fx
+        .get("codes")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|r| r.as_i64_flat())
+        .collect();
+    let want: Vec<Vec<i64>> = fx
+        .get("cols")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|r| r.as_i64_flat())
+        .collect();
+    for (crow, wrow) in codes.iter().zip(&want) {
+        let c32: Vec<i32> = crow.iter().map(|&c| c as i32).collect();
+        let mut out = vec![0u32; c32.len() / k];
+        concat::rehash_all(&c32, k, n_cols as u32, &mut out);
+        let got: Vec<i64> = out.iter().map(|&c| c as i64).collect();
+        assert_eq!(&got, wrow);
+    }
+}
+
+#[test]
+fn kde_matches_python_oracle() {
+    let fx = fixture();
+    let width = fx.get("width").unwrap().as_f64().unwrap();
+    let k = fx.get("k_per_row").unwrap().as_usize().unwrap() as u32;
+    let xs = rows_of(&fx, "x");
+    let pts = rows_of(&fx, "points");
+    let alpha = fx.get("alpha").unwrap().as_f32_flat();
+    let want = fx.get("kde").unwrap().as_f32_flat();
+    for (q, w) in xs.iter().zip(&want) {
+        let mut acc = 0.0f64;
+        for (pt, &a) in pts.iter().zip(&alpha) {
+            let d2: f32 = q.iter().zip(pt).map(|(u, v)| (u - v) * (u - v))
+                .sum();
+            acc += a as f64 * row_kernel((d2 as f64).sqrt(), width, k);
+        }
+        assert!(
+            (acc as f32 - w).abs() < 2e-4 * (1.0 + w.abs()),
+            "kde {acc} vs python {w}"
+        );
+    }
+}
+
+#[test]
+fn sketch_build_and_query_match_python() {
+    let fx = fixture();
+    let seed = fx.get("seed").unwrap().as_u64().unwrap();
+    let dim = fx.get("dim").unwrap().as_usize().unwrap();
+    let width = fx.get("width").unwrap().as_f64().unwrap() as f32;
+    let k = fx.get("k_per_row").unwrap().as_usize().unwrap() as u32;
+    let n_rows = fx.get("n_rows").unwrap().as_usize().unwrap();
+    let n_cols = fx.get("n_cols").unwrap().as_usize().unwrap();
+    let pts = rows_of(&fx, "points");
+    let alpha = fx.get("alpha").unwrap().as_f32_flat();
+
+    // identity projection: python fixture hashes raw points (d == p)
+    let mut a = vec![0.0f32; dim * dim];
+    for i in 0..dim {
+        a[i * dim + i] = 1.0;
+    }
+    let kp = KernelParams {
+        d: dim,
+        p: dim,
+        m: pts.len(),
+        a,
+        x: pts.iter().flatten().copied().collect(),
+        alpha: alpha.clone(),
+        width,
+        lsh_seed: seed,
+        k_per_row: k,
+        default_rows: n_rows,
+        default_cols: n_cols,
+    };
+    let cfg = SketchConfig {
+        rows: n_rows,
+        cols: n_cols,
+        groups: 4,
+        use_mom: true,
+        debias: false,
+    };
+    let sk = RaceSketch::build(&kp, &cfg);
+
+    // counters must match the python-built sketch exactly (same adds)
+    let want_sketch: Vec<f32> = fx.get("sketch").unwrap().as_f32_flat();
+    for (got, want) in sk.counters().iter().zip(&want_sketch) {
+        assert!((got - want).abs() < 1e-4, "counter {got} vs {want}");
+    }
+
+    // MoM queries must match the python Algorithm-2 oracle
+    let xs = rows_of(&fx, "x");
+    let want_mom = fx.get("mom_g4").unwrap().as_f32_flat();
+    let mut scratch = QueryScratch::default();
+    for (q, w) in xs.iter().zip(&want_mom) {
+        let got = sk.query_with(q, &mut scratch);
+        assert!((got - w).abs() < 1e-4, "mom {got} vs python {w}");
+    }
+}
+
+#[test]
+fn mean_query_matches_python() {
+    let fx = fixture();
+    let seed = fx.get("seed").unwrap().as_u64().unwrap();
+    let dim = fx.get("dim").unwrap().as_usize().unwrap();
+    let width = fx.get("width").unwrap().as_f64().unwrap() as f32;
+    let k = fx.get("k_per_row").unwrap().as_usize().unwrap() as u32;
+    let n_rows = fx.get("n_rows").unwrap().as_usize().unwrap();
+    let n_cols = fx.get("n_cols").unwrap().as_usize().unwrap();
+    let pts = rows_of(&fx, "points");
+    let alpha = fx.get("alpha").unwrap().as_f32_flat();
+    let mut a = vec![0.0f32; dim * dim];
+    for i in 0..dim {
+        a[i * dim + i] = 1.0;
+    }
+    let kp = KernelParams {
+        d: dim,
+        p: dim,
+        m: pts.len(),
+        a,
+        x: pts.iter().flatten().copied().collect(),
+        alpha,
+        width,
+        lsh_seed: seed,
+        k_per_row: k,
+        default_rows: n_rows,
+        default_cols: n_cols,
+    };
+    let cfg = SketchConfig {
+        rows: n_rows,
+        cols: n_cols,
+        groups: 4,
+        use_mom: false,
+        debias: false,
+    };
+    let sk = RaceSketch::build(&kp, &cfg);
+    let xs = rows_of(&fx, "x");
+    let want = fx.get("mean").unwrap().as_f32_flat();
+    let mut scratch = QueryScratch::default();
+    for (q, w) in xs.iter().zip(&want) {
+        let got = sk.query_with(q, &mut scratch);
+        assert!((got - w).abs() < 1e-4, "mean {got} vs python {w}");
+    }
+}

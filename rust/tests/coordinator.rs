@@ -1,0 +1,233 @@
+//! Coordinator integration: router + batcher + TCP server over real
+//! artifact-backed engines, including the PJRT lane (Python-free request
+//! path end to end).
+
+use repsketch::coordinator::batcher::BatcherConfig;
+use repsketch::coordinator::{
+    backend, BackendKind, Request, Response, Router, RouterConfig, Server,
+};
+use repsketch::data::Dataset;
+use repsketch::runtime::registry::DatasetBundle;
+use repsketch::runtime::Runtime;
+use std::io::{BufRead, BufReader, Write};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn artifacts_root() -> std::path::PathBuf {
+    let root = repsketch::artifacts_dir();
+    assert!(
+        root.join(".stamp").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    root
+}
+
+fn build_router(with_pjrt: bool) -> (Router, Dataset) {
+    let root = artifacts_root();
+    let bundle = DatasetBundle::load(&root, "skin").unwrap();
+    let meta = bundle.meta.clone();
+    let ds = Dataset::load_artifact(&root, "skin", "test", meta.dim,
+                                    meta.task).unwrap();
+    let mut router = Router::new();
+    let cfg = RouterConfig {
+        batcher: BatcherConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 10_000,
+        },
+    };
+    let sketch = bundle.sketch.clone();
+    router.add_lane("skin", BackendKind::Sketch, move || {
+        Ok(Box::new(backend::SketchEngine::new(sketch)) as _)
+    }, &cfg);
+    let mlp = bundle.mlp.clone();
+    router.add_lane("skin", BackendKind::NnRust, move || {
+        Ok(Box::new(backend::MlpEngine::new(mlp)) as _)
+    }, &cfg);
+    if with_pjrt {
+        let dir = root.join("skin");
+        let (batch, dim) = (meta.aot_batch, meta.dim);
+        router.add_lane("skin", BackendKind::NnPjrt, move || {
+            let rt = Runtime::cpu()?;
+            Ok(Box::new(backend::PjrtEngine {
+                exe: rt.load_hlo(dir.join("nn.hlo.txt"), batch, dim)?,
+            }) as _)
+        }, &cfg);
+    }
+    (router, ds)
+}
+
+#[test]
+fn router_serves_sketch_and_nn_consistently() {
+    let (router, ds) = build_router(false);
+    let root = artifacts_root();
+    let bundle = DatasetBundle::load(&root, "skin").unwrap();
+    let mut s = repsketch::sketch::QueryScratch::default();
+    let mut ns = repsketch::nn::MlpScratch::default();
+    for i in 0..40 {
+        let row = ds.row(i).to_vec();
+        let rs = router.call(Request {
+            id: i as u64,
+            model: "skin".into(),
+            backend: BackendKind::Sketch,
+            features: row.clone(),
+        });
+        let direct = bundle.sketch.query_with(&row, &mut s);
+        assert_eq!(rs.result.unwrap(), direct, "row {i}");
+        let nn = router.call(Request {
+            id: 1000 + i as u64,
+            model: "skin".into(),
+            backend: BackendKind::NnRust,
+            features: row.clone(),
+        });
+        let direct_nn = bundle.mlp.forward_with(&row, &mut ns);
+        assert_eq!(nn.result.unwrap(), direct_nn, "row {i}");
+    }
+}
+
+#[test]
+fn pjrt_lane_serves_from_request_path() {
+    let (router, ds) = build_router(true);
+    // Concurrent clients against the PJRT lane — batches form and every
+    // request gets the XLA-computed answer.
+    let router = Arc::new(router);
+    let rows: Vec<Vec<f32>> = (0..64).map(|i| ds.row(i).to_vec()).collect();
+    let mut handles = Vec::new();
+    for (t, chunk) in rows.chunks(16).enumerate() {
+        let router = router.clone();
+        let chunk = chunk.to_vec();
+        handles.push(std::thread::spawn(move || {
+            chunk
+                .iter()
+                .enumerate()
+                .map(|(i, row)| {
+                    let resp = router.call(Request {
+                        id: (t * 100 + i) as u64,
+                        model: "skin".into(),
+                        backend: BackendKind::NnPjrt,
+                        features: row.clone(),
+                    });
+                    resp.result.expect("pjrt answer")
+                })
+                .collect::<Vec<f32>>()
+        }));
+    }
+    let root = artifacts_root();
+    let bundle = DatasetBundle::load(&root, "skin").unwrap();
+    let mut ns = repsketch::nn::MlpScratch::default();
+    for (t, h) in handles.into_iter().enumerate() {
+        let got = h.join().unwrap();
+        for (i, v) in got.iter().enumerate() {
+            let want =
+                bundle.mlp.forward_with(&rows[t * 16 + i], &mut ns);
+            assert!(
+                (v - want).abs() < 1e-3 * (1.0 + want.abs()),
+                "pjrt {v} vs rust {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn tcp_server_round_trip() {
+    let (router, ds) = build_router(false);
+    let router = Arc::new(router);
+    let server = Server::bind(router.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let stop = server.stop_handle();
+    let handle = std::thread::spawn(move || server.serve());
+
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    let n = 20usize;
+    for i in 0..n {
+        let req = Request {
+            id: i as u64 + 1,
+            model: "skin".into(),
+            backend: BackendKind::Sketch,
+            features: ds.row(i).to_vec(),
+        };
+        let mut line = req.to_line();
+        line.push('\n');
+        stream.write_all(line.as_bytes()).unwrap();
+    }
+    // also a malformed line and an unknown model
+    stream.write_all(b"garbage\n").unwrap();
+    stream
+        .write_all(b"{\"id\":99,\"model\":\"nope\",\"x\":[1,2,3]}\n")
+        .unwrap();
+
+    let reader = BufReader::new(stream.try_clone().unwrap());
+    let mut ok = 0;
+    let mut errs = 0;
+    for line in reader.lines() {
+        let resp = Response::parse_line(&line.unwrap()).unwrap();
+        match resp.result {
+            Ok(_) => ok += 1,
+            Err(_) => errs += 1,
+        }
+        if ok + errs == n + 2 {
+            break;
+        }
+    }
+    assert_eq!(ok, n);
+    assert_eq!(errs, 2);
+    stop.store(true, std::sync::atomic::Ordering::Release);
+    drop(stream);
+    let _ = handle.join();
+}
+
+/// Engine that sleeps per batch — deterministic saturation for the
+/// backpressure test (the real sketch engine drains a 2-deep queue
+/// faster than the test can flood it).
+struct SlowEngine;
+
+impl repsketch::coordinator::Engine for SlowEngine {
+    fn dim(&self) -> usize {
+        3
+    }
+
+    fn eval_batch(&mut self, rows: &[Vec<f32>]) -> anyhow::Result<Vec<f32>> {
+        std::thread::sleep(Duration::from_millis(5));
+        Ok(rows.iter().map(|r| r.iter().sum()).collect())
+    }
+}
+
+#[test]
+fn backpressure_rejects_then_recovers() {
+    let mut router = Router::new();
+    // Tiny queue + slow engine force saturation under a submit flood.
+    let cfg = RouterConfig {
+        batcher: BatcherConfig {
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 2,
+        },
+    };
+    router.add_lane("skin", BackendKind::Sketch, move || {
+        Ok(Box::new(SlowEngine) as _)
+    }, &cfg);
+    let mk = |id| Request {
+        id,
+        model: "skin".into(),
+        backend: BackendKind::Sketch,
+        features: vec![0.1, 0.2, 0.3],
+    };
+    // Flood; some must be rejected with QueueFull.
+    let mut rejected = 0;
+    let mut receivers = Vec::new();
+    for i in 0..50 {
+        match router.submit(mk(i)) {
+            Ok(rx) => receivers.push(rx),
+            Err(_) => rejected += 1,
+        }
+    }
+    assert!(rejected > 0, "queue_cap=2 must reject under flood");
+    // Accepted requests all complete.
+    for rx in receivers {
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(resp.result.is_ok());
+    }
+    // System recovers after drain.
+    let resp = router.call(mk(999));
+    assert!(resp.result.is_ok());
+}

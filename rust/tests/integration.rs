@@ -1,0 +1,164 @@
+//! End-to-end integration over the real artifacts tree (`make artifacts`
+//! must have run).  Verifies the full AOT bridge: python/JAX(+Pallas) →
+//! HLO text → rust PJRT execution, numerics agreeing with the independent
+//! rust engines.
+
+use repsketch::data::{Dataset, Task};
+use repsketch::kernel::KernelParams;
+use repsketch::nn::{Mlp, MlpScratch};
+use repsketch::runtime::registry::DatasetBundle;
+use repsketch::runtime::Runtime;
+use repsketch::sketch::{QueryScratch, RaceSketch, SketchConfig};
+
+fn artifacts_root() -> std::path::PathBuf {
+    let root = repsketch::artifacts_dir();
+    assert!(
+        root.join(".stamp").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    root
+}
+
+/// PJRT execution of nn.hlo.txt must match the rust dense engine on the
+/// same weights (two fully independent implementations of f_N).
+#[test]
+fn pjrt_nn_matches_rust_engine() {
+    let root = artifacts_root();
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    for name in ["skin", "abalone"] {
+        let dir = root.join(name);
+        let mlp = Mlp::load(dir.join("nn_weights.bin")).unwrap();
+        let meta = repsketch::runtime::registry::DatasetMeta::load(&dir)
+            .unwrap();
+        let exe = rt
+            .load_hlo(dir.join("nn.hlo.txt"), meta.aot_batch, meta.dim)
+            .unwrap();
+        let ds = Dataset::load_artifact(&root, name, "test", meta.dim,
+                                        meta.task).unwrap();
+        let n = 64.min(ds.len());
+        let rows: Vec<&[f32]> = (0..n).map(|i| ds.row(i)).collect();
+        let mut scratch = MlpScratch::default();
+        for chunk in rows.chunks(meta.aot_batch) {
+            let pjrt_out = exe.run_batch(chunk).unwrap();
+            for (row, got) in chunk.iter().zip(&pjrt_out) {
+                let want = mlp.forward_with(row, &mut scratch);
+                assert!(
+                    (want - got).abs() < 1e-3 * (1.0 + want.abs()),
+                    "{name}: pjrt {got} vs rust {want}"
+                );
+            }
+        }
+    }
+}
+
+/// PJRT execution of kernel.hlo.txt (which lowers through the L1 Pallas
+/// KDE kernel) must match the rust exact-KDE engine.
+#[test]
+fn pjrt_kernel_matches_rust_kde() {
+    let root = artifacts_root();
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let name = "skin";
+    let dir = root.join(name);
+    let meta =
+        repsketch::runtime::registry::DatasetMeta::load(&dir).unwrap();
+    let kp = KernelParams::load(dir.join("kernel_params.bin")).unwrap();
+    let model = repsketch::kernel::KernelModel::new(kp);
+    let exe = rt
+        .load_hlo(dir.join("kernel.hlo.txt"), meta.aot_batch, meta.dim)
+        .unwrap();
+    let ds =
+        Dataset::load_artifact(&root, name, "test", meta.dim, meta.task)
+            .unwrap();
+    let rows: Vec<&[f32]> =
+        (0..meta.aot_batch).map(|i| ds.row(i)).collect();
+    let pjrt_out = exe.run_batch(&rows).unwrap();
+    for (row, got) in rows.iter().zip(&pjrt_out) {
+        let want = model.predict(row);
+        assert!(
+            (want - got).abs() < 2e-3 * (1.0 + want.abs()),
+            "pjrt {got} vs rust {want}"
+        );
+    }
+}
+
+/// The full bundle loads, and the sketch approximates the kernel model
+/// well enough to preserve test accuracy (Table-1 "RS ≈ Kernel" claim).
+#[test]
+fn sketch_preserves_kernel_accuracy() {
+    let root = artifacts_root();
+    for name in ["skin", "abalone"] {
+        let bundle = DatasetBundle::load(&root, name).unwrap();
+        let meta = &bundle.meta;
+        let ds = Dataset::load_artifact(&root, name, "test", meta.dim,
+                                        meta.task).unwrap();
+        let n = ds.len().min(1500);
+        let mut s = QueryScratch::default();
+        let kern_preds: Vec<f32> =
+            (0..n).map(|i| bundle.kernel.predict(ds.row(i))).collect();
+        let rs_preds: Vec<f32> =
+            (0..n).map(|i| bundle.sketch.query_with(ds.row(i), &mut s))
+                .collect();
+        let sub = Dataset {
+            dim: ds.dim,
+            task: ds.task,
+            x: ds.x[..n * ds.dim].to_vec(),
+            y: ds.y[..n].to_vec(),
+        };
+        let kern_score = sub.score(&kern_preds);
+        let rs_score = sub.score(&rs_preds);
+        match meta.task {
+            Task::Classification => assert!(
+                rs_score > kern_score - 0.05,
+                "{name}: RS acc {rs_score} vs kernel {kern_score}"
+            ),
+            Task::Regression => assert!(
+                rs_score < kern_score + 0.1,
+                "{name}: RS mae {rs_score} vs kernel {kern_score}"
+            ),
+        }
+    }
+}
+
+/// Sketch serialization round-trips through disk against real params.
+#[test]
+fn sketch_artifact_roundtrip() {
+    let root = artifacts_root();
+    let kp =
+        KernelParams::load(root.join("adult/kernel_params.bin")).unwrap();
+    let sk = RaceSketch::build(&kp, &SketchConfig::default());
+    let tmp = std::env::temp_dir().join("repsketch_it_sketch.bin");
+    sk.save(&tmp).unwrap();
+    let sk2 = RaceSketch::load(&tmp).unwrap();
+    std::fs::remove_file(&tmp).ok();
+    let mut s = QueryScratch::default();
+    let q = vec![0.5f32; kp.d];
+    assert_eq!(sk.query_with(&q, &mut s), sk2.query_with(&q, &mut s));
+}
+
+/// Kernel accuracy recorded at train time reproduces in rust on the same
+/// test split (closes the python↔rust evaluation loop).
+#[test]
+fn rust_eval_matches_python_train_metrics() {
+    let root = artifacts_root();
+    let bundle = DatasetBundle::load(&root, "skin").unwrap();
+    let meta = &bundle.meta;
+    let ds = Dataset::load_artifact(&root, "skin", "test", meta.dim,
+                                    meta.task).unwrap();
+    let preds: Vec<f32> =
+        ds.rows().map(|r| bundle.kernel.predict(r)).collect();
+    let acc = ds.score(&preds);
+    assert!(
+        (acc as f64 - meta.train_kernel_metric).abs() < 0.02,
+        "rust {acc} vs python {}",
+        meta.train_kernel_metric
+    );
+    let mut scratch = MlpScratch::default();
+    let nn_preds: Vec<f32> =
+        ds.rows().map(|r| bundle.mlp.forward_with(r, &mut scratch)).collect();
+    let nn_acc = ds.score(&nn_preds);
+    assert!(
+        (nn_acc as f64 - meta.train_nn_metric).abs() < 0.02,
+        "rust {nn_acc} vs python {}",
+        meta.train_nn_metric
+    );
+}
