@@ -1,0 +1,144 @@
+//! Batch-major sketch kernel throughput: `query_batch_with` vs the
+//! per-row `query_with` loop, swept over batch size B ∈ {1, 8, 32, 128,
+//! 512} on a self-contained synthetic config (no artifacts needed).
+//!
+//! Writes `BENCH_batch.json` at the repo root (machine-readable, tracked
+//! across PRs).  The acceptance bar for the batch engine is ≥2x
+//! queries/sec over the per-row loop at B ≥ 32.
+//!
+//! Run: `cargo bench --bench batch_throughput`
+
+use repsketch::kernel::KernelParams;
+use repsketch::sketch::{BatchScratch, QueryScratch, RaceSketch, SketchConfig};
+use repsketch::util::bench;
+use repsketch::util::json::{self, Json};
+use repsketch::util::rng::SplitMix64;
+use std::path::Path;
+
+/// Synthetic deployment-shaped config: small projected dim, deep sketch
+/// (L·K = 1024 hashes) — the regime where the CSC hash walk dominates.
+const D: usize = 32;
+const P: usize = 16;
+const M: usize = 256;
+const ROWS: usize = 512;
+const COLS: usize = 32;
+const K_PER_ROW: u32 = 2;
+
+fn synthetic_params(seed: u64) -> KernelParams {
+    let mut rng = SplitMix64::new(seed);
+    KernelParams {
+        d: D,
+        p: P,
+        m: M,
+        a: (0..D * P).map(|_| rng.next_gaussian() as f32 * 0.5).collect(),
+        x: (0..M * P).map(|_| rng.next_gaussian() as f32).collect(),
+        alpha: (0..M).map(|_| 0.5 + rng.next_f32()).collect(),
+        width: 2.0,
+        lsh_seed: rng.next_u64(),
+        k_per_row: K_PER_ROW,
+        default_rows: ROWS,
+        default_cols: COLS,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let kp = synthetic_params(0xBA7C);
+    let sketch = RaceSketch::build(&kp, &SketchConfig::default());
+    let mut rng = SplitMix64::new(0x5EED);
+    let max_b = 512usize;
+    let queries: Vec<f32> = (0..max_b * D)
+        .map(|_| rng.next_gaussian() as f32)
+        .collect();
+
+    // Sanity: the batched kernel must be bit-identical to the scalar
+    // path before we bother timing it.
+    {
+        let mut bs = BatchScratch::default();
+        let mut qs = QueryScratch::default();
+        let got = sketch.query_batch_with(&queries, &mut bs);
+        for bq in 0..max_b {
+            let want = sketch.query_with(&queries[bq * D..(bq + 1) * D],
+                                         &mut qs);
+            anyhow::ensure!(
+                got[bq].to_bits() == want.to_bits(),
+                "batched result diverges from scalar at query {bq}"
+            );
+        }
+    }
+
+    println!(
+        "synthetic config: d={D} p={P} M={M} L={ROWS} R={COLS} K={K_PER_ROW}"
+    );
+    bench::header();
+    let mut results = Vec::new();
+    let mut meta: Vec<(String, Json)> = Vec::new();
+    let mut min_speedup_32plus = f64::INFINITY;
+    for &b in &[1usize, 8, 32, 128, 512] {
+        let flat = &queries[..b * D];
+
+        let mut qs = QueryScratch::default();
+        let scalar = bench::run(&format!("B={b:<4} per-row loop"), || {
+            for bq in 0..b {
+                std::hint::black_box(
+                    sketch.query_with(&flat[bq * D..(bq + 1) * D], &mut qs),
+                );
+            }
+        });
+        scalar.print();
+
+        let mut bs = BatchScratch::default();
+        let batched = bench::run(&format!("B={b:<4} query_batch_with"), || {
+            std::hint::black_box(sketch.query_batch_with(flat, &mut bs));
+        });
+        batched.print();
+
+        let scalar_qps = b as f64 * scalar.per_sec();
+        let batch_qps = b as f64 * batched.per_sec();
+        let speedup = batch_qps / scalar_qps;
+        println!(
+            "  -> B={b}: scalar {scalar_qps:.0} q/s, batched \
+             {batch_qps:.0} q/s, speedup {speedup:.2}x\n"
+        );
+        if b >= 32 {
+            min_speedup_32plus = min_speedup_32plus.min(speedup);
+        }
+        meta.push((
+            format!("b{b}"),
+            json::obj(vec![
+                ("batch", Json::from_u64(b as u64)),
+                ("scalar_qps", Json::num(scalar_qps)),
+                ("batch_qps", Json::num(batch_qps)),
+                ("speedup", Json::num(speedup)),
+            ]),
+        ));
+        results.push(scalar);
+        results.push(batched);
+    }
+
+    let repo_root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent")
+        .to_path_buf();
+    let mut meta_refs: Vec<(&str, Json)> = vec![
+        (
+            "config",
+            json::obj(vec![
+                ("d", Json::from_u64(D as u64)),
+                ("p", Json::from_u64(P as u64)),
+                ("m", Json::from_u64(M as u64)),
+                ("rows", Json::from_u64(ROWS as u64)),
+                ("cols", Json::from_u64(COLS as u64)),
+                ("k_per_row", Json::from_u64(K_PER_ROW as u64)),
+            ]),
+        ),
+        ("min_speedup_b32plus", Json::num(min_speedup_32plus)),
+    ];
+    for (k, v) in &meta {
+        meta_refs.push((k.as_str(), v.clone()));
+    }
+    let out = repo_root.join("BENCH_batch.json");
+    bench::write_json(&out, "batch_throughput", meta_refs, &results)?;
+    println!("json -> {}", out.display());
+    println!("min speedup at B>=32: {min_speedup_32plus:.2}x");
+    Ok(())
+}

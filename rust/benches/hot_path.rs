@@ -3,90 +3,183 @@
 //! dataset.  This is the paper's computation-cost claim measured in
 //! wall-clock rather than FLOPs.
 //!
+//! Writes `BENCH_hot_path.json` at the repo root so the perf trajectory
+//! is tracked across PRs.  When the artifacts tree is missing (`make
+//! artifacts` not run), falls back to a self-contained synthetic config
+//! so the JSON is still produced.
+//!
 //! Run: `cargo bench --bench hot_path [dataset]`
 
 use repsketch::data::Dataset;
+use repsketch::kernel::{KernelModel, KernelParams};
 use repsketch::nn::{MlpScratch, SparseMlp};
 use repsketch::runtime::registry::DatasetBundle;
-use repsketch::sketch::QueryScratch;
-use repsketch::util::bench;
+use repsketch::sketch::{BatchScratch, QueryScratch, RaceSketch, SketchConfig};
+use repsketch::util::bench::{self, BenchResult};
+use repsketch::util::json::Json;
+use repsketch::util::rng::SplitMix64;
+use std::path::Path;
+
+fn bench_sketch(
+    name: &str,
+    sketch: &RaceSketch,
+    rows: &[Vec<f32>],
+    results: &mut Vec<BenchResult>,
+) {
+    // scalar query
+    let mut qs = QueryScratch::default();
+    let mut i = 0usize;
+    let r = bench::run(&format!("{name}/rs_query (L={})", sketch.rows), || {
+        let row = &rows[i % rows.len()];
+        std::hint::black_box(sketch.query_with(row, &mut qs));
+        i += 1;
+    });
+    r.print();
+    results.push(r);
+
+    // batched query at B=32 (the default coordinator batch size); one
+    // invocation serves 32 queries.
+    let b = 32usize.min(rows.len());
+    let flat: Vec<f32> =
+        rows.iter().take(b).flat_map(|r| r.iter().copied()).collect();
+    let mut bs = BatchScratch::default();
+    let r = bench::run(&format!("{name}/rs_query_batch (B={b})"), || {
+        std::hint::black_box(sketch.query_batch_with(&flat, &mut bs));
+    });
+    r.print();
+    results.push(r);
+}
+
+fn synthetic_fallback(results: &mut Vec<BenchResult>) {
+    let mut rng = SplitMix64::new(0x407);
+    let (d, p, m) = (32usize, 16usize, 256usize);
+    let kp = KernelParams {
+        d,
+        p,
+        m,
+        a: (0..d * p).map(|_| rng.next_gaussian() as f32 * 0.5).collect(),
+        x: (0..m * p).map(|_| rng.next_gaussian() as f32).collect(),
+        alpha: (0..m).map(|_| 0.5 + rng.next_f32()).collect(),
+        width: 2.0,
+        lsh_seed: rng.next_u64(),
+        k_per_row: 2,
+        default_rows: 512,
+        default_cols: 64,
+    };
+    let sketch = RaceSketch::build(&kp, &SketchConfig::default());
+    let rows: Vec<Vec<f32>> = (0..256)
+        .map(|_| (0..d).map(|_| rng.next_gaussian() as f32).collect())
+        .collect();
+    bench_sketch("synthetic", &sketch, &rows, results);
+
+    let kern = KernelModel::new(kp);
+    let mut l = 0usize;
+    let r = bench::run(&format!("synthetic/kernel_exact (M={m})"), || {
+        let row = &rows[l % rows.len()];
+        std::hint::black_box(kern.predict(row));
+        l += 1;
+    });
+    r.print();
+    results.push(r);
+}
 
 fn main() -> anyhow::Result<()> {
     let filter = std::env::args().nth(1);
     let root = repsketch::artifacts_dir();
-    anyhow::ensure!(root.join(".stamp").exists(),
-                    "run `make artifacts` first");
     bench::header();
-    for name in repsketch::experiments::DATASETS {
-        if let Some(f) = &filter {
-            if f != name {
-                continue;
+    let mut results = Vec::new();
+    let mut source = "artifacts";
+    if root.join(".stamp").exists() {
+        for name in repsketch::experiments::DATASETS {
+            if let Some(f) = &filter {
+                if f != name {
+                    continue;
+                }
             }
-        }
-        let bundle = DatasetBundle::load(&root, name)?;
-        let meta = &bundle.meta;
-        let ds = Dataset::load_artifact(&root, name, "test", meta.dim,
-                                        meta.task)?;
-        let rows: Vec<Vec<f32>> =
-            (0..256.min(ds.len())).map(|i| ds.row(i).to_vec()).collect();
+            let bundle = DatasetBundle::load(&root, name)?;
+            let meta = &bundle.meta;
+            let ds = Dataset::load_artifact(&root, name, "test", meta.dim,
+                                            meta.task)?;
+            let rows: Vec<Vec<f32>> =
+                (0..256.min(ds.len())).map(|i| ds.row(i).to_vec()).collect();
 
-        // full RS query
-        let mut qs = QueryScratch::default();
-        let sketch = &bundle.sketch;
-        let mut i = 0usize;
-        bench::run(&format!("{name}/rs_query (L={})", sketch.rows), || {
-            let r = &rows[i % rows.len()];
-            std::hint::black_box(sketch.query_with(r, &mut qs));
-            i += 1;
-        })
-        .print();
+            // full RS query: scalar + batched
+            bench_sketch(name, &bundle.sketch, &rows, &mut results);
 
-        // NN dense forward
-        let mut ms = MlpScratch::default();
-        let mlp = &bundle.mlp;
-        let mut j = 0usize;
-        bench::run(
-            &format!("{name}/nn_forward ({} params)", mlp.param_count()),
-            || {
-                let r = &rows[j % rows.len()];
-                std::hint::black_box(mlp.forward_with(r, &mut ms));
-                j += 1;
-            },
-        )
-        .print();
-
-        // Pruned sparse forward at 16x (where available)
-        let pruned_path = root.join(name).join("pruned_mt_r16.bin");
-        if pruned_path.exists() {
-            let sparse = SparseMlp::from_dense(
-                &repsketch::nn::Mlp::load(&pruned_path)?,
-            );
-            let mut ss = MlpScratch::default();
-            let mut k = 0usize;
-            bench::run(
-                &format!("{name}/pruned16_forward ({} nnz)", sparse.nnz()),
+            // NN dense forward
+            let mut ms = MlpScratch::default();
+            let mlp = &bundle.mlp;
+            let mut j = 0usize;
+            let r = bench::run(
+                &format!("{name}/nn_forward ({} params)", mlp.param_count()),
                 || {
-                    let r = &rows[k % rows.len()];
-                    std::hint::black_box(sparse.forward_with(r, &mut ss));
-                    k += 1;
+                    let row = &rows[j % rows.len()];
+                    std::hint::black_box(mlp.forward_with(row, &mut ms));
+                    j += 1;
                 },
-            )
-            .print();
-        }
+            );
+            r.print();
+            results.push(r);
 
-        // exact kernel model
-        let kern = &bundle.kernel;
-        let mut l = 0usize;
-        bench::run(
-            &format!("{name}/kernel_exact (M={})", kern.params.m),
-            || {
-                let r = &rows[l % rows.len()];
-                std::hint::black_box(kern.predict(r));
-                l += 1;
-            },
-        )
-        .print();
-        println!();
+            // Pruned sparse forward at 16x (where available)
+            let pruned_path = root.join(name).join("pruned_mt_r16.bin");
+            if pruned_path.exists() {
+                let sparse = SparseMlp::from_dense(
+                    &repsketch::nn::Mlp::load(&pruned_path)?,
+                );
+                let mut ss = MlpScratch::default();
+                let mut k = 0usize;
+                let r = bench::run(
+                    &format!(
+                        "{name}/pruned16_forward ({} nnz)",
+                        sparse.nnz()
+                    ),
+                    || {
+                        let row = &rows[k % rows.len()];
+                        std::hint::black_box(
+                            sparse.forward_with(row, &mut ss),
+                        );
+                        k += 1;
+                    },
+                );
+                r.print();
+                results.push(r);
+            }
+
+            // exact kernel model
+            let kern = &bundle.kernel;
+            let mut l = 0usize;
+            let r = bench::run(
+                &format!("{name}/kernel_exact (M={})", kern.params.m),
+                || {
+                    let row = &rows[l % rows.len()];
+                    std::hint::black_box(kern.predict(row));
+                    l += 1;
+                },
+            );
+            r.print();
+            results.push(r);
+            println!();
+        }
+    } else {
+        eprintln!(
+            "artifacts missing (run `make artifacts`) — benching the \
+             synthetic hot-path config instead"
+        );
+        source = "synthetic";
+        synthetic_fallback(&mut results);
     }
+
+    let repo_root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent");
+    let out = repo_root.join("BENCH_hot_path.json");
+    bench::write_json(
+        &out,
+        "hot_path",
+        vec![("source", Json::Str(source.to_string()))],
+        &results,
+    )?;
+    println!("json -> {}", out.display());
     Ok(())
 }

@@ -10,11 +10,19 @@
 //! | `kernel`  | rust exact weighted KDE        | Kernel       |
 //! | `nn-pjrt` | PJRT executable of nn.hlo.txt  | NN (XLA)     |
 //! | `kernel-pjrt` | PJRT of kernel.hlo.txt (L1 Pallas) | Kernel (XLA) |
+//!
+//! A drained `DynamicBatcher` batch executes as ONE engine call.  The
+//! sketch engine forwards it to the batch-major kernel
+//! (`RaceSketch::query_batch_with` — one CSC hash walk serving the whole
+//! batch), and both the sketch and exact-kernel engines split large
+//! batches across cores with a chunked `std::thread::scope` fan-out.
+//! Results are bit-identical to the per-row scalar path regardless of
+//! batch size or worker count, so batching is purely a throughput knob.
 
 use crate::kernel::KernelModel;
 use crate::nn::{Mlp, MlpScratch};
 use crate::runtime::Executable;
-use crate::sketch::{QueryScratch, RaceSketch};
+use crate::sketch::{BatchScratch, RaceSketch};
 
 /// Which backend variant a request targets.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -67,15 +75,31 @@ pub trait Engine {
     fn eval_batch(&mut self, rows: &[Vec<f32>]) -> anyhow::Result<Vec<f32>>;
 }
 
-/// RS hot path.
+/// Fan a batch out across cores only when it is at least this large
+/// (below this, one batched kernel call on the lane thread wins).
+const PAR_MIN_BATCH: usize = 64;
+/// Minimum rows per worker thread (spawn overhead floor).
+const PAR_MIN_CHUNK: usize = 16;
+
+/// Worker-thread count for a batch of `n` rows: enough cores to keep
+/// every worker above `PAR_MIN_CHUNK` rows, never more than the machine.
+fn worker_count(n: usize) -> usize {
+    let cores = std::thread::available_parallelism()
+        .map(|c| c.get())
+        .unwrap_or(1);
+    cores.min(n / PAR_MIN_CHUNK).max(1)
+}
+
+/// RS hot path: batch-major sketch kernel with chunked parallel fan-out.
 pub struct SketchEngine {
     pub sketch: RaceSketch,
-    scratch: QueryScratch,
+    flat: Vec<f32>,
+    scratch: BatchScratch,
 }
 
 impl SketchEngine {
     pub fn new(sketch: RaceSketch) -> Self {
-        Self { sketch, scratch: QueryScratch::default() }
+        Self { sketch, flat: Vec::new(), scratch: BatchScratch::default() }
     }
 }
 
@@ -85,10 +109,50 @@ impl Engine for SketchEngine {
     }
 
     fn eval_batch(&mut self, rows: &[Vec<f32>]) -> anyhow::Result<Vec<f32>> {
-        Ok(rows
-            .iter()
-            .map(|r| self.sketch.query_with(r, &mut self.scratch))
-            .collect())
+        if rows.is_empty() {
+            return Ok(Vec::new());
+        }
+        let d = self.sketch.d;
+        self.flat.clear();
+        self.flat.reserve(rows.len() * d);
+        for (i, r) in rows.iter().enumerate() {
+            anyhow::ensure!(
+                r.len() == d,
+                "row {i} has dim {}, want {d}",
+                r.len()
+            );
+            self.flat.extend_from_slice(r);
+        }
+        let n = rows.len();
+        let workers = worker_count(n);
+        if n < PAR_MIN_BATCH || workers < 2 {
+            // One batched kernel call on the lane thread, scratch reused.
+            return Ok(self
+                .sketch
+                .query_batch_with(&self.flat, &mut self.scratch)
+                .to_vec());
+        }
+        // Chunked fan-out: each worker runs the batched kernel on a
+        // contiguous row range.  Per-query results are independent and
+        // the batched path is bit-identical to scalar, so the split
+        // cannot change answers.
+        let chunk_rows = (n + workers - 1) / workers;
+        let mut out = vec![0.0f32; n];
+        let sketch = &self.sketch;
+        let flat = &self.flat;
+        std::thread::scope(|scope| {
+            for (qchunk, ochunk) in flat
+                .chunks(chunk_rows * d)
+                .zip(out.chunks_mut(chunk_rows))
+            {
+                scope.spawn(move || {
+                    let mut scratch = BatchScratch::default();
+                    let res = sketch.query_batch_with(qchunk, &mut scratch);
+                    ochunk.copy_from_slice(res);
+                });
+            }
+        });
+        Ok(out)
     }
 }
 
@@ -117,7 +181,8 @@ impl Engine for MlpEngine {
     }
 }
 
-/// Rust exact weighted KDE.
+/// Rust exact weighted KDE (O(M·p) per row — the heaviest rust engine,
+/// so large batches fan out across cores).
 pub struct KernelEngine {
     pub model: KernelModel,
 }
@@ -128,7 +193,26 @@ impl Engine for KernelEngine {
     }
 
     fn eval_batch(&mut self, rows: &[Vec<f32>]) -> anyhow::Result<Vec<f32>> {
-        Ok(rows.iter().map(|r| self.model.predict(r)).collect())
+        let n = rows.len();
+        let workers = worker_count(n);
+        if n < PAR_MIN_BATCH || workers < 2 {
+            return Ok(self.model.predict_batch(rows));
+        }
+        let chunk_rows = (n + workers - 1) / workers;
+        let mut out = vec![0.0f32; n];
+        let model = &self.model;
+        std::thread::scope(|scope| {
+            for (rchunk, ochunk) in
+                rows.chunks(chunk_rows).zip(out.chunks_mut(chunk_rows))
+            {
+                scope.spawn(move || {
+                    for (o, r) in ochunk.iter_mut().zip(rchunk) {
+                        *o = model.predict(r);
+                    }
+                });
+            }
+        });
+        Ok(out)
     }
 }
 
@@ -156,6 +240,9 @@ impl Engine for PjrtEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernel::KernelParams;
+    use crate::sketch::{QueryScratch, SketchConfig};
+    use crate::util::rng::SplitMix64;
 
     #[test]
     fn backend_kind_roundtrip() {
@@ -163,5 +250,80 @@ mod tests {
             assert_eq!(BackendKind::parse(k.name()), Some(k));
         }
         assert_eq!(BackendKind::parse("bogus"), None);
+    }
+
+    fn random_kp(seed: u64, d: usize, p: usize, m: usize) -> KernelParams {
+        let mut rng = SplitMix64::new(seed);
+        KernelParams {
+            d,
+            p,
+            m,
+            a: (0..d * p).map(|_| rng.next_gaussian() as f32 * 0.5).collect(),
+            x: (0..m * p).map(|_| rng.next_gaussian() as f32).collect(),
+            alpha: (0..m).map(|_| 0.5 + rng.next_f32()).collect(),
+            width: 2.0,
+            lsh_seed: rng.next_u64(),
+            k_per_row: 2,
+            default_rows: 64,
+            default_cols: 16,
+        }
+    }
+
+    fn random_rows(seed: u64, n: usize, d: usize) -> Vec<Vec<f32>> {
+        let mut rng = SplitMix64::new(seed);
+        (0..n)
+            .map(|_| (0..d).map(|_| rng.next_gaussian() as f32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn sketch_engine_matches_scalar_for_all_batch_shapes() {
+        // Covers the single-call path (< PAR_MIN_BATCH), the parallel
+        // fan-out path, and ragged final chunks in both.
+        let kp = random_kp(3, 7, 4, 30);
+        let sketch = crate::sketch::RaceSketch::build(
+            &kp,
+            &SketchConfig::default(),
+        );
+        let mut engine = SketchEngine::new(sketch.clone());
+        let mut s = QueryScratch::default();
+        for &n in &[0usize, 1, 7, 63, 64, 67, 130, 257] {
+            let rows = random_rows(100 + n as u64, n, 7);
+            let got = engine.eval_batch(&rows).unwrap();
+            assert_eq!(got.len(), n);
+            for (i, r) in rows.iter().enumerate() {
+                let want = sketch.query_with(r, &mut s);
+                assert_eq!(got[i].to_bits(), want.to_bits(), "n={n} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn sketch_engine_rejects_bad_dim_rows() {
+        let kp = random_kp(4, 5, 5, 10);
+        let mut engine = SketchEngine::new(crate::sketch::RaceSketch::build(
+            &kp,
+            &SketchConfig::default(),
+        ));
+        assert!(engine.eval_batch(&[vec![0.0; 4]]).is_err());
+    }
+
+    #[test]
+    fn kernel_engine_matches_scalar_across_par_threshold() {
+        let kp = random_kp(5, 6, 3, 20);
+        let model = KernelModel::new(kp);
+        let reference = KernelModel::new(model.params.clone());
+        let mut engine = KernelEngine { model };
+        for &n in &[1usize, 65, 130] {
+            let rows = random_rows(200 + n as u64, n, 6);
+            let got = engine.eval_batch(&rows).unwrap();
+            for (i, r) in rows.iter().enumerate() {
+                assert_eq!(
+                    got[i].to_bits(),
+                    reference.predict(r).to_bits(),
+                    "n={n} row {i}"
+                );
+            }
+        }
     }
 }

@@ -18,6 +18,14 @@
 //! ```
 //!
 //! Python is never on this path; the PJRT backends execute AOT artifacts.
+//!
+//! Batching is end-to-end: a drained `DynamicBatcher` batch reaches the
+//! engine as ONE `eval_batch` call, and the sketch/kernel engines execute
+//! it through the batch-major kernels (`RaceSketch::query_batch_with` —
+//! a single CSC hash walk serving the whole batch — with a chunked
+//! `std::thread::scope` fan-out across cores for large batches).  The
+//! batched path is bit-identical to the scalar path, so batch size and
+//! worker count are pure throughput knobs, never correctness knobs.
 
 pub mod backend;
 pub mod batcher;

@@ -48,6 +48,43 @@ pub fn rehash_all(codes: &[i32], k_per_row: usize, n_cols: u32, out: &mut [u32])
     }
 }
 
+/// Batch-major variant of [`rehash_all`]: codes arrive in the transposed
+/// layout of the batched hash kernel, `codes[(l*k_per_row + k)*batch + b]`,
+/// and per-row columns leave as `out[l*batch + b]`.  The FNV mix is the
+/// same wrapping u32 arithmetic as [`rehash_row`] (and the power-of-two
+/// mask shortcut of [`rehash_all`]), so results are integer-exact matches
+/// of the scalar path for every (row, query).
+pub fn rehash_all_batch(
+    codes: &[i32],
+    k_per_row: usize,
+    n_cols: u32,
+    batch: usize,
+    out: &mut [u32],
+) {
+    if batch == 0 {
+        return;
+    }
+    debug_assert_eq!(codes.len() % (k_per_row * batch), 0);
+    let n_rows = codes.len() / (k_per_row * batch);
+    debug_assert_eq!(out.len(), n_rows * batch);
+    let pow2_mask =
+        if n_cols.is_power_of_two() { Some(n_cols - 1) } else { None };
+    for l in 0..n_rows {
+        let orow = &mut out[l * batch..(l + 1) * batch];
+        orow.fill(FNV_OFFSET ^ (l as u32).wrapping_mul(ROW_SALT));
+        for k in 0..k_per_row {
+            let crow = &codes[(l * k_per_row + k) * batch..][..batch];
+            for (o, &c) in orow.iter_mut().zip(crow) {
+                *o = (*o ^ (c as u32)).wrapping_mul(FNV_PRIME);
+            }
+        }
+        match pow2_mask {
+            Some(mask) => orow.iter_mut().for_each(|o| *o &= mask),
+            None => orow.iter_mut().for_each(|o| *o %= n_cols),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -112,6 +149,45 @@ mod tests {
                 rehash_row(l as u32, &codes[l * 3..(l + 1) * 3], 17)
             );
         }
+    }
+
+    #[test]
+    fn rehash_all_batch_matches_rehash_row() {
+        forall(
+            17,
+            60,
+            |rng| {
+                let k = 1 + rng.next_range(4);
+                let rows = 1 + rng.next_range(8);
+                let batch = 1 + rng.next_range(9);
+                let cols = 1 + rng.next_range(64) as u32;
+                let codes: Vec<i32> = (0..rows * k * batch)
+                    .map(|_| rng.next_u64() as i32)
+                    .collect();
+                (k, rows, batch, cols, codes)
+            },
+            |(k, rows, batch, cols, codes)| {
+                let (k, rows, batch, cols) = (*k, *rows, *batch, *cols);
+                let mut out = vec![0u32; rows * batch];
+                rehash_all_batch(codes, k, cols, batch, &mut out);
+                for b in 0..batch {
+                    for l in 0..rows {
+                        // de-transpose query b's codes for row l
+                        let qcodes: Vec<i32> = (0..k)
+                            .map(|ki| codes[(l * k + ki) * batch + b])
+                            .collect();
+                        let want = rehash_row(l as u32, &qcodes, cols);
+                        if out[l * batch + b] != want {
+                            return Err(format!(
+                                "row {l} query {b}: {} vs {want}",
+                                out[l * batch + b]
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

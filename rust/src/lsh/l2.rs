@@ -160,6 +160,64 @@ impl SparseL2Lsh {
         }
     }
 
+    /// Batch-major hot-path hashing: one traversal of the CSC structure
+    /// serves all `batch` queries (§Perf: the entry load + sign decode is
+    /// amortized B ways, and the inner loop over the batch dimension is a
+    /// contiguous auto-vectorizable add).
+    ///
+    /// Layouts are transposed so the batch dimension is innermost:
+    /// * `xt` — inputs, coordinate-major `(dim, batch)`:
+    ///   `xt[i * batch + b]` is coordinate `i` of query `b`.
+    /// * `acc`/`out` — hash-major `(n_hashes, batch)`:
+    ///   `acc[t * batch + b]`.
+    ///
+    /// Bit-for-bit identical per query to [`Self::hash_into_acc`]: same
+    /// bias layout, same coordinate-ascending accumulation order, same
+    /// `fast_floor`.  (Skipped zero coordinates in the scalar path are
+    /// `±0.0` adds here; the accumulator can never be `-0.0` — it starts
+    /// at a non-negative bias and IEEE-754 exact cancellation yields
+    /// `+0.0` — so those adds are exact no-ops.)
+    pub fn hash_batch_into_acc(
+        &self,
+        xt: &[f32],
+        batch: usize,
+        acc: &mut [f32],
+        out: &mut [i32],
+    ) {
+        debug_assert_eq!(xt.len(), self.dim * batch);
+        debug_assert_eq!(acc.len(), self.n_hashes * batch);
+        debug_assert_eq!(out.len(), self.n_hashes * batch);
+        if batch == 0 {
+            return;
+        }
+        for (t, &bias) in self.bias.iter().enumerate() {
+            acc[t * batch..(t + 1) * batch].fill(bias);
+        }
+        for i in 0..self.dim {
+            let col = &xt[i * batch..(i + 1) * batch];
+            if col.iter().all(|&v| v == 0.0) {
+                continue; // exact no-op for every lane (see doc above)
+            }
+            let lo = self.csc_off[i] as usize;
+            let hi = self.csc_off[i + 1] as usize;
+            for &e in &self.csc_entries[lo..hi] {
+                let t = (e & !SIGN_BIT) as usize;
+                let sign = e & SIGN_BIT;
+                // SAFETY: t < n_hashes by construction, so the row
+                // [t*batch, (t+1)*batch) lies inside `acc`.
+                let row = unsafe {
+                    acc.get_unchecked_mut(t * batch..(t + 1) * batch)
+                };
+                for (o, &x) in row.iter_mut().zip(col) {
+                    *o += f32::from_bits(x.to_bits() ^ sign);
+                }
+            }
+        }
+        for (o, &a) in out.iter_mut().zip(acc.iter()) {
+            *o = fast_floor(a * self.inv_width);
+        }
+    }
+
     /// Materialize the dense (dim, n_hashes) ±1 projection (column-major
     /// by hash): `out[i * n_hashes + t]`.
     pub fn dense_projection(&self) -> Vec<f32> {
@@ -300,6 +358,69 @@ mod tests {
                 } else {
                     Err("csc path diverged".into())
                 }
+            },
+        );
+    }
+
+    #[test]
+    fn batch_path_matches_scalar_path_bitwise() {
+        // hash_batch_into_acc must agree with hash_into_acc per query,
+        // bit for bit, for random (dim, H, B) — including B = 1, exact
+        // zeros in the input, and batches that are not lane-multiples.
+        forall(
+            123,
+            40,
+            |rng| {
+                let dim = 1 + rng.next_range(24);
+                let h = 1 + rng.next_range(200);
+                let b = 1 + rng.next_range(37);
+                let f = SparseL2Lsh::generate(rng.next_u64(), dim, h, 2.0);
+                let mut xs = Vec::with_capacity(b * dim);
+                for _ in 0..b {
+                    let mut x = gens::vec_f32(rng, dim, 1.5);
+                    // plant exact zeros to exercise the skip paths
+                    for v in x.iter_mut() {
+                        if rng.next_f32() < 0.2 {
+                            *v = 0.0;
+                        }
+                    }
+                    xs.extend_from_slice(&x);
+                }
+                (f, xs, b, dim)
+            },
+            |(f, xs, b, dim)| {
+                let (b, dim) = (*b, *dim);
+                let h = f.n_hashes();
+                // transpose inputs to (dim, b)
+                let mut xt = vec![0.0f32; dim * b];
+                for q in 0..b {
+                    for i in 0..dim {
+                        xt[i * b + q] = xs[q * dim + i];
+                    }
+                }
+                let mut acc = vec![0.0f32; h * b];
+                let mut got = vec![0i32; h * b];
+                f.hash_batch_into_acc(&xt, b, &mut acc, &mut got);
+                let mut sacc = vec![0.0f32; h];
+                let mut want = vec![0i32; h];
+                for q in 0..b {
+                    f.hash_into_acc(&xs[q * dim..(q + 1) * dim], &mut sacc,
+                                    &mut want);
+                    for t in 0..h {
+                        if got[t * b + q] != want[t] {
+                            return Err(format!(
+                                "query {q} hash {t}: batch {} vs scalar {}",
+                                got[t * b + q], want[t]
+                            ));
+                        }
+                        if acc[t * b + q].to_bits() != sacc[t].to_bits() {
+                            return Err(format!(
+                                "query {q} hash {t}: acc bits diverge"
+                            ));
+                        }
+                    }
+                }
+                Ok(())
             },
         );
     }

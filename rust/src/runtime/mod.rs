@@ -6,94 +6,154 @@
 //! reassigns ids (see /opt/xla-example/README.md).  All executables are
 //! compiled once at load and reused; the AOT batch size is fixed (32) and
 //! the executor pads partial batches.
+//!
+//! The XLA binding (`xla` crate) is only available on machines with the
+//! PJRT toolchain installed, so the real implementation is gated behind
+//! the `pjrt` cargo feature.  Without it this module keeps the exact same
+//! API — [`Runtime::cpu`] returns a descriptive error and no
+//! [`Executable`] can ever be constructed — which lets the coordinator,
+//! registry, CLI, and tests compile and run everywhere; PJRT lanes then
+//! surface "engine init failed" responses instead of panicking.
 
 pub mod registry;
 
 pub use registry::ModelRegistry;
 
-use anyhow::{Context, Result};
-use std::path::Path;
+use anyhow::Result;
 
 /// A compiled, ready-to-run XLA executable with a fixed (batch, dim)
 /// input signature and scalar-per-row output.
 pub struct Executable {
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
+    /// Proof that a stub Executable can never be constructed.
+    #[cfg(not(feature = "pjrt"))]
+    _uninhabited: std::convert::Infallible,
     pub batch: usize,
     pub dim: usize,
 }
 
 /// Wrapper over one PJRT CPU client and its loaded executables.
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
+    #[cfg(not(feature = "pjrt"))]
+    _private: (),
 }
 
-impl Runtime {
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        Ok(Self { client })
+#[cfg(feature = "pjrt")]
+mod imp {
+    use super::{Executable, Runtime};
+    use anyhow::{Context, Result};
+    use std::path::Path;
+
+    impl Runtime {
+        pub fn cpu() -> Result<Self> {
+            let client =
+                xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+            Ok(Self { client })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load an HLO-text artifact with a declared (batch, dim) signature.
+        pub fn load_hlo<P: AsRef<Path>>(
+            &self,
+            path: P,
+            batch: usize,
+            dim: usize,
+        ) -> Result<Executable> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.as_ref().to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parse HLO text {:?}", path.as_ref()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compile {:?}", path.as_ref()))?;
+            Ok(Executable { exe, batch, dim })
+        }
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    impl Executable {
+        /// Run one padded batch: `rows.len() <= batch`, each row `dim`
+        /// floats.  Returns one scalar per input row.
+        pub fn run_batch(&self, rows: &[&[f32]]) -> Result<Vec<f32>> {
+            anyhow::ensure!(
+                rows.len() <= self.batch,
+                "batch {} exceeds executable batch {}",
+                rows.len(),
+                self.batch
+            );
+            let mut flat = vec![0.0f32; self.batch * self.dim];
+            for (i, row) in rows.iter().enumerate() {
+                anyhow::ensure!(
+                    row.len() == self.dim,
+                    "row {} has dim {} != {}",
+                    i,
+                    row.len(),
+                    self.dim
+                );
+                flat[i * self.dim..(i + 1) * self.dim].copy_from_slice(row);
+            }
+            let lit = xla::Literal::vec1(&flat)
+                .reshape(&[self.batch as i64, self.dim as i64])?;
+            let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0]
+                .to_literal_sync()?;
+            // AOT lowers with return_tuple=True: unwrap the 1-tuple.
+            let out = result.to_tuple1()?;
+            let values = out.to_vec::<f32>()?;
+            anyhow::ensure!(
+                values.len() == self.batch,
+                "output size {} != batch {}",
+                values.len(),
+                self.batch
+            );
+            Ok(values[..rows.len()].to_vec())
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use super::{Executable, Runtime};
+    use anyhow::Result;
+    use std::path::Path;
+
+    impl Runtime {
+        pub fn cpu() -> Result<Self> {
+            anyhow::bail!(
+                "repsketch was built without the `pjrt` feature; \
+                 PJRT backends are unavailable on this machine"
+            )
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        pub fn load_hlo<P: AsRef<Path>>(
+            &self,
+            _path: P,
+            _batch: usize,
+            _dim: usize,
+        ) -> Result<Executable> {
+            anyhow::bail!("repsketch was built without the `pjrt` feature")
+        }
     }
 
-    /// Load an HLO-text artifact with a declared (batch, dim) signature.
-    pub fn load_hlo<P: AsRef<Path>>(
-        &self,
-        path: P,
-        batch: usize,
-        dim: usize,
-    ) -> Result<Executable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.as_ref().to_str().context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parse HLO text {:?}", path.as_ref()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compile {:?}", path.as_ref()))?;
-        Ok(Executable { exe, batch, dim })
+    impl Executable {
+        pub fn run_batch(&self, _rows: &[&[f32]]) -> Result<Vec<f32>> {
+            // `Executable` is uninhabited without the feature.
+            match self._uninhabited {}
+        }
     }
 }
 
 impl Executable {
-    /// Run one padded batch: `rows.len() <= batch`, each row `dim` floats.
-    /// Returns one scalar per input row.
-    pub fn run_batch(&self, rows: &[&[f32]]) -> Result<Vec<f32>> {
-        anyhow::ensure!(
-            rows.len() <= self.batch,
-            "batch {} exceeds executable batch {}",
-            rows.len(),
-            self.batch
-        );
-        let mut flat = vec![0.0f32; self.batch * self.dim];
-        for (i, row) in rows.iter().enumerate() {
-            anyhow::ensure!(
-                row.len() == self.dim,
-                "row {} has dim {} != {}",
-                i,
-                row.len(),
-                self.dim
-            );
-            flat[i * self.dim..(i + 1) * self.dim].copy_from_slice(row);
-        }
-        let lit = xla::Literal::vec1(&flat)
-            .reshape(&[self.batch as i64, self.dim as i64])?;
-        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0]
-            .to_literal_sync()?;
-        // AOT lowers with return_tuple=True: unwrap the 1-tuple.
-        let out = result.to_tuple1()?;
-        let values = out.to_vec::<f32>()?;
-        anyhow::ensure!(
-            values.len() == self.batch,
-            "output size {} != batch {}",
-            values.len(),
-            self.batch
-        );
-        Ok(values[..rows.len()].to_vec())
-    }
-
     /// Convenience: run many rows by chunking into padded batches.
     pub fn run_all(&self, x: &[f32], dim: usize) -> Result<Vec<f32>> {
         anyhow::ensure!(dim == self.dim, "dim mismatch");
@@ -107,5 +167,21 @@ impl Executable {
             out.extend(self.run_batch(&rows)?);
         }
         Ok(out)
+    }
+
+    /// Whether this build can ever produce a PJRT executable.
+    pub fn supported() -> bool {
+        cfg!(feature = "pjrt")
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod tests {
+    use super::Runtime;
+
+    #[test]
+    fn stub_runtime_reports_missing_feature() {
+        let err = Runtime::cpu().unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
     }
 }

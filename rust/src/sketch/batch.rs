@@ -1,0 +1,431 @@
+//! Batch-major sketch query engine (§Perf).
+//!
+//! The scalar hot path ([`RaceSketch::query_with`]) is memory-bound on
+//! index traversal: every query walks the LSH family's CSC structure and
+//! every `csc_entries` load buys exactly one useful add.  This module
+//! runs the same four-stage pipeline with the **batch dimension
+//! innermost**, so one traversal serves all B queries and the inner loop
+//! over lanes auto-vectorizes:
+//!
+//! 1. projection — per-query `A^T q` in the scalar accumulation order,
+//!    scattered into a transposed `(p, B)` buffer;
+//! 2. hashing — [`crate::lsh::SparseL2Lsh::hash_batch_into_acc`] over a
+//!    transposed `(L·K, B)` accumulator: one CSC walk, B adds per entry;
+//! 3. rehash — [`concat::rehash_all_batch`] to `(L, B)` column indices;
+//! 4. gather + estimate — per-query mean / median-of-means + debias over
+//!    the strided column layout.
+//!
+//! Every stage reproduces the scalar op order exactly, so the batched
+//! path is **bit-for-bit identical** to `query_with` (property-tested
+//! below, including B = 1 and ragged batch sizes).  That identity is what
+//! lets the coordinator swap engines freely and lets chunked parallel
+//! execution split a batch across cores without changing results.
+
+use super::{MultiSketch, RaceSketch};
+use crate::lsh::concat;
+
+/// Reusable scratch for batched queries (zero allocation once warm).
+#[derive(Clone, Debug, Default)]
+pub struct BatchScratch {
+    /// One query's projection in scalar order, before the transpose.
+    proj_row: Vec<f32>,
+    /// Projected queries, coordinate-major `(p, B)`.
+    proj_t: Vec<f32>,
+    /// Hash accumulators, hash-major `(L·K, B)`.
+    acc: Vec<f32>,
+    /// Hash codes, hash-major `(L·K, B)`.
+    codes: Vec<i32>,
+    /// Per-row columns, row-major `(L, B)`.
+    cols: Vec<u32>,
+    /// Median-of-means group buffer (`groups` entries).
+    gm: Vec<f32>,
+    /// Estimates: `(B,)` for `query_batch_with`, `(B, classes)` row-major
+    /// for `MultiSketch::scores_batch_with`.
+    out: Vec<f32>,
+}
+
+impl RaceSketch {
+    fn ensure_batch_scratch(&self, s: &mut BatchScratch, batch: usize) {
+        let n_hashes = self.rows * self.k_per_row as usize;
+        s.proj_row.resize(self.p, 0.0);
+        s.proj_t.resize(self.p * batch, 0.0);
+        s.acc.resize(n_hashes * batch, 0.0);
+        s.codes.resize(n_hashes * batch, 0);
+        s.cols.resize(self.rows * batch, 0);
+        s.gm.resize(self.groups, 0.0);
+        s.out.resize(batch, 0.0);
+    }
+
+    /// Stage 1: project all queries, writing the transposed `(p, B)`
+    /// layout.  Accumulation per (query, output) is coordinate-ascending
+    /// — the exact order of the scalar path — so results are bitwise
+    /// equal.
+    fn project_batch(&self, queries: &[f32], batch: usize,
+                     s: &mut BatchScratch) {
+        for bq in 0..batch {
+            let q = &queries[bq * self.d..(bq + 1) * self.d];
+            s.proj_row.fill(0.0);
+            for (i, &qi) in q.iter().enumerate() {
+                if qi == 0.0 {
+                    continue;
+                }
+                let row = &self.a[i * self.p..(i + 1) * self.p];
+                for (o, &aij) in s.proj_row.iter_mut().zip(row) {
+                    *o += qi * aij;
+                }
+            }
+            for (o, &v) in s.proj_row.iter().enumerate() {
+                s.proj_t[o * batch + bq] = v;
+            }
+        }
+    }
+
+    /// Stages 2+3: hash the transposed projections and fill `s.cols`.
+    fn hash_batch(&self, batch: usize, s: &mut BatchScratch) {
+        self.lsh.hash_batch_into_acc(&s.proj_t, batch, &mut s.acc,
+                                     &mut s.codes);
+        concat::rehash_all_batch(&s.codes, self.k_per_row as usize,
+                                 self.cols as u32, batch, &mut s.cols);
+    }
+
+    /// Mean over the strided `(L, B)` column layout for query `bq`.
+    /// Mirrors the scalar `mean` add-for-add.
+    fn mean_strided(&self, cols_t: &[u32], batch: usize, bq: usize) -> f32 {
+        let mut acc = 0.0f32;
+        for l in 0..self.rows {
+            let c = cols_t[l * batch + bq] as usize;
+            acc += self.data[l * self.cols + c];
+        }
+        acc / self.rows as f32
+    }
+
+    /// Median-of-means over the strided column layout for query `bq`.
+    /// Mirrors the scalar `median_of_means` op-for-op (same group
+    /// boundaries, same insertion sort, same even/odd median).
+    fn mom_strided(&self, cols_t: &[u32], batch: usize, bq: usize,
+                   gm: &mut [f32]) -> f32 {
+        let g = gm.len();
+        let m = (self.rows / g).max(1);
+        let used = g.min(self.rows);
+        if self.rows < g {
+            return self.mean_strided(cols_t, batch, bq);
+        }
+        for (gi, slot) in gm.iter_mut().enumerate().take(used) {
+            let mut acc = 0.0f32;
+            for l in gi * m..(gi + 1) * m {
+                let c = cols_t[l * batch + bq] as usize;
+                acc += self.data[l * self.cols + c];
+            }
+            *slot = acc / m as f32;
+        }
+        let gm = &mut gm[..used];
+        for i in 1..gm.len() {
+            let mut j = i;
+            while j > 0 && gm[j - 1] > gm[j] {
+                gm.swap(j - 1, j);
+                j -= 1;
+            }
+        }
+        if used % 2 == 1 {
+            gm[used / 2]
+        } else {
+            0.5 * (gm[used / 2 - 1] + gm[used / 2])
+        }
+    }
+
+    /// Stage 4 for one query: gather + estimate + debias.
+    fn estimate_strided(&self, cols_t: &[u32], batch: usize, bq: usize,
+                        gm: &mut [f32]) -> f32 {
+        let est = if self.use_mom {
+            self.mom_strided(cols_t, batch, bq, gm)
+        } else {
+            self.mean_strided(cols_t, batch, bq)
+        };
+        if self.debias {
+            let r = self.cols as f32;
+            (est - self.alpha_sum / r) / (1.0 - 1.0 / r)
+        } else {
+            est
+        }
+    }
+
+    /// Batch-major hot path: `queries` is `(B, d)` row-major; returns the
+    /// B estimates (borrowed from the scratch — copy out to keep them).
+    /// Bit-for-bit identical to calling [`RaceSketch::query_with`] per
+    /// row, at a fraction of the memory traffic.
+    pub fn query_batch_with<'s>(&self, queries: &[f32],
+                                s: &'s mut BatchScratch) -> &'s [f32] {
+        assert_eq!(
+            queries.len() % self.d,
+            0,
+            "query buffer length {} is not a multiple of d = {}",
+            queries.len(),
+            self.d
+        );
+        let batch = queries.len() / self.d;
+        self.ensure_batch_scratch(s, batch);
+        if batch == 0 {
+            return &s.out;
+        }
+        self.project_batch(queries, batch, s);
+        self.hash_batch(batch, s);
+        for bq in 0..batch {
+            s.out[bq] = self.estimate_strided(&s.cols, batch, bq, &mut s.gm);
+        }
+        &s.out
+    }
+
+    /// Convenience allocating batch query.
+    pub fn query_batch(&self, queries: &[f32]) -> Vec<f32> {
+        let mut s = BatchScratch::default();
+        self.query_batch_with(queries, &mut s).to_vec()
+    }
+}
+
+impl MultiSketch {
+    /// Batched per-class scores: `queries` is `(B, d)` row-major; the
+    /// returned slice is `(B, n_classes)` row-major.  The batch is
+    /// projected/hashed/rehashed ONCE through the shared functions (the
+    /// dominant cost), then each class gathers its own counters — the
+    /// batched form of [`MultiSketch::scores_with`], bit-for-bit equal to
+    /// it per query.
+    pub fn scores_batch_with<'s>(&self, queries: &[f32],
+                                 s: &'s mut BatchScratch) -> &'s [f32] {
+        let first = &self.classes[0];
+        assert_eq!(
+            queries.len() % first.d,
+            0,
+            "query buffer length {} is not a multiple of d = {}",
+            queries.len(),
+            first.d
+        );
+        let batch = queries.len() / first.d;
+        let n_classes = self.classes.len();
+        first.ensure_batch_scratch(s, batch);
+        s.out.resize(batch * n_classes, 0.0);
+        if batch == 0 {
+            return &s.out;
+        }
+        first.project_batch(queries, batch, s);
+        first.hash_batch(batch, s);
+        for bq in 0..batch {
+            for (ci, sk) in self.classes.iter().enumerate() {
+                debug_assert_eq!(sk.cols, first.cols);
+                s.out[bq * n_classes + ci] =
+                    sk.estimate_strided(&s.cols, batch, bq, &mut s.gm);
+            }
+        }
+        &s.out
+    }
+
+    /// Batched argmax prediction (same tie-breaking as
+    /// [`MultiSketch::predict`]).
+    pub fn predict_batch_with(&self, queries: &[f32], s: &mut BatchScratch,
+                              out: &mut Vec<usize>) {
+        let n_classes = self.classes.len();
+        let scores = self.scores_batch_with(queries, s);
+        out.clear();
+        for row in scores.chunks_exact(n_classes) {
+            out.push(
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::KernelParams;
+    use crate::sketch::{QueryScratch, SketchConfig};
+    use crate::util::prop::forall;
+    use crate::util::rng::SplitMix64;
+
+    fn random_kp(rng: &mut SplitMix64, d: usize, p: usize, m: usize)
+        -> KernelParams {
+        KernelParams {
+            d,
+            p,
+            m,
+            a: (0..d * p).map(|_| rng.next_gaussian() as f32 * 0.5).collect(),
+            x: (0..m * p).map(|_| rng.next_gaussian() as f32).collect(),
+            alpha: (0..m).map(|_| 0.5 + rng.next_f32()).collect(),
+            width: 2.0,
+            lsh_seed: rng.next_u64(),
+            k_per_row: 1,
+            default_rows: 64,
+            default_cols: 16,
+        }
+    }
+
+    fn random_queries(rng: &mut SplitMix64, batch: usize, d: usize)
+        -> Vec<f32> {
+        (0..batch * d)
+            .map(|_| {
+                if rng.next_f32() < 0.15 {
+                    0.0 // exercise the zero-skip paths
+                } else {
+                    rng.next_gaussian() as f32
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batch_matches_scalar_bitwise_over_random_configs() {
+        // The tentpole invariant: query_batch_with == per-row query_with,
+        // bit for bit, for random (d, p, L, K, B) — including B = 1 and
+        // non-power-of-two "ragged" batch sizes.
+        forall(
+            41,
+            25,
+            |rng| {
+                let d = 1 + rng.next_range(12);
+                let p = 1 + rng.next_range(8);
+                let rows = 4 + rng.next_range(60);
+                let k = 1 + rng.next_range(3) as u32;
+                let batch = 1 + rng.next_range(67);
+                let mut kp = random_kp(rng, d, p, 10 + rng.next_range(20));
+                kp.k_per_row = k;
+                let cfg = SketchConfig {
+                    rows,
+                    cols: 8 + rng.next_range(3) * 7, // 8, 15, 22: pow2 + not
+                    groups: 1 + rng.next_range(8),
+                    use_mom: rng.next_f32() < 0.7,
+                    debias: rng.next_f32() < 0.7,
+                };
+                let sk = RaceSketch::build(&kp, &cfg);
+                let queries = random_queries(rng, batch, d);
+                (sk, queries, batch, d)
+            },
+            |(sk, queries, batch, d)| {
+                let mut bs = BatchScratch::default();
+                let got = sk.query_batch_with(queries, &mut bs).to_vec();
+                let mut qs = QueryScratch::default();
+                for bq in 0..*batch {
+                    let want =
+                        sk.query_with(&queries[bq * d..(bq + 1) * d],
+                                      &mut qs);
+                    if got[bq].to_bits() != want.to_bits() {
+                        return Err(format!(
+                            "query {bq}/{batch}: batch {} vs scalar {want}",
+                            got[bq]
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn batch_of_one_and_empty_batch() {
+        let mut rng = SplitMix64::new(7);
+        let kp = random_kp(&mut rng, 6, 4, 15);
+        let sk = RaceSketch::build(&kp, &SketchConfig::default());
+        let q: Vec<f32> = (0..6).map(|_| rng.next_gaussian() as f32).collect();
+        let mut bs = BatchScratch::default();
+        let got = sk.query_batch_with(&q, &mut bs).to_vec();
+        let mut qs = QueryScratch::default();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].to_bits(), sk.query_with(&q, &mut qs).to_bits());
+        assert!(sk.query_batch_with(&[], &mut bs).is_empty());
+    }
+
+    #[test]
+    fn scratch_reuse_across_shrinking_batches() {
+        // A big batch followed by a smaller one must not read stale state.
+        let mut rng = SplitMix64::new(8);
+        let kp = random_kp(&mut rng, 5, 5, 20);
+        let sk = RaceSketch::build(&kp, &SketchConfig::default());
+        let mut bs = BatchScratch::default();
+        let mut qs = QueryScratch::default();
+        for &batch in &[33usize, 4, 17, 1] {
+            let queries = random_queries(&mut rng, batch, 5);
+            let got = sk.query_batch_with(&queries, &mut bs).to_vec();
+            assert_eq!(got.len(), batch);
+            for bq in 0..batch {
+                let want =
+                    sk.query_with(&queries[bq * 5..(bq + 1) * 5], &mut qs);
+                assert_eq!(got[bq].to_bits(), want.to_bits(), "B={batch}");
+            }
+        }
+    }
+
+    fn multiclass_fixture(seed: u64, n_classes: usize)
+        -> (MultiSketch, usize) {
+        let mut rng = SplitMix64::new(seed);
+        let d = 5usize;
+        let shared_seed = rng.next_u64();
+        let a: Vec<f32> =
+            (0..d * d).map(|_| rng.next_gaussian() as f32 * 0.5).collect();
+        let per_class: Vec<KernelParams> = (0..n_classes)
+            .map(|_| {
+                let m = 12;
+                KernelParams {
+                    d,
+                    p: d,
+                    m,
+                    a: a.clone(),
+                    x: (0..m * d)
+                        .map(|_| rng.next_gaussian() as f32)
+                        .collect(),
+                    alpha: (0..m).map(|_| 0.5 + rng.next_f32()).collect(),
+                    width: 2.0,
+                    lsh_seed: shared_seed,
+                    k_per_row: 2,
+                    default_rows: 48,
+                    default_cols: 16,
+                }
+            })
+            .collect();
+        let ms =
+            MultiSketch::build(&per_class, &SketchConfig::default()).unwrap();
+        (ms, d)
+    }
+
+    #[test]
+    fn multiclass_batch_scores_match_scalar_bitwise() {
+        let (ms, d) = multiclass_fixture(21, 3);
+        let mut rng = SplitMix64::new(22);
+        for &batch in &[1usize, 2, 9, 40] {
+            let queries = random_queries(&mut rng, batch, d);
+            let mut bs = BatchScratch::default();
+            let got = ms.scores_batch_with(&queries, &mut bs).to_vec();
+            assert_eq!(got.len(), batch * 3);
+            let mut qs = QueryScratch::default();
+            let mut scores = Vec::new();
+            for bq in 0..batch {
+                ms.scores_with(&queries[bq * d..(bq + 1) * d], &mut qs,
+                               &mut scores);
+                for (ci, want) in scores.iter().enumerate() {
+                    assert_eq!(
+                        got[bq * 3 + ci].to_bits(),
+                        want.to_bits(),
+                        "B={batch} query {bq} class {ci}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multiclass_batch_predict_matches_scalar() {
+        let (ms, d) = multiclass_fixture(31, 4);
+        let mut rng = SplitMix64::new(32);
+        let batch = 23usize;
+        let queries = random_queries(&mut rng, batch, d);
+        let mut bs = BatchScratch::default();
+        let mut preds = Vec::new();
+        ms.predict_batch_with(&queries, &mut bs, &mut preds);
+        let mut qs = QueryScratch::default();
+        for bq in 0..batch {
+            let want = ms.predict(&queries[bq * d..(bq + 1) * d], &mut qs);
+            assert_eq!(preds[bq], want, "query {bq}");
+        }
+    }
+}

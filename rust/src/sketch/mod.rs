@@ -10,10 +10,24 @@
 //! needs only the projection `A^T q` (d·p mul-adds), `L·K` sparse ±1
 //! hashes (additions/subtractions only), `L` rehashes and `L` counter
 //! reads — no neural network, no XLA, no Python.
+//!
+//! Two query engines share that pipeline:
+//!
+//! * **scalar** — [`RaceSketch::query_with`] + [`QueryScratch`], one query
+//!   at a time (lowest latency for a single request);
+//! * **batch-major** — [`batch::BatchScratch`] +
+//!   [`RaceSketch::query_batch_with`], which runs every stage with the
+//!   batch dimension innermost so one traversal of the hash structure
+//!   serves all B queries (§Perf: this is what makes the coordinator's
+//!   dynamic batches pay off at the kernel level).  The batched path is
+//!   bit-for-bit identical to the scalar path, property-tested in
+//!   [`batch`].
 
+pub mod batch;
 pub mod multiclass;
 pub mod serde;
 
+pub use batch::BatchScratch;
 pub use multiclass::MultiSketch;
 
 use crate::kernel::KernelParams;
@@ -49,6 +63,8 @@ pub struct QueryScratch {
     codes: Vec<i32>,
     cols: Vec<u32>,
     group_means: Vec<f32>,
+    /// Per-class scores buffer for `MultiSketch::predict`.
+    pub(crate) scores: Vec<f32>,
 }
 
 /// The weighted RACE sketch plus everything needed to query it.
@@ -146,18 +162,27 @@ impl RaceSketch {
         Ok(())
     }
 
+    /// Size the hash-stage buffers only (`proj` is managed by the caller
+    /// on the query path — see `query_with`).  §Perf: `query_with` used to
+    /// run the full `ensure_scratch` and then `query_projected_with` ran
+    /// it again on a just-taken (empty) `proj`, allocating a fresh
+    /// p-vector on every query.
     #[inline]
-    fn ensure_scratch(&self, s: &mut QueryScratch) {
-        s.proj.resize(self.p, 0.0);
+    fn ensure_hash_scratch(&self, s: &mut QueryScratch) {
         s.acc.resize(self.rows * self.k_per_row as usize, 0.0);
         s.codes.resize(self.rows * self.k_per_row as usize, 0);
         s.cols.resize(self.rows, 0);
         s.group_means.resize(self.groups, 0.0);
     }
 
+    #[inline]
+    fn ensure_scratch(&self, s: &mut QueryScratch) {
+        s.proj.resize(self.p, 0.0);
+        self.ensure_hash_scratch(s);
+    }
+
     /// Full hot path: raw query in R^d -> prediction.  Zero allocation.
     pub fn query_with(&self, q: &[f32], s: &mut QueryScratch) -> f32 {
-        self.ensure_scratch(s);
         debug_assert_eq!(q.len(), self.d);
         // 1. project: q' = A^T q  (A is (d, p) row-major).  Take the
         // buffer out of the scratch to satisfy the borrow checker without
@@ -182,7 +207,7 @@ impl RaceSketch {
     /// Hot path for an already-projected query.
     pub fn query_projected_with(&self, proj: &[f32], s: &mut QueryScratch)
         -> f32 {
-        self.ensure_scratch(s);
+        self.ensure_hash_scratch(s);
         // 2. hash: add/sub only (coordinate-major hot path, §Perf)
         self.lsh.hash_into_acc(proj, &mut s.acc, &mut s.codes);
         // 3. rehash to columns

@@ -9,6 +9,11 @@
 //! (`p·K·L/3` adds) is amortized, which is exactly the mitigation the
 //! paper gestures at.  Prediction is the argmax of the per-class
 //! estimates.
+//!
+//! Batch-major variants live in [`super::batch`]:
+//! [`MultiSketch::scores_batch_with`] hashes a whole batch through the
+//! shared functions once (one CSC walk for B queries AND all classes)
+//! and is bit-for-bit identical to `scores_with` per query.
 
 use super::{QueryScratch, RaceSketch, SketchConfig};
 use crate::kernel::KernelParams;
@@ -68,16 +73,20 @@ impl MultiSketch {
         }
     }
 
-    /// Argmax class for a query.
+    /// Argmax class for a query.  Reuses the scratch's scores buffer so
+    /// repeated predictions stay allocation-free (the module-doc promise;
+    /// this used to allocate a fresh `Vec` per call).
     pub fn predict(&self, q: &[f32], s: &mut QueryScratch) -> usize {
-        let mut scores = Vec::with_capacity(self.n_classes());
+        let mut scores = std::mem::take(&mut s.scores);
         self.scores_with(q, s, &mut scores);
-        scores
+        let best = scores
             .iter()
             .enumerate()
             .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
             .map(|(i, _)| i)
-            .unwrap_or(0)
+            .unwrap_or(0);
+        s.scores = scores;
+        best
     }
 
     /// Total parameter count: per-class counters + ONE shared projection.

@@ -2,8 +2,12 @@
 //!
 //! `Bench::run` measures a closure with warmup + timed iterations and
 //! reports mean / p50 / p99 / throughput.  Used by all `cargo bench`
-//! targets (`harness = false`).
+//! targets (`harness = false`).  [`write_json`] emits the same results
+//! machine-readably (`BENCH_*.json` at the repo root) so the perf
+//! trajectory can be tracked across PRs.
 
+use crate::util::json::{self, Json};
+use std::path::Path;
 use std::time::Instant;
 
 #[derive(Clone, Debug)]
@@ -31,6 +35,44 @@ impl BenchResult {
             format!("{:.0}/s", self.per_sec()),
         );
     }
+
+    /// Machine-readable form for `write_json`.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("iters", Json::from_u64(self.iters as u64)),
+            ("mean_ns", Json::num(self.mean_ns)),
+            ("p50_ns", Json::num(self.p50_ns)),
+            ("p99_ns", Json::num(self.p99_ns)),
+            ("min_ns", Json::num(self.min_ns)),
+            ("per_sec", Json::num(self.per_sec())),
+        ])
+    }
+}
+
+/// Write a benchmark report: `meta` key/values (config, derived metrics)
+/// plus the raw results, as one JSON object.  Used by the bench targets
+/// to drop `BENCH_*.json` files at the repo root for cross-PR tracking.
+pub fn write_json<P: AsRef<Path>>(
+    path: P,
+    bench_name: &str,
+    meta: Vec<(&str, Json)>,
+    results: &[BenchResult],
+) -> std::io::Result<()> {
+    let unix_time = std::time::SystemTime::now()
+        .duration_since(std::time::SystemTime::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let mut pairs = vec![
+        ("bench", Json::Str(bench_name.to_string())),
+        ("unix_time", Json::from_u64(unix_time)),
+    ];
+    pairs.extend(meta);
+    pairs.push((
+        "results",
+        Json::Arr(results.iter().map(|r| r.to_json()).collect()),
+    ));
+    std::fs::write(path, json::obj(pairs).to_string())
 }
 
 pub fn header() {
@@ -85,6 +127,30 @@ pub fn run<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn json_report_roundtrips() {
+        let r = run("tiny", || {
+            std::hint::black_box((0..10).sum::<u64>());
+        });
+        let path = std::env::temp_dir().join("repsketch_bench_test.json");
+        write_json(
+            &path,
+            "unit_test",
+            vec![("batch", Json::from_u64(8))],
+            &[r.clone()],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let j = json::parse(&text).unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("unit_test"));
+        assert_eq!(j.get("batch").unwrap().as_u64(), Some(8));
+        let results = j.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("name").unwrap().as_str(), Some("tiny"));
+        assert!(results[0].get("mean_ns").unwrap().as_f64().unwrap() > 0.0);
+    }
 
     #[test]
     fn measures_something() {

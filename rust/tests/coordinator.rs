@@ -1,32 +1,43 @@
 //! Coordinator integration: router + batcher + TCP server over real
 //! artifact-backed engines, including the PJRT lane (Python-free request
-//! path end to end).
+//! path end to end) — plus artifact-free tests locking the batched
+//! execution contract (one engine call per drained batch, batched kernel
+//! results identical to the scalar reference).
+//!
+//! Artifact-backed tests skip (with a note) when `make artifacts` has not
+//! run; the batched-contract tests always run.
 
 use repsketch::coordinator::batcher::BatcherConfig;
 use repsketch::coordinator::{
-    backend, BackendKind, Request, Response, Router, RouterConfig, Server,
+    backend, BackendKind, Engine, Request, Response, Router, RouterConfig,
+    Server,
 };
 use repsketch::data::Dataset;
+use repsketch::kernel::KernelParams;
 use repsketch::runtime::registry::DatasetBundle;
-use repsketch::runtime::Runtime;
+use repsketch::runtime::{Executable, Runtime};
+use repsketch::sketch::{QueryScratch, RaceSketch, SketchConfig};
+use repsketch::util::rng::SplitMix64;
 use std::io::{BufRead, BufReader, Write};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-fn artifacts_root() -> std::path::PathBuf {
+fn artifacts_root() -> Option<std::path::PathBuf> {
     let root = repsketch::artifacts_dir();
-    assert!(
-        root.join(".stamp").exists(),
-        "artifacts missing — run `make artifacts` first"
-    );
-    root
+    if root.join(".stamp").exists() {
+        Some(root)
+    } else {
+        eprintln!("skipping: artifacts missing — run `make artifacts`");
+        None
+    }
 }
 
-fn build_router(with_pjrt: bool) -> (Router, Dataset) {
-    let root = artifacts_root();
-    let bundle = DatasetBundle::load(&root, "skin").unwrap();
+fn build_router(root: &std::path::Path, with_pjrt: bool)
+    -> (Router, Dataset) {
+    let bundle = DatasetBundle::load(root, "skin").unwrap();
     let meta = bundle.meta.clone();
-    let ds = Dataset::load_artifact(&root, "skin", "test", meta.dim,
+    let ds = Dataset::load_artifact(root, "skin", "test", meta.dim,
                                     meta.task).unwrap();
     let mut router = Router::new();
     let cfg = RouterConfig {
@@ -59,8 +70,8 @@ fn build_router(with_pjrt: bool) -> (Router, Dataset) {
 
 #[test]
 fn router_serves_sketch_and_nn_consistently() {
-    let (router, ds) = build_router(false);
-    let root = artifacts_root();
+    let Some(root) = artifacts_root() else { return };
+    let (router, ds) = build_router(&root, false);
     let bundle = DatasetBundle::load(&root, "skin").unwrap();
     let mut s = repsketch::sketch::QueryScratch::default();
     let mut ns = repsketch::nn::MlpScratch::default();
@@ -87,7 +98,12 @@ fn router_serves_sketch_and_nn_consistently() {
 
 #[test]
 fn pjrt_lane_serves_from_request_path() {
-    let (router, ds) = build_router(true);
+    if !Executable::supported() {
+        eprintln!("skipping: built without the `pjrt` feature");
+        return;
+    }
+    let Some(root) = artifacts_root() else { return };
+    let (router, ds) = build_router(&root, true);
     // Concurrent clients against the PJRT lane — batches form and every
     // request gets the XLA-computed answer.
     let router = Arc::new(router);
@@ -112,7 +128,6 @@ fn pjrt_lane_serves_from_request_path() {
                 .collect::<Vec<f32>>()
         }));
     }
-    let root = artifacts_root();
     let bundle = DatasetBundle::load(&root, "skin").unwrap();
     let mut ns = repsketch::nn::MlpScratch::default();
     for (t, h) in handles.into_iter().enumerate() {
@@ -130,7 +145,8 @@ fn pjrt_lane_serves_from_request_path() {
 
 #[test]
 fn tcp_server_round_trip() {
-    let (router, ds) = build_router(false);
+    let Some(root) = artifacts_root() else { return };
+    let (router, ds) = build_router(&root, false);
     let router = Arc::new(router);
     let server = Server::bind(router.clone(), "127.0.0.1:0").unwrap();
     let addr = server.local_addr();
@@ -230,4 +246,220 @@ fn backpressure_rejects_then_recovers() {
     // System recovers after drain.
     let resp = router.call(mk(999));
     assert!(resp.result.is_ok());
+}
+
+// ---------------------------------------------------------------------------
+// Batched-execution contract (artifact-free, always runs)
+// ---------------------------------------------------------------------------
+
+/// Synthetic sketch for artifact-free coordinator tests.
+fn synthetic_sketch(seed: u64, d: usize) -> RaceSketch {
+    let mut rng = SplitMix64::new(seed);
+    let p = 4usize;
+    let m = 24usize;
+    let kp = KernelParams {
+        d,
+        p,
+        m,
+        a: (0..d * p).map(|_| rng.next_gaussian() as f32 * 0.5).collect(),
+        x: (0..m * p).map(|_| rng.next_gaussian() as f32).collect(),
+        alpha: (0..m).map(|_| 0.5 + rng.next_f32()).collect(),
+        width: 2.0,
+        lsh_seed: rng.next_u64(),
+        k_per_row: 2,
+        default_rows: 64,
+        default_cols: 16,
+    };
+    RaceSketch::build(&kp, &SketchConfig::default())
+}
+
+fn synthetic_rows(seed: u64, n: usize, d: usize) -> Vec<Vec<f32>> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n)
+        .map(|_| (0..d).map(|_| rng.next_gaussian() as f32).collect())
+        .collect()
+}
+
+/// Wraps the real batched sketch engine and records every `eval_batch`
+/// call's size — the probe for the one-call-per-drained-batch contract.
+struct CountingEngine {
+    inner: backend::SketchEngine,
+    calls: Arc<AtomicUsize>,
+    sizes: Arc<Mutex<Vec<usize>>>,
+}
+
+impl Engine for CountingEngine {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn eval_batch(&mut self, rows: &[Vec<f32>]) -> anyhow::Result<Vec<f32>> {
+        self.calls.fetch_add(1, Ordering::SeqCst);
+        self.sizes.lock().unwrap().push(rows.len());
+        self.inner.eval_batch(rows)
+    }
+}
+
+#[test]
+fn drained_batch_executes_as_one_engine_call() {
+    let d = 6usize;
+    let sketch = synthetic_sketch(0xC0DE, d);
+    let reference = sketch.clone();
+    let calls = Arc::new(AtomicUsize::new(0));
+    let sizes = Arc::new(Mutex::new(Vec::new()));
+    let mut router = Router::new();
+    // max_wait far beyond the test runtime: the batch can only fire by
+    // reaching max_batch, so exactly one drain of exactly 16 requests.
+    let cfg = RouterConfig {
+        batcher: BatcherConfig {
+            max_batch: 16,
+            max_wait: Duration::from_secs(30),
+            queue_cap: 1024,
+        },
+    };
+    {
+        let (calls, sizes) = (calls.clone(), sizes.clone());
+        router.add_lane("m", BackendKind::Sketch, move || {
+            Ok(Box::new(CountingEngine {
+                inner: backend::SketchEngine::new(sketch),
+                calls,
+                sizes,
+            }) as _)
+        }, &cfg);
+    }
+    let rows = synthetic_rows(0xAB, 16, d);
+    let mut receivers = Vec::new();
+    for (i, row) in rows.iter().enumerate() {
+        let rx = router
+            .submit(Request {
+                id: i as u64,
+                model: "m".into(),
+                backend: BackendKind::Sketch,
+                features: row.clone(),
+            })
+            .unwrap();
+        receivers.push(rx);
+    }
+    // Every request answered with the scalar-reference value ...
+    let mut s = QueryScratch::default();
+    for (i, rx) in receivers.into_iter().enumerate() {
+        let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        let want = reference.query_with(&rows[i], &mut s);
+        assert_eq!(resp.result.unwrap(), want, "row {i}");
+    }
+    // ... through exactly ONE engine call carrying the whole batch.
+    assert_eq!(calls.load(Ordering::SeqCst), 1, "one call per drained batch");
+    assert_eq!(*sizes.lock().unwrap(), vec![16]);
+    // The batcher agrees: 16 submissions, 1 drained batch.
+    let stats = router.lane_stats();
+    assert_eq!(stats[0].2, 16);
+    assert_eq!(stats[0].3, 1);
+}
+
+#[test]
+fn partial_batch_drains_as_one_call_on_deadline() {
+    let d = 5usize;
+    let sketch = synthetic_sketch(0xD1CE, d);
+    let reference = sketch.clone();
+    let calls = Arc::new(AtomicUsize::new(0));
+    let sizes = Arc::new(Mutex::new(Vec::new()));
+    let mut router = Router::new();
+    let cfg = RouterConfig {
+        batcher: BatcherConfig {
+            max_batch: 64,
+            // Generous deadline so all three submissions land well before
+            // the age-based drain fires (keeps the one-call assert stable
+            // under CI scheduling jitter).
+            max_wait: Duration::from_millis(200),
+            queue_cap: 1024,
+        },
+    };
+    {
+        let (calls, sizes) = (calls.clone(), sizes.clone());
+        router.add_lane("m", BackendKind::Sketch, move || {
+            Ok(Box::new(CountingEngine {
+                inner: backend::SketchEngine::new(sketch),
+                calls,
+                sizes,
+            }) as _)
+        }, &cfg);
+    }
+    let rows = synthetic_rows(0xCD, 3, d);
+    let mut receivers = Vec::new();
+    for (i, row) in rows.iter().enumerate() {
+        receivers.push(
+            router
+                .submit(Request {
+                    id: i as u64,
+                    model: "m".into(),
+                    backend: BackendKind::Sketch,
+                    features: row.clone(),
+                })
+                .unwrap(),
+        );
+    }
+    let mut s = QueryScratch::default();
+    for (i, rx) in receivers.into_iter().enumerate() {
+        let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        let want = reference.query_with(&rows[i], &mut s);
+        assert_eq!(resp.result.unwrap(), want, "row {i}");
+    }
+    // All three under-deadline requests drained together as one call.
+    assert_eq!(calls.load(Ordering::SeqCst), 1);
+    assert_eq!(*sizes.lock().unwrap(), vec![3]);
+}
+
+#[test]
+fn concurrent_clients_get_scalar_identical_answers_through_batches() {
+    // End to end: concurrent clients -> dynamic batches -> batched sketch
+    // kernel (with parallel fan-out for big batches) -> per-request
+    // responses identical to the scalar reference.
+    let d = 8usize;
+    let sketch = synthetic_sketch(0xFACE, d);
+    let reference = Arc::new(sketch.clone());
+    let mut router = Router::new();
+    let cfg = RouterConfig {
+        batcher: BatcherConfig {
+            max_batch: 128,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 1 << 16,
+        },
+    };
+    router.add_lane("m", BackendKind::Sketch, move || {
+        Ok(Box::new(backend::SketchEngine::new(sketch)) as _)
+    }, &cfg);
+    let router = Arc::new(router);
+    let n_clients = 8usize;
+    let per_client = 100usize;
+    let mut handles = Vec::new();
+    for t in 0..n_clients {
+        let router = router.clone();
+        let reference = reference.clone();
+        handles.push(std::thread::spawn(move || {
+            let rows =
+                synthetic_rows(0xE0 + t as u64, per_client, d);
+            let mut s = QueryScratch::default();
+            for (i, row) in rows.iter().enumerate() {
+                let resp = router.call(Request {
+                    id: (t * per_client + i) as u64,
+                    model: "m".into(),
+                    backend: BackendKind::Sketch,
+                    features: row.clone(),
+                });
+                let want = reference.query_with(row, &mut s);
+                assert_eq!(resp.result.unwrap(), want, "client {t} row {i}");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    // Batching actually happened (fewer drains than submissions).
+    let stats = router.lane_stats();
+    assert_eq!(stats[0].2 as usize, n_clients * per_client);
+    assert!(
+        (stats[0].3 as usize) < n_clients * per_client,
+        "expected batches < submissions, got {} drains",
+        stats[0].3
+    );
 }

@@ -10,20 +10,35 @@ use repsketch::runtime::registry::DatasetBundle;
 use repsketch::runtime::Runtime;
 use repsketch::sketch::{QueryScratch, RaceSketch, SketchConfig};
 
-fn artifacts_root() -> std::path::PathBuf {
+/// `None` (with a note) when `make artifacts` has not run — the artifact
+/// tests skip instead of failing, so `cargo test` works on any machine.
+fn artifacts_root() -> Option<std::path::PathBuf> {
     let root = repsketch::artifacts_dir();
-    assert!(
-        root.join(".stamp").exists(),
-        "artifacts missing — run `make artifacts` first"
-    );
-    root
+    if root.join(".stamp").exists() {
+        Some(root)
+    } else {
+        eprintln!("skipping: artifacts missing — run `make artifacts`");
+        None
+    }
+}
+
+fn pjrt_available() -> bool {
+    if repsketch::runtime::Executable::supported() {
+        true
+    } else {
+        eprintln!("skipping: built without the `pjrt` feature");
+        false
+    }
 }
 
 /// PJRT execution of nn.hlo.txt must match the rust dense engine on the
 /// same weights (two fully independent implementations of f_N).
 #[test]
 fn pjrt_nn_matches_rust_engine() {
-    let root = artifacts_root();
+    if !pjrt_available() {
+        return;
+    }
+    let Some(root) = artifacts_root() else { return };
     let rt = Runtime::cpu().expect("PJRT CPU client");
     for name in ["skin", "abalone"] {
         let dir = root.join(name);
@@ -55,7 +70,10 @@ fn pjrt_nn_matches_rust_engine() {
 /// KDE kernel) must match the rust exact-KDE engine.
 #[test]
 fn pjrt_kernel_matches_rust_kde() {
-    let root = artifacts_root();
+    if !pjrt_available() {
+        return;
+    }
+    let Some(root) = artifacts_root() else { return };
     let rt = Runtime::cpu().expect("PJRT CPU client");
     let name = "skin";
     let dir = root.join(name);
@@ -85,7 +103,7 @@ fn pjrt_kernel_matches_rust_kde() {
 /// well enough to preserve test accuracy (Table-1 "RS ≈ Kernel" claim).
 #[test]
 fn sketch_preserves_kernel_accuracy() {
-    let root = artifacts_root();
+    let Some(root) = artifacts_root() else { return };
     for name in ["skin", "abalone"] {
         let bundle = DatasetBundle::load(&root, name).unwrap();
         let meta = &bundle.meta;
@@ -122,7 +140,7 @@ fn sketch_preserves_kernel_accuracy() {
 /// Sketch serialization round-trips through disk against real params.
 #[test]
 fn sketch_artifact_roundtrip() {
-    let root = artifacts_root();
+    let Some(root) = artifacts_root() else { return };
     let kp =
         KernelParams::load(root.join("adult/kernel_params.bin")).unwrap();
     let sk = RaceSketch::build(&kp, &SketchConfig::default());
@@ -135,11 +153,34 @@ fn sketch_artifact_roundtrip() {
     assert_eq!(sk.query_with(&q, &mut s), sk2.query_with(&q, &mut s));
 }
 
+/// The batch-major query engine is bit-identical to the scalar hot path
+/// on real artifact-backed sketches (the synthetic property tests cover
+/// random configs; this closes the loop on deployed ones).
+#[test]
+fn batched_queries_match_scalar_on_artifacts() {
+    let Some(root) = artifacts_root() else { return };
+    for name in ["skin", "abalone"] {
+        let bundle = DatasetBundle::load(&root, name).unwrap();
+        let meta = &bundle.meta;
+        let ds = Dataset::load_artifact(&root, name, "test", meta.dim,
+                                        meta.task).unwrap();
+        let n = 100.min(ds.len());
+        let flat: Vec<f32> = (0..n).flat_map(|i| ds.row(i).to_vec()).collect();
+        let mut bs = repsketch::sketch::BatchScratch::default();
+        let got = bundle.sketch.query_batch_with(&flat, &mut bs).to_vec();
+        let mut s = QueryScratch::default();
+        for i in 0..n {
+            let want = bundle.sketch.query_with(ds.row(i), &mut s);
+            assert_eq!(got[i].to_bits(), want.to_bits(), "{name} row {i}");
+        }
+    }
+}
+
 /// Kernel accuracy recorded at train time reproduces in rust on the same
 /// test split (closes the python↔rust evaluation loop).
 #[test]
 fn rust_eval_matches_python_train_metrics() {
-    let root = artifacts_root();
+    let Some(root) = artifacts_root() else { return };
     let bundle = DatasetBundle::load(&root, "skin").unwrap();
     let meta = &bundle.meta;
     let ds = Dataset::load_artifact(&root, "skin", "test", meta.dim,
