@@ -65,9 +65,9 @@ fn main() -> anyhow::Result<()> {
         }, &cfg);
         let kp = bundle.kernel.params.clone();
         router.add_lane(name, BackendKind::KernelRust, move || {
-            Ok(Box::new(backend::KernelEngine {
-                model: repsketch::kernel::KernelModel::new(kp),
-            }) as _)
+            Ok(Box::new(backend::KernelEngine::new(
+                repsketch::kernel::KernelModel::new(kp),
+            )) as _)
         }, &cfg);
         let dir = root.join(name);
         let (batch, dim) = (meta.aot_batch, meta.dim);

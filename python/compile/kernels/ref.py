@@ -169,11 +169,20 @@ def query_sketch_mean(sketch, cols):
 
 
 def query_sketch_mom(sketch, cols, groups: int):
-    """Algorithm 2: median of g group means."""
+    """Algorithm 2: median of g group means.
+
+    The last group absorbs the ``L % groups`` remainder rows (every row
+    contributes to the estimate), and ``L < groups`` falls back to the
+    plain mean — both matching the rust `median_of_means` exactly.
+    """
     s = np.asarray(sketch)
     c = np.asarray(cols)
     vals = s[np.arange(s.shape[0])[None, :], c]  # (B, L)
     b, l = vals.shape
+    if l < groups:
+        return vals.mean(axis=1)
     m = l // groups
-    gm = vals[:, : groups * m].reshape(b, groups, m).mean(axis=2)
+    head = vals[:, : (groups - 1) * m].reshape(b, groups - 1, m).mean(axis=2)
+    tail = vals[:, (groups - 1) * m:].mean(axis=1, keepdims=True)
+    gm = np.concatenate([head, tail], axis=1)  # (B, groups)
     return np.median(gm, axis=1)

@@ -27,8 +27,19 @@ def _lookup_kernel(cols_ref, sketch_ref, o_ref, *, groups):
     l, r = sketch.shape
     onehot = jax.nn.one_hot(cols, r, dtype=jnp.float32)   # (bb, L, R)
     vals = jnp.einsum("blr,lr->bl", onehot, sketch)       # (bb, L)
+    if l < groups:
+        # Matches the rust fallback: MoM degenerates to the plain mean.
+        o_ref[...] = vals.mean(axis=1)
+        return
+    # Group means; the last group absorbs the L % groups remainder rows
+    # (static shapes: l and groups are compile-time constants).
     m = l // groups
-    gm = jnp.mean(vals[:, : groups * m].reshape(-1, groups, m), axis=2)
+    bb = vals.shape[0]
+    head = jnp.mean(
+        vals[:, : (groups - 1) * m].reshape(bb, groups - 1, m), axis=2
+    )
+    tail = jnp.mean(vals[:, (groups - 1) * m:], axis=1, keepdims=True)
+    gm = jnp.concatenate([head, tail], axis=1)            # (bb, groups)
     sorted_gm = jnp.sort(gm, axis=1)
     # Median of g values (g static): average the two middle order stats.
     lo = sorted_gm[:, (groups - 1) // 2]

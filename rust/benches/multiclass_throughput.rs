@@ -1,0 +1,190 @@
+//! Multiclass gather throughput: the per-class `MultiSketch` (C separate
+//! counter arrays walked at the same columns) vs the class-interleaved
+//! `FusedMultiSketch` (one contiguous C-wide stream per (l, col)),
+//! swept over C ∈ {2, 10, 100} × B ∈ {1, 32, 512} on a self-contained
+//! synthetic config (synthetic fallback — no artifacts needed).
+//!
+//! Both engines share the hash pass bit-for-bit, so the sweep isolates
+//! the gather-stage memory layout — the paper's §4.6 multiclass scaling
+//! cost.  The acceptance bar is fused queries/sec ≥ per-class
+//! queries/sec at C ≥ 10 for every batch size.
+//!
+//! Writes `BENCH_multiclass.json` at the repo root (machine-readable,
+//! tracked across PRs).  Pass `--smoke` for a short-budget run of the
+//! SAME full grid (used by CI).
+//!
+//! Run: `cargo bench --bench multiclass_throughput [-- --smoke]`
+
+use repsketch::kernel::KernelParams;
+use repsketch::sketch::{
+    BatchScratch, FusedMultiSketch, FusedScratch, MultiSketch, SketchConfig,
+};
+use repsketch::util::bench;
+use repsketch::util::json::{self, Json};
+use repsketch::util::rng::SplitMix64;
+use std::path::Path;
+
+/// Deployment-shaped synthetic config: small projected dim, deep sketch
+/// (L·K = 1024 hashes), counter arrays big enough that the per-class
+/// gather's C×L scattered reads leave cache.
+const D: usize = 32;
+const P: usize = 16;
+const M_PER_CLASS: usize = 64;
+const ROWS: usize = 512;
+const COLS: usize = 64;
+const K_PER_ROW: u32 = 2;
+
+fn synthetic_classes(seed: u64, n_classes: usize) -> Vec<KernelParams> {
+    let mut rng = SplitMix64::new(seed);
+    let shared_seed = rng.next_u64();
+    let a: Vec<f32> =
+        (0..D * P).map(|_| rng.next_gaussian() as f32 * 0.5).collect();
+    (0..n_classes)
+        .map(|_| KernelParams {
+            d: D,
+            p: P,
+            m: M_PER_CLASS,
+            a: a.clone(),
+            x: (0..M_PER_CLASS * P)
+                .map(|_| rng.next_gaussian() as f32)
+                .collect(),
+            alpha: (0..M_PER_CLASS).map(|_| 0.5 + rng.next_f32()).collect(),
+            width: 2.0,
+            lsh_seed: shared_seed,
+            k_per_row: K_PER_ROW,
+            default_rows: ROWS,
+            default_cols: COLS,
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    // Per-case measurement budget: full ~0.5 s, smoke ~0.05 s (same
+    // grid, CI-friendly wall clock).
+    let budget_ns = if smoke { 5e7 } else { 5e8 };
+
+    let mut rng = SplitMix64::new(0x5EED);
+    let max_b = 512usize;
+    let queries: Vec<f32> =
+        (0..max_b * D).map(|_| rng.next_gaussian() as f32).collect();
+
+    println!(
+        "synthetic config: d={D} p={P} M/class={M_PER_CLASS} L={ROWS} \
+         R={COLS} K={K_PER_ROW}{}",
+        if smoke { " (smoke)" } else { "" }
+    );
+    bench::header();
+    let mut results = Vec::new();
+    let mut meta: Vec<(String, Json)> = Vec::new();
+    let mut min_fused_speedup_c10plus = f64::INFINITY;
+    for &c in &[2usize, 10, 100] {
+        let per_class = synthetic_classes(0xC0 + c as u64, c);
+        let cfg = SketchConfig::default();
+        let ms = MultiSketch::build(&per_class, &cfg)?;
+        let fused = FusedMultiSketch::build(&per_class, &cfg)?;
+
+        // Sanity: the fused gather must be bit-identical to the
+        // per-class path before we bother timing it.
+        {
+            let sanity_b = 32.min(max_b);
+            let flat = &queries[..sanity_b * D];
+            let mut bs = BatchScratch::default();
+            let mut fs = FusedScratch::default();
+            let want = ms.scores_batch_with(flat, &mut bs).to_vec();
+            let got = fused.scores_batch_with(flat, &mut fs);
+            for (i, (w, g)) in want.iter().zip(got).enumerate() {
+                anyhow::ensure!(
+                    w.to_bits() == g.to_bits(),
+                    "fused result diverges from per-class at slot {i} \
+                     (C={c})"
+                );
+            }
+        }
+
+        for &b in &[1usize, 32, 512] {
+            let flat = &queries[..b * D];
+
+            let mut bs = BatchScratch::default();
+            let per_class_res = bench::run_with_budget(
+                &format!("C={c:<3} B={b:<3} per-class gather"),
+                budget_ns,
+                || {
+                    std::hint::black_box(
+                        ms.scores_batch_with(flat, &mut bs),
+                    );
+                },
+            );
+            per_class_res.print();
+
+            let mut fs = FusedScratch::default();
+            let fused_res = bench::run_with_budget(
+                &format!("C={c:<3} B={b:<3} fused gather"),
+                budget_ns,
+                || {
+                    std::hint::black_box(
+                        fused.scores_batch_with(flat, &mut fs),
+                    );
+                },
+            );
+            fused_res.print();
+
+            let per_class_qps = b as f64 * per_class_res.per_sec();
+            let fused_qps = b as f64 * fused_res.per_sec();
+            let speedup = fused_qps / per_class_qps;
+            println!(
+                "  -> C={c} B={b}: per-class {per_class_qps:.0} q/s, \
+                 fused {fused_qps:.0} q/s, speedup {speedup:.2}x\n"
+            );
+            if c >= 10 {
+                min_fused_speedup_c10plus =
+                    min_fused_speedup_c10plus.min(speedup);
+            }
+            meta.push((
+                format!("c{c}_b{b}"),
+                json::obj(vec![
+                    ("classes", Json::from_u64(c as u64)),
+                    ("batch", Json::from_u64(b as u64)),
+                    ("per_class_qps", Json::num(per_class_qps)),
+                    ("fused_qps", Json::num(fused_qps)),
+                    ("speedup", Json::num(speedup)),
+                ]),
+            ));
+            results.push(per_class_res);
+            results.push(fused_res);
+        }
+    }
+
+    let repo_root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent")
+        .to_path_buf();
+    let mut meta_refs: Vec<(&str, Json)> = vec![
+        (
+            "config",
+            json::obj(vec![
+                ("d", Json::from_u64(D as u64)),
+                ("p", Json::from_u64(P as u64)),
+                ("m_per_class", Json::from_u64(M_PER_CLASS as u64)),
+                ("rows", Json::from_u64(ROWS as u64)),
+                ("cols", Json::from_u64(COLS as u64)),
+                ("k_per_row", Json::from_u64(K_PER_ROW as u64)),
+            ]),
+        ),
+        ("smoke", Json::from_u64(smoke as u64)),
+        (
+            "min_fused_speedup_c10plus",
+            Json::num(min_fused_speedup_c10plus),
+        ),
+    ];
+    for (k, v) in &meta {
+        meta_refs.push((k.as_str(), v.clone()));
+    }
+    let out = repo_root.join("BENCH_multiclass.json");
+    bench::write_json(&out, "multiclass_throughput", meta_refs, &results)?;
+    println!("json -> {}", out.display());
+    println!(
+        "min fused speedup at C>=10: {min_fused_speedup_c10plus:.2}x"
+    );
+    Ok(())
+}

@@ -1,7 +1,8 @@
 //! Inference backends the router can dispatch to.
 //!
-//! Every dataset exposes up to five variants — the exact comparison
-//! matrix of the paper's evaluation:
+//! Every dataset exposes up to five single-output variants — the exact
+//! comparison matrix of the paper's evaluation — plus the multiclass
+//! lane (§4.6):
 //!
 //! | kind      | engine                         | paper column |
 //! |-----------|--------------------------------|--------------|
@@ -10,19 +11,34 @@
 //! | `kernel`  | rust exact weighted KDE        | Kernel       |
 //! | `nn-pjrt` | PJRT executable of nn.hlo.txt  | NN (XLA)     |
 //! | `kernel-pjrt` | PJRT of kernel.hlo.txt (L1 Pallas) | Kernel (XLA) |
+//! | `mc`      | FusedMultiSketch (class-interleaved) | — (§4.6) |
 //!
-//! A drained `DynamicBatcher` batch executes as ONE engine call.  The
-//! sketch engine forwards it to the batch-major kernel
-//! (`RaceSketch::query_batch_with` — one CSC hash walk serving the whole
-//! batch), and both the sketch and exact-kernel engines split large
-//! batches across cores with a chunked `std::thread::scope` fan-out.
-//! Results are bit-identical to the per-row scalar path regardless of
-//! batch size or worker count, so batching is purely a throughput knob.
+//! A drained `DynamicBatcher` batch executes as ONE engine call: the
+//! sketch lane runs the batch-major kernel
+//! (`RaceSketch::query_batch_with`), the multiclass lane runs the fused
+//! class-interleaved kernel (`FusedMultiSketch::predict_batch_with` —
+//! one CSC hash walk and one contiguous gather serve the whole batch AND
+//! all classes; responses carry the argmax class index).
+//!
+//! ## Parallel fan-out: the persistent sharded pool
+//!
+//! Batches of at least [`PAR_MIN_BATCH`] rows are split into contiguous
+//! shards and executed on [`WorkerPool::shared`] — long-lived worker
+//! threads with per-worker channel-fed queues and per-worker scratch
+//! (see [`super::pool`]).  Nothing on the hot path spawns a thread: the
+//! engines stage each shard's rows into an owned buffer, `Arc`-share the
+//! model, and block until all shards report back.  Below the threshold
+//! the lane thread runs the one batched kernel call itself with the
+//! engine's own scratch.  Results are bit-identical to the per-row
+//! scalar path regardless of batch size or shard count, so batching and
+//! pooling are purely throughput knobs.
 
+use super::pool::{WorkerPool, WorkerScratch};
 use crate::kernel::KernelModel;
 use crate::nn::{Mlp, MlpScratch};
 use crate::runtime::Executable;
-use crate::sketch::{BatchScratch, RaceSketch};
+use crate::sketch::{BatchScratch, FusedMultiSketch, FusedScratch, RaceSketch};
+use std::sync::Arc;
 
 /// Which backend variant a request targets.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -32,6 +48,7 @@ pub enum BackendKind {
     KernelRust,
     NnPjrt,
     KernelPjrt,
+    Multiclass,
 }
 
 impl BackendKind {
@@ -42,6 +59,7 @@ impl BackendKind {
             BackendKind::KernelRust => "kernel",
             BackendKind::NnPjrt => "nn-pjrt",
             BackendKind::KernelPjrt => "kernel-pjrt",
+            BackendKind::Multiclass => "mc",
         }
     }
 
@@ -52,22 +70,26 @@ impl BackendKind {
             "kernel" | "kernel-rust" => BackendKind::KernelRust,
             "nn-pjrt" => BackendKind::NnPjrt,
             "kernel-pjrt" => BackendKind::KernelPjrt,
+            "mc" | "multiclass" => BackendKind::Multiclass,
             _ => return None,
         })
     }
 
-    pub const ALL: [BackendKind; 5] = [
+    pub const ALL: [BackendKind; 6] = [
         BackendKind::Sketch,
         BackendKind::NnRust,
         BackendKind::KernelRust,
         BackendKind::NnPjrt,
         BackendKind::KernelPjrt,
+        BackendKind::Multiclass,
     ];
 }
 
 /// A batch-evaluating engine.  Instances are created *and used* on their
 /// lane's worker thread (see `Router::add_lane`), so no `Send` bound —
-/// which is what lets non-`Send` PJRT executables serve traffic.
+/// which is what lets non-`Send` PJRT executables serve traffic.  CPU
+/// engines fan large batches out to the shared [`WorkerPool`] (jobs own
+/// their shard inputs, so only the job closures need `Send`).
 pub trait Engine {
     /// Expected input dimensionality.
     fn dim(&self) -> usize;
@@ -75,31 +97,53 @@ pub trait Engine {
     fn eval_batch(&mut self, rows: &[Vec<f32>]) -> anyhow::Result<Vec<f32>>;
 }
 
-/// Fan a batch out across cores only when it is at least this large
+/// Fan a batch out across the pool only when it is at least this large
 /// (below this, one batched kernel call on the lane thread wins).
 const PAR_MIN_BATCH: usize = 64;
-/// Minimum rows per worker thread (spawn overhead floor).
+/// Minimum rows per pool shard (handoff overhead floor).
 const PAR_MIN_CHUNK: usize = 16;
 
-/// Worker-thread count for a batch of `n` rows: enough cores to keep
-/// every worker above `PAR_MIN_CHUNK` rows, never more than the machine.
-fn worker_count(n: usize) -> usize {
-    let cores = std::thread::available_parallelism()
-        .map(|c| c.get())
-        .unwrap_or(1);
-    cores.min(n / PAR_MIN_CHUNK).max(1)
+/// Shard count for a batch of `n` rows on `pool`: enough shards to keep
+/// each above `PAR_MIN_CHUNK` rows, never more than the pool's workers.
+fn shard_count(pool: &WorkerPool, n: usize) -> usize {
+    pool.workers().min(n / PAR_MIN_CHUNK).max(1)
 }
 
-/// RS hot path: batch-major sketch kernel with chunked parallel fan-out.
+/// Flatten `rows` (validated earlier) into contiguous per-shard buffers
+/// of `chunk_rows` rows each.
+fn shard_rows(rows: &[Vec<f32>], chunk_rows: usize, d: usize)
+    -> Vec<Vec<f32>> {
+    rows.chunks(chunk_rows)
+        .map(|chunk| {
+            let mut flat = Vec::with_capacity(chunk.len() * d);
+            for r in chunk {
+                flat.extend_from_slice(r);
+            }
+            flat
+        })
+        .collect()
+}
+
+/// RS hot path: batch-major sketch kernel, pool fan-out for big batches.
 pub struct SketchEngine {
-    pub sketch: RaceSketch,
+    pub sketch: Arc<RaceSketch>,
+    pool: Arc<WorkerPool>,
     flat: Vec<f32>,
     scratch: BatchScratch,
 }
 
 impl SketchEngine {
     pub fn new(sketch: RaceSketch) -> Self {
-        Self { sketch, flat: Vec::new(), scratch: BatchScratch::default() }
+        Self::with_pool(sketch, WorkerPool::shared())
+    }
+
+    pub fn with_pool(sketch: RaceSketch, pool: Arc<WorkerPool>) -> Self {
+        Self {
+            sketch: Arc::new(sketch),
+            pool,
+            flat: Vec::new(),
+            scratch: BatchScratch::default(),
+        }
     }
 }
 
@@ -113,46 +157,43 @@ impl Engine for SketchEngine {
             return Ok(Vec::new());
         }
         let d = self.sketch.d;
-        self.flat.clear();
-        self.flat.reserve(rows.len() * d);
         for (i, r) in rows.iter().enumerate() {
             anyhow::ensure!(
                 r.len() == d,
                 "row {i} has dim {}, want {d}",
                 r.len()
             );
-            self.flat.extend_from_slice(r);
         }
         let n = rows.len();
-        let workers = worker_count(n);
-        if n < PAR_MIN_BATCH || workers < 2 {
+        let shards = shard_count(&self.pool, n);
+        if n < PAR_MIN_BATCH || shards < 2 {
             // One batched kernel call on the lane thread, scratch reused.
+            self.flat.clear();
+            self.flat.reserve(n * d);
+            for r in rows {
+                self.flat.extend_from_slice(r);
+            }
             return Ok(self
                 .sketch
                 .query_batch_with(&self.flat, &mut self.scratch)
                 .to_vec());
         }
-        // Chunked fan-out: each worker runs the batched kernel on a
-        // contiguous row range.  Per-query results are independent and
-        // the batched path is bit-identical to scalar, so the split
-        // cannot change answers.
-        let chunk_rows = (n + workers - 1) / workers;
-        let mut out = vec![0.0f32; n];
-        let sketch = &self.sketch;
-        let flat = &self.flat;
-        std::thread::scope(|scope| {
-            for (qchunk, ochunk) in flat
-                .chunks(chunk_rows * d)
-                .zip(out.chunks_mut(chunk_rows))
-            {
-                scope.spawn(move || {
-                    let mut scratch = BatchScratch::default();
-                    let res = sketch.query_batch_with(qchunk, &mut scratch);
-                    ochunk.copy_from_slice(res);
-                });
-            }
-        });
-        Ok(out)
+        // Sharded fan-out through the persistent pool: each shard job
+        // owns its rows and runs the batched kernel with the worker's
+        // resident scratch.  Per-query results are independent and the
+        // batched path is bit-identical to scalar, so the split cannot
+        // change answers.
+        let chunk_rows = (n + shards - 1) / shards;
+        let jobs: Vec<_> = shard_rows(rows, chunk_rows, d)
+            .into_iter()
+            .map(|flat| {
+                let sketch = self.sketch.clone();
+                move |ws: &mut WorkerScratch| {
+                    sketch.query_batch_with(&flat, &mut ws.batch).to_vec()
+                }
+            })
+            .collect();
+        Ok(self.pool.run_jobs(jobs).concat())
     }
 }
 
@@ -182,9 +223,20 @@ impl Engine for MlpEngine {
 }
 
 /// Rust exact weighted KDE (O(M·p) per row — the heaviest rust engine,
-/// so large batches fan out across cores).
+/// so large batches fan out across the pool).
 pub struct KernelEngine {
-    pub model: KernelModel,
+    pub model: Arc<KernelModel>,
+    pool: Arc<WorkerPool>,
+}
+
+impl KernelEngine {
+    pub fn new(model: KernelModel) -> Self {
+        Self::with_pool(model, WorkerPool::shared())
+    }
+
+    pub fn with_pool(model: KernelModel, pool: Arc<WorkerPool>) -> Self {
+        Self { model: Arc::new(model), pool }
+    }
 }
 
 impl Engine for KernelEngine {
@@ -194,25 +246,112 @@ impl Engine for KernelEngine {
 
     fn eval_batch(&mut self, rows: &[Vec<f32>]) -> anyhow::Result<Vec<f32>> {
         let n = rows.len();
-        let workers = worker_count(n);
-        if n < PAR_MIN_BATCH || workers < 2 {
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let d = self.model.params.d;
+        for (i, r) in rows.iter().enumerate() {
+            anyhow::ensure!(
+                r.len() == d,
+                "row {i} has dim {}, want {d}",
+                r.len()
+            );
+        }
+        let shards = shard_count(&self.pool, n);
+        if n < PAR_MIN_BATCH || shards < 2 {
             return Ok(self.model.predict_batch(rows));
         }
-        let chunk_rows = (n + workers - 1) / workers;
-        let mut out = vec![0.0f32; n];
-        let model = &self.model;
-        std::thread::scope(|scope| {
-            for (rchunk, ochunk) in
-                rows.chunks(chunk_rows).zip(out.chunks_mut(chunk_rows))
-            {
-                scope.spawn(move || {
-                    for (o, r) in ochunk.iter_mut().zip(rchunk) {
-                        *o = model.predict(r);
-                    }
-                });
+        let chunk_rows = (n + shards - 1) / shards;
+        let jobs: Vec<_> = shard_rows(rows, chunk_rows, d)
+            .into_iter()
+            .map(|flat| {
+                let model = self.model.clone();
+                move |_ws: &mut WorkerScratch| {
+                    flat.chunks_exact(d)
+                        .map(|r| model.predict(r))
+                        .collect::<Vec<_>>()
+                }
+            })
+            .collect();
+        Ok(self.pool.run_jobs(jobs).concat())
+    }
+}
+
+/// Multiclass lane: the fused class-interleaved sketch.  A drained batch
+/// executes as ONE fused kernel call (one hash pass, one contiguous
+/// gather for all C classes); responses carry the argmax class index as
+/// an f32.
+pub struct MulticlassEngine {
+    pub fused: Arc<FusedMultiSketch>,
+    pool: Arc<WorkerPool>,
+    flat: Vec<f32>,
+    scratch: FusedScratch,
+    preds: Vec<usize>,
+}
+
+impl MulticlassEngine {
+    pub fn new(fused: FusedMultiSketch) -> Self {
+        Self::with_pool(fused, WorkerPool::shared())
+    }
+
+    pub fn with_pool(fused: FusedMultiSketch, pool: Arc<WorkerPool>)
+        -> Self {
+        Self {
+            fused: Arc::new(fused),
+            pool,
+            flat: Vec::new(),
+            scratch: FusedScratch::default(),
+            preds: Vec::new(),
+        }
+    }
+}
+
+impl Engine for MulticlassEngine {
+    fn dim(&self) -> usize {
+        self.fused.d
+    }
+
+    fn eval_batch(&mut self, rows: &[Vec<f32>]) -> anyhow::Result<Vec<f32>> {
+        if rows.is_empty() {
+            return Ok(Vec::new());
+        }
+        let d = self.fused.d;
+        for (i, r) in rows.iter().enumerate() {
+            anyhow::ensure!(
+                r.len() == d,
+                "row {i} has dim {}, want {d}",
+                r.len()
+            );
+        }
+        let n = rows.len();
+        let shards = shard_count(&self.pool, n);
+        if n < PAR_MIN_BATCH || shards < 2 {
+            self.flat.clear();
+            self.flat.reserve(n * d);
+            for r in rows {
+                self.flat.extend_from_slice(r);
             }
-        });
-        Ok(out)
+            self.fused.predict_batch_with(
+                &self.flat,
+                &mut self.scratch,
+                &mut self.preds,
+            );
+            return Ok(self.preds.iter().map(|&c| c as f32).collect());
+        }
+        let chunk_rows = (n + shards - 1) / shards;
+        let jobs: Vec<_> = shard_rows(rows, chunk_rows, d)
+            .into_iter()
+            .map(|flat| {
+                let fused = self.fused.clone();
+                move |ws: &mut WorkerScratch| {
+                    let mut preds = Vec::new();
+                    fused.predict_batch_with(&flat, &mut ws.fused,
+                                             &mut preds);
+                    preds.into_iter().map(|c| c as f32).collect::<Vec<_>>()
+                }
+            })
+            .collect();
+        Ok(self.pool.run_jobs(jobs).concat())
     }
 }
 
@@ -241,7 +380,9 @@ impl Engine for PjrtEngine {
 mod tests {
     use super::*;
     use crate::kernel::KernelParams;
-    use crate::sketch::{QueryScratch, SketchConfig};
+    use crate::sketch::{
+        MultiSketch, QueryScratch, SketchConfig,
+    };
     use crate::util::rng::SplitMix64;
 
     #[test]
@@ -249,6 +390,8 @@ mod tests {
         for k in BackendKind::ALL {
             assert_eq!(BackendKind::parse(k.name()), Some(k));
         }
+        assert_eq!(BackendKind::parse("multiclass"),
+                   Some(BackendKind::Multiclass));
         assert_eq!(BackendKind::parse("bogus"), None);
     }
 
@@ -278,14 +421,15 @@ mod tests {
 
     #[test]
     fn sketch_engine_matches_scalar_for_all_batch_shapes() {
-        // Covers the single-call path (< PAR_MIN_BATCH), the parallel
-        // fan-out path, and ragged final chunks in both.
+        // Covers the single-call path (< PAR_MIN_BATCH), the pool
+        // fan-out path, and ragged final shards in both.
         let kp = random_kp(3, 7, 4, 30);
         let sketch = crate::sketch::RaceSketch::build(
             &kp,
             &SketchConfig::default(),
         );
-        let mut engine = SketchEngine::new(sketch.clone());
+        let pool = Arc::new(WorkerPool::new(4));
+        let mut engine = SketchEngine::with_pool(sketch.clone(), pool);
         let mut s = QueryScratch::default();
         for &n in &[0usize, 1, 7, 63, 64, 67, 130, 257] {
             let rows = random_rows(100 + n as u64, n, 7);
@@ -311,9 +455,10 @@ mod tests {
     #[test]
     fn kernel_engine_matches_scalar_across_par_threshold() {
         let kp = random_kp(5, 6, 3, 20);
-        let model = KernelModel::new(kp);
-        let reference = KernelModel::new(model.params.clone());
-        let mut engine = KernelEngine { model };
+        let reference = KernelModel::new(kp.clone());
+        let pool = Arc::new(WorkerPool::new(4));
+        let mut engine =
+            KernelEngine::with_pool(KernelModel::new(kp), pool);
         for &n in &[1usize, 65, 130] {
             let rows = random_rows(200 + n as u64, n, 6);
             let got = engine.eval_batch(&rows).unwrap();
@@ -325,5 +470,64 @@ mod tests {
                 );
             }
         }
+    }
+
+    fn multiclass_fixture(seed: u64, n_classes: usize)
+        -> (FusedMultiSketch, MultiSketch, usize) {
+        let mut rng = SplitMix64::new(seed);
+        let d = 6usize;
+        let shared_seed = rng.next_u64();
+        let a: Vec<f32> =
+            (0..d * d).map(|_| rng.next_gaussian() as f32 * 0.5).collect();
+        let per_class: Vec<KernelParams> = (0..n_classes)
+            .map(|_| {
+                let m = 14;
+                KernelParams {
+                    d,
+                    p: d,
+                    m,
+                    a: a.clone(),
+                    x: (0..m * d)
+                        .map(|_| rng.next_gaussian() as f32)
+                        .collect(),
+                    alpha: (0..m).map(|_| 0.5 + rng.next_f32()).collect(),
+                    width: 2.0,
+                    lsh_seed: shared_seed,
+                    k_per_row: 2,
+                    default_rows: 48,
+                    default_cols: 16,
+                }
+            })
+            .collect();
+        let cfg = SketchConfig::default();
+        (
+            FusedMultiSketch::build(&per_class, &cfg).unwrap(),
+            MultiSketch::build(&per_class, &cfg).unwrap(),
+            d,
+        )
+    }
+
+    #[test]
+    fn multiclass_engine_matches_scalar_predict_across_par_threshold() {
+        let (fused, ms, d) = multiclass_fixture(0xAC, 5);
+        let pool = Arc::new(WorkerPool::new(4));
+        let mut engine = MulticlassEngine::with_pool(fused, pool);
+        let mut qs = QueryScratch::default();
+        for &n in &[1usize, 30, 64, 67, 130] {
+            let rows = random_rows(300 + n as u64, n, d);
+            let got = engine.eval_batch(&rows).unwrap();
+            assert_eq!(got.len(), n);
+            for (i, r) in rows.iter().enumerate() {
+                let want = ms.predict(r, &mut qs) as f32;
+                assert_eq!(got[i], want, "n={n} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn multiclass_engine_rejects_bad_dim_rows() {
+        let (fused, _, d) = multiclass_fixture(77, 3);
+        let mut engine = MulticlassEngine::new(fused);
+        assert!(engine.eval_batch(&[vec![0.0; d + 1]]).is_err());
     }
 }

@@ -20,21 +20,26 @@
 //! Python is never on this path; the PJRT backends execute AOT artifacts.
 //!
 //! Batching is end-to-end: a drained `DynamicBatcher` batch reaches the
-//! engine as ONE `eval_batch` call, and the sketch/kernel engines execute
-//! it through the batch-major kernels (`RaceSketch::query_batch_with` —
-//! a single CSC hash walk serving the whole batch — with a chunked
-//! `std::thread::scope` fan-out across cores for large batches).  The
-//! batched path is bit-identical to the scalar path, so batch size and
-//! worker count are pure throughput knobs, never correctness knobs.
+//! engine as ONE `eval_batch` call, and the sketch / exact-kernel /
+//! multiclass engines execute it through the batch-major kernels
+//! (`RaceSketch::query_batch_with`, `FusedMultiSketch::predict_batch_with`
+//! — a single CSC hash walk serving the whole batch).  Large batches are
+//! sharded across the **persistent worker pool** (`pool::WorkerPool` —
+//! long-lived threads, channel-fed shard queues, per-worker scratch;
+//! nothing on the hot path spawns a thread).  The batched path is
+//! bit-identical to the scalar path, so batch size and shard count are
+//! pure throughput knobs, never correctness knobs.
 
 pub mod backend;
 pub mod batcher;
+pub mod pool;
 pub mod protocol;
 pub mod router;
 pub mod server;
 
 pub use backend::{BackendKind, Engine};
 pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use pool::{WorkerPool, WorkerScratch};
 pub use protocol::{Request, Response};
 pub use router::{Router, RouterConfig, SubmitError};
 pub use server::Server;

@@ -1,0 +1,311 @@
+//! Persistent sharded worker pool for batch-shard execution.
+//!
+//! The engines used to fan large batches out with a per-batch
+//! `std::thread::scope` — every drained batch paid thread spawn/join
+//! plus a cold `BatchScratch` allocation per worker.  This pool replaces
+//! that with **long-lived** workers:
+//!
+//! * one OS thread per shard, spawned once and reused for every batch
+//!   (the process-wide [`WorkerPool::shared`] instance is what the
+//!   sketch, exact-kernel, and multiclass engines submit to);
+//! * one channel-fed job queue per worker ("sharded" — no contended
+//!   shared queue on the handoff path).  [`WorkerPool::run_jobs`]
+//!   reserves a contiguous run of shard indices per batch, so one
+//!   batch's shards always land on distinct workers; queues are FIFO,
+//!   so under concurrent lanes a shard can still wait behind another
+//!   lane's earlier shard on the same worker (the trade-off for
+//!   queue-per-worker handoff);
+//! * a per-worker [`WorkerScratch`] (batch + scalar + fused query
+//!   scratch) owned by the worker thread and lent to every job it runs,
+//!   so shard execution is allocation-free once warm.
+//!
+//! Jobs own their inputs (engines stage each shard's rows into an owned
+//! buffer and `Arc`-share the model), so no scoped-lifetime tricks or
+//! unsafe are needed; [`WorkerPool::run_jobs`] blocks until every shard
+//! of the submitting batch has reported back, which preserves the
+//! engines' synchronous `eval_batch` contract.  Workers are immortal: a
+//! panicking job is caught, and `run_jobs` re-raises the panic on the
+//! *submitting* thread (the same semantics the old per-batch
+//! `std::thread::scope` fan-out had), so one bad request cannot kill a
+//! shared worker out from under every other lane.
+
+use crate::sketch::{BatchScratch, FusedScratch, QueryScratch};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+
+/// Per-worker reusable scratch, lent to every job the worker executes.
+#[derive(Default)]
+pub struct WorkerScratch {
+    /// Batch-major sketch kernel scratch.
+    pub batch: BatchScratch,
+    /// Scalar query scratch (exact-kernel shards and friends).
+    pub query: QueryScratch,
+    /// Fused multiclass kernel scratch.
+    pub fused: FusedScratch,
+}
+
+type Job = Box<dyn FnOnce(&mut WorkerScratch) + Send + 'static>;
+
+/// Fixed-size pool of long-lived worker threads with per-worker job
+/// queues and scratch.
+pub struct WorkerPool {
+    /// One job queue per worker; `Sender` kept behind a `Mutex` so the
+    /// pool is `Sync` without relying on `Sender: Sync`.
+    shards: Vec<Mutex<Sender<Job>>>,
+    /// Round-robin cursor over the shards.
+    next: AtomicUsize,
+    /// Jobs completed across all workers (observability + tests).
+    executed: Arc<AtomicUsize>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl WorkerPool {
+    /// Spawn `n_workers` (at least 1) long-lived workers.
+    pub fn new(n_workers: usize) -> Self {
+        let n = n_workers.max(1);
+        let executed = Arc::new(AtomicUsize::new(0));
+        let mut shards = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for w in 0..n {
+            let (tx, rx) = channel::<Job>();
+            let handle = std::thread::Builder::new()
+                .name(format!("pool-{w}"))
+                .spawn(move || {
+                    let mut scratch = WorkerScratch::default();
+                    while let Ok(job) = rx.recv() {
+                        // Workers are immortal: `run_jobs` wrappers
+                        // catch and forward job panics, and this last
+                        // line of defense keeps the invariant local.
+                        let _ = std::panic::catch_unwind(
+                            std::panic::AssertUnwindSafe(|| {
+                                job(&mut scratch)
+                            }),
+                        );
+                    }
+                })
+                .expect("spawn pool worker");
+            shards.push(Mutex::new(tx));
+            handles.push(handle);
+        }
+        Self {
+            shards,
+            next: AtomicUsize::new(0),
+            executed,
+            handles: Mutex::new(handles),
+        }
+    }
+
+    /// The process-wide pool shared by every engine (sized to the
+    /// machine).  Its workers live for the life of the process.  Only
+    /// hit at engine construction, never on the batch hot path.
+    pub fn shared() -> Arc<WorkerPool> {
+        static SHARED: Mutex<Option<Arc<WorkerPool>>> = Mutex::new(None);
+        let mut slot = SHARED.lock().unwrap();
+        if let Some(pool) = slot.as_ref() {
+            return pool.clone();
+        }
+        let cores = std::thread::available_parallelism()
+            .map(|c| c.get())
+            .unwrap_or(1);
+        let pool = Arc::new(WorkerPool::new(cores));
+        *slot = Some(pool.clone());
+        pool
+    }
+
+    /// Number of worker threads (fixed at construction — the pool never
+    /// spawns on the submission path).
+    pub fn workers(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total shard jobs completed through [`WorkerPool::run_jobs`].  By
+    /// the time a `run_jobs` call returns, every one of its shards is
+    /// counted (the increment happens-before the shard's result send).
+    pub fn jobs_executed(&self) -> usize {
+        self.executed.load(Ordering::Relaxed)
+    }
+
+    fn send_to(&self, shard: usize, job: Job) {
+        self.shards[shard % self.shards.len()]
+            .lock()
+            .unwrap()
+            .send(job)
+            .expect("pool worker alive");
+    }
+
+    /// Run a batch's shard jobs and block until all complete; results
+    /// come back in submission order.  This is the engines' fan-out
+    /// primitive: shard i's result lands in slot i regardless of which
+    /// worker ran it or in what order shards finished.  The batch
+    /// reserves a contiguous run of shard indices, so its jobs land on
+    /// distinct workers whenever `jobs.len() <= workers()`.  A panicking
+    /// job is re-raised here, on the submitting thread.
+    pub fn run_jobs<T, F>(&self, jobs: Vec<F>) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: FnOnce(&mut WorkerScratch) -> T + Send + 'static,
+    {
+        let n = jobs.len();
+        let (tx, rx) = channel::<(usize, std::thread::Result<T>)>();
+        let start = self.next.fetch_add(n, Ordering::Relaxed);
+        for (i, f) in jobs.into_iter().enumerate() {
+            let tx = tx.clone();
+            let executed = self.executed.clone();
+            self.send_to(
+                start.wrapping_add(i),
+                Box::new(move |ws: &mut WorkerScratch| {
+                    let r = std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(|| f(ws)),
+                    );
+                    executed.fetch_add(1, Ordering::Relaxed);
+                    let _ = tx.send((i, r));
+                }),
+            );
+        }
+        drop(tx);
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, r) = rx.recv().expect("pool shard completed");
+            match r {
+                Ok(v) => out[i] = Some(v),
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+        out.into_iter().map(|o| o.expect("shard slot filled")).collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Closing the queues ends each worker's recv loop; join so no
+        // worker outlives the pool (the `shared()` pool is never
+        // dropped, so its workers persist for the process lifetime).
+        self.shards.clear();
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::thread::ThreadId;
+
+    #[test]
+    fn results_in_submission_order() {
+        let pool = WorkerPool::new(4);
+        let jobs: Vec<_> = (0..32)
+            .map(|i| move |_ws: &mut WorkerScratch| i * 10)
+            .collect();
+        let out = pool.run_jobs(jobs);
+        assert_eq!(out, (0..32).map(|i| i * 10).collect::<Vec<_>>());
+        assert_eq!(pool.jobs_executed(), 32);
+    }
+
+    #[test]
+    fn threads_are_reused_across_batches_never_spawned_per_batch() {
+        // The no-per-batch-spawn contract: across many batches, every
+        // job runs on one of the SAME `workers()` threads.
+        let pool = WorkerPool::new(3);
+        assert_eq!(pool.workers(), 3);
+        let mut seen: HashSet<ThreadId> = HashSet::new();
+        for _batch in 0..20 {
+            let jobs: Vec<_> = (0..6)
+                .map(|_| {
+                    |_ws: &mut WorkerScratch| std::thread::current().id()
+                })
+                .collect();
+            for id in pool.run_jobs(jobs) {
+                seen.insert(id);
+            }
+        }
+        assert!(
+            seen.len() <= 3,
+            "120 jobs must run on at most 3 long-lived threads, saw {}",
+            seen.len()
+        );
+        assert_eq!(pool.jobs_executed(), 120);
+    }
+
+    #[test]
+    fn scratch_persists_per_worker() {
+        // Each worker lends the SAME scratch to successive jobs: warm a
+        // buffer in round 1, observe the warm capacity in round 2.
+        let pool = WorkerPool::new(1);
+        let warm: Vec<_> = (0..1)
+            .map(|_| {
+                |ws: &mut WorkerScratch| {
+                    ws.query.scores.resize(777, 0.0);
+                }
+            })
+            .collect();
+        pool.run_jobs(warm);
+        let probe: Vec<_> = (0..1)
+            .map(|_| |ws: &mut WorkerScratch| ws.query.scores.len())
+            .collect();
+        let got = pool.run_jobs(probe);
+        assert_eq!(got, vec![777]);
+    }
+
+    #[test]
+    fn zero_requested_workers_clamps_to_one() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.workers(), 1);
+        let out =
+            pool.run_jobs(vec![|_ws: &mut WorkerScratch| 42usize]);
+        assert_eq!(out, vec![42]);
+    }
+
+    #[test]
+    fn panicking_job_reraises_on_submitter_and_workers_survive() {
+        let pool = WorkerPool::new(2);
+        let boom = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                pool.run_jobs(vec![
+                    |_ws: &mut WorkerScratch| -> usize {
+                        panic!("shard boom")
+                    },
+                ]);
+            }),
+        );
+        assert!(boom.is_err(), "panic must surface on the submitter");
+        // The long-lived workers survived; later batches run normally.
+        let jobs: Vec<_> = (1..3usize)
+            .map(|i| move |_ws: &mut WorkerScratch| i)
+            .collect();
+        assert_eq!(pool.run_jobs(jobs), vec![1, 2]);
+    }
+
+    #[test]
+    fn shared_pool_is_one_instance() {
+        let a = WorkerPool::shared();
+        let b = WorkerPool::shared();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(a.workers() >= 1);
+    }
+
+    #[test]
+    fn concurrent_submitters_all_complete() {
+        let pool = Arc::new(WorkerPool::new(4));
+        let mut handles = Vec::new();
+        for t in 0..6u64 {
+            let pool = pool.clone();
+            handles.push(std::thread::spawn(move || {
+                let jobs: Vec<_> = (0..50u64)
+                    .map(|i| move |_ws: &mut WorkerScratch| t * 1000 + i)
+                    .collect();
+                pool.run_jobs(jobs)
+            }));
+        }
+        for (t, h) in handles.into_iter().enumerate() {
+            let got = h.join().unwrap();
+            for (i, v) in got.into_iter().enumerate() {
+                assert_eq!(v, t as u64 * 1000 + i as u64);
+            }
+        }
+        assert_eq!(pool.jobs_executed(), 300);
+    }
+}

@@ -5,10 +5,17 @@
 //! repsketch exp table2                     regenerate paper Table 2
 //! repsketch exp figure2 [--csv FILE]       regenerate paper Figure 2
 //! repsketch exp theory [--dataset NAME]    §3.2.1 error-decay check
-//! repsketch serve [--addr A] [--pjrt]      TCP JSON-line inference server
+//! repsketch serve [--addr A] [--pjrt] [--fused NAME=FILE,...]
+//!                                          TCP JSON-line inference server
 //! repsketch eval --dataset NAME [--backend rs|nn|kernel]
 //! repsketch build-sketch --dataset NAME [--rows L] [--cols R] --out FILE
+//! repsketch fuse-sketch --inputs A.rssk,B.rssk,... --out FILE
 //! ```
+//!
+//! `fuse-sketch` interleaves per-class RSSK sketches (one per class, in
+//! class order, built with identical hash configuration) into one RSFM
+//! `FusedMultiSketch`; `serve --fused model=FILE` registers it as a
+//! `mc`-backend lane answering argmax class indices.
 //!
 //! Artifacts root defaults to ./artifacts (override with RS_ARTIFACTS).
 
@@ -21,7 +28,7 @@ use repsketch::experiments::{ablation, figure2, table1, table2, theory};
 use repsketch::kernel::KernelParams;
 use repsketch::runtime::registry::{DatasetBundle, DatasetMeta};
 use repsketch::runtime::Runtime;
-use repsketch::sketch::{RaceSketch, SketchConfig};
+use repsketch::sketch::{FusedMultiSketch, RaceSketch, SketchConfig};
 use std::collections::HashMap;
 use std::sync::Arc;
 
@@ -70,6 +77,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "serve" => cmd_serve(rest),
         "eval" => cmd_eval(rest),
         "build-sketch" => cmd_build_sketch(rest),
+        "fuse-sketch" => cmd_fuse_sketch(rest),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -87,9 +95,11 @@ fn print_usage() {
          repsketch exp figure2 [--csv FILE]\n  \
          repsketch exp theory [--dataset adult]\n  \
          repsketch exp ablation [--dataset adult]\n  \
-         repsketch serve [--addr 127.0.0.1:7878] [--pjrt] [--datasets a,b]\n  \
+         repsketch serve [--addr 127.0.0.1:7878] [--pjrt] [--datasets a,b] \
+         [--fused NAME=FILE,...]\n  \
          repsketch eval --dataset NAME [--backend rs|nn|kernel]\n  \
-         repsketch build-sketch --dataset NAME [--rows L] [--cols R] --out FILE"
+         repsketch build-sketch --dataset NAME [--rows L] [--cols R] --out FILE\n  \
+         repsketch fuse-sketch --inputs A.rssk,B.rssk,... --out FILE"
     );
 }
 
@@ -213,6 +223,12 @@ fn cmd_eval(args: &[String]) -> Result<()> {
         BackendKind::KernelRust => {
             ds.rows().map(|r| bundle.kernel.predict(r)).collect()
         }
+        BackendKind::Multiclass => bail!(
+            "eval --backend mc needs a fused multiclass sketch, which \
+             single-output dataset artifacts don't carry; build one with \
+             `repsketch fuse-sketch` and serve it via \
+             `repsketch serve --fused NAME=FILE`"
+        ),
         BackendKind::NnPjrt | BackendKind::KernelPjrt => {
             let rt = Runtime::cpu()?;
             let file = if backend == BackendKind::NnPjrt {
@@ -274,6 +290,30 @@ fn cmd_build_sketch(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn cmd_fuse_sketch(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args);
+    let inputs = flags.kv.get("inputs").context("--inputs required")?;
+    let out = flags.kv.get("out").context("--out required")?;
+    let classes: Vec<RaceSketch> = inputs
+        .split(',')
+        .map(|path| {
+            let path = path.trim();
+            RaceSketch::load(path).with_context(|| format!("load {path}"))
+        })
+        .collect::<Result<_>>()?;
+    let fused = FusedMultiSketch::from_sketches(&classes)?;
+    fused.save(out)?;
+    println!(
+        "fused {} classes {}x{} ({} params, {} bytes) -> {out}",
+        fused.n_classes(),
+        fused.rows,
+        fused.cols,
+        fused.param_count(),
+        fused.serialized_size()
+    );
+    Ok(())
+}
+
 fn cmd_serve(args: &[String]) -> Result<()> {
     let flags = parse_flags(args);
     let _ = &flags.pos;
@@ -286,9 +326,21 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let with_pjrt = flags.kv.contains_key("pjrt");
     let mut router = Router::new();
     let cfg = RouterConfig::default();
+    // With `--fused` and no explicit `--datasets`, a missing artifacts
+    // tree only skips the dataset lanes (a fused-only server is valid).
+    let datasets_optional = flags.kv.contains_key("fused")
+        && !flags.kv.contains_key("datasets");
     for name in dataset_names(&flags) {
-        let bundle = DatasetBundle::load(&root, &name)
-            .with_context(|| format!("load {name}"))?;
+        let bundle = match DatasetBundle::load(&root, &name)
+            .with_context(|| format!("load {name}"))
+        {
+            Ok(b) => b,
+            Err(e) if datasets_optional => {
+                eprintln!("skipping {name}: {e:#}");
+                continue;
+            }
+            Err(e) => return Err(e),
+        };
         let meta = bundle.meta.clone();
         let sketch = bundle.sketch.clone();
         let mlp = bundle.mlp.clone();
@@ -300,9 +352,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             Ok(Box::new(backend::MlpEngine::new(mlp)) as _)
         }, &cfg);
         router.add_lane(&name, BackendKind::KernelRust, move || {
-            Ok(Box::new(backend::KernelEngine {
-                model: repsketch::kernel::KernelModel::new(kp),
-            }) as _)
+            Ok(Box::new(backend::KernelEngine::new(
+                repsketch::kernel::KernelModel::new(kp),
+            )) as _)
         }, &cfg);
         if with_pjrt {
             let dir = root.join(&name);
@@ -323,6 +375,27 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             }, &cfg);
         }
         println!("registered {name} (dim={})", meta.dim);
+    }
+    // Fused multiclass lanes: `--fused model=path.rsfm[,model=path...]`
+    // (independent of the dataset artifacts tree).
+    if let Some(spec) = flags.kv.get("fused") {
+        for entry in spec.split(',') {
+            let (model, path) = entry
+                .split_once('=')
+                .with_context(|| format!("bad --fused entry {entry:?} \
+                                          (want NAME=FILE)"))?;
+            let model = model.trim().to_string();
+            let fused = FusedMultiSketch::load(path.trim())
+                .with_context(|| format!("load fused sketch {path}"))?;
+            println!(
+                "registered {model} (multiclass, C={}, dim={})",
+                fused.n_classes(),
+                fused.d
+            );
+            router.add_lane(&model, BackendKind::Multiclass, move || {
+                Ok(Box::new(backend::MulticlassEngine::new(fused)) as _)
+            }, &cfg);
+        }
     }
     let router = Arc::new(router);
     let server = Server::bind(router.clone(), &addr)?;

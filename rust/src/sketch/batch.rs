@@ -101,36 +101,26 @@ impl RaceSketch {
 
     /// Median-of-means over the strided column layout for query `bq`.
     /// Mirrors the scalar `median_of_means` op-for-op (same group
-    /// boundaries, same insertion sort, same even/odd median).
+    /// boundaries incl. the remainder-absorbing last group, same
+    /// insertion sort, same even/odd median).
     fn mom_strided(&self, cols_t: &[u32], batch: usize, bq: usize,
                    gm: &mut [f32]) -> f32 {
         let g = gm.len();
-        let m = (self.rows / g).max(1);
-        let used = g.min(self.rows);
         if self.rows < g {
             return self.mean_strided(cols_t, batch, bq);
         }
-        for (gi, slot) in gm.iter_mut().enumerate().take(used) {
+        let m = self.rows / g;
+        for (gi, slot) in gm.iter_mut().enumerate() {
+            let start = gi * m;
+            let end = if gi + 1 == g { self.rows } else { start + m };
             let mut acc = 0.0f32;
-            for l in gi * m..(gi + 1) * m {
+            for l in start..end {
                 let c = cols_t[l * batch + bq] as usize;
                 acc += self.data[l * self.cols + c];
             }
-            *slot = acc / m as f32;
+            *slot = acc / (end - start) as f32;
         }
-        let gm = &mut gm[..used];
-        for i in 1..gm.len() {
-            let mut j = i;
-            while j > 0 && gm[j - 1] > gm[j] {
-                gm.swap(j - 1, j);
-                j -= 1;
-            }
-        }
-        if used % 2 == 1 {
-            gm[used / 2]
-        } else {
-            0.5 * (gm[used / 2 - 1] + gm[used / 2])
-        }
+        super::median_in_place(gm)
     }
 
     /// Stage 4 for one query: gather + estimate + debias.
@@ -226,13 +216,7 @@ impl MultiSketch {
         let scores = self.scores_batch_with(queries, s);
         out.clear();
         for row in scores.chunks_exact(n_classes) {
-            out.push(
-                row.iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .map(|(i, _)| i)
-                    .unwrap_or(0),
-            );
+            out.push(super::argmax(row));
         }
     }
 }

@@ -1,0 +1,677 @@
+//! Fused multiclass Representer Sketch — class-interleaved counter
+//! storage for the paper's §4.6 scaling problem.
+//!
+//! [`super::MultiSketch`] already amortizes the hash pass (one walk of
+//! the shared LSH family serves all C classes), but its gather stage
+//! still reads C *separate* counter arrays at the same L columns: every
+//! query pays C·L scattered cache misses for values that are always
+//! consumed together.  [`FusedMultiSketch`] stores the counters
+//! interleaved as `(rows, cols, classes)` row-major —
+//! `data[(l * R + col) * C + c]` — so ONE gather at `(l, col)` streams
+//! all C class counters from contiguous memory, and the per-class
+//! median-of-means / debias estimate runs **class-innermost** over a
+//! C-wide accumulator (a contiguous auto-vectorizable add, mirroring the
+//! batch-major lanes of [`super::batch`]).
+//!
+//! Every stage reproduces the per-class scalar op order exactly —
+//! projection via [`super::project_into`], the shared hash family, the
+//! remainder-absorbing group spans of `median_of_means`, the insertion
+//! sort in [`super::median_in_place`] — so fused scores and predictions
+//! are **bit-for-bit identical** to `MultiSketch::scores_with` /
+//! `predict` (property-tested below, incl. C = 1, B = 1 and ragged
+//! batches).  That identity is what lets the coordinator's `multiclass`
+//! backend swap the fused engine in as a pure throughput knob.
+//!
+//! Serialization (`RSFM`) lives in [`super::serde`]; the serving lane is
+//! `coordinator::backend::MulticlassEngine`.
+
+use super::{project_into, SketchConfig};
+use crate::kernel::KernelParams;
+use crate::lsh::{concat, LshFamily, SparseL2Lsh};
+use std::sync::Arc;
+
+/// Reusable scratch for fused queries, scalar and batch-major (zero
+/// allocation once warm).
+#[derive(Clone, Debug, Default)]
+pub struct FusedScratch {
+    /// Scalar path: projected query (p).
+    proj: Vec<f32>,
+    /// Scalar path: hash accumulators / codes (L·K), columns (L).
+    acc: Vec<f32>,
+    codes: Vec<i32>,
+    cols: Vec<u32>,
+    /// C-wide class accumulator for the class-innermost gather.
+    class_acc: Vec<f32>,
+    /// Group means, (groups, C) row-major.
+    gm_all: Vec<f32>,
+    /// One class's group means (groups) for the median pass.
+    gm_c: Vec<f32>,
+    /// Per-class scores buffer for `predict`.
+    scores: Vec<f32>,
+    /// Batch path: one query's projection before the transpose (p).
+    proj_row: Vec<f32>,
+    /// Batch path: projections, coordinate-major (p, B).
+    proj_t: Vec<f32>,
+    /// Batch path: hash accumulators / codes, hash-major (L·K, B).
+    acc_b: Vec<f32>,
+    codes_b: Vec<i32>,
+    /// Batch path: per-row columns, row-major (L, B).
+    cols_b: Vec<u32>,
+    /// Batch scores, (B, C) row-major.
+    out: Vec<f32>,
+}
+
+/// Multiclass sketch with class-interleaved counters and one shared hash
+/// family.
+#[derive(Clone, Debug)]
+pub struct FusedMultiSketch {
+    /// Counters, (rows, cols, classes) row-major.
+    data: Vec<f32>,
+    pub n_classes: usize,
+    pub rows: usize,
+    pub cols: usize,
+    pub k_per_row: u32,
+    pub groups: usize,
+    pub use_mom: bool,
+    pub debias: bool,
+    /// Per-class Σα (for debiasing).
+    pub alpha_sums: Vec<f32>,
+    /// Shared input projection A (d, p) row-major.
+    a: Vec<f32>,
+    pub d: usize,
+    pub p: usize,
+    /// The shared L·K hash functions (one generation for all classes).
+    lsh: Arc<SparseL2Lsh>,
+    pub lsh_seed: u64,
+    pub width: f32,
+}
+
+impl FusedMultiSketch {
+    /// Build directly from per-class kernel params.  Same validation as
+    /// `MultiSketch::build`; counter values are bit-identical to the
+    /// per-class `RaceSketch::build` results, only interleaved.
+    pub fn build(per_class: &[KernelParams], cfg: &SketchConfig)
+        -> anyhow::Result<Self> {
+        // One validation + family-generation source shared with
+        // `MultiSketch::build` (see `multiclass::shared_family`).
+        let lsh = super::multiclass::shared_family(per_class, cfg)?;
+        let first = &per_class[0];
+        let rows = if cfg.rows == 0 { first.default_rows } else { cfg.rows };
+        let cols = if cfg.cols == 0 { first.default_cols } else { cfg.cols };
+        let n_classes = per_class.len();
+        let n_hashes = rows * first.k_per_row as usize;
+        let mut data = vec![0.0f32; rows * cols * n_classes];
+        let mut codes = vec![0i32; n_hashes];
+        let mut cidx = vec![0u32; rows];
+        for (ci, kp) in per_class.iter().enumerate() {
+            for j in 0..kp.m {
+                let xj = &kp.x[j * kp.p..(j + 1) * kp.p];
+                lsh.hash_into(xj, &mut codes);
+                concat::rehash_all(&codes, kp.k_per_row as usize,
+                                   cols as u32, &mut cidx);
+                for (l, &c) in cidx.iter().enumerate() {
+                    data[(l * cols + c as usize) * n_classes + ci] +=
+                        kp.alpha[j];
+                }
+            }
+        }
+        Ok(Self {
+            data,
+            n_classes,
+            rows,
+            cols,
+            k_per_row: first.k_per_row,
+            groups: cfg.groups.max(1),
+            use_mom: cfg.use_mom,
+            debias: cfg.debias,
+            alpha_sums: per_class
+                .iter()
+                .map(|kp| kp.alpha.iter().sum())
+                .collect(),
+            a: first.a.clone(),
+            d: first.d,
+            p: first.p,
+            lsh,
+            lsh_seed: first.lsh_seed,
+            width: first.width,
+        })
+    }
+
+    /// Interleave already-built per-class sketches (e.g. loaded RSSK
+    /// files, or a `MultiSketch`'s classes).  All sketches must share
+    /// the full hash + estimator configuration and projection.
+    pub fn from_sketches(classes: &[super::RaceSketch])
+        -> anyhow::Result<Self> {
+        anyhow::ensure!(!classes.is_empty(), "no classes");
+        let first = &classes[0];
+        for sk in classes.iter().skip(1) {
+            anyhow::ensure!(
+                sk.rows == first.rows
+                    && sk.cols == first.cols
+                    && sk.k_per_row == first.k_per_row
+                    && sk.groups == first.groups
+                    && sk.use_mom == first.use_mom
+                    && sk.debias == first.debias
+                    && sk.lsh_seed == first.lsh_seed
+                    && sk.width == first.width
+                    && sk.d == first.d
+                    && sk.p == first.p
+                    && sk.a == first.a,
+                "class sketches must share configuration and projection"
+            );
+        }
+        let n_classes = classes.len();
+        let mut data = vec![0.0f32; first.rows * first.cols * n_classes];
+        for (ci, sk) in classes.iter().enumerate() {
+            for (i, &v) in sk.data.iter().enumerate() {
+                data[i * n_classes + ci] = v;
+            }
+        }
+        Ok(Self {
+            data,
+            n_classes,
+            rows: first.rows,
+            cols: first.cols,
+            k_per_row: first.k_per_row,
+            groups: first.groups,
+            use_mom: first.use_mom,
+            debias: first.debias,
+            alpha_sums: classes.iter().map(|sk| sk.alpha_sum).collect(),
+            a: first.a.clone(),
+            d: first.d,
+            p: first.p,
+            lsh: first.lsh.clone(),
+            lsh_seed: first.lsh_seed,
+            width: first.width,
+        })
+    }
+
+    /// Interleave a per-class `MultiSketch`.
+    pub fn from_multi(ms: &super::MultiSketch) -> anyhow::Result<Self> {
+        Self::from_sketches(&ms.classes)
+    }
+
+    /// Construct from already-validated parts (serde path).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_parts(
+        data: Vec<f32>,
+        n_classes: usize,
+        rows: usize,
+        cols: usize,
+        k_per_row: u32,
+        groups: usize,
+        use_mom: bool,
+        debias: bool,
+        alpha_sums: Vec<f32>,
+        a: Vec<f32>,
+        d: usize,
+        p: usize,
+        lsh_seed: u64,
+        width: f32,
+    ) -> Self {
+        let lsh = Arc::new(SparseL2Lsh::generate(
+            lsh_seed,
+            p,
+            rows * k_per_row as usize,
+            width,
+        ));
+        Self {
+            data,
+            n_classes,
+            rows,
+            cols,
+            k_per_row,
+            groups,
+            use_mom,
+            debias,
+            alpha_sums,
+            a,
+            d,
+            p,
+            lsh,
+            lsh_seed,
+            width,
+        }
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    /// Interleaved counter storage (rows · cols · classes).
+    pub fn counters(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn counter_count(&self) -> usize {
+        self.rows * self.cols * self.n_classes
+    }
+
+    /// Total parameter count: interleaved counters + ONE shared
+    /// projection (same accounting as `MultiSketch::param_count`).
+    pub fn param_count(&self) -> usize {
+        self.counter_count() + self.d * self.p
+    }
+
+    /// Shared projection matrix (d, p) row-major.
+    pub fn projection(&self) -> &[f32] {
+        &self.a
+    }
+
+    /// FLOPs per query: one shared hash pass + per-class aggregation
+    /// (identical to `MultiSketch::flops_per_query`).
+    pub fn flops_per_query(&self) -> usize {
+        2 * self.d * self.p
+            + (self.p * self.k_per_row as usize * self.rows) / 3
+            + self.rows
+            + (self.n_classes - 1) * self.rows
+    }
+
+    fn ensure_scalar_scratch(&self, s: &mut FusedScratch) {
+        let n_hashes = self.rows * self.k_per_row as usize;
+        s.proj.resize(self.p, 0.0);
+        s.acc.resize(n_hashes, 0.0);
+        s.codes.resize(n_hashes, 0);
+        s.cols.resize(self.rows, 0);
+        self.ensure_gather_scratch(s);
+    }
+
+    fn ensure_gather_scratch(&self, s: &mut FusedScratch) {
+        s.class_acc.resize(self.n_classes, 0.0);
+        s.gm_all.resize(self.groups * self.n_classes, 0.0);
+        s.gm_c.resize(self.groups, 0.0);
+    }
+
+    fn ensure_batch_scratch(&self, s: &mut FusedScratch, batch: usize) {
+        let n_hashes = self.rows * self.k_per_row as usize;
+        s.proj_row.resize(self.p, 0.0);
+        s.proj_t.resize(self.p * batch, 0.0);
+        s.acc_b.resize(n_hashes * batch, 0.0);
+        s.codes_b.resize(n_hashes * batch, 0);
+        s.cols_b.resize(self.rows * batch, 0);
+        s.out.resize(batch * self.n_classes, 0.0);
+        self.ensure_gather_scratch(s);
+    }
+
+    /// Stage 4 for one query: ONE class-innermost gather over the
+    /// interleaved counters fills all C estimates.  The query's row
+    /// columns are `cols_t[l * stride + off]` (scalar path: stride 1,
+    /// off 0; batch path: stride B, off bq).  Op-for-op identical per
+    /// class to `RaceSketch::median_of_means` / `mean` + debias.
+    fn estimate_all_classes(
+        &self,
+        cols_t: &[u32],
+        stride: usize,
+        off: usize,
+        class_acc: &mut [f32],
+        gm_all: &mut [f32],
+        gm_c: &mut [f32],
+        out: &mut [f32],
+    ) {
+        let c_n = self.n_classes;
+        let g = self.groups;
+        if self.use_mom && self.rows >= g {
+            let m = self.rows / g;
+            for gi in 0..g {
+                let start = gi * m;
+                let end = if gi + 1 == g { self.rows } else { start + m };
+                class_acc.fill(0.0);
+                for l in start..end {
+                    let col = cols_t[l * stride + off] as usize;
+                    let base = (l * self.cols + col) * c_n;
+                    let src = &self.data[base..base + c_n];
+                    for (a, &v) in class_acc.iter_mut().zip(src) {
+                        *a += v;
+                    }
+                }
+                let div = (end - start) as f32;
+                let dst = &mut gm_all[gi * c_n..(gi + 1) * c_n];
+                for (slot, &a) in dst.iter_mut().zip(class_acc.iter()) {
+                    *slot = a / div;
+                }
+            }
+            for (ci, o) in out.iter_mut().enumerate() {
+                for (gi, slot) in gm_c.iter_mut().enumerate() {
+                    *slot = gm_all[gi * c_n + ci];
+                }
+                *o = super::median_in_place(gm_c);
+            }
+        } else {
+            // Plain mean (also the rows < groups MoM fallback).
+            class_acc.fill(0.0);
+            for l in 0..self.rows {
+                let col = cols_t[l * stride + off] as usize;
+                let base = (l * self.cols + col) * c_n;
+                let src = &self.data[base..base + c_n];
+                for (a, &v) in class_acc.iter_mut().zip(src) {
+                    *a += v;
+                }
+            }
+            for (o, &a) in out.iter_mut().zip(class_acc.iter()) {
+                *o = a / self.rows as f32;
+            }
+        }
+        if self.debias {
+            let r = self.cols as f32;
+            for (o, &asum) in out.iter_mut().zip(self.alpha_sums.iter()) {
+                *o = (*o - asum / r) / (1.0 - 1.0 / r);
+            }
+        }
+    }
+
+    /// Scalar per-class scores: hash once, gather once.  Bit-for-bit
+    /// identical to `MultiSketch::scores_with` on the same classes.
+    pub fn scores_with(&self, q: &[f32], s: &mut FusedScratch,
+                       out: &mut Vec<f32>) {
+        debug_assert_eq!(q.len(), self.d);
+        self.ensure_scalar_scratch(s);
+        project_into(&self.a, self.p, q, &mut s.proj);
+        self.lsh.hash_into_acc(&s.proj, &mut s.acc, &mut s.codes);
+        concat::rehash_all(&s.codes, self.k_per_row as usize,
+                           self.cols as u32, &mut s.cols);
+        out.clear();
+        out.resize(self.n_classes, 0.0);
+        self.estimate_all_classes(&s.cols, 1, 0, &mut s.class_acc,
+                                  &mut s.gm_all, &mut s.gm_c, out);
+    }
+
+    /// Argmax class (same tie-breaking as `MultiSketch::predict` — the
+    /// shared [`super::argmax`]).
+    pub fn predict(&self, q: &[f32], s: &mut FusedScratch) -> usize {
+        let mut scores = std::mem::take(&mut s.scores);
+        self.scores_with(q, s, &mut scores);
+        let best = super::argmax(&scores);
+        s.scores = scores;
+        best
+    }
+
+    /// Batch-major per-class scores: `queries` is (B, d) row-major; the
+    /// returned slice is (B, n_classes) row-major.  One CSC hash walk
+    /// serves the whole batch AND all classes; the gather streams each
+    /// (l, col)'s C counters from contiguous memory.  Bit-for-bit equal
+    /// per query to [`FusedMultiSketch::scores_with`].
+    pub fn scores_batch_with<'s>(&self, queries: &[f32],
+                                 s: &'s mut FusedScratch) -> &'s [f32] {
+        assert_eq!(
+            queries.len() % self.d,
+            0,
+            "query buffer length {} is not a multiple of d = {}",
+            queries.len(),
+            self.d
+        );
+        let batch = queries.len() / self.d;
+        self.ensure_batch_scratch(s, batch);
+        if batch == 0 {
+            return &s.out;
+        }
+        // Stage 1: project all queries into the transposed (p, B) layout
+        // with the scalar accumulation order.
+        for bq in 0..batch {
+            let q = &queries[bq * self.d..(bq + 1) * self.d];
+            project_into(&self.a, self.p, q, &mut s.proj_row);
+            for (o, &v) in s.proj_row.iter().enumerate() {
+                s.proj_t[o * batch + bq] = v;
+            }
+        }
+        // Stages 2+3: one CSC walk for the whole batch, then rehash.
+        self.lsh.hash_batch_into_acc(&s.proj_t, batch, &mut s.acc_b,
+                                     &mut s.codes_b);
+        concat::rehash_all_batch(&s.codes_b, self.k_per_row as usize,
+                                 self.cols as u32, batch, &mut s.cols_b);
+        // Stage 4: fused class-innermost gather per query.
+        let c_n = self.n_classes;
+        for bq in 0..batch {
+            self.estimate_all_classes(
+                &s.cols_b,
+                batch,
+                bq,
+                &mut s.class_acc,
+                &mut s.gm_all,
+                &mut s.gm_c,
+                &mut s.out[bq * c_n..(bq + 1) * c_n],
+            );
+        }
+        &s.out
+    }
+
+    /// Batched argmax prediction (same tie-breaking as
+    /// [`FusedMultiSketch::predict`]).
+    pub fn predict_batch_with(&self, queries: &[f32], s: &mut FusedScratch,
+                              out: &mut Vec<usize>) {
+        let n_classes = self.n_classes;
+        let scores = self.scores_batch_with(queries, s);
+        out.clear();
+        for row in scores.chunks_exact(n_classes) {
+            out.push(super::argmax(row));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::{BatchScratch, MultiSketch, QueryScratch};
+    use crate::util::prop::forall;
+    use crate::util::rng::SplitMix64;
+
+    /// C classes over shared (d, p, A, seed, width, K) with per-class
+    /// points/weights.
+    fn multiclass_params(
+        rng: &mut SplitMix64,
+        n_classes: usize,
+        d: usize,
+        p: usize,
+        rows: usize,
+        cols: usize,
+        k: u32,
+    ) -> Vec<KernelParams> {
+        let shared_seed = rng.next_u64();
+        let a: Vec<f32> =
+            (0..d * p).map(|_| rng.next_gaussian() as f32 * 0.5).collect();
+        (0..n_classes)
+            .map(|_| {
+                let m = 8 + rng.next_range(16);
+                KernelParams {
+                    d,
+                    p,
+                    m,
+                    a: a.clone(),
+                    x: (0..m * p)
+                        .map(|_| rng.next_gaussian() as f32)
+                        .collect(),
+                    alpha: (0..m).map(|_| 0.5 + rng.next_f32()).collect(),
+                    width: 2.0,
+                    lsh_seed: shared_seed,
+                    k_per_row: k,
+                    default_rows: rows,
+                    default_cols: cols,
+                }
+            })
+            .collect()
+    }
+
+    fn random_queries(rng: &mut SplitMix64, batch: usize, d: usize)
+        -> Vec<f32> {
+        (0..batch * d)
+            .map(|_| {
+                if rng.next_f32() < 0.15 {
+                    0.0 // exercise the zero-skip paths
+                } else {
+                    rng.next_gaussian() as f32
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fused_matches_per_class_scalar_bitwise_over_random_configs() {
+        // The tentpole invariant: fused scores == MultiSketch scalar
+        // scores, bit for bit, for random (C, d, p, L, R, K, B, groups,
+        // estimator) — including C = 1, B = 1, ragged batches, and
+        // rows % groups != 0 (the remainder-fold path).
+        forall(
+            61,
+            20,
+            |rng| {
+                let n_classes = 1 + rng.next_range(6);
+                let d = 1 + rng.next_range(10);
+                let p = 1 + rng.next_range(6);
+                let rows = 4 + rng.next_range(60);
+                let cols = 8 + rng.next_range(3) * 7; // 8, 15, 22
+                let k = 1 + rng.next_range(3) as u32;
+                let per_class = multiclass_params(
+                    rng, n_classes, d, p, rows, cols, k,
+                );
+                let cfg = SketchConfig {
+                    rows: 0,
+                    cols: 0,
+                    groups: 1 + rng.next_range(8),
+                    use_mom: rng.next_f32() < 0.7,
+                    debias: rng.next_f32() < 0.7,
+                };
+                let batch = 1 + rng.next_range(37);
+                let queries = random_queries(rng, batch, d);
+                (per_class, cfg, queries, batch, d)
+            },
+            |(per_class, cfg, queries, batch, d)| {
+                let ms = MultiSketch::build(per_class, cfg).unwrap();
+                let fused = FusedMultiSketch::build(per_class, cfg).unwrap();
+                let c_n = fused.n_classes();
+                let mut qs = QueryScratch::default();
+                let mut fs = FusedScratch::default();
+                let mut want = Vec::new();
+                let mut got = Vec::new();
+                for bq in 0..*batch {
+                    let q = &queries[bq * d..(bq + 1) * d];
+                    ms.scores_with(q, &mut qs, &mut want);
+                    fused.scores_with(q, &mut fs, &mut got);
+                    for ci in 0..c_n {
+                        if got[ci].to_bits() != want[ci].to_bits() {
+                            return Err(format!(
+                                "query {bq} class {ci}: fused {} vs \
+                                 per-class {}",
+                                got[ci], want[ci]
+                            ));
+                        }
+                    }
+                    if fused.predict(q, &mut fs) != ms.predict(q, &mut qs) {
+                        return Err(format!("query {bq}: predict diverged"));
+                    }
+                }
+                // Batch-major fused path against the scalar fused path.
+                let batched =
+                    fused.scores_batch_with(queries, &mut fs).to_vec();
+                for bq in 0..*batch {
+                    let q = &queries[bq * d..(bq + 1) * d];
+                    fused.scores_with(q, &mut fs, &mut got);
+                    for ci in 0..c_n {
+                        let b = batched[bq * c_n + ci];
+                        if b.to_bits() != got[ci].to_bits() {
+                            return Err(format!(
+                                "query {bq} class {ci}: batched {b} vs \
+                                 scalar {}",
+                                got[ci]
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn from_sketches_interleaves_build_counters() {
+        let mut rng = SplitMix64::new(71);
+        let per_class = multiclass_params(&mut rng, 4, 6, 4, 48, 16, 2);
+        let cfg = SketchConfig::default();
+        let built = FusedMultiSketch::build(&per_class, &cfg).unwrap();
+        let ms = MultiSketch::build(&per_class, &cfg).unwrap();
+        let fused = FusedMultiSketch::from_multi(&ms).unwrap();
+        assert_eq!(built.counters().len(), fused.counters().len());
+        for (i, (a, b)) in
+            built.counters().iter().zip(fused.counters()).enumerate()
+        {
+            assert_eq!(a.to_bits(), b.to_bits(), "counter {i}");
+        }
+        assert_eq!(built.alpha_sums, fused.alpha_sums);
+    }
+
+    #[test]
+    fn batch_predictions_match_scalar_and_shrinking_scratch_reuse() {
+        let mut rng = SplitMix64::new(81);
+        let per_class = multiclass_params(&mut rng, 5, 7, 4, 50, 16, 2);
+        let fused = FusedMultiSketch::build(
+            &per_class,
+            &SketchConfig::default(),
+        )
+        .unwrap();
+        let mut fs = FusedScratch::default();
+        let mut preds = Vec::new();
+        // Shrinking batch sizes exercise stale-scratch hazards.
+        for &batch in &[29usize, 40, 4, 1] {
+            let queries = random_queries(&mut rng, batch, 7);
+            fused.predict_batch_with(&queries, &mut fs, &mut preds);
+            assert_eq!(preds.len(), batch);
+            let mut fs2 = FusedScratch::default();
+            for bq in 0..batch {
+                let want =
+                    fused.predict(&queries[bq * 7..(bq + 1) * 7], &mut fs2);
+                assert_eq!(preds[bq], want, "B={batch} query {bq}");
+            }
+        }
+        // Empty batch.
+        assert!(fused.scores_batch_with(&[], &mut fs).is_empty());
+    }
+
+    #[test]
+    fn fused_matches_multisketch_batch_path_bitwise() {
+        // Transitivity check against the existing per-class batch lane.
+        let mut rng = SplitMix64::new(91);
+        let per_class = multiclass_params(&mut rng, 3, 5, 5, 48, 16, 2);
+        let cfg = SketchConfig::default();
+        let ms = MultiSketch::build(&per_class, &cfg).unwrap();
+        let fused = FusedMultiSketch::build(&per_class, &cfg).unwrap();
+        let queries = random_queries(&mut rng, 33, 5);
+        let mut bs = BatchScratch::default();
+        let mut fs = FusedScratch::default();
+        let want = ms.scores_batch_with(&queries, &mut bs).to_vec();
+        let got = fused.scores_batch_with(&queries, &mut fs);
+        assert_eq!(want.len(), got.len());
+        for (i, (w, g)) in want.iter().zip(got).enumerate() {
+            assert_eq!(w.to_bits(), g.to_bits(), "slot {i}");
+        }
+    }
+
+    #[test]
+    fn rejects_mismatched_classes() {
+        let mut rng = SplitMix64::new(101);
+        let mut per_class = multiclass_params(&mut rng, 3, 4, 4, 32, 16, 1);
+        per_class[2].lsh_seed ^= 1;
+        assert!(FusedMultiSketch::build(
+            &per_class,
+            &SketchConfig::default()
+        )
+        .is_err());
+        let per_class = multiclass_params(&mut rng, 2, 4, 4, 32, 16, 1);
+        let cfg = SketchConfig::default();
+        let s1 = crate::sketch::RaceSketch::build(&per_class[0], &cfg);
+        let s2 = crate::sketch::RaceSketch::build(
+            &per_class[1],
+            &SketchConfig { rows: 16, ..SketchConfig::default() },
+        );
+        assert!(FusedMultiSketch::from_sketches(&[s1, s2]).is_err());
+    }
+
+    #[test]
+    fn accounting_matches_multisketch() {
+        let mut rng = SplitMix64::new(111);
+        let per_class = multiclass_params(&mut rng, 4, 6, 3, 40, 16, 2);
+        let cfg = SketchConfig::default();
+        let ms = MultiSketch::build(&per_class, &cfg).unwrap();
+        let fused = FusedMultiSketch::build(&per_class, &cfg).unwrap();
+        assert_eq!(fused.param_count(), ms.param_count());
+        assert_eq!(fused.flops_per_query(), ms.flops_per_query());
+        assert_eq!(fused.counter_count(), 40 * 16 * 4);
+    }
+}

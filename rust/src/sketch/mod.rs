@@ -24,14 +24,17 @@
 //!   [`batch`].
 
 pub mod batch;
+pub mod fused;
 pub mod multiclass;
 pub mod serde;
 
 pub use batch::BatchScratch;
+pub use fused::{FusedMultiSketch, FusedScratch};
 pub use multiclass::MultiSketch;
 
 use crate::kernel::KernelParams;
 use crate::lsh::{concat, LshFamily, SparseL2Lsh};
+use std::sync::Arc;
 
 /// Sketch-size / estimator configuration.
 #[derive(Clone, Debug)]
@@ -85,8 +88,12 @@ pub struct RaceSketch {
     a: Vec<f32>,
     pub d: usize,
     pub p: usize,
-    /// The L·K hash functions over the projected space.
-    lsh: SparseL2Lsh,
+    /// The L·K hash functions over the projected space.  Behind an `Arc`
+    /// so `MultiSketch`/`FusedMultiSketch` can share ONE generated family
+    /// across all classes (§Perf: `generate` is O(L·K·p) rng draws plus a
+    /// CSC build — regenerating it per class made multiclass build time
+    /// scale with C for identical output).
+    lsh: Arc<SparseL2Lsh>,
     pub lsh_seed: u64,
     pub width: f32,
 }
@@ -97,9 +104,29 @@ impl RaceSketch {
     /// retraining (Figure 2).
     pub fn build(kp: &KernelParams, cfg: &SketchConfig) -> Self {
         let rows = if cfg.rows == 0 { kp.default_rows } else { cfg.rows };
+        let n_hashes = rows * kp.k_per_row as usize;
+        let lsh = Arc::new(SparseL2Lsh::generate(
+            kp.lsh_seed,
+            kp.p,
+            n_hashes,
+            kp.width,
+        ));
+        Self::build_with_lsh(kp, cfg, lsh)
+    }
+
+    /// Build against an already-generated hash family (shared across the
+    /// classes of a multiclass sketch).  `lsh` must match the (seed, p,
+    /// L·K, width) this build would otherwise generate.
+    pub fn build_with_lsh(
+        kp: &KernelParams,
+        cfg: &SketchConfig,
+        lsh: Arc<SparseL2Lsh>,
+    ) -> Self {
+        let rows = if cfg.rows == 0 { kp.default_rows } else { cfg.rows };
         let cols = if cfg.cols == 0 { kp.default_cols } else { cfg.cols };
         let n_hashes = rows * kp.k_per_row as usize;
-        let lsh = SparseL2Lsh::generate(kp.lsh_seed, kp.p, n_hashes, kp.width);
+        assert_eq!(lsh.n_hashes(), n_hashes, "shared LSH hash count");
+        assert_eq!(lsh.dim(), kp.p, "shared LSH dimensionality");
         let mut data = vec![0.0f32; rows * cols];
         let mut codes = vec![0i32; n_hashes];
         let mut cidx = vec![0u32; rows];
@@ -189,16 +216,7 @@ impl RaceSketch {
         // cloning (perf: this was a per-query allocation before §Perf).
         let mut proj = std::mem::take(&mut s.proj);
         proj.resize(self.p, 0.0);
-        proj.fill(0.0);
-        for (i, &qi) in q.iter().enumerate() {
-            if qi == 0.0 {
-                continue;
-            }
-            let row = &self.a[i * self.p..(i + 1) * self.p];
-            for (o, &aij) in proj.iter_mut().zip(row) {
-                *o += qi * aij;
-            }
-        }
+        project_into(&self.a, self.p, q, &mut proj);
         let out = self.query_projected_with(&proj, s);
         s.proj = proj;
         out
@@ -241,35 +259,27 @@ impl RaceSketch {
         acc / self.rows as f32
     }
 
-    /// Algorithm 2: median of g group means.
+    /// Algorithm 2: median of g group means.  The last group absorbs the
+    /// `rows % g` remainder rows (they were silently dropped before —
+    /// every row must contribute to the estimate); group means divide by
+    /// the actual group size.  The batched (`batch::mom_strided`) and
+    /// fused (`fused`) paths mirror this op-for-op.
     fn median_of_means(&self, cols: &[u32], gm: &mut [f32]) -> f32 {
         let g = gm.len();
-        let m = (self.rows / g).max(1);
-        let used = g.min(self.rows); // if rows < groups fall back
         if self.rows < g {
             return self.mean(cols);
         }
-        for (gi, slot) in gm.iter_mut().enumerate().take(used) {
+        let m = self.rows / g;
+        for (gi, slot) in gm.iter_mut().enumerate() {
+            let start = gi * m;
+            let end = if gi + 1 == g { self.rows } else { start + m };
             let mut acc = 0.0f32;
-            for l in gi * m..(gi + 1) * m {
+            for l in start..end {
                 acc += self.data[l * self.cols + cols[l] as usize];
             }
-            *slot = acc / m as f32;
+            *slot = acc / (end - start) as f32;
         }
-        // median of gm[0..used] without allocation: insertion sort (g<=16)
-        let gm = &mut gm[..used];
-        for i in 1..gm.len() {
-            let mut j = i;
-            while j > 0 && gm[j - 1] > gm[j] {
-                gm.swap(j - 1, j);
-                j -= 1;
-            }
-        }
-        if used % 2 == 1 {
-            gm[used / 2]
-        } else {
-            0.5 * (gm[used / 2 - 1] + gm[used / 2])
-        }
+        median_in_place(gm)
     }
 
     // -- staged pipeline (crate-internal; used by MultiSketch to share
@@ -281,16 +291,7 @@ impl RaceSketch {
 
     /// Stage 1: project the raw query into `s.proj`.
     pub(crate) fn project_pub(&self, q: &[f32], s: &mut QueryScratch) {
-        s.proj.fill(0.0);
-        for (i, &qi) in q.iter().enumerate() {
-            if qi == 0.0 {
-                continue;
-            }
-            let row = &self.a[i * self.p..(i + 1) * self.p];
-            for (o, &aij) in s.proj.iter_mut().zip(row) {
-                *o += qi * aij;
-            }
-        }
+        project_into(&self.a, self.p, q, &mut s.proj);
     }
 
     /// Stage 2: hash the projected query and fill `s.cols`.
@@ -323,6 +324,57 @@ impl RaceSketch {
         2 * self.d * self.p
             + (self.p * self.k_per_row as usize * self.rows) / 3
             + self.rows
+    }
+}
+
+/// Scalar projection `out = A^T q` with coordinate-ascending accumulation
+/// — the canonical op order every query path (scalar, batch, fused)
+/// reproduces so results stay bit-identical across engines.  `a` is
+/// (d, p) row-major; empty-`a` callers must not reach this.
+pub(crate) fn project_into(a: &[f32], p: usize, q: &[f32], out: &mut [f32]) {
+    out.fill(0.0);
+    for (i, &qi) in q.iter().enumerate() {
+        if qi == 0.0 {
+            continue;
+        }
+        let row = &a[i * p..(i + 1) * p];
+        for (o, &aij) in out.iter_mut().zip(row) {
+            *o += qi * aij;
+        }
+    }
+}
+
+/// Argmax over per-class scores with a TOTAL order (`f32::total_cmp`),
+/// shared by every multiclass predict path (scalar, batched, fused) so
+/// tie-breaking — last maximal index wins — stays identical across
+/// engines.  Total ordering means NaN scores (e.g. a debiased R = 1
+/// sketch, where the debias divides by 1 − 1/R = 0) yield a
+/// deterministic class instead of panicking the serving lane.
+pub(crate) fn argmax(scores: &[f32]) -> usize {
+    scores
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Median of `v` without allocation: insertion sort (g <= 16 in practice)
+/// then the odd/even midpoint rule.  Shared by the scalar, batched, and
+/// fused estimators so the sort + midpoint stay op-identical.
+pub(crate) fn median_in_place(v: &mut [f32]) -> f32 {
+    for i in 1..v.len() {
+        let mut j = i;
+        while j > 0 && v[j - 1] > v[j] {
+            v.swap(j - 1, j);
+            j -= 1;
+        }
+    }
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
     }
 }
 
@@ -516,6 +568,45 @@ mod tests {
             sk.flops_per_query(),
             2 * 10 * 4 + (4 * 1 * 300) / 3 + 300
         );
+    }
+
+    #[test]
+    fn mom_counts_trailing_remainder_rows() {
+        // rows = 10, groups = 3: group spans are [0,3), [3,6), [6,10) —
+        // the last group absorbs the remainder row 9 (the old code
+        // silently dropped rows 9..10 and divided by m = 3).
+        //
+        // Constant counters per row make the gather independent of the
+        // hash outcome, so the MoM value is exact: row 9 carries -1000,
+        // pulling its group mean to (6 + 7 + 8 - 1000)/4 = -244.75 and
+        // the median to group 0's mean 1.0.  Dropping row 9 would give
+        // (6+7+8)/3 = 7 and a median of 4.0 instead.
+        let (rows, cols, p) = (10usize, 4usize, 2usize);
+        let mut data = vec![0.0f32; rows * cols];
+        for l in 0..rows {
+            let v = if l == 9 { -1000.0 } else { l as f32 };
+            data[l * cols..(l + 1) * cols].fill(v);
+        }
+        let mut a = vec![0.0f32; p * p];
+        a[0] = 1.0;
+        a[p + 1] = 1.0;
+        let sk = RaceSketch {
+            data,
+            rows,
+            cols,
+            k_per_row: 1,
+            groups: 3,
+            use_mom: true,
+            debias: false,
+            alpha_sum: 0.0,
+            a,
+            d: p,
+            p,
+            lsh: Arc::new(SparseL2Lsh::generate(7, p, rows, 2.0)),
+            lsh_seed: 7,
+            width: 2.0,
+        };
+        assert_eq!(sk.query(&[0.3, -0.7]), 1.0);
     }
 
     #[test]

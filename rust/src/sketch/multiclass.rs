@@ -17,34 +17,70 @@
 
 use super::{QueryScratch, RaceSketch, SketchConfig};
 use crate::kernel::KernelParams;
+use crate::lsh::SparseL2Lsh;
+use std::sync::Arc;
 
 /// One sketch per class, shared hash functions.
 pub struct MultiSketch {
-    /// Class sketches; all built with identical (seed, L, R, K).
+    /// Class sketches; all built with identical (seed, L, R, K) and ONE
+    /// shared `Arc<SparseL2Lsh>` (the family is generated once, not once
+    /// per class).
     pub classes: Vec<RaceSketch>,
+}
+
+/// Validate that every class shares the hash configuration (d/p/seed/
+/// width/K and the sketch-shape defaults — they may differ only in
+/// points and weights), then generate the ONE `SparseL2Lsh` family all
+/// class builds share.  The single validation + generation source for
+/// both [`MultiSketch::build`] and `FusedMultiSketch::build`, so the
+/// two lanes cannot drift.
+pub(crate) fn shared_family(
+    per_class: &[KernelParams],
+    cfg: &SketchConfig,
+) -> anyhow::Result<Arc<SparseL2Lsh>> {
+    anyhow::ensure!(!per_class.is_empty(), "no classes");
+    let first = &per_class[0];
+    for kp in per_class.iter().skip(1) {
+        anyhow::ensure!(
+            kp.d == first.d
+                && kp.p == first.p
+                && kp.lsh_seed == first.lsh_seed
+                && kp.k_per_row == first.k_per_row
+                // Bitwise: the shared family is generated from
+                // first.width, but each class SERIALIZES its own
+                // kp.width and regenerates from it on load — any
+                // tolerated difference would silently desync the
+                // reloaded hash columns from the counters.
+                && kp.width.to_bits() == first.width.to_bits()
+                // The shape defaults only matter when cfg doesn't
+                // override them.
+                && (cfg.rows != 0 || kp.default_rows == first.default_rows)
+                && (cfg.cols != 0 || kp.default_cols == first.default_cols),
+            "class kernel params must share hash configuration"
+        );
+    }
+    // The family is a pure function of (seed, p, L·K, width), which the
+    // ensure above pins to be identical for every class.
+    let rows = if cfg.rows == 0 { first.default_rows } else { cfg.rows };
+    Ok(Arc::new(SparseL2Lsh::generate(
+        first.lsh_seed,
+        first.p,
+        rows * first.k_per_row as usize,
+        first.width,
+    )))
 }
 
 impl MultiSketch {
     /// Build from per-class kernel params.  All classes must share
-    /// d/p/A/seed/width/K (they differ in points and weights).
+    /// d/p/A/seed/width/K and the sketch-shape defaults (they differ in
+    /// points and weights).
     pub fn build(per_class: &[KernelParams], cfg: &SketchConfig)
         -> anyhow::Result<Self> {
-        anyhow::ensure!(!per_class.is_empty(), "no classes");
-        let first = &per_class[0];
-        for kp in per_class.iter().skip(1) {
-            anyhow::ensure!(
-                kp.d == first.d
-                    && kp.p == first.p
-                    && kp.lsh_seed == first.lsh_seed
-                    && kp.k_per_row == first.k_per_row
-                    && (kp.width - first.width).abs() < 1e-9,
-                "class kernel params must share hash configuration"
-            );
-        }
+        let lsh = shared_family(per_class, cfg)?;
         Ok(Self {
             classes: per_class
                 .iter()
-                .map(|kp| RaceSketch::build(kp, cfg))
+                .map(|kp| RaceSketch::build_with_lsh(kp, cfg, lsh.clone()))
                 .collect(),
         })
     }
@@ -79,12 +115,7 @@ impl MultiSketch {
     pub fn predict(&self, q: &[f32], s: &mut QueryScratch) -> usize {
         let mut scores = std::mem::take(&mut s.scores);
         self.scores_with(q, s, &mut scores);
-        let best = scores
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i)
-            .unwrap_or(0);
+        let best = super::argmax(&scores);
         s.scores = scores;
         best
     }
@@ -189,6 +220,21 @@ mod tests {
                     scores[c]
                 );
             }
+        }
+    }
+
+    #[test]
+    fn build_generates_one_shared_lsh_family() {
+        // The satellite fix: C classes share ONE Arc'd family instead of
+        // regenerating an identical one per class.
+        let (per_class, _) = blob_params(11);
+        let ms =
+            MultiSketch::build(&per_class, &SketchConfig::default()).unwrap();
+        for sk in ms.classes.iter().skip(1) {
+            assert!(
+                Arc::ptr_eq(&ms.classes[0].lsh, &sk.lsh),
+                "classes must share the same SparseL2Lsh allocation"
+            );
         }
     }
 

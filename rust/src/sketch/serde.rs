@@ -1,5 +1,7 @@
-//! RSSK binary serialization for built sketches — lets an edge device load
-//! a ready sketch without the kernel params.  Layout (little-endian):
+//! Binary serialization for built sketches — lets an edge device load a
+//! ready sketch without the kernel params.
+//!
+//! RSSK (single-output [`RaceSketch`]), little-endian:
 //!
 //! ```text
 //! magic b"RSSK" | u32 version
@@ -8,12 +10,78 @@
 //! u32 d | u32 p | f32 width | u64 lsh_seed | f32 alpha_sum
 //! f32 A[d*p] | f32 counters[rows*cols]
 //! ```
+//!
+//! RSFM (class-interleaved [`FusedMultiSketch`]), little-endian:
+//!
+//! ```text
+//! magic b"RSFM" | u32 version
+//! u32 n_classes | u32 rows | u32 cols | u32 k_per_row | u32 groups
+//! u8 use_mom | u8 debias | u16 pad
+//! u32 d | u32 p | f32 width | u64 lsh_seed
+//! f32 alpha_sums[C] | f32 A[d*p] | f32 counters[rows*cols*C]
+//! ```
+//!
+//! Counters round-trip bitwise in both formats; the hash family is
+//! regenerated from the stored seed on load.
 
-use super::RaceSketch;
+use super::{FusedMultiSketch, RaceSketch};
 use crate::lsh::SparseL2Lsh;
 use anyhow::{bail, Context, Result};
 use std::io::Read;
 use std::path::Path;
+use std::sync::Arc;
+
+/// Upper bound on L·K accepted from a sketch file header: the hash
+/// family is regenerated at load, so an unchecked `rows * k_per_row`
+/// from a crafted header would drive a multi-gigabyte allocation in
+/// `SparseL2Lsh::generate`.  The paper's deepest configs are L ≤ 2000,
+/// K ≤ 4; 1 << 26 leaves orders of magnitude of headroom.
+const MAX_N_HASHES: u128 = 1 << 26;
+/// Upper bound on the d/p dimensionalities accepted from a header (the
+/// generate-time CSC build allocates O(p) and walks O(n_hashes·p)).
+const MAX_DIM: usize = 1 << 22;
+
+fn check_hash_config(
+    rows: usize,
+    k_per_row: u32,
+    d: usize,
+    p: usize,
+) -> Result<()> {
+    let n = rows as u128 * k_per_row as u128;
+    if n > MAX_N_HASHES {
+        bail!("sketch header requests {n} hash functions (max {MAX_N_HASHES})");
+    }
+    if d == 0 || p == 0 || d > MAX_DIM || p > MAX_DIM {
+        bail!("sketch header dimensionality d={d} p={p} out of range");
+    }
+    Ok(())
+}
+
+/// Little-endian read cursor over a byte buffer.
+struct Cur<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("truncated sketch file");
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
 
 impl RaceSketch {
     pub fn to_bytes(&self) -> Vec<u8> {
@@ -53,29 +121,6 @@ impl RaceSketch {
         if buf.len() < 8 || &buf[..4] != b"RSSK" {
             bail!("not an RSSK file");
         }
-        struct Cur<'a> {
-            b: &'a [u8],
-            i: usize,
-        }
-        impl<'a> Cur<'a> {
-            fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-                if self.i + n > self.b.len() {
-                    bail!("truncated RSSK");
-                }
-                let s = &self.b[self.i..self.i + n];
-                self.i += n;
-                Ok(s)
-            }
-            fn u32(&mut self) -> Result<u32> {
-                Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
-            }
-            fn f32(&mut self) -> Result<f32> {
-                Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
-            }
-            fn u64(&mut self) -> Result<u64> {
-                Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
-            }
-        }
         let mut c = Cur { b: buf, i: 4 };
         let version = c.u32()?;
         if version != 1 {
@@ -93,22 +138,32 @@ impl RaceSketch {
         let width = c.f32()?;
         let lsh_seed = c.u64()?;
         let alpha_sum = c.f32()?;
+        if rows == 0 || cols == 0 || groups == 0 || k_per_row == 0 {
+            bail!("RSSK header has a zero-sized field");
+        }
+        check_hash_config(rows, k_per_row, d, p)?;
         let i = c.i;
-        let need = (d * p + rows * cols) * 4;
-        if buf.len() != i + need {
-            bail!("RSSK size mismatch: have {}, want {}", buf.len(), i + need);
+        // u128 so crafted huge header fields cannot wrap the size check.
+        let need =
+            4u128 * (d as u128 * p as u128 + rows as u128 * cols as u128);
+        if (buf.len() - i) as u128 != need {
+            bail!(
+                "RSSK size mismatch: have {}, want {}",
+                buf.len() - i,
+                need
+            );
         }
         let mut floats = buf[i..]
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()));
         let a: Vec<f32> = floats.by_ref().take(d * p).collect();
         let data: Vec<f32> = floats.collect();
-        let lsh = SparseL2Lsh::generate(
+        let lsh = Arc::new(SparseL2Lsh::generate(
             lsh_seed,
             p,
             rows * k_per_row as usize,
             width,
-        );
+        ));
         Ok(Self {
             data,
             rows,
@@ -143,9 +198,116 @@ impl RaceSketch {
 
 }
 
+impl FusedMultiSketch {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.serialized_size());
+        out.extend_from_slice(b"RSFM");
+        out.extend_from_slice(&1u32.to_le_bytes());
+        for v in [
+            self.n_classes as u32,
+            self.rows as u32,
+            self.cols as u32,
+            self.k_per_row,
+            self.groups as u32,
+        ] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.push(self.use_mom as u8);
+        out.push(self.debias as u8);
+        out.extend_from_slice(&[0u8; 2]);
+        out.extend_from_slice(&(self.d as u32).to_le_bytes());
+        out.extend_from_slice(&(self.p as u32).to_le_bytes());
+        out.extend_from_slice(&self.width.to_le_bytes());
+        out.extend_from_slice(&self.lsh_seed.to_le_bytes());
+        for v in self
+            .alpha_sums
+            .iter()
+            .chain(self.projection())
+            .chain(self.counters())
+        {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_bytes())
+            .with_context(|| format!("write {:?}", path.as_ref()))
+    }
+
+    pub fn from_bytes(buf: &[u8]) -> Result<Self> {
+        if buf.len() < 8 || &buf[..4] != b"RSFM" {
+            bail!("not an RSFM file");
+        }
+        let mut c = Cur { b: buf, i: 4 };
+        let version = c.u32()?;
+        if version != 1 {
+            bail!("unsupported RSFM version {version}");
+        }
+        let n_classes = c.u32()? as usize;
+        let rows = c.u32()? as usize;
+        let cols = c.u32()? as usize;
+        let k_per_row = c.u32()?;
+        let groups = c.u32()? as usize;
+        let flags = c.take(4)?;
+        let use_mom = flags[0] != 0;
+        let debias = flags[1] != 0;
+        let d = c.u32()? as usize;
+        let p = c.u32()? as usize;
+        let width = c.f32()?;
+        let lsh_seed = c.u64()?;
+        if n_classes == 0 || rows == 0 || cols == 0 || groups == 0
+            || k_per_row == 0
+        {
+            bail!("RSFM header has a zero-sized field");
+        }
+        check_hash_config(rows, k_per_row, d, p)?;
+        let i = c.i;
+        // u128 so crafted huge header fields cannot wrap the size check.
+        let need = 4u128
+            * (n_classes as u128
+                + d as u128 * p as u128
+                + rows as u128 * cols as u128 * n_classes as u128);
+        if (buf.len() - i) as u128 != need {
+            bail!(
+                "RSFM size mismatch: have {}, want {}",
+                buf.len() - i,
+                need
+            );
+        }
+        let mut floats = buf[i..]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()));
+        let alpha_sums: Vec<f32> = floats.by_ref().take(n_classes).collect();
+        let a: Vec<f32> = floats.by_ref().take(d * p).collect();
+        let data: Vec<f32> = floats.collect();
+        Ok(Self::from_parts(
+            data, n_classes, rows, cols, k_per_row, groups, use_mom,
+            debias, alpha_sums, a, d, p, lsh_seed, width,
+        ))
+    }
+
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let mut buf = Vec::new();
+        std::fs::File::open(path.as_ref())
+            .with_context(|| format!("open {:?}", path.as_ref()))?
+            .read_to_end(&mut buf)?;
+        Self::from_bytes(&buf)
+    }
+
+    /// Serialized size: 52-byte header + per-class Σα + projection +
+    /// interleaved counters.
+    pub fn serialized_size(&self) -> usize {
+        52 + 4 * (self.n_classes + self.d * self.p + self.counter_count())
+    }
+}
+
 #[cfg(test)]
 mod tests {
-    use super::super::{QueryScratch, RaceSketch, SketchConfig};
+    use super::super::{
+        FusedMultiSketch, FusedScratch, QueryScratch, RaceSketch,
+        SketchConfig,
+    };
     use crate::kernel::KernelParams;
     use crate::util::rng::SplitMix64;
 
@@ -199,5 +361,104 @@ mod tests {
             b
         };
         assert!(RaceSketch::from_bytes(&bytes2).is_err());
+    }
+
+    fn sample_fused() -> FusedMultiSketch {
+        let mut rng = SplitMix64::new(21);
+        let (d, p, m, n_classes) = (5usize, 3usize, 20usize, 4usize);
+        let shared_seed = 0xF00D_u64;
+        let a: Vec<f32> =
+            (0..d * p).map(|_| rng.next_gaussian() as f32).collect();
+        let per_class: Vec<KernelParams> = (0..n_classes)
+            .map(|_| KernelParams {
+                d,
+                p,
+                m,
+                a: a.clone(),
+                x: (0..m * p).map(|_| rng.next_gaussian() as f32).collect(),
+                alpha: (0..m).map(|_| rng.next_f32()).collect(),
+                width: 2.0,
+                lsh_seed: shared_seed,
+                k_per_row: 2,
+                default_rows: 40,
+                default_cols: 16,
+            })
+            .collect();
+        FusedMultiSketch::build(&per_class, &SketchConfig::default())
+            .unwrap()
+    }
+
+    #[test]
+    fn fused_roundtrip_preserves_scores_bitwise() {
+        let fused = sample_fused();
+        let bytes = fused.to_bytes();
+        let fused2 = FusedMultiSketch::from_bytes(&bytes).unwrap();
+        assert_eq!(fused.n_classes(), fused2.n_classes());
+        for (a, b) in fused.counters().iter().zip(fused2.counters()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let mut rng = SplitMix64::new(22);
+        let mut s = FusedScratch::default();
+        let (mut sc1, mut sc2) = (Vec::new(), Vec::new());
+        for _ in 0..15 {
+            let q: Vec<f32> =
+                (0..5).map(|_| rng.next_gaussian() as f32).collect();
+            fused.scores_with(&q, &mut s, &mut sc1);
+            fused2.scores_with(&q, &mut s, &mut sc2);
+            for (x, y) in sc1.iter().zip(&sc2) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn fused_serialized_size_matches() {
+        let fused = sample_fused();
+        assert_eq!(fused.to_bytes().len(), fused.serialized_size());
+    }
+
+    #[test]
+    fn fused_rejects_corruption_and_wrong_magic() {
+        let fused = sample_fused();
+        let mut bytes = fused.to_bytes();
+        bytes.truncate(bytes.len() - 5);
+        assert!(FusedMultiSketch::from_bytes(&bytes).is_err());
+        let mut wrong = fused.to_bytes();
+        wrong[3] = b'K';
+        assert!(FusedMultiSketch::from_bytes(&wrong).is_err());
+        // An RSSK file is not an RSFM file (and vice versa).
+        let rssk = sample_sketch().to_bytes();
+        assert!(FusedMultiSketch::from_bytes(&rssk).is_err());
+        assert!(RaceSketch::from_bytes(&fused.to_bytes()).is_err());
+    }
+
+    #[test]
+    fn loaders_reject_zero_sized_header_fields() {
+        // A crafted groups=0 (or rows/cols=0) header must fail at load,
+        // not divide-by-zero at query time.
+        let mut rsfm = sample_fused().to_bytes();
+        rsfm[24..28].copy_from_slice(&0u32.to_le_bytes()); // groups
+        assert!(FusedMultiSketch::from_bytes(&rsfm).is_err());
+        let mut rssk = sample_sketch().to_bytes();
+        rssk[20..24].copy_from_slice(&0u32.to_le_bytes()); // groups
+        assert!(RaceSketch::from_bytes(&rssk).is_err());
+    }
+
+    #[test]
+    fn loaders_reject_absurd_hash_counts() {
+        // A crafted k_per_row or p = u32::MAX must fail at load instead
+        // of driving a multi-gigabyte hash-family allocation.
+        let mut rssk = sample_sketch().to_bytes();
+        rssk[16..20].copy_from_slice(&u32::MAX.to_le_bytes()); // k_per_row
+        assert!(RaceSketch::from_bytes(&rssk).is_err());
+        let mut rssk_p = sample_sketch().to_bytes();
+        rssk_p[32..36].copy_from_slice(&u32::MAX.to_le_bytes()); // p
+        assert!(RaceSketch::from_bytes(&rssk_p).is_err());
+        let mut rsfm = sample_fused().to_bytes();
+        rsfm[20..24].copy_from_slice(&u32::MAX.to_le_bytes()); // k_per_row
+        assert!(FusedMultiSketch::from_bytes(&rsfm).is_err());
+        let mut rsfm_p = sample_fused().to_bytes();
+        rsfm_p[36..40].copy_from_slice(&u32::MAX.to_le_bytes()); // p
+        assert!(FusedMultiSketch::from_bytes(&rsfm_p).is_err());
     }
 }

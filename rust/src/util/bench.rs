@@ -95,13 +95,25 @@ fn fmt_ns(ns: f64) -> String {
     }
 }
 
-/// Time `f` with automatic iteration-count calibration.
-pub fn run<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
-    // Warmup + calibrate: target ~0.5 s of measurement, <= 10k iters.
+/// Time `f` with automatic iteration-count calibration (~0.5 s of
+/// measurement per case).
+pub fn run<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    run_with_budget(name, 5e8, f)
+}
+
+/// Like [`run`] with an explicit per-case measurement budget in
+/// nanoseconds — benches expose this as a `--smoke` mode so CI can
+/// sweep the full grid quickly.
+pub fn run_with_budget<F: FnMut()>(
+    name: &str,
+    budget_ns: f64,
+    mut f: F,
+) -> BenchResult {
+    // Warmup + calibrate: <= 10k iters within the budget.
     let t0 = Instant::now();
     f();
     let once = t0.elapsed().as_nanos().max(1) as f64;
-    let iters = ((5e8 / once) as usize).clamp(10, 10_000);
+    let iters = ((budget_ns / once) as usize).clamp(10, 10_000);
     for _ in 0..iters.min(50) {
         f(); // warmup
     }

@@ -10,13 +10,15 @@
 use repsketch::coordinator::batcher::BatcherConfig;
 use repsketch::coordinator::{
     backend, BackendKind, Engine, Request, Response, Router, RouterConfig,
-    Server,
+    Server, WorkerPool,
 };
 use repsketch::data::Dataset;
 use repsketch::kernel::KernelParams;
 use repsketch::runtime::registry::DatasetBundle;
 use repsketch::runtime::{Executable, Runtime};
-use repsketch::sketch::{QueryScratch, RaceSketch, SketchConfig};
+use repsketch::sketch::{
+    FusedMultiSketch, MultiSketch, QueryScratch, RaceSketch, SketchConfig,
+};
 use repsketch::util::rng::SplitMix64;
 use std::io::{BufRead, BufReader, Write};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -407,6 +409,177 @@ fn partial_batch_drains_as_one_call_on_deadline() {
     // All three under-deadline requests drained together as one call.
     assert_eq!(calls.load(Ordering::SeqCst), 1);
     assert_eq!(*sizes.lock().unwrap(), vec![3]);
+}
+
+/// Synthetic fused multiclass sketch + the per-class reference it must
+/// match bit-for-bit.
+fn synthetic_multiclass(seed: u64, n_classes: usize)
+    -> (FusedMultiSketch, MultiSketch, usize) {
+    let mut rng = SplitMix64::new(seed);
+    let d = 6usize;
+    let shared_seed = rng.next_u64();
+    let a: Vec<f32> =
+        (0..d * d).map(|_| rng.next_gaussian() as f32 * 0.5).collect();
+    let per_class: Vec<KernelParams> = (0..n_classes)
+        .map(|_| {
+            let m = 16;
+            KernelParams {
+                d,
+                p: d,
+                m,
+                a: a.clone(),
+                x: (0..m * d).map(|_| rng.next_gaussian() as f32).collect(),
+                alpha: (0..m).map(|_| 0.5 + rng.next_f32()).collect(),
+                width: 2.0,
+                lsh_seed: shared_seed,
+                k_per_row: 2,
+                default_rows: 48,
+                default_cols: 16,
+            }
+        })
+        .collect();
+    let cfg = SketchConfig::default();
+    (
+        FusedMultiSketch::build(&per_class, &cfg).unwrap(),
+        MultiSketch::build(&per_class, &cfg).unwrap(),
+        d,
+    )
+}
+
+/// Counting wrapper around the fused multiclass engine — the probe for
+/// the one-fused-kernel-call-per-drained-batch contract.
+struct CountingMcEngine {
+    inner: backend::MulticlassEngine,
+    calls: Arc<AtomicUsize>,
+    sizes: Arc<Mutex<Vec<usize>>>,
+}
+
+impl Engine for CountingMcEngine {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn eval_batch(&mut self, rows: &[Vec<f32>]) -> anyhow::Result<Vec<f32>> {
+        self.calls.fetch_add(1, Ordering::SeqCst);
+        self.sizes.lock().unwrap().push(rows.len());
+        self.inner.eval_batch(rows)
+    }
+}
+
+#[test]
+fn multiclass_drained_batch_is_one_fused_kernel_call() {
+    let (fused, ms, d) = synthetic_multiclass(0xF0CA, 5);
+    let calls = Arc::new(AtomicUsize::new(0));
+    let sizes = Arc::new(Mutex::new(Vec::new()));
+    let mut router = Router::new();
+    // max_wait far beyond the test runtime: the batch can only fire by
+    // reaching max_batch, so exactly one drain of exactly 16 requests —
+    // and 16 < the engine's fan-out threshold, so that drain is ONE
+    // fused kernel call on the lane thread.
+    let cfg = RouterConfig {
+        batcher: BatcherConfig {
+            max_batch: 16,
+            max_wait: Duration::from_secs(30),
+            queue_cap: 1024,
+        },
+    };
+    {
+        let (calls, sizes) = (calls.clone(), sizes.clone());
+        router.add_lane("mc", BackendKind::Multiclass, move || {
+            Ok(Box::new(CountingMcEngine {
+                inner: backend::MulticlassEngine::new(fused),
+                calls,
+                sizes,
+            }) as _)
+        }, &cfg);
+    }
+    let rows = synthetic_rows(0xBEEF, 16, d);
+    let mut receivers = Vec::new();
+    for (i, row) in rows.iter().enumerate() {
+        receivers.push(
+            router
+                .submit(Request {
+                    id: i as u64,
+                    model: "mc".into(),
+                    backend: BackendKind::Multiclass,
+                    features: row.clone(),
+                })
+                .unwrap(),
+        );
+    }
+    // Every response carries the argmax class index of the per-class
+    // scalar reference ...
+    let mut qs = QueryScratch::default();
+    for (i, rx) in receivers.into_iter().enumerate() {
+        let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        let want = ms.predict(&rows[i], &mut qs) as f32;
+        assert_eq!(resp.result.unwrap(), want, "row {i}");
+    }
+    // ... through exactly ONE fused kernel call carrying the batch.
+    assert_eq!(calls.load(Ordering::SeqCst), 1);
+    assert_eq!(*sizes.lock().unwrap(), vec![16]);
+    let stats = router.lane_stats();
+    assert_eq!(stats[0].2, 16);
+    assert_eq!(stats[0].3, 1);
+}
+
+#[test]
+fn multiclass_large_batch_shards_through_persistent_pool() {
+    // The no-per-batch-spawn contract, end to end: a private 4-worker
+    // pool makes the shard accounting deterministic — a 128-row drain
+    // must execute as one engine call that fans out to exactly 4 shard
+    // jobs on the pool's long-lived threads (128 / PAR_MIN_CHUNK=16
+    // caps at the pool's 4 workers).
+    let (fused, ms, d) = synthetic_multiclass(0xD00D, 4);
+    let pool = Arc::new(WorkerPool::new(4));
+    let calls = Arc::new(AtomicUsize::new(0));
+    let sizes = Arc::new(Mutex::new(Vec::new()));
+    let mut router = Router::new();
+    let cfg = RouterConfig {
+        batcher: BatcherConfig {
+            max_batch: 128,
+            max_wait: Duration::from_secs(30),
+            queue_cap: 4096,
+        },
+    };
+    {
+        let (calls, sizes) = (calls.clone(), sizes.clone());
+        let pool = pool.clone();
+        router.add_lane("mc", BackendKind::Multiclass, move || {
+            Ok(Box::new(CountingMcEngine {
+                inner: backend::MulticlassEngine::with_pool(fused, pool),
+                calls,
+                sizes,
+            }) as _)
+        }, &cfg);
+    }
+    let rows = synthetic_rows(0xFEED, 128, d);
+    let mut receivers = Vec::new();
+    for (i, row) in rows.iter().enumerate() {
+        receivers.push(
+            router
+                .submit(Request {
+                    id: i as u64,
+                    model: "mc".into(),
+                    backend: BackendKind::Multiclass,
+                    features: row.clone(),
+                })
+                .unwrap(),
+        );
+    }
+    let mut qs = QueryScratch::default();
+    for (i, rx) in receivers.into_iter().enumerate() {
+        let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        let want = ms.predict(&rows[i], &mut qs) as f32;
+        assert_eq!(resp.result.unwrap(), want, "row {i}");
+    }
+    // One drained batch -> one engine call -> 4 pool shard jobs on the
+    // pool's fixed worker set (workers() is constant by construction —
+    // the pool cannot spawn on the submission path).
+    assert_eq!(calls.load(Ordering::SeqCst), 1);
+    assert_eq!(*sizes.lock().unwrap(), vec![128]);
+    assert_eq!(pool.workers(), 4);
+    assert_eq!(pool.jobs_executed(), 4);
 }
 
 #[test]
