@@ -131,8 +131,11 @@ fn main() -> anyhow::Result<()> {
             for line in reader.lines() {
                 let resp = Response::parse_line(&line?)
                     .map_err(|e| anyhow::anyhow!(e))?;
+                let id = resp
+                    .id
+                    .ok_or_else(|| anyhow::anyhow!("response without id"))?;
                 let y = resp.result.map_err(|e| anyhow::anyhow!(e))?;
-                preds[(resp.id - 1) as usize] = y;
+                preds[(id - 1) as usize] = y;
                 lats.push(resp.latency_us);
                 seen += 1;
                 if seen == n {

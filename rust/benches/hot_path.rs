@@ -10,6 +10,8 @@
 //!
 //! Run: `cargo bench --bench hot_path [dataset]`
 
+use repsketch::coordinator::batcher::BatcherConfig;
+use repsketch::coordinator::{BackendKind, Engine, Request, Router, RouterConfig};
 use repsketch::data::Dataset;
 use repsketch::kernel::{KernelModel, KernelParams};
 use repsketch::nn::{MlpScratch, SparseMlp};
@@ -18,7 +20,110 @@ use repsketch::sketch::{BatchScratch, QueryScratch, RaceSketch, SketchConfig};
 use repsketch::util::bench::{self, BenchResult};
 use repsketch::util::json::Json;
 use repsketch::util::rng::SplitMix64;
+use std::alloc::{GlobalAlloc, Layout, System};
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide allocation meter backing the router zero-copy check.
+struct CountingAlloc;
+
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Satellite regression check: `Router::run_batch` must MOVE feature
+/// vectors out of the requests, never clone them.  Submit B pre-built
+/// requests with a huge dim through a trivial engine and meter bytes
+/// allocated end to end: cloning would cost ~B*dim*4 bytes, everything
+/// legitimate (channels, response structs, the batch Vec) is orders of
+/// magnitude smaller.  Returns the measured bytes for the JSON report.
+fn assert_router_hot_path_zero_copy() -> u64 {
+    const B: usize = 64;
+    const DIM: usize = 16384;
+
+    struct SumEngine;
+    impl Engine for SumEngine {
+        fn dim(&self) -> usize {
+            DIM
+        }
+        fn eval_batch(&mut self, rows: &[Vec<f32>])
+            -> anyhow::Result<Vec<f32>> {
+            Ok(rows.iter().map(|r| r.iter().sum()).collect())
+        }
+    }
+
+    let mut router = Router::new();
+    let cfg = RouterConfig {
+        batcher: BatcherConfig {
+            max_batch: B,
+            max_wait: std::time::Duration::from_millis(5),
+            queue_cap: 4 * B,
+        },
+    };
+    router.add_lane(
+        "m",
+        BackendKind::Sketch,
+        move || Ok(Box::new(SumEngine) as Box<dyn Engine>),
+        &cfg,
+    );
+    // Everything allocated up front, outside the metered window.
+    let reqs: Vec<Request> = (0..B as u64)
+        .map(|id| Request {
+            id,
+            model: "m".into(),
+            backend: BackendKind::Sketch,
+            features: vec![0.5; DIM],
+        })
+        .collect();
+    let mut rxs = Vec::with_capacity(B);
+    let clone_cost = (B * DIM * std::mem::size_of::<f32>()) as u64;
+
+    let before = ALLOC_BYTES.load(Ordering::SeqCst);
+    for req in reqs {
+        rxs.push(router.submit(req).expect("queue has room"));
+    }
+    for rx in rxs {
+        let resp = rx
+            .recv_timeout(std::time::Duration::from_secs(10))
+            .expect("response");
+        assert_eq!(resp.result.unwrap(), 0.5 * DIM as f32);
+    }
+    let metered = ALLOC_BYTES.load(Ordering::SeqCst) - before;
+
+    assert!(
+        metered < clone_cost / 2,
+        "submit→respond allocated {metered} B for B={B} dim={DIM} \
+         (feature-clone cost would be {clone_cost} B) — the router hot \
+         path is cloning rows again"
+    );
+    println!(
+        "router zero-copy check: {metered} bytes allocated for {B} \
+         requests of dim {DIM} (clone cost would be {clone_cost})"
+    );
+    metered
+}
 
 fn bench_sketch(
     name: &str,
@@ -86,6 +191,7 @@ fn synthetic_fallback(results: &mut Vec<BenchResult>) {
 fn main() -> anyhow::Result<()> {
     let filter = std::env::args().nth(1);
     let root = repsketch::artifacts_dir();
+    let zero_copy_bytes = assert_router_hot_path_zero_copy();
     bench::header();
     let mut results = Vec::new();
     let mut source = "artifacts";
@@ -177,7 +283,10 @@ fn main() -> anyhow::Result<()> {
     bench::write_json(
         &out,
         "hot_path",
-        vec![("source", Json::Str(source.to_string()))],
+        vec![
+            ("source", Json::Str(source.to_string())),
+            ("router_zero_copy_bytes", Json::from_u64(zero_copy_bytes)),
+        ],
         &results,
     )?;
     println!("json -> {}", out.display());

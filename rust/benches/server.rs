@@ -1,0 +1,191 @@
+//! Server front-end benchmark (§Perf L3): the epoll reactor vs the
+//! legacy thread-per-connection loop, swept over connections ×
+//! pipeline depth against a trivial engine — so the numbers isolate
+//! the front-end (framing, dispatch, completion write-back), not the
+//! kernels.  Self-contained (no artifacts needed).
+//!
+//! Writes `BENCH_server.json` at the repo root via
+//! `util::bench::write_json` so the front-end trajectory is tracked
+//! across PRs.  `--smoke` shrinks the per-case request count for CI.
+//!
+//! Run: `cargo bench --bench server [-- --smoke]`
+
+use repsketch::coordinator::batcher::BatcherConfig;
+use repsketch::coordinator::{
+    BackendKind, Engine, Request, Response, Router, RouterConfig, ServeMode,
+    Server,
+};
+use repsketch::util::bench::{self, BenchResult};
+use repsketch::util::json::Json;
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const DIM: usize = 8;
+
+struct SumEngine;
+
+impl Engine for SumEngine {
+    fn dim(&self) -> usize {
+        DIM
+    }
+
+    fn eval_batch(&mut self, rows: &[Vec<f32>]) -> anyhow::Result<Vec<f32>> {
+        Ok(rows.iter().map(|r| r.iter().sum()).collect())
+    }
+}
+
+fn mode_name(mode: ServeMode) -> &'static str {
+    match mode {
+        ServeMode::Reactor => "reactor",
+        ServeMode::ThreadsLegacy => "legacy",
+    }
+}
+
+/// One (mode, connections, depth) cell: fresh server, `conns` client
+/// threads each pushing `per_conn` requests with a `depth`-deep
+/// pipeline window.  Per-request latency (send to response) is
+/// measured client-side, so the BenchResult carries REAL mean/p50/p99
+/// percentiles; the aggregate wall-clock throughput is printed
+/// alongside.
+fn run_case(
+    mode: ServeMode,
+    conns: usize,
+    depth: usize,
+    per_conn: usize,
+) -> BenchResult {
+    let mut router = Router::new();
+    let cfg = RouterConfig {
+        batcher: BatcherConfig {
+            max_batch: 64,
+            max_wait: Duration::from_micros(200),
+            queue_cap: 1 << 16,
+        },
+    };
+    router.add_lane(
+        "m",
+        BackendKind::Sketch,
+        move || Ok(Box::new(SumEngine) as Box<dyn Engine>),
+        &cfg,
+    );
+    let server =
+        Server::bind_with_mode(Arc::new(router), "127.0.0.1:0", mode)
+            .unwrap();
+    // Label rows with what actually runs (bind coerces Reactor to the
+    // legacy loop off Linux), not what was requested.
+    let mode = server.mode();
+    let addr = server.local_addr();
+    let stop = server.stop_handle();
+    let serve_thread = std::thread::spawn(move || server.serve());
+
+    let t0 = Instant::now();
+    let mut clients = Vec::new();
+    for c in 0..conns {
+        clients.push(std::thread::spawn(move || -> Vec<f64> {
+            let stream = TcpStream::connect(addr).unwrap();
+            stream.set_nodelay(true).unwrap();
+            stream
+                .set_read_timeout(Some(Duration::from_secs(60)))
+                .unwrap();
+            let mut w = stream.try_clone().unwrap();
+            let mut reader = BufReader::new(stream);
+            let mut line = String::new();
+            let mut sent_at: HashMap<u64, Instant> = HashMap::new();
+            let mut lats = Vec::with_capacity(per_conn);
+            let (mut sent, mut recvd, mut inflight) = (0usize, 0usize, 0usize);
+            while recvd < per_conn {
+                let mut burst = String::new();
+                while inflight < depth && sent < per_conn {
+                    sent += 1;
+                    inflight += 1;
+                    let id = (c * per_conn + sent) as u64;
+                    let mut l = Request {
+                        id,
+                        model: "m".into(),
+                        backend: BackendKind::Sketch,
+                        features: vec![1.0; DIM],
+                    }
+                    .to_line();
+                    l.push('\n');
+                    burst.push_str(&l);
+                    sent_at.insert(id, Instant::now());
+                }
+                if !burst.is_empty() {
+                    w.write_all(burst.as_bytes()).unwrap();
+                }
+                line.clear();
+                assert!(reader.read_line(&mut line).unwrap() > 0);
+                let resp = Response::parse_line(line.trim()).unwrap();
+                let id = resp.id.expect("bench response id");
+                resp.result.expect("bench response");
+                let t = sent_at.remove(&id).expect("unsolicited id");
+                lats.push(t.elapsed().as_nanos() as f64);
+                recvd += 1;
+                inflight -= 1;
+            }
+            lats
+        }));
+    }
+    let mut lats: Vec<f64> = Vec::with_capacity(conns * per_conn);
+    for h in clients {
+        lats.extend(h.join().unwrap());
+    }
+    let wall = t0.elapsed();
+    stop.store(true, Ordering::Release);
+    let _ = serve_thread.join();
+
+    let total = conns * per_conn;
+    println!(
+        "  {}/conns={conns} depth={depth}: {:.0} req/s aggregate",
+        mode_name(mode),
+        total as f64 / wall.as_secs_f64()
+    );
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| lats[((lats.len() - 1) as f64 * p) as usize];
+    BenchResult {
+        name: format!(
+            "{}/conns={conns} depth={depth}",
+            mode_name(mode)
+        ),
+        iters: total,
+        mean_ns: lats.iter().sum::<f64>() / lats.len() as f64,
+        p50_ns: q(0.5),
+        p99_ns: q(0.99),
+        min_ns: lats[0],
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let per_conn = if smoke { 200 } else { 2000 };
+    bench::header();
+    let mut results = Vec::new();
+    for mode in [ServeMode::Reactor, ServeMode::ThreadsLegacy] {
+        for conns in [1usize, 8, 64] {
+            for depth in [1usize, 16] {
+                let r = run_case(mode, conns, depth, per_conn);
+                r.print();
+                results.push(r);
+            }
+        }
+    }
+    let repo_root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent");
+    let out = repo_root.join("BENCH_server.json");
+    bench::write_json(
+        &out,
+        "server",
+        vec![
+            ("smoke", Json::Bool(smoke)),
+            ("per_conn", Json::from_u64(per_conn as u64)),
+        ],
+        &results,
+    )?;
+    println!("json -> {}", out.display());
+    Ok(())
+}

@@ -31,11 +31,73 @@ impl Default for BatcherConfig {
     }
 }
 
-/// A queued request together with its reply channel and enqueue time.
+/// Where a finished [`Response`] is delivered.
+pub enum ResponseSink {
+    /// In-process caller blocked on an mpsc receiver.
+    Channel(Sender<Response>),
+    /// Reactor completion path: the response is tagged with the owning
+    /// connection's token and the reactor is woken through its wake
+    /// pipe — no per-request forwarder thread.
+    #[cfg(target_os = "linux")]
+    Reactor(super::net::CompletionSender),
+}
+
+impl ResponseSink {
+    fn deliver(self, resp: Response) {
+        match self {
+            ResponseSink::Channel(tx) => {
+                let _ = tx.send(resp);
+            }
+            #[cfg(target_os = "linux")]
+            ResponseSink::Reactor(tx) => tx.send(resp),
+        }
+    }
+}
+
+/// Exactly-once response guard.  `send` consumes it; if it is dropped
+/// without sending — worker panic, lane teardown with requests still
+/// queued, a truncated engine result — it emits a `"worker dropped"`
+/// error instead, so no accepted request is ever silently lost (the
+/// seed's server ignored `rx.recv()` errors and lost exactly these).
+pub struct Responder {
+    id: u64,
+    sink: Option<ResponseSink>,
+}
+
+impl Responder {
+    pub fn new(id: u64, sink: ResponseSink) -> Self {
+        Self { id, sink: Some(sink) }
+    }
+
+    /// The id of the request this responder answers.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn send(mut self, resp: Response) {
+        if let Some(sink) = self.sink.take() {
+            sink.deliver(resp);
+        }
+    }
+}
+
+impl Drop for Responder {
+    fn drop(&mut self) {
+        if let Some(sink) = self.sink.take() {
+            sink.deliver(Response {
+                id: Some(self.id),
+                result: Err("worker dropped".into()),
+                latency_us: 0.0,
+            });
+        }
+    }
+}
+
+/// A queued request together with its response guard and enqueue time.
 pub struct Pending {
     pub req: Request,
     pub enqueued: Instant,
-    pub resp_tx: Sender<Response>,
+    pub responder: Responder,
 }
 
 #[derive(Debug, PartialEq, Eq)]
@@ -75,14 +137,22 @@ impl DynamicBatcher {
         &self.cfg
     }
 
-    /// Enqueue a request; fails fast on saturation or shutdown.
-    pub fn submit(&self, p: Pending) -> Result<(), SubmitError> {
-        if self.closed.load(Ordering::Acquire) {
-            return Err(SubmitError::Closed);
-        }
+    /// Enqueue a request; fails fast on saturation or shutdown.  The
+    /// `Pending` is handed back on failure so the caller can answer it
+    /// with the right error (rather than the responder's generic
+    /// worker-dropped message firing on drop).
+    pub fn submit(&self, p: Pending) -> Result<(), (Pending, SubmitError)> {
         let mut st = self.state.lock().unwrap();
+        // The closed check must happen under the state lock (and
+        // `close` flips the flag under the same lock): otherwise a
+        // submitter that passed a lock-free check could push AFTER a
+        // dead lane's drain guard finished draining, stranding an
+        // accepted request in a queue nothing will ever service.
+        if self.closed.load(Ordering::Acquire) {
+            return Err((p, SubmitError::Closed));
+        }
         if st.queue.len() >= self.cfg.queue_cap {
-            return Err(SubmitError::QueueFull);
+            return Err((p, SubmitError::QueueFull));
         }
         st.queue.push_back(p);
         self.submitted.fetch_add(1, Ordering::Relaxed);
@@ -129,9 +199,14 @@ impl DynamicBatcher {
         }
     }
 
-    /// Stop accepting new work and wake all workers to drain.
+    /// Stop accepting new work and wake all workers to drain.  The
+    /// flag is flipped under the state lock so it serializes with
+    /// `submit`: every accepted request is either visible to the final
+    /// drain or rejected with `Closed` — never silently stranded.
     pub fn close(&self) {
+        let st = self.state.lock().unwrap();
         self.closed.store(true, Ordering::Release);
+        drop(st);
         self.cv.notify_all();
     }
 
@@ -158,7 +233,7 @@ mod tests {
                     features: vec![0.0],
                 },
                 enqueued: Instant::now(),
-                resp_tx: tx,
+                responder: Responder::new(id, ResponseSink::Channel(tx)),
             },
             rx,
         )
@@ -174,7 +249,7 @@ mod tests {
         let mut rxs = Vec::new();
         for i in 0..4 {
             let (p, rx) = mk_pending(i);
-            b.submit(p).unwrap();
+            assert!(b.submit(p).is_ok());
             rxs.push(rx);
         }
         let batch = b.next_batch().unwrap();
@@ -193,7 +268,7 @@ mod tests {
         });
         let (p, _rx) = mk_pending(1);
         let t0 = Instant::now();
-        b.submit(p).unwrap();
+        assert!(b.submit(p).is_ok());
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.len(), 1);
         let waited = t0.elapsed();
@@ -213,17 +288,17 @@ mod tests {
         let (p3, _r3) = mk_pending(3);
         assert!(b.submit(p1).is_ok());
         assert!(b.submit(p2).is_ok());
-        assert_eq!(b.submit(p3).unwrap_err(), SubmitError::QueueFull);
+        assert_eq!(b.submit(p3).unwrap_err().1, SubmitError::QueueFull);
     }
 
     #[test]
     fn close_rejects_and_drains() {
         let b = DynamicBatcher::new(BatcherConfig::default());
         let (p, _r) = mk_pending(1);
-        b.submit(p).unwrap();
+        assert!(b.submit(p).is_ok());
         b.close();
         let (p2, _r2) = mk_pending(2);
-        assert_eq!(b.submit(p2).unwrap_err(), SubmitError::Closed);
+        assert_eq!(b.submit(p2).unwrap_err().1, SubmitError::Closed);
         // drain remaining then None
         assert_eq!(b.next_batch().unwrap().len(), 1);
         assert!(b.next_batch().is_none());
@@ -244,7 +319,7 @@ mod tests {
             handles.push(std::thread::spawn(move || {
                 for i in 0..per_thread {
                     let (p, _rx) = mk_pending((t * per_thread + i) as u64);
-                    b.submit(p).unwrap();
+                    assert!(b.submit(p).is_ok());
                 }
             }));
         }

@@ -1,45 +1,72 @@
 //! L3 serving coordinator — the deployment wrapper around the sketch and
-//! its baselines: request router, dynamic batcher, backend engines, TCP
-//! JSON-line server, metrics, and bounded-queue backpressure.
+//! its baselines: request router, dynamic batcher, backend engines,
+//! epoll-reactor TCP front-end, metrics, and bounded-queue backpressure.
 //!
 //! Architecture (vLLM-router-shaped, scaled to an edge-inference system):
 //!
 //! ```text
-//!        TCP / in-process clients
-//!                 │  submit(Request)
-//!                 ▼
-//!            ┌─────────┐    per-(model, backend) bounded queues
-//!            │ Router  ├──► ┌──────────────┐
-//!            └─────────┘    │ DynamicBatch │──► worker thread ──► Engine
-//!                           │  (size/age)  │        │ (RS hot path /
-//!                           └──────────────┘        │  rust NN / PJRT)
-//!                                                   ▼
-//!                                          per-request responses
+//!        TCP clients                     in-process clients
+//!             │                                  │
+//!             ▼                                  │
+//!      ┌─────────────┐ submit_sink(Request)      │ submit(Request)
+//!      │   Reactor   ├──────────┐                │
+//!      │ (ONE epoll  │          ▼                ▼
+//!      │   thread)   │     ┌─────────┐    per-(model, backend)
+//!      └──────▲──────┘     │ Router  ├──► ┌──────────────┐
+//!             │ wake pipe  └─────────┘    │ DynamicBatch │──► lane
+//!             │ + completion channel      │  (size/age)  │    worker
+//!             └───────────────────────────┴──────────────┘      │
+//!                                                               ▼
+//!                                                    Engine (RS hot path /
+//!                                                    rust NN / PJRT), pool
 //! ```
 //!
 //! Python is never on this path; the PJRT backends execute AOT artifacts.
 //!
+//! **Thread accounting invariant:** the serving process runs exactly
+//! ONE reactor thread, one worker thread per registered lane, and the
+//! fixed `pool::WorkerPool` threads.  Nothing on the accept, request,
+//! or completion path spawns — lane workers hand finished responses to
+//! the reactor over an mpsc channel and poke its wake pipe, and the
+//! reactor multiplexes every connection through epoll with incremental
+//! line framing (hard per-line byte cap — a newline-free stream is
+//! rejected, not buffered) and buffered nonblocking writes.  The seed's
+//! front-end spawned a thread per connection *and* per in-flight
+//! request; `Server::bind_legacy` keeps that loop for one release as
+//! the `--threads-legacy` escape hatch (and the non-Linux fallback).
+//!
+//! **Response delivery invariant:** every accepted request produces
+//! exactly one [`Response`].  Each request carries a
+//! [`batcher::Responder`] whose drop guard answers `"worker dropped"`
+//! if a lane dies mid-flight; malformed lines are answered with a
+//! best-effort-recovered id (else `"id": null`, never a fake id 0);
+//! backpressure rejections echo the request id.
+//!
 //! Batching is end-to-end: a drained `DynamicBatcher` batch reaches the
-//! engine as ONE `eval_batch` call, and the sketch / exact-kernel /
-//! multiclass engines execute it through the batch-major kernels
-//! (`RaceSketch::query_batch_with`, `FusedMultiSketch::predict_batch_with`
-//! — a single CSC hash walk serving the whole batch).  Large batches are
-//! sharded across the **persistent worker pool** (`pool::WorkerPool` —
-//! long-lived threads, channel-fed shard queues, per-worker scratch;
-//! nothing on the hot path spawns a thread).  The batched path is
-//! bit-identical to the scalar path, so batch size and shard count are
-//! pure throughput knobs, never correctness knobs.
+//! engine as ONE `eval_batch` call over feature vectors *moved* out of
+//! the requests (zero per-request allocations on the hot path), and the
+//! sketch / exact-kernel / multiclass engines execute it through the
+//! batch-major kernels (`RaceSketch::query_batch_with`,
+//! `FusedMultiSketch::predict_batch_with` — a single CSC hash walk
+//! serving the whole batch).  Large batches are sharded across the
+//! persistent `pool::WorkerPool`.  The batched path is bit-identical to
+//! the scalar path, so batch size and shard count are pure throughput
+//! knobs, never correctness knobs.
 
 pub mod backend;
 pub mod batcher;
+#[cfg(target_os = "linux")]
+pub mod net;
 pub mod pool;
 pub mod protocol;
 pub mod router;
 pub mod server;
 
 pub use backend::{BackendKind, Engine};
-pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use batcher::{
+    BatcherConfig, DynamicBatcher, Responder, ResponseSink,
+};
 pub use pool::{WorkerPool, WorkerScratch};
-pub use protocol::{Request, Response};
+pub use protocol::{extract_id, Request, Response};
 pub use router::{Router, RouterConfig, SubmitError};
-pub use server::Server;
+pub use server::{ServeMode, Server};

@@ -1,0 +1,313 @@
+//! Per-connection state for the reactor: incremental line framing with
+//! a hard length cap, buffered nonblocking writes, and in-flight
+//! accounting for deferred close.
+//!
+//! The cap is the OOM fix: the seed buffered an entire line in
+//! `BufRead::lines`, so a newline-free stream grew the heap without
+//! bound.  Here a line that exceeds [`MAX_LINE_BYTES`] is answered with
+//! an error (id recovered best-effort from the kept prefix) and the
+//! rest of the oversize line is *discarded* as it streams in — memory
+//! stays bounded and the connection survives for subsequent requests.
+
+use crate::coordinator::protocol::Response;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+/// Hard cap on a single request line (bytes, excluding the newline).
+pub const MAX_LINE_BYTES: usize = 256 * 1024;
+
+/// Prefix of an oversize line kept for best-effort id extraction.
+pub const OVERSIZE_PREFIX_BYTES: usize = 4 * 1024;
+
+/// Cap on buffered-but-unsent response bytes.  A client that pipelines
+/// requests without ever reading responses is disconnected rather than
+/// allowed to grow the heap.
+pub const MAX_WRITE_BUF_BYTES: usize = 16 * 1024 * 1024;
+
+/// One framed input event.
+pub enum InEvent {
+    /// A complete request line (without the trailing newline).
+    Line(String),
+    /// The line cap fired; the payload is the kept prefix for
+    /// best-effort id extraction.  The rest of the line is discarded
+    /// as it arrives.
+    Oversize(String),
+}
+
+pub struct Conn {
+    pub stream: TcpStream,
+    /// Partial input line (bytes since the last `\n`).
+    rbuf: Vec<u8>,
+    /// Serialized responses not yet accepted by the socket.
+    wbuf: Vec<u8>,
+    /// Bytes of `wbuf` already written.
+    wpos: usize,
+    /// Inside an oversize line: drop bytes until the next `\n`.
+    discarding: bool,
+    /// Requests submitted to the router whose responses have not yet
+    /// been queued into `wbuf`.
+    pub in_flight: usize,
+    /// Peer finished sending (EOF seen); close once fully drained.
+    pub read_closed: bool,
+    /// Interest bits currently registered with epoll.
+    pub interest: u32,
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            discarding: false,
+            in_flight: 0,
+            read_closed: false,
+            interest: 0,
+        }
+    }
+
+    /// Read what the socket has, appending framed events to `out`.
+    /// Returns `false` when the connection is broken and must be torn
+    /// down immediately; EOF instead sets `read_closed` so pending
+    /// responses still drain.
+    ///
+    /// Reads are bounded per call: a client writing faster than one
+    /// scratch-buffer drain per loop would otherwise keep `Ok(n)`
+    /// coming forever and head-of-line block every other connection on
+    /// the reactor.  Level-triggered epoll re-delivers readiness, so
+    /// leftover bytes are picked up on the next event.
+    pub fn fill(&mut self, scratch: &mut [u8], out: &mut Vec<InEvent>) -> bool {
+        const MAX_READS_PER_EVENT: usize = 16;
+        for _ in 0..MAX_READS_PER_EVENT {
+            match self.stream.read(scratch) {
+                Ok(0) => {
+                    self.read_closed = true;
+                    if !self.rbuf.is_empty() && !self.discarding {
+                        // Final unterminated line — parity with the
+                        // legacy BufRead::lines behavior.
+                        let line =
+                            String::from_utf8_lossy(&self.rbuf).into_owned();
+                        self.rbuf.clear();
+                        out.push(InEvent::Line(line));
+                    }
+                    return true;
+                }
+                Ok(n) => self.frame(&scratch[..n], out),
+                Err(ref e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    return true;
+                }
+                Err(ref e)
+                    if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => return false,
+            }
+        }
+        true
+    }
+
+    /// Split a freshly read chunk into lines, honoring discard mode and
+    /// the line cap.
+    fn frame(&mut self, mut chunk: &[u8], out: &mut Vec<InEvent>) {
+        while !chunk.is_empty() {
+            if self.discarding {
+                match chunk.iter().position(|&b| b == b'\n') {
+                    Some(pos) => {
+                        self.discarding = false;
+                        chunk = &chunk[pos + 1..];
+                    }
+                    None => return, // whole chunk is oversize spill
+                }
+                continue;
+            }
+            match chunk.iter().position(|&b| b == b'\n') {
+                Some(pos) => {
+                    if self.rbuf.len() + pos > MAX_LINE_BYTES {
+                        self.reject_oversize(&chunk[..pos], out);
+                        self.discarding = false; // newline is right here
+                    } else {
+                        let line = if self.rbuf.is_empty() {
+                            String::from_utf8_lossy(&chunk[..pos]).into_owned()
+                        } else {
+                            self.rbuf.extend_from_slice(&chunk[..pos]);
+                            let l = String::from_utf8_lossy(&self.rbuf)
+                                .into_owned();
+                            self.rbuf.clear();
+                            l
+                        };
+                        out.push(InEvent::Line(line));
+                    }
+                    chunk = &chunk[pos + 1..];
+                }
+                None => {
+                    if self.rbuf.len() + chunk.len() > MAX_LINE_BYTES {
+                        self.reject_oversize(chunk, out);
+                        self.discarding = true;
+                    } else {
+                        self.rbuf.extend_from_slice(chunk);
+                    }
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Emit the oversize marker (keeping a prefix for id recovery) and
+    /// release the partial-line buffer.
+    fn reject_oversize(&mut self, tail: &[u8], out: &mut Vec<InEvent>) {
+        let keep = OVERSIZE_PREFIX_BYTES.min(self.rbuf.len());
+        let mut prefix = self.rbuf[..keep].to_vec();
+        let room = OVERSIZE_PREFIX_BYTES - prefix.len();
+        prefix.extend_from_slice(&tail[..room.min(tail.len())]);
+        self.rbuf = Vec::new(); // free, don't just clear
+        out.push(InEvent::Oversize(
+            String::from_utf8_lossy(&prefix).into_owned(),
+        ));
+    }
+
+    /// Queue one serialized response line for writing.
+    pub fn queue_response(&mut self, resp: &Response) {
+        let line = resp.to_line();
+        self.wbuf.reserve(line.len() + 1);
+        self.wbuf.extend_from_slice(line.as_bytes());
+        self.wbuf.push(b'\n');
+    }
+
+    /// Unwritten response bytes.
+    pub fn write_backlog(&self) -> usize {
+        self.wbuf.len() - self.wpos
+    }
+
+    pub fn over_write_cap(&self) -> bool {
+        self.write_backlog() > MAX_WRITE_BUF_BYTES
+    }
+
+    /// Flush as much of the write buffer as the socket accepts.
+    /// `Ok(true)` means fully flushed; `Err` means the connection is
+    /// broken.
+    pub fn flush(&mut self) -> std::io::Result<bool> {
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::WriteZero,
+                        "socket accepted zero bytes",
+                    ));
+                }
+                Ok(n) => self.wpos += n,
+                Err(ref e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    // Reclaim the flushed prefix so the buffer cannot
+                    // creep upward across partial flushes.
+                    if self.wpos > 0 {
+                        self.wbuf.drain(..self.wpos);
+                        self.wpos = 0;
+                    }
+                    return Ok(false);
+                }
+                Err(ref e)
+                    if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+        self.wbuf.clear();
+        self.wpos = 0;
+        Ok(true)
+    }
+
+    /// The connection has nothing left to do and can be dropped.
+    pub fn finished(&self) -> bool {
+        self.read_closed && self.in_flight == 0 && self.write_backlog() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::net::{TcpListener, TcpStream};
+
+    /// Loopback pair: (client stream, server-side Conn, nonblocking).
+    fn pair() -> (TcpStream, Conn) {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = l.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+        (client, Conn::new(server))
+    }
+
+    fn lines(events: &[InEvent]) -> Vec<&str> {
+        events
+            .iter()
+            .filter_map(|e| match e {
+                InEvent::Line(l) => Some(l.as_str()),
+                InEvent::Oversize(_) => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn frames_split_lines_across_reads() {
+        let (mut client, mut conn) = pair();
+        let mut scratch = vec![0u8; 4096];
+        let mut out = Vec::new();
+        client.write_all(b"hel").unwrap();
+        client.flush().unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(conn.fill(&mut scratch, &mut out));
+        assert!(out.is_empty());
+        client.write_all(b"lo\nwor").unwrap();
+        client.flush().unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(conn.fill(&mut scratch, &mut out));
+        assert_eq!(lines(&out), vec!["hello"]);
+        client.write_all(b"ld\n\nx\n").unwrap();
+        client.flush().unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(conn.fill(&mut scratch, &mut out));
+        assert_eq!(lines(&out), vec!["hello", "world", "", "x"]);
+    }
+
+    #[test]
+    fn oversize_line_capped_and_discarded_memory_bounded() {
+        let (mut client, mut conn) = pair();
+        let mut scratch = vec![0u8; 64 * 1024];
+        let mut out = Vec::new();
+        // Stream 4 MB without a newline; the cap must fire once and the
+        // partial-line buffer must never hold more than the cap.
+        let chunk = vec![b'a'; 64 * 1024];
+        for _ in 0..64 {
+            client.write_all(&chunk).unwrap();
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            assert!(conn.fill(&mut scratch, &mut out));
+            assert!(conn.rbuf.len() <= MAX_LINE_BYTES + 1);
+        }
+        let n_oversize = out
+            .iter()
+            .filter(|e| matches!(e, InEvent::Oversize(_)))
+            .count();
+        assert_eq!(n_oversize, 1);
+        assert!(lines(&out).is_empty());
+        // End the bad line; the connection keeps framing fresh lines.
+        client.write_all(b"\nnext\n").unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(conn.fill(&mut scratch, &mut out));
+        assert_eq!(lines(&out), vec!["next"]);
+    }
+
+    #[test]
+    fn eof_flushes_final_unterminated_line() {
+        let (mut client, mut conn) = pair();
+        let mut scratch = vec![0u8; 4096];
+        let mut out = Vec::new();
+        client.write_all(b"tail-no-newline").unwrap();
+        drop(client);
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(conn.fill(&mut scratch, &mut out));
+        assert!(conn.read_closed);
+        assert_eq!(lines(&out), vec!["tail-no-newline"]);
+    }
+}

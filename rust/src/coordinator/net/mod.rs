@@ -1,0 +1,22 @@
+//! Event-driven TCP front-end (Linux): a tokio-free epoll reactor.
+//!
+//! Layout:
+//! - [`sys`]: the raw syscall surface (`epoll_create1` / `epoll_ctl` /
+//!   `epoll_wait` / `fcntl` / `pipe`) declared via `extern "C"` against
+//!   the already-linked libc — no registry crates, per the offline
+//!   image constraint.
+//! - [`conn`]: per-connection state — incremental line framing with a
+//!   hard [`conn::MAX_LINE_BYTES`] cap (the OOM fix), buffered
+//!   nonblocking writes, in-flight accounting for deferred close.
+//! - [`reactor`]: the event loop plus [`CompletionSender`], the
+//!   wake-pipe completion path that replaced the seed's
+//!   thread-per-in-flight-request forwarders.
+//!
+//! The non-Linux (and `--threads-legacy`) fallback lives in
+//! `coordinator::server`.
+
+pub mod conn;
+pub mod reactor;
+pub mod sys;
+
+pub use reactor::{CompletionSender, Reactor};

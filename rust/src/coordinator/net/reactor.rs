@@ -1,0 +1,309 @@
+//! The epoll reactor: ONE thread owns accept, per-connection line
+//! framing, request submission, and response write-back.  Lane workers
+//! hand finished responses back through an mpsc channel plus a wake
+//! pipe — zero per-request or per-connection thread spawns, so the
+//! process thread count is fixed at reactor + lane workers + pool no
+//! matter how many connections are in flight.
+
+use super::conn::{Conn, InEvent, MAX_LINE_BYTES};
+use super::sys::{
+    Epoll, EpollEvent, WakePipe, EPOLLERR, EPOLLHUP, EPOLLIN, EPOLLOUT,
+    EPOLLRDHUP,
+};
+use crate::coordinator::batcher::ResponseSink;
+use crate::coordinator::protocol::{extract_id, Request, Response};
+use crate::coordinator::router::Router;
+use std::collections::HashMap;
+use std::net::TcpListener;
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_WAKE: u64 = 1;
+const FIRST_CONN_TOKEN: u64 = 2;
+
+/// How long `epoll_wait` sleeps with nothing ready — bounds how fast an
+/// otherwise-idle reactor observes the stop flag (the seed's
+/// thread-per-connection loop never observed it from an idle
+/// connection at all).
+const IDLE_WAIT_MS: i32 = 50;
+
+/// One completed request's way home: tags the response with the owning
+/// connection's token and pokes the reactor awake.  Consumed by the
+/// request's `Responder` exactly once; replaces the seed's one
+/// forwarder thread per in-flight request.
+pub struct CompletionSender {
+    token: u64,
+    tx: Sender<(u64, Response)>,
+    wake: Arc<WakePipe>,
+}
+
+impl CompletionSender {
+    pub fn send(self, resp: Response) {
+        let _ = self.tx.send((self.token, resp));
+        self.wake.wake();
+    }
+}
+
+pub struct Reactor {
+    epoll: Epoll,
+    listener: TcpListener,
+    wake: Arc<WakePipe>,
+    comp_tx: Sender<(u64, Response)>,
+    comp_rx: Receiver<(u64, Response)>,
+    conns: HashMap<u64, Conn>,
+    next_token: u64,
+    router: Arc<Router>,
+    stop: Arc<AtomicBool>,
+    accepted: Arc<AtomicU64>,
+    scratch: Vec<u8>,
+}
+
+impl Reactor {
+    pub fn new(
+        router: Arc<Router>,
+        listener: &TcpListener,
+        stop: Arc<AtomicBool>,
+        accepted: Arc<AtomicU64>,
+    ) -> std::io::Result<Reactor> {
+        let listener = listener.try_clone()?;
+        listener.set_nonblocking(true)?;
+        let epoll = Epoll::new()?;
+        let wake = Arc::new(WakePipe::new()?);
+        epoll.add(listener.as_raw_fd(), EPOLLIN, TOKEN_LISTENER)?;
+        epoll.add(wake.read_fd(), EPOLLIN, TOKEN_WAKE)?;
+        let (comp_tx, comp_rx) = channel();
+        Ok(Reactor {
+            epoll,
+            listener,
+            wake,
+            comp_tx,
+            comp_rx,
+            conns: HashMap::new(),
+            next_token: FIRST_CONN_TOKEN,
+            router,
+            stop,
+            accepted,
+            scratch: vec![0u8; 64 * 1024],
+        })
+    }
+
+    /// Event loop; returns when the stop flag flips (observed within
+    /// `IDLE_WAIT_MS` even when every connection is idle).  Dropping
+    /// the reactor closes all connections.
+    pub fn run(&mut self) {
+        let mut events = [EpollEvent { events: 0, data: 0 }; 128];
+        while !self.stop.load(Ordering::Acquire) {
+            let n = match self.epoll.wait(&mut events, IDLE_WAIT_MS) {
+                Ok(n) => n,
+                Err(_) => break,
+            };
+            for ev in &events[..n] {
+                let (bits, token) = (ev.events, ev.data);
+                match token {
+                    TOKEN_LISTENER => self.accept_ready(),
+                    TOKEN_WAKE => self.drain_completions(),
+                    t => self.conn_ready(t, bits),
+                }
+            }
+        }
+    }
+
+    /// Accept until the listener runs dry (level-triggered, so a break
+    /// on a transient error just retries on the next readiness).
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    stream.set_nodelay(true).ok();
+                    let token = self.next_token;
+                    self.next_token += 1;
+                    let interest = EPOLLIN | EPOLLRDHUP;
+                    if self
+                        .epoll
+                        .add(stream.as_raw_fd(), interest, token)
+                        .is_err()
+                    {
+                        continue;
+                    }
+                    let mut conn = Conn::new(stream);
+                    conn.interest = interest;
+                    self.conns.insert(token, conn);
+                    self.accepted.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(ref e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    break;
+                }
+                Err(ref e)
+                    if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    // EMFILE/ENFILE and friends leave the pending
+                    // connection in the backlog, so the level-triggered
+                    // listener stays readable — back off briefly
+                    // instead of busy-spinning accept at 100% CPU
+                    // until an fd frees up.
+                    std::thread::sleep(
+                        std::time::Duration::from_millis(10),
+                    );
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Route every completed response back to its connection.  All
+    /// pending completions are queued first and each touched
+    /// connection is settled once, so a pipelined burst coalesces into
+    /// one flush per connection instead of one write(2) per response.
+    fn drain_completions(&mut self) {
+        self.wake.drain();
+        let mut touched: Vec<u64> = Vec::new();
+        while let Ok((token, resp)) = self.comp_rx.try_recv() {
+            if let Some(conn) = self.conns.get_mut(&token) {
+                conn.in_flight -= 1;
+                conn.queue_response(&resp);
+                if !touched.contains(&token) {
+                    touched.push(token);
+                }
+            }
+            // else: the connection died first; the response is dropped,
+            // exactly like a disconnected client under the legacy loop.
+        }
+        for token in touched {
+            self.settle(token);
+        }
+    }
+
+    /// Socket readiness for one connection.
+    fn conn_ready(&mut self, token: u64, bits: u32) {
+        if bits & (EPOLLERR | EPOLLHUP) != 0 {
+            self.drop_conn(token);
+            return;
+        }
+        if bits & (EPOLLIN | EPOLLRDHUP) != 0 {
+            let mut events = Vec::new();
+            let ok = match self.conns.get_mut(&token) {
+                None => return,
+                Some(conn) => conn.fill(&mut self.scratch, &mut events),
+            };
+            if !ok {
+                self.drop_conn(token);
+                return;
+            }
+            for ev in events {
+                self.handle_in_event(token, ev);
+            }
+        }
+        self.settle(token);
+    }
+
+    /// One framed input line (or an oversize rejection) from a
+    /// connection.
+    fn handle_in_event(&mut self, token: u64, ev: InEvent) {
+        match ev {
+            InEvent::Line(line) => {
+                if line.trim().is_empty() {
+                    return;
+                }
+                match Request::parse_line(&line) {
+                    Ok(req) => {
+                        if let Some(conn) = self.conns.get_mut(&token) {
+                            conn.in_flight += 1;
+                        } else {
+                            return;
+                        }
+                        // Unknown-lane and backpressure errors come
+                        // back through the completion channel like any
+                        // other response (the sink guarantees exactly
+                        // one), so the submit result needs no handling
+                        // here.
+                        let _ = self.router.submit_sink(
+                            req,
+                            ResponseSink::Reactor(CompletionSender {
+                                token,
+                                tx: self.comp_tx.clone(),
+                                wake: self.wake.clone(),
+                            }),
+                        );
+                    }
+                    Err(e) => {
+                        if let Some(conn) = self.conns.get_mut(&token) {
+                            conn.queue_response(&Response {
+                                id: extract_id(&line),
+                                result: Err(format!("bad request: {e}")),
+                                latency_us: 0.0,
+                            });
+                        }
+                    }
+                }
+            }
+            InEvent::Oversize(prefix) => {
+                if let Some(conn) = self.conns.get_mut(&token) {
+                    conn.queue_response(&Response {
+                        id: extract_id(&prefix),
+                        result: Err(format!(
+                            "bad request: line exceeds the \
+                             {MAX_LINE_BYTES} byte cap"
+                        )),
+                        latency_us: 0.0,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Flush what the socket will take, refresh epoll interest, and
+    /// close the connection once it is finished (or broken, or abusing
+    /// the write buffer).
+    fn settle(&mut self, token: u64) {
+        let drop_it = match self.conns.get_mut(&token) {
+            None => return,
+            Some(conn) => match conn.flush() {
+                Err(_) => true,
+                Ok(_) => {
+                    if conn.over_write_cap() || conn.finished() {
+                        true
+                    } else {
+                        let mut want = EPOLLRDHUP;
+                        if !conn.read_closed {
+                            want |= EPOLLIN;
+                        }
+                        if conn.write_backlog() > 0 {
+                            want |= EPOLLOUT;
+                        }
+                        if want != conn.interest {
+                            let fd = conn.stream.as_raw_fd();
+                            match self.epoll.modify(fd, want, token) {
+                                Ok(()) => {
+                                    conn.interest = want;
+                                    false
+                                }
+                                Err(_) => true,
+                            }
+                        } else {
+                            false
+                        }
+                    }
+                }
+            },
+        };
+        if drop_it {
+            self.drop_conn(token);
+        }
+    }
+
+    fn drop_conn(&mut self, token: u64) {
+        if let Some(conn) = self.conns.remove(&token) {
+            let _ = self.epoll.del(conn.stream.as_raw_fd());
+            // Dropping the stream closes the socket; completions still
+            // in flight for this token are discarded on arrival.
+        }
+    }
+}

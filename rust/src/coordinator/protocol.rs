@@ -18,9 +18,14 @@ pub struct Request {
 }
 
 /// The coordinator's answer.
+///
+/// `id` is `None` only for protocol-level errors where the offending
+/// line carried no recoverable id — emitted as `"id": null` so it can
+/// never collide with a legitimate request id (the seed hard-coded 0,
+/// which a real request may also use).
 #[derive(Clone, Debug)]
 pub struct Response {
-    pub id: u64,
+    pub id: Option<u64>,
     pub result: Result<f32, String>,
     /// Queue + execution latency in microseconds.
     pub latency_us: f64,
@@ -64,16 +69,23 @@ impl Request {
 }
 
 impl Response {
+    fn id_json(&self) -> Json {
+        match self.id {
+            Some(id) => Json::from_u64(id),
+            None => Json::Null,
+        }
+    }
+
     pub fn to_line(&self) -> String {
         match &self.result {
             Ok(y) => json::obj(vec![
-                ("id", Json::from_u64(self.id)),
+                ("id", self.id_json()),
                 ("y", Json::num(*y as f64)),
                 ("us", Json::num(self.latency_us)),
             ])
             .to_string(),
             Err(e) => json::obj(vec![
-                ("id", Json::from_u64(self.id)),
+                ("id", self.id_json()),
                 ("error", Json::Str(e.clone())),
             ])
             .to_string(),
@@ -82,7 +94,8 @@ impl Response {
 
     pub fn parse_line(line: &str) -> Result<Response, String> {
         let j = json::parse(line)?;
-        let id = j.get("id").and_then(|v| v.as_u64()).ok_or("missing id")?;
+        // `"id": null` (or a missing id) is legal on error responses.
+        let id = j.get("id").and_then(|v| v.as_u64());
         if let Some(err) = j.get("error").and_then(|v| v.as_str()) {
             return Ok(Response {
                 id,
@@ -90,6 +103,7 @@ impl Response {
                 latency_us: 0.0,
             });
         }
+        let id = Some(id.ok_or("missing id")?);
         let y = j
             .get("y")
             .and_then(|v| v.as_f64())
@@ -97,6 +111,49 @@ impl Response {
         let us = j.get("us").and_then(|v| v.as_f64()).unwrap_or(0.0);
         Ok(Response { id, result: Ok(y), latency_us: us })
     }
+}
+
+/// Best-effort recovery of the `"id"` field from a line that failed
+/// `Request::parse_line`, so the error response can still be correlated
+/// by the client.  Tries a real JSON parse first (covers "valid JSON,
+/// invalid request"), then falls back to a byte scan for `"id"`
+/// followed by `:` and an unsigned integer (covers truncated or
+/// otherwise malformed JSON).  Returns `None` when nothing usable is
+/// found — the response then carries `"id": null`.
+pub fn extract_id(line: &str) -> Option<u64> {
+    if let Ok(j) = json::parse(line) {
+        return j.get("id").and_then(|v| v.as_u64());
+    }
+    let b = line.as_bytes();
+    let needle = b"\"id\"";
+    let mut i = 0usize;
+    while i + needle.len() <= b.len() {
+        if &b[i..i + needle.len()] == needle {
+            let mut j = i + needle.len();
+            while j < b.len() && (b[j] == b' ' || b[j] == b'\t') {
+                j += 1;
+            }
+            if j < b.len() && b[j] == b':' {
+                j += 1;
+                while j < b.len() && (b[j] == b' ' || b[j] == b'\t') {
+                    j += 1;
+                }
+                let start = j;
+                while j < b.len() && b[j].is_ascii_digit() {
+                    j += 1;
+                }
+                if j > start {
+                    if let Ok(v) =
+                        std::str::from_utf8(&b[start..j]).unwrap().parse()
+                    {
+                        return Some(v);
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+    None
 }
 
 #[cfg(test)]
@@ -121,17 +178,51 @@ mod tests {
 
     #[test]
     fn response_roundtrip() {
-        let ok = Response { id: 1, result: Ok(0.5), latency_us: 12.5 };
+        let ok = Response {
+            id: Some(1),
+            result: Ok(0.5),
+            latency_us: 12.5,
+        };
         let p = Response::parse_line(&ok.to_line()).unwrap();
-        assert_eq!(p.id, 1);
+        assert_eq!(p.id, Some(1));
         assert_eq!(p.result.unwrap(), 0.5);
         let err = Response {
-            id: 2,
+            id: Some(2),
             result: Err("boom".into()),
             latency_us: 0.0,
         };
         let p2 = Response::parse_line(&err.to_line()).unwrap();
+        assert_eq!(p2.id, Some(2));
         assert!(p2.result.is_err());
+    }
+
+    #[test]
+    fn null_id_error_roundtrips() {
+        let err = Response {
+            id: None,
+            result: Err("bad request".into()),
+            latency_us: 0.0,
+        };
+        let line = err.to_line();
+        assert!(line.contains("\"id\":null"), "{line}");
+        let p = Response::parse_line(&line).unwrap();
+        assert_eq!(p.id, None);
+        assert!(p.result.is_err());
+        // A null id on a *success* response stays invalid.
+        assert!(Response::parse_line(r#"{"id":null,"y":1.0}"#).is_err());
+    }
+
+    #[test]
+    fn extract_id_best_effort() {
+        // Valid JSON, invalid request (missing model): JSON path.
+        assert_eq!(extract_id(r#"{"id": 7, "x": [1]}"#), Some(7));
+        // Malformed JSON: byte-scan path.
+        assert_eq!(extract_id(r#"{"id": 42, "model": "#), Some(42));
+        assert_eq!(extract_id(r#"{"x":[1],"id":3"#), Some(3));
+        // Nothing recoverable.
+        assert_eq!(extract_id("garbage"), None);
+        assert_eq!(extract_id(r#"{"id": "seven"}"#), None);
+        assert_eq!(extract_id(r#"{"id": -4}"#), None);
     }
 
     #[test]

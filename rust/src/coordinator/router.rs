@@ -3,7 +3,9 @@
 //! histograms, and handles shutdown.
 
 use super::backend::{BackendKind, Engine};
-use super::batcher::{BatcherConfig, DynamicBatcher, Pending};
+use super::batcher::{
+    BatcherConfig, DynamicBatcher, Pending, Responder, ResponseSink,
+};
 use super::protocol::{Request, Response};
 use crate::metrics::LatencyHistogram;
 use std::collections::HashMap;
@@ -60,21 +62,42 @@ impl Router {
             let label = format!("{model}/{}", kind.name());
             std::thread::Builder::new()
                 .name(format!("lane-{label}"))
-                .spawn(move || match factory() {
-                    Ok(mut engine) => {
-                        while let Some(batch) = batcher.next_batch() {
-                            Self::run_batch(&mut *engine, batch, &latency);
+                .spawn(move || {
+                    // Unwind guard: if the engine panics, close the
+                    // batcher (new submissions fail fast with Closed
+                    // instead of queueing into a dead lane forever) and
+                    // drop whatever is still queued so every responder
+                    // fires — a long-running server must never strand a
+                    // client on a request nothing will drain.
+                    struct DrainGuard(Arc<DynamicBatcher>);
+                    impl Drop for DrainGuard {
+                        fn drop(&mut self) {
+                            self.0.close();
+                            while self.0.next_batch().is_some() {}
                         }
                     }
-                    Err(e) => {
-                        let msg = format!("engine init failed: {e}");
-                        while let Some(batch) = batcher.next_batch() {
-                            for p in batch {
-                                let _ = p.resp_tx.send(Response {
-                                    id: p.req.id,
-                                    result: Err(msg.clone()),
-                                    latency_us: 0.0,
-                                });
+                    let _guard = DrainGuard(batcher.clone());
+                    match factory() {
+                        Ok(mut engine) => {
+                            while let Some(batch) = batcher.next_batch() {
+                                Self::run_batch(
+                                    &mut *engine,
+                                    batch,
+                                    &latency,
+                                );
+                            }
+                        }
+                        Err(e) => {
+                            let msg = format!("engine init failed: {e}");
+                            while let Some(batch) = batcher.next_batch() {
+                                for p in batch {
+                                    let id = p.req.id;
+                                    p.responder.send(Response {
+                                        id: Some(id),
+                                        result: Err(msg.clone()),
+                                        latency_us: 0.0,
+                                    });
+                                }
                             }
                         }
                     }
@@ -92,19 +115,22 @@ impl Router {
         batch: Vec<Pending>,
         latency: &LatencyHistogram,
     ) {
-        let rows: Vec<Vec<f32>> =
-            batch.iter().map(|p| p.req.features.clone()).collect();
         let dim = engine.dim();
-        // Validate dims up front so one bad request cannot poison a batch.
-        let mut ok_idx = Vec::with_capacity(batch.len());
-        let mut ok_rows = Vec::with_capacity(batch.len());
-        for (i, (p, row)) in batch.iter().zip(rows).enumerate() {
+        // Feature vectors are MOVED out of the requests — the hot path
+        // does zero per-request allocations (the seed cloned every row
+        // before validating it).  Dims are checked up front so one bad
+        // request cannot poison a batch.
+        let mut ok = Vec::with_capacity(batch.len());
+        let mut rows = Vec::with_capacity(batch.len());
+        for mut p in batch {
+            let row = std::mem::take(&mut p.req.features);
             if row.len() == dim {
-                ok_idx.push(i);
-                ok_rows.push(row);
+                rows.push(row);
+                ok.push(p);
             } else {
-                let _ = p.resp_tx.send(Response {
-                    id: p.req.id,
+                let id = p.req.id;
+                p.responder.send(Response {
+                    id: Some(id),
                     result: Err(format!(
                         "dim mismatch: got {}, want {dim}",
                         row.len()
@@ -113,26 +139,29 @@ impl Router {
                 });
             }
         }
-        let outs = engine.eval_batch(&ok_rows);
-        match outs {
+        match engine.eval_batch(&rows) {
             Ok(values) => {
-                for (slot, value) in ok_idx.iter().zip(values) {
-                    let p = &batch[*slot];
+                // If the engine returns fewer values than rows (engine
+                // bug), the unmatched responders answer "worker
+                // dropped" on drop — never silence.
+                for (p, value) in ok.into_iter().zip(values) {
                     let dur = p.enqueued.elapsed();
                     latency.record(dur);
-                    let _ = p.resp_tx.send(Response {
-                        id: p.req.id,
+                    let id = p.req.id;
+                    p.responder.send(Response {
+                        id: Some(id),
                         result: Ok(value),
                         latency_us: dur.as_nanos() as f64 / 1e3,
                     });
                 }
             }
             Err(e) => {
-                for slot in &ok_idx {
-                    let p = &batch[*slot];
-                    let _ = p.resp_tx.send(Response {
-                        id: p.req.id,
-                        result: Err(format!("engine error: {e}")),
+                let msg = format!("engine error: {e}");
+                for p in ok {
+                    let id = p.req.id;
+                    p.responder.send(Response {
+                        id: Some(id),
+                        result: Err(msg.clone()),
                         latency_us: 0.0,
                     });
                 }
@@ -140,17 +169,26 @@ impl Router {
         }
     }
 
-    /// Submit a request; the response arrives on the returned channel.
-    pub fn submit(&self, req: Request) -> Result<Receiver<Response>, SubmitError> {
-        let key = (req.model.clone(), req.backend);
-        let lane = match self.lanes.get(&key) {
+    /// Submit a request with an explicit response sink.
+    ///
+    /// Exactly one response is guaranteed to reach the sink: unknown
+    /// lanes and backpressure are answered immediately (the error cases
+    /// additionally return `Err` so callers can track rejections), and
+    /// accepted requests carry a [`Responder`] whose drop guard answers
+    /// `"worker dropped"` if the lane dies mid-flight.
+    pub fn submit_sink(
+        &self,
+        req: Request,
+        sink: ResponseSink,
+    ) -> Result<(), SubmitError> {
+        let id = req.id;
+        let responder = Responder::new(id, sink);
+        let lane = match self.lanes.get(&(req.model.clone(), req.backend)) {
             Some(l) => l,
             None => {
                 self.rejected.fetch_add(1, Ordering::Relaxed);
-                // Unknown lane: answer immediately with an error response.
-                let (tx, rx) = channel();
-                let _ = tx.send(Response {
-                    id: req.id,
+                responder.send(Response {
+                    id: Some(id),
                     result: Err(format!(
                         "no lane for model={} backend={}",
                         req.model,
@@ -158,17 +196,34 @@ impl Router {
                     )),
                     latency_us: 0.0,
                 });
-                return Ok(rx);
+                return Ok(());
             }
         };
-        let (tx, rx) = channel();
-        lane.batcher
-            .submit(Pending { req, enqueued: Instant::now(), resp_tx: tx })
-            .map(|()| rx)
-            .map_err(|e| {
+        match lane.batcher.submit(Pending {
+            req,
+            enqueued: Instant::now(),
+            responder,
+        }) {
+            Ok(()) => Ok(()),
+            Err((p, e)) => {
                 self.rejected.fetch_add(1, Ordering::Relaxed);
-                e
-            })
+                p.responder.send(Response {
+                    id: Some(id),
+                    result: Err(format!("backpressure: {e:?}")),
+                    latency_us: 0.0,
+                });
+                Err(e)
+            }
+        }
+    }
+
+    /// Submit a request; the response arrives on the returned channel.
+    /// On `Err` the (dropped) channel still received the backpressure
+    /// response — in-process callers use the `Err` directly.
+    pub fn submit(&self, req: Request) -> Result<Receiver<Response>, SubmitError> {
+        let (tx, rx) = channel();
+        self.submit_sink(req, ResponseSink::Channel(tx))?;
+        Ok(rx)
     }
 
     /// Blocking convenience: submit and wait.
@@ -176,12 +231,12 @@ impl Router {
         let id = req.id;
         match self.submit(req) {
             Ok(rx) => rx.recv().unwrap_or(Response {
-                id,
+                id: Some(id),
                 result: Err("worker dropped".into()),
                 latency_us: 0.0,
             }),
             Err(e) => Response {
-                id,
+                id: Some(id),
                 result: Err(format!("rejected: {e:?}")),
                 latency_us: 0.0,
             },
@@ -283,7 +338,7 @@ mod tests {
     fn routes_and_answers() {
         let r = mk_router(false);
         let resp = r.call(req(1, vec![1.0, 2.0, 3.0]));
-        assert_eq!(resp.id, 1);
+        assert_eq!(resp.id, Some(1));
         assert_eq!(resp.result.unwrap(), 6.0);
         assert!(resp.latency_us > 0.0);
     }
@@ -332,7 +387,7 @@ mod tests {
                     let id = t * per_thread + i;
                     let resp =
                         r.call(req(id, vec![id as f32, 0.0, 1.0]));
-                    assert_eq!(resp.id, id);
+                    assert_eq!(resp.id, Some(id));
                     got.push((id, resp.result.unwrap()));
                 }
                 got
@@ -346,6 +401,111 @@ mod tests {
             }
         }
         assert_eq!(all.len(), (n_threads * per_thread) as usize);
+    }
+
+    /// Engine that dies (panics) on every eval — models a lane tearing
+    /// down with requests in flight.
+    struct DyingEngine;
+
+    impl Engine for DyingEngine {
+        fn dim(&self) -> usize {
+            3
+        }
+
+        fn eval_batch(&mut self, _rows: &[Vec<f32>])
+            -> anyhow::Result<Vec<f32>> {
+            panic!("lane died mid-flight");
+        }
+    }
+
+    #[test]
+    fn lane_teardown_mid_flight_answers_every_request() {
+        // The exactly-one-response invariant through engine/lane
+        // teardown: the drained batch's responders fire during the
+        // worker's unwind, queued-but-undrained requests fire when the
+        // router (and with it the batcher queue) is dropped.  The seed
+        // lost all of these silently.
+        let mut r = Router::new();
+        r.add_lane(
+            "m",
+            BackendKind::Sketch,
+            move || Ok(Box::new(DyingEngine) as Box<dyn Engine>),
+            &RouterConfig::default(),
+        );
+        let mut rxs = Vec::new();
+        for i in 0..40u64 {
+            if let Ok(rx) = r.submit(req(i, vec![0.0, 0.0, 1.0])) {
+                rxs.push((i, rx));
+            }
+        }
+        assert!(!rxs.is_empty());
+        drop(r); // shutdown: close + join dead worker, drop the queue
+        for (i, rx) in rxs {
+            let resp = rx
+                .recv_timeout(std::time::Duration::from_secs(5))
+                .expect("a response must arrive, not channel-drop");
+            assert_eq!(resp.id, Some(i));
+            assert!(
+                resp.result.unwrap_err().contains("worker dropped"),
+                "request {i} must get the worker-dropped error"
+            );
+        }
+    }
+
+    #[test]
+    fn truncated_engine_output_still_answers_all() {
+        // An engine that returns fewer values than rows: matched rows
+        // get answers, the rest get worker-dropped — never silence.
+        struct ShortEngine;
+        impl Engine for ShortEngine {
+            fn dim(&self) -> usize {
+                3
+            }
+            fn eval_batch(&mut self, rows: &[Vec<f32>])
+                -> anyhow::Result<Vec<f32>> {
+                Ok(rows[..rows.len() / 2]
+                    .iter()
+                    .map(|r| r.iter().sum())
+                    .collect())
+            }
+        }
+        let mut r = Router::new();
+        let cfg = RouterConfig {
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait: std::time::Duration::from_secs(30),
+                queue_cap: 64,
+            },
+        };
+        r.add_lane(
+            "m",
+            BackendKind::Sketch,
+            move || Ok(Box::new(ShortEngine) as Box<dyn Engine>),
+            &cfg,
+        );
+        let rxs: Vec<_> = (0..8u64)
+            .map(|i| (i, r.submit(req(i, vec![1.0, 2.0, 3.0])).unwrap()))
+            .collect();
+        let mut answered = 0;
+        let mut dropped = 0;
+        for (i, rx) in rxs {
+            let resp = rx
+                .recv_timeout(std::time::Duration::from_secs(5))
+                .unwrap();
+            assert_eq!(resp.id, Some(i));
+            match resp.result {
+                Ok(v) => {
+                    assert_eq!(v, 6.0);
+                    answered += 1;
+                }
+                Err(e) => {
+                    assert!(e.contains("worker dropped"));
+                    dropped += 1;
+                }
+            }
+        }
+        assert_eq!(answered, 4);
+        assert_eq!(dropped, 4);
     }
 
     #[test]

@@ -1,34 +1,80 @@
 //! TCP JSON-line server on top of the router.
 //!
-//! One OS thread per connection (edge-scale concurrency); requests stream
-//! in as JSON lines, responses stream out as they complete (a per-
-//! connection writer thread serializes them).  Malformed lines produce an
-//! error response with id 0 rather than killing the connection; queue-full
-//! backpressure is surfaced as an error response for that id.
+//! Default mode (Linux) is the epoll reactor in [`super::net`]: one
+//! event-loop thread handles accept, framing, submission, and response
+//! write-back for every connection — the process thread count stays
+//! fixed at reactor + lane workers + worker pool regardless of how many
+//! connections or requests are in flight.  The reactor also fixes the
+//! seed's front-end bugs: a thread spawned per in-flight request, idle
+//! connections that never observed the stop flag (blocked in
+//! `reader.lines()`), and unbounded line buffering that let a
+//! newline-free stream OOM the process.
+//!
+//! `bind_legacy` (CLI: `serve --threads-legacy`) keeps the seed's
+//! thread-per-connection loop as a one-release escape hatch; it is also
+//! the fallback on non-Linux targets.  The legacy loop shares the
+//! router-side fixes (exactly-one-response guarantee, best-effort id
+//! recovery on malformed lines) but retains its per-connection threads
+//! and unbounded line buffering.
 
-use super::protocol::{Request, Response};
+use super::protocol::{extract_id, Request, Response};
 use super::router::Router;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 
+/// Which front-end loop `serve` runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeMode {
+    /// Epoll reactor (Linux): fixed thread count, line cap, prompt
+    /// stop.
+    Reactor,
+    /// Seed-style thread-per-connection loop (escape hatch; the only
+    /// mode on non-Linux targets).
+    ThreadsLegacy,
+}
+
 pub struct Server {
     router: Arc<Router>,
     listener: TcpListener,
     stop: Arc<AtomicBool>,
     pub connections: Arc<AtomicU64>,
+    mode: ServeMode,
 }
 
 impl Server {
-    /// Bind to an address ("127.0.0.1:0" for an ephemeral port).
+    /// Bind to an address ("127.0.0.1:0" for an ephemeral port) in the
+    /// default mode (reactor on Linux, legacy elsewhere).
     pub fn bind(router: Arc<Router>, addr: &str) -> anyhow::Result<Self> {
+        Self::bind_with_mode(router, addr, ServeMode::Reactor)
+    }
+
+    /// Bind with the legacy thread-per-connection loop.
+    pub fn bind_legacy(
+        router: Arc<Router>,
+        addr: &str,
+    ) -> anyhow::Result<Self> {
+        Self::bind_with_mode(router, addr, ServeMode::ThreadsLegacy)
+    }
+
+    pub fn bind_with_mode(
+        router: Arc<Router>,
+        addr: &str,
+        mode: ServeMode,
+    ) -> anyhow::Result<Self> {
+        // Off Linux there is no epoll: coerce to the legacy loop so
+        // `mode()` (and everything that reports it — the serve banner,
+        // BENCH_server.json rows) reflects what actually runs.
+        #[cfg(not(target_os = "linux"))]
+        let mode = ServeMode::ThreadsLegacy;
         let listener = TcpListener::bind(addr)?;
         Ok(Self {
             router,
             listener,
             stop: Arc::new(AtomicBool::new(false)),
             connections: Arc::new(AtomicU64::new(0)),
+            mode,
         })
     }
 
@@ -36,8 +82,46 @@ impl Server {
         self.listener.local_addr().unwrap()
     }
 
+    pub fn mode(&self) -> ServeMode {
+        self.mode
+    }
+
     /// Serve until `stop_handle` flips; call from a dedicated thread.
+    /// The reactor observes the flag within ~50 ms even when every
+    /// connection is idle and closes them on the way out.
     pub fn serve(&self) {
+        #[cfg(target_os = "linux")]
+        if self.mode == ServeMode::Reactor {
+            match super::net::Reactor::new(
+                self.router.clone(),
+                &self.listener,
+                self.stop.clone(),
+                self.connections.clone(),
+            ) {
+                Ok(mut reactor) => {
+                    reactor.run();
+                    return;
+                }
+                Err(e) => {
+                    eprintln!(
+                        "reactor init failed ({e}); falling back to the \
+                         legacy thread-per-connection loop"
+                    );
+                }
+            }
+        }
+        self.serve_legacy();
+    }
+
+    pub fn stop_handle(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    /// The seed's accept loop (one thread per connection, one writer
+    /// thread per connection, one forwarder thread per in-flight
+    /// request).  Kept verbatim-in-spirit as the `--threads-legacy`
+    /// escape hatch and the non-Linux fallback.
+    fn serve_legacy(&self) {
         self.listener.set_nonblocking(true).ok();
         loop {
             if self.stop.load(Ordering::Acquire) {
@@ -49,7 +133,7 @@ impl Server {
                     let router = self.router.clone();
                     let stop = self.stop.clone();
                     std::thread::spawn(move || {
-                        handle_conn(stream, router, stop);
+                        handle_conn_legacy(stream, router, stop);
                     });
                 }
                 Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -59,13 +143,9 @@ impl Server {
             }
         }
     }
-
-    pub fn stop_handle(&self) -> Arc<AtomicBool> {
-        self.stop.clone()
-    }
 }
 
-fn handle_conn(
+fn handle_conn_legacy(
     stream: TcpStream,
     router: Arc<Router>,
     stop: Arc<AtomicBool>,
@@ -104,17 +184,23 @@ fn handle_conn(
                 let id = req.id;
                 match router.submit(req) {
                     Ok(rx) => {
-                        // Forward the response asynchronously.
+                        // Forward the response asynchronously.  The
+                        // responder guarantees the channel always
+                        // yields exactly one response, but keep a
+                        // belt-and-braces error for a dropped sender.
                         let out_tx = out_tx.clone();
                         std::thread::spawn(move || {
-                            if let Ok(resp) = rx.recv() {
-                                let _ = out_tx.send(resp);
-                            }
+                            let resp = rx.recv().unwrap_or(Response {
+                                id: Some(id),
+                                result: Err("worker dropped".into()),
+                                latency_us: 0.0,
+                            });
+                            let _ = out_tx.send(resp);
                         });
                     }
                     Err(e) => {
                         let _ = out_tx.send(Response {
-                            id,
+                            id: Some(id),
                             result: Err(format!("backpressure: {e:?}")),
                             latency_us: 0.0,
                         });
@@ -123,7 +209,7 @@ fn handle_conn(
             }
             Err(e) => {
                 let _ = out_tx.send(Response {
-                    id: 0,
+                    id: extract_id(&line),
                     result: Err(format!("bad request: {e}")),
                     latency_us: 0.0,
                 });

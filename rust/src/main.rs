@@ -6,7 +6,10 @@
 //! repsketch exp figure2 [--csv FILE]       regenerate paper Figure 2
 //! repsketch exp theory [--dataset NAME]    §3.2.1 error-decay check
 //! repsketch serve [--addr A] [--pjrt] [--fused NAME=FILE,...]
-//!                                          TCP JSON-line inference server
+//!                 [--threads-legacy]       TCP JSON-line inference server
+//!                                          (epoll reactor by default;
+//!                                          --threads-legacy keeps the old
+//!                                          thread-per-connection loop)
 //! repsketch eval --dataset NAME [--backend rs|nn|kernel]
 //! repsketch build-sketch --dataset NAME [--rows L] [--cols R] --out FILE
 //! repsketch fuse-sketch --inputs A.rssk,B.rssk,... --out FILE
@@ -96,7 +99,7 @@ fn print_usage() {
          repsketch exp theory [--dataset adult]\n  \
          repsketch exp ablation [--dataset adult]\n  \
          repsketch serve [--addr 127.0.0.1:7878] [--pjrt] [--datasets a,b] \
-         [--fused NAME=FILE,...]\n  \
+         [--fused NAME=FILE,...] [--threads-legacy]\n  \
          repsketch eval --dataset NAME [--backend rs|nn|kernel]\n  \
          repsketch build-sketch --dataset NAME [--rows L] [--cols R] --out FILE\n  \
          repsketch fuse-sketch --inputs A.rssk,B.rssk,... --out FILE"
@@ -398,8 +401,20 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         }
     }
     let router = Arc::new(router);
-    let server = Server::bind(router.clone(), &addr)?;
-    println!("serving on {}", server.local_addr());
+    let server = if flags.kv.contains_key("threads-legacy") {
+        Server::bind_legacy(router.clone(), &addr)?
+    } else {
+        Server::bind(router.clone(), &addr)?
+    };
+    println!(
+        "serving on {} ({})",
+        server.local_addr(),
+        match server.mode() {
+            repsketch::coordinator::ServeMode::Reactor => "epoll reactor",
+            repsketch::coordinator::ServeMode::ThreadsLegacy =>
+                "legacy thread-per-connection",
+        }
+    );
     println!(
         "protocol: one JSON per line, e.g. \
          {}",
