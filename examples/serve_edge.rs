@@ -85,7 +85,8 @@ fn main() -> anyhow::Result<()> {
     let server = Server::bind(router.clone(), "127.0.0.1:0")?;
     let addr = server.local_addr();
     let stop = server.stop_handle();
-    let server_thread = std::thread::spawn(move || server.serve());
+    let server_thread =
+        std::thread::spawn(move || server.serve().expect("serve"));
     println!("serving 6 datasets x {} backends on {addr}\n", BACKENDS.len());
 
     // --- drive load through the socket, one lane at a time ----------------
@@ -110,6 +111,7 @@ fn main() -> anyhow::Result<()> {
                         model: name.to_string(),
                         backend: kind,
                         features: ds.row(i).to_vec(),
+                        want_scores: false,
                     }
                     .to_line();
                     line.push('\n');

@@ -35,6 +35,7 @@ fn throughput(
                     model: model.clone(),
                     backend: kind,
                     features: rows[i % rows.len()].clone(),
+                    want_scores: false,
                 });
                 resp.result.expect("response");
             }
@@ -99,6 +100,7 @@ fn main() -> anyhow::Result<()> {
             model: name.into(),
             backend: BackendKind::Sketch,
             features: rows[j % rows.len()].clone(),
+            want_scores: false,
         });
         std::hint::black_box(resp.result.unwrap());
         j += 1;

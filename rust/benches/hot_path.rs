@@ -95,6 +95,7 @@ fn assert_router_hot_path_zero_copy() -> u64 {
             model: "m".into(),
             backend: BackendKind::Sketch,
             features: vec![0.5; DIM],
+            want_scores: false,
         })
         .collect();
     let mut rxs = Vec::with_capacity(B);

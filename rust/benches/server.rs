@@ -1,8 +1,10 @@
-//! Server front-end benchmark (§Perf L3): the epoll reactor vs the
-//! legacy thread-per-connection loop, swept over connections ×
-//! pipeline depth against a trivial engine — so the numbers isolate
-//! the front-end (framing, dispatch, completion write-back), not the
-//! kernels.  Self-contained (no artifacts needed).
+//! Server front-end benchmark (§Perf L3): the epoll reactor swept over
+//! connections × pipeline depth against a trivial engine — so the
+//! numbers isolate the front-end (framing, dispatch, completion
+//! write-back), not the kernels.  Self-contained (no artifacts
+//! needed).  The legacy thread-per-connection comparison rows are gone
+//! with the legacy loop itself (PR 3 measured the win; PR 4 removed
+//! the loser).
 //!
 //! Writes `BENCH_server.json` at the repo root via
 //! `util::bench::write_json` so the front-end trajectory is tracked
@@ -42,22 +44,17 @@ impl Engine for SumEngine {
 fn mode_name(mode: ServeMode) -> &'static str {
     match mode {
         ServeMode::Reactor => "reactor",
-        ServeMode::ThreadsLegacy => "legacy",
+        ServeMode::ThreadsFallback => "fallback",
     }
 }
 
-/// One (mode, connections, depth) cell: fresh server, `conns` client
-/// threads each pushing `per_conn` requests with a `depth`-deep
-/// pipeline window.  Per-request latency (send to response) is
-/// measured client-side, so the BenchResult carries REAL mean/p50/p99
+/// One (connections, depth) cell: fresh server, `conns` client threads
+/// each pushing `per_conn` requests with a `depth`-deep pipeline
+/// window.  Per-request latency (send to response) is measured
+/// client-side, so the BenchResult carries REAL mean/p50/p99
 /// percentiles; the aggregate wall-clock throughput is printed
 /// alongside.
-fn run_case(
-    mode: ServeMode,
-    conns: usize,
-    depth: usize,
-    per_conn: usize,
-) -> BenchResult {
+fn run_case(conns: usize, depth: usize, per_conn: usize) -> BenchResult {
     let mut router = Router::new();
     let cfg = RouterConfig {
         batcher: BatcherConfig {
@@ -72,15 +69,13 @@ fn run_case(
         move || Ok(Box::new(SumEngine) as Box<dyn Engine>),
         &cfg,
     );
-    let server =
-        Server::bind_with_mode(Arc::new(router), "127.0.0.1:0", mode)
-            .unwrap();
-    // Label rows with what actually runs (bind coerces Reactor to the
-    // legacy loop off Linux), not what was requested.
+    let server = Server::bind(Arc::new(router), "127.0.0.1:0").unwrap();
+    // Label rows with what actually runs (the fallback loop off Linux).
     let mode = server.mode();
     let addr = server.local_addr();
     let stop = server.stop_handle();
-    let serve_thread = std::thread::spawn(move || server.serve());
+    let serve_thread =
+        std::thread::spawn(move || server.serve().expect("serve"));
 
     let t0 = Instant::now();
     let mut clients = Vec::new();
@@ -108,6 +103,7 @@ fn run_case(
                         model: "m".into(),
                         backend: BackendKind::Sketch,
                         features: vec![1.0; DIM],
+                        want_scores: false,
                     }
                     .to_line();
                     l.push('\n');
@@ -164,13 +160,11 @@ fn main() -> anyhow::Result<()> {
     let per_conn = if smoke { 200 } else { 2000 };
     bench::header();
     let mut results = Vec::new();
-    for mode in [ServeMode::Reactor, ServeMode::ThreadsLegacy] {
-        for conns in [1usize, 8, 64] {
-            for depth in [1usize, 16] {
-                let r = run_case(mode, conns, depth, per_conn);
-                r.print();
-                results.push(r);
-            }
+    for conns in [1usize, 8, 64] {
+        for depth in [1usize, 16] {
+            let r = run_case(conns, depth, per_conn);
+            r.print();
+            results.push(r);
         }
     }
     let repo_root = Path::new(env!("CARGO_MANIFEST_DIR"))

@@ -1,0 +1,225 @@
+//! Sharded-serving scaling sweep (§Perf L3): the `sh` lane's
+//! scatter/gather execution over shards ∈ {1, 2, 4, 8} × B ∈ {1, 32,
+//! 512}, against the monolithic batch kernel as the zero-overhead
+//! reference.  Self-contained synthetic config (no artifacts needed).
+//!
+//! The sketch is deep (L = 2048, K = 2 → 4096 hashes over a 64-column
+//! counter array) so a monolithic walk is memory-traffic bound — the
+//! regime sharding exists for.  Every shard count serves bit-identical
+//! answers (property-tested in `shard::`), so the sweep isolates pure
+//! scaling: per-batch speedup at S shards vs S = 1 through the SAME
+//! engine, plus the handoff overhead vs the in-thread monolithic
+//! kernel.
+//!
+//! Writes `BENCH_shard.json` at the repo root.  Meta includes
+//! `speedup_s4_b512` (the acceptance headline: ≥ 1.5x expected on ≥ 4
+//! usable cores) and `cores`; when the host has fewer than 5 cores the
+//! `note` field documents that the speedup is core-bound — the honest
+//! "or documents why not" path.
+//!
+//! Run: `cargo bench --bench shard_scaling [-- --smoke]`
+
+use repsketch::coordinator::{backend, Engine, WorkerPool};
+use repsketch::kernel::KernelParams;
+use repsketch::shard::ShardedSketch;
+use repsketch::sketch::{BatchScratch, RaceSketch, SketchConfig};
+use repsketch::util::bench;
+use repsketch::util::json::{self, Json};
+use repsketch::util::rng::SplitMix64;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Deployment-shaped synthetic config: small projected dim, deep
+/// sketch — hash + gather dominate, projection is negligible.
+const D: usize = 32;
+const P: usize = 16;
+const M: usize = 256;
+const ROWS: usize = 2048;
+const COLS: usize = 64;
+const K_PER_ROW: u32 = 2;
+/// MoM groups: 16 so the plan can split 8 ways with whole groups.
+const GROUPS: usize = 16;
+
+fn synthetic_sketch() -> RaceSketch {
+    let mut rng = SplitMix64::new(0x5CA1E);
+    let kp = KernelParams {
+        d: D,
+        p: P,
+        m: M,
+        a: (0..D * P).map(|_| rng.next_gaussian() as f32 * 0.5).collect(),
+        x: (0..M * P).map(|_| rng.next_gaussian() as f32).collect(),
+        alpha: (0..M).map(|_| 0.5 + rng.next_f32()).collect(),
+        width: 2.0,
+        lsh_seed: rng.next_u64(),
+        k_per_row: K_PER_ROW,
+        default_rows: ROWS,
+        default_cols: COLS,
+    };
+    RaceSketch::build(
+        &kp,
+        &SketchConfig { groups: GROUPS, ..SketchConfig::default() },
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    // Per-case measurement budget: full ~0.5 s, smoke ~0.05 s (same
+    // grid, CI-friendly wall clock).
+    let budget_ns = if smoke { 5e7 } else { 5e8 };
+
+    let sketch = synthetic_sketch();
+    let cores = std::thread::available_parallelism()
+        .map(|c| c.get())
+        .unwrap_or(1);
+    // One pool sized for the widest sweep point, shared by every cell
+    // (the serving-process shape: the pool outlives every batch).
+    let pool = Arc::new(WorkerPool::new(8));
+
+    let mut rng = SplitMix64::new(0x5EED);
+    let max_b = 512usize;
+    let rows_flat: Vec<f32> =
+        (0..max_b * D).map(|_| rng.next_gaussian() as f32).collect();
+    let rows_vec: Vec<Vec<f32>> = rows_flat
+        .chunks_exact(D)
+        .map(|r| r.to_vec())
+        .collect();
+
+    println!(
+        "synthetic config: d={D} p={P} M={M} L={ROWS} R={COLS} \
+         K={K_PER_ROW} g={GROUPS}, {cores} cores{}",
+        if smoke { " (smoke)" } else { "" }
+    );
+    bench::header();
+    let mut results = Vec::new();
+    let mut meta: Vec<(String, Json)> = Vec::new();
+
+    // Monolithic reference: the batch-major kernel on one thread.
+    let mut mono_qps = Vec::new();
+    for &b in &[1usize, 32, 512] {
+        let flat = &rows_flat[..b * D];
+        let mut bs = BatchScratch::default();
+        let r = bench::run_with_budget(
+            &format!("monolithic     B={b:<3}"),
+            budget_ns,
+            || {
+                std::hint::black_box(
+                    sketch.query_batch_with(flat, &mut bs),
+                );
+            },
+        );
+        r.print();
+        mono_qps.push((b, b as f64 * r.per_sec()));
+        results.push(r);
+    }
+
+    // Sanity anchor before timing: sharded answers equal monolithic.
+    {
+        let sharded = ShardedSketch::from_race(&sketch, 4);
+        let got = sharded.scores_batch(&rows_flat[..32 * D]);
+        let want = sketch.query_batch(&rows_flat[..32 * D]);
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            anyhow::ensure!(
+                g.to_bits() == w.to_bits(),
+                "sharded result diverges from monolithic at row {i}"
+            );
+        }
+    }
+
+    let mut qps_at = vec![vec![0.0f64; 3]; 4]; // [shard_idx][b_idx]
+    let shard_counts = [1usize, 2, 4, 8];
+    for (si, &shards) in shard_counts.iter().enumerate() {
+        let sharded = ShardedSketch::from_race(&sketch, shards);
+        assert_eq!(sharded.n_shards(), shards);
+        let mut engine =
+            backend::ShardedEngine::with_pool(sharded, pool.clone());
+        for (bi, &b) in [1usize, 32, 512].iter().enumerate() {
+            let batch_rows = &rows_vec[..b];
+            let r = bench::run_with_budget(
+                &format!("sharded S={shards} B={b:<3}"),
+                budget_ns,
+                || {
+                    std::hint::black_box(
+                        engine.eval_batch(batch_rows).unwrap(),
+                    );
+                },
+            );
+            r.print();
+            qps_at[si][bi] = b as f64 * r.per_sec();
+            results.push(r);
+        }
+    }
+
+    for (si, &shards) in shard_counts.iter().enumerate() {
+        for (bi, &b) in [1usize, 32, 512].iter().enumerate() {
+            let speedup = qps_at[si][bi] / qps_at[0][bi];
+            println!(
+                "  -> S={shards} B={b}: {:.0} q/s, {speedup:.2}x vs S=1",
+                qps_at[si][bi]
+            );
+            meta.push((
+                format!("s{shards}_b{b}"),
+                json::obj(vec![
+                    ("shards", Json::from_u64(shards as u64)),
+                    ("batch", Json::from_u64(b as u64)),
+                    ("qps", Json::num(qps_at[si][bi])),
+                    ("speedup_vs_1shard", Json::num(speedup)),
+                ]),
+            ));
+        }
+    }
+
+    // Acceptance headline: single-batch speedup at shards=4, B=512.
+    let speedup_s4_b512 = qps_at[2][2] / qps_at[0][2];
+    println!("speedup at S=4 B=512: {speedup_s4_b512:.2}x ({cores} cores)");
+
+    let repo_root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent")
+        .to_path_buf();
+    let mut meta_refs: Vec<(&str, Json)> = vec![
+        (
+            "config",
+            json::obj(vec![
+                ("d", Json::from_u64(D as u64)),
+                ("p", Json::from_u64(P as u64)),
+                ("m", Json::from_u64(M as u64)),
+                ("rows", Json::from_u64(ROWS as u64)),
+                ("cols", Json::from_u64(COLS as u64)),
+                ("k_per_row", Json::from_u64(K_PER_ROW as u64)),
+                ("groups", Json::from_u64(GROUPS as u64)),
+            ]),
+        ),
+        ("smoke", Json::Bool(smoke)),
+        ("cores", Json::from_u64(cores as u64)),
+        ("speedup_s4_b512", Json::num(speedup_s4_b512)),
+    ];
+    let note = if cores < 5 {
+        format!(
+            "host exposes only {cores} cores; 4-shard scaling is \
+             core-bound here (4 shard workers + the merging lane thread \
+             want 5) — the ≥1.5x acceptance bar applies on ≥5-core CI \
+             hardware"
+        )
+    } else {
+        String::new()
+    };
+    if !note.is_empty() {
+        meta_refs.push(("note", Json::Str(note)));
+    }
+    for (b, qps) in &mono_qps {
+        meta.push((
+            format!("monolithic_b{b}"),
+            json::obj(vec![
+                ("batch", Json::from_u64(*b as u64)),
+                ("qps", Json::num(*qps)),
+            ]),
+        ));
+    }
+    for (k, v) in &meta {
+        meta_refs.push((k.as_str(), v.clone()));
+    }
+    let out = repo_root.join("BENCH_shard.json");
+    bench::write_json(&out, "shard_scaling", meta_refs, &results)?;
+    println!("json -> {}", out.display());
+    Ok(())
+}

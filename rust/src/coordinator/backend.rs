@@ -12,31 +12,47 @@
 //! | `nn-pjrt` | PJRT executable of nn.hlo.txt  | NN (XLA)     |
 //! | `kernel-pjrt` | PJRT of kernel.hlo.txt (L1 Pallas) | Kernel (XLA) |
 //! | `mc`      | FusedMultiSketch (class-interleaved) | — (§4.6) |
+//! | `sh`      | ShardedSketch (scatter/gather shards)| — (scale-out) |
 //!
 //! A drained `DynamicBatcher` batch executes as ONE engine call: the
 //! sketch lane runs the batch-major kernel
 //! (`RaceSketch::query_batch_with`), the multiclass lane runs the fused
-//! class-interleaved kernel (`FusedMultiSketch::predict_batch_with` —
-//! one CSC hash walk and one contiguous gather serve the whole batch AND
-//! all classes; responses carry the argmax class index).
+//! class-interleaved kernel (one CSC hash walk and one contiguous
+//! gather serve the whole batch AND all classes; responses carry the
+//! argmax class index, plus the full score vector when the request set
+//! `"scores": true` — see [`BatchOutput`]).
 //!
 //! ## Parallel fan-out: the persistent sharded pool
 //!
 //! Batches of at least [`PAR_MIN_BATCH`] rows are split into contiguous
-//! shards and executed on [`WorkerPool::shared`] — long-lived worker
-//! threads with per-worker channel-fed queues and per-worker scratch
-//! (see [`super::pool`]).  Nothing on the hot path spawns a thread: the
-//! engines stage each shard's rows into an owned buffer, `Arc`-share the
-//! model, and block until all shards report back.  Below the threshold
-//! the lane thread runs the one batched kernel call itself with the
-//! engine's own scratch.  Results are bit-identical to the per-row
-//! scalar path regardless of batch size or shard count, so batching and
-//! pooling are purely throughput knobs.
+//! *row* shards and executed on [`WorkerPool::shared`] — long-lived
+//! worker threads with per-worker channel-fed queues and per-worker
+//! scratch (see [`super::pool`]).  Nothing on the hot path spawns a
+//! thread: the engines stage each shard's rows into an owned buffer,
+//! `Arc`-share the model, and block until all shards report back.
+//! Below the threshold the lane thread runs the one batched kernel
+//! call itself with the engine's own scratch.  Results are
+//! bit-identical to the per-row scalar path regardless of batch size or
+//! shard count, so batching and pooling are purely throughput knobs.
+//!
+//! ## The `sh` lane: model sharding, not batch sharding
+//!
+//! [`ShardedEngine`] splits along the OTHER axis: the sketch's L
+//! repetitions are partitioned into whole MoM groups per
+//! [`crate::shard::SketchShard`], every drained batch fans out as
+//! exactly one shard-kernel submission per shard (every batch size,
+//! B = 1 included — the contract the integration tests lock), and the
+//! partial group means are merged estimator-exactly on the lane
+//! thread.  Batch sharding multiplies throughput when B is large;
+//! model sharding cuts single-batch latency by streaming N disjoint
+//! counter slices in parallel, and is the unit the multi-process /
+//! multi-host roadmap items build on.
 
 use super::pool::{WorkerPool, WorkerScratch};
 use crate::kernel::KernelModel;
 use crate::nn::{Mlp, MlpScratch};
 use crate::runtime::Executable;
+use crate::shard::{self, MergeScratch, ShardedSketch};
 use crate::sketch::{BatchScratch, FusedMultiSketch, FusedScratch, RaceSketch};
 use std::sync::Arc;
 
@@ -49,6 +65,7 @@ pub enum BackendKind {
     NnPjrt,
     KernelPjrt,
     Multiclass,
+    Sharded,
 }
 
 impl BackendKind {
@@ -60,6 +77,7 @@ impl BackendKind {
             BackendKind::NnPjrt => "nn-pjrt",
             BackendKind::KernelPjrt => "kernel-pjrt",
             BackendKind::Multiclass => "mc",
+            BackendKind::Sharded => "sh",
         }
     }
 
@@ -71,18 +89,45 @@ impl BackendKind {
             "nn-pjrt" => BackendKind::NnPjrt,
             "kernel-pjrt" => BackendKind::KernelPjrt,
             "mc" | "multiclass" => BackendKind::Multiclass,
+            "sh" | "sharded" => BackendKind::Sharded,
             _ => return None,
         })
     }
 
-    pub const ALL: [BackendKind; 6] = [
+    pub const ALL: [BackendKind; 7] = [
         BackendKind::Sketch,
         BackendKind::NnRust,
         BackendKind::KernelRust,
         BackendKind::NnPjrt,
         BackendKind::KernelPjrt,
         BackendKind::Multiclass,
+        BackendKind::Sharded,
     ];
+}
+
+/// Flat per-class scores for one engine call: row i's vector is
+/// `flat[i * n_classes..(i + 1) * n_classes]`.  Kept flat so the batch
+/// crosses the engine boundary as ONE allocation; the router slices
+/// out (and only then allocates) the rows whose requests asked.
+pub struct ScoreMatrix {
+    pub n_classes: usize,
+    pub flat: Vec<f32>,
+}
+
+impl ScoreMatrix {
+    /// Row `i`'s per-class scores, if in range.
+    pub fn row(&self, i: usize) -> Option<&[f32]> {
+        self.flat.get(i * self.n_classes..(i + 1) * self.n_classes)
+    }
+}
+
+/// One engine call's output: per-row scalar values (estimate or argmax
+/// class index), plus the score matrix when the call asked for it and
+/// the engine is multiclass.
+pub struct BatchOutput {
+    pub values: Vec<f32>,
+    /// `None` for single-output engines or when not requested.
+    pub scores: Option<ScoreMatrix>,
 }
 
 /// A batch-evaluating engine.  Instances are created *and used* on their
@@ -95,6 +140,19 @@ pub trait Engine {
     fn dim(&self) -> usize;
     /// Evaluate a batch of feature rows into scalars.
     fn eval_batch(&mut self, rows: &[Vec<f32>]) -> anyhow::Result<Vec<f32>>;
+    /// Evaluate a batch, optionally materializing per-class score
+    /// vectors.  The default forwards to [`Engine::eval_batch`] with no
+    /// scores; multiclass engines (`mc`, `sh`) override it.  Still ONE
+    /// engine call per drained batch — `want_scores` is a flag, not a
+    /// second pass.
+    fn eval_batch_ex(
+        &mut self,
+        rows: &[Vec<f32>],
+        want_scores: bool,
+    ) -> anyhow::Result<BatchOutput> {
+        let _ = want_scores;
+        Ok(BatchOutput { values: self.eval_batch(rows)?, scores: None })
+    }
 }
 
 /// Fan a batch out across the pool only when it is at least this large
@@ -277,16 +335,26 @@ impl Engine for KernelEngine {
     }
 }
 
+/// Per-row argmax over a flat `(B, C)` score matrix — the shared tail
+/// of the `mc` and `sh` lanes.  Tie-breaking is the sketch-wide
+/// `crate::sketch::argmax`, so wire answers match every in-process
+/// predict path.
+fn argmax_values(scores: &[f32], n_classes: usize) -> Vec<f32> {
+    scores
+        .chunks_exact(n_classes)
+        .map(|row| crate::sketch::argmax(row) as f32)
+        .collect()
+}
+
 /// Multiclass lane: the fused class-interleaved sketch.  A drained batch
 /// executes as ONE fused kernel call (one hash pass, one contiguous
 /// gather for all C classes); responses carry the argmax class index as
-/// an f32.
+/// an f32, plus the per-class score vector when requested.
 pub struct MulticlassEngine {
     pub fused: Arc<FusedMultiSketch>,
     pool: Arc<WorkerPool>,
     flat: Vec<f32>,
     scratch: FusedScratch,
-    preds: Vec<usize>,
 }
 
 impl MulticlassEngine {
@@ -301,7 +369,6 @@ impl MulticlassEngine {
             pool,
             flat: Vec::new(),
             scratch: FusedScratch::default(),
-            preds: Vec::new(),
         }
     }
 }
@@ -312,8 +379,23 @@ impl Engine for MulticlassEngine {
     }
 
     fn eval_batch(&mut self, rows: &[Vec<f32>]) -> anyhow::Result<Vec<f32>> {
+        Ok(self.eval_batch_ex(rows, false)?.values)
+    }
+
+    fn eval_batch_ex(
+        &mut self,
+        rows: &[Vec<f32>],
+        want_scores: bool,
+    ) -> anyhow::Result<BatchOutput> {
+        let c_n = self.fused.n_classes();
         if rows.is_empty() {
-            return Ok(Vec::new());
+            return Ok(BatchOutput {
+                values: Vec::new(),
+                scores: want_scores.then(|| ScoreMatrix {
+                    n_classes: c_n,
+                    flat: Vec::new(),
+                }),
+            });
         }
         let d = self.fused.d;
         for (i, r) in rows.iter().enumerate() {
@@ -331,27 +413,201 @@ impl Engine for MulticlassEngine {
             for r in rows {
                 self.flat.extend_from_slice(r);
             }
-            self.fused.predict_batch_with(
-                &self.flat,
-                &mut self.scratch,
-                &mut self.preds,
-            );
-            return Ok(self.preds.iter().map(|&c| c as f32).collect());
+            let scores = self
+                .fused
+                .scores_batch_with(&self.flat, &mut self.scratch);
+            return Ok(BatchOutput {
+                values: argmax_values(scores, c_n),
+                scores: want_scores.then(|| ScoreMatrix {
+                    n_classes: c_n,
+                    flat: scores.to_vec(),
+                }),
+            });
         }
         let chunk_rows = (n + shards - 1) / shards;
+        if !want_scores {
+            // Argmax computed worker-side: one f32 per row crosses the
+            // pool, not a (B, C) score matrix nobody asked for.
+            let jobs: Vec<_> = shard_rows(rows, chunk_rows, d)
+                .into_iter()
+                .map(|flat| {
+                    let fused = self.fused.clone();
+                    move |ws: &mut WorkerScratch| {
+                        let mut preds = Vec::new();
+                        fused.predict_batch_with(&flat, &mut ws.fused,
+                                                 &mut preds);
+                        preds.into_iter()
+                            .map(|c| c as f32)
+                            .collect::<Vec<_>>()
+                    }
+                })
+                .collect();
+            return Ok(BatchOutput {
+                values: self.pool.run_jobs(jobs).concat(),
+                scores: None,
+            });
+        }
         let jobs: Vec<_> = shard_rows(rows, chunk_rows, d)
             .into_iter()
             .map(|flat| {
                 let fused = self.fused.clone();
                 move |ws: &mut WorkerScratch| {
-                    let mut preds = Vec::new();
-                    fused.predict_batch_with(&flat, &mut ws.fused,
-                                             &mut preds);
-                    preds.into_iter().map(|c| c as f32).collect::<Vec<_>>()
+                    fused.scores_batch_with(&flat, &mut ws.fused).to_vec()
                 }
             })
             .collect();
-        Ok(self.pool.run_jobs(jobs).concat())
+        let flat = self.pool.run_jobs(jobs).concat();
+        Ok(BatchOutput {
+            values: argmax_values(&flat, c_n),
+            scores: Some(ScoreMatrix { n_classes: c_n, flat }),
+        })
+    }
+}
+
+/// The `sh` lane: a sketch partitioned into whole-MoM-group shards.
+/// Every drained batch is projected ONCE on the lane thread, fanned out
+/// as exactly one shard-kernel submission per shard through the
+/// persistent pool (every batch size — model sharding cuts latency, so
+/// there is no fan-out threshold), and merged estimator-exactly on the
+/// lane thread.  Single-output sketches answer the estimate;
+/// multiclass sketches answer the argmax index plus optional scores —
+/// both bit-for-bit identical to the monolithic `rs` / `mc` lanes.
+pub struct ShardedEngine {
+    pub sharded: Arc<ShardedSketch>,
+    pool: Arc<WorkerPool>,
+    flat: Vec<f32>,
+    proj_row: Vec<f32>,
+    /// Stage-1 output, `Arc`-shared with the shard jobs and reclaimed
+    /// for reuse after the `run_jobs` barrier (refcount is back to 1
+    /// once every job has run — the allocation-free steady state the
+    /// other engines keep with their plain scratch fields).
+    proj_t: Arc<Vec<f32>>,
+    merge: MergeScratch,
+    scores: Vec<f32>,
+}
+
+impl ShardedEngine {
+    pub fn new(sharded: ShardedSketch) -> Self {
+        Self::with_pool(sharded, WorkerPool::shared())
+    }
+
+    pub fn with_pool(sharded: ShardedSketch, pool: Arc<WorkerPool>)
+        -> Self {
+        Self {
+            sharded: Arc::new(sharded),
+            pool,
+            flat: Vec::new(),
+            proj_row: Vec::new(),
+            proj_t: Arc::new(Vec::new()),
+            merge: MergeScratch::default(),
+            scores: Vec::new(),
+        }
+    }
+}
+
+impl Engine for ShardedEngine {
+    fn dim(&self) -> usize {
+        self.sharded.head.d
+    }
+
+    fn eval_batch(&mut self, rows: &[Vec<f32>]) -> anyhow::Result<Vec<f32>> {
+        Ok(self.eval_batch_ex(rows, false)?.values)
+    }
+
+    fn eval_batch_ex(
+        &mut self,
+        rows: &[Vec<f32>],
+        want_scores: bool,
+    ) -> anyhow::Result<BatchOutput> {
+        let head = &self.sharded.head;
+        let (d, c_n) = (head.d, head.n_classes);
+        if rows.is_empty() {
+            return Ok(BatchOutput {
+                values: Vec::new(),
+                scores: (want_scores && head.multiclass).then(|| {
+                    ScoreMatrix { n_classes: c_n, flat: Vec::new() }
+                }),
+            });
+        }
+        for (i, r) in rows.iter().enumerate() {
+            anyhow::ensure!(
+                r.len() == d,
+                "row {i} has dim {}, want {d}",
+                r.len()
+            );
+        }
+        let n = rows.len();
+        // Stage 1 once, on the lane thread: flatten + project into the
+        // transposed (p, B) layout every shard reads (Arc-shared — the
+        // d·p·B work is NOT duplicated per shard).
+        self.flat.clear();
+        self.flat.reserve(n * d);
+        for r in rows {
+            self.flat.extend_from_slice(r);
+        }
+        // Reclaim the shared buffer from the previous batch (its jobs
+        // all finished before run_jobs returned, so the refcount is 1;
+        // if a worker is somehow still dropping its clone, fall back to
+        // a fresh allocation rather than block).
+        if Arc::get_mut(&mut self.proj_t).is_none() {
+            self.proj_t = Arc::new(Vec::new());
+        }
+        shard::project_batch_t(
+            &head.a,
+            d,
+            head.p,
+            &self.flat,
+            n,
+            &mut self.proj_row,
+            Arc::get_mut(&mut self.proj_t).expect("uniquely owned"),
+        );
+        let proj_t = self.proj_t.clone();
+        // Exactly ONE shard-kernel submission per shard per drained
+        // batch (the integration-tested contract): each job hashes its
+        // own repetitions against the shared projections and returns
+        // complete group means for its groups.
+        let jobs: Vec<_> = self
+            .sharded
+            .shards
+            .iter()
+            .map(|sh| {
+                let sh = sh.clone();
+                let proj_t = proj_t.clone();
+                move |ws: &mut WorkerScratch| {
+                    let mut out = Vec::new();
+                    sh.partial_means_batch(&proj_t, n, &mut ws.shard,
+                                           &mut out);
+                    out
+                }
+            })
+            .collect();
+        let partials = self.pool.run_jobs(jobs);
+        // Estimator-exact merge on the submitting (lane) thread.
+        shard::merge_scores_into(
+            head,
+            &self.sharded.plan,
+            &partials,
+            n,
+            &mut self.merge,
+            &mut self.scores,
+        );
+        if !head.multiclass {
+            // Single-output (RSSK-shaped): the merged scores ARE the
+            // estimates.  A 1-class RSFM takes the multiclass branch
+            // below instead, answering its argmax index — exactly what
+            // the `mc` lane answers for the same model.
+            return Ok(BatchOutput {
+                values: self.scores.clone(),
+                scores: None,
+            });
+        }
+        Ok(BatchOutput {
+            values: argmax_values(&self.scores, c_n),
+            scores: want_scores.then(|| ScoreMatrix {
+                n_classes: c_n,
+                flat: self.scores.clone(),
+            }),
+        })
     }
 }
 
@@ -529,5 +785,144 @@ mod tests {
         let (fused, _, d) = multiclass_fixture(77, 3);
         let mut engine = MulticlassEngine::new(fused);
         assert!(engine.eval_batch(&[vec![0.0; d + 1]]).is_err());
+    }
+
+    #[test]
+    fn multiclass_engine_returns_scores_on_request() {
+        // Both sides of the fan-out threshold: values stay the argmax,
+        // scores carry the full per-class vector, bit-identical to the
+        // scalar reference.
+        let (fused, ms, d) = multiclass_fixture(0x5C0, 4);
+        let reference = fused.clone();
+        let pool = Arc::new(WorkerPool::new(4));
+        let mut engine = MulticlassEngine::with_pool(fused, pool);
+        let mut fs = crate::sketch::FusedScratch::default();
+        let mut want = Vec::new();
+        for &n in &[1usize, 30, 130] {
+            let rows = random_rows(400 + n as u64, n, d);
+            let out = engine.eval_batch_ex(&rows, true).unwrap();
+            let scores = out.scores.expect("scores requested");
+            assert_eq!(out.values.len(), n);
+            assert_eq!(scores.n_classes, 4);
+            assert_eq!(scores.flat.len(), n * 4);
+            let mut qs = QueryScratch::default();
+            for (i, r) in rows.iter().enumerate() {
+                reference.scores_with(r, &mut fs, &mut want);
+                let row = scores.row(i).expect("row in range");
+                for (c, w) in want.iter().enumerate() {
+                    assert_eq!(
+                        row[c].to_bits(),
+                        w.to_bits(),
+                        "n={n} row {i} class {c}"
+                    );
+                }
+                assert_eq!(out.values[i], ms.predict(r, &mut qs) as f32);
+            }
+            // Without the flag: same values, no score materialization.
+            let plain = engine.eval_batch_ex(&rows, false).unwrap();
+            assert_eq!(plain.values, out.values);
+            assert!(plain.scores.is_none());
+        }
+    }
+
+    #[test]
+    fn sharded_engine_single_output_matches_scalar_every_batch_shape() {
+        let kp = random_kp(0x5A, 7, 4, 30);
+        let sketch = crate::sketch::RaceSketch::build(
+            &kp,
+            &SketchConfig::default(),
+        );
+        let pool = Arc::new(WorkerPool::new(4));
+        for &shards in &[1usize, 3, 8] {
+            let sharded =
+                crate::shard::ShardedSketch::from_race(&sketch, shards);
+            let mut engine =
+                ShardedEngine::with_pool(sharded, pool.clone());
+            let mut s = QueryScratch::default();
+            for &n in &[0usize, 1, 7, 64, 130] {
+                let rows = random_rows(500 + n as u64, n, 7);
+                let got = engine.eval_batch(&rows).unwrap();
+                assert_eq!(got.len(), n);
+                for (i, r) in rows.iter().enumerate() {
+                    let want = sketch.query_with(r, &mut s);
+                    assert_eq!(
+                        got[i].to_bits(),
+                        want.to_bits(),
+                        "shards={shards} n={n} row {i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_engine_multiclass_matches_fused_and_serves_scores() {
+        let (fused, ms, d) = multiclass_fixture(0x5B, 5);
+        let reference = fused.clone();
+        let pool = Arc::new(WorkerPool::new(4));
+        let sharded = crate::shard::ShardedSketch::from_fused(&fused, 4);
+        assert_eq!(sharded.n_shards(), 4);
+        let mut engine = ShardedEngine::with_pool(sharded, pool);
+        let rows = random_rows(0x5C, 33, d);
+        let out = engine.eval_batch_ex(&rows, true).unwrap();
+        let scores = out.scores.expect("scores requested");
+        let mut fs = crate::sketch::FusedScratch::default();
+        let mut qs = QueryScratch::default();
+        let mut want = Vec::new();
+        for (i, r) in rows.iter().enumerate() {
+            reference.scores_with(r, &mut fs, &mut want);
+            let row = scores.row(i).expect("row in range");
+            for (c, w) in want.iter().enumerate() {
+                assert_eq!(
+                    row[c].to_bits(),
+                    w.to_bits(),
+                    "row {i} class {c}"
+                );
+            }
+            assert_eq!(out.values[i], ms.predict(r, &mut qs) as f32);
+        }
+    }
+
+    #[test]
+    fn one_class_fused_sketch_answers_argmax_like_the_mc_lane() {
+        // A C=1 RSFM served via `sh` must behave exactly like `mc`:
+        // argmax index 0.0 (not the raw estimate), and a 1-long score
+        // vector on request.  Only RSSK-shaped sketches answer raw
+        // estimates.
+        let (fused, _, d) = multiclass_fixture(0x5E, 1);
+        let reference = fused.clone();
+        let sharded = crate::shard::ShardedSketch::from_fused(&fused, 2);
+        assert!(sharded.head.multiclass);
+        let pool = Arc::new(WorkerPool::new(2));
+        let mut engine = ShardedEngine::with_pool(sharded, pool.clone());
+        let rows = random_rows(0x5F, 9, d);
+        let out = engine.eval_batch_ex(&rows, true).unwrap();
+        let scores = out.scores.expect("scores requested");
+        assert_eq!(scores.n_classes, 1);
+        let mut mc = MulticlassEngine::with_pool(reference, pool);
+        let mc_out = mc.eval_batch_ex(&rows, true).unwrap();
+        for i in 0..rows.len() {
+            assert_eq!(out.values[i], 0.0, "argmax of one class");
+            assert_eq!(out.values[i], mc_out.values[i]);
+            assert_eq!(
+                scores.row(i).unwrap()[0].to_bits(),
+                mc_out.scores.as_ref().unwrap().row(i).unwrap()[0]
+                    .to_bits(),
+                "row {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn sharded_engine_rejects_bad_dim_rows() {
+        let kp = random_kp(0x5D, 5, 5, 10);
+        let sketch = crate::sketch::RaceSketch::build(
+            &kp,
+            &SketchConfig::default(),
+        );
+        let mut engine = ShardedEngine::new(
+            crate::shard::ShardedSketch::from_race(&sketch, 2),
+        );
+        assert!(engine.eval_batch(&[vec![0.0; 4]]).is_err());
     }
 }

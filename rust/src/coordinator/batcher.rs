@@ -84,11 +84,7 @@ impl Responder {
 impl Drop for Responder {
     fn drop(&mut self) {
         if let Some(sink) = self.sink.take() {
-            sink.deliver(Response {
-                id: Some(self.id),
-                result: Err("worker dropped".into()),
-                latency_us: 0.0,
-            });
+            sink.deliver(Response::err(Some(self.id), "worker dropped"));
         }
     }
 }
@@ -231,6 +227,7 @@ mod tests {
                     model: "m".into(),
                     backend: BackendKind::Sketch,
                     features: vec![0.0],
+                    want_scores: false,
                 },
                 enqueued: Instant::now(),
                 responder: Responder::new(id, ResponseSink::Channel(tx)),

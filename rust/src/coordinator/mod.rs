@@ -32,8 +32,10 @@
 //! line framing (hard per-line byte cap — a newline-free stream is
 //! rejected, not buffered) and buffered nonblocking writes.  The seed's
 //! front-end spawned a thread per connection *and* per in-flight
-//! request; `Server::bind_legacy` keeps that loop for one release as
-//! the `--threads-legacy` escape hatch (and the non-Linux fallback).
+//! request; that loop survived one release as `--threads-legacy` and is
+//! now gone from Linux builds entirely (a thread-per-connection
+//! fallback remains on non-Linux targets only, where there is no
+//! epoll).
 //!
 //! **Response delivery invariant:** every accepted request produces
 //! exactly one [`Response`].  Each request carries a
@@ -47,11 +49,21 @@
 //! the requests (zero per-request allocations on the hot path), and the
 //! sketch / exact-kernel / multiclass engines execute it through the
 //! batch-major kernels (`RaceSketch::query_batch_with`,
-//! `FusedMultiSketch::predict_batch_with` — a single CSC hash walk
+//! `FusedMultiSketch::scores_batch_with` — a single CSC hash walk
 //! serving the whole batch).  Large batches are sharded across the
 //! persistent `pool::WorkerPool`.  The batched path is bit-identical to
 //! the scalar path, so batch size and shard count are pure throughput
 //! knobs, never correctness knobs.
+//!
+//! The `sh` lane (`backend::ShardedEngine`) additionally shards the
+//! MODEL: the sketch's repetitions are partitioned into whole
+//! median-of-means groups per `crate::shard::SketchShard`, every
+//! drained batch fans out as exactly one shard-kernel submission per
+//! shard through the pool, and the partial group means are merged
+//! estimator-exactly on the lane thread — bit-identical to the
+//! monolithic lanes at any shard count.  Multiclass lanes (`mc`, `sh`)
+//! answer argmax class indices and, per request (`"scores": true`),
+//! the full per-class score vector.
 
 pub mod backend;
 pub mod batcher;
@@ -62,7 +74,7 @@ pub mod protocol;
 pub mod router;
 pub mod server;
 
-pub use backend::{BackendKind, Engine};
+pub use backend::{BackendKind, BatchOutput, Engine, ScoreMatrix};
 pub use batcher::{
     BatcherConfig, DynamicBatcher, Responder, ResponseSink,
 };

@@ -12,8 +12,8 @@
 //!   wake-pipe completion path that replaced the seed's
 //!   thread-per-in-flight-request forwarders.
 //!
-//! The non-Linux (and `--threads-legacy`) fallback lives in
-//! `coordinator::server`.
+//! The non-Linux thread-per-connection fallback lives in
+//! `coordinator::server` (compiled out of Linux builds).
 
 pub mod conn;
 pub mod reactor;

@@ -235,25 +235,23 @@ impl Reactor {
                     }
                     Err(e) => {
                         if let Some(conn) = self.conns.get_mut(&token) {
-                            conn.queue_response(&Response {
-                                id: extract_id(&line),
-                                result: Err(format!("bad request: {e}")),
-                                latency_us: 0.0,
-                            });
+                            conn.queue_response(&Response::err(
+                                extract_id(&line),
+                                format!("bad request: {e}"),
+                            ));
                         }
                     }
                 }
             }
             InEvent::Oversize(prefix) => {
                 if let Some(conn) = self.conns.get_mut(&token) {
-                    conn.queue_response(&Response {
-                        id: extract_id(&prefix),
-                        result: Err(format!(
+                    conn.queue_response(&Response::err(
+                        extract_id(&prefix),
+                        format!(
                             "bad request: line exceeds the \
                              {MAX_LINE_BYTES} byte cap"
-                        )),
-                        latency_us: 0.0,
-                    });
+                        ),
+                    ));
                 }
             }
         }

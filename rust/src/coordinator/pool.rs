@@ -29,6 +29,7 @@
 //! `std::thread::scope` fan-out had), so one bad request cannot kill a
 //! shared worker out from under every other lane.
 
+use crate::shard::ShardScratch;
 use crate::sketch::{BatchScratch, FusedScratch, QueryScratch};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
@@ -43,6 +44,8 @@ pub struct WorkerScratch {
     pub query: QueryScratch,
     /// Fused multiclass kernel scratch.
     pub fused: FusedScratch,
+    /// Sharded-sketch shard kernel scratch (`sh` lane).
+    pub shard: ShardScratch,
 }
 
 type Job = Box<dyn FnOnce(&mut WorkerScratch) + Send + 'static>;

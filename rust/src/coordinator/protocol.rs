@@ -4,6 +4,13 @@
 //! `{"id": 7, "model": "adult", "backend": "rs", "x": [..d floats..]}`
 //! One response per line:
 //! `{"id": 7, "y": 0.42, "us": 13.5}` or `{"id": 7, "error": "..."}`.
+//!
+//! Multiclass lanes (`"mc"`, `"sh"`) answer the argmax class index in
+//! `"y"`.  A request may additionally set `"scores": true` to receive
+//! the full per-class score vector alongside the argmax:
+//! `{"id": 7, "y": 2, "scores": [..C floats..], "us": 13.5}`.  The flag
+//! is per-request (a batch mixes both kinds freely) and ignored by
+//! single-output engines, which carry no score vector.
 
 use super::backend::BackendKind;
 use crate::util::json::{self, Json};
@@ -15,6 +22,9 @@ pub struct Request {
     pub model: String,
     pub backend: BackendKind,
     pub features: Vec<f32>,
+    /// Ask a multiclass lane for the full per-class score vector in
+    /// addition to the argmax (`"scores": true` on the wire).
+    pub want_scores: bool,
 }
 
 /// The coordinator's answer.
@@ -27,6 +37,9 @@ pub struct Request {
 pub struct Response {
     pub id: Option<u64>,
     pub result: Result<f32, String>,
+    /// Per-class scores, present only when the request set
+    /// `want_scores` and the lane's engine produces score vectors.
+    pub scores: Option<Vec<f32>>,
     /// Queue + execution latency in microseconds.
     pub latency_us: f64,
 }
@@ -51,24 +64,41 @@ impl Request {
         if features.is_empty() {
             return Err("empty feature vector".into());
         }
-        Ok(Request { id, model, backend, features })
+        let want_scores =
+            j.get("scores").and_then(|v| v.as_bool()).unwrap_or(false);
+        Ok(Request { id, model, backend, features, want_scores })
     }
 
     pub fn to_line(&self) -> String {
         let x = Json::Arr(
             self.features.iter().map(|&v| Json::num(v as f64)).collect(),
         );
-        json::obj(vec![
+        let mut pairs = vec![
             ("id", Json::from_u64(self.id)),
             ("model", Json::Str(self.model.clone())),
             ("backend", Json::Str(self.backend.name().into())),
             ("x", x),
-        ])
-        .to_string()
+        ];
+        if self.want_scores {
+            pairs.push(("scores", Json::Bool(true)));
+        }
+        json::obj(pairs).to_string()
     }
 }
 
 impl Response {
+    /// Error response — the shape every rejection/failure path shares
+    /// (no scores, zero latency).  Centralized so protocol growth does
+    /// not mean hand-editing a dozen error literals again.
+    pub fn err(id: Option<u64>, msg: impl Into<String>) -> Response {
+        Response {
+            id,
+            result: Err(msg.into()),
+            scores: None,
+            latency_us: 0.0,
+        }
+    }
+
     fn id_json(&self) -> Json {
         match self.id {
             Some(id) => Json::from_u64(id),
@@ -78,12 +108,25 @@ impl Response {
 
     pub fn to_line(&self) -> String {
         match &self.result {
-            Ok(y) => json::obj(vec![
-                ("id", self.id_json()),
-                ("y", Json::num(*y as f64)),
-                ("us", Json::num(self.latency_us)),
-            ])
-            .to_string(),
+            Ok(y) => {
+                let mut pairs = vec![
+                    ("id", self.id_json()),
+                    ("y", Json::num(*y as f64)),
+                ];
+                if let Some(scores) = &self.scores {
+                    pairs.push((
+                        "scores",
+                        Json::Arr(
+                            scores
+                                .iter()
+                                .map(|&v| Json::num(v as f64))
+                                .collect(),
+                        ),
+                    ));
+                }
+                pairs.push(("us", Json::num(self.latency_us)));
+                json::obj(pairs).to_string()
+            }
             Err(e) => json::obj(vec![
                 ("id", self.id_json()),
                 ("error", Json::Str(e.clone())),
@@ -100,6 +143,7 @@ impl Response {
             return Ok(Response {
                 id,
                 result: Err(err.to_string()),
+                scores: None,
                 latency_us: 0.0,
             });
         }
@@ -108,8 +152,9 @@ impl Response {
             .get("y")
             .and_then(|v| v.as_f64())
             .ok_or("missing y")? as f32;
+        let scores = j.get("scores").map(|v| v.as_f32_flat());
         let us = j.get("us").and_then(|v| v.as_f64()).unwrap_or(0.0);
-        Ok(Response { id, result: Ok(y), latency_us: us })
+        Ok(Response { id, result: Ok(y), scores, latency_us: us })
     }
 }
 
@@ -167,13 +212,38 @@ mod tests {
             model: "adult".into(),
             backend: BackendKind::NnRust,
             features: vec![1.0, -0.5, 0.0],
+            want_scores: false,
         };
         let line = r.to_line();
+        assert!(!line.contains("scores"), "{line}");
         let r2 = Request::parse_line(&line).unwrap();
         assert_eq!(r2.id, 42);
         assert_eq!(r2.model, "adult");
         assert_eq!(r2.backend, BackendKind::NnRust);
         assert_eq!(r2.features, r.features);
+        assert!(!r2.want_scores);
+    }
+
+    #[test]
+    fn scores_request_roundtrip() {
+        let r = Request {
+            id: 7,
+            model: "digits".into(),
+            backend: BackendKind::Sharded,
+            features: vec![0.25, 1.0],
+            want_scores: true,
+        };
+        let line = r.to_line();
+        assert!(line.contains("\"scores\":true"), "{line}");
+        let r2 = Request::parse_line(&line).unwrap();
+        assert!(r2.want_scores);
+        assert_eq!(r2.backend, BackendKind::Sharded);
+        // "scores": false / absent both mean argmax-only.
+        let r3 = Request::parse_line(
+            r#"{"id":1,"model":"m","backend":"mc","x":[1],"scores":false}"#,
+        )
+        .unwrap();
+        assert!(!r3.want_scores);
     }
 
     #[test]
@@ -181,14 +251,19 @@ mod tests {
         let ok = Response {
             id: Some(1),
             result: Ok(0.5),
+            scores: None,
             latency_us: 12.5,
         };
-        let p = Response::parse_line(&ok.to_line()).unwrap();
+        let line = ok.to_line();
+        assert!(!line.contains("scores"), "{line}");
+        let p = Response::parse_line(&line).unwrap();
         assert_eq!(p.id, Some(1));
         assert_eq!(p.result.unwrap(), 0.5);
+        assert!(p.scores.is_none());
         let err = Response {
             id: Some(2),
             result: Err("boom".into()),
+            scores: None,
             latency_us: 0.0,
         };
         let p2 = Response::parse_line(&err.to_line()).unwrap();
@@ -197,10 +272,28 @@ mod tests {
     }
 
     #[test]
+    fn scores_response_roundtrip() {
+        let ok = Response {
+            id: Some(9),
+            result: Ok(2.0),
+            scores: Some(vec![0.1, -0.25, 0.75]),
+            latency_us: 3.5,
+        };
+        let line = ok.to_line();
+        assert!(line.contains("\"scores\":["), "{line}");
+        let p = Response::parse_line(&line).unwrap();
+        assert_eq!(p.id, Some(9));
+        assert_eq!(p.result.unwrap(), 2.0);
+        assert_eq!(p.scores.unwrap(), vec![0.1, -0.25, 0.75]);
+        assert_eq!(p.latency_us, 3.5);
+    }
+
+    #[test]
     fn null_id_error_roundtrips() {
         let err = Response {
             id: None,
             result: Err("bad request".into()),
+            scores: None,
             latency_us: 0.0,
         };
         let line = err.to_line();

@@ -92,11 +92,10 @@ impl Router {
                             while let Some(batch) = batcher.next_batch() {
                                 for p in batch {
                                     let id = p.req.id;
-                                    p.responder.send(Response {
-                                        id: Some(id),
-                                        result: Err(msg.clone()),
-                                        latency_us: 0.0,
-                                    });
+                                    p.responder.send(
+                                        Response::err(Some(id),
+                                                      msg.clone()),
+                                    );
                                 }
                             }
                         }
@@ -129,28 +128,43 @@ impl Router {
                 ok.push(p);
             } else {
                 let id = p.req.id;
-                p.responder.send(Response {
-                    id: Some(id),
-                    result: Err(format!(
-                        "dim mismatch: got {}, want {dim}",
-                        row.len()
-                    )),
-                    latency_us: 0.0,
-                });
+                p.responder.send(Response::err(
+                    Some(id),
+                    format!("dim mismatch: got {}, want {dim}", row.len()),
+                ));
             }
         }
-        match engine.eval_batch(&rows) {
-            Ok(values) => {
+        // Score vectors are materialized once per batch iff anyone in
+        // it asked (still ONE engine call); each response then carries
+        // its own row's vector only if ITS request asked.
+        let want_scores = ok.iter().any(|p| p.req.want_scores);
+        match engine.eval_batch_ex(&rows, want_scores) {
+            Ok(out) => {
                 // If the engine returns fewer values than rows (engine
                 // bug), the unmatched responders answer "worker
                 // dropped" on drop — never silence.
-                for (p, value) in ok.into_iter().zip(values) {
+                let scores = out.scores;
+                for (i, (p, value)) in
+                    ok.into_iter().zip(out.values).enumerate()
+                {
                     let dur = p.enqueued.elapsed();
                     latency.record(dur);
                     let id = p.req.id;
+                    // Slice this row out of the flat matrix — the only
+                    // per-request score allocation is for requests that
+                    // actually asked.
+                    let row_scores = if p.req.want_scores {
+                        scores
+                            .as_ref()
+                            .and_then(|m| m.row(i))
+                            .map(|s| s.to_vec())
+                    } else {
+                        None
+                    };
                     p.responder.send(Response {
                         id: Some(id),
                         result: Ok(value),
+                        scores: row_scores,
                         latency_us: dur.as_nanos() as f64 / 1e3,
                     });
                 }
@@ -159,11 +173,7 @@ impl Router {
                 let msg = format!("engine error: {e}");
                 for p in ok {
                     let id = p.req.id;
-                    p.responder.send(Response {
-                        id: Some(id),
-                        result: Err(msg.clone()),
-                        latency_us: 0.0,
-                    });
+                    p.responder.send(Response::err(Some(id), msg.clone()));
                 }
             }
         }
@@ -187,15 +197,14 @@ impl Router {
             Some(l) => l,
             None => {
                 self.rejected.fetch_add(1, Ordering::Relaxed);
-                responder.send(Response {
-                    id: Some(id),
-                    result: Err(format!(
+                responder.send(Response::err(
+                    Some(id),
+                    format!(
                         "no lane for model={} backend={}",
                         req.model,
                         req.backend.name()
-                    )),
-                    latency_us: 0.0,
-                });
+                    ),
+                ));
                 return Ok(());
             }
         };
@@ -207,11 +216,10 @@ impl Router {
             Ok(()) => Ok(()),
             Err((p, e)) => {
                 self.rejected.fetch_add(1, Ordering::Relaxed);
-                p.responder.send(Response {
-                    id: Some(id),
-                    result: Err(format!("backpressure: {e:?}")),
-                    latency_us: 0.0,
-                });
+                p.responder.send(Response::err(
+                    Some(id),
+                    format!("backpressure: {e:?}"),
+                ));
                 Err(e)
             }
         }
@@ -230,16 +238,10 @@ impl Router {
     pub fn call(&self, req: Request) -> Response {
         let id = req.id;
         match self.submit(req) {
-            Ok(rx) => rx.recv().unwrap_or(Response {
-                id: Some(id),
-                result: Err("worker dropped".into()),
-                latency_us: 0.0,
+            Ok(rx) => rx.recv().unwrap_or_else(|_| {
+                Response::err(Some(id), "worker dropped")
             }),
-            Err(e) => Response {
-                id: Some(id),
-                result: Err(format!("rejected: {e:?}")),
-                latency_us: 0.0,
-            },
+            Err(e) => Response::err(Some(id), format!("rejected: {e:?}")),
         }
     }
 
@@ -331,6 +333,7 @@ mod tests {
             model: "m".into(),
             backend: BackendKind::Sketch,
             features: x,
+            want_scores: false,
         }
     }
 
@@ -351,6 +354,7 @@ mod tests {
             model: "nope".into(),
             backend: BackendKind::Sketch,
             features: vec![1.0],
+            want_scores: false,
         });
         assert!(resp.result.is_err());
         assert_eq!(r.rejected.load(Ordering::Relaxed), 1);

@@ -1,38 +1,49 @@
 //! TCP JSON-line server on top of the router.
 //!
-//! Default mode (Linux) is the epoll reactor in [`super::net`]: one
-//! event-loop thread handles accept, framing, submission, and response
-//! write-back for every connection — the process thread count stays
-//! fixed at reactor + lane workers + worker pool regardless of how many
-//! connections or requests are in flight.  The reactor also fixes the
-//! seed's front-end bugs: a thread spawned per in-flight request, idle
-//! connections that never observed the stop flag (blocked in
-//! `reader.lines()`), and unbounded line buffering that let a
-//! newline-free stream OOM the process.
+//! On Linux the ONLY front-end is the epoll reactor in [`super::net`]:
+//! one event-loop thread handles accept, framing, submission, and
+//! response write-back for every connection — the process thread count
+//! stays fixed at reactor + lane workers + worker pool regardless of
+//! how many connections or requests are in flight.  The reactor also
+//! fixed the seed front-end's bugs: a thread spawned per in-flight
+//! request, idle connections that never observed the stop flag
+//! (blocked in `reader.lines()`), and unbounded line buffering that let
+//! a newline-free stream OOM the process.
 //!
-//! `bind_legacy` (CLI: `serve --threads-legacy`) keeps the seed's
-//! thread-per-connection loop as a one-release escape hatch; it is also
-//! the fallback on non-Linux targets.  The legacy loop shares the
-//! router-side fixes (exactly-one-response guarantee, best-effort id
-//! recovery on malformed lines) but retains its per-connection threads
-//! and unbounded line buffering.
+//! The seed's thread-per-connection loop survived one release as the
+//! `serve --threads-legacy` escape hatch (PR 3) and has now been
+//! removed on Linux; it remains ONLY as the non-Linux fallback
+//! (`ServeMode::ThreadsFallback`), compiled out of Linux builds
+//! entirely.  Its behavioral contracts (exactly-one-response,
+//! best-effort id recovery, blank-line tolerance) are locked by
+//! `tests/server_reactor.rs` against the reactor.
 
-use super::protocol::{extract_id, Request, Response};
 use super::router::Router;
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, AtomicU64};
+use std::sync::Arc;
 
-/// Which front-end loop `serve` runs.
+#[cfg(not(target_os = "linux"))]
+use super::protocol::{extract_id, Request, Response};
+#[cfg(not(target_os = "linux"))]
+use std::io::{BufRead, BufReader, Write};
+#[cfg(not(target_os = "linux"))]
+use std::net::TcpStream;
+#[cfg(not(target_os = "linux"))]
+use std::sync::atomic::Ordering;
+#[cfg(not(target_os = "linux"))]
+use std::sync::mpsc;
+
+/// Which front-end loop `serve` runs.  Not user-selectable: Linux
+/// always runs the reactor, everything else always runs the fallback.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ServeMode {
     /// Epoll reactor (Linux): fixed thread count, line cap, prompt
     /// stop.
     Reactor,
-    /// Seed-style thread-per-connection loop (escape hatch; the only
-    /// mode on non-Linux targets).
-    ThreadsLegacy,
+    /// Thread-per-connection fallback — the only mode on non-Linux
+    /// targets, where there is no epoll.
+    ThreadsFallback,
 }
 
 pub struct Server {
@@ -44,30 +55,13 @@ pub struct Server {
 }
 
 impl Server {
-    /// Bind to an address ("127.0.0.1:0" for an ephemeral port) in the
-    /// default mode (reactor on Linux, legacy elsewhere).
+    /// Bind to an address ("127.0.0.1:0" for an ephemeral port).  The
+    /// mode is decided by the target OS (see [`ServeMode`]).
     pub fn bind(router: Arc<Router>, addr: &str) -> anyhow::Result<Self> {
-        Self::bind_with_mode(router, addr, ServeMode::Reactor)
-    }
-
-    /// Bind with the legacy thread-per-connection loop.
-    pub fn bind_legacy(
-        router: Arc<Router>,
-        addr: &str,
-    ) -> anyhow::Result<Self> {
-        Self::bind_with_mode(router, addr, ServeMode::ThreadsLegacy)
-    }
-
-    pub fn bind_with_mode(
-        router: Arc<Router>,
-        addr: &str,
-        mode: ServeMode,
-    ) -> anyhow::Result<Self> {
-        // Off Linux there is no epoll: coerce to the legacy loop so
-        // `mode()` (and everything that reports it — the serve banner,
-        // BENCH_server.json rows) reflects what actually runs.
+        #[cfg(target_os = "linux")]
+        let mode = ServeMode::Reactor;
         #[cfg(not(target_os = "linux"))]
-        let mode = ServeMode::ThreadsLegacy;
+        let mode = ServeMode::ThreadsFallback;
         let listener = TcpListener::bind(addr)?;
         Ok(Self {
             router,
@@ -89,39 +83,42 @@ impl Server {
     /// Serve until `stop_handle` flips; call from a dedicated thread.
     /// The reactor observes the flag within ~50 ms even when every
     /// connection is idle and closes them on the way out.
-    pub fn serve(&self) {
+    ///
+    /// With the legacy loop gone there is nothing to fall back to on
+    /// Linux: a reactor that cannot initialize (e.g. epoll fd
+    /// exhaustion) is a hard `Err`, so the CLI exits nonzero instead
+    /// of printing a banner and quietly serving nothing.
+    pub fn serve(&self) -> anyhow::Result<()> {
         #[cfg(target_os = "linux")]
-        if self.mode == ServeMode::Reactor {
-            match super::net::Reactor::new(
+        {
+            use anyhow::Context as _;
+            let mut reactor = super::net::Reactor::new(
                 self.router.clone(),
                 &self.listener,
                 self.stop.clone(),
                 self.connections.clone(),
-            ) {
-                Ok(mut reactor) => {
-                    reactor.run();
-                    return;
-                }
-                Err(e) => {
-                    eprintln!(
-                        "reactor init failed ({e}); falling back to the \
-                         legacy thread-per-connection loop"
-                    );
-                }
-            }
+            )
+            .context("reactor init failed")?;
+            reactor.run();
+            Ok(())
         }
-        self.serve_legacy();
+        #[cfg(not(target_os = "linux"))]
+        {
+            self.serve_fallback();
+            Ok(())
+        }
     }
 
     pub fn stop_handle(&self) -> Arc<AtomicBool> {
         self.stop.clone()
     }
 
-    /// The seed's accept loop (one thread per connection, one writer
-    /// thread per connection, one forwarder thread per in-flight
-    /// request).  Kept verbatim-in-spirit as the `--threads-legacy`
-    /// escape hatch and the non-Linux fallback.
-    fn serve_legacy(&self) {
+    /// Thread-per-connection accept loop — the non-Linux fallback
+    /// (there is no epoll to build the reactor on).  Shares the
+    /// router-side guarantees (exactly-one-response, id recovery) but
+    /// keeps per-connection threads and unbounded line buffering.
+    #[cfg(not(target_os = "linux"))]
+    fn serve_fallback(&self) {
         self.listener.set_nonblocking(true).ok();
         loop {
             if self.stop.load(Ordering::Acquire) {
@@ -133,7 +130,7 @@ impl Server {
                     let router = self.router.clone();
                     let stop = self.stop.clone();
                     std::thread::spawn(move || {
-                        handle_conn_legacy(stream, router, stop);
+                        handle_conn_fallback(stream, router, stop);
                     });
                 }
                 Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -145,7 +142,8 @@ impl Server {
     }
 }
 
-fn handle_conn_legacy(
+#[cfg(not(target_os = "linux"))]
+fn handle_conn_fallback(
     stream: TcpStream,
     router: Arc<Router>,
     stop: Arc<AtomicBool>,
@@ -190,29 +188,25 @@ fn handle_conn_legacy(
                         // belt-and-braces error for a dropped sender.
                         let out_tx = out_tx.clone();
                         std::thread::spawn(move || {
-                            let resp = rx.recv().unwrap_or(Response {
-                                id: Some(id),
-                                result: Err("worker dropped".into()),
-                                latency_us: 0.0,
+                            let resp = rx.recv().unwrap_or_else(|_| {
+                                Response::err(Some(id), "worker dropped")
                             });
                             let _ = out_tx.send(resp);
                         });
                     }
                     Err(e) => {
-                        let _ = out_tx.send(Response {
-                            id: Some(id),
-                            result: Err(format!("backpressure: {e:?}")),
-                            latency_us: 0.0,
-                        });
+                        let _ = out_tx.send(Response::err(
+                            Some(id),
+                            format!("backpressure: {e:?}"),
+                        ));
                     }
                 }
             }
             Err(e) => {
-                let _ = out_tx.send(Response {
-                    id: extract_id(&line),
-                    result: Err(format!("bad request: {e}")),
-                    latency_us: 0.0,
-                });
+                let _ = out_tx.send(Response::err(
+                    extract_id(&line),
+                    format!("bad request: {e}"),
+                ));
             }
         }
     }

@@ -24,6 +24,7 @@ pub mod lsh;
 pub mod metrics;
 pub mod nn;
 pub mod runtime;
+pub mod shard;
 pub mod sketch;
 pub mod util;
 

@@ -25,13 +25,30 @@ pub fn rehash_row(row: u32, codes: &[i32], n_cols: u32) -> u32 {
 /// where `% n_cols` (one div per row, 20-40 cycles) reduces to a mask —
 /// results are identical, so python parity is preserved for every R.
 pub fn rehash_all(codes: &[i32], k_per_row: usize, n_cols: u32, out: &mut [u32]) {
+    rehash_all_rows(codes, k_per_row, n_cols, 0, out);
+}
+
+/// [`rehash_all`] for a contiguous row *slice* of a larger sketch: the
+/// codes belong to global rows `row_offset..row_offset + out.len()`, so
+/// the FNV row salt uses the GLOBAL row index.  This is what lets a
+/// `shard::SketchShard` hash only its own repetitions yet land on
+/// exactly the columns the monolithic sketch would — `rehash_all` is the
+/// `row_offset = 0` case, byte-identical mixing either way.
+pub fn rehash_all_rows(
+    codes: &[i32],
+    k_per_row: usize,
+    n_cols: u32,
+    row_offset: u32,
+    out: &mut [u32],
+) {
     debug_assert_eq!(codes.len() % k_per_row, 0);
     let n_rows = codes.len() / k_per_row;
     debug_assert_eq!(out.len(), n_rows);
     if n_cols.is_power_of_two() {
         let mask = n_cols - 1;
         for (l, slot) in out.iter_mut().enumerate() {
-            let mut acc = FNV_OFFSET ^ (l as u32).wrapping_mul(ROW_SALT);
+            let row = row_offset.wrapping_add(l as u32);
+            let mut acc = FNV_OFFSET ^ row.wrapping_mul(ROW_SALT);
             for &c in &codes[l * k_per_row..(l + 1) * k_per_row] {
                 acc = (acc ^ (c as u32)).wrapping_mul(FNV_PRIME);
             }
@@ -40,7 +57,7 @@ pub fn rehash_all(codes: &[i32], k_per_row: usize, n_cols: u32, out: &mut [u32])
     } else {
         for (l, slot) in out.iter_mut().enumerate() {
             *slot = rehash_row(
-                l as u32,
+                row_offset.wrapping_add(l as u32),
                 &codes[l * k_per_row..(l + 1) * k_per_row],
                 n_cols,
             );
@@ -61,6 +78,21 @@ pub fn rehash_all_batch(
     batch: usize,
     out: &mut [u32],
 ) {
+    rehash_all_batch_rows(codes, k_per_row, n_cols, batch, 0, out);
+}
+
+/// [`rehash_all_batch`] over a contiguous row slice (see
+/// [`rehash_all_rows`]): row `l` of the slice salts with the global
+/// index `row_offset + l`.  Shared mixing with the scalar path, so a
+/// shard's batched columns match the monolithic sketch integer-exactly.
+pub fn rehash_all_batch_rows(
+    codes: &[i32],
+    k_per_row: usize,
+    n_cols: u32,
+    batch: usize,
+    row_offset: u32,
+    out: &mut [u32],
+) {
     if batch == 0 {
         return;
     }
@@ -70,8 +102,9 @@ pub fn rehash_all_batch(
     let pow2_mask =
         if n_cols.is_power_of_two() { Some(n_cols - 1) } else { None };
     for l in 0..n_rows {
+        let row = row_offset.wrapping_add(l as u32);
         let orow = &mut out[l * batch..(l + 1) * batch];
-        orow.fill(FNV_OFFSET ^ (l as u32).wrapping_mul(ROW_SALT));
+        orow.fill(FNV_OFFSET ^ row.wrapping_mul(ROW_SALT));
         for k in 0..k_per_row {
             let crow = &codes[(l * k_per_row + k) * batch..][..batch];
             for (o, &c) in orow.iter_mut().zip(crow) {
@@ -184,6 +217,58 @@ mod tests {
                             ));
                         }
                     }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn row_slices_reproduce_the_monolithic_columns() {
+        // The shard contract: rehashing a contiguous row slice with its
+        // global offset yields exactly the columns the full-sketch call
+        // computes for those rows — scalar and batch-major, pow2 and
+        // non-pow2 column counts.
+        forall(
+            29,
+            40,
+            |rng| {
+                let k = 1 + rng.next_range(3);
+                let rows = 2 + rng.next_range(12);
+                let batch = 1 + rng.next_range(6);
+                let cols = [16u32, 15, 64][rng.next_range(3)];
+                let codes: Vec<i32> = (0..rows * k * batch)
+                    .map(|_| rng.next_u64() as i32)
+                    .collect();
+                let r0 = rng.next_range(rows);
+                let r1 = r0 + 1 + rng.next_range(rows - r0);
+                (k, rows, batch, cols, codes, r0, r1)
+            },
+            |(k, rows, batch, cols, codes, r0, r1)| {
+                let (k, rows, batch, cols, r0, r1) =
+                    (*k, *rows, *batch, *cols, *r0, *r1);
+                // Scalar layout: de-transpose query 0's codes.
+                let scalar: Vec<i32> = (0..rows * k)
+                    .map(|h| codes[h * batch])
+                    .collect();
+                let mut full = vec![0u32; rows];
+                rehash_all(&scalar, k, cols, &mut full);
+                let mut part = vec![0u32; r1 - r0];
+                rehash_all_rows(&scalar[r0 * k..r1 * k], k, cols,
+                                r0 as u32, &mut part);
+                if part != full[r0..r1] {
+                    return Err("scalar slice diverged".into());
+                }
+                // Batch-major layout over the same slice.
+                let mut full_b = vec![0u32; rows * batch];
+                rehash_all_batch(codes, k, cols, batch, &mut full_b);
+                let mut part_b = vec![0u32; (r1 - r0) * batch];
+                rehash_all_batch_rows(
+                    &codes[r0 * k * batch..r1 * k * batch],
+                    k, cols, batch, r0 as u32, &mut part_b,
+                );
+                if part_b != full_b[r0 * batch..r1 * batch] {
+                    return Err("batch slice diverged".into());
                 }
                 Ok(())
             },

@@ -80,7 +80,27 @@ impl SparseL2Lsh {
         let bias: Vec<f32> =
             (0..n_hashes).map(|_| (brng.next_f64() * width as f64) as f32).collect();
 
-        // Build the coordinate-major view (counting sort by coordinate).
+        Self::from_csr(dim, n_hashes, width, pos_off, pos_idx, neg_off,
+                       neg_idx, bias)
+    }
+
+    /// Assemble a family from its CSR rows + biases, building the
+    /// coordinate-major (CSC) view (counting sort by coordinate).  The
+    /// single assembly path shared by [`Self::generate`] and
+    /// [`Self::slice`], so the per-hash accumulation order — coordinate
+    /// ascending, the order every bit-identity proof rests on — is the
+    /// same no matter how the CSR was obtained.
+    #[allow(clippy::too_many_arguments)]
+    fn from_csr(
+        dim: usize,
+        n_hashes: usize,
+        width: f32,
+        pos_off: Vec<u32>,
+        pos_idx: Vec<u32>,
+        neg_off: Vec<u32>,
+        neg_idx: Vec<u32>,
+        bias: Vec<f32>,
+    ) -> Self {
         let mut counts = vec![0u32; dim + 1];
         for t in 0..n_hashes {
             for &i in &pos_idx[pos_off[t] as usize..pos_off[t + 1] as usize]
@@ -125,6 +145,41 @@ impl SparseL2Lsh {
             csc_off,
             csc_entries,
         }
+    }
+
+    /// Extract the sub-family of hashes `[hash_start, hash_end)` as a
+    /// standalone family with LOCAL hash indices `0..hash_end −
+    /// hash_start`.  Hash `t` of the slice computes bit-for-bit the same
+    /// code as hash `hash_start + t` of `self`: the projections, biases,
+    /// and the coordinate-ascending accumulation order are all preserved
+    /// (property-tested below).  This is how a `shard::SketchShard`
+    /// hashes only its own repetitions — the sharded hash work totals
+    /// exactly one monolithic pass, just distributed.
+    pub fn slice(&self, hash_start: usize, hash_end: usize) -> Self {
+        assert!(hash_start <= hash_end && hash_end <= self.n_hashes,
+                "slice [{hash_start}, {hash_end}) out of {}", self.n_hashes);
+        let n = hash_end - hash_start;
+        let pbase = self.pos_off[hash_start];
+        let nbase = self.neg_off[hash_start];
+        let pos_off: Vec<u32> = self.pos_off
+            [hash_start..=hash_end]
+            .iter()
+            .map(|&o| o - pbase)
+            .collect();
+        let neg_off: Vec<u32> = self.neg_off
+            [hash_start..=hash_end]
+            .iter()
+            .map(|&o| o - nbase)
+            .collect();
+        let pos_idx = self.pos_idx[pbase as usize
+            ..self.pos_off[hash_end] as usize]
+            .to_vec();
+        let neg_idx = self.neg_idx[nbase as usize
+            ..self.neg_off[hash_end] as usize]
+            .to_vec();
+        let bias = self.bias[hash_start..hash_end].to_vec();
+        Self::from_csr(self.dim, n, self.width, pos_off, pos_idx, neg_off,
+                       neg_idx, bias)
     }
 
     /// Batched hot-path hashing: coordinate-major accumulation into a
@@ -416,6 +471,73 @@ mod tests {
                         if acc[t * b + q].to_bits() != sacc[t].to_bits() {
                             return Err(format!(
                                 "query {q} hash {t}: acc bits diverge"
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn sliced_family_matches_full_family_bitwise() {
+        // The shard contract: hash t of slice(a, b) == hash a+t of the
+        // full family, bit for bit, through both evaluation paths.
+        forall(
+            131,
+            40,
+            |rng| {
+                let dim = 1 + rng.next_range(20);
+                let h = 2 + rng.next_range(160);
+                let f = SparseL2Lsh::generate(rng.next_u64(), dim, h, 2.0);
+                let a = rng.next_range(h);
+                let b = a + 1 + rng.next_range(h - a);
+                let mut x = gens::vec_f32(rng, dim, 1.5);
+                for v in x.iter_mut() {
+                    if rng.next_f32() < 0.2 {
+                        *v = 0.0;
+                    }
+                }
+                (f, a, b, x)
+            },
+            |(f, a, b, x)| {
+                let (a, b) = (*a, *b);
+                let sub = f.slice(a, b);
+                let h = f.n_hashes();
+                let mut acc = vec![0.0f32; h];
+                let mut full = vec![0i32; h];
+                f.hash_into_acc(x, &mut acc, &mut full);
+                let mut sacc = vec![0.0f32; b - a];
+                let mut got = vec![0i32; b - a];
+                sub.hash_into_acc(x, &mut sacc, &mut got);
+                for (t, (&g, &w)) in
+                    got.iter().zip(&full[a..b]).enumerate()
+                {
+                    if g != w {
+                        return Err(format!("hash {t}: {g} vs {w}"));
+                    }
+                    if sacc[t].to_bits() != acc[a + t].to_bits() {
+                        return Err(format!("hash {t}: acc bits diverge"));
+                    }
+                }
+                // Batch path of the slice against the scalar slice.
+                let batch = 3usize;
+                let dim = f.dim();
+                let mut xt = vec![0.0f32; dim * batch];
+                for q in 0..batch {
+                    for i in 0..dim {
+                        xt[i * batch + q] = x[i];
+                    }
+                }
+                let mut bacc = vec![0.0f32; (b - a) * batch];
+                let mut bout = vec![0i32; (b - a) * batch];
+                sub.hash_batch_into_acc(&xt, batch, &mut bacc, &mut bout);
+                for t in 0..(b - a) {
+                    for q in 0..batch {
+                        if bout[t * batch + q] != got[t] {
+                            return Err(format!(
+                                "batch hash {t} query {q} diverged"
                             ));
                         }
                     }

@@ -6,19 +6,32 @@
 //! repsketch exp figure2 [--csv FILE]       regenerate paper Figure 2
 //! repsketch exp theory [--dataset NAME]    §3.2.1 error-decay check
 //! repsketch serve [--addr A] [--pjrt] [--fused NAME=FILE,...]
-//!                 [--threads-legacy]       TCP JSON-line inference server
-//!                                          (epoll reactor by default;
-//!                                          --threads-legacy keeps the old
-//!                                          thread-per-connection loop)
+//!                 [--sharded NAME=FILE:N|NAME=PREFIX,...]
+//!                                          TCP JSON-line inference server
+//!                                          (epoll reactor; thread-per-
+//!                                          connection only as the
+//!                                          non-Linux fallback)
 //! repsketch eval --dataset NAME [--backend rs|nn|kernel]
 //! repsketch build-sketch --dataset NAME [--rows L] [--cols R] --out FILE
 //! repsketch fuse-sketch --inputs A.rssk,B.rssk,... --out FILE
+//! repsketch shard-sketch --input FILE.rssk|FILE.rsfm --shards N
+//!                        --out PREFIX
 //! ```
 //!
 //! `fuse-sketch` interleaves per-class RSSK sketches (one per class, in
 //! class order, built with identical hash configuration) into one RSFM
 //! `FusedMultiSketch`; `serve --fused model=FILE` registers it as a
-//! `mc`-backend lane answering argmax class indices.
+//! `mc`-backend lane answering argmax class indices (add
+//! `"scores": true` to a request for the full per-class vector).
+//!
+//! `shard-sketch` splits a monolithic RSSK or RSFM into N per-shard
+//! RSFS files (`PREFIX.shard0.rsfs`, ...), whole median-of-means
+//! groups per shard, then reloads the set and verifies it reproduces
+//! the monolithic estimates bit-for-bit.  `serve --sharded
+//! model=FILE:N` splits FILE in memory; `serve --sharded model=PREFIX`
+//! loads the RSFS set `PREFIX.shard*.rsfs` instead — either way the
+//! `sh`-backend lane scatter/gathers every batch across the shard
+//! kernels on the worker pool.
 //!
 //! Artifacts root defaults to ./artifacts (override with RS_ARTIFACTS).
 
@@ -31,6 +44,7 @@ use repsketch::experiments::{ablation, figure2, table1, table2, theory};
 use repsketch::kernel::KernelParams;
 use repsketch::runtime::registry::{DatasetBundle, DatasetMeta};
 use repsketch::runtime::Runtime;
+use repsketch::shard::ShardedSketch;
 use repsketch::sketch::{FusedMultiSketch, RaceSketch, SketchConfig};
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -81,6 +95,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "eval" => cmd_eval(rest),
         "build-sketch" => cmd_build_sketch(rest),
         "fuse-sketch" => cmd_fuse_sketch(rest),
+        "shard-sketch" => cmd_shard_sketch(rest),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -99,10 +114,11 @@ fn print_usage() {
          repsketch exp theory [--dataset adult]\n  \
          repsketch exp ablation [--dataset adult]\n  \
          repsketch serve [--addr 127.0.0.1:7878] [--pjrt] [--datasets a,b] \
-         [--fused NAME=FILE,...] [--threads-legacy]\n  \
+         [--fused NAME=FILE,...] [--sharded NAME=FILE:N|NAME=PREFIX,...]\n  \
          repsketch eval --dataset NAME [--backend rs|nn|kernel]\n  \
          repsketch build-sketch --dataset NAME [--rows L] [--cols R] --out FILE\n  \
-         repsketch fuse-sketch --inputs A.rssk,B.rssk,... --out FILE"
+         repsketch fuse-sketch --inputs A.rssk,B.rssk,... --out FILE\n  \
+         repsketch shard-sketch --input FILE --shards N --out PREFIX"
     );
 }
 
@@ -232,6 +248,11 @@ fn cmd_eval(args: &[String]) -> Result<()> {
              `repsketch fuse-sketch` and serve it via \
              `repsketch serve --fused NAME=FILE`"
         ),
+        BackendKind::Sharded => bail!(
+            "eval --backend sh is a serving-plane variant; shard a sketch \
+             with `repsketch shard-sketch` and serve it via \
+             `repsketch serve --sharded NAME=FILE:N`"
+        ),
         BackendKind::NnPjrt | BackendKind::KernelPjrt => {
             let rt = Runtime::cpu()?;
             let file = if backend == BackendKind::NnPjrt {
@@ -317,9 +338,114 @@ fn cmd_fuse_sketch(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Load a monolithic sketch file as a `ShardedSketch` (RSSK or RSFM,
+/// detected by magic), split `n_shards` ways.
+fn load_sharded(path: &str, n_shards: usize) -> Result<ShardedSketch> {
+    let bytes = std::fs::read(path).with_context(|| format!("read {path}"))?;
+    if bytes.len() >= 4 && &bytes[..4] == b"RSSK" {
+        let sk = RaceSketch::from_bytes(&bytes)
+            .with_context(|| format!("parse RSSK {path}"))?;
+        Ok(ShardedSketch::from_race(&sk, n_shards))
+    } else if bytes.len() >= 4 && &bytes[..4] == b"RSFM" {
+        let fs = FusedMultiSketch::from_bytes(&bytes)
+            .with_context(|| format!("parse RSFM {path}"))?;
+        Ok(ShardedSketch::from_fused(&fs, n_shards))
+    } else {
+        bail!("{path}: neither an RSSK nor an RSFM file")
+    }
+}
+
+/// Load the RSFS shard set `PREFIX.shard{0..}.rsfs` (the files
+/// `shard-sketch --out PREFIX` writes).  The loader re-validates the
+/// whole set (seeds, ranges, indices) against the recomputed plan.
+fn load_shard_set(prefix: &str) -> Result<ShardedSketch> {
+    let mut paths = Vec::new();
+    loop {
+        let p = std::path::PathBuf::from(format!(
+            "{prefix}.shard{}.rsfs",
+            paths.len()
+        ));
+        if !p.exists() {
+            break;
+        }
+        paths.push(p);
+    }
+    anyhow::ensure!(
+        !paths.is_empty(),
+        "no shard files match {prefix}.shard*.rsfs"
+    );
+    ShardedSketch::load_shards(&paths)
+        .with_context(|| format!("load shard set {prefix}.shard*.rsfs"))
+}
+
+fn cmd_shard_sketch(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args);
+    let input = flags.kv.get("input").context("--input required")?;
+    let shards: usize = flags
+        .kv
+        .get("shards")
+        .context("--shards required")?
+        .parse()
+        .context("--shards must be a positive integer")?;
+    anyhow::ensure!(shards >= 1, "--shards must be at least 1");
+    let out = flags.kv.get("out").context("--out required")?;
+    let sharded = load_sharded(input, shards)?;
+    if sharded.n_shards() != shards {
+        println!(
+            "note: clamped to {} shards (whole median-of-means groups; \
+             this sketch has {} effective groups)",
+            sharded.n_shards(),
+            sharded.plan.eff_groups
+        );
+    }
+    let paths = sharded.save_shards(out)?;
+    // End-to-end verification: reload the written set and confirm it
+    // reproduces the in-memory split bit-for-bit on a probe batch.
+    let reloaded = ShardedSketch::load_shards(&paths)?;
+    let mut rng = repsketch::util::rng::SplitMix64::new(0x5EED);
+    let d = sharded.head.d;
+    let probe: Vec<f32> =
+        (0..8 * d).map(|_| rng.next_gaussian() as f32).collect();
+    let a = sharded.scores_batch(&probe);
+    let b = reloaded.scores_batch(&probe);
+    anyhow::ensure!(
+        a.len() == b.len()
+            && a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
+        "reloaded shard set diverges from the split (serde bug)"
+    );
+    for (s, path) in paths.iter().enumerate() {
+        println!(
+            "shard {s}: rows [{}, {}) groups [{}, {}) ({} bytes) -> {}",
+            sharded.shards[s].row_start,
+            sharded.shards[s].row_end,
+            sharded.shards[s].group_start,
+            sharded.shards[s].group_end,
+            sharded.shard_serialized_size(s),
+            path.display()
+        );
+    }
+    println!(
+        "{} shards over L={} (C={}), verified bit-identical on reload",
+        sharded.n_shards(),
+        sharded.head.rows,
+        sharded.n_classes()
+    );
+    Ok(())
+}
+
 fn cmd_serve(args: &[String]) -> Result<()> {
     let flags = parse_flags(args);
     let _ = &flags.pos;
+    // PR 3 advertised this escape hatch for exactly one release; fail
+    // loudly now that it is gone rather than silently serving the
+    // reactor to a script that asked for the old loop.
+    if flags.kv.contains_key("threads-legacy") {
+        bail!(
+            "--threads-legacy was removed: the epoll reactor is the only \
+             Linux front-end now (thread-per-connection survives only as \
+             the non-Linux fallback)"
+        );
+    }
     let root = repsketch::artifacts_dir();
     let addr = flags
         .kv
@@ -329,9 +455,11 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let with_pjrt = flags.kv.contains_key("pjrt");
     let mut router = Router::new();
     let cfg = RouterConfig::default();
-    // With `--fused` and no explicit `--datasets`, a missing artifacts
-    // tree only skips the dataset lanes (a fused-only server is valid).
-    let datasets_optional = flags.kv.contains_key("fused")
+    // With `--fused`/`--sharded` and no explicit `--datasets`, a
+    // missing artifacts tree only skips the dataset lanes (a
+    // fused-only or sharded-only server is valid).
+    let datasets_optional = (flags.kv.contains_key("fused")
+        || flags.kv.contains_key("sharded"))
         && !flags.kv.contains_key("datasets");
     for name in dataset_names(&flags) {
         let bundle = match DatasetBundle::load(&root, &name)
@@ -400,19 +528,48 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             }, &cfg);
         }
     }
+    // Sharded lanes: `--sharded model=path:N` splits the monolithic
+    // RSSK/RSFM at `path` into N whole-group shards in memory;
+    // `--sharded model=PREFIX` loads the on-disk RSFS shard set
+    // `PREFIX.shard{0..}.rsfs` that `shard-sketch` wrote.  Both serve
+    // through the scatter/gather `sh` lane.
+    if let Some(spec) = flags.kv.get("sharded") {
+        for entry in spec.split(',') {
+            let (model, rest) = entry
+                .split_once('=')
+                .with_context(|| format!("bad --sharded entry {entry:?} \
+                                          (want NAME=FILE:N or \
+                                          NAME=PREFIX)"))?;
+            let model = model.trim().to_string();
+            let sharded = match rest.rsplit_once(':') {
+                Some((path, n)) if n.trim().parse::<usize>().is_ok() => {
+                    load_sharded(
+                        path.trim(),
+                        n.trim().parse::<usize>().unwrap(),
+                    )?
+                }
+                _ => load_shard_set(rest.trim())?,
+            };
+            println!(
+                "registered {model} (sharded, shards={}, C={}, dim={})",
+                sharded.n_shards(),
+                sharded.n_classes(),
+                sharded.head.d
+            );
+            router.add_lane(&model, BackendKind::Sharded, move || {
+                Ok(Box::new(backend::ShardedEngine::new(sharded)) as _)
+            }, &cfg);
+        }
+    }
     let router = Arc::new(router);
-    let server = if flags.kv.contains_key("threads-legacy") {
-        Server::bind_legacy(router.clone(), &addr)?
-    } else {
-        Server::bind(router.clone(), &addr)?
-    };
+    let server = Server::bind(router.clone(), &addr)?;
     println!(
         "serving on {} ({})",
         server.local_addr(),
         match server.mode() {
             repsketch::coordinator::ServeMode::Reactor => "epoll reactor",
-            repsketch::coordinator::ServeMode::ThreadsLegacy =>
-                "legacy thread-per-connection",
+            repsketch::coordinator::ServeMode::ThreadsFallback =>
+                "thread-per-connection fallback (non-Linux)",
         }
     );
     println!(
@@ -423,9 +580,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             model: "adult".into(),
             backend: BackendKind::Sketch,
             features: vec![0.0; 3],
+            want_scores: false,
         }
         .to_line()
     );
-    server.serve();
-    Ok(())
+    server.serve()
 }

@@ -1,0 +1,68 @@
+//! Exact merge of per-shard partial group means into final estimates.
+//!
+//! The shards hand back complete group means (`(B, local_groups, C)`
+//! each — see [`super::shard`]), so the merge is estimator-exact, not
+//! approximate: per (query, class) it gathers the `eff_groups` means in
+//! global group order into one buffer and runs the SAME
+//! `median_in_place` + debias the monolithic estimators run.  No
+//! re-accumulation happens here — f32 never re-associates across the
+//! shard boundary — which is the second half of the bit-for-bit
+//! identity proof (the first half being whole-group sharding).
+//!
+//! For the plain-mean / MoM-fallback case the plan has one effective
+//! group whose "mean" IS the full mean, and a 1-element median is the
+//! identity, so the same code path is exact there too.
+
+use super::{ShardHead, ShardPlan};
+use crate::sketch::median_in_place;
+
+/// Reusable merge scratch (zero allocation once warm).
+#[derive(Clone, Debug, Default)]
+pub struct MergeScratch {
+    /// One (query, class)'s group means in global group order.
+    gm: Vec<f32>,
+}
+
+/// Merge shard partials into per-class scores.
+///
+/// * `partials[s]` — shard `s`'s output, `(B, local_groups_s, C)`
+///   row-major, in plan order;
+/// * `out` — scores, `(B, C)` row-major (resized here).
+///
+/// Bit-for-bit identical per (query, class) to the monolithic
+/// `RaceSketch::query_*` (C = 1) / `FusedMultiSketch::scores_*` paths.
+pub fn merge_scores_into(
+    head: &ShardHead,
+    plan: &ShardPlan,
+    partials: &[Vec<f32>],
+    batch: usize,
+    s: &mut MergeScratch,
+    out: &mut Vec<f32>,
+) {
+    debug_assert_eq!(partials.len(), plan.n_shards());
+    let c_n = head.n_classes;
+    let g = plan.eff_groups;
+    s.gm.resize(g, 0.0);
+    out.clear();
+    out.resize(batch * c_n, 0.0);
+    let r = head.cols as f32;
+    for bq in 0..batch {
+        for c in 0..c_n {
+            let mut gi_global = 0usize;
+            for (p, span) in partials.iter().zip(plan.spans()) {
+                let lg = span.local_groups();
+                for gi in 0..lg {
+                    s.gm[gi_global] = p[(bq * lg + gi) * c_n + c];
+                    gi_global += 1;
+                }
+            }
+            debug_assert_eq!(gi_global, g);
+            let est = median_in_place(&mut s.gm);
+            out[bq * c_n + c] = if head.debias {
+                (est - head.alpha_sums[c] / r) / (1.0 - 1.0 / r)
+            } else {
+                est
+            };
+        }
+    }
+}

@@ -1,0 +1,500 @@
+//! Sharded sketch serving: partition a sketch's L repetitions into
+//! whole median-of-means groups per shard, compute complete group
+//! means locally on each shard, and reconstruct the estimate as the
+//! median over the gathered means — **bit-for-bit identical** to the
+//! unsharded scalar path.
+//!
+//! The paper's inference collapses to hashing plus aggregations over
+//! count arrays, which is embarrassingly partitionable along L: hash
+//! work, counter reads, and group-mean accumulation all split cleanly
+//! at group boundaries, and only the tiny `(g)`-vector of group means
+//! crosses a shard boundary.  One monolithic `RaceSketch` /
+//! `FusedMultiSketch` walk is bound by one socket's memory bandwidth;
+//! N shards stream N disjoint counter slices in parallel.
+//!
+//! Pieces (each with its own module docs):
+//!
+//! * [`plan`] — [`ShardPlan`]: whole-group partitioning, the
+//!   mean/MoM-fallback single-shard degeneration, ragged `rows %
+//!   groups` handling;
+//! * [`shard`] — [`SketchShard`]: per-shard counters + sliced hash
+//!   family + the partial-group-means batch kernel, and
+//!   [`ShardScratch`] (resident in `coordinator::pool::WorkerScratch`);
+//! * [`merge`] — estimator-exact merge (gather means → shared
+//!   `median_in_place` → debias);
+//! * [`serde`] — RSFS shard files: split a monolithic RSSK/RSFM into a
+//!   self-describing shard set and reassemble it with full consistency
+//!   validation.
+//!
+//! [`ShardedSketch`] is the in-process container (head + plan +
+//! `Arc`'d shards) with a serial reference query path; the serving
+//! lane is `coordinator::backend::ShardedEngine` (`BackendKind::
+//! Sharded`, wire name `"sh"`), which fans a drained batch's shard
+//! kernels across the persistent `WorkerPool` and merges on the lane
+//! thread.  The bit-identity (including ragged L, shards = 1, and the
+//! class-interleaved fused sketch) is property-tested below.
+
+pub mod merge;
+pub mod plan;
+pub mod serde;
+#[allow(clippy::module_inception)]
+pub mod shard;
+
+pub use merge::{merge_scores_into, MergeScratch};
+pub use plan::{ShardPlan, ShardSpan};
+pub use shard::{ShardScratch, SketchShard};
+
+use crate::sketch::{FusedMultiSketch, RaceSketch};
+use std::sync::Arc;
+
+/// Everything a shard set shares: estimator + projection + hash-family
+/// configuration.  Serialized (identically) into every RSFS shard file
+/// so a set is self-describing and cross-validatable.
+#[derive(Clone, Debug)]
+pub struct ShardHead {
+    /// 1 for a single-output (RSSK-shaped) sketch.
+    pub n_classes: usize,
+    /// Whether the source sketch is a multiclass (RSFM-shaped) model.
+    /// Distinct from `n_classes == 1`: a 1-class fused sketch is still
+    /// multiclass on the wire (the `sh` lane answers its argmax index —
+    /// matching the `mc` lane exactly — not the raw estimate).
+    pub multiclass: bool,
+    /// Global L.
+    pub rows: usize,
+    pub cols: usize,
+    pub k_per_row: u32,
+    /// Configured MoM group count (`SketchConfig::groups`).
+    pub groups: usize,
+    pub use_mom: bool,
+    pub debias: bool,
+    /// Per-class Σα (length `n_classes`).
+    pub alpha_sums: Vec<f32>,
+    /// Input projection A (d, p) row-major.
+    pub a: Vec<f32>,
+    pub d: usize,
+    pub p: usize,
+    pub lsh_seed: u64,
+    pub width: f32,
+}
+
+/// A sketch split into shards, ready to serve.
+#[derive(Clone, Debug)]
+pub struct ShardedSketch {
+    pub head: ShardHead,
+    pub plan: ShardPlan,
+    /// Plan-ordered shards, `Arc`'d so engine jobs can share them with
+    /// the pool without copying counters.
+    pub shards: Vec<Arc<SketchShard>>,
+}
+
+/// Stage 1 shared by every sharded query path: project the flat
+/// `(B, d)` batch into the transposed `(p, B)` layout.  This is the
+/// SAME `sketch::batch::project_batch_t` every monolithic batch engine
+/// runs (one accumulation-order-critical loop in the whole crate), so
+/// downstream results stay bit-identical.  Computed ONCE per batch;
+/// shards receive the result, not the work.
+pub(crate) use crate::sketch::batch::project_batch_t;
+
+impl ShardedSketch {
+    /// Shard a single-output sketch (C = 1; the `(rows, cols)` counter
+    /// layout IS the interleaved layout at one class).
+    pub fn from_race(sk: &RaceSketch, n_shards: usize) -> ShardedSketch {
+        let head = ShardHead {
+            n_classes: 1,
+            multiclass: false,
+            rows: sk.rows,
+            cols: sk.cols,
+            k_per_row: sk.k_per_row,
+            groups: sk.groups,
+            use_mom: sk.use_mom,
+            debias: sk.debias,
+            alpha_sums: vec![sk.alpha_sum],
+            a: sk.projection().to_vec(),
+            d: sk.d,
+            p: sk.p,
+            lsh_seed: sk.lsh_seed,
+            width: sk.width,
+        };
+        Self::from_counters(head, sk.counters(), sk.lsh(), n_shards)
+    }
+
+    /// Shard a class-interleaved multiclass sketch.
+    pub fn from_fused(
+        fs: &FusedMultiSketch,
+        n_shards: usize,
+    ) -> ShardedSketch {
+        let head = ShardHead {
+            n_classes: fs.n_classes,
+            multiclass: true,
+            rows: fs.rows,
+            cols: fs.cols,
+            k_per_row: fs.k_per_row,
+            groups: fs.groups,
+            use_mom: fs.use_mom,
+            debias: fs.debias,
+            alpha_sums: fs.alpha_sums.clone(),
+            a: fs.projection().to_vec(),
+            d: fs.d,
+            p: fs.p,
+            lsh_seed: fs.lsh_seed,
+            width: fs.width,
+        };
+        Self::from_counters(head, fs.counters(), fs.lsh(), n_shards)
+    }
+
+    fn from_counters(
+        head: ShardHead,
+        counters: &[f32],
+        full_lsh: &crate::lsh::SparseL2Lsh,
+        n_shards: usize,
+    ) -> ShardedSketch {
+        let plan =
+            ShardPlan::new(head.rows, head.groups, head.use_mom, n_shards);
+        let shards = (0..plan.n_shards())
+            .map(|s| {
+                Arc::new(SketchShard::carve(
+                    counters,
+                    head.n_classes,
+                    head.cols,
+                    head.k_per_row,
+                    full_lsh,
+                    &plan,
+                    s,
+                ))
+            })
+            .collect();
+        ShardedSketch { head, plan, shards }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.head.n_classes
+    }
+
+    /// Serial reference query path: project once, run every shard
+    /// kernel on the calling thread, merge.  Returns `(B, C)` scores —
+    /// the exact values the pooled `ShardedEngine` produces (same
+    /// kernels, same merge), used by tests and the CLI verification
+    /// pass.
+    pub fn scores_batch(&self, queries: &[f32]) -> Vec<f32> {
+        assert_eq!(
+            queries.len() % self.head.d,
+            0,
+            "query buffer length {} is not a multiple of d = {}",
+            queries.len(),
+            self.head.d
+        );
+        let batch = queries.len() / self.head.d;
+        let mut proj_row = Vec::new();
+        let mut proj_t = Vec::new();
+        project_batch_t(
+            &self.head.a,
+            self.head.d,
+            self.head.p,
+            queries,
+            batch,
+            &mut proj_row,
+            &mut proj_t,
+        );
+        let mut scratch = ShardScratch::default();
+        let partials: Vec<Vec<f32>> = self
+            .shards
+            .iter()
+            .map(|sh| {
+                let mut out = Vec::new();
+                sh.partial_means_batch(&proj_t, batch, &mut scratch,
+                                       &mut out);
+                out
+            })
+            .collect();
+        let mut ms = MergeScratch::default();
+        let mut out = Vec::new();
+        merge_scores_into(&self.head, &self.plan, &partials, batch,
+                          &mut ms, &mut out);
+        out
+    }
+
+    /// Argmax predictions over [`Self::scores_batch`] (same tie-breaking
+    /// as every monolithic predict path).
+    pub fn predict_batch(&self, queries: &[f32]) -> Vec<usize> {
+        self.scores_batch(queries)
+            .chunks_exact(self.head.n_classes)
+            .map(crate::sketch::argmax)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::KernelParams;
+    use crate::sketch::{
+        FusedScratch, MultiSketch, QueryScratch, SketchConfig,
+    };
+    use crate::util::prop::forall;
+    use crate::util::rng::SplitMix64;
+
+    fn random_kp(rng: &mut SplitMix64, d: usize, p: usize, m: usize)
+        -> KernelParams {
+        KernelParams {
+            d,
+            p,
+            m,
+            a: (0..d * p).map(|_| rng.next_gaussian() as f32 * 0.5).collect(),
+            x: (0..m * p).map(|_| rng.next_gaussian() as f32).collect(),
+            alpha: (0..m).map(|_| 0.5 + rng.next_f32()).collect(),
+            width: 2.0,
+            lsh_seed: rng.next_u64(),
+            k_per_row: 1,
+            default_rows: 64,
+            default_cols: 16,
+        }
+    }
+
+    fn random_queries(rng: &mut SplitMix64, batch: usize, d: usize)
+        -> Vec<f32> {
+        (0..batch * d)
+            .map(|_| {
+                if rng.next_f32() < 0.15 {
+                    0.0 // exercise the zero-skip paths
+                } else {
+                    rng.next_gaussian() as f32
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sharded_race_matches_scalar_bitwise_over_random_configs() {
+        // The tentpole invariant, single-output side: sharded scores ==
+        // per-row `query_with`, bit for bit, across shard counts
+        // {1, 2, 3, 8}, ragged rows % groups, both estimators, debias
+        // on/off, and B ∈ {1, ragged}.
+        forall(
+            171,
+            18,
+            |rng| {
+                let d = 1 + rng.next_range(10);
+                let p = 1 + rng.next_range(6);
+                let rows = 4 + rng.next_range(80);
+                let k = 1 + rng.next_range(3) as u32;
+                let mut kp = random_kp(rng, d, p, 10 + rng.next_range(20));
+                kp.k_per_row = k;
+                let cfg = SketchConfig {
+                    rows,
+                    cols: 8 + rng.next_range(3) * 7, // 8, 15, 22
+                    groups: 1 + rng.next_range(10),
+                    use_mom: rng.next_f32() < 0.75,
+                    debias: rng.next_f32() < 0.7,
+                };
+                let sk = RaceSketch::build(&kp, &cfg);
+                let batch = 1 + rng.next_range(23);
+                let queries = random_queries(rng, batch, d);
+                (sk, queries, batch, d)
+            },
+            |(sk, queries, batch, d)| {
+                let mut qs = QueryScratch::default();
+                let want: Vec<f32> = (0..*batch)
+                    .map(|bq| {
+                        sk.query_with(&queries[bq * d..(bq + 1) * d],
+                                      &mut qs)
+                    })
+                    .collect();
+                for &shards in &[1usize, 2, 3, 8] {
+                    let sharded = ShardedSketch::from_race(sk, shards);
+                    let got = sharded.scores_batch(queries);
+                    if got.len() != *batch {
+                        return Err(format!(
+                            "shards={shards}: {} scores for B={batch}",
+                            got.len()
+                        ));
+                    }
+                    for (bq, (g, w)) in
+                        got.iter().zip(&want).enumerate()
+                    {
+                        if g.to_bits() != w.to_bits() {
+                            return Err(format!(
+                                "shards={shards} query {bq}: sharded {g} \
+                                 vs scalar {w} (n_shards={})",
+                                sharded.n_shards()
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// C classes over shared (d, p, A, seed, width, K).
+    fn multiclass_params(
+        rng: &mut SplitMix64,
+        n_classes: usize,
+        d: usize,
+        p: usize,
+        rows: usize,
+        cols: usize,
+        k: u32,
+    ) -> Vec<KernelParams> {
+        let shared_seed = rng.next_u64();
+        let a: Vec<f32> =
+            (0..d * p).map(|_| rng.next_gaussian() as f32 * 0.5).collect();
+        (0..n_classes)
+            .map(|_| {
+                let m = 8 + rng.next_range(12);
+                KernelParams {
+                    d,
+                    p,
+                    m,
+                    a: a.clone(),
+                    x: (0..m * p)
+                        .map(|_| rng.next_gaussian() as f32)
+                        .collect(),
+                    alpha: (0..m).map(|_| 0.5 + rng.next_f32()).collect(),
+                    width: 2.0,
+                    lsh_seed: shared_seed,
+                    k_per_row: k,
+                    default_rows: rows,
+                    default_cols: cols,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sharded_fused_matches_scalar_bitwise_over_random_configs() {
+        // The tentpole invariant, multiclass side: sharded (B, C)
+        // scores and argmax predictions == the fused scalar path (which
+        // is itself bit-identical to per-class MultiSketch), across
+        // shards {1, 2, 3, 8} and ragged configs.
+        forall(
+            181,
+            14,
+            |rng| {
+                let n_classes = 1 + rng.next_range(5);
+                let d = 1 + rng.next_range(8);
+                let p = 1 + rng.next_range(5);
+                let rows = 4 + rng.next_range(70);
+                let cols = 8 + rng.next_range(3) * 7;
+                let k = 1 + rng.next_range(3) as u32;
+                let per_class = multiclass_params(
+                    rng, n_classes, d, p, rows, cols, k,
+                );
+                let cfg = SketchConfig {
+                    rows: 0,
+                    cols: 0,
+                    groups: 1 + rng.next_range(10),
+                    use_mom: rng.next_f32() < 0.75,
+                    debias: rng.next_f32() < 0.7,
+                };
+                let fused =
+                    FusedMultiSketch::build(&per_class, &cfg).unwrap();
+                let batch = 1 + rng.next_range(19);
+                let queries = random_queries(rng, batch, d);
+                (fused, queries, batch, d)
+            },
+            |(fused, queries, batch, d)| {
+                let c_n = fused.n_classes();
+                let mut fs = FusedScratch::default();
+                let mut want = Vec::new();
+                let mut want_all = Vec::with_capacity(batch * c_n);
+                let mut want_pred = Vec::with_capacity(*batch);
+                for bq in 0..*batch {
+                    let q = &queries[bq * d..(bq + 1) * d];
+                    fused.scores_with(q, &mut fs, &mut want);
+                    want_all.extend_from_slice(&want);
+                    want_pred.push(fused.predict(q, &mut fs));
+                }
+                for &shards in &[1usize, 2, 3, 8] {
+                    let sharded = ShardedSketch::from_fused(fused, shards);
+                    let got = sharded.scores_batch(queries);
+                    if got.len() != want_all.len() {
+                        return Err(format!(
+                            "shards={shards}: {} scores, want {}",
+                            got.len(),
+                            want_all.len()
+                        ));
+                    }
+                    for (i, (g, w)) in
+                        got.iter().zip(&want_all).enumerate()
+                    {
+                        if g.to_bits() != w.to_bits() {
+                            return Err(format!(
+                                "shards={shards} slot {i}: {g} vs {w}"
+                            ));
+                        }
+                    }
+                    if sharded.predict_batch(queries) != want_pred {
+                        return Err(format!(
+                            "shards={shards}: predictions diverged"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn sharded_matches_multisketch_reference_too() {
+        // Transitivity anchor: sharded fused == per-class MultiSketch
+        // scalar scores on a fixed config.
+        let mut rng = SplitMix64::new(191);
+        let per_class = multiclass_params(&mut rng, 4, 6, 4, 50, 16, 2);
+        let cfg = SketchConfig::default();
+        let ms = MultiSketch::build(&per_class, &cfg).unwrap();
+        let fused = FusedMultiSketch::build(&per_class, &cfg).unwrap();
+        let sharded = ShardedSketch::from_fused(&fused, 3);
+        let queries = random_queries(&mut rng, 17, 6);
+        let got = sharded.scores_batch(&queries);
+        let mut qs = QueryScratch::default();
+        let mut want = Vec::new();
+        for bq in 0..17 {
+            ms.scores_with(&queries[bq * 6..(bq + 1) * 6], &mut qs,
+                           &mut want);
+            for (c, w) in want.iter().enumerate() {
+                assert_eq!(
+                    got[bq * 4 + c].to_bits(),
+                    w.to_bits(),
+                    "query {bq} class {c}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mean_estimator_degenerates_to_one_shard_but_stays_exact() {
+        let mut rng = SplitMix64::new(201);
+        let kp = random_kp(&mut rng, 6, 4, 20);
+        let cfg = SketchConfig {
+            rows: 48,
+            cols: 16,
+            groups: 8,
+            use_mom: false,
+            debias: true,
+        };
+        let sk = RaceSketch::build(&kp, &cfg);
+        let sharded = ShardedSketch::from_race(&sk, 8);
+        assert_eq!(sharded.n_shards(), 1, "plain mean must not split");
+        let queries = random_queries(&mut rng, 5, 6);
+        let got = sharded.scores_batch(&queries);
+        let mut qs = QueryScratch::default();
+        for bq in 0..5 {
+            let want = sk.query_with(&queries[bq * 6..(bq + 1) * 6],
+                                     &mut qs);
+            assert_eq!(got[bq].to_bits(), want.to_bits(), "query {bq}");
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let mut rng = SplitMix64::new(211);
+        let kp = random_kp(&mut rng, 4, 4, 10);
+        let sk = RaceSketch::build(&kp, &SketchConfig::default());
+        let sharded = ShardedSketch::from_race(&sk, 4);
+        assert!(sharded.scores_batch(&[]).is_empty());
+    }
+}

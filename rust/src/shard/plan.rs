@@ -1,0 +1,203 @@
+//! Shard planner: partition a sketch's L repetitions into whole
+//! median-of-means groups per shard.
+//!
+//! The estimator is `median(group means) → debias`, and each group mean
+//! is a sum over a *contiguous* row range divided by the group size —
+//! so a shard that owns whole groups can compute its group means
+//! completely locally, and the merge stage only has to gather the g
+//! means and take the median.  Nothing is re-accumulated across shards,
+//! which is what makes the sharded estimate **bit-for-bit identical**
+//! to the monolithic one: f32 addition order inside every group is
+//! unchanged, and the median runs over the exact same g values.
+//!
+//! When the estimator is a plain mean (`use_mom = false`) or the MoM
+//! fallback fires (`rows < groups`), the whole sum must stay in one f32
+//! accumulation chain — splitting it would reassociate the adds.  The
+//! plan models that as ONE effective group spanning all rows (its
+//! "group mean" is exactly the mean, and a 1-element median is the
+//! identity), which caps such sketches at a single shard instead of
+//! silently changing results.
+
+/// One shard's slice of the plan: whole groups, and the row range they
+/// cover.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardSpan {
+    /// Effective-group range [group_start, group_end).
+    pub group_start: usize,
+    pub group_end: usize,
+    /// Global repetition (row) range [row_start, row_end).
+    pub row_start: usize,
+    pub row_end: usize,
+}
+
+impl ShardSpan {
+    pub fn local_rows(&self) -> usize {
+        self.row_end - self.row_start
+    }
+
+    pub fn local_groups(&self) -> usize {
+        self.group_end - self.group_start
+    }
+}
+
+/// How a sketch's rows are partitioned across shards.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Total repetitions L of the sketch being sharded.
+    pub rows: usize,
+    /// Configured MoM group count g (`SketchConfig::groups`).
+    pub groups: usize,
+    pub use_mom: bool,
+    /// Effective estimator groups: `groups` when MoM is active
+    /// (`use_mom && rows >= groups`), else 1 (see module docs).
+    pub eff_groups: usize,
+    spans: Vec<ShardSpan>,
+}
+
+/// Global row range [start, end) of effective group `g` — THE group →
+/// row-span formula, written exactly once: the same `m = rows / g`
+/// spans with the remainder-absorbing last group as the scalar
+/// `median_of_means`.  Everything that needs a span (the planner, the
+/// shard kernels via their precomputed bounds) goes through here, so
+/// the bit-for-bit identity contract has a single point of truth.
+fn group_row_span(rows: usize, eff_groups: usize, g: usize)
+    -> (usize, usize) {
+    debug_assert!(g < eff_groups);
+    let m = rows / eff_groups;
+    let start = g * m;
+    let end = if g + 1 == eff_groups { rows } else { start + m };
+    (start, end)
+}
+
+impl ShardPlan {
+    /// Plan `requested_shards` shards over a sketch with `rows`
+    /// repetitions and the given estimator.  The shard count is clamped
+    /// to `[1, eff_groups]` — a group is never split — and groups are
+    /// distributed near-evenly (difference of at most one group between
+    /// shards), ragged or not.
+    pub fn new(
+        rows: usize,
+        groups: usize,
+        use_mom: bool,
+        requested_shards: usize,
+    ) -> ShardPlan {
+        assert!(rows > 0, "cannot shard an empty sketch");
+        let groups = groups.max(1);
+        let eff_groups =
+            if use_mom && rows >= groups { groups } else { 1 };
+        let n = requested_shards.clamp(1, eff_groups);
+        let spans = (0..n)
+            .map(|s| {
+                let group_start = s * eff_groups / n;
+                let group_end = (s + 1) * eff_groups / n;
+                ShardSpan {
+                    group_start,
+                    group_end,
+                    row_start: group_row_span(rows, eff_groups,
+                                              group_start).0,
+                    row_end: group_row_span(rows, eff_groups,
+                                            group_end - 1).1,
+                }
+            })
+            .collect();
+        ShardPlan { rows, groups, use_mom, eff_groups, spans }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn spans(&self) -> &[ShardSpan] {
+        &self.spans
+    }
+
+    pub fn span(&self, shard: usize) -> ShardSpan {
+        self.spans[shard]
+    }
+
+    /// Global row range [start, end) of effective group `g` (see
+    /// [`group_row_span`] — the single formula source).
+    pub fn group_rows(&self, g: usize) -> (usize, usize) {
+        group_row_span(self.rows, self.eff_groups, g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn covers_all_groups_and_rows_exactly_once() {
+        forall(
+            7,
+            200,
+            |rng| {
+                let rows = 1 + rng.next_range(200);
+                let groups = 1 + rng.next_range(16);
+                let use_mom = rng.next_f32() < 0.8;
+                let shards = 1 + rng.next_range(10);
+                (rows, groups, use_mom, shards)
+            },
+            |&(rows, groups, use_mom, shards)| {
+                let plan = ShardPlan::new(rows, groups, use_mom, shards);
+                let mut g_next = 0usize;
+                let mut r_next = 0usize;
+                for span in plan.spans() {
+                    if span.group_start != g_next {
+                        return Err(format!(
+                            "group gap/overlap at {}",
+                            span.group_start
+                        ));
+                    }
+                    if span.row_start != r_next {
+                        return Err(format!(
+                            "row gap/overlap at {}",
+                            span.row_start
+                        ));
+                    }
+                    if span.local_groups() == 0 {
+                        return Err("empty shard".into());
+                    }
+                    g_next = span.group_end;
+                    r_next = span.row_end;
+                }
+                if g_next != plan.eff_groups || r_next != rows {
+                    return Err(format!(
+                        "coverage ends at g={g_next} r={r_next}"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn group_spans_match_scalar_median_of_means() {
+        // Ragged: rows = 10, groups = 3 → [0,3) [3,6) [6,10).
+        let plan = ShardPlan::new(10, 3, true, 2);
+        assert_eq!(plan.eff_groups, 3);
+        assert_eq!(plan.group_rows(0), (0, 3));
+        assert_eq!(plan.group_rows(1), (3, 6));
+        assert_eq!(plan.group_rows(2), (6, 10));
+    }
+
+    #[test]
+    fn mean_and_mom_fallback_cap_at_one_shard() {
+        // Plain mean: one f32 accumulation chain, never split.
+        assert_eq!(ShardPlan::new(64, 8, false, 8).n_shards(), 1);
+        // MoM fallback (rows < groups) degenerates to the mean.
+        assert_eq!(ShardPlan::new(4, 8, true, 8).n_shards(), 1);
+        // The single effective group spans everything.
+        let plan = ShardPlan::new(64, 8, false, 8);
+        assert_eq!(plan.eff_groups, 1);
+        assert_eq!(plan.group_rows(0), (0, 64));
+    }
+
+    #[test]
+    fn shard_count_clamps_to_groups() {
+        assert_eq!(ShardPlan::new(64, 8, true, 100).n_shards(), 8);
+        assert_eq!(ShardPlan::new(64, 8, true, 0).n_shards(), 1);
+        assert_eq!(ShardPlan::new(64, 8, true, 3).n_shards(), 3);
+    }
+}

@@ -1,0 +1,540 @@
+//! RSFS — per-shard sketch files: split a monolithic RSSK/RSFM into a
+//! self-describing shard set, reassemble with full consistency
+//! validation.
+//!
+//! One file per shard, little-endian:
+//!
+//! ```text
+//! magic b"RSFS" | u32 version
+//! u32 shard_index | u32 n_shards
+//! u32 n_classes | u32 rows | u32 cols | u32 k_per_row | u32 groups
+//! u8 use_mom | u8 debias | u8 multiclass | u8 pad
+//! u32 d | u32 p | f32 width | u64 lsh_seed
+//! u32 row_start | u32 row_end | u32 group_start | u32 group_end
+//! f32 alpha_sums[C] | f32 A[d*p] | f32 counters[(row_end-row_start)*cols*C]
+//! ```
+//!
+//! The full [`super::ShardHead`] is duplicated into every file (it is
+//! tiny next to the counters), so each shard can be shipped to a
+//! different host and the set re-validated wherever it lands.  Loading
+//! rejects inconsistent sets **at load, not at query time**: mismatched
+//! heads (seed, width, shape, flags, per-class Σα, projection),
+//! missing or duplicate shard indices, wrong set size, and any
+//! group/row range that does not match the deterministically recomputed
+//! [`super::ShardPlan`] (which catches overlapping or gappy repetition
+//! ranges).  Counters round-trip bitwise; the per-shard hash sub-family
+//! is regenerated from the stored seed and sliced.
+
+use super::plan::ShardSpan;
+use super::{ShardHead, ShardPlan, ShardedSketch, SketchShard};
+use crate::lsh::SparseL2Lsh;
+use crate::sketch::serde::{check_hash_config, Cur};
+use anyhow::{bail, ensure, Context, Result};
+use std::io::Read;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Fixed portion of the RSFS header (everything before the float
+/// payload).
+const HEADER_BYTES: usize = 76;
+
+/// One parsed shard file, pre-validation.
+struct ShardFile {
+    head: ShardHead,
+    shard_index: usize,
+    n_shards: usize,
+    span: ShardSpan,
+    counters: Vec<f32>,
+}
+
+fn parse_shard(buf: &[u8]) -> Result<ShardFile> {
+    if buf.len() < 8 || &buf[..4] != b"RSFS" {
+        bail!("not an RSFS file");
+    }
+    let mut c = Cur { b: buf, i: 4 };
+    let version = c.u32()?;
+    if version != 1 {
+        bail!("unsupported RSFS version {version}");
+    }
+    let shard_index = c.u32()? as usize;
+    let n_shards = c.u32()? as usize;
+    let n_classes = c.u32()? as usize;
+    let rows = c.u32()? as usize;
+    let cols = c.u32()? as usize;
+    let k_per_row = c.u32()?;
+    let groups = c.u32()? as usize;
+    let flags = c.take(4)?;
+    let use_mom = flags[0] != 0;
+    let debias = flags[1] != 0;
+    let multiclass = flags[2] != 0;
+    let d = c.u32()? as usize;
+    let p = c.u32()? as usize;
+    let width = c.f32()?;
+    let lsh_seed = c.u64()?;
+    let row_start = c.u32()? as usize;
+    let row_end = c.u32()? as usize;
+    let group_start = c.u32()? as usize;
+    let group_end = c.u32()? as usize;
+    if n_classes == 0 || rows == 0 || cols == 0 || groups == 0
+        || k_per_row == 0 || n_shards == 0
+    {
+        bail!("RSFS header has a zero-sized field");
+    }
+    ensure!(
+        multiclass || n_classes == 1,
+        "RSFS single-output shard declares {n_classes} classes"
+    );
+    check_hash_config(rows, k_per_row, d, p)?;
+    ensure!(
+        shard_index < n_shards,
+        "RSFS shard_index {shard_index} out of {n_shards}"
+    );
+    ensure!(
+        row_start < row_end && row_end <= rows
+            && group_start < group_end,
+        "RSFS shard ranges invalid: rows [{row_start}, {row_end}) of \
+         {rows}, groups [{group_start}, {group_end})"
+    );
+    let local_rows = row_end - row_start;
+    let i = c.i;
+    debug_assert_eq!(i, HEADER_BYTES);
+    // u128 so crafted huge header fields cannot wrap the size check.
+    let need = 4u128
+        * (n_classes as u128
+            + d as u128 * p as u128
+            + local_rows as u128 * cols as u128 * n_classes as u128);
+    if (buf.len() - i) as u128 != need {
+        bail!("RSFS size mismatch: have {}, want {need}", buf.len() - i);
+    }
+    let mut floats = buf[i..]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()));
+    let alpha_sums: Vec<f32> = floats.by_ref().take(n_classes).collect();
+    let a: Vec<f32> = floats.by_ref().take(d * p).collect();
+    let counters: Vec<f32> = floats.collect();
+    Ok(ShardFile {
+        head: ShardHead {
+            n_classes,
+            multiclass,
+            rows,
+            cols,
+            k_per_row,
+            groups,
+            use_mom,
+            debias,
+            alpha_sums,
+            a,
+            d,
+            p,
+            lsh_seed,
+            width,
+        },
+        shard_index,
+        n_shards,
+        span: ShardSpan { group_start, group_end, row_start, row_end },
+        counters,
+    })
+}
+
+fn heads_identical(a: &ShardHead, b: &ShardHead) -> bool {
+    a.n_classes == b.n_classes
+        && a.multiclass == b.multiclass
+        && a.rows == b.rows
+        && a.cols == b.cols
+        && a.k_per_row == b.k_per_row
+        && a.groups == b.groups
+        && a.use_mom == b.use_mom
+        && a.debias == b.debias
+        && a.d == b.d
+        && a.p == b.p
+        && a.lsh_seed == b.lsh_seed
+        // Bitwise: the hash family and the debias term are regenerated
+        // from these — any tolerated drift silently desyncs estimates.
+        && a.width.to_bits() == b.width.to_bits()
+        && a.alpha_sums.len() == b.alpha_sums.len()
+        && a.alpha_sums
+            .iter()
+            .zip(&b.alpha_sums)
+            .all(|(x, y)| x.to_bits() == y.to_bits())
+        && a.a.len() == b.a.len()
+        && a.a.iter().zip(&b.a).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+impl ShardedSketch {
+    /// Serialize shard `s` as an RSFS file.
+    pub fn shard_to_bytes(&self, s: usize) -> Vec<u8> {
+        let sh = &self.shards[s];
+        let h = &self.head;
+        let mut out = Vec::with_capacity(self.shard_serialized_size(s));
+        out.extend_from_slice(b"RSFS");
+        out.extend_from_slice(&1u32.to_le_bytes());
+        for v in [
+            sh.shard_index as u32,
+            self.n_shards() as u32,
+            h.n_classes as u32,
+            h.rows as u32,
+            h.cols as u32,
+            h.k_per_row,
+            h.groups as u32,
+        ] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.push(h.use_mom as u8);
+        out.push(h.debias as u8);
+        out.push(h.multiclass as u8);
+        out.push(0u8);
+        out.extend_from_slice(&(h.d as u32).to_le_bytes());
+        out.extend_from_slice(&(h.p as u32).to_le_bytes());
+        out.extend_from_slice(&h.width.to_le_bytes());
+        out.extend_from_slice(&h.lsh_seed.to_le_bytes());
+        for v in [
+            sh.row_start as u32,
+            sh.row_end as u32,
+            sh.group_start as u32,
+            sh.group_end as u32,
+        ] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in h
+            .alpha_sums
+            .iter()
+            .chain(h.a.iter())
+            .chain(sh.counters().iter())
+        {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    /// Serialized size of shard `s`.
+    pub fn shard_serialized_size(&self, s: usize) -> usize {
+        let sh = &self.shards[s];
+        HEADER_BYTES
+            + 4 * (self.head.n_classes
+                + self.head.d * self.head.p
+                + sh.counters().len())
+    }
+
+    /// Write every shard as `{prefix}.shard{i}.rsfs`; returns the
+    /// paths.
+    pub fn save_shards(&self, prefix: &str) -> Result<Vec<PathBuf>> {
+        let mut paths = Vec::with_capacity(self.n_shards());
+        for s in 0..self.n_shards() {
+            let path = PathBuf::from(format!("{prefix}.shard{s}.rsfs"));
+            std::fs::write(&path, self.shard_to_bytes(s))
+                .with_context(|| format!("write {path:?}"))?;
+            paths.push(path);
+        }
+        Ok(paths)
+    }
+
+    /// Reassemble a shard set from raw file contents (order-agnostic).
+    /// Every inconsistency described in the module docs fails HERE.
+    pub fn from_shard_bytes<B: AsRef<[u8]>>(bufs: &[B])
+        -> Result<ShardedSketch> {
+        ensure!(!bufs.is_empty(), "no shard files");
+        let mut files = bufs
+            .iter()
+            .enumerate()
+            .map(|(i, b)| {
+                parse_shard(b.as_ref())
+                    .with_context(|| format!("shard buffer {i}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let n = files[0].n_shards;
+        ensure!(
+            n == bufs.len(),
+            "shard set size mismatch: files declare {n} shards, {} given",
+            bufs.len()
+        );
+        for f in &files {
+            ensure!(
+                f.n_shards == n,
+                "shard {} declares n_shards = {} (set says {n})",
+                f.shard_index,
+                f.n_shards
+            );
+            ensure!(
+                heads_identical(&files[0].head, &f.head),
+                "shard {} head differs from shard {} (seed/shape/\
+                 estimator/projection must be identical across a set)",
+                f.shard_index,
+                files[0].shard_index
+            );
+        }
+        files.sort_by_key(|f| f.shard_index);
+        for (i, f) in files.iter().enumerate() {
+            ensure!(
+                f.shard_index == i,
+                "shard set is missing index {i} (or duplicates an index)"
+            );
+        }
+        let head = files[0].head.clone();
+        // The plan is a pure function of the head — recompute it and
+        // require every stored range to match exactly.  This rejects
+        // overlapping repetition ranges, gaps, and split groups without
+        // trusting any stored geometry.
+        let plan = ShardPlan::new(head.rows, head.groups, head.use_mom, n);
+        ensure!(
+            plan.n_shards() == n,
+            "{n} shards declared but this estimator supports at most {} \
+             (whole-group sharding)",
+            plan.n_shards()
+        );
+        for f in &files {
+            let want = plan.span(f.shard_index);
+            ensure!(
+                f.span == want,
+                "shard {} ranges {:?} do not match the plan's {:?} \
+                 (overlapping/gappy repetition ranges?)",
+                f.shard_index,
+                f.span,
+                want
+            );
+        }
+        // One monolithic family regeneration, sliced per shard.
+        let full_lsh = SparseL2Lsh::generate(
+            head.lsh_seed,
+            head.p,
+            head.rows * head.k_per_row as usize,
+            head.width,
+        );
+        let shards = files
+            .into_iter()
+            .map(|f| {
+                Arc::new(SketchShard::from_parts(
+                    f.counters,
+                    head.n_classes,
+                    head.cols,
+                    head.k_per_row,
+                    &full_lsh,
+                    f.shard_index,
+                    f.span,
+                    &plan,
+                ))
+            })
+            .collect();
+        Ok(ShardedSketch { head, plan, shards })
+    }
+
+    /// Load a shard set from files (order-agnostic).
+    pub fn load_shards<P: AsRef<Path>>(paths: &[P])
+        -> Result<ShardedSketch> {
+        let mut bufs = Vec::with_capacity(paths.len());
+        for p in paths {
+            let mut buf = Vec::new();
+            std::fs::File::open(p.as_ref())
+                .with_context(|| format!("open {:?}", p.as_ref()))?
+                .read_to_end(&mut buf)?;
+            bufs.push(buf);
+        }
+        Self::from_shard_bytes(&bufs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::KernelParams;
+    use crate::sketch::{FusedMultiSketch, RaceSketch, SketchConfig};
+    use crate::util::rng::SplitMix64;
+
+    fn sample_race() -> RaceSketch {
+        let mut rng = SplitMix64::new(31);
+        let (d, p, m) = (6usize, 3usize, 25usize);
+        let kp = KernelParams {
+            d,
+            p,
+            m,
+            a: (0..d * p).map(|_| rng.next_gaussian() as f32).collect(),
+            x: (0..m * p).map(|_| rng.next_gaussian() as f32).collect(),
+            alpha: (0..m).map(|_| rng.next_f32()).collect(),
+            width: 2.0,
+            lsh_seed: 0xFEED,
+            k_per_row: 2,
+            default_rows: 50,
+            default_cols: 16,
+        };
+        RaceSketch::build(&kp, &SketchConfig::default())
+    }
+
+    fn sample_fused() -> FusedMultiSketch {
+        let mut rng = SplitMix64::new(41);
+        let (d, p, m, n_classes) = (5usize, 3usize, 20usize, 4usize);
+        let a: Vec<f32> =
+            (0..d * p).map(|_| rng.next_gaussian() as f32).collect();
+        let per_class: Vec<KernelParams> = (0..n_classes)
+            .map(|_| KernelParams {
+                d,
+                p,
+                m,
+                a: a.clone(),
+                x: (0..m * p).map(|_| rng.next_gaussian() as f32).collect(),
+                alpha: (0..m).map(|_| rng.next_f32()).collect(),
+                width: 2.0,
+                lsh_seed: 0xF00D,
+                k_per_row: 2,
+                default_rows: 40,
+                default_cols: 16,
+            })
+            .collect();
+        FusedMultiSketch::build(&per_class, &SketchConfig::default())
+            .unwrap()
+    }
+
+    fn roundtrip_queries(
+        sharded: &ShardedSketch,
+        reloaded: &ShardedSketch,
+        d: usize,
+    ) {
+        let mut rng = SplitMix64::new(51);
+        let queries: Vec<f32> =
+            (0..9 * d).map(|_| rng.next_gaussian() as f32).collect();
+        let a = sharded.scores_batch(&queries);
+        let b = reloaded.scores_batch(&queries);
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "slot {i}");
+        }
+    }
+
+    #[test]
+    fn race_shard_set_roundtrips_bitwise() {
+        let sk = sample_race();
+        let sharded = ShardedSketch::from_race(&sk, 3);
+        let bufs: Vec<Vec<u8>> = (0..sharded.n_shards())
+            .map(|s| sharded.shard_to_bytes(s))
+            .collect();
+        assert_eq!(bufs[0].len(), sharded.shard_serialized_size(0));
+        let reloaded = ShardedSketch::from_shard_bytes(&bufs).unwrap();
+        assert_eq!(reloaded.n_shards(), 3);
+        assert!(!reloaded.head.multiclass, "RSSK-shaped stays single-output");
+        for (a, b) in sharded.shards.iter().zip(&reloaded.shards) {
+            assert_eq!(a.counters().len(), b.counters().len());
+            for (x, y) in a.counters().iter().zip(b.counters()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        roundtrip_queries(&sharded, &reloaded, sk.d);
+    }
+
+    #[test]
+    fn fused_shard_set_roundtrips_bitwise_order_agnostic() {
+        let fs = sample_fused();
+        let sharded = ShardedSketch::from_fused(&fs, 4);
+        let mut bufs: Vec<Vec<u8>> = (0..sharded.n_shards())
+            .map(|s| sharded.shard_to_bytes(s))
+            .collect();
+        bufs.reverse(); // load order must not matter
+        let reloaded = ShardedSketch::from_shard_bytes(&bufs).unwrap();
+        assert_eq!(reloaded.n_classes(), 4);
+        assert!(reloaded.head.multiclass, "RSFM-shaped stays multiclass");
+        roundtrip_queries(&sharded, &reloaded, fs.d);
+    }
+
+    #[test]
+    fn rejects_mismatched_seed() {
+        let sharded = ShardedSketch::from_race(&sample_race(), 3);
+        let mut bufs: Vec<Vec<u8>> = (0..3)
+            .map(|s| sharded.shard_to_bytes(s))
+            .collect();
+        // lsh_seed lives at offset 52 (after magic, version, indices,
+        // shape, flags, d, p, width).
+        bufs[1][52] ^= 1;
+        let err = ShardedSketch::from_shard_bytes(&bufs).unwrap_err();
+        assert!(err.to_string().contains("head differs"), "{err}");
+    }
+
+    #[test]
+    fn rejects_missing_and_duplicate_shard_index() {
+        let sharded = ShardedSketch::from_race(&sample_race(), 3);
+        let bufs: Vec<Vec<u8>> = (0..3)
+            .map(|s| sharded.shard_to_bytes(s))
+            .collect();
+        // Missing shard: only 2 of 3 files.
+        let err = ShardedSketch::from_shard_bytes(&bufs[..2]).unwrap_err();
+        assert!(err.to_string().contains("size mismatch"), "{err}");
+        // Duplicate index (same file twice, dropping another).
+        let dup = vec![bufs[0].clone(), bufs[1].clone(), bufs[1].clone()];
+        let err = ShardedSketch::from_shard_bytes(&dup).unwrap_err();
+        assert!(err.to_string().contains("missing index"), "{err}");
+    }
+
+    #[test]
+    fn rejects_overlapping_repetition_ranges() {
+        let sharded = ShardedSketch::from_race(&sample_race(), 3);
+        let mut bufs: Vec<Vec<u8>> = (0..3)
+            .map(|s| sharded.shard_to_bytes(s))
+            .collect();
+        // Shift shard 1's whole row range back by one (row_start at
+        // offset 60, row_end at 64): the payload length still matches
+        // the header, so the ONLY thing wrong with the file is that its
+        // repetitions overlap shard 0's — and that must fail at load
+        // via the recomputed-plan check, not at query time.
+        let rs = u32::from_le_bytes(bufs[1][60..64].try_into().unwrap());
+        let re = u32::from_le_bytes(bufs[1][64..68].try_into().unwrap());
+        bufs[1][60..64].copy_from_slice(&(rs - 1).to_le_bytes());
+        bufs[1][64..68].copy_from_slice(&(re - 1).to_le_bytes());
+        let err = ShardedSketch::from_shard_bytes(&bufs).unwrap_err();
+        assert!(
+            err.to_string().contains("do not match the plan"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn rejects_corruption_truncation_and_wrong_magic() {
+        let sharded = ShardedSketch::from_race(&sample_race(), 2);
+        let bufs: Vec<Vec<u8>> = (0..2)
+            .map(|s| sharded.shard_to_bytes(s))
+            .collect();
+        let mut t = bufs.clone();
+        t[0].truncate(t[0].len() - 3);
+        assert!(ShardedSketch::from_shard_bytes(&t).is_err());
+        let mut m = bufs.clone();
+        m[1][0] = b'Z';
+        assert!(ShardedSketch::from_shard_bytes(&m).is_err());
+        // An RSSK file is not an RSFS file.
+        let rssk = sample_race().to_bytes();
+        assert!(
+            ShardedSketch::from_shard_bytes(&[rssk]).is_err()
+        );
+    }
+
+    #[test]
+    fn rejects_absurd_hash_counts_and_zero_fields() {
+        let sharded = ShardedSketch::from_race(&sample_race(), 2);
+        let bufs: Vec<Vec<u8>> = (0..2)
+            .map(|s| sharded.shard_to_bytes(s))
+            .collect();
+        // k_per_row at offset 28 → u32::MAX must fail at load, before
+        // any hash-family allocation.
+        let mut k = bufs.clone();
+        k[0][28..32].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(ShardedSketch::from_shard_bytes(&k).is_err());
+        // groups = 0 at offset 32.
+        let mut g = bufs.clone();
+        g[0][32..36].copy_from_slice(&0u32.to_le_bytes());
+        assert!(ShardedSketch::from_shard_bytes(&g).is_err());
+    }
+
+    #[test]
+    fn rejects_more_shards_than_groups() {
+        // A crafted set claiming more shards than the estimator's
+        // whole-group plan supports must fail, not under-merge.
+        let sk = sample_race(); // groups = 8 (default)
+        let sharded = ShardedSketch::from_race(&sk, 8);
+        assert_eq!(sharded.n_shards(), 8);
+        let mut bufs: Vec<Vec<u8>> = (0..8)
+            .map(|s| sharded.shard_to_bytes(s))
+            .collect();
+        // Claim n_shards = 9 in every header (offset 12) and add a
+        // bogus duplicate file for index 8... the set-size/plan checks
+        // fire first.
+        for b in bufs.iter_mut() {
+            b[12..16].copy_from_slice(&9u32.to_le_bytes());
+        }
+        let err = ShardedSketch::from_shard_bytes(&bufs).unwrap_err();
+        assert!(err.to_string().contains("size mismatch"), "{err}");
+    }
+}

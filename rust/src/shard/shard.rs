@@ -1,0 +1,218 @@
+//! One shard of a sharded sketch: a contiguous slice of repetitions
+//! (whole MoM groups — see [`super::plan`]), the counters for those
+//! rows, and the matching slice of the hash family.
+//!
+//! A shard's kernel ([`SketchShard::partial_means_batch`]) runs the
+//! same four-stage pipeline as the monolithic batch engines, restricted
+//! to its rows:
+//!
+//! 1. (projection happens ONCE upstream — the shard receives the
+//!    already-transposed `(p, B)` projections, so the `d·p` work is not
+//!    duplicated per shard);
+//! 2. hashing — the sliced sub-family's CSC walk over `L_s·K` hashes
+//!    (`SparseL2Lsh::slice` preserves projections, biases, and
+//!    accumulation order, so codes equal the monolithic family's);
+//! 3. rehash — [`concat::rehash_all_batch_rows`] with the shard's
+//!    global row offset, so columns land exactly where the monolithic
+//!    sketch reads;
+//! 4. partial estimate — complete group means for the shard's groups,
+//!    class-innermost over the interleaved counters (C = 1 for a
+//!    single-output sketch), in the exact accumulation order of
+//!    `RaceSketch::median_of_means` / the fused
+//!    `estimate_all_classes`.
+//!
+//! Summed across shards the hash/rehash/gather work equals ONE
+//! monolithic pass — sharding distributes the memory traffic without
+//! adding arithmetic — and because groups are never split, the partial
+//! means are bit-for-bit the monolithic group means.  The median +
+//! debias happen at merge ([`super::merge`]).
+
+use crate::lsh::{concat, SparseL2Lsh};
+
+/// Reusable per-worker scratch for shard kernels (zero allocation once
+/// warm; lives in `coordinator::pool::WorkerScratch`).
+#[derive(Clone, Debug, Default)]
+pub struct ShardScratch {
+    /// Hash accumulators / codes, hash-major (L_s·K, B).
+    acc: Vec<f32>,
+    codes: Vec<i32>,
+    /// Per-row columns, row-major (L_s, B).
+    cols: Vec<u32>,
+    /// C-wide accumulator for the class-innermost gather.
+    class_acc: Vec<f32>,
+}
+
+/// A self-contained shard: rows `[row_start, row_end)` of a sketch,
+/// holding whole effective groups `[group_start, group_end)`.
+#[derive(Clone, Debug)]
+pub struct SketchShard {
+    /// Counters for the local rows, `(local_rows, cols, classes)`
+    /// row-major (the class-interleaved layout; C = 1 for RSSK-shaped
+    /// sketches, where it coincides with the plain `(rows, cols)`
+    /// layout).
+    data: Vec<f32>,
+    pub n_classes: usize,
+    pub cols: usize,
+    pub k_per_row: u32,
+    pub shard_index: usize,
+    pub row_start: usize,
+    pub row_end: usize,
+    pub group_start: usize,
+    pub group_end: usize,
+    /// Global row range of each local group, precomputed from the ONE
+    /// span formula (`ShardPlan::group_rows`) at construction — the
+    /// shard never re-derives estimator geometry.
+    group_bounds: Vec<(usize, usize)>,
+    /// Sub-family covering hashes `[row_start·K, row_end·K)` of the
+    /// shared family, with local indices.
+    lsh: SparseL2Lsh,
+}
+
+impl SketchShard {
+    /// Carve shard `shard_index` of `plan` out of interleaved counters
+    /// `(total_rows, cols, n_classes)` and the full hash family.
+    pub(super) fn carve(
+        counters: &[f32],
+        n_classes: usize,
+        cols: usize,
+        k_per_row: u32,
+        full_lsh: &SparseL2Lsh,
+        plan: &super::ShardPlan,
+        shard_index: usize,
+    ) -> SketchShard {
+        let span = plan.span(shard_index);
+        let stride = cols * n_classes;
+        let data =
+            counters[span.row_start * stride..span.row_end * stride]
+                .to_vec();
+        let k = k_per_row as usize;
+        let lsh = full_lsh.slice(span.row_start * k, span.row_end * k);
+        SketchShard {
+            data,
+            n_classes,
+            cols,
+            k_per_row,
+            shard_index,
+            row_start: span.row_start,
+            row_end: span.row_end,
+            group_start: span.group_start,
+            group_end: span.group_end,
+            group_bounds: (span.group_start..span.group_end)
+                .map(|g| plan.group_rows(g))
+                .collect(),
+            lsh,
+        }
+    }
+
+    /// Rebuild a shard from serialized parts (RSFS load path).  The
+    /// caller has already validated the geometry against the recomputed
+    /// plan; `full_lsh` is the monolithic family regenerated from the
+    /// stored seed.
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn from_parts(
+        data: Vec<f32>,
+        n_classes: usize,
+        cols: usize,
+        k_per_row: u32,
+        full_lsh: &SparseL2Lsh,
+        shard_index: usize,
+        span: super::plan::ShardSpan,
+        plan: &super::ShardPlan,
+    ) -> SketchShard {
+        let k = k_per_row as usize;
+        SketchShard {
+            data,
+            n_classes,
+            cols,
+            k_per_row,
+            shard_index,
+            row_start: span.row_start,
+            row_end: span.row_end,
+            group_start: span.group_start,
+            group_end: span.group_end,
+            group_bounds: (span.group_start..span.group_end)
+                .map(|g| plan.group_rows(g))
+                .collect(),
+            lsh: full_lsh.slice(span.row_start * k, span.row_end * k),
+        }
+    }
+
+    pub fn local_rows(&self) -> usize {
+        self.row_end - self.row_start
+    }
+
+    pub fn local_groups(&self) -> usize {
+        self.group_end - self.group_start
+    }
+
+    /// This shard's counter slice (local_rows · cols · classes).
+    pub fn counters(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// The shard kernel: complete group means for every query of the
+    /// batch over this shard's groups.
+    ///
+    /// * `proj_t` — projected queries, coordinate-major `(p, B)` (the
+    ///   shared stage-1 output, computed once per batch upstream);
+    /// * `out` — partial means, `(B, local_groups, classes)` row-major.
+    ///
+    /// Every group mean is bit-for-bit the value the monolithic
+    /// scalar/batch/fused estimators compute for that (group, class):
+    /// same codes (sliced family), same columns (global row salt), same
+    /// gather order (row-ascending, class-innermost), same divisor.
+    pub fn partial_means_batch(
+        &self,
+        proj_t: &[f32],
+        batch: usize,
+        s: &mut ShardScratch,
+        out: &mut Vec<f32>,
+    ) {
+        let lr = self.local_rows();
+        let lg = self.local_groups();
+        let c_n = self.n_classes;
+        let n_hashes = lr * self.k_per_row as usize;
+        s.acc.resize(n_hashes * batch, 0.0);
+        s.codes.resize(n_hashes * batch, 0);
+        s.cols.resize(lr * batch, 0);
+        s.class_acc.resize(c_n, 0.0);
+        out.clear();
+        out.resize(batch * lg * c_n, 0.0);
+        if batch == 0 {
+            return;
+        }
+        // Stages 2+3: hash this shard's repetitions, rehash with the
+        // GLOBAL row index salt.
+        self.lsh.hash_batch_into_acc(proj_t, batch, &mut s.acc,
+                                     &mut s.codes);
+        concat::rehash_all_batch_rows(
+            &s.codes,
+            self.k_per_row as usize,
+            self.cols as u32,
+            batch,
+            self.row_start as u32,
+            &mut s.cols,
+        );
+        // Stage 4 (partial): complete group means, class-innermost.
+        for bq in 0..batch {
+            for gi in 0..lg {
+                let (gs, ge) = self.group_bounds[gi];
+                s.class_acc.fill(0.0);
+                for l in gs..ge {
+                    let ll = l - self.row_start;
+                    let col = s.cols[ll * batch + bq] as usize;
+                    let base = (ll * self.cols + col) * c_n;
+                    let src = &self.data[base..base + c_n];
+                    for (a, &v) in s.class_acc.iter_mut().zip(src) {
+                        *a += v;
+                    }
+                }
+                let div = (ge - gs) as f32;
+                let dst = &mut out[(bq * lg + gi) * c_n..][..c_n];
+                for (o, &a) in dst.iter_mut().zip(s.class_acc.iter()) {
+                    *o = a / div;
+                }
+            }
+        }
+    }
+}

@@ -24,6 +24,34 @@
 use super::{MultiSketch, RaceSketch};
 use crate::lsh::concat;
 
+/// Stage 1 of every batch-major engine: project the flat `(B, d)` batch
+/// into the transposed `(p, B)` layout, each query in the scalar
+/// accumulation order of [`super::project_into`].  THE single copy of
+/// this accumulation-order-critical loop — the plain batch path, the
+/// fused multiclass path, and the sharded scatter/gather path
+/// (`crate::shard`) all call it, so the bit-identity contract between
+/// engines cannot desync here.
+pub(crate) fn project_batch_t(
+    a: &[f32],
+    d: usize,
+    p: usize,
+    queries: &[f32],
+    batch: usize,
+    proj_row: &mut Vec<f32>,
+    proj_t: &mut Vec<f32>,
+) {
+    debug_assert_eq!(queries.len(), batch * d);
+    proj_row.resize(p, 0.0);
+    proj_t.resize(p * batch, 0.0);
+    for bq in 0..batch {
+        let q = &queries[bq * d..(bq + 1) * d];
+        super::project_into(a, p, q, proj_row);
+        for (o, &v) in proj_row.iter().enumerate() {
+            proj_t[o * batch + bq] = v;
+        }
+    }
+}
+
 /// Reusable scratch for batched queries (zero allocation once warm).
 #[derive(Clone, Debug, Default)]
 pub struct BatchScratch {
@@ -57,27 +85,12 @@ impl RaceSketch {
     }
 
     /// Stage 1: project all queries, writing the transposed `(p, B)`
-    /// layout.  Accumulation per (query, output) is coordinate-ascending
-    /// — the exact order of the scalar path — so results are bitwise
-    /// equal.
+    /// layout (see [`project_batch_t`] — the shared, order-identical
+    /// loop).
     fn project_batch(&self, queries: &[f32], batch: usize,
                      s: &mut BatchScratch) {
-        for bq in 0..batch {
-            let q = &queries[bq * self.d..(bq + 1) * self.d];
-            s.proj_row.fill(0.0);
-            for (i, &qi) in q.iter().enumerate() {
-                if qi == 0.0 {
-                    continue;
-                }
-                let row = &self.a[i * self.p..(i + 1) * self.p];
-                for (o, &aij) in s.proj_row.iter_mut().zip(row) {
-                    *o += qi * aij;
-                }
-            }
-            for (o, &v) in s.proj_row.iter().enumerate() {
-                s.proj_t[o * batch + bq] = v;
-            }
-        }
+        project_batch_t(&self.a, self.d, self.p, queries, batch,
+                        &mut s.proj_row, &mut s.proj_t);
     }
 
     /// Stages 2+3: hash the transposed projections and fill `s.cols`.

@@ -258,6 +258,12 @@ impl FusedMultiSketch {
         &self.a
     }
 
+    /// The shared hash family (crate-internal: `shard` slices it into
+    /// per-shard sub-families).
+    pub(crate) fn lsh(&self) -> &Arc<SparseL2Lsh> {
+        &self.lsh
+    }
+
     /// FLOPs per query: one shared hash pass + per-class aggregation
     /// (identical to `MultiSketch::flops_per_query`).
     pub fn flops_per_query(&self) -> usize {
@@ -404,15 +410,11 @@ impl FusedMultiSketch {
         if batch == 0 {
             return &s.out;
         }
-        // Stage 1: project all queries into the transposed (p, B) layout
-        // with the scalar accumulation order.
-        for bq in 0..batch {
-            let q = &queries[bq * self.d..(bq + 1) * self.d];
-            project_into(&self.a, self.p, q, &mut s.proj_row);
-            for (o, &v) in s.proj_row.iter().enumerate() {
-                s.proj_t[o * batch + bq] = v;
-            }
-        }
+        // Stage 1: project all queries into the transposed (p, B)
+        // layout (the shared, order-identical `batch::project_batch_t`).
+        super::batch::project_batch_t(&self.a, self.d, self.p, queries,
+                                      batch, &mut s.proj_row,
+                                      &mut s.proj_t);
         // Stages 2+3: one CSC walk for the whole batch, then rehash.
         self.lsh.hash_batch_into_acc(&s.proj_t, batch, &mut s.acc_b,
                                      &mut s.codes_b);

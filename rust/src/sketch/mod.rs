@@ -172,6 +172,18 @@ impl RaceSketch {
         &self.data
     }
 
+    /// Input projection A (d, p) row-major (empty => queries arrive
+    /// already projected).
+    pub fn projection(&self) -> &[f32] {
+        &self.a
+    }
+
+    /// The shared hash family (crate-internal: `shard` slices it into
+    /// per-shard sub-families).
+    pub(crate) fn lsh(&self) -> &Arc<SparseL2Lsh> {
+        &self.lsh
+    }
+
     /// Merge another sketch built with identical parameters (RACE
     /// counters are additive — streaming/distributed construction).
     pub fn merge(&mut self, other: &RaceSketch) -> anyhow::Result<()> {

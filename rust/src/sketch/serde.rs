@@ -41,7 +41,7 @@ const MAX_N_HASHES: u128 = 1 << 26;
 /// generate-time CSC build allocates O(p) and walks O(n_hashes·p)).
 const MAX_DIM: usize = 1 << 22;
 
-fn check_hash_config(
+pub(crate) fn check_hash_config(
     rows: usize,
     k_per_row: u32,
     d: usize,
@@ -57,14 +57,15 @@ fn check_hash_config(
     Ok(())
 }
 
-/// Little-endian read cursor over a byte buffer.
-struct Cur<'a> {
-    b: &'a [u8],
-    i: usize,
+/// Little-endian read cursor over a byte buffer (shared with the RSFS
+/// shard loader in [`crate::shard::serde`]).
+pub(crate) struct Cur<'a> {
+    pub(crate) b: &'a [u8],
+    pub(crate) i: usize,
 }
 
 impl<'a> Cur<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         if self.i + n > self.b.len() {
             bail!("truncated sketch file");
         }
@@ -72,13 +73,13 @@ impl<'a> Cur<'a> {
         self.i += n;
         Ok(s)
     }
-    fn u32(&mut self) -> Result<u32> {
+    pub(crate) fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
-    fn f32(&mut self) -> Result<f32> {
+    pub(crate) fn f32(&mut self) -> Result<f32> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
-    fn u64(&mut self) -> Result<u64> {
+    pub(crate) fn u64(&mut self) -> Result<u64> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 }

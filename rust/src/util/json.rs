@@ -152,7 +152,13 @@ impl Json {
 }
 
 fn format_f64(v: f64) -> String {
-    if v.fract() == 0.0 && v.abs() < 1e15 {
+    if !v.is_finite() {
+        // JSON has no NaN/Infinity tokens; a bare `NaN` would make the
+        // whole line unparseable for strict clients.  Emit `null` — the
+        // value is lost either way, but the document stays valid JSON
+        // and readers fail on the FIELD, not the line.
+        "null".to_string()
+    } else if v.fract() == 0.0 && v.abs() < 1e15 {
         format!("{}", v as i64)
     } else {
         let mut s = String::new();
@@ -377,6 +383,23 @@ mod tests {
             let v = parse(s).unwrap();
             assert_eq!(parse(&v.to_string()).unwrap(), v);
         }
+    }
+
+    #[test]
+    fn non_finite_numbers_emit_valid_json() {
+        // NaN/±inf have no JSON representation; they must degrade to
+        // `null` so the surrounding document stays parseable (a served
+        // score vector from a degenerate sketch must not corrupt the
+        // wire line).
+        for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let line = obj(vec![("y", Json::num(v))]).to_string();
+            assert_eq!(line, r#"{"y":null}"#);
+            assert!(parse(&line).is_ok(), "{line}");
+        }
+        let arr = Json::Arr(vec![Json::num(1.0), Json::num(f64::NAN)]);
+        let line = arr.to_string();
+        assert_eq!(line, "[1,null]");
+        assert!(parse(&line).is_ok());
     }
 
     #[test]

@@ -84,6 +84,7 @@ fn router_serves_sketch_and_nn_consistently() {
             model: "skin".into(),
             backend: BackendKind::Sketch,
             features: row.clone(),
+            want_scores: false,
         });
         let direct = bundle.sketch.query_with(&row, &mut s);
         assert_eq!(rs.result.unwrap(), direct, "row {i}");
@@ -92,6 +93,7 @@ fn router_serves_sketch_and_nn_consistently() {
             model: "skin".into(),
             backend: BackendKind::NnRust,
             features: row.clone(),
+            want_scores: false,
         });
         let direct_nn = bundle.mlp.forward_with(&row, &mut ns);
         assert_eq!(nn.result.unwrap(), direct_nn, "row {i}");
@@ -124,6 +126,7 @@ fn pjrt_lane_serves_from_request_path() {
                         model: "skin".into(),
                         backend: BackendKind::NnPjrt,
                         features: row.clone(),
+                        want_scores: false,
                     });
                     resp.result.expect("pjrt answer")
                 })
@@ -153,7 +156,8 @@ fn tcp_server_round_trip() {
     let server = Server::bind(router.clone(), "127.0.0.1:0").unwrap();
     let addr = server.local_addr();
     let stop = server.stop_handle();
-    let handle = std::thread::spawn(move || server.serve());
+    let handle =
+        std::thread::spawn(move || server.serve().expect("serve"));
 
     let mut stream = std::net::TcpStream::connect(addr).unwrap();
     let n = 20usize;
@@ -163,6 +167,7 @@ fn tcp_server_round_trip() {
             model: "skin".into(),
             backend: BackendKind::Sketch,
             features: ds.row(i).to_vec(),
+            want_scores: false,
         };
         let mut line = req.to_line();
         line.push('\n');
@@ -229,6 +234,7 @@ fn backpressure_rejects_then_recovers() {
         model: "skin".into(),
         backend: BackendKind::Sketch,
         features: vec![0.1, 0.2, 0.3],
+        want_scores: false,
     };
     // Flood; some must be rejected with QueueFull.
     let mut rejected = 0;
@@ -338,6 +344,7 @@ fn drained_batch_executes_as_one_engine_call() {
                 model: "m".into(),
                 backend: BackendKind::Sketch,
                 features: row.clone(),
+                want_scores: false,
             })
             .unwrap();
         receivers.push(rx);
@@ -396,6 +403,7 @@ fn partial_batch_drains_as_one_call_on_deadline() {
                     model: "m".into(),
                     backend: BackendKind::Sketch,
                     features: row.clone(),
+                    want_scores: false,
                 })
                 .unwrap(),
         );
@@ -503,6 +511,7 @@ fn multiclass_drained_batch_is_one_fused_kernel_call() {
                     model: "mc".into(),
                     backend: BackendKind::Multiclass,
                     features: row.clone(),
+                    want_scores: false,
                 })
                 .unwrap(),
         );
@@ -563,6 +572,7 @@ fn multiclass_large_batch_shards_through_persistent_pool() {
                     model: "mc".into(),
                     backend: BackendKind::Multiclass,
                     features: row.clone(),
+                    want_scores: false,
                 })
                 .unwrap(),
         );
@@ -618,6 +628,7 @@ fn concurrent_clients_get_scalar_identical_answers_through_batches() {
                     model: "m".into(),
                     backend: BackendKind::Sketch,
                     features: row.clone(),
+                    want_scores: false,
                 });
                 let want = reference.query_with(row, &mut s);
                 assert_eq!(resp.result.unwrap(), want, "client {t} row {i}");

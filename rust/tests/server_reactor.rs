@@ -7,12 +7,23 @@
 //! and lane teardown), the hard line-length cap (no OOM on a 100 MB
 //! newline-free line), and graceful stop closing idle connections
 //! without leaked threads.
+//!
+//! With the `--threads-legacy` loop removed (it was one release's
+//! escape hatch), this suite is the single home for front-end
+//! behavior: the blank-line tolerance the legacy loop had is locked
+//! here against the reactor, and the multiclass scores-over-the-wire
+//! protocol is exercised end to end through a real sharded lane.
 #![cfg(target_os = "linux")]
 
 use repsketch::coordinator::batcher::BatcherConfig;
 use repsketch::coordinator::{
-    BackendKind, Engine, Request, Response, Router, RouterConfig, Server,
+    backend, BackendKind, Engine, Request, Response, Router, RouterConfig,
+    Server,
 };
+use repsketch::kernel::KernelParams;
+use repsketch::shard::ShardedSketch;
+use repsketch::sketch::{FusedMultiSketch, FusedScratch, SketchConfig};
+use repsketch::util::rng::SplitMix64;
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
@@ -134,7 +145,8 @@ impl Running {
         let addr = server.local_addr();
         let stop = server.stop_handle();
         let connections = server.connections.clone();
-        let handle = std::thread::spawn(move || server.serve());
+        let handle =
+            std::thread::spawn(move || server.serve().expect("serve"));
         Running { addr, stop, connections, handle: Some(handle) }
     }
 
@@ -158,6 +170,7 @@ fn req_line(id: u64, model: &str, x: Vec<f32>) -> String {
         model: model.into(),
         backend: BackendKind::Sketch,
         features: x,
+        want_scores: false,
     }
     .to_line();
     line.push('\n');
@@ -387,6 +400,147 @@ fn graceful_stop_closes_idle_connections_and_leaks_no_threads() {
             }
         }
     }
+}
+
+#[test]
+fn blank_lines_between_pipelined_requests_are_ignored() {
+    // Folded from the removed thread-per-connection loop's behavior
+    // set: blank and whitespace-only lines are skipped, not answered —
+    // n requests interleaved with blanks yield exactly n responses.
+    let _g = serial();
+    let mut server = Running::start(sum_router());
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let n = 20u64;
+    let mut burst = String::new();
+    for i in 1..=n {
+        burst.push('\n');
+        burst.push_str("   \n");
+        burst.push_str(&req_line(i, "m", vec![i as f32, 0.0, 0.0]));
+        burst.push_str("\n\n");
+    }
+    stream.write_all(burst.as_bytes()).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut seen = HashMap::new();
+    for resp in read_responses(&mut reader, n as usize) {
+        let id = resp.id.expect("response id");
+        assert!(seen.insert(id, ()).is_none(), "dup id {id}");
+        assert_eq!(resp.result.unwrap(), id as f32);
+    }
+    // No extra responses for the blank lines: a follow-up request is
+    // answered next, in order.
+    stream
+        .write_all(req_line(999, "m", vec![1.0, 1.0, 1.0]).as_bytes())
+        .unwrap();
+    let next = read_responses(&mut reader, 1).remove(0);
+    assert_eq!(next.id, Some(999));
+    server.stop();
+}
+
+/// Synthetic 3-class fused sketch shared by the scores-over-the-wire
+/// test and its scalar reference.
+fn synthetic_fused() -> (FusedMultiSketch, usize) {
+    let mut rng = SplitMix64::new(0x77);
+    let d = 5usize;
+    let shared_seed = rng.next_u64();
+    let a: Vec<f32> =
+        (0..d * d).map(|_| rng.next_gaussian() as f32 * 0.5).collect();
+    let per_class: Vec<KernelParams> = (0..3)
+        .map(|_| {
+            let m = 12;
+            KernelParams {
+                d,
+                p: d,
+                m,
+                a: a.clone(),
+                x: (0..m * d).map(|_| rng.next_gaussian() as f32).collect(),
+                alpha: (0..m).map(|_| 0.5 + rng.next_f32()).collect(),
+                width: 2.0,
+                lsh_seed: shared_seed,
+                k_per_row: 2,
+                default_rows: 48,
+                default_cols: 16,
+            }
+        })
+        .collect();
+    let fused =
+        FusedMultiSketch::build(&per_class, &SketchConfig::default())
+            .unwrap();
+    (fused, d)
+}
+
+#[test]
+fn sharded_lane_serves_argmax_and_optional_scores_over_the_wire() {
+    let _g = serial();
+    let (fused, d) = synthetic_fused();
+    let reference = fused.clone();
+    let sharded = ShardedSketch::from_fused(&fused, 3);
+    assert_eq!(sharded.n_shards(), 3);
+    let mut router = Router::new();
+    router.add_lane(
+        "digits",
+        BackendKind::Sharded,
+        move || Ok(Box::new(backend::ShardedEngine::new(sharded)) as _),
+        &fast_cfg(),
+    );
+    let mut server = Running::start(Arc::new(router));
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut rng = SplitMix64::new(0x78);
+    let queries: Vec<Vec<f32>> = (0..12)
+        .map(|_| (0..d).map(|_| rng.next_gaussian() as f32).collect())
+        .collect();
+    // Even ids ask for scores, odd ids don't — one batch mixes both.
+    let mut burst = String::new();
+    for (i, q) in queries.iter().enumerate() {
+        let mut line = Request {
+            id: i as u64,
+            model: "digits".into(),
+            backend: BackendKind::Sharded,
+            features: q.clone(),
+            want_scores: i % 2 == 0,
+        }
+        .to_line();
+        line.push('\n');
+        burst.push_str(&line);
+    }
+    stream.write_all(burst.as_bytes()).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut by_id: HashMap<u64, Response> = HashMap::new();
+    for resp in read_responses(&mut reader, queries.len()) {
+        let id = resp.id.expect("response id");
+        assert!(by_id.insert(id, resp).is_none(), "dup id {id}");
+    }
+    let mut fs = FusedScratch::default();
+    let mut want = Vec::new();
+    for (i, q) in queries.iter().enumerate() {
+        let resp = &by_id[&(i as u64)];
+        reference.scores_with(q, &mut fs, &mut want);
+        let want_arg = reference.predict(q, &mut fs) as f32;
+        assert_eq!(
+            resp.result.clone().unwrap(),
+            want_arg,
+            "query {i} argmax"
+        );
+        if i % 2 == 0 {
+            let scores =
+                resp.scores.as_ref().expect("scores requested");
+            assert_eq!(scores.len(), 3, "query {i}");
+            for (c, w) in want.iter().enumerate() {
+                assert_eq!(
+                    scores[c].to_bits(),
+                    w.to_bits(),
+                    "query {i} class {c}"
+                );
+            }
+        } else {
+            assert!(
+                resp.scores.is_none(),
+                "query {i} did not ask for scores"
+            );
+        }
+    }
+    server.stop();
 }
 
 #[test]

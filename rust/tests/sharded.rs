@@ -1,0 +1,335 @@
+//! Sharded-serving integration (artifact-free): the `sh` lane's
+//! execution contract through the real router + batcher + pool.
+//!
+//! Locks:
+//! * one drained `DynamicBatcher` batch → ONE `ShardedEngine` call →
+//!   exactly `n_shards` shard-kernel submissions on the persistent
+//!   pool, for every batch size (B = 1 included — model sharding has
+//!   no fan-out threshold);
+//! * a fixed thread set on the sharded hot path: the pool's worker
+//!   count is constant by construction and every shard job lands on
+//!   those long-lived threads (`jobs_executed` accounting — the same
+//!   probe the multiclass pool test uses — plus a thread-id sweep);
+//! * responses bit-identical to the monolithic scalar reference
+//!   through the full serving stack, single-output and multiclass;
+//! * per-request score vectors for `sh` lane requests that ask.
+
+use repsketch::coordinator::batcher::BatcherConfig;
+use repsketch::coordinator::{
+    backend, BackendKind, BatchOutput, Engine, Request, Router,
+    RouterConfig, WorkerPool, WorkerScratch,
+};
+use repsketch::kernel::KernelParams;
+use repsketch::shard::ShardedSketch;
+use repsketch::sketch::{
+    FusedMultiSketch, FusedScratch, MultiSketch, QueryScratch, RaceSketch,
+    SketchConfig,
+};
+use repsketch::util::rng::SplitMix64;
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::ThreadId;
+use std::time::Duration;
+
+fn synthetic_sketch(seed: u64, d: usize) -> RaceSketch {
+    let mut rng = SplitMix64::new(seed);
+    let p = 4usize;
+    let m = 24usize;
+    let kp = KernelParams {
+        d,
+        p,
+        m,
+        a: (0..d * p).map(|_| rng.next_gaussian() as f32 * 0.5).collect(),
+        x: (0..m * p).map(|_| rng.next_gaussian() as f32).collect(),
+        alpha: (0..m).map(|_| 0.5 + rng.next_f32()).collect(),
+        width: 2.0,
+        lsh_seed: rng.next_u64(),
+        k_per_row: 2,
+        default_rows: 64,
+        default_cols: 16,
+    };
+    RaceSketch::build(&kp, &SketchConfig::default())
+}
+
+fn synthetic_multiclass(seed: u64, n_classes: usize)
+    -> (FusedMultiSketch, MultiSketch, usize) {
+    let mut rng = SplitMix64::new(seed);
+    let d = 6usize;
+    let shared_seed = rng.next_u64();
+    let a: Vec<f32> =
+        (0..d * d).map(|_| rng.next_gaussian() as f32 * 0.5).collect();
+    let per_class: Vec<KernelParams> = (0..n_classes)
+        .map(|_| {
+            let m = 16;
+            KernelParams {
+                d,
+                p: d,
+                m,
+                a: a.clone(),
+                x: (0..m * d).map(|_| rng.next_gaussian() as f32).collect(),
+                alpha: (0..m).map(|_| 0.5 + rng.next_f32()).collect(),
+                width: 2.0,
+                lsh_seed: shared_seed,
+                k_per_row: 2,
+                default_rows: 48,
+                default_cols: 16,
+            }
+        })
+        .collect();
+    let cfg = SketchConfig::default();
+    (
+        FusedMultiSketch::build(&per_class, &cfg).unwrap(),
+        MultiSketch::build(&per_class, &cfg).unwrap(),
+        d,
+    )
+}
+
+fn synthetic_rows(seed: u64, n: usize, d: usize) -> Vec<Vec<f32>> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n)
+        .map(|_| (0..d).map(|_| rng.next_gaussian() as f32).collect())
+        .collect()
+}
+
+/// Counting wrapper around the sharded engine — the probe for the
+/// one-engine-call-per-drained-batch contract.
+struct CountingShardedEngine {
+    inner: backend::ShardedEngine,
+    calls: Arc<AtomicUsize>,
+    sizes: Arc<Mutex<Vec<usize>>>,
+}
+
+impl Engine for CountingShardedEngine {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn eval_batch(&mut self, rows: &[Vec<f32>]) -> anyhow::Result<Vec<f32>> {
+        self.calls.fetch_add(1, Ordering::SeqCst);
+        self.sizes.lock().unwrap().push(rows.len());
+        self.inner.eval_batch(rows)
+    }
+
+    fn eval_batch_ex(
+        &mut self,
+        rows: &[Vec<f32>],
+        want_scores: bool,
+    ) -> anyhow::Result<BatchOutput> {
+        self.calls.fetch_add(1, Ordering::SeqCst);
+        self.sizes.lock().unwrap().push(rows.len());
+        self.inner.eval_batch_ex(rows, want_scores)
+    }
+}
+
+#[test]
+fn one_shard_submission_per_shard_per_drained_batch() {
+    // The acceptance contract: per drained batch, the pool receives
+    // EXACTLY n_shards shard-kernel jobs — no more (no per-row or
+    // per-chunk splitting), no fewer (every shard runs every batch) —
+    // at every batch size, B = 1 included.
+    let d = 6usize;
+    let n_shards = 4usize;
+    let sketch = synthetic_sketch(0x51AD, d);
+    let reference = sketch.clone();
+    let sharded = ShardedSketch::from_race(&sketch, n_shards);
+    assert_eq!(sharded.n_shards(), n_shards);
+    let pool = Arc::new(WorkerPool::new(n_shards));
+    let calls = Arc::new(AtomicUsize::new(0));
+    let sizes = Arc::new(Mutex::new(Vec::new()));
+    let mut router = Router::new();
+    // Both lanes drain strictly by SIZE (max_wait far beyond the test
+    // runtime), so the drain count is deterministic: lane "m" fires at
+    // exactly 16 queued requests, lane "m1" at every single request.
+    let cfg16 = RouterConfig {
+        batcher: BatcherConfig {
+            max_batch: 16,
+            max_wait: Duration::from_secs(30),
+            queue_cap: 1024,
+        },
+    };
+    let cfg1 = RouterConfig {
+        batcher: BatcherConfig {
+            max_batch: 1,
+            max_wait: Duration::from_secs(30),
+            queue_cap: 1024,
+        },
+    };
+    {
+        let (calls, sizes) = (calls.clone(), sizes.clone());
+        let pool = pool.clone();
+        router.add_lane("m", BackendKind::Sharded, move || {
+            Ok(Box::new(CountingShardedEngine {
+                inner: backend::ShardedEngine::with_pool(sharded, pool),
+                calls,
+                sizes,
+            }) as _)
+        }, &cfg16);
+    }
+    {
+        let sharded1 =
+            ShardedSketch::from_race(&reference, n_shards);
+        let (calls, sizes) = (calls.clone(), sizes.clone());
+        let pool = pool.clone();
+        router.add_lane("m1", BackendKind::Sharded, move || {
+            Ok(Box::new(CountingShardedEngine {
+                inner: backend::ShardedEngine::with_pool(sharded1, pool),
+                calls,
+                sizes,
+            }) as _)
+        }, &cfg1);
+    }
+    // Batch 1: exactly max_batch requests → one drain of 16.
+    let rows = synthetic_rows(0xAB, 16, d);
+    let mut receivers = Vec::new();
+    for (i, row) in rows.iter().enumerate() {
+        receivers.push(
+            router
+                .submit(Request {
+                    id: i as u64,
+                    model: "m".into(),
+                    backend: BackendKind::Sharded,
+                    features: row.clone(),
+                    want_scores: false,
+                })
+                .unwrap(),
+        );
+    }
+    let mut s = QueryScratch::default();
+    for (i, rx) in receivers.into_iter().enumerate() {
+        let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        let want = reference.query_with(&rows[i], &mut s);
+        assert_eq!(
+            resp.result.unwrap().to_bits(),
+            want.to_bits(),
+            "row {i}"
+        );
+    }
+    assert_eq!(calls.load(Ordering::SeqCst), 1, "one call per drain");
+    assert_eq!(*sizes.lock().unwrap(), vec![16]);
+    assert_eq!(
+        pool.jobs_executed(),
+        n_shards,
+        "a drained batch must submit exactly one job per shard"
+    );
+    // Batch 2: a single request through the max_batch=1 lane — still
+    // one job per shard, never a collapsed single-kernel path.
+    let row1 = synthetic_rows(0xAC, 1, d).remove(0);
+    let resp = router.call(Request {
+        id: 99,
+        model: "m1".into(),
+        backend: BackendKind::Sharded,
+        features: row1.clone(),
+        want_scores: false,
+    });
+    let want = reference.query_with(&row1, &mut s);
+    assert_eq!(resp.result.unwrap().to_bits(), want.to_bits());
+    assert_eq!(calls.load(Ordering::SeqCst), 2);
+    assert_eq!(*sizes.lock().unwrap(), vec![16, 1]);
+    assert_eq!(pool.jobs_executed(), 2 * n_shards);
+    // The pool's thread set never grew.
+    assert_eq!(pool.workers(), n_shards);
+}
+
+#[test]
+fn shard_jobs_run_on_the_fixed_pool_thread_set_no_spawns() {
+    // Thread accounting on the sharded hot path.  Two guarantees
+    // compose here: (a) `WorkerPool` proves elsewhere (pool.rs tests)
+    // that EVERY job submitted via `run_jobs` executes on its fixed
+    // `workers()` thread set, and (b) this test proves via the
+    // `jobs_executed` counter that every shard kernel of every drained
+    // batch went through `run_jobs` — so no shard work can have run on
+    // a spawned or lane thread.  The worker-id probe below additionally
+    // pins the submitting thread outside the pool's thread set.
+    let d = 5usize;
+    let n_shards = 3usize;
+    let sketch = synthetic_sketch(0x51AE, d);
+    let sharded = ShardedSketch::from_race(&sketch, n_shards);
+    let pool = Arc::new(WorkerPool::new(n_shards));
+    // Record the pool's worker thread ids with marker jobs.
+    let worker_ids: HashSet<ThreadId> = pool
+        .run_jobs(
+            (0..n_shards)
+                .map(|_| {
+                    |_ws: &mut WorkerScratch| std::thread::current().id()
+                })
+                .collect::<Vec<_>>(),
+        )
+        .into_iter()
+        .collect();
+    // The submitting (lane) thread is not a pool worker.
+    assert!(!worker_ids.contains(&std::thread::current().id()));
+    let mut engine = backend::ShardedEngine::with_pool(sharded, pool.clone());
+    for batch in 0..10 {
+        let rows = synthetic_rows(0xB0 + batch as u64, 24, d);
+        let _ = engine.eval_batch(&rows).unwrap();
+    }
+    // Every shard kernel of all 10 batches was a pool job (plus the
+    // one marker round above) — and the pool's thread set is fixed at
+    // construction, so none of that work spawned a thread.
+    assert_eq!(pool.jobs_executed(), 11 * n_shards);
+    assert_eq!(pool.workers(), n_shards);
+}
+
+#[test]
+fn multiclass_sharded_lane_matches_reference_and_serves_scores() {
+    // Full stack, multiclass: router → batcher → sharded engine → pool
+    // → merge, answers bit-identical to the per-class scalar reference,
+    // with per-request score vectors.
+    let (fused, ms, d) = synthetic_multiclass(0x51AF, 5);
+    let fused_ref = fused.clone();
+    let sharded = ShardedSketch::from_fused(&fused, 3);
+    let pool = Arc::new(WorkerPool::new(4));
+    let mut router = Router::new();
+    let cfg = RouterConfig {
+        batcher: BatcherConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 4096,
+        },
+    };
+    {
+        let pool = pool.clone();
+        router.add_lane("mc", BackendKind::Sharded, move || {
+            Ok(Box::new(backend::ShardedEngine::with_pool(sharded, pool))
+                as _)
+        }, &cfg);
+    }
+    let rows = synthetic_rows(0xFEED, 40, d);
+    let mut receivers = Vec::new();
+    for (i, row) in rows.iter().enumerate() {
+        receivers.push(
+            router
+                .submit(Request {
+                    id: i as u64,
+                    model: "mc".into(),
+                    backend: BackendKind::Sharded,
+                    features: row.clone(),
+                    want_scores: i % 3 == 0,
+                })
+                .unwrap(),
+        );
+    }
+    let mut qs = QueryScratch::default();
+    let mut fs = FusedScratch::default();
+    let mut want_scores = Vec::new();
+    for (i, rx) in receivers.into_iter().enumerate() {
+        let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        let want = ms.predict(&rows[i], &mut qs) as f32;
+        assert_eq!(resp.result.unwrap(), want, "row {i}");
+        if i % 3 == 0 {
+            let scores = resp.scores.expect("scores requested");
+            fused_ref.scores_with(&rows[i], &mut fs, &mut want_scores);
+            assert_eq!(scores.len(), 5, "row {i}");
+            for (c, w) in want_scores.iter().enumerate() {
+                assert_eq!(
+                    scores[c].to_bits(),
+                    w.to_bits(),
+                    "row {i} class {c}"
+                );
+            }
+        } else {
+            assert!(resp.scores.is_none(), "row {i}");
+        }
+    }
+}
