@@ -1,0 +1,235 @@
+//! Remote shard plane vs the local `sh` lane, over loopback: shards
+//! ∈ {1, 2, 4} × B ∈ {1, 32, 512}.  Self-contained synthetic config
+//! (no artifacts needed); shard servers are real `ShardService`s
+//! behind real epoll reactors in this process, so the measurement
+//! includes the full wire path — JSON serialization of the projected
+//! batch, TCP, shard-side parse + kernel, means serialization, gather,
+//! merge — with only the network distance missing.
+//!
+//! The point of the sweep is the honest overhead number: the remote
+//! plane exists to scale CAPACITY horizontally (shard processes on
+//! other hosts), not to beat the in-process lane on one machine, and
+//! the `remote_vs_local_s{S}_b{B}` ratios document exactly what the
+//! wire costs at each shape.  A bit-identity anchor runs before any
+//! timing — if the remote lane ever diverges from the monolithic
+//! kernel, the bench fails rather than publishing numbers for a wrong
+//! result.
+//!
+//! Writes `BENCH_remote_shard.json` at the repo root.
+//!
+//! Run: `cargo bench --bench remote_shard [-- --smoke]`
+
+#[cfg(not(target_os = "linux"))]
+fn main() {
+    println!("remote_shard bench requires Linux (epoll shard plane)");
+}
+
+#[cfg(target_os = "linux")]
+fn main() -> anyhow::Result<()> {
+    linux::run()
+}
+
+#[cfg(target_os = "linux")]
+mod linux {
+    use repsketch::coordinator::{backend, Engine, WorkerPool};
+    use repsketch::kernel::KernelParams;
+    use repsketch::shard::remote::serve_local;
+    use repsketch::shard::ShardedSketch;
+    use repsketch::sketch::{RaceSketch, SketchConfig};
+    use repsketch::util::bench;
+    use repsketch::util::json::{self, Json};
+    use repsketch::util::rng::SplitMix64;
+    use std::path::Path;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    /// Deployment-shaped synthetic config (matches `shard_scaling` so
+    /// the local numbers line up across the two bench files).
+    const D: usize = 32;
+    const P: usize = 16;
+    const M: usize = 256;
+    const ROWS: usize = 2048;
+    const COLS: usize = 64;
+    const K_PER_ROW: u32 = 2;
+    const GROUPS: usize = 16;
+
+    fn synthetic_sketch() -> RaceSketch {
+        let mut rng = SplitMix64::new(0x5CA1E);
+        let kp = KernelParams {
+            d: D,
+            p: P,
+            m: M,
+            a: (0..D * P)
+                .map(|_| rng.next_gaussian() as f32 * 0.5)
+                .collect(),
+            x: (0..M * P).map(|_| rng.next_gaussian() as f32).collect(),
+            alpha: (0..M).map(|_| 0.5 + rng.next_f32()).collect(),
+            width: 2.0,
+            lsh_seed: rng.next_u64(),
+            k_per_row: K_PER_ROW,
+            default_rows: ROWS,
+            default_cols: COLS,
+        };
+        RaceSketch::build(
+            &kp,
+            &SketchConfig { groups: GROUPS, ..SketchConfig::default() },
+        )
+    }
+
+    pub fn run() -> anyhow::Result<()> {
+        let smoke = std::env::args().any(|a| a == "--smoke");
+        let budget_ns = if smoke { 5e7 } else { 5e8 };
+
+        let sketch = synthetic_sketch();
+        let cores = std::thread::available_parallelism()
+            .map(|c| c.get())
+            .unwrap_or(1);
+        let pool = Arc::new(WorkerPool::new(4));
+
+        let mut rng = SplitMix64::new(0x5EED);
+        let max_b = 512usize;
+        let rows_vec: Vec<Vec<f32>> = (0..max_b)
+            .map(|_| {
+                (0..D).map(|_| rng.next_gaussian() as f32).collect()
+            })
+            .collect();
+
+        println!(
+            "synthetic config: d={D} p={P} M={M} L={ROWS} R={COLS} \
+             K={K_PER_ROW} g={GROUPS}, {cores} cores{}",
+            if smoke { " (smoke)" } else { "" }
+        );
+        bench::header();
+        let mut results = Vec::new();
+        let mut meta: Vec<(String, Json)> = Vec::new();
+
+        // Bit-identity anchor BEFORE timing: remote == monolithic.
+        {
+            let sharded = ShardedSketch::from_race(&sketch, 4);
+            let servers = serve_local(&sharded)?;
+            let mut remote = backend::RemoteShardedEngine::connect(
+                servers.addrs.clone(),
+                Duration::from_secs(30),
+            )?;
+            let got = remote.eval_batch(&rows_vec[..32])?;
+            let flat: Vec<f32> = rows_vec[..32].concat();
+            let want = sketch.query_batch(&flat);
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                anyhow::ensure!(
+                    g.to_bits() == w.to_bits(),
+                    "remote result diverges from monolithic at row {i}"
+                );
+            }
+        }
+
+        let shard_counts = [1usize, 2, 4];
+        let batches = [1usize, 32, 512];
+        let mut local_qps = vec![vec![0.0f64; batches.len()];
+                                 shard_counts.len()];
+        let mut remote_qps = vec![vec![0.0f64; batches.len()];
+                                  shard_counts.len()];
+        for (si, &shards) in shard_counts.iter().enumerate() {
+            // Local `sh` lane (persistent pool) — the reference.
+            let sharded = ShardedSketch::from_race(&sketch, shards);
+            let mut local = backend::ShardedEngine::with_pool(
+                sharded,
+                pool.clone(),
+            );
+            for (bi, &b) in batches.iter().enumerate() {
+                let batch_rows = &rows_vec[..b];
+                let r = bench::run_with_budget(
+                    &format!("local  S={shards} B={b:<3}"),
+                    budget_ns,
+                    || {
+                        std::hint::black_box(
+                            local.eval_batch(batch_rows).unwrap(),
+                        );
+                    },
+                );
+                r.print();
+                local_qps[si][bi] = b as f64 * r.per_sec();
+                results.push(r);
+            }
+            // Remote plane over loopback.
+            let sharded = ShardedSketch::from_race(&sketch, shards);
+            let servers = serve_local(&sharded)?;
+            let mut remote = backend::RemoteShardedEngine::connect(
+                servers.addrs.clone(),
+                Duration::from_secs(30),
+            )?;
+            for (bi, &b) in batches.iter().enumerate() {
+                let batch_rows = &rows_vec[..b];
+                let r = bench::run_with_budget(
+                    &format!("remote S={shards} B={b:<3}"),
+                    budget_ns,
+                    || {
+                        std::hint::black_box(
+                            remote.eval_batch(batch_rows).unwrap(),
+                        );
+                    },
+                );
+                r.print();
+                remote_qps[si][bi] = b as f64 * r.per_sec();
+                results.push(r);
+            }
+        }
+
+        for (si, &shards) in shard_counts.iter().enumerate() {
+            for (bi, &b) in batches.iter().enumerate() {
+                let ratio = remote_qps[si][bi] / local_qps[si][bi];
+                println!(
+                    "  -> S={shards} B={b}: remote {:.0} q/s vs local \
+                     {:.0} q/s ({:.2}x)",
+                    remote_qps[si][bi], local_qps[si][bi], ratio
+                );
+                meta.push((
+                    format!("s{shards}_b{b}"),
+                    json::obj(vec![
+                        ("shards", Json::from_u64(shards as u64)),
+                        ("batch", Json::from_u64(b as u64)),
+                        ("local_qps", Json::num(local_qps[si][bi])),
+                        ("remote_qps", Json::num(remote_qps[si][bi])),
+                        ("remote_vs_local", Json::num(ratio)),
+                    ]),
+                ));
+            }
+        }
+
+        let repo_root = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("rust/ has a parent")
+            .to_path_buf();
+        let mut meta_refs: Vec<(&str, Json)> = vec![
+            (
+                "config",
+                json::obj(vec![
+                    ("d", Json::from_u64(D as u64)),
+                    ("p", Json::from_u64(P as u64)),
+                    ("m", Json::from_u64(M as u64)),
+                    ("rows", Json::from_u64(ROWS as u64)),
+                    ("cols", Json::from_u64(COLS as u64)),
+                    ("k_per_row", Json::from_u64(K_PER_ROW as u64)),
+                    ("groups", Json::from_u64(GROUPS as u64)),
+                ]),
+            ),
+            ("smoke", Json::Bool(smoke)),
+            ("cores", Json::from_u64(cores as u64)),
+            (
+                "note",
+                Json::Str(
+                    "remote runs over loopback in-process; the ratio \
+                     is the wire-protocol overhead (JSON + TCP + \
+                     scatter/gather), the price of horizontal capacity"
+                        .into(),
+                ),
+            ),
+        ];
+        for (k, v) in &meta {
+            meta_refs.push((k.as_str(), v.clone()));
+        }
+        let out = repo_root.join("BENCH_remote_shard.json");
+        bench::write_json(&out, "remote_shard", meta_refs, &results)?;
+        println!("json -> {}", out.display());
+        Ok(())
+    }
+}

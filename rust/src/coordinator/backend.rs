@@ -346,6 +346,83 @@ fn argmax_values(scores: &[f32], n_classes: usize) -> Vec<f32> {
         .collect()
 }
 
+/// Merged `(B, C)` shard scores → wire-facing output: the tail every
+/// `sh`-lane variant (local pool and remote plane) shares, so both
+/// answer IDENTICALLY.  Single-output (RSSK-shaped) sketches answer
+/// the estimate; multiclass sketches (a C = 1 RSFM included) answer
+/// the argmax index plus optional scores — exactly what the `mc` lane
+/// answers for the same model.
+fn sharded_batch_output(
+    head: &crate::shard::ShardHead,
+    scores: &[f32],
+    want_scores: bool,
+) -> BatchOutput {
+    if !head.multiclass {
+        return BatchOutput { values: scores.to_vec(), scores: None };
+    }
+    let c_n = head.n_classes;
+    BatchOutput {
+        values: argmax_values(scores, c_n),
+        scores: want_scores.then(|| ScoreMatrix {
+            n_classes: c_n,
+            flat: scores.to_vec(),
+        }),
+    }
+}
+
+/// The `sh` lanes' empty-batch answer (same score-matrix presence rule
+/// as the non-empty path).
+fn sharded_empty_output(
+    head: &crate::shard::ShardHead,
+    want_scores: bool,
+) -> BatchOutput {
+    BatchOutput {
+        values: Vec::new(),
+        scores: (want_scores && head.multiclass).then(|| ScoreMatrix {
+            n_classes: head.n_classes,
+            flat: Vec::new(),
+        }),
+    }
+}
+
+/// Shared `sh`-lane batch prologue: per-row dim validation, flatten,
+/// and stage-1 projection into the transposed `(p, B)` layout — ONE
+/// copy, because the local and remote lanes' bit-for-bit identity
+/// depends on their shard kernels receiving identical inputs; a
+/// prologue edit that reached only one lane would silently break the
+/// contract the property tests lock.
+fn project_sharded_batch(
+    head: &crate::shard::ShardHead,
+    rows: &[Vec<f32>],
+    flat: &mut Vec<f32>,
+    proj_row: &mut Vec<f32>,
+    proj_t: &mut Vec<f32>,
+) -> anyhow::Result<()> {
+    let d = head.d;
+    for (i, r) in rows.iter().enumerate() {
+        anyhow::ensure!(
+            r.len() == d,
+            "row {i} has dim {}, want {d}",
+            r.len()
+        );
+    }
+    flat.clear();
+    flat.reserve(rows.len() * d);
+    for r in rows {
+        flat.extend_from_slice(r);
+    }
+    shard::project_batch_t(
+        &head.a,
+        d,
+        head.p,
+        flat,
+        rows.len(),
+        proj_row,
+        proj_t,
+    );
+    Ok(())
+}
+
 /// Multiclass lane: the fused class-interleaved sketch.  A drained batch
 /// executes as ONE fused kernel call (one hash pass, one contiguous
 /// gather for all C classes); responses carry the argmax class index as
@@ -520,47 +597,26 @@ impl Engine for ShardedEngine {
         want_scores: bool,
     ) -> anyhow::Result<BatchOutput> {
         let head = &self.sharded.head;
-        let (d, c_n) = (head.d, head.n_classes);
         if rows.is_empty() {
-            return Ok(BatchOutput {
-                values: Vec::new(),
-                scores: (want_scores && head.multiclass).then(|| {
-                    ScoreMatrix { n_classes: c_n, flat: Vec::new() }
-                }),
-            });
-        }
-        for (i, r) in rows.iter().enumerate() {
-            anyhow::ensure!(
-                r.len() == d,
-                "row {i} has dim {}, want {d}",
-                r.len()
-            );
+            return Ok(sharded_empty_output(head, want_scores));
         }
         let n = rows.len();
-        // Stage 1 once, on the lane thread: flatten + project into the
-        // transposed (p, B) layout every shard reads (Arc-shared — the
-        // d·p·B work is NOT duplicated per shard).
-        self.flat.clear();
-        self.flat.reserve(n * d);
-        for r in rows {
-            self.flat.extend_from_slice(r);
-        }
-        // Reclaim the shared buffer from the previous batch (its jobs
-        // all finished before run_jobs returned, so the refcount is 1;
-        // if a worker is somehow still dropping its clone, fall back to
-        // a fresh allocation rather than block).
+        // Reclaim the shared stage-1 buffer from the previous batch
+        // (its jobs all finished before run_jobs returned, so the
+        // refcount is 1; if a worker is somehow still dropping its
+        // clone, fall back to a fresh allocation rather than block).
         if Arc::get_mut(&mut self.proj_t).is_none() {
             self.proj_t = Arc::new(Vec::new());
         }
-        shard::project_batch_t(
-            &head.a,
-            d,
-            head.p,
-            &self.flat,
-            n,
+        // Stage 1 once, on the lane thread (Arc-shared with the shard
+        // jobs — the d·p·B work is NOT duplicated per shard).
+        project_sharded_batch(
+            head,
+            rows,
+            &mut self.flat,
             &mut self.proj_row,
             Arc::get_mut(&mut self.proj_t).expect("uniquely owned"),
-        );
+        )?;
         let proj_t = self.proj_t.clone();
         // Exactly ONE shard-kernel submission per shard per drained
         // batch (the integration-tested contract): each job hashes its
@@ -582,7 +638,8 @@ impl Engine for ShardedEngine {
             })
             .collect();
         let partials = self.pool.run_jobs(jobs);
-        // Estimator-exact merge on the submitting (lane) thread.
+        // Estimator-exact merge on the submitting (lane) thread.  The
+        // merge validates shapes; pool-computed partials always pass.
         shard::merge_scores_into(
             head,
             &self.sharded.plan,
@@ -590,24 +647,116 @@ impl Engine for ShardedEngine {
             n,
             &mut self.merge,
             &mut self.scores,
-        );
-        if !head.multiclass {
-            // Single-output (RSSK-shaped): the merged scores ARE the
-            // estimates.  A 1-class RSFM takes the multiclass branch
-            // below instead, answering its argmax index — exactly what
-            // the `mc` lane answers for the same model.
-            return Ok(BatchOutput {
-                values: self.scores.clone(),
-                scores: None,
-            });
+        )
+        .map_err(|e| anyhow::anyhow!("shard merge: {e}"))?;
+        Ok(sharded_batch_output(head, &self.scores, want_scores))
+    }
+}
+
+/// The remote `sh` lane: shard kernels living in OTHER processes (or
+/// hosts), reached through `shard::remote::RemoteShardSet`.  Identical
+/// execution shape to [`ShardedEngine`] with the pool swapped for the
+/// wire: project ONCE on the lane thread, scatter one request per
+/// persistent shard connection (pipelined, nonblocking, zero spawns —
+/// the lane thread drives the sockets itself), gather the complete
+/// group means, and run the untouched `ShardMerge` — so the remote
+/// lane is bit-for-bit identical to the local `sh` lane and the
+/// unsharded scalar path.  A failing shard fails the batch with an
+/// error NAMING it (the router turns that into per-request error
+/// responses — never silence, never a partial merge), and the next
+/// batch reconnects.
+#[cfg(target_os = "linux")]
+pub struct RemoteShardedEngine {
+    set: crate::shard::RemoteShardSet,
+    flat: Vec<f32>,
+    proj_row: Vec<f32>,
+    proj_t: Vec<f32>,
+    partials: Vec<Vec<f32>>,
+    merge: MergeScratch,
+    scores: Vec<f32>,
+}
+
+#[cfg(target_os = "linux")]
+impl RemoteShardedEngine {
+    /// Connect + handshake-validate the whole set (addresses in
+    /// shard-index order).  Fails fast if any shard is down or serves
+    /// the wrong sketch — a lane must not come up half-exact.
+    pub fn connect(
+        addrs: Vec<String>,
+        timeout: std::time::Duration,
+    ) -> anyhow::Result<Self> {
+        Ok(Self::new(crate::shard::RemoteShardSet::connect(
+            addrs, timeout,
+        )?))
+    }
+
+    pub fn new(set: crate::shard::RemoteShardSet) -> Self {
+        Self {
+            set,
+            flat: Vec::new(),
+            proj_row: Vec::new(),
+            proj_t: Vec::new(),
+            partials: Vec::new(),
+            merge: MergeScratch::default(),
+            scores: Vec::new(),
         }
-        Ok(BatchOutput {
-            values: argmax_values(&self.scores, c_n),
-            scores: want_scores.then(|| ScoreMatrix {
-                n_classes: c_n,
-                flat: self.scores.clone(),
-            }),
-        })
+    }
+
+    pub fn head(&self) -> &crate::shard::ShardHead {
+        self.set.head()
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.set.n_shards()
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Engine for RemoteShardedEngine {
+    fn dim(&self) -> usize {
+        self.set.head().d
+    }
+
+    fn eval_batch(&mut self, rows: &[Vec<f32>]) -> anyhow::Result<Vec<f32>> {
+        Ok(self.eval_batch_ex(rows, false)?.values)
+    }
+
+    fn eval_batch_ex(
+        &mut self,
+        rows: &[Vec<f32>],
+        want_scores: bool,
+    ) -> anyhow::Result<BatchOutput> {
+        if rows.is_empty() {
+            return Ok(sharded_empty_output(self.set.head(),
+                                           want_scores));
+        }
+        let n = rows.len();
+        // The SAME stage-1 prologue as the local lane (shared helper),
+        // so the remote shards receive bit-identical inputs.
+        project_sharded_batch(
+            self.set.head(),
+            rows,
+            &mut self.flat,
+            &mut self.proj_row,
+            &mut self.proj_t,
+        )?;
+        // Scatter/gather over the persistent connections (one request
+        // per shard, no spawns), then the untouched exact merge.
+        self.set
+            .gather_means(&self.proj_t, n, &mut self.partials)?;
+        shard::merge_scores_into(
+            self.set.head(),
+            self.set.plan(),
+            &self.partials,
+            n,
+            &mut self.merge,
+            &mut self.scores,
+        )
+        .map_err(|e| {
+            anyhow::anyhow!("remote shard merge rejected the gather: {e}")
+        })?;
+        Ok(sharded_batch_output(self.set.head(), &self.scores,
+                                want_scores))
     }
 }
 

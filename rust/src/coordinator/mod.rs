@@ -64,6 +64,26 @@
 //! monolithic lanes at any shard count.  Multiclass lanes (`mc`, `sh`)
 //! answer argmax class indices and, per request (`"scores": true`),
 //! the full per-class score vector.
+//!
+//! **The remote shard plane** lifts those shard kernels into separate
+//! processes/hosts with the SAME exact-merge contract: the reactor is
+//! generic over a [`net::LineHandler`], so `repsketch shard-serve`
+//! runs one `crate::shard::remote::ShardService` (reactor + one kernel
+//! worker, fixed threads) behind `Server::bind_handler`, and
+//! `backend::RemoteShardedEngine` (`serve --sharded-remote`) projects
+//! a drained batch once on the lane thread, scatters ONE request per
+//! persistent pipelined shard connection (driving the sockets itself —
+//! nothing on the batch path spawns), gathers the complete group
+//! means, and runs the untouched merge — bit-for-bit identical to the
+//! local `sh` lane.  The exactly-one-response guarantee extends across
+//! the wire: a killed, stalled (timeout), or misbehaving shard fails
+//! the batch with an error NAMING that shard — the router answers
+//! every in-flight request, never silence and never a partial merge —
+//! and the next batch reconnects and re-validates the handshake, so a
+//! restarted shard is picked up transparently.  Capacity then scales
+//! by adding shard processes, not cores
+//! (`tests/remote_shard.rs` locks the fault model; the bit-identity is
+//! property-tested there too).
 
 pub mod backend;
 pub mod batcher;

@@ -9,7 +9,6 @@
 //! rest of the oversize line is *discarded* as it streams in — memory
 //! stays bounded and the connection survives for subsequent requests.
 
-use crate::coordinator::protocol::Response;
 use std::io::{Read, Write};
 use std::net::TcpStream;
 
@@ -166,9 +165,12 @@ impl Conn {
         ));
     }
 
-    /// Queue one serialized response line for writing.
-    pub fn queue_response(&mut self, resp: &Response) {
-        let line = resp.to_line();
+    /// Queue one serialized line (newline appended here) for writing.
+    /// Line-protocol-agnostic: the inference plane queues `Response`
+    /// lines, the shard plane queues shard-message lines, and the
+    /// remote-shard *client* reuses this same path for outbound
+    /// requests.
+    pub fn queue_line(&mut self, line: &str) {
         self.wbuf.reserve(line.len() + 1);
         self.wbuf.extend_from_slice(line.as_bytes());
         self.wbuf.push(b'\n');

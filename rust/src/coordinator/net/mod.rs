@@ -10,7 +10,12 @@
 //!   nonblocking writes, in-flight accounting for deferred close.
 //! - [`reactor`]: the event loop plus [`CompletionSender`], the
 //!   wake-pipe completion path that replaced the seed's
-//!   thread-per-in-flight-request forwarders.
+//!   thread-per-in-flight-request forwarders.  The reactor is
+//!   line-protocol-agnostic over a [`LineHandler`]: the inference
+//!   plane's `Router` and the shard plane's
+//!   `shard::remote::ShardService` both serve behind the same event
+//!   loop, and the remote-shard client reuses [`conn::Conn`] +
+//!   [`sys::Epoll`] from the other side of the wire.
 //!
 //! The non-Linux thread-per-connection fallback lives in
 //! `coordinator::server` (compiled out of Linux builds).
@@ -19,4 +24,4 @@ pub mod conn;
 pub mod reactor;
 pub mod sys;
 
-pub use reactor::{CompletionSender, Reactor};
+pub use reactor::{CompletionSender, LineHandler, Reactor};

@@ -4,15 +4,22 @@
 //! pipe — zero per-request or per-connection thread spawns, so the
 //! process thread count is fixed at reactor + lane workers + pool no
 //! matter how many connections are in flight.
+//!
+//! The reactor itself is line-protocol-agnostic: every framed line is
+//! handed to a [`LineHandler`] together with a [`CompletionSender`],
+//! and every completion is a pre-serialized response line.  The
+//! inference plane plugs in the `Router` (see the `LineHandler` impl in
+//! `coordinator::router`); the shard plane plugs in
+//! `shard::remote::ShardService`.  Only the oversize-line rejection is
+//! answered in place, because both planes share the `{"id": ...,
+//! "error": ...}` error framing and best-effort id recovery.
 
 use super::conn::{Conn, InEvent, MAX_LINE_BYTES};
 use super::sys::{
     Epoll, EpollEvent, WakePipe, EPOLLERR, EPOLLHUP, EPOLLIN, EPOLLOUT,
     EPOLLRDHUP,
 };
-use crate::coordinator::batcher::ResponseSink;
-use crate::coordinator::protocol::{extract_id, Request, Response};
-use crate::coordinator::router::Router;
+use crate::coordinator::protocol::{extract_id, Response};
 use std::collections::HashMap;
 use std::net::TcpListener;
 use std::os::unix::io::AsRawFd;
@@ -30,19 +37,42 @@ const FIRST_CONN_TOKEN: u64 = 2;
 /// connection at all).
 const IDLE_WAIT_MS: i32 = 50;
 
-/// One completed request's way home: tags the response with the owning
-/// connection's token and pokes the reactor awake.  Consumed by the
-/// request's `Responder` exactly once; replaces the seed's one
-/// forwarder thread per in-flight request.
+/// A line-protocol service behind the reactor.
+///
+/// Contract: for EVERY call, exactly one line must eventually reach the
+/// provided [`CompletionSender`] — synchronously (parse errors) or
+/// asynchronously from a worker thread.  Implementations guard the
+/// asynchronous path with a drop-armed responder (`batcher::Responder`
+/// for the inference plane, `shard::remote`'s line guard for the shard
+/// plane) so a panicking or torn-down worker still answers.  The
+/// reactor counts one in-flight request per handled line and releases
+/// it when the completion arrives; a violated contract leaks the
+/// connection's in-flight accounting.
+pub trait LineHandler: Send + Sync + 'static {
+    fn handle_line(&self, line: String, sender: CompletionSender);
+}
+
+/// One completed request's way home: tags the serialized response line
+/// with the owning connection's token and pokes the reactor awake.
+/// Consumed exactly once (see [`LineHandler`]); replaces the seed's one
+/// forwarder thread per in-flight request.  Serialization happens on
+/// the sending (worker) thread, keeping the reactor thread out of the
+/// JSON hot path.
 pub struct CompletionSender {
     token: u64,
-    tx: Sender<(u64, Response)>,
+    tx: Sender<(u64, String)>,
     wake: Arc<WakePipe>,
 }
 
 impl CompletionSender {
+    /// Deliver an inference-plane [`Response`].
     pub fn send(self, resp: Response) {
-        let _ = self.tx.send((self.token, resp));
+        self.send_line(resp.to_line());
+    }
+
+    /// Deliver an already-serialized response line (no newline).
+    pub fn send_line(self, line: String) {
+        let _ = self.tx.send((self.token, line));
         self.wake.wake();
     }
 }
@@ -51,11 +81,11 @@ pub struct Reactor {
     epoll: Epoll,
     listener: TcpListener,
     wake: Arc<WakePipe>,
-    comp_tx: Sender<(u64, Response)>,
-    comp_rx: Receiver<(u64, Response)>,
+    comp_tx: Sender<(u64, String)>,
+    comp_rx: Receiver<(u64, String)>,
     conns: HashMap<u64, Conn>,
     next_token: u64,
-    router: Arc<Router>,
+    handler: Arc<dyn LineHandler>,
     stop: Arc<AtomicBool>,
     accepted: Arc<AtomicU64>,
     scratch: Vec<u8>,
@@ -63,7 +93,7 @@ pub struct Reactor {
 
 impl Reactor {
     pub fn new(
-        router: Arc<Router>,
+        handler: Arc<dyn LineHandler>,
         listener: &TcpListener,
         stop: Arc<AtomicBool>,
         accepted: Arc<AtomicU64>,
@@ -83,7 +113,7 @@ impl Reactor {
             comp_rx,
             conns: HashMap::new(),
             next_token: FIRST_CONN_TOKEN,
-            router,
+            handler,
             stop,
             accepted,
             scratch: vec![0u8; 64 * 1024],
@@ -158,17 +188,17 @@ impl Reactor {
         }
     }
 
-    /// Route every completed response back to its connection.  All
+    /// Route every completed response line back to its connection.  All
     /// pending completions are queued first and each touched
     /// connection is settled once, so a pipelined burst coalesces into
     /// one flush per connection instead of one write(2) per response.
     fn drain_completions(&mut self) {
         self.wake.drain();
         let mut touched: Vec<u64> = Vec::new();
-        while let Ok((token, resp)) = self.comp_rx.try_recv() {
+        while let Ok((token, line)) = self.comp_rx.try_recv() {
             if let Some(conn) = self.conns.get_mut(&token) {
                 conn.in_flight -= 1;
-                conn.queue_response(&resp);
+                conn.queue_line(&line);
                 if !touched.contains(&token) {
                     touched.push(token);
                 }
@@ -205,53 +235,42 @@ impl Reactor {
     }
 
     /// One framed input line (or an oversize rejection) from a
-    /// connection.
+    /// connection.  Every non-blank line goes to the handler, which
+    /// owes the connection exactly one completion; only the oversize
+    /// rejection is answered in place (the line never existed as far as
+    /// the handler is concerned).
     fn handle_in_event(&mut self, token: u64, ev: InEvent) {
         match ev {
             InEvent::Line(line) => {
                 if line.trim().is_empty() {
                     return;
                 }
-                match Request::parse_line(&line) {
-                    Ok(req) => {
-                        if let Some(conn) = self.conns.get_mut(&token) {
-                            conn.in_flight += 1;
-                        } else {
-                            return;
-                        }
-                        // Unknown-lane and backpressure errors come
-                        // back through the completion channel like any
-                        // other response (the sink guarantees exactly
-                        // one), so the submit result needs no handling
-                        // here.
-                        let _ = self.router.submit_sink(
-                            req,
-                            ResponseSink::Reactor(CompletionSender {
-                                token,
-                                tx: self.comp_tx.clone(),
-                                wake: self.wake.clone(),
-                            }),
-                        );
-                    }
-                    Err(e) => {
-                        if let Some(conn) = self.conns.get_mut(&token) {
-                            conn.queue_response(&Response::err(
-                                extract_id(&line),
-                                format!("bad request: {e}"),
-                            ));
-                        }
-                    }
+                if let Some(conn) = self.conns.get_mut(&token) {
+                    conn.in_flight += 1;
+                } else {
+                    return;
                 }
+                self.handler.handle_line(
+                    line,
+                    CompletionSender {
+                        token,
+                        tx: self.comp_tx.clone(),
+                        wake: self.wake.clone(),
+                    },
+                );
             }
             InEvent::Oversize(prefix) => {
                 if let Some(conn) = self.conns.get_mut(&token) {
-                    conn.queue_response(&Response::err(
-                        extract_id(&prefix),
-                        format!(
-                            "bad request: line exceeds the \
-                             {MAX_LINE_BYTES} byte cap"
-                        ),
-                    ));
+                    conn.queue_line(
+                        &Response::err(
+                            extract_id(&prefix),
+                            format!(
+                                "bad request: line exceeds the \
+                                 {MAX_LINE_BYTES} byte cap"
+                            ),
+                        )
+                        .to_line(),
+                    );
                 }
             }
         }

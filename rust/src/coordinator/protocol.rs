@@ -71,7 +71,7 @@ impl Request {
 
     pub fn to_line(&self) -> String {
         let x = Json::Arr(
-            self.features.iter().map(|&v| Json::num(v as f64)).collect(),
+            self.features.iter().map(|&v| Json::num_f32(v)).collect(),
         );
         let mut pairs = vec![
             ("id", Json::from_u64(self.id)),
@@ -109,9 +109,11 @@ impl Response {
     pub fn to_line(&self) -> String {
         match &self.result {
             Ok(y) => {
+                // f32 payloads ship as shortest-f32 decimals (exact
+                // round-trip, ~half the bytes of the f64 form).
                 let mut pairs = vec![
                     ("id", self.id_json()),
-                    ("y", Json::num(*y as f64)),
+                    ("y", Json::num_f32(*y)),
                 ];
                 if let Some(scores) = &self.scores {
                     pairs.push((
@@ -119,7 +121,7 @@ impl Response {
                         Json::Arr(
                             scores
                                 .iter()
-                                .map(|&v| Json::num(v as f64))
+                                .map(|&v| Json::num_f32(v))
                                 .collect(),
                         ),
                     ));

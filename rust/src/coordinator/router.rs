@@ -103,10 +103,20 @@ impl Router {
                 })
                 .expect("spawn lane worker")
         };
-        self.lanes.insert(
+        let replaced = self.lanes.insert(
             (model.to_string(), kind),
             Lane { batcher, worker: Some(worker), latency },
         );
+        // Re-registering a (model, backend) key replaces the lane
+        // (last registration wins); shut the old one down properly —
+        // close its batcher so its worker drains and exits — instead
+        // of leaking a parked worker thread for the process lifetime.
+        if let Some(mut old) = replaced {
+            old.batcher.close();
+            if let Some(h) = old.worker.take() {
+                let _ = h.join();
+            }
+        }
     }
 
     fn run_batch(
@@ -283,6 +293,33 @@ impl Router {
 impl Default for Router {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+/// The inference plane behind the reactor: parse a request line, submit
+/// it with the reactor completion sink.  Exactly one response per line:
+/// parse failures answer immediately with a best-effort-recovered id,
+/// accepted requests carry a [`Responder`] whose drop guard fires if
+/// the lane dies, and unknown-lane/backpressure errors are answered by
+/// `submit_sink` itself.
+#[cfg(target_os = "linux")]
+impl super::net::LineHandler for Router {
+    fn handle_line(
+        &self,
+        line: String,
+        sender: super::net::CompletionSender,
+    ) {
+        use super::protocol::extract_id;
+        match Request::parse_line(&line) {
+            Ok(req) => {
+                let _ = self
+                    .submit_sink(req, ResponseSink::Reactor(sender));
+            }
+            Err(e) => sender.send(Response::err(
+                extract_id(&line),
+                format!("bad request: {e}"),
+            )),
+        }
     }
 }
 

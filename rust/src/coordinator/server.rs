@@ -47,6 +47,15 @@ pub enum ServeMode {
 }
 
 pub struct Server {
+    /// What the reactor serves: any line-protocol service.  The
+    /// inference plane passes the router (which implements
+    /// `LineHandler`); `shard-serve` passes a
+    /// `shard::remote::ShardService`.
+    #[cfg(target_os = "linux")]
+    handler: Arc<dyn super::net::LineHandler>,
+    /// The non-Linux fallback loop is inference-plane only, so it keeps
+    /// the concrete router.
+    #[cfg(not(target_os = "linux"))]
     router: Arc<Router>,
     listener: TcpListener,
     stop: Arc<AtomicBool>,
@@ -55,20 +64,43 @@ pub struct Server {
 }
 
 impl Server {
-    /// Bind to an address ("127.0.0.1:0" for an ephemeral port).  The
-    /// mode is decided by the target OS (see [`ServeMode`]).
+    /// Bind the inference plane to an address ("127.0.0.1:0" for an
+    /// ephemeral port).  The mode is decided by the target OS (see
+    /// [`ServeMode`]).
     pub fn bind(router: Arc<Router>, addr: &str) -> anyhow::Result<Self> {
         #[cfg(target_os = "linux")]
-        let mode = ServeMode::Reactor;
+        {
+            Self::bind_handler(router, addr)
+        }
         #[cfg(not(target_os = "linux"))]
-        let mode = ServeMode::ThreadsFallback;
+        {
+            let listener = TcpListener::bind(addr)?;
+            Ok(Self {
+                router,
+                listener,
+                stop: Arc::new(AtomicBool::new(false)),
+                connections: Arc::new(AtomicU64::new(0)),
+                mode: ServeMode::ThreadsFallback,
+            })
+        }
+    }
+
+    /// Bind an arbitrary line-protocol service behind the reactor
+    /// (Linux only — the fallback loop is router-specific).  This is
+    /// how the shard plane serves: same accept path, framing, line cap,
+    /// and completion machinery as the inference plane.
+    #[cfg(target_os = "linux")]
+    pub fn bind_handler(
+        handler: Arc<dyn super::net::LineHandler>,
+        addr: &str,
+    ) -> anyhow::Result<Self> {
         let listener = TcpListener::bind(addr)?;
         Ok(Self {
-            router,
+            handler,
             listener,
             stop: Arc::new(AtomicBool::new(false)),
             connections: Arc::new(AtomicU64::new(0)),
-            mode,
+            mode: ServeMode::Reactor,
         })
     }
 
@@ -93,7 +125,7 @@ impl Server {
         {
             use anyhow::Context as _;
             let mut reactor = super::net::Reactor::new(
-                self.router.clone(),
+                self.handler.clone(),
                 &self.listener,
                 self.stop.clone(),
                 self.connections.clone(),

@@ -7,6 +7,8 @@
 //! repsketch exp theory [--dataset NAME]    §3.2.1 error-decay check
 //! repsketch serve [--addr A] [--pjrt] [--fused NAME=FILE,...]
 //!                 [--sharded NAME=FILE:N|NAME=PREFIX,...]
+//!                 [--sharded-remote NAME=addr0,addr1,...]
+//!                 [--remote-timeout-ms N]
 //!                                          TCP JSON-line inference server
 //!                                          (epoll reactor; thread-per-
 //!                                          connection only as the
@@ -16,6 +18,9 @@
 //! repsketch fuse-sketch --inputs A.rssk,B.rssk,... --out FILE
 //! repsketch shard-sketch --input FILE.rssk|FILE.rsfm --shards N
 //!                        --out PREFIX
+//! repsketch shard-serve --rsfs FILE [--addr A]
+//!                                          serve ONE shard's kernel over
+//!                                          the wire (Linux)
 //! ```
 //!
 //! `fuse-sketch` interleaves per-class RSSK sketches (one per class, in
@@ -32,6 +37,13 @@
 //! loads the RSFS set `PREFIX.shard*.rsfs` instead — either way the
 //! `sh`-backend lane scatter/gathers every batch across the shard
 //! kernels on the worker pool.
+//!
+//! The shard plane also runs OVER THE WIRE: `shard-serve --rsfs FILE`
+//! hosts one shard's kernel behind the epoll reactor, and `serve
+//! --sharded-remote model=addr0,addr1,...` (addresses in shard-index
+//! order) registers an `sh` lane whose scatter/gather crosses TCP —
+//! handshake-validated like an on-disk set, bit-for-bit identical to
+//! the local lane, with per-batch reconnect after shard failures.
 //!
 //! Artifacts root defaults to ./artifacts (override with RS_ARTIFACTS).
 
@@ -96,6 +108,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "build-sketch" => cmd_build_sketch(rest),
         "fuse-sketch" => cmd_fuse_sketch(rest),
         "shard-sketch" => cmd_shard_sketch(rest),
+        "shard-serve" => cmd_shard_serve(rest),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -114,11 +127,13 @@ fn print_usage() {
          repsketch exp theory [--dataset adult]\n  \
          repsketch exp ablation [--dataset adult]\n  \
          repsketch serve [--addr 127.0.0.1:7878] [--pjrt] [--datasets a,b] \
-         [--fused NAME=FILE,...] [--sharded NAME=FILE:N|NAME=PREFIX,...]\n  \
+         [--fused NAME=FILE,...] [--sharded NAME=FILE:N|NAME=PREFIX,...] \
+         [--sharded-remote NAME=addr0,addr1,...] [--remote-timeout-ms N]\n  \
          repsketch eval --dataset NAME [--backend rs|nn|kernel]\n  \
          repsketch build-sketch --dataset NAME [--rows L] [--cols R] --out FILE\n  \
          repsketch fuse-sketch --inputs A.rssk,B.rssk,... --out FILE\n  \
-         repsketch shard-sketch --input FILE --shards N --out PREFIX"
+         repsketch shard-sketch --input FILE --shards N --out PREFIX\n  \
+         repsketch shard-serve --rsfs FILE [--addr 127.0.0.1:7979]"
     );
 }
 
@@ -433,6 +448,80 @@ fn cmd_shard_sketch(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Parse `--sharded-remote NAME=addr0,addr1,...[,NAME2=...]`: commas
+/// separate both entries and a set's addresses, so a segment with `=`
+/// starts a new entry and every other segment extends the previous
+/// entry's address list (shard-index order).
+#[cfg(target_os = "linux")]
+fn parse_remote_spec(spec: &str) -> Result<Vec<(String, Vec<String>)>> {
+    let mut entries: Vec<(String, Vec<String>)> = Vec::new();
+    for seg in spec.split(',') {
+        let seg = seg.trim();
+        if seg.is_empty() {
+            continue;
+        }
+        if let Some((model, first)) = seg.split_once('=') {
+            entries.push((
+                model.trim().to_string(),
+                vec![first.trim().to_string()],
+            ));
+        } else {
+            let Some(last) = entries.last_mut() else {
+                bail!(
+                    "bad --sharded-remote {spec:?} (want \
+                     NAME=addr0,addr1,...)"
+                );
+            };
+            last.1.push(seg.to_string());
+        }
+    }
+    anyhow::ensure!(
+        !entries.is_empty(),
+        "empty --sharded-remote spec"
+    );
+    Ok(entries)
+}
+
+fn cmd_shard_serve(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args);
+    let rsfs = flags.kv.get("rsfs").context("--rsfs required")?;
+    let addr = flags
+        .kv
+        .get("addr")
+        .cloned()
+        .unwrap_or_else(|| "127.0.0.1:7979".to_string());
+    #[cfg(target_os = "linux")]
+    {
+        let loaded = repsketch::shard::serde::load_shard_file(rsfs)?;
+        println!(
+            "shard {} of {}: rows [{}, {}) groups [{}, {}) C={} dim={}",
+            loaded.shard.shard_index,
+            loaded.n_shards,
+            loaded.shard.row_start,
+            loaded.shard.row_end,
+            loaded.shard.group_start,
+            loaded.shard.group_end,
+            loaded.head.n_classes,
+            loaded.head.d
+        );
+        let service = Arc::new(
+            repsketch::shard::ShardService::from_loaded(loaded),
+        );
+        let server = Server::bind_handler(service, &addr)?;
+        // The "listening" line is the readiness signal orchestration
+        // (and the fault-injection test harness) waits for — flush it.
+        println!("shard-serve listening on {}", server.local_addr());
+        use std::io::Write as _;
+        std::io::stdout().flush().ok();
+        server.serve()
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let _ = (rsfs, addr);
+        bail!("shard-serve requires Linux (the epoll reactor front-end)")
+    }
+}
+
 fn cmd_serve(args: &[String]) -> Result<()> {
     let flags = parse_flags(args);
     let _ = &flags.pos;
@@ -455,11 +544,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let with_pjrt = flags.kv.contains_key("pjrt");
     let mut router = Router::new();
     let cfg = RouterConfig::default();
-    // With `--fused`/`--sharded` and no explicit `--datasets`, a
-    // missing artifacts tree only skips the dataset lanes (a
-    // fused-only or sharded-only server is valid).
+    // With `--fused`/`--sharded`/`--sharded-remote` and no explicit
+    // `--datasets`, a missing artifacts tree only skips the dataset
+    // lanes (a fused-only or sharded-only server is valid).
     let datasets_optional = (flags.kv.contains_key("fused")
-        || flags.kv.contains_key("sharded"))
+        || flags.kv.contains_key("sharded")
+        || flags.kv.contains_key("sharded-remote"))
         && !flags.kv.contains_key("datasets");
     for name in dataset_names(&flags) {
         let bundle = match DatasetBundle::load(&root, &name)
@@ -533,6 +623,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     // `--sharded model=PREFIX` loads the on-disk RSFS shard set
     // `PREFIX.shard{0..}.rsfs` that `shard-sketch` wrote.  Both serve
     // through the scatter/gather `sh` lane.
+    let mut sharded_models: Vec<String> = Vec::new();
     if let Some(spec) = flags.kv.get("sharded") {
         for entry in spec.split(',') {
             let (model, rest) = entry
@@ -541,6 +632,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
                                           (want NAME=FILE:N or \
                                           NAME=PREFIX)"))?;
             let model = model.trim().to_string();
+            sharded_models.push(model.clone());
             let sharded = match rest.rsplit_once(':') {
                 Some((path, n)) if n.trim().parse::<usize>().is_ok() => {
                     load_sharded(
@@ -559,6 +651,57 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             router.add_lane(&model, BackendKind::Sharded, move || {
                 Ok(Box::new(backend::ShardedEngine::new(sharded)) as _)
             }, &cfg);
+        }
+    }
+    // Remote-sharded lanes: `--sharded-remote model=addr0,addr1,...` —
+    // every address hosts `repsketch shard-serve` for its shard of the
+    // SAME split (shard-index order).  The connect handshake validates
+    // the set like the RSFS loader does; a half-wrong set never comes
+    // up.  The lane keeps the `sh` wire name: clients cannot tell (and
+    // must not care) whether shards are threads or processes.
+    if let Some(spec) = flags.kv.get("sharded-remote") {
+        #[cfg(target_os = "linux")]
+        {
+            let timeout = std::time::Duration::from_millis(
+                flags
+                    .kv
+                    .get("remote-timeout-ms")
+                    .map(|s| s.parse::<u64>())
+                    .transpose()
+                    .context("--remote-timeout-ms must be an integer")?
+                    .unwrap_or(5000),
+            );
+            for (model, addrs) in parse_remote_spec(spec)? {
+                // Both flags register the `sh` lane for their model;
+                // refuse the silent last-wins collision.
+                anyhow::ensure!(
+                    !sharded_models.contains(&model),
+                    "model {model} is registered by both --sharded and \
+                     --sharded-remote — the sh lane can only have one \
+                     engine"
+                );
+                let engine = backend::RemoteShardedEngine::connect(
+                    addrs, timeout,
+                )
+                .with_context(|| {
+                    format!("--sharded-remote lane {model}")
+                })?;
+                println!(
+                    "registered {model} (remote-sharded, shards={}, \
+                     C={}, dim={})",
+                    engine.n_shards(),
+                    engine.head().n_classes,
+                    engine.head().d
+                );
+                router.add_lane(&model, BackendKind::Sharded, move || {
+                    Ok(Box::new(engine) as _)
+                }, &cfg);
+            }
+        }
+        #[cfg(not(target_os = "linux"))]
+        {
+            let _ = spec;
+            bail!("--sharded-remote requires Linux (epoll shard client)");
         }
     }
     let router = Arc::new(router);

@@ -12,6 +12,17 @@
 //! For the plain-mean / MoM-fallback case the plan has one effective
 //! group whose "mean" IS the full mean, and a 1-element median is the
 //! identity, so the same code path is exact there too.
+//!
+//! The merge VALIDATES its inputs before touching them: every shard's
+//! matrix must agree on `(B, C)` (equivalently, have exactly `B ·
+//! local_groups_s · C` entries) and the set must cover the plan's
+//! shard list, so a malformed gather — short a shard, or a shard that
+//! answered for the wrong batch size, class count, or group range —
+//! returns a descriptive error instead of indexing out of bounds or
+//! silently merging garbage.  In-process gathers can't violate this
+//! (the kernels size their own outputs), but the remote shard plane
+//! feeds this function bytes that crossed a wire, and the merge is the
+//! last line of defense behind the protocol-level checks.
 
 use super::{ShardHead, ShardPlan};
 use crate::sketch::median_in_place;
@@ -31,6 +42,8 @@ pub struct MergeScratch {
 ///
 /// Bit-for-bit identical per (query, class) to the monolithic
 /// `RaceSketch::query_*` (C = 1) / `FusedMultiSketch::scores_*` paths.
+/// Fails (without writing to `out`) when the gathered matrices do not
+/// cover the plan or disagree on `(B, C)` — see the module docs.
 pub fn merge_scores_into(
     head: &ShardHead,
     plan: &ShardPlan,
@@ -38,9 +51,31 @@ pub fn merge_scores_into(
     batch: usize,
     s: &mut MergeScratch,
     out: &mut Vec<f32>,
-) {
-    debug_assert_eq!(partials.len(), plan.n_shards());
+) -> Result<(), String> {
     let c_n = head.n_classes;
+    if partials.len() != plan.n_shards() {
+        return Err(format!(
+            "merge needs one mean matrix per shard: got {}, plan has {} \
+             shards",
+            partials.len(),
+            plan.n_shards()
+        ));
+    }
+    for (si, (p, span)) in
+        partials.iter().zip(plan.spans()).enumerate()
+    {
+        let want = batch * span.local_groups() * c_n;
+        if p.len() != want {
+            return Err(format!(
+                "shard {si} mean matrix has {} entries, want {want} \
+                 (B={batch} × groups [{}, {}) × C={c_n}) — the shard \
+                 answered for a different batch shape or group range",
+                p.len(),
+                span.group_start,
+                span.group_end,
+            ));
+        }
+    }
     let g = plan.eff_groups;
     s.gm.resize(g, 0.0);
     out.clear();
@@ -64,5 +99,125 @@ pub fn merge_scores_into(
                 est
             };
         }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn head(c_n: usize) -> ShardHead {
+        ShardHead {
+            n_classes: c_n,
+            multiclass: c_n > 1,
+            rows: 12,
+            cols: 8,
+            k_per_row: 1,
+            groups: 4,
+            use_mom: true,
+            debias: false,
+            alpha_sums: vec![1.0; c_n],
+            a: vec![0.0; 4],
+            d: 2,
+            p: 2,
+            lsh_seed: 7,
+            width: 2.0,
+        }
+    }
+
+    /// Well-formed partials for `plan` at batch `b`, class count `c_n`.
+    fn good_partials(plan: &ShardPlan, b: usize, c_n: usize)
+        -> Vec<Vec<f32>> {
+        plan.spans()
+            .iter()
+            .map(|sp| vec![0.5f32; b * sp.local_groups() * c_n])
+            .collect()
+    }
+
+    #[test]
+    fn well_formed_partials_merge() {
+        let h = head(2);
+        let plan = ShardPlan::new(h.rows, h.groups, h.use_mom, 2);
+        let partials = good_partials(&plan, 3, 2);
+        let mut s = MergeScratch::default();
+        let mut out = Vec::new();
+        merge_scores_into(&h, &plan, &partials, 3, &mut s, &mut out)
+            .expect("well-formed gather merges");
+        assert_eq!(out.len(), 3 * 2);
+        assert!(out.iter().all(|v| *v == 0.5));
+    }
+
+    #[test]
+    fn missing_or_extra_shard_is_rejected() {
+        let h = head(1);
+        let plan = ShardPlan::new(h.rows, h.groups, h.use_mom, 2);
+        let mut s = MergeScratch::default();
+        let mut out = Vec::new();
+        let mut partials = good_partials(&plan, 2, 1);
+        partials.pop();
+        let err = merge_scores_into(&h, &plan, &partials, 2, &mut s,
+                                    &mut out)
+            .unwrap_err();
+        assert!(err.contains("one mean matrix per shard"), "{err}");
+        let mut extra = good_partials(&plan, 2, 1);
+        extra.push(vec![0.0; 4]);
+        let err = merge_scores_into(&h, &plan, &extra, 2, &mut s,
+                                    &mut out)
+            .unwrap_err();
+        assert!(err.contains("one mean matrix per shard"), "{err}");
+    }
+
+    #[test]
+    fn batch_size_disagreement_is_rejected() {
+        // One shard answered for B=1 while the merge runs at B=2: its
+        // matrix is short, and the OLD code would have read another
+        // shard's memory layout (or panicked) — now a descriptive error.
+        let h = head(1);
+        let plan = ShardPlan::new(h.rows, h.groups, h.use_mom, 2);
+        let mut partials = good_partials(&plan, 2, 1);
+        let lg0 = plan.span(0).local_groups();
+        partials[0] = vec![0.5; lg0]; // B=1 worth of means
+        let mut s = MergeScratch::default();
+        let mut out = Vec::new();
+        let err = merge_scores_into(&h, &plan, &partials, 2, &mut s,
+                                    &mut out)
+            .unwrap_err();
+        assert!(err.contains("shard 0"), "{err}");
+        assert!(err.contains("different batch shape"), "{err}");
+    }
+
+    #[test]
+    fn class_count_disagreement_is_rejected() {
+        // A shard speaking C=3 into a C=2 merge.
+        let h = head(2);
+        let plan = ShardPlan::new(h.rows, h.groups, h.use_mom, 2);
+        let mut partials = good_partials(&plan, 2, 2);
+        let lg1 = plan.span(1).local_groups();
+        partials[1] = vec![0.5; 2 * lg1 * 3];
+        let mut s = MergeScratch::default();
+        let mut out = Vec::new();
+        let err = merge_scores_into(&h, &plan, &partials, 2, &mut s,
+                                    &mut out)
+            .unwrap_err();
+        assert!(err.contains("shard 1"), "{err}");
+    }
+
+    #[test]
+    fn wrong_group_coverage_is_rejected() {
+        // A shard that answered for one group too few (as if its span
+        // were cut short) cannot cover the plan's global group set.
+        let h = head(1);
+        let plan = ShardPlan::new(h.rows, h.groups, h.use_mom, 2);
+        let b = 2usize;
+        let mut partials = good_partials(&plan, b, 1);
+        let lg0 = plan.span(0).local_groups();
+        assert!(lg0 >= 2, "fixture needs a multi-group shard");
+        partials[0] = vec![0.5; b * (lg0 - 1)];
+        let mut s = MergeScratch::default();
+        let mut out = Vec::new();
+        assert!(merge_scores_into(&h, &plan, &partials, b, &mut s,
+                                  &mut out)
+            .is_err());
     }
 }

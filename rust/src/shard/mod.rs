@@ -24,25 +24,49 @@
 //!   `median_in_place` → debias);
 //! * [`serde`] — RSFS shard files: split a monolithic RSSK/RSFM into a
 //!   self-describing shard set and reassemble it with full consistency
-//!   validation.
+//!   validation (plus [`LoadedShard`], one standalone RSFS file — the
+//!   unit a remote shard server hosts);
+//! * [`remote`] (Linux) — the shard plane over the wire:
+//!   [`ShardService`] serves ONE shard's kernel behind the epoll
+//!   reactor (`repsketch shard-serve`), [`RemoteShardSet`] is the
+//!   coordinator-side client (persistent pipelined nonblocking
+//!   connections, handshake-validated set, scatter/gather with
+//!   timeouts and reconnect) behind
+//!   `coordinator::backend::RemoteShardedEngine`
+//!   (`serve --sharded-remote`).
 //!
 //! [`ShardedSketch`] is the in-process container (head + plan +
 //! `Arc`'d shards) with a serial reference query path; the serving
 //! lane is `coordinator::backend::ShardedEngine` (`BackendKind::
 //! Sharded`, wire name `"sh"`), which fans a drained batch's shard
 //! kernels across the persistent `WorkerPool` and merges on the lane
-//! thread.  The bit-identity (including ragged L, shards = 1, and the
-//! class-interleaved fused sketch) is property-tested below.
+//! thread.  The remote lane keeps the SAME exact-merge contract: each
+//! shard process computes complete group means for its whole groups,
+//! only those means cross the wire (f32 values round-trip the JSON
+//! framing exactly), and the untouched [`merge`] reconstructs the
+//! estimate — so local `sh`, remote, and the unsharded scalar path are
+//! bit-for-bit identical.  The bit-identity (including ragged L,
+//! shards = 1, and the class-interleaved fused sketch) is
+//! property-tested below and, for the remote lane, in
+//! `tests/remote_shard.rs` alongside the fault-injection harness
+//! (kill / stall / restart — every accepted request gets exactly one
+//! response, errors name the dead shard, the lane recovers).
 
 pub mod merge;
 pub mod plan;
+#[cfg(target_os = "linux")]
+pub mod remote;
 pub mod serde;
 #[allow(clippy::module_inception)]
 pub mod shard;
 
 pub use merge::{merge_scores_into, MergeScratch};
 pub use plan::{ShardPlan, ShardSpan};
+pub use serde::LoadedShard;
 pub use shard::{ShardScratch, SketchShard};
+#[cfg(target_os = "linux")]
+pub use remote::{serve_local, LocalShardServers, RemoteShardSet,
+                 ShardService};
 
 use crate::sketch::{FusedMultiSketch, RaceSketch};
 use std::sync::Arc;
@@ -213,7 +237,8 @@ impl ShardedSketch {
         let mut ms = MergeScratch::default();
         let mut out = Vec::new();
         merge_scores_into(&self.head, &self.plan, &partials, batch,
-                          &mut ms, &mut out);
+                          &mut ms, &mut out)
+            .expect("locally computed shard partials are well-formed");
         out
     }
 

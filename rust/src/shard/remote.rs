@@ -1,0 +1,1273 @@
+//! The shard plane over the wire (Linux): serve one shard's kernel
+//! from its own process, and gather a shard set from the coordinator —
+//! with the exact-merge contract intact.
+//!
+//! Split of responsibilities:
+//!
+//! * **Messages** — JSON lines, same framing discipline as the
+//!   inference plane (one message per line, hard line cap, `{"id": ...,
+//!   "error": ...}` error shape shared with `protocol::Response`):
+//!   - `{"id": N, "shard": "hello"}` →
+//!     `{"id": N, "hello": {head + span + index}}` — the handshake.  A
+//!     shard set over the wire is validated exactly like an RSFS file
+//!     set on disk: identical heads (seed, shape, estimator, Σα,
+//!     projection — bitwise), complete index coverage, spans matching
+//!     the deterministically recomputed [`ShardPlan`].
+//!   - `{"id": N, "shard": "means", "b": B, "proj": [p·B floats]}` →
+//!     `{"id": N, "g": G_s, "means": [B·G_s·C floats], "us": ...}` —
+//!     one projected batch in, complete group means out, in the same
+//!     flat row-major matrix framing the in-process kernels use.
+//!   f32 values round-trip the JSON framing bitwise (shortest-f64
+//!   decimal both ways), which is what keeps the remote lane
+//!   bit-identical to the local one.  Non-finite floats have no JSON
+//!   representation (the emitter degrades them to `null`) and are
+//!   REJECTED by every parser here — a non-finite mean matrix is a
+//!   protocol error, never a silently-merged garbage value.
+//!
+//! * [`ShardService`] — the server: one [`SketchShard`] behind the
+//!   epoll reactor (`coordinator::net`), as a [`LineHandler`].  One
+//!   long-lived worker thread runs the kernels (the reactor thread
+//!   never computes); thread count is fixed at reactor + worker.
+//!   Exactly one response per framed line: the worker holds a
+//!   drop-armed line guard (the shard-plane analog of
+//!   `batcher::Responder`), so a panicking kernel or a torn-down
+//!   service still answers.
+//!
+//! * [`RemoteShardSet`] — the client: one persistent, pipelined,
+//!   nonblocking connection per shard, multiplexed with the same
+//!   [`Conn`] framing + [`Epoll`] machinery the reactor uses (from the
+//!   other side of the wire), driven entirely by the calling lane
+//!   thread — NOTHING here spawns, per batch or ever.  Scatter is one
+//!   serialized request line written to every connection; gather
+//!   blocks (with a deadline) until every shard answered.  Failures
+//!   are precise and recoverable: a dead, stalling, or misbehaving
+//!   shard fails the batch with an error naming that shard, its
+//!   connection is torn down, and the next batch reconnects and
+//!   re-validates the handshake — so a restarted shard process is
+//!   picked up transparently.  Late answers from a timed-out batch are
+//!   discarded by request id, never mistaken for the current batch.
+
+use super::serde::heads_identical;
+use super::{LoadedShard, ShardHead, ShardPlan, ShardScratch, ShardSpan,
+            ShardedSketch, SketchShard};
+use crate::coordinator::net::conn::{Conn, InEvent, MAX_LINE_BYTES};
+use crate::coordinator::net::sys::{
+    Epoll, EpollEvent, EPOLLERR, EPOLLHUP, EPOLLIN, EPOLLOUT, EPOLLRDHUP,
+};
+use crate::coordinator::net::{CompletionSender, LineHandler};
+use crate::coordinator::protocol::{extract_id, Response};
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, Context as _};
+use std::collections::VecDeque;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::os::unix::io::AsRawFd;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Wire messages
+// ---------------------------------------------------------------------------
+
+/// One parsed shard-plane request.
+pub struct ShardRequest {
+    pub id: u64,
+    pub call: ShardCall,
+}
+
+pub enum ShardCall {
+    /// Handshake: describe the hosted shard.
+    Hello,
+    /// Compute complete group means for one projected batch.
+    Means { batch: usize, proj_t: Vec<f32> },
+}
+
+/// The handshake payload: everything the coordinator needs to project,
+/// validate, and merge — the wire twin of an RSFS file header.
+#[derive(Clone)]
+pub struct ShardHello {
+    pub head: ShardHead,
+    pub shard_index: usize,
+    pub n_shards: usize,
+    pub span: ShardSpan,
+}
+
+fn f32_arr(v: &[f32]) -> Json {
+    // Shortest-f32 decimals (see `Json::num_f32`): exact bit
+    // round-trip at roughly half the wire bytes of the f64-shortest
+    // form — which directly raises the largest batch the line cap can
+    // carry.
+    Json::Arr(v.iter().map(|&x| Json::num_f32(x)).collect())
+}
+
+/// Parse a JSON array of f32s, rejecting anything non-numeric or
+/// non-finite (the emitter serializes NaN/±inf as `null`, and decimal
+/// overflow like `1e999` parses to ±inf — both must fail loudly, not
+/// enter a merge).
+fn parse_f32_arr(j: &Json, what: &str) -> Result<Vec<f32>, String> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| format!("{what} is not an array"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, e) in arr.iter().enumerate() {
+        match e.as_f64() {
+            Some(v) if (v as f32).is_finite() => out.push(v as f32),
+            Some(_) => {
+                return Err(format!("{what}[{i}] is not a finite f32"))
+            }
+            None => {
+                return Err(format!(
+                    "{what}[{i}] is not a number (non-finite floats \
+                     serialize as null and are rejected)"
+                ))
+            }
+        }
+    }
+    Ok(out)
+}
+
+pub fn hello_request_line(id: u64) -> String {
+    json::obj(vec![
+        ("id", Json::from_u64(id)),
+        ("shard", Json::Str("hello".into())),
+    ])
+    .to_string()
+}
+
+pub fn means_request_line(id: u64, batch: usize, proj_t: &[f32])
+    -> String {
+    json::obj(vec![
+        ("id", Json::from_u64(id)),
+        ("shard", Json::Str("means".into())),
+        ("b", Json::from_u64(batch as u64)),
+        ("proj", f32_arr(proj_t)),
+    ])
+    .to_string()
+}
+
+pub fn parse_shard_request(line: &str) -> Result<ShardRequest, String> {
+    let j = json::parse(line)?;
+    let id = j
+        .get("id")
+        .and_then(|v| v.as_u64())
+        .ok_or("missing/invalid id")?;
+    let op = j
+        .get("shard")
+        .and_then(|v| v.as_str())
+        .ok_or("missing shard op (want \"hello\" or \"means\")")?;
+    match op {
+        "hello" => Ok(ShardRequest { id, call: ShardCall::Hello }),
+        "means" => {
+            let batch = j
+                .get("b")
+                .and_then(|v| v.as_u64())
+                .ok_or("missing/invalid b")? as usize;
+            if batch == 0 {
+                return Err("b must be at least 1".into());
+            }
+            let proj_t = parse_f32_arr(
+                j.get("proj").ok_or("missing proj")?,
+                "proj",
+            )?;
+            Ok(ShardRequest {
+                id,
+                call: ShardCall::Means { batch, proj_t },
+            })
+        }
+        other => Err(format!("unknown shard op {other:?}")),
+    }
+}
+
+pub fn hello_response_line(id: u64, h: &ShardHello) -> String {
+    let head = &h.head;
+    let hello = json::obj(vec![
+        ("index", Json::from_u64(h.shard_index as u64)),
+        ("shards", Json::from_u64(h.n_shards as u64)),
+        ("classes", Json::from_u64(head.n_classes as u64)),
+        ("mc", Json::Bool(head.multiclass)),
+        ("rows", Json::from_u64(head.rows as u64)),
+        ("cols", Json::from_u64(head.cols as u64)),
+        ("k", Json::from_u64(head.k_per_row as u64)),
+        ("groups", Json::from_u64(head.groups as u64)),
+        ("mom", Json::Bool(head.use_mom)),
+        ("debias", Json::Bool(head.debias)),
+        ("d", Json::from_u64(head.d as u64)),
+        ("p", Json::from_u64(head.p as u64)),
+        ("width", Json::num(head.width as f64)),
+        // u64 seeds don't survive f64; ship as a decimal string.
+        ("seed", Json::Str(head.lsh_seed.to_string())),
+        ("row_start", Json::from_u64(h.span.row_start as u64)),
+        ("row_end", Json::from_u64(h.span.row_end as u64)),
+        ("group_start", Json::from_u64(h.span.group_start as u64)),
+        ("group_end", Json::from_u64(h.span.group_end as u64)),
+        ("alpha", f32_arr(&head.alpha_sums)),
+        ("a", f32_arr(&head.a)),
+    ]);
+    json::obj(vec![("id", Json::from_u64(id)), ("hello", hello)])
+        .to_string()
+}
+
+pub fn parse_hello(line: &str, want_id: u64)
+    -> Result<ShardHello, String> {
+    let j = json::parse(line)?;
+    if let Some(err) = j.get("error").and_then(|v| v.as_str()) {
+        return Err(format!("shard answered an error: {err}"));
+    }
+    if j.get("id").and_then(|v| v.as_u64()) != Some(want_id) {
+        return Err("hello response id does not match the request".into());
+    }
+    let h = j.get("hello").ok_or("missing hello payload")?;
+    let get_u = |k: &str| -> Result<usize, String> {
+        h.get(k)
+            .and_then(|v| v.as_u64())
+            .map(|v| v as usize)
+            .ok_or_else(|| format!("hello missing/invalid {k}"))
+    };
+    let get_b = |k: &str| -> Result<bool, String> {
+        h.get(k)
+            .and_then(|v| v.as_bool())
+            .ok_or_else(|| format!("hello missing/invalid {k}"))
+    };
+    let n_classes = get_u("classes")?;
+    let rows = get_u("rows")?;
+    let cols = get_u("cols")?;
+    let k_per_row = get_u("k")? as u32;
+    let groups = get_u("groups")?;
+    let d = get_u("d")?;
+    let p = get_u("p")?;
+    if n_classes == 0 || rows == 0 || cols == 0 || k_per_row == 0
+        || groups == 0 || d == 0 || p == 0
+    {
+        return Err("hello has a zero-sized field".into());
+    }
+    // Hold the wire path to the SAME bounds as the RSFS file path —
+    // one corrupt hello must not drive plan/merge arithmetic or
+    // allocations off a cliff before validation even starts.
+    crate::sketch::serde::check_hash_config(rows, k_per_row, d, p)
+        .map_err(|e| format!("hello: {e}"))?;
+    const MAX_DIM: usize = 1 << 30;
+    if cols > MAX_DIM || groups > MAX_DIM || n_classes > MAX_DIM {
+        return Err("hello dimension exceeds sanity bounds".into());
+    }
+    let width_f64 = h
+        .get("width")
+        .and_then(|v| v.as_f64())
+        .ok_or("hello missing/invalid width")?;
+    let width = width_f64 as f32;
+    if !width.is_finite() {
+        return Err("hello width is not a finite f32".into());
+    }
+    let lsh_seed: u64 = h
+        .get("seed")
+        .and_then(|v| v.as_str())
+        .ok_or("hello missing seed")?
+        .parse()
+        .map_err(|_| "hello seed is not a u64".to_string())?;
+    let alpha_sums = parse_f32_arr(
+        h.get("alpha").ok_or("hello missing alpha")?,
+        "alpha",
+    )?;
+    if alpha_sums.len() != n_classes {
+        return Err(format!(
+            "hello alpha has {} entries, want C = {n_classes}",
+            alpha_sums.len()
+        ));
+    }
+    let a = parse_f32_arr(h.get("a").ok_or("hello missing a")?, "a")?;
+    if a.len() as u128 != d as u128 * p as u128 {
+        return Err(format!(
+            "hello projection has {} entries, want d × p = {d} × {p}",
+            a.len()
+        ));
+    }
+    let span = ShardSpan {
+        group_start: get_u("group_start")?,
+        group_end: get_u("group_end")?,
+        row_start: get_u("row_start")?,
+        row_end: get_u("row_end")?,
+    };
+    let shard_index = get_u("index")?;
+    let n_shards = get_u("shards")?;
+    if n_shards == 0 || shard_index >= n_shards {
+        return Err(format!(
+            "hello shard index {shard_index} out of {n_shards}"
+        ));
+    }
+    // `n_shards` sizes a plan allocation before the set is validated
+    // against the address list; bound it here so a hostile hello
+    // cannot balloon `ShardPlan::new`.
+    const MAX_SHARDS: usize = 4096;
+    if n_shards > MAX_SHARDS {
+        return Err(format!(
+            "hello declares {n_shards} shards (max {MAX_SHARDS})"
+        ));
+    }
+    Ok(ShardHello {
+        head: ShardHead {
+            n_classes,
+            multiclass: get_b("mc")?,
+            rows,
+            cols,
+            k_per_row,
+            groups,
+            use_mom: get_b("mom")?,
+            debias: get_b("debias")?,
+            alpha_sums,
+            a,
+            d,
+            p,
+            lsh_seed,
+            width,
+        },
+        shard_index,
+        n_shards,
+        span,
+    })
+}
+
+pub fn means_response_line(
+    id: u64,
+    local_groups: usize,
+    means: &[f32],
+    us: f64,
+) -> String {
+    json::obj(vec![
+        ("id", Json::from_u64(id)),
+        ("g", Json::from_u64(local_groups as u64)),
+        ("means", f32_arr(means)),
+        ("us", Json::num(us)),
+    ])
+    .to_string()
+}
+
+// ---------------------------------------------------------------------------
+// Server side: ShardService
+// ---------------------------------------------------------------------------
+
+/// Exactly-once response guard for the shard plane — the shard-side
+/// analog of `batcher::Responder`.  If it is dropped without sending
+/// (worker panic, service teardown, a full job channel) it answers
+/// `"shard worker dropped"`, so no framed line is ever silently lost.
+struct LineGuard {
+    id: Option<u64>,
+    sender: Option<CompletionSender>,
+}
+
+impl LineGuard {
+    fn new(id: Option<u64>, sender: CompletionSender) -> LineGuard {
+        LineGuard { id, sender: Some(sender) }
+    }
+
+    fn send_line(mut self, line: String) {
+        if let Some(s) = self.sender.take() {
+            s.send_line(line);
+        }
+    }
+
+    fn send_err(self, msg: impl Into<String>) {
+        let id = self.id;
+        self.send_line(Response::err(id, msg).to_line());
+    }
+}
+
+impl Drop for LineGuard {
+    fn drop(&mut self) {
+        if let Some(s) = self.sender.take() {
+            s.send_line(
+                Response::err(self.id, "shard worker dropped").to_line(),
+            );
+        }
+    }
+}
+
+struct ShardJob {
+    line: String,
+    guard: LineGuard,
+}
+
+/// One shard's kernel served behind the epoll reactor: plug into
+/// `Server::bind_handler`.  Requests are parsed AND executed on the
+/// service's single long-lived worker thread, so a fat `proj` payload
+/// never stalls the reactor's event loop.
+pub struct ShardService {
+    jobs: Mutex<Option<Sender<ShardJob>>>,
+    worker: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl ShardService {
+    /// Serve `shard` (index from the shard itself) of an `n_shards`-way
+    /// plan described by `head`.
+    pub fn new(
+        head: ShardHead,
+        shard: Arc<SketchShard>,
+        n_shards: usize,
+    ) -> ShardService {
+        let hello = ShardHello {
+            shard_index: shard.shard_index,
+            n_shards,
+            span: ShardSpan {
+                group_start: shard.group_start,
+                group_end: shard.group_end,
+                row_start: shard.row_start,
+                row_end: shard.row_end,
+            },
+            head,
+        };
+        let (tx, rx) = channel::<ShardJob>();
+        let worker = std::thread::Builder::new()
+            .name(format!("shard-serve-{}", shard.shard_index))
+            .spawn(move || {
+                let mut scratch = ShardScratch::default();
+                let mut out = Vec::new();
+                while let Ok(job) = rx.recv() {
+                    // The worker is immortal: a panicking kernel is
+                    // caught (the in-flight job's guard answers during
+                    // the unwind) and the loop keeps serving.
+                    let _ = std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(|| {
+                            run_job(&hello, &shard, &mut scratch,
+                                    &mut out, job);
+                        }),
+                    );
+                }
+            })
+            .expect("spawn shard-serve worker");
+        ShardService {
+            jobs: Mutex::new(Some(tx)),
+            worker: Mutex::new(Some(worker)),
+        }
+    }
+
+    /// Serve a standalone RSFS file (the `repsketch shard-serve` path).
+    pub fn from_loaded(loaded: LoadedShard) -> ShardService {
+        let n = loaded.n_shards;
+        Self::new(loaded.head, Arc::new(loaded.shard), n)
+    }
+}
+
+fn run_job(
+    hello: &ShardHello,
+    shard: &SketchShard,
+    scratch: &mut ShardScratch,
+    out: &mut Vec<f32>,
+    job: ShardJob,
+) {
+    let ShardJob { line, mut guard } = job;
+    let req = match parse_shard_request(&line) {
+        Ok(r) => r,
+        Err(e) => {
+            // Best-effort id recovery happens HERE, on the worker —
+            // never on the reactor thread (see `handle_line`).
+            guard.id = extract_id(&line);
+            return guard.send_err(format!("bad shard request: {e}"));
+        }
+    };
+    // Arm the guard with the real id so even a panicking kernel
+    // answers with a correlatable error.
+    guard.id = Some(req.id);
+    match req.call {
+        ShardCall::Hello => {
+            let line = hello_response_line(req.id, hello);
+            if line.len() > MAX_LINE_BYTES {
+                // The hello embeds the d × p projection; a sketch too
+                // wide for the JSON shard plane must fail with numbers
+                // the operator can act on, not a generic oversize kill
+                // on the client side.
+                return guard.send_err(format!(
+                    "hello ({} bytes; projection d × p = {} × {} \
+                     floats) exceeds the {MAX_LINE_BYTES}-byte line \
+                     cap — this sketch is too wide for the JSON shard \
+                     plane",
+                    line.len(),
+                    hello.head.d,
+                    hello.head.p
+                ));
+            }
+            guard.send_line(line);
+        }
+        ShardCall::Means { batch, proj_t } => {
+            let p = hello.head.p;
+            if proj_t.len() as u128 != p as u128 * batch as u128 {
+                return guard.send_err(format!(
+                    "proj has {} values, want p × B = {p} × {batch}",
+                    proj_t.len()
+                ));
+            }
+            // Bound per-request scratch: a huge b with a tiny p could
+            // otherwise balloon the hash accumulators, and a means
+            // matrix that cannot possibly fit one response line (≥ 2
+            // bytes per serialized value, a hard lower bound) is
+            // refused before any kernel work.
+            const MAX_BATCH: usize = 8192;
+            if batch > MAX_BATCH {
+                return guard.send_err(format!(
+                    "b = {batch} exceeds the {MAX_BATCH} per-request cap"
+                ));
+            }
+            let cells = batch as u128
+                * shard.local_groups() as u128
+                * hello.head.n_classes as u128;
+            if cells > (MAX_LINE_BYTES / 2) as u128 {
+                return guard.send_err(format!(
+                    "means matrix ({cells} values) cannot fit the \
+                     {MAX_LINE_BYTES}-byte response line cap"
+                ));
+            }
+            let t0 = Instant::now();
+            shard.partial_means_batch(&proj_t, batch, scratch, out);
+            let us = t0.elapsed().as_nanos() as f64 / 1e3;
+            let line = means_response_line(
+                req.id,
+                shard.local_groups(),
+                out,
+                us,
+            );
+            // The EXACT check: floats serialize at ~10–25 bytes, so a
+            // shape can pass the cell bound above yet overflow the
+            // client's line cap — answer a descriptive error instead of
+            // an oversize frame the client would kill the conn over.
+            if line.len() > MAX_LINE_BYTES {
+                return guard.send_err(format!(
+                    "means response ({} bytes for {cells} values) \
+                     exceeds the {MAX_LINE_BYTES}-byte line cap — \
+                     lower the coordinator's batch size",
+                    line.len()
+                ));
+            }
+            guard.send_line(line);
+        }
+    }
+}
+
+impl LineHandler for ShardService {
+    fn handle_line(&self, line: String, sender: CompletionSender) {
+        // NOTHING is parsed here — not even best-effort id recovery,
+        // which would JSON-parse a potentially line-cap-sized proj
+        // payload on the reactor thread and head-of-line-block every
+        // other connection.  The worker recovers the id; the only
+        // response that can fire without it (service teardown racing
+        // an accepted line) carries `"id": null`.
+        let guard = LineGuard::new(None, sender);
+        if let Some(tx) = self.jobs.lock().unwrap().as_ref() {
+            // A failed send returns the job inside the error; dropping
+            // it fires the guard.  Either way: exactly one response.
+            let _ = tx.send(ShardJob { line, guard });
+        }
+        // jobs already closed (service tearing down): the guard drops
+        // here and answers.
+    }
+}
+
+impl Drop for ShardService {
+    fn drop(&mut self) {
+        *self.jobs.lock().unwrap() = None; // close → worker loop ends
+        if let Some(h) = self.worker.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// In-process shard servers on loopback: one reactor + kernel worker
+/// per shard of a [`ShardedSketch`], addresses in shard-index order,
+/// everything stopped and joined on drop.  This is harness
+/// scaffolding — production runs `repsketch shard-serve`, one process
+/// per shard — shipped in-tree so the loopback test suites and
+/// `benches/remote_shard.rs` share ONE copy of the lifecycle ordering
+/// (stop flags first, then joins) instead of drifting copies.
+pub struct LocalShardServers {
+    pub addrs: Vec<String>,
+    stops: Vec<Arc<std::sync::atomic::AtomicBool>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Serve every shard of `sharded` behind its own epoll reactor on an
+/// ephemeral loopback port.
+pub fn serve_local(sharded: &ShardedSketch)
+    -> anyhow::Result<LocalShardServers> {
+    let mut addrs = Vec::new();
+    let mut stops = Vec::new();
+    let mut handles = Vec::new();
+    for sh in &sharded.shards {
+        let service = Arc::new(ShardService::new(
+            sharded.head.clone(),
+            sh.clone(),
+            sharded.n_shards(),
+        ));
+        let server = crate::coordinator::Server::bind_handler(
+            service,
+            "127.0.0.1:0",
+        )?;
+        addrs.push(server.local_addr().to_string());
+        stops.push(server.stop_handle());
+        handles.push(
+            std::thread::Builder::new()
+                .name("shard-local-serve".into())
+                .spawn(move || {
+                    let _ = server.serve();
+                })
+                .expect("spawn local shard server"),
+        );
+    }
+    Ok(LocalShardServers { addrs, stops, handles })
+}
+
+impl Drop for LocalShardServers {
+    fn drop(&mut self) {
+        for s in &self.stops {
+            s.store(true, std::sync::atomic::Ordering::Release);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client side: RemoteShardSet
+// ---------------------------------------------------------------------------
+
+/// Epoll budget per pump so gather deadlines are observed promptly.
+const PUMP_SLICE_MS: i32 = 50;
+
+fn wait_ms_until(deadline: Instant) -> i32 {
+    let now = Instant::now();
+    if now >= deadline {
+        return 0;
+    }
+    let ms = deadline.duration_since(now).as_millis() as i64;
+    ms.clamp(1, PUMP_SLICE_MS as i64) as i32
+}
+
+/// The connection plumbing under [`RemoteShardSet`]: nonblocking
+/// sockets with the reactor's own [`Conn`] line framing, multiplexed
+/// through one [`Epoll`], all driven by the calling thread.
+struct ClientIo {
+    addrs: Vec<String>,
+    conns: Vec<Option<Conn>>,
+    /// Framed lines per shard, drained by the caller.  NOT cleared when
+    /// a connection dies (a final answer that raced an EOF is still
+    /// consumable) — cleared on reconnect, where stale lines would
+    /// belong to a previous incarnation.
+    inbox: Vec<VecDeque<String>>,
+    /// Why shard `s`'s connection was torn down (until reconnect).
+    dead: Vec<Option<String>>,
+    epoll: Epoll,
+    timeout: Duration,
+    scratch: Vec<u8>,
+    /// Request id sequence, shared across the set so every in-flight
+    /// exchange is uniquely tagged and late answers are identifiable.
+    seq: u64,
+}
+
+impl ClientIo {
+    fn drop_conn(&mut self, s: usize, why: &str) {
+        if let Some(conn) = self.conns[s].take() {
+            let _ = self.epoll.del(conn.stream.as_raw_fd());
+        }
+        if self.dead[s].is_none() {
+            self.dead[s] = Some(why.to_string());
+        }
+    }
+
+    /// Queue one line on shard `s` and push what the socket will take.
+    fn queue_to(&mut self, s: usize, line: &str) {
+        if let Some(conn) = self.conns[s].as_mut() {
+            conn.queue_line(line);
+        }
+        self.settle(s);
+    }
+
+    /// Flush, refresh epoll interest, tear down on failure — the
+    /// client-side twin of the reactor's settle.
+    fn settle(&mut self, s: usize) {
+        let mut fail: Option<&'static str> = None;
+        if let Some(conn) = self.conns[s].as_mut() {
+            match conn.flush() {
+                Err(_) => fail = Some("connection broke while writing"),
+                Ok(_) => {
+                    if conn.over_write_cap() {
+                        fail = Some("request backlog over the write cap");
+                    } else {
+                        let mut want = EPOLLIN | EPOLLRDHUP;
+                        if conn.write_backlog() > 0 {
+                            want |= EPOLLOUT;
+                        }
+                        if want != conn.interest {
+                            let fd = conn.stream.as_raw_fd();
+                            if self.epoll.modify(fd, want, s as u64)
+                                .is_ok()
+                            {
+                                conn.interest = want;
+                            } else {
+                                fail =
+                                    Some("epoll re-registration failed");
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if let Some(why) = fail {
+            self.drop_conn(s, why);
+        }
+    }
+
+    /// One epoll pass; frames incoming lines into the inboxes.  Dead
+    /// connections are recorded in `dead`, not reported as errors —
+    /// the caller decides whether a death matters for what it awaits.
+    fn pump(&mut self, wait_ms: i32) -> std::io::Result<()> {
+        let mut events = [EpollEvent { events: 0, data: 0 }; 32];
+        let n = self.epoll.wait(&mut events, wait_ms)?;
+        for ev in &events[..n] {
+            let (bits, s) = (ev.events, ev.data as usize);
+            if s >= self.conns.len() {
+                continue;
+            }
+            if bits & (EPOLLERR | EPOLLHUP) != 0 {
+                self.drop_conn(s, "connection error");
+                continue;
+            }
+            if bits & (EPOLLIN | EPOLLRDHUP) != 0 {
+                let mut evs = Vec::new();
+                let ok = match self.conns[s].as_mut() {
+                    None => continue,
+                    Some(conn) => {
+                        conn.fill(&mut self.scratch, &mut evs)
+                    }
+                };
+                let eof = self.conns[s]
+                    .as_ref()
+                    .map_or(false, |c| c.read_closed);
+                let mut oversize = false;
+                for e in evs {
+                    match e {
+                        InEvent::Line(l) => {
+                            if !l.trim().is_empty() {
+                                self.inbox[s].push_back(l);
+                            }
+                        }
+                        InEvent::Oversize(_) => oversize = true,
+                    }
+                }
+                if !ok {
+                    self.drop_conn(s, "connection reset");
+                    continue;
+                }
+                if oversize {
+                    self.drop_conn(
+                        s,
+                        "response line exceeded the line cap",
+                    );
+                    continue;
+                }
+                if eof {
+                    self.drop_conn(s, "shard closed the connection");
+                    continue;
+                }
+            }
+            self.settle(s);
+        }
+        Ok(())
+    }
+
+    /// (Re)connect shard `s` and run the hello handshake.  Any previous
+    /// connection (and its now-meaningless inbox) is discarded first.
+    fn handshake(&mut self, s: usize) -> anyhow::Result<ShardHello> {
+        let addr = self.addrs[s].clone();
+        if let Some(conn) = self.conns[s].take() {
+            let _ = self.epoll.del(conn.stream.as_raw_fd());
+        }
+        self.inbox[s].clear();
+        let sa = addr
+            .to_socket_addrs()
+            .map_err(|e| anyhow!("shard {s} ({addr}): bad address: {e}"))?
+            .next()
+            .ok_or_else(|| {
+                anyhow!("shard {s} ({addr}): address resolves to nothing")
+            })?;
+        let stream = TcpStream::connect_timeout(&sa, self.timeout)
+            .map_err(|e| {
+                anyhow!("shard {s} ({addr}) is unreachable: {e}")
+            })?;
+        stream.set_nodelay(true).ok();
+        stream.set_nonblocking(true).map_err(|e| {
+            anyhow!("shard {s} ({addr}): set_nonblocking failed: {e}")
+        })?;
+        let interest = EPOLLIN | EPOLLRDHUP;
+        self.epoll
+            .add(stream.as_raw_fd(), interest, s as u64)
+            .map_err(|e| {
+                anyhow!("shard {s} ({addr}): epoll registration: {e}")
+            })?;
+        let mut conn = Conn::new(stream);
+        conn.interest = interest;
+        self.conns[s] = Some(conn);
+        self.dead[s] = None;
+        self.seq += 1;
+        let id = self.seq;
+        self.queue_to(s, &hello_request_line(id));
+        let deadline = Instant::now() + self.timeout;
+        loop {
+            if let Some(line) = self.inbox[s].pop_front() {
+                return match parse_hello(&line, id) {
+                    Ok(h) => Ok(h),
+                    Err(e) => {
+                        self.drop_conn(s, "sent a bad hello");
+                        Err(anyhow!("shard {s} ({addr}): bad hello: {e}"))
+                    }
+                };
+            }
+            if let Some(why) = &self.dead[s] {
+                return Err(anyhow!("shard {s} ({addr}): {why}"));
+            }
+            if Instant::now() >= deadline {
+                self.drop_conn(s, "handshake timed out");
+                return Err(anyhow!(
+                    "shard {s} ({addr}): handshake timed out after {:?}",
+                    self.timeout
+                ));
+            }
+            self.pump(wait_ms_until(deadline))
+                .map_err(|e| anyhow!("shard client epoll wait: {e}"))?;
+        }
+    }
+}
+
+/// Hold one shard process to the set's standard — the over-the-wire
+/// twin of the RSFS set loader's checks.
+fn validate_hello(
+    hello: &ShardHello,
+    s: usize,
+    addr: &str,
+    head: &ShardHead,
+    plan: &ShardPlan,
+    n: usize,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        hello.shard_index == s,
+        "shard at position {s} ({addr}) identifies as shard {} — \
+         addresses must be listed in shard-index order",
+        hello.shard_index
+    );
+    anyhow::ensure!(
+        hello.n_shards == n,
+        "shard {s} ({addr}) declares a {}-shard set, {n} addresses given",
+        hello.n_shards
+    );
+    anyhow::ensure!(
+        heads_identical(&hello.head, head),
+        "shard {s} ({addr}) serves a different sketch (seed/shape/\
+         estimator/Σα/projection must be identical across a set)"
+    );
+    let want = plan.span(s);
+    anyhow::ensure!(
+        hello.span == want,
+        "shard {s} ({addr}) covers {:?}, the plan expects {:?}",
+        hello.span,
+        want
+    );
+    Ok(())
+}
+
+/// A handshake-validated set of remote shard processes, gathered over
+/// persistent pipelined connections.  See the module docs for the
+/// failure model; see `coordinator::backend::RemoteShardedEngine` for
+/// the serving lane built on top.
+pub struct RemoteShardSet {
+    head: ShardHead,
+    plan: ShardPlan,
+    io: ClientIo,
+    /// Gather bookkeeping, kept as fields so the steady state is
+    /// allocation-light.
+    have: Vec<bool>,
+}
+
+impl RemoteShardSet {
+    /// Connect to every shard (addresses in shard-index order), run
+    /// the handshakes, and validate the set against the recomputed
+    /// plan.  All shards must be reachable here; individual shards may
+    /// die and return later — `gather_means` reconnects per batch.
+    pub fn connect(
+        addrs: Vec<String>,
+        timeout: Duration,
+    ) -> anyhow::Result<RemoteShardSet> {
+        anyhow::ensure!(
+            !addrs.is_empty(),
+            "a remote shard set needs at least one address"
+        );
+        let n = addrs.len();
+        let mut io = ClientIo {
+            addrs,
+            conns: (0..n).map(|_| None).collect(),
+            inbox: (0..n).map(|_| VecDeque::new()).collect(),
+            dead: (0..n).map(|_| None).collect(),
+            epoll: Epoll::new()
+                .context("epoll for the remote shard client")?,
+            timeout,
+            scratch: vec![0u8; 64 * 1024],
+            seq: 0,
+        };
+        let first = io.handshake(0)?;
+        let head = first.head.clone();
+        let plan =
+            ShardPlan::new(head.rows, head.groups, head.use_mom,
+                           first.n_shards);
+        anyhow::ensure!(
+            plan.n_shards() == first.n_shards,
+            "shards declare a {}-way set but this estimator supports at \
+             most {} shards (whole-group sharding)",
+            first.n_shards,
+            plan.n_shards()
+        );
+        validate_hello(&first, 0, &io.addrs[0].clone(), &head, &plan, n)?;
+        for s in 1..n {
+            let hello = io.handshake(s)?;
+            let addr = io.addrs[s].clone();
+            validate_hello(&hello, s, &addr, &head, &plan, n)?;
+        }
+        Ok(RemoteShardSet {
+            head,
+            plan,
+            io,
+            have: vec![false; n],
+        })
+    }
+
+    pub fn head(&self) -> &ShardHead {
+        &self.head
+    }
+
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.plan.n_shards()
+    }
+
+    /// Scatter ONE projected batch to every shard and gather their
+    /// complete group means into `partials` (plan order) — the same
+    /// `(B, local_groups, C)` matrices the in-process kernels produce,
+    /// ready for the untouched `merge_scores_into`.
+    ///
+    /// On failure the batch errs with a message NAMING the failing
+    /// shard; its connection is dropped and the next call reconnects
+    /// (with a fresh validated handshake), which is how the lane
+    /// recovers from kills, stalls, and restarts without respawning
+    /// anything.
+    pub fn gather_means(
+        &mut self,
+        proj_t: &[f32],
+        batch: usize,
+        partials: &mut Vec<Vec<f32>>,
+    ) -> anyhow::Result<()> {
+        let n = self.n_shards();
+        // Reconnect anything that died (and re-hold it to the set's
+        // standard — a restarted process must serve the same shard).
+        for s in 0..n {
+            if self.io.conns[s].is_none() {
+                let hello = self.io.handshake(s)?;
+                let addr = self.io.addrs[s].clone();
+                if let Err(e) = validate_hello(
+                    &hello, s, &addr, &self.head, &self.plan, n,
+                ) {
+                    // handshake() installed the connection; tear it
+                    // down on validation failure so the NEXT batch
+                    // re-validates instead of silently scattering to a
+                    // process that just proved it serves the wrong
+                    // shard.
+                    self.io.drop_conn(s, "failed handshake validation");
+                    return Err(e);
+                }
+            }
+        }
+        // Scatter: one request line serialized ONCE — every shard
+        // receives the identical projected batch and slices its own
+        // repetitions out of the shared hash family.
+        self.io.seq += 1;
+        let id = self.io.seq;
+        let line = means_request_line(id, batch, proj_t);
+        // The shard plane frames one message per line with a hard cap;
+        // refuse a too-fat projected batch HERE, with actionable
+        // numbers, instead of letting every shard bounce the frame.
+        // Nothing has been sent, so the connections stay healthy and
+        // smaller batches on this lane keep working.
+        anyhow::ensure!(
+            line.len() <= MAX_LINE_BYTES,
+            "projected batch (p × B = {} × {batch} floats) serializes \
+             to {} bytes, over the {MAX_LINE_BYTES}-byte shard-plane \
+             line cap — lower the lane's max_batch",
+            self.head.p,
+            line.len()
+        );
+        for s in 0..n {
+            self.io.queue_to(s, &line);
+        }
+        if partials.len() != n {
+            partials.resize_with(n, Vec::new);
+        }
+        self.have.iter_mut().for_each(|h| *h = false);
+        let mut missing = n;
+        let deadline = Instant::now() + self.io.timeout;
+        loop {
+            for s in 0..n {
+                while let Some(line) = self.io.inbox[s].pop_front() {
+                    if let Some(means) =
+                        self.consume_means_line(s, &line, id, batch)?
+                    {
+                        if !self.have[s] {
+                            self.have[s] = true;
+                            missing -= 1;
+                            partials[s] = means;
+                        }
+                    }
+                }
+            }
+            if missing == 0 {
+                return Ok(());
+            }
+            for s in 0..n {
+                if !self.have[s] {
+                    if let Some(why) = self.io.dead[s].clone() {
+                        anyhow::bail!(
+                            "shard {s} ({}): {why}",
+                            self.io.addrs[s]
+                        );
+                    }
+                }
+            }
+            if Instant::now() >= deadline {
+                let mut first = None;
+                for s in 0..n {
+                    if !self.have[s] {
+                        if first.is_none() {
+                            first = Some(s);
+                        }
+                        // Tear the stalled connection down so its late
+                        // answer dies with the socket and the next
+                        // batch starts from a clean reconnect.
+                        self.io.drop_conn(s, "timed out");
+                    }
+                }
+                let s = first.expect("a shard is missing on timeout");
+                anyhow::bail!(
+                    "shard {s} ({}) timed out after {:?} (stalled or \
+                     overloaded); its connection was dropped and the \
+                     next batch will reconnect",
+                    self.io.addrs[s],
+                    self.io.timeout
+                );
+            }
+            self.io
+                .pump(wait_ms_until(deadline))
+                .map_err(|e| anyhow!("shard client epoll wait: {e}"))?;
+        }
+    }
+
+    /// Interpret one line from shard `s` during a gather for request
+    /// `want_id`: `Ok(Some(means))` for the awaited answer, `Ok(None)`
+    /// for a discarded stale line (a timed-out batch answered late),
+    /// `Err` for anything that fails the batch.
+    fn consume_means_line(
+        &mut self,
+        s: usize,
+        line: &str,
+        want_id: u64,
+        batch: usize,
+    ) -> anyhow::Result<Option<Vec<f32>>> {
+        let addr = self.io.addrs[s].clone();
+        let j = match json::parse(line) {
+            Ok(j) => j,
+            Err(e) => {
+                self.io.drop_conn(s, "sent an unparseable line");
+                anyhow::bail!(
+                    "shard {s} ({addr}): unparseable response: {e}"
+                );
+            }
+        };
+        let rid = j.get("id").and_then(|v| v.as_u64());
+        match rid {
+            Some(r) if r < want_id => return Ok(None), // stale
+            Some(r) if r == want_id => {}
+            _ => {
+                self.io
+                    .drop_conn(s, "answered with an unknown request id");
+                anyhow::bail!(
+                    "shard {s} ({addr}): response id {rid:?} does not \
+                     match request {want_id}"
+                );
+            }
+        }
+        if let Some(err) = j.get("error").and_then(|v| v.as_str()) {
+            // A well-formed error response leaves the stream framed;
+            // the connection stays up.
+            anyhow::bail!("shard {s} ({addr}) answered an error: {err}");
+        }
+        let lg = self.plan.span(s).local_groups();
+        let g = j.get("g").and_then(|v| v.as_u64());
+        if g != Some(lg as u64) {
+            self.io.drop_conn(s, "answered for the wrong group range");
+            anyhow::bail!(
+                "shard {s} ({addr}) answered {g:?} groups, the plan \
+                 expects {lg}"
+            );
+        }
+        let means = match j
+            .get("means")
+            .ok_or_else(|| "missing means".to_string())
+            .and_then(|m| parse_f32_arr(m, "means"))
+        {
+            Ok(m) => m,
+            Err(e) => {
+                self.io.drop_conn(s, "sent a malformed mean matrix");
+                anyhow::bail!("shard {s} ({addr}): {e}");
+            }
+        };
+        let c_n = self.head.n_classes;
+        let want_len = batch as u128 * lg as u128 * c_n as u128;
+        if means.len() as u128 != want_len {
+            self.io
+                .drop_conn(s, "sent a mean matrix with wrong dimensions");
+            anyhow::bail!(
+                "shard {s} ({addr}): mean matrix has {} entries, want \
+                 B × g × C = {batch} × {lg} × {c_n}",
+                means.len()
+            );
+        }
+        Ok(Some(means))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_hello() -> ShardHello {
+        ShardHello {
+            head: ShardHead {
+                n_classes: 2,
+                multiclass: true,
+                rows: 24,
+                cols: 16,
+                k_per_row: 2,
+                groups: 4,
+                use_mom: true,
+                debias: true,
+                alpha_sums: vec![1.25, -0.5],
+                a: vec![0.5, -1.5, 3.25, 0.0, 2.0, -0.125],
+                d: 3,
+                p: 2,
+                lsh_seed: 0xDEAD_BEEF_CAFE_F00D,
+                width: 2.5,
+            },
+            shard_index: 1,
+            n_shards: 2,
+            span: ShardSpan {
+                group_start: 2,
+                group_end: 4,
+                row_start: 12,
+                row_end: 24,
+            },
+        }
+    }
+
+    #[test]
+    fn hello_roundtrips_exactly() {
+        let h = sample_hello();
+        let line = hello_response_line(9, &h);
+        let parsed = parse_hello(&line, 9).unwrap();
+        assert!(heads_identical(&parsed.head, &h.head));
+        assert_eq!(parsed.head.lsh_seed, h.head.lsh_seed);
+        assert_eq!(parsed.shard_index, 1);
+        assert_eq!(parsed.n_shards, 2);
+        assert_eq!(parsed.span, h.span);
+        // Wrong id must not be accepted.
+        assert!(parse_hello(&line, 8).is_err());
+    }
+
+    #[test]
+    fn means_request_roundtrips_awkward_f32s_bitwise() {
+        // Values chosen to stress the decimal round-trip: subnormals,
+        // negative zero, huge and tiny magnitudes, and a full-precision
+        // mantissa.
+        let proj = vec![
+            1.0f32,
+            -0.0,
+            f32::MIN_POSITIVE,
+            1.0e-45,          // smallest subnormal
+            3.402_823_5e38,   // f32::MAX
+            -2.718_281_8,
+            0.1,
+            1.0 / 3.0,
+        ];
+        let line = means_request_line(7, 4, &proj);
+        let req = parse_shard_request(&line).unwrap();
+        assert_eq!(req.id, 7);
+        match req.call {
+            ShardCall::Means { batch, proj_t } => {
+                assert_eq!(batch, 4);
+                assert_eq!(proj_t.len(), proj.len());
+                for (i, (a, b)) in
+                    proj_t.iter().zip(&proj).enumerate()
+                {
+                    assert_eq!(a.to_bits(), b.to_bits(), "slot {i}");
+                }
+            }
+            _ => panic!("parsed as the wrong call"),
+        }
+    }
+
+    #[test]
+    fn means_response_roundtrips_bitwise() {
+        let means = vec![0.125f32, -7.5, 1.0e-40, 42.0];
+        let line = means_response_line(3, 2, &means, 12.5);
+        let j = json::parse(&line).unwrap();
+        assert_eq!(j.get("id").and_then(|v| v.as_u64()), Some(3));
+        assert_eq!(j.get("g").and_then(|v| v.as_u64()), Some(2));
+        let got = parse_f32_arr(j.get("means").unwrap(), "means").unwrap();
+        for (a, b) in got.iter().zip(&means) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn non_finite_and_malformed_floats_are_rejected() {
+        // NaN in a request serializes as null — the parser must reject
+        // it, not silently shorten the array.
+        let line = means_request_line(1, 1, &[1.0, f32::NAN]);
+        let err = parse_shard_request(&line).unwrap_err();
+        assert!(err.contains("not a number"), "{err}");
+        // Decimal overflow parses to ±inf at f64; reject too.
+        let crafted =
+            r#"{"id":1,"shard":"means","b":1,"proj":[1.0,1e999]}"#;
+        let err = parse_shard_request(crafted).unwrap_err();
+        assert!(err.contains("finite"), "{err}");
+        // A finite f64 that overflows f32 is also non-finite here.
+        let crafted =
+            r#"{"id":1,"shard":"means","b":1,"proj":[1.0,1e300]}"#;
+        let err = parse_shard_request(crafted).unwrap_err();
+        assert!(err.contains("finite"), "{err}");
+    }
+
+    #[test]
+    fn shard_request_rejections() {
+        assert!(parse_shard_request("garbage").is_err());
+        assert!(parse_shard_request(r#"{"id":1}"#).is_err());
+        assert!(
+            parse_shard_request(r#"{"id":1,"shard":"nope"}"#).is_err()
+        );
+        assert!(parse_shard_request(
+            r#"{"id":1,"shard":"means","proj":[1]}"#
+        )
+        .is_err());
+        assert!(parse_shard_request(
+            r#"{"id":1,"shard":"means","b":0,"proj":[]}"#
+        )
+        .is_err());
+        // Truncated frame (the tail of the line never arrived).
+        assert!(parse_shard_request(
+            r#"{"id":1,"shard":"means","b":2,"proj":[1.0,"#
+        )
+        .is_err());
+    }
+}

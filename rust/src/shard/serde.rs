@@ -136,7 +136,11 @@ fn parse_shard(buf: &[u8]) -> Result<ShardFile> {
     })
 }
 
-fn heads_identical(a: &ShardHead, b: &ShardHead) -> bool {
+/// Bitwise head equality — shared by the set loader below and the
+/// remote shard plane's handshake validation (`super::remote`), which
+/// must hold every shard *process* to the same standard as every shard
+/// *file*.
+pub(crate) fn heads_identical(a: &ShardHead, b: &ShardHead) -> bool {
     a.n_classes == b.n_classes
         && a.multiclass == b.multiclass
         && a.rows == b.rows
@@ -158,6 +162,70 @@ fn heads_identical(a: &ShardHead, b: &ShardHead) -> bool {
             .all(|(x, y)| x.to_bits() == y.to_bits())
         && a.a.len() == b.a.len()
         && a.a.iter().zip(&b.a).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// One RSFS shard file loaded standalone — the unit `repsketch
+/// shard-serve` hosts.  Unlike [`ShardedSketch::load_shards`] this does
+/// not (cannot) see the rest of the set; it validates everything a
+/// single file CAN be held to: header sanity, hash-config bounds, and
+/// the span against the deterministically recomputed plan for the
+/// declared `(head, n_shards)`.  Cross-shard consistency (identical
+/// heads, complete index coverage) is enforced by the remote client's
+/// handshake instead, exactly where the set assembles.
+pub struct LoadedShard {
+    pub head: ShardHead,
+    pub n_shards: usize,
+    pub shard: SketchShard,
+}
+
+/// Parse + validate a standalone RSFS shard file (see [`LoadedShard`]).
+pub fn shard_from_file_bytes(buf: &[u8]) -> Result<LoadedShard> {
+    let f = parse_shard(buf)?;
+    let plan =
+        ShardPlan::new(f.head.rows, f.head.groups, f.head.use_mom,
+                       f.n_shards);
+    ensure!(
+        plan.n_shards() == f.n_shards,
+        "file declares {} shards but this estimator supports at most {} \
+         (whole-group sharding)",
+        f.n_shards,
+        plan.n_shards()
+    );
+    let want = plan.span(f.shard_index);
+    ensure!(
+        f.span == want,
+        "shard {} ranges {:?} do not match the plan's {:?}",
+        f.shard_index,
+        f.span,
+        want
+    );
+    let full_lsh = SparseL2Lsh::generate(
+        f.head.lsh_seed,
+        f.head.p,
+        f.head.rows * f.head.k_per_row as usize,
+        f.head.width,
+    );
+    let shard = SketchShard::from_parts(
+        f.counters,
+        f.head.n_classes,
+        f.head.cols,
+        f.head.k_per_row,
+        &full_lsh,
+        f.shard_index,
+        f.span,
+        &plan,
+    );
+    Ok(LoadedShard { head: f.head, n_shards: f.n_shards, shard })
+}
+
+/// Load a standalone RSFS shard file from disk.
+pub fn load_shard_file<P: AsRef<Path>>(path: P) -> Result<LoadedShard> {
+    let mut buf = Vec::new();
+    std::fs::File::open(path.as_ref())
+        .with_context(|| format!("open {:?}", path.as_ref()))?
+        .read_to_end(&mut buf)?;
+    shard_from_file_bytes(&buf)
+        .with_context(|| format!("parse RSFS {:?}", path.as_ref()))
 }
 
 impl ShardedSketch {
@@ -430,6 +498,35 @@ mod tests {
         assert_eq!(reloaded.n_classes(), 4);
         assert!(reloaded.head.multiclass, "RSFM-shaped stays multiclass");
         roundtrip_queries(&sharded, &reloaded, fs.d);
+    }
+
+    #[test]
+    fn standalone_shard_file_loads_and_validates() {
+        // The `shard-serve` unit: one RSFS file, loaded without the
+        // rest of the set, still validated against its recomputed plan.
+        let sharded = ShardedSketch::from_race(&sample_race(), 3);
+        let buf = sharded.shard_to_bytes(1);
+        let loaded = shard_from_file_bytes(&buf).unwrap();
+        assert_eq!(loaded.n_shards, 3);
+        assert_eq!(loaded.shard.shard_index, 1);
+        assert_eq!(loaded.shard.row_start, sharded.shards[1].row_start);
+        assert_eq!(loaded.shard.group_end, sharded.shards[1].group_end);
+        assert_eq!(
+            loaded.shard.counters().len(),
+            sharded.shards[1].counters().len()
+        );
+        // Shift the whole row range by one (payload length still
+        // matches): only the recomputed-plan check can catch it.
+        let mut bad = buf.clone();
+        let rs = u32::from_le_bytes(bad[60..64].try_into().unwrap());
+        let re = u32::from_le_bytes(bad[64..68].try_into().unwrap());
+        bad[60..64].copy_from_slice(&(rs + 1).to_le_bytes());
+        bad[64..68].copy_from_slice(&(re + 1).to_le_bytes());
+        let err = shard_from_file_bytes(&bad).unwrap_err();
+        assert!(
+            err.to_string().contains("do not match the plan"),
+            "{err}"
+        );
     }
 
     #[test]

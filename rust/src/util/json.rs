@@ -24,6 +24,18 @@ impl Json {
         Json::Num(v, format_f64(v))
     }
 
+    /// An f32 payload value, emitted with the SHORTEST decimal that
+    /// round-trips the f32 (roughly half the bytes of the f64-shortest
+    /// form — `0.1f32` ships as `0.1`, not `0.10000000149011612`).
+    /// Readers that parse to f64 and narrow to f32 recover the exact
+    /// bits: the f64 nearest the decimal is within a fraction of an
+    /// f32 ulp, so the narrowing rounds back to the original value.
+    /// Negative zero and non-finite values degrade exactly like
+    /// [`Json::num`] (`-0` / `null`).
+    pub fn num_f32(v: f32) -> Json {
+        Json::Num(v as f64, format_f32(v))
+    }
+
     pub fn from_u64(v: u64) -> Json {
         Json::Num(v as f64, v.to_string())
     }
@@ -158,6 +170,24 @@ fn format_f64(v: f64) -> String {
         // value is lost either way, but the document stays valid JSON
         // and readers fail on the FIELD, not the line.
         "null".to_string()
+    } else if v == 0.0 && v.is_sign_negative() {
+        // Preserve the zero sign: the shard plane round-trips f32
+        // payloads bitwise, and `-0.0 as i64` would flatten to `0`.
+        "-0".to_string()
+    } else if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        let mut s = String::new();
+        let _ = write!(s, "{v}");
+        s
+    }
+}
+
+fn format_f32(v: f32) -> String {
+    if !v.is_finite() {
+        "null".to_string()
+    } else if v == 0.0 && v.is_sign_negative() {
+        "-0".to_string()
     } else if v.fract() == 0.0 && v.abs() < 1e15 {
         format!("{}", v as i64)
     } else {
@@ -413,6 +443,40 @@ mod tests {
                 .as_str(),
             Some("x")
         );
+    }
+
+    #[test]
+    fn f32_shortest_emission_roundtrips_bitwise() {
+        // The shard plane's payload framing: shortest-f32 decimals,
+        // recovered exactly by an f64 parse + narrowing.
+        let vals = [
+            0.1f32,
+            -0.0,
+            1.0 / 3.0,
+            f32::MIN_POSITIVE,
+            1.0e-45,
+            3.402_823_5e38,
+            42.0,
+            -7.25,
+        ];
+        for v in vals {
+            let line = Json::num_f32(v).to_string();
+            let parsed = parse(&line).unwrap().as_f64().unwrap() as f32;
+            assert_eq!(parsed.to_bits(), v.to_bits(), "{v} -> {line}");
+        }
+        // The headline size win: no f64 noise digits.
+        assert_eq!(Json::num_f32(0.1).to_string(), "0.1");
+        assert_eq!(Json::num_f32(f32::NAN).to_string(), "null");
+    }
+
+    #[test]
+    fn negative_zero_roundtrips_bitwise() {
+        let line = Json::num(-0.0).to_string();
+        assert_eq!(line, "-0");
+        let v = parse(&line).unwrap().as_f64().unwrap();
+        assert_eq!(v.to_bits(), (-0.0f64).to_bits());
+        // And the positive zero stays a plain 0.
+        assert_eq!(Json::num(0.0).to_string(), "0");
     }
 
     #[test]

@@ -1,0 +1,1024 @@
+//! Remote shard plane: bit-identity, protocol robustness, and the
+//! fault-injection harness (Linux-only, artifact-free).
+//!
+//! Three layers of lock-down:
+//!
+//! 1. **Bit-identity** — remote scatter/gather == local
+//!    `ShardedEngine` == unsharded scalar, property-tested for
+//!    `RaceSketch` and `FusedMultiSketch` across shards {1, 2, 3},
+//!    ragged `rows % groups`, B ∈ {1, ragged}, with `"scores": true`
+//!    mixed into a routed batch.  Shard servers run in-process behind
+//!    real reactors on loopback — the full wire path, deterministic.
+//!
+//! 2. **Protocol robustness** — both directions.  Shard-server side:
+//!    truncated frames, the line cap, dimension mismatches, zero
+//!    batches, and non-finite floats all answer a protocol error (no
+//!    panic, no OOM, connection survives).  Coordinator side: a mock
+//!    shard feeding back wrong-dimension mean matrices, wrong group
+//!    counts, and non-finite floats fails the batch with a protocol
+//!    error naming the shard — nothing reaches the merge.
+//!
+//! 3. **Fault injection** — REAL `repsketch shard-serve` child
+//!    processes on loopback: kill one mid-burst, SIGSTOP one to force
+//!    a timeout, restart one on its old port.  Every accepted request
+//!    gets exactly one response (an error naming the dead shard —
+//!    never silence, never a partial merge), and the lane recovers
+//!    once the shard returns.
+#![cfg(target_os = "linux")]
+
+use repsketch::coordinator::batcher::BatcherConfig;
+use repsketch::coordinator::{
+    backend, BackendKind, Engine, Request, Router, RouterConfig,
+};
+use repsketch::kernel::KernelParams;
+use repsketch::shard::remote::{
+    hello_response_line, means_response_line, parse_shard_request,
+    serve_local, ShardCall, ShardHello,
+};
+use repsketch::shard::{ShardSpan, ShardedSketch};
+use repsketch::sketch::{
+    FusedMultiSketch, FusedScratch, QueryScratch, RaceSketch, SketchConfig,
+};
+use repsketch::util::prop::forall;
+use repsketch::util::rng::SplitMix64;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::process::{Child, ChildStdout, Command, Stdio};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// The fault tests own real child processes and fixed ports; everything
+/// here serializes so parallel libtest cannot interleave them.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// In-process shard servers (real reactors on loopback) come from the
+// library's shared harness: `repsketch::shard::remote::serve_local`
+// (one copy of the lifecycle, shared with benches/remote_shard.rs).
+
+fn serve_shards(
+    sharded: &ShardedSketch,
+) -> repsketch::shard::remote::LocalShardServers {
+    serve_local(sharded).expect("serve local shard set")
+}
+
+fn random_queries(rng: &mut SplitMix64, batch: usize, d: usize)
+    -> Vec<f32> {
+    (0..batch * d)
+        .map(|_| {
+            if rng.next_f32() < 0.15 {
+                0.0
+            } else {
+                rng.next_gaussian() as f32
+            }
+        })
+        .collect()
+}
+
+fn rows_of(queries: &[f32], d: usize) -> Vec<Vec<f32>> {
+    queries.chunks_exact(d).map(|r| r.to_vec()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// 1. Bit-identity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn remote_race_matches_local_and_scalar_bitwise() {
+    let _g = serial();
+    forall(
+        0x2E01,
+        6,
+        |rng| {
+            let d = 1 + rng.next_range(8);
+            let p = 1 + rng.next_range(5);
+            let rows = 4 + rng.next_range(56);
+            let mut rng2 = SplitMix64::new(rng.next_u64());
+            let m = 10 + rng.next_range(14);
+            let kp = KernelParams {
+                d,
+                p,
+                m,
+                a: (0..d * p)
+                    .map(|_| rng2.next_gaussian() as f32 * 0.5)
+                    .collect(),
+                x: (0..m * p)
+                    .map(|_| rng2.next_gaussian() as f32)
+                    .collect(),
+                alpha: (0..m).map(|_| 0.5 + rng2.next_f32()).collect(),
+                width: 2.0,
+                lsh_seed: rng.next_u64(),
+                k_per_row: 1 + rng.next_range(3) as u32,
+                default_rows: rows,
+                default_cols: 16,
+            };
+            let cfg = SketchConfig {
+                rows,
+                cols: 8 + rng.next_range(3) * 7,
+                groups: 1 + rng.next_range(8),
+                use_mom: rng.next_f32() < 0.8,
+                debias: rng.next_f32() < 0.7,
+            };
+            let sk = RaceSketch::build(&kp, &cfg);
+            let batch = 1 + rng.next_range(11);
+            let queries = random_queries(rng, batch, d);
+            (sk, queries, batch, d)
+        },
+        |(sk, queries, batch, d)| {
+            let mut qs = QueryScratch::default();
+            let want: Vec<f32> = (0..*batch)
+                .map(|bq| {
+                    sk.query_with(&queries[bq * d..(bq + 1) * d], &mut qs)
+                })
+                .collect();
+            let rows = rows_of(queries, *d);
+            for &shards in &[1usize, 2, 3] {
+                let sharded = ShardedSketch::from_race(sk, shards);
+                // Local lane reference (engine-level).
+                let local = sharded.scores_batch(queries);
+                let servers = serve_shards(&sharded);
+                let mut engine = backend::RemoteShardedEngine::connect(
+                    servers.addrs.clone(),
+                    Duration::from_secs(10),
+                )
+                .map_err(|e| format!("connect (shards={shards}): {e}"))?;
+                // Two batches through the SAME connections: B as
+                // generated, then B = 1 (pipelined reuse, no respawn).
+                for (bi, b) in [*batch, 1usize].into_iter().enumerate()
+                {
+                    let got = engine
+                        .eval_batch(&rows[..b])
+                        .map_err(|e| format!("eval: {e}"))?;
+                    if got.len() != b {
+                        return Err(format!(
+                            "shards={shards} pass {bi}: {} values for \
+                             B={b}",
+                            got.len()
+                        ));
+                    }
+                    for (i, g) in got.iter().enumerate() {
+                        if g.to_bits() != want[i].to_bits()
+                            || g.to_bits() != local[i].to_bits()
+                        {
+                            return Err(format!(
+                                "shards={shards} pass {bi} row {i}: \
+                                 remote {g} vs scalar {} / local {}",
+                                want[i], local[i]
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn remote_fused_matches_local_and_scalar_bitwise_with_scores() {
+    let _g = serial();
+    forall(
+        0x2E02,
+        5,
+        |rng| {
+            let n_classes = 1 + rng.next_range(4);
+            let d = 1 + rng.next_range(6);
+            let p = 1 + rng.next_range(4);
+            let rows = 4 + rng.next_range(48);
+            let cols = 8 + rng.next_range(3) * 7;
+            let k = 1 + rng.next_range(3) as u32;
+            let shared_seed = rng.next_u64();
+            let mut rng2 = SplitMix64::new(rng.next_u64());
+            let a: Vec<f32> = (0..d * p)
+                .map(|_| rng2.next_gaussian() as f32 * 0.5)
+                .collect();
+            let per_class: Vec<KernelParams> = (0..n_classes)
+                .map(|_| {
+                    let m = 8 + rng2.next_range(10);
+                    KernelParams {
+                        d,
+                        p,
+                        m,
+                        a: a.clone(),
+                        x: (0..m * p)
+                            .map(|_| rng2.next_gaussian() as f32)
+                            .collect(),
+                        alpha: (0..m)
+                            .map(|_| 0.5 + rng2.next_f32())
+                            .collect(),
+                        width: 2.0,
+                        lsh_seed: shared_seed,
+                        k_per_row: k,
+                        default_rows: rows,
+                        default_cols: cols,
+                    }
+                })
+                .collect();
+            let cfg = SketchConfig {
+                rows: 0,
+                cols: 0,
+                groups: 1 + rng.next_range(8),
+                use_mom: rng.next_f32() < 0.8,
+                debias: rng.next_f32() < 0.7,
+            };
+            let fused =
+                FusedMultiSketch::build(&per_class, &cfg).unwrap();
+            let batch = 1 + rng.next_range(9);
+            let queries = random_queries(rng, batch, d);
+            (fused, queries, batch, d)
+        },
+        |(fused, queries, batch, d)| {
+            let c_n = fused.n_classes();
+            let mut fs = FusedScratch::default();
+            let mut want = Vec::new();
+            let mut want_all = Vec::with_capacity(batch * c_n);
+            for bq in 0..*batch {
+                fused.scores_with(
+                    &queries[bq * d..(bq + 1) * d],
+                    &mut fs,
+                    &mut want,
+                );
+                want_all.extend_from_slice(&want);
+            }
+            let rows = rows_of(queries, *d);
+            for &shards in &[1usize, 2, 3] {
+                let sharded = ShardedSketch::from_fused(fused, shards);
+                let local = sharded.scores_batch(queries);
+                let servers = serve_shards(&sharded);
+                let mut engine = backend::RemoteShardedEngine::connect(
+                    servers.addrs.clone(),
+                    Duration::from_secs(10),
+                )
+                .map_err(|e| format!("connect (shards={shards}): {e}"))?;
+                let out = engine
+                    .eval_batch_ex(&rows, true)
+                    .map_err(|e| format!("eval: {e}"))?;
+                let scores =
+                    out.scores.ok_or("scores were requested")?;
+                if scores.flat.len() != want_all.len() {
+                    return Err(format!(
+                        "shards={shards}: {} scores, want {}",
+                        scores.flat.len(),
+                        want_all.len()
+                    ));
+                }
+                for (i, (g, w)) in
+                    scores.flat.iter().zip(&want_all).enumerate()
+                {
+                    if g.to_bits() != w.to_bits()
+                        || g.to_bits() != local[i].to_bits()
+                    {
+                        return Err(format!(
+                            "shards={shards} slot {i}: remote {g} vs \
+                             scalar {w} / local {}",
+                            local[i]
+                        ));
+                    }
+                }
+                // Argmax values must equal the fused predict path.
+                for (bq, v) in out.values.iter().enumerate() {
+                    let q = &queries[bq * d..(bq + 1) * d];
+                    let want_pred = fused.predict(q, &mut fs) as f32;
+                    if *v != want_pred {
+                        return Err(format!(
+                            "shards={shards} row {bq}: argmax {v} vs \
+                             {want_pred}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Full stack: router + batcher + remote lane over loopback, with
+/// `"scores": true` mixed into the batch per request.
+#[test]
+fn routed_remote_lane_serves_argmax_and_mixed_scores() {
+    let _g = serial();
+    let mut rng = SplitMix64::new(0x2E03);
+    let d = 5usize;
+    let shared_seed = rng.next_u64();
+    let a: Vec<f32> =
+        (0..d * d).map(|_| rng.next_gaussian() as f32 * 0.5).collect();
+    let per_class: Vec<KernelParams> = (0..3)
+        .map(|_| {
+            let m = 12;
+            KernelParams {
+                d,
+                p: d,
+                m,
+                a: a.clone(),
+                x: (0..m * d)
+                    .map(|_| rng.next_gaussian() as f32)
+                    .collect(),
+                alpha: (0..m).map(|_| 0.5 + rng.next_f32()).collect(),
+                width: 2.0,
+                lsh_seed: shared_seed,
+                k_per_row: 2,
+                default_rows: 48,
+                default_cols: 16,
+            }
+        })
+        .collect();
+    let fused =
+        FusedMultiSketch::build(&per_class, &SketchConfig::default())
+            .unwrap();
+    let reference = fused.clone();
+    let sharded = ShardedSketch::from_fused(&fused, 3);
+    let servers = serve_shards(&sharded);
+    let engine = backend::RemoteShardedEngine::connect(
+        servers.addrs.clone(),
+        Duration::from_secs(10),
+    )
+    .expect("connect remote set");
+    let mut router = Router::new();
+    let cfg = RouterConfig {
+        batcher: BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 1024,
+        },
+    };
+    router.add_lane("digits", BackendKind::Sharded, move || {
+        Ok(Box::new(engine) as _)
+    }, &cfg);
+    let queries: Vec<Vec<f32>> = (0..12)
+        .map(|_| (0..d).map(|_| rng.next_gaussian() as f32).collect())
+        .collect();
+    let mut receivers = Vec::new();
+    for (i, q) in queries.iter().enumerate() {
+        receivers.push((
+            i,
+            router
+                .submit(Request {
+                    id: i as u64,
+                    model: "digits".into(),
+                    backend: BackendKind::Sharded,
+                    features: q.clone(),
+                    want_scores: i % 2 == 0,
+                })
+                .unwrap(),
+        ));
+    }
+    let mut fs = FusedScratch::default();
+    let mut want = Vec::new();
+    for (i, rx) in receivers {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(resp.id, Some(i as u64));
+        let q = &queries[i];
+        let want_arg = reference.predict(q, &mut fs) as f32;
+        assert_eq!(resp.result.unwrap(), want_arg, "query {i} argmax");
+        if i % 2 == 0 {
+            let scores = resp.scores.expect("scores requested");
+            reference.scores_with(q, &mut fs, &mut want);
+            assert_eq!(scores.len(), 3, "query {i}");
+            for (c, w) in want.iter().enumerate() {
+                assert_eq!(
+                    scores[c].to_bits(),
+                    w.to_bits(),
+                    "query {i} class {c}"
+                );
+            }
+        } else {
+            assert!(resp.scores.is_none(), "query {i} did not ask");
+        }
+    }
+}
+
+fn thread_count() -> u64 {
+    let s = std::fs::read_to_string("/proc/self/status").unwrap();
+    s.lines()
+        .find(|l| l.starts_with("Threads:"))
+        .expect("Threads: in /proc/self/status")
+        .split_whitespace()
+        .nth(1)
+        .unwrap()
+        .parse()
+        .unwrap()
+}
+
+#[test]
+#[ignore = "asserts process-wide /proc thread counts — run via the \
+            dedicated single-threaded CI step (--test-threads=1 \
+            --include-ignored), where libtest's own worker threads \
+            cannot perturb the snapshots"]
+fn remote_lane_spawns_nothing_per_batch() {
+    // The coordinator side of the remote plane is driven entirely by
+    // the calling (lane) thread: persistent connections, no pool, no
+    // per-batch or per-request threads.  The shard servers' threads
+    // (reactor + worker each) are created at setup and are fixed too.
+    let _g = serial();
+    let sk = fault_sketch();
+    let sharded = ShardedSketch::from_race(&sk, 3);
+    let servers = serve_shards(&sharded);
+    let mut engine = backend::RemoteShardedEngine::connect(
+        servers.addrs.clone(),
+        Duration::from_secs(10),
+    )
+    .expect("connect");
+    let mut rng = SplitMix64::new(0x2E06);
+    let queries = random_queries(&mut rng, 16, sharded.head.d);
+    let rows = rows_of(&queries, sharded.head.d);
+    // Warm one batch end to end, let any startup threads settle.
+    engine.eval_batch(&rows).unwrap();
+    std::thread::sleep(Duration::from_millis(100));
+    let t0 = thread_count();
+    for &b in &[1usize, 3, 8, 16] {
+        for _ in 0..5 {
+            engine.eval_batch(&rows[..b]).unwrap();
+        }
+    }
+    assert_eq!(
+        thread_count(),
+        t0,
+        "thread count changed across 20 remote batches — the remote \
+         lane must never spawn per batch or per request"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 2. Protocol robustness
+// ---------------------------------------------------------------------------
+
+fn fault_sketch() -> RaceSketch {
+    let mut rng = SplitMix64::new(0x2E04);
+    let (d, p, m) = (6usize, 4usize, 24usize);
+    let kp = KernelParams {
+        d,
+        p,
+        m,
+        a: (0..d * p).map(|_| rng.next_gaussian() as f32 * 0.5).collect(),
+        x: (0..m * p).map(|_| rng.next_gaussian() as f32).collect(),
+        alpha: (0..m).map(|_| 0.5 + rng.next_f32()).collect(),
+        width: 2.0,
+        lsh_seed: rng.next_u64(),
+        k_per_row: 2,
+        default_rows: 48,
+        default_cols: 16,
+    };
+    RaceSketch::build(
+        &kp,
+        &SketchConfig { groups: 6, ..SketchConfig::default() },
+    )
+}
+
+fn read_json_line(reader: &mut impl BufRead) -> String {
+    let mut line = String::new();
+    let n = reader.read_line(&mut line).unwrap();
+    assert!(n > 0, "server closed the connection unexpectedly");
+    line.trim().to_string()
+}
+
+#[test]
+fn shard_server_rejects_malformed_lines_without_dying() {
+    let _g = serial();
+    let sharded = ShardedSketch::from_race(&fault_sketch(), 2);
+    let servers = serve_shards(&sharded);
+    let mut stream = TcpStream::connect(&servers.addrs[0]).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+    // Truncated frame: the line ended mid-JSON.
+    stream
+        .write_all(b"{\"id\":11,\"shard\":\"means\",\"b\":2,\"proj\":[1.0,\n")
+        .unwrap();
+    let r = read_json_line(&mut reader);
+    assert!(r.contains("\"id\":11"), "{r}");
+    assert!(r.contains("bad shard request"), "{r}");
+
+    // Unknown op.
+    stream.write_all(b"{\"id\":12,\"shard\":\"nope\"}\n").unwrap();
+    let r = read_json_line(&mut reader);
+    assert!(r.contains("\"id\":12") && r.contains("error"), "{r}");
+
+    // Zero batch.
+    stream
+        .write_all(b"{\"id\":13,\"shard\":\"means\",\"b\":0,\"proj\":[]}\n")
+        .unwrap();
+    let r = read_json_line(&mut reader);
+    assert!(r.contains("\"id\":13") && r.contains("error"), "{r}");
+
+    // proj length disagrees with b (dimension mismatch).
+    stream
+        .write_all(
+            b"{\"id\":14,\"shard\":\"means\",\"b\":3,\"proj\":[1.0,2.0]}\n",
+        )
+        .unwrap();
+    let r = read_json_line(&mut reader);
+    assert!(r.contains("\"id\":14"), "{r}");
+    assert!(r.contains("proj has 2 values"), "{r}");
+
+    // Non-finite floats in the payload (1e999 parses to +inf).
+    stream
+        .write_all(
+            b"{\"id\":15,\"shard\":\"means\",\"b\":1,\"proj\":[1.0,1e999,0,0]}\n",
+        )
+        .unwrap();
+    let r = read_json_line(&mut reader);
+    assert!(r.contains("\"id\":15"), "{r}");
+    assert!(r.contains("finite"), "{r}");
+
+    // Oversized payload: a newline-free multi-MB line hits the line
+    // cap, answers once, and the rest is discarded (no OOM).
+    let mut big = String::from("{\"id\":16,\"shard\":\"means\",\"b\":9,\"proj\":[");
+    while big.len() < 300 * 1024 {
+        big.push_str("1.0,");
+    }
+    stream.write_all(big.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    let r = read_json_line(&mut reader);
+    assert!(r.contains("\"id\":16"), "{r}");
+    assert!(r.contains("cap"), "{r}");
+
+    // The connection survived all of it: a real hello still answers.
+    stream.write_all(b"{\"id\":17,\"shard\":\"hello\"}\n").unwrap();
+    let r = read_json_line(&mut reader);
+    let hello =
+        repsketch::shard::remote::parse_hello(&r, 17).expect("hello");
+    assert_eq!(hello.shard_index, 0);
+    assert_eq!(hello.n_shards, 2);
+}
+
+/// A scripted fake shard: answers the handshake honestly (so the
+/// client's connect succeeds), then feeds a crafted means line.  Every
+/// crafted corruption must fail the batch with a protocol error — the
+/// merge must never see it.
+fn mock_shard_once(
+    hello: ShardHello,
+    means_line_for: impl Fn(u64) -> String + Send + 'static,
+) -> (String, std::thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || {
+        let Ok((stream, _)) = listener.accept() else { return };
+        let mut reader = BufReader::new(match stream.try_clone() {
+            Ok(s) => s,
+            Err(_) => return,
+        });
+        let mut w = stream;
+        let mut line = String::new();
+        loop {
+            line.clear();
+            match reader.read_line(&mut line) {
+                Ok(0) | Err(_) => return,
+                Ok(_) => {}
+            }
+            let Ok(req) = parse_shard_request(line.trim()) else {
+                continue;
+            };
+            let resp = match req.call {
+                ShardCall::Hello => hello_response_line(req.id, &hello),
+                ShardCall::Means { .. } => means_line_for(req.id),
+            };
+            if w.write_all(resp.as_bytes())
+                .and_then(|_| w.write_all(b"\n"))
+                .and_then(|_| w.flush())
+                .is_err()
+            {
+                return;
+            }
+        }
+    });
+    (addr, handle)
+}
+
+#[test]
+fn coordinator_rejects_corrupt_mean_matrices() {
+    let _g = serial();
+    let sk = fault_sketch();
+    let sharded = ShardedSketch::from_race(&sk, 1);
+    let sh = &sharded.shards[0];
+    let lg = sh.local_groups();
+    let hello = ShardHello {
+        head: sharded.head.clone(),
+        shard_index: 0,
+        n_shards: 1,
+        span: ShardSpan {
+            group_start: sh.group_start,
+            group_end: sh.group_end,
+            row_start: sh.row_start,
+            row_end: sh.row_end,
+        },
+    };
+    let d = sharded.head.d;
+    let row = vec![0.25f32; d];
+
+    // (a) Wrong dimensions: B=1 asked, matrix sized for B=2.
+    let case_a = {
+        let lg = lg;
+        move |id: u64| {
+            means_response_line(id, lg, &vec![0.5f32; 2 * lg], 0.0)
+        }
+    };
+    // (b) Non-finite float (null element — what NaN serializes to).
+    let case_b = {
+        let lg = lg;
+        move |id: u64| {
+            let mut vals: Vec<String> =
+                (0..lg).map(|_| "0.5".to_string()).collect();
+            vals[0] = "null".to_string();
+            format!(
+                "{{\"id\":{id},\"g\":{lg},\"means\":[{}]}}",
+                vals.join(",")
+            )
+        }
+    };
+    // (c) Non-finite float via decimal overflow.
+    let case_c = {
+        let lg = lg;
+        move |id: u64| {
+            let mut vals: Vec<String> =
+                (0..lg).map(|_| "0.5".to_string()).collect();
+            vals[0] = "1e999".to_string();
+            format!(
+                "{{\"id\":{id},\"g\":{lg},\"means\":[{}]}}",
+                vals.join(",")
+            )
+        }
+    };
+    // (d) Wrong group count for the plan.
+    let case_d = {
+        let lg = lg;
+        move |id: u64| {
+            means_response_line(id, lg + 1, &vec![0.5f32; lg + 1], 0.0)
+        }
+    };
+    let cases: Vec<(
+        &str,
+        Box<dyn Fn(u64) -> String + Send>,
+        &str,
+    )> = vec![
+        ("wrong-dims", Box::new(case_a), "mean matrix has"),
+        ("nan-null", Box::new(case_b), "not a number"),
+        ("overflow-inf", Box::new(case_c), "finite"),
+        ("wrong-groups", Box::new(case_d), "the plan expects"),
+    ];
+    for (name, craft, needle) in cases {
+        let (addr, handle) = mock_shard_once(hello.clone(), craft);
+        let mut engine = backend::RemoteShardedEngine::connect(
+            vec![addr],
+            Duration::from_secs(10),
+        )
+        .unwrap_or_else(|e| panic!("{name}: connect: {e}"));
+        let err = engine
+            .eval_batch(std::slice::from_ref(&row))
+            .expect_err("corrupt means must fail the batch");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("shard 0") && msg.contains(needle),
+            "{name}: error {msg:?} must name shard 0 and contain \
+             {needle:?}"
+        );
+        drop(engine); // closes the conn; the mock thread exits
+        let _ = handle.join();
+    }
+}
+
+#[test]
+fn handshake_rejects_inconsistent_sets() {
+    let _g = serial();
+    let sharded = ShardedSketch::from_race(&fault_sketch(), 3);
+    let servers = serve_shards(&sharded);
+    // Same shard listed twice: position 1 identifies as shard 0.
+    let err = backend::RemoteShardedEngine::connect(
+        vec![servers.addrs[0].clone(), servers.addrs[0].clone()],
+        Duration::from_secs(10),
+    )
+    .expect_err("duplicate shard address must be rejected");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("declares a 3-shard set"), "{msg}");
+    // Two of three addresses: the declared set size disagrees.
+    let err = backend::RemoteShardedEngine::connect(
+        vec![servers.addrs[0].clone(), servers.addrs[1].clone()],
+        Duration::from_secs(10),
+    )
+    .expect_err("incomplete shard set must be rejected");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("declares a 3-shard set"), "{msg}");
+    // Out of order: position 0 identifies as shard 1.
+    let err = backend::RemoteShardedEngine::connect(
+        vec![
+            servers.addrs[1].clone(),
+            servers.addrs[0].clone(),
+            servers.addrs[2].clone(),
+        ],
+        Duration::from_secs(10),
+    )
+    .expect_err("out-of-order shard set must be rejected");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("identifies as shard"), "{msg}");
+    // The full, ordered set still connects fine afterwards.
+    let engine = backend::RemoteShardedEngine::connect(
+        servers.addrs.clone(),
+        Duration::from_secs(10),
+    )
+    .expect("ordered set connects");
+    assert_eq!(engine.n_shards(), 3);
+}
+
+// ---------------------------------------------------------------------------
+// 3. Fault injection: real child processes
+// ---------------------------------------------------------------------------
+
+struct ShardProc {
+    child: Child,
+    addr: String,
+    _stdout: BufReader<ChildStdout>,
+}
+
+impl ShardProc {
+    fn spawn(rsfs: &Path, addr: &str) -> ShardProc {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_repsketch"))
+            .args([
+                "shard-serve",
+                "--rsfs",
+                rsfs.to_str().unwrap(),
+                "--addr",
+                addr,
+            ])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn repsketch shard-serve");
+        let stdout = child.stdout.take().expect("child stdout piped");
+        let mut reader = BufReader::new(stdout);
+        let actual;
+        loop {
+            let mut l = String::new();
+            let n = reader.read_line(&mut l).expect("read child stdout");
+            assert!(
+                n > 0,
+                "shard-serve exited before announcing its address"
+            );
+            if let Some(rest) =
+                l.trim().strip_prefix("shard-serve listening on ")
+            {
+                actual = rest.to_string();
+                break;
+            }
+        }
+        ShardProc { child, addr: actual, _stdout: reader }
+    }
+
+    fn signal(&self, sig: &str) {
+        let ok = Command::new("kill")
+            .args([sig, &self.child.id().to_string()])
+            .status()
+            .expect("run kill")
+            .success();
+        assert!(ok, "kill {sig} {}", self.child.id());
+    }
+
+    fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for ShardProc {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+/// Temp RSFS files for the fault tests; removed on drop.
+struct TempShardFiles {
+    dir: PathBuf,
+    paths: Vec<PathBuf>,
+}
+
+impl TempShardFiles {
+    fn create(sharded: &ShardedSketch) -> TempShardFiles {
+        let dir = std::env::temp_dir().join(format!(
+            "repsketch_remote_shard_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let prefix = dir.join("model");
+        let paths =
+            sharded.save_shards(prefix.to_str().unwrap()).unwrap();
+        TempShardFiles { dir, paths }
+    }
+}
+
+impl Drop for TempShardFiles {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+#[test]
+fn kill_stall_restart_every_request_gets_exactly_one_response() {
+    let _g = serial();
+    let sk = fault_sketch();
+    let sharded = ShardedSketch::from_race(&sk, 3);
+    let files = TempShardFiles::create(&sharded);
+    let mut procs: Vec<ShardProc> = files
+        .paths
+        .iter()
+        .map(|p| ShardProc::spawn(p, "127.0.0.1:0"))
+        .collect();
+    let addrs: Vec<String> =
+        procs.iter().map(|p| p.addr.clone()).collect();
+    let d = sharded.head.d;
+
+    let engine = backend::RemoteShardedEngine::connect(
+        addrs.clone(),
+        Duration::from_millis(1500),
+    )
+    .expect("connect to the child shard servers");
+    let mut router = Router::new();
+    let cfg = RouterConfig {
+        batcher: BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 4096,
+        },
+    };
+    router.add_lane("m", BackendKind::Sharded, move || {
+        Ok(Box::new(engine) as _)
+    }, &cfg);
+    let mut rng = SplitMix64::new(0x2E05);
+    let mut qs = QueryScratch::default();
+    let mut next_id = 0u64;
+    let ask = |router: &Router, rng: &mut SplitMix64, id: &mut u64| {
+        let q: Vec<f32> =
+            (0..d).map(|_| rng.next_gaussian() as f32).collect();
+        *id += 1;
+        (
+            q.clone(),
+            router
+                .submit(Request {
+                    id: *id,
+                    model: "m".into(),
+                    backend: BackendKind::Sharded,
+                    features: q,
+                    want_scores: false,
+                })
+                .unwrap(),
+        )
+    };
+
+    // Phase 0: healthy — answers are bit-identical to the scalar path.
+    for _ in 0..5 {
+        let (q, rx) = ask(&router, &mut rng, &mut next_id);
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(
+            resp.result.unwrap().to_bits(),
+            sk.query_with(&q, &mut qs).to_bits(),
+            "healthy phase must be exact"
+        );
+    }
+
+    // Phase 1: kill shard 1 mid-burst.  Every in-flight request must
+    // still get exactly one response — a correct value if its batch
+    // beat the kill, else an error NAMING shard 1.  Never silence,
+    // never a partial merge passed off as exact.
+    let mut in_flight = Vec::new();
+    for i in 0..48 {
+        in_flight.push(ask(&router, &mut rng, &mut next_id));
+        if i == 4 {
+            procs[1].kill();
+        }
+    }
+    for (q, rx) in in_flight {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("every in-flight request is answered, never dropped");
+        match resp.result {
+            Ok(v) => assert_eq!(
+                v.to_bits(),
+                sk.query_with(&q, &mut qs).to_bits(),
+                "a successful response must still be exact"
+            ),
+            Err(e) => assert!(
+                e.contains("shard 1"),
+                "failure must name the dead shard: {e}"
+            ),
+        }
+        assert!(
+            rx.try_recv().is_err(),
+            "exactly one response per request"
+        );
+    }
+    // With shard 1 down, a fresh request deterministically errors —
+    // and still names the shard.
+    let (_, rx) = ask(&router, &mut rng, &mut next_id);
+    let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    let err = resp.result.expect_err("shard 1 is down");
+    assert!(err.contains("shard 1"), "{err}");
+
+    // Phase 2: restart shard 1 on its old port — the lane must recover
+    // (reconnect + re-handshake) without anything being respawned on
+    // the coordinator side.
+    procs[1] = ShardProc::spawn(&files.paths[1], &addrs[1]);
+    let deadline = std::time::Instant::now() + Duration::from_secs(20);
+    loop {
+        let (q, rx) = ask(&router, &mut rng, &mut next_id);
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        match resp.result {
+            Ok(v) => {
+                assert_eq!(
+                    v.to_bits(),
+                    sk.query_with(&q, &mut qs).to_bits(),
+                    "post-restart answers must be exact"
+                );
+                break;
+            }
+            Err(e) => {
+                assert!(
+                    std::time::Instant::now() < deadline,
+                    "lane did not recover after restart: {e}"
+                );
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+
+    // Phase 3: SIGSTOP shard 2 — requests must time out with an error
+    // naming it (a stall is not silence), and SIGCONT must bring the
+    // lane back.
+    procs[2].signal("-STOP");
+    let (_, rx) = ask(&router, &mut rng, &mut next_id);
+    let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    let err = resp.result.expect_err("stalled shard must time out");
+    assert!(
+        err.contains("shard 2") && err.contains("timed out"),
+        "{err}"
+    );
+    procs[2].signal("-CONT");
+    std::thread::sleep(Duration::from_millis(100));
+    let deadline = std::time::Instant::now() + Duration::from_secs(20);
+    loop {
+        let (q, rx) = ask(&router, &mut rng, &mut next_id);
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        match resp.result {
+            Ok(v) => {
+                assert_eq!(
+                    v.to_bits(),
+                    sk.query_with(&q, &mut qs).to_bits(),
+                    "post-resume answers must be exact"
+                );
+                break;
+            }
+            Err(e) => {
+                assert!(
+                    std::time::Instant::now() < deadline,
+                    "lane did not recover after SIGCONT: {e}"
+                );
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// A child whose client disappears mid-exchange must keep serving (the
+/// reactor tears the dead conn down); and `shard-serve` must reject a
+/// file that is not an RSFS shard.
+#[test]
+fn shard_serve_child_survives_client_churn_and_rejects_bad_files() {
+    let _g = serial();
+    let sk = fault_sketch();
+    let sharded = ShardedSketch::from_race(&sk, 2);
+    let files = TempShardFiles::create(&sharded);
+    let proc0 = ShardProc::spawn(&files.paths[0], "127.0.0.1:0");
+    // Slam the server with half-written requests and vanish.
+    for _ in 0..8 {
+        let mut s = TcpStream::connect(&proc0.addr).unwrap();
+        s.write_all(b"{\"id\":1,\"shard\":\"mea").unwrap();
+        drop(s);
+    }
+    // It still answers a clean hello afterwards.
+    let mut s = TcpStream::connect(&proc0.addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.write_all(b"{\"id\":2,\"shard\":\"hello\"}\n").unwrap();
+    let mut reader = BufReader::new(s);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let hello = repsketch::shard::remote::parse_hello(line.trim(), 2)
+        .expect("hello after churn");
+    assert_eq!(hello.n_shards, 2);
+
+    // A monolithic RSSK file is not a shard file: exit nonzero fast.
+    let bad = files.dir.join("not_a_shard.rssk");
+    std::fs::write(&bad, sk.to_bytes()).unwrap();
+    let out = Command::new(env!("CARGO_BIN_EXE_repsketch"))
+        .args([
+            "shard-serve",
+            "--rsfs",
+            bad.to_str().unwrap(),
+            "--addr",
+            "127.0.0.1:0",
+        ])
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .status()
+        .unwrap();
+    assert!(!out.success(), "shard-serve must reject a non-RSFS file");
+}
