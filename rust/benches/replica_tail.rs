@@ -1,0 +1,359 @@
+//! Tail latency under replica stalls: the number the replicated shard
+//! plane exists for.  Real `repsketch shard-serve` child processes on
+//! loopback, 2 shards; a stall injector SIGSTOPs one replica of shard
+//! 0 on a duty cycle (~150 ms stopped / ~50 ms running) while a paced
+//! sequential request stream measures per-request latency.  Three
+//! cases:
+//!
+//! * `replicated calm` — 2 replicas per shard, no faults (control).
+//! * `unreplicated under stalls` — 1 replica per shard: every stall
+//!   parks the in-flight request until SIGCONT, so the stall duration
+//!   lands straight in the p99.
+//! * `replicated under stalls` — 2 replicas per shard: the hedge
+//!   deadline (seeded from the observed EWMA latency) reroutes the
+//!   parked request to the healthy replica within milliseconds, and
+//!   in-flight accounting steers the rest of the stall window away
+//!   from the stopped process.
+//!
+//! The headline metric is `p99_unreplicated_over_replicated` — how
+//! many times worse the unreplicated tail is under the same fault
+//! schedule.  A bit-identity anchor runs before any timing: replicas
+//! serve the same count arrays, so replication must never change an
+//! answer.
+//!
+//! Writes `BENCH_replica.json` at the repo root.
+//!
+//! Run: `cargo bench --bench replica_tail [-- --smoke]`
+
+#[cfg(not(target_os = "linux"))]
+fn main() {
+    println!("replica_tail bench requires Linux (epoll shard plane)");
+}
+
+#[cfg(target_os = "linux")]
+fn main() -> anyhow::Result<()> {
+    linux::run()
+}
+
+#[cfg(target_os = "linux")]
+mod linux {
+    use repsketch::coordinator::{backend, Engine};
+    use repsketch::kernel::KernelParams;
+    use repsketch::shard::{RemoteOptions, ShardedSketch};
+    use repsketch::sketch::{RaceSketch, SketchConfig};
+    use repsketch::util::bench::{self, BenchResult};
+    use repsketch::util::json::{self, Json};
+    use repsketch::util::rng::SplitMix64;
+    use std::io::BufRead;
+    use std::path::Path;
+    use std::process::{Child, Command, Stdio};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    /// Small enough that a single request is sub-millisecond over
+    /// loopback — the tail under faults, not the kernel, is the
+    /// subject.
+    const D: usize = 16;
+    const P: usize = 8;
+    const M: usize = 64;
+    const ROWS: usize = 512;
+    const COLS: usize = 32;
+    const GROUPS: usize = 8;
+    const SHARDS: usize = 2;
+    const BATCH: usize = 8;
+    /// Stall duty cycle.  With ~2 ms request pacing, each ~50 ms run
+    /// window passes a dozen-odd requests and each stall parks exactly
+    /// one, so stalled requests are several percent of the stream —
+    /// squarely inside the p99, not dancing on its edge.
+    const STALL_MS: u64 = 150;
+    const RUN_MS: u64 = 50;
+    const PACE: Duration = Duration::from_millis(2);
+
+    fn synthetic_sketch() -> RaceSketch {
+        let mut rng = SplitMix64::new(0x7A11_5CA1);
+        let kp = KernelParams {
+            d: D,
+            p: P,
+            m: M,
+            a: (0..D * P)
+                .map(|_| rng.next_gaussian() as f32 * 0.5)
+                .collect(),
+            x: (0..M * P).map(|_| rng.next_gaussian() as f32).collect(),
+            alpha: (0..M).map(|_| 0.5 + rng.next_f32()).collect(),
+            width: 2.0,
+            lsh_seed: rng.next_u64(),
+            k_per_row: 2,
+            default_rows: ROWS,
+            default_cols: COLS,
+        };
+        RaceSketch::build(
+            &kp,
+            &SketchConfig { groups: GROUPS, ..SketchConfig::default() },
+        )
+    }
+
+    struct Shard {
+        child: Child,
+        addr: String,
+        _stdout: std::io::BufReader<std::process::ChildStdout>,
+    }
+
+    impl Shard {
+        fn spawn(rsfs: &Path) -> Shard {
+            let mut child =
+                Command::new(env!("CARGO_BIN_EXE_repsketch"))
+                    .args([
+                        "shard-serve",
+                        "--rsfs",
+                        rsfs.to_str().unwrap(),
+                        "--addr",
+                        "127.0.0.1:0",
+                    ])
+                    .stdout(Stdio::piped())
+                    .stderr(Stdio::null())
+                    .spawn()
+                    .expect("spawn repsketch shard-serve");
+            let stdout = child.stdout.take().expect("piped stdout");
+            let mut reader = std::io::BufReader::new(stdout);
+            let addr;
+            loop {
+                let mut l = String::new();
+                let n =
+                    reader.read_line(&mut l).expect("read child stdout");
+                assert!(
+                    n > 0,
+                    "shard-serve exited before announcing its address"
+                );
+                if let Some(rest) =
+                    l.trim().strip_prefix("shard-serve listening on ")
+                {
+                    addr = rest.to_string();
+                    break;
+                }
+            }
+            Shard { child, addr, _stdout: reader }
+        }
+    }
+
+    impl Drop for Shard {
+        fn drop(&mut self) {
+            // A SIGSTOPped child still dies to SIGKILL.
+            let _ = self.child.kill();
+            let _ = self.child.wait();
+        }
+    }
+
+    /// SIGSTOP/SIGCONT `pid` on the duty cycle until `stop` flips;
+    /// always leaves the process running.
+    fn stall_injector(
+        pid: u32,
+        stop: Arc<AtomicBool>,
+    ) -> std::thread::JoinHandle<()> {
+        std::thread::spawn(move || {
+            let pid = pid.to_string();
+            while !stop.load(Ordering::Relaxed) {
+                let _ = Command::new("kill")
+                    .args(["-STOP", &pid])
+                    .status();
+                std::thread::sleep(Duration::from_millis(STALL_MS));
+                let _ = Command::new("kill")
+                    .args(["-CONT", &pid])
+                    .status();
+                std::thread::sleep(Duration::from_millis(RUN_MS));
+            }
+            let _ =
+                Command::new("kill").args(["-CONT", &pid]).status();
+        })
+    }
+
+    /// `n` paced sequential batches; per-request latency quantiles
+    /// from the raw samples (pacing sleeps excluded from the timing).
+    fn measure(
+        name: &str,
+        n: usize,
+        engine: &mut backend::RemoteShardedEngine,
+        rows: &[Vec<f32>],
+    ) -> anyhow::Result<BenchResult> {
+        let mut samples = Vec::with_capacity(n);
+        for _ in 0..n {
+            let t = Instant::now();
+            std::hint::black_box(engine.eval_batch(rows)?);
+            samples.push(t.elapsed().as_nanos() as f64);
+            std::thread::sleep(PACE);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let q =
+            |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+        Ok(BenchResult {
+            name: name.to_string(),
+            iters: n,
+            mean_ns: mean,
+            p50_ns: q(0.5),
+            p99_ns: q(0.99),
+            min_ns: samples[0],
+        })
+    }
+
+    pub fn run() -> anyhow::Result<()> {
+        let smoke = std::env::args().any(|a| a == "--smoke");
+        let n = if smoke { 150 } else { 600 };
+
+        let sketch = synthetic_sketch();
+        let sharded = ShardedSketch::from_race(&sketch, SHARDS);
+        let dir = std::env::temp_dir().join(format!(
+            "repsketch_replica_tail_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir)?;
+        let prefix = dir.join("model");
+        let paths = sharded.save_shards(prefix.to_str().unwrap())?;
+
+        let mut rng = SplitMix64::new(0x7A11);
+        let rows: Vec<Vec<f32>> = (0..BATCH)
+            .map(|_| {
+                (0..D).map(|_| rng.next_gaussian() as f32).collect()
+            })
+            .collect();
+
+        println!(
+            "replica tail: shards={SHARDS} B={BATCH} stall={STALL_MS}ms \
+             run={RUN_MS}ms pace={PACE:?} n={n}{}",
+            if smoke { " (smoke)" } else { "" }
+        );
+        bench::header();
+        let mut results = Vec::new();
+
+        // --- Unreplicated: one replica per shard, shard 0 stalled. ---
+        let r_unrep = {
+            let s0 = Shard::spawn(&paths[0]);
+            let s1 = Shard::spawn(&paths[1]);
+            let mut engine =
+                backend::RemoteShardedEngine::connect_replicated(
+                    vec![
+                        vec![s0.addr.clone()],
+                        vec![s1.addr.clone()],
+                    ],
+                    RemoteOptions::with_timeout(Duration::from_secs(
+                        30,
+                    )),
+                )?;
+            // Bit-identity anchor before any timing.
+            let got = engine.eval_batch(&rows)?;
+            let flat: Vec<f32> = rows.concat();
+            let want = sketch.query_batch(&flat);
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                anyhow::ensure!(
+                    g.to_bits() == w.to_bits(),
+                    "remote diverges from monolithic at row {i}"
+                );
+            }
+            let stop = Arc::new(AtomicBool::new(false));
+            let inj = stall_injector(s0.child.id(), stop.clone());
+            let r = measure(
+                "unreplicated under stalls",
+                n,
+                &mut engine,
+                &rows,
+            )?;
+            stop.store(true, Ordering::Relaxed);
+            inj.join().unwrap();
+            r
+        };
+        r_unrep.print();
+        results.push(r_unrep.clone());
+
+        // --- Replicated: two replicas per shard; same fault schedule
+        // against shard 0's first-listed replica. ---
+        let (r_calm, r_rep) = {
+            let s0a = Shard::spawn(&paths[0]);
+            let s0b = Shard::spawn(&paths[0]);
+            let s1a = Shard::spawn(&paths[1]);
+            let s1b = Shard::spawn(&paths[1]);
+            let mut opts =
+                RemoteOptions::with_timeout(Duration::from_secs(30));
+            opts.hedge_initial = Duration::from_millis(20);
+            let mut engine =
+                backend::RemoteShardedEngine::connect_replicated(
+                    vec![
+                        vec![s0a.addr.clone(), s0b.addr.clone()],
+                        vec![s1a.addr.clone(), s1b.addr.clone()],
+                    ],
+                    opts,
+                )?;
+            engine.eval_batch(&rows)?; // warm + seed the EWMA
+            let r_calm =
+                measure("replicated calm", n, &mut engine, &rows)?;
+            let stop = Arc::new(AtomicBool::new(false));
+            let inj = stall_injector(s0a.child.id(), stop.clone());
+            let r_rep = measure(
+                "replicated under stalls",
+                n,
+                &mut engine,
+                &rows,
+            )?;
+            stop.store(true, Ordering::Relaxed);
+            inj.join().unwrap();
+            (r_calm, r_rep)
+        };
+        r_calm.print();
+        r_rep.print();
+        results.push(r_calm.clone());
+        results.push(r_rep.clone());
+
+        let ratio = r_unrep.p99_ns / r_rep.p99_ns;
+        println!(
+            "  -> p99 under stalls: unreplicated {:.2} ms vs \
+             replicated {:.2} ms ({ratio:.1}x); calm p99 {:.2} ms",
+            r_unrep.p99_ns / 1e6,
+            r_rep.p99_ns / 1e6,
+            r_calm.p99_ns / 1e6,
+        );
+
+        let repo_root = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("rust/ has a parent")
+            .to_path_buf();
+        let meta: Vec<(&str, Json)> = vec![
+            (
+                "config",
+                json::obj(vec![
+                    ("d", Json::from_u64(D as u64)),
+                    ("p", Json::from_u64(P as u64)),
+                    ("m", Json::from_u64(M as u64)),
+                    ("rows", Json::from_u64(ROWS as u64)),
+                    ("cols", Json::from_u64(COLS as u64)),
+                    ("groups", Json::from_u64(GROUPS as u64)),
+                    ("shards", Json::from_u64(SHARDS as u64)),
+                    ("batch", Json::from_u64(BATCH as u64)),
+                ]),
+            ),
+            ("smoke", Json::Bool(smoke)),
+            ("stall_ms", Json::from_u64(STALL_MS)),
+            ("run_ms", Json::from_u64(RUN_MS)),
+            ("requests_per_case", Json::from_u64(n as u64)),
+            ("p99_unreplicated_ms", Json::num(r_unrep.p99_ns / 1e6)),
+            ("p99_replicated_ms", Json::num(r_rep.p99_ns / 1e6)),
+            (
+                "p99_replicated_calm_ms",
+                Json::num(r_calm.p99_ns / 1e6),
+            ),
+            ("p99_unreplicated_over_replicated", Json::num(ratio)),
+            (
+                "note",
+                Json::Str(
+                    "same SIGSTOP duty cycle against both topologies; \
+                     the ratio is what hedged scatter + in-batch \
+                     failover buy the tail when a replica stalls"
+                        .into(),
+                ),
+            ),
+        ];
+        let out = repo_root.join("BENCH_replica.json");
+        bench::write_json(&out, "replica_tail", meta, &results)?;
+        println!("json -> {}", out.display());
+        std::fs::remove_dir_all(&dir).ok();
+        Ok(())
+    }
+}

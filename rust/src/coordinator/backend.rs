@@ -690,6 +690,23 @@ impl RemoteShardedEngine {
         )?))
     }
 
+    /// Like [`Self::connect`] with replica groups: `groups[s]` lists
+    /// every replica address of shard `s`.  Every replica of every
+    /// shard is dialed and handshake-validated up front (a lane must
+    /// not come up half-exact); afterwards the set survives replica
+    /// deaths via hedging, in-batch failover, and backed-off
+    /// reintegration (see `shard::remote`).
+    pub fn connect_replicated(
+        groups: Vec<Vec<String>>,
+        opts: crate::shard::RemoteOptions,
+    ) -> anyhow::Result<Self> {
+        Ok(Self::new(
+            crate::shard::RemoteShardSet::connect_replicated(
+                groups, opts,
+            )?,
+        ))
+    }
+
     pub fn new(set: crate::shard::RemoteShardSet) -> Self {
         Self {
             set,
@@ -708,6 +725,14 @@ impl RemoteShardedEngine {
 
     pub fn n_shards(&self) -> usize {
         self.set.n_shards()
+    }
+
+    /// The set's live replication/SLO counters — grab the `Arc` before
+    /// moving the engine into its lane, then register it with
+    /// `Router::register_shard_stats` so the `stats` verb serves it.
+    pub fn stats(&self)
+        -> std::sync::Arc<crate::metrics::slo::RemoteShardStats> {
+        self.set.stats()
     }
 }
 

@@ -84,6 +84,48 @@
 //! by adding shard processes, not cores
 //! (`tests/remote_shard.rs` locks the fault model; the bit-identity is
 //! property-tested there too).
+//!
+//! # Operating the replicated shard plane
+//!
+//! `serve --sharded-remote NAME=a0|a1,b0|b1` registers shard replica
+//! GROUPS: comma-separated shards in shard-index order, `|`-separated
+//! replica addresses within a shard (all serving the same RSFS file,
+//! which is why replication can never change an answer).  Per batch,
+//! each shard's request goes to its least-loaded healthy replica; a
+//! straggler is hedged to a second replica after an adaptive deadline
+//! seeded from observed latency; a replica that dies mid-gather fails
+//! over in-batch under the same request id (first valid answer wins,
+//! late duplicates are discarded by id); failed replicas are
+//! quarantined and re-probed with capped exponential backoff + jitter.
+//! `--remote-timeout-ms` is the hard per-batch deadline and
+//! `--hedge-ms` the pre-sample hedge delay (see
+//! `shard::RemoteOptions`).
+//!
+//! ## The `stats` wire verb
+//!
+//! `{"id": N, "stats": true}` on the inference plane answers one line:
+//!
+//! ```text
+//! {"id": N, "stats": {
+//!    "rejected": <backpressure rejections>,
+//!    "lanes":  [{"model", "backend", "submitted", "batches",
+//!                "ok", "errors", "latency": {n, mean_us, p50_us,
+//!                p99_us, p999_us}}, ...],
+//!    "shards": [{"model", "shards": [{"shard", "gathers", "errors",
+//!                "hedges", "failovers", "reconnects", "quarantines",
+//!                "discarded", "latency": {...},
+//!                "replicas": [{"addr", "sent", "answered",
+//!                              "abandoned", "ewma_us"}, ...]}, ...]}]
+//! }}
+//! ```
+//!
+//! Shard servers answer the same verb with their own serve counters.
+//! All counters are monotonic for the process lifetime; operators diff
+//! successive snapshots for windowed rates.  The **error budget** for
+//! an availability target `t` (e.g. `0.999`) over a window is
+//! `(ok + errors) × (1 − t) − errors` — how many more errors the lane
+//! may serve before the objective is violated (negative = blown); see
+//! `metrics::slo` for the convention.
 
 pub mod backend;
 pub mod batcher;

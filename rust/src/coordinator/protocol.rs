@@ -11,6 +11,11 @@
 //! `{"id": 7, "y": 2, "scores": [..C floats..], "us": 13.5}`.  The flag
 //! is per-request (a batch mixes both kinds freely) and ignored by
 //! single-output engines, which carry no score vector.
+//!
+//! A line of the form `{"id": 7, "stats": true}` is NOT an inference
+//! request: it asks the coordinator for its SLO counters (see
+//! `Router::stats_line` for the response schema) and is answered
+//! inline, without touching any lane.
 
 use super::backend::BackendKind;
 use crate::util::json::{self, Json};
@@ -158,6 +163,18 @@ impl Response {
         let us = j.get("us").and_then(|v| v.as_f64()).unwrap_or(0.0);
         Ok(Response { id, result: Ok(y), scores, latency_us: us })
     }
+}
+
+/// Recognize a `{"id": N, "stats": true}` line — the stats verb.
+/// Returns the request id, or `None` when the line is anything else
+/// (including unparseable JSON: those fall through to the normal
+/// request path and its error reporting).
+pub fn parse_stats_line(line: &str) -> Option<u64> {
+    let j = json::parse(line).ok()?;
+    if j.get("stats").and_then(|v| v.as_bool()) != Some(true) {
+        return None;
+    }
+    j.get("id").and_then(|v| v.as_u64())
 }
 
 /// Best-effort recovery of the `"id"` field from a line that failed
@@ -333,5 +350,18 @@ mod tests {
         assert!(Request::parse_line(r#"{"id":1,"model":"m","x":[]}"#)
             .is_err());
         assert!(Request::parse_line("not json").is_err());
+    }
+
+    #[test]
+    fn stats_line_detection() {
+        assert_eq!(parse_stats_line(r#"{"id":7,"stats":true}"#), Some(7));
+        // Anything else — including near-misses — is not a stats line.
+        assert_eq!(parse_stats_line(r#"{"id":7,"stats":false}"#), None);
+        assert_eq!(parse_stats_line(r#"{"stats":true}"#), None);
+        assert_eq!(
+            parse_stats_line(r#"{"id":1,"model":"m","x":[1]}"#),
+            None
+        );
+        assert_eq!(parse_stats_line("garbage"), None);
     }
 }

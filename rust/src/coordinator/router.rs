@@ -1,13 +1,18 @@
 //! Request router: owns one dynamic batcher + worker thread per
-//! (model, backend) lane, dispatches submissions, tracks latency
-//! histograms, and handles shutdown.
+//! (model, backend) lane, dispatches submissions, tracks per-lane SLO
+//! counters (latency quantiles + error budget), and handles shutdown.
+//!
+//! The `stats` wire verb (`{"id": N, "stats": true}`) is answered
+//! here, inline on the reactor thread — see [`Router::stats_line`] for
+//! the response schema.
 
 use super::backend::{BackendKind, Engine};
 use super::batcher::{
     BatcherConfig, DynamicBatcher, Pending, Responder, ResponseSink,
 };
 use super::protocol::{Request, Response};
-use crate::metrics::LatencyHistogram;
+use crate::metrics::slo::{LaneSlo, RemoteShardStats};
+use crate::util::json::{self, Json};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver};
@@ -25,18 +30,26 @@ pub struct RouterConfig {
 struct Lane {
     batcher: Arc<DynamicBatcher>,
     worker: Option<std::thread::JoinHandle<()>>,
-    latency: Arc<LatencyHistogram>,
+    slo: Arc<LaneSlo>,
 }
 
 /// Routes requests to per-(model, backend) lanes.
 pub struct Router {
     lanes: HashMap<(String, BackendKind), Lane>,
     pub rejected: AtomicU64,
+    /// Remote shard sets whose counters the `stats` verb reports,
+    /// keyed by model name (registered at serve start, read-only
+    /// after).
+    shard_stats: Vec<(String, Arc<RemoteShardStats>)>,
 }
 
 impl Router {
     pub fn new() -> Self {
-        Self { lanes: HashMap::new(), rejected: AtomicU64::new(0) }
+        Self {
+            lanes: HashMap::new(),
+            rejected: AtomicU64::new(0),
+            shard_stats: Vec::new(),
+        }
     }
 
     /// Register a lane: a backend engine served by one worker thread.
@@ -55,10 +68,10 @@ impl Router {
         F: FnOnce() -> anyhow::Result<Box<dyn Engine>> + Send + 'static,
     {
         let batcher = Arc::new(DynamicBatcher::new(cfg.batcher.clone()));
-        let latency = Arc::new(LatencyHistogram::new());
+        let slo = Arc::new(LaneSlo::new());
         let worker = {
             let batcher = batcher.clone();
-            let latency = latency.clone();
+            let slo = slo.clone();
             let label = format!("{model}/{}", kind.name());
             std::thread::Builder::new()
                 .name(format!("lane-{label}"))
@@ -83,7 +96,7 @@ impl Router {
                                 Self::run_batch(
                                     &mut *engine,
                                     batch,
-                                    &latency,
+                                    &slo,
                                 );
                             }
                         }
@@ -92,6 +105,7 @@ impl Router {
                             while let Some(batch) = batcher.next_batch() {
                                 for p in batch {
                                     let id = p.req.id;
+                                    slo.record_error();
                                     p.responder.send(
                                         Response::err(Some(id),
                                                       msg.clone()),
@@ -105,7 +119,7 @@ impl Router {
         };
         let replaced = self.lanes.insert(
             (model.to_string(), kind),
-            Lane { batcher, worker: Some(worker), latency },
+            Lane { batcher, worker: Some(worker), slo },
         );
         // Re-registering a (model, backend) key replaces the lane
         // (last registration wins); shut the old one down properly —
@@ -122,7 +136,7 @@ impl Router {
     fn run_batch(
         engine: &mut dyn Engine,
         batch: Vec<Pending>,
-        latency: &LatencyHistogram,
+        slo: &LaneSlo,
     ) {
         let dim = engine.dim();
         // Feature vectors are MOVED out of the requests — the hot path
@@ -138,6 +152,7 @@ impl Router {
                 ok.push(p);
             } else {
                 let id = p.req.id;
+                slo.record_error();
                 p.responder.send(Response::err(
                     Some(id),
                     format!("dim mismatch: got {}, want {dim}", row.len()),
@@ -158,7 +173,7 @@ impl Router {
                     ok.into_iter().zip(out.values).enumerate()
                 {
                     let dur = p.enqueued.elapsed();
-                    latency.record(dur);
+                    slo.record_ok(dur);
                     let id = p.req.id;
                     // Slice this row out of the flat matrix — the only
                     // per-request score allocation is for requests that
@@ -183,6 +198,7 @@ impl Router {
                 let msg = format!("engine error: {e}");
                 for p in ok {
                     let id = p.req.id;
+                    slo.record_error();
                     p.responder.send(Response::err(Some(id), msg.clone()));
                 }
             }
@@ -264,17 +280,120 @@ impl Router {
                     k.name().to_string(),
                     lane.batcher.submitted.load(Ordering::Relaxed),
                     lane.batcher.batches.load(Ordering::Relaxed),
-                    lane.latency.summary(),
+                    lane.slo.latency.summary(),
                 )
             })
             .collect()
     }
 
-    pub fn latency_of(&self, model: &str, kind: BackendKind)
-        -> Option<Arc<LatencyHistogram>> {
+    pub fn slo_of(&self, model: &str, kind: BackendKind)
+        -> Option<Arc<LaneSlo>> {
         self.lanes
             .get(&(model.to_string(), kind))
-            .map(|l| l.latency.clone())
+            .map(|l| l.slo.clone())
+    }
+
+    /// Attach a remote shard set's counters to the `stats` verb under
+    /// `model`.  Called during serve start, before the reactor runs.
+    pub fn register_shard_stats(
+        &mut self,
+        model: &str,
+        stats: Arc<RemoteShardStats>,
+    ) {
+        self.shard_stats.push((model.to_string(), stats));
+    }
+
+    /// The `stats` verb response: one JSON line with every lane's SLO
+    /// counters and every registered remote shard set's replication
+    /// counters.
+    ///
+    /// Schema:
+    /// `{"id": N, "stats": {"rejected": R, "lanes": [{"model", "backend",
+    /// "submitted", "batches", "ok", "errors", "latency": {"n",
+    /// "mean_us", "p50_us", "p99_us", "p999_us"}}, ...], "shards":
+    /// [{"model", "shards": [per-shard objects with gathers/errors/
+    /// hedges/failovers/reconnects/quarantines/discarded/latency and
+    /// nested per-replica counters]}, ...]}}`.
+    ///
+    /// The error budget over a window at target availability `t` is
+    /// `(ok + errors) × (1 − t) − errors`, diffing two snapshots —
+    /// see `metrics::slo`.
+    pub fn stats_line(&self, id: u64) -> String {
+        let mut lanes: Vec<(&String, &BackendKind, &Lane)> = self
+            .lanes
+            .iter()
+            .map(|((m, k), lane)| (m, k, lane))
+            .collect();
+        lanes.sort_by(|a, b| (a.0, a.1.name()).cmp(&(b.0, b.1.name())));
+        let lanes = Json::Arr(
+            lanes
+                .into_iter()
+                .map(|(m, k, lane)| {
+                    json::obj(vec![
+                        ("model", Json::Str(m.clone())),
+                        ("backend", Json::Str(k.name().to_string())),
+                        (
+                            "submitted",
+                            Json::from_u64(
+                                lane.batcher
+                                    .submitted
+                                    .load(Ordering::Relaxed),
+                            ),
+                        ),
+                        (
+                            "batches",
+                            Json::from_u64(
+                                lane.batcher
+                                    .batches
+                                    .load(Ordering::Relaxed),
+                            ),
+                        ),
+                        (
+                            "ok",
+                            Json::from_u64(lane.slo.ok_count()),
+                        ),
+                        (
+                            "errors",
+                            Json::from_u64(lane.slo.error_count()),
+                        ),
+                        (
+                            "latency",
+                            crate::metrics::slo::histogram_json(
+                                &lane.slo.latency,
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        let shards = Json::Arr(
+            self.shard_stats
+                .iter()
+                .map(|(m, stats)| {
+                    json::obj(vec![
+                        ("model", Json::Str(m.clone())),
+                        ("shards", stats.to_json()),
+                    ])
+                })
+                .collect(),
+        );
+        json::obj(vec![
+            ("id", Json::from_u64(id)),
+            (
+                "stats",
+                json::obj(vec![
+                    (
+                        "rejected",
+                        Json::from_u64(
+                            self.rejected.load(Ordering::Relaxed),
+                        ),
+                    ),
+                    ("lanes", lanes),
+                    ("shards", shards),
+                ]),
+            ),
+        ])
+        .to_string()
     }
 
     /// Graceful shutdown: close all lanes, join workers (drains queues).
@@ -310,6 +429,12 @@ impl super::net::LineHandler for Router {
         sender: super::net::CompletionSender,
     ) {
         use super::protocol::extract_id;
+        // The stats verb is answered inline (counter loads + JSON
+        // rendering only — no lane round-trip, no kernel work).
+        if let Some(rid) = super::protocol::parse_stats_line(&line) {
+            sender.send_line(self.stats_line(rid));
+            return;
+        }
         match Request::parse_line(&line) {
             Ok(req) => {
                 let _ = self
@@ -559,5 +684,63 @@ mod tests {
         assert_eq!(stats.len(), 1);
         assert_eq!(stats[0].2, 10); // submitted
         assert!(stats[0].3 >= 1); // batches
+    }
+
+    #[test]
+    fn stats_line_reports_slo_counters_as_json() {
+        let mut r = mk_router(false);
+        for i in 0..5 {
+            let _ = r.call(req(i, vec![0.0, 0.0, 0.0]));
+        }
+        // One dim-mismatch error charged to the lane's budget.
+        let bad = r.call(req(99, vec![1.0]));
+        assert!(bad.result.is_err());
+        r.register_shard_stats(
+            "m",
+            Arc::new(RemoteShardStats::new(&[vec![
+                "a0".to_string(),
+                "a1".to_string(),
+            ]])),
+        );
+        let line = r.stats_line(31);
+        let j = json::parse(&line).unwrap();
+        assert_eq!(j.get("id").unwrap().as_u64(), Some(31));
+        let stats = j.get("stats").unwrap();
+        assert_eq!(stats.get("rejected").unwrap().as_u64(), Some(0));
+        let lanes = stats.get("lanes").unwrap().as_arr().unwrap();
+        assert_eq!(lanes.len(), 1);
+        assert_eq!(lanes[0].get("model").unwrap().as_str(), Some("m"));
+        assert_eq!(lanes[0].get("ok").unwrap().as_u64(), Some(5));
+        assert_eq!(lanes[0].get("errors").unwrap().as_u64(), Some(1));
+        let lat = lanes[0].get("latency").unwrap();
+        assert_eq!(lat.get("n").unwrap().as_u64(), Some(5));
+        assert!(lat.get("p999_us").unwrap().as_f64().unwrap() > 0.0);
+        let shards = stats.get("shards").unwrap().as_arr().unwrap();
+        assert_eq!(shards.len(), 1);
+        assert_eq!(
+            shards[0].get("model").unwrap().as_str(),
+            Some("m")
+        );
+        let per_shard =
+            shards[0].get("shards").unwrap().as_arr().unwrap();
+        assert_eq!(per_shard.len(), 1);
+        assert_eq!(
+            per_shard[0]
+                .get("replicas")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .len(),
+            2
+        );
+    }
+
+    #[test]
+    fn lane_slo_exposed_for_lookup() {
+        let r = mk_router(false);
+        let _ = r.call(req(1, vec![0.0, 0.0, 0.0]));
+        let slo = r.slo_of("m", BackendKind::Sketch).unwrap();
+        assert_eq!(slo.ok_count(), 1);
+        assert!(r.slo_of("nope", BackendKind::Sketch).is_none());
     }
 }

@@ -185,12 +185,14 @@ fn handle_conn_fallback(
         Ok(s) => s,
         Err(_) => return,
     });
-    // Writer thread: serializes responses from all in-flight requests.
-    let (out_tx, out_rx) = mpsc::channel::<Response>();
+    // Writer thread: serializes response lines from all in-flight
+    // requests.  Carries raw strings (not `Response`) so the `stats`
+    // verb — whose reply is not a protocol `Response` — shares the
+    // same ordered write path.
+    let (out_tx, out_rx) = mpsc::channel::<String>();
     let mut wstream = stream;
     let writer = std::thread::spawn(move || {
-        for resp in out_rx {
-            let mut line = resp.to_line();
+        for mut line in out_rx {
             line.push('\n');
             if wstream.write_all(line.as_bytes()).is_err() {
                 break;
@@ -209,6 +211,12 @@ fn handle_conn_fallback(
         if line.trim().is_empty() {
             continue;
         }
+        // `stats` verb: answered inline from the router's SLO counters,
+        // same as the reactor front-end.
+        if let Some(rid) = super::protocol::parse_stats_line(&line) {
+            let _ = out_tx.send(router.stats_line(rid));
+            continue;
+        }
         match Request::parse_line(&line) {
             Ok(req) => {
                 let id = req.id;
@@ -223,22 +231,28 @@ fn handle_conn_fallback(
                             let resp = rx.recv().unwrap_or_else(|_| {
                                 Response::err(Some(id), "worker dropped")
                             });
-                            let _ = out_tx.send(resp);
+                            let _ = out_tx.send(resp.to_line());
                         });
                     }
                     Err(e) => {
-                        let _ = out_tx.send(Response::err(
-                            Some(id),
-                            format!("backpressure: {e:?}"),
-                        ));
+                        let _ = out_tx.send(
+                            Response::err(
+                                Some(id),
+                                format!("backpressure: {e:?}"),
+                            )
+                            .to_line(),
+                        );
                     }
                 }
             }
             Err(e) => {
-                let _ = out_tx.send(Response::err(
-                    extract_id(&line),
-                    format!("bad request: {e}"),
-                ));
+                let _ = out_tx.send(
+                    Response::err(
+                        extract_id(&line),
+                        format!("bad request: {e}"),
+                    )
+                    .to_line(),
+                );
             }
         }
     }

@@ -7,8 +7,8 @@
 //! repsketch exp theory [--dataset NAME]    §3.2.1 error-decay check
 //! repsketch serve [--addr A] [--pjrt] [--fused NAME=FILE,...]
 //!                 [--sharded NAME=FILE:N|NAME=PREFIX,...]
-//!                 [--sharded-remote NAME=addr0,addr1,...]
-//!                 [--remote-timeout-ms N]
+//!                 [--sharded-remote NAME=a0|a1,b0|b1,...]
+//!                 [--remote-timeout-ms N] [--hedge-ms N]
 //!                                          TCP JSON-line inference server
 //!                                          (epoll reactor; thread-per-
 //!                                          connection only as the
@@ -40,10 +40,18 @@
 //!
 //! The shard plane also runs OVER THE WIRE: `shard-serve --rsfs FILE`
 //! hosts one shard's kernel behind the epoll reactor, and `serve
-//! --sharded-remote model=addr0,addr1,...` (addresses in shard-index
-//! order) registers an `sh` lane whose scatter/gather crosses TCP —
+//! --sharded-remote model=a0|a1,b0|b1,...` (commas separate shards in
+//! shard-index order, `|` separates replicas of one shard) registers
+//! an `sh` lane whose scatter/gather crosses TCP — every replica
 //! handshake-validated like an on-disk set, bit-for-bit identical to
-//! the local lane, with per-batch reconnect after shard failures.
+//! the local lane.  With replicas, a straggling shard is hedged to a
+//! second replica after an adaptive deadline (`--hedge-ms` seeds it
+//! before latency samples exist), a replica death mid-batch fails
+//! over within the batch, and dead replicas are re-probed with capped
+//! backoff — see `repsketch::shard` module docs for the full
+//! operations story.  The coordinator answers `{"id":N,"stats":true}`
+//! with per-lane and per-shard SLO counters (latency quantiles, error
+//! budgets, hedge/failover/quarantine counts).
 //!
 //! Artifacts root defaults to ./artifacts (override with RS_ARTIFACTS).
 
@@ -128,7 +136,8 @@ fn print_usage() {
          repsketch exp ablation [--dataset adult]\n  \
          repsketch serve [--addr 127.0.0.1:7878] [--pjrt] [--datasets a,b] \
          [--fused NAME=FILE,...] [--sharded NAME=FILE:N|NAME=PREFIX,...] \
-         [--sharded-remote NAME=addr0,addr1,...] [--remote-timeout-ms N]\n  \
+         [--sharded-remote NAME=a0|a1,b0|b1,...] [--remote-timeout-ms N] \
+         [--hedge-ms N]\n  \
          repsketch eval --dataset NAME [--backend rs|nn|kernel]\n  \
          repsketch build-sketch --dataset NAME [--rows L] [--cols R] --out FILE\n  \
          repsketch fuse-sketch --inputs A.rssk,B.rssk,... --out FILE\n  \
@@ -448,13 +457,29 @@ fn cmd_shard_sketch(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// Parse `--sharded-remote NAME=addr0,addr1,...[,NAME2=...]`: commas
-/// separate both entries and a set's addresses, so a segment with `=`
+/// Parse `--sharded-remote NAME=a0|a1,b0|b1,...[,NAME2=...]`: commas
+/// separate both entries and a set's shards, so a segment with `=`
 /// starts a new entry and every other segment extends the previous
-/// entry's address list (shard-index order).
+/// entry's shard list (shard-index order).  Within one shard segment,
+/// `|` separates the replicas of that shard; a plain address is a
+/// one-replica group, so the pre-replication `NAME=a,b,c` form parses
+/// unchanged.
 #[cfg(target_os = "linux")]
-fn parse_remote_spec(spec: &str) -> Result<Vec<(String, Vec<String>)>> {
-    let mut entries: Vec<(String, Vec<String>)> = Vec::new();
+fn parse_remote_spec(spec: &str)
+    -> Result<Vec<(String, Vec<Vec<String>>)>> {
+    fn replica_group(seg: &str) -> Result<Vec<String>> {
+        let group: Vec<String> = seg
+            .split('|')
+            .map(|a| a.trim().to_string())
+            .filter(|a| !a.is_empty())
+            .collect();
+        anyhow::ensure!(
+            !group.is_empty(),
+            "empty replica group in --sharded-remote segment {seg:?}"
+        );
+        Ok(group)
+    }
+    let mut entries: Vec<(String, Vec<Vec<String>>)> = Vec::new();
     for seg in spec.split(',') {
         let seg = seg.trim();
         if seg.is_empty() {
@@ -463,16 +488,16 @@ fn parse_remote_spec(spec: &str) -> Result<Vec<(String, Vec<String>)>> {
         if let Some((model, first)) = seg.split_once('=') {
             entries.push((
                 model.trim().to_string(),
-                vec![first.trim().to_string()],
+                vec![replica_group(first)?],
             ));
         } else {
             let Some(last) = entries.last_mut() else {
                 bail!(
                     "bad --sharded-remote {spec:?} (want \
-                     NAME=addr0,addr1,...)"
+                     NAME=a0|a1,b0|b1,...)"
                 );
             };
-            last.1.push(seg.to_string());
+            last.1.push(replica_group(seg)?);
         }
     }
     anyhow::ensure!(
@@ -653,25 +678,37 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             }, &cfg);
         }
     }
-    // Remote-sharded lanes: `--sharded-remote model=addr0,addr1,...` —
+    // Remote-sharded lanes: `--sharded-remote model=a0|a1,b0|b1,...` —
     // every address hosts `repsketch shard-serve` for its shard of the
-    // SAME split (shard-index order).  The connect handshake validates
-    // the set like the RSFS loader does; a half-wrong set never comes
-    // up.  The lane keeps the `sh` wire name: clients cannot tell (and
-    // must not care) whether shards are threads or processes.
+    // SAME split (commas separate shards in shard-index order, `|`
+    // separates replicas of one shard).  The connect handshake
+    // validates every replica like the RSFS loader does; a half-wrong
+    // set never comes up.  The lane keeps the `sh` wire name: clients
+    // cannot tell (and must not care) whether shards are threads,
+    // processes, or replica groups.
     if let Some(spec) = flags.kv.get("sharded-remote") {
         #[cfg(target_os = "linux")]
         {
-            let timeout = std::time::Duration::from_millis(
-                flags
-                    .kv
-                    .get("remote-timeout-ms")
-                    .map(|s| s.parse::<u64>())
-                    .transpose()
-                    .context("--remote-timeout-ms must be an integer")?
-                    .unwrap_or(5000),
+            let mut opts = repsketch::shard::RemoteOptions::with_timeout(
+                std::time::Duration::from_millis(
+                    flags
+                        .kv
+                        .get("remote-timeout-ms")
+                        .map(|s| s.parse::<u64>())
+                        .transpose()
+                        .context(
+                            "--remote-timeout-ms must be an integer",
+                        )?
+                        .unwrap_or(5000),
+                ),
             );
-            for (model, addrs) in parse_remote_spec(spec)? {
+            if let Some(h) = flags.kv.get("hedge-ms") {
+                opts.hedge_initial = std::time::Duration::from_millis(
+                    h.parse::<u64>()
+                        .context("--hedge-ms must be an integer")?,
+                );
+            }
+            for (model, groups) in parse_remote_spec(spec)? {
                 // Both flags register the `sh` lane for their model;
                 // refuse the silent last-wins collision.
                 anyhow::ensure!(
@@ -680,19 +717,27 @@ fn cmd_serve(args: &[String]) -> Result<()> {
                      --sharded-remote — the sh lane can only have one \
                      engine"
                 );
-                let engine = backend::RemoteShardedEngine::connect(
-                    addrs, timeout,
-                )
-                .with_context(|| {
-                    format!("--sharded-remote lane {model}")
-                })?;
+                let n_replicas: usize =
+                    groups.iter().map(|g| g.len()).sum();
+                let engine =
+                    backend::RemoteShardedEngine::connect_replicated(
+                        groups,
+                        opts.clone(),
+                    )
+                    .with_context(|| {
+                        format!("--sharded-remote lane {model}")
+                    })?;
                 println!(
                     "registered {model} (remote-sharded, shards={}, \
-                     C={}, dim={})",
+                     replicas={}, C={}, dim={})",
                     engine.n_shards(),
+                    n_replicas,
                     engine.head().n_classes,
                     engine.head().d
                 );
+                // The stats Arc outlives the engine's move into the
+                // lane; the `stats` verb reads it from the reactor.
+                router.register_shard_stats(&model, engine.stats());
                 router.add_lane(&model, BackendKind::Sharded, move || {
                     Ok(Box::new(engine) as _)
                 }, &cfg);

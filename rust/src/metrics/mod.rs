@@ -5,7 +5,9 @@
 pub mod cost;
 pub mod energy;
 pub mod latency;
+pub mod slo;
 
 pub use cost::{CostReport, MemoryUnit};
 pub use energy::EnergyModel;
 pub use latency::LatencyHistogram;
+pub use slo::{LaneSlo, RemoteShardStats, ReplicaSlo, ShardSlo};

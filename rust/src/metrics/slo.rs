@@ -1,0 +1,329 @@
+//! SLO accounting for the serving plane: success/error counters plus
+//! latency quantiles, accumulated lock-free (atomics only) on the lane
+//! thread and read out by the `stats` wire verb.
+//!
+//! ## The error-budget convention
+//!
+//! A lane's availability objective is expressed as a target success
+//! fraction (e.g. `0.999`).  Over any window, the **error budget** is
+//! `total_requests × (1 - target)`; [`LaneSlo::budget_remaining`]
+//! returns how many more errors the lane may serve before the
+//! objective is violated (negative = already blown).  The counters are
+//! monotonic for the process lifetime — operators diff successive
+//! `stats` snapshots to get windowed budgets, the same way Prometheus
+//! counters are consumed.
+//!
+//! Three granularities, one file:
+//!
+//! * [`LaneSlo`] — per (model, backend) lane on the inference plane
+//!   (also reused by the shard plane's `ShardService` for its kernel
+//!   counters: `ok` = means served, `errors` = error lines answered).
+//! * [`ShardSlo`] — per shard of a remote set: gather outcomes plus the
+//!   replication machinery's own counters (hedges, failovers,
+//!   reconnect probes, quarantines, discarded duplicates).
+//! * [`ReplicaSlo`] — per replica address: exchanges sent / won /
+//!   abandoned, plus the EWMA latency estimate the hedging deadline is
+//!   seeded from.
+//!
+//! [`RemoteShardStats`] aggregates the latter two for one remote shard
+//! set; `coordinator::Router` holds one per registered remote lane and
+//! serializes the whole tree for the `stats` verb.
+
+use super::latency::LatencyHistogram;
+use crate::util::json::{self, Json};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Latency quantiles as a JSON object — the shared rendering for every
+/// histogram the `stats` verb exposes.
+pub fn histogram_json(h: &LatencyHistogram) -> Json {
+    json::obj(vec![
+        ("n", Json::from_u64(h.count())),
+        ("mean_us", Json::num(h.mean_ns() / 1e3)),
+        ("p50_us", Json::num(h.quantile_ns(0.5) / 1e3)),
+        ("p99_us", Json::num(h.quantile_ns(0.99) / 1e3)),
+        ("p999_us", Json::num(h.quantile_ns(0.999) / 1e3)),
+    ])
+}
+
+/// Per-lane SLO counters: one success counter, one error counter, one
+/// latency histogram.  All atomic — recorded from the lane worker
+/// thread without locks, read from anywhere.
+#[derive(Debug, Default)]
+pub struct LaneSlo {
+    pub ok: AtomicU64,
+    pub errors: AtomicU64,
+    pub latency: LatencyHistogram,
+}
+
+impl LaneSlo {
+    pub fn new() -> LaneSlo {
+        LaneSlo::default()
+    }
+
+    /// One successfully answered request.
+    pub fn record_ok(&self, dur: std::time::Duration) {
+        self.ok.fetch_add(1, Ordering::Relaxed);
+        self.latency.record(dur);
+    }
+
+    /// One request answered with an error.
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn ok_count(&self) -> u64 {
+        self.ok.load(Ordering::Relaxed)
+    }
+
+    pub fn error_count(&self) -> u64 {
+        self.errors.load(Ordering::Relaxed)
+    }
+
+    /// Errors this lane may still serve before an availability target
+    /// (a success fraction like `0.999`) is violated over the counters'
+    /// lifetime window.  Negative: the budget is already blown.
+    pub fn budget_remaining(&self, target: f64) -> i64 {
+        let ok = self.ok_count();
+        let errors = self.error_count();
+        let total = (ok + errors) as f64;
+        (total * (1.0 - target)).floor() as i64 - errors as i64
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("ok", Json::from_u64(self.ok_count())),
+            ("errors", Json::from_u64(self.error_count())),
+            ("latency", histogram_json(&self.latency)),
+        ])
+    }
+}
+
+/// Per-shard counters for one remote shard set.  `gathers`/`errors`
+/// count batch outcomes attributed to this shard; the rest count the
+/// replication machinery itself.
+#[derive(Debug, Default)]
+pub struct ShardSlo {
+    /// Accepted answers (one per successful gather of this shard).
+    pub gathers: AtomicU64,
+    /// Batch failures attributed to this shard.
+    pub errors: AtomicU64,
+    /// Hedge requests issued to a second replica.
+    pub hedges: AtomicU64,
+    /// In-batch failovers (a replica died mid-gather and another took
+    /// over the same request id) plus scatter-time replica swaps.
+    pub failovers: AtomicU64,
+    /// Dial attempts to a disconnected replica (backoff-gated).
+    pub reconnects: AtomicU64,
+    /// Replicas quarantined after a failure.
+    pub quarantines: AtomicU64,
+    /// Late/duplicate answers discarded by request id.
+    pub discarded: AtomicU64,
+    /// Latency of accepted answers (send → accept on the lane thread).
+    pub latency: LatencyHistogram,
+}
+
+impl ShardSlo {
+    pub fn to_json(&self) -> Json {
+        let c = |a: &AtomicU64| Json::from_u64(a.load(Ordering::Relaxed));
+        json::obj(vec![
+            ("gathers", c(&self.gathers)),
+            ("errors", c(&self.errors)),
+            ("hedges", c(&self.hedges)),
+            ("failovers", c(&self.failovers)),
+            ("reconnects", c(&self.reconnects)),
+            ("quarantines", c(&self.quarantines)),
+            ("discarded", c(&self.discarded)),
+            ("latency", histogram_json(&self.latency)),
+        ])
+    }
+}
+
+/// Per-replica counters: exchange accounting plus the EWMA latency
+/// estimate (microseconds, stored as f64 bits so updates stay a single
+/// atomic store on the lane thread).
+#[derive(Debug)]
+pub struct ReplicaSlo {
+    pub addr: String,
+    /// Requests written to this replica.
+    pub sent: AtomicU64,
+    /// Answers accepted (this replica won the exchange).
+    pub answered: AtomicU64,
+    /// Exchanges abandoned: lost a hedge race, failed over, or timed
+    /// out.  Abandoned exchanges never update `ewma_us`.
+    pub abandoned: AtomicU64,
+    ewma_us_bits: AtomicU64,
+}
+
+impl ReplicaSlo {
+    pub fn new(addr: &str) -> ReplicaSlo {
+        ReplicaSlo {
+            addr: addr.to_string(),
+            sent: AtomicU64::new(0),
+            answered: AtomicU64::new(0),
+            abandoned: AtomicU64::new(0),
+            ewma_us_bits: AtomicU64::new(0.0f64.to_bits()),
+        }
+    }
+
+    /// EWMA latency estimate in microseconds; `0.0` = no samples yet.
+    pub fn ewma_us(&self) -> f64 {
+        f64::from_bits(self.ewma_us_bits.load(Ordering::Relaxed))
+    }
+
+    pub fn set_ewma_us(&self, v: f64) {
+        self.ewma_us_bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn to_json(&self) -> Json {
+        let c = |a: &AtomicU64| Json::from_u64(a.load(Ordering::Relaxed));
+        json::obj(vec![
+            ("addr", Json::Str(self.addr.clone())),
+            ("sent", c(&self.sent)),
+            ("answered", c(&self.answered)),
+            ("abandoned", c(&self.abandoned)),
+            ("ewma_us", Json::num(self.ewma_us())),
+        ])
+    }
+}
+
+/// The whole observability surface of one remote shard set: per-shard
+/// counters plus the flat replica table, `Arc`-shared between the lane
+/// engine (writer) and the router's `stats` verb (reader).
+#[derive(Debug)]
+pub struct RemoteShardStats {
+    pub shards: Vec<ShardSlo>,
+    pub replicas: Vec<ReplicaSlo>,
+    /// Replica indices (into `replicas`) per shard.
+    pub groups: Vec<Vec<usize>>,
+}
+
+impl RemoteShardStats {
+    pub fn new(replica_addrs_per_shard: &[Vec<String>])
+        -> RemoteShardStats {
+        let mut replicas = Vec::new();
+        let mut groups = Vec::new();
+        for group in replica_addrs_per_shard {
+            let mut idx = Vec::with_capacity(group.len());
+            for addr in group {
+                idx.push(replicas.len());
+                replicas.push(ReplicaSlo::new(addr));
+            }
+            groups.push(idx);
+        }
+        RemoteShardStats {
+            shards: replica_addrs_per_shard
+                .iter()
+                .map(|_| ShardSlo::default())
+                .collect(),
+            replicas,
+            groups,
+        }
+    }
+
+    /// One JSON object per shard, replicas nested in group order.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.shards
+                .iter()
+                .enumerate()
+                .map(|(s, slo)| {
+                    let c = |a: &AtomicU64| {
+                        Json::from_u64(a.load(Ordering::Relaxed))
+                    };
+                    json::obj(vec![
+                        ("shard", Json::from_u64(s as u64)),
+                        ("gathers", c(&slo.gathers)),
+                        ("errors", c(&slo.errors)),
+                        ("hedges", c(&slo.hedges)),
+                        ("failovers", c(&slo.failovers)),
+                        ("reconnects", c(&slo.reconnects)),
+                        ("quarantines", c(&slo.quarantines)),
+                        ("discarded", c(&slo.discarded)),
+                        ("latency", histogram_json(&slo.latency)),
+                        (
+                            "replicas",
+                            Json::Arr(
+                                self.groups[s]
+                                    .iter()
+                                    .map(|&r| self.replicas[r].to_json())
+                                    .collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn budget_arithmetic() {
+        let slo = LaneSlo::new();
+        for _ in 0..999 {
+            slo.record_ok(Duration::from_micros(100));
+        }
+        slo.record_error();
+        // 1000 requests at a 99.9% target: budget is exactly 1 error,
+        // exactly 1 spent.
+        assert_eq!(slo.budget_remaining(0.999), 0);
+        slo.record_error();
+        assert!(slo.budget_remaining(0.999) < 0);
+        // A lax target leaves room.
+        assert!(slo.budget_remaining(0.9) > 0);
+    }
+
+    #[test]
+    fn lane_slo_json_shape() {
+        let slo = LaneSlo::new();
+        slo.record_ok(Duration::from_micros(50));
+        slo.record_error();
+        let j = slo.to_json();
+        assert_eq!(j.get("ok").unwrap().as_u64(), Some(1));
+        assert_eq!(j.get("errors").unwrap().as_u64(), Some(1));
+        let lat = j.get("latency").unwrap();
+        assert_eq!(lat.get("n").unwrap().as_u64(), Some(1));
+        assert!(lat.get("p999_us").unwrap().as_f64().unwrap() > 0.0);
+        // The line must be real JSON end to end.
+        let reparsed = json::parse(&j.to_string()).unwrap();
+        assert_eq!(reparsed.get("ok").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn remote_stats_json_groups_replicas_per_shard() {
+        let stats = RemoteShardStats::new(&[
+            vec!["a0".to_string(), "a1".to_string()],
+            vec!["b0".to_string()],
+        ]);
+        assert_eq!(stats.shards.len(), 2);
+        assert_eq!(stats.replicas.len(), 3);
+        assert_eq!(stats.groups, vec![vec![0, 1], vec![2]]);
+        stats.shards[1]
+            .hedges
+            .fetch_add(3, Ordering::Relaxed);
+        stats.replicas[2].set_ewma_us(123.5);
+        let j = stats.to_json();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[1].get("hedges").unwrap().as_u64(), Some(3));
+        let reps = arr[1].get("replicas").unwrap().as_arr().unwrap();
+        assert_eq!(reps.len(), 1);
+        assert_eq!(reps[0].get("addr").unwrap().as_str(), Some("b0"));
+        assert_eq!(
+            reps[0].get("ewma_us").unwrap().as_f64(),
+            Some(123.5)
+        );
+    }
+
+    #[test]
+    fn ewma_roundtrips_through_bits() {
+        let r = ReplicaSlo::new("x");
+        assert_eq!(r.ewma_us(), 0.0);
+        r.set_ewma_us(42.25);
+        assert_eq!(r.ewma_us(), 42.25);
+    }
+}

@@ -30,10 +30,33 @@
 //!   [`ShardService`] serves ONE shard's kernel behind the epoll
 //!   reactor (`repsketch shard-serve`), [`RemoteShardSet`] is the
 //!   coordinator-side client (persistent pipelined nonblocking
-//!   connections, handshake-validated set, scatter/gather with
-//!   timeouts and reconnect) behind
+//!   connections, handshake-validated set, replica groups with hedged
+//!   scatter / in-batch failover / quarantine + backoff) behind
 //!   `coordinator::backend::RemoteShardedEngine`
 //!   (`serve --sharded-remote`).
+//!
+//! # Operating a replicated remote set
+//!
+//! `serve --sharded-remote NAME=a0|a1,b0|b1` registers lane `NAME`
+//! over two shards, each with two replicas: commas separate shards
+//! (in shard-index order, as before), `|` separates the replicas of
+//! one shard.  Every replica of a shard must serve the SAME RSFS
+//! shard file — the connect-time handshake enforces it, and since the
+//! sketch is a set of count arrays with an exact merge, any replica's
+//! group means are bit-identical, so replication can never change an
+//! answer.  Per batch the client scatters to the least-loaded healthy
+//! replica, hedges a straggler to a second replica after an adaptive
+//! deadline seeded from that shard's observed latency
+//! ([`RemoteOptions::hedge_factor`] × EWMA, floor
+//! `hedge_initial`/`hedge_min`, ceiling `timeout`), and fails over
+//! within the batch if a replica dies mid-gather.  Failed replicas
+//! are quarantined behind capped exponential backoff with jitter
+//! ([`RemoteOptions::backoff_base`]/`backoff_cap`); reintegration is
+//! a fresh validated handshake (the health probe), which resets the
+//! failure count.  The per-shard / per-replica counters
+//! ([`crate::metrics::slo::RemoteShardStats`]) are served by the
+//! coordinator's `stats` verb — see `coordinator` module docs for the
+//! response schema and the error-budget convention.
 //!
 //! [`ShardedSketch`] is the in-process container (head + plan +
 //! `Arc`'d shards) with a serial reference query path; the serving
@@ -65,8 +88,8 @@ pub use plan::{ShardPlan, ShardSpan};
 pub use serde::LoadedShard;
 pub use shard::{ShardScratch, SketchShard};
 #[cfg(target_os = "linux")]
-pub use remote::{serve_local, LocalShardServers, RemoteShardSet,
-                 ShardService};
+pub use remote::{serve_local, LocalShardServers, RemoteOptions,
+                 RemoteShardSet, ShardService};
 
 use crate::sketch::{FusedMultiSketch, RaceSketch};
 use std::sync::Arc;

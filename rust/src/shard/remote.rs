@@ -34,18 +34,32 @@
 //!   service still answers.
 //!
 //! * [`RemoteShardSet`] — the client: one persistent, pipelined,
-//!   nonblocking connection per shard, multiplexed with the same
+//!   nonblocking connection per REPLICA, multiplexed with the same
 //!   [`Conn`] framing + [`Epoll`] machinery the reactor uses (from the
 //!   other side of the wire), driven entirely by the calling lane
-//!   thread — NOTHING here spawns, per batch or ever.  Scatter is one
-//!   serialized request line written to every connection; gather
-//!   blocks (with a deadline) until every shard answered.  Failures
-//!   are precise and recoverable: a dead, stalling, or misbehaving
-//!   shard fails the batch with an error naming that shard, its
-//!   connection is torn down, and the next batch reconnects and
-//!   re-validates the handshake — so a restarted shard process is
-//!   picked up transparently.  Late answers from a timed-out batch are
-//!   discarded by request id, never mistaken for the current batch.
+//!   thread — NOTHING here spawns, per batch or ever.  Each shard may
+//!   be served by a replica group (any replica of a shard holds the
+//!   same count arrays, so group means are bit-identical regardless of
+//!   which replica answers).  Scatter sends one serialized request
+//!   line to the least-loaded healthy replica of every shard; the
+//!   gather hedges stragglers to a second replica after an adaptive
+//!   per-shard deadline, fails over within the batch when a replica
+//!   dies mid-gather (first valid answer wins; late duplicates are
+//!   discarded by request id and never touch latency estimates or
+//!   health state), and quarantines failed replicas behind capped
+//!   exponential backoff with jitter — reintegration is a fresh
+//!   validated handshake, so a restarted or replaced process is
+//!   re-held to the set's standard before it serves a single batch.
+//!   A batch errs — with an error NAMING the shard — only when every
+//!   replica of some shard is exhausted or the global deadline
+//!   passes.  See [`RemoteOptions`] for the tunables and
+//!   [`RemoteShardStats`] for the per-shard / per-replica counters
+//!   the coordinator's `stats` verb exposes.
+//!
+//! The server additionally answers `{"id": N, "shard": "stats"}` with
+//! its own kernel-side serve counters (requests served, errors,
+//! kernel latency quantiles) — the shard-local slice of the SLO
+//! story.
 
 use super::serde::heads_identical;
 use super::{LoadedShard, ShardHead, ShardPlan, ShardScratch, ShardSpan,
@@ -56,11 +70,14 @@ use crate::coordinator::net::sys::{
 };
 use crate::coordinator::net::{CompletionSender, LineHandler};
 use crate::coordinator::protocol::{extract_id, Response};
+use crate::metrics::slo::{histogram_json, LaneSlo, RemoteShardStats};
 use crate::util::json::{self, Json};
+use crate::util::rng::SplitMix64;
 use anyhow::{anyhow, Context as _};
 use std::collections::VecDeque;
 use std::net::{TcpStream, ToSocketAddrs};
 use std::os::unix::io::AsRawFd;
+use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -80,6 +97,9 @@ pub enum ShardCall {
     Hello,
     /// Compute complete group means for one projected batch.
     Means { batch: usize, proj_t: Vec<f32> },
+    /// Report the shard's serve counters (requests, errors, kernel
+    /// latency quantiles).
+    Stats,
 }
 
 /// The handshake payload: everything the coordinator needs to project,
@@ -154,9 +174,12 @@ pub fn parse_shard_request(line: &str) -> Result<ShardRequest, String> {
     let op = j
         .get("shard")
         .and_then(|v| v.as_str())
-        .ok_or("missing shard op (want \"hello\" or \"means\")")?;
+        .ok_or(
+            "missing shard op (want \"hello\", \"means\", or \"stats\")",
+        )?;
     match op {
         "hello" => Ok(ShardRequest { id, call: ShardCall::Hello }),
+        "stats" => Ok(ShardRequest { id, call: ShardCall::Stats }),
         "means" => {
             let batch = j
                 .get("b")
@@ -419,6 +442,9 @@ impl ShardService {
             .spawn(move || {
                 let mut scratch = ShardScratch::default();
                 let mut out = Vec::new();
+                // Worker-local serve counters: only this thread
+                // writes, the `stats` op reads them back out.
+                let slo = LaneSlo::new();
                 while let Ok(job) = rx.recv() {
                     // The worker is immortal: a panicking kernel is
                     // caught (the in-flight job's guard answers during
@@ -426,7 +452,7 @@ impl ShardService {
                     let _ = std::panic::catch_unwind(
                         std::panic::AssertUnwindSafe(|| {
                             run_job(&hello, &shard, &mut scratch,
-                                    &mut out, job);
+                                    &mut out, &slo, job);
                         }),
                     );
                 }
@@ -445,11 +471,18 @@ impl ShardService {
     }
 }
 
+/// Answer an error line AND charge it to the shard's error counter.
+fn answer_err(slo: &LaneSlo, guard: LineGuard, msg: String) {
+    slo.record_error();
+    guard.send_err(msg);
+}
+
 fn run_job(
     hello: &ShardHello,
     shard: &SketchShard,
     scratch: &mut ShardScratch,
     out: &mut Vec<f32>,
+    slo: &LaneSlo,
     job: ShardJob,
 ) {
     let ShardJob { line, mut guard } = job;
@@ -459,7 +492,11 @@ fn run_job(
             // Best-effort id recovery happens HERE, on the worker —
             // never on the reactor thread (see `handle_line`).
             guard.id = extract_id(&line);
-            return guard.send_err(format!("bad shard request: {e}"));
+            return answer_err(
+                slo,
+                guard,
+                format!("bad shard request: {e}"),
+            );
         }
     };
     // Arm the guard with the real id so even a panicking kernel
@@ -473,7 +510,7 @@ fn run_job(
                 // wide for the JSON shard plane must fail with numbers
                 // the operator can act on, not a generic oversize kill
                 // on the client side.
-                return guard.send_err(format!(
+                return answer_err(slo, guard, format!(
                     "hello ({} bytes; projection d × p = {} × {} \
                      floats) exceeds the {MAX_LINE_BYTES}-byte line \
                      cap — this sketch is too wide for the JSON shard \
@@ -485,10 +522,26 @@ fn run_job(
             }
             guard.send_line(line);
         }
+        ShardCall::Stats => {
+            let payload = json::obj(vec![
+                ("shard", Json::from_u64(hello.shard_index as u64)),
+                ("shards", Json::from_u64(hello.n_shards as u64)),
+                ("served", Json::from_u64(slo.ok_count())),
+                ("errors", Json::from_u64(slo.error_count())),
+                ("kernel", histogram_json(&slo.latency)),
+            ]);
+            guard.send_line(
+                json::obj(vec![
+                    ("id", Json::from_u64(req.id)),
+                    ("stats", payload),
+                ])
+                .to_string(),
+            );
+        }
         ShardCall::Means { batch, proj_t } => {
             let p = hello.head.p;
             if proj_t.len() as u128 != p as u128 * batch as u128 {
-                return guard.send_err(format!(
+                return answer_err(slo, guard, format!(
                     "proj has {} values, want p × B = {p} × {batch}",
                     proj_t.len()
                 ));
@@ -500,7 +553,7 @@ fn run_job(
             // refused before any kernel work.
             const MAX_BATCH: usize = 8192;
             if batch > MAX_BATCH {
-                return guard.send_err(format!(
+                return answer_err(slo, guard, format!(
                     "b = {batch} exceeds the {MAX_BATCH} per-request cap"
                 ));
             }
@@ -508,14 +561,15 @@ fn run_job(
                 * shard.local_groups() as u128
                 * hello.head.n_classes as u128;
             if cells > (MAX_LINE_BYTES / 2) as u128 {
-                return guard.send_err(format!(
+                return answer_err(slo, guard, format!(
                     "means matrix ({cells} values) cannot fit the \
                      {MAX_LINE_BYTES}-byte response line cap"
                 ));
             }
             let t0 = Instant::now();
             shard.partial_means_batch(&proj_t, batch, scratch, out);
-            let us = t0.elapsed().as_nanos() as f64 / 1e3;
+            let dur = t0.elapsed();
+            let us = dur.as_nanos() as f64 / 1e3;
             let line = means_response_line(
                 req.id,
                 shard.local_groups(),
@@ -527,13 +581,14 @@ fn run_job(
             // client's line cap — answer a descriptive error instead of
             // an oversize frame the client would kill the conn over.
             if line.len() > MAX_LINE_BYTES {
-                return guard.send_err(format!(
+                return answer_err(slo, guard, format!(
                     "means response ({} bytes for {cells} values) \
                      exceeds the {MAX_LINE_BYTES}-byte line cap — \
                      lower the coordinator's batch size",
                     line.len()
                 ));
             }
+            slo.record_ok(dur);
             guard.send_line(line);
         }
     }
@@ -638,50 +693,144 @@ fn wait_ms_until(deadline: Instant) -> i32 {
     ms.clamp(1, PUMP_SLICE_MS as i64) as i32
 }
 
+/// Tunables for the replicated client: the global batch deadline, the
+/// adaptive hedge policy, and the quarantine/backoff policy.
+#[derive(Clone, Debug)]
+pub struct RemoteOptions {
+    /// Hard per-batch deadline (also the dial/handshake timeout).
+    pub timeout: Duration,
+    /// Hedge delay before a shard has any latency samples.
+    pub hedge_initial: Duration,
+    /// Hedge fires after `ewma_latency × hedge_factor`.
+    pub hedge_factor: f64,
+    /// Floor for the adaptive hedge delay.
+    pub hedge_min: Duration,
+    /// First-failure reconnect backoff; doubles per consecutive failure.
+    pub backoff_base: Duration,
+    /// Backoff ceiling.  Keep this well under any operator poll
+    /// interval: a restarted replica is reintegrated at most one cap
+    /// (plus jitter) after it comes back.
+    pub backoff_cap: Duration,
+}
+
+impl Default for RemoteOptions {
+    fn default() -> RemoteOptions {
+        RemoteOptions {
+            timeout: Duration::from_secs(5),
+            hedge_initial: Duration::from_millis(50),
+            hedge_factor: 4.0,
+            hedge_min: Duration::from_millis(1),
+            backoff_base: Duration::from_millis(50),
+            backoff_cap: Duration::from_secs(2),
+        }
+    }
+}
+
+impl RemoteOptions {
+    /// Defaults with an explicit batch deadline — what the CLI's
+    /// `--remote-timeout-ms` maps to.
+    pub fn with_timeout(timeout: Duration) -> RemoteOptions {
+        RemoteOptions { timeout, ..RemoteOptions::default() }
+    }
+}
+
+/// Capped exponential backoff with multiplicative jitter in
+/// `[1.0, 1.5)`.  Jitter de-synchronizes reconnect probes across lanes
+/// that quarantined the same replica at the same instant.
+fn backoff_for(
+    opts: &RemoteOptions,
+    fails: u32,
+    jitter: &mut SplitMix64,
+) -> Duration {
+    let shift = fails.saturating_sub(1).min(16);
+    let base = opts.backoff_base.saturating_mul(1u32 << shift);
+    base.min(opts.backoff_cap).mul_f64(1.0 + 0.5 * jitter.next_f64())
+}
+
+/// One request written to a replica and not yet answered.  The entry —
+/// not the answer — carries the exchange's fate: an `abandoned` entry
+/// (lost hedge race, failed over, timed out) means the eventual answer
+/// is discarded by id and contributes NOTHING to latency estimates or
+/// health state.
+struct PendingReq {
+    id: u64,
+    sent: Instant,
+    abandoned: bool,
+}
+
+/// One replica of one shard: its connection (if up), framed input,
+/// in-flight exchanges, and quarantine state.
+struct Replica {
+    addr: String,
+    /// Which shard this replica serves (index into the plan).
+    shard: usize,
+    conn: Option<Conn>,
+    /// Framed lines, drained by the caller.  NOT cleared when the
+    /// connection dies (a final answer that raced an EOF is still
+    /// consumable) — cleared on dial, where stale lines would belong
+    /// to a previous incarnation.
+    inbox: VecDeque<String>,
+    /// Why the connection was torn down (until the next dial).
+    dead: Option<String>,
+    /// Exchanges written and not yet answered; `len()` is the load
+    /// metric the least-loaded scatter uses, so a stalled replica with
+    /// lingering entries is naturally deprioritized.
+    pending: VecDeque<PendingReq>,
+    /// Consecutive failures since the last validated handshake.
+    fails: u32,
+    /// No dial before this instant (quarantine backoff).
+    retry_at: Instant,
+}
+
 /// The connection plumbing under [`RemoteShardSet`]: nonblocking
 /// sockets with the reactor's own [`Conn`] line framing, multiplexed
-/// through one [`Epoll`], all driven by the calling thread.
+/// through one [`Epoll`] (event data = flat replica index), all driven
+/// by the calling thread.
 struct ClientIo {
-    addrs: Vec<String>,
-    conns: Vec<Option<Conn>>,
-    /// Framed lines per shard, drained by the caller.  NOT cleared when
-    /// a connection dies (a final answer that raced an EOF is still
-    /// consumable) — cleared on reconnect, where stale lines would
-    /// belong to a previous incarnation.
-    inbox: Vec<VecDeque<String>>,
-    /// Why shard `s`'s connection was torn down (until reconnect).
-    dead: Vec<Option<String>>,
+    replicas: Vec<Replica>,
     epoll: Epoll,
-    timeout: Duration,
+    opts: RemoteOptions,
     scratch: Vec<u8>,
     /// Request id sequence, shared across the set so every in-flight
     /// exchange is uniquely tagged and late answers are identifiable.
     seq: u64,
+    /// Backoff jitter source (never used for anything bit-visible).
+    jitter: SplitMix64,
 }
 
 impl ClientIo {
-    fn drop_conn(&mut self, s: usize, why: &str) {
-        if let Some(conn) = self.conns[s].take() {
+    fn drop_conn(&mut self, r: usize, why: &str) {
+        if let Some(conn) = self.replicas[r].conn.take() {
             let _ = self.epoll.del(conn.stream.as_raw_fd());
         }
-        if self.dead[s].is_none() {
-            self.dead[s] = Some(why.to_string());
+        if self.replicas[r].dead.is_none() {
+            self.replicas[r].dead = Some(why.to_string());
         }
     }
 
-    /// Queue one line on shard `s` and push what the socket will take.
-    fn queue_to(&mut self, s: usize, line: &str) {
-        if let Some(conn) = self.conns[s].as_mut() {
+    /// Tear the connection down AND start (or lengthen) the backoff
+    /// clock: the replica is not dialed again before `retry_at`.
+    fn quarantine(&mut self, r: usize, why: &str) {
+        self.drop_conn(r, why);
+        let fails = self.replicas[r].fails.saturating_add(1);
+        self.replicas[r].fails = fails;
+        let backoff = backoff_for(&self.opts, fails, &mut self.jitter);
+        self.replicas[r].retry_at = Instant::now() + backoff;
+    }
+
+    /// Queue one line on replica `r` and push what the socket will take.
+    fn queue_to(&mut self, r: usize, line: &str) {
+        if let Some(conn) = self.replicas[r].conn.as_mut() {
             conn.queue_line(line);
         }
-        self.settle(s);
+        self.settle(r);
     }
 
     /// Flush, refresh epoll interest, tear down on failure — the
     /// client-side twin of the reactor's settle.
-    fn settle(&mut self, s: usize) {
+    fn settle(&mut self, r: usize) {
         let mut fail: Option<&'static str> = None;
-        if let Some(conn) = self.conns[s].as_mut() {
+        if let Some(conn) = self.replicas[r].conn.as_mut() {
             match conn.flush() {
                 Err(_) => fail = Some("connection broke while writing"),
                 Ok(_) => {
@@ -694,7 +843,7 @@ impl ClientIo {
                         }
                         if want != conn.interest {
                             let fd = conn.stream.as_raw_fd();
-                            if self.epoll.modify(fd, want, s as u64)
+                            if self.epoll.modify(fd, want, r as u64)
                                 .is_ok()
                             {
                                 conn.interest = want;
@@ -708,7 +857,7 @@ impl ClientIo {
             }
         }
         if let Some(why) = fail {
-            self.drop_conn(s, why);
+            self.drop_conn(r, why);
         }
     }
 
@@ -719,23 +868,24 @@ impl ClientIo {
         let mut events = [EpollEvent { events: 0, data: 0 }; 32];
         let n = self.epoll.wait(&mut events, wait_ms)?;
         for ev in &events[..n] {
-            let (bits, s) = (ev.events, ev.data as usize);
-            if s >= self.conns.len() {
+            let (bits, r) = (ev.events, ev.data as usize);
+            if r >= self.replicas.len() {
                 continue;
             }
             if bits & (EPOLLERR | EPOLLHUP) != 0 {
-                self.drop_conn(s, "connection error");
+                self.drop_conn(r, "connection error");
                 continue;
             }
             if bits & (EPOLLIN | EPOLLRDHUP) != 0 {
                 let mut evs = Vec::new();
-                let ok = match self.conns[s].as_mut() {
+                let ok = match self.replicas[r].conn.as_mut() {
                     None => continue,
                     Some(conn) => {
                         conn.fill(&mut self.scratch, &mut evs)
                     }
                 };
-                let eof = self.conns[s]
+                let eof = self.replicas[r]
+                    .conn
                     .as_ref()
                     .map_or(false, |c| c.read_closed);
                 let mut oversize = false;
@@ -743,41 +893,44 @@ impl ClientIo {
                     match e {
                         InEvent::Line(l) => {
                             if !l.trim().is_empty() {
-                                self.inbox[s].push_back(l);
+                                self.replicas[r].inbox.push_back(l);
                             }
                         }
                         InEvent::Oversize(_) => oversize = true,
                     }
                 }
                 if !ok {
-                    self.drop_conn(s, "connection reset");
+                    self.drop_conn(r, "connection reset");
                     continue;
                 }
                 if oversize {
                     self.drop_conn(
-                        s,
+                        r,
                         "response line exceeded the line cap",
                     );
                     continue;
                 }
                 if eof {
-                    self.drop_conn(s, "shard closed the connection");
+                    self.drop_conn(r, "shard closed the connection");
                     continue;
                 }
             }
-            self.settle(s);
+            self.settle(r);
         }
         Ok(())
     }
 
-    /// (Re)connect shard `s` and run the hello handshake.  Any previous
-    /// connection (and its now-meaningless inbox) is discarded first.
-    fn handshake(&mut self, s: usize) -> anyhow::Result<ShardHello> {
-        let addr = self.addrs[s].clone();
-        if let Some(conn) = self.conns[s].take() {
+    /// (Re)connect replica `r` and run the hello handshake.  Any
+    /// previous connection — and its now-meaningless inbox and pending
+    /// exchanges — is discarded first.
+    fn dial(&mut self, r: usize) -> anyhow::Result<ShardHello> {
+        let s = self.replicas[r].shard;
+        let addr = self.replicas[r].addr.clone();
+        if let Some(conn) = self.replicas[r].conn.take() {
             let _ = self.epoll.del(conn.stream.as_raw_fd());
         }
-        self.inbox[s].clear();
+        self.replicas[r].inbox.clear();
+        self.replicas[r].pending.clear();
         let sa = addr
             .to_socket_addrs()
             .map_err(|e| anyhow!("shard {s} ({addr}): bad address: {e}"))?
@@ -785,7 +938,7 @@ impl ClientIo {
             .ok_or_else(|| {
                 anyhow!("shard {s} ({addr}): address resolves to nothing")
             })?;
-        let stream = TcpStream::connect_timeout(&sa, self.timeout)
+        let stream = TcpStream::connect_timeout(&sa, self.opts.timeout)
             .map_err(|e| {
                 anyhow!("shard {s} ({addr}) is unreachable: {e}")
             })?;
@@ -795,36 +948,36 @@ impl ClientIo {
         })?;
         let interest = EPOLLIN | EPOLLRDHUP;
         self.epoll
-            .add(stream.as_raw_fd(), interest, s as u64)
+            .add(stream.as_raw_fd(), interest, r as u64)
             .map_err(|e| {
                 anyhow!("shard {s} ({addr}): epoll registration: {e}")
             })?;
         let mut conn = Conn::new(stream);
         conn.interest = interest;
-        self.conns[s] = Some(conn);
-        self.dead[s] = None;
+        self.replicas[r].conn = Some(conn);
+        self.replicas[r].dead = None;
         self.seq += 1;
         let id = self.seq;
-        self.queue_to(s, &hello_request_line(id));
-        let deadline = Instant::now() + self.timeout;
+        self.queue_to(r, &hello_request_line(id));
+        let deadline = Instant::now() + self.opts.timeout;
         loop {
-            if let Some(line) = self.inbox[s].pop_front() {
+            if let Some(line) = self.replicas[r].inbox.pop_front() {
                 return match parse_hello(&line, id) {
                     Ok(h) => Ok(h),
                     Err(e) => {
-                        self.drop_conn(s, "sent a bad hello");
+                        self.drop_conn(r, "sent a bad hello");
                         Err(anyhow!("shard {s} ({addr}): bad hello: {e}"))
                     }
                 };
             }
-            if let Some(why) = &self.dead[s] {
+            if let Some(why) = &self.replicas[r].dead {
                 return Err(anyhow!("shard {s} ({addr}): {why}"));
             }
             if Instant::now() >= deadline {
-                self.drop_conn(s, "handshake timed out");
+                self.drop_conn(r, "handshake timed out");
                 return Err(anyhow!(
                     "shard {s} ({addr}): handshake timed out after {:?}",
-                    self.timeout
+                    self.opts.timeout
                 ));
             }
             self.pump(wait_ms_until(deadline))
@@ -869,49 +1022,110 @@ fn validate_hello(
     Ok(())
 }
 
-/// A handshake-validated set of remote shard processes, gathered over
-/// persistent pipelined connections.  See the module docs for the
-/// failure model; see `coordinator::backend::RemoteShardedEngine` for
-/// the serving lane built on top.
+/// Per-shard await state during one gather: up to two in-flight
+/// contenders (primary + hedge) racing for the first valid answer.
+struct AwaitSlot {
+    primary: Option<usize>,
+    hedge: Option<usize>,
+    /// When the CURRENT primary exchange was written (hedge clock).
+    sent: Instant,
+    /// One hedge attempt per exchange, fired or not.
+    hedged: bool,
+    /// Every replica this gather has already sent to (never re-picked).
+    tried: Vec<usize>,
+}
+
+/// A handshake-validated set of remote shard processes — each shard
+/// optionally served by a replica GROUP — gathered over persistent
+/// pipelined connections.  See the module docs for the failure model;
+/// see `coordinator::backend::RemoteShardedEngine` for the serving
+/// lane built on top.
 pub struct RemoteShardSet {
     head: ShardHead,
     plan: ShardPlan,
     io: ClientIo,
+    /// Flat replica indices per shard, in the operator's listed order.
+    groups: Vec<Vec<usize>>,
     /// Gather bookkeeping, kept as fields so the steady state is
     /// allocation-light.
     have: Vec<bool>,
+    /// Per-shard EWMA of accepted-answer latency (µs); seeds the
+    /// adaptive hedge deadline.  `0.0` = no samples yet.
+    ewma_us: Vec<f64>,
+    stats: Arc<RemoteShardStats>,
 }
 
 impl RemoteShardSet {
-    /// Connect to every shard (addresses in shard-index order), run
-    /// the handshakes, and validate the set against the recomputed
-    /// plan.  All shards must be reachable here; individual shards may
-    /// die and return later — `gather_means` reconnects per batch.
+    /// Connect to an unreplicated set (one address per shard, in
+    /// shard-index order) — the compatibility path for the plain
+    /// `NAME=a,b,c` CLI form and the existing tests.
     pub fn connect(
         addrs: Vec<String>,
         timeout: Duration,
     ) -> anyhow::Result<RemoteShardSet> {
+        Self::connect_replicated(
+            addrs.into_iter().map(|a| vec![a]).collect(),
+            RemoteOptions::with_timeout(timeout),
+        )
+    }
+
+    /// Connect to every replica of every shard (groups in shard-index
+    /// order), run the handshakes, and validate each replica against
+    /// the recomputed plan.  All replicas must be reachable here;
+    /// individual replicas may die and return later — gathers fail
+    /// over within the group and quarantined replicas are re-probed
+    /// with backoff.
+    pub fn connect_replicated(
+        groups: Vec<Vec<String>>,
+        opts: RemoteOptions,
+    ) -> anyhow::Result<RemoteShardSet> {
         anyhow::ensure!(
-            !addrs.is_empty(),
+            !groups.is_empty(),
             "a remote shard set needs at least one address"
         );
-        let n = addrs.len();
+        for (s, g) in groups.iter().enumerate() {
+            anyhow::ensure!(
+                !g.is_empty(),
+                "shard {s} has no replica addresses"
+            );
+        }
+        let n = groups.len();
+        let stats = Arc::new(RemoteShardStats::new(&groups));
+        let now = Instant::now();
+        let mut replicas = Vec::new();
+        let mut group_idx = Vec::new();
+        for (s, g) in groups.iter().enumerate() {
+            let mut idx = Vec::with_capacity(g.len());
+            for addr in g {
+                idx.push(replicas.len());
+                replicas.push(Replica {
+                    addr: addr.clone(),
+                    shard: s,
+                    conn: None,
+                    inbox: VecDeque::new(),
+                    dead: None,
+                    pending: VecDeque::new(),
+                    fails: 0,
+                    retry_at: now,
+                });
+            }
+            group_idx.push(idx);
+        }
         let mut io = ClientIo {
-            addrs,
-            conns: (0..n).map(|_| None).collect(),
-            inbox: (0..n).map(|_| VecDeque::new()).collect(),
-            dead: (0..n).map(|_| None).collect(),
+            replicas,
             epoll: Epoll::new()
                 .context("epoll for the remote shard client")?,
-            timeout,
+            opts,
             scratch: vec![0u8; 64 * 1024],
             seq: 0,
+            jitter: SplitMix64::new(
+                0x7E11_CA5E ^ std::process::id() as u64,
+            ),
         };
-        let first = io.handshake(0)?;
+        let first = io.dial(0)?;
         let head = first.head.clone();
-        let plan =
-            ShardPlan::new(head.rows, head.groups, head.use_mom,
-                           first.n_shards);
+        let plan = ShardPlan::new(head.rows, head.groups, head.use_mom,
+                                  first.n_shards);
         anyhow::ensure!(
             plan.n_shards() == first.n_shards,
             "shards declare a {}-way set but this estimator supports at \
@@ -919,17 +1133,21 @@ impl RemoteShardSet {
             first.n_shards,
             plan.n_shards()
         );
-        validate_hello(&first, 0, &io.addrs[0].clone(), &head, &plan, n)?;
-        for s in 1..n {
-            let hello = io.handshake(s)?;
-            let addr = io.addrs[s].clone();
+        for r in 0..io.replicas.len() {
+            let hello =
+                if r == 0 { first.clone() } else { io.dial(r)? };
+            let s = io.replicas[r].shard;
+            let addr = io.replicas[r].addr.clone();
             validate_hello(&hello, s, &addr, &head, &plan, n)?;
         }
         Ok(RemoteShardSet {
             head,
             plan,
             io,
+            groups: group_idx,
             have: vec![false; n],
+            ewma_us: vec![0.0; n],
+            stats,
         })
     }
 
@@ -945,16 +1163,206 @@ impl RemoteShardSet {
         self.plan.n_shards()
     }
 
-    /// Scatter ONE projected batch to every shard and gather their
-    /// complete group means into `partials` (plan order) — the same
-    /// `(B, local_groups, C)` matrices the in-process kernels produce,
-    /// ready for the untouched `merge_scores_into`.
+    /// The live observability surface (shared with the `stats` verb).
+    pub fn stats(&self) -> Arc<RemoteShardStats> {
+        Arc::clone(&self.stats)
+    }
+
+    /// Quarantine replica `r` (backoff the dial clock) and count it.
+    fn quarantine(&mut self, r: usize, why: &str) {
+        let s = self.io.replicas[r].shard;
+        self.io.quarantine(r, why);
+        self.stats.shards[s]
+            .quarantines
+            .fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Dial replica `r` and re-hold it to the set's standard — a
+    /// restarted process must serve the same shard.  A validated
+    /// handshake IS the health probe: success resets the failure
+    /// count, failure extends the quarantine.
+    fn dial_validated(&mut self, r: usize) -> anyhow::Result<()> {
+        let hello = match self.io.dial(r) {
+            Ok(h) => h,
+            Err(e) => {
+                self.quarantine(r, "dial failed");
+                return Err(e);
+            }
+        };
+        let s = self.io.replicas[r].shard;
+        let addr = self.io.replicas[r].addr.clone();
+        if let Err(e) = validate_hello(
+            &hello, s, &addr, &self.head, &self.plan, self.groups.len(),
+        ) {
+            self.quarantine(r, "failed handshake validation");
+            return Err(e);
+        }
+        self.io.replicas[r].fails = 0;
+        Ok(())
+    }
+
+    /// The adaptive hedge deadline for shard `s`: a multiple of the
+    /// observed EWMA latency, clamped to `[hedge_min, timeout]`;
+    /// before any samples, `hedge_initial`.
+    fn hedge_delay(&self, s: usize) -> Duration {
+        let o = &self.io.opts;
+        let ewma = self.ewma_us[s];
+        if ewma <= 0.0 {
+            return o.hedge_initial.max(o.hedge_min);
+        }
+        let ns = (ewma * 1e3 * o.hedge_factor).min(1e18);
+        Duration::from_nanos(ns as u64).clamp(o.hedge_min, o.timeout)
+    }
+
+    /// Pick the least-loaded healthy untried replica of shard `s` (tie
+    /// → listed order), dialing a quarantined one only when no
+    /// connected candidate exists AND its backoff expired, and send
+    /// `line` as exchange `id`.  Returns the replica written to.
+    fn pick_and_send(
+        &mut self,
+        s: usize,
+        id: u64,
+        line: &str,
+        tried: &mut Vec<usize>,
+    ) -> anyhow::Result<usize> {
+        let mut last_err: Option<anyhow::Error> = None;
+        loop {
+            let mut pick: Option<usize> = None;
+            for &r in &self.groups[s] {
+                if tried.contains(&r)
+                    || self.io.replicas[r].conn.is_none()
+                {
+                    continue;
+                }
+                let load = self.io.replicas[r].pending.len();
+                match pick {
+                    Some(p)
+                        if self.io.replicas[p].pending.len()
+                            <= load => {}
+                    _ => pick = Some(r),
+                }
+            }
+            let r = match pick {
+                Some(r) => r,
+                None => {
+                    let now = Instant::now();
+                    let mut cand: Option<usize> = None;
+                    for &r in &self.groups[s] {
+                        if tried.contains(&r)
+                            || self.io.replicas[r].conn.is_some()
+                            || now < self.io.replicas[r].retry_at
+                        {
+                            continue;
+                        }
+                        match cand {
+                            Some(c)
+                                if self.io.replicas[c].fails
+                                    <= self.io.replicas[r].fails => {}
+                            _ => cand = Some(r),
+                        }
+                    }
+                    let r = match cand {
+                        Some(r) => r,
+                        None => {
+                            return Err(self.no_replica_error(
+                                s, tried, last_err,
+                            ))
+                        }
+                    };
+                    tried.push(r);
+                    self.stats.shards[s]
+                        .reconnects
+                        .fetch_add(1, Ordering::Relaxed);
+                    match self.dial_validated(r) {
+                        Ok(()) => r,
+                        Err(e) => {
+                            last_err = Some(e);
+                            continue;
+                        }
+                    }
+                }
+            };
+            if !tried.contains(&r) {
+                tried.push(r);
+            }
+            self.io.queue_to(r, line);
+            if self.io.replicas[r].conn.is_some() {
+                self.io.replicas[r].pending.push_back(PendingReq {
+                    id,
+                    sent: Instant::now(),
+                    abandoned: false,
+                });
+                self.stats.replicas[r]
+                    .sent
+                    .fetch_add(1, Ordering::Relaxed);
+                return Ok(r);
+            }
+            // The write itself tore the connection down: quarantine
+            // and let the loop try the next candidate.
+            let why = self.io.replicas[r]
+                .dead
+                .clone()
+                .unwrap_or_else(|| "connection broke while writing"
+                    .to_string());
+            self.quarantine(r, &why);
+            last_err = Some(anyhow!(
+                "shard {s} ({}): {why}",
+                self.io.replicas[r].addr
+            ));
+        }
+    }
+
+    /// The error when every replica of shard `s` is tried or
+    /// quarantined — always names the shard, and prefers the most
+    /// recent concrete failure over a generic summary.
+    fn no_replica_error(
+        &self,
+        s: usize,
+        tried: &[usize],
+        last_err: Option<anyhow::Error>,
+    ) -> anyhow::Error {
+        if let Some(e) = last_err {
+            return e;
+        }
+        let now = Instant::now();
+        for &r in &self.groups[s] {
+            if tried.contains(&r) {
+                continue;
+            }
+            let rep = &self.io.replicas[r];
+            if let Some(why) = &rep.dead {
+                let wait = rep.retry_at.saturating_duration_since(now);
+                return anyhow!(
+                    "shard {s} ({}): {why} (reconnect backed off for \
+                     another {:?})",
+                    rep.addr,
+                    wait
+                );
+            }
+        }
+        anyhow!(
+            "shard {s}: no replica available (all {} replicas tried \
+             or quarantined)",
+            self.groups[s].len()
+        )
+    }
+
+    /// Scatter ONE projected batch (to the least-loaded healthy
+    /// replica of every shard) and gather complete group means into
+    /// `partials` (plan order) — the same `(B, local_groups, C)`
+    /// matrices the in-process kernels produce, ready for the
+    /// untouched `merge_scores_into`.  Because every replica of a
+    /// shard holds the same count arrays, WHICH replica answers can
+    /// never change the result — replication is invisible to the
+    /// bit-identity contract.
     ///
-    /// On failure the batch errs with a message NAMING the failing
-    /// shard; its connection is dropped and the next call reconnects
-    /// (with a fresh validated handshake), which is how the lane
-    /// recovers from kills, stalls, and restarts without respawning
-    /// anything.
+    /// The failure model, per shard: the straggling primary is hedged
+    /// to a second replica after [`Self::hedge_delay`]; a replica that
+    /// dies or misbehaves mid-gather fails over to the next candidate
+    /// under the SAME request id (first valid answer wins, late
+    /// duplicates are discarded by id); the batch errs — naming the
+    /// shard — only when every replica of some shard is exhausted or
+    /// the global deadline passes.
     pub fn gather_means(
         &mut self,
         proj_t: &[f32],
@@ -962,25 +1370,6 @@ impl RemoteShardSet {
         partials: &mut Vec<Vec<f32>>,
     ) -> anyhow::Result<()> {
         let n = self.n_shards();
-        // Reconnect anything that died (and re-hold it to the set's
-        // standard — a restarted process must serve the same shard).
-        for s in 0..n {
-            if self.io.conns[s].is_none() {
-                let hello = self.io.handshake(s)?;
-                let addr = self.io.addrs[s].clone();
-                if let Err(e) = validate_hello(
-                    &hello, s, &addr, &self.head, &self.plan, n,
-                ) {
-                    // handshake() installed the connection; tear it
-                    // down on validation failure so the NEXT batch
-                    // re-validates instead of silently scattering to a
-                    // process that just proved it serves the wrong
-                    // shard.
-                    self.io.drop_conn(s, "failed handshake validation");
-                    return Err(e);
-                }
-            }
-        }
         // Scatter: one request line serialized ONCE — every shard
         // receives the identical projected batch and slices its own
         // repetitions out of the shared hash family.
@@ -1000,116 +1389,312 @@ impl RemoteShardSet {
             self.head.p,
             line.len()
         );
-        for s in 0..n {
-            self.io.queue_to(s, &line);
-        }
         if partials.len() != n {
             partials.resize_with(n, Vec::new);
         }
         self.have.iter_mut().for_each(|h| *h = false);
         let mut missing = n;
-        let deadline = Instant::now() + self.io.timeout;
+        let now0 = Instant::now();
+        let mut slots: Vec<AwaitSlot> = (0..n)
+            .map(|_| AwaitSlot {
+                primary: None,
+                hedge: None,
+                sent: now0,
+                hedged: false,
+                tried: Vec::new(),
+            })
+            .collect();
+        for s in 0..n {
+            let mut tried = std::mem::take(&mut slots[s].tried);
+            match self.pick_and_send(s, id, &line, &mut tried) {
+                Ok(r) => {
+                    slots[s].primary = Some(r);
+                    slots[s].sent = Instant::now();
+                    slots[s].tried = tried;
+                }
+                Err(e) => {
+                    self.stats.shards[s]
+                        .errors
+                        .fetch_add(1, Ordering::Relaxed);
+                    return Err(e);
+                }
+            }
+        }
+        let deadline = Instant::now() + self.io.opts.timeout;
         loop {
-            for s in 0..n {
-                while let Some(line) = self.io.inbox[s].pop_front() {
-                    if let Some(means) =
-                        self.consume_means_line(s, &line, id, batch)?
-                    {
-                        if !self.have[s] {
-                            self.have[s] = true;
-                            missing -= 1;
-                            partials[s] = means;
-                        }
-                    }
+            // 1. Drain EVERY replica's inbox — including abandoned and
+            // freshly-dead ones, whose late answers must be consumed
+            // (and discarded by id) rather than poisoning a later
+            // batch.
+            for r in 0..self.io.replicas.len() {
+                while let Some(resp) =
+                    self.io.replicas[r].inbox.pop_front()
+                {
+                    self.consume_line(
+                        r, &resp, id, batch, &line, &mut slots,
+                        partials, &mut missing,
+                    )?;
                 }
             }
             if missing == 0 {
                 return Ok(());
             }
+            // 2. A contender died mid-gather: quarantine it, abandon
+            // its exchange, and fail the shard over to the next
+            // candidate under the same request id.
             for s in 0..n {
-                if !self.have[s] {
-                    if let Some(why) = self.io.dead[s].clone() {
-                        anyhow::bail!(
-                            "shard {s} ({}): {why}",
-                            self.io.addrs[s]
-                        );
+                if self.have[s] {
+                    continue;
+                }
+                for role in 0..2 {
+                    let r = match if role == 0 {
+                        slots[s].primary
+                    } else {
+                        slots[s].hedge
+                    } {
+                        Some(r) => r,
+                        None => continue,
+                    };
+                    if self.io.replicas[r].conn.is_some() {
+                        continue;
+                    }
+                    let addr = self.io.replicas[r].addr.clone();
+                    let why = self.io.replicas[r]
+                        .dead
+                        .clone()
+                        .unwrap_or_else(|| "connection lost"
+                            .to_string());
+                    self.quarantine(r, &why);
+                    self.mark_abandoned(r, id);
+                    if role == 0 {
+                        slots[s].primary = None;
+                    } else {
+                        slots[s].hedge = None;
+                    }
+                    if slots[s].primary.is_none()
+                        && slots[s].hedge.is_none()
+                    {
+                        let mut tried =
+                            std::mem::take(&mut slots[s].tried);
+                        match self.pick_and_send(
+                            s, id, &line, &mut tried,
+                        ) {
+                            Ok(r2) => {
+                                slots[s].primary = Some(r2);
+                                slots[s].sent = Instant::now();
+                                slots[s].hedged = false;
+                                slots[s].tried = tried;
+                                self.stats.shards[s]
+                                    .failovers
+                                    .fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(_) => {
+                                self.stats.shards[s]
+                                    .errors
+                                    .fetch_add(1, Ordering::Relaxed);
+                                anyhow::bail!(
+                                    "shard {s} ({addr}): {why}"
+                                );
+                            }
+                        }
                     }
                 }
             }
+            // 3. Hedge the stragglers: one extra contender per
+            // exchange, after the adaptive per-shard delay.
+            let now = Instant::now();
+            for s in 0..n {
+                if self.have[s]
+                    || slots[s].hedged
+                    || slots[s].hedge.is_some()
+                    || slots[s].primary.is_none()
+                    || now.duration_since(slots[s].sent)
+                        < self.hedge_delay(s)
+                {
+                    continue;
+                }
+                slots[s].hedged = true;
+                let mut tried = std::mem::take(&mut slots[s].tried);
+                let got = self.pick_and_send(s, id, &line, &mut tried);
+                slots[s].tried = tried;
+                if let Ok(r2) = got {
+                    slots[s].hedge = Some(r2);
+                    self.stats.shards[s]
+                        .hedges
+                        .fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            // 4. The global deadline: quarantine whatever is still
+            // awaited so its late answer dies with the socket and the
+            // next batch starts from a clean, backed-off state.
             if Instant::now() >= deadline {
-                let mut first = None;
+                let mut first: Option<(usize, String)> = None;
                 for s in 0..n {
-                    if !self.have[s] {
-                        if first.is_none() {
-                            first = Some(s);
+                    if self.have[s] {
+                        continue;
+                    }
+                    self.stats.shards[s]
+                        .errors
+                        .fetch_add(1, Ordering::Relaxed);
+                    let addr = slots[s]
+                        .tried
+                        .last()
+                        .map(|&r| self.io.replicas[r].addr.clone())
+                        .unwrap_or_else(|| {
+                            self.io.replicas[self.groups[s][0]]
+                                .addr
+                                .clone()
+                        });
+                    for role in 0..2 {
+                        let r_opt = if role == 0 {
+                            slots[s].primary
+                        } else {
+                            slots[s].hedge
+                        };
+                        if let Some(r) = r_opt {
+                            self.mark_abandoned(r, id);
+                            self.quarantine(r, "timed out");
                         }
-                        // Tear the stalled connection down so its late
-                        // answer dies with the socket and the next
-                        // batch starts from a clean reconnect.
-                        self.io.drop_conn(s, "timed out");
+                    }
+                    if first.is_none() {
+                        first = Some((s, addr));
                     }
                 }
-                let s = first.expect("a shard is missing on timeout");
+                let (s, addr) =
+                    first.expect("a shard is missing on timeout");
                 anyhow::bail!(
-                    "shard {s} ({}) timed out after {:?} (stalled or \
-                     overloaded); its connection was dropped and the \
-                     next batch will reconnect",
-                    self.io.addrs[s],
-                    self.io.timeout
+                    "shard {s} ({addr}) timed out after {:?} (stalled \
+                     or overloaded); its connection was dropped and \
+                     the next batch will reconnect",
+                    self.io.opts.timeout
                 );
             }
+            // 5. Sleep until the deadline or the earliest hedge fire,
+            // whichever is sooner.
+            let mut wake = deadline;
+            for s in 0..n {
+                if self.have[s]
+                    || slots[s].hedged
+                    || slots[s].primary.is_none()
+                {
+                    continue;
+                }
+                let fire = slots[s].sent + self.hedge_delay(s);
+                if fire < wake {
+                    wake = fire;
+                }
+            }
             self.io
-                .pump(wait_ms_until(deadline))
+                .pump(wait_ms_until(wake))
                 .map_err(|e| anyhow!("shard client epoll wait: {e}"))?;
         }
     }
 
-    /// Interpret one line from shard `s` during a gather for request
-    /// `want_id`: `Ok(Some(means))` for the awaited answer, `Ok(None)`
-    /// for a discarded stale line (a timed-out batch answered late),
-    /// `Err` for anything that fails the batch.
-    fn consume_means_line(
+    /// Interpret one line from replica `r` during the gather for
+    /// request `want_id`.  Accepts the first valid answer per shard;
+    /// discards stale/duplicate/abandoned answers by request id
+    /// WITHOUT inspecting their content (so they cannot poison
+    /// latency estimates or health state); anything malformed
+    /// quarantines the replica and fails over if no other contender
+    /// is in flight.
+    #[allow(clippy::too_many_arguments)]
+    fn consume_line(
         &mut self,
-        s: usize,
+        r: usize,
         line: &str,
         want_id: u64,
         batch: usize,
-    ) -> anyhow::Result<Option<Vec<f32>>> {
-        let addr = self.io.addrs[s].clone();
+        line_req: &str,
+        slots: &mut Vec<AwaitSlot>,
+        partials: &mut [Vec<f32>],
+        missing: &mut usize,
+    ) -> anyhow::Result<()> {
+        let s = self.io.replicas[r].shard;
+        let addr = self.io.replicas[r].addr.clone();
         let j = match json::parse(line) {
             Ok(j) => j,
             Err(e) => {
-                self.io.drop_conn(s, "sent an unparseable line");
-                anyhow::bail!(
-                    "shard {s} ({addr}): unparseable response: {e}"
+                self.quarantine(r, "sent an unparseable line");
+                Self::remove_from_slot(slots, s, r);
+                return self.failover_or(
+                    s,
+                    want_id,
+                    line_req,
+                    slots,
+                    format!(
+                        "shard {s} ({addr}): unparseable response: {e}"
+                    ),
                 );
             }
         };
         let rid = j.get("id").and_then(|v| v.as_u64());
         match rid {
-            Some(r) if r < want_id => return Ok(None), // stale
-            Some(r) if r == want_id => {}
+            Some(x) if x < want_id => {
+                // A previous batch answered late: discard by id.
+                self.take_pending(r, x);
+                self.stats.shards[s]
+                    .discarded
+                    .fetch_add(1, Ordering::Relaxed);
+                return Ok(());
+            }
+            Some(x) if x == want_id => {}
             _ => {
-                self.io
-                    .drop_conn(s, "answered with an unknown request id");
-                anyhow::bail!(
-                    "shard {s} ({addr}): response id {rid:?} does not \
-                     match request {want_id}"
+                self.quarantine(
+                    r,
+                    "answered with an unknown request id",
+                );
+                Self::remove_from_slot(slots, s, r);
+                return self.failover_or(
+                    s,
+                    want_id,
+                    line_req,
+                    slots,
+                    format!(
+                        "shard {s} ({addr}): response id {rid:?} does \
+                         not match request {want_id}"
+                    ),
                 );
             }
         }
+        let entry = self.take_pending(r, want_id);
+        let abandoned = entry.as_ref().map_or(true, |p| p.abandoned);
+        if self.have[s] || abandoned {
+            // The duplicate from a lost hedge race or a failed-over
+            // exchange: discarded by id, content never inspected.
+            self.stats.shards[s]
+                .discarded
+                .fetch_add(1, Ordering::Relaxed);
+            return Ok(());
+        }
         if let Some(err) = j.get("error").and_then(|v| v.as_str()) {
             // A well-formed error response leaves the stream framed;
-            // the connection stays up.
-            anyhow::bail!("shard {s} ({addr}) answered an error: {err}");
+            // the connection stays up, but this exchange is over.
+            self.stats.replicas[r]
+                .abandoned
+                .fetch_add(1, Ordering::Relaxed);
+            Self::remove_from_slot(slots, s, r);
+            return self.failover_or(
+                s,
+                want_id,
+                line_req,
+                slots,
+                format!("shard {s} ({addr}) answered an error: {err}"),
+            );
         }
         let lg = self.plan.span(s).local_groups();
         let g = j.get("g").and_then(|v| v.as_u64());
         if g != Some(lg as u64) {
-            self.io.drop_conn(s, "answered for the wrong group range");
-            anyhow::bail!(
-                "shard {s} ({addr}) answered {g:?} groups, the plan \
-                 expects {lg}"
+            self.quarantine(r, "answered for the wrong group range");
+            Self::remove_from_slot(slots, s, r);
+            return self.failover_or(
+                s,
+                want_id,
+                line_req,
+                slots,
+                format!(
+                    "shard {s} ({addr}) answered {g:?} groups, the \
+                     plan expects {lg}"
+                ),
             );
         }
         let means = match j
@@ -1119,22 +1704,155 @@ impl RemoteShardSet {
         {
             Ok(m) => m,
             Err(e) => {
-                self.io.drop_conn(s, "sent a malformed mean matrix");
-                anyhow::bail!("shard {s} ({addr}): {e}");
+                self.quarantine(r, "sent a malformed mean matrix");
+                Self::remove_from_slot(slots, s, r);
+                return self.failover_or(
+                    s,
+                    want_id,
+                    line_req,
+                    slots,
+                    format!("shard {s} ({addr}): {e}"),
+                );
             }
         };
         let c_n = self.head.n_classes;
         let want_len = batch as u128 * lg as u128 * c_n as u128;
         if means.len() as u128 != want_len {
-            self.io
-                .drop_conn(s, "sent a mean matrix with wrong dimensions");
-            anyhow::bail!(
-                "shard {s} ({addr}): mean matrix has {} entries, want \
-                 B × g × C = {batch} × {lg} × {c_n}",
-                means.len()
+            let got = means.len();
+            self.quarantine(
+                r,
+                "sent a mean matrix with wrong dimensions",
+            );
+            Self::remove_from_slot(slots, s, r);
+            return self.failover_or(
+                s,
+                want_id,
+                line_req,
+                slots,
+                format!(
+                    "shard {s} ({addr}): mean matrix has {got} \
+                     entries, want B × g × C = {batch} × {lg} × {c_n}"
+                ),
             );
         }
-        Ok(Some(means))
+        // Accepted: first valid answer wins the shard.
+        self.have[s] = true;
+        *missing -= 1;
+        partials[s] = means;
+        if let Some(p) = entry {
+            let sample_us = p.sent.elapsed().as_nanos() as f64 / 1e3;
+            let old = self.ewma_us[s];
+            self.ewma_us[s] = if old <= 0.0 {
+                sample_us
+            } else {
+                0.7 * old + 0.3 * sample_us
+            };
+            let rold = self.stats.replicas[r].ewma_us();
+            self.stats.replicas[r].set_ewma_us(if rold <= 0.0 {
+                sample_us
+            } else {
+                0.7 * rold + 0.3 * sample_us
+            });
+            self.stats.shards[s]
+                .latency
+                .record_ns((sample_us * 1e3) as u64);
+        }
+        self.stats.shards[s].gathers.fetch_add(1, Ordering::Relaxed);
+        self.stats.replicas[r]
+            .answered
+            .fetch_add(1, Ordering::Relaxed);
+        // The losing contender (if any) is abandoned; its late answer
+        // will be discarded by id when it arrives.
+        for role in 0..2 {
+            let o = if role == 0 {
+                slots[s].primary
+            } else {
+                slots[s].hedge
+            };
+            if let Some(o) = o {
+                if o != r {
+                    self.mark_abandoned(o, want_id);
+                }
+            }
+        }
+        slots[s].primary = None;
+        slots[s].hedge = None;
+        Ok(())
+    }
+
+    /// If shard `s` still has a contender in flight, the gather keeps
+    /// racing; otherwise try one failover send, and only when THAT is
+    /// impossible fail the batch with the original (descriptive)
+    /// error.
+    fn failover_or(
+        &mut self,
+        s: usize,
+        id: u64,
+        line: &str,
+        slots: &mut Vec<AwaitSlot>,
+        err_msg: String,
+    ) -> anyhow::Result<()> {
+        if self.have[s]
+            || slots[s].primary.is_some()
+            || slots[s].hedge.is_some()
+        {
+            return Ok(());
+        }
+        let mut tried = std::mem::take(&mut slots[s].tried);
+        match self.pick_and_send(s, id, line, &mut tried) {
+            Ok(r2) => {
+                slots[s].primary = Some(r2);
+                slots[s].sent = Instant::now();
+                slots[s].hedged = false;
+                slots[s].tried = tried;
+                self.stats.shards[s]
+                    .failovers
+                    .fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(_) => {
+                slots[s].tried = tried;
+                self.stats.shards[s]
+                    .errors
+                    .fetch_add(1, Ordering::Relaxed);
+                Err(anyhow!(err_msg))
+            }
+        }
+    }
+
+    /// Remove (and return) replica `r`'s pending entry for `id`.
+    fn take_pending(&mut self, r: usize, id: u64) -> Option<PendingReq> {
+        let pos = self.io.replicas[r]
+            .pending
+            .iter()
+            .position(|p| p.id == id)?;
+        self.io.replicas[r].pending.remove(pos)
+    }
+
+    /// Mark replica `r`'s exchange `id` abandoned (late answers
+    /// discarded, no stat updates) and count it once.
+    fn mark_abandoned(&mut self, r: usize, id: u64) {
+        if let Some(p) = self.io.replicas[r]
+            .pending
+            .iter_mut()
+            .find(|p| p.id == id)
+        {
+            if !p.abandoned {
+                p.abandoned = true;
+                self.stats.replicas[r]
+                    .abandoned
+                    .fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    fn remove_from_slot(slots: &mut [AwaitSlot], s: usize, r: usize) {
+        if slots[s].primary == Some(r) {
+            slots[s].primary = None;
+        }
+        if slots[s].hedge == Some(r) {
+            slots[s].hedge = None;
+        }
     }
 }
 
@@ -1269,5 +1987,47 @@ mod tests {
             r#"{"id":1,"shard":"means","b":2,"proj":[1.0,"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn stats_request_parses() {
+        let req =
+            parse_shard_request(r#"{"id":4,"shard":"stats"}"#).unwrap();
+        assert_eq!(req.id, 4);
+        assert!(matches!(req.call, ShardCall::Stats));
+    }
+
+    #[test]
+    fn remote_options_defaults_are_sane() {
+        let o = RemoteOptions::default();
+        assert_eq!(o.timeout, Duration::from_secs(5));
+        assert!(o.hedge_factor > 1.0);
+        assert!(o.hedge_min <= o.hedge_initial);
+        assert!(o.backoff_base < o.backoff_cap);
+        let o2 = RemoteOptions::with_timeout(Duration::from_millis(123));
+        assert_eq!(o2.timeout, Duration::from_millis(123));
+        assert_eq!(o2.hedge_initial, o.hedge_initial);
+        assert_eq!(o2.backoff_cap, o.backoff_cap);
+    }
+
+    #[test]
+    fn backoff_grows_doubles_and_caps_with_bounded_jitter() {
+        let opts = RemoteOptions::default();
+        let mut rng = SplitMix64::new(7);
+        for _ in 0..64 {
+            // First failure: [base, 1.5 × base).
+            let b = backoff_for(&opts, 1, &mut rng);
+            assert!(b >= opts.backoff_base, "{b:?}");
+            assert!(b < opts.backoff_base.mul_f64(1.5), "{b:?}");
+            // Third failure: [4 × base, 6 × base).
+            let b = backoff_for(&opts, 3, &mut rng);
+            assert!(b >= opts.backoff_base.saturating_mul(4));
+            assert!(b < opts.backoff_base.mul_f64(6.0));
+            // Deep failure counts saturate at the cap (shift is
+            // clamped, so no overflow either).
+            let b = backoff_for(&opts, 1000, &mut rng);
+            assert!(b >= opts.backoff_cap);
+            assert!(b < opts.backoff_cap.mul_f64(1.5));
+        }
     }
 }

@@ -24,6 +24,13 @@
 //!    gets exactly one response (an error naming the dead shard —
 //!    never silence, never a partial merge), and the lane recovers
 //!    once the shard returns.
+//!
+//! 4. **Replication** — replica groups under the same faults: a
+//!    straggler's hedged duplicate is discarded by id without touching
+//!    latency estimates or health state; kill + SIGSTOP across a
+//!    3-replica set surfaces ZERO errors (hedge + in-batch failover)
+//!    with answers still bit-identical; a dead replica's reconnect
+//!    probes are backoff-gated, not per-batch.
 #![cfg(target_os = "linux")]
 
 use repsketch::coordinator::batcher::BatcherConfig;
@@ -33,7 +40,7 @@ use repsketch::coordinator::{
 use repsketch::kernel::KernelParams;
 use repsketch::shard::remote::{
     hello_response_line, means_response_line, parse_shard_request,
-    serve_local, ShardCall, ShardHello,
+    serve_local, RemoteOptions, RemoteShardSet, ShardCall, ShardHello,
 };
 use repsketch::shard::{ShardSpan, ShardedSketch};
 use repsketch::sketch::{
@@ -45,6 +52,7 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
 use std::process::{Child, ChildStdout, Command, Stdio};
+use std::sync::atomic::Ordering;
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -575,6 +583,7 @@ fn mock_shard_once(
             let resp = match req.call {
                 ShardCall::Hello => hello_response_line(req.id, &hello),
                 ShardCall::Means { .. } => means_line_for(req.id),
+                ShardCall::Stats => continue,
             };
             if w.write_all(resp.as_bytes())
                 .and_then(|_| w.write_all(b"\n"))
@@ -1021,4 +1030,336 @@ fn shard_serve_child_survives_client_churn_and_rejects_bad_files() {
         .status()
         .unwrap();
     assert!(!out.success(), "shard-serve must reject a non-RSFS file");
+}
+
+// ---------------------------------------------------------------------------
+// 4. Replication: hedging, failover, quarantine
+// ---------------------------------------------------------------------------
+
+/// A scripted replica for the hedging tests: answers `hello` honestly
+/// and instantly, but sleeps `delay` before every `means` answer,
+/// always returning a constant matrix (`means_value`) so the test can
+/// tell WHICH replica's answer was accepted.  Serves exactly one
+/// connection — the client dials each replica once and keeps it — and
+/// exits at EOF.
+fn mock_replica(
+    hello: ShardHello,
+    delay: Duration,
+    means_value: f32,
+    lg: usize,
+) -> (String, std::thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || {
+        let Ok((stream, _)) = listener.accept() else { return };
+        let mut reader = BufReader::new(match stream.try_clone() {
+            Ok(s) => s,
+            Err(_) => return,
+        });
+        let mut w = stream;
+        let mut line = String::new();
+        loop {
+            line.clear();
+            match reader.read_line(&mut line) {
+                Ok(0) | Err(_) => return,
+                Ok(_) => {}
+            }
+            let Ok(req) = parse_shard_request(line.trim()) else {
+                continue;
+            };
+            let resp = match req.call {
+                ShardCall::Hello => hello_response_line(req.id, &hello),
+                ShardCall::Means { batch, .. } => {
+                    std::thread::sleep(delay);
+                    means_response_line(
+                        req.id,
+                        lg,
+                        &vec![means_value; batch * lg],
+                        0.0,
+                    )
+                }
+                ShardCall::Stats => continue,
+            };
+            if w.write_all(resp.as_bytes())
+                .and_then(|_| w.write_all(b"\n"))
+                .and_then(|_| w.flush())
+                .is_err()
+            {
+                return;
+            }
+        }
+    });
+    (addr, handle)
+}
+
+/// Satellite lock-down: a hedged-and-abandoned replica's late answer
+/// is discarded by request id and contributes NOTHING — not to the
+/// latency EWMA the hedge deadline is seeded from, not to health
+/// state.  A slow-but-correct replica must never look poisoned.
+#[test]
+fn hedged_duplicate_answers_do_not_poison_estimates() {
+    let _g = serial();
+    let sk = fault_sketch();
+    let sharded = ShardedSketch::from_race(&sk, 1);
+    let sh = &sharded.shards[0];
+    let lg = sh.local_groups();
+    let hello = ShardHello {
+        head: sharded.head.clone(),
+        shard_index: 0,
+        n_shards: 1,
+        span: ShardSpan {
+            group_start: sh.group_start,
+            group_end: sh.group_end,
+            row_start: sh.row_start,
+            row_end: sh.row_end,
+        },
+    };
+    // Replica A straggles 700 ms on every means call; replica B
+    // answers immediately.  Distinct constants prove who won.
+    let (addr_a, ha) = mock_replica(
+        hello.clone(),
+        Duration::from_millis(700),
+        0.25,
+        lg,
+    );
+    let (addr_b, hb) = mock_replica(hello, Duration::ZERO, 0.5, lg);
+    let mut opts =
+        RemoteOptions::with_timeout(Duration::from_secs(10));
+    opts.hedge_initial = Duration::from_millis(50);
+    opts.hedge_min = Duration::from_millis(50);
+    let mut set = RemoteShardSet::connect_replicated(
+        vec![vec![addr_a, addr_b]],
+        opts,
+    )
+    .expect("connect replicated mocks");
+    let stats = set.stats();
+    let p = set.head().p;
+    let proj: Vec<f32> = (0..p).map(|i| 0.1 * i as f32).collect();
+    let mut partials = Vec::new();
+
+    // Exchange 1: A (listed first, equal load) is the primary and
+    // straggles past the 50 ms hedge deadline; B's hedged answer wins.
+    set.gather_means(&proj, 1, &mut partials).expect("gather 1");
+    assert_eq!(partials[0], vec![0.5f32; lg], "the hedge answer won");
+    assert_eq!(stats.shards[0].hedges.load(Ordering::Relaxed), 1);
+
+    // Let A's abandoned answer land in the socket buffer, then run
+    // another exchange: the stale line is drained and discarded by
+    // request id, content never inspected.
+    std::thread::sleep(Duration::from_millis(1000));
+    set.gather_means(&proj, 1, &mut partials).expect("gather 2");
+    assert_eq!(partials[0], vec![0.5f32; lg]);
+
+    let a = &stats.replicas[stats.groups[0][0]];
+    let b = &stats.replicas[stats.groups[0][1]];
+    assert_eq!(
+        a.answered.load(Ordering::Relaxed),
+        0,
+        "the abandoned replica never wins an exchange"
+    );
+    assert_eq!(
+        a.ewma_us(),
+        0.0,
+        "a discarded duplicate must not feed the latency EWMA"
+    );
+    assert!(a.abandoned.load(Ordering::Relaxed) >= 1);
+    assert!(stats.shards[0].discarded.load(Ordering::Relaxed) >= 1);
+    // And it must not poison health: the slow replica answered a
+    // well-framed (if late) line, so nothing was quarantined and
+    // nothing failed over.
+    assert_eq!(stats.shards[0].quarantines.load(Ordering::Relaxed), 0);
+    assert_eq!(stats.shards[0].failovers.load(Ordering::Relaxed), 0);
+    assert_eq!(b.answered.load(Ordering::Relaxed), 2);
+    assert!(b.ewma_us() > 0.0, "the winner does seed the EWMA");
+    assert_eq!(stats.shards[0].gathers.load(Ordering::Relaxed), 2);
+    drop(set);
+    let _ = ha.join();
+    let _ = hb.join();
+}
+
+/// The tentpole availability claim: with 3 replicas per shard, killing
+/// one replica of EVERY shard mid-burst and SIGSTOPping another must
+/// surface ZERO error responses — hedging and in-batch failover cover
+/// every accepted request, exactly once, still bit-identical to the
+/// scalar path.
+#[test]
+fn replica_failover_kill_and_stall_zero_errors() {
+    let _g = serial();
+    let sk = fault_sketch();
+    let sharded = ShardedSketch::from_race(&sk, 2);
+    let files = TempShardFiles::create(&sharded);
+    let d = sharded.head.d;
+    // Three replicas per shard, each serving the same RSFS file —
+    // which is exactly why replication can never change an answer.
+    let mut procs: Vec<Vec<ShardProc>> = files
+        .paths
+        .iter()
+        .map(|p| {
+            (0..3)
+                .map(|_| ShardProc::spawn(p, "127.0.0.1:0"))
+                .collect()
+        })
+        .collect();
+    let groups: Vec<Vec<String>> = procs
+        .iter()
+        .map(|g| g.iter().map(|p| p.addr.clone()).collect())
+        .collect();
+    let mut opts =
+        RemoteOptions::with_timeout(Duration::from_secs(15));
+    opts.hedge_initial = Duration::from_millis(100);
+    let engine = backend::RemoteShardedEngine::connect_replicated(
+        groups, opts,
+    )
+    .expect("connect the replicated child set");
+    // Grab the observability surface BEFORE the engine moves into its
+    // lane.
+    let stats = engine.stats();
+    let mut router = Router::new();
+    let cfg = RouterConfig {
+        batcher: BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 4096,
+        },
+    };
+    router.add_lane("m", BackendKind::Sharded, move || {
+        Ok(Box::new(engine) as _)
+    }, &cfg);
+    let mut rng = SplitMix64::new(0x2E07);
+    let mut in_flight = Vec::new();
+    for i in 0..64u64 {
+        let q: Vec<f32> =
+            (0..d).map(|_| rng.next_gaussian() as f32).collect();
+        in_flight.push((
+            q.clone(),
+            router
+                .submit(Request {
+                    id: i,
+                    model: "m".into(),
+                    backend: BackendKind::Sharded,
+                    features: q,
+                    want_scores: false,
+                })
+                .unwrap(),
+        ));
+        if i == 5 {
+            // Kill the first-choice replica of every shard mid-burst.
+            for g in procs.iter_mut() {
+                g[0].kill();
+            }
+        }
+        if i == 20 {
+            // Stall the next-in-line replica: hedging must route
+            // around it without a single error surfacing.
+            for g in procs.iter() {
+                g[1].signal("-STOP");
+            }
+        }
+        // A breath between submissions so the burst spans several
+        // batches — the kill and the stall land mid-stream, not
+        // before the first scatter.
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let mut qs = QueryScratch::default();
+    for (q, rx) in in_flight {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("every accepted request is answered");
+        let v = resp.result.unwrap_or_else(|e| {
+            panic!(
+                "no request may fail while a replica survives: {e}"
+            )
+        });
+        assert_eq!(
+            v.to_bits(),
+            sk.query_with(&q, &mut qs).to_bits(),
+            "failover and hedging must stay bit-identical"
+        );
+        assert!(rx.try_recv().is_err(), "exactly one response");
+    }
+    let sum = |f: &dyn Fn(&repsketch::metrics::ShardSlo) -> u64| {
+        stats.shards.iter().map(|s| f(s)).sum::<u64>()
+    };
+    let errors = sum(&|s| s.errors.load(Ordering::Relaxed));
+    let hedges = sum(&|s| s.hedges.load(Ordering::Relaxed));
+    let recovered = sum(&|s| {
+        s.failovers.load(Ordering::Relaxed)
+            + s.quarantines.load(Ordering::Relaxed)
+    });
+    assert_eq!(errors, 0, "zero errors: the replicas must cover");
+    assert!(hedges >= 1, "the stalled replica must force a hedge");
+    assert!(
+        recovered >= 1,
+        "the killed replica must be quarantined or failed over"
+    );
+    for g in procs.iter() {
+        g[1].signal("-CONT");
+    }
+}
+
+/// Satellite lock-down: a dead replica is re-probed with capped
+/// exponential backoff, NOT on every batch — rapid-fire batches
+/// against a dead shard must not turn into a reconnect storm.  And a
+/// restart on the old port is reintegrated by the next allowed probe.
+#[test]
+fn dead_replica_reconnects_use_backoff_not_every_batch() {
+    let _g = serial();
+    let sk = fault_sketch();
+    let sharded = ShardedSketch::from_race(&sk, 1);
+    let files = TempShardFiles::create(&sharded);
+    let mut proc0 = ShardProc::spawn(&files.paths[0], "127.0.0.1:0");
+    let addr = proc0.addr.clone();
+    let mut engine = backend::RemoteShardedEngine::connect_replicated(
+        vec![vec![addr.clone()]],
+        RemoteOptions::with_timeout(Duration::from_secs(2)),
+    )
+    .expect("connect");
+    let stats = engine.stats();
+    let d = sharded.head.d;
+    let mut rng = SplitMix64::new(0x2E08);
+    let queries = random_queries(&mut rng, 1, d);
+    let rows = rows_of(&queries, d);
+    engine.eval_batch(&rows).expect("healthy batch");
+    proc0.kill();
+    // 20 rapid batches against the dead replica: every one fails
+    // naming the shard, but dial attempts are backoff-gated.
+    for _ in 0..20 {
+        let err = engine
+            .eval_batch(&rows)
+            .expect_err("the only replica is dead");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("shard 0"), "{msg}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let probes = stats.shards[0].reconnects.load(Ordering::Relaxed);
+    assert!(
+        (1..=8).contains(&probes),
+        "20 batches in ~200 ms must be throttled to a handful of \
+         backed-off probes, got {probes}"
+    );
+    // Reintegration: restart on the old port; the next allowed probe
+    // revalidates the handshake and the lane recovers.
+    proc0 = ShardProc::spawn(&files.paths[0], &addr);
+    let want = sk.query_with(&rows[0], &mut QueryScratch::default());
+    let deadline = std::time::Instant::now() + Duration::from_secs(20);
+    loop {
+        match engine.eval_batch(&rows) {
+            Ok(got) => {
+                assert_eq!(
+                    got[0].to_bits(),
+                    want.to_bits(),
+                    "post-reintegration answers must be exact"
+                );
+                break;
+            }
+            Err(e) => {
+                assert!(
+                    std::time::Instant::now() < deadline,
+                    "replica was not reintegrated after restart: {e}"
+                );
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+    drop(proc0);
 }
