@@ -36,6 +36,7 @@ fn throughput(
                     backend: kind,
                     features: rows[i % rows.len()].clone(),
                     want_scores: false,
+                    update: None,
                 });
                 resp.result.expect("response");
             }
@@ -73,7 +74,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- router with a single in-process caller ---------------------------
     let mk_router = |max_batch: usize, max_wait_us: u64| {
-        let mut router = Router::new();
+        let router = Router::new();
         let cfg = RouterConfig {
             batcher: BatcherConfig {
                 max_batch,
@@ -101,6 +102,7 @@ fn main() -> anyhow::Result<()> {
             backend: BackendKind::Sketch,
             features: rows[j % rows.len()].clone(),
             want_scores: false,
+            update: None,
         });
         std::hint::black_box(resp.result.unwrap());
         j += 1;

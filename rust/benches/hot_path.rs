@@ -74,7 +74,7 @@ fn assert_router_hot_path_zero_copy() -> u64 {
         }
     }
 
-    let mut router = Router::new();
+    let router = Router::new();
     let cfg = RouterConfig {
         batcher: BatcherConfig {
             max_batch: B,
@@ -96,6 +96,7 @@ fn assert_router_hot_path_zero_copy() -> u64 {
             backend: BackendKind::Sketch,
             features: vec![0.5; DIM],
             want_scores: false,
+            update: None,
         })
         .collect();
     let mut rxs = Vec::with_capacity(B);

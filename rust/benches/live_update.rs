@@ -1,0 +1,374 @@
+//! The live update plane under load: what streaming mutation costs,
+//! and what it costs everyone else.  Four measured cases plus a
+//! bit-identity anchor (streamed build == single-pass build) that runs
+//! before any timing:
+//!
+//! * `update batch (publish amortized)` — `apply_updates` against the
+//!   double-buffered counter plane, deltas surfacing at the MAX_PENDING
+//!   threshold (the write-path steady state).
+//! * `update batch (publish every batch)` — the same stream forcing an
+//!   epoch flip per batch: the price of immediate read-your-writes.
+//! * `query p99, idle lane` — router round-trip with no writers
+//!   (control for the interference ratio).
+//! * `query p99, live update stream` — the same queries while a
+//!   mutator thread streams updates through the SAME lane; FIFO
+//!   same-verb batching means every flip sits in some query's latency.
+//!
+//! Headline numbers: `update_rows_per_sec` for both publish cadences,
+//! `query_p99_interference_ratio` (under-stream over idle), and
+//! `swap_flip_p99_ms` — full lane replacement (drain + flip) latency
+//! measured under a live query stream, the number the zero-downtime
+//! claim rides on.
+//!
+//! Writes `BENCH_update.json` at the repo root.
+//!
+//! Run: `cargo bench --bench live_update [-- --smoke]`
+
+use repsketch::coordinator::{
+    backend, BackendKind, Engine, Request, Router, RouterConfig,
+};
+use repsketch::kernel::KernelParams;
+use repsketch::sketch::{RaceSketch, SketchConfig};
+use repsketch::util::bench::{self, BenchResult};
+use repsketch::util::json::{self, Json};
+use repsketch::util::rng::SplitMix64;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+const D: usize = 16;
+const P: usize = 8;
+const M: usize = 64;
+const ROWS: usize = 256;
+const COLS: usize = 32;
+/// Rows per `apply_updates` call — the wire batcher's drain shape.
+const UPDATE_BATCH: usize = 64;
+
+fn synthetic_params(seed: u64, m: usize) -> KernelParams {
+    let mut rng = SplitMix64::new(seed);
+    KernelParams {
+        d: D,
+        p: P,
+        m,
+        a: (0..D * P)
+            .map(|_| rng.next_gaussian() as f32 * 0.5)
+            .collect(),
+        x: (0..m * P).map(|_| rng.next_gaussian() as f32).collect(),
+        alpha: (0..m).map(|_| 0.5 + rng.next_f32()).collect(),
+        width: 2.0,
+        lsh_seed: rng.next_u64(),
+        k_per_row: 2,
+        default_rows: ROWS,
+        default_cols: COLS,
+    }
+}
+
+fn build(kp: &KernelParams) -> RaceSketch {
+    RaceSketch::build(kp, &SketchConfig::default())
+}
+
+fn update_pool(seed: u64, n: usize) -> Vec<backend::UpdateRow> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n)
+        .map(|_| backend::UpdateRow {
+            x: (0..P).map(|_| rng.next_gaussian() as f32).collect(),
+            alpha: 0.5 + rng.next_f32(),
+            class: 0,
+        })
+        .collect()
+}
+
+fn quantiles(name: &str, mut samples: Vec<f64>) -> BenchResult {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let q = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_ns: mean,
+        p50_ns: q(0.5),
+        p99_ns: q(0.99),
+        min_ns: samples[0],
+    }
+}
+
+/// Per-batch `apply_updates` latency; the pool is cycled so every
+/// batch folds fresh points.
+fn bench_updates(
+    name: &str,
+    n: usize,
+    engine: &mut dyn Engine,
+    pool: &[backend::UpdateRow],
+    publish: bool,
+) -> anyhow::Result<BenchResult> {
+    let mut samples = Vec::with_capacity(n);
+    for i in 0..n {
+        let at = (i * UPDATE_BATCH) % (pool.len() - UPDATE_BATCH);
+        let batch = &pool[at..at + UPDATE_BATCH];
+        let t = Instant::now();
+        std::hint::black_box(engine.apply_updates(batch, publish)?);
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    Ok(quantiles(name, samples))
+}
+
+fn query_req(id: u64, x: Vec<f32>) -> Request {
+    Request {
+        id,
+        model: "m".into(),
+        backend: BackendKind::Sketch,
+        features: x,
+        want_scores: false,
+        update: None,
+    }
+}
+
+/// Per-query router round-trip latency (submit → response recv).
+fn bench_queries(
+    name: &str,
+    n: usize,
+    router: &Router,
+    rows: &[Vec<f32>],
+) -> anyhow::Result<BenchResult> {
+    let mut samples = Vec::with_capacity(n);
+    for i in 0..n {
+        let q = rows[i % rows.len()].clone();
+        let t = Instant::now();
+        let resp = router.call(query_req(i as u64, q));
+        samples.push(t.elapsed().as_nanos() as f64);
+        resp.result.map_err(anyhow::Error::msg)?;
+    }
+    Ok(quantiles(name, samples))
+}
+
+/// Streamed-vs-rebuilt bit-identity: the anchor that makes the
+/// throughput numbers mean something (a fast plane that drifts from
+/// the single-pass build measures nothing).
+fn anchor() -> anyhow::Result<()> {
+    let kp = synthetic_params(0xA11C_4042, M);
+    let keep = M / 2;
+    let mut partial_kp = kp.clone();
+    partial_kp.m = keep;
+    partial_kp.x.truncate(keep * P);
+    partial_kp.alpha.truncate(keep);
+    let mut streamed =
+        backend::SketchEngine::new(build(&partial_kp));
+    let tail: Vec<backend::UpdateRow> = (keep..M)
+        .map(|i| backend::UpdateRow {
+            x: kp.x[i * P..(i + 1) * P].to_vec(),
+            alpha: kp.alpha[i],
+            class: 0,
+        })
+        .collect();
+    for c in tail.chunks(7) {
+        streamed.apply_updates(c, false)?;
+    }
+    let mut single = backend::SketchEngine::new(build(&kp));
+    let mut rng = SplitMix64::new(0xA11C);
+    let rows: Vec<Vec<f32>> = (0..16)
+        .map(|_| (0..D).map(|_| rng.next_gaussian() as f32).collect())
+        .collect();
+    let got = streamed.eval_batch(&rows)?;
+    let want = single.eval_batch(&rows)?;
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        anyhow::ensure!(
+            g.to_bits() == w.to_bits(),
+            "streamed build diverges from single-pass at row {i}: \
+             {g} vs {w}"
+        );
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let n_updates = if smoke { 400 } else { 4000 };
+    let n_queries = if smoke { 800 } else { 8000 };
+    let n_flips = if smoke { 20 } else { 100 };
+
+    anchor()?;
+    println!("bit-identity anchor passed (streamed == single-pass)");
+    println!(
+        "live update plane: d={D} p={P} m={M} L={ROWS} R={COLS} \
+         update_batch={UPDATE_BATCH}{}",
+        if smoke { " (smoke)" } else { "" }
+    );
+    bench::header();
+    let mut results = Vec::new();
+
+    let sketch = build(&synthetic_params(0x5EED_1DEA, M));
+    let pool = update_pool(0xBEEF, 4096);
+
+    // --- Write path, both publish cadences. ---
+    let mut engine = backend::SketchEngine::new(sketch.clone());
+    let r_amort = bench_updates(
+        "update batch (publish amortized)",
+        n_updates,
+        &mut engine,
+        &pool,
+        false,
+    )?;
+    r_amort.print();
+    let mut engine = backend::SketchEngine::new(sketch.clone());
+    let r_pub = bench_updates(
+        "update batch (publish every batch)",
+        n_updates,
+        &mut engine,
+        &pool,
+        true,
+    )?;
+    r_pub.print();
+
+    // --- Read path: idle control, then under a live update stream
+    // through the same lane. ---
+    let router = Arc::new(Router::new());
+    {
+        let sk = sketch.clone();
+        router.add_lane(
+            "m",
+            BackendKind::Sketch,
+            move || Ok(Box::new(backend::SketchEngine::new(sk)) as _),
+            &RouterConfig::default(),
+        );
+    }
+    let mut rng = SplitMix64::new(0x0B5E);
+    let rows: Vec<Vec<f32>> = (0..64)
+        .map(|_| (0..D).map(|_| rng.next_gaussian() as f32).collect())
+        .collect();
+    let r_idle =
+        bench_queries("query p99, idle lane", n_queries, &router, &rows)?;
+    r_idle.print();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let mutator = {
+        let router = router.clone();
+        let stop = stop.clone();
+        let pool = pool.clone();
+        std::thread::spawn(move || {
+            let mut i = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                let u = &pool[i % pool.len()];
+                let resp = router.call(Request {
+                    update: Some(
+                        repsketch::coordinator::protocol::UpdateSpec {
+                            weight: u.alpha,
+                            class: 0,
+                            delete: false,
+                            publish: i % 8 == 0,
+                        },
+                    ),
+                    ..query_req(1_000_000 + i as u64, u.x.clone())
+                });
+                assert!(resp.result.is_ok(), "mutator rejected");
+                i += 1;
+            }
+        })
+    };
+    let r_stream = bench_queries(
+        "query p99, live update stream",
+        n_queries,
+        &router,
+        &rows,
+    )?;
+    stop.store(true, Ordering::Relaxed);
+    mutator.join().unwrap();
+    r_stream.print();
+
+    // --- Swap flip: full lane replacement (drain + version flip)
+    // while a query stream keeps the lane busy. ---
+    let stop = Arc::new(AtomicBool::new(false));
+    let querier = {
+        let router = router.clone();
+        let stop = stop.clone();
+        let rows = rows.clone();
+        std::thread::spawn(move || {
+            let mut i = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                let q = rows[i % rows.len()].clone();
+                let resp = router.call(query_req(2_000_000 + i as u64, q));
+                assert!(resp.result.is_ok(), "querier rejected");
+                i += 1;
+            }
+        })
+    };
+    let mut flip_samples = Vec::with_capacity(n_flips);
+    for _ in 0..n_flips {
+        let sk = sketch.clone();
+        let t = Instant::now();
+        router.add_lane(
+            "m",
+            BackendKind::Sketch,
+            move || Ok(Box::new(backend::SketchEngine::new(sk)) as _),
+            &RouterConfig::default(),
+        );
+        flip_samples.push(t.elapsed().as_nanos() as f64);
+    }
+    stop.store(true, Ordering::Relaxed);
+    querier.join().unwrap();
+    let r_flip = quantiles("lane swap flip under load", flip_samples);
+    r_flip.print();
+
+    let interference = r_stream.p99_ns / r_idle.p99_ns;
+    println!(
+        "  -> updates: {:.0} rows/s amortized, {:.0} rows/s published; \
+         query p99 {:.1} us idle vs {:.1} us under stream ({:.2}x); \
+         swap flip p99 {:.2} ms",
+        UPDATE_BATCH as f64 * 1e9 / r_amort.mean_ns,
+        UPDATE_BATCH as f64 * 1e9 / r_pub.mean_ns,
+        r_idle.p99_ns / 1e3,
+        r_stream.p99_ns / 1e3,
+        interference,
+        r_flip.p99_ns / 1e6,
+    );
+    results.push(r_amort.clone());
+    results.push(r_pub.clone());
+    results.push(r_idle.clone());
+    results.push(r_stream.clone());
+    results.push(r_flip.clone());
+
+    let repo_root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent")
+        .to_path_buf();
+    let meta: Vec<(&str, Json)> = vec![
+        (
+            "config",
+            json::obj(vec![
+                ("d", Json::from_u64(D as u64)),
+                ("p", Json::from_u64(P as u64)),
+                ("m", Json::from_u64(M as u64)),
+                ("rows", Json::from_u64(ROWS as u64)),
+                ("cols", Json::from_u64(COLS as u64)),
+                ("update_batch", Json::from_u64(UPDATE_BATCH as u64)),
+            ]),
+        ),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "update_rows_per_sec_amortized",
+            Json::num(UPDATE_BATCH as f64 * 1e9 / r_amort.mean_ns),
+        ),
+        (
+            "update_rows_per_sec_published",
+            Json::num(UPDATE_BATCH as f64 * 1e9 / r_pub.mean_ns),
+        ),
+        ("query_p99_idle_us", Json::num(r_idle.p99_ns / 1e3)),
+        ("query_p99_stream_us", Json::num(r_stream.p99_ns / 1e3)),
+        ("query_p99_interference_ratio", Json::num(interference)),
+        ("swap_flip_p99_ms", Json::num(r_flip.p99_ns / 1e6)),
+        (
+            "note",
+            Json::Str(
+                "anchor: streamed updates reproduce the single-pass \
+                 build bit-for-bit before any timing; flips are full \
+                 add_lane replacements (drain + version bump) against \
+                 a live query stream"
+                    .into(),
+            ),
+        ),
+    ];
+    let out = repo_root.join("BENCH_update.json");
+    bench::write_json(&out, "live_update", meta, &results)?;
+    println!("json -> {}", out.display());
+    Ok(())
+}

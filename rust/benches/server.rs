@@ -55,7 +55,7 @@ fn mode_name(mode: ServeMode) -> &'static str {
 /// percentiles; the aggregate wall-clock throughput is printed
 /// alongside.
 fn run_case(conns: usize, depth: usize, per_conn: usize) -> BenchResult {
-    let mut router = Router::new();
+    let router = Router::new();
     let cfg = RouterConfig {
         batcher: BatcherConfig {
             max_batch: 64,
@@ -104,6 +104,7 @@ fn run_case(conns: usize, depth: usize, per_conn: usize) -> BenchResult {
                         backend: BackendKind::Sketch,
                         features: vec![1.0; DIM],
                         want_scores: false,
+                        update: None,
                     }
                     .to_line();
                     l.push('\n');

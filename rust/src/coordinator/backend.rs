@@ -50,9 +50,11 @@
 
 use super::pool::{WorkerPool, WorkerScratch};
 use crate::kernel::KernelModel;
+use crate::metrics::slo::UpdateSlo;
 use crate::nn::{Mlp, MlpScratch};
 use crate::runtime::Executable;
 use crate::shard::{self, MergeScratch, ShardedSketch};
+use crate::sketch::epoch::{CounterPlane, MAX_PENDING};
 use crate::sketch::{BatchScratch, FusedMultiSketch, FusedScratch, RaceSketch};
 use std::sync::Arc;
 
@@ -130,6 +132,29 @@ pub struct BatchOutput {
     pub scores: Option<ScoreMatrix>,
 }
 
+/// One live mutation: add (`alpha > 0`) or delete (`alpha < 0`) weight
+/// `|alpha|` of feature point `x` for `class` (0 for single-output
+/// sketches).  `x` lives in the PROJECTED space — `p`-dimensional, the
+/// same space the sketch's support points occupy — because an update
+/// extends the kernel expansion, it does not query it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct UpdateRow {
+    pub x: Vec<f32>,
+    pub alpha: f32,
+    pub class: usize,
+}
+
+/// What a mutable engine acknowledges after applying an update batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct UpdateAck {
+    /// Live plane epoch after the batch (bumped iff a publish ran).
+    pub epoch: u64,
+    /// Deltas still buffered in the shadow plane — 0 right after a
+    /// publish, and never more than
+    /// [`crate::sketch::epoch::MAX_PENDING`] (the staleness bound).
+    pub pending: u64,
+}
+
 /// A batch-evaluating engine.  Instances are created *and used* on their
 /// lane's worker thread (see `Router::add_lane`), so no `Send` bound —
 /// which is what lets non-`Send` PJRT executables serve traffic.  CPU
@@ -152,6 +177,31 @@ pub trait Engine {
     ) -> anyhow::Result<BatchOutput> {
         let _ = want_scores;
         Ok(BatchOutput { values: self.eval_batch(rows)?, scores: None })
+    }
+    /// `(p, n_classes)` an [`UpdateRow`] must satisfy, or `None` when
+    /// the backend is immutable (frozen artifacts: `nn`, `kernel`, the
+    /// PJRT lanes).
+    fn update_shape(&self) -> Option<(usize, usize)> {
+        None
+    }
+    /// Apply a batch of live mutations against the engine's counter
+    /// plane(s).  `publish` forces the deltas visible before returning;
+    /// otherwise they surface at the next publish — which is never
+    /// farther away than [`MAX_PENDING`] buffered deltas or the next
+    /// query eval (every eval publishes first for read-your-writes; see
+    /// [`crate::sketch::epoch`]).  The default rejects the batch: only
+    /// sketch-backed lanes are mutable.
+    fn apply_updates(
+        &mut self,
+        ups: &[UpdateRow],
+        publish: bool,
+    ) -> anyhow::Result<UpdateAck> {
+        let _ = (ups, publish);
+        anyhow::bail!("this backend does not support updates")
+    }
+    /// Live update/staleness counters, when the backend has a plane.
+    fn plane_stats(&self) -> Option<Arc<UpdateSlo>> {
+        None
     }
 }
 
@@ -183,11 +233,21 @@ fn shard_rows(rows: &[Vec<f32>], chunk_rows: usize, d: usize)
 }
 
 /// RS hot path: batch-major sketch kernel, pool fan-out for big batches.
+///
+/// Queries run against the live [`CounterPlane`] (seeded from the built
+/// sketch's counters), so the lane serves streamed `update`s without
+/// rebuilding — and answers stay bit-identical to a from-scratch build
+/// holding the same points (the epoch-plane replay guarantee).
 pub struct SketchEngine {
     pub sketch: Arc<RaceSketch>,
+    /// Epoch-versioned live view of `sketch`'s counters (C = 1).
+    plane: Arc<CounterPlane>,
     pool: Arc<WorkerPool>,
     flat: Vec<f32>,
     scratch: BatchScratch,
+    /// Update-path hash scratch (codes + per-row columns).
+    up_codes: Vec<i32>,
+    up_cols: Vec<u32>,
 }
 
 impl SketchEngine {
@@ -196,11 +256,15 @@ impl SketchEngine {
     }
 
     pub fn with_pool(sketch: RaceSketch, pool: Arc<WorkerPool>) -> Self {
+        let plane = Arc::new(sketch.plane());
         Self {
             sketch: Arc::new(sketch),
+            plane,
             pool,
             flat: Vec::new(),
             scratch: BatchScratch::default(),
+            up_codes: Vec::new(),
+            up_cols: Vec::new(),
         }
     }
 }
@@ -222,6 +286,9 @@ impl Engine for SketchEngine {
                 r.len()
             );
         }
+        // Read-your-writes: surface any buffered updates before
+        // answering (no-op when the plane is clean).
+        self.plane.publish();
         let n = rows.len();
         let shards = shard_count(&self.pool, n);
         if n < PAR_MIN_BATCH || shards < 2 {
@@ -231,9 +298,11 @@ impl Engine for SketchEngine {
             for r in rows {
                 self.flat.extend_from_slice(r);
             }
+            let pin = self.plane.pin();
             return Ok(self
                 .sketch
-                .query_batch_with(&self.flat, &mut self.scratch)
+                .query_batch_on(&pin.counters, pin.alpha_sums[0],
+                                &self.flat, &mut self.scratch)
                 .to_vec());
         }
         // Sharded fan-out through the persistent pool: each shard job
@@ -246,12 +315,73 @@ impl Engine for SketchEngine {
             .into_iter()
             .map(|flat| {
                 let sketch = self.sketch.clone();
+                let plane = self.plane.clone();
                 move |ws: &mut WorkerScratch| {
-                    sketch.query_batch_with(&flat, &mut ws.batch).to_vec()
+                    // Every job pins the same epoch: the lane thread —
+                    // the plane's only writer — is blocked in run_jobs
+                    // until all shards report back.
+                    let pin = plane.pin();
+                    sketch
+                        .query_batch_on(&pin.counters, pin.alpha_sums[0],
+                                        &flat, &mut ws.batch)
+                        .to_vec()
                 }
             })
             .collect();
         Ok(self.pool.run_jobs(jobs).concat())
+    }
+
+    fn update_shape(&self) -> Option<(usize, usize)> {
+        Some((self.sketch.p, 1))
+    }
+
+    fn apply_updates(
+        &mut self,
+        ups: &[UpdateRow],
+        publish: bool,
+    ) -> anyhow::Result<UpdateAck> {
+        let p = self.sketch.p;
+        // Validate the WHOLE batch before touching the plane: a bad row
+        // rejects the batch without applying a prefix of it.
+        for (i, u) in ups.iter().enumerate() {
+            anyhow::ensure!(
+                u.x.len() == p,
+                "update {i} has dim {}, want {p}",
+                u.x.len()
+            );
+            anyhow::ensure!(
+                u.class == 0,
+                "update {i} targets class {} of a single-output sketch",
+                u.class
+            );
+            anyhow::ensure!(
+                u.alpha.is_finite(),
+                "update {i} has non-finite weight"
+            );
+        }
+        for u in ups {
+            self.sketch.delta_cols(&u.x, &mut self.up_codes,
+                                   &mut self.up_cols);
+            if self.plane.apply(&self.up_cols, 0, u.alpha) >= MAX_PENDING {
+                // Bounded staleness: never let more than MAX_PENDING
+                // deltas ride in the shadow buffer.
+                self.plane.publish();
+            }
+        }
+        if publish {
+            self.plane.publish();
+        }
+        let st = self.plane.stats();
+        Ok(UpdateAck {
+            epoch: self.plane.epoch(),
+            pending: st
+                .pending
+                .load(std::sync::atomic::Ordering::Relaxed),
+        })
+    }
+
+    fn plane_stats(&self) -> Option<Arc<UpdateSlo>> {
+        Some(self.plane.stats())
     }
 }
 
@@ -429,9 +559,14 @@ fn project_sharded_batch(
 /// an f32, plus the per-class score vector when requested.
 pub struct MulticlassEngine {
     pub fused: Arc<FusedMultiSketch>,
+    /// Epoch-versioned live view of the interleaved counters + per-class
+    /// alpha sums — per-class `update`s land here.
+    plane: Arc<CounterPlane>,
     pool: Arc<WorkerPool>,
     flat: Vec<f32>,
     scratch: FusedScratch,
+    up_codes: Vec<i32>,
+    up_cols: Vec<u32>,
 }
 
 impl MulticlassEngine {
@@ -441,11 +576,15 @@ impl MulticlassEngine {
 
     pub fn with_pool(fused: FusedMultiSketch, pool: Arc<WorkerPool>)
         -> Self {
+        let plane = Arc::new(fused.plane());
         Self {
             fused: Arc::new(fused),
+            plane,
             pool,
             flat: Vec::new(),
             scratch: FusedScratch::default(),
+            up_codes: Vec::new(),
+            up_cols: Vec::new(),
         }
     }
 }
@@ -482,6 +621,8 @@ impl Engine for MulticlassEngine {
                 r.len()
             );
         }
+        // Read-your-writes before answering (no-op when clean).
+        self.plane.publish();
         let n = rows.len();
         let shards = shard_count(&self.pool, n);
         if n < PAR_MIN_BATCH || shards < 2 {
@@ -490,9 +631,13 @@ impl Engine for MulticlassEngine {
             for r in rows {
                 self.flat.extend_from_slice(r);
             }
-            let scores = self
-                .fused
-                .scores_batch_with(&self.flat, &mut self.scratch);
+            let pin = self.plane.pin();
+            let scores = self.fused.scores_batch_on(
+                &pin.counters,
+                &pin.alpha_sums,
+                &self.flat,
+                &mut self.scratch,
+            );
             return Ok(BatchOutput {
                 values: argmax_values(scores, c_n),
                 scores: want_scores.then(|| ScoreMatrix {
@@ -509,10 +654,13 @@ impl Engine for MulticlassEngine {
                 .into_iter()
                 .map(|flat| {
                     let fused = self.fused.clone();
+                    let plane = self.plane.clone();
                     move |ws: &mut WorkerScratch| {
+                        let pin = plane.pin();
                         let mut preds = Vec::new();
-                        fused.predict_batch_with(&flat, &mut ws.fused,
-                                                 &mut preds);
+                        fused.predict_batch_on(&pin.counters,
+                                               &pin.alpha_sums, &flat,
+                                               &mut ws.fused, &mut preds);
                         preds.into_iter()
                             .map(|c| c as f32)
                             .collect::<Vec<_>>()
@@ -528,8 +676,13 @@ impl Engine for MulticlassEngine {
             .into_iter()
             .map(|flat| {
                 let fused = self.fused.clone();
+                let plane = self.plane.clone();
                 move |ws: &mut WorkerScratch| {
-                    fused.scores_batch_with(&flat, &mut ws.fused).to_vec()
+                    let pin = plane.pin();
+                    fused
+                        .scores_batch_on(&pin.counters, &pin.alpha_sums,
+                                         &flat, &mut ws.fused)
+                        .to_vec()
                 }
             })
             .collect();
@@ -538,6 +691,59 @@ impl Engine for MulticlassEngine {
             values: argmax_values(&flat, c_n),
             scores: Some(ScoreMatrix { n_classes: c_n, flat }),
         })
+    }
+
+    fn update_shape(&self) -> Option<(usize, usize)> {
+        Some((self.fused.p, self.fused.n_classes()))
+    }
+
+    fn apply_updates(
+        &mut self,
+        ups: &[UpdateRow],
+        publish: bool,
+    ) -> anyhow::Result<UpdateAck> {
+        let p = self.fused.p;
+        let c_n = self.fused.n_classes();
+        // Whole-batch validation first (no partial application).
+        for (i, u) in ups.iter().enumerate() {
+            anyhow::ensure!(
+                u.x.len() == p,
+                "update {i} has dim {}, want {p}",
+                u.x.len()
+            );
+            anyhow::ensure!(
+                u.class < c_n,
+                "update {i} targets class {} of {c_n}",
+                u.class
+            );
+            anyhow::ensure!(
+                u.alpha.is_finite(),
+                "update {i} has non-finite weight"
+            );
+        }
+        for u in ups {
+            self.fused.delta_cols(&u.x, &mut self.up_codes,
+                                  &mut self.up_cols);
+            if self.plane.apply(&self.up_cols, u.class, u.alpha)
+                >= MAX_PENDING
+            {
+                self.plane.publish();
+            }
+        }
+        if publish {
+            self.plane.publish();
+        }
+        let st = self.plane.stats();
+        Ok(UpdateAck {
+            epoch: self.plane.epoch(),
+            pending: st
+                .pending
+                .load(std::sync::atomic::Ordering::Relaxed),
+        })
+    }
+
+    fn plane_stats(&self) -> Option<Arc<UpdateSlo>> {
+        Some(self.plane.stats())
     }
 }
 
@@ -551,6 +757,14 @@ impl Engine for MulticlassEngine {
 /// both bit-for-bit identical to the monolithic `rs` / `mc` lanes.
 pub struct ShardedEngine {
     pub sharded: Arc<ShardedSketch>,
+    /// One live plane per shard, kept in LOCKSTEP: every update's
+    /// per-shard delta lands in every plane under one apply sequence
+    /// and publishes flip all planes together, so a batch that pins
+    /// after a publish sees ONE consistent model version across
+    /// shards.  Each plane carries the FULL per-class alpha sums (the
+    /// merge debiases once, globally), so `planes[0]`'s pinned
+    /// `alpha_sums` are the model's.
+    planes: Vec<Arc<CounterPlane>>,
     pool: Arc<WorkerPool>,
     flat: Vec<f32>,
     proj_row: Vec<f32>,
@@ -561,6 +775,8 @@ pub struct ShardedEngine {
     proj_t: Arc<Vec<f32>>,
     merge: MergeScratch,
     scores: Vec<f32>,
+    up_codes: Vec<i32>,
+    up_cols: Vec<u32>,
 }
 
 impl ShardedEngine {
@@ -570,14 +786,23 @@ impl ShardedEngine {
 
     pub fn with_pool(sharded: ShardedSketch, pool: Arc<WorkerPool>)
         -> Self {
+        let sharded = Arc::new(sharded);
+        let planes = sharded
+            .shards
+            .iter()
+            .map(|sh| Arc::new(sh.plane(&sharded.head.alpha_sums)))
+            .collect();
         Self {
-            sharded: Arc::new(sharded),
+            sharded,
+            planes,
             pool,
             flat: Vec::new(),
             proj_row: Vec::new(),
             proj_t: Arc::new(Vec::new()),
             merge: MergeScratch::default(),
             scores: Vec::new(),
+            up_codes: Vec::new(),
+            up_cols: Vec::new(),
         }
     }
 }
@@ -599,6 +824,11 @@ impl Engine for ShardedEngine {
         let head = &self.sharded.head;
         if rows.is_empty() {
             return Ok(sharded_empty_output(head, want_scores));
+        }
+        // Read-your-writes: publish every shard plane (lockstep — all
+        // are clean or all carry the same pending sequence).
+        for pl in &self.planes {
+            pl.publish();
         }
         let n = rows.len();
         // Reclaim the shared stage-1 buffer from the previous batch
@@ -626,30 +856,106 @@ impl Engine for ShardedEngine {
             .sharded
             .shards
             .iter()
-            .map(|sh| {
+            .zip(self.planes.iter())
+            .map(|(sh, pl)| {
                 let sh = sh.clone();
+                let pl = pl.clone();
                 let proj_t = proj_t.clone();
                 move |ws: &mut WorkerScratch| {
+                    // Same epoch in every job: the lane thread — the
+                    // planes' only writer — is blocked in run_jobs.
+                    let pin = pl.pin();
                     let mut out = Vec::new();
-                    sh.partial_means_batch(&proj_t, n, &mut ws.shard,
-                                           &mut out);
+                    sh.partial_means_batch_on(&pin.counters, &proj_t, n,
+                                              &mut ws.shard, &mut out);
                     out
                 }
             })
             .collect();
         let partials = self.pool.run_jobs(jobs);
-        // Estimator-exact merge on the submitting (lane) thread.  The
-        // merge validates shapes; pool-computed partials always pass.
-        shard::merge_scores_into(
+        // Estimator-exact merge on the submitting (lane) thread, with
+        // the debias terms read from the same plane generation the
+        // shard kernels pinned.  The merge validates shapes;
+        // pool-computed partials always pass.
+        let pin0 = self.planes[0].pin();
+        shard::merge_scores_into_with(
             head,
             &self.sharded.plan,
             &partials,
             n,
+            &pin0.alpha_sums,
             &mut self.merge,
             &mut self.scores,
         )
         .map_err(|e| anyhow::anyhow!("shard merge: {e}"))?;
+        drop(pin0);
         Ok(sharded_batch_output(head, &self.scores, want_scores))
+    }
+
+    fn update_shape(&self) -> Option<(usize, usize)> {
+        Some((self.sharded.head.p, self.sharded.head.n_classes))
+    }
+
+    fn apply_updates(
+        &mut self,
+        ups: &[UpdateRow],
+        publish: bool,
+    ) -> anyhow::Result<UpdateAck> {
+        let p = self.sharded.head.p;
+        let c_n = self.sharded.head.n_classes;
+        // Whole-batch validation first (no partial application).
+        for (i, u) in ups.iter().enumerate() {
+            anyhow::ensure!(
+                u.x.len() == p,
+                "update {i} has dim {}, want {p}",
+                u.x.len()
+            );
+            anyhow::ensure!(
+                u.class < c_n,
+                "update {i} targets class {} of {c_n}",
+                u.class
+            );
+            anyhow::ensure!(
+                u.alpha.is_finite(),
+                "update {i} has non-finite weight"
+            );
+        }
+        for u in ups {
+            // One delta per shard, every plane under the same sequence
+            // number — the planes stay an exact carve of the monolithic
+            // plane (global row salt in `delta_cols`).
+            let mut pending = 0;
+            for (sh, pl) in
+                self.sharded.shards.iter().zip(self.planes.iter())
+            {
+                sh.delta_cols(&u.x, &mut self.up_codes,
+                              &mut self.up_cols);
+                pending = pl.apply(&self.up_cols, u.class, u.alpha);
+            }
+            if pending >= MAX_PENDING {
+                for pl in &self.planes {
+                    pl.publish();
+                }
+            }
+        }
+        if publish {
+            for pl in &self.planes {
+                pl.publish();
+            }
+        }
+        // Lockstep means every plane reports identical counters; shard
+        // 0 speaks for the set.
+        let st = self.planes[0].stats();
+        Ok(UpdateAck {
+            epoch: self.planes[0].epoch(),
+            pending: st
+                .pending
+                .load(std::sync::atomic::Ordering::Relaxed),
+        })
+    }
+
+    fn plane_stats(&self) -> Option<Arc<UpdateSlo>> {
+        Some(self.planes[0].stats())
     }
 }
 
@@ -782,6 +1088,65 @@ impl Engine for RemoteShardedEngine {
         })?;
         Ok(sharded_batch_output(self.set.head(), &self.scores,
                                 want_scores))
+    }
+
+    fn update_shape(&self) -> Option<(usize, usize)> {
+        let h = self.set.head();
+        Some((h.p, h.n_classes))
+    }
+
+    fn apply_updates(
+        &mut self,
+        ups: &[UpdateRow],
+        publish: bool,
+    ) -> anyhow::Result<UpdateAck> {
+        let (p, c_n) = {
+            let h = self.set.head();
+            (h.p, h.n_classes)
+        };
+        for (i, u) in ups.iter().enumerate() {
+            anyhow::ensure!(
+                u.x.len() == p,
+                "update {i} has dim {}, want {p}",
+                u.x.len()
+            );
+            anyhow::ensure!(
+                u.class < c_n,
+                "update {i} targets class {} of {c_n}",
+                u.class
+            );
+            anyhow::ensure!(
+                u.alpha.is_finite(),
+                "update {i} has non-finite weight"
+            );
+        }
+        // Each row is broadcast to every replica of every shard (the
+        // set mirrors the per-class alpha fold locally so the merge's
+        // debias tracks the remote counters — see
+        // `RemoteShardSet::broadcast_update`).  Shard servers publish
+        // before answering means, so queries after these acks can never
+        // observe a pre-update snapshot.
+        let slo = self.set.update_slo();
+        let mut ack = UpdateAck {
+            epoch: slo.epoch.load(std::sync::atomic::Ordering::Relaxed),
+            pending: slo
+                .pending
+                .load(std::sync::atomic::Ordering::Relaxed),
+        };
+        for (i, u) in ups.iter().enumerate() {
+            let (epoch, pending) = self.set.broadcast_update(
+                &u.x,
+                u.alpha,
+                u.class,
+                publish && i + 1 == ups.len(),
+            )?;
+            ack = UpdateAck { epoch, pending };
+        }
+        Ok(ack)
+    }
+
+    fn plane_stats(&self) -> Option<Arc<UpdateSlo>> {
+        Some(self.set.update_slo())
     }
 }
 
@@ -1098,5 +1463,192 @@ mod tests {
             crate::shard::ShardedSketch::from_race(&sketch, 2),
         );
         assert!(engine.eval_batch(&[vec![0.0; 4]]).is_err());
+    }
+
+    #[test]
+    fn immutable_engines_reject_updates() {
+        let kp = random_kp(0xD0, 5, 3, 10);
+        let mut engine = KernelEngine::new(KernelModel::new(kp));
+        assert_eq!(engine.update_shape(), None);
+        assert!(engine.plane_stats().is_none());
+        let up = UpdateRow { x: vec![0.0; 3], alpha: 1.0, class: 0 };
+        let err = engine.apply_updates(&[up], true).unwrap_err();
+        assert!(err.to_string().contains("does not support updates"),
+                "{err}");
+    }
+
+    /// Split `kp` at `m0`: the part the engine is built from, plus the
+    /// tail streamed as live updates (support points are p-dimensional,
+    /// so updates carry `x` rows of `kp.x` directly).
+    fn split_updates(kp: &KernelParams, m0: usize)
+        -> (KernelParams, Vec<UpdateRow>) {
+        let mut part = kp.clone();
+        part.m = m0;
+        part.x.truncate(m0 * kp.p);
+        part.alpha.truncate(m0);
+        let ups = (m0..kp.m)
+            .map(|j| UpdateRow {
+                x: kp.x[j * kp.p..(j + 1) * kp.p].to_vec(),
+                alpha: kp.alpha[j],
+                class: 0,
+            })
+            .collect();
+        (part, ups)
+    }
+
+    #[test]
+    fn sketch_engine_streamed_updates_match_full_rebuild() {
+        // An engine seeded with the first 20 support points and fed the
+        // last 4 as live updates (one a delete — negative weight) must
+        // answer bit-identically to an engine built from all 24 in one
+        // pass: the epoch plane replays every delta into both buffers
+        // in arrival order, so the f32 fold is the build's.
+        let mut kp_full = random_kp(0xE0, 6, 4, 24);
+        kp_full.alpha[22] = -kp_full.alpha[22]; // a streamed delete
+        let cfg = SketchConfig::default();
+        let (kp_part, ups) = split_updates(&kp_full, 20);
+        let full = crate::sketch::RaceSketch::build(&kp_full, &cfg);
+        let part = crate::sketch::RaceSketch::build(&kp_part, &cfg);
+        let pool = Arc::new(WorkerPool::new(2));
+        let mut engine = SketchEngine::with_pool(part, pool.clone());
+        assert_eq!(engine.update_shape(), Some((4, 1)));
+        let ack = engine.apply_updates(&ups, false).unwrap();
+        assert_eq!(ack.epoch, 0, "no publish requested");
+        assert_eq!(ack.pending, 4);
+        let mut reference = SketchEngine::with_pool(full, pool);
+        for &n in &[1usize, 9, 70] {
+            let rows = random_rows(0xE1 + n as u64, n, 6);
+            // eval publishes first (read-your-writes), so the very
+            // first query already sees all four updates.
+            let got = engine.eval_batch(&rows).unwrap();
+            let want = reference.eval_batch(&rows).unwrap();
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(g.to_bits(), w.to_bits(), "n={n} row {i}");
+            }
+        }
+        let st = engine.plane_stats().expect("sketch lane has a plane");
+        assert_eq!(
+            st.updates.load(std::sync::atomic::Ordering::Relaxed),
+            4
+        );
+        assert_eq!(
+            st.pending.load(std::sync::atomic::Ordering::Relaxed),
+            0,
+            "eval published"
+        );
+        // Update validation: wrong dim, wrong class, non-finite weight.
+        let bad = UpdateRow { x: vec![0.0; 3], alpha: 1.0, class: 0 };
+        assert!(engine.apply_updates(&[bad], false).is_err());
+        let bad = UpdateRow { x: vec![0.0; 4], alpha: 1.0, class: 1 };
+        assert!(engine.apply_updates(&[bad], false).is_err());
+        let bad =
+            UpdateRow { x: vec![0.0; 4], alpha: f32::NAN, class: 0 };
+        assert!(engine.apply_updates(&[bad], false).is_err());
+    }
+
+    #[test]
+    fn multiclass_engine_streamed_updates_match_full_rebuild() {
+        // Same contract through the fused per-class plane: stream class
+        // 1's last four support points, compare scores bitwise against
+        // the single-pass build.
+        let mut rng = SplitMix64::new(0xE2);
+        let d = 6usize;
+        let shared_seed = rng.next_u64();
+        let a: Vec<f32> = (0..d * d)
+            .map(|_| rng.next_gaussian() as f32 * 0.5)
+            .collect();
+        let mut mk = |m: usize| KernelParams {
+            d,
+            p: d,
+            m,
+            a: a.clone(),
+            x: (0..m * d).map(|_| rng.next_gaussian() as f32).collect(),
+            alpha: (0..m).map(|_| 0.5 + rng.next_f32()).collect(),
+            width: 2.0,
+            lsh_seed: shared_seed,
+            k_per_row: 2,
+            default_rows: 48,
+            default_cols: 16,
+        };
+        let per_class: Vec<KernelParams> =
+            vec![mk(12), mk(14), mk(11)];
+        let mut part = per_class.clone();
+        part[1].m = 10;
+        part[1].x.truncate(10 * d);
+        part[1].alpha.truncate(10);
+        let cfg = SketchConfig::default();
+        let full = FusedMultiSketch::build(&per_class, &cfg).unwrap();
+        let part = FusedMultiSketch::build(&part, &cfg).unwrap();
+        let pool = Arc::new(WorkerPool::new(2));
+        let mut engine = MulticlassEngine::with_pool(part, pool.clone());
+        assert_eq!(engine.update_shape(), Some((d, 3)));
+        let ups: Vec<UpdateRow> = (10..14)
+            .map(|j| UpdateRow {
+                x: per_class[1].x[j * d..(j + 1) * d].to_vec(),
+                alpha: per_class[1].alpha[j],
+                class: 1,
+            })
+            .collect();
+        let ack = engine.apply_updates(&ups, true).unwrap();
+        assert_eq!(ack.epoch, 1, "explicit publish bumps the epoch");
+        assert_eq!(ack.pending, 0);
+        let mut reference = MulticlassEngine::with_pool(full, pool);
+        for &n in &[3usize, 70] {
+            let rows = random_rows(0xE3 + n as u64, n, d);
+            let got = engine.eval_batch_ex(&rows, true).unwrap();
+            let want = reference.eval_batch_ex(&rows, true).unwrap();
+            assert_eq!(got.values, want.values, "n={n}");
+            let (gs, ws) = (got.scores.unwrap(), want.scores.unwrap());
+            for (i, (g, w)) in
+                gs.flat.iter().zip(&ws.flat).enumerate()
+            {
+                assert_eq!(g.to_bits(), w.to_bits(), "n={n} flat {i}");
+            }
+        }
+        // Class out of range is a validation error, not a panic.
+        let bad = UpdateRow { x: vec![0.0; d], alpha: 1.0, class: 3 };
+        assert!(engine.apply_updates(&[bad], false).is_err());
+    }
+
+    #[test]
+    fn sharded_engine_streamed_updates_match_monolithic() {
+        // The lockstep per-shard planes must stay an exact carve of the
+        // monolithic plane: stream updates through the sharded engine
+        // and compare against a single-pass monolithic build.
+        let kp_full = random_kp(0xE4, 7, 4, 30);
+        let cfg = SketchConfig::default();
+        let (kp_part, ups) = split_updates(&kp_full, 25);
+        let full = crate::sketch::RaceSketch::build(&kp_full, &cfg);
+        let part = crate::sketch::RaceSketch::build(&kp_part, &cfg);
+        let pool = Arc::new(WorkerPool::new(4));
+        let mut qs = QueryScratch::default();
+        for &shards in &[1usize, 3] {
+            let sharded =
+                crate::shard::ShardedSketch::from_race(&part, shards);
+            let mut engine =
+                ShardedEngine::with_pool(sharded, pool.clone());
+            assert_eq!(engine.update_shape(), Some((4, 1)));
+            let ack = engine.apply_updates(&ups, true).unwrap();
+            assert_eq!(ack.pending, 0);
+            assert!(ack.epoch >= 1);
+            for &n in &[1usize, 12] {
+                let rows = random_rows(0xE5 + n as u64, n, 7);
+                let got = engine.eval_batch(&rows).unwrap();
+                for (i, r) in rows.iter().enumerate() {
+                    let want = full.query_with(r, &mut qs);
+                    assert_eq!(
+                        got[i].to_bits(),
+                        want.to_bits(),
+                        "shards={shards} n={n} row {i}"
+                    );
+                }
+            }
+            let st =
+                engine.plane_stats().expect("sh lane has planes");
+            assert_eq!(
+                st.updates.load(std::sync::atomic::Ordering::Relaxed),
+                5
+            );
+        }
     }
 }

@@ -228,6 +228,7 @@ mod tests {
                     backend: BackendKind::Sketch,
                     features: vec![0.0],
                     want_scores: false,
+                    update: None,
                 },
                 enqueued: Instant::now(),
                 responder: Responder::new(id, ResponseSink::Channel(tx)),

@@ -108,9 +108,11 @@
 //! ```text
 //! {"id": N, "stats": {
 //!    "rejected": <backpressure rejections>,
-//!    "lanes":  [{"model", "backend", "submitted", "batches",
+//!    "lanes":  [{"model", "backend", "v", "submitted", "batches",
 //!                "ok", "errors", "latency": {n, mean_us, p50_us,
-//!                p99_us, p999_us}}, ...],
+//!                p99_us, p999_us},
+//!                "update": null | {"epoch", "updates", "publishes",
+//!                                  "pending", "staleness_us"}}, ...],
 //!    "shards": [{"model", "shards": [{"shard", "gathers", "errors",
 //!                "hedges", "failovers", "reconnects", "quarantines",
 //!                "discarded", "latency": {...},
@@ -126,6 +128,56 @@
 //! `(ok + errors) × (1 − t) − errors` — how many more errors the lane
 //! may serve before the objective is violated (negative = blown); see
 //! `metrics::slo` for the convention.
+//!
+//! # Live updates, hot swap, and drain
+//!
+//! The serving plane mutates under load through two verbs with
+//! different blast radii:
+//!
+//! **`update`** mutates the CURRENT model in place: `{"id": N,
+//! "model": "m", "backend": "rs", "features": [p floats], "update":
+//! {"weight": w, "class": c, "delete": false, "publish": false}}`
+//! folds a weighted point (projected space) into the lane's
+//! double-buffered [`crate::sketch::epoch::CounterPlane`] — a delete is
+//! the same fold with `-w`, which is exact for a linear sketch.
+//! Queries PIN an epoch and read a consistent snapshot; updates land in
+//! the shadow buffer and become visible at the next **publish**
+//! (explicit `"publish": true`, or forced when the shadow backlog
+//! reaches the plane's bound — see
+//! [`crate::sketch::epoch::MAX_PENDING`]).  That bound is the
+//! staleness guarantee: a reader's snapshot is never more than
+//! `MAX_PENDING` updates behind, per plane (per shard on `sh` lanes).
+//! Current staleness is surfaced as `update.staleness_us` (age of the
+//! oldest unpublished delta) and `update.pending` in the stats line.
+//! Updates and queries stay FIFO on a lane, so an acked update is
+//! visible to every later query from the same connection
+//! (read-your-writes); the ack carries the publish epoch.  On
+//! remote-sharded lanes the update broadcasts to every replica of
+//! every shard, and a replica whose applied-update count (`seq`)
+//! diverges is quarantined rather than allowed to serve from a
+//! different history.
+//!
+//! **`swap`** replaces the WHOLE model atomically: `{"id": N, "swap":
+//! {"model": "m", "backend": "rs", "path": "new.rssk", "shards": 0}}`
+//! loads + validates the named RSSK/RSFM/RSFS set on a dedicated admin
+//! thread (the one documented exception to the thread-accounting
+//! invariant — it lives only while a swap is in flight, and load IO
+//! never touches the reactor), then flips the lane pointer under the
+//! router's lane map and drains the old lane through the same path
+//! `add_lane` replacement and shutdown use: the old batcher closes,
+//! its worker answers everything already queued ON THE OLD MODEL, and
+//! the thread is joined.  A failed load answers an error and never
+//! flips.  **Version attribution:** every lane response carries `"v"`,
+//! the monotone version assigned at registration — during a swap each
+//! response is attributable to exactly one of the two versions, with
+//! zero dropped or duplicated requests (locked by
+//! `tests/live_update.rs`).
+//!
+//! **Drain** is the shared shutdown primitive: lane replacement (swap),
+//! `Router::shutdown`, and SIGTERM/SIGINT (installed by `serve` /
+//! `shard-serve` via `net::sys::install_stop_signals`) all close the
+//! batcher(s), let the worker(s) answer every queued request, and join
+//! — so a `kill` exits 0 with zero stranded clients.
 
 pub mod backend;
 pub mod batcher;

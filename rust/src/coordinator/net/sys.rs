@@ -1,4 +1,5 @@
-//! Minimal Linux syscall surface for the reactor: epoll, fcntl, pipe.
+//! Minimal Linux syscall surface for the reactor: epoll, fcntl, pipe,
+//! and the SIGINT/SIGTERM → stop-flag bridge for graceful shutdown.
 //!
 //! Declared directly via `extern "C"` against libc — which every Linux
 //! Rust binary already links — because the offline image vendors no
@@ -9,6 +10,8 @@
 
 use std::io;
 use std::os::raw::{c_int, c_void};
+use std::sync::atomic::{AtomicBool, AtomicPtr, Ordering};
+use std::sync::Arc;
 
 pub const EPOLLIN: u32 = 0x001;
 pub const EPOLLOUT: u32 = 0x004;
@@ -208,6 +211,50 @@ impl Drop for WakePipe {
     }
 }
 
+pub const SIGINT: c_int = 2;
+pub const SIGTERM: c_int = 15;
+
+extern "C" {
+    /// `signal(2)` — sufficient here: the handler only flips a flag and
+    /// never needs `sigaction`'s mask/flags control, and declaring it
+    /// avoids hand-writing the platform-dependent `sigaction` layout.
+    fn signal(signum: c_int, handler: usize) -> usize;
+}
+
+/// Where the handler stores.  A raw leaked-Arc pointer (not a plain
+/// static flag) so each server wires signals to ITS OWN stop handle —
+/// the reactor polls exactly that flag every `IDLE_WAIT_MS`.
+static STOP_TARGET: AtomicPtr<AtomicBool> =
+    AtomicPtr::new(std::ptr::null_mut());
+
+extern "C" fn stop_signal_handler(_sig: c_int) {
+    // Async-signal-safe by construction: one atomic load, one atomic
+    // store.  No allocation, no locks, no formatting, no IO.
+    let p = STOP_TARGET.load(Ordering::Acquire);
+    if !p.is_null() {
+        unsafe { (*p).store(true, Ordering::Release) };
+    }
+}
+
+/// Route SIGINT/SIGTERM into `stop`: the first signal flips the flag,
+/// the reactor observes it within its idle wait, closes connections,
+/// and `serve()` returns — turning `kill` into the same drain path as
+/// an orderly shutdown instead of a mid-burst abort.
+///
+/// The Arc clone is leaked into the handler's static slot (a signal
+/// handler outlives every scope; a previously installed target is
+/// intentionally leaked too rather than freed under a concurrent
+/// signal).  A process installs this once per served socket — the leak
+/// is a few bytes, bounded by install count.
+pub fn install_stop_signals(stop: &Arc<AtomicBool>) {
+    let raw = Arc::into_raw(stop.clone()) as *mut AtomicBool;
+    STOP_TARGET.store(raw, Ordering::Release);
+    unsafe {
+        signal(SIGINT, stop_signal_handler as usize);
+        signal(SIGTERM, stop_signal_handler as usize);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -230,6 +277,24 @@ mod tests {
         p.drain();
         // Drained: edge back to empty.
         assert_eq!(ep.wait(&mut evs, 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn stop_signals_flip_the_installed_flag() {
+        extern "C" {
+            fn raise(sig: c_int) -> c_int;
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        install_stop_signals(&stop);
+        // raise() delivers to the calling thread; the handler only
+        // flips the flag, so the test survives its own SIGTERM.
+        unsafe { raise(SIGTERM) };
+        assert!(stop.load(Ordering::Acquire), "SIGTERM must stop");
+        // Re-install onto a fresh flag: SIGINT flips the NEW target.
+        let stop2 = Arc::new(AtomicBool::new(false));
+        install_stop_signals(&stop2);
+        unsafe { raise(SIGINT) };
+        assert!(stop2.load(Ordering::Acquire), "SIGINT must stop");
     }
 
     #[test]

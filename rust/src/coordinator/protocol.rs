@@ -16,9 +16,54 @@
 //! request: it asks the coordinator for its SLO counters (see
 //! `Router::stats_line` for the response schema) and is answered
 //! inline, without touching any lane.
+//!
+//! Two mutation verbs ride the same line protocol:
+//!
+//! * **update** — `{"id": 7, "model": "adult", "backend": "rs",
+//!   "x": [..p floats..], "update": {"weight": 1.0, "class": 0,
+//!   "delete": false, "publish": false}}` streams one weighted point
+//!   into the lane's live counter plane (`x` is in the PROJECTED space,
+//!   like the build points — updates mutate the representer set, not the
+//!   query side).  Every `"update"` sub-field is optional (`weight` 1.0,
+//!   `class` 0, `delete`/`publish` false); `delete` negates the weight.
+//!   The ack is `{"id": 7, "epoch": E, "y": 0, "us": ..., "v": V}` —
+//!   `epoch` is the plane's published epoch after the update batch
+//!   (updates stay FIFO-ordered with queries on the lane, so a later
+//!   query on the same connection always sees this update).
+//! * **swap** — `{"id": 9, "swap": {"model": "adult", "backend": "rs",
+//!   "path": "models/adult_v2.rssk", "shards": 4}}` atomically replaces
+//!   a whole model: load + validate the new RSSK/RSFM/RSFS set, flip
+//!   the lane, drain the old one.  Answered by
+//!   `{"id": 9, "swapped": {...,"v": V}}` or an error (a failed load
+//!   never flips).  `shards` is only for `"sh"` lanes (0 = RSFS
+//!   shard-set prefix on disk).
+//!
+//! Every lane response carries `"v"`, the monotonically increasing lane
+//! version assigned at `add_lane`/swap time — the version-attribution
+//! handle: any response is the output of exactly one model version.
 
 use super::backend::BackendKind;
 use crate::util::json::{self, Json};
+
+/// The mutation rider of an `update` request (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct UpdateSpec {
+    /// Weight of the streamed point (α contribution).
+    pub weight: f32,
+    /// Target class (fused lanes; 0 for single-output sketches).
+    pub class: usize,
+    /// Delete: fold `-weight` instead of `+weight`.
+    pub delete: bool,
+    /// Force an epoch publish after this batch of updates.
+    pub publish: bool,
+}
+
+impl UpdateSpec {
+    /// The signed α this update folds into the plane.
+    pub fn alpha(&self) -> f32 {
+        if self.delete { -self.weight } else { self.weight }
+    }
+}
 
 /// An inference request routed through the coordinator.
 #[derive(Clone, Debug)]
@@ -30,6 +75,9 @@ pub struct Request {
     /// Ask a multiclass lane for the full per-class score vector in
     /// addition to the argmax (`"scores": true` on the wire).
     pub want_scores: bool,
+    /// Present => this is a mutation, not a query: `features` is the
+    /// point to fold into the lane's live counter plane.
+    pub update: Option<UpdateSpec>,
 }
 
 /// The coordinator's answer.
@@ -47,6 +95,12 @@ pub struct Response {
     pub scores: Option<Vec<f32>>,
     /// Queue + execution latency in microseconds.
     pub latency_us: f64,
+    /// Update acks: the counter plane's published epoch after the
+    /// update batch (`"epoch"` on the wire).
+    pub epoch: Option<u64>,
+    /// The lane version that produced this response (`"v"` on the
+    /// wire) — the version-attribution handle across hot-swaps.
+    pub version: Option<u64>,
 }
 
 impl Request {
@@ -71,7 +125,36 @@ impl Request {
         }
         let want_scores =
             j.get("scores").and_then(|v| v.as_bool()).unwrap_or(false);
-        Ok(Request { id, model, backend, features, want_scores })
+        let update = match j.get("update") {
+            None => None,
+            Some(u) => {
+                let weight = match u.get("weight") {
+                    None => 1.0f32,
+                    Some(w) => {
+                        let w = w.as_f64().ok_or("invalid update weight")?
+                            as f32;
+                        if !w.is_finite() {
+                            return Err("non-finite update weight".into());
+                        }
+                        w
+                    }
+                };
+                let class = match u.get("class") {
+                    None => 0usize,
+                    Some(c) => c.as_usize().ok_or("invalid update class")?,
+                };
+                let delete = u
+                    .get("delete")
+                    .and_then(|v| v.as_bool())
+                    .unwrap_or(false);
+                let publish = u
+                    .get("publish")
+                    .and_then(|v| v.as_bool())
+                    .unwrap_or(false);
+                Some(UpdateSpec { weight, class, delete, publish })
+            }
+        };
+        Ok(Request { id, model, backend, features, want_scores, update })
     }
 
     pub fn to_line(&self) -> String {
@@ -87,6 +170,17 @@ impl Request {
         if self.want_scores {
             pairs.push(("scores", Json::Bool(true)));
         }
+        if let Some(u) = &self.update {
+            pairs.push((
+                "update",
+                json::obj(vec![
+                    ("weight", Json::num_f32(u.weight)),
+                    ("class", Json::from_u64(u.class as u64)),
+                    ("delete", Json::Bool(u.delete)),
+                    ("publish", Json::Bool(u.publish)),
+                ]),
+            ));
+        }
         json::obj(pairs).to_string()
     }
 }
@@ -101,6 +195,8 @@ impl Response {
             result: Err(msg.into()),
             scores: None,
             latency_us: 0.0,
+            epoch: None,
+            version: None,
         }
     }
 
@@ -131,14 +227,25 @@ impl Response {
                         ),
                     ));
                 }
+                if let Some(e) = self.epoch {
+                    pairs.push(("epoch", Json::from_u64(e)));
+                }
                 pairs.push(("us", Json::num(self.latency_us)));
+                if let Some(v) = self.version {
+                    pairs.push(("v", Json::from_u64(v)));
+                }
                 json::obj(pairs).to_string()
             }
-            Err(e) => json::obj(vec![
-                ("id", self.id_json()),
-                ("error", Json::Str(e.clone())),
-            ])
-            .to_string(),
+            Err(e) => {
+                let mut pairs = vec![
+                    ("id", self.id_json()),
+                    ("error", Json::Str(e.clone())),
+                ];
+                if let Some(v) = self.version {
+                    pairs.push(("v", Json::from_u64(v)));
+                }
+                json::obj(pairs).to_string()
+            }
         }
     }
 
@@ -146,12 +253,15 @@ impl Response {
         let j = json::parse(line)?;
         // `"id": null` (or a missing id) is legal on error responses.
         let id = j.get("id").and_then(|v| v.as_u64());
+        let version = j.get("v").and_then(|v| v.as_u64());
         if let Some(err) = j.get("error").and_then(|v| v.as_str()) {
             return Ok(Response {
                 id,
                 result: Err(err.to_string()),
                 scores: None,
                 latency_us: 0.0,
+                epoch: None,
+                version,
             });
         }
         let id = Some(id.ok_or("missing id")?);
@@ -161,7 +271,9 @@ impl Response {
             .ok_or("missing y")? as f32;
         let scores = j.get("scores").map(|v| v.as_f32_flat());
         let us = j.get("us").and_then(|v| v.as_f64()).unwrap_or(0.0);
-        Ok(Response { id, result: Ok(y), scores, latency_us: us })
+        let epoch = j.get("epoch").and_then(|v| v.as_u64());
+        Ok(Response { id, result: Ok(y), scores, latency_us: us, epoch,
+                      version })
     }
 }
 
@@ -175,6 +287,62 @@ pub fn parse_stats_line(line: &str) -> Option<u64> {
         return None;
     }
     j.get("id").and_then(|v| v.as_u64())
+}
+
+/// The hot-swap admin verb's payload (see module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SwapSpec {
+    /// Lane model name to replace (or create).
+    pub model: String,
+    /// Lane backend kind (`"rs"`, `"mc"`, `"sh"`).
+    pub backend: BackendKind,
+    /// Path of the new model: `.rssk`/`.rsfm` file for `rs`/`mc`/`sh`,
+    /// or an RSFS shard-set prefix for `sh` with `shards == 0`.
+    pub path: String,
+    /// For `sh`: shard count to carve a monolithic file into (0 = load
+    /// a pre-sharded `{path}.shard{i}.rsfs` set).  Ignored otherwise.
+    pub shards: usize,
+}
+
+/// Recognize a `{"id": N, "swap": {...}}` line — the hot-swap verb.
+/// Returns `None` when the line is anything else; `Some(Err(msg))` when
+/// the `swap` key is present but its payload is invalid (the router
+/// answers an error rather than misreading it as an inference request).
+pub fn parse_swap_line(line: &str)
+    -> Option<Result<(u64, SwapSpec), String>> {
+    let j = json::parse(line).ok()?;
+    let sw = j.get("swap")?;
+    let parse = || -> Result<(u64, SwapSpec), String> {
+        let id = j
+            .get("id")
+            .and_then(|v| v.as_u64())
+            .ok_or("swap: missing/invalid id")?;
+        let model = sw
+            .get("model")
+            .and_then(|v| v.as_str())
+            .ok_or("swap: missing model")?
+            .to_string();
+        let backend = match sw.get("backend").and_then(|v| v.as_str()) {
+            Some(s) => {
+                BackendKind::parse(s).ok_or("swap: unknown backend")?
+            }
+            None => BackendKind::Sketch,
+        };
+        let path = sw
+            .get("path")
+            .and_then(|v| v.as_str())
+            .ok_or("swap: missing path")?
+            .to_string();
+        if path.is_empty() {
+            return Err("swap: empty path".into());
+        }
+        let shards = match sw.get("shards") {
+            None => 0usize,
+            Some(v) => v.as_usize().ok_or("swap: invalid shards")?,
+        };
+        Ok((id, SwapSpec { model, backend, path, shards }))
+    };
+    Some(parse())
 }
 
 /// Best-effort recovery of the `"id"` field from a line that failed
@@ -232,6 +400,7 @@ mod tests {
             backend: BackendKind::NnRust,
             features: vec![1.0, -0.5, 0.0],
             want_scores: false,
+            update: None,
         };
         let line = r.to_line();
         assert!(!line.contains("scores"), "{line}");
@@ -251,6 +420,7 @@ mod tests {
             backend: BackendKind::Sharded,
             features: vec![0.25, 1.0],
             want_scores: true,
+            update: None,
         };
         let line = r.to_line();
         assert!(line.contains("\"scores\":true"), "{line}");
@@ -272,6 +442,8 @@ mod tests {
             result: Ok(0.5),
             scores: None,
             latency_us: 12.5,
+            epoch: None,
+            version: None,
         };
         let line = ok.to_line();
         assert!(!line.contains("scores"), "{line}");
@@ -284,6 +456,8 @@ mod tests {
             result: Err("boom".into()),
             scores: None,
             latency_us: 0.0,
+            epoch: None,
+            version: None,
         };
         let p2 = Response::parse_line(&err.to_line()).unwrap();
         assert_eq!(p2.id, Some(2));
@@ -297,6 +471,8 @@ mod tests {
             result: Ok(2.0),
             scores: Some(vec![0.1, -0.25, 0.75]),
             latency_us: 3.5,
+            epoch: None,
+            version: None,
         };
         let line = ok.to_line();
         assert!(line.contains("\"scores\":["), "{line}");
@@ -314,6 +490,8 @@ mod tests {
             result: Err("bad request".into()),
             scores: None,
             latency_us: 0.0,
+            epoch: None,
+            version: None,
         };
         let line = err.to_line();
         assert!(line.contains("\"id\":null"), "{line}");
@@ -350,6 +528,132 @@ mod tests {
         assert!(Request::parse_line(r#"{"id":1,"model":"m","x":[]}"#)
             .is_err());
         assert!(Request::parse_line("not json").is_err());
+    }
+
+    #[test]
+    fn update_request_roundtrip_and_defaults() {
+        let r = Request {
+            id: 11,
+            model: "adult".into(),
+            backend: BackendKind::Sketch,
+            features: vec![0.5, -1.0],
+            want_scores: false,
+            update: Some(UpdateSpec {
+                weight: 2.5,
+                class: 3,
+                delete: true,
+                publish: true,
+            }),
+        };
+        let line = r.to_line();
+        assert!(line.contains("\"update\":{"), "{line}");
+        let r2 = Request::parse_line(&line).unwrap();
+        let u = r2.update.unwrap();
+        assert_eq!(u, r.update.unwrap());
+        assert_eq!(u.alpha(), -2.5);
+        // Every update sub-field is optional.
+        let r3 = Request::parse_line(
+            r#"{"id":1,"model":"m","x":[1],"update":{}}"#,
+        )
+        .unwrap();
+        let u3 = r3.update.unwrap();
+        assert_eq!(
+            u3,
+            UpdateSpec { weight: 1.0, class: 0, delete: false,
+                         publish: false }
+        );
+        assert_eq!(u3.alpha(), 1.0);
+        // Absent "update" key => plain query.
+        assert!(Request::parse_line(r#"{"id":1,"model":"m","x":[1]}"#)
+            .unwrap()
+            .update
+            .is_none());
+        // Malformed riders are rejected, not silently defaulted.
+        assert!(Request::parse_line(
+            r#"{"id":1,"model":"m","x":[1],"update":{"class":"a"}}"#
+        )
+        .is_err());
+        assert!(Request::parse_line(
+            r#"{"id":1,"model":"m","x":[1],"update":{"weight":"w"}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn response_epoch_and_version_roundtrip() {
+        let ack = Response {
+            id: Some(4),
+            result: Ok(0.0),
+            scores: None,
+            latency_us: 1.5,
+            epoch: Some(17),
+            version: Some(3),
+        };
+        let line = ack.to_line();
+        assert!(line.contains("\"epoch\":17"), "{line}");
+        assert!(line.contains("\"v\":3"), "{line}");
+        let p = Response::parse_line(&line).unwrap();
+        assert_eq!(p.epoch, Some(17));
+        assert_eq!(p.version, Some(3));
+        // Errors can still be version-attributed.
+        let e = Response {
+            version: Some(9),
+            ..Response::err(Some(5), "boom")
+        };
+        let p2 = Response::parse_line(&e.to_line()).unwrap();
+        assert_eq!(p2.version, Some(9));
+        assert!(p2.result.is_err());
+        // Plain responses stay free of the new keys.
+        let plain = Response {
+            id: Some(1),
+            result: Ok(1.0),
+            scores: None,
+            latency_us: 0.0,
+            epoch: None,
+            version: None,
+        };
+        let line = plain.to_line();
+        assert!(!line.contains("epoch"), "{line}");
+        assert!(!line.contains("\"v\""), "{line}");
+    }
+
+    #[test]
+    fn swap_line_detection_and_validation() {
+        let got = parse_swap_line(
+            r#"{"id":3,"swap":{"model":"adult","backend":"mc",
+                "path":"m.rsfm","shards":2}}"#,
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(got.0, 3);
+        assert_eq!(
+            got.1,
+            SwapSpec {
+                model: "adult".into(),
+                backend: BackendKind::Multiclass,
+                path: "m.rsfm".into(),
+                shards: 2,
+            }
+        );
+        // Defaults: backend rs, shards 0.
+        let (_, sp) = parse_swap_line(
+            r#"{"id":1,"swap":{"model":"m","path":"p.rssk"}}"#,
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(sp.backend, BackendKind::Sketch);
+        assert_eq!(sp.shards, 0);
+        // Present-but-invalid swap payloads are errors, not fall-through.
+        assert!(parse_swap_line(r#"{"id":1,"swap":{"model":"m"}}"#)
+            .unwrap()
+            .is_err());
+        assert!(parse_swap_line(r#"{"swap":{"model":"m","path":"p"}}"#)
+            .unwrap()
+            .is_err());
+        // Non-swap lines are None.
+        assert!(parse_swap_line(r#"{"id":1,"model":"m","x":[1]}"#)
+            .is_none());
+        assert!(parse_swap_line("garbage").is_none());
     }
 
     #[test]

@@ -2,21 +2,42 @@
 //! (model, backend) lane, dispatches submissions, tracks per-lane SLO
 //! counters (latency quantiles + error budget), and handles shutdown.
 //!
+//! Lanes are VERSIONED and hot-swappable: every lane carries a
+//! monotonically increasing version assigned at registration, every
+//! response it produces is stamped with that version (`"v"` on the
+//! wire), and [`Router::add_lane`] atomically replaces a live lane —
+//! the old worker drains its queue to completion (in-flight requests
+//! finish on the old engine, stamped with the old version) while new
+//! submissions land on the new lane.  The `swap` wire verb rides this:
+//! it loads and validates a new model on a dedicated admin thread
+//! (never the reactor), and only a fully validated load flips the
+//! lane.  The submit path closes the one race this opens: a request
+//! that grabbed the old lane right before the flip retries onto the
+//! replacement when the old batcher reports `Closed`.
+//!
+//! A lane's queue is FIFO across verbs: queries and `update` mutations
+//! drain in submission order (split into maximal same-verb runs so
+//! each still batches), which is what makes the read-your-writes
+//! guarantee hold per connection — an update acked before a query was
+//! sent is visible to that query.
+//!
 //! The `stats` wire verb (`{"id": N, "stats": true}`) is answered
 //! here, inline on the reactor thread — see [`Router::stats_line`] for
 //! the response schema.
 
-use super::backend::{BackendKind, Engine};
+use super::backend::{BackendKind, Engine, UpdateRow};
 use super::batcher::{
     BatcherConfig, DynamicBatcher, Pending, Responder, ResponseSink,
 };
 use super::protocol::{Request, Response};
-use crate::metrics::slo::{LaneSlo, RemoteShardStats};
+#[cfg(target_os = "linux")]
+use super::protocol::SwapSpec;
+use crate::metrics::slo::{LaneSlo, RemoteShardStats, UpdateSlo};
 use crate::util::json::{self, Json};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, OnceLock, RwLock, Weak};
 use std::time::Instant;
 
 pub use super::batcher::SubmitError;
@@ -29,49 +50,83 @@ pub struct RouterConfig {
 
 struct Lane {
     batcher: Arc<DynamicBatcher>,
-    worker: Option<std::thread::JoinHandle<()>>,
+    worker: Mutex<Option<std::thread::JoinHandle<()>>>,
     slo: Arc<LaneSlo>,
+    /// Monotonic registration version — the version-attribution handle
+    /// stamped into every response this lane produces.
+    version: u64,
+    /// The engine's live-update counters, published by the worker once
+    /// the engine is constructed (stays empty for immutable backends).
+    update: Arc<OnceLock<Arc<UpdateSlo>>>,
+}
+
+/// What `enable_swap` arms: a weak self-reference (the admin thread
+/// must not keep a torn-down router alive) plus the lane config swapped
+/// lanes are built with.
+#[allow(dead_code)] // `cfg` is read by the Linux-only swap thread
+struct SwapCtx {
+    me: Weak<Router>,
+    cfg: RouterConfig,
 }
 
 /// Routes requests to per-(model, backend) lanes.
 pub struct Router {
-    lanes: HashMap<(String, BackendKind), Lane>,
+    lanes: RwLock<HashMap<(String, BackendKind), Arc<Lane>>>,
     pub rejected: AtomicU64,
     /// Remote shard sets whose counters the `stats` verb reports,
-    /// keyed by model name (registered at serve start, read-only
-    /// after).
-    shard_stats: Vec<(String, Arc<RemoteShardStats>)>,
+    /// keyed by model name (registered at serve start).
+    shard_stats: Mutex<Vec<(String, Arc<RemoteShardStats>)>>,
+    /// Source of lane versions; `add_lane` (and through it, `swap`)
+    /// increments.
+    next_version: AtomicU64,
+    swap: OnceLock<SwapCtx>,
 }
 
 impl Router {
     pub fn new() -> Self {
         Self {
-            lanes: HashMap::new(),
+            lanes: RwLock::new(HashMap::new()),
             rejected: AtomicU64::new(0),
-            shard_stats: Vec::new(),
+            shard_stats: Mutex::new(Vec::new()),
+            next_version: AtomicU64::new(0),
+            swap: OnceLock::new(),
         }
     }
 
     /// Register a lane: a backend engine served by one worker thread.
+    /// Returns the lane's version.
     ///
     /// The engine is constructed *inside* the worker via `factory` — PJRT
     /// executables are not `Send` (the xla crate holds `Rc`s), so they
     /// must live and die on the thread that runs them.  If construction
     /// fails, the lane stays up and answers every request with the error.
+    ///
+    /// Re-registering a live (model, backend) key is the HOT-SWAP
+    /// primitive: the new lane is inserted under the map lock (new
+    /// submissions route to it from that instant), then the old lane is
+    /// drained — its batcher closes, its worker finishes every request
+    /// already queued on the old engine, and the thread is joined.  No
+    /// request is lost, and every response is attributable to exactly
+    /// one version.
     pub fn add_lane<F>(
-        &mut self,
+        &self,
         model: &str,
         kind: BackendKind,
         factory: F,
         cfg: &RouterConfig,
-    ) where
+    ) -> u64
+    where
         F: FnOnce() -> anyhow::Result<Box<dyn Engine>> + Send + 'static,
     {
+        let version = self.next_version.fetch_add(1, Ordering::Relaxed) + 1;
         let batcher = Arc::new(DynamicBatcher::new(cfg.batcher.clone()));
         let slo = Arc::new(LaneSlo::new());
+        let update: Arc<OnceLock<Arc<UpdateSlo>>> =
+            Arc::new(OnceLock::new());
         let worker = {
             let batcher = batcher.clone();
             let slo = slo.clone();
+            let update = update.clone();
             let label = format!("{model}/{}", kind.name());
             std::thread::Builder::new()
                 .name(format!("lane-{label}"))
@@ -92,11 +147,15 @@ impl Router {
                     let _guard = DrainGuard(batcher.clone());
                     match factory() {
                         Ok(mut engine) => {
+                            if let Some(u) = engine.plane_stats() {
+                                let _ = update.set(u);
+                            }
                             while let Some(batch) = batcher.next_batch() {
                                 Self::run_batch(
                                     &mut *engine,
                                     batch,
                                     &slo,
+                                    version,
                                 );
                             }
                         }
@@ -106,10 +165,11 @@ impl Router {
                                 for p in batch {
                                     let id = p.req.id;
                                     slo.record_error();
-                                    p.responder.send(
-                                        Response::err(Some(id),
-                                                      msg.clone()),
-                                    );
+                                    p.responder.send(Response {
+                                        version: Some(version),
+                                        ..Response::err(Some(id),
+                                                        msg.clone())
+                                    });
                                 }
                             }
                         }
@@ -117,26 +177,70 @@ impl Router {
                 })
                 .expect("spawn lane worker")
         };
-        let replaced = self.lanes.insert(
-            (model.to_string(), kind),
-            Lane { batcher, worker: Some(worker), slo },
-        );
-        // Re-registering a (model, backend) key replaces the lane
-        // (last registration wins); shut the old one down properly —
-        // close its batcher so its worker drains and exits — instead
-        // of leaking a parked worker thread for the process lifetime.
-        if let Some(mut old) = replaced {
-            old.batcher.close();
-            if let Some(h) = old.worker.take() {
-                let _ = h.join();
-            }
+        let lane = Arc::new(Lane {
+            batcher,
+            worker: Mutex::new(Some(worker)),
+            slo,
+            version,
+            update,
+        });
+        let replaced = self
+            .lanes
+            .write()
+            .unwrap()
+            .insert((model.to_string(), kind), lane);
+        if let Some(old) = replaced {
+            Self::drain_lane(&old);
+        }
+        version
+    }
+
+    /// Drain one lane to completion: close its batcher (queued and
+    /// in-flight requests still flow through the worker — nothing is
+    /// dropped) and join the worker thread.  Shared by lane
+    /// replacement (hot-swap), shutdown, and the signal-driven drain.
+    fn drain_lane(lane: &Arc<Lane>) {
+        lane.batcher.close();
+        if let Some(h) = lane.worker.lock().unwrap().take() {
+            let _ = h.join();
         }
     }
 
+    /// Drain one queue pull.  The pull may interleave queries and
+    /// `update` mutations; they are split into maximal same-verb runs
+    /// in FIFO order — queries batch with queries, updates batch with
+    /// updates, and the submission order across verbs is preserved (an
+    /// update never reorders past a later query, which is what makes
+    /// update acks mean "visible to every query after me").
     fn run_batch(
         engine: &mut dyn Engine,
         batch: Vec<Pending>,
         slo: &LaneSlo,
+        version: u64,
+    ) {
+        let mut it = batch.into_iter().peekable();
+        while let Some(head) = it.peek() {
+            let is_update = head.req.update.is_some();
+            let mut run = Vec::new();
+            while let Some(p) = it.peek() {
+                if p.req.update.is_some() != is_update {
+                    break;
+                }
+                run.push(it.next().unwrap());
+            }
+            if is_update {
+                Self::run_updates(engine, run, slo, version);
+            } else {
+                Self::run_queries(engine, run, slo, version);
+            }
+        }
+    }
+
+    fn run_queries(
+        engine: &mut dyn Engine,
+        batch: Vec<Pending>,
+        slo: &LaneSlo,
+        version: u64,
     ) {
         let dim = engine.dim();
         // Feature vectors are MOVED out of the requests — the hot path
@@ -153,10 +257,16 @@ impl Router {
             } else {
                 let id = p.req.id;
                 slo.record_error();
-                p.responder.send(Response::err(
-                    Some(id),
-                    format!("dim mismatch: got {}, want {dim}", row.len()),
-                ));
+                p.responder.send(Response {
+                    version: Some(version),
+                    ..Response::err(
+                        Some(id),
+                        format!(
+                            "dim mismatch: got {}, want {dim}",
+                            row.len()
+                        ),
+                    )
+                });
             }
         }
         // Score vectors are materialized once per batch iff anyone in
@@ -191,6 +301,8 @@ impl Router {
                         result: Ok(value),
                         scores: row_scores,
                         latency_us: dur.as_nanos() as f64 / 1e3,
+                        epoch: None,
+                        version: Some(version),
                     });
                 }
             }
@@ -199,7 +311,115 @@ impl Router {
                 for p in ok {
                     let id = p.req.id;
                     slo.record_error();
-                    p.responder.send(Response::err(Some(id), msg.clone()));
+                    p.responder.send(Response {
+                        version: Some(version),
+                        ..Response::err(Some(id), msg.clone())
+                    });
+                }
+            }
+        }
+    }
+
+    /// Apply one FIFO run of `update` mutations.  Rows are validated
+    /// per-request against the engine's update shape (dimension +
+    /// class range) so one bad mutation is rejected alone, then the
+    /// survivors go to the engine as ONE `apply_updates` batch whose
+    /// publish flag is the OR of the run's — every ack then carries
+    /// the plane epoch those updates are visible under.
+    fn run_updates(
+        engine: &mut dyn Engine,
+        run: Vec<Pending>,
+        slo: &LaneSlo,
+        version: u64,
+    ) {
+        let Some((p_dim, c_n)) = engine.update_shape() else {
+            for p in run {
+                let id = p.req.id;
+                slo.record_error();
+                p.responder.send(Response {
+                    version: Some(version),
+                    ..Response::err(
+                        Some(id),
+                        "this backend does not support updates",
+                    )
+                });
+            }
+            return;
+        };
+        let mut ok = Vec::with_capacity(run.len());
+        let mut ups = Vec::with_capacity(run.len());
+        let mut publish = false;
+        for mut p in run {
+            let spec = p.req.update.expect("update run");
+            let row = std::mem::take(&mut p.req.features);
+            if row.len() != p_dim {
+                let id = p.req.id;
+                slo.record_error();
+                p.responder.send(Response {
+                    version: Some(version),
+                    ..Response::err(
+                        Some(id),
+                        format!(
+                            "update dim mismatch: got {}, want p = \
+                             {p_dim} (updates are in the projected \
+                             space)",
+                            row.len()
+                        ),
+                    )
+                });
+                continue;
+            }
+            if spec.class >= c_n {
+                let id = p.req.id;
+                slo.record_error();
+                p.responder.send(Response {
+                    version: Some(version),
+                    ..Response::err(
+                        Some(id),
+                        format!(
+                            "update class {} out of C = {c_n}",
+                            spec.class
+                        ),
+                    )
+                });
+                continue;
+            }
+            publish |= spec.publish;
+            ups.push(UpdateRow {
+                x: row,
+                alpha: spec.alpha(),
+                class: spec.class,
+            });
+            ok.push(p);
+        }
+        if ok.is_empty() {
+            return;
+        }
+        match engine.apply_updates(&ups, publish) {
+            Ok(ack) => {
+                for p in ok {
+                    let dur = p.enqueued.elapsed();
+                    slo.record_ok(dur);
+                    let id = p.req.id;
+                    p.responder.send(Response {
+                        id: Some(id),
+                        result: Ok(0.0),
+                        scores: None,
+                        latency_us: dur.as_nanos() as f64 / 1e3,
+                        epoch: Some(ack.epoch),
+                        version: Some(version),
+                    });
+                }
+            }
+            Err(e) => {
+                let msg = format!("update failed: {e}");
+                for p in ok {
+                    let id = p.req.id;
+                    slo.record_error();
+                    p.responder.send(Response {
+                        version: Some(version),
+                        ..Response::err(Some(id), msg.clone())
+                    });
                 }
             }
         }
@@ -212,6 +432,11 @@ impl Router {
     /// additionally return `Err` so callers can track rejections), and
     /// accepted requests carry a [`Responder`] whose drop guard answers
     /// `"worker dropped"` if the lane dies mid-flight.
+    ///
+    /// Hot-swap race: between reading the lane and submitting, a swap
+    /// may replace it and close its batcher.  `Closed` from a lane the
+    /// map no longer holds retries onto the replacement — the request
+    /// lands on the NEW model, never in the void.
     pub fn submit_sink(
         &self,
         req: Request,
@@ -219,34 +444,51 @@ impl Router {
     ) -> Result<(), SubmitError> {
         let id = req.id;
         let responder = Responder::new(id, sink);
-        let lane = match self.lanes.get(&(req.model.clone(), req.backend)) {
-            Some(l) => l,
+        let key = (req.model.clone(), req.backend);
+        let mut lane = match self.lanes.read().unwrap().get(&key) {
+            Some(l) => l.clone(),
             None => {
                 self.rejected.fetch_add(1, Ordering::Relaxed);
                 responder.send(Response::err(
                     Some(id),
                     format!(
                         "no lane for model={} backend={}",
-                        req.model,
-                        req.backend.name()
+                        key.0,
+                        key.1.name()
                     ),
                 ));
                 return Ok(());
             }
         };
-        match lane.batcher.submit(Pending {
+        let mut pending = Pending {
             req,
             enqueued: Instant::now(),
             responder,
-        }) {
-            Ok(()) => Ok(()),
-            Err((p, e)) => {
-                self.rejected.fetch_add(1, Ordering::Relaxed);
-                p.responder.send(Response::err(
-                    Some(id),
-                    format!("backpressure: {e:?}"),
-                ));
-                Err(e)
+        };
+        loop {
+            match lane.batcher.submit(pending) {
+                Ok(()) => return Ok(()),
+                Err((p, e)) => {
+                    if matches!(e, SubmitError::Closed) {
+                        if let Some(l2) =
+                            self.lanes.read().unwrap().get(&key)
+                        {
+                            if !Arc::ptr_eq(l2, &lane) {
+                                // The lane was swapped under us:
+                                // resubmit to the replacement.
+                                lane = l2.clone();
+                                pending = p;
+                                continue;
+                            }
+                        }
+                    }
+                    self.rejected.fetch_add(1, Ordering::Relaxed);
+                    p.responder.send(Response::err(
+                        Some(id),
+                        format!("backpressure: {e:?}"),
+                    ));
+                    return Err(e);
+                }
             }
         }
     }
@@ -273,6 +515,8 @@ impl Router {
 
     pub fn lane_stats(&self) -> Vec<(String, String, u64, u64, String)> {
         self.lanes
+            .read()
+            .unwrap()
             .iter()
             .map(|((m, k), lane)| {
                 (
@@ -289,18 +533,46 @@ impl Router {
     pub fn slo_of(&self, model: &str, kind: BackendKind)
         -> Option<Arc<LaneSlo>> {
         self.lanes
+            .read()
+            .unwrap()
             .get(&(model.to_string(), kind))
             .map(|l| l.slo.clone())
+    }
+
+    /// The current version of a lane (None when no such lane exists).
+    pub fn version_of(&self, model: &str, kind: BackendKind)
+        -> Option<u64> {
+        self.lanes
+            .read()
+            .unwrap()
+            .get(&(model.to_string(), kind))
+            .map(|l| l.version)
     }
 
     /// Attach a remote shard set's counters to the `stats` verb under
     /// `model`.  Called during serve start, before the reactor runs.
     pub fn register_shard_stats(
-        &mut self,
+        &self,
         model: &str,
         stats: Arc<RemoteShardStats>,
     ) {
-        self.shard_stats.push((model.to_string(), stats));
+        self.shard_stats
+            .lock()
+            .unwrap()
+            .push((model.to_string(), stats));
+    }
+
+    /// Arm the hot-swap verb.  After this, a `{"id": N, "swap": {...}}`
+    /// line loads and validates the named model on a dedicated admin
+    /// thread (never the reactor), registers the replacement lane with
+    /// `cfg`, and drains the old one — see [`Router::add_lane`].  The
+    /// self-reference is weak: an in-flight admin thread cannot keep a
+    /// torn-down router (and its worker threads) alive.
+    pub fn enable_swap(self: &Arc<Self>, cfg: RouterConfig) {
+        let _ = self.swap.set(SwapCtx {
+            me: Arc::downgrade(self),
+            cfg,
+        });
     }
 
     /// The `stats` verb response: one JSON line with every lane's SLO
@@ -309,29 +581,37 @@ impl Router {
     ///
     /// Schema:
     /// `{"id": N, "stats": {"rejected": R, "lanes": [{"model", "backend",
-    /// "submitted", "batches", "ok", "errors", "latency": {"n",
-    /// "mean_us", "p50_us", "p99_us", "p999_us"}}, ...], "shards":
-    /// [{"model", "shards": [per-shard objects with gathers/errors/
-    /// hedges/failovers/reconnects/quarantines/discarded/latency and
-    /// nested per-replica counters]}, ...]}}`.
+    /// "v", "submitted", "batches", "ok", "errors", "latency": {"n",
+    /// "mean_us", "p50_us", "p99_us", "p999_us"}, "update": null |
+    /// {"epoch", "updates", "publishes", "pending", "staleness_us"}},
+    /// ...], "shards": [{"model", "shards": [per-shard objects with
+    /// gathers/errors/hedges/failovers/reconnects/quarantines/discarded/
+    /// latency and nested per-replica counters]}, ...]}}`.
+    ///
+    /// `update` is `null` for immutable lanes; for live lanes,
+    /// `staleness_us` is the age of the oldest unpublished delta (the
+    /// bounded-staleness surface — see `metrics::slo::UpdateSlo`).
     ///
     /// The error budget over a window at target availability `t` is
     /// `(ok + errors) × (1 − t) − errors`, diffing two snapshots —
     /// see `metrics::slo`.
     pub fn stats_line(&self, id: u64) -> String {
-        let mut lanes: Vec<(&String, &BackendKind, &Lane)> = self
+        let mut lanes: Vec<(String, &'static str, Arc<Lane>)> = self
             .lanes
+            .read()
+            .unwrap()
             .iter()
-            .map(|((m, k), lane)| (m, k, lane))
+            .map(|((m, k), lane)| (m.clone(), k.name(), lane.clone()))
             .collect();
-        lanes.sort_by(|a, b| (a.0, a.1.name()).cmp(&(b.0, b.1.name())));
+        lanes.sort_by(|a, b| (&a.0, a.1).cmp(&(&b.0, b.1)));
         let lanes = Json::Arr(
             lanes
                 .into_iter()
                 .map(|(m, k, lane)| {
                     json::obj(vec![
-                        ("model", Json::Str(m.clone())),
-                        ("backend", Json::Str(k.name().to_string())),
+                        ("model", Json::Str(m)),
+                        ("backend", Json::Str(k.to_string())),
+                        ("v", Json::from_u64(lane.version)),
                         (
                             "submitted",
                             Json::from_u64(
@@ -362,12 +642,21 @@ impl Router {
                                 &lane.slo.latency,
                             ),
                         ),
+                        (
+                            "update",
+                            match lane.update.get() {
+                                Some(u) => u.to_json(),
+                                None => Json::Null,
+                            },
+                        ),
                     ])
                 })
                 .collect(),
         );
         let shards = Json::Arr(
             self.shard_stats
+                .lock()
+                .unwrap()
                 .iter()
                 .map(|(m, stats)| {
                     json::obj(vec![
@@ -397,14 +686,21 @@ impl Router {
     }
 
     /// Graceful shutdown: close all lanes, join workers (drains queues).
-    pub fn shutdown(&mut self) {
-        for lane in self.lanes.values() {
+    /// Also the signal-driven drain path — every queued request is
+    /// answered before this returns.
+    pub fn shutdown(&self) {
+        let lanes: Vec<Arc<Lane>> = self
+            .lanes
+            .read()
+            .unwrap()
+            .values()
+            .cloned()
+            .collect();
+        for lane in &lanes {
             lane.batcher.close();
         }
-        for lane in self.lanes.values_mut() {
-            if let Some(h) = lane.worker.take() {
-                let _ = h.join();
-            }
+        for lane in &lanes {
+            Self::drain_lane(lane);
         }
     }
 }
@@ -415,12 +711,157 @@ impl Default for Router {
     }
 }
 
+/// What a validated swap loaded from disk, ready to become an engine
+/// inside the new lane's worker.  Loading and validation happen on the
+/// admin thread BEFORE the lane flips — a bad file answers an error
+/// and the serving lane never notices.
+#[cfg(target_os = "linux")]
+enum SwapModel {
+    Race(crate::sketch::RaceSketch),
+    Fused(crate::sketch::FusedMultiSketch),
+    Sharded(crate::shard::ShardedSketch),
+}
+
+/// Load the model a `swap` names, held to the same validators as the
+/// load-time CLI paths (magic check, header validation, shard-set
+/// re-validation against the recomputed plan).
+#[cfg(target_os = "linux")]
+fn load_swap_model(spec: &SwapSpec) -> anyhow::Result<SwapModel> {
+    match spec.backend {
+        BackendKind::Sketch => Ok(SwapModel::Race(
+            crate::sketch::RaceSketch::load(&spec.path)?,
+        )),
+        BackendKind::Multiclass => Ok(SwapModel::Fused(
+            crate::sketch::FusedMultiSketch::load(&spec.path)?,
+        )),
+        BackendKind::Sharded => {
+            let sharded = if spec.shards > 0 {
+                crate::shard::serde::load_sharded(&spec.path, spec.shards)?
+            } else {
+                crate::shard::serde::load_shard_set(&spec.path)?
+            };
+            Ok(SwapModel::Sharded(sharded))
+        }
+        other => anyhow::bail!(
+            "backend {} is not hot-swappable (swap serves rs, mc, and \
+             local sh lanes)",
+            other.name()
+        ),
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Router {
+    /// Execute one `swap` verb: spawn the named admin thread, load +
+    /// validate there, flip the lane, drain the old worker, answer
+    /// `{"id": N, "swapped": {"model", "backend", "v"}}`.  This is the
+    /// only thread the coordinator ever spawns outside `add_lane` —
+    /// it exists exactly as long as one swap is in flight.
+    fn spawn_swap(
+        &self,
+        rid: u64,
+        spec: SwapSpec,
+        sender: super::net::CompletionSender,
+    ) {
+        let Some(ctx) = self.swap.get() else {
+            sender.send(Response::err(
+                Some(rid),
+                "swap is not enabled on this server",
+            ));
+            return;
+        };
+        let me = ctx.me.clone();
+        let cfg = ctx.cfg.clone();
+        std::thread::Builder::new()
+            .name(format!("swap-{}", spec.model))
+            .spawn(move || {
+                let outcome = (|| -> anyhow::Result<u64> {
+                    let router = me.upgrade().ok_or_else(|| {
+                        anyhow::anyhow!("router is shutting down")
+                    })?;
+                    // Load + validate BEFORE touching the lane map: a
+                    // failed load never flips, and the serving lane
+                    // keeps answering on the old model throughout.
+                    let model = load_swap_model(&spec)?;
+                    let v = match model {
+                        SwapModel::Race(sk) => router.add_lane(
+                            &spec.model,
+                            spec.backend,
+                            move || {
+                                Ok(Box::new(
+                                    super::backend::SketchEngine::new(sk),
+                                ) as _)
+                            },
+                            &cfg,
+                        ),
+                        SwapModel::Fused(fs) => router.add_lane(
+                            &spec.model,
+                            spec.backend,
+                            move || {
+                                Ok(Box::new(
+                                    super::backend::MulticlassEngine::new(
+                                        fs,
+                                    ),
+                                ) as _)
+                            },
+                            &cfg,
+                        ),
+                        SwapModel::Sharded(sh) => router.add_lane(
+                            &spec.model,
+                            spec.backend,
+                            move || {
+                                Ok(Box::new(
+                                    super::backend::ShardedEngine::new(sh),
+                                ) as _)
+                            },
+                            &cfg,
+                        ),
+                    };
+                    Ok(v)
+                })();
+                match outcome {
+                    Ok(v) => sender.send_line(
+                        json::obj(vec![
+                            ("id", Json::from_u64(rid)),
+                            (
+                                "swapped",
+                                json::obj(vec![
+                                    (
+                                        "model",
+                                        Json::Str(spec.model.clone()),
+                                    ),
+                                    (
+                                        "backend",
+                                        Json::Str(
+                                            spec.backend
+                                                .name()
+                                                .to_string(),
+                                        ),
+                                    ),
+                                    ("v", Json::from_u64(v)),
+                                ]),
+                            ),
+                        ])
+                        .to_string(),
+                    ),
+                    Err(e) => sender.send(Response::err(
+                        Some(rid),
+                        format!("swap failed: {e:#}"),
+                    )),
+                }
+            })
+            .expect("spawn swap admin thread");
+    }
+}
+
 /// The inference plane behind the reactor: parse a request line, submit
 /// it with the reactor completion sink.  Exactly one response per line:
 /// parse failures answer immediately with a best-effort-recovered id,
 /// accepted requests carry a [`Responder`] whose drop guard fires if
 /// the lane dies, and unknown-lane/backpressure errors are answered by
-/// `submit_sink` itself.
+/// `submit_sink` itself.  Admin verbs are recognized first: `stats`
+/// (answered inline — counter loads only), then `swap` (handed to an
+/// admin thread — never load files on the reactor).
 #[cfg(target_os = "linux")]
 impl super::net::LineHandler for Router {
     fn handle_line(
@@ -433,6 +874,16 @@ impl super::net::LineHandler for Router {
         // rendering only — no lane round-trip, no kernel work).
         if let Some(rid) = super::protocol::parse_stats_line(&line) {
             sender.send_line(self.stats_line(rid));
+            return;
+        }
+        if let Some(swap) = super::protocol::parse_swap_line(&line) {
+            match swap {
+                Ok((rid, spec)) => self.spawn_swap(rid, spec, sender),
+                Err(e) => sender.send(Response::err(
+                    extract_id(&line),
+                    format!("bad swap request: {e}"),
+                )),
+            }
             return;
         }
         match Request::parse_line(&line) {
@@ -457,6 +908,8 @@ impl Drop for Router {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::backend::{UpdateAck, UpdateRow};
+    use crate::coordinator::protocol::UpdateSpec;
 
     /// Test engine: y = sum(x) (+ optional failure injection).
     struct SumEngine {
@@ -479,7 +932,7 @@ mod tests {
     }
 
     fn mk_router(fail: bool) -> Router {
-        let mut r = Router::new();
+        let r = Router::new();
         r.add_lane(
             "m",
             BackendKind::Sketch,
@@ -496,6 +949,14 @@ mod tests {
             backend: BackendKind::Sketch,
             features: x,
             want_scores: false,
+            update: None,
+        }
+    }
+
+    fn upd_req(id: u64, x: Vec<f32>, spec: UpdateSpec) -> Request {
+        Request {
+            update: Some(spec),
+            ..req(id, x)
         }
     }
 
@@ -506,6 +967,7 @@ mod tests {
         assert_eq!(resp.id, Some(1));
         assert_eq!(resp.result.unwrap(), 6.0);
         assert!(resp.latency_us > 0.0);
+        assert_eq!(resp.version, Some(1));
     }
 
     #[test]
@@ -517,6 +979,7 @@ mod tests {
             backend: BackendKind::Sketch,
             features: vec![1.0],
             want_scores: false,
+            update: None,
         });
         assert!(resp.result.is_err());
         assert_eq!(r.rejected.load(Ordering::Relaxed), 1);
@@ -527,6 +990,8 @@ mod tests {
         let r = mk_router(false);
         let bad = r.call(req(1, vec![1.0]));
         assert!(bad.result.is_err());
+        // Lane errors still carry the version-attribution handle.
+        assert_eq!(bad.version, Some(1));
         let good = r.call(req(2, vec![1.0, 1.0, 1.0]));
         assert_eq!(good.result.unwrap(), 3.0);
     }
@@ -591,7 +1056,7 @@ mod tests {
         // worker's unwind, queued-but-undrained requests fire when the
         // router (and with it the batcher queue) is dropped.  The seed
         // lost all of these silently.
-        let mut r = Router::new();
+        let r = Router::new();
         r.add_lane(
             "m",
             BackendKind::Sketch,
@@ -635,7 +1100,7 @@ mod tests {
                     .collect())
             }
         }
-        let mut r = Router::new();
+        let r = Router::new();
         let cfg = RouterConfig {
             batcher: BatcherConfig {
                 max_batch: 8,
@@ -688,7 +1153,7 @@ mod tests {
 
     #[test]
     fn stats_line_reports_slo_counters_as_json() {
-        let mut r = mk_router(false);
+        let r = mk_router(false);
         for i in 0..5 {
             let _ = r.call(req(i, vec![0.0, 0.0, 0.0]));
         }
@@ -710,8 +1175,11 @@ mod tests {
         let lanes = stats.get("lanes").unwrap().as_arr().unwrap();
         assert_eq!(lanes.len(), 1);
         assert_eq!(lanes[0].get("model").unwrap().as_str(), Some("m"));
+        assert_eq!(lanes[0].get("v").unwrap().as_u64(), Some(1));
         assert_eq!(lanes[0].get("ok").unwrap().as_u64(), Some(5));
         assert_eq!(lanes[0].get("errors").unwrap().as_u64(), Some(1));
+        // SumEngine is immutable: its update surface is null.
+        assert!(matches!(lanes[0].get("update"), Some(Json::Null)));
         let lat = lanes[0].get("latency").unwrap();
         assert_eq!(lat.get("n").unwrap().as_u64(), Some(5));
         assert!(lat.get("p999_us").unwrap().as_f64().unwrap() > 0.0);
@@ -742,5 +1210,367 @@ mod tests {
         let slo = r.slo_of("m", BackendKind::Sketch).unwrap();
         assert_eq!(slo.ok_count(), 1);
         assert!(r.slo_of("nope", BackendKind::Sketch).is_none());
+    }
+
+    /// Mutable test engine: y = sum(x) + bias, where updates move the
+    /// bias by `alpha · x[0]` — enough structure to verify routing,
+    /// validation, publish plumbing, and FIFO ordering.
+    struct UpdEngine {
+        bias: f32,
+        epoch: u64,
+        slo: Arc<UpdateSlo>,
+    }
+
+    impl UpdEngine {
+        fn new() -> UpdEngine {
+            UpdEngine {
+                bias: 0.0,
+                epoch: 0,
+                slo: Arc::new(UpdateSlo::new()),
+            }
+        }
+    }
+
+    impl Engine for UpdEngine {
+        fn dim(&self) -> usize {
+            2
+        }
+
+        fn eval_batch(&mut self, rows: &[Vec<f32>])
+            -> anyhow::Result<Vec<f32>> {
+            let b = self.bias;
+            Ok(rows.iter().map(|r| r.iter().sum::<f32>() + b).collect())
+        }
+
+        fn update_shape(&self) -> Option<(usize, usize)> {
+            Some((2, 3))
+        }
+
+        fn apply_updates(&mut self, ups: &[UpdateRow], publish: bool)
+            -> anyhow::Result<UpdateAck> {
+            for u in ups {
+                self.bias += u.alpha * u.x[0];
+                self.slo.record_update(1);
+            }
+            if publish {
+                self.epoch += 1;
+                self.slo.record_publish(self.epoch);
+            }
+            Ok(UpdateAck { epoch: self.epoch, pending: 0 })
+        }
+
+        fn plane_stats(&self) -> Option<Arc<UpdateSlo>> {
+            Some(self.slo.clone())
+        }
+    }
+
+    fn upd_router() -> Router {
+        let r = Router::new();
+        r.add_lane(
+            "m",
+            BackendKind::Sketch,
+            || Ok(Box::new(UpdEngine::new()) as Box<dyn Engine>),
+            &RouterConfig::default(),
+        );
+        r
+    }
+
+    #[test]
+    fn updates_route_validate_and_ack_with_epoch() {
+        let r = upd_router();
+        // A valid update: acked with the (published) epoch + version.
+        let ack = r.call(upd_req(
+            1,
+            vec![2.0, 0.0],
+            UpdateSpec {
+                weight: 3.0,
+                class: 1,
+                delete: false,
+                publish: true,
+            },
+        ));
+        assert_eq!(ack.result.as_ref().unwrap(), &0.0);
+        assert_eq!(ack.epoch, Some(1));
+        assert_eq!(ack.version, Some(1));
+        // The mutation is visible to a later query on the same lane
+        // (FIFO ordering): bias moved by 3 · 2 = 6.
+        let q = r.call(req(2, vec![1.0, 1.0]));
+        assert_eq!(q.result.unwrap(), 8.0);
+        assert_eq!(q.epoch, None);
+        // Per-row validation: wrong dim and out-of-range class answer
+        // alone, without poisoning the lane.
+        let bad = r.call(upd_req(
+            3,
+            vec![1.0],
+            UpdateSpec {
+                weight: 1.0,
+                class: 0,
+                delete: false,
+                publish: false,
+            },
+        ));
+        assert!(bad.result.unwrap_err().contains("update dim"), "dim");
+        let bad = r.call(upd_req(
+            4,
+            vec![1.0, 0.0],
+            UpdateSpec {
+                weight: 1.0,
+                class: 7,
+                delete: false,
+                publish: false,
+            },
+        ));
+        assert!(bad.result.unwrap_err().contains("class 7"), "class");
+        let q = r.call(req(5, vec![0.0, 0.0]));
+        assert_eq!(q.result.unwrap(), 6.0);
+        // The lane's update surface shows up in the stats line.
+        let j = json::parse(&r.stats_line(9)).unwrap();
+        let lanes = j
+            .get("stats")
+            .unwrap()
+            .get("lanes")
+            .unwrap()
+            .as_arr()
+            .unwrap();
+        let upd = lanes[0].get("update").unwrap();
+        assert_eq!(upd.get("updates").unwrap().as_u64(), Some(1));
+        assert_eq!(upd.get("epoch").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn immutable_lane_rejects_updates_with_version() {
+        let r = mk_router(false);
+        let resp = r.call(upd_req(
+            1,
+            vec![0.0, 0.0, 0.0],
+            UpdateSpec {
+                weight: 1.0,
+                class: 0,
+                delete: false,
+                publish: false,
+            },
+        ));
+        let err = resp.result.unwrap_err();
+        assert!(err.contains("does not support updates"), "{err}");
+        assert_eq!(resp.version, Some(1));
+    }
+
+    #[test]
+    fn lane_replacement_bumps_version_and_loses_nothing() {
+        // The hot-swap primitive at the router level: re-registering a
+        // key replaces the lane; responses are attributable to exactly
+        // one version, and the old lane drains (its queued requests
+        // answer on the OLD engine) before add_lane returns.
+        let r = Router::new();
+        r.add_lane(
+            "m",
+            BackendKind::Sketch,
+            || Ok(Box::new(SumEngine { dim: 3, fail: false }) as _),
+            &RouterConfig::default(),
+        );
+        let v1 = r.call(req(1, vec![1.0, 1.0, 1.0]));
+        assert_eq!(v1.result.unwrap(), 3.0);
+        assert_eq!(v1.version, Some(1));
+        assert_eq!(
+            r.version_of("m", BackendKind::Sketch),
+            Some(1)
+        );
+        // Replace with an engine whose answers are distinguishable.
+        let v2 = r.add_lane(
+            "m",
+            BackendKind::Sketch,
+            || Ok(Box::new(UpdEngine::new()) as _),
+            &RouterConfig::default(),
+        );
+        assert_eq!(v2, 2);
+        assert_eq!(
+            r.version_of("m", BackendKind::Sketch),
+            Some(2)
+        );
+        let resp = r.call(req(2, vec![1.0, 1.0]));
+        assert_eq!(resp.result.unwrap(), 2.0);
+        assert_eq!(resp.version, Some(2));
+    }
+
+    #[test]
+    fn submit_retries_onto_swapped_lane_when_old_closed() {
+        // The submit/swap race: a submitter holding the OLD lane Arc
+        // must land on the replacement, not answer backpressure.
+        let r = Router::new();
+        r.add_lane(
+            "m",
+            BackendKind::Sketch,
+            || Ok(Box::new(SumEngine { dim: 3, fail: false }) as _),
+            &RouterConfig::default(),
+        );
+        // Grab the old lane the way submit_sink does...
+        let old = r
+            .lanes
+            .read()
+            .unwrap()
+            .get(&("m".to_string(), BackendKind::Sketch))
+            .unwrap()
+            .clone();
+        // ...swap underneath it (add_lane joins the old worker)...
+        r.add_lane(
+            "m",
+            BackendKind::Sketch,
+            || Ok(Box::new(SumEngine { dim: 3, fail: false }) as _),
+            &RouterConfig::default(),
+        );
+        // ...then prove the old batcher reports Closed while the
+        // router-level submit still answers from the new lane.
+        let (tx, _rx) = channel();
+        let p = Pending {
+            req: req(7, vec![1.0, 1.0, 1.0]),
+            enqueued: Instant::now(),
+            responder: Responder::new(7, ResponseSink::Channel(tx)),
+        };
+        match old.batcher.submit(p) {
+            Err((_, SubmitError::Closed)) => {}
+            _ => panic!("old lane's batcher must be closed after swap"),
+        }
+        let resp = r.call(req(8, vec![1.0, 1.0, 1.0]));
+        assert_eq!(resp.result.unwrap(), 3.0);
+        assert_eq!(resp.version, Some(2));
+    }
+
+    #[test]
+    fn interleaved_updates_and_queries_stay_fifo() {
+        // One pipelined burst mixing verbs: every query must observe
+        // exactly the updates submitted before it (read-your-writes
+        // through the run-splitting batcher drain).
+        let r = std::sync::Arc::new(upd_router());
+        let mut rxs = Vec::new();
+        let mut want_bias = 0.0f32;
+        let mut wants = Vec::new();
+        for i in 0..60u64 {
+            if i % 3 == 0 {
+                let w = (i / 3 + 1) as f32;
+                rxs.push(r
+                    .submit(upd_req(
+                        i,
+                        vec![1.0, 0.0],
+                        UpdateSpec {
+                            weight: w,
+                            class: 0,
+                            delete: false,
+                            publish: i % 2 == 0,
+                        },
+                    ))
+                    .unwrap());
+                want_bias += w;
+                wants.push(None);
+            } else {
+                rxs.push(r.submit(req(i, vec![0.0, 0.0])).unwrap());
+                wants.push(Some(want_bias));
+            }
+        }
+        for (i, (rx, want)) in rxs.into_iter().zip(wants).enumerate() {
+            let resp = rx
+                .recv_timeout(std::time::Duration::from_secs(5))
+                .unwrap();
+            let got = resp.result.unwrap();
+            if let Some(w) = want {
+                assert_eq!(got, w, "query {i} saw a stale/early plane");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_sample_lane_reports_empty_quantiles() {
+        // Satellite: a lane that has served nothing must report n=0
+        // and 0.0 quantiles — not NaN, not garbage.
+        let r = mk_router(false);
+        let j = json::parse(&r.stats_line(1)).unwrap();
+        let lanes = j
+            .get("stats")
+            .unwrap()
+            .get("lanes")
+            .unwrap()
+            .as_arr()
+            .unwrap();
+        let lat = lanes[0].get("latency").unwrap();
+        assert_eq!(lat.get("n").unwrap().as_u64(), Some(0));
+        for q in ["p50_us", "p99_us", "p999_us", "mean_us"] {
+            assert_eq!(
+                lat.get(q).unwrap().as_f64(),
+                Some(0.0),
+                "{q} of an empty lane"
+            );
+        }
+    }
+
+    #[test]
+    fn single_sample_p999_equals_the_sample_bucket() {
+        // With one sample every quantile collapses to that sample's
+        // bucket — p999 in particular must not read past the end.
+        let r = mk_router(false);
+        let _ = r.call(req(1, vec![0.0, 0.0, 0.0]));
+        let j = json::parse(&r.stats_line(2)).unwrap();
+        let lanes = j
+            .get("stats")
+            .unwrap()
+            .get("lanes")
+            .unwrap()
+            .as_arr()
+            .unwrap();
+        let lat = lanes[0].get("latency").unwrap();
+        assert_eq!(lat.get("n").unwrap().as_u64(), Some(1));
+        let p50 = lat.get("p50_us").unwrap().as_f64().unwrap();
+        let p999 = lat.get("p999_us").unwrap().as_f64().unwrap();
+        assert!(p50 > 0.0);
+        assert_eq!(p50, p999, "one sample: all quantiles coincide");
+    }
+
+    #[test]
+    fn stats_counters_are_monotonic_across_calls() {
+        // Satellite: two consecutive stats lines — counters never go
+        // backwards (the error-budget math diffs snapshots).
+        let r = upd_router();
+        let read = |line: &str| -> (u64, u64, u64) {
+            let j = json::parse(line).unwrap();
+            let stats = j.get("stats").unwrap();
+            let lane = &stats.get("lanes").unwrap().as_arr().unwrap()[0];
+            (
+                lane.get("submitted").unwrap().as_u64().unwrap(),
+                lane.get("ok").unwrap().as_u64().unwrap(),
+                lane.get("update")
+                    .unwrap()
+                    .get("updates")
+                    .unwrap()
+                    .as_u64()
+                    .unwrap(),
+            )
+        };
+        let _ = r.call(req(1, vec![0.0, 0.0]));
+        let _ = r.call(upd_req(
+            2,
+            vec![1.0, 0.0],
+            UpdateSpec {
+                weight: 1.0,
+                class: 0,
+                delete: false,
+                publish: true,
+            },
+        ));
+        let a = read(&r.stats_line(10));
+        let _ = r.call(req(3, vec![0.0, 0.0]));
+        let _ = r.call(upd_req(
+            4,
+            vec![1.0, 0.0],
+            UpdateSpec {
+                weight: 1.0,
+                class: 0,
+                delete: false,
+                publish: false,
+            },
+        ));
+        let b = read(&r.stats_line(11));
+        assert!(b.0 >= a.0 && b.1 >= a.1 && b.2 >= a.2,
+                "{a:?} -> {b:?}");
+        assert_eq!(b.0, a.0 + 2);
+        assert_eq!(b.1, a.1 + 2);
+        assert_eq!(b.2, a.2 + 1);
     }
 }

@@ -64,6 +64,7 @@ use repsketch::experiments::{ablation, figure2, table1, table2, theory};
 use repsketch::kernel::KernelParams;
 use repsketch::runtime::registry::{DatasetBundle, DatasetMeta};
 use repsketch::runtime::Runtime;
+use repsketch::shard::serde::{load_sharded, load_shard_set};
 use repsketch::shard::ShardedSketch;
 use repsketch::sketch::{FusedMultiSketch, RaceSketch, SketchConfig};
 use std::collections::HashMap;
@@ -362,44 +363,17 @@ fn cmd_fuse_sketch(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// Load a monolithic sketch file as a `ShardedSketch` (RSSK or RSFM,
-/// detected by magic), split `n_shards` ways.
-fn load_sharded(path: &str, n_shards: usize) -> Result<ShardedSketch> {
-    let bytes = std::fs::read(path).with_context(|| format!("read {path}"))?;
-    if bytes.len() >= 4 && &bytes[..4] == b"RSSK" {
-        let sk = RaceSketch::from_bytes(&bytes)
-            .with_context(|| format!("parse RSSK {path}"))?;
-        Ok(ShardedSketch::from_race(&sk, n_shards))
-    } else if bytes.len() >= 4 && &bytes[..4] == b"RSFM" {
-        let fs = FusedMultiSketch::from_bytes(&bytes)
-            .with_context(|| format!("parse RSFM {path}"))?;
-        Ok(ShardedSketch::from_fused(&fs, n_shards))
-    } else {
-        bail!("{path}: neither an RSSK nor an RSFM file")
+/// Round `max_batch` up to a whole multiple of the AOT-compiled batch
+/// size.  PJRT executables run fixed-size chunks: a lane pull that is a
+/// multiple of the chunk keeps every executable invocation full when
+/// the queue is deep (the last chunk of the last pull is the only one
+/// that may pad).
+fn aot_aligned(max_batch: usize, aot_batch: usize) -> usize {
+    if aot_batch == 0 {
+        return max_batch.max(1);
     }
-}
-
-/// Load the RSFS shard set `PREFIX.shard{0..}.rsfs` (the files
-/// `shard-sketch --out PREFIX` writes).  The loader re-validates the
-/// whole set (seeds, ranges, indices) against the recomputed plan.
-fn load_shard_set(prefix: &str) -> Result<ShardedSketch> {
-    let mut paths = Vec::new();
-    loop {
-        let p = std::path::PathBuf::from(format!(
-            "{prefix}.shard{}.rsfs",
-            paths.len()
-        ));
-        if !p.exists() {
-            break;
-        }
-        paths.push(p);
-    }
-    anyhow::ensure!(
-        !paths.is_empty(),
-        "no shard files match {prefix}.shard*.rsfs"
-    );
-    ShardedSketch::load_shards(&paths)
-        .with_context(|| format!("load shard set {prefix}.shard*.rsfs"))
+    let chunks = (max_batch.max(1) + aot_batch - 1) / aot_batch;
+    chunks * aot_batch
 }
 
 fn cmd_shard_sketch(args: &[String]) -> Result<()> {
@@ -477,6 +451,15 @@ fn parse_remote_spec(spec: &str)
             !group.is_empty(),
             "empty replica group in --sharded-remote segment {seg:?}"
         );
+        for (i, a) in group.iter().enumerate() {
+            anyhow::ensure!(
+                !group[..i].contains(a),
+                "duplicate replica address {a:?} in --sharded-remote \
+                 segment {seg:?} — replicas of one shard must be \
+                 distinct endpoints (dialing one endpoint twice is not \
+                 redundancy)"
+            );
+        }
         Ok(group)
     }
     let mut entries: Vec<(String, Vec<Vec<String>>)> = Vec::new();
@@ -533,12 +516,19 @@ fn cmd_shard_serve(args: &[String]) -> Result<()> {
             repsketch::shard::ShardService::from_loaded(loaded),
         );
         let server = Server::bind_handler(service, &addr)?;
+        repsketch::coordinator::net::sys::install_stop_signals(
+            &server.stop_handle(),
+        );
         // The "listening" line is the readiness signal orchestration
         // (and the fault-injection test harness) waits for — flush it.
         println!("shard-serve listening on {}", server.local_addr());
         use std::io::Write as _;
         std::io::stdout().flush().ok();
-        server.serve()
+        server.serve()?;
+        // SIGTERM/SIGINT path: the reactor closed its connections and
+        // returned; the shard worker drains with the service drop.
+        println!("shard-serve: stopped; exiting");
+        Ok(())
     }
     #[cfg(not(target_os = "linux"))]
     {
@@ -567,7 +557,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .cloned()
         .unwrap_or_else(|| "127.0.0.1:7878".to_string());
     let with_pjrt = flags.kv.contains_key("pjrt");
-    let mut router = Router::new();
+    let router = Router::new();
     let cfg = RouterConfig::default();
     // With `--fused`/`--sharded`/`--sharded-remote` and no explicit
     // `--datasets`, a missing artifacts tree only skips the dataset
@@ -605,20 +595,30 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         if with_pjrt {
             let dir = root.join(&name);
             let (batch, dim) = (meta.aot_batch, meta.dim);
+            // AOT executables run fixed-size chunks: align the lane's
+            // max pull up to a whole multiple of the compiled batch so
+            // a deep drain re-chunks into FULL executables instead of
+            // a ragged (padded) tail on every pull.
+            let pjrt_cfg = RouterConfig {
+                batcher: repsketch::coordinator::BatcherConfig {
+                    max_batch: aot_aligned(cfg.batcher.max_batch, batch),
+                    ..cfg.batcher.clone()
+                },
+            };
             let nn_path = dir.join("nn.hlo.txt");
             router.add_lane(&name, BackendKind::NnPjrt, move || {
                 let rt = Runtime::cpu()?;
                 Ok(Box::new(backend::PjrtEngine {
                     exe: rt.load_hlo(nn_path, batch, dim)?,
                 }) as _)
-            }, &cfg);
+            }, &pjrt_cfg);
             let kern_path = dir.join("kernel.hlo.txt");
             router.add_lane(&name, BackendKind::KernelPjrt, move || {
                 let rt = Runtime::cpu()?;
                 Ok(Box::new(backend::PjrtEngine {
                     exe: rt.load_hlo(kern_path, batch, dim)?,
                 }) as _)
-            }, &cfg);
+            }, &pjrt_cfg);
         }
         println!("registered {name} (dim={})", meta.dim);
     }
@@ -750,7 +750,17 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         }
     }
     let router = Arc::new(router);
+    // Arm the hot-swap admin verb: swapped lanes are rebuilt with the
+    // same batcher config the boot-time lanes use.
+    router.enable_swap(cfg.clone());
     let server = Server::bind(router.clone(), &addr)?;
+    // SIGTERM/SIGINT flip the reactor's stop flag: serve() returns,
+    // and the drain below answers everything still queued — a kill
+    // becomes the same drain path a swap uses, and the process exits 0.
+    #[cfg(target_os = "linux")]
+    repsketch::coordinator::net::sys::install_stop_signals(
+        &server.stop_handle(),
+    );
     println!(
         "serving on {} ({})",
         server.local_addr(),
@@ -769,8 +779,60 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             backend: BackendKind::Sketch,
             features: vec![0.0; 3],
             want_scores: false,
+            update: None,
         }
         .to_line()
     );
-    server.serve()
+    server.serve()?;
+    println!("shutting down: draining lanes");
+    router.shutdown();
+    println!("drained; exiting");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aot_alignment_rounds_up_to_full_chunks() {
+        assert_eq!(aot_aligned(32, 24), 48);
+        assert_eq!(aot_aligned(32, 32), 32);
+        assert_eq!(aot_aligned(32, 100), 100);
+        assert_eq!(aot_aligned(1, 8), 8);
+        assert_eq!(aot_aligned(0, 8), 8);
+        // A meta without an AOT batch leaves the config as-is.
+        assert_eq!(aot_aligned(32, 0), 32);
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn remote_spec_parses_replica_groups() {
+        let entries = parse_remote_spec("m=a|b,c,d|e").unwrap();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].0, "m");
+        assert_eq!(
+            entries[0].1,
+            vec![
+                vec!["a".to_string(), "b".to_string()],
+                vec!["c".to_string()],
+                vec!["d".to_string(), "e".to_string()],
+            ]
+        );
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn remote_spec_rejects_duplicate_replicas_in_a_group() {
+        // The same endpoint twice in ONE replica group is refused at
+        // parse time — double-dialing one process is not redundancy.
+        let err = parse_remote_spec("m=a|a,b").unwrap_err();
+        assert!(
+            err.to_string().contains("duplicate replica address"),
+            "{err}"
+        );
+        // The same address in DIFFERENT shard slots stays a parse-level
+        // pass (connect-time shard validation rejects it if wrong).
+        assert!(parse_remote_spec("m=a,a").is_ok());
+    }
 }

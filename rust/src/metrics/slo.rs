@@ -32,6 +32,8 @@
 use super::latency::LatencyHistogram;
 use crate::util::json::{self, Json};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
 
 /// Latency quantiles as a JSON object — the shared rendering for every
 /// histogram the `stats` verb exposes.
@@ -94,6 +96,74 @@ impl LaneSlo {
             ("ok", Json::from_u64(self.ok_count())),
             ("errors", Json::from_u64(self.error_count())),
             ("latency", histogram_json(&self.latency)),
+        ])
+    }
+}
+
+/// Counter-plane mutation accounting for one lane or shard: how many
+/// `update`s were applied, how many epoch publishes made them visible,
+/// and how stale the oldest unpublished delta currently is.  The
+/// staleness bound the plane guarantees is
+/// `pending <= sketch::epoch::MAX_PENDING` (a publish is forced past
+/// it) AND read-your-writes in lane order (every query eval publishes
+/// pending deltas first), so `staleness_us` only grows while no query
+/// or explicit publish arrives — surfaced here so operators can see an
+/// idle-but-dirty plane.
+#[derive(Debug, Default)]
+pub struct UpdateSlo {
+    /// Updates applied (monotonic).
+    pub updates: AtomicU64,
+    /// Epoch publishes (monotonic).
+    pub publishes: AtomicU64,
+    /// Deltas applied to the shadow buffer but not yet published.
+    pub pending: AtomicU64,
+    /// The published epoch readers currently pin.
+    pub epoch: AtomicU64,
+    /// When the oldest currently-pending delta was applied.
+    pending_since: Mutex<Option<Instant>>,
+}
+
+impl UpdateSlo {
+    pub fn new() -> UpdateSlo {
+        UpdateSlo::default()
+    }
+
+    /// One delta applied to the shadow plane; `pending_now` is the new
+    /// unpublished-delta count.
+    pub fn record_update(&self, pending_now: u64) {
+        self.updates.fetch_add(1, Ordering::Relaxed);
+        self.pending.store(pending_now, Ordering::Relaxed);
+        let mut since = self.pending_since.lock().unwrap();
+        if since.is_none() {
+            *since = Some(Instant::now());
+        }
+    }
+
+    /// An epoch flip made every pending delta reader-visible.
+    pub fn record_publish(&self, epoch: u64) {
+        self.publishes.fetch_add(1, Ordering::Relaxed);
+        self.pending.store(0, Ordering::Relaxed);
+        self.epoch.store(epoch, Ordering::Relaxed);
+        *self.pending_since.lock().unwrap() = None;
+    }
+
+    /// Age of the oldest unpublished delta in microseconds (0.0 when
+    /// the plane is clean).
+    pub fn staleness_us(&self) -> f64 {
+        match *self.pending_since.lock().unwrap() {
+            Some(t) => t.elapsed().as_nanos() as f64 / 1e3,
+            None => 0.0,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let c = |a: &AtomicU64| Json::from_u64(a.load(Ordering::Relaxed));
+        json::obj(vec![
+            ("epoch", c(&self.epoch)),
+            ("updates", c(&self.updates)),
+            ("publishes", c(&self.publishes)),
+            ("pending", c(&self.pending)),
+            ("staleness_us", Json::num(self.staleness_us())),
         ])
     }
 }
@@ -317,6 +387,25 @@ mod tests {
             reps[0].get("ewma_us").unwrap().as_f64(),
             Some(123.5)
         );
+    }
+
+    #[test]
+    fn update_slo_tracks_pending_and_staleness() {
+        let u = UpdateSlo::new();
+        assert_eq!(u.staleness_us(), 0.0);
+        u.record_update(1);
+        u.record_update(2);
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(u.staleness_us() > 0.0, "dirty plane must age");
+        assert_eq!(u.pending.load(Ordering::Relaxed), 2);
+        u.record_publish(1);
+        assert_eq!(u.pending.load(Ordering::Relaxed), 0);
+        assert_eq!(u.staleness_us(), 0.0);
+        let j = u.to_json();
+        assert_eq!(j.get("epoch").unwrap().as_u64(), Some(1));
+        assert_eq!(j.get("updates").unwrap().as_u64(), Some(2));
+        assert_eq!(j.get("publishes").unwrap().as_u64(), Some(1));
+        assert_eq!(j.get("pending").unwrap().as_u64(), Some(0));
     }
 
     #[test]

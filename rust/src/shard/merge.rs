@@ -52,7 +52,26 @@ pub fn merge_scores_into(
     s: &mut MergeScratch,
     out: &mut Vec<f32>,
 ) -> Result<(), String> {
+    merge_scores_into_with(head, plan, partials, batch, &head.alpha_sums,
+                           s, out)
+}
+
+/// [`merge_scores_into`] with caller-supplied per-class debias terms —
+/// the live-update entry point: a mutating plane moves `alpha_sums` with
+/// the counters, so the merge reads them from a pinned snapshot instead
+/// of the (frozen) head.  With `&head.alpha_sums` it IS
+/// `merge_scores_into`.
+pub fn merge_scores_into_with(
+    head: &ShardHead,
+    plan: &ShardPlan,
+    partials: &[Vec<f32>],
+    batch: usize,
+    alpha_sums: &[f32],
+    s: &mut MergeScratch,
+    out: &mut Vec<f32>,
+) -> Result<(), String> {
     let c_n = head.n_classes;
+    debug_assert_eq!(alpha_sums.len(), c_n);
     if partials.len() != plan.n_shards() {
         return Err(format!(
             "merge needs one mean matrix per shard: got {}, plan has {} \
@@ -94,7 +113,7 @@ pub fn merge_scores_into(
             debug_assert_eq!(gi_global, g);
             let est = median_in_place(&mut s.gm);
             out[bq * c_n + c] = if head.debias {
-                (est - head.alpha_sums[c] / r) / (1.0 - 1.0 / r)
+                (est - alpha_sums[c] / r) / (1.0 - 1.0 / r)
             } else {
                 est
             };

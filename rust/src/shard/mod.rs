@@ -74,6 +74,37 @@
 //! `tests/remote_shard.rs` alongside the fault-injection harness
 //! (kill / stall / restart — every accepted request gets exactly one
 //! response, errors name the dead shard, the lane recovers).
+//!
+//! # Live updates on the shard plane
+//!
+//! A sketch is a set of count arrays, so mutation is addition: the
+//! `update` verb folds a weighted (projected-space) point into the
+//! counters, a delete is the same fold with `-α`.  Each shard wraps
+//! its counter slice in a double-buffered
+//! [`crate::sketch::epoch::CounterPlane`]: queries pin an epoch and
+//! read a consistent snapshot, updates accumulate in the shadow buffer
+//! and become visible at a **publish** (explicit, or forced when the
+//! backlog reaches [`crate::sketch::epoch::MAX_PENDING`] — the
+//! per-shard bounded-staleness guarantee, surfaced as
+//! `update.staleness_us`/`update.pending` in the `stats` verb).
+//! Because each shard applies the same per-row column fold the
+//! monolithic build would ([`SketchShard::delta_cols`] uses the global
+//! row salt), a live shard plane stays the exact carve of the
+//! monolithic plane — N streamed updates rebuild the single-pass
+//! sketch bit-for-bit (locked by `tests/live_update.rs`).
+//!
+//! Remotely, the coordinator **broadcasts** each update to every
+//! replica of every shard and requires at least one ack per shard.
+//! The shard's hello carries `seq`, its applied-update count: a
+//! replica that missed updates (restarted from the on-disk file, or
+//! lagged past a broadcast) FAILS the reintegration handshake instead
+//! of silently serving an older history — restart such a replica from
+//! current state.  The shard server publishes its plane before every
+//! means request, so remote queries always read the latest acked
+//! update (the per-connection FIFO makes that read-your-writes).  The
+//! merge debias reads per-class Σα from the live plane snapshot
+//! ([`merge_scores_into_with`]), which the coordinator mirrors in
+//! lock-step with its broadcasts.
 
 pub mod merge;
 pub mod plan;
@@ -83,7 +114,7 @@ pub mod serde;
 #[allow(clippy::module_inception)]
 pub mod shard;
 
-pub use merge::{merge_scores_into, MergeScratch};
+pub use merge::{merge_scores_into, merge_scores_into_with, MergeScratch};
 pub use plan::{ShardPlan, ShardSpan};
 pub use serde::LoadedShard;
 pub use shard::{ShardScratch, SketchShard};

@@ -17,6 +17,15 @@
 //!     `{"id": N, "g": G_s, "means": [B·G_s·C floats], "us": ...}` —
 //!     one projected batch in, complete group means out, in the same
 //!     flat row-major matrix framing the in-process kernels use.
+//!   - `{"id": N, "shard": "update", "x": [p floats], "alpha": A,
+//!     "class": C, "publish": B}` →
+//!     `{"id": N, "epoch": E, "seq": S, "pending": P, "us": ...}` —
+//!     one live mutation folded into the shard's epoch-versioned
+//!     counter plane ([`crate::sketch::epoch`]).  The server publishes
+//!     pending deltas before every means answer, so a query framed
+//!     after an update ack can never observe pre-update counters; the
+//!     hello's `seq` (applied-update count) is the reintegration fence
+//!     — a replica that missed an update can never re-enter the set.
 //!   f32 values round-trip the JSON framing bitwise (shortest-f64
 //!   decimal both ways), which is what keeps the remote lane
 //!   bit-identical to the local one.  Non-finite floats have no JSON
@@ -70,7 +79,9 @@ use crate::coordinator::net::sys::{
 };
 use crate::coordinator::net::{CompletionSender, LineHandler};
 use crate::coordinator::protocol::{extract_id, Response};
-use crate::metrics::slo::{histogram_json, LaneSlo, RemoteShardStats};
+use crate::metrics::slo::{histogram_json, LaneSlo, RemoteShardStats,
+                          UpdateSlo};
+use crate::sketch::epoch::{CounterPlane, MAX_PENDING};
 use crate::util::json::{self, Json};
 use crate::util::rng::SplitMix64;
 use anyhow::{anyhow, Context as _};
@@ -100,6 +111,9 @@ pub enum ShardCall {
     /// Report the shard's serve counters (requests, errors, kernel
     /// latency quantiles).
     Stats,
+    /// Fold one weighted point into the shard's live counter plane
+    /// (negative weight = deletion; `publish` forces an epoch flip).
+    Update { x: Vec<f32>, alpha: f32, class: usize, publish: bool },
 }
 
 /// The handshake payload: everything the coordinator needs to project,
@@ -110,6 +124,10 @@ pub struct ShardHello {
     pub shard_index: usize,
     pub n_shards: usize,
     pub span: ShardSpan,
+    /// Applied live updates (the reintegration fence — a replica must
+    /// report EXACTLY the count the set has broadcast to re-enter).
+    /// 0 for a freshly loaded shard.
+    pub seq: u64,
 }
 
 fn f32_arr(v: &[f32]) -> Json {
@@ -165,6 +183,48 @@ pub fn means_request_line(id: u64, batch: usize, proj_t: &[f32])
     .to_string()
 }
 
+/// One live mutation: fold `alpha · φ(x)` into the shard's counter
+/// plane (negative `alpha` = deletion).  `x` is in PROJECTED space
+/// (`p` coordinates) — projection happens once at the coordinator,
+/// exactly like the means path.
+pub fn update_request_line(
+    id: u64,
+    x: &[f32],
+    alpha: f32,
+    class: usize,
+    publish: bool,
+) -> String {
+    json::obj(vec![
+        ("id", Json::from_u64(id)),
+        ("shard", Json::Str("update".into())),
+        ("x", f32_arr(x)),
+        ("alpha", Json::num_f32(alpha)),
+        ("class", Json::from_u64(class as u64)),
+        ("publish", Json::Bool(publish)),
+    ])
+    .to_string()
+}
+
+/// The update acknowledgment: the plane's published epoch, the
+/// server's applied-update count (the reintegration fence value), and
+/// the still-unpublished delta count after this apply.
+pub fn update_ack_line(
+    id: u64,
+    epoch: u64,
+    seq: u64,
+    pending: u64,
+    us: f64,
+) -> String {
+    json::obj(vec![
+        ("id", Json::from_u64(id)),
+        ("epoch", Json::from_u64(epoch)),
+        ("seq", Json::from_u64(seq)),
+        ("pending", Json::from_u64(pending)),
+        ("us", Json::num(us)),
+    ])
+    .to_string()
+}
+
 pub fn parse_shard_request(line: &str) -> Result<ShardRequest, String> {
     let j = json::parse(line)?;
     let id = j
@@ -175,7 +235,8 @@ pub fn parse_shard_request(line: &str) -> Result<ShardRequest, String> {
         .get("shard")
         .and_then(|v| v.as_str())
         .ok_or(
-            "missing shard op (want \"hello\", \"means\", or \"stats\")",
+            "missing shard op (want \"hello\", \"means\", \"update\", \
+             or \"stats\")",
         )?;
     match op {
         "hello" => Ok(ShardRequest { id, call: ShardCall::Hello }),
@@ -195,6 +256,31 @@ pub fn parse_shard_request(line: &str) -> Result<ShardRequest, String> {
             Ok(ShardRequest {
                 id,
                 call: ShardCall::Means { batch, proj_t },
+            })
+        }
+        "update" => {
+            let x = parse_f32_arr(j.get("x").ok_or("missing x")?, "x")?;
+            let alpha = match j.get("alpha").and_then(|v| v.as_f64()) {
+                Some(v) if (v as f32).is_finite() => v as f32,
+                Some(_) => {
+                    return Err("alpha is not a finite f32".into())
+                }
+                None => return Err("missing/invalid alpha".into()),
+            };
+            let class = match j.get("class") {
+                None => 0,
+                Some(v) => {
+                    v.as_u64().ok_or("invalid class")? as usize
+                }
+            };
+            let publish = match j.get("publish") {
+                None => false,
+                Some(Json::Bool(b)) => *b,
+                Some(_) => return Err("publish must be a bool".into()),
+            };
+            Ok(ShardRequest {
+                id,
+                call: ShardCall::Update { x, alpha, class, publish },
             })
         }
         other => Err(format!("unknown shard op {other:?}")),
@@ -223,6 +309,7 @@ pub fn hello_response_line(id: u64, h: &ShardHello) -> String {
         ("row_end", Json::from_u64(h.span.row_end as u64)),
         ("group_start", Json::from_u64(h.span.group_start as u64)),
         ("group_end", Json::from_u64(h.span.group_end as u64)),
+        ("seq", Json::from_u64(h.seq)),
         ("alpha", f32_arr(&head.alpha_sums)),
         ("a", f32_arr(&head.a)),
     ]);
@@ -309,6 +396,9 @@ pub fn parse_hello(line: &str, want_id: u64)
         row_start: get_u("row_start")?,
         row_end: get_u("row_end")?,
     };
+    // Absent on pre-update servers: a shard that has never applied a
+    // live mutation reports 0 either way.
+    let seq = h.get("seq").and_then(|v| v.as_u64()).unwrap_or(0);
     let shard_index = get_u("index")?;
     let n_shards = get_u("shards")?;
     if n_shards == 0 || shard_index >= n_shards {
@@ -345,6 +435,7 @@ pub fn parse_hello(line: &str, want_id: u64)
         shard_index,
         n_shards,
         span,
+        seq,
     })
 }
 
@@ -434,6 +525,7 @@ impl ShardService {
                 row_start: shard.row_start,
                 row_end: shard.row_end,
             },
+            seq: 0,
             head,
         };
         let (tx, rx) = channel::<ShardJob>();
@@ -445,14 +537,23 @@ impl ShardService {
                 // Worker-local serve counters: only this thread
                 // writes, the `stats` op reads them back out.
                 let slo = LaneSlo::new();
+                // The live counter plane over this shard's carve.  The
+                // worker is the plane's ONLY writer; `hello` mirrors
+                // the plane's Σα fold and applied-update count so every
+                // handshake describes the live state.
+                let plane = shard.plane(&hello.head.alpha_sums);
+                let mut hello = hello;
+                let mut up_codes: Vec<i32> = Vec::new();
+                let mut up_cols: Vec<u32> = Vec::new();
                 while let Ok(job) = rx.recv() {
                     // The worker is immortal: a panicking kernel is
                     // caught (the in-flight job's guard answers during
                     // the unwind) and the loop keeps serving.
                     let _ = std::panic::catch_unwind(
                         std::panic::AssertUnwindSafe(|| {
-                            run_job(&hello, &shard, &mut scratch,
-                                    &mut out, &slo, job);
+                            run_job(&mut hello, &shard, &plane,
+                                    &mut up_codes, &mut up_cols,
+                                    &mut scratch, &mut out, &slo, job);
                         }),
                     );
                 }
@@ -477,9 +578,13 @@ fn answer_err(slo: &LaneSlo, guard: LineGuard, msg: String) {
     guard.send_err(msg);
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_job(
-    hello: &ShardHello,
+    hello: &mut ShardHello,
     shard: &SketchShard,
+    plane: &CounterPlane,
+    up_codes: &mut Vec<i32>,
+    up_cols: &mut Vec<u32>,
     scratch: &mut ShardScratch,
     out: &mut Vec<f32>,
     slo: &LaneSlo,
@@ -528,6 +633,11 @@ fn run_job(
                 ("shards", Json::from_u64(hello.n_shards as u64)),
                 ("served", Json::from_u64(slo.ok_count())),
                 ("errors", Json::from_u64(slo.error_count())),
+                ("updates", Json::from_u64(hello.seq)),
+                ("epoch", Json::from_u64(plane.epoch())),
+                ("pending", Json::from_u64(
+                    plane.stats().pending.load(Ordering::Relaxed),
+                )),
                 ("kernel", histogram_json(&slo.latency)),
             ]);
             guard.send_line(
@@ -567,7 +677,15 @@ fn run_job(
                 ));
             }
             let t0 = Instant::now();
-            shard.partial_means_batch(&proj_t, batch, scratch, out);
+            // Read-your-writes across the wire: every connection's
+            // lines funnel through this one worker in arrival order,
+            // so publishing here makes any update framed before this
+            // request visible (a no-op when the plane is clean).
+            plane.publish();
+            let pin = plane.pin();
+            shard.partial_means_batch_on(&pin.counters, &proj_t, batch,
+                                         scratch, out);
+            drop(pin);
             let dur = t0.elapsed();
             let us = dur.as_nanos() as f64 / 1e3;
             let line = means_response_line(
@@ -588,6 +706,43 @@ fn run_job(
                     line.len()
                 ));
             }
+            slo.record_ok(dur);
+            guard.send_line(line);
+        }
+        ShardCall::Update { x, alpha, class, publish } => {
+            let p = hello.head.p;
+            if x.len() != p {
+                return answer_err(slo, guard, format!(
+                    "update x has {} values, want p = {p}",
+                    x.len()
+                ));
+            }
+            if class >= hello.head.n_classes {
+                return answer_err(slo, guard, format!(
+                    "update class {class} out of C = {}",
+                    hello.head.n_classes
+                ));
+            }
+            let t0 = Instant::now();
+            shard.delta_cols(&x, up_codes, up_cols);
+            let pending = plane.apply(up_cols, class, alpha);
+            // Mirror the plane's Σα fold (same order, same f32 adds)
+            // and the applied-update count into the handshake payload:
+            // a reconnecting coordinator validates against the LIVE
+            // state, and `seq` is the reintegration fence.
+            hello.head.alpha_sums[class] += alpha;
+            hello.seq += 1;
+            if publish || pending >= MAX_PENDING {
+                plane.publish();
+            }
+            let dur = t0.elapsed();
+            let line = update_ack_line(
+                req.id,
+                plane.epoch(),
+                hello.seq,
+                plane.stats().pending.load(Ordering::Relaxed),
+                dur.as_nanos() as f64 / 1e3,
+            );
             slo.record_ok(dur);
             guard.send_line(line);
         }
@@ -988,6 +1143,7 @@ impl ClientIo {
 
 /// Hold one shard process to the set's standard — the over-the-wire
 /// twin of the RSFS set loader's checks.
+#[allow(clippy::too_many_arguments)]
 fn validate_hello(
     hello: &ShardHello,
     s: usize,
@@ -995,6 +1151,7 @@ fn validate_hello(
     head: &ShardHead,
     plan: &ShardPlan,
     n: usize,
+    want_seq: u64,
 ) -> anyhow::Result<()> {
     anyhow::ensure!(
         hello.shard_index == s,
@@ -1018,6 +1175,17 @@ fn validate_hello(
         "shard {s} ({addr}) covers {:?}, the plan expects {:?}",
         hello.span,
         want
+    );
+    // The live-mutation fence: a replica that missed (or replayed) a
+    // broadcast update holds different counters than the set, even
+    // though its head still validates — the applied-update count is
+    // the cheap proof of an identical mutation history.
+    anyhow::ensure!(
+        hello.seq == want_seq,
+        "shard {s} ({addr}) has applied {} live updates, the set has \
+         broadcast {want_seq} — a replica with a divergent mutation \
+         history cannot re-enter; restart it from current state",
+        hello.seq
     );
     Ok(())
 }
@@ -1053,6 +1221,11 @@ pub struct RemoteShardSet {
     /// adaptive hedge deadline.  `0.0` = no samples yet.
     ewma_us: Vec<f64>,
     stats: Arc<RemoteShardStats>,
+    /// Updates broadcast through this set — the reintegration fence
+    /// value replicas are validated against (see `validate_hello`).
+    update_seq: u64,
+    /// Mutation accounting for the coordinator's `stats` verb.
+    update_slo: Arc<UpdateSlo>,
 }
 
 impl RemoteShardSet {
@@ -1138,7 +1311,8 @@ impl RemoteShardSet {
                 if r == 0 { first.clone() } else { io.dial(r)? };
             let s = io.replicas[r].shard;
             let addr = io.replicas[r].addr.clone();
-            validate_hello(&hello, s, &addr, &head, &plan, n)?;
+            validate_hello(&hello, s, &addr, &head, &plan, n,
+                           first.seq)?;
         }
         Ok(RemoteShardSet {
             head,
@@ -1148,6 +1322,10 @@ impl RemoteShardSet {
             have: vec![false; n],
             ewma_us: vec![0.0; n],
             stats,
+            // Adopt the set's applied-update count (non-zero when
+            // connecting to servers that already took updates).
+            update_seq: first.seq,
+            update_slo: Arc::new(UpdateSlo::new()),
         })
     }
 
@@ -1166,6 +1344,12 @@ impl RemoteShardSet {
     /// The live observability surface (shared with the `stats` verb).
     pub fn stats(&self) -> Arc<RemoteShardStats> {
         Arc::clone(&self.stats)
+    }
+
+    /// Mutation accounting for this set (the remote lane's `update`
+    /// SLO surface).
+    pub fn update_slo(&self) -> Arc<UpdateSlo> {
+        Arc::clone(&self.update_slo)
     }
 
     /// Quarantine replica `r` (backoff the dial clock) and count it.
@@ -1193,6 +1377,7 @@ impl RemoteShardSet {
         let addr = self.io.replicas[r].addr.clone();
         if let Err(e) = validate_hello(
             &hello, s, &addr, &self.head, &self.plan, self.groups.len(),
+            self.update_seq,
         ) {
             self.quarantine(r, "failed handshake validation");
             return Err(e);
@@ -1345,6 +1530,286 @@ impl RemoteShardSet {
              or quarantined)",
             self.groups[s].len()
         )
+    }
+
+    /// Queue the already-serialized update `line` on replica `r`; on
+    /// a successful write the exchange is tracked in `sent_to`.  A
+    /// write that tears the connection down quarantines the replica
+    /// instead (the seq fence keeps it out until restored).
+    fn send_update_to(
+        &mut self,
+        r: usize,
+        id: u64,
+        line: &str,
+        sent_to: &mut Vec<usize>,
+    ) {
+        self.io.queue_to(r, line);
+        if self.io.replicas[r].conn.is_some() {
+            self.io.replicas[r].pending.push_back(PendingReq {
+                id,
+                sent: Instant::now(),
+                abandoned: false,
+            });
+            self.stats.replicas[r].sent.fetch_add(1, Ordering::Relaxed);
+            sent_to.push(r);
+        } else {
+            let why = self.io.replicas[r]
+                .dead
+                .clone()
+                .unwrap_or_else(|| "connection broke while writing"
+                    .to_string());
+            self.quarantine(r, &why);
+        }
+    }
+
+    /// Interpret one inbox line from replica `r` while awaiting acks
+    /// for update `want_id`.  The first valid ack per shard wins;
+    /// stale ids (late answers to earlier exchanges) are discarded;
+    /// an error answer, a divergent seq, or a malformed ack
+    /// quarantines the replica — an update a replica cannot apply in
+    /// lockstep means it no longer matches the set.
+    fn consume_update_ack(
+        &mut self,
+        r: usize,
+        line: &str,
+        want_id: u64,
+        acked: &mut [bool],
+        epoch_min: &mut u64,
+        pending_max: &mut u64,
+    ) {
+        let s = self.io.replicas[r].shard;
+        let j = match json::parse(line) {
+            Ok(j) => j,
+            Err(_) => {
+                self.quarantine(r, "sent an unparseable line");
+                return;
+            }
+        };
+        match j.get("id").and_then(|v| v.as_u64()) {
+            Some(x) if x < want_id => {
+                self.take_pending(r, x);
+                self.stats.shards[s]
+                    .discarded
+                    .fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+            Some(x) if x == want_id => {}
+            _ => {
+                self.quarantine(r, "answered with an unknown request id");
+                return;
+            }
+        }
+        let entry = self.take_pending(r, want_id);
+        if entry.map_or(true, |p| p.abandoned) {
+            self.stats.shards[s]
+                .discarded
+                .fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        if j.get("error").and_then(|v| v.as_str()).is_some() {
+            self.quarantine(r, "rejected a live update");
+            return;
+        }
+        let parsed = (
+            j.get("epoch").and_then(|v| v.as_u64()),
+            j.get("seq").and_then(|v| v.as_u64()),
+            j.get("pending").and_then(|v| v.as_u64()),
+        );
+        let (epoch, seq, pending) = match parsed {
+            (Some(e), Some(q), Some(p)) => (e, q, p),
+            _ => {
+                self.quarantine(r, "sent a malformed update ack");
+                return;
+            }
+        };
+        if seq != self.update_seq {
+            // The replica applied a different number of updates than
+            // the set has broadcast: its counters diverged.
+            self.quarantine(r, "acked an update out of sequence");
+            return;
+        }
+        self.stats.replicas[r]
+            .answered
+            .fetch_add(1, Ordering::Relaxed);
+        if !acked[s] {
+            acked[s] = true;
+            *epoch_min = (*epoch_min).min(epoch);
+            *pending_max = (*pending_max).max(pending);
+        }
+    }
+
+    /// Broadcast ONE live mutation to every connected replica of every
+    /// shard and wait until at least one replica of EACH shard acks —
+    /// then the update is live in the serving set, and because servers
+    /// publish before every means answer, any gather issued after this
+    /// returns reflects it.  Updates are NOT load-balanced: every
+    /// replica must fold every mutation to stay interchangeable, and a
+    /// replica that misses one (down, dead, or too slow) is fenced out
+    /// at reintegration by the hello seq check, so a partial broadcast
+    /// can never serve stale counters.
+    ///
+    /// The local head's Σα fold and the update seq advance with the
+    /// broadcast (same f32 accumulation order as every shard plane),
+    /// keeping `merge_scores_into`'s debias — and `heads_identical` at
+    /// future handshakes — in lockstep with the remote counters.
+    ///
+    /// Returns the conservative `(min epoch, max pending)` over each
+    /// shard's first ack.
+    pub fn broadcast_update(
+        &mut self,
+        x: &[f32],
+        alpha: f32,
+        class: usize,
+        publish: bool,
+    ) -> anyhow::Result<(u64, u64)> {
+        anyhow::ensure!(
+            x.len() == self.head.p,
+            "update x has {} values, want p = {}",
+            x.len(),
+            self.head.p
+        );
+        anyhow::ensure!(
+            class < self.head.n_classes,
+            "update class {class} out of C = {}",
+            self.head.n_classes
+        );
+        anyhow::ensure!(alpha.is_finite(),
+                        "update weight is not finite");
+        let n = self.n_shards();
+        self.io.seq += 1;
+        let id = self.io.seq;
+        let line = update_request_line(id, x, alpha, class, publish);
+        anyhow::ensure!(
+            line.len() <= MAX_LINE_BYTES,
+            "update line ({} bytes for p = {} floats) exceeds the \
+             {MAX_LINE_BYTES}-byte shard-plane line cap",
+            line.len(),
+            self.head.p
+        );
+        let mut sent: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for s in 0..n {
+            for gi in 0..self.groups[s].len() {
+                let r = self.groups[s][gi];
+                if self.io.replicas[r].conn.is_some() {
+                    self.send_update_to(r, id, &line, &mut sent[s]);
+                }
+            }
+            if sent[s].is_empty() {
+                // Nobody connected: probe quarantined replicas whose
+                // backoff expired (freshly re-validated, so a stale
+                // process cannot take the update and "re-enter").
+                let now = Instant::now();
+                let cands: Vec<usize> = self.groups[s]
+                    .iter()
+                    .copied()
+                    .filter(|&r| {
+                        self.io.replicas[r].conn.is_none()
+                            && now >= self.io.replicas[r].retry_at
+                    })
+                    .collect();
+                for r in cands {
+                    self.stats.shards[s]
+                        .reconnects
+                        .fetch_add(1, Ordering::Relaxed);
+                    if self.dial_validated(r).is_ok() {
+                        self.send_update_to(r, id, &line, &mut sent[s]);
+                        if !sent[s].is_empty() {
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        // The mirror moves with the broadcast, not with the acks:
+        // every line above either reached a replica or fenced it, and
+        // the merge's debias must track the counters acked replicas
+        // now hold.
+        self.head.alpha_sums[class] += alpha;
+        self.update_seq += 1;
+        let mut acked = vec![false; n];
+        let mut epoch_min = u64::MAX;
+        let mut pending_max = 0u64;
+        let deadline = Instant::now() + self.io.opts.timeout;
+        loop {
+            for r in 0..self.io.replicas.len() {
+                while let Some(resp) =
+                    self.io.replicas[r].inbox.pop_front()
+                {
+                    self.consume_update_ack(
+                        r, &resp, id, &mut acked, &mut epoch_min,
+                        &mut pending_max,
+                    );
+                }
+            }
+            // A sender that died unacked will never answer: quarantine
+            // it and strike it from the waitlist.
+            for s in 0..n {
+                let mut gi = 0;
+                while gi < sent[s].len() {
+                    let r = sent[s][gi];
+                    if self.io.replicas[r].conn.is_none() {
+                        let why = self.io.replicas[r]
+                            .dead
+                            .clone()
+                            .unwrap_or_else(|| {
+                                "connection lost".to_string()
+                            });
+                        self.quarantine(r, &why);
+                        sent[s].remove(gi);
+                    } else {
+                        gi += 1;
+                    }
+                }
+            }
+            if acked.iter().all(|&a| a) {
+                break;
+            }
+            if let Some(s) =
+                (0..n).find(|&s| !acked[s] && sent[s].is_empty())
+            {
+                self.stats.shards[s]
+                    .errors
+                    .fetch_add(1, Ordering::Relaxed);
+                anyhow::bail!(
+                    "shard {s}: no replica acknowledged live update {} \
+                     — the broadcast is partial; acked shards hold the \
+                     new counters and unreachable replicas stay fenced \
+                     until restored with current state",
+                    self.update_seq
+                );
+            }
+            if Instant::now() >= deadline {
+                for s in 0..n {
+                    if acked[s] {
+                        continue;
+                    }
+                    for gi in 0..sent[s].len() {
+                        let r = sent[s][gi];
+                        self.mark_abandoned(r, id);
+                        self.quarantine(r, "update ack timed out");
+                    }
+                    self.stats.shards[s]
+                        .errors
+                        .fetch_add(1, Ordering::Relaxed);
+                }
+                anyhow::bail!(
+                    "live update {}: a shard did not ack within {:?}",
+                    self.update_seq,
+                    self.io.opts.timeout
+                );
+            }
+            self.io
+                .pump(wait_ms_until(deadline))
+                .map_err(|e| anyhow!("shard client epoll wait: {e}"))?;
+        }
+        let epoch = if epoch_min == u64::MAX { 0 } else { epoch_min };
+        self.update_slo.record_update(pending_max);
+        if publish {
+            self.update_slo.record_publish(epoch);
+        } else {
+            self.update_slo.epoch.store(epoch, Ordering::Relaxed);
+        }
+        Ok((epoch, pending_max))
     }
 
     /// Scatter ONE projected batch (to the least-loaded healthy
@@ -1886,6 +2351,7 @@ mod tests {
                 row_start: 12,
                 row_end: 24,
             },
+            seq: 0,
         }
     }
 
@@ -1899,6 +2365,7 @@ mod tests {
         assert_eq!(parsed.shard_index, 1);
         assert_eq!(parsed.n_shards, 2);
         assert_eq!(parsed.span, h.span);
+        assert_eq!(parsed.seq, 0);
         // Wrong id must not be accepted.
         assert!(parse_hello(&line, 8).is_err());
     }
@@ -1995,6 +2462,95 @@ mod tests {
             parse_shard_request(r#"{"id":4,"shard":"stats"}"#).unwrap();
         assert_eq!(req.id, 4);
         assert!(matches!(req.call, ShardCall::Stats));
+    }
+
+    #[test]
+    fn update_request_roundtrips_bitwise() {
+        let x = vec![0.1f32, -0.0, 1.0 / 3.0];
+        let line = update_request_line(11, &x, -2.5, 3, true);
+        let req = parse_shard_request(&line).unwrap();
+        assert_eq!(req.id, 11);
+        match req.call {
+            ShardCall::Update { x: gx, alpha, class, publish } => {
+                for (a, b) in gx.iter().zip(&x) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+                assert_eq!(alpha.to_bits(), (-2.5f32).to_bits());
+                assert_eq!(class, 3);
+                assert!(publish);
+            }
+            _ => panic!("parsed as the wrong call"),
+        }
+        // class and publish default when omitted.
+        let req = parse_shard_request(
+            r#"{"id":2,"shard":"update","x":[1.0],"alpha":0.5}"#,
+        )
+        .unwrap();
+        match req.call {
+            ShardCall::Update { class, publish, .. } => {
+                assert_eq!(class, 0);
+                assert!(!publish);
+            }
+            _ => panic!("parsed as the wrong call"),
+        }
+    }
+
+    #[test]
+    fn update_request_rejections() {
+        // Missing alpha.
+        assert!(parse_shard_request(
+            r#"{"id":1,"shard":"update","x":[1.0]}"#
+        )
+        .is_err());
+        // Decimal-overflow alpha (parses to inf) is non-finite.
+        assert!(parse_shard_request(
+            r#"{"id":1,"shard":"update","x":[1.0],"alpha":1e999}"#
+        )
+        .is_err());
+        // NaN in x serializes as null → rejected.
+        let line = update_request_line(1, &[f32::NAN], 1.0, 0, false);
+        assert!(parse_shard_request(&line).is_err());
+        // publish must be a bool.
+        assert!(parse_shard_request(
+            r#"{"id":1,"shard":"update","x":[1.0],"alpha":1.0,"publish":1}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn update_ack_line_shape() {
+        let line = update_ack_line(5, 3, 17, 2, 9.5);
+        let j = json::parse(&line).unwrap();
+        assert_eq!(j.get("id").and_then(|v| v.as_u64()), Some(5));
+        assert_eq!(j.get("epoch").and_then(|v| v.as_u64()), Some(3));
+        assert_eq!(j.get("seq").and_then(|v| v.as_u64()), Some(17));
+        assert_eq!(j.get("pending").and_then(|v| v.as_u64()), Some(2));
+    }
+
+    #[test]
+    fn hello_seq_roundtrips_and_fences_reintegration() {
+        let mut h = sample_hello();
+        h.seq = 42;
+        let parsed =
+            parse_hello(&hello_response_line(1, &h), 1).unwrap();
+        assert_eq!(parsed.seq, 42);
+        // A hello with no seq field (a pre-update server) reads as 0.
+        let old = sample_hello();
+        let stripped = hello_response_line(2, &old)
+            .replace("\"seq\":0,", "");
+        assert_eq!(parse_hello(&stripped, 2).unwrap().seq, 0);
+        // The fence: a replica whose applied-update count disagrees
+        // with the set's broadcast count fails validation even though
+        // its head still matches.
+        let plan = ShardPlan::new(
+            old.head.rows, old.head.groups, old.head.use_mom, 2,
+        );
+        validate_hello(&old, 1, "x", &old.head, &plan, 2, 0).unwrap();
+        let err = validate_hello(&old, 1, "x", &old.head, &plan, 2, 3)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("live updates"), "{err}");
+        validate_hello(&h, 1, "x", &h.head, &plan, 2, 42).unwrap();
     }
 
     #[test]

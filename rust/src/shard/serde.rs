@@ -228,6 +228,49 @@ pub fn load_shard_file<P: AsRef<Path>>(path: P) -> Result<LoadedShard> {
         .with_context(|| format!("parse RSFS {:?}", path.as_ref()))
 }
 
+/// Load a monolithic sketch file as a [`ShardedSketch`] (RSSK or RSFM,
+/// detected by magic), split `n_shards` ways.  Shared by the `serve`
+/// CLI and the coordinator's hot-swap path — both must hold a swapped
+/// model to exactly the load-time validators.
+pub fn load_sharded(path: &str, n_shards: usize) -> Result<ShardedSketch> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("read {path}"))?;
+    if bytes.len() >= 4 && &bytes[..4] == b"RSSK" {
+        let sk = crate::sketch::RaceSketch::from_bytes(&bytes)
+            .with_context(|| format!("parse RSSK {path}"))?;
+        Ok(ShardedSketch::from_race(&sk, n_shards))
+    } else if bytes.len() >= 4 && &bytes[..4] == b"RSFM" {
+        let fs = crate::sketch::FusedMultiSketch::from_bytes(&bytes)
+            .with_context(|| format!("parse RSFM {path}"))?;
+        Ok(ShardedSketch::from_fused(&fs, n_shards))
+    } else {
+        bail!("{path}: neither an RSSK nor an RSFM file")
+    }
+}
+
+/// Load the RSFS shard set `PREFIX.shard{0..}.rsfs` (the files
+/// `shard-sketch --out PREFIX` writes).  The loader re-validates the
+/// whole set (seeds, ranges, indices) against the recomputed plan.
+pub fn load_shard_set(prefix: &str) -> Result<ShardedSketch> {
+    let mut paths = Vec::new();
+    loop {
+        let p = PathBuf::from(format!(
+            "{prefix}.shard{}.rsfs",
+            paths.len()
+        ));
+        if !p.exists() {
+            break;
+        }
+        paths.push(p);
+    }
+    ensure!(
+        !paths.is_empty(),
+        "no shard files match {prefix}.shard*.rsfs"
+    );
+    ShardedSketch::load_shards(&paths)
+        .with_context(|| format!("load shard set {prefix}.shard*.rsfs"))
+}
+
 impl ShardedSketch {
     /// Serialize shard `s` as an RSFS file.
     pub fn shard_to_bytes(&self, s: usize) -> Vec<u8> {

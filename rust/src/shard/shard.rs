@@ -27,7 +27,7 @@
 //! means are bit-for-bit the monolithic group means.  The median +
 //! debias happen at merge ([`super::merge`]).
 
-use crate::lsh::{concat, SparseL2Lsh};
+use crate::lsh::{concat, LshFamily, SparseL2Lsh};
 
 /// Reusable per-worker scratch for shard kernels (zero allocation once
 /// warm; lives in `coordinator::pool::WorkerScratch`).
@@ -150,6 +150,34 @@ impl SketchShard {
         &self.data
     }
 
+    /// Hash one update point `x` (projected space) to this shard's
+    /// per-local-row column indices — the sliced family's codes equal
+    /// the monolithic family's for these rows, and the global row salt
+    /// (`row_start`) makes the rehash land exactly where the monolithic
+    /// build writes, so a shard plane fed these columns stays the exact
+    /// carve of the monolithic plane.
+    pub fn delta_cols(&self, x: &[f32], codes: &mut Vec<i32>,
+                      out: &mut Vec<u32>) {
+        let lr = self.local_rows();
+        codes.resize(lr * self.k_per_row as usize, 0);
+        out.resize(lr, 0);
+        self.lsh.hash_into(x, codes);
+        concat::rehash_all_rows(codes, self.k_per_row as usize,
+                                self.cols as u32, self.row_start as u32,
+                                out);
+    }
+
+    /// Wrap this shard's counter slice in a live
+    /// [`crate::sketch::epoch::CounterPlane`].  NOTE: the plane's
+    /// per-class `alpha_sums` are the FULL model's (every shard carries
+    /// the complete debias terms — the merge debiases once, globally),
+    /// so the caller supplies them.
+    pub fn plane(&self, alpha_sums: &[f32])
+        -> crate::sketch::epoch::CounterPlane {
+        crate::sketch::epoch::CounterPlane::new(&self.data, alpha_sums,
+                                                self.cols, self.n_classes)
+    }
+
     /// The shard kernel: complete group means for every query of the
     /// batch over this shard's groups.
     ///
@@ -168,6 +196,22 @@ impl SketchShard {
         s: &mut ShardScratch,
         out: &mut Vec<f32>,
     ) {
+        self.partial_means_batch_on(&self.data, proj_t, batch, s, out)
+    }
+
+    /// The shard kernel against caller-supplied counters (the carved
+    /// slice, or a pinned [`crate::sketch::epoch::CounterPlane`] snapshot
+    /// of it — same `(local_rows, cols, classes)` layout).  With the
+    /// built counters it IS [`SketchShard::partial_means_batch`].
+    pub fn partial_means_batch_on(
+        &self,
+        data: &[f32],
+        proj_t: &[f32],
+        batch: usize,
+        s: &mut ShardScratch,
+        out: &mut Vec<f32>,
+    ) {
+        debug_assert_eq!(data.len(), self.data.len());
         let lr = self.local_rows();
         let lg = self.local_groups();
         let c_n = self.n_classes;
@@ -202,7 +246,7 @@ impl SketchShard {
                     let ll = l - self.row_start;
                     let col = s.cols[ll * batch + bq] as usize;
                     let base = (ll * self.cols + col) * c_n;
-                    let src = &self.data[base..base + c_n];
+                    let src = &data[base..base + c_n];
                     for (a, &v) in s.class_acc.iter_mut().zip(src) {
                         *a += v;
                     }

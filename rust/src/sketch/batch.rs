@@ -101,13 +101,16 @@ impl RaceSketch {
                                  self.cols as u32, batch, &mut s.cols);
     }
 
-    /// Mean over the strided `(L, B)` column layout for query `bq`.
-    /// Mirrors the scalar `mean` add-for-add.
-    fn mean_strided(&self, cols_t: &[u32], batch: usize, bq: usize) -> f32 {
+    /// Mean over the strided `(L, B)` column layout for query `bq`,
+    /// reading counters from `data` (the built sketch's or a pinned
+    /// [`super::epoch::CounterPlane`] snapshot's — same layout).  Mirrors
+    /// the scalar `mean` add-for-add.
+    fn mean_strided_on(&self, data: &[f32], cols_t: &[u32], batch: usize,
+                       bq: usize) -> f32 {
         let mut acc = 0.0f32;
         for l in 0..self.rows {
             let c = cols_t[l * batch + bq] as usize;
-            acc += self.data[l * self.cols + c];
+            acc += data[l * self.cols + c];
         }
         acc / self.rows as f32
     }
@@ -116,11 +119,11 @@ impl RaceSketch {
     /// Mirrors the scalar `median_of_means` op-for-op (same group
     /// boundaries incl. the remainder-absorbing last group, same
     /// insertion sort, same even/odd median).
-    fn mom_strided(&self, cols_t: &[u32], batch: usize, bq: usize,
-                   gm: &mut [f32]) -> f32 {
+    fn mom_strided_on(&self, data: &[f32], cols_t: &[u32], batch: usize,
+                      bq: usize, gm: &mut [f32]) -> f32 {
         let g = gm.len();
         if self.rows < g {
-            return self.mean_strided(cols_t, batch, bq);
+            return self.mean_strided_on(data, cols_t, batch, bq);
         }
         let m = self.rows / g;
         for (gi, slot) in gm.iter_mut().enumerate() {
@@ -129,27 +132,37 @@ impl RaceSketch {
             let mut acc = 0.0f32;
             for l in start..end {
                 let c = cols_t[l * batch + bq] as usize;
-                acc += self.data[l * self.cols + c];
+                acc += data[l * self.cols + c];
             }
             *slot = acc / (end - start) as f32;
         }
         super::median_in_place(gm)
     }
 
-    /// Stage 4 for one query: gather + estimate + debias.
-    fn estimate_strided(&self, cols_t: &[u32], batch: usize, bq: usize,
-                        gm: &mut [f32]) -> f32 {
+    /// Stage 4 for one query against caller-supplied counters: gather +
+    /// estimate + debias with `alpha_sum` (a live plane's debias term
+    /// moves with updates, so it rides alongside the counters).
+    fn estimate_strided_on(&self, data: &[f32], alpha_sum: f32,
+                           cols_t: &[u32], batch: usize, bq: usize,
+                           gm: &mut [f32]) -> f32 {
         let est = if self.use_mom {
-            self.mom_strided(cols_t, batch, bq, gm)
+            self.mom_strided_on(data, cols_t, batch, bq, gm)
         } else {
-            self.mean_strided(cols_t, batch, bq)
+            self.mean_strided_on(data, cols_t, batch, bq)
         };
         if self.debias {
             let r = self.cols as f32;
-            (est - self.alpha_sum / r) / (1.0 - 1.0 / r)
+            (est - alpha_sum / r) / (1.0 - 1.0 / r)
         } else {
             est
         }
+    }
+
+    /// Stage 4 for one query against the built-in counters.
+    pub(crate) fn estimate_strided(&self, cols_t: &[u32], batch: usize,
+                                   bq: usize, gm: &mut [f32]) -> f32 {
+        self.estimate_strided_on(&self.data, self.alpha_sum, cols_t, batch,
+                                 bq, gm)
     }
 
     /// Batch-major hot path: `queries` is `(B, d)` row-major; returns the
@@ -158,6 +171,17 @@ impl RaceSketch {
     /// row, at a fraction of the memory traffic.
     pub fn query_batch_with<'s>(&self, queries: &[f32],
                                 s: &'s mut BatchScratch) -> &'s [f32] {
+        self.query_batch_on(&self.data, self.alpha_sum, queries, s)
+    }
+
+    /// Batch-major query against caller-supplied counters + debias term —
+    /// the live-update entry point: pass a pinned
+    /// [`super::epoch::CounterPlane`] snapshot (`&pin.counters`,
+    /// `pin.alpha_sums[0]`) and this sketch supplies only the immutable
+    /// geometry.  With the built counters it IS `query_batch_with`.
+    pub fn query_batch_on<'s>(&self, data: &[f32], alpha_sum: f32,
+                              queries: &[f32],
+                              s: &'s mut BatchScratch) -> &'s [f32] {
         assert_eq!(
             queries.len() % self.d,
             0,
@@ -165,6 +189,7 @@ impl RaceSketch {
             queries.len(),
             self.d
         );
+        debug_assert_eq!(data.len(), self.rows * self.cols);
         let batch = queries.len() / self.d;
         self.ensure_batch_scratch(s, batch);
         if batch == 0 {
@@ -173,7 +198,8 @@ impl RaceSketch {
         self.project_batch(queries, batch, s);
         self.hash_batch(batch, s);
         for bq in 0..batch {
-            s.out[bq] = self.estimate_strided(&s.cols, batch, bq, &mut s.gm);
+            s.out[bq] = self.estimate_strided_on(data, alpha_sum, &s.cols,
+                                                 batch, bq, &mut s.gm);
         }
         &s.out
     }
@@ -350,6 +376,58 @@ mod tests {
                     sk.query_with(&queries[bq * 5..(bq + 1) * 5], &mut qs);
                 assert_eq!(got[bq].to_bits(), want.to_bits(), "B={batch}");
             }
+        }
+    }
+
+    #[test]
+    fn query_batch_on_plane_matches_builtin_counters() {
+        // A pinned plane of the built counters must answer bit-identically
+        // to the sketch's own data, and streamed updates through the plane
+        // must equal a rebuild with the extra points appended.
+        let mut rng = SplitMix64::new(55);
+        let kp = random_kp(&mut rng, 6, 4, 18);
+        let sk = RaceSketch::build(&kp, &SketchConfig::default());
+        let queries = random_queries(&mut rng, 9, 6);
+        let plane = sk.plane();
+        let mut bs = BatchScratch::default();
+        let want = sk.query_batch_with(&queries, &mut bs).to_vec();
+        let pin = plane.pin();
+        let got = sk
+            .query_batch_on(&pin.counters, pin.alpha_sums[0], &queries,
+                            &mut bs)
+            .to_vec();
+        drop(pin);
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+        // Stream 5 extra weighted points through the plane, then rebuild
+        // with those points appended; the folds must match bitwise.
+        let extra = 5usize;
+        let mut kp2 = kp.clone();
+        let mut codes = Vec::new();
+        let mut cols = Vec::new();
+        for _ in 0..extra {
+            let x: Vec<f32> =
+                (0..kp.p).map(|_| rng.next_gaussian() as f32).collect();
+            let alpha = 0.25 + rng.next_f32();
+            sk.delta_cols(&x, &mut codes, &mut cols);
+            plane.apply(&cols, 0, alpha);
+            kp2.x.extend_from_slice(&x);
+            kp2.alpha.push(alpha);
+        }
+        kp2.m += extra;
+        plane.publish();
+        let rebuilt = RaceSketch::build(&kp2, &SketchConfig::default());
+        let pin = plane.pin();
+        assert_eq!(pin.counters, rebuilt.counters());
+        assert_eq!(pin.alpha_sums[0].to_bits(), rebuilt.alpha_sum.to_bits());
+        let got = sk
+            .query_batch_on(&pin.counters, pin.alpha_sums[0], &queries,
+                            &mut bs)
+            .to_vec();
+        let want = rebuilt.query_batch_with(&queries, &mut bs).to_vec();
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.to_bits(), w.to_bits());
         }
     }
 

@@ -1,0 +1,339 @@
+//! Double-buffered epoch/RCU counter plane for live sketch mutation.
+//!
+//! A [`CounterPlane`] holds the *mutable* state of a served sketch — the
+//! flat counter array plus the per-class `alpha_sums` — separated from the
+//! immutable geometry (hash family, projection, row/column layout) that
+//! stays inside `RaceSketch` / `FusedMultiSketch` / `SketchShard`.  Two
+//! identical buffers alternate roles:
+//!
+//! * the **live** buffer (`bufs[epoch & 1]`) is what readers pin;
+//! * the **shadow** buffer receives every new delta immediately.
+//!
+//! `apply` writes a delta into the shadow buffer and queues it; `publish`
+//! flips the epoch (new readers now pin what was the shadow), then
+//! write-locks the retired buffer — which blocks until every reader still
+//! pinning the old epoch drops its guard (the RCU grace period) — and
+//! replays the queued deltas there.  Both buffers therefore receive every
+//! delta **exactly once, in arrival order**, so they stay bit-identical:
+//! the f32 accumulation sequence per cell is the same sequence a
+//! single-pass rebuild with the updates appended would produce.  That is
+//! the property the `live_update` suite locks.
+//!
+//! # Consistency contract
+//!
+//! * [`CounterPlane::pin`] returns a snapshot at one epoch: every counter
+//!   and every `alpha_sums` entry reflect exactly the deltas published up
+//!   to that epoch — no torn reads, even while `publish` runs.
+//! * Staleness is bounded: a delta waits unpublished only until (a) the
+//!   caller passes `publish: true`, (b) the pending queue reaches
+//!   [`MAX_PENDING`], or (c) the next query on the owning lane forces a
+//!   publish (read-your-writes in lane FIFO order).  The age of the
+//!   oldest unpublished delta is surfaced as `staleness_us` via
+//!   [`UpdateSlo`].
+//!
+//! # Index layout
+//!
+//! One unified layout covers every counter consumer in the repo:
+//! `counters[(l*cols + c) * n_classes + class]`.  A scalar `RaceSketch`
+//! is the `n_classes == 1` case (the index degenerates to `l*cols + c`),
+//! `FusedMultiSketch` is the class-interleaved case, and a `SketchShard`
+//! is the same fused layout restricted to its local row span.
+
+use crate::metrics::slo::UpdateSlo;
+use std::ops::Deref;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock, RwLockReadGuard};
+
+/// Forced-publish threshold: a plane never holds more unpublished deltas
+/// than this, bounding both staleness and publish replay cost.
+pub const MAX_PENDING: usize = 256;
+
+/// One snapshot of the mutable sketch state.
+#[derive(Clone, Debug)]
+pub struct PlaneBuf {
+    /// `(rows*cols*n_classes)` counters, class-innermost.
+    pub counters: Vec<f32>,
+    /// Per-class total weight (the debias term).
+    pub alpha_sums: Vec<f32>,
+}
+
+/// One queued mutation: the per-row column indices of the hashed point,
+/// its class, and its (signed) weight.
+struct Delta {
+    cols: Vec<u32>,
+    class: usize,
+    alpha: f32,
+}
+
+/// A pinned read snapshot.  Dereferences to the [`PlaneBuf`] published at
+/// [`PlanePin::epoch`]; holding it blocks retirement of that buffer (the
+/// grace period), so drop pins promptly.
+pub struct PlanePin<'a> {
+    /// The epoch this snapshot was published at.
+    pub epoch: u64,
+    guard: RwLockReadGuard<'a, PlaneBuf>,
+}
+
+impl Deref for PlanePin<'_> {
+    type Target = PlaneBuf;
+    fn deref(&self) -> &PlaneBuf {
+        &self.guard
+    }
+}
+
+/// Double-buffered epoch/RCU counter plane.  See the module docs for the
+/// protocol; all methods take `&self` and are safe under concurrent
+/// readers, but `apply`/`publish` serialize on an internal writer lock.
+pub struct CounterPlane {
+    /// Columns per repetition row (hash-range width).
+    pub cols: usize,
+    /// Class interleave factor (1 for scalar sketches).
+    pub n_classes: usize,
+    epoch: AtomicU64,
+    bufs: [RwLock<PlaneBuf>; 2],
+    /// Serializes writers and owns the unpublished-delta queue.
+    writer: Mutex<Vec<Delta>>,
+    stats: Arc<UpdateSlo>,
+}
+
+impl CounterPlane {
+    /// Wrap built counters in a plane; both buffers start as identical
+    /// clones at epoch 0.
+    pub fn new(counters: &[f32], alpha_sums: &[f32], cols: usize, n_classes: usize) -> CounterPlane {
+        assert!(cols > 0 && n_classes > 0);
+        assert_eq!(counters.len() % (cols * n_classes), 0);
+        let buf = PlaneBuf {
+            counters: counters.to_vec(),
+            alpha_sums: alpha_sums.to_vec(),
+        };
+        CounterPlane {
+            cols,
+            n_classes,
+            epoch: AtomicU64::new(0),
+            bufs: [RwLock::new(buf.clone()), RwLock::new(buf)],
+            writer: Mutex::new(Vec::new()),
+            stats: Arc::new(UpdateSlo::new()),
+        }
+    }
+
+    /// The currently published epoch.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// Shared SLO counters (`updates`/`publishes`/`pending`/staleness).
+    pub fn stats(&self) -> Arc<UpdateSlo> {
+        Arc::clone(&self.stats)
+    }
+
+    /// Pin the live buffer at a single epoch.  The load / read-lock /
+    /// re-check loop handles the race where `publish` flips the epoch
+    /// between the load and the lock: if the epoch moved we may have
+    /// locked the buffer now being retired-and-replayed, so retry.
+    pub fn pin(&self) -> PlanePin<'_> {
+        loop {
+            let e = self.epoch.load(Ordering::Acquire);
+            let guard = self.bufs[(e & 1) as usize].read().unwrap();
+            if self.epoch.load(Ordering::Acquire) == e {
+                return PlanePin { epoch: e, guard };
+            }
+            // Epoch advanced while we were acquiring; drop and retry.
+        }
+    }
+
+    /// Write one delta into `buf` at the unified index layout.
+    fn apply_to(buf: &mut PlaneBuf, cols: usize, n_classes: usize, d: &Delta) {
+        for (l, &c) in d.cols.iter().enumerate() {
+            buf.counters[(l * cols + c as usize) * n_classes + d.class] += d.alpha;
+        }
+        buf.alpha_sums[d.class] += d.alpha;
+    }
+
+    /// Apply one weighted point (delete = negative `alpha`) to the shadow
+    /// buffer and queue it for the next publish.  `cols` holds one column
+    /// index per repetition row this plane covers.  Returns the new
+    /// unpublished-delta count.
+    pub fn apply(&self, cols: &[u32], class: usize, alpha: f32) -> usize {
+        assert!(class < self.n_classes, "class {} out of range", class);
+        let mut pending = self.writer.lock().unwrap();
+        let d = Delta {
+            cols: cols.to_vec(),
+            class,
+            alpha,
+        };
+        {
+            let e = self.epoch.load(Ordering::Acquire);
+            let shadow = ((e + 1) & 1) as usize;
+            let mut buf = self.bufs[shadow].write().unwrap();
+            Self::apply_to(&mut buf, self.cols, self.n_classes, &d);
+        }
+        pending.push(d);
+        let n = pending.len();
+        self.stats.record_update(n as u64);
+        n
+    }
+
+    /// Make every queued delta reader-visible and return the (possibly
+    /// unchanged) published epoch.  No-op fast path when the plane is
+    /// clean.  Blocks until readers pinning the pre-flip epoch drain.
+    pub fn publish(&self) -> u64 {
+        if self.stats.pending.load(Ordering::Relaxed) == 0 {
+            return self.epoch.load(Ordering::Acquire);
+        }
+        let mut pending = self.writer.lock().unwrap();
+        let e = self.epoch.load(Ordering::Acquire);
+        if pending.is_empty() {
+            return e; // Lost the race to another publisher; already clean.
+        }
+        // Flip first: new readers pin the shadow buffer (which already
+        // has every pending delta), then the retired buffer's write lock
+        // waits out readers still pinning epoch `e`.
+        self.epoch.store(e + 1, Ordering::Release);
+        {
+            let retired = (e & 1) as usize;
+            let mut buf = self.bufs[retired].write().unwrap();
+            for d in pending.iter() {
+                Self::apply_to(&mut buf, self.cols, self.n_classes, d);
+            }
+        }
+        pending.clear();
+        self.stats.record_publish(e + 1);
+        e + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+
+    fn plane(rows: usize, cols: usize, c: usize) -> CounterPlane {
+        CounterPlane::new(&vec![0.0; rows * cols * c], &vec![0.0; c], cols, c)
+    }
+
+    #[test]
+    fn apply_then_publish_is_visible_and_buffers_match() {
+        let p = plane(2, 4, 3);
+        assert_eq!(p.pin().epoch, 0);
+        p.apply(&[1, 3], 2, 0.5);
+        p.apply(&[1, 0], 0, -0.25);
+        // Unpublished: readers still see zeros.
+        let pin = p.pin();
+        assert!(pin.counters.iter().all(|&v| v == 0.0));
+        drop(pin);
+        assert_eq!(p.publish(), 1);
+        let pin = p.pin();
+        assert_eq!(pin.epoch, 1);
+        assert_eq!(pin.counters[(0 * 4 + 1) * 3 + 2], 0.5);
+        assert_eq!(pin.counters[(1 * 4 + 3) * 3 + 2], 0.5);
+        assert_eq!(pin.counters[(0 * 4 + 1) * 3 + 0], -0.25);
+        assert_eq!(pin.alpha_sums, vec![-0.25, 0.0, 0.5]);
+        drop(pin);
+        // After a second cycle both internal buffers must agree bitwise.
+        p.apply(&[2, 2], 1, 1.0);
+        assert_eq!(p.publish(), 2);
+        let a = p.bufs[0].read().unwrap();
+        let b = p.bufs[1].read().unwrap();
+        assert_eq!(a.counters, b.counters);
+        assert_eq!(a.alpha_sums, b.alpha_sums);
+    }
+
+    #[test]
+    fn publish_is_noop_when_clean() {
+        let p = plane(1, 2, 1);
+        assert_eq!(p.publish(), 0);
+        assert_eq!(p.publish(), 0);
+        p.apply(&[0], 0, 1.0);
+        assert_eq!(p.publish(), 1);
+        assert_eq!(p.publish(), 1);
+        assert_eq!(p.stats().publishes.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn streamed_equals_single_pass_fold() {
+        // The bit-identity contract in miniature: applying deltas one at
+        // a time and publishing at arbitrary points must equal one flat
+        // fold in the same order.
+        let rows = 3;
+        let cols = 8;
+        let c = 2;
+        let mut rng = 0x9e3779b97f4a7c15u64;
+        let mut next = move || {
+            rng ^= rng << 13;
+            rng ^= rng >> 7;
+            rng ^= rng << 17;
+            rng
+        };
+        let p = plane(rows, cols, c);
+        let mut expect = vec![0.0f32; rows * cols * c];
+        let mut expect_alpha = vec![0.0f32; c];
+        for i in 0..100 {
+            let cs: Vec<u32> = (0..rows).map(|_| (next() % cols as u64) as u32).collect();
+            let class = (next() % c as u64) as usize;
+            let alpha = (next() % 7) as f32 * 0.125 - 0.375;
+            for (l, &col) in cs.iter().enumerate() {
+                expect[(l * cols + col as usize) * c + class] += alpha;
+            }
+            expect_alpha[class] += alpha;
+            p.apply(&cs, class, alpha);
+            if i % 13 == 0 {
+                p.publish();
+            }
+        }
+        p.publish();
+        let pin = p.pin();
+        assert_eq!(pin.counters, expect);
+        assert_eq!(pin.alpha_sums, expect_alpha);
+    }
+
+    #[test]
+    fn pinned_reader_sees_stable_snapshot_across_publish() {
+        let p = Arc::new(plane(1, 2, 1));
+        p.apply(&[0], 0, 1.0);
+        p.publish();
+        let pin = p.pin();
+        assert_eq!(pin.epoch, 1);
+        let snap = pin.counters.clone();
+        // A publisher on another thread must flip the epoch without
+        // touching the buffer we pinned, then block replaying into it
+        // until we drop the pin.
+        let p2 = Arc::clone(&p);
+        let done = Arc::new(AtomicBool::new(false));
+        let d2 = Arc::clone(&done);
+        let h = std::thread::spawn(move || {
+            p2.apply(&[1], 0, 2.0);
+            p2.publish();
+            d2.store(true, Ordering::SeqCst);
+        });
+        // Wait until the flip is visible, then verify our snapshot is
+        // untouched while the publisher is parked on the retired buffer.
+        while p.epoch() == 1 {
+            std::thread::yield_now();
+        }
+        assert_eq!(*pin.counters, snap[..]);
+        assert_eq!(pin.epoch, 1);
+        drop(pin); // End the grace period.
+        h.join().unwrap();
+        assert!(done.load(Ordering::SeqCst));
+        let pin = p.pin();
+        assert_eq!(pin.epoch, 2);
+        assert_eq!(pin.counters[1], 2.0);
+    }
+
+    #[test]
+    fn epoch_monotonic_and_stats_surface() {
+        let p = plane(1, 2, 1);
+        let mut last = p.epoch();
+        for _ in 0..5 {
+            p.apply(&[1], 0, 0.5);
+            let e = p.publish();
+            assert!(e > last);
+            last = e;
+        }
+        let s = p.stats();
+        assert_eq!(s.updates.load(Ordering::Relaxed), 5);
+        assert_eq!(s.publishes.load(Ordering::Relaxed), 5);
+        assert_eq!(s.epoch.load(Ordering::Relaxed), last);
+        assert_eq!(s.pending.load(Ordering::Relaxed), 0);
+    }
+}

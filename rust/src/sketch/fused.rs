@@ -299,13 +299,18 @@ impl FusedMultiSketch {
         self.ensure_gather_scratch(s);
     }
 
-    /// Stage 4 for one query: ONE class-innermost gather over the
-    /// interleaved counters fills all C estimates.  The query's row
+    /// Stage 4 for one query against caller-supplied interleaved
+    /// counters + per-class debias terms (the built arrays, or a pinned
+    /// [`super::epoch::CounterPlane`] snapshot — same layout): ONE
+    /// class-innermost gather fills all C estimates.  The query's row
     /// columns are `cols_t[l * stride + off]` (scalar path: stride 1,
     /// off 0; batch path: stride B, off bq).  Op-for-op identical per
     /// class to `RaceSketch::median_of_means` / `mean` + debias.
-    fn estimate_all_classes(
+    #[allow(clippy::too_many_arguments)]
+    fn estimate_all_classes_on(
         &self,
+        data: &[f32],
+        alpha_sums: &[f32],
         cols_t: &[u32],
         stride: usize,
         off: usize,
@@ -325,7 +330,7 @@ impl FusedMultiSketch {
                 for l in start..end {
                     let col = cols_t[l * stride + off] as usize;
                     let base = (l * self.cols + col) * c_n;
-                    let src = &self.data[base..base + c_n];
+                    let src = &data[base..base + c_n];
                     for (a, &v) in class_acc.iter_mut().zip(src) {
                         *a += v;
                     }
@@ -348,7 +353,7 @@ impl FusedMultiSketch {
             for l in 0..self.rows {
                 let col = cols_t[l * stride + off] as usize;
                 let base = (l * self.cols + col) * c_n;
-                let src = &self.data[base..base + c_n];
+                let src = &data[base..base + c_n];
                 for (a, &v) in class_acc.iter_mut().zip(src) {
                     *a += v;
                 }
@@ -359,10 +364,26 @@ impl FusedMultiSketch {
         }
         if self.debias {
             let r = self.cols as f32;
-            for (o, &asum) in out.iter_mut().zip(self.alpha_sums.iter()) {
+            for (o, &asum) in out.iter_mut().zip(alpha_sums.iter()) {
                 *o = (*o - asum / r) / (1.0 - 1.0 / r);
             }
         }
+    }
+
+    /// Stage 4 against the built-in counters.
+    fn estimate_all_classes(
+        &self,
+        cols_t: &[u32],
+        stride: usize,
+        off: usize,
+        class_acc: &mut [f32],
+        gm_all: &mut [f32],
+        gm_c: &mut [f32],
+        out: &mut [f32],
+    ) {
+        self.estimate_all_classes_on(&self.data, &self.alpha_sums, cols_t,
+                                     stride, off, class_acc, gm_all, gm_c,
+                                     out)
     }
 
     /// Scalar per-class scores: hash once, gather once.  Bit-for-bit
@@ -398,6 +419,18 @@ impl FusedMultiSketch {
     /// per query to [`FusedMultiSketch::scores_with`].
     pub fn scores_batch_with<'s>(&self, queries: &[f32],
                                  s: &'s mut FusedScratch) -> &'s [f32] {
+        self.scores_batch_on(&self.data, &self.alpha_sums, queries, s)
+    }
+
+    /// Batch-major per-class scores against caller-supplied interleaved
+    /// counters + per-class debias terms — the live-update entry point:
+    /// pass a pinned [`super::epoch::CounterPlane`] snapshot
+    /// (`&pin.counters`, `&pin.alpha_sums`) and this sketch supplies only
+    /// the immutable geometry.  With the built counters it IS
+    /// `scores_batch_with`.
+    pub fn scores_batch_on<'s>(&self, data: &[f32], alpha_sums: &[f32],
+                               queries: &[f32],
+                               s: &'s mut FusedScratch) -> &'s [f32] {
         assert_eq!(
             queries.len() % self.d,
             0,
@@ -405,6 +438,8 @@ impl FusedMultiSketch {
             queries.len(),
             self.d
         );
+        debug_assert_eq!(data.len(), self.rows * self.cols * self.n_classes);
+        debug_assert_eq!(alpha_sums.len(), self.n_classes);
         let batch = queries.len() / self.d;
         self.ensure_batch_scratch(s, batch);
         if batch == 0 {
@@ -423,7 +458,9 @@ impl FusedMultiSketch {
         // Stage 4: fused class-innermost gather per query.
         let c_n = self.n_classes;
         for bq in 0..batch {
-            self.estimate_all_classes(
+            self.estimate_all_classes_on(
+                data,
+                alpha_sums,
                 &s.cols_b,
                 batch,
                 bq,
@@ -446,6 +483,40 @@ impl FusedMultiSketch {
         for row in scores.chunks_exact(n_classes) {
             out.push(super::argmax(row));
         }
+    }
+
+    /// Batched argmax prediction against caller-supplied counters (same
+    /// tie-breaking as [`FusedMultiSketch::predict`]).
+    pub fn predict_batch_on(&self, data: &[f32], alpha_sums: &[f32],
+                            queries: &[f32], s: &mut FusedScratch,
+                            out: &mut Vec<usize>) {
+        let n_classes = self.n_classes;
+        let scores = self.scores_batch_on(data, alpha_sums, queries, s);
+        out.clear();
+        for row in scores.chunks_exact(n_classes) {
+            out.push(super::argmax(row));
+        }
+    }
+
+    /// Hash one update point `x` (projected space) to its per-row column
+    /// indices — exactly the build fold's hash path, so a counter plane
+    /// fed these columns accumulates bit-identically to a rebuild with
+    /// the point appended to its class.
+    pub fn delta_cols(&self, x: &[f32], codes: &mut Vec<i32>,
+                      out: &mut Vec<u32>) {
+        assert_eq!(x.len(), self.p, "update point dimensionality");
+        codes.resize(self.rows * self.k_per_row as usize, 0);
+        out.resize(self.rows, 0);
+        self.lsh.hash_into(x, codes);
+        concat::rehash_all(codes, self.k_per_row as usize, self.cols as u32,
+                           out);
+    }
+
+    /// Wrap this sketch's counters in a live [`super::epoch::CounterPlane`]
+    /// (class-interleaved, `n_classes`-wide).
+    pub fn plane(&self) -> super::epoch::CounterPlane {
+        super::epoch::CounterPlane::new(&self.data, &self.alpha_sums,
+                                        self.cols, self.n_classes)
     }
 }
 
@@ -663,6 +734,53 @@ mod tests {
             &SketchConfig { rows: 16, ..SketchConfig::default() },
         );
         assert!(FusedMultiSketch::from_sketches(&[s1, s2]).is_err());
+    }
+
+    #[test]
+    fn streamed_updates_match_rebuild_bitwise() {
+        // Live-mutation contract: stream extra per-class points through a
+        // CounterPlane, publish, and the pinned snapshot must equal a
+        // from-scratch build with those points appended to their classes
+        // — counters, alpha_sums, and scores all bitwise.
+        let mut rng = SplitMix64::new(121);
+        let per_class = multiclass_params(&mut rng, 3, 6, 4, 48, 16, 2);
+        let cfg = SketchConfig::default();
+        let fused = FusedMultiSketch::build(&per_class, &cfg).unwrap();
+        let plane = fused.plane();
+        let mut per_class2 = per_class.clone();
+        let mut codes = Vec::new();
+        let mut cols = Vec::new();
+        for i in 0..12 {
+            let ci = i % 3;
+            let x: Vec<f32> =
+                (0..fused.p).map(|_| rng.next_gaussian() as f32).collect();
+            let alpha = if i % 4 == 3 { -0.5 } else { 0.5 + rng.next_f32() };
+            fused.delta_cols(&x, &mut codes, &mut cols);
+            plane.apply(&cols, ci, alpha);
+            per_class2[ci].x.extend_from_slice(&x);
+            per_class2[ci].alpha.push(alpha);
+            per_class2[ci].m += 1;
+            if i % 5 == 0 {
+                plane.publish();
+            }
+        }
+        plane.publish();
+        let rebuilt = FusedMultiSketch::build(&per_class2, &cfg).unwrap();
+        let pin = plane.pin();
+        assert_eq!(pin.counters, rebuilt.counters());
+        for (a, b) in pin.alpha_sums.iter().zip(&rebuilt.alpha_sums) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let queries = random_queries(&mut rng, 7, 6);
+        let mut fs = FusedScratch::default();
+        let got = fused
+            .scores_batch_on(&pin.counters, &pin.alpha_sums, &queries,
+                             &mut fs)
+            .to_vec();
+        let want = rebuilt.scores_batch_with(&queries, &mut fs).to_vec();
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
     }
 
     #[test]

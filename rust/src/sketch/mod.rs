@@ -24,6 +24,7 @@
 //!   [`batch`].
 
 pub mod batch;
+pub mod epoch;
 pub mod fused;
 pub mod multiclass;
 pub mod serde;
@@ -182,6 +183,24 @@ impl RaceSketch {
     /// per-shard sub-families).
     pub(crate) fn lsh(&self) -> &Arc<SparseL2Lsh> {
         &self.lsh
+    }
+
+    /// Hash one update point `x` (already in the projected space, like
+    /// the build points) to its per-row column indices — exactly the
+    /// build fold's hash path (`hash_into` + `rehash_all`), so a counter
+    /// plane fed these columns accumulates bit-identically to a rebuild.
+    pub fn delta_cols(&self, x: &[f32], codes: &mut Vec<i32>, out: &mut Vec<u32>) {
+        assert_eq!(x.len(), self.p, "update point dimensionality");
+        codes.resize(self.rows * self.k_per_row as usize, 0);
+        out.resize(self.rows, 0);
+        self.lsh.hash_into(x, codes);
+        concat::rehash_all(codes, self.k_per_row as usize, self.cols as u32, out);
+    }
+
+    /// Wrap this sketch's counters in a live [`epoch::CounterPlane`]
+    /// (`n_classes == 1`; `alpha_sums == [alpha_sum]`).
+    pub fn plane(&self) -> epoch::CounterPlane {
+        epoch::CounterPlane::new(&self.data, &[self.alpha_sum], self.cols, 1)
     }
 
     /// Merge another sketch built with identical parameters (RACE

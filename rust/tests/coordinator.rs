@@ -41,7 +41,7 @@ fn build_router(root: &std::path::Path, with_pjrt: bool)
     let meta = bundle.meta.clone();
     let ds = Dataset::load_artifact(root, "skin", "test", meta.dim,
                                     meta.task).unwrap();
-    let mut router = Router::new();
+    let router = Router::new();
     let cfg = RouterConfig {
         batcher: BatcherConfig {
             max_batch: 16,
@@ -85,6 +85,7 @@ fn router_serves_sketch_and_nn_consistently() {
             backend: BackendKind::Sketch,
             features: row.clone(),
             want_scores: false,
+            update: None,
         });
         let direct = bundle.sketch.query_with(&row, &mut s);
         assert_eq!(rs.result.unwrap(), direct, "row {i}");
@@ -94,6 +95,7 @@ fn router_serves_sketch_and_nn_consistently() {
             backend: BackendKind::NnRust,
             features: row.clone(),
             want_scores: false,
+            update: None,
         });
         let direct_nn = bundle.mlp.forward_with(&row, &mut ns);
         assert_eq!(nn.result.unwrap(), direct_nn, "row {i}");
@@ -127,6 +129,7 @@ fn pjrt_lane_serves_from_request_path() {
                         backend: BackendKind::NnPjrt,
                         features: row.clone(),
                         want_scores: false,
+                        update: None,
                     });
                     resp.result.expect("pjrt answer")
                 })
@@ -168,6 +171,7 @@ fn tcp_server_round_trip() {
             backend: BackendKind::Sketch,
             features: ds.row(i).to_vec(),
             want_scores: false,
+            update: None,
         };
         let mut line = req.to_line();
         line.push('\n');
@@ -217,7 +221,7 @@ impl repsketch::coordinator::Engine for SlowEngine {
 
 #[test]
 fn backpressure_rejects_then_recovers() {
-    let mut router = Router::new();
+    let router = Router::new();
     // Tiny queue + slow engine force saturation under a submit flood.
     let cfg = RouterConfig {
         batcher: BatcherConfig {
@@ -235,6 +239,7 @@ fn backpressure_rejects_then_recovers() {
         backend: BackendKind::Sketch,
         features: vec![0.1, 0.2, 0.3],
         want_scores: false,
+        update: None,
     };
     // Flood; some must be rejected with QueueFull.
     let mut rejected = 0;
@@ -315,7 +320,7 @@ fn drained_batch_executes_as_one_engine_call() {
     let reference = sketch.clone();
     let calls = Arc::new(AtomicUsize::new(0));
     let sizes = Arc::new(Mutex::new(Vec::new()));
-    let mut router = Router::new();
+    let router = Router::new();
     // max_wait far beyond the test runtime: the batch can only fire by
     // reaching max_batch, so exactly one drain of exactly 16 requests.
     let cfg = RouterConfig {
@@ -345,6 +350,7 @@ fn drained_batch_executes_as_one_engine_call() {
                 backend: BackendKind::Sketch,
                 features: row.clone(),
                 want_scores: false,
+                update: None,
             })
             .unwrap();
         receivers.push(rx);
@@ -372,7 +378,7 @@ fn partial_batch_drains_as_one_call_on_deadline() {
     let reference = sketch.clone();
     let calls = Arc::new(AtomicUsize::new(0));
     let sizes = Arc::new(Mutex::new(Vec::new()));
-    let mut router = Router::new();
+    let router = Router::new();
     let cfg = RouterConfig {
         batcher: BatcherConfig {
             max_batch: 64,
@@ -404,6 +410,7 @@ fn partial_batch_drains_as_one_call_on_deadline() {
                     backend: BackendKind::Sketch,
                     features: row.clone(),
                     want_scores: false,
+                    update: None,
                 })
                 .unwrap(),
         );
@@ -479,7 +486,7 @@ fn multiclass_drained_batch_is_one_fused_kernel_call() {
     let (fused, ms, d) = synthetic_multiclass(0xF0CA, 5);
     let calls = Arc::new(AtomicUsize::new(0));
     let sizes = Arc::new(Mutex::new(Vec::new()));
-    let mut router = Router::new();
+    let router = Router::new();
     // max_wait far beyond the test runtime: the batch can only fire by
     // reaching max_batch, so exactly one drain of exactly 16 requests —
     // and 16 < the engine's fan-out threshold, so that drain is ONE
@@ -512,6 +519,7 @@ fn multiclass_drained_batch_is_one_fused_kernel_call() {
                     backend: BackendKind::Multiclass,
                     features: row.clone(),
                     want_scores: false,
+                    update: None,
                 })
                 .unwrap(),
         );
@@ -543,7 +551,7 @@ fn multiclass_large_batch_shards_through_persistent_pool() {
     let pool = Arc::new(WorkerPool::new(4));
     let calls = Arc::new(AtomicUsize::new(0));
     let sizes = Arc::new(Mutex::new(Vec::new()));
-    let mut router = Router::new();
+    let router = Router::new();
     let cfg = RouterConfig {
         batcher: BatcherConfig {
             max_batch: 128,
@@ -573,6 +581,7 @@ fn multiclass_large_batch_shards_through_persistent_pool() {
                     backend: BackendKind::Multiclass,
                     features: row.clone(),
                     want_scores: false,
+                    update: None,
                 })
                 .unwrap(),
         );
@@ -600,7 +609,7 @@ fn concurrent_clients_get_scalar_identical_answers_through_batches() {
     let d = 8usize;
     let sketch = synthetic_sketch(0xFACE, d);
     let reference = Arc::new(sketch.clone());
-    let mut router = Router::new();
+    let router = Router::new();
     let cfg = RouterConfig {
         batcher: BatcherConfig {
             max_batch: 128,
@@ -629,6 +638,7 @@ fn concurrent_clients_get_scalar_identical_answers_through_batches() {
                     backend: BackendKind::Sketch,
                     features: row.clone(),
                     want_scores: false,
+                    update: None,
                 });
                 let want = reference.query_with(row, &mut s);
                 assert_eq!(resp.result.unwrap(), want, "client {t} row {i}");

@@ -1,0 +1,936 @@
+//! Live-mutation and hot-swap suite (Linux-only: the TCP front-end and
+//! the child-process drain tests ride the epoll reactor).
+//!
+//! Locks the two contracts the epoch-versioned counter plane ships:
+//!
+//! 1. **Streamed-build bit-identity** — a sketch grown by N `update`s
+//!    answers bit-for-bit like a single-pass build holding the same
+//!    points, for every mutable lane shape: monolithic `rs`, fused
+//!    multiclass `mc`, locally sharded `sh`, and remote-sharded `sh`
+//!    over real loopback TCP.  Deletes are the same contract with the
+//!    weight negated (exact for a linear sketch: the rebuild folds the
+//!    `−α` entry at the same position in the order).
+//!
+//! 2. **Zero-downtime swap** — flipping a lane to a new model under a
+//!    live pipelined burst yields zero error responses, exactly one
+//!    response per request id, and every response bit-identical to
+//!    exactly ONE of the two model versions, discriminated by the
+//!    response's `"v"` stamp.  SIGTERM/SIGINT ride the same drain path:
+//!    the child-process tests below kill a serving binary mid-session
+//!    and assert exit code 0 plus the drain banner.
+#![cfg(target_os = "linux")]
+
+use repsketch::coordinator::protocol::UpdateSpec;
+use repsketch::coordinator::{
+    backend, BackendKind, BatcherConfig, Engine, Request, Response,
+    Router, RouterConfig, Server,
+};
+use repsketch::kernel::KernelParams;
+use repsketch::shard::remote::serve_local;
+use repsketch::shard::ShardedSketch;
+use repsketch::sketch::{FusedMultiSketch, RaceSketch, SketchConfig};
+use repsketch::util::prop::forall;
+use repsketch::util::rng::SplitMix64;
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::process::{Child, ChildStdout, Command, Stdio};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// The TCP and child-process tests own loopback sockets and process
+/// signals; serialize them (same idiom as `tests/server_reactor.rs`).
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ---------------------------------------------------------------------------
+// Fixtures
+// ---------------------------------------------------------------------------
+
+fn random_kp(rng: &mut SplitMix64, d: usize, p: usize, m: usize)
+    -> KernelParams {
+    KernelParams {
+        d,
+        p,
+        m,
+        a: (0..d * p)
+            .map(|_| rng.next_gaussian() as f32 * 0.5)
+            .collect(),
+        x: (0..m * p).map(|_| rng.next_gaussian() as f32).collect(),
+        alpha: (0..m).map(|_| 0.5 + rng.next_f32()).collect(),
+        width: 2.0,
+        lsh_seed: rng.next_u64(),
+        k_per_row: 2,
+        default_rows: 32,
+        default_cols: 16,
+    }
+}
+
+/// The first `keep` representer points of `kp` — the "built so far"
+/// prefix; the suffix is what the tests stream as live `update`s.
+fn truncated(kp: &KernelParams, keep: usize) -> KernelParams {
+    assert!(keep <= kp.m);
+    let mut t = kp.clone();
+    t.m = keep;
+    t.x.truncate(keep * kp.p);
+    t.alpha.truncate(keep);
+    t
+}
+
+/// The suffix points of `kp` as engine-level update rows, in build
+/// order (order is what makes the f32 folds bit-identical).
+fn tail_updates(kp: &KernelParams, keep: usize, class: usize)
+    -> Vec<backend::UpdateRow> {
+    (keep..kp.m)
+        .map(|i| backend::UpdateRow {
+            x: kp.x[i * kp.p..(i + 1) * kp.p].to_vec(),
+            alpha: kp.alpha[i],
+            class,
+        })
+        .collect()
+}
+
+/// Stream updates through an engine in chunks with a varying publish
+/// cadence — visibility timing must never change the final counters.
+fn stream(engine: &mut dyn Engine, ups: &[backend::UpdateRow],
+          chunk: usize) {
+    for (i, c) in ups.chunks(chunk.max(1)).enumerate() {
+        engine
+            .apply_updates(c, i % 2 == 0)
+            .expect("streamed update batch");
+    }
+}
+
+fn query_rows(rng: &mut SplitMix64, n: usize, d: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|_| (0..d).map(|_| rng.next_gaussian() as f32).collect())
+        .collect()
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], what: &str)
+    -> Result<(), String> {
+    if got.len() != want.len() {
+        return Err(format!(
+            "{what}: length {} vs {}",
+            got.len(),
+            want.len()
+        ));
+    }
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        if g.to_bits() != w.to_bits() {
+            return Err(format!(
+                "{what}: row {i} streamed {g} != single-pass {w} \
+                 (bits {:#010x} vs {:#010x})",
+                g.to_bits(),
+                w.to_bits()
+            ));
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// 1. Streamed-build bit-identity (the acceptance property)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn race_streamed_updates_bit_identical_to_single_pass_build() {
+    forall(
+        0x11AA,
+        8,
+        |rng| {
+            let d = 2 + rng.next_range(5);
+            let p = 1 + rng.next_range(4);
+            let m = 10 + rng.next_range(16);
+            let keep = 1 + rng.next_range(m - 1);
+            let chunk = 1 + rng.next_range(4);
+            (d, p, m, keep, chunk, rng.next_u64())
+        },
+        |&(d, p, m, keep, chunk, seed)| {
+            let mut rng = SplitMix64::new(seed);
+            let kp = random_kp(&mut rng, d, p, m);
+            let cfg = SketchConfig::default();
+            let full = RaceSketch::build(&kp, &cfg);
+            let partial = RaceSketch::build(&truncated(&kp, keep), &cfg);
+            let mut streamed = backend::SketchEngine::new(partial);
+            stream(&mut streamed, &tail_updates(&kp, keep, 0), chunk);
+            let mut single = backend::SketchEngine::new(full);
+            let queries = query_rows(&mut rng, 6, d);
+            let got = streamed.eval_batch(&queries).unwrap();
+            let want = single.eval_batch(&queries).unwrap();
+            assert_bits_eq(&got, &want, "rs streamed vs rebuilt")
+        },
+    );
+}
+
+#[test]
+fn race_deletes_fold_like_a_rebuild_with_negative_weights() {
+    forall(
+        0x11DD,
+        6,
+        |rng| {
+            let d = 2 + rng.next_range(4);
+            let p = 1 + rng.next_range(3);
+            let m = 8 + rng.next_range(10);
+            let n_del = 1 + rng.next_range(m / 2);
+            (d, p, m, n_del, rng.next_u64())
+        },
+        |&(d, p, m, n_del, seed)| {
+            let mut rng = SplitMix64::new(seed);
+            let kp = random_kp(&mut rng, d, p, m);
+            let cfg = SketchConfig::default();
+            // The single-pass reference: the deleted points appear a
+            // second time with negated weight, at the end, in delete
+            // order — exactly the fold the plane replays.
+            let mut kp_aug = kp.clone();
+            for j in 0..n_del {
+                kp_aug
+                    .x
+                    .extend_from_slice(&kp.x[j * p..(j + 1) * p]);
+                kp_aug.alpha.push(-kp.alpha[j]);
+                kp_aug.m += 1;
+            }
+            let mut streamed = backend::SketchEngine::new(
+                RaceSketch::build(&kp, &cfg),
+            );
+            let dels: Vec<backend::UpdateRow> = (0..n_del)
+                .map(|j| backend::UpdateRow {
+                    x: kp.x[j * p..(j + 1) * p].to_vec(),
+                    alpha: -kp.alpha[j],
+                    class: 0,
+                })
+                .collect();
+            stream(&mut streamed, &dels, 2);
+            let mut single = backend::SketchEngine::new(
+                RaceSketch::build(&kp_aug, &cfg),
+            );
+            let queries = query_rows(&mut rng, 5, d);
+            let got = streamed.eval_batch(&queries).unwrap();
+            let want = single.eval_batch(&queries).unwrap();
+            assert_bits_eq(&got, &want, "rs delete vs −α rebuild")
+        },
+    );
+}
+
+/// Per-class fused fixture: shared projection + hash seed, independent
+/// representer sets per class (the shape `FusedMultiSketch::build`
+/// requires).
+fn fused_params(rng: &mut SplitMix64, n_classes: usize, d: usize,
+                m: usize) -> Vec<KernelParams> {
+    let a: Vec<f32> =
+        (0..d * d).map(|_| rng.next_gaussian() as f32 * 0.5).collect();
+    let seed = rng.next_u64();
+    (0..n_classes)
+        .map(|_| KernelParams {
+            d,
+            p: d,
+            m,
+            a: a.clone(),
+            x: (0..m * d).map(|_| rng.next_gaussian() as f32).collect(),
+            alpha: (0..m).map(|_| 0.5 + rng.next_f32()).collect(),
+            width: 2.0,
+            lsh_seed: seed,
+            k_per_row: 2,
+            default_rows: 32,
+            default_cols: 16,
+        })
+        .collect()
+}
+
+#[test]
+fn fused_streamed_updates_bit_identical_per_class() {
+    forall(
+        0x22BB,
+        6,
+        |rng| {
+            let c = 2 + rng.next_range(3);
+            let d = 3 + rng.next_range(4);
+            let m = 8 + rng.next_range(8);
+            let keep = 1 + rng.next_range(m - 1);
+            (c, d, m, keep, rng.next_u64())
+        },
+        |&(c, d, m, keep, seed)| {
+            let mut rng = SplitMix64::new(seed);
+            let per_class = fused_params(&mut rng, c, d, m);
+            let cfg = SketchConfig::default();
+            let full = FusedMultiSketch::build(&per_class, &cfg).unwrap();
+            let partial_params: Vec<KernelParams> = per_class
+                .iter()
+                .map(|kp| truncated(kp, keep))
+                .collect();
+            let partial =
+                FusedMultiSketch::build(&partial_params, &cfg).unwrap();
+            let mut streamed = backend::MulticlassEngine::new(partial);
+            for (ci, kp) in per_class.iter().enumerate() {
+                stream(&mut streamed, &tail_updates(kp, keep, ci), 3);
+            }
+            let mut single = backend::MulticlassEngine::new(full);
+            let queries = query_rows(&mut rng, 6, d);
+            let got = streamed.eval_batch_ex(&queries, true).unwrap();
+            let want = single.eval_batch_ex(&queries, true).unwrap();
+            assert_bits_eq(&got.values, &want.values, "mc argmax")?;
+            assert_bits_eq(
+                &got.scores.as_ref().unwrap().flat,
+                &want.scores.as_ref().unwrap().flat,
+                "mc score matrix",
+            )
+        },
+    );
+}
+
+#[test]
+fn sharded_streamed_updates_bit_identical_to_monolithic_rebuild() {
+    forall(
+        0x33CC,
+        6,
+        |rng| {
+            let d = 2 + rng.next_range(5);
+            let p = 1 + rng.next_range(4);
+            let m = 10 + rng.next_range(12);
+            let keep = 1 + rng.next_range(m - 1);
+            let n_shards = 2 + rng.next_range(3);
+            (d, p, m, keep, n_shards, rng.next_u64())
+        },
+        |&(d, p, m, keep, n_shards, seed)| {
+            let mut rng = SplitMix64::new(seed);
+            let kp = random_kp(&mut rng, d, p, m);
+            let cfg = SketchConfig::default();
+            let full = RaceSketch::build(&kp, &cfg);
+            let partial = RaceSketch::build(&truncated(&kp, keep), &cfg);
+            // Live sharded plane, fed the tail...
+            let mut streamed = backend::ShardedEngine::new(
+                ShardedSketch::from_race(&partial, n_shards),
+            );
+            stream(&mut streamed, &tail_updates(&kp, keep, 0), 2);
+            // ...must match BOTH the sharded and the monolithic
+            // single-pass builds (the shard planes stay an exact carve).
+            let mut sharded_single = backend::ShardedEngine::new(
+                ShardedSketch::from_race(&full, n_shards),
+            );
+            let mut mono_single =
+                backend::SketchEngine::new(full.clone());
+            let queries = query_rows(&mut rng, 6, d);
+            let got = streamed.eval_batch(&queries).unwrap();
+            assert_bits_eq(
+                &got,
+                &sharded_single.eval_batch(&queries).unwrap(),
+                "sh streamed vs sh rebuilt",
+            )?;
+            assert_bits_eq(
+                &got,
+                &mono_single.eval_batch(&queries).unwrap(),
+                "sh streamed vs monolithic rebuilt",
+            )
+        },
+    );
+}
+
+#[test]
+fn sharded_fused_streamed_updates_bit_identical() {
+    forall(
+        0x44DD,
+        4,
+        |rng| {
+            let c = 2 + rng.next_range(2);
+            let d = 3 + rng.next_range(3);
+            let m = 8 + rng.next_range(6);
+            let keep = 1 + rng.next_range(m - 1);
+            let n_shards = 2 + rng.next_range(2);
+            (c, d, m, keep, n_shards, rng.next_u64())
+        },
+        |&(c, d, m, keep, n_shards, seed)| {
+            let mut rng = SplitMix64::new(seed);
+            let per_class = fused_params(&mut rng, c, d, m);
+            let cfg = SketchConfig::default();
+            let full = FusedMultiSketch::build(&per_class, &cfg).unwrap();
+            let partial_params: Vec<KernelParams> = per_class
+                .iter()
+                .map(|kp| truncated(kp, keep))
+                .collect();
+            let partial =
+                FusedMultiSketch::build(&partial_params, &cfg).unwrap();
+            let mut streamed = backend::ShardedEngine::new(
+                ShardedSketch::from_fused(&partial, n_shards),
+            );
+            for (ci, kp) in per_class.iter().enumerate() {
+                stream(&mut streamed, &tail_updates(kp, keep, ci), 2);
+            }
+            let mut single = backend::MulticlassEngine::new(full);
+            let queries = query_rows(&mut rng, 5, d);
+            let got = streamed.eval_batch_ex(&queries, true).unwrap();
+            let want = single.eval_batch_ex(&queries, true).unwrap();
+            assert_bits_eq(&got.values, &want.values, "sh-mc argmax")?;
+            assert_bits_eq(
+                &got.scores.as_ref().unwrap().flat,
+                &want.scores.as_ref().unwrap().flat,
+                "sh-mc score matrix",
+            )
+        },
+    );
+}
+
+#[test]
+fn remote_sharded_streamed_updates_bit_identical_over_tcp() {
+    let _g = serial();
+    let mut rng = SplitMix64::new(0x55EE);
+    let kp = random_kp(&mut rng, 5, 3, 18);
+    let keep = 11;
+    let cfg = SketchConfig::default();
+    let full = RaceSketch::build(&kp, &cfg);
+    let partial = RaceSketch::build(&truncated(&kp, keep), &cfg);
+    let sharded_partial = ShardedSketch::from_race(&partial, 3);
+    let servers = serve_local(&sharded_partial).unwrap();
+    let mut streamed = backend::RemoteShardedEngine::connect(
+        servers.addrs.clone(),
+        Duration::from_secs(10),
+    )
+    .unwrap();
+    // Broadcast the tail over the wire (each row reaches every shard;
+    // the final row publishes).
+    stream(&mut streamed, &tail_updates(&kp, keep, 0), 4);
+    let mut mono_single = backend::SketchEngine::new(full);
+    let queries = query_rows(&mut rng, 8, 5);
+    let got = streamed.eval_batch(&queries).unwrap();
+    let want = mono_single.eval_batch(&queries).unwrap();
+    assert_bits_eq(&got, &want, "remote-sh streamed vs monolithic")
+        .unwrap();
+    // The update SLO mirrored locally: counts every broadcast row.
+    let slo = streamed.plane_stats().unwrap();
+    assert_eq!(
+        slo.updates.load(Ordering::Relaxed),
+        (kp.m - keep) as u64
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 2. The update verb through the router (wire-shaped requests)
+// ---------------------------------------------------------------------------
+
+fn query_req(id: u64, model: &str, kind: BackendKind, x: Vec<f32>)
+    -> Request {
+    Request {
+        id,
+        model: model.into(),
+        backend: kind,
+        features: x,
+        want_scores: false,
+        update: None,
+    }
+}
+
+fn update_req(id: u64, model: &str, kind: BackendKind, x: Vec<f32>,
+              weight: f32, publish: bool) -> Request {
+    Request {
+        update: Some(UpdateSpec {
+            weight,
+            class: 0,
+            delete: false,
+            publish,
+        }),
+        ..query_req(id, model, kind, x)
+    }
+}
+
+#[test]
+fn router_update_verb_streams_to_bit_identity_with_epoch_acks() {
+    let mut rng = SplitMix64::new(0x66FF);
+    let kp = random_kp(&mut rng, 4, 3, 16);
+    let keep = 9;
+    let cfg = SketchConfig::default();
+    let full = RaceSketch::build(&kp, &cfg);
+    let partial = RaceSketch::build(&truncated(&kp, keep), &cfg);
+    let router = Router::new();
+    router.add_lane(
+        "m",
+        BackendKind::Sketch,
+        move || Ok(Box::new(backend::SketchEngine::new(partial)) as _),
+        &RouterConfig::default(),
+    );
+    // Stream the tail as wire-shaped update requests, pipelined (FIFO
+    // on the lane keeps the fold order = build order).
+    let mut rxs = Vec::new();
+    for (i, u) in tail_updates(&kp, keep, 0).iter().enumerate() {
+        rxs.push(
+            router
+                .submit(update_req(
+                    i as u64,
+                    "m",
+                    BackendKind::Sketch,
+                    u.x.clone(),
+                    u.alpha,
+                    i % 3 == 0,
+                ))
+                .unwrap(),
+        );
+    }
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let ack = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(
+            ack.result.as_ref().unwrap(),
+            &0.0,
+            "update {i} ack"
+        );
+        assert!(ack.epoch.is_some(), "update {i} ack carries epoch");
+        assert_eq!(ack.version, Some(1));
+    }
+    // Queries after the acked stream answer like a single-pass build.
+    let mut single = backend::SketchEngine::new(full);
+    let queries = query_rows(&mut rng, 6, 4);
+    let want = single.eval_batch(&queries).unwrap();
+    for (i, q) in queries.iter().enumerate() {
+        let resp = router.call(query_req(
+            100 + i as u64,
+            "m",
+            BackendKind::Sketch,
+            q.clone(),
+        ));
+        let got = resp.result.unwrap();
+        assert_eq!(
+            got.to_bits(),
+            want[i].to_bits(),
+            "query {i}: streamed {got} vs rebuilt {}",
+            want[i]
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. Hot swap under a live pipelined burst (fault injection)
+// ---------------------------------------------------------------------------
+
+struct Running {
+    addr: std::net::SocketAddr,
+    stop: Arc<std::sync::atomic::AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Running {
+    fn start(router: Arc<Router>) -> Running {
+        let server = Server::bind(router, "127.0.0.1:0").unwrap();
+        let addr = server.local_addr();
+        let stop = server.stop_handle();
+        let handle =
+            std::thread::spawn(move || server.serve().expect("serve"));
+        Running { addr, stop, handle: Some(handle) }
+    }
+
+    fn stop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            h.join().unwrap();
+        }
+    }
+}
+
+impl Drop for Running {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Scratch dir for model files; removed on drop.
+struct TempDir(PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> TempDir {
+        let dir = std::env::temp_dir().join(format!(
+            "repsketch_live_update_{tag}_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        TempDir(dir)
+    }
+
+    fn file(&self, name: &str) -> PathBuf {
+        self.0.join(name)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+fn read_responses(reader: &mut impl BufRead, n: usize) -> Vec<Response> {
+    let mut out = Vec::with_capacity(n);
+    let mut line = String::new();
+    while out.len() < n {
+        line.clear();
+        let r = reader.read_line(&mut line).unwrap();
+        assert!(
+            r > 0,
+            "connection closed after {} of {n} responses",
+            out.len()
+        );
+        out.push(Response::parse_line(line.trim()).unwrap());
+    }
+    out
+}
+
+#[test]
+fn hot_swap_under_pipelined_burst_attributes_every_response() {
+    let _g = serial();
+    let mut rng = SplitMix64::new(0x77AB);
+    let d = 5;
+    let cfg = SketchConfig::default();
+    let sk1 = RaceSketch::build(&random_kp(&mut rng, d, 4, 20), &cfg);
+    let sk2 = RaceSketch::build(&random_kp(&mut rng, d, 4, 20), &cfg);
+    let tmp = TempDir::new("swap");
+    let v2_path = tmp.file("v2.rssk");
+    sk2.save(&v2_path).unwrap();
+
+    // Reference answers under BOTH versions, one batched eval each
+    // (batched == scalar == served, bit-for-bit).
+    let rows = query_rows(&mut rng, 40, d);
+    let want1 = backend::SketchEngine::new(sk1.clone())
+        .eval_batch(&rows)
+        .unwrap();
+    let want2 = backend::SketchEngine::new(sk2.clone())
+        .eval_batch(&rows)
+        .unwrap();
+
+    let router = Arc::new(Router::new());
+    let lane_cfg = RouterConfig {
+        batcher: BatcherConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 1 << 14,
+        },
+    };
+    {
+        let sk1 = sk1.clone();
+        router.add_lane(
+            "m",
+            BackendKind::Sketch,
+            move || Ok(Box::new(backend::SketchEngine::new(sk1)) as _),
+            &lane_cfg,
+        );
+    }
+    router.enable_swap(lane_cfg.clone());
+    let mut server = Running::start(router.clone());
+
+    let mut query_conn = TcpStream::connect(server.addr).unwrap();
+    query_conn
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut admin_conn = TcpStream::connect(server.addr).unwrap();
+    admin_conn
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+
+    let n_pre = 300u64;
+    let n_post = 300u64;
+    let req_line = |id: u64| {
+        let mut l = query_req(
+            id,
+            "m",
+            BackendKind::Sketch,
+            rows[(id % rows.len() as u64) as usize].clone(),
+        )
+        .to_line();
+        l.push('\n');
+        l
+    };
+    // Phase 1: a pipelined burst against v1 — left entirely in flight
+    // (no reads yet) while the swap lands.
+    let burst: String = (0..n_pre).map(req_line).collect();
+    query_conn.write_all(burst.as_bytes()).unwrap();
+
+    // Phase 2: the swap verb on a second connection.  Its ack means
+    // add_lane returned: the new lane is registered and the old one
+    // fully drained.
+    let swap_line = format!(
+        "{{\"id\":9000,\"swap\":{{\"model\":\"m\",\"backend\":\"rs\",\
+         \"path\":{:?}}}}}\n",
+        v2_path.to_str().unwrap()
+    );
+    admin_conn.write_all(swap_line.as_bytes()).unwrap();
+    let mut admin_reader =
+        BufReader::new(admin_conn.try_clone().unwrap());
+    let mut ack = String::new();
+    admin_reader.read_line(&mut ack).unwrap();
+    let ack = repsketch::util::json::parse(ack.trim()).unwrap();
+    assert_eq!(ack.get("id").unwrap().as_u64(), Some(9000));
+    let swapped = ack.get("swapped").expect("swap must succeed");
+    assert_eq!(swapped.get("model").unwrap().as_str(), Some("m"));
+    assert_eq!(swapped.get("v").unwrap().as_u64(), Some(2));
+
+    // Phase 3: a second burst, guaranteed post-flip.
+    let burst: String = (n_pre..n_pre + n_post).map(req_line).collect();
+    query_conn.write_all(burst.as_bytes()).unwrap();
+
+    // Every request answered exactly once, zero errors, every value
+    // bit-identical to exactly one version — the one its "v" names.
+    let mut reader = BufReader::new(query_conn.try_clone().unwrap());
+    let mut seen: HashMap<u64, u64> = HashMap::new();
+    for resp in
+        read_responses(&mut reader, (n_pre + n_post) as usize)
+    {
+        let id = resp.id.expect("response id");
+        let v = resp.version.expect("response version stamp");
+        let y = resp.result.unwrap_or_else(|e| {
+            panic!("request {id} answered an error under swap: {e}")
+        });
+        let row = (id % rows.len() as u64) as usize;
+        let (w1, w2) = (want1[row], want2[row]);
+        match v {
+            1 => assert_eq!(
+                y.to_bits(),
+                w1.to_bits(),
+                "id {id}: v1 response must match model v1"
+            ),
+            2 => assert_eq!(
+                y.to_bits(),
+                w2.to_bits(),
+                "id {id}: v2 response must match model v2"
+            ),
+            other => panic!("id {id}: unknown version {other}"),
+        }
+        assert!(seen.insert(id, v).is_none(), "duplicate id {id}");
+    }
+    assert_eq!(seen.len(), (n_pre + n_post) as usize);
+    // Post-ack requests are attributable to the NEW version only.
+    for id in n_pre..n_pre + n_post {
+        assert_eq!(seen[&id], 2, "post-swap id {id} answered by v1");
+    }
+    assert!(
+        seen.values().any(|&v| v == 1),
+        "the pre-swap burst should include v1 answers"
+    );
+
+    // The wire update verb against the swapped lane: bit-identical to
+    // applying the same mutation to sk2 directly.
+    let mut mutated = backend::SketchEngine::new(sk2.clone());
+    let up = backend::UpdateRow {
+        x: vec![0.5, -0.25, 1.0, 0.0],
+        alpha: 0.75,
+        class: 0,
+    };
+    mutated.apply_updates(&[up.clone()], true).unwrap();
+    let want3 = mutated.eval_batch(&rows[..1]).unwrap();
+    let mut upd_line = Request {
+        update: Some(UpdateSpec {
+            weight: up.alpha,
+            class: 0,
+            delete: false,
+            publish: true,
+        }),
+        ..query_req(9500, "m", BackendKind::Sketch, up.x.clone())
+    }
+    .to_line();
+    upd_line.push('\n');
+    query_conn.write_all(upd_line.as_bytes()).unwrap();
+    let acks = read_responses(&mut reader, 1);
+    let ack = &acks[0];
+    assert_eq!(ack.id, Some(9500));
+    assert_eq!(ack.result.as_ref().unwrap(), &0.0);
+    assert!(ack.epoch.is_some(), "wire update ack carries epoch");
+    let mut q_line = query_req(
+        9501,
+        "m",
+        BackendKind::Sketch,
+        rows[0].clone(),
+    )
+    .to_line();
+    q_line.push('\n');
+    query_conn.write_all(q_line.as_bytes()).unwrap();
+    let resps = read_responses(&mut reader, 1);
+    let resp = &resps[0];
+    assert_eq!(
+        resp.result.as_ref().unwrap().to_bits(),
+        want3[0].to_bits(),
+        "wire update must fold bit-identically"
+    );
+
+    // A swap naming a missing file answers an error and never flips.
+    let bad = format!(
+        "{{\"id\":9600,\"swap\":{{\"model\":\"m\",\"backend\":\"rs\",\
+         \"path\":{:?}}}}}\n",
+        tmp.file("missing.rssk").to_str().unwrap()
+    );
+    admin_conn.write_all(bad.as_bytes()).unwrap();
+    let mut err = String::new();
+    admin_reader.read_line(&mut err).unwrap();
+    let err = Response::parse_line(err.trim()).unwrap();
+    assert!(
+        err.result.unwrap_err().contains("swap failed"),
+        "bad swap must answer an error"
+    );
+    assert_eq!(
+        router.version_of("m", BackendKind::Sketch),
+        Some(2),
+        "failed swap must not flip the lane"
+    );
+    server.stop();
+}
+
+// ---------------------------------------------------------------------------
+// 4. Graceful shutdown: SIGTERM/SIGINT drain real serving processes
+// ---------------------------------------------------------------------------
+
+struct ServingChild {
+    child: Child,
+    stdout: BufReader<ChildStdout>,
+}
+
+impl ServingChild {
+    /// Spawn the repsketch binary and wait for the readiness line
+    /// starting with `ready_prefix`; returns the announced address.
+    fn spawn(args: &[&str], ready_prefix: &str) -> (ServingChild, String) {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_repsketch"))
+            .args(args)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn repsketch");
+        let out = child.stdout.take().expect("piped stdout");
+        let mut stdout = BufReader::new(out);
+        let addr;
+        loop {
+            let mut l = String::new();
+            let n = stdout.read_line(&mut l).expect("child stdout");
+            assert!(n > 0, "child exited before announcing readiness");
+            if let Some(rest) = l.trim().strip_prefix(ready_prefix) {
+                // "ADDR" or "ADDR (mode)".
+                addr = rest
+                    .split_whitespace()
+                    .next()
+                    .expect("address after readiness prefix")
+                    .to_string();
+                break;
+            }
+        }
+        (ServingChild { child, stdout }, addr)
+    }
+
+    fn signal(&self, sig: &str) {
+        let ok = Command::new("kill")
+            .args([sig, &self.child.id().to_string()])
+            .status()
+            .expect("run kill")
+            .success();
+        assert!(ok, "kill {sig} {}", self.child.id());
+    }
+
+    /// Wait for exit; returns (exit-ok, remaining stdout).
+    fn finish(mut self) -> (bool, String) {
+        let status = self.child.wait().expect("wait for child");
+        let mut rest = String::new();
+        use std::io::Read;
+        let _ = self.stdout.read_to_string(&mut rest);
+        (status.success(), rest)
+    }
+}
+
+impl Drop for ServingChild {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+#[test]
+fn sigterm_drains_serve_and_exits_zero() {
+    let _g = serial();
+    let mut rng = SplitMix64::new(0x88CD);
+    let d = 4;
+    let sk = RaceSketch::build(
+        &random_kp(&mut rng, d, 3, 16),
+        &SketchConfig::default(),
+    );
+    let tmp = TempDir::new("sigterm_serve");
+    let model = tmp.file("model.rssk");
+    sk.save(&model).unwrap();
+    // `--sharded m=FILE:2` carves the RSSK into a live sh lane — no
+    // artifacts tree needed.
+    let spec = format!("m={}:2", model.to_str().unwrap());
+    let (child, addr) = ServingChild::spawn(
+        &["serve", "--sharded", &spec, "--addr", "127.0.0.1:0"],
+        "serving on ",
+    );
+    // A short session proves the lane serves, and serves correctly.
+    let mut conn = TcpStream::connect(&addr).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let rows = query_rows(&mut rng, 5, d);
+    let want = backend::SketchEngine::new(sk.clone())
+        .eval_batch(&rows)
+        .unwrap();
+    let burst: String = rows
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let mut l = query_req(
+                i as u64,
+                "m",
+                BackendKind::Sharded,
+                r.clone(),
+            )
+            .to_line();
+            l.push('\n');
+            l
+        })
+        .collect();
+    conn.write_all(burst.as_bytes()).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    for (i, resp) in
+        read_responses(&mut reader, rows.len()).iter().enumerate()
+    {
+        assert_eq!(resp.id, Some(i as u64));
+        assert_eq!(
+            resp.result.as_ref().unwrap().to_bits(),
+            want[i].to_bits(),
+            "sharded lane must answer bit-identically pre-kill"
+        );
+    }
+    // SIGTERM → the reactor stops, the lanes drain, the process exits
+    // 0 with the drain banner — not a mid-burst abort.
+    child.signal("-TERM");
+    let (ok, rest) = child.finish();
+    assert!(ok, "SIGTERM must exit 0, got failure; stdout: {rest}");
+    assert!(
+        rest.contains("shutting down: draining lanes"),
+        "drain banner missing: {rest}"
+    );
+    assert!(rest.contains("drained; exiting"), "{rest}");
+    // The socket observes an orderly close.
+    let mut tail = String::new();
+    let eof = reader.read_line(&mut tail);
+    assert!(matches!(eof, Ok(0)), "server socket must close: {eof:?}");
+}
+
+#[test]
+fn sigint_drains_shard_serve_and_exits_zero() {
+    let _g = serial();
+    let mut rng = SplitMix64::new(0x99DE);
+    let sk = RaceSketch::build(
+        &random_kp(&mut rng, 4, 3, 14),
+        &SketchConfig::default(),
+    );
+    let sharded = ShardedSketch::from_race(&sk, 2);
+    let tmp = TempDir::new("sigint_shard");
+    let prefix = tmp.file("model");
+    let paths = sharded.save_shards(prefix.to_str().unwrap()).unwrap();
+    let (child, _addr) = ServingChild::spawn(
+        &[
+            "shard-serve",
+            "--rsfs",
+            paths[0].to_str().unwrap(),
+            "--addr",
+            "127.0.0.1:0",
+        ],
+        "shard-serve listening on ",
+    );
+    child.signal("-INT");
+    let (ok, rest) = child.finish();
+    assert!(ok, "SIGINT must exit 0; stdout: {rest}");
+    assert!(
+        rest.contains("shard-serve: stopped; exiting"),
+        "shard-serve drain banner missing: {rest}"
+    );
+}

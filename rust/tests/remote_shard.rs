@@ -345,7 +345,7 @@ fn routed_remote_lane_serves_argmax_and_mixed_scores() {
         Duration::from_secs(10),
     )
     .expect("connect remote set");
-    let mut router = Router::new();
+    let router = Router::new();
     let cfg = RouterConfig {
         batcher: BatcherConfig {
             max_batch: 8,
@@ -370,6 +370,7 @@ fn routed_remote_lane_serves_argmax_and_mixed_scores() {
                     backend: BackendKind::Sharded,
                     features: q.clone(),
                     want_scores: i % 2 == 0,
+                    update: None,
                 })
                 .unwrap(),
         ));
@@ -842,7 +843,7 @@ fn kill_stall_restart_every_request_gets_exactly_one_response() {
         Duration::from_millis(1500),
     )
     .expect("connect to the child shard servers");
-    let mut router = Router::new();
+    let router = Router::new();
     let cfg = RouterConfig {
         batcher: BatcherConfig {
             max_batch: 8,
@@ -869,6 +870,7 @@ fn kill_stall_restart_every_request_gets_exactly_one_response() {
                     backend: BackendKind::Sharded,
                     features: q,
                     want_scores: false,
+                    update: None,
                 })
                 .unwrap(),
         )
@@ -1214,7 +1216,7 @@ fn replica_failover_kill_and_stall_zero_errors() {
     // Grab the observability surface BEFORE the engine moves into its
     // lane.
     let stats = engine.stats();
-    let mut router = Router::new();
+    let router = Router::new();
     let cfg = RouterConfig {
         batcher: BatcherConfig {
             max_batch: 8,
@@ -1239,6 +1241,7 @@ fn replica_failover_kill_and_stall_zero_errors() {
                     backend: BackendKind::Sharded,
                     features: q,
                     want_scores: false,
+                    update: None,
                 })
                 .unwrap(),
         ));

@@ -122,7 +122,7 @@ fn fast_cfg() -> RouterConfig {
 }
 
 fn sum_router() -> Arc<Router> {
-    let mut r = Router::new();
+    let r = Router::new();
     r.add_lane(
         "m",
         BackendKind::Sketch,
@@ -171,6 +171,7 @@ fn req_line(id: u64, model: &str, x: Vec<f32>) -> String {
         backend: BackendKind::Sketch,
         features: x,
         want_scores: false,
+        update: None,
     }
     .to_line();
     line.push('\n');
@@ -476,7 +477,7 @@ fn sharded_lane_serves_argmax_and_optional_scores_over_the_wire() {
     let reference = fused.clone();
     let sharded = ShardedSketch::from_fused(&fused, 3);
     assert_eq!(sharded.n_shards(), 3);
-    let mut router = Router::new();
+    let router = Router::new();
     router.add_lane(
         "digits",
         BackendKind::Sharded,
@@ -499,6 +500,7 @@ fn sharded_lane_serves_argmax_and_optional_scores_over_the_wire() {
             backend: BackendKind::Sharded,
             features: q.clone(),
             want_scores: i % 2 == 0,
+            update: None,
         }
         .to_line();
         line.push('\n');
@@ -546,7 +548,7 @@ fn sharded_lane_serves_argmax_and_optional_scores_over_the_wire() {
 #[test]
 fn backpressure_errors_still_carry_the_request_id() {
     let _g = serial();
-    let mut router = Router::new();
+    let router = Router::new();
     let cfg = RouterConfig {
         batcher: BatcherConfig {
             max_batch: 1,
@@ -591,7 +593,7 @@ fn backpressure_errors_still_carry_the_request_id() {
 #[test]
 fn malformed_unknown_and_dead_lane_responses_over_the_wire() {
     let _g = serial();
-    let mut router = Router::new();
+    let router = Router::new();
     router.add_lane(
         "m",
         BackendKind::Sketch,

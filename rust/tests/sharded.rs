@@ -137,7 +137,7 @@ fn one_shard_submission_per_shard_per_drained_batch() {
     let pool = Arc::new(WorkerPool::new(n_shards));
     let calls = Arc::new(AtomicUsize::new(0));
     let sizes = Arc::new(Mutex::new(Vec::new()));
-    let mut router = Router::new();
+    let router = Router::new();
     // Both lanes drain strictly by SIZE (max_wait far beyond the test
     // runtime), so the drain count is deterministic: lane "m" fires at
     // exactly 16 queued requests, lane "m1" at every single request.
@@ -191,6 +191,7 @@ fn one_shard_submission_per_shard_per_drained_batch() {
                     backend: BackendKind::Sharded,
                     features: row.clone(),
                     want_scores: false,
+                    update: None,
                 })
                 .unwrap(),
         );
@@ -221,6 +222,7 @@ fn one_shard_submission_per_shard_per_drained_batch() {
         backend: BackendKind::Sharded,
         features: row1.clone(),
         want_scores: false,
+        update: None,
     });
     let want = reference.query_with(&row1, &mut s);
     assert_eq!(resp.result.unwrap().to_bits(), want.to_bits());
@@ -280,7 +282,7 @@ fn multiclass_sharded_lane_matches_reference_and_serves_scores() {
     let fused_ref = fused.clone();
     let sharded = ShardedSketch::from_fused(&fused, 3);
     let pool = Arc::new(WorkerPool::new(4));
-    let mut router = Router::new();
+    let router = Router::new();
     let cfg = RouterConfig {
         batcher: BatcherConfig {
             max_batch: 32,
@@ -306,6 +308,7 @@ fn multiclass_sharded_lane_matches_reference_and_serves_scores() {
                     backend: BackendKind::Sharded,
                     features: row.clone(),
                     want_scores: i % 3 == 0,
+                    update: None,
                 })
                 .unwrap(),
         );
