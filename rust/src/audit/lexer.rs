@@ -1,0 +1,453 @@
+//! A lightweight Rust lexer for the audit pass.
+//!
+//! The rules in [`super::rules`] match **token** patterns, never raw text,
+//! so `unsafe` inside a string literal, a commented-out `Ordering::SeqCst`,
+//! or a raw-string fixture can never produce a false positive.  The lexer
+//! is deliberately small: it distinguishes exactly the token classes the
+//! rules need (identifiers, literals, punctuation, and — crucially —
+//! comments with their line spans, because the annotation syntax lives in
+//! comments).  It is not a full Rust front-end: numeric literal suffixes,
+//! multi-character operators, and attribute grammar are left to the rule
+//! layer, which only ever looks at adjacent significant tokens.
+//!
+//! Handled corner cases (each locked by a unit test in `rules.rs`):
+//! nested block comments, raw strings `r#"…"#` (any hash depth), byte and
+//! raw-byte strings, byte chars `b'x'`, char-vs-lifetime disambiguation
+//! (`'a'` vs `'static`), raw identifiers `r#fn`, escaped quotes, and
+//! multi-line strings (their interior lines count as code lines, not
+//! comment lines).
+
+/// Token classes.  Comments are real tokens here — the annotation rules
+/// need them — but every matcher in `rules.rs` walks the "significant"
+/// (non-comment) token sequence.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum TokKind {
+    /// Identifier or keyword (`unsafe`, `Ordering`, `as`, …).
+    Ident,
+    /// Numeric literal (including suffix characters).
+    Num,
+    /// String literal of any flavor; `text` holds the *inner* contents.
+    Str,
+    /// Char or byte-char literal.
+    Char,
+    /// Lifetime (`'a`, `'static`).
+    Lifetime,
+    /// Single punctuation character.
+    Punct,
+    /// `// …` comment (text includes the slashes).
+    LineComment,
+    /// `/* … */` comment, possibly nested/multi-line.
+    BlockComment,
+}
+
+/// One token with its 1-based line span.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    /// Line the token starts on (1-based).
+    pub line: u32,
+    /// Line the token ends on (== `line` for single-line tokens).
+    pub end_line: u32,
+}
+
+impl Tok {
+    fn one(kind: TokKind, text: String, line: u32) -> Tok {
+        Tok { kind, text, line, end_line: line }
+    }
+}
+
+/// Lex `src` into tokens.  Never fails: unterminated constructs are
+/// closed at end-of-file (the audit must not crash on a half-written
+/// file; it will simply report what it can see).
+pub fn lex(src: &str) -> Vec<Tok> {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Comments.
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let start = i;
+            while i < n && chars[i] != '\n' {
+                i += 1;
+            }
+            toks.push(Tok::one(
+                TokKind::LineComment,
+                chars[start..i].iter().collect(),
+                line,
+            ));
+            continue;
+        }
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let start = i;
+            let start_line = line;
+            let mut depth = 1u32;
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if chars[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            toks.push(Tok {
+                kind: TokKind::BlockComment,
+                text: chars[start..i].iter().collect(),
+                line: start_line,
+                end_line: line,
+            });
+            continue;
+        }
+        // Raw identifier `r#ident` (checked before raw strings: `r#"` has
+        // a quote where the identifier would start).
+        if c == 'r'
+            && i + 2 < n
+            && chars[i + 1] == '#'
+            && (chars[i + 2].is_alphabetic() || chars[i + 2] == '_')
+        {
+            let start = i;
+            i += 2;
+            while i < n && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                i += 1;
+            }
+            toks.push(Tok::one(
+                TokKind::Ident,
+                chars[start..i].iter().collect(),
+                line,
+            ));
+            continue;
+        }
+        // Raw / raw-byte strings: r"…", r#"…"#, br"…", br#"…"#.
+        if c == 'r' || c == 'b' {
+            let mut j = i + 1;
+            if c == 'b' && j < n && chars[j] == 'r' {
+                j += 1;
+            }
+            let raw_ok = (c == 'r' && j == i + 1) || (c == 'b' && j == i + 2);
+            if raw_ok {
+                let mut hashes = 0usize;
+                let mut k = j;
+                while k < n && chars[k] == '#' {
+                    hashes += 1;
+                    k += 1;
+                }
+                if k < n && chars[k] == '"' {
+                    let start_line = line;
+                    let content_start = k + 1;
+                    let mut m = content_start;
+                    while m < n {
+                        if chars[m] == '"' {
+                            let mut closed = true;
+                            for t in 0..hashes {
+                                if m + 1 + t >= n || chars[m + 1 + t] != '#' {
+                                    closed = false;
+                                    break;
+                                }
+                            }
+                            if closed {
+                                break;
+                            }
+                        }
+                        if chars[m] == '\n' {
+                            line += 1;
+                        }
+                        m += 1;
+                    }
+                    let text: String =
+                        chars[content_start..m.min(n)].iter().collect();
+                    toks.push(Tok {
+                        kind: TokKind::Str,
+                        text,
+                        line: start_line,
+                        end_line: line,
+                    });
+                    i = (m + 1 + hashes).min(n);
+                    continue;
+                }
+            }
+            // Byte string b"…" / byte char b'x'.
+            if c == 'b' && i + 1 < n && chars[i + 1] == '"' {
+                let start_line = line;
+                let (text, ni, nl) = lex_dq_string(&chars, i + 1, line);
+                toks.push(Tok {
+                    kind: TokKind::Str,
+                    text,
+                    line: start_line,
+                    end_line: nl,
+                });
+                i = ni;
+                line = nl;
+                continue;
+            }
+            if c == 'b' && i + 1 < n && chars[i + 1] == '\'' {
+                let (ni, nl) = skip_char_literal(&chars, i + 1, line);
+                toks.push(Tok::one(TokKind::Char, String::new(), line));
+                i = ni;
+                line = nl;
+                continue;
+            }
+            // Fall through: plain identifier starting with r/b.
+        }
+        // String literal.
+        if c == '"' {
+            let start_line = line;
+            let (text, ni, nl) = lex_dq_string(&chars, i, line);
+            toks.push(Tok {
+                kind: TokKind::Str,
+                text,
+                line: start_line,
+                end_line: nl,
+            });
+            i = ni;
+            line = nl;
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            if i + 1 < n && chars[i + 1] == '\\' {
+                let (ni, nl) = skip_char_literal(&chars, i, line);
+                toks.push(Tok::one(TokKind::Char, String::new(), line));
+                i = ni;
+                line = nl;
+                continue;
+            }
+            if i + 2 < n && chars[i + 1] != '\'' && chars[i + 2] == '\'' {
+                toks.push(Tok::one(
+                    TokKind::Char,
+                    chars[i + 1].to_string(),
+                    line,
+                ));
+                i += 3;
+                continue;
+            }
+            // Lifetime: `'` followed by identifier characters.
+            let start = i;
+            i += 1;
+            while i < n && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                i += 1;
+            }
+            toks.push(Tok::one(
+                TokKind::Lifetime,
+                chars[start..i].iter().collect(),
+                line,
+            ));
+            continue;
+        }
+        // Numeric literal.  A `.` continues the literal only when a digit
+        // follows, so `pair.0.unwrap()` still yields an `unwrap` token
+        // and `0..n` yields `0`, `.`, `.`, `n`.
+        if c.is_ascii_digit() {
+            let start = i;
+            i += 1;
+            while i < n {
+                let d = chars[i];
+                if d.is_alphanumeric() || d == '_' {
+                    i += 1;
+                    continue;
+                }
+                if d == '.' && i + 1 < n && chars[i + 1].is_ascii_digit() {
+                    i += 1;
+                    continue;
+                }
+                if (d == '+' || d == '-')
+                    && (chars[i - 1] == 'e' || chars[i - 1] == 'E')
+                {
+                    i += 1;
+                    continue;
+                }
+                break;
+            }
+            toks.push(Tok::one(
+                TokKind::Num,
+                chars[start..i].iter().collect(),
+                line,
+            ));
+            continue;
+        }
+        // Identifier / keyword.
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            i += 1;
+            while i < n && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                i += 1;
+            }
+            toks.push(Tok::one(
+                TokKind::Ident,
+                chars[start..i].iter().collect(),
+                line,
+            ));
+            continue;
+        }
+        // Everything else: one punctuation character per token.
+        toks.push(Tok::one(TokKind::Punct, c.to_string(), line));
+        i += 1;
+    }
+    toks
+}
+
+/// Lex a double-quoted string starting at `chars[i] == '"'`.  Returns the
+/// inner text (escapes kept verbatim), the index past the closing quote,
+/// and the updated line counter.
+fn lex_dq_string(chars: &[char], mut i: usize, mut line: u32) -> (String, usize, u32) {
+    let n = chars.len();
+    i += 1; // opening quote
+    let mut out = String::new();
+    while i < n {
+        let c = chars[i];
+        if c == '\\' {
+            if i + 1 < n {
+                let e = chars[i + 1];
+                if e == '\n' {
+                    line += 1;
+                }
+                out.push('\\');
+                out.push(e);
+                i += 2;
+                continue;
+            }
+            i += 1;
+            continue;
+        }
+        if c == '"' {
+            i += 1;
+            break;
+        }
+        if c == '\n' {
+            line += 1;
+        }
+        out.push(c);
+        i += 1;
+    }
+    (out, i, line)
+}
+
+/// Skip a char/byte-char literal starting at `chars[i] == '\''`; returns
+/// the index past the closing quote and the updated line counter.
+fn skip_char_literal(chars: &[char], mut i: usize, mut line: u32) -> (usize, u32) {
+    let n = chars.len();
+    i += 1; // opening quote
+    while i < n {
+        let c = chars[i];
+        if c == '\\' {
+            i += 2;
+            continue;
+        }
+        if c == '\'' {
+            i += 1;
+            break;
+        }
+        if c == '\n' {
+            line += 1;
+        }
+        i += 1;
+    }
+    (i, line)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn strings_and_comments_are_not_code() {
+        let toks = kinds("let s = \"unsafe { Ordering::SeqCst }\"; // unsafe");
+        let idents: Vec<&str> = toks
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Ident)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert_eq!(idents, vec!["let", "s"]);
+        assert!(toks.iter().any(|(k, t)| *k == TokKind::Str && t.contains("SeqCst")));
+        assert!(toks.iter().any(|(k, _)| *k == TokKind::LineComment));
+    }
+
+    #[test]
+    fn raw_strings_any_hash_depth() {
+        let toks = kinds("r##\"x \"# unsafe\"## + b\"p\\\"q\" + br#\"z\"#");
+        let strs: Vec<&str> = toks
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Str)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert_eq!(strs, vec!["x \"# unsafe", "p\\\"q", "z"]);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let toks = kinds("a /* outer /* inner */ still */ b");
+        let idents: Vec<&str> = toks
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Ident)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert_eq!(idents, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let toks = kinds("'a' 'x 'static '\\n' b'z'");
+        let counts = |k: TokKind| toks.iter().filter(|(kk, _)| *kk == k).count();
+        assert_eq!(counts(TokKind::Char), 3);
+        assert_eq!(counts(TokKind::Lifetime), 2);
+    }
+
+    #[test]
+    fn tuple_field_access_does_not_swallow_method() {
+        let toks = kinds("pair.0.unwrap()");
+        assert!(toks
+            .iter()
+            .any(|(k, t)| *k == TokKind::Ident && t == "unwrap"));
+        let toks = kinds("for i in 0..max_len {}");
+        assert!(toks
+            .iter()
+            .any(|(k, t)| *k == TokKind::Ident && t == "max_len"));
+    }
+
+    #[test]
+    fn raw_identifiers_and_numbers() {
+        let toks = kinds("r#fn 1.5e-3 0xFFu32 1e999");
+        assert_eq!(toks[0], (TokKind::Ident, "r#fn".to_string()));
+        assert_eq!(toks[1], (TokKind::Num, "1.5e-3".to_string()));
+        assert_eq!(toks[2], (TokKind::Num, "0xFFu32".to_string()));
+        assert_eq!(toks[3], (TokKind::Num, "1e999".to_string()));
+    }
+
+    #[test]
+    fn line_numbers_track_multiline_tokens() {
+        let src = "a\n/* two\nlines */\nb \"s1\ns2\"\nc";
+        let toks = lex(src);
+        let find = |name: &str| toks.iter().find(|t| t.text == name).map(|t| t.line);
+        assert_eq!(find("a"), Some(1));
+        assert_eq!(find("b"), Some(4));
+        assert_eq!(find("c"), Some(6));
+        let block = toks.iter().find(|t| t.kind == TokKind::BlockComment);
+        let block = match block {
+            Some(b) => b,
+            None => return assert!(false, "no block comment"),
+        };
+        assert_eq!((block.line, block.end_line), (2, 3));
+    }
+}

@@ -1,0 +1,642 @@
+//! The machine-checked invariants catalog.
+//!
+//! Every rule matches over the token stream from [`super::lexer`] (never
+//! raw text) and is scoped to non-test code: anything under a `#[test]`
+//! function or a `#[cfg(test)]` module/impl is exempt.  The annotation
+//! syntax each rule accepts is a marker inside a comment **on the same
+//! line** as the flagged token **or on the comment line(s) directly
+//! above it** (a contiguous run of comment-only lines; the run may end
+//! at a code line's trailing comment).
+//!
+//! | rule id              | invariant                                            | escape annotation |
+//! |----------------------|------------------------------------------------------|-------------------|
+//! | `safety-comment`     | every `unsafe` carries a safety argument             | `// SAFETY: <why sound>` (required, not an escape) |
+//! | `extern-c-confined`  | `extern "C"` only in `coordinator/net/sys.rs`        | none              |
+//! | `syscall-checked`    | fallible syscall results are checked, not discarded  | `// ERRNO: <why ignoring is sound>` |
+//! | `ordering-annotated` | every atomic `Ordering::*` justifies its ordering    | `// ORDERING: <pairing argument>` (required) |
+//! | `seqcst-justified`   | `SeqCst` is a smell here; must claim it is required  | `// ORDERING: seqcst-required <why>` |
+//! | `wire-cast`          | no unvetted `as` numeric cast in wire-facing code    | `// CAST: <why lossless/bounded>` |
+//! | `hot-panic`          | no `panic!`/`unwrap`/`expect` on reactor/lane threads| `// PANIC: <why unreachable or sound>` |
+//!
+//! Scopes: `safety-comment`, `extern-c-confined`, and
+//! `ordering-annotated`/`seqcst-justified` apply to every file under
+//! `rust/src`; `syscall-checked` applies to `coordinator/net/sys.rs`
+//! (the only file allowed to declare syscalls); `wire-cast` applies to
+//! the wire-facing modules in [`WIRE_FILES`]; `hot-panic` applies to the
+//! modules whose non-test code runs on the reactor thread, pool workers,
+//! or the remote-shard lane driver ([`HOT_FILES`]).
+
+use super::lexer::{lex, Tok, TokKind};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Modules that serialize/deserialize wire payloads: lossy `as` casts
+/// here silently truncate protocol values, so they must be `try_from`
+/// conversions or carry a `// CAST:` losslessness argument.
+pub const WIRE_FILES: &[&str] = &[
+    "coordinator/protocol.rs",
+    "shard/remote.rs",
+    "shard/serde.rs",
+    "util/json.rs",
+];
+
+/// Modules whose non-test code executes on the reactor thread, the
+/// persistent pool workers, or the remote-shard lane driver.  A panic
+/// there kills a thread every request depends on.
+pub const HOT_FILES: &[&str] = &[
+    "coordinator/net/reactor.rs",
+    "coordinator/net/conn.rs",
+    "coordinator/net/sys.rs",
+    "coordinator/pool.rs",
+    "shard/remote.rs",
+];
+
+/// The one file allowed to declare `extern "C"`.
+pub const SYS_FILE: &str = "coordinator/net/sys.rs";
+
+/// Fallible syscalls declared in `sys.rs`: their return value encodes
+/// errno and must not be silently discarded.
+const SYSCALLS: &[&str] = &[
+    "epoll_create1",
+    "epoll_ctl",
+    "epoll_wait",
+    "fcntl",
+    "pipe",
+    "read",
+    "write",
+    "close",
+    "signal",
+    "sigaction",
+    "raise",
+];
+
+const ORDERINGS: &[&str] = &["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+
+const NUM_TYPES: &[&str] = &[
+    "u8", "u16", "u32", "u64", "u128", "usize", "i8", "i16", "i32", "i64",
+    "i128", "isize", "f32", "f64",
+];
+
+/// One rule violation at a file:line.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Per-line comment/code index used by the annotation lookups.
+struct LineIndex {
+    comment_by_line: BTreeMap<u32, String>,
+    code_lines: BTreeSet<u32>,
+}
+
+impl LineIndex {
+    fn build(toks: &[Tok]) -> LineIndex {
+        let mut comment_by_line: BTreeMap<u32, String> = BTreeMap::new();
+        let mut code_lines: BTreeSet<u32> = BTreeSet::new();
+        for t in toks {
+            match t.kind {
+                TokKind::LineComment | TokKind::BlockComment => {
+                    for l in t.line..=t.end_line {
+                        let e = comment_by_line.entry(l).or_default();
+                        e.push(' ');
+                        e.push_str(&t.text);
+                    }
+                }
+                _ => {
+                    for l in t.line..=t.end_line {
+                        code_lines.insert(l);
+                    }
+                }
+            }
+        }
+        LineIndex { comment_by_line, code_lines }
+    }
+
+    /// The comment text that "covers" `line`: its own trailing comment
+    /// plus the contiguous run of comment lines directly above (the run
+    /// may terminate at, and include, a code line's trailing comment).
+    fn annotation_text(&self, line: u32) -> String {
+        let mut out = String::new();
+        if let Some(t) = self.comment_by_line.get(&line) {
+            out.push_str(t);
+        }
+        let mut l = line;
+        while l > 1 {
+            l -= 1;
+            match self.comment_by_line.get(&l) {
+                Some(t) => {
+                    out.push(' ');
+                    out.push_str(t);
+                    if self.code_lines.contains(&l) {
+                        break;
+                    }
+                }
+                None => break,
+            }
+        }
+        out
+    }
+}
+
+/// Mark every significant token inside `#[test]` / `#[cfg(test)]`
+/// bodies.  `sig` holds indices into `toks` of non-comment tokens; the
+/// returned mask parallels `sig`.
+fn test_mask(toks: &[Tok], sig: &[usize]) -> Vec<bool> {
+    let text = |p: usize| -> &str { &toks[sig[p]].text };
+    let mut mask = vec![false; sig.len()];
+    let mut p = 0usize;
+    while p + 1 < sig.len() {
+        if !(text(p) == "#" && text(p + 1) == "[") {
+            p += 1;
+            continue;
+        }
+        // Scan the attribute body for `test`, rejecting `not(...)`
+        // forms so `#[cfg(not(test))]` never masks production code.
+        let mut q = p + 2;
+        let mut depth = 1i32;
+        let mut has_test = false;
+        let mut has_not = false;
+        while q < sig.len() && depth > 0 {
+            let t = text(q);
+            if t == "[" {
+                depth += 1;
+            } else if t == "]" {
+                depth -= 1;
+            } else if t == "test" {
+                has_test = true;
+            } else if t == "not" {
+                has_not = true;
+            }
+            q += 1;
+        }
+        if !(has_test && !has_not) {
+            p = q;
+            continue;
+        }
+        // Skip any further attributes between the test attribute and
+        // the item it decorates.
+        let mut r = q;
+        while r + 1 < sig.len() && text(r) == "#" && text(r + 1) == "[" {
+            let mut d = 1i32;
+            r += 2;
+            while r < sig.len() && d > 0 {
+                let t = text(r);
+                if t == "[" {
+                    d += 1;
+                } else if t == "]" {
+                    d -= 1;
+                }
+                r += 1;
+            }
+        }
+        // The decorated item's body: first `{` before any `;`.
+        let mut body: Option<usize> = None;
+        let mut s = r;
+        while s < sig.len() {
+            let t = text(s);
+            if t == "{" {
+                body = Some(s);
+                break;
+            }
+            if t == ";" {
+                break;
+            }
+            s += 1;
+        }
+        let open = match body {
+            Some(b) => b,
+            None => {
+                p = q;
+                continue;
+            }
+        };
+        let mut d = 1i32;
+        let mut e = open + 1;
+        while e < sig.len() && d > 0 {
+            let t = text(e);
+            if t == "{" {
+                d += 1;
+            } else if t == "}" {
+                d -= 1;
+            }
+            e += 1;
+        }
+        for m in p..e {
+            mask[m] = true;
+        }
+        p = q;
+    }
+    mask
+}
+
+fn suffix_match(rel_path: &str, suffixes: &[&str]) -> bool {
+    suffixes.iter().any(|s| rel_path.ends_with(s))
+}
+
+/// Run every rule over one file.  `rel_path` is the repo-relative path
+/// with `/` separators (used for the per-module rule scopes).
+pub fn audit_file(rel_path: &str, src: &str) -> Vec<Finding> {
+    let toks = lex(src);
+    let sig: Vec<usize> = (0..toks.len())
+        .filter(|&i| {
+            toks[i].kind != TokKind::LineComment && toks[i].kind != TokKind::BlockComment
+        })
+        .collect();
+    let mask = test_mask(&toks, &sig);
+    let li = LineIndex::build(&toks);
+    let mut out: Vec<Finding> = Vec::new();
+    let text = |p: usize| -> &str { &toks[sig[p]].text };
+    let kind = |p: usize| -> TokKind { toks[sig[p]].kind };
+    let line = |p: usize| -> u32 { toks[sig[p]].line };
+    let is_wire = suffix_match(rel_path, WIRE_FILES);
+    let is_hot = suffix_match(rel_path, HOT_FILES);
+    let is_sys = rel_path.ends_with(SYS_FILE);
+    let mut push = |line: u32, rule: &'static str, msg: String| {
+        out.push(Finding { file: rel_path.to_string(), line, rule, msg });
+    };
+    for p in 0..sig.len() {
+        let in_test = mask[p];
+        // --- safety-comment -------------------------------------------------
+        if kind(p) == TokKind::Ident && text(p) == "unsafe" && !in_test {
+            let ann = li.annotation_text(line(p));
+            if !ann.contains("SAFETY:") {
+                push(
+                    line(p),
+                    "safety-comment",
+                    "`unsafe` without a `// SAFETY:` argument on the same \
+                     or preceding comment line"
+                        .to_string(),
+                );
+            }
+        }
+        // --- extern-c-confined ----------------------------------------------
+        if kind(p) == TokKind::Ident
+            && text(p) == "extern"
+            && p + 1 < sig.len()
+            && kind(p + 1) == TokKind::Str
+            && text(p + 1) == "C"
+            && !is_sys
+        {
+            push(
+                line(p),
+                "extern-c-confined",
+                format!(
+                    "`extern \"C\"` is confined to {}; declare the syscall \
+                     there behind a safe wrapper",
+                    SYS_FILE
+                ),
+            );
+        }
+        // --- syscall-checked ------------------------------------------------
+        if is_sys
+            && !in_test
+            && kind(p) == TokKind::Ident
+            && SYSCALLS.contains(&text(p))
+            && p + 1 < sig.len()
+            && text(p + 1) == "("
+        {
+            let prev = |k: usize| -> Option<&str> {
+                if k < 1 || p < k { None } else { Some(text(p - k)) }
+            };
+            // Skip method calls / path calls / declarations.
+            let direct_call = !matches!(prev(1), Some(".") | Some(":") | Some("fn"));
+            if direct_call && discards_result(&toks, &sig, p) {
+                let ann = li.annotation_text(line(p));
+                if !ann.contains("ERRNO:") {
+                    push(
+                        line(p),
+                        "syscall-checked",
+                        format!(
+                            "result of fallible syscall `{}` is discarded \
+                             without an `// ERRNO:` justification",
+                            text(p)
+                        ),
+                    );
+                }
+            }
+        }
+        // --- ordering-annotated / seqcst-justified --------------------------
+        if kind(p) == TokKind::Ident
+            && text(p) == "Ordering"
+            && p + 3 < sig.len()
+            && text(p + 1) == ":"
+            && text(p + 2) == ":"
+            && kind(p + 3) == TokKind::Ident
+            && ORDERINGS.contains(&text(p + 3))
+            && !in_test
+        {
+            let ann = li.annotation_text(line(p));
+            if !ann.contains("ORDERING:") {
+                push(
+                    line(p),
+                    "ordering-annotated",
+                    format!(
+                        "`Ordering::{}` without an `// ORDERING:` pairing \
+                         argument",
+                        text(p + 3)
+                    ),
+                );
+            } else if text(p + 3) == "SeqCst" && !ann.contains("seqcst-required") {
+                push(
+                    line(p),
+                    "seqcst-justified",
+                    "`Ordering::SeqCst` is a smell in this codebase; \
+                     annotate `// ORDERING: seqcst-required <why>` or \
+                     downgrade"
+                        .to_string(),
+                );
+            }
+        }
+        // --- wire-cast ------------------------------------------------------
+        if is_wire
+            && !in_test
+            && kind(p) == TokKind::Ident
+            && text(p) == "as"
+            && p + 1 < sig.len()
+            && kind(p + 1) == TokKind::Ident
+            && NUM_TYPES.contains(&text(p + 1))
+        {
+            let ann = li.annotation_text(line(p));
+            if !ann.contains("CAST:") {
+                push(
+                    line(p),
+                    "wire-cast",
+                    format!(
+                        "`as {}` in wire-facing code: use a checked \
+                         `try_from` conversion or justify with `// CAST:`",
+                        text(p + 1)
+                    ),
+                );
+            }
+        }
+        // --- hot-panic ------------------------------------------------------
+        if is_hot && !in_test {
+            let hit = if kind(p) == TokKind::Ident
+                && text(p) == "panic"
+                && p + 1 < sig.len()
+                && text(p + 1) == "!"
+            {
+                Some("panic!")
+            } else if kind(p) == TokKind::Ident
+                && (text(p) == "unwrap" || text(p) == "expect")
+                && p >= 1
+                && text(p - 1) == "."
+                && p + 1 < sig.len()
+                && text(p + 1) == "("
+            {
+                Some(if text(p) == "unwrap" { ".unwrap()" } else { ".expect()" })
+            } else {
+                None
+            };
+            if let Some(what) = hit {
+                let ann = li.annotation_text(line(p));
+                if !ann.contains("PANIC:") {
+                    push(
+                        line(p),
+                        "hot-panic",
+                        format!(
+                            "{} on a reactor/lane-worker thread: return an \
+                             error or justify with `// PANIC:`",
+                            what
+                        ),
+                    );
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Is the call whose callee identifier sits at significant position `p`
+/// an expression-statement (or `let _ =` binding) whose result is
+/// dropped?  Walks backwards over the `unsafe {` wrapper the call sites
+/// in `sys.rs` all share.
+fn discards_result(toks: &[Tok], sig: &[usize], p: usize) -> bool {
+    let text = |k: usize| -> &str { &toks[sig[k]].text };
+    // `let _ = [unsafe {] call(...)`
+    let mut k = p as isize - 1;
+    if k >= 0 && text(k as usize) == "{" && k >= 1 && text(k as usize - 1) == "unsafe" {
+        k -= 2;
+    }
+    if k >= 2
+        && text(k as usize) == "="
+        && text(k as usize - 1) == "_"
+        && text(k as usize - 2) == "let"
+    {
+        return true;
+    }
+    // Statement position: start of file/block or right after `;` / `}`.
+    let k = p as isize - 1;
+    if k < 0 {
+        return true;
+    }
+    let prev = text(k as usize);
+    if prev == ";" || prev == "}" {
+        return true;
+    }
+    if prev == "{" {
+        // `unsafe {` used as an *expression* feeds the value somewhere;
+        // a bare `{` (or a statement-position `unsafe {`) drops it.
+        if k >= 1 && text(k as usize - 1) == "unsafe" {
+            if k < 2 {
+                return true;
+            }
+            let t2 = text(k as usize - 2);
+            return t2 == ";" || t2 == "{" || t2 == "}";
+        }
+        return true;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_hit(path: &str, src: &str) -> Vec<&'static str> {
+        audit_file(path, src).into_iter().map(|f| f.rule).collect()
+    }
+
+    const ANY: &str = "rust/src/sketch/somefile.rs";
+
+    // --- safety-comment ---------------------------------------------------
+
+    #[test]
+    fn unsafe_without_safety_comment_is_flagged() {
+        assert_eq!(
+            rules_hit(ANY, "fn f() { unsafe { g(); } }"),
+            vec!["safety-comment"]
+        );
+    }
+
+    #[test]
+    fn unsafe_with_safety_comment_passes() {
+        let src = "fn f() {\n    // SAFETY: g is sound here\n    unsafe { g(); }\n}\n";
+        assert!(rules_hit(ANY, src).is_empty());
+        let trailing = "fn f() { unsafe { g(); } } // SAFETY: sound\n";
+        assert!(rules_hit(ANY, trailing).is_empty());
+    }
+
+    #[test]
+    fn unsafe_in_string_comment_or_test_code_is_ignored() {
+        assert!(rules_hit(ANY, "let s = \"unsafe { }\";").is_empty());
+        assert!(rules_hit(ANY, "// unsafe { g(); }\nlet x = 1;").is_empty());
+        assert!(rules_hit(ANY, "let s = r#\"unsafe\"#;").is_empty());
+        let test_mod = "#[cfg(test)]\nmod tests {\n    fn f() { unsafe { g(); } }\n}\n";
+        assert!(rules_hit(ANY, test_mod).is_empty());
+        let test_fn = "#[test]\nfn t() { unsafe { g(); } }\n";
+        assert!(rules_hit(ANY, test_fn).is_empty());
+    }
+
+    #[test]
+    fn cfg_not_test_is_still_production_code() {
+        let src = "#[cfg(not(test))]\nmod m {\n    fn f() { unsafe { g(); } }\n}\n";
+        assert_eq!(rules_hit(ANY, src), vec!["safety-comment"]);
+    }
+
+    // --- extern-c-confined ------------------------------------------------
+
+    #[test]
+    fn extern_c_outside_sys_is_flagged() {
+        let src = "extern \"C\" {\n    fn close(fd: i32) -> i32;\n}\n";
+        assert_eq!(rules_hit(ANY, src), vec!["extern-c-confined"]);
+        // In sys.rs the same declaration is the sanctioned home.
+        assert!(rules_hit("rust/src/coordinator/net/sys.rs", src).is_empty());
+        // Mentions in comments/strings never count.
+        assert!(rules_hit(ANY, "// extern \"C\" against libc\n").is_empty());
+    }
+
+    // --- syscall-checked --------------------------------------------------
+
+    const SYS: &str = "rust/src/coordinator/net/sys.rs";
+
+    #[test]
+    fn discarded_syscall_result_is_flagged() {
+        let src = "fn f(fd: i32) {\n    // SAFETY: fd is owned\n    unsafe { close(fd); }\n}\n";
+        assert_eq!(rules_hit(SYS, src), vec!["syscall-checked"]);
+        let let_u = "fn f(w: i32) {\n    // SAFETY: w is owned\n    let _ = unsafe { write(w, p, 1) };\n}\n";
+        assert_eq!(rules_hit(SYS, let_u), vec!["syscall-checked"]);
+    }
+
+    #[test]
+    fn checked_or_justified_syscalls_pass() {
+        let cvt = "fn f(fd: i32) -> io::Result<i32> {\n    // SAFETY: fd valid\n    cvt(unsafe { fcntl(fd, F_GETFL, 0) })\n}\n";
+        assert!(rules_hit(SYS, cvt).is_empty());
+        let bound = "fn f(fd: i32) {\n    // SAFETY: fd valid\n    let n = unsafe { read(fd, b, 1) };\n    if n < 0 { }\n}\n";
+        assert!(rules_hit(SYS, bound).is_empty());
+        let ann = "fn f(fd: i32) {\n    // SAFETY: fd is owned\n    // ERRNO: double-close is benign in Drop\n    unsafe { close(fd); }\n}\n";
+        assert!(rules_hit(SYS, ann).is_empty());
+        // The extern declaration itself is not a call site.
+        let decl = "extern \"C\" {\n    fn close(fd: i32) -> i32;\n}\n";
+        assert!(rules_hit(SYS, decl).is_empty());
+    }
+
+    // --- ordering-annotated / seqcst-justified -----------------------------
+
+    #[test]
+    fn unannotated_ordering_is_flagged() {
+        let src = "fn f(a: &A) { a.x.load(Ordering::Acquire); }\n";
+        assert_eq!(rules_hit(ANY, src), vec!["ordering-annotated"]);
+    }
+
+    #[test]
+    fn annotated_ordering_passes_and_cmp_ordering_is_ignored() {
+        let src = "fn f(a: &A) { a.x.load(Ordering::Acquire); // ORDERING: pairs with the Release store in publish\n}\n";
+        assert!(rules_hit(ANY, src).is_empty());
+        let above = "fn f(a: &A) {\n    // ORDERING: pairs with publish\n    a.x.load(Ordering::Acquire);\n}\n";
+        assert!(rules_hit(ANY, above).is_empty());
+        let cmp = "fn f(x: u8, y: u8) -> Ordering { if x < y { Ordering::Less } else { Ordering::Greater } }\n";
+        assert!(rules_hit(ANY, cmp).is_empty());
+    }
+
+    #[test]
+    fn seqcst_needs_the_stronger_annotation() {
+        let weak = "fn f(a: &A) { a.x.load(Ordering::SeqCst); // ORDERING: global order\n}\n";
+        assert_eq!(rules_hit(ANY, weak), vec!["seqcst-justified"]);
+        let strong = "fn f(a: &A) { a.x.load(Ordering::SeqCst); // ORDERING: seqcst-required cross-variable fence\n}\n";
+        assert!(rules_hit(ANY, strong).is_empty());
+        let bare = "fn f(a: &A) { a.x.load(Ordering::SeqCst); }\n";
+        assert_eq!(rules_hit(ANY, bare), vec!["ordering-annotated"]);
+    }
+
+    // --- wire-cast ---------------------------------------------------------
+
+    #[test]
+    fn lossy_cast_in_wire_module_is_flagged() {
+        let src = "fn f(y: u64) -> u32 { y as u32 }\n";
+        assert_eq!(rules_hit("rust/src/util/json.rs", src), vec!["wire-cast"]);
+        // Same code outside the wire surface is not this rule's business.
+        assert!(rules_hit(ANY, src).is_empty());
+    }
+
+    #[test]
+    fn justified_or_non_numeric_casts_pass() {
+        let ann = "fn f(y: u8) -> u32 { y as u32 // CAST: u8 -> u32 widens\n}\n";
+        assert!(rules_hit("rust/src/util/json.rs", ann).is_empty());
+        let import = "use std::io::Read as IoRead;\n";
+        assert!(rules_hit("rust/src/util/json.rs", import).is_empty());
+        let test_code = "#[cfg(test)]\nmod tests {\n    fn f(y: u64) -> u32 { y as u32 }\n}\n";
+        assert!(rules_hit("rust/src/util/json.rs", test_code).is_empty());
+    }
+
+    // --- hot-panic ----------------------------------------------------------
+
+    const HOT: &str = "rust/src/coordinator/net/reactor.rs";
+
+    #[test]
+    fn panics_on_hot_threads_are_flagged() {
+        assert_eq!(
+            rules_hit(HOT, "fn f(x: Option<u8>) -> u8 { x.unwrap() }\n"),
+            vec!["hot-panic"]
+        );
+        assert_eq!(
+            rules_hit(HOT, "fn f(x: Option<u8>) -> u8 { x.expect(\"boom\") }\n"),
+            vec!["hot-panic"]
+        );
+        assert_eq!(
+            rules_hit(HOT, "fn f() { panic!(\"boom\"); }\n"),
+            vec!["hot-panic"]
+        );
+    }
+
+    #[test]
+    fn fallbacks_tests_and_justified_panics_pass() {
+        assert!(rules_hit(HOT, "fn f(x: Option<u8>) -> u8 { x.unwrap_or(0) }\n").is_empty());
+        assert!(rules_hit(HOT, "#[test]\nfn t() { x.unwrap(); }\n").is_empty());
+        let ann = "fn f(m: &Mutex<u8>) -> u8 { *m.lock().unwrap() // PANIC: poisoned lock means a worker already panicked\n}\n";
+        assert!(rules_hit(HOT, ann).is_empty());
+        // Cold modules may unwrap (CLI arg parsing, tests, experiments).
+        assert!(rules_hit(ANY, "fn f(x: Option<u8>) -> u8 { x.unwrap() }\n").is_empty());
+    }
+
+    // --- fixture corner cases ----------------------------------------------
+
+    #[test]
+    fn macro_bodies_and_commented_out_code_do_not_leak() {
+        let src = "macro_rules! m {\n    () => {\n        unsafe { g() }\n    };\n}\n";
+        // Macro bodies are real code: still must carry SAFETY.
+        assert_eq!(rules_hit(ANY, src), vec!["safety-comment"]);
+        let commented = "// let n = unsafe { read(fd) };\n// a.load(Ordering::SeqCst);\nfn f() {}\n";
+        assert!(rules_hit(SYS, commented).is_empty());
+    }
+
+    #[test]
+    fn findings_carry_file_and_line() {
+        let src = "fn f() {\n    unsafe { g(); }\n}\n";
+        let fs = audit_file(ANY, src);
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].file, ANY);
+        assert_eq!(fs[0].line, 2);
+        assert_eq!(fs[0].rule, "safety-comment");
+        let shown = format!("{}", fs[0]);
+        assert!(shown.starts_with("rust/src/sketch/somefile.rs:2: [safety-comment]"));
+    }
+}

@@ -1,0 +1,91 @@
+//! `repsketch-audit` — the dependency-free static-analysis gate.
+//!
+//! Walks `rust/src/**`, enforces the invariants catalog in
+//! [`repsketch::audit::rules`], prints `file:line: [rule] message` for
+//! every violation, and exits non-zero if any rule fires.  CI runs this
+//! as a hard gate; run it locally with
+//!
+//! ```text
+//! cargo run --release --bin repsketch-audit
+//! ```
+//!
+//! Options:
+//!
+//! * `--root PATH` — repo root to audit (default: walk up from the
+//!   current directory until a `rust/src` tree is found).
+
+use repsketch::audit;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn find_root() -> Option<PathBuf> {
+    // Prefer the compile-time manifest location (works under `cargo
+    // run` from any cwd), then fall back to walking up from cwd (works
+    // for a relocated binary).
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    if let Some(parent) = manifest.parent() {
+        if parent.join("rust").join("src").is_dir() {
+            return Some(parent.to_path_buf());
+        }
+    }
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        if dir.join("rust").join("src").is_dir() {
+            return Some(dir);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => root = args.next().map(PathBuf::from),
+            "--help" | "-h" => {
+                println!(
+                    "repsketch-audit: dependency-free unsafe/atomics/syscall \
+                     lint for rust/src/**\n\nusage: repsketch-audit \
+                     [--root PATH]\n\nExits 0 when the tree is clean, 1 with \
+                     file:line findings otherwise."
+                );
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("repsketch-audit: unknown argument `{}`", other);
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let root = match root.or_else(find_root) {
+        Some(r) => r,
+        None => {
+            eprintln!("repsketch-audit: no rust/src tree found; pass --root PATH");
+            return ExitCode::from(2);
+        }
+    };
+    match audit::audit_tree(&root) {
+        Ok(findings) => {
+            if findings.is_empty() {
+                println!(
+                    "repsketch-audit: clean ({} ok)",
+                    root.join("rust/src").display()
+                );
+                ExitCode::SUCCESS
+            } else {
+                for f in &findings {
+                    println!("{}", f);
+                }
+                eprintln!("repsketch-audit: {} violation(s)", findings.len());
+                ExitCode::from(1)
+            }
+        }
+        Err(e) => {
+            eprintln!("repsketch-audit: {}", e);
+            ExitCode::from(2)
+        }
+    }
+}

@@ -376,6 +376,8 @@ impl Engine for SketchEngine {
             epoch: self.plane.epoch(),
             pending: st
                 .pending
+                // ORDERING: Relaxed — advisory stat mirror maintained
+                // by the plane under its writer mutex (see UpdateSlo).
                 .load(std::sync::atomic::Ordering::Relaxed),
         })
     }
@@ -738,6 +740,8 @@ impl Engine for MulticlassEngine {
             epoch: self.plane.epoch(),
             pending: st
                 .pending
+                // ORDERING: Relaxed — advisory stat mirror maintained
+                // by the plane under its writer mutex (see UpdateSlo).
                 .load(std::sync::atomic::Ordering::Relaxed),
         })
     }
@@ -950,6 +954,8 @@ impl Engine for ShardedEngine {
             epoch: self.planes[0].epoch(),
             pending: st
                 .pending
+                // ORDERING: Relaxed — advisory stat mirror maintained
+                // by the plane under its writer mutex (see UpdateSlo).
                 .load(std::sync::atomic::Ordering::Relaxed),
         })
     }
@@ -1128,9 +1134,12 @@ impl Engine for RemoteShardedEngine {
         // observe a pre-update snapshot.
         let slo = self.set.update_slo();
         let mut ack = UpdateAck {
+            // ORDERING: Relaxed on both — advisory stat mirrors; the
+            // authoritative epoch traveled back in each shard ack.
             epoch: slo.epoch.load(std::sync::atomic::Ordering::Relaxed),
             pending: slo
                 .pending
+                // ORDERING: see above
                 .load(std::sync::atomic::Ordering::Relaxed),
         };
         for (i, u) in ups.iter().enumerate() {

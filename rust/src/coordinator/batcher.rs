@@ -144,6 +144,9 @@ impl DynamicBatcher {
         // submitter that passed a lock-free check could push AFTER a
         // dead lane's drain guard finished draining, stranding an
         // accepted request in a queue nothing will ever service.
+        // ORDERING: Acquire pairs with close()'s Release store; both
+        // run under the state lock (see above), the ordering only makes
+        // the flag's publication explicit.
         if self.closed.load(Ordering::Acquire) {
             return Err((p, SubmitError::Closed));
         }
@@ -151,6 +154,7 @@ impl DynamicBatcher {
             return Err((p, SubmitError::QueueFull));
         }
         st.queue.push_back(p);
+        // ORDERING: Relaxed — monotonic stat counter.
         self.submitted.fetch_add(1, Ordering::Relaxed);
         drop(st);
         self.cv.notify_one();
@@ -171,10 +175,12 @@ impl DynamicBatcher {
                 let ready_by_age = oldest_age >= self.cfg.max_wait;
                 if ready_by_size
                     || ready_by_age
+                    // ORDERING: Acquire pairs with close()'s Release.
                     || self.closed.load(Ordering::Acquire)
                 {
                     let n = st.queue.len().min(self.cfg.max_batch);
                     let batch: Vec<Pending> = st.queue.drain(..n).collect();
+                    // ORDERING: Relaxed — monotonic stat counter.
                     self.batches.fetch_add(1, Ordering::Relaxed);
                     return Some(batch);
                 }
@@ -183,6 +189,7 @@ impl DynamicBatcher {
                 let (g, _) = self.cv.wait_timeout(st, remaining).unwrap();
                 st = g;
             } else {
+                // ORDERING: Acquire pairs with close()'s Release.
                 if self.closed.load(Ordering::Acquire) {
                     return None;
                 }
@@ -201,12 +208,16 @@ impl DynamicBatcher {
     /// drain or rejected with `Closed` — never silently stranded.
     pub fn close(&self) {
         let st = self.state.lock().unwrap();
+        // ORDERING: Release pairs with the Acquire loads in submit/
+        // next_batch/is_closed; the state lock already serializes the
+        // drain decision, the ordering publishes the flag itself.
         self.closed.store(true, Ordering::Release);
         drop(st);
         self.cv.notify_all();
     }
 
     pub fn is_closed(&self) -> bool {
+        // ORDERING: Acquire pairs with close()'s Release store.
         self.closed.load(Ordering::Acquire)
     }
 }

@@ -19,6 +19,54 @@
 //!
 //! The non-Linux thread-per-connection fallback lives in
 //! `coordinator::server` (compiled out of Linux builds).
+//!
+//! # Invariants catalog
+//!
+//! The `repsketch-audit` gate (see [`crate::audit`]) enforces the
+//! *annotations*; this catalog states the *invariants* the annotations
+//! attest to.  Every rule below is checked mechanically on each build —
+//! a violation fails CI with a `file:line` finding.
+//!
+//! 1. **Syscall confinement.** All `extern "C"` declarations live in
+//!    [`sys`] and nowhere else.  Every fallible syscall either has its
+//!    return value checked, or carries an `// ERRNO:` comment stating
+//!    why the error is unactionable at that site (e.g. `close` on a
+//!    teardown path where the fd is forfeit either way).
+//!
+//! 2. **Unsafe is justified.** Every `unsafe` block or fn in the tree
+//!    carries a `// SAFETY:` comment naming the precondition that makes
+//!    it sound (valid fd, live pointer, signal-handler constraints).
+//!    The reactor's safety story is confined to the [`sys`] wrappers;
+//!    [`conn`] and [`reactor`] are safe code over those wrappers.
+//!
+//! 3. **Memory orderings are explained.** Every `Ordering::*` use
+//!    carries an `// ORDERING:` comment naming its pairing: stop flags
+//!    are Release-store / Acquire-load pairs (reactor loop vs.
+//!    stop-handle), stat counters are Relaxed (monotonic, sampled only
+//!    for reporting), and the epoch plane's full protocol is documented
+//!    in [`crate::sketch::epoch`].  `SeqCst` additionally requires a
+//!    `seqcst-required` justification — there are currently zero such
+//!    sites.
+//!
+//! 4. **Wire integers are checked.** In the wire-facing files
+//!    (`coordinator/protocol.rs`, `shard/remote.rs`, `shard/serde.rs`,
+//!    `util/json.rs`) every `as` numeric cast is either replaced with
+//!    `try_from` surfacing a descriptive error, or carries a `// CAST:`
+//!    comment proving losslessness (widening, bounds-checked, or
+//!    explicitly tolerated rounding in latency reports).
+//!
+//! 5. **The hot path does not panic.** In the serve-path files
+//!    (reactor, conn, sys, pool, shard/remote) `panic!` / `unwrap` /
+//!    `expect` require a `// PANIC:` justification — allowed only for
+//!    construction-time setup, mutex poison (a prior panic already
+//!    tearing the process down), and stated invariants.
+//!
+//! 6. **The epoch plane is schedule-checked.** The RCU counter-plane
+//!    protocol behind live updates is exercised by
+//!    [`crate::audit::interleave`]: every feasible two-thread
+//!    interleaving (plus seeded three-thread walks) must leave pinned
+//!    snapshots bitwise identical to a single-pass rebuild.  The
+//!    battery runs in `cargo test` and in `tests/audit_interleave.rs`.
 
 pub mod conn;
 pub mod reactor;

@@ -125,6 +125,9 @@ impl Reactor {
     /// the reactor closes all connections.
     pub fn run(&mut self) {
         let mut events = [EpollEvent { events: 0, data: 0 }; 128];
+        // ORDERING: Acquire pairs with the Release store in the signal
+        // handler / Server::shutdown, so a stop request is observed
+        // together with everything written before it.
         while !self.stop.load(Ordering::Acquire) {
             let n = match self.epoll.wait(&mut events, IDLE_WAIT_MS) {
                 Ok(n) => n,
@@ -164,6 +167,7 @@ impl Reactor {
                     let mut conn = Conn::new(stream);
                     conn.interest = interest;
                     self.conns.insert(token, conn);
+                    // ORDERING: Relaxed — monotonic stat counter.
                     self.accepted.fetch_add(1, Ordering::Relaxed);
                 }
                 Err(ref e)

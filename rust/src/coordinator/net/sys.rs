@@ -72,7 +72,10 @@ fn cvt(ret: c_int) -> io::Result<c_int> {
 /// `fcntl(F_SETFL, flags | O_NONBLOCK)` — used for the wake pipe (std
 /// already covers the sockets via `set_nonblocking`).
 pub fn set_nonblocking(fd: c_int) -> io::Result<()> {
+    // SAFETY: value-only arguments on a caller-owned fd; the kernel
+    // validates fd and reports misuse through -1/errno, which cvt maps.
     let flags = cvt(unsafe { fcntl(fd, F_GETFL, 0) })?;
+    // SAFETY: same value-only call; result checked through cvt.
     cvt(unsafe { fcntl(fd, F_SETFL, flags | O_NONBLOCK) })?;
     Ok(())
 }
@@ -84,6 +87,8 @@ pub struct Epoll {
 
 impl Epoll {
     pub fn new() -> io::Result<Epoll> {
+        // SAFETY: no pointers cross the boundary; the returned fd is
+        // owned by the Epoll and closed exactly once in Drop.
         let fd = cvt(unsafe { epoll_create1(EPOLL_CLOEXEC) })?;
         Ok(Epoll { fd })
     }
@@ -114,6 +119,8 @@ impl Epoll {
         token: u64,
     ) -> io::Result<()> {
         let mut ev = EpollEvent { events: interest, data: token };
+        // SAFETY: `ev` is a live stack value for the duration of the
+        // call and the kernel only reads it; result checked through cvt.
         cvt(unsafe { epoll_ctl(self.fd, op, fd, &mut ev) })?;
         Ok(())
     }
@@ -126,6 +133,9 @@ impl Epoll {
         timeout_ms: c_int,
     ) -> io::Result<usize> {
         loop {
+            // SAFETY: the out-pointer and its capacity come from the
+            // same live slice, so the kernel writes only within bounds;
+            // the result is checked below (>=0 count, else errno).
             let n = unsafe {
                 epoll_wait(
                     self.fd,
@@ -147,7 +157,11 @@ impl Epoll {
 
 impl Drop for Epoll {
     fn drop(&mut self) {
+        // SAFETY: `self.fd` is the epoll fd this struct owns; nothing
+        // else closes it, so this is the single close.
         unsafe {
+            // ERRNO: Drop cannot propagate; EBADF is impossible for an
+            // owned fd and EINTR on close must not be retried on Linux.
             close(self.fd);
         }
     }
@@ -165,11 +179,19 @@ pub struct WakePipe {
 impl WakePipe {
     pub fn new() -> io::Result<WakePipe> {
         let mut fds = [0 as c_int; 2];
+        // SAFETY: the out-pointer addresses a live 2-element array the
+        // kernel fills; result checked through cvt.
         cvt(unsafe { pipe(fds.as_mut_ptr()) })?;
         let (r, w) = (fds[0], fds[1]);
         if let Err(e) = set_nonblocking(r).and_then(|()| set_nonblocking(w)) {
+            // SAFETY: both fds were just created by pipe() above and
+            // are not yet owned by any WakePipe; closed exactly once.
             unsafe {
+                // ERRNO: already on the fcntl error path — the fcntl
+                // error is the one to surface, a close failure on a
+                // fresh pipe fd carries no extra signal.
                 close(r);
+                // ERRNO: same as above.
                 close(w);
             }
             return Err(e);
@@ -185,6 +207,11 @@ impl WakePipe {
     /// already queued.
     pub fn wake(&self) {
         let b = [1u8];
+        // SAFETY: the buffer pointer/length name one live byte and the
+        // kernel only reads it.
+        // ERRNO: the write end is nonblocking, so the only failure mode
+        // is EAGAIN on a full pipe — and a full pipe already contains a
+        // pending wake byte, which is the entire point of the call.
         let _ = unsafe { write(self.w, b.as_ptr() as *const c_void, 1) };
     }
 
@@ -192,6 +219,9 @@ impl WakePipe {
     pub fn drain(&self) {
         let mut buf = [0u8; 256];
         loop {
+            // SAFETY: pointer and length name the same live stack
+            // buffer, so the kernel writes only within bounds; the
+            // result is checked below (<= 0 terminates the drain).
             let n = unsafe {
                 read(self.r, buf.as_mut_ptr() as *mut c_void, buf.len())
             };
@@ -204,8 +234,13 @@ impl WakePipe {
 
 impl Drop for WakePipe {
     fn drop(&mut self) {
+        // SAFETY: both fds are owned by this WakePipe and closed
+        // exactly once, here.
         unsafe {
+            // ERRNO: Drop cannot propagate; EBADF is impossible for an
+            // owned fd and EINTR on close must not be retried on Linux.
             close(self.r);
+            // ERRNO: same as above.
             close(self.w);
         }
     }
@@ -230,8 +265,17 @@ static STOP_TARGET: AtomicPtr<AtomicBool> =
 extern "C" fn stop_signal_handler(_sig: c_int) {
     // Async-signal-safe by construction: one atomic load, one atomic
     // store.  No allocation, no locks, no formatting, no IO.
+    //
+    // ORDERING: Acquire pairs with the Release store in
+    // install_stop_signals, so the handler sees a fully initialized
+    // AtomicBool behind the pointer it loads.
     let p = STOP_TARGET.load(Ordering::Acquire);
     if !p.is_null() {
+        // SAFETY: non-null means install_stop_signals published a
+        // pointer from Arc::into_raw that is intentionally never freed
+        // (see below), so it outlives every signal delivery.
+        // ORDERING: Release pairs with the reactor's Acquire poll of
+        // the stop flag in its idle wait.
         unsafe { (*p).store(true, Ordering::Release) };
     }
 }
@@ -248,11 +292,20 @@ extern "C" fn stop_signal_handler(_sig: c_int) {
 /// is a few bytes, bounded by install count.
 pub fn install_stop_signals(stop: &Arc<AtomicBool>) {
     let raw = Arc::into_raw(stop.clone()) as *mut AtomicBool;
+    // ORDERING: Release pairs with the handler's Acquire load, making
+    // the Arc's heap contents visible before the pointer is.
     STOP_TARGET.store(raw, Ordering::Release);
-    unsafe {
-        signal(SIGINT, stop_signal_handler as usize);
-        signal(SIGTERM, stop_signal_handler as usize);
-    }
+    // SAFETY: registers a fn-pointer handler that is async-signal-safe
+    // (see stop_signal_handler); signum values are valid constants.
+    let (r1, r2) = unsafe {
+        (
+            signal(SIGINT, stop_signal_handler as usize),
+            signal(SIGTERM, stop_signal_handler as usize),
+        )
+    };
+    // SIG_ERR is usize::MAX; with valid constant signums it cannot
+    // occur, but surface a kernel surprise loudly in debug builds.
+    debug_assert!(r1 != usize::MAX && r2 != usize::MAX);
 }
 
 #[cfg(test)]

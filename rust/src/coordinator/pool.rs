@@ -87,6 +87,9 @@ impl WorkerPool {
                         );
                     }
                 })
+                // PANIC: construction-time only (never on the batch
+                // hot path); failing to spawn a pool worker leaves the
+                // process unable to serve at all.
                 .expect("spawn pool worker");
             shards.push(Mutex::new(tx));
             handles.push(handle);
@@ -104,6 +107,8 @@ impl WorkerPool {
     /// hit at engine construction, never on the batch hot path.
     pub fn shared() -> Arc<WorkerPool> {
         static SHARED: Mutex<Option<Arc<WorkerPool>>> = Mutex::new(None);
+        // PANIC: poisoned only if a constructor panicked while
+        // holding it, which already tears the process down.
         let mut slot = SHARED.lock().unwrap();
         if let Some(pool) = slot.as_ref() {
             return pool.clone();
@@ -126,14 +131,21 @@ impl WorkerPool {
     /// the time a `run_jobs` call returns, every one of its shards is
     /// counted (the increment happens-before the shard's result send).
     pub fn jobs_executed(&self) -> usize {
+        // ORDERING: Relaxed — the channel recv in run_jobs is the
+        // happens-before edge; this read is a stat snapshot.
         self.executed.load(Ordering::Relaxed)
     }
 
     fn send_to(&self, shard: usize, job: Job) {
         self.shards[shard % self.shards.len()]
             .lock()
+            // PANIC: sender mutex is only held across a send, which
+            // does not panic — it cannot be poisoned.
             .unwrap()
             .send(job)
+            // PANIC: workers are immortal by construction (they catch
+            // job panics); a dead receiver means the invariant is
+            // already broken and continuing would hang the caller.
             .expect("pool worker alive");
     }
 
@@ -151,6 +163,8 @@ impl WorkerPool {
     {
         let n = jobs.len();
         let (tx, rx) = channel::<(usize, std::thread::Result<T>)>();
+        // ORDERING: Relaxed — round-robin cursor; only atomicity of
+        // the reservation matters.
         let start = self.next.fetch_add(n, Ordering::Relaxed);
         for (i, f) in jobs.into_iter().enumerate() {
             let tx = tx.clone();
@@ -161,6 +175,8 @@ impl WorkerPool {
                     let r = std::panic::catch_unwind(
                         std::panic::AssertUnwindSafe(|| f(ws)),
                     );
+                    // ORDERING: Relaxed — the result send below is
+                    // the synchronizing edge; see jobs_executed.
                     executed.fetch_add(1, Ordering::Relaxed);
                     let _ = tx.send((i, r));
                 }),
@@ -169,12 +185,15 @@ impl WorkerPool {
         drop(tx);
         let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
         for _ in 0..n {
+            // PANIC: every job sends exactly once (panics are caught
+            // and forwarded as Err), so n sends always arrive.
             let (i, r) = rx.recv().expect("pool shard completed");
             match r {
                 Ok(v) => out[i] = Some(v),
                 Err(payload) => std::panic::resume_unwind(payload),
             }
         }
+        // PANIC: the loop above filled every slot or resumed unwind.
         out.into_iter().map(|o| o.expect("shard slot filled")).collect()
     }
 }
@@ -185,6 +204,8 @@ impl Drop for WorkerPool {
         // worker outlives the pool (the `shared()` pool is never
         // dropped, so its workers persist for the process lifetime).
         self.shards.clear();
+        // PANIC: handles mutex is only held here and at push time in
+        // new(); neither panics while holding it.
         for h in self.handles.lock().unwrap().drain(..) {
             let _ = h.join();
         }

@@ -131,8 +131,11 @@ impl Request {
                 let weight = match u.get("weight") {
                     None => 1.0f32,
                     Some(w) => {
+                        // CAST: protocol weights are f32 payloads;
+                        // f64 -> f32 rounds to nearest, finiteness is
+                        // checked on the next line.
                         let w = w.as_f64().ok_or("invalid update weight")?
-                            as f32;
+                            as f32; // CAST: see above
                         if !w.is_finite() {
                             return Err("non-finite update weight".into());
                         }
@@ -175,6 +178,8 @@ impl Request {
                 "update",
                 json::obj(vec![
                     ("weight", Json::num_f32(u.weight)),
+                    // CAST: usize -> u64 widens on every supported
+                    // target (64-bit and 32-bit).
                     ("class", Json::from_u64(u.class as u64)),
                     ("delete", Json::Bool(u.delete)),
                     ("publish", Json::Bool(u.publish)),
@@ -268,6 +273,7 @@ impl Response {
         let y = j
             .get("y")
             .and_then(|v| v.as_f64())
+            // CAST: wire scores are f32 payloads; round to nearest.
             .ok_or("missing y")? as f32;
         let scores = j.get("scores").map(|v| v.as_f32_flat());
         let us = j.get("us").and_then(|v| v.as_f64()).unwrap_or(0.0);

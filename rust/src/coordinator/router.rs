@@ -118,6 +118,8 @@ impl Router {
     where
         F: FnOnce() -> anyhow::Result<Box<dyn Engine>> + Send + 'static,
     {
+        // ORDERING: Relaxed — unique-id allocator; only atomicity of
+        // the increment matters, not ordering against other memory.
         let version = self.next_version.fetch_add(1, Ordering::Relaxed) + 1;
         let batcher = Arc::new(DynamicBatcher::new(cfg.batcher.clone()));
         let slo = Arc::new(LaneSlo::new());
@@ -448,6 +450,7 @@ impl Router {
         let mut lane = match self.lanes.read().unwrap().get(&key) {
             Some(l) => l.clone(),
             None => {
+                // ORDERING: Relaxed — monotonic stat counter.
                 self.rejected.fetch_add(1, Ordering::Relaxed);
                 responder.send(Response::err(
                     Some(id),
@@ -482,6 +485,7 @@ impl Router {
                             }
                         }
                     }
+                    // ORDERING: Relaxed — monotonic stat counter.
                     self.rejected.fetch_add(1, Ordering::Relaxed);
                     p.responder.send(Response::err(
                         Some(id),
@@ -522,8 +526,9 @@ impl Router {
                 (
                     m.clone(),
                     k.name().to_string(),
+                    // ORDERING: Relaxed — stat snapshot reads.
                     lane.batcher.submitted.load(Ordering::Relaxed),
-                    lane.batcher.batches.load(Ordering::Relaxed),
+                    lane.batcher.batches.load(Ordering::Relaxed), // ORDERING: see above
                     lane.slo.latency.summary(),
                 )
             })
@@ -617,6 +622,7 @@ impl Router {
                             Json::from_u64(
                                 lane.batcher
                                     .submitted
+                                    // ORDERING: Relaxed — stat snapshot.
                                     .load(Ordering::Relaxed),
                             ),
                         ),
@@ -625,6 +631,7 @@ impl Router {
                             Json::from_u64(
                                 lane.batcher
                                     .batches
+                                    // ORDERING: Relaxed — stat snapshot.
                                     .load(Ordering::Relaxed),
                             ),
                         ),
@@ -674,6 +681,7 @@ impl Router {
                     (
                         "rejected",
                         Json::from_u64(
+                            // ORDERING: Relaxed — stat snapshot.
                             self.rejected.load(Ordering::Relaxed),
                         ),
                     ),

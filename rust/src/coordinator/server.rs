@@ -153,11 +153,13 @@ impl Server {
     fn serve_fallback(&self) {
         self.listener.set_nonblocking(true).ok();
         loop {
+            // ORDERING: Acquire pairs with shutdown's Release store.
             if self.stop.load(Ordering::Acquire) {
                 break;
             }
             match self.listener.accept() {
                 Ok((stream, _)) => {
+                    // ORDERING: Relaxed — monotonic stat counter.
                     self.connections.fetch_add(1, Ordering::Relaxed);
                     let router = self.router.clone();
                     let stop = self.stop.clone();
@@ -201,6 +203,7 @@ fn handle_conn_fallback(
     });
 
     for line in reader.lines() {
+        // ORDERING: Acquire pairs with shutdown's Release store.
         if stop.load(Ordering::Acquire) {
             break;
         }

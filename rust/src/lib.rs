@@ -16,6 +16,7 @@
 //!   [`experiments`] harness regenerating every table and figure of the
 //!   paper's evaluation.
 
+pub mod audit;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;

@@ -49,12 +49,17 @@ impl LatencyHistogram {
     }
 
     pub fn record_ns(&self, ns: u64) {
+        // ORDERING: Relaxed on all three — independent monotonic stat
+        // counters; a reader racing a record may see a sample in one
+        // counter and not the others, which quantile/mean readout
+        // tolerates by construction (approximate by design).
         self.counts[Self::bucket_for(ns)].fetch_add(1, Ordering::Relaxed);
-        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
-        self.n.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed); // ORDERING: see above
+        self.n.fetch_add(1, Ordering::Relaxed); // ORDERING: see above
     }
 
     pub fn count(&self) -> u64 {
+        // ORDERING: Relaxed — monotonic stat read; snapshots may lag.
         self.n.load(Ordering::Relaxed)
     }
 
@@ -63,6 +68,7 @@ impl LatencyHistogram {
         if n == 0 {
             return 0.0;
         }
+        // ORDERING: Relaxed — stat read paired only with count above.
         self.sum_ns.load(Ordering::Relaxed) as f64 / n as f64
     }
 
@@ -75,6 +81,7 @@ impl LatencyHistogram {
         let target = (q * n as f64).ceil() as u64;
         let mut acc = 0u64;
         for i in 0..BUCKETS {
+            // ORDERING: Relaxed — approximate quantile readout.
             acc += self.counts[i].load(Ordering::Relaxed);
             if acc >= target {
                 return Self::bucket_upper(i);

@@ -64,20 +64,25 @@ impl LaneSlo {
 
     /// One successfully answered request.
     pub fn record_ok(&self, dur: std::time::Duration) {
+        // ORDERING: Relaxed — independent monotonic stat counter; no
+        // other memory is published through it.
         self.ok.fetch_add(1, Ordering::Relaxed);
         self.latency.record(dur);
     }
 
     /// One request answered with an error.
     pub fn record_error(&self) {
+        // ORDERING: Relaxed — independent monotonic stat counter.
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn ok_count(&self) -> u64 {
+        // ORDERING: Relaxed — monotonic stat read; snapshots may lag.
         self.ok.load(Ordering::Relaxed)
     }
 
     pub fn error_count(&self) -> u64 {
+        // ORDERING: Relaxed — monotonic stat read; snapshots may lag.
         self.errors.load(Ordering::Relaxed)
     }
 
@@ -131,8 +136,12 @@ impl UpdateSlo {
     /// One delta applied to the shadow plane; `pending_now` is the new
     /// unpublished-delta count.
     pub fn record_update(&self, pending_now: u64) {
+        // ORDERING: Relaxed on both — advisory stat mirrors of state
+        // the plane's writer mutex already serializes; readers (stats
+        // verb, publish fast path) tolerate lag and re-check under the
+        // mutex before acting.
         self.updates.fetch_add(1, Ordering::Relaxed);
-        self.pending.store(pending_now, Ordering::Relaxed);
+        self.pending.store(pending_now, Ordering::Relaxed); // ORDERING: see above
         let mut since = self.pending_since.lock().unwrap();
         if since.is_none() {
             *since = Some(Instant::now());
@@ -141,9 +150,12 @@ impl UpdateSlo {
 
     /// An epoch flip made every pending delta reader-visible.
     pub fn record_publish(&self, epoch: u64) {
+        // ORDERING: Relaxed on all three — advisory stat mirrors; the
+        // authoritative epoch is CounterPlane's Release/Acquire atomic,
+        // these only feed the stats verb.
         self.publishes.fetch_add(1, Ordering::Relaxed);
-        self.pending.store(0, Ordering::Relaxed);
-        self.epoch.store(epoch, Ordering::Relaxed);
+        self.pending.store(0, Ordering::Relaxed); // ORDERING: see above
+        self.epoch.store(epoch, Ordering::Relaxed); // ORDERING: see above
         *self.pending_since.lock().unwrap() = None;
     }
 
@@ -157,6 +169,8 @@ impl UpdateSlo {
     }
 
     pub fn to_json(&self) -> Json {
+        // ORDERING: Relaxed — stats-verb snapshot of monotonic
+        // counters; exactness across counters is not promised.
         let c = |a: &AtomicU64| Json::from_u64(a.load(Ordering::Relaxed));
         json::obj(vec![
             ("epoch", c(&self.epoch)),
@@ -194,6 +208,8 @@ pub struct ShardSlo {
 
 impl ShardSlo {
     pub fn to_json(&self) -> Json {
+        // ORDERING: Relaxed — stats-verb snapshot of monotonic
+        // counters; exactness across counters is not promised.
         let c = |a: &AtomicU64| Json::from_u64(a.load(Ordering::Relaxed));
         json::obj(vec![
             ("gathers", c(&self.gathers)),
@@ -237,14 +253,20 @@ impl ReplicaSlo {
 
     /// EWMA latency estimate in microseconds; `0.0` = no samples yet.
     pub fn ewma_us(&self) -> f64 {
+        // ORDERING: Relaxed — single-word advisory estimate, written
+        // and mostly read on the lane thread; a stale read only skews a
+        // hedging deadline marginally.
         f64::from_bits(self.ewma_us_bits.load(Ordering::Relaxed))
     }
 
     pub fn set_ewma_us(&self, v: f64) {
+        // ORDERING: Relaxed — see ewma_us.
         self.ewma_us_bits.store(v.to_bits(), Ordering::Relaxed);
     }
 
     pub fn to_json(&self) -> Json {
+        // ORDERING: Relaxed — stats-verb snapshot of monotonic
+        // counters; exactness across counters is not promised.
         let c = |a: &AtomicU64| Json::from_u64(a.load(Ordering::Relaxed));
         json::obj(vec![
             ("addr", Json::Str(self.addr.clone())),
@@ -298,6 +320,8 @@ impl RemoteShardStats {
                 .enumerate()
                 .map(|(s, slo)| {
                     let c = |a: &AtomicU64| {
+                        // ORDERING: Relaxed — stats-verb snapshot of
+                        // monotonic counters.
                         Json::from_u64(a.load(Ordering::Relaxed))
                     };
                     json::obj(vec![

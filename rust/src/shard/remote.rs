@@ -149,6 +149,8 @@ fn parse_f32_arr(j: &Json, what: &str) -> Result<Vec<f32>, String> {
     let mut out = Vec::with_capacity(arr.len());
     for (i, e) in arr.iter().enumerate() {
         match e.as_f64() {
+            // CAST: f64 -> f32 narrows by design; the finite check
+            // rejects values the narrower type cannot represent.
             Some(v) if (v as f32).is_finite() => out.push(v as f32),
             Some(_) => {
                 return Err(format!("{what}[{i}] is not a finite f32"))
@@ -177,7 +179,7 @@ pub fn means_request_line(id: u64, batch: usize, proj_t: &[f32])
     json::obj(vec![
         ("id", Json::from_u64(id)),
         ("shard", Json::Str("means".into())),
-        ("b", Json::from_u64(batch as u64)),
+        ("b", Json::from_u64(batch as u64)), // CAST: usize -> u64 widens losslessly
         ("proj", f32_arr(proj_t)),
     ])
     .to_string()
@@ -199,7 +201,7 @@ pub fn update_request_line(
         ("shard", Json::Str("update".into())),
         ("x", f32_arr(x)),
         ("alpha", Json::num_f32(alpha)),
-        ("class", Json::from_u64(class as u64)),
+        ("class", Json::from_u64(class as u64)), // CAST: usize -> u64 widens losslessly
         ("publish", Json::Bool(publish)),
     ])
     .to_string()
@@ -245,7 +247,8 @@ pub fn parse_shard_request(line: &str) -> Result<ShardRequest, String> {
             let batch = j
                 .get("b")
                 .and_then(|v| v.as_u64())
-                .ok_or("missing/invalid b")? as usize;
+                .and_then(|v| usize::try_from(v).ok())
+                .ok_or("missing/invalid b")?;
             if batch == 0 {
                 return Err("b must be at least 1".into());
             }
@@ -261,6 +264,8 @@ pub fn parse_shard_request(line: &str) -> Result<ShardRequest, String> {
         "update" => {
             let x = parse_f32_arr(j.get("x").ok_or("missing x")?, "x")?;
             let alpha = match j.get("alpha").and_then(|v| v.as_f64()) {
+                // CAST: f64 -> f32 narrows by design; the finite
+                // check rejects what f32 cannot represent.
                 Some(v) if (v as f32).is_finite() => v as f32,
                 Some(_) => {
                     return Err("alpha is not a finite f32".into())
@@ -269,9 +274,10 @@ pub fn parse_shard_request(line: &str) -> Result<ShardRequest, String> {
             };
             let class = match j.get("class") {
                 None => 0,
-                Some(v) => {
-                    v.as_u64().ok_or("invalid class")? as usize
-                }
+                Some(v) => usize::try_from(
+                    v.as_u64().ok_or("invalid class")?,
+                )
+                .map_err(|_| "class exceeds this platform's usize")?,
             };
             let publish = match j.get("publish") {
                 None => false,
@@ -290,25 +296,25 @@ pub fn parse_shard_request(line: &str) -> Result<ShardRequest, String> {
 pub fn hello_response_line(id: u64, h: &ShardHello) -> String {
     let head = &h.head;
     let hello = json::obj(vec![
-        ("index", Json::from_u64(h.shard_index as u64)),
-        ("shards", Json::from_u64(h.n_shards as u64)),
-        ("classes", Json::from_u64(head.n_classes as u64)),
+        ("index", Json::from_u64(h.shard_index as u64)), // CAST: widens losslessly
+        ("shards", Json::from_u64(h.n_shards as u64)), // CAST: widens losslessly
+        ("classes", Json::from_u64(head.n_classes as u64)), // CAST: widens losslessly
         ("mc", Json::Bool(head.multiclass)),
-        ("rows", Json::from_u64(head.rows as u64)),
-        ("cols", Json::from_u64(head.cols as u64)),
-        ("k", Json::from_u64(head.k_per_row as u64)),
-        ("groups", Json::from_u64(head.groups as u64)),
+        ("rows", Json::from_u64(head.rows as u64)), // CAST: widens losslessly
+        ("cols", Json::from_u64(head.cols as u64)), // CAST: widens losslessly
+        ("k", Json::from_u64(head.k_per_row as u64)), // CAST: widens losslessly
+        ("groups", Json::from_u64(head.groups as u64)), // CAST: widens losslessly
         ("mom", Json::Bool(head.use_mom)),
         ("debias", Json::Bool(head.debias)),
-        ("d", Json::from_u64(head.d as u64)),
-        ("p", Json::from_u64(head.p as u64)),
-        ("width", Json::num(head.width as f64)),
+        ("d", Json::from_u64(head.d as u64)), // CAST: widens losslessly
+        ("p", Json::from_u64(head.p as u64)), // CAST: widens losslessly
+        ("width", Json::num(head.width as f64)), // CAST: f32 -> f64 widens losslessly
         // u64 seeds don't survive f64; ship as a decimal string.
         ("seed", Json::Str(head.lsh_seed.to_string())),
-        ("row_start", Json::from_u64(h.span.row_start as u64)),
-        ("row_end", Json::from_u64(h.span.row_end as u64)),
-        ("group_start", Json::from_u64(h.span.group_start as u64)),
-        ("group_end", Json::from_u64(h.span.group_end as u64)),
+        ("row_start", Json::from_u64(h.span.row_start as u64)), // CAST: widens losslessly
+        ("row_end", Json::from_u64(h.span.row_end as u64)), // CAST: widens losslessly
+        ("group_start", Json::from_u64(h.span.group_start as u64)), // CAST: widens losslessly
+        ("group_end", Json::from_u64(h.span.group_end as u64)), // CAST: widens losslessly
         ("seq", Json::from_u64(h.seq)),
         ("alpha", f32_arr(&head.alpha_sums)),
         ("a", f32_arr(&head.a)),
@@ -330,7 +336,7 @@ pub fn parse_hello(line: &str, want_id: u64)
     let get_u = |k: &str| -> Result<usize, String> {
         h.get(k)
             .and_then(|v| v.as_u64())
-            .map(|v| v as usize)
+            .and_then(|v| usize::try_from(v).ok())
             .ok_or_else(|| format!("hello missing/invalid {k}"))
     };
     let get_b = |k: &str| -> Result<bool, String> {
@@ -341,7 +347,8 @@ pub fn parse_hello(line: &str, want_id: u64)
     let n_classes = get_u("classes")?;
     let rows = get_u("rows")?;
     let cols = get_u("cols")?;
-    let k_per_row = get_u("k")? as u32;
+    let k_per_row = u32::try_from(get_u("k")?)
+        .map_err(|_| "hello k exceeds the u32 wire field".to_string())?;
     let groups = get_u("groups")?;
     let d = get_u("d")?;
     let p = get_u("p")?;
@@ -363,6 +370,7 @@ pub fn parse_hello(line: &str, want_id: u64)
         .get("width")
         .and_then(|v| v.as_f64())
         .ok_or("hello missing/invalid width")?;
+    // CAST: f64 -> f32 narrows by design; checked finite just below.
     let width = width_f64 as f32;
     if !width.is_finite() {
         return Err("hello width is not a finite f32".into());
@@ -384,7 +392,7 @@ pub fn parse_hello(line: &str, want_id: u64)
         ));
     }
     let a = parse_f32_arr(h.get("a").ok_or("hello missing a")?, "a")?;
-    if a.len() as u128 != d as u128 * p as u128 {
+    if a.len() as u128 != d as u128 * p as u128 { // CAST: widens losslessly
         return Err(format!(
             "hello projection has {} entries, want d × p = {d} × {p}",
             a.len()
@@ -447,7 +455,7 @@ pub fn means_response_line(
 ) -> String {
     json::obj(vec![
         ("id", Json::from_u64(id)),
-        ("g", Json::from_u64(local_groups as u64)),
+        ("g", Json::from_u64(local_groups as u64)), // CAST: usize -> u64 widens losslessly
         ("means", f32_arr(means)),
         ("us", Json::num(us)),
     ])
@@ -558,6 +566,9 @@ impl ShardService {
                     );
                 }
             })
+            // PANIC: thread spawn at service construction — an OS
+            // refusing a thread here is fatal setup, not a serve-path
+            // failure.
             .expect("spawn shard-serve worker");
         ShardService {
             jobs: Mutex::new(Some(tx)),
@@ -629,13 +640,15 @@ fn run_job(
         }
         ShardCall::Stats => {
             let payload = json::obj(vec![
-                ("shard", Json::from_u64(hello.shard_index as u64)),
-                ("shards", Json::from_u64(hello.n_shards as u64)),
+                ("shard", Json::from_u64(hello.shard_index as u64)), // CAST: widens losslessly
+                ("shards", Json::from_u64(hello.n_shards as u64)), // CAST: widens losslessly
                 ("served", Json::from_u64(slo.ok_count())),
                 ("errors", Json::from_u64(slo.error_count())),
                 ("updates", Json::from_u64(hello.seq)),
                 ("epoch", Json::from_u64(plane.epoch())),
                 ("pending", Json::from_u64(
+                    // ORDERING: Relaxed — advisory gauge for a stats
+                    // line; no payload reads are ordered against it.
                     plane.stats().pending.load(Ordering::Relaxed),
                 )),
                 ("kernel", histogram_json(&slo.latency)),
@@ -650,7 +663,7 @@ fn run_job(
         }
         ShardCall::Means { batch, proj_t } => {
             let p = hello.head.p;
-            if proj_t.len() as u128 != p as u128 * batch as u128 {
+            if proj_t.len() as u128 != p as u128 * batch as u128 { // CAST: widens losslessly
                 return answer_err(slo, guard, format!(
                     "proj has {} values, want p × B = {p} × {batch}",
                     proj_t.len()
@@ -667,10 +680,10 @@ fn run_job(
                     "b = {batch} exceeds the {MAX_BATCH} per-request cap"
                 ));
             }
-            let cells = batch as u128
-                * shard.local_groups() as u128
-                * hello.head.n_classes as u128;
-            if cells > (MAX_LINE_BYTES / 2) as u128 {
+            let cells = batch as u128 // CAST: usize -> u128 widens losslessly
+                * shard.local_groups() as u128 // CAST: see above
+                * hello.head.n_classes as u128; // CAST: see above
+            if cells > (MAX_LINE_BYTES / 2) as u128 { // CAST: see above
                 return answer_err(slo, guard, format!(
                     "means matrix ({cells} values) cannot fit the \
                      {MAX_LINE_BYTES}-byte response line cap"
@@ -687,6 +700,8 @@ fn run_job(
                                          scratch, out);
             drop(pin);
             let dur = t0.elapsed();
+            // CAST: u128 -> f64 may round above 2^53 ns (~104 days);
+            // fine for a latency report.
             let us = dur.as_nanos() as f64 / 1e3;
             let line = means_response_line(
                 req.id,
@@ -740,8 +755,11 @@ fn run_job(
                 req.id,
                 plane.epoch(),
                 hello.seq,
+                // ORDERING: Relaxed — advisory gauge echoed in the
+                // ack; the authoritative pending count is `apply`'s
+                // return value, not this read.
                 plane.stats().pending.load(Ordering::Relaxed),
-                dur.as_nanos() as f64 / 1e3,
+                dur.as_nanos() as f64 / 1e3, // CAST: u128 -> f64 rounds above 2^53 ns; latency report only
             );
             slo.record_ok(dur);
             guard.send_line(line);
@@ -758,6 +776,8 @@ impl LineHandler for ShardService {
         // response that can fire without it (service teardown racing
         // an accepted line) carries `"id": null`.
         let guard = LineGuard::new(None, sender);
+        // PANIC: mutex poison — a panic while holding the jobs lock
+        // already tore the service down; propagating is correct.
         if let Some(tx) = self.jobs.lock().unwrap().as_ref() {
             // A failed send returns the job inside the error; dropping
             // it fires the guard.  Either way: exactly one response.
@@ -770,8 +790,10 @@ impl LineHandler for ShardService {
 
 impl Drop for ShardService {
     fn drop(&mut self) {
+        // PANIC: mutex poison in Drop — both locks guard teardown-only
+        // state; a poisoned lock means the process is already failing.
         *self.jobs.lock().unwrap() = None; // close → worker loop ends
-        if let Some(h) = self.worker.lock().unwrap().take() {
+        if let Some(h) = self.worker.lock().unwrap().take() { // PANIC: see above
             let _ = h.join();
         }
     }
@@ -815,6 +837,8 @@ pub fn serve_local(sharded: &ShardedSketch)
                 .spawn(move || {
                     let _ = server.serve();
                 })
+                // PANIC: thread spawn in test/bench scaffolding
+                // construction; failing to spawn is fatal setup.
                 .expect("spawn local shard server"),
         );
     }
@@ -824,6 +848,9 @@ pub fn serve_local(sharded: &ShardedSketch)
 impl Drop for LocalShardServers {
     fn drop(&mut self) {
         for s in &self.stops {
+            // ORDERING: Release — pairs with the reactor loop's
+            // Acquire poll of its stop flag, ordering any final state
+            // writes before the observed stop.
             s.store(true, std::sync::atomic::Ordering::Release);
         }
         for h in self.handles.drain(..) {
@@ -844,8 +871,11 @@ fn wait_ms_until(deadline: Instant) -> i32 {
     if now >= deadline {
         return 0;
     }
+    // CAST: u128 millis -> i64 cannot overflow for any real deadline
+    // (would need ~292 million years); the clamp then guarantees the
+    // final value fits an epoll timeout i32.
     let ms = deadline.duration_since(now).as_millis() as i64;
-    ms.clamp(1, PUMP_SLICE_MS as i64) as i32
+    ms.clamp(1, PUMP_SLICE_MS as i64) as i32 // CAST: see above
 }
 
 /// Tunables for the replicated client: the global batch deadline, the
@@ -998,6 +1028,8 @@ impl ClientIo {
                         }
                         if want != conn.interest {
                             let fd = conn.stream.as_raw_fd();
+                            // CAST: replica index -> epoll token
+                            // widens losslessly.
                             if self.epoll.modify(fd, want, r as u64)
                                 .is_ok()
                             {
@@ -1023,6 +1055,8 @@ impl ClientIo {
         let mut events = [EpollEvent { events: 0, data: 0 }; 32];
         let n = self.epoll.wait(&mut events, wait_ms)?;
         for ev in &events[..n] {
+            // CAST: the token round-trips a replica index WE stored
+            // (bounds-checked just below), so u64 -> usize is exact.
             let (bits, r) = (ev.events, ev.data as usize);
             if r >= self.replicas.len() {
                 continue;
@@ -1103,6 +1137,7 @@ impl ClientIo {
         })?;
         let interest = EPOLLIN | EPOLLRDHUP;
         self.epoll
+            // CAST: replica index -> epoll token widens losslessly.
             .add(stream.as_raw_fd(), interest, r as u64)
             .map_err(|e| {
                 anyhow!("shard {s} ({addr}): epoll registration: {e}")
@@ -1292,6 +1327,7 @@ impl RemoteShardSet {
             scratch: vec![0u8; 64 * 1024],
             seq: 0,
             jitter: SplitMix64::new(
+                // CAST: u32 pid -> u64 widens losslessly.
                 0x7E11_CA5E ^ std::process::id() as u64,
             ),
         };
@@ -1358,6 +1394,8 @@ impl RemoteShardSet {
         self.io.quarantine(r, why);
         self.stats.shards[s]
             .quarantines
+            // ORDERING: Relaxed — monotonic stat counter; readers only
+            // ever sample it for reporting.
             .fetch_add(1, Ordering::Relaxed);
     }
 
@@ -1396,6 +1434,8 @@ impl RemoteShardSet {
             return o.hedge_initial.max(o.hedge_min);
         }
         let ns = (ewma * 1e3 * o.hedge_factor).min(1e18);
+        // CAST: f64 -> u64 is exact-in-range here: the .min(1e18)
+        // bound keeps ns well under u64::MAX and EWMA is nonnegative.
         Duration::from_nanos(ns as u64).clamp(o.hedge_min, o.timeout)
     }
 
@@ -1457,6 +1497,7 @@ impl RemoteShardSet {
                     tried.push(r);
                     self.stats.shards[s]
                         .reconnects
+                        // ORDERING: Relaxed — monotonic stat counter, sampled only for reporting.
                         .fetch_add(1, Ordering::Relaxed);
                     match self.dial_validated(r) {
                         Ok(()) => r,
@@ -1479,6 +1520,7 @@ impl RemoteShardSet {
                 });
                 self.stats.replicas[r]
                     .sent
+                    // ORDERING: Relaxed — monotonic stat counter, sampled only for reporting.
                     .fetch_add(1, Ordering::Relaxed);
                 return Ok(r);
             }
@@ -1550,6 +1592,7 @@ impl RemoteShardSet {
                 sent: Instant::now(),
                 abandoned: false,
             });
+            // ORDERING: Relaxed — monotonic stat counter, sampled only for reporting.
             self.stats.replicas[r].sent.fetch_add(1, Ordering::Relaxed);
             sent_to.push(r);
         } else {
@@ -1590,6 +1633,7 @@ impl RemoteShardSet {
                 self.take_pending(r, x);
                 self.stats.shards[s]
                     .discarded
+                    // ORDERING: Relaxed — monotonic stat counter, sampled only for reporting.
                     .fetch_add(1, Ordering::Relaxed);
                 return;
             }
@@ -1603,6 +1647,7 @@ impl RemoteShardSet {
         if entry.map_or(true, |p| p.abandoned) {
             self.stats.shards[s]
                 .discarded
+                // ORDERING: Relaxed — monotonic stat counter, sampled only for reporting.
                 .fetch_add(1, Ordering::Relaxed);
             return;
         }
@@ -1630,6 +1675,7 @@ impl RemoteShardSet {
         }
         self.stats.replicas[r]
             .answered
+            // ORDERING: Relaxed — monotonic stat counter, sampled only for reporting.
             .fetch_add(1, Ordering::Relaxed);
         if !acked[s] {
             acked[s] = true;
@@ -1710,6 +1756,7 @@ impl RemoteShardSet {
                 for r in cands {
                     self.stats.shards[s]
                         .reconnects
+                        // ORDERING: Relaxed — monotonic stat counter, sampled only for reporting.
                         .fetch_add(1, Ordering::Relaxed);
                     if self.dial_validated(r).is_ok() {
                         self.send_update_to(r, id, &line, &mut sent[s]);
@@ -1769,6 +1816,7 @@ impl RemoteShardSet {
             {
                 self.stats.shards[s]
                     .errors
+                    // ORDERING: Relaxed — monotonic stat counter, sampled only for reporting.
                     .fetch_add(1, Ordering::Relaxed);
                 anyhow::bail!(
                     "shard {s}: no replica acknowledged live update {} \
@@ -1790,6 +1838,7 @@ impl RemoteShardSet {
                     }
                     self.stats.shards[s]
                         .errors
+                        // ORDERING: Relaxed — monotonic stat counter, sampled only for reporting.
                         .fetch_add(1, Ordering::Relaxed);
                 }
                 anyhow::bail!(
@@ -1807,6 +1856,8 @@ impl RemoteShardSet {
         if publish {
             self.update_slo.record_publish(epoch);
         } else {
+            // ORDERING: Relaxed — advisory epoch mirror for the SLO surface;
+            // the authoritative epoch travels in the ack payload.
             self.update_slo.epoch.store(epoch, Ordering::Relaxed);
         }
         Ok((epoch, pending_max))
@@ -1880,6 +1931,7 @@ impl RemoteShardSet {
                 Err(e) => {
                     self.stats.shards[s]
                         .errors
+                        // ORDERING: Relaxed — monotonic stat counter, sampled only for reporting.
                         .fetch_add(1, Ordering::Relaxed);
                     return Err(e);
                 }
@@ -1951,11 +2003,13 @@ impl RemoteShardSet {
                                 slots[s].tried = tried;
                                 self.stats.shards[s]
                                     .failovers
+                                    // ORDERING: Relaxed — monotonic stat counter, sampled only for reporting.
                                     .fetch_add(1, Ordering::Relaxed);
                             }
                             Err(_) => {
                                 self.stats.shards[s]
                                     .errors
+                                    // ORDERING: Relaxed — monotonic stat counter, sampled only for reporting.
                                     .fetch_add(1, Ordering::Relaxed);
                                 anyhow::bail!(
                                     "shard {s} ({addr}): {why}"
@@ -1986,6 +2040,7 @@ impl RemoteShardSet {
                     slots[s].hedge = Some(r2);
                     self.stats.shards[s]
                         .hedges
+                        // ORDERING: Relaxed — monotonic stat counter, sampled only for reporting.
                         .fetch_add(1, Ordering::Relaxed);
                 }
             }
@@ -2000,6 +2055,7 @@ impl RemoteShardSet {
                     }
                     self.stats.shards[s]
                         .errors
+                        // ORDERING: Relaxed — monotonic stat counter, sampled only for reporting.
                         .fetch_add(1, Ordering::Relaxed);
                     let addr = slots[s]
                         .tried
@@ -2026,6 +2082,8 @@ impl RemoteShardSet {
                     }
                 }
                 let (s, addr) =
+                    // PANIC: invariant — this branch is only reached when some
+                    // shard is unanswered, so `first` was set in the loop above.
                     first.expect("a shard is missing on timeout");
                 anyhow::bail!(
                     "shard {s} ({addr}) timed out after {:?} (stalled \
@@ -2099,6 +2157,7 @@ impl RemoteShardSet {
                 self.take_pending(r, x);
                 self.stats.shards[s]
                     .discarded
+                    // ORDERING: Relaxed — monotonic stat counter, sampled only for reporting.
                     .fetch_add(1, Ordering::Relaxed);
                 return Ok(());
             }
@@ -2128,6 +2187,7 @@ impl RemoteShardSet {
             // exchange: discarded by id, content never inspected.
             self.stats.shards[s]
                 .discarded
+                // ORDERING: Relaxed — monotonic stat counter, sampled only for reporting.
                 .fetch_add(1, Ordering::Relaxed);
             return Ok(());
         }
@@ -2136,6 +2196,7 @@ impl RemoteShardSet {
             // the connection stays up, but this exchange is over.
             self.stats.replicas[r]
                 .abandoned
+                // ORDERING: Relaxed — monotonic stat counter, sampled only for reporting.
                 .fetch_add(1, Ordering::Relaxed);
             Self::remove_from_slot(slots, s, r);
             return self.failover_or(
@@ -2148,6 +2209,7 @@ impl RemoteShardSet {
         }
         let lg = self.plan.span(s).local_groups();
         let g = j.get("g").and_then(|v| v.as_u64());
+        // CAST: usize -> u64 widens losslessly.
         if g != Some(lg as u64) {
             self.quarantine(r, "answered for the wrong group range");
             Self::remove_from_slot(slots, s, r);
@@ -2181,8 +2243,9 @@ impl RemoteShardSet {
             }
         };
         let c_n = self.head.n_classes;
+        // CAST: usize -> u128 widens losslessly (overflow-free length check).
         let want_len = batch as u128 * lg as u128 * c_n as u128;
-        if means.len() as u128 != want_len {
+        if means.len() as u128 != want_len { // CAST: see above
             let got = means.len();
             self.quarantine(
                 r,
@@ -2205,6 +2268,7 @@ impl RemoteShardSet {
         *missing -= 1;
         partials[s] = means;
         if let Some(p) = entry {
+            // CAST: u128 ns -> f64 rounds above 2^53; latency sample only.
             let sample_us = p.sent.elapsed().as_nanos() as f64 / 1e3;
             let old = self.ewma_us[s];
             self.ewma_us[s] = if old <= 0.0 {
@@ -2220,11 +2284,15 @@ impl RemoteShardSet {
             });
             self.stats.shards[s]
                 .latency
+                // CAST: f64 us -> u64 ns saturates at bounds; histogram sample
+                // of a nonnegative elapsed time is always in range.
                 .record_ns((sample_us * 1e3) as u64);
         }
+        // ORDERING: Relaxed — monotonic stat counter, sampled only for reporting.
         self.stats.shards[s].gathers.fetch_add(1, Ordering::Relaxed);
         self.stats.replicas[r]
             .answered
+            // ORDERING: Relaxed — monotonic stat counter, sampled only for reporting.
             .fetch_add(1, Ordering::Relaxed);
         // The losing contender (if any) is abandoned; its late answer
         // will be discarded by id when it arrives.
@@ -2272,6 +2340,7 @@ impl RemoteShardSet {
                 slots[s].tried = tried;
                 self.stats.shards[s]
                     .failovers
+                    // ORDERING: Relaxed — monotonic stat counter, sampled only for reporting.
                     .fetch_add(1, Ordering::Relaxed);
                 Ok(())
             }
@@ -2279,6 +2348,7 @@ impl RemoteShardSet {
                 slots[s].tried = tried;
                 self.stats.shards[s]
                     .errors
+                    // ORDERING: Relaxed — monotonic stat counter, sampled only for reporting.
                     .fetch_add(1, Ordering::Relaxed);
                 Err(anyhow!(err_msg))
             }
@@ -2306,6 +2376,7 @@ impl RemoteShardSet {
                 p.abandoned = true;
                 self.stats.replicas[r]
                     .abandoned
+                    // ORDERING: Relaxed — monotonic stat counter, sampled only for reporting.
                     .fetch_add(1, Ordering::Relaxed);
             }
         }

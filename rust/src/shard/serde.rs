@@ -47,6 +47,20 @@ struct ShardFile {
     counters: Vec<f32>,
 }
 
+/// Checked u32 -> usize header read: explicit (and audit-visible)
+/// even though every supported target has usize >= 32 bits.
+fn idx(c: &mut Cur<'_>) -> Result<usize> {
+    Ok(usize::try_from(c.u32()?)?)
+}
+
+/// Checked usize -> u32 header write; a geometry field too large for
+/// the RSFS wire format is a caller bug worth naming, not truncating.
+fn wire_u32(v: usize, what: &str) -> u32 {
+    u32::try_from(v).unwrap_or_else(|_| {
+        panic!("{what} = {v} exceeds the RSFS u32 header field")
+    })
+}
+
 fn parse_shard(buf: &[u8]) -> Result<ShardFile> {
     if buf.len() < 8 || &buf[..4] != b"RSFS" {
         bail!("not an RSFS file");
@@ -56,25 +70,25 @@ fn parse_shard(buf: &[u8]) -> Result<ShardFile> {
     if version != 1 {
         bail!("unsupported RSFS version {version}");
     }
-    let shard_index = c.u32()? as usize;
-    let n_shards = c.u32()? as usize;
-    let n_classes = c.u32()? as usize;
-    let rows = c.u32()? as usize;
-    let cols = c.u32()? as usize;
+    let shard_index = idx(&mut c)?;
+    let n_shards = idx(&mut c)?;
+    let n_classes = idx(&mut c)?;
+    let rows = idx(&mut c)?;
+    let cols = idx(&mut c)?;
     let k_per_row = c.u32()?;
-    let groups = c.u32()? as usize;
+    let groups = idx(&mut c)?;
     let flags = c.take(4)?;
     let use_mom = flags[0] != 0;
     let debias = flags[1] != 0;
     let multiclass = flags[2] != 0;
-    let d = c.u32()? as usize;
-    let p = c.u32()? as usize;
+    let d = idx(&mut c)?;
+    let p = idx(&mut c)?;
     let width = c.f32()?;
     let lsh_seed = c.u64()?;
-    let row_start = c.u32()? as usize;
-    let row_end = c.u32()? as usize;
-    let group_start = c.u32()? as usize;
-    let group_end = c.u32()? as usize;
+    let row_start = idx(&mut c)?;
+    let row_end = idx(&mut c)?;
+    let group_start = idx(&mut c)?;
+    let group_end = idx(&mut c)?;
     if n_classes == 0 || rows == 0 || cols == 0 || groups == 0
         || k_per_row == 0 || n_shards == 0
     {
@@ -100,10 +114,10 @@ fn parse_shard(buf: &[u8]) -> Result<ShardFile> {
     debug_assert_eq!(i, HEADER_BYTES);
     // u128 so crafted huge header fields cannot wrap the size check.
     let need = 4u128
-        * (n_classes as u128
-            + d as u128 * p as u128
-            + local_rows as u128 * cols as u128 * n_classes as u128);
-    if (buf.len() - i) as u128 != need {
+        * (n_classes as u128 // CAST: usize -> u128 widens losslessly
+            + d as u128 * p as u128 // CAST: see above
+            + local_rows as u128 * cols as u128 * n_classes as u128); // CAST: see above
+    if (buf.len() - i) as u128 != need { // CAST: see above
         bail!("RSFS size mismatch: have {}, want {need}", buf.len() - i);
     }
     let mut floats = buf[i..]
@@ -202,6 +216,7 @@ pub fn shard_from_file_bytes(buf: &[u8]) -> Result<LoadedShard> {
     let full_lsh = SparseL2Lsh::generate(
         f.head.lsh_seed,
         f.head.p,
+        // CAST: u32 -> usize widens on every supported target.
         f.head.rows * f.head.k_per_row as usize,
         f.head.width,
     );
@@ -280,29 +295,29 @@ impl ShardedSketch {
         out.extend_from_slice(b"RSFS");
         out.extend_from_slice(&1u32.to_le_bytes());
         for v in [
-            sh.shard_index as u32,
-            self.n_shards() as u32,
-            h.n_classes as u32,
-            h.rows as u32,
-            h.cols as u32,
+            wire_u32(sh.shard_index, "shard_index"),
+            wire_u32(self.n_shards(), "n_shards"),
+            wire_u32(h.n_classes, "n_classes"),
+            wire_u32(h.rows, "rows"),
+            wire_u32(h.cols, "cols"),
             h.k_per_row,
-            h.groups as u32,
+            wire_u32(h.groups, "groups"),
         ] {
             out.extend_from_slice(&v.to_le_bytes());
         }
-        out.push(h.use_mom as u8);
-        out.push(h.debias as u8);
-        out.push(h.multiclass as u8);
+        out.push(u8::from(h.use_mom));
+        out.push(u8::from(h.debias));
+        out.push(u8::from(h.multiclass));
         out.push(0u8);
-        out.extend_from_slice(&(h.d as u32).to_le_bytes());
-        out.extend_from_slice(&(h.p as u32).to_le_bytes());
+        out.extend_from_slice(&wire_u32(h.d, "d").to_le_bytes());
+        out.extend_from_slice(&wire_u32(h.p, "p").to_le_bytes());
         out.extend_from_slice(&h.width.to_le_bytes());
         out.extend_from_slice(&h.lsh_seed.to_le_bytes());
         for v in [
-            sh.row_start as u32,
-            sh.row_end as u32,
-            sh.group_start as u32,
-            sh.group_end as u32,
+            wire_u32(sh.row_start, "row_start"),
+            wire_u32(sh.row_end, "row_end"),
+            wire_u32(sh.group_start, "group_start"),
+            wire_u32(sh.group_end, "group_end"),
         ] {
             out.extend_from_slice(&v.to_le_bytes());
         }
@@ -407,6 +422,7 @@ impl ShardedSketch {
         let full_lsh = SparseL2Lsh::generate(
             head.lsh_seed,
             head.p,
+            // CAST: u32 -> usize widens on every supported target.
             head.rows * head.k_per_row as usize,
             head.width,
         );

@@ -38,6 +38,32 @@
 //! is the `n_classes == 1` case (the index degenerates to `l*cols + c`),
 //! `FusedMultiSketch` is the class-interleaved case, and a `SketchShard`
 //! is the same fused layout restricted to its local row span.
+//!
+//! # Invariants catalog
+//!
+//! These are the machine-checked contracts `repsketch-audit` and the
+//! interleaving harness ([`crate::audit::interleave`]) hold this module
+//! to; change them only together with those checks.
+//!
+//! 1. **Epoch/buffer binding.**  `bufs[epoch & 1]` is the live buffer.
+//!    Readers re-check the epoch after locking (see [`CounterPlane::pin`])
+//!    so a pin is always `(e, bufs[e & 1])` for one single `e`.
+//! 2. **Exactly-once, in-order replay.**  Every delta is written to the
+//!    shadow buffer at `apply` time and replayed into the retired buffer
+//!    at the next `publish`, in arrival order.  After any quiesced
+//!    publish both buffers are **bit-identical** (f32 folds are order
+//!    sensitive, so order is part of the contract), and equal to a
+//!    single-pass rebuild over the same delta sequence.
+//! 3. **Grace period.**  `publish` flips the epoch *before* write-locking
+//!    the retired buffer, so it blocks until every reader pinned at the
+//!    pre-flip epoch unpins — a pinned snapshot is never mutated.
+//! 4. **Bounded staleness.**  The engine layer publishes whenever
+//!    `apply` returns a pending count `>=` [`MAX_PENDING`], so no delta
+//!    waits more than `MAX_PENDING - 1` applies.
+//! 5. **Memory ordering.**  The epoch is the only cross-thread atomic:
+//!    its Release store in `publish` pairs with Acquire loads in
+//!    `pin`/`epoch`/`apply`; buffer contents themselves are protected by
+//!    the `RwLock`s, not by the atomic.
 
 use crate::metrics::slo::UpdateSlo;
 use std::ops::Deref;
@@ -118,6 +144,8 @@ impl CounterPlane {
 
     /// The currently published epoch.
     pub fn epoch(&self) -> u64 {
+        // ORDERING: Acquire pairs with the Release store in publish, so
+        // an observed epoch implies the flip that produced it.
         self.epoch.load(Ordering::Acquire)
     }
 
@@ -132,8 +160,14 @@ impl CounterPlane {
     /// locked the buffer now being retired-and-replayed, so retry.
     pub fn pin(&self) -> PlanePin<'_> {
         loop {
+            // ORDERING: Acquire pairs with publish's Release store so
+            // the buffer selected by `e & 1` contains everything
+            // published up to epoch `e`.
             let e = self.epoch.load(Ordering::Acquire);
             let guard = self.bufs[(e & 1) as usize].read().unwrap();
+            // ORDERING: Acquire re-check; if the epoch still reads `e`
+            // after the read-lock, no publish retired this buffer in
+            // between (a later flip is blocked by this very guard).
             if self.epoch.load(Ordering::Acquire) == e {
                 return PlanePin { epoch: e, guard };
             }
@@ -162,6 +196,9 @@ impl CounterPlane {
             alpha,
         };
         {
+            // ORDERING: Acquire pairs with publish's Release store; the
+            // writer mutex already serializes us against publish, the
+            // load only needs to see the latest flipped value.
             let e = self.epoch.load(Ordering::Acquire);
             let shadow = ((e + 1) & 1) as usize;
             let mut buf = self.bufs[shadow].write().unwrap();
@@ -173,14 +210,31 @@ impl CounterPlane {
         n
     }
 
+    /// Clone both internal buffers (audit/test support: after a quiesced
+    /// publish the two must be bit-identical — every delta folded into
+    /// each exactly once, in arrival order).  Read-locks both buffers,
+    /// so callers must not invoke it while a publish is blocked on a
+    /// pinned reader.
+    pub fn snapshot_both(&self) -> (PlaneBuf, PlaneBuf) {
+        let a = self.bufs[0].read().unwrap();
+        let b = self.bufs[1].read().unwrap();
+        (a.clone(), b.clone())
+    }
+
     /// Make every queued delta reader-visible and return the (possibly
     /// unchanged) published epoch.  No-op fast path when the plane is
     /// clean.  Blocks until readers pinning the pre-flip epoch drain.
     pub fn publish(&self) -> u64 {
+        // ORDERING: Relaxed is enough for the clean fast path — it is a
+        // hint only; a racing apply re-checks under the writer mutex.
         if self.stats.pending.load(Ordering::Relaxed) == 0 {
+            // ORDERING: Acquire pairs with the Release store below so
+            // the returned epoch is never older than a completed flip.
             return self.epoch.load(Ordering::Acquire);
         }
         let mut pending = self.writer.lock().unwrap();
+        // ORDERING: Acquire pairs with the Release store below; under
+        // the writer mutex this is the unique current epoch.
         let e = self.epoch.load(Ordering::Acquire);
         if pending.is_empty() {
             return e; // Lost the race to another publisher; already clean.
@@ -188,6 +242,10 @@ impl CounterPlane {
         // Flip first: new readers pin the shadow buffer (which already
         // has every pending delta), then the retired buffer's write lock
         // waits out readers still pinning epoch `e`.
+        //
+        // ORDERING: Release pairs with the Acquire loads in pin/epoch/
+        // apply — a reader that observes `e + 1` also observes every
+        // shadow-buffer write made before this store.
         self.epoch.store(e + 1, Ordering::Release);
         {
             let retired = (e & 1) as usize;

@@ -33,10 +33,13 @@ impl Json {
     /// Negative zero and non-finite values degrade exactly like
     /// [`Json::num`] (`-0` / `null`).
     pub fn num_f32(v: f32) -> Json {
+        // CAST: f32 -> f64 widens losslessly.
         Json::Num(v as f64, format_f32(v))
     }
 
     pub fn from_u64(v: u64) -> Json {
+        // CAST: the f64 mirror may round above 2^53, but the raw
+        // string keeps the exact digits and as_u64 reads only the raw.
         Json::Num(v as f64, v.to_string())
     }
 
@@ -55,7 +58,9 @@ impl Json {
     }
 
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_u64().map(|v| v as usize)
+        // Checked: a u64 wider than this platform's usize is not a
+        // usable index — treat it as absent rather than truncating.
+        self.as_u64().and_then(|v| usize::try_from(v).ok())
     }
 
     pub fn as_str(&self) -> Option<&str> {
@@ -100,6 +105,8 @@ impl Json {
         let mut out = Vec::new();
         fn walk(j: &Json, out: &mut Vec<f32>) {
             match j {
+                // CAST: f64 -> f32 narrowing is this reader's
+                // contract — wire floats are f32 payloads.
                 Json::Num(v, _) => out.push(*v as f32),
                 Json::Arr(a) => a.iter().for_each(|x| walk(x, out)),
                 _ => {}
@@ -115,6 +122,9 @@ impl Json {
         fn walk(j: &Json, out: &mut Vec<i64>) {
             match j {
                 Json::Num(v, raw) => {
+                    // CAST: fallback for non-integer raw text; the f64
+                    // -> i64 cast saturates (never UB) and integral
+                    // values in range convert exactly.
                     out.push(raw.parse::<i64>().unwrap_or(*v as i64))
                 }
                 Json::Arr(a) => a.iter().for_each(|x| walk(x, out)),
@@ -175,6 +185,8 @@ fn format_f64(v: f64) -> String {
         // payloads bitwise, and `-0.0 as i64` would flatten to `0`.
         "-0".to_string()
     } else if v.fract() == 0.0 && v.abs() < 1e15 {
+        // CAST: guarded — integral and |v| < 1e15 < 2^53, so the i64
+        // conversion is exact.
         format!("{}", v as i64)
     } else {
         let mut s = String::new();
@@ -189,6 +201,8 @@ fn format_f32(v: f32) -> String {
     } else if v == 0.0 && v.is_sign_negative() {
         "-0".to_string()
     } else if v.fract() == 0.0 && v.abs() < 1e15 {
+        // CAST: guarded — integral and |v| < 1e15 < 2^53, so the i64
+        // conversion is exact.
         format!("{}", v as i64)
     } else {
         let mut s = String::new();
@@ -206,8 +220,9 @@ fn emit_str(s: &str, out: &mut String) {
             '\n' => out.push_str("\\n"),
             '\r' => out.push_str("\\r"),
             '\t' => out.push_str("\\t"),
+            // CAST: char -> u32 is the scalar value, lossless.
             c if (c as u32) < 0x20 => {
-                let _ = write!(out, "\\u{:04x}", c as u32);
+                let _ = write!(out, "\\u{:04x}", c as u32); // CAST: see above
             }
             c => out.push(c),
         }

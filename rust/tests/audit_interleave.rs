@@ -1,0 +1,315 @@
+//! Concurrency battery for the epoch-versioned counter plane, driven by
+//! the deterministic interleaving harness in `repsketch::audit`.
+//!
+//! Two layers:
+//!
+//! 1. Schedule-driven: every feasible 2-thread interleaving of the
+//!    standard writer/reader scenario (well over the 100-schedule floor)
+//!    plus seeded 3-thread walks, each asserting pinned-snapshot
+//!    bit-identity against a single-pass rebuild.
+//! 2. Direct plane tests for the edge cases an enumeration might visit
+//!    only incidentally: deletes folded before any publish, a publish
+//!    parked on a live reader pin, the forced-publish threshold, and
+//!    replay ordering under non-associative f32 folds.
+
+use repsketch::audit::interleave::{Interleaver, Op, Script};
+use repsketch::sketch::epoch::{CounterPlane, PlaneBuf, MAX_PENDING};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn plane(rows: usize, cols: usize, classes: usize) -> CounterPlane {
+    CounterPlane::new(
+        &vec![0.0f32; rows * cols * classes],
+        &vec![0.0f32; classes],
+        cols,
+        classes,
+    )
+}
+
+/// Single-pass oracle: fold `deltas` (in order) into a fresh buffer the
+/// way `CounterPlane::apply_to` does.
+fn rebuild(
+    rows: usize,
+    cols: usize,
+    classes: usize,
+    deltas: &[(Vec<u32>, usize, f32)],
+) -> PlaneBuf {
+    let mut counters = vec![0.0f32; rows * cols * classes];
+    let mut alpha_sums = vec![0.0f32; classes];
+    for (dc, class, alpha) in deltas {
+        for (l, &c) in dc.iter().enumerate() {
+            counters[(l * cols + c as usize) * classes + class] += alpha;
+        }
+        alpha_sums[*class] += alpha;
+    }
+    PlaneBuf { counters, alpha_sums }
+}
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+// -------------------------------------------------------------------------
+// Schedule-driven battery
+// -------------------------------------------------------------------------
+
+/// The headline battery: every feasible interleaving of the 2-thread
+/// writer/reader scenario runs to completion with every pinned snapshot
+/// bitwise-identical to the published fold.  The enumeration itself must
+/// clear the 100-distinct-schedule floor by a wide margin.
+#[test]
+fn two_thread_full_enumeration_passes() {
+    let h = Interleaver::standard(2);
+    let schedules = h.enumerate(100_000);
+    assert!(
+        schedules.len() >= 100,
+        "only {} feasible 2-thread schedules; the battery is supposed \
+         to cover at least 100 distinct interleavings",
+        schedules.len()
+    );
+    let report = h
+        .run_enumerated(100_000)
+        .expect("every feasible schedule must pass the check battery");
+    assert_eq!(report.schedules, schedules.len());
+    assert!(report.reads_checked > 0, "battery never exercised a read");
+    assert!(report.publishes > 0, "battery never exercised a publish");
+    assert!(report.max_epoch >= 2, "writer script publishes twice");
+}
+
+/// Seeded 3-thread walks: the 3-thread space is too large to enumerate
+/// in a unit test, so sample it deterministically and hold every sample
+/// to the same bit-identity battery.
+#[test]
+fn three_thread_seeded_walks_pass() {
+    let h = Interleaver::standard(3);
+    let report = h
+        .run_seeded(0xA1D1_7EE5, 48)
+        .expect("every seeded 3-thread schedule must pass");
+    assert!(
+        report.schedules >= 32,
+        "expected at least 32 distinct seeded schedules, got {}",
+        report.schedules
+    );
+    assert!(report.reads_checked > 0);
+    assert!(report.publishes > 0);
+}
+
+/// Seeded schedule generation is a pure function of the seed: same seed,
+/// same schedules, same report — so a failure log line naming a seed is
+/// always enough to replay the exact run.
+#[test]
+fn seeded_walks_replay_deterministically() {
+    let h = Interleaver::standard(3);
+    let a = h.seeded(42, 24);
+    let b = h.seeded(42, 24);
+    assert_eq!(a, b, "same seed must yield the same schedule list");
+    let c = h.seeded(43, 24);
+    assert_ne!(a, c, "different seeds should explore differently");
+    let ra = h.run_seeded(42, 24).expect("seeded run");
+    let rb = h.run_seeded(42, 24).expect("seeded run (replay)");
+    assert_eq!(ra.schedules, rb.schedules);
+    assert_eq!(ra.reads_checked, rb.reads_checked);
+    assert_eq!(ra.publishes, rb.publishes);
+    assert_eq!(ra.max_epoch, rb.max_epoch);
+}
+
+/// The named race from the module docs: a reader pins epoch 0, the
+/// writer publishes (parking on that pin), the reader unpins, and the
+/// parked publish completes its replay.  The exact schedule is spelled
+/// out so a regression points at one reproducible interleaving.
+#[test]
+fn publish_parks_on_pin_schedule_replays_exactly() {
+    let h = Interleaver::standard(2);
+    // Thread 1 = reader pins first; thread 0 = writer applies twice and
+    // publishes into the live pin; reader validates + unpins (freeing
+    // the parked publish), then pins/validates the new epoch.
+    let schedule = vec![1usize, 0, 0, 0, 1, 1, 0, 0, 1, 1, 1];
+    let outcome = h
+        .run_schedule(&schedule)
+        .expect("the canonical parked-publish schedule must pass");
+    assert_eq!(outcome.reads, 2, "both read-checks must run");
+    assert_eq!(outcome.publishes, 2);
+    assert_eq!(outcome.final_epoch, 2);
+}
+
+/// A custom delete-before-publish script through the harness: one
+/// thread inserts then deletes the same point before any publish while
+/// a reader pins around the publish.  Every feasible interleaving must
+/// keep snapshots bit-identical.
+#[test]
+fn delete_before_publish_interleavings_pass() {
+    let writer = Script {
+        ops: vec![
+            Op::Apply { cols: vec![2, 0], class: 0, alpha: 0.75 },
+            Op::Apply { cols: vec![2, 0], class: 0, alpha: -0.75 },
+            Op::Publish,
+        ],
+    };
+    let reader = Script {
+        ops: vec![Op::Pin, Op::ReadCheck, Op::Unpin],
+    };
+    let h = Interleaver {
+        rows: 2,
+        cols: 4,
+        classes: 2,
+        scripts: vec![writer, reader],
+    };
+    let report = h
+        .run_enumerated(10_000)
+        .expect("insert+delete interleavings must stay bit-identical");
+    assert!(report.schedules > 0);
+    assert!(report.publishes > 0, "the delete must actually publish");
+}
+
+// -------------------------------------------------------------------------
+// Direct plane edge cases
+// -------------------------------------------------------------------------
+
+/// Delete-before-publish (plane level): a +α / −α pair queued in the
+/// same epoch cancels exactly, publish still advances the epoch (the
+/// queue was non-empty), and both buffers match the single-pass oracle.
+#[test]
+fn delete_before_publish_cancels_exactly() {
+    let (rows, cols, classes) = (3, 8, 2);
+    let p = plane(rows, cols, classes);
+    let deltas = vec![
+        (vec![1u32, 5, 7], 1usize, 2.5f32),
+        (vec![1u32, 5, 7], 1usize, -2.5f32),
+    ];
+    for (dc, class, alpha) in &deltas {
+        p.apply(dc, *class, *alpha);
+    }
+    // Readers at epoch 0 still see the pristine plane.
+    let pin = p.pin();
+    assert_eq!(pin.epoch, 0);
+    assert!(pin.counters.iter().all(|&v| v == 0.0));
+    drop(pin);
+    assert_eq!(p.publish(), 1, "a non-empty queue must flip the epoch");
+    let oracle = rebuild(rows, cols, classes, &deltas);
+    let (a, b) = p.snapshot_both();
+    assert!(bits_eq(&a.counters, &oracle.counters));
+    assert!(bits_eq(&b.counters, &oracle.counters));
+    assert!(bits_eq(&a.alpha_sums, &oracle.alpha_sums));
+    assert!(bits_eq(&b.alpha_sums, &oracle.alpha_sums));
+    // Exact cancellation: the published plane is bitwise zero again.
+    assert!(a.counters.iter().all(|&v| v == 0.0));
+    assert_eq!(a.alpha_sums[1], 0.0);
+}
+
+/// Publish must park on a reader pinning the pre-flip epoch and finish
+/// only after that pin drops (the RCU grace period), with real threads.
+#[test]
+fn publish_blocks_until_racing_pin_drops() {
+    let p = Arc::new(plane(2, 4, 1));
+    let pin = p.pin();
+    assert_eq!(pin.epoch, 0);
+    p.apply(&[0, 1], 0, 1.0);
+    let done = Arc::new(AtomicBool::new(false));
+    let publisher = {
+        let p = Arc::clone(&p);
+        let done = Arc::clone(&done);
+        std::thread::spawn(move || {
+            let e = p.publish();
+            done.store(true, Ordering::Release);
+            e
+        })
+    };
+    // Give the publisher ample time to flip and park on the pin.
+    std::thread::sleep(Duration::from_millis(50));
+    assert!(
+        !done.load(Ordering::Acquire),
+        "publish finished while a reader still pinned the pre-flip epoch"
+    );
+    // The flip itself is not delayed — new readers already see epoch 1.
+    assert_eq!(p.epoch(), 1);
+    // The held pin keeps serving its own epoch's snapshot untouched.
+    assert_eq!(pin.epoch, 0);
+    assert!(pin.counters.iter().all(|&v| v == 0.0));
+    drop(pin); // grace period ends
+    let e = publisher.join().expect("publisher thread");
+    assert_eq!(e, 1);
+    assert!(done.load(Ordering::Acquire));
+    let (a, b) = p.snapshot_both();
+    assert!(bits_eq(&a.counters, &b.counters), "replay must converge");
+}
+
+/// The forced-publish threshold: the plane itself never publishes
+/// spontaneously — `apply` reports the queue depth and the service layer
+/// forces a publish at `MAX_PENDING`.  Verify the count contract at the
+/// boundary and that the forced publish drains everything at once.
+#[test]
+fn forced_publish_at_max_pending_drains_the_queue() {
+    let (rows, cols, classes) = (2, 16, 1);
+    let p = plane(rows, cols, classes);
+    let mut deltas = Vec::new();
+    let mut forced_at = None;
+    for i in 0..MAX_PENDING {
+        let col = (i % cols) as u32;
+        let d = (vec![col, col], 0usize, 1.0f32 + i as f32 * 1e-3);
+        let pending = p.apply(&d.0, d.1, d.2);
+        deltas.push(d);
+        assert_eq!(pending, i + 1, "apply must report the queue depth");
+        assert_eq!(p.epoch(), 0, "the plane never publishes on its own");
+        if pending >= MAX_PENDING {
+            forced_at = Some(pending);
+            break;
+        }
+    }
+    // The service-layer trigger condition fired exactly at the cap.
+    assert_eq!(forced_at, Some(MAX_PENDING));
+    assert_eq!(p.publish(), 1, "the forced publish flips once");
+    assert_eq!(
+        p.stats().pending.load(Ordering::Relaxed),
+        0,
+        "a publish drains the whole queue"
+    );
+    let oracle = rebuild(rows, cols, classes, &deltas);
+    let (a, b) = p.snapshot_both();
+    assert!(bits_eq(&a.counters, &oracle.counters));
+    assert!(bits_eq(&b.counters, &oracle.counters));
+    // Publishing a clean plane is a no-op that reports the same epoch.
+    assert_eq!(p.publish(), 1);
+}
+
+/// Replay ordering: the retired buffer replays queued deltas in arrival
+/// order.  f32 addition is not associative, so folding
+/// `1.0, 1e-7, -1.0` in any other order produces different bits — both
+/// buffers matching the in-order oracle proves order was preserved.
+#[test]
+fn replay_preserves_arrival_order_bitwise() {
+    let (rows, cols, classes) = (1, 4, 1);
+    let p = plane(rows, cols, classes);
+    let deltas = vec![
+        (vec![2u32], 0usize, 1.0f32),
+        (vec![2u32], 0usize, 1.0e-7f32),
+        (vec![2u32], 0usize, -1.0f32),
+    ];
+    // Sanity: this magnitude pattern IS order-sensitive in f32.
+    let in_order = ((1.0f32 + 1.0e-7) + -1.0).to_bits();
+    let reordered = ((1.0f32 + -1.0) + 1.0e-7).to_bits();
+    assert_ne!(in_order, reordered, "fixture lost its order sensitivity");
+    for (dc, class, alpha) in &deltas {
+        p.apply(dc, *class, *alpha);
+    }
+    assert_eq!(p.publish(), 1);
+    let oracle = rebuild(rows, cols, classes, &deltas);
+    let (a, b) = p.snapshot_both();
+    assert!(bits_eq(&a.counters, &oracle.counters), "live buffer reordered");
+    assert!(bits_eq(&b.counters, &oracle.counters), "replay reordered");
+    assert_eq!(a.counters[2].to_bits(), in_order);
+    // A second round on the now-flipped shadow keeps the contract.
+    for (dc, class, alpha) in &deltas {
+        p.apply(dc, *class, *alpha);
+    }
+    assert_eq!(p.publish(), 2);
+    let oracle2 = {
+        let mut twice = deltas.clone();
+        twice.extend(deltas.iter().cloned());
+        rebuild(rows, cols, classes, &twice)
+    };
+    let (a2, b2) = p.snapshot_both();
+    assert!(bits_eq(&a2.counters, &oracle2.counters));
+    assert!(bits_eq(&b2.counters, &oracle2.counters));
+}
