@@ -1,0 +1,271 @@
+//! Quantized counter-plane gather: u8/u16 codes + per-row affine
+//! dequant vs the f32 fused gather, C=10 multiclass, B ∈ {1, 512}.
+//!
+//! Two axes per case, both machine-checked before anything is timed:
+//!
+//! * **bytes/query** — counter bytes touched per query: `L·C` codes at
+//!   1 or 2 bytes vs 4-byte f32 counters, so exactly 4× (u8) / 2×
+//!   (u16) less counter traffic.  The JSON records the exact numbers;
+//!   the run fails if the reduction ever drops below those floors.
+//! * **measured accuracy delta** — the max-abs score delta of the
+//!   quantized plane against its f32 source over the full benchmark
+//!   batch, asserted inside the plane's `score_tolerance()` gate (the
+//!   measured contract `quant-sketch` prints).
+//!
+//! Bit-identity anchors run first: the f32 fused gather must still
+//! match the per-class reference bit-for-bit (quantization must not
+//! perturb the exact lanes), and the Scalar and Lanes8 quant gathers
+//! must agree bitwise (the lane split is layout, not math).
+//!
+//! Writes `BENCH_quant.json` at the repo root.  Pass `--smoke` for a
+//! short-budget run of the SAME grid (used by CI).
+//!
+//! Run: `cargo bench --bench quant [-- --smoke]`
+
+use repsketch::kernel::KernelParams;
+use repsketch::sketch::{
+    BatchScratch, FusedMultiSketch, FusedScratch, GatherLanes, MultiSketch,
+    QuantBits, QuantScratch, QuantSketch, SketchConfig,
+};
+use repsketch::util::bench;
+use repsketch::util::json::{self, Json};
+use repsketch::util::rng::SplitMix64;
+use std::path::Path;
+
+/// Same deployment-shaped synthetic config the multiclass gather bench
+/// uses: deep sketch, counter plane big enough that the gather's
+/// scattered reads leave cache — the regime the byte reduction targets.
+const D: usize = 32;
+const P: usize = 16;
+const M_PER_CLASS: usize = 64;
+const ROWS: usize = 512;
+const COLS: usize = 64;
+const K_PER_ROW: u32 = 2;
+const C: usize = 10;
+
+fn synthetic_classes(seed: u64) -> Vec<KernelParams> {
+    let mut rng = SplitMix64::new(seed);
+    let shared_seed = rng.next_u64();
+    let a: Vec<f32> =
+        (0..D * P).map(|_| rng.next_gaussian() as f32 * 0.5).collect();
+    (0..C)
+        .map(|_| KernelParams {
+            d: D,
+            p: P,
+            m: M_PER_CLASS,
+            a: a.clone(),
+            x: (0..M_PER_CLASS * P)
+                .map(|_| rng.next_gaussian() as f32)
+                .collect(),
+            alpha: (0..M_PER_CLASS).map(|_| 0.5 + rng.next_f32()).collect(),
+            width: 2.0,
+            lsh_seed: shared_seed,
+            k_per_row: K_PER_ROW,
+            default_rows: ROWS,
+            default_cols: COLS,
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let budget_ns = if smoke { 5e7 } else { 5e8 };
+
+    let per_class = synthetic_classes(0xBEEF);
+    let cfg = SketchConfig::default();
+    let ms = MultiSketch::build(&per_class, &cfg)?;
+    let fused = FusedMultiSketch::build(&per_class, &cfg)?;
+
+    let mut rng = SplitMix64::new(0x5EED);
+    let max_b = 512usize;
+    let queries: Vec<f32> =
+        (0..max_b * D).map(|_| rng.next_gaussian() as f32).collect();
+
+    // Anchor 1 — the f32 lanes are untouched by the quant subsystem:
+    // fused gather == per-class reference, bit for bit, before timing.
+    let mut fs = FusedScratch::default();
+    let f32_ref = {
+        let mut bs = BatchScratch::default();
+        let want = ms.scores_batch_with(&queries, &mut bs).to_vec();
+        let got = fused.scores_batch_with(&queries, &mut fs).to_vec();
+        for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+            anyhow::ensure!(
+                w.to_bits() == g.to_bits(),
+                "f32 fused gather diverges from per-class at slot {i} — \
+                 the exact lanes must stay bit-identical"
+            );
+        }
+        got
+    };
+
+    println!(
+        "synthetic config: d={D} p={P} M/class={M_PER_CLASS} L={ROWS} \
+         R={COLS} K={K_PER_ROW} C={C}{}",
+        if smoke { " (smoke)" } else { "" }
+    );
+    bench::header();
+    let mut results = Vec::new();
+    let mut meta: Vec<(String, Json)> = Vec::new();
+    let f32_bytes_per_query = ROWS * C * 4;
+    let mut min_reduction_u8 = f64::INFINITY;
+    let mut min_reduction_u16 = f64::INFINITY;
+    let mut worst_delta_ratio = 0.0f64;
+    for bits in [QuantBits::U8, QuantBits::U16] {
+        let qs = QuantSketch::from_fused(&fused, bits, GatherLanes::Lanes8);
+        let tol = qs.score_tolerance();
+        let mut s = QuantScratch::default();
+
+        // Anchor 2 — Scalar and Lanes8 gathers agree bitwise.
+        let q_sc =
+            QuantSketch::from_fused(&fused, bits, GatherLanes::Scalar);
+        let lanes8 = qs.scores_batch_with(&queries, &mut s).to_vec();
+        let scalar = q_sc.scores_batch_with(&queries, &mut s).to_vec();
+        for (i, (a, b)) in lanes8.iter().zip(&scalar).enumerate() {
+            anyhow::ensure!(
+                a.to_bits() == b.to_bits(),
+                "{bits:?}: Lanes8 diverges from Scalar at slot {i}"
+            );
+        }
+
+        // Anchor 3 — the measured accuracy delta sits inside the gate.
+        let mut max_delta = 0.0f32;
+        for (g, w) in lanes8.iter().zip(&f32_ref) {
+            max_delta = max_delta.max((g - w).abs());
+        }
+        anyhow::ensure!(
+            max_delta <= tol,
+            "{bits:?}: measured max score delta {max_delta} exceeds the \
+             tolerance gate {tol}"
+        );
+
+        let q_bytes = qs.counter_bytes_per_query();
+        let reduction = f32_bytes_per_query as f64 / q_bytes as f64;
+        match bits {
+            QuantBits::U8 => {
+                min_reduction_u8 = min_reduction_u8.min(reduction)
+            }
+            QuantBits::U16 => {
+                min_reduction_u16 = min_reduction_u16.min(reduction)
+            }
+        }
+        worst_delta_ratio =
+            worst_delta_ratio.max(max_delta as f64 / tol as f64);
+        println!(
+            "{bits:?}: {q_bytes} counter bytes/query vs {} f32 \
+             ({reduction:.1}x), max score delta {max_delta:.3e} \
+             (tolerance {tol:.3e})",
+            f32_bytes_per_query
+        );
+
+        for &b in &[1usize, 512] {
+            let flat = &queries[..b * D];
+
+            let f32_res = bench::run_with_budget(
+                &format!("{bits:?} B={b:<3} f32 gather"),
+                budget_ns,
+                || {
+                    std::hint::black_box(
+                        fused.scores_batch_with(flat, &mut fs),
+                    );
+                },
+            );
+            f32_res.print();
+
+            let quant_res = bench::run_with_budget(
+                &format!("{bits:?} B={b:<3} quant gather"),
+                budget_ns,
+                || {
+                    std::hint::black_box(
+                        qs.scores_batch_with(flat, &mut s),
+                    );
+                },
+            );
+            quant_res.print();
+
+            let f32_qps = b as f64 * f32_res.per_sec();
+            let quant_qps = b as f64 * quant_res.per_sec();
+            println!(
+                "  -> {bits:?} B={b}: f32 {f32_qps:.0} q/s, quant \
+                 {quant_qps:.0} q/s ({:.2}x), {reduction:.1}x fewer \
+                 counter bytes\n",
+                quant_qps / f32_qps
+            );
+            meta.push((
+                format!(
+                    "{}_b{b}",
+                    match bits {
+                        QuantBits::U8 => "u8",
+                        QuantBits::U16 => "u16",
+                    }
+                ),
+                json::obj(vec![
+                    ("bits", Json::from_u64(bits.tag() as u64)),
+                    ("batch", Json::from_u64(b as u64)),
+                    ("f32_qps", Json::num(f32_qps)),
+                    ("quant_qps", Json::num(quant_qps)),
+                    (
+                        "counter_bytes_per_query",
+                        Json::from_u64(q_bytes as u64),
+                    ),
+                    (
+                        "f32_counter_bytes_per_query",
+                        Json::from_u64(f32_bytes_per_query as u64),
+                    ),
+                    ("bytes_reduction", Json::num(reduction)),
+                    ("max_score_delta", Json::num(max_delta as f64)),
+                    ("score_tolerance", Json::num(tol as f64)),
+                ]),
+            ));
+            results.push(f32_res);
+            results.push(quant_res);
+        }
+    }
+
+    // The acceptance floors: u8 ≥ 4× and u16 ≥ 2× fewer counter bytes,
+    // and every measured delta inside its gate (ratio ≤ 1).
+    anyhow::ensure!(
+        min_reduction_u8 >= 4.0 && min_reduction_u16 >= 2.0,
+        "byte reduction floors violated: u8 {min_reduction_u8:.2}x \
+         (need 4x), u16 {min_reduction_u16:.2}x (need 2x)"
+    );
+    anyhow::ensure!(
+        worst_delta_ratio <= 1.0,
+        "accuracy gate violated: worst delta/tolerance ratio \
+         {worst_delta_ratio:.3}"
+    );
+
+    let repo_root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent")
+        .to_path_buf();
+    let mut meta_refs: Vec<(&str, Json)> = vec![
+        (
+            "config",
+            json::obj(vec![
+                ("d", Json::from_u64(D as u64)),
+                ("p", Json::from_u64(P as u64)),
+                ("m_per_class", Json::from_u64(M_PER_CLASS as u64)),
+                ("rows", Json::from_u64(ROWS as u64)),
+                ("cols", Json::from_u64(COLS as u64)),
+                ("k_per_row", Json::from_u64(K_PER_ROW as u64)),
+                ("classes", Json::from_u64(C as u64)),
+            ]),
+        ),
+        ("smoke", Json::from_u64(smoke as u64)),
+        ("min_bytes_reduction_u8", Json::num(min_reduction_u8)),
+        ("min_bytes_reduction_u16", Json::num(min_reduction_u16)),
+        ("worst_delta_tolerance_ratio", Json::num(worst_delta_ratio)),
+    ];
+    for (k, v) in &meta {
+        meta_refs.push((k.as_str(), v.clone()));
+    }
+    let out = repo_root.join("BENCH_quant.json");
+    bench::write_json(&out, "quant", meta_refs, &results)?;
+    println!("json -> {}", out.display());
+    println!(
+        "bytes/query: u8 {min_reduction_u8:.1}x, u16 \
+         {min_reduction_u16:.1}x; worst delta/tolerance \
+         {worst_delta_ratio:.3}"
+    );
+    Ok(())
+}

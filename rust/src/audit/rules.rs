@@ -29,14 +29,19 @@
 use super::lexer::{lex, Tok, TokKind};
 use std::collections::{BTreeMap, BTreeSet};
 
-/// Modules that serialize/deserialize wire payloads: lossy `as` casts
-/// here silently truncate protocol values, so they must be `try_from`
-/// conversions or carry a `// CAST:` losslessness argument.
+/// Modules that serialize/deserialize wire payloads — plus the LSH
+/// geometry and quantized-plane kernels, whose index/code casts sit on
+/// the accuracy-critical hot path: lossy `as` casts in any of these
+/// silently corrupt values, so they must be `try_from` conversions or
+/// carry a `// CAST:` losslessness argument.
 pub const WIRE_FILES: &[&str] = &[
     "coordinator/protocol.rs",
     "shard/remote.rs",
     "shard/serde.rs",
     "util/json.rs",
+    "lsh/l2.rs",
+    "lsh/srp.rs",
+    "sketch/quant.rs",
 ];
 
 /// Modules whose non-test code executes on the reactor thread, the

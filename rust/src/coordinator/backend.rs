@@ -55,7 +55,8 @@ use crate::nn::{Mlp, MlpScratch};
 use crate::runtime::Executable;
 use crate::shard::{self, MergeScratch, ShardedSketch};
 use crate::sketch::epoch::{CounterPlane, MAX_PENDING};
-use crate::sketch::{BatchScratch, FusedMultiSketch, FusedScratch, RaceSketch};
+use crate::sketch::{BatchScratch, FusedMultiSketch, FusedScratch,
+                    QuantScratch, QuantSketch, RaceSketch};
 use std::sync::Arc;
 
 /// Which backend variant a request targets.
@@ -751,6 +752,142 @@ impl Engine for MulticlassEngine {
     }
 }
 
+/// A quantized counter plane serving the `rs` or `mc` wire kind: a
+/// [`QuantSketch`] answers single-output estimates (RSQK shape) or
+/// multiclass argmax + optional scores (RSQM shape) with 2–4× fewer
+/// counter bytes moved per query.  Scores differ from the f32 lane by
+/// at most [`QuantSketch::score_tolerance`] (the measured tolerance
+/// contract).  Read-only: there is no f32 buffer to fold updates into,
+/// so the default [`Engine::apply_updates`] bail and
+/// `update_shape() == None` apply — a quantized lane rejects `update`
+/// traffic instead of silently drifting from its tables.
+pub struct QuantEngine {
+    pub quant: Arc<QuantSketch>,
+    pool: Arc<WorkerPool>,
+    flat: Vec<f32>,
+    scratch: QuantScratch,
+}
+
+impl QuantEngine {
+    pub fn new(quant: QuantSketch) -> Self {
+        Self::with_pool(quant, WorkerPool::shared())
+    }
+
+    pub fn with_pool(quant: QuantSketch, pool: Arc<WorkerPool>) -> Self {
+        Self {
+            quant: Arc::new(quant),
+            pool,
+            flat: Vec::new(),
+            scratch: QuantScratch::default(),
+        }
+    }
+
+    /// Shape `(B, C)` scores into the wire-facing output — the same
+    /// rule as the f32 lanes: single-output planes answer the raw
+    /// estimate, multiclass planes answer the argmax index plus the
+    /// score matrix on request.
+    fn shape_output(&self, scores: Vec<f32>, want_scores: bool)
+        -> BatchOutput {
+        if !self.quant.multiclass {
+            return BatchOutput { values: scores, scores: None };
+        }
+        let c_n = self.quant.n_classes;
+        BatchOutput {
+            values: argmax_values(&scores, c_n),
+            scores: want_scores.then(|| ScoreMatrix {
+                n_classes: c_n,
+                flat: scores,
+            }),
+        }
+    }
+}
+
+impl Engine for QuantEngine {
+    fn dim(&self) -> usize {
+        self.quant.d
+    }
+
+    fn eval_batch(&mut self, rows: &[Vec<f32>]) -> anyhow::Result<Vec<f32>> {
+        Ok(self.eval_batch_ex(rows, false)?.values)
+    }
+
+    fn eval_batch_ex(
+        &mut self,
+        rows: &[Vec<f32>],
+        want_scores: bool,
+    ) -> anyhow::Result<BatchOutput> {
+        let c_n = self.quant.n_classes;
+        if rows.is_empty() {
+            return Ok(BatchOutput {
+                values: Vec::new(),
+                scores: (want_scores && self.quant.multiclass).then(
+                    || ScoreMatrix { n_classes: c_n, flat: Vec::new() },
+                ),
+            });
+        }
+        let d = self.quant.d;
+        for (i, r) in rows.iter().enumerate() {
+            anyhow::ensure!(
+                r.len() == d,
+                "row {i} has dim {}, want {d}",
+                r.len()
+            );
+        }
+        let n = rows.len();
+        let shards = shard_count(&self.pool, n);
+        if n < PAR_MIN_BATCH || shards < 2 {
+            self.flat.clear();
+            self.flat.reserve(n * d);
+            for r in rows {
+                self.flat.extend_from_slice(r);
+            }
+            let scores = self
+                .quant
+                .scores_batch_with(&self.flat, &mut self.scratch)
+                .to_vec();
+            return Ok(self.shape_output(scores, want_scores));
+        }
+        // Pool fan-out, same shape as the f32 lanes: batch-sharded
+        // jobs against the shared read-only plane, per-worker scratch.
+        let chunk_rows = (n + shards - 1) / shards;
+        if self.quant.multiclass && !want_scores {
+            // Argmax computed worker-side: one f32 per row crosses
+            // the pool, not a (B, C) score matrix nobody asked for.
+            let jobs: Vec<_> = shard_rows(rows, chunk_rows, d)
+                .into_iter()
+                .map(|flat| {
+                    let quant = self.quant.clone();
+                    move |ws: &mut WorkerScratch| {
+                        let mut preds = Vec::new();
+                        quant.predict_batch_with(&flat, &mut ws.quant,
+                                                 &mut preds);
+                        preds.into_iter()
+                            .map(|c| c as f32)
+                            .collect::<Vec<_>>()
+                    }
+                })
+                .collect();
+            return Ok(BatchOutput {
+                values: self.pool.run_jobs(jobs).concat(),
+                scores: None,
+            });
+        }
+        let jobs: Vec<_> = shard_rows(rows, chunk_rows, d)
+            .into_iter()
+            .map(|flat| {
+                let quant = self.quant.clone();
+                move |ws: &mut WorkerScratch| {
+                    quant
+                        .scores_batch_with(&flat, &mut ws.quant)
+                        .to_vec()
+                }
+            })
+            .collect();
+        let scores = self.pool.run_jobs(jobs).concat();
+        Ok(self.shape_output(scores, want_scores))
+    }
+}
+
 /// The `sh` lane: a sketch partitioned into whole-MoM-group shards.
 /// Every drained batch is projected ONCE on the lane thread, fanned out
 /// as exactly one shard-kernel submission per shard through the
@@ -897,6 +1034,11 @@ impl Engine for ShardedEngine {
     }
 
     fn update_shape(&self) -> Option<(usize, usize)> {
+        if self.sharded.is_quantized() {
+            // Quantized shard sets are read-only (no f32 buffer to
+            // fold deltas into) — advertise immutability.
+            return None;
+        }
         Some((self.sharded.head.p, self.sharded.head.n_classes))
     }
 
@@ -905,6 +1047,11 @@ impl Engine for ShardedEngine {
         ups: &[UpdateRow],
         publish: bool,
     ) -> anyhow::Result<UpdateAck> {
+        anyhow::ensure!(
+            !self.sharded.is_quantized(),
+            "this sharded lane serves a quantized (read-only) plane; \
+             updates require the f32 shard set"
+        );
         let p = self.sharded.head.p;
         let c_n = self.sharded.head.n_classes;
         // Whole-batch validation first (no partial application).
@@ -1472,6 +1619,138 @@ mod tests {
             crate::shard::ShardedSketch::from_race(&sketch, 2),
         );
         assert!(engine.eval_batch(&[vec![0.0; 4]]).is_err());
+    }
+
+    #[test]
+    fn quant_engine_multiclass_matches_plane_kernel_across_threshold() {
+        use crate::sketch::{GatherLanes, QuantBits, QuantScratch,
+                            QuantSketch};
+        let (fused, _, d) = multiclass_fixture(0xA5, 4);
+        let qs = QuantSketch::from_fused(
+            &fused,
+            QuantBits::U8,
+            GatherLanes::Lanes8,
+        );
+        let reference = QuantSketch::from_fused(
+            &fused,
+            QuantBits::U8,
+            GatherLanes::Lanes8,
+        );
+        let tol = reference.score_tolerance();
+        let pool = Arc::new(WorkerPool::new(4));
+        let mut engine = QuantEngine::with_pool(qs, pool);
+        assert_eq!(engine.update_shape(), None, "read-only lane");
+        let mut s = QuantScratch::default();
+        let mut fs = crate::sketch::FusedScratch::default();
+        let mut f32_scores = Vec::new();
+        for &n in &[1usize, 30, 64, 130] {
+            let rows = random_rows(600 + n as u64, n, d);
+            let out = engine.eval_batch_ex(&rows, true).unwrap();
+            let scores = out.scores.expect("scores requested");
+            assert_eq!(out.values.len(), n);
+            assert_eq!(scores.n_classes, 4);
+            for (i, r) in rows.iter().enumerate() {
+                // Bit-identical to the plane kernel on both sides of
+                // the fan-out threshold (B=1 IS the scalar path).
+                let want = reference
+                    .scores_batch_with(r, &mut s)
+                    .to_vec();
+                let row = scores.row(i).expect("row in range");
+                for (c, w) in want.iter().enumerate() {
+                    assert_eq!(
+                        row[c].to_bits(),
+                        w.to_bits(),
+                        "n={n} row {i} class {c}"
+                    );
+                }
+                // And inside the declared tolerance of the f32 lane.
+                fused.scores_with(r, &mut fs, &mut f32_scores);
+                for (c, w) in f32_scores.iter().enumerate() {
+                    assert!(
+                        (row[c] - w).abs() <= tol,
+                        "n={n} row {i} class {c}: |{} - {w}| > {tol}",
+                        row[c]
+                    );
+                }
+            }
+            // Without the flag: same argmax values, no matrix.
+            let plain = engine.eval_batch_ex(&rows, false).unwrap();
+            assert_eq!(plain.values, out.values);
+            assert!(plain.scores.is_none());
+        }
+        // Updates are rejected (the default bail).
+        let up = UpdateRow { x: vec![0.0; d], alpha: 1.0, class: 0 };
+        assert!(engine.apply_updates(&[up], true).is_err());
+    }
+
+    #[test]
+    fn quant_engine_single_output_answers_raw_estimates() {
+        use crate::sketch::{GatherLanes, QuantBits, QuantScratch,
+                            QuantSketch};
+        let kp = random_kp(0xA6, 7, 4, 30);
+        let sketch = crate::sketch::RaceSketch::build(
+            &kp,
+            &SketchConfig::default(),
+        );
+        let qs = QuantSketch::from_race(
+            &sketch,
+            QuantBits::U16,
+            GatherLanes::Scalar,
+        );
+        let tol = qs.score_tolerance();
+        let reference = QuantSketch::from_race(
+            &sketch,
+            QuantBits::U16,
+            GatherLanes::Scalar,
+        );
+        let pool = Arc::new(WorkerPool::new(4));
+        let mut engine = QuantEngine::with_pool(qs, pool);
+        let mut s = QuantScratch::default();
+        let mut qscr = QueryScratch::default();
+        for &n in &[1usize, 64, 130] {
+            let rows = random_rows(700 + n as u64, n, 7);
+            let out = engine.eval_batch_ex(&rows, true).unwrap();
+            assert!(out.scores.is_none(), "single-output: no matrix");
+            for (i, r) in rows.iter().enumerate() {
+                let want = reference.scores_batch_with(r, &mut s)[0];
+                assert_eq!(
+                    out.values[i].to_bits(),
+                    want.to_bits(),
+                    "n={n} row {i}"
+                );
+                let f = sketch.query_with(r, &mut qscr);
+                assert!(
+                    (out.values[i] - f).abs() <= tol,
+                    "n={n} row {i}: |{} - {f}| > {tol}",
+                    out.values[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_sharded_engine_is_read_only() {
+        use crate::sketch::{GatherLanes, QuantBits, QuantSketch};
+        let kp = random_kp(0xA7, 6, 4, 20);
+        let sketch = crate::sketch::RaceSketch::build(
+            &kp,
+            &SketchConfig::default(),
+        );
+        let qs = QuantSketch::from_race(
+            &sketch,
+            QuantBits::U8,
+            GatherLanes::Lanes8,
+        );
+        let sharded = crate::shard::ShardedSketch::from_quant(&qs, 3);
+        let mut engine = ShardedEngine::new(sharded);
+        assert_eq!(engine.update_shape(), None);
+        let up = UpdateRow { x: vec![0.0; 4], alpha: 1.0, class: 0 };
+        let err = engine.apply_updates(&[up], true).unwrap_err();
+        assert!(err.to_string().contains("read-only"), "{err}");
+        // Queries still serve (the empty f32 planes are benign).
+        let rows = random_rows(0xA8, 5, 6);
+        let got = engine.eval_batch(&rows).unwrap();
+        assert_eq!(got.len(), 5);
     }
 
     #[test]

@@ -30,7 +30,8 @@
 //! shared worker out from under every other lane.
 
 use crate::shard::ShardScratch;
-use crate::sketch::{BatchScratch, FusedScratch, QueryScratch};
+use crate::sketch::{BatchScratch, FusedScratch, QuantScratch,
+                    QueryScratch};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
@@ -46,6 +47,8 @@ pub struct WorkerScratch {
     pub fused: FusedScratch,
     /// Sharded-sketch shard kernel scratch (`sh` lane).
     pub shard: ShardScratch,
+    /// Quantized-plane kernel scratch (quantized `rs`/`mc` lanes).
+    pub quant: QuantScratch,
 }
 
 type Job = Box<dyn FnOnce(&mut WorkerScratch) + Send + 'static>;

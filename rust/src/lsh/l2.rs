@@ -44,13 +44,20 @@ pub struct SparseL2Lsh {
 
 const SIGN_BIT: u32 = 1 << 31;
 
+/// Explicit lane width of the batch consumer loop (mirrors
+/// `sketch::quant::LANES` — both gathers use the same 8-wide chunk
+/// structure).
+const LANES: usize = 8;
+
 /// Branchless floor-to-i32 (§Perf: `f32::floor` lowers to a libm PLT call
 /// on this toolchain — 8% of the query profile).  Exact for |v| < 2^31,
 /// which L2-LSH code magnitudes satisfy by construction (values are
 /// (a·x + b)/r over standardized data).
 #[inline(always)]
 fn fast_floor(v: f32) -> i32 {
+    // CAST: |v| < 2^31 by construction (doc above) — truncation exact.
     let t = v as i32;
+    // CAST: i32 -> f32 compare + bool -> {0, 1} correction term.
     t - ((v < t as f32) as i32)
 }
 
@@ -67,18 +74,31 @@ impl SparseL2Lsh {
         for _t in 0..n_hashes {
             for i in 0..dim {
                 let u = rng.next_f64();
+                let iu = u32::try_from(i)
+                    .expect("L2-LSH dimension index exceeds u32");
                 if u < 1.0 / 6.0 {
-                    pos_idx.push(i as u32);
+                    pos_idx.push(iu);
                 } else if u > 5.0 / 6.0 {
-                    neg_idx.push(i as u32);
+                    neg_idx.push(iu);
                 }
             }
-            pos_off.push(pos_idx.len() as u32);
-            neg_off.push(neg_idx.len() as u32);
+            // Checked: a wrapped CSR offset would scramble every slice
+            // boundary downstream.
+            pos_off.push(
+                u32::try_from(pos_idx.len())
+                    .expect("L2-LSH +1 entry count exceeds u32"),
+            );
+            neg_off.push(
+                u32::try_from(neg_idx.len())
+                    .expect("L2-LSH -1 entry count exceeds u32"),
+            );
         }
         let mut brng = SplitMix64::new(seed ^ BIAS_SEED_XOR);
-        let bias: Vec<f32> =
-            (0..n_hashes).map(|_| (brng.next_f64() * width as f64) as f32).collect();
+        let bias: Vec<f32> = (0..n_hashes)
+            // CAST: f32 width -> f64 widens; the U[0, width) product
+            // rounds back to f32 (the reference stream's exact op order).
+            .map(|_| (brng.next_f64() * width as f64) as f32)
+            .collect();
 
         Self::from_csr(dim, n_hashes, width, pos_off, pos_idx, neg_off,
                        neg_idx, bias)
@@ -101,15 +121,19 @@ impl SparseL2Lsh {
         neg_idx: Vec<u32>,
         bias: Vec<f32>,
     ) -> Self {
+        let span = |off: &[u32], t: usize| {
+            // CAST: u32 CSR offsets -> usize slice bounds widen.
+            (off[t] as usize, off[t + 1] as usize)
+        };
         let mut counts = vec![0u32; dim + 1];
         for t in 0..n_hashes {
-            for &i in &pos_idx[pos_off[t] as usize..pos_off[t + 1] as usize]
-            {
-                counts[i as usize + 1] += 1;
+            let (plo, phi) = span(&pos_off, t);
+            for &i in &pos_idx[plo..phi] {
+                counts[i as usize + 1] += 1; // CAST: u32 index widens
             }
-            for &i in &neg_idx[neg_off[t] as usize..neg_off[t + 1] as usize]
-            {
-                counts[i as usize + 1] += 1;
+            let (nlo, nhi) = span(&neg_off, t);
+            for &i in &neg_idx[nlo..nhi] {
+                counts[i as usize + 1] += 1; // CAST: u32 index widens
             }
         }
         for i in 0..dim {
@@ -117,18 +141,29 @@ impl SparseL2Lsh {
         }
         let csc_off = counts.clone();
         let mut fill = counts;
-        let mut csc_entries =
-            vec![0u32; *csc_off.last().unwrap() as usize];
+        // CAST: total entry count, u32 -> usize widens.
+        let n_entries = *csc_off.last().unwrap() as usize;
+        let mut csc_entries = vec![0u32; n_entries];
+        // Pack hash index t into a u32 entry (top bit = sign).  Checked
+        // once here rather than per entry: every `t as u32` below is
+        // in-range and clear of SIGN_BIT.
+        let _ = u32::try_from(n_hashes)
+            .ok()
+            .filter(|&n| n & SIGN_BIT == 0)
+            .expect("L2-LSH hash count exceeds the 31-bit entry space");
         for t in 0..n_hashes {
-            for &i in &pos_idx[pos_off[t] as usize..pos_off[t + 1] as usize]
-            {
-                csc_entries[fill[i as usize] as usize] = t as u32;
-                fill[i as usize] += 1;
+            let tu = t as u32; // CAST: in-range by the check above
+            let (plo, phi) = span(&pos_off, t);
+            for &i in &pos_idx[plo..phi] {
+                let slot = fill[i as usize]; // CAST: u32 index widens
+                csc_entries[slot as usize] = tu; // CAST: u32 slot widens
+                fill[i as usize] += 1; // CAST: u32 index widens
             }
-            for &i in &neg_idx[neg_off[t] as usize..neg_off[t + 1] as usize]
-            {
-                csc_entries[fill[i as usize] as usize] = t as u32 | SIGN_BIT;
-                fill[i as usize] += 1;
+            let (nlo, nhi) = span(&neg_off, t);
+            for &i in &neg_idx[nlo..nhi] {
+                let slot = fill[i as usize]; // CAST: u32 index widens
+                csc_entries[slot as usize] = tu | SIGN_BIT; // CAST: widens
+                fill[i as usize] += 1; // CAST: u32 index widens
             }
         }
 
@@ -171,12 +206,12 @@ impl SparseL2Lsh {
             .iter()
             .map(|&o| o - nbase)
             .collect();
-        let pos_idx = self.pos_idx[pbase as usize
-            ..self.pos_off[hash_end] as usize]
-            .to_vec();
-        let neg_idx = self.neg_idx[nbase as usize
-            ..self.neg_off[hash_end] as usize]
-            .to_vec();
+        // CAST: CSR offsets are u32 -> usize widens (slice bounds).
+        let (pb, pe) = (pbase as usize, self.pos_off[hash_end] as usize);
+        let pos_idx = self.pos_idx[pb..pe].to_vec();
+        // CAST: CSR offsets are u32 -> usize widens (slice bounds).
+        let (nb, ne) = (nbase as usize, self.neg_off[hash_end] as usize);
+        let neg_idx = self.neg_idx[nb..ne].to_vec();
         let bias = self.bias[hash_start..hash_end].to_vec();
         Self::from_csr(self.dim, n, self.width, pos_off, pos_idx, neg_off,
                        neg_idx, bias)
@@ -197,10 +232,11 @@ impl SparseL2Lsh {
             if xi == 0.0 {
                 continue;
             }
-            let lo = self.csc_off[i] as usize;
+            let lo = self.csc_off[i] as usize; // CAST: u32 offset widens
             let hi = self.csc_off[i + 1] as usize;
             let xi_bits = xi.to_bits();
             for &e in &self.csc_entries[lo..hi] {
+                // CAST: hash index, u32 -> usize widens.
                 let t = (e & !SIGN_BIT) as usize;
                 // Branchless sign application: the packed sign bit is
                 // exactly the f32 sign-bit position (§Perf: the ± branch
@@ -253,9 +289,10 @@ impl SparseL2Lsh {
             if col.iter().all(|&v| v == 0.0) {
                 continue; // exact no-op for every lane (see doc above)
             }
-            let lo = self.csc_off[i] as usize;
+            let lo = self.csc_off[i] as usize; // CAST: u32 offset widens
             let hi = self.csc_off[i + 1] as usize;
             for &e in &self.csc_entries[lo..hi] {
+                // CAST: hash index, u32 -> usize widens.
                 let t = (e & !SIGN_BIT) as usize;
                 let sign = e & SIGN_BIT;
                 // SAFETY: t < n_hashes by construction, so the row
@@ -263,7 +300,21 @@ impl SparseL2Lsh {
                 let row = unsafe {
                     acc.get_unchecked_mut(t * batch..(t + 1) * batch)
                 };
-                for (o, &x) in row.iter_mut().zip(col) {
+                // Lane-explicit accumulate (§Perf): same element-wise add
+                // in the same order as a plain zip, so bit-identical by
+                // construction (locked by the batch-vs-scalar and
+                // slice-vs-full property tests below); the fixed-width
+                // chunks give the backend straight-line 8-lane bodies.
+                let mut oi = row.chunks_exact_mut(LANES);
+                let mut xi = col.chunks_exact(LANES);
+                for (os, xs) in (&mut oi).zip(&mut xi) {
+                    for j in 0..LANES {
+                        os[j] += f32::from_bits(xs[j].to_bits() ^ sign);
+                    }
+                }
+                for (o, &x) in
+                    oi.into_remainder().iter_mut().zip(xi.remainder())
+                {
                     *o += f32::from_bits(x.to_bits() ^ sign);
                 }
             }
@@ -278,15 +329,15 @@ impl SparseL2Lsh {
     pub fn dense_projection(&self) -> Vec<f32> {
         let mut m = vec![0.0f32; self.dim * self.n_hashes];
         for t in 0..self.n_hashes {
-            for &i in &self.pos_idx
-                [self.pos_off[t] as usize..self.pos_off[t + 1] as usize]
-            {
-                m[i as usize * self.n_hashes + t] = 1.0;
+            let plo = self.pos_off[t] as usize; // CAST: u32 offset widens
+            let phi = self.pos_off[t + 1] as usize;
+            for &i in &self.pos_idx[plo..phi] {
+                m[i as usize * self.n_hashes + t] = 1.0; // CAST: widens
             }
-            for &i in &self.neg_idx
-                [self.neg_off[t] as usize..self.neg_off[t + 1] as usize]
-            {
-                m[i as usize * self.n_hashes + t] = -1.0;
+            let nlo = self.neg_off[t] as usize; // CAST: u32 offset widens
+            let nhi = self.neg_off[t + 1] as usize;
+            for &i in &self.neg_idx[nlo..nhi] {
+                m[i as usize * self.n_hashes + t] = -1.0; // CAST: widens
             }
         }
         m
@@ -319,15 +370,15 @@ impl LshFamily for SparseL2Lsh {
         for t in 0..self.n_hashes {
             let mut acc = self.bias[t];
             // Add/subtract only — the paper's §3.4 hot loop.
-            for &i in &self.pos_idx
-                [self.pos_off[t] as usize..self.pos_off[t + 1] as usize]
-            {
-                acc += x[i as usize];
+            let plo = self.pos_off[t] as usize; // CAST: u32 offset widens
+            let phi = self.pos_off[t + 1] as usize;
+            for &i in &self.pos_idx[plo..phi] {
+                acc += x[i as usize]; // CAST: u32 index widens
             }
-            for &i in &self.neg_idx
-                [self.neg_off[t] as usize..self.neg_off[t + 1] as usize]
-            {
-                acc -= x[i as usize];
+            let nlo = self.neg_off[t] as usize; // CAST: u32 offset widens
+            let nhi = self.neg_off[t + 1] as usize;
+            for &i in &self.neg_idx[nlo..nhi] {
+                acc -= x[i as usize]; // CAST: u32 index widens
             }
             out[t] = fast_floor(acc * self.inv_width);
         }

@@ -26,14 +26,25 @@ impl SrpLsh {
         for _ in 0..n_hashes {
             for i in 0..dim {
                 let u = rng.next_f64();
+                let iu = u32::try_from(i)
+                    .expect("SRP dimension index exceeds u32");
                 if u < 1.0 / 6.0 {
-                    pos_idx.push(i as u32);
+                    pos_idx.push(iu);
                 } else if u > 5.0 / 6.0 {
-                    neg_idx.push(i as u32);
+                    neg_idx.push(iu);
                 }
             }
-            pos_off.push(pos_idx.len() as u32);
-            neg_off.push(neg_idx.len() as u32);
+            // The CSR offsets are entry counts (≤ n_hashes · dim); a
+            // silent `as u32` wrap here would scramble every slice
+            // boundary, so both are checked conversions.
+            pos_off.push(
+                u32::try_from(pos_idx.len())
+                    .expect("SRP +1 entry count exceeds u32"),
+            );
+            neg_off.push(
+                u32::try_from(neg_idx.len())
+                    .expect("SRP -1 entry count exceeds u32"),
+            );
         }
         Self { dim, n_hashes, pos_off, pos_idx, neg_off, neg_idx }
     }
@@ -57,17 +68,17 @@ impl LshFamily for SrpLsh {
     fn hash_into(&self, x: &[f32], out: &mut [i32]) {
         for t in 0..self.n_hashes {
             let mut acc = 0.0f32;
-            for &i in &self.pos_idx
-                [self.pos_off[t] as usize..self.pos_off[t + 1] as usize]
-            {
-                acc += x[i as usize];
+            let plo = self.pos_off[t] as usize; // CAST: u32 offset widens
+            let phi = self.pos_off[t + 1] as usize;
+            for &i in &self.pos_idx[plo..phi] {
+                acc += x[i as usize]; // CAST: u32 index widens
             }
-            for &i in &self.neg_idx
-                [self.neg_off[t] as usize..self.neg_off[t + 1] as usize]
-            {
-                acc -= x[i as usize];
+            let nlo = self.neg_off[t] as usize; // CAST: u32 offset widens
+            let nhi = self.neg_off[t + 1] as usize;
+            for &i in &self.neg_idx[nlo..nhi] {
+                acc -= x[i as usize]; // CAST: u32 index widens
             }
-            out[t] = (acc >= 0.0) as i32;
+            out[t] = i32::from(acc >= 0.0);
         }
     }
 }

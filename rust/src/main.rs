@@ -14,10 +14,13 @@
 //!                                          connection only as the
 //!                                          non-Linux fallback)
 //! repsketch eval --dataset NAME [--backend rs|nn|kernel]
-//! repsketch build-sketch --dataset NAME [--rows L] [--cols R] --out FILE
+//! repsketch build-sketch --dataset NAME [--rows L] [--cols R]
+//!                        [--family l2|srp] --out FILE
 //! repsketch fuse-sketch --inputs A.rssk,B.rssk,... --out FILE
-//! repsketch shard-sketch --input FILE.rssk|FILE.rsfm --shards N
-//!                        --out PREFIX
+//! repsketch quant-sketch --input FILE.rssk|FILE.rsfm --bits 8|16
+//!                        [--lanes scalar|8] --out FILE
+//! repsketch shard-sketch --input FILE.rssk|FILE.rsfm|FILE.rsqk|FILE.rsqm
+//!                        --shards N --out PREFIX
 //! repsketch shard-serve --rsfs FILE [--addr A]
 //!                                          serve ONE shard's kernel over
 //!                                          the wire (Linux)
@@ -28,6 +31,17 @@
 //! `FusedMultiSketch`; `serve --fused model=FILE` registers it as a
 //! `mc`-backend lane answering argmax class indices (add
 //! `"scores": true` to a request for the full per-class vector).
+//!
+//! `quant-sketch` rounds a built RSSK/RSFM's counters to u8/u16 codes
+//! with per-row affine `scale`/`offset` tables (RSQK/RSQM on disk,
+//! 4×/2× fewer counter bytes per query) and prints the measured
+//! tolerance contract — the max-abs score delta the quantized lane is
+//! allowed to show against its f32 source.  `serve --quant
+//! model=FILE` registers the quantized plane on the same wire lane
+//! its f32 source would use (`rs` for RSQK, `mc` for RSQM); the lane
+//! is read-only (no live updates).  `shard-sketch`/`serve --sharded`
+//! accept RSQK/RSQM transparently and carve quantized shard sets
+//! (RSQS files) through the same whole-group plan.
 //!
 //! `shard-sketch` splits a monolithic RSSK or RSFM into N per-shard
 //! RSFS files (`PREFIX.shard0.rsfs`, ...), whole median-of-means
@@ -66,7 +80,10 @@ use repsketch::runtime::registry::{DatasetBundle, DatasetMeta};
 use repsketch::runtime::Runtime;
 use repsketch::shard::serde::{load_sharded, load_shard_set};
 use repsketch::shard::ShardedSketch;
-use repsketch::sketch::{FusedMultiSketch, RaceSketch, SketchConfig};
+use repsketch::sketch::{
+    FusedMultiSketch, GatherLanes, QuantBits, QuantSketch, RaceSketch,
+    SketchConfig, SrpSketch,
+};
 use std::collections::HashMap;
 use std::sync::Arc;
 
@@ -116,6 +133,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "eval" => cmd_eval(rest),
         "build-sketch" => cmd_build_sketch(rest),
         "fuse-sketch" => cmd_fuse_sketch(rest),
+        "quant-sketch" => cmd_quant_sketch(rest),
         "shard-sketch" => cmd_shard_sketch(rest),
         "shard-serve" => cmd_shard_serve(rest),
         "help" | "--help" | "-h" => {
@@ -136,12 +154,16 @@ fn print_usage() {
          repsketch exp theory [--dataset adult]\n  \
          repsketch exp ablation [--dataset adult]\n  \
          repsketch serve [--addr 127.0.0.1:7878] [--pjrt] [--datasets a,b] \
-         [--fused NAME=FILE,...] [--sharded NAME=FILE:N|NAME=PREFIX,...] \
+         [--fused NAME=FILE,...] [--quant NAME=FILE,...] \
+         [--sharded NAME=FILE:N|NAME=PREFIX,...] \
          [--sharded-remote NAME=a0|a1,b0|b1,...] [--remote-timeout-ms N] \
          [--hedge-ms N]\n  \
          repsketch eval --dataset NAME [--backend rs|nn|kernel]\n  \
-         repsketch build-sketch --dataset NAME [--rows L] [--cols R] --out FILE\n  \
+         repsketch build-sketch --dataset NAME [--rows L] [--cols R] \
+         [--family l2|srp] --out FILE\n  \
          repsketch fuse-sketch --inputs A.rssk,B.rssk,... --out FILE\n  \
+         repsketch quant-sketch --input FILE --bits 8|16 \
+         [--lanes scalar|8] --out FILE\n  \
          repsketch shard-sketch --input FILE --shards N --out PREFIX\n  \
          repsketch shard-serve --rsfs FILE [--addr 127.0.0.1:7979]"
     );
@@ -327,15 +349,32 @@ fn cmd_build_sketch(args: &[String]) -> Result<()> {
             .unwrap_or(0),
         ..Default::default()
     };
-    let sk = RaceSketch::build(&kp, &cfg);
-    sk.save(out)?;
-    println!(
-        "sketch {}x{} ({} params, {} bytes) -> {out}",
-        sk.rows,
-        sk.cols,
-        sk.param_count(),
-        sk.serialized_size()
-    );
+    let family = flags.kv.get("family").map(|s| s.as_str()).unwrap_or("l2");
+    match family {
+        "l2" => {
+            let sk = RaceSketch::build(&kp, &cfg);
+            sk.save(out)?;
+            println!(
+                "sketch {}x{} ({} params, {} bytes) -> {out}",
+                sk.rows,
+                sk.cols,
+                sk.param_count(),
+                sk.serialized_size()
+            );
+        }
+        "srp" => {
+            let sk = SrpSketch::build(&kp, &cfg);
+            sk.save(out)?;
+            println!(
+                "srp sketch {}x{} ({} counters, {} bytes) -> {out}",
+                sk.rows,
+                sk.cols,
+                sk.counter_count(),
+                sk.serialized_size()
+            );
+        }
+        other => bail!("unknown --family {other:?} (use l2 or srp)"),
+    }
     Ok(())
 }
 
@@ -359,6 +398,60 @@ fn cmd_fuse_sketch(args: &[String]) -> Result<()> {
         fused.cols,
         fused.param_count(),
         fused.serialized_size()
+    );
+    Ok(())
+}
+
+fn cmd_quant_sketch(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args);
+    let input = flags.kv.get("input").context("--input required")?;
+    let out = flags.kv.get("out").context("--out required")?;
+    let bits =
+        QuantBits::parse(flags.kv.get("bits").context("--bits required")?)?;
+    let lanes = flags
+        .kv
+        .get("lanes")
+        .map(|s| GatherLanes::parse(s))
+        .transpose()?
+        .unwrap_or(GatherLanes::Lanes8);
+    let bytes =
+        std::fs::read(input).with_context(|| format!("read {input}"))?;
+    let (qs, f32_bytes) = if bytes.len() >= 4 && &bytes[..4] == b"RSSK" {
+        let sk = RaceSketch::from_bytes(&bytes)
+            .with_context(|| format!("parse RSSK {input}"))?;
+        let f32_bytes = sk.rows * 4;
+        (QuantSketch::from_race(&sk, bits, lanes), f32_bytes)
+    } else if bytes.len() >= 4 && &bytes[..4] == b"RSFM" {
+        let fs = FusedMultiSketch::from_bytes(&bytes)
+            .with_context(|| format!("parse RSFM {input}"))?;
+        let f32_bytes = fs.rows * fs.n_classes * 4;
+        (QuantSketch::from_fused(&fs, bits, lanes), f32_bytes)
+    } else {
+        bail!("{input}: not an RSSK/RSFM file (quantize built sketches)");
+    };
+    qs.save(out)?;
+    println!(
+        "quantized {}x{} C={} to {}-bit codes ({} bytes) -> {out}",
+        qs.rows,
+        qs.cols,
+        qs.n_classes,
+        match qs.bits() {
+            QuantBits::U8 => 8,
+            QuantBits::U16 => 16,
+        },
+        qs.serialized_size()
+    );
+    println!(
+        "counter bytes/query: {} (f32 source: {}, {:.1}x reduction)",
+        qs.counter_bytes_per_query(),
+        f32_bytes,
+        f32_bytes as f64 / qs.counter_bytes_per_query() as f64
+    );
+    println!(
+        "tolerance contract: max counter err {:.6e}, \
+         max score delta vs f32 <= {:.6e}",
+        qs.max_counter_err,
+        qs.score_tolerance()
     );
     Ok(())
 }
@@ -624,6 +717,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     }
     // Fused multiclass lanes: `--fused model=path.rsfm[,model=path...]`
     // (independent of the dataset artifacts tree).
+    let mut fused_models: Vec<String> = Vec::new();
     if let Some(spec) = flags.kv.get("fused") {
         for entry in spec.split(',') {
             let (model, path) = entry
@@ -631,6 +725,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
                 .with_context(|| format!("bad --fused entry {entry:?} \
                                           (want NAME=FILE)"))?;
             let model = model.trim().to_string();
+            fused_models.push(model.clone());
             let fused = FusedMultiSketch::load(path.trim())
                 .with_context(|| format!("load fused sketch {path}"))?;
             println!(
@@ -640,6 +735,51 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             );
             router.add_lane(&model, BackendKind::Multiclass, move || {
                 Ok(Box::new(backend::MulticlassEngine::new(fused)) as _)
+            }, &cfg);
+        }
+    }
+    // Quantized lanes: `--quant model=path.rsqk|path.rsqm[,...]` serves
+    // a quantized counter plane on the SAME wire lane its f32 source
+    // would use — `rs` for a quantized RSSK, `mc` for a quantized RSFM.
+    // Clients cannot tell from the protocol that the counters are
+    // codes; the contract is the measured score tolerance printed at
+    // registration (and by `quant-sketch`).  Quantized lanes are
+    // read-only: the update verb is refused, not silently dropped.
+    if let Some(spec) = flags.kv.get("quant") {
+        for entry in spec.split(',') {
+            let (model, path) = entry
+                .split_once('=')
+                .with_context(|| format!("bad --quant entry {entry:?} \
+                                          (want NAME=FILE)"))?;
+            let model = model.trim().to_string();
+            let qs = QuantSketch::load(path.trim())
+                .with_context(|| format!("load quantized sketch {path}"))?;
+            let kind = if qs.multiclass {
+                // Same wire name as --fused: refuse the silent
+                // last-wins collision on the mc lane.
+                anyhow::ensure!(
+                    !fused_models.contains(&model),
+                    "model {model} is registered by both --fused and \
+                     --quant — the mc lane can only have one engine"
+                );
+                BackendKind::Multiclass
+            } else {
+                BackendKind::Sketch
+            };
+            println!(
+                "registered {model} (quantized {}-bit {}, C={}, dim={}, \
+                 score tolerance {:.3e})",
+                match qs.bits() {
+                    QuantBits::U8 => 8,
+                    QuantBits::U16 => 16,
+                },
+                if qs.multiclass { "mc" } else { "rs" },
+                qs.n_classes,
+                qs.d,
+                qs.score_tolerance()
+            );
+            router.add_lane(&model, kind, move || {
+                Ok(Box::new(backend::QuantEngine::new(qs)) as _)
             }, &cfg);
         }
     }

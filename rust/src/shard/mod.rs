@@ -220,6 +220,46 @@ impl ShardedSketch {
         Self::from_counters(head, fs.counters(), fs.lsh(), n_shards)
     }
 
+    /// Shard a QUANTIZED plane: same plan, same head (the merge neither
+    /// knows nor cares that the group means came from dequantized
+    /// codes — they are f32 partials either way, which is why the
+    /// merge contract is unchanged), but each shard carves the codes +
+    /// per-row tables instead of f32 counters.  Quantized shards are
+    /// read-only: `ShardedEngine::apply_updates` and the shard server's
+    /// `Update` verb reject them.
+    pub fn from_quant(
+        qs: &crate::sketch::QuantSketch,
+        n_shards: usize,
+    ) -> ShardedSketch {
+        let head = ShardHead {
+            n_classes: qs.n_classes,
+            multiclass: qs.multiclass,
+            rows: qs.rows,
+            cols: qs.cols,
+            k_per_row: qs.k_per_row,
+            groups: qs.groups,
+            use_mom: qs.use_mom,
+            debias: qs.debias,
+            alpha_sums: qs.alpha_sums.clone(),
+            a: qs.projection().to_vec(),
+            d: qs.d,
+            p: qs.p,
+            lsh_seed: qs.lsh_seed,
+            width: qs.width,
+        };
+        let plan =
+            ShardPlan::new(head.rows, head.groups, head.use_mom, n_shards);
+        let shards = (0..plan.n_shards())
+            .map(|s| Arc::new(SketchShard::carve_quant(qs, &plan, s)))
+            .collect();
+        ShardedSketch { head, plan, shards }
+    }
+
+    /// True when the shards serve a quantized plane (read-only set).
+    pub fn is_quantized(&self) -> bool {
+        self.shards.first().map_or(false, |sh| sh.is_quantized())
+    }
+
     fn from_counters(
         head: ShardHead,
         counters: &[f32],

@@ -725,6 +725,15 @@ fn run_job(
             guard.send_line(line);
         }
         ShardCall::Update { x, alpha, class, publish } => {
+            if shard.is_quantized() {
+                // A quantized shard has no f32 buffer to fold the
+                // delta into — rejecting here (not panicking in the
+                // plane) keeps the read-only contract a wire error.
+                return answer_err(slo, guard, String::from(
+                    "this shard serves a quantized (read-only) plane; \
+                     updates require the f32 shard set",
+                ));
+            }
             let p = hello.head.p;
             if x.len() != p {
                 return answer_err(slo, guard, format!(

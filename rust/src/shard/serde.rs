@@ -14,20 +14,38 @@
 //! f32 alpha_sums[C] | f32 A[d*p] | f32 counters[(row_end-row_start)*cols*C]
 //! ```
 //!
+//! **RSQS** is the quantized sibling (shards of a
+//! [`crate::sketch::QuantSketch`]): identical layout with the pad flag
+//! byte carrying the code width, an 8-byte extension after the ranges,
+//! and the f32 counters replaced by per-LOCAL-row dequantization
+//! tables plus integer codes:
+//!
+//! ```text
+//! magic b"RSQS" | ... same fields ... | u8 use_mom | u8 debias
+//! | u8 multiclass | u8 bits (8|16) | ... d..group_end ...
+//! u8 lanes (0 scalar | 1 lanes8) | u8 pad[3] | f32 max_counter_err
+//! f32 alpha_sums[C] | f32 A[d*p]
+//! f32 scale[lr] | f32 offset[lr] | codes[lr*cols*C] (u8 | u16 LE)
+//! ```
+//!
 //! The full [`super::ShardHead`] is duplicated into every file (it is
 //! tiny next to the counters), so each shard can be shipped to a
 //! different host and the set re-validated wherever it lands.  Loading
 //! rejects inconsistent sets **at load, not at query time**: mismatched
 //! heads (seed, width, shape, flags, per-class Σα, projection),
-//! missing or duplicate shard indices, wrong set size, and any
-//! group/row range that does not match the deterministically recomputed
-//! [`super::ShardPlan`] (which catches overlapping or gappy repetition
-//! ranges).  Counters round-trip bitwise; the per-shard hash sub-family
-//! is regenerated from the stored seed and sliced.
+//! missing or duplicate shard indices, wrong set size, mixed
+//! f32/quantized files (or differing bits/lanes/measured error), and
+//! any group/row range that does not match the deterministically
+//! recomputed [`super::ShardPlan`] (which catches overlapping or gappy
+//! repetition ranges).  Counters and codes round-trip bitwise; the
+//! per-shard hash sub-family is regenerated from the stored seed and
+//! sliced.
 
 use super::plan::ShardSpan;
+use super::shard::ShardQuant;
 use super::{ShardHead, ShardPlan, ShardedSketch, SketchShard};
 use crate::lsh::SparseL2Lsh;
+use crate::sketch::quant::{GatherLanes, QuantBits, QuantCodes};
 use crate::sketch::serde::{check_hash_config, Cur};
 use anyhow::{bail, ensure, Context, Result};
 use std::io::Read;
@@ -37,14 +55,35 @@ use std::sync::Arc;
 /// Fixed portion of the RSFS header (everything before the float
 /// payload).
 const HEADER_BYTES: usize = 76;
+/// Fixed portion of the RSQS header (RSFS + lanes/pad/measured-error
+/// extension).
+const QHEADER_BYTES: usize = 84;
 
-/// One parsed shard file, pre-validation.
+/// One parsed shard file, pre-validation.  `counters` is empty and
+/// `quant` present for RSQS files; the reverse for RSFS.
 struct ShardFile {
     head: ShardHead,
     shard_index: usize,
     n_shards: usize,
     span: ShardSpan,
     counters: Vec<f32>,
+    quant: Option<ShardQuant>,
+}
+
+impl ShardFile {
+    /// Quantization identity of this file: `(bits, lanes,
+    /// max_counter_err bits)` or `None` for an f32 shard.  Every file
+    /// of a set must agree — a mixed set would silently serve two
+    /// different tolerance contracts.
+    fn quant_key(&self) -> Option<(u8, u8, u32)> {
+        self.quant.as_ref().map(|q| {
+            (
+                q.codes.bits().tag(),
+                q.lanes.tag(),
+                q.max_counter_err.to_bits(),
+            )
+        })
+    }
 }
 
 /// Checked u32 -> usize header read: explicit (and audit-visible)
@@ -62,13 +101,18 @@ fn wire_u32(v: usize, what: &str) -> u32 {
 }
 
 fn parse_shard(buf: &[u8]) -> Result<ShardFile> {
-    if buf.len() < 8 || &buf[..4] != b"RSFS" {
-        bail!("not an RSFS file");
+    if buf.len() < 8 {
+        bail!("not an RSFS/RSQS file");
     }
+    let quantized = match &buf[..4] {
+        b"RSFS" => false,
+        b"RSQS" => true,
+        _ => bail!("not an RSFS/RSQS file"),
+    };
     let mut c = Cur { b: buf, i: 4 };
     let version = c.u32()?;
     if version != 1 {
-        bail!("unsupported RSFS version {version}");
+        bail!("unsupported RSFS/RSQS version {version}");
     }
     let shard_index = idx(&mut c)?;
     let n_shards = idx(&mut c)?;
@@ -81,6 +125,16 @@ fn parse_shard(buf: &[u8]) -> Result<ShardFile> {
     let use_mom = flags[0] != 0;
     let debias = flags[1] != 0;
     let multiclass = flags[2] != 0;
+    // RSFS leaves flags[3] as pad; RSQS carries the code width there.
+    let bits = if quantized {
+        Some(match flags[3] {
+            8 => QuantBits::U8,
+            16 => QuantBits::U16,
+            t => bail!("RSQS header has unsupported bit width {t}"),
+        })
+    } else {
+        None
+    };
     let d = idx(&mut c)?;
     let p = idx(&mut c)?;
     let width = c.f32()?;
@@ -89,43 +143,125 @@ fn parse_shard(buf: &[u8]) -> Result<ShardFile> {
     let row_end = idx(&mut c)?;
     let group_start = idx(&mut c)?;
     let group_end = idx(&mut c)?;
+    // The RSQS extension: gather lane variant + the monolithic plane's
+    // measured worst per-counter error (the tolerance contract input).
+    let quant_hdr: Option<(QuantBits, GatherLanes, f32)> = match bits {
+        None => None,
+        Some(b) => {
+            let qf = c.take(4)?;
+            let lanes = match qf[0] {
+                0 => GatherLanes::Scalar,
+                1 => GatherLanes::Lanes8,
+                t => bail!("RSQS header has unknown lane tag {t}"),
+            };
+            let mce = c.f32()?;
+            if !mce.is_finite() || mce < 0.0 {
+                bail!("RSQS header has corrupt max_counter_err {mce}");
+            }
+            Some((b, lanes, mce))
+        }
+    };
     if n_classes == 0 || rows == 0 || cols == 0 || groups == 0
         || k_per_row == 0 || n_shards == 0
     {
-        bail!("RSFS header has a zero-sized field");
+        bail!("RSFS/RSQS header has a zero-sized field");
     }
     ensure!(
         multiclass || n_classes == 1,
-        "RSFS single-output shard declares {n_classes} classes"
+        "RSFS/RSQS single-output shard declares {n_classes} classes"
     );
     check_hash_config(rows, k_per_row, d, p)?;
     ensure!(
         shard_index < n_shards,
-        "RSFS shard_index {shard_index} out of {n_shards}"
+        "RSFS/RSQS shard_index {shard_index} out of {n_shards}"
     );
     ensure!(
         row_start < row_end && row_end <= rows
             && group_start < group_end,
-        "RSFS shard ranges invalid: rows [{row_start}, {row_end}) of \
-         {rows}, groups [{group_start}, {group_end})"
+        "RSFS/RSQS shard ranges invalid: rows [{row_start}, {row_end}) \
+         of {rows}, groups [{group_start}, {group_end})"
     );
     let local_rows = row_end - row_start;
     let i = c.i;
-    debug_assert_eq!(i, HEADER_BYTES);
+    debug_assert_eq!(
+        i,
+        if quantized { QHEADER_BYTES } else { HEADER_BYTES }
+    );
     // u128 so crafted huge header fields cannot wrap the size check.
-    let need = 4u128
-        * (n_classes as u128 // CAST: usize -> u128 widens losslessly
-            + d as u128 * p as u128 // CAST: see above
-            + local_rows as u128 * cols as u128 * n_classes as u128); // CAST: see above
-    if (buf.len() - i) as u128 != need { // CAST: see above
-        bail!("RSFS size mismatch: have {}, want {need}", buf.len() - i);
+    let base_f32s = n_classes as u128 // CAST: usize -> u128 widens
+        + d as u128 * p as u128; // CAST: see above
+    let counter_slots = local_rows as u128 // CAST: see above
+        * cols as u128 // CAST: see above
+        * n_classes as u128; // CAST: see above
+    let need = match quant_hdr {
+        None => 4u128 * (base_f32s + counter_slots),
+        Some((b, _, _)) => {
+            // CAST: local_rows usize -> u128 widens (scale + offset).
+            4u128 * (base_f32s + 2 * local_rows as u128)
+                + counter_slots
+                    * b.bytes_per_code() as u128 // CAST: 1|2 widens
+        }
+    };
+    if (buf.len() - i) as u128 != need { // CAST: buffer len widens
+        bail!(
+            "RSFS/RSQS size mismatch: have {}, want {need}",
+            buf.len() - i
+        );
     }
-    let mut floats = buf[i..]
+    let f32_bytes = 4 * match quant_hdr {
+        None => n_classes + d * p + local_rows * cols * n_classes,
+        Some(_) => n_classes + d * p + 2 * local_rows,
+    };
+    let mut floats = buf[i..i + f32_bytes]
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes(c.try_into().unwrap()));
     let alpha_sums: Vec<f32> = floats.by_ref().take(n_classes).collect();
     let a: Vec<f32> = floats.by_ref().take(d * p).collect();
-    let counters: Vec<f32> = floats.collect();
+    let (counters, quant) = match quant_hdr {
+        None => (floats.collect::<Vec<f32>>(), None),
+        Some((b, lanes, max_counter_err)) => {
+            let scale: Vec<f32> =
+                floats.by_ref().take(local_rows).collect();
+            let offset: Vec<f32> = floats.collect();
+            // Same table validation as the monolithic RSQ loader: a
+            // corrupt scale/offset entry is rejected here, never
+            // discovered as a garbage dequantized score.
+            for (l, &sc) in scale.iter().enumerate() {
+                if !sc.is_finite() || sc < 0.0 {
+                    bail!("RSQS scale table corrupt at local row {l}: \
+                           {sc}");
+                }
+            }
+            for (l, &of) in offset.iter().enumerate() {
+                if !of.is_finite() {
+                    bail!("RSQS offset table corrupt at local row {l}: \
+                           {of}");
+                }
+            }
+            let code_bytes = &buf[i + f32_bytes..];
+            let codes = match b {
+                QuantBits::U8 => QuantCodes::U8(code_bytes.to_vec()),
+                QuantBits::U16 => QuantCodes::U16(
+                    code_bytes
+                        .chunks_exact(2)
+                        .map(|c| {
+                            u16::from_le_bytes(c.try_into().unwrap())
+                        })
+                        .collect(),
+                ),
+            };
+            (
+                Vec::new(),
+                Some(ShardQuant {
+                    codes,
+                    scale,
+                    offset,
+                    lanes,
+                    max_counter_err,
+                }),
+            )
+        }
+    };
     Ok(ShardFile {
         head: ShardHead {
             n_classes,
@@ -147,6 +283,7 @@ fn parse_shard(buf: &[u8]) -> Result<ShardFile> {
         n_shards,
         span: ShardSpan { group_start, group_end, row_start, row_end },
         counters,
+        quant,
     })
 }
 
@@ -220,16 +357,28 @@ pub fn shard_from_file_bytes(buf: &[u8]) -> Result<LoadedShard> {
         f.head.rows * f.head.k_per_row as usize,
         f.head.width,
     );
-    let shard = SketchShard::from_parts(
-        f.counters,
-        f.head.n_classes,
-        f.head.cols,
-        f.head.k_per_row,
-        &full_lsh,
-        f.shard_index,
-        f.span,
-        &plan,
-    );
+    let shard = match f.quant {
+        Some(q) => SketchShard::from_quant_parts(
+            q,
+            f.head.n_classes,
+            f.head.cols,
+            f.head.k_per_row,
+            &full_lsh,
+            f.shard_index,
+            f.span,
+            &plan,
+        ),
+        None => SketchShard::from_parts(
+            f.counters,
+            f.head.n_classes,
+            f.head.cols,
+            f.head.k_per_row,
+            &full_lsh,
+            f.shard_index,
+            f.span,
+            &plan,
+        ),
+    };
     Ok(LoadedShard { head: f.head, n_shards: f.n_shards, shard })
 }
 
@@ -243,10 +392,11 @@ pub fn load_shard_file<P: AsRef<Path>>(path: P) -> Result<LoadedShard> {
         .with_context(|| format!("parse RSFS {:?}", path.as_ref()))
 }
 
-/// Load a monolithic sketch file as a [`ShardedSketch`] (RSSK or RSFM,
-/// detected by magic), split `n_shards` ways.  Shared by the `serve`
-/// CLI and the coordinator's hot-swap path — both must hold a swapped
-/// model to exactly the load-time validators.
+/// Load a monolithic sketch file as a [`ShardedSketch`] (RSSK, RSFM,
+/// or a quantized RSQK/RSQM plane — detected by magic), split
+/// `n_shards` ways.  Shared by the `serve` CLI and the coordinator's
+/// hot-swap path — both must hold a swapped model to exactly the
+/// load-time validators.
 pub fn load_sharded(path: &str, n_shards: usize) -> Result<ShardedSketch> {
     let bytes =
         std::fs::read(path).with_context(|| format!("read {path}"))?;
@@ -258,8 +408,14 @@ pub fn load_sharded(path: &str, n_shards: usize) -> Result<ShardedSketch> {
         let fs = crate::sketch::FusedMultiSketch::from_bytes(&bytes)
             .with_context(|| format!("parse RSFM {path}"))?;
         Ok(ShardedSketch::from_fused(&fs, n_shards))
+    } else if bytes.len() >= 4
+        && (&bytes[..4] == b"RSQK" || &bytes[..4] == b"RSQM")
+    {
+        let qs = crate::sketch::QuantSketch::from_bytes(&bytes)
+            .with_context(|| format!("parse RSQ {path}"))?;
+        Ok(ShardedSketch::from_quant(&qs, n_shards))
     } else {
-        bail!("{path}: neither an RSSK nor an RSFM file")
+        bail!("{path}: not an RSSK/RSFM/RSQK/RSQM file")
     }
 }
 
@@ -287,12 +443,18 @@ pub fn load_shard_set(prefix: &str) -> Result<ShardedSketch> {
 }
 
 impl ShardedSketch {
-    /// Serialize shard `s` as an RSFS file.
+    /// Serialize shard `s` — RSFS for f32 shards, RSQS for quantized
+    /// ones (same `.shard{i}.rsfs` file suffix; loaders sniff magic).
     pub fn shard_to_bytes(&self, s: usize) -> Vec<u8> {
         let sh = &self.shards[s];
         let h = &self.head;
+        let q = sh.quant();
         let mut out = Vec::with_capacity(self.shard_serialized_size(s));
-        out.extend_from_slice(b"RSFS");
+        out.extend_from_slice(if q.is_some() {
+            b"RSQS"
+        } else {
+            b"RSFS"
+        });
         out.extend_from_slice(&1u32.to_le_bytes());
         for v in [
             wire_u32(sh.shard_index, "shard_index"),
@@ -308,7 +470,7 @@ impl ShardedSketch {
         out.push(u8::from(h.use_mom));
         out.push(u8::from(h.debias));
         out.push(u8::from(h.multiclass));
-        out.push(0u8);
+        out.push(q.map_or(0, |q| q.codes.bits().tag()));
         out.extend_from_slice(&wire_u32(h.d, "d").to_le_bytes());
         out.extend_from_slice(&wire_u32(h.p, "p").to_le_bytes());
         out.extend_from_slice(&h.width.to_le_bytes());
@@ -321,13 +483,33 @@ impl ShardedSketch {
         ] {
             out.extend_from_slice(&v.to_le_bytes());
         }
-        for v in h
-            .alpha_sums
-            .iter()
-            .chain(h.a.iter())
-            .chain(sh.counters().iter())
-        {
+        if let Some(q) = q {
+            out.push(q.lanes.tag());
+            out.extend_from_slice(&[0u8; 3]);
+            out.extend_from_slice(&q.max_counter_err.to_le_bytes());
+        }
+        for v in h.alpha_sums.iter().chain(h.a.iter()) {
             out.extend_from_slice(&v.to_le_bytes());
+        }
+        match q {
+            None => {
+                for v in sh.counters() {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Some(q) => {
+                for v in q.scale.iter().chain(q.offset.iter()) {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+                match &q.codes {
+                    QuantCodes::U8(v) => out.extend_from_slice(v),
+                    QuantCodes::U16(v) => {
+                        for code in v {
+                            out.extend_from_slice(&code.to_le_bytes());
+                        }
+                    }
+                }
+            }
         }
         out
     }
@@ -335,10 +517,16 @@ impl ShardedSketch {
     /// Serialized size of shard `s`.
     pub fn shard_serialized_size(&self, s: usize) -> usize {
         let sh = &self.shards[s];
-        HEADER_BYTES
-            + 4 * (self.head.n_classes
-                + self.head.d * self.head.p
-                + sh.counters().len())
+        let base = 4 * (self.head.n_classes + self.head.d * self.head.p);
+        match sh.quant() {
+            None => HEADER_BYTES + base + 4 * sh.counters().len(),
+            Some(q) => {
+                QHEADER_BYTES
+                    + base
+                    + 8 * sh.local_rows()
+                    + q.codes.len() * q.codes.bits().bytes_per_code()
+            }
+        }
     }
 
     /// Write every shard as `{prefix}.shard{i}.rsfs`; returns the
@@ -387,6 +575,14 @@ impl ShardedSketch {
                 f.shard_index,
                 files[0].shard_index
             );
+            ensure!(
+                f.quant_key() == files[0].quant_key(),
+                "shard {} quantization differs from shard {} (a set \
+                 must be uniformly f32 or uniformly quantized with one \
+                 bits/lanes/measured-error contract)",
+                f.shard_index,
+                files[0].shard_index
+            );
         }
         files.sort_by_key(|f| f.shard_index);
         for (i, f) in files.iter().enumerate() {
@@ -429,16 +625,28 @@ impl ShardedSketch {
         let shards = files
             .into_iter()
             .map(|f| {
-                Arc::new(SketchShard::from_parts(
-                    f.counters,
-                    head.n_classes,
-                    head.cols,
-                    head.k_per_row,
-                    &full_lsh,
-                    f.shard_index,
-                    f.span,
-                    &plan,
-                ))
+                Arc::new(match f.quant {
+                    Some(q) => SketchShard::from_quant_parts(
+                        q,
+                        head.n_classes,
+                        head.cols,
+                        head.k_per_row,
+                        &full_lsh,
+                        f.shard_index,
+                        f.span,
+                        &plan,
+                    ),
+                    None => SketchShard::from_parts(
+                        f.counters,
+                        head.n_classes,
+                        head.cols,
+                        head.k_per_row,
+                        &full_lsh,
+                        f.shard_index,
+                        f.span,
+                        &plan,
+                    ),
+                })
             })
             .collect();
         Ok(ShardedSketch { head, plan, shards })
@@ -691,6 +899,144 @@ mod tests {
             b[12..16].copy_from_slice(&9u32.to_le_bytes());
         }
         let err = ShardedSketch::from_shard_bytes(&bufs).unwrap_err();
+        assert!(err.to_string().contains("size mismatch"), "{err}");
+    }
+
+    use crate::sketch::{GatherLanes, QuantBits, QuantScratch,
+                        QuantSketch};
+
+    #[test]
+    fn quant_shard_set_roundtrips_bitwise_and_matches_unsharded() {
+        let fs = sample_fused();
+        for (bits, lanes) in [
+            (QuantBits::U8, GatherLanes::Lanes8),
+            (QuantBits::U16, GatherLanes::Scalar),
+        ] {
+            let qs = QuantSketch::from_fused(&fs, bits, lanes);
+            let sharded = ShardedSketch::from_quant(&qs, 3);
+            assert!(sharded.is_quantized());
+            let bufs: Vec<Vec<u8>> = (0..sharded.n_shards())
+                .map(|s| sharded.shard_to_bytes(s))
+                .collect();
+            assert_eq!(&bufs[0][..4], b"RSQS");
+            assert_eq!(bufs[0].len(), sharded.shard_serialized_size(0));
+            let reloaded =
+                ShardedSketch::from_shard_bytes(&bufs).unwrap();
+            assert!(reloaded.is_quantized());
+            roundtrip_queries(&sharded, &reloaded, fs.d);
+            // The sharded gather must also be bit-for-bit the
+            // UNSHARDED quantized gather (same dequantized adds in the
+            // same order, merged through the untouched estimator).
+            let mut rng = SplitMix64::new(61);
+            let queries: Vec<f32> = (0..7 * fs.d)
+                .map(|_| rng.next_gaussian() as f32)
+                .collect();
+            let mut s = QuantScratch::default();
+            let want = qs.scores_batch_with(&queries, &mut s).to_vec();
+            let got = reloaded.scores_batch(&queries);
+            assert_eq!(got.len(), want.len());
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    g.to_bits(),
+                    w.to_bits(),
+                    "bits {:?} slot {i}",
+                    bits
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn standalone_quant_shard_file_loads() {
+        let qs = QuantSketch::from_race(
+            &sample_race(),
+            QuantBits::U8,
+            GatherLanes::Lanes8,
+        );
+        let sharded = ShardedSketch::from_quant(&qs, 3);
+        let buf = sharded.shard_to_bytes(1);
+        let loaded = shard_from_file_bytes(&buf).unwrap();
+        assert_eq!(loaded.n_shards, 3);
+        assert!(loaded.shard.is_quantized());
+        assert_eq!(loaded.shard.shard_index, 1);
+        assert_eq!(loaded.shard.row_start, sharded.shards[1].row_start);
+    }
+
+    #[test]
+    fn rejects_mixed_f32_and_quant_sets() {
+        // Same sketch, identical heads — only the payload kind
+        // differs, so ONLY the quantization-consistency check can
+        // reject the set.
+        let sk = sample_race();
+        let f32_sharded = ShardedSketch::from_race(&sk, 3);
+        let qs = QuantSketch::from_race(
+            &sk,
+            QuantBits::U8,
+            GatherLanes::Scalar,
+        );
+        let q_sharded = ShardedSketch::from_quant(&qs, 3);
+        let mixed = vec![
+            f32_sharded.shard_to_bytes(0),
+            q_sharded.shard_to_bytes(1),
+            f32_sharded.shard_to_bytes(2),
+        ];
+        let err = ShardedSketch::from_shard_bytes(&mixed).unwrap_err();
+        assert!(err.to_string().contains("quantization differs"), "{err}");
+        // Mixed code widths are just as inconsistent.
+        let q16 = ShardedSketch::from_quant(
+            &QuantSketch::from_race(
+                &sk,
+                QuantBits::U16,
+                GatherLanes::Scalar,
+            ),
+            3,
+        );
+        let widths = vec![
+            q_sharded.shard_to_bytes(0),
+            q16.shard_to_bytes(1),
+            q_sharded.shard_to_bytes(2),
+        ];
+        let err = ShardedSketch::from_shard_bytes(&widths).unwrap_err();
+        assert!(err.to_string().contains("quantization differs"), "{err}");
+    }
+
+    #[test]
+    fn rejects_corrupt_quant_shard_headers() {
+        let qs = QuantSketch::from_race(
+            &sample_race(),
+            QuantBits::U16,
+            GatherLanes::Lanes8,
+        );
+        let sharded = ShardedSketch::from_quant(&qs, 2);
+        let buf = sharded.shard_to_bytes(0);
+        // Unknown bit width (flags[3] at offset 31).
+        let mut b = buf.clone();
+        b[31] = 9;
+        let err = shard_from_file_bytes(&b).unwrap_err();
+        assert!(err.to_string().contains("bit width"), "{err}");
+        // Unknown lane tag (offset 76).
+        let mut b = buf.clone();
+        b[76] = 7;
+        let err = shard_from_file_bytes(&b).unwrap_err();
+        assert!(err.to_string().contains("lane tag"), "{err}");
+        // Non-finite max_counter_err (f32 at 80..84).
+        let mut b = buf.clone();
+        b[80..84].copy_from_slice(&f32::NAN.to_le_bytes());
+        let err = shard_from_file_bytes(&b).unwrap_err();
+        assert!(err.to_string().contains("max_counter_err"), "{err}");
+        // Negative scale-table entry (scale[0] sits right after the
+        // alpha_sums + A floats).
+        let scale_at =
+            84 + 4 * (qs.n_classes + qs.d * qs.p);
+        let mut b = buf.clone();
+        b[scale_at..scale_at + 4]
+            .copy_from_slice(&(-1.0f32).to_le_bytes());
+        let err = shard_from_file_bytes(&b).unwrap_err();
+        assert!(err.to_string().contains("scale table"), "{err}");
+        // Truncated codes fail the exact size check.
+        let mut b = buf.clone();
+        b.truncate(b.len() - 1);
+        let err = shard_from_file_bytes(&b).unwrap_err();
         assert!(err.to_string().contains("size mismatch"), "{err}");
     }
 }

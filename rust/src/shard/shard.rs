@@ -28,6 +28,7 @@
 //! debias happen at merge ([`super::merge`]).
 
 use crate::lsh::{concat, LshFamily, SparseL2Lsh};
+use crate::sketch::quant::{self, GatherLanes, QuantCodes, QuantSketch};
 
 /// Reusable per-worker scratch for shard kernels (zero allocation once
 /// warm; lives in `coordinator::pool::WorkerScratch`).
@@ -42,6 +43,23 @@ pub struct ShardScratch {
     class_acc: Vec<f32>,
 }
 
+/// The quantized counter slice of a shard: the local rows' u8/u16
+/// codes plus the per-LOCAL-row dequantization tables, carved from a
+/// [`QuantSketch`] exactly like `data` is carved from the f32 plane.
+/// `scale[ll]` / `offset[ll]` equal the monolithic tables at global
+/// row `row_start + ll`, so the shard gather's dequantized adds are
+/// bit-for-bit the unsharded quantized gather's.
+#[derive(Clone, Debug)]
+pub(crate) struct ShardQuant {
+    pub(crate) codes: QuantCodes,
+    pub(crate) scale: Vec<f32>,
+    pub(crate) offset: Vec<f32>,
+    pub(crate) lanes: GatherLanes,
+    /// The monolithic plane's measured worst per-counter error (shared
+    /// by every shard — the tolerance contract is a whole-model bound).
+    pub(crate) max_counter_err: f32,
+}
+
 /// A self-contained shard: rows `[row_start, row_end)` of a sketch,
 /// holding whole effective groups `[group_start, group_end)`.
 #[derive(Clone, Debug)]
@@ -49,8 +67,12 @@ pub struct SketchShard {
     /// Counters for the local rows, `(local_rows, cols, classes)`
     /// row-major (the class-interleaved layout; C = 1 for RSSK-shaped
     /// sketches, where it coincides with the plain `(rows, cols)`
-    /// layout).
+    /// layout).  EMPTY for quantized shards — their counters live in
+    /// `quant` and dequantize lazily inside the gather.
     data: Vec<f32>,
+    /// The quantized counter slice, when this shard serves a
+    /// [`QuantSketch`] (read-only: the update path is gated upstream).
+    quant: Option<ShardQuant>,
     pub n_classes: usize,
     pub cols: usize,
     pub k_per_row: u32,
@@ -89,6 +111,7 @@ impl SketchShard {
         let lsh = full_lsh.slice(span.row_start * k, span.row_end * k);
         SketchShard {
             data,
+            quant: None,
             n_classes,
             cols,
             k_per_row,
@@ -101,6 +124,46 @@ impl SketchShard {
                 .map(|g| plan.group_rows(g))
                 .collect(),
             lsh,
+        }
+    }
+
+    /// Carve shard `shard_index` of `plan` out of a quantized plane:
+    /// the codes for the local rows plus the matching slice of the
+    /// per-row dequantization tables.  The f32 `data` stays empty —
+    /// the gather dequantizes lazily, which is the whole point.
+    pub(super) fn carve_quant(
+        qs: &QuantSketch,
+        plan: &super::ShardPlan,
+        shard_index: usize,
+    ) -> SketchShard {
+        let span = plan.span(shard_index);
+        let stride = qs.cols * qs.n_classes;
+        let k = qs.k_per_row as usize;
+        SketchShard {
+            data: Vec::new(),
+            quant: Some(ShardQuant {
+                codes: qs.codes().slice_range(
+                    span.row_start * stride,
+                    span.row_end * stride,
+                ),
+                scale: qs.scale()[span.row_start..span.row_end].to_vec(),
+                offset: qs.offset()[span.row_start..span.row_end]
+                    .to_vec(),
+                lanes: qs.lanes,
+                max_counter_err: qs.max_counter_err,
+            }),
+            n_classes: qs.n_classes,
+            cols: qs.cols,
+            k_per_row: qs.k_per_row,
+            shard_index,
+            row_start: span.row_start,
+            row_end: span.row_end,
+            group_start: span.group_start,
+            group_end: span.group_end,
+            group_bounds: (span.group_start..span.group_end)
+                .map(|g| plan.group_rows(g))
+                .collect(),
+            lsh: qs.lsh().slice(span.row_start * k, span.row_end * k),
         }
     }
 
@@ -122,6 +185,7 @@ impl SketchShard {
         let k = k_per_row as usize;
         SketchShard {
             data,
+            quant: None,
             n_classes,
             cols,
             k_per_row,
@@ -135,6 +199,51 @@ impl SketchShard {
                 .collect(),
             lsh: full_lsh.slice(span.row_start * k, span.row_end * k),
         }
+    }
+
+    /// Rebuild a QUANTIZED shard from serialized parts (the RSQS load
+    /// path — same contract as [`SketchShard::from_parts`] with the f32
+    /// counters replaced by codes + per-local-row tables).
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn from_quant_parts(
+        quant: ShardQuant,
+        n_classes: usize,
+        cols: usize,
+        k_per_row: u32,
+        full_lsh: &SparseL2Lsh,
+        shard_index: usize,
+        span: super::plan::ShardSpan,
+        plan: &super::ShardPlan,
+    ) -> SketchShard {
+        let k = k_per_row as usize;
+        SketchShard {
+            data: Vec::new(),
+            quant: Some(quant),
+            n_classes,
+            cols,
+            k_per_row,
+            shard_index,
+            row_start: span.row_start,
+            row_end: span.row_end,
+            group_start: span.group_start,
+            group_end: span.group_end,
+            group_bounds: (span.group_start..span.group_end)
+                .map(|g| plan.group_rows(g))
+                .collect(),
+            lsh: full_lsh.slice(span.row_start * k, span.row_end * k),
+        }
+    }
+
+    /// True when this shard serves a quantized plane (read-only — the
+    /// update path must be rejected upstream, there is no f32 buffer to
+    /// fold deltas into).
+    pub fn is_quantized(&self) -> bool {
+        self.quant.is_some()
+    }
+
+    /// The quantized slice, when present (serde writes it back out).
+    pub(crate) fn quant(&self) -> Option<&ShardQuant> {
+        self.quant.as_ref()
     }
 
     pub fn local_rows(&self) -> usize {
@@ -171,7 +280,11 @@ impl SketchShard {
     /// [`crate::sketch::epoch::CounterPlane`].  NOTE: the plane's
     /// per-class `alpha_sums` are the FULL model's (every shard carries
     /// the complete debias terms — the merge debiases once, globally),
-    /// so the caller supplies them.
+    /// so the caller supplies them.  For a quantized shard the plane
+    /// wraps the EMPTY f32 buffer — pin/publish still work (the gather
+    /// reads the codes, not the snapshot), but `apply` must never be
+    /// reached: the engines and the shard server gate updates on
+    /// [`SketchShard::is_quantized`].
     pub fn plane(&self, alpha_sums: &[f32])
         -> crate::sketch::epoch::CounterPlane {
         crate::sketch::epoch::CounterPlane::new(&self.data, alpha_sums,
@@ -246,9 +359,29 @@ impl SketchShard {
                     let ll = l - self.row_start;
                     let col = s.cols[ll * batch + bq] as usize;
                     let base = (ll * self.cols + col) * c_n;
-                    let src = &data[base..base + c_n];
-                    for (a, &v) in s.class_acc.iter_mut().zip(src) {
-                        *a += v;
+                    match &self.quant {
+                        // Quantized plane: dequantize the span lazily
+                        // with the LOCAL row's table entries — equal to
+                        // the monolithic tables at global row `l`, so
+                        // the adds are bit-for-bit the unsharded
+                        // quantized gather's.
+                        Some(q) => quant::dequant_add_span(
+                            &q.codes,
+                            base,
+                            c_n,
+                            q.scale[ll],
+                            q.offset[ll],
+                            q.lanes,
+                            &mut s.class_acc,
+                        ),
+                        None => {
+                            let src = &data[base..base + c_n];
+                            for (a, &v) in
+                                s.class_acc.iter_mut().zip(src)
+                            {
+                                *a += v;
+                            }
+                        }
                     }
                 }
                 let div = (ge - gs) as f32;

@@ -22,16 +22,32 @@
 //!   dynamic batches pay off at the kernel level).  The batched path is
 //!   bit-for-bit identical to the scalar path, property-tested in
 //!   [`batch`].
+//!
+//! ## Exactness tiers
+//!
+//! Everything above is **exact**: scalar == batch-major == fused ==
+//! sharded (local and remote), bit for bit, locked by `.to_bits()`
+//! property tests.  The [`quant`] module adds the repo's one
+//! deliberately *inexact* tier — u8/u16 quantized counter planes with a
+//! measured, serialized error bound and an explicit score-delta
+//! tolerance ([`quant::QuantSketch::score_tolerance`]).  Quantizing
+//! never perturbs the f32 lanes: the hash pass is shared bit-for-bit,
+//! and a quantized plane is a separate read-only artifact.  See the
+//! [`quant`] module docs for the full tolerance contract.
 
 pub mod batch;
 pub mod epoch;
 pub mod fused;
 pub mod multiclass;
+pub mod quant;
 pub mod serde;
+pub mod srp;
 
 pub use batch::BatchScratch;
 pub use fused::{FusedMultiSketch, FusedScratch};
 pub use multiclass::MultiSketch;
+pub use quant::{GatherLanes, QuantBits, QuantScratch, QuantSketch};
+pub use srp::SrpSketch;
 
 use crate::kernel::KernelParams;
 use crate::lsh::{concat, LshFamily, SparseL2Lsh};

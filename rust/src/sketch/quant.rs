@@ -1,0 +1,1199 @@
+//! Quantized counter planes: u8/u16 codes with per-repetition affine
+//! dequantization, widened lazily into the C-wide f32 accumulator
+//! inside the gather loop.
+//!
+//! The hot path is memory-bound (that is why batch-major won), and the
+//! paper's headline is storage reduction — so the counters are the
+//! right thing to shrink.  A [`QuantSketch`] stores each repetition
+//! (row) l's `cols * n_classes` counters as integer codes plus one
+//! `(scale, offset)` pair chosen at quantize time from that row's
+//! counter range: `value ≈ code * scale + offset`.  Bytes moved per
+//! query drop 4× (u8) or 2× (u16) versus the f32 plane, at the cost of
+//! a bounded, **measured** score perturbation.
+//!
+//! ## The tolerance contract
+//!
+//! Quantized lanes are deliberately NOT bit-identical to f32 — this is
+//! the repo's first explicit accuracy-for-speed knob.  The contract:
+//!
+//! * At quantize time the worst per-counter reconstruction error is
+//!   measured exactly (`max_counter_err = max |dequant(code) - v|`)
+//!   and serialized with the plane.
+//! * Every aggregation stage is 1-Lipschitz in the sup norm: a group
+//!   mean of per-row sums whose addends are each off by ≤ ε is off by
+//!   ≤ ε, and a median of values each off by ≤ ε is off by ≤ ε.  The
+//!   debias map `(e - Σα/R) / (1 - 1/R)` amplifies by `1/(1 - 1/R)`.
+//! * [`QuantSketch::score_tolerance`] therefore bounds the score delta
+//!   by `max_counter_err * amp * 1.5 + 1e-3` (the 1.5×/additive slack
+//!   absorbs f32 summation-order noise).  Property tests and
+//!   `benches/quant.rs` gate the *measured* max |quant - f32| score
+//!   delta against this bound on every lane shape.
+//! * What stays exact: all f32 lanes remain bit-for-bit identical to
+//!   each other, and the quantized sharded gather is bit-identical to
+//!   the quantized unsharded gather (same dequantized adds in the same
+//!   order), so the shard merge contract is unchanged — group means
+//!   shipped over the wire are still plain f32.
+//!
+//! ## Lane-explicit gather
+//!
+//! The dequantizing accumulate runs in explicit 8-wide lane chunks
+//! ([`GatherLanes::Lanes8`], the default) or as a plain scalar loop
+//! ([`GatherLanes::Scalar`]), selected at plane construction and
+//! serialized.  Both variants perform the same element-wise operations
+//! in the same order, so they are bitwise-identical to each other —
+//! the lane structure only exposes the independence to the
+//! autovectorizer (stable Rust has no `std::simd`).
+//!
+//! Serde: `RSQK` (single-output, from [`RaceSketch`]) / `RSQM`
+//! (class-interleaved multiclass, from [`FusedMultiSketch`]) with
+//! validated headers — corrupt scale/offset tables are rejected at
+//! load, never at query time.
+
+use super::serde::{check_hash_config, Cur};
+use super::{FusedMultiSketch, RaceSketch};
+use crate::lsh::concat;
+use crate::lsh::SparseL2Lsh;
+use anyhow::{bail, Context, Result};
+use std::io::Read;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Explicit lane width of the unrolled gather chunks.
+pub(crate) const LANES: usize = 8;
+
+/// Code width of a quantized plane.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantBits {
+    /// 1 byte/counter: 4× fewer counter bytes than f32.
+    U8,
+    /// 2 bytes/counter: 2× fewer counter bytes than f32.
+    U16,
+}
+
+impl QuantBits {
+    /// Number of quantization levels minus one, as the exact f32 the
+    /// quantizer divides by.
+    pub fn levels(self) -> f32 {
+        match self {
+            QuantBits::U8 => 255.0,
+            QuantBits::U16 => 65535.0,
+        }
+    }
+
+    /// Serialized bytes per counter code.
+    pub fn bytes_per_code(self) -> usize {
+        match self {
+            QuantBits::U8 => 1,
+            QuantBits::U16 => 2,
+        }
+    }
+
+    /// Wire tag (the literal bit width).
+    pub fn tag(self) -> u8 {
+        match self {
+            QuantBits::U8 => 8,
+            QuantBits::U16 => 16,
+        }
+    }
+
+    /// Parse a CLI `--bits` value.
+    pub fn parse(s: &str) -> Result<QuantBits> {
+        match s {
+            "8" => Ok(QuantBits::U8),
+            "16" => Ok(QuantBits::U16),
+            other => bail!("unsupported --bits {other} (use 8 or 16)"),
+        }
+    }
+}
+
+/// Gather inner-loop variant, selected at plane construction.  Both
+/// variants are bitwise-identical (same element-wise ops, same order);
+/// `Lanes8` structures the loop in explicit 8-wide chunks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GatherLanes {
+    /// Plain scalar accumulate loop.
+    Scalar,
+    /// Unrolled 8-wide lane chunks (+ scalar remainder).
+    Lanes8,
+}
+
+impl GatherLanes {
+    /// Wire tag.
+    pub fn tag(self) -> u8 {
+        match self {
+            GatherLanes::Scalar => 0,
+            GatherLanes::Lanes8 => 1,
+        }
+    }
+
+    /// Parse a CLI `--lanes` value.
+    pub fn parse(s: &str) -> Result<GatherLanes> {
+        match s {
+            "scalar" => Ok(GatherLanes::Scalar),
+            "8" | "lanes8" => Ok(GatherLanes::Lanes8),
+            other => bail!("unsupported --lanes {other} (use scalar or 8)"),
+        }
+    }
+}
+
+/// The quantized counter array (the `[l][col][class]` layout of the
+/// f32 planes, one integer code per counter).
+#[derive(Clone, Debug)]
+pub enum QuantCodes {
+    /// 8-bit codes.
+    U8(Vec<u8>),
+    /// 16-bit codes.
+    U16(Vec<u16>),
+}
+
+impl QuantCodes {
+    /// Number of counters.
+    pub fn len(&self) -> usize {
+        match self {
+            QuantCodes::U8(v) => v.len(),
+            QuantCodes::U16(v) => v.len(),
+        }
+    }
+
+    /// True when the plane holds no counters.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The code width of this array.
+    pub fn bits(&self) -> QuantBits {
+        match self {
+            QuantCodes::U8(_) => QuantBits::U8,
+            QuantCodes::U16(_) => QuantBits::U16,
+        }
+    }
+
+    /// Copy out the sub-range `[lo, hi)` (shard carving).
+    pub(crate) fn slice_range(&self, lo: usize, hi: usize) -> QuantCodes {
+        match self {
+            QuantCodes::U8(v) => QuantCodes::U8(v[lo..hi].to_vec()),
+            QuantCodes::U16(v) => QuantCodes::U16(v[lo..hi].to_vec()),
+        }
+    }
+}
+
+/// One quantized code, dequantizable to the f32 it encodes (before the
+/// affine map).
+pub(crate) trait QCode: Copy {
+    fn dq(self) -> f32;
+}
+
+impl QCode for u8 {
+    #[inline(always)]
+    fn dq(self) -> f32 {
+        self as f32 // CAST: u8 ∈ [0, 255] — every value exact in f32
+    }
+}
+
+impl QCode for u16 {
+    #[inline(always)]
+    fn dq(self) -> f32 {
+        self as f32 // CAST: u16 ∈ [0, 65535] < 2^24 — exact in f32
+    }
+}
+
+/// The lane-explicit dequantizing accumulate: `acc[i] += codes[i] *
+/// scale + offset` over one `(l, col)` span.  Scalar and Lanes8 apply
+/// the same element-wise expression in the same order, so the two
+/// variants are bitwise-identical.
+#[inline]
+fn add_span<T: QCode>(
+    src: &[T],
+    scale: f32,
+    offset: f32,
+    lanes: GatherLanes,
+    acc: &mut [f32],
+) {
+    debug_assert_eq!(src.len(), acc.len());
+    match lanes {
+        GatherLanes::Scalar => {
+            for (a, &q) in acc.iter_mut().zip(src) {
+                *a += q.dq() * scale + offset;
+            }
+        }
+        GatherLanes::Lanes8 => {
+            let mut ai = acc.chunks_exact_mut(LANES);
+            let mut qi = src.chunks_exact(LANES);
+            for (av, qv) in (&mut ai).zip(&mut qi) {
+                for j in 0..LANES {
+                    av[j] += qv[j].dq() * scale + offset;
+                }
+            }
+            for (a, &q) in
+                ai.into_remainder().iter_mut().zip(qi.remainder())
+            {
+                *a += q.dq() * scale + offset;
+            }
+        }
+    }
+}
+
+/// Dequantize-accumulate `len` codes starting at `base` into `acc`
+/// (shared with the quantized shard gather in [`crate::shard`]).
+#[inline]
+pub(crate) fn dequant_add_span(
+    codes: &QuantCodes,
+    base: usize,
+    len: usize,
+    scale: f32,
+    offset: f32,
+    lanes: GatherLanes,
+    acc: &mut [f32],
+) {
+    match codes {
+        QuantCodes::U8(v) => {
+            add_span(&v[base..base + len], scale, offset, lanes, acc)
+        }
+        QuantCodes::U16(v) => {
+            add_span(&v[base..base + len], scale, offset, lanes, acc)
+        }
+    }
+}
+
+/// Per-repetition affine quantization of a `[l][col][class]` f32 array:
+/// row l's `stride` counters map through `code = round((v - lo) /
+/// scale)` with `lo`/`scale` chosen from that row's exact min/max.
+/// Returns the codes, per-row scale/offset tables, and the **measured**
+/// worst reconstruction error `max |code * scale + lo - v|`.
+fn quantize_rows(
+    counters: &[f32],
+    rows: usize,
+    stride: usize,
+    bits: QuantBits,
+) -> (QuantCodes, Vec<f32>, Vec<f32>, f32) {
+    debug_assert_eq!(counters.len(), rows * stride);
+    let levels = bits.levels();
+    let mut scale = Vec::with_capacity(rows);
+    let mut offset = Vec::with_capacity(rows);
+    let mut max_err = 0.0f32;
+    // The per-row quantizer, generic over the emit step so the u8/u16
+    // loops share the exact arithmetic.
+    let mut quantize_all = |push: &mut dyn FnMut(f32)| {
+        for row in counters.chunks_exact(stride) {
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            for &v in row {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            // scale = 0 marks a constant row: every code is 0 and the
+            // dequantized value is exactly `offset` (zero error).
+            let sc = if hi > lo { (hi - lo) / levels } else { 0.0 };
+            let inv = if sc > 0.0 { 1.0 / sc } else { 0.0 };
+            scale.push(sc);
+            offset.push(lo);
+            for &v in row {
+                let mut q = ((v - lo) * inv).round();
+                if q < 0.0 {
+                    q = 0.0;
+                } else if q > levels {
+                    q = levels;
+                }
+                max_err = max_err.max((q * sc + lo - v).abs());
+                push(q);
+            }
+        }
+    };
+    let codes = match bits {
+        QuantBits::U8 => {
+            let mut out: Vec<u8> = Vec::with_capacity(counters.len());
+            // CAST: q clamped to [0, 255] above.
+            quantize_all(&mut |q| out.push(q as u8));
+            QuantCodes::U8(out)
+        }
+        QuantBits::U16 => {
+            let mut out: Vec<u16> = Vec::with_capacity(counters.len());
+            // CAST: q clamped to [0, 65535] above.
+            quantize_all(&mut |q| out.push(q as u16));
+            QuantCodes::U16(out)
+        }
+    };
+    (codes, scale, offset, max_err)
+}
+
+/// Reusable scratch for the quantized batch kernel (same shape as
+/// [`super::FusedScratch`]).
+#[derive(Default)]
+pub struct QuantScratch {
+    proj_row: Vec<f32>,
+    proj_t: Vec<f32>,
+    acc_b: Vec<f32>,
+    codes_b: Vec<i32>,
+    cols_b: Vec<u32>,
+    class_acc: Vec<f32>,
+    gm_all: Vec<f32>,
+    gm_c: Vec<f32>,
+    out: Vec<f32>,
+}
+
+/// A quantized counter plane: the full sketch geometry (projection +
+/// hash family + aggregation config) plus u8/u16 codes and per-row
+/// dequantization tables.  Built from a [`RaceSketch`] (single-output)
+/// or [`FusedMultiSketch`] (class-interleaved); read-only — live
+/// updates require the f32 plane.
+#[derive(Clone, Debug)]
+pub struct QuantSketch {
+    codes: QuantCodes,
+    /// Per-repetition dequantization scale (len `rows`).
+    scale: Vec<f32>,
+    /// Per-repetition dequantization offset (len `rows`).
+    offset: Vec<f32>,
+    pub n_classes: usize,
+    /// True when built from a fused multiclass plane (RSQM); false for
+    /// the single-output RSQK shape.
+    pub multiclass: bool,
+    pub rows: usize,
+    pub cols: usize,
+    pub k_per_row: u32,
+    pub groups: usize,
+    pub use_mom: bool,
+    pub debias: bool,
+    pub alpha_sums: Vec<f32>,
+    a: Vec<f32>,
+    pub d: usize,
+    pub p: usize,
+    lsh: Arc<SparseL2Lsh>,
+    pub lsh_seed: u64,
+    pub width: f32,
+    /// Measured worst per-counter reconstruction error (the tolerance
+    /// contract's input; see the module docs).
+    pub max_counter_err: f32,
+    /// Gather inner-loop variant (bitwise-identical across variants).
+    pub lanes: GatherLanes,
+}
+
+impl QuantSketch {
+    /// Quantize a built single-output [`RaceSketch`].
+    pub fn from_race(
+        sk: &RaceSketch,
+        bits: QuantBits,
+        lanes: GatherLanes,
+    ) -> QuantSketch {
+        let (codes, scale, offset, max_err) =
+            quantize_rows(sk.counters(), sk.rows, sk.cols, bits);
+        QuantSketch {
+            codes,
+            scale,
+            offset,
+            n_classes: 1,
+            multiclass: false,
+            rows: sk.rows,
+            cols: sk.cols,
+            k_per_row: sk.k_per_row,
+            groups: sk.groups,
+            use_mom: sk.use_mom,
+            debias: sk.debias,
+            alpha_sums: vec![sk.alpha_sum],
+            a: sk.projection().to_vec(),
+            d: sk.d,
+            p: sk.p,
+            lsh: sk.lsh().clone(),
+            lsh_seed: sk.lsh_seed,
+            width: sk.width,
+            max_counter_err: max_err,
+            lanes,
+        }
+    }
+
+    /// Quantize a built class-interleaved [`FusedMultiSketch`].
+    pub fn from_fused(
+        fs: &FusedMultiSketch,
+        bits: QuantBits,
+        lanes: GatherLanes,
+    ) -> QuantSketch {
+        let (codes, scale, offset, max_err) = quantize_rows(
+            fs.counters(),
+            fs.rows,
+            fs.cols * fs.n_classes,
+            bits,
+        );
+        QuantSketch {
+            codes,
+            scale,
+            offset,
+            n_classes: fs.n_classes,
+            multiclass: true,
+            rows: fs.rows,
+            cols: fs.cols,
+            k_per_row: fs.k_per_row,
+            groups: fs.groups,
+            use_mom: fs.use_mom,
+            debias: fs.debias,
+            alpha_sums: fs.alpha_sums.clone(),
+            a: fs.projection().to_vec(),
+            d: fs.d,
+            p: fs.p,
+            lsh: fs.lsh().clone(),
+            lsh_seed: fs.lsh_seed,
+            width: fs.width,
+            max_counter_err: max_err,
+            lanes,
+        }
+    }
+
+    /// The code width.
+    pub fn bits(&self) -> QuantBits {
+        self.codes.bits()
+    }
+
+    /// The quantized counter array.
+    pub fn codes(&self) -> &QuantCodes {
+        &self.codes
+    }
+
+    /// Per-repetition dequantization scale table.
+    pub fn scale(&self) -> &[f32] {
+        &self.scale
+    }
+
+    /// Per-repetition dequantization offset table.
+    pub fn offset(&self) -> &[f32] {
+        &self.offset
+    }
+
+    /// The projection matrix A (row-major `(d, p)`).
+    pub fn projection(&self) -> &[f32] {
+        &self.a
+    }
+
+    /// The shared hash family (crate-internal: `shard` slices it).
+    pub(crate) fn lsh(&self) -> &Arc<SparseL2Lsh> {
+        &self.lsh
+    }
+
+    /// Counter bytes one query's gather moves: `rows` spans of
+    /// `n_classes` codes each (the bytes/query bench axis; the per-row
+    /// scale/offset tables are 8 bytes/row of metadata that stay
+    /// cache-resident across a batch and are reported separately).
+    pub fn counter_bytes_per_query(&self) -> usize {
+        self.rows * self.n_classes * self.bits().bytes_per_code()
+    }
+
+    /// Declared upper bound on `|quant score - f32 score|` for any
+    /// query — the tolerance contract (see module docs): the measured
+    /// per-counter error, amplified by the debias map, with 1.5× /
+    /// +1e-3 slack for f32 summation-order noise.
+    pub fn score_tolerance(&self) -> f32 {
+        let amp = if self.debias {
+            // CAST: cols ≤ 2^26 by check_hash_config — same conversion
+            // the f32 estimate path performs.
+            let r = self.cols as f32;
+            1.0 / (1.0 - 1.0 / r)
+        } else {
+            1.0
+        };
+        self.max_counter_err * amp * 1.5 + 1e-3
+    }
+
+    fn ensure_gather_scratch(&self, s: &mut QuantScratch) {
+        s.class_acc.resize(self.n_classes, 0.0);
+        s.gm_all.resize(self.groups * self.n_classes, 0.0);
+        s.gm_c.resize(self.groups, 0.0);
+    }
+
+    fn ensure_batch_scratch(&self, s: &mut QuantScratch, batch: usize) {
+        // CAST: k_per_row is u32 -> usize widens.
+        let n_hashes = self.rows * self.k_per_row as usize;
+        s.proj_row.resize(self.p, 0.0);
+        s.proj_t.resize(self.p * batch, 0.0);
+        s.acc_b.resize(n_hashes * batch, 0.0);
+        s.codes_b.resize(n_hashes * batch, 0);
+        s.cols_b.resize(self.rows * batch, 0);
+        s.out.resize(batch * self.n_classes, 0.0);
+        self.ensure_gather_scratch(s);
+    }
+
+    /// Stage 4: one class-innermost gather fills all C estimates for
+    /// one query, dequantizing lazily per `(l, col)` span.  Mirrors
+    /// `FusedMultiSketch::estimate_all_classes_on` op-for-op with the
+    /// f32 counter read replaced by `code * scale[l] + offset[l]`.
+    fn estimate_all_classes_q(
+        &self,
+        cols_t: &[u32],
+        stride: usize,
+        off: usize,
+        class_acc: &mut [f32],
+        gm_all: &mut [f32],
+        gm_c: &mut [f32],
+        out: &mut [f32],
+    ) {
+        let c_n = self.n_classes;
+        let g = self.groups;
+        if self.use_mom && self.rows >= g {
+            let m = self.rows / g;
+            for gi in 0..g {
+                let start = gi * m;
+                let end = if gi + 1 == g { self.rows } else { start + m };
+                class_acc.fill(0.0);
+                for l in start..end {
+                    // CAST: col < cols, u32 -> usize widens.
+                    let col = cols_t[l * stride + off] as usize;
+                    let base = (l * self.cols + col) * c_n;
+                    dequant_add_span(
+                        &self.codes,
+                        base,
+                        c_n,
+                        self.scale[l],
+                        self.offset[l],
+                        self.lanes,
+                        class_acc,
+                    );
+                }
+                // CAST: group size ≤ rows ≤ 2^26 — same divisor
+                // conversion as the f32 gather.
+                let div = (end - start) as f32;
+                let dst = &mut gm_all[gi * c_n..(gi + 1) * c_n];
+                for (slot, &a) in dst.iter_mut().zip(class_acc.iter()) {
+                    *slot = a / div;
+                }
+            }
+            for (ci, o) in out.iter_mut().enumerate() {
+                for (gi, slot) in gm_c.iter_mut().enumerate() {
+                    *slot = gm_all[gi * c_n + ci];
+                }
+                *o = super::median_in_place(gm_c);
+            }
+        } else {
+            // Plain mean (also the rows < groups MoM fallback).
+            class_acc.fill(0.0);
+            for l in 0..self.rows {
+                // CAST: col < cols, u32 -> usize widens.
+                let col = cols_t[l * stride + off] as usize;
+                let base = (l * self.cols + col) * c_n;
+                dequant_add_span(
+                    &self.codes,
+                    base,
+                    c_n,
+                    self.scale[l],
+                    self.offset[l],
+                    self.lanes,
+                    class_acc,
+                );
+            }
+            for (o, &a) in out.iter_mut().zip(class_acc.iter()) {
+                // CAST: rows ≤ 2^26 — same divisor conversion as the
+                // f32 gather.
+                *o = a / self.rows as f32;
+            }
+        }
+        if self.debias {
+            // CAST: cols ≤ 2^26 — same conversion as the f32 path.
+            let r = self.cols as f32;
+            for (o, &asum) in out.iter_mut().zip(self.alpha_sums.iter()) {
+                *o = (*o - asum / r) / (1.0 - 1.0 / r);
+            }
+        }
+    }
+
+    /// Batch-major per-class scores: `queries` is `(B, d)` row-major,
+    /// the returned slice `(B, n_classes)` row-major.  Identical
+    /// pipeline to `FusedMultiSketch::scores_batch_on` — the hash pass
+    /// is bit-for-bit the f32 one; only the gather dequantizes.
+    pub fn scores_batch_with<'s>(
+        &self,
+        queries: &[f32],
+        s: &'s mut QuantScratch,
+    ) -> &'s [f32] {
+        assert_eq!(
+            queries.len() % self.d,
+            0,
+            "query buffer length {} is not a multiple of d = {}",
+            queries.len(),
+            self.d
+        );
+        let batch = queries.len() / self.d;
+        self.ensure_batch_scratch(s, batch);
+        if batch == 0 {
+            return &s.out;
+        }
+        super::batch::project_batch_t(
+            &self.a,
+            self.d,
+            self.p,
+            queries,
+            batch,
+            &mut s.proj_row,
+            &mut s.proj_t,
+        );
+        self.lsh.hash_batch_into_acc(
+            &s.proj_t,
+            batch,
+            &mut s.acc_b,
+            &mut s.codes_b,
+        );
+        // CAST: k_per_row u32 -> usize widens; cols ≤ 2^26 fits u32
+        // (serde validated) — same rehash call as the f32 lanes.
+        let (k, cols_u) = (self.k_per_row as usize, self.cols as u32);
+        concat::rehash_all_batch(&s.codes_b, k, cols_u, batch,
+                                 &mut s.cols_b);
+        let c_n = self.n_classes;
+        for bq in 0..batch {
+            // Split the scratch so the gather borrows stay disjoint.
+            let (cols_b, class_acc, gm_all, gm_c, out) = (
+                &s.cols_b,
+                &mut s.class_acc,
+                &mut s.gm_all,
+                &mut s.gm_c,
+                &mut s.out[bq * c_n..(bq + 1) * c_n],
+            );
+            self.estimate_all_classes_q(
+                cols_b, batch, bq, class_acc, gm_all, gm_c, out,
+            );
+        }
+        &s.out
+    }
+
+    /// Batched argmax prediction (same tie-breaking as the f32 lanes —
+    /// the shared [`super::argmax`]).
+    pub fn predict_batch_with(
+        &self,
+        queries: &[f32],
+        s: &mut QuantScratch,
+        out: &mut Vec<usize>,
+    ) {
+        let n_classes = self.n_classes;
+        let scores = self.scores_batch_with(queries, s);
+        out.clear();
+        for row in scores.chunks_exact(n_classes) {
+            out.push(super::argmax(row));
+        }
+    }
+
+    /// Scalar per-class scores (B=1 convenience over the batch path —
+    /// the batch kernel with B=1 IS the scalar path for this plane).
+    pub fn scores_with(
+        &self,
+        q: &[f32],
+        s: &mut QuantScratch,
+        out: &mut Vec<f32>,
+    ) {
+        let n = self.n_classes;
+        self.scores_batch_with(q, s);
+        out.clear();
+        out.extend_from_slice(&s.out[..n]);
+    }
+
+    // ---- serde --------------------------------------------------------
+
+    /// Serialize (RSQK for single-output planes, RSQM for multiclass).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.serialized_size());
+        out.extend_from_slice(if self.multiclass {
+            b"RSQM"
+        } else {
+            b"RSQK"
+        });
+        out.extend_from_slice(&1u32.to_le_bytes());
+        for v in [
+            wire_u32(self.n_classes, "n_classes"),
+            wire_u32(self.rows, "rows"),
+            wire_u32(self.cols, "cols"),
+            self.k_per_row,
+            wire_u32(self.groups, "groups"),
+        ] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.push(u8::from(self.use_mom));
+        out.push(u8::from(self.debias));
+        out.push(self.bits().tag());
+        out.push(self.lanes.tag());
+        out.extend_from_slice(&wire_u32(self.d, "d").to_le_bytes());
+        out.extend_from_slice(&wire_u32(self.p, "p").to_le_bytes());
+        out.extend_from_slice(&self.width.to_le_bytes());
+        out.extend_from_slice(&self.lsh_seed.to_le_bytes());
+        out.extend_from_slice(&self.max_counter_err.to_le_bytes());
+        for v in self
+            .alpha_sums
+            .iter()
+            .chain(self.a.iter())
+            .chain(self.scale.iter())
+            .chain(self.offset.iter())
+        {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        match &self.codes {
+            QuantCodes::U8(v) => out.extend_from_slice(v),
+            QuantCodes::U16(v) => {
+                for c in v {
+                    out.extend_from_slice(&c.to_le_bytes());
+                }
+            }
+        }
+        out
+    }
+
+    /// Serialized size: 56-byte header + f32 tables + codes.
+    pub fn serialized_size(&self) -> usize {
+        56 + 4 * (self.n_classes + self.d * self.p + 2 * self.rows)
+            + self.codes.len() * self.bits().bytes_per_code()
+    }
+
+    /// Load from bytes, validating every header field — a corrupt
+    /// scale/offset table (non-finite or negative scale) is rejected
+    /// here, never discovered at query time.
+    pub fn from_bytes(buf: &[u8]) -> Result<QuantSketch> {
+        if buf.len() < 8 {
+            bail!("not an RSQK/RSQM file");
+        }
+        let multiclass = match &buf[..4] {
+            b"RSQK" => false,
+            b"RSQM" => true,
+            _ => bail!("not an RSQK/RSQM file"),
+        };
+        let mut c = Cur { b: buf, i: 4 };
+        let version = c.u32()?;
+        if version != 1 {
+            bail!("unsupported RSQ version {version}");
+        }
+        // CAST: u32 -> usize widens (the next five too).
+        let n_classes = c.u32()? as usize;
+        let rows = c.u32()? as usize; // CAST: u32 -> usize widens
+        let cols = c.u32()? as usize; // CAST: u32 -> usize widens
+        let k_per_row = c.u32()?;
+        let groups = c.u32()? as usize; // CAST: u32 -> usize widens
+        let flags = c.take(4)?;
+        let use_mom = flags[0] != 0;
+        let debias = flags[1] != 0;
+        let bits = match flags[2] {
+            8 => QuantBits::U8,
+            16 => QuantBits::U16,
+            t => bail!("RSQ header has unsupported bit width {t}"),
+        };
+        let lanes = match flags[3] {
+            0 => GatherLanes::Scalar,
+            1 => GatherLanes::Lanes8,
+            t => bail!("RSQ header has unknown lane tag {t}"),
+        };
+        let d = c.u32()? as usize; // CAST: u32 -> usize widens
+        let p = c.u32()? as usize; // CAST: u32 -> usize widens
+        let width = c.f32()?;
+        let lsh_seed = c.u64()?;
+        let max_counter_err = c.f32()?;
+        if n_classes == 0 || rows == 0 || cols == 0 || groups == 0
+            || k_per_row == 0
+        {
+            bail!("RSQ header has a zero-sized field");
+        }
+        if !multiclass && n_classes != 1 {
+            bail!("RSQK header claims {n_classes} classes (want 1)");
+        }
+        if !width.is_finite() || width <= 0.0 {
+            bail!("RSQ header has non-positive width {width}");
+        }
+        if !max_counter_err.is_finite() || max_counter_err < 0.0 {
+            bail!(
+                "RSQ header has corrupt max_counter_err {max_counter_err}"
+            );
+        }
+        check_hash_config(rows, k_per_row, d, p)?;
+        let i = c.i;
+        // u128 so crafted huge header fields cannot wrap the size check.
+        let f32s = n_classes as u128 // CAST: usize -> u128 widens
+            + d as u128 * p as u128 // CAST: see above
+            + 2 * rows as u128; // CAST: see above
+        let need = 4u128 * f32s
+            + rows as u128 // CAST: see above
+                * cols as u128 // CAST: see above
+                * n_classes as u128 // CAST: see above
+                * bits.bytes_per_code() as u128; // CAST: see above
+        if (buf.len() - i) as u128 != need { // CAST: see above
+            bail!(
+                "RSQ size mismatch: have {}, want {}",
+                buf.len() - i,
+                need
+            );
+        }
+        let f32_bytes = 4 * (n_classes + d * p + 2 * rows);
+        let mut floats = buf[i..i + f32_bytes]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()));
+        let alpha_sums: Vec<f32> =
+            floats.by_ref().take(n_classes).collect();
+        let a: Vec<f32> = floats.by_ref().take(d * p).collect();
+        let scale: Vec<f32> = floats.by_ref().take(rows).collect();
+        let offset: Vec<f32> = floats.collect();
+        for (l, &sc) in scale.iter().enumerate() {
+            if !sc.is_finite() || sc < 0.0 {
+                bail!("RSQ scale table corrupt at row {l}: {sc}");
+            }
+        }
+        for (l, &of) in offset.iter().enumerate() {
+            if !of.is_finite() {
+                bail!("RSQ offset table corrupt at row {l}: {of}");
+            }
+        }
+        let code_bytes = &buf[i + f32_bytes..];
+        let codes = match bits {
+            QuantBits::U8 => QuantCodes::U8(code_bytes.to_vec()),
+            QuantBits::U16 => QuantCodes::U16(
+                code_bytes
+                    .chunks_exact(2)
+                    .map(|c| u16::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            ),
+        };
+        let lsh = Arc::new(SparseL2Lsh::generate(
+            lsh_seed,
+            p,
+            // CAST: rows * k_per_row ≤ 2^26 by check_hash_config.
+            rows * k_per_row as usize,
+            width,
+        ));
+        Ok(QuantSketch {
+            codes,
+            scale,
+            offset,
+            n_classes,
+            multiclass,
+            rows,
+            cols,
+            k_per_row,
+            groups,
+            use_mom,
+            debias,
+            alpha_sums,
+            a,
+            d,
+            p,
+            lsh,
+            lsh_seed,
+            width,
+            max_counter_err,
+            lanes,
+        })
+    }
+
+    /// Persist to `path`.
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_bytes())
+            .with_context(|| format!("write {:?}", path.as_ref()))
+    }
+
+    /// Load from `path` (sniffs RSQK vs RSQM by magic).
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<QuantSketch> {
+        let mut buf = Vec::new();
+        std::fs::File::open(path.as_ref())
+            .with_context(|| format!("open {:?}", path.as_ref()))?
+            .read_to_end(&mut buf)?;
+        Self::from_bytes(&buf)
+    }
+}
+
+/// Checked usize -> u32 for header fields (mirrors the shard serde
+/// idiom; panicking here is a builder bug, not a load-path hazard).
+fn wire_u32(v: usize, what: &str) -> u32 {
+    u32::try_from(v)
+        .unwrap_or_else(|_| panic!("{what} = {v} does not fit u32"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::KernelParams;
+    use crate::sketch::{FusedScratch, SketchConfig};
+    use crate::util::rng::SplitMix64;
+
+    fn sample_race() -> RaceSketch {
+        let mut rng = SplitMix64::new(0xA11CE);
+        let kp = KernelParams {
+            d: 6,
+            p: 3,
+            m: 25,
+            a: (0..18).map(|_| rng.next_gaussian() as f32).collect(),
+            x: (0..75).map(|_| rng.next_gaussian() as f32).collect(),
+            alpha: (0..25).map(|_| rng.next_f32()).collect(),
+            width: 2.0,
+            lsh_seed: 0xFEED,
+            k_per_row: 2,
+            default_rows: 50,
+            default_cols: 16,
+        };
+        RaceSketch::build(&kp, &SketchConfig::default())
+    }
+
+    fn sample_fused(n_classes: usize) -> FusedMultiSketch {
+        let mut rng = SplitMix64::new(0xBEEF);
+        let (d, p, m) = (5usize, 3usize, 20usize);
+        let a: Vec<f32> =
+            (0..d * p).map(|_| rng.next_gaussian() as f32).collect();
+        let per_class: Vec<KernelParams> = (0..n_classes)
+            .map(|_| KernelParams {
+                d,
+                p,
+                m,
+                a: a.clone(),
+                x: (0..m * p).map(|_| rng.next_gaussian() as f32).collect(),
+                alpha: (0..m).map(|_| rng.next_f32()).collect(),
+                width: 2.0,
+                lsh_seed: 0xF00D,
+                k_per_row: 2,
+                default_rows: 40,
+                default_cols: 16,
+            })
+            .collect();
+        FusedMultiSketch::build(&per_class, &SketchConfig::default())
+            .unwrap()
+    }
+
+    #[test]
+    fn quantize_reconstruction_error_is_measured_and_bounded() {
+        let fs = sample_fused(3);
+        for bits in [QuantBits::U8, QuantBits::U16] {
+            let qs = QuantSketch::from_fused(&fs, bits,
+                                             GatherLanes::Lanes8);
+            // The measured error really bounds every counter.
+            let stride = qs.cols * qs.n_classes;
+            let mut worst = 0.0f32;
+            for (l, row) in fs.counters().chunks_exact(stride).enumerate()
+            {
+                for (j, &v) in row.iter().enumerate() {
+                    let code = match qs.codes() {
+                        QuantCodes::U8(c) => {
+                            c[l * stride + j] as f32
+                        }
+                        QuantCodes::U16(c) => {
+                            c[l * stride + j] as f32
+                        }
+                    };
+                    let dq = code * qs.scale()[l] + qs.offset()[l];
+                    worst = worst.max((dq - v).abs());
+                }
+            }
+            assert!(worst <= qs.max_counter_err,
+                    "claimed {} < actual {worst}", qs.max_counter_err);
+            // u16 quantizes strictly tighter than u8 on this data.
+            if bits == QuantBits::U16 {
+                let q8 = QuantSketch::from_fused(&fs, QuantBits::U8,
+                                                 GatherLanes::Lanes8);
+                assert!(qs.max_counter_err <= q8.max_counter_err);
+            }
+        }
+    }
+
+    #[test]
+    fn constant_rows_quantize_exactly() {
+        // scale = 0 rows round-trip with zero error.
+        let (codes, scale, offset, err) =
+            quantize_rows(&[3.5f32; 12], 3, 4, QuantBits::U8);
+        assert_eq!(err, 0.0);
+        assert_eq!(scale, vec![0.0; 3]);
+        assert_eq!(offset, vec![3.5; 3]);
+        match codes {
+            QuantCodes::U8(v) => assert_eq!(v, vec![0u8; 12]),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn scalar_and_lanes8_gathers_are_bitwise_identical() {
+        let fs = sample_fused(5);
+        let mut rng = SplitMix64::new(7);
+        for bits in [QuantBits::U8, QuantBits::U16] {
+            let q_s =
+                QuantSketch::from_fused(&fs, bits, GatherLanes::Scalar);
+            let q_l =
+                QuantSketch::from_fused(&fs, bits, GatherLanes::Lanes8);
+            for b in [1usize, 3, 17] {
+                let q: Vec<f32> = (0..b * fs.d)
+                    .map(|_| rng.next_gaussian() as f32)
+                    .collect();
+                let mut s1 = QuantScratch::default();
+                let mut s2 = QuantScratch::default();
+                let a = q_s.scores_batch_with(&q, &mut s1).to_vec();
+                let b2 = q_l.scores_batch_with(&q, &mut s2);
+                for (x, y) in a.iter().zip(b2) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quant_scores_track_f32_within_declared_tolerance() {
+        let fs = sample_fused(4);
+        let mut rng = SplitMix64::new(9);
+        let q: Vec<f32> = (0..32 * fs.d)
+            .map(|_| rng.next_gaussian() as f32)
+            .collect();
+        let mut fscr = FusedScratch::default();
+        let want = fs.scores_batch_with(&q, &mut fscr).to_vec();
+        for bits in [QuantBits::U8, QuantBits::U16] {
+            let qs =
+                QuantSketch::from_fused(&fs, bits, GatherLanes::Lanes8);
+            let tol = qs.score_tolerance();
+            let mut s = QuantScratch::default();
+            let got = qs.scores_batch_with(&q, &mut s);
+            for (i, (w, g)) in want.iter().zip(got).enumerate() {
+                assert!(
+                    (w - g).abs() <= tol,
+                    "slot {i}: |{w} - {g}| > tol {tol} ({bits:?})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_output_quant_tracks_race_sketch() {
+        let sk = sample_race();
+        let qs = QuantSketch::from_race(&sk, QuantBits::U8,
+                                        GatherLanes::Lanes8);
+        assert!(!qs.multiclass);
+        assert_eq!(qs.n_classes, 1);
+        let tol = qs.score_tolerance();
+        let mut rng = SplitMix64::new(4);
+        let mut s = QuantScratch::default();
+        let mut qsc = crate::sketch::QueryScratch::default();
+        for _ in 0..20 {
+            let q: Vec<f32> =
+                (0..sk.d).map(|_| rng.next_gaussian() as f32).collect();
+            let want = sk.query_with(&q, &mut qsc);
+            let got = qs.scores_batch_with(&q, &mut s)[0];
+            assert!((want - got).abs() <= tol,
+                    "|{want} - {got}| > {tol}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_reproduces_codes_and_tables_bitwise() {
+        for (fs, bits) in [
+            (sample_fused(3), QuantBits::U8),
+            (sample_fused(3), QuantBits::U16),
+        ] {
+            let qs =
+                QuantSketch::from_fused(&fs, bits, GatherLanes::Lanes8);
+            let bytes = qs.to_bytes();
+            assert_eq!(bytes.len(), qs.serialized_size());
+            let qs2 = QuantSketch::from_bytes(&bytes).unwrap();
+            match (qs.codes(), qs2.codes()) {
+                (QuantCodes::U8(a), QuantCodes::U8(b)) => {
+                    assert_eq!(a, b)
+                }
+                (QuantCodes::U16(a), QuantCodes::U16(b)) => {
+                    assert_eq!(a, b)
+                }
+                _ => panic!("bit width changed across roundtrip"),
+            }
+            for (a, b) in qs.scale().iter().zip(qs2.scale()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            for (a, b) in qs.offset().iter().zip(qs2.offset()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            assert_eq!(qs.max_counter_err.to_bits(),
+                       qs2.max_counter_err.to_bits());
+            assert_eq!(qs.lanes, qs2.lanes);
+            // And the loaded plane scores bitwise like the original.
+            let mut rng = SplitMix64::new(3);
+            let q: Vec<f32> = (0..4 * fs.d)
+                .map(|_| rng.next_gaussian() as f32)
+                .collect();
+            let mut s1 = QuantScratch::default();
+            let mut s2 = QuantScratch::default();
+            let a = qs.scores_batch_with(&q, &mut s1).to_vec();
+            let b = qs2.scores_batch_with(&q, &mut s2);
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn single_output_roundtrips_as_rsqk() {
+        let sk = sample_race();
+        let qs = QuantSketch::from_race(&sk, QuantBits::U16,
+                                        GatherLanes::Scalar);
+        let bytes = qs.to_bytes();
+        assert_eq!(&bytes[..4], b"RSQK");
+        let qs2 = QuantSketch::from_bytes(&bytes).unwrap();
+        assert!(!qs2.multiclass);
+        assert_eq!(qs2.lanes, GatherLanes::Scalar);
+    }
+
+    #[test]
+    fn loader_rejects_corrupt_headers_and_tables() {
+        let fs = sample_fused(2);
+        let qs =
+            QuantSketch::from_fused(&fs, QuantBits::U8,
+                                    GatherLanes::Lanes8);
+        let good = qs.to_bytes();
+        // Wrong magic.
+        let mut b = good.clone();
+        b[0] = b'Z';
+        assert!(QuantSketch::from_bytes(&b).is_err());
+        // Truncation.
+        let mut b = good.clone();
+        b.truncate(b.len() - 3);
+        assert!(QuantSketch::from_bytes(&b).is_err());
+        // Zero-sized field (groups at byte 24).
+        let mut b = good.clone();
+        b[24..28].copy_from_slice(&0u32.to_le_bytes());
+        assert!(QuantSketch::from_bytes(&b).is_err());
+        // Bad bit-width tag (flags byte 2 of 4 at offset 28).
+        let mut b = good.clone();
+        b[30] = 12;
+        assert!(QuantSketch::from_bytes(&b).is_err());
+        // Bad lane tag.
+        let mut b = good.clone();
+        b[31] = 9;
+        assert!(QuantSketch::from_bytes(&b).is_err());
+        // Absurd hash count (k_per_row at byte 20).
+        let mut b = good.clone();
+        b[20..24].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(QuantSketch::from_bytes(&b).is_err());
+        // Corrupt max_counter_err (NaN at byte 52).
+        let mut b = good.clone();
+        b[52..56].copy_from_slice(&f32::NAN.to_le_bytes());
+        assert!(QuantSketch::from_bytes(&b).is_err());
+        // Corrupt scale table: NaN scale[0] at
+        // 56 + 4*(C + d*p) bytes in.
+        let scale_at = 56 + 4 * (qs.n_classes + qs.d * qs.p);
+        let mut b = good.clone();
+        b[scale_at..scale_at + 4]
+            .copy_from_slice(&f32::NAN.to_le_bytes());
+        assert!(QuantSketch::from_bytes(&b).is_err());
+        // Negative scale is rejected too.
+        let mut b = good.clone();
+        b[scale_at..scale_at + 4]
+            .copy_from_slice(&(-1.0f32).to_le_bytes());
+        assert!(QuantSketch::from_bytes(&b).is_err());
+        // Corrupt offset table (first offset, rows f32s later).
+        let off_at = scale_at + 4 * qs.rows;
+        let mut b = good.clone();
+        b[off_at..off_at + 4]
+            .copy_from_slice(&f32::INFINITY.to_le_bytes());
+        assert!(QuantSketch::from_bytes(&b).is_err());
+        // RSQK refuses a multi-class payload claim: flip magic to RSQK
+        // on a 2-class file.
+        let mut b = good.clone();
+        b[3] = b'K';
+        assert!(QuantSketch::from_bytes(&b).is_err());
+        // The pristine bytes still load.
+        assert!(QuantSketch::from_bytes(&good).is_ok());
+    }
+
+    #[test]
+    fn bytes_per_query_axis() {
+        let fs = sample_fused(10);
+        let q8 = QuantSketch::from_fused(&fs, QuantBits::U8,
+                                         GatherLanes::Lanes8);
+        let q16 = QuantSketch::from_fused(&fs, QuantBits::U16,
+                                          GatherLanes::Lanes8);
+        let f32_bytes = fs.rows * fs.n_classes * 4;
+        assert_eq!(q8.counter_bytes_per_query() * 4, f32_bytes);
+        assert_eq!(q16.counter_bytes_per_query() * 2, f32_bytes);
+    }
+
+    #[test]
+    fn empty_batch_returns_empty() {
+        let fs = sample_fused(2);
+        let qs = QuantSketch::from_fused(&fs, QuantBits::U8,
+                                         GatherLanes::Lanes8);
+        let mut s = QuantScratch::default();
+        assert!(qs.scores_batch_with(&[], &mut s).is_empty());
+    }
+}

@@ -1,0 +1,511 @@
+//! Quantized counter planes: the tolerance contract, end to end.
+//!
+//! The quantized lanes are the repo's first deliberately-inexact
+//! serving tier, so these tests pin down BOTH sides of that line:
+//!
+//! * **Accuracy-delta suites** — u8 and u16 planes track their f32
+//!   source within the measured `score_tolerance()` bound, for the
+//!   single-output (`rs`-shaped) and multiclass (`mc`-shaped) planes,
+//!   through the local shard split, and (Linux) across the remote
+//!   shard wire, at B ∈ {1, ragged}.
+//! * **Exactness INSIDE the quantized tier** — Scalar and Lanes8
+//!   gathers are bitwise identical, batch size never changes a result
+//!   bitwise, and the sharded quantized plane equals the unsharded
+//!   one bitwise.  Only the f32→code rounding is approximate; every
+//!   path that serves the codes is exact.
+//! * **Serde** — RSQK/RSQM files round-trip bitwise; corrupt headers
+//!   and scale/offset tables are rejected at load time, never
+//!   discovered at query time.
+
+use repsketch::kernel::KernelParams;
+use repsketch::shard::ShardedSketch;
+use repsketch::sketch::{
+    FusedMultiSketch, FusedScratch, GatherLanes, QuantBits, QuantScratch,
+    QuantSketch, QueryScratch, RaceSketch, SketchConfig,
+};
+use repsketch::util::prop::forall;
+use repsketch::util::rng::SplitMix64;
+
+fn random_race(rng: &mut SplitMix64) -> (RaceSketch, usize) {
+    let d = 1 + rng.next_range(8);
+    let p = 1 + rng.next_range(5);
+    let rows = 4 + rng.next_range(56);
+    let m = 10 + rng.next_range(14);
+    let mut rng2 = SplitMix64::new(rng.next_u64());
+    let kp = KernelParams {
+        d,
+        p,
+        m,
+        a: (0..d * p).map(|_| rng2.next_gaussian() as f32 * 0.5).collect(),
+        x: (0..m * p).map(|_| rng2.next_gaussian() as f32).collect(),
+        alpha: (0..m).map(|_| 0.5 + rng2.next_f32()).collect(),
+        width: 2.0,
+        lsh_seed: rng.next_u64(),
+        k_per_row: 1 + rng.next_range(3) as u32,
+        default_rows: rows,
+        default_cols: 16,
+    };
+    let cfg = SketchConfig {
+        rows,
+        cols: 8 + rng.next_range(3) * 7,
+        groups: 1 + rng.next_range(8),
+        use_mom: rng.next_f32() < 0.8,
+        debias: rng.next_f32() < 0.7,
+    };
+    (RaceSketch::build(&kp, &cfg), d)
+}
+
+fn random_fused(rng: &mut SplitMix64) -> (FusedMultiSketch, usize) {
+    let n_classes = 1 + rng.next_range(4);
+    let d = 1 + rng.next_range(6);
+    let p = 1 + rng.next_range(4);
+    let rows = 4 + rng.next_range(48);
+    let cols = 8 + rng.next_range(3) * 7;
+    let k = 1 + rng.next_range(3) as u32;
+    let shared_seed = rng.next_u64();
+    let mut rng2 = SplitMix64::new(rng.next_u64());
+    let a: Vec<f32> =
+        (0..d * p).map(|_| rng2.next_gaussian() as f32 * 0.5).collect();
+    let per_class: Vec<KernelParams> = (0..n_classes)
+        .map(|_| {
+            let m = 8 + rng2.next_range(10);
+            KernelParams {
+                d,
+                p,
+                m,
+                a: a.clone(),
+                x: (0..m * p).map(|_| rng2.next_gaussian() as f32).collect(),
+                alpha: (0..m).map(|_| 0.5 + rng2.next_f32()).collect(),
+                width: 2.0,
+                lsh_seed: shared_seed,
+                k_per_row: k,
+                default_rows: rows,
+                default_cols: cols,
+            }
+        })
+        .collect();
+    let cfg = SketchConfig {
+        rows,
+        cols,
+        groups: 1 + rng.next_range(8),
+        use_mom: rng.next_f32() < 0.8,
+        debias: rng.next_f32() < 0.7,
+    };
+    (FusedMultiSketch::build(&per_class, &cfg).unwrap(), d)
+}
+
+fn random_queries(rng: &mut SplitMix64, batch: usize, d: usize)
+    -> Vec<f32> {
+    (0..batch * d)
+        .map(|_| {
+            if rng.next_f32() < 0.15 {
+                0.0
+            } else {
+                rng.next_gaussian() as f32
+            }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Accuracy delta + intra-tier exactness, single-output plane
+// ---------------------------------------------------------------------------
+
+#[test]
+fn quant_race_tracks_f32_within_tolerance_all_bits_and_lanes() {
+    forall(
+        0x0A01,
+        6,
+        |rng| {
+            let (sk, d) = random_race(rng);
+            let batch = 1 + rng.next_range(11);
+            let queries = random_queries(rng, batch, d);
+            (sk, queries, batch, d)
+        },
+        |(sk, queries, batch, d)| {
+            let mut qscr = QueryScratch::default();
+            let want: Vec<f32> = (0..*batch)
+                .map(|bq| {
+                    sk.query_with(&queries[bq * d..(bq + 1) * d], &mut qscr)
+                })
+                .collect();
+            for bits in [QuantBits::U8, QuantBits::U16] {
+                let q_sc =
+                    QuantSketch::from_race(sk, bits, GatherLanes::Scalar);
+                let q_l8 =
+                    QuantSketch::from_race(sk, bits, GatherLanes::Lanes8);
+                let tol = q_sc.score_tolerance();
+                if !tol.is_finite() || tol <= 0.0 {
+                    return Err(format!("bad tolerance {tol}"));
+                }
+                let mut s = QuantScratch::default();
+                let got = q_sc.scores_batch_with(queries, &mut s).to_vec();
+                // Accuracy: every estimate within the measured gate.
+                for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                    let delta = (g - w).abs();
+                    if !(delta <= tol) {
+                        return Err(format!(
+                            "{bits:?} row {i}: |{g} - {w}| = {delta} \
+                             exceeds tolerance {tol}"
+                        ));
+                    }
+                }
+                // Lane invariance: Lanes8 == Scalar bitwise.
+                let got8 = q_l8.scores_batch_with(queries, &mut s).to_vec();
+                if got8.iter().zip(&got).any(|(a, b)| {
+                    a.to_bits() != b.to_bits()
+                }) {
+                    return Err(format!(
+                        "{bits:?}: Lanes8 diverges from Scalar bitwise"
+                    ));
+                }
+                // Batch invariance: batched == B=1 per row, bitwise.
+                for (bq, b1) in got.iter().enumerate() {
+                    let one = q_sc
+                        .scores_batch_with(
+                            &queries[bq * d..(bq + 1) * d],
+                            &mut s,
+                        )
+                        .to_vec();
+                    if one[0].to_bits() != b1.to_bits() {
+                        return Err(format!(
+                            "{bits:?} row {bq}: B=1 diverges from batch"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Accuracy delta, multiclass plane (ragged batches)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn quant_fused_tracks_f32_within_tolerance_with_ragged_batches() {
+    forall(
+        0x0A02,
+        5,
+        |rng| {
+            let (fused, d) = random_fused(rng);
+            let batch = 1 + rng.next_range(9);
+            let queries = random_queries(rng, batch, d);
+            (fused, queries, batch, d)
+        },
+        |(fused, queries, batch, d)| {
+            let c_n = fused.n_classes();
+            let mut fs = FusedScratch::default();
+            let mut row = Vec::new();
+            let mut want = Vec::with_capacity(batch * c_n);
+            for bq in 0..*batch {
+                fused.scores_with(
+                    &queries[bq * d..(bq + 1) * d],
+                    &mut fs,
+                    &mut row,
+                );
+                want.extend_from_slice(&row);
+            }
+            for bits in [QuantBits::U8, QuantBits::U16] {
+                let qs =
+                    QuantSketch::from_fused(fused, bits, GatherLanes::Lanes8);
+                let tol = qs.score_tolerance();
+                let mut s = QuantScratch::default();
+                // Full batch, then B = 1: both inside the gate.
+                for b in [*batch, 1usize] {
+                    let got = qs
+                        .scores_batch_with(&queries[..b * d], &mut s)
+                        .to_vec();
+                    if got.len() != b * c_n {
+                        return Err(format!(
+                            "{bits:?} B={b}: {} scores, want {}",
+                            got.len(),
+                            b * c_n
+                        ));
+                    }
+                    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                        let delta = (g - w).abs();
+                        if !(delta <= tol) {
+                            return Err(format!(
+                                "{bits:?} B={b} slot {i}: |{g} - {w}| = \
+                                 {delta} exceeds tolerance {tol}"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Sharded quantized plane == unsharded quantized plane, bitwise
+// ---------------------------------------------------------------------------
+
+#[test]
+fn quant_sharded_local_is_bitwise_the_unsharded_quant_plane() {
+    forall(
+        0x0A03,
+        5,
+        |rng| {
+            let (fused, d) = random_fused(rng);
+            let bits = if rng.next_f32() < 0.5 {
+                QuantBits::U8
+            } else {
+                QuantBits::U16
+            };
+            let lanes = if rng.next_f32() < 0.5 {
+                GatherLanes::Scalar
+            } else {
+                GatherLanes::Lanes8
+            };
+            let qs = QuantSketch::from_fused(&fused, bits, lanes);
+            let batch = 1 + rng.next_range(9);
+            let queries = random_queries(rng, batch, d);
+            (fused, qs, queries, d)
+        },
+        |(fused, qs, queries, d)| {
+            let mut s = QuantScratch::default();
+            let want = qs.scores_batch_with(queries, &mut s).to_vec();
+            let tol = qs.score_tolerance();
+            // Sanity: the unsharded quant plane itself is in the gate.
+            let c_n = fused.n_classes();
+            let mut fs = FusedScratch::default();
+            let mut row = Vec::new();
+            for (bq, chunk) in want.chunks_exact(c_n).enumerate() {
+                fused.scores_with(
+                    &queries[bq * d..(bq + 1) * d],
+                    &mut fs,
+                    &mut row,
+                );
+                for (c, (g, w)) in chunk.iter().zip(&row).enumerate() {
+                    let delta = (g - w).abs();
+                    if !(delta <= tol) {
+                        return Err(format!(
+                            "row {bq} class {c}: delta {delta} exceeds \
+                             {tol}"
+                        ));
+                    }
+                }
+            }
+            for &shards in &[1usize, 2, 3] {
+                let sharded = ShardedSketch::from_quant(qs, shards);
+                if !sharded.is_quantized() {
+                    return Err(format!(
+                        "shards={shards}: split lost the quant plane"
+                    ));
+                }
+                let got = sharded.scores_batch(queries);
+                if got.len() != want.len() {
+                    return Err(format!(
+                        "shards={shards}: {} scores, want {}",
+                        got.len(),
+                        want.len()
+                    ));
+                }
+                for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                    if g.to_bits() != w.to_bits() {
+                        return Err(format!(
+                            "shards={shards} slot {i}: sharded {g} vs \
+                             unsharded {w} (must be bitwise equal)"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Remote shard wire (Linux): quantized shards over TCP == local, bitwise
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+#[test]
+fn quant_remote_shards_match_local_quant_plane_bitwise() {
+    use repsketch::coordinator::{backend, Engine};
+    use repsketch::shard::remote::serve_local;
+    use std::time::Duration;
+
+    let mut rng = SplitMix64::new(0x0A04);
+    let (fused, d) = random_fused(&mut rng);
+    let qs = QuantSketch::from_fused(&fused, QuantBits::U8,
+                                     GatherLanes::Lanes8);
+    let tol = qs.score_tolerance();
+    let c_n = fused.n_classes();
+    let batch = 7usize;
+    let queries = random_queries(&mut rng, batch, d);
+    let rows: Vec<Vec<f32>> =
+        queries.chunks_exact(d).map(|r| r.to_vec()).collect();
+    let mut s = QuantScratch::default();
+    let want = qs.scores_batch_with(&queries, &mut s).to_vec();
+    let sharded = ShardedSketch::from_quant(&qs, 3);
+    let local = sharded.scores_batch(&queries);
+    assert_eq!(local.len(), want.len());
+    for (i, (l, w)) in local.iter().zip(&want).enumerate() {
+        assert_eq!(l.to_bits(), w.to_bits(), "local slot {i}");
+    }
+    let servers = serve_local(&sharded).expect("serve local shard set");
+    let mut engine = backend::RemoteShardedEngine::connect(
+        servers.addrs.clone(),
+        Duration::from_secs(10),
+    )
+    .expect("connect quantized shard set");
+    // Full batch with scores, then B = 1 on the same connections.
+    let out = engine.eval_batch_ex(&rows, true).expect("remote eval");
+    let scores = out.scores.expect("scores requested");
+    assert_eq!(scores.flat.len(), want.len());
+    for (i, (g, w)) in scores.flat.iter().zip(&want).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "remote slot {i} diverges from the local quant plane"
+        );
+    }
+    let out1 = engine.eval_batch_ex(&rows[..1], true).expect("remote B=1");
+    let s1 = out1.scores.expect("scores requested");
+    assert_eq!(s1.flat.len(), c_n);
+    for (c, g) in s1.flat.iter().enumerate() {
+        assert_eq!(g.to_bits(), want[c].to_bits(), "remote B=1 class {c}");
+    }
+    // The wire lane stays inside the accuracy gate vs the f32 source.
+    let mut fs = FusedScratch::default();
+    let mut row = Vec::new();
+    for (bq, chunk) in scores.flat.chunks_exact(c_n).enumerate() {
+        fused.scores_with(&queries[bq * d..(bq + 1) * d], &mut fs,
+                          &mut row);
+        for (c, (g, w)) in chunk.iter().zip(&row).enumerate() {
+            let delta = (g - w).abs();
+            assert!(
+                delta <= tol,
+                "remote row {bq} class {c}: delta {delta} exceeds {tol}"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Serde: file round-trip + load-time rejection
+// ---------------------------------------------------------------------------
+
+fn tmp_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir()
+        .join(format!("repsketch_quant_{}_{tag}", std::process::id()))
+}
+
+#[test]
+fn quant_files_roundtrip_bitwise_rsqk_and_rsqm() {
+    let mut rng = SplitMix64::new(0x0A05);
+    let (sk, d) = random_race(&mut rng);
+    let (fused, fd) = random_fused(&mut rng);
+    // RSQK (single-output, u16/Scalar).
+    let qk = QuantSketch::from_race(&sk, QuantBits::U16,
+                                    GatherLanes::Scalar);
+    let path = tmp_path("rt.rsqk");
+    qk.save(&path).unwrap();
+    let back = QuantSketch::load(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    assert_eq!(back.serialized_size(), qk.serialized_size());
+    assert_eq!(back.bits(), QuantBits::U16);
+    assert_eq!(back.lanes, GatherLanes::Scalar);
+    assert!(!back.multiclass);
+    assert_eq!(back.max_counter_err.to_bits(),
+               qk.max_counter_err.to_bits());
+    let queries = random_queries(&mut rng, 5, d);
+    let mut s = QuantScratch::default();
+    let a = qk.scores_batch_with(&queries, &mut s).to_vec();
+    let b = back.scores_batch_with(&queries, &mut s).to_vec();
+    assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "RSQK round-trip must reproduce scores bitwise");
+    // RSQM (multiclass, u8/Lanes8).
+    let qm = QuantSketch::from_fused(&fused, QuantBits::U8,
+                                     GatherLanes::Lanes8);
+    let path = tmp_path("rt.rsqm");
+    qm.save(&path).unwrap();
+    let back = QuantSketch::load(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    assert!(back.multiclass);
+    assert_eq!(back.n_classes, fused.n_classes());
+    let queries = random_queries(&mut rng, 4, fd);
+    let a = qm.scores_batch_with(&queries, &mut s).to_vec();
+    let b = back.scores_batch_with(&queries, &mut s).to_vec();
+    assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "RSQM round-trip must reproduce scores bitwise");
+}
+
+#[test]
+fn corrupt_quant_files_are_rejected_at_load() {
+    let mut rng = SplitMix64::new(0x0A06);
+    let (sk, _) = random_race(&mut rng);
+    let qs = QuantSketch::from_race(&sk, QuantBits::U8,
+                                    GatherLanes::Lanes8);
+    let good = qs.to_bytes();
+    // Header layout (56 bytes): magic 0..4 | ver 4..8 | C,rows,cols,k,
+    // groups 8..28 | use_mom,debias,bits,lanes 28..32 | d,p 32..40 |
+    // width 40..44 | lsh_seed 44..52 | max_counter_err 52..56, then
+    // alpha_sums[C] | A[d*p] | scale[rows] | offset[rows] | codes.
+    let scale0 = 56 + 4 * (1 + qs.d * qs.p);
+    let offset0 = scale0 + 4 * qs.rows;
+    let cases: Vec<(&str, Vec<u8>, &str)> = vec![
+        ("bad magic", {
+            let mut b = good.clone();
+            b[..4].copy_from_slice(b"NOPE");
+            b
+        }, "not an RSQK/RSQM"),
+        ("bad bits tag", {
+            let mut b = good.clone();
+            b[30] = 9;
+            b
+        }, "unsupported bit width"),
+        ("bad lane tag", {
+            let mut b = good.clone();
+            b[31] = 7;
+            b
+        }, "unknown lane tag"),
+        ("NaN max_counter_err", {
+            let mut b = good.clone();
+            b[52..56].copy_from_slice(&f32::NAN.to_le_bytes());
+            b
+        }, "corrupt max_counter_err"),
+        ("NaN scale", {
+            let mut b = good.clone();
+            b[scale0..scale0 + 4]
+                .copy_from_slice(&f32::NAN.to_le_bytes());
+            b
+        }, "scale table corrupt"),
+        ("negative scale", {
+            let mut b = good.clone();
+            b[scale0..scale0 + 4]
+                .copy_from_slice(&(-1.0f32).to_le_bytes());
+            b
+        }, "scale table corrupt"),
+        ("NaN offset", {
+            let mut b = good.clone();
+            b[offset0..offset0 + 4]
+                .copy_from_slice(&f32::NAN.to_le_bytes());
+            b
+        }, "offset table corrupt"),
+        ("truncated", good[..good.len() - 3].to_vec(), "size mismatch"),
+    ];
+    for (tag, bytes, needle) in cases {
+        let path = tmp_path(&format!("bad_{}", tag.replace(' ', "_")));
+        std::fs::write(&path, &bytes).unwrap();
+        let err = QuantSketch::load(&path)
+            .expect_err(&format!("{tag}: corrupt file must not load"));
+        std::fs::remove_file(&path).unwrap();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains(needle),
+            "{tag}: error {msg:?} should mention {needle:?}"
+        );
+    }
+    // The untouched original still loads — the patches above were the
+    // only reason those loads failed.
+    let path = tmp_path("good");
+    std::fs::write(&path, &good).unwrap();
+    QuantSketch::load(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+}
