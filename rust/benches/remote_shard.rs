@@ -1,19 +1,22 @@
 //! Remote shard plane vs the local `sh` lane, over loopback: shards
-//! ∈ {1, 2, 4} × B ∈ {1, 32, 512}.  Self-contained synthetic config
-//! (no artifacts needed); shard servers are real `ShardService`s
-//! behind real epoll reactors in this process, so the measurement
-//! includes the full wire path — JSON serialization of the projected
-//! batch, TCP, shard-side parse + kernel, means serialization, gather,
-//! merge — with only the network distance missing.
+//! ∈ {1, 2, 4} × B ∈ {1, 32, 512} × framing ∈ {json, binary}.
+//! Self-contained synthetic config (no artifacts needed); shard
+//! servers are real `ShardService`s behind real epoll reactors in
+//! this process, so the measurement includes the full wire path —
+//! serialization of the projected batch (JSON lines or length-prefixed
+//! binary frames), TCP, shard-side parse + kernel, means
+//! serialization, gather, merge — with only the network distance
+//! missing.
 //!
 //! The point of the sweep is the honest overhead number: the remote
 //! plane exists to scale CAPACITY horizontally (shard processes on
 //! other hosts), not to beat the in-process lane on one machine, and
-//! the `remote_vs_local_s{S}_b{B}` ratios document exactly what the
-//! wire costs at each shape.  A bit-identity anchor runs before any
-//! timing — if the remote lane ever diverges from the monolithic
-//! kernel, the bench fails rather than publishing numbers for a wrong
-//! result.
+//! the `s{S}_b{B}_{framing}` ratios document exactly what each wire
+//! costs at each shape.  Bit-identity anchors run before any timing —
+//! both framings against the monolithic kernel, plus a binary batch
+//! far above the old JSON line-cap ceiling — so if the remote lane
+//! ever diverges the bench fails rather than publishing numbers for a
+//! wrong result.
 //!
 //! Writes `BENCH_remote_shard.json` at the repo root.
 //!
@@ -31,9 +34,10 @@ fn main() -> anyhow::Result<()> {
 
 #[cfg(target_os = "linux")]
 mod linux {
+    use repsketch::coordinator::net::WireMode;
     use repsketch::coordinator::{backend, Engine, WorkerPool};
     use repsketch::kernel::KernelParams;
-    use repsketch::shard::remote::serve_local;
+    use repsketch::shard::remote::{serve_local, RemoteOptions};
     use repsketch::shard::ShardedSketch;
     use repsketch::sketch::{RaceSketch, SketchConfig};
     use repsketch::util::bench;
@@ -76,6 +80,20 @@ mod linux {
         )
     }
 
+    /// One single-replica group per shard, pinned to `wire`.
+    fn connect_wire(
+        addrs: &[String],
+        wire: WireMode,
+    ) -> anyhow::Result<backend::RemoteShardedEngine> {
+        backend::RemoteShardedEngine::connect_replicated(
+            addrs.iter().map(|a| vec![a.clone()]).collect(),
+            RemoteOptions {
+                wire,
+                ..RemoteOptions::with_timeout(Duration::from_secs(30))
+            },
+        )
+    }
+
     pub fn run() -> anyhow::Result<()> {
         let smoke = std::env::args().any(|a| a == "--smoke");
         let budget_ns = if smoke { 5e7 } else { 5e8 };
@@ -103,31 +121,75 @@ mod linux {
         let mut results = Vec::new();
         let mut meta: Vec<(String, Json)> = Vec::new();
 
-        // Bit-identity anchor BEFORE timing: remote == monolithic.
+        // Bit-identity anchors BEFORE timing: both framings against the
+        // monolithic kernel, plus a binary batch far above the old
+        // JSON line-cap ceiling (p × B = 16 × 4096 floats serialize to
+        // ~650 KB as a JSON line, well over the 256 KB line cap; the
+        // binary frame carries the same 256 KB of raw f32s with 60×
+        // headroom under its 64 MB cap).
+        const CEILING_B: usize = 4096;
+        let big_rows: Vec<Vec<f32>> = (0..CEILING_B)
+            .map(|_| {
+                (0..D).map(|_| rng.next_gaussian() as f32).collect()
+            })
+            .collect();
         {
             let sharded = ShardedSketch::from_race(&sketch, 4);
             let servers = serve_local(&sharded)?;
-            let mut remote = backend::RemoteShardedEngine::connect(
-                servers.addrs.clone(),
-                Duration::from_secs(30),
-            )?;
-            let got = remote.eval_batch(&rows_vec[..32])?;
-            let flat: Vec<f32> = rows_vec[..32].concat();
+            for wire in [WireMode::Binary, WireMode::Json] {
+                let mut remote = connect_wire(&servers.addrs, wire)?;
+                let got = remote.eval_batch(&rows_vec[..32])?;
+                let flat: Vec<f32> = rows_vec[..32].concat();
+                let want = sketch.query_batch(&flat);
+                for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                    anyhow::ensure!(
+                        g.to_bits() == w.to_bits(),
+                        "{wire:?} remote result diverges from \
+                         monolithic at row {i}"
+                    );
+                }
+            }
+            // Above-ceiling binary batch: bit-identical to monolithic.
+            let mut remote =
+                connect_wire(&servers.addrs, WireMode::Binary)?;
+            let got = remote.eval_batch(&big_rows)?;
+            let flat: Vec<f32> = big_rows.concat();
             let want = sketch.query_batch(&flat);
+            anyhow::ensure!(got.len() == CEILING_B);
             for (i, (g, w)) in got.iter().zip(&want).enumerate() {
                 anyhow::ensure!(
                     g.to_bits() == w.to_bits(),
-                    "remote result diverges from monolithic at row {i}"
+                    "above-ceiling binary batch diverges from \
+                     monolithic at row {i}"
                 );
             }
+            // The same batch on the JSON wire must be refused with
+            // actionable numbers (this WAS the JSON-era ceiling).
+            let mut remote =
+                connect_wire(&servers.addrs, WireMode::Json)?;
+            let err = remote
+                .eval_batch(&big_rows)
+                .expect_err("the JSON wire cannot carry B=4096 at p=16");
+            let msg = format!("{err:#}");
+            anyhow::ensure!(
+                msg.contains("shard-plane line cap"),
+                "JSON refusal must name the line cap: {msg}"
+            );
+            println!(
+                "bit-identity anchors ok (both framings, B=32; binary \
+                 B={CEILING_B} above the JSON ceiling)"
+            );
         }
 
         let shard_counts = [1usize, 2, 4];
         let batches = [1usize, 32, 512];
+        let framings: [(&str, WireMode); 2] =
+            [("json", WireMode::Json), ("binary", WireMode::Binary)];
         let mut local_qps = vec![vec![0.0f64; batches.len()];
                                  shard_counts.len()];
-        let mut remote_qps = vec![vec![0.0f64; batches.len()];
-                                  shard_counts.len()];
+        let mut remote_qps =
+            vec![vec![vec![0.0f64; batches.len()]; shard_counts.len()];
+                 framings.len()];
         for (si, &shards) in shard_counts.iter().enumerate() {
             // Local `sh` lane (persistent pool) — the reference.
             let sharded = ShardedSketch::from_race(&sketch, shards);
@@ -138,7 +200,7 @@ mod linux {
             for (bi, &b) in batches.iter().enumerate() {
                 let batch_rows = &rows_vec[..b];
                 let r = bench::run_with_budget(
-                    &format!("local  S={shards} B={b:<3}"),
+                    &format!("local       S={shards} B={b:<3}"),
                     budget_ns,
                     || {
                         std::hint::black_box(
@@ -150,48 +212,56 @@ mod linux {
                 local_qps[si][bi] = b as f64 * r.per_sec();
                 results.push(r);
             }
-            // Remote plane over loopback.
+            // Remote plane over loopback, each framing through its own
+            // connections to the SAME servers.
             let sharded = ShardedSketch::from_race(&sketch, shards);
             let servers = serve_local(&sharded)?;
-            let mut remote = backend::RemoteShardedEngine::connect(
-                servers.addrs.clone(),
-                Duration::from_secs(30),
-            )?;
-            for (bi, &b) in batches.iter().enumerate() {
-                let batch_rows = &rows_vec[..b];
-                let r = bench::run_with_budget(
-                    &format!("remote S={shards} B={b:<3}"),
-                    budget_ns,
-                    || {
-                        std::hint::black_box(
-                            remote.eval_batch(batch_rows).unwrap(),
-                        );
-                    },
-                );
-                r.print();
-                remote_qps[si][bi] = b as f64 * r.per_sec();
-                results.push(r);
+            for (fi, &(fname, wire)) in framings.iter().enumerate() {
+                let mut remote = connect_wire(&servers.addrs, wire)?;
+                for (bi, &b) in batches.iter().enumerate() {
+                    let batch_rows = &rows_vec[..b];
+                    let r = bench::run_with_budget(
+                        &format!("rem-{fname:<6} S={shards} B={b:<3}"),
+                        budget_ns,
+                        || {
+                            std::hint::black_box(
+                                remote.eval_batch(batch_rows).unwrap(),
+                            );
+                        },
+                    );
+                    r.print();
+                    remote_qps[fi][si][bi] = b as f64 * r.per_sec();
+                    results.push(r);
+                }
             }
         }
 
         for (si, &shards) in shard_counts.iter().enumerate() {
             for (bi, &b) in batches.iter().enumerate() {
-                let ratio = remote_qps[si][bi] / local_qps[si][bi];
-                println!(
-                    "  -> S={shards} B={b}: remote {:.0} q/s vs local \
-                     {:.0} q/s ({:.2}x)",
-                    remote_qps[si][bi], local_qps[si][bi], ratio
-                );
-                meta.push((
-                    format!("s{shards}_b{b}"),
-                    json::obj(vec![
-                        ("shards", Json::from_u64(shards as u64)),
-                        ("batch", Json::from_u64(b as u64)),
-                        ("local_qps", Json::num(local_qps[si][bi])),
-                        ("remote_qps", Json::num(remote_qps[si][bi])),
-                        ("remote_vs_local", Json::num(ratio)),
-                    ]),
-                ));
+                for (fi, &(fname, _)) in framings.iter().enumerate() {
+                    let ratio =
+                        remote_qps[fi][si][bi] / local_qps[si][bi];
+                    println!(
+                        "  -> S={shards} B={b} {fname}: remote {:.0} \
+                         q/s vs local {:.0} q/s ({:.2}x)",
+                        remote_qps[fi][si][bi], local_qps[si][bi],
+                        ratio
+                    );
+                    meta.push((
+                        format!("s{shards}_b{b}_{fname}"),
+                        json::obj(vec![
+                            ("shards", Json::from_u64(shards as u64)),
+                            ("batch", Json::from_u64(b as u64)),
+                            ("framing", Json::Str(fname.into())),
+                            ("local_qps", Json::num(local_qps[si][bi])),
+                            (
+                                "remote_qps",
+                                Json::num(remote_qps[fi][si][bi]),
+                            ),
+                            ("remote_vs_local", Json::num(ratio)),
+                        ]),
+                    ));
+                }
             }
         }
 
@@ -215,11 +285,28 @@ mod linux {
             ("smoke", Json::Bool(smoke)),
             ("cores", Json::from_u64(cores as u64)),
             (
+                "framing",
+                Json::Arr(vec![
+                    Json::Str("json".into()),
+                    Json::Str("binary".into()),
+                ]),
+            ),
+            (
+                "json_line_cap_ceiling",
+                json::obj(vec![
+                    ("batch", Json::from_u64(CEILING_B as u64)),
+                    ("binary_bit_identical", Json::Bool(true)),
+                    ("json_refused", Json::Bool(true)),
+                ]),
+            ),
+            (
                 "note",
                 Json::Str(
                     "remote runs over loopback in-process; the ratio \
-                     is the wire-protocol overhead (JSON + TCP + \
-                     scatter/gather), the price of horizontal capacity"
+                     is the wire-protocol overhead (framing + TCP + \
+                     scatter/gather), the price of horizontal capacity \
+                     — binary frames ship raw LE f32 payloads, JSON \
+                     lines ship shortest-f32 decimals"
                         .into(),
                 ),
             ),

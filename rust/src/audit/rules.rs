@@ -36,6 +36,8 @@ use std::collections::{BTreeMap, BTreeSet};
 /// carry a `// CAST:` losslessness argument.
 pub const WIRE_FILES: &[&str] = &[
     "coordinator/protocol.rs",
+    "coordinator/net/frame.rs",
+    "coordinator/net/conn.rs",
     "shard/remote.rs",
     "shard/serde.rs",
     "util/json.rs",
@@ -50,6 +52,7 @@ pub const WIRE_FILES: &[&str] = &[
 pub const HOT_FILES: &[&str] = &[
     "coordinator/net/reactor.rs",
     "coordinator/net/conn.rs",
+    "coordinator/net/frame.rs",
     "coordinator/net/sys.rs",
     "coordinator/pool.rs",
     "shard/remote.rs",

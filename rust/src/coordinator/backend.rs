@@ -56,7 +56,8 @@ use crate::runtime::Executable;
 use crate::shard::{self, MergeScratch, ShardedSketch};
 use crate::sketch::epoch::{CounterPlane, MAX_PENDING};
 use crate::sketch::{BatchScratch, FusedMultiSketch, FusedScratch,
-                    QuantScratch, QuantSketch, RaceSketch};
+                    QuantScratch, QuantSketch, RaceSketch, SrpScratch,
+                    SrpSketch};
 use std::sync::Arc;
 
 /// Which backend variant a request targets.
@@ -888,6 +889,48 @@ impl Engine for QuantEngine {
     }
 }
 
+/// The SRP-family lane: a `build-sketch --family srp` artifact (RSRP
+/// on disk) served on the `rs` wire kind — clients address it exactly
+/// like an L2 sketch lane and cannot tell the hash family from the
+/// protocol.  Scalar path only (the batch-major and pool fan-out
+/// machinery is L2-specific; an SRP batch kernel is future work), so a
+/// drained batch runs a per-row `query_with` loop on the lane thread
+/// with one resident scratch.  Read-only: SRP sketches have no epoch
+/// plane yet, so the default [`Engine::apply_updates`] bail and
+/// `update_shape() == None` apply — the lane refuses `update` traffic
+/// instead of silently dropping it.
+pub struct SrpEngine {
+    pub sketch: Arc<SrpSketch>,
+    scratch: SrpScratch,
+}
+
+impl SrpEngine {
+    pub fn new(sketch: SrpSketch) -> Self {
+        Self { sketch: Arc::new(sketch), scratch: SrpScratch::default() }
+    }
+}
+
+impl Engine for SrpEngine {
+    fn dim(&self) -> usize {
+        self.sketch.d
+    }
+
+    fn eval_batch(&mut self, rows: &[Vec<f32>]) -> anyhow::Result<Vec<f32>> {
+        let d = self.sketch.d;
+        for (i, r) in rows.iter().enumerate() {
+            anyhow::ensure!(
+                r.len() == d,
+                "row {i} has dim {}, want {d}",
+                r.len()
+            );
+        }
+        Ok(rows
+            .iter()
+            .map(|r| self.sketch.query_with(r, &mut self.scratch))
+            .collect())
+    }
+}
+
 /// The `sh` lane: a sketch partitioned into whole-MoM-group shards.
 /// Every drained batch is projected ONCE on the lane thread, fanned out
 /// as exactly one shard-kernel submission per shard through the
@@ -1421,6 +1464,34 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn srp_engine_matches_scalar_and_stays_read_only() {
+        // SrpSketch::build is deterministic from (params, config), so a
+        // second build is a bit-identical reference oracle.
+        let kp = random_kp(6, 8, 5, 20);
+        let reference = SrpSketch::build(&kp, &SketchConfig::default());
+        let mut engine =
+            SrpEngine::new(SrpSketch::build(&kp, &SketchConfig::default()));
+        assert_eq!(engine.dim(), 8);
+        let rows = random_rows(300, 9, 8);
+        let got = engine.eval_batch(&rows).unwrap();
+        let mut s = SrpScratch::default();
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(
+                got[i].to_bits(),
+                reference.query_with(r, &mut s).to_bits(),
+                "row {i}"
+            );
+        }
+        // Bad dim is rejected, and the lane advertises immutability
+        // (update traffic is refused, not dropped).
+        assert!(engine.eval_batch(&[vec![0.0; 7]]).is_err());
+        assert_eq!(engine.update_shape(), None);
+        let up =
+            UpdateRow { x: vec![0.0; 5], alpha: 1.0, class: 0 };
+        assert!(engine.apply_updates(&[up], true).is_err());
     }
 
     fn multiclass_fixture(seed: u64, n_classes: usize)

@@ -1,48 +1,202 @@
-//! Per-connection state for the reactor: incremental line framing with
-//! a hard length cap, buffered nonblocking writes, and in-flight
-//! accounting for deferred close.
+//! Per-connection state for the reactor: incremental framing (JSON
+//! lines or length-prefixed binary frames), buffered nonblocking
+//! writes, and in-flight accounting for deferred close.
 //!
-//! The cap is the OOM fix: the seed buffered an entire line in
+//! The line cap is the OOM fix: the seed buffered an entire line in
 //! `BufRead::lines`, so a newline-free stream grew the heap without
-//! bound.  Here a line that exceeds [`MAX_LINE_BYTES`] is answered with
-//! an error (id recovered best-effort from the kept prefix) and the
-//! rest of the oversize line is *discarded* as it streams in — memory
-//! stays bounded and the connection survives for subsequent requests.
+//! bound.  Here a line that exceeds [`MAX_LINE_BYTES`] is discarded as
+//! it streams in — memory stays bounded and the connection survives —
+//! while a bounded streaming matcher ([`IdScan`]) recovers the request
+//! id from the discarded bytes, wherever it sits in the line, so the
+//! error answer still correlates (the old kept-prefix approach lost
+//! the id whenever a big `"x"` array preceded it).
+//!
+//! The binary frame mode is the same bounded-read discipline for the
+//! shard plane's length-prefixed protocol (see [`super::frame`]): the
+//! declared payload length is validated against a configurable cap
+//! before any payload byte is buffered, over-cap frames are discarded
+//! byte-exactly with the connection surviving, and a corrupt header
+//! (bad magic/version/reserved) is a terminal [`InEvent::FrameError`]
+//! because a byte stream cannot be resynchronized past a bad length
+//! prefix.  [`WireMode::Auto`] sniffs the first byte of a connection:
+//! binary frames start with `b'R'` (`"RSBF"`), JSON lines never do
+//! (`{`, digits, or whitespace), so one listening port serves both.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
 
+use super::frame::{self, Frame, HEADER_BYTES, MAX_FRAME_PAYLOAD_BYTES};
+
 /// Hard cap on a single request line (bytes, excluding the newline).
 pub const MAX_LINE_BYTES: usize = 256 * 1024;
 
-/// Prefix of an oversize line kept for best-effort id extraction.
-pub const OVERSIZE_PREFIX_BYTES: usize = 4 * 1024;
-
 /// Cap on buffered-but-unsent response bytes.  A client that pipelines
 /// requests without ever reading responses is disconnected rather than
-/// allowed to grow the heap.
+/// allowed to grow the heap.  (Default for [`Conn`]'s per-connection
+/// `write_cap`, which tests shrink to exercise the refusal path.)
 pub const MAX_WRITE_BUF_BYTES: usize = 16 * 1024 * 1024;
+
+/// Which wire protocol a connection speaks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireMode {
+    /// Decide per connection by sniffing the first byte: `b'R'` (the
+    /// first magic byte of `"RSBF"`) selects binary frames, anything
+    /// else selects JSON lines.  Valid JSON never starts with `R`.
+    Auto,
+    /// Newline-delimited JSON.
+    Json,
+    /// Length-prefixed binary frames ([`super::frame`]).
+    Binary,
+}
 
 /// One framed input event.
 pub enum InEvent {
     /// A complete request line (without the trailing newline).
     Line(String),
-    /// The line cap fired; the payload is the kept prefix for
-    /// best-effort id extraction.  The rest of the line is discarded
-    /// as it arrives.
-    Oversize(String),
+    /// The line cap fired and the whole line has now been discarded.
+    /// `id` is the request id recovered by the streaming [`IdScan`]
+    /// matcher (`None` when the line carried no parseable `"id"`).
+    Oversize { id: Option<u64> },
+    /// A complete binary frame (header validated, payload under cap).
+    Frame(Frame),
+    /// A frame whose declared payload length exceeds the cap.  The
+    /// header was valid, so the id correlates; the payload is being
+    /// discarded byte-exactly and the connection survives.
+    OversizeFrame { verb: u8, id: u64, declared: usize },
+    /// A corrupt frame header (bad magic/version/reserved).  Terminal:
+    /// the reactor answers descriptively and closes the connection.
+    FrameError(String),
+}
+
+/// Streaming, constant-memory matcher for `"id": <digits>` inside a
+/// discarded oversize line.  Fed every chunk (including across read
+/// boundaries); the first complete match wins.  Overflowing digit
+/// runs are abandoned rather than wrapped.
+#[derive(Clone, Copy, Debug)]
+pub struct IdScan {
+    found: Option<u64>,
+    state: ScanState,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum ScanState {
+    /// Matched this many bytes of the `"id"` needle (0..4).
+    Key(u8),
+    /// Needle matched; skipping whitespace before the `:`.
+    WsColon,
+    /// Colon matched; skipping whitespace before the first digit.
+    WsDigit,
+    /// Accumulating the value.
+    Digits(u64),
+}
+
+/// On a mismatch, a quote may begin a fresh needle match.
+fn rescan(b: u8) -> ScanState {
+    if b == b'"' {
+        ScanState::Key(1)
+    } else {
+        ScanState::Key(0)
+    }
+}
+
+impl IdScan {
+    pub fn new() -> IdScan {
+        IdScan { found: None, state: ScanState::Key(0) }
+    }
+
+    /// Consume one discarded chunk.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        if self.found.is_some() {
+            return;
+        }
+        const KEY: &[u8; 4] = b"\"id\"";
+        for &b in bytes {
+            self.state = match self.state {
+                ScanState::Key(k) => {
+                    if b == KEY[usize::from(k)] {
+                        if k == 3 {
+                            ScanState::WsColon
+                        } else {
+                            ScanState::Key(k + 1)
+                        }
+                    } else {
+                        rescan(b)
+                    }
+                }
+                ScanState::WsColon => match b {
+                    b' ' | b'\t' | b'\r' => ScanState::WsColon,
+                    b':' => ScanState::WsDigit,
+                    _ => rescan(b),
+                },
+                ScanState::WsDigit => match b {
+                    b' ' | b'\t' | b'\r' => ScanState::WsDigit,
+                    b'0'..=b'9' => ScanState::Digits(u64::from(b - b'0')),
+                    _ => rescan(b),
+                },
+                ScanState::Digits(v) => {
+                    if b.is_ascii_digit() {
+                        match v
+                            .checked_mul(10)
+                            .and_then(|x| x.checked_add(u64::from(b - b'0')))
+                        {
+                            Some(nv) => ScanState::Digits(nv),
+                            None => rescan(b), // overflow: not a sane id
+                        }
+                    } else {
+                        self.found = Some(v);
+                        return;
+                    }
+                }
+            };
+        }
+    }
+
+    /// The line ended: a digit run still in flight completes the match.
+    pub fn finish(&mut self) -> Option<u64> {
+        if self.found.is_none() {
+            if let ScanState::Digits(v) = self.state {
+                self.found = Some(v);
+            }
+        }
+        self.found
+    }
+}
+
+/// Per-connection framing state.
+enum Framing {
+    /// [`WireMode::Auto`] before the first byte arrives.
+    Sniff,
+    /// JSON line framing.
+    Lines,
+    /// Inside an oversize line: drop bytes until the next `\n`,
+    /// feeding the id matcher as they go.
+    LineDiscard(IdScan),
+    /// Binary frame framing.
+    Frames,
+    /// Inside an over-cap frame: drop exactly `remaining` payload
+    /// bytes, then resume frame framing.
+    FrameDiscard { remaining: usize },
+    /// A corrupt frame header was seen: the stream cannot be
+    /// resynchronized, so further input is ignored while the one
+    /// error answer drains.
+    Poisoned,
 }
 
 pub struct Conn {
     pub stream: TcpStream,
-    /// Partial input line (bytes since the last `\n`).
+    /// Partial input (bytes since the last `\n`, or the partial frame).
     rbuf: Vec<u8>,
     /// Serialized responses not yet accepted by the socket.
     wbuf: Vec<u8>,
     /// Bytes of `wbuf` already written.
     wpos: usize,
-    /// Inside an oversize line: drop bytes until the next `\n`.
-    discarding: bool,
+    /// Framing mode and its in-flight state.
+    framing: Framing,
+    /// Cap on a single binary frame's declared payload length.
+    frame_cap: usize,
+    /// Cap on buffered-but-unsent response bytes; also the refusal
+    /// threshold for a single response (see `fits_write`).
+    write_cap: usize,
     /// Requests submitted to the router whose responses have not yet
     /// been queued into `wbuf`.
     pub in_flight: usize,
@@ -53,17 +207,51 @@ pub struct Conn {
 }
 
 impl Conn {
+    /// A JSON-lines connection with default caps (the inference plane).
     pub fn new(stream: TcpStream) -> Conn {
+        Conn::new_wire(stream, WireMode::Json, MAX_FRAME_PAYLOAD_BYTES)
+    }
+
+    /// A connection in an explicit wire mode with an explicit frame
+    /// cap (the shard plane, whose listener defaults to
+    /// [`WireMode::Auto`] so one port serves binary and JSON peers).
+    pub fn new_wire(stream: TcpStream, wire: WireMode, frame_cap: usize) -> Conn {
         Conn {
             stream,
             rbuf: Vec::new(),
             wbuf: Vec::new(),
             wpos: 0,
-            discarding: false,
+            framing: match wire {
+                WireMode::Auto => Framing::Sniff,
+                WireMode::Json => Framing::Lines,
+                WireMode::Binary => Framing::Frames,
+            },
+            frame_cap,
+            write_cap: MAX_WRITE_BUF_BYTES,
             in_flight: 0,
             read_closed: false,
             interest: 0,
         }
+    }
+
+    /// Shrink (or grow) the write cap — test-only in practice, but the
+    /// reactor threads it from `NetOptions` so the refusal path is
+    /// exercisable end-to-end.
+    pub fn set_write_cap(&mut self, cap: usize) {
+        self.write_cap = cap;
+    }
+
+    pub fn write_cap(&self) -> usize {
+        self.write_cap
+    }
+
+    /// Would a single serialized message of `n` bytes fit under the
+    /// write cap at all?  When it cannot, the caller refuses that one
+    /// response with a descriptive error instead of queueing bytes
+    /// that `over_write_cap` would then punish by tearing the whole
+    /// connection down.
+    pub fn fits_write(&self, n: usize) -> bool {
+        n <= self.write_cap
     }
 
     /// Read what the socket has, appending framed events to `out`.
@@ -82,13 +270,28 @@ impl Conn {
             match self.stream.read(scratch) {
                 Ok(0) => {
                     self.read_closed = true;
-                    if !self.rbuf.is_empty() && !self.discarding {
-                        // Final unterminated line — parity with the
-                        // legacy BufRead::lines behavior.
-                        let line =
-                            String::from_utf8_lossy(&self.rbuf).into_owned();
-                        self.rbuf.clear();
-                        out.push(InEvent::Line(line));
+                    match &mut self.framing {
+                        Framing::Lines if !self.rbuf.is_empty() => {
+                            // Final unterminated line — parity with the
+                            // legacy BufRead::lines behavior.
+                            let line = String::from_utf8_lossy(&self.rbuf)
+                                .into_owned();
+                            self.rbuf.clear();
+                            out.push(InEvent::Line(line));
+                        }
+                        Framing::LineDiscard(scan) => {
+                            // EOF ends the oversize line; surface the
+                            // event so the reject still counts even
+                            // though no answer can reach the peer.
+                            let id = scan.finish();
+                            self.framing = Framing::Lines;
+                            out.push(InEvent::Oversize { id });
+                        }
+                        // A partial binary frame at EOF is a mid-frame
+                        // disconnect: nobody is left to answer, so the
+                        // bytes are dropped and `finished()` reaps the
+                        // connection once responses drain.
+                        _ => {}
                     }
                     return true;
                 }
@@ -106,25 +309,59 @@ impl Conn {
         true
     }
 
-    /// Split a freshly read chunk into lines, honoring discard mode and
-    /// the line cap.
-    fn frame(&mut self, mut chunk: &[u8], out: &mut Vec<InEvent>) {
+    /// Route a freshly read chunk into the active framing mode,
+    /// sniffing it from the first byte when the wire is `Auto`.
+    fn frame(&mut self, chunk: &[u8], out: &mut Vec<InEvent>) {
+        if chunk.is_empty() {
+            return;
+        }
+        if let Framing::Sniff = self.framing {
+            self.framing = if chunk[0] == frame::FRAME_MAGIC[0] {
+                Framing::Frames
+            } else {
+                Framing::Lines
+            };
+        }
+        if matches!(self.framing, Framing::Poisoned) {
+            return;
+        }
+        if matches!(self.framing, Framing::Lines | Framing::LineDiscard(_)) {
+            self.frame_lines(chunk, out);
+        } else {
+            self.frame_frames(chunk, out);
+        }
+    }
+
+    /// Split a chunk into lines, honoring discard mode and the line
+    /// cap.
+    fn frame_lines(&mut self, mut chunk: &[u8], out: &mut Vec<InEvent>) {
         while !chunk.is_empty() {
-            if self.discarding {
+            if let Framing::LineDiscard(scan) = &mut self.framing {
                 match chunk.iter().position(|&b| b == b'\n') {
                     Some(pos) => {
-                        self.discarding = false;
+                        scan.feed(&chunk[..pos]);
+                        let id = scan.finish();
+                        self.framing = Framing::Lines;
+                        out.push(InEvent::Oversize { id });
                         chunk = &chunk[pos + 1..];
                     }
-                    None => return, // whole chunk is oversize spill
+                    None => {
+                        // Whole chunk is oversize spill.
+                        scan.feed(chunk);
+                        return;
+                    }
                 }
                 continue;
             }
             match chunk.iter().position(|&b| b == b'\n') {
                 Some(pos) => {
                     if self.rbuf.len() + pos > MAX_LINE_BYTES {
-                        self.reject_oversize(&chunk[..pos], out);
-                        self.discarding = false; // newline is right here
+                        // The newline is right here: scan what we have
+                        // and emit the completed oversize event now.
+                        let mut scan = self.begin_line_discard();
+                        scan.feed(&chunk[..pos]);
+                        out.push(InEvent::Oversize { id: scan.finish() });
+                        self.framing = Framing::Lines;
                     } else {
                         let line = if self.rbuf.is_empty() {
                             String::from_utf8_lossy(&chunk[..pos]).into_owned()
@@ -141,8 +378,9 @@ impl Conn {
                 }
                 None => {
                     if self.rbuf.len() + chunk.len() > MAX_LINE_BYTES {
-                        self.reject_oversize(chunk, out);
-                        self.discarding = true;
+                        let mut scan = self.begin_line_discard();
+                        scan.feed(chunk);
+                        self.framing = Framing::LineDiscard(scan);
                     } else {
                         self.rbuf.extend_from_slice(chunk);
                     }
@@ -152,17 +390,67 @@ impl Conn {
         }
     }
 
-    /// Emit the oversize marker (keeping a prefix for id recovery) and
-    /// release the partial-line buffer.
-    fn reject_oversize(&mut self, tail: &[u8], out: &mut Vec<InEvent>) {
-        let keep = OVERSIZE_PREFIX_BYTES.min(self.rbuf.len());
-        let mut prefix = self.rbuf[..keep].to_vec();
-        let room = OVERSIZE_PREFIX_BYTES - prefix.len();
-        prefix.extend_from_slice(&tail[..room.min(tail.len())]);
+    /// The line cap fired: seed the id matcher with the buffered
+    /// prefix and release the partial-line buffer.
+    fn begin_line_discard(&mut self) -> IdScan {
+        let mut scan = IdScan::new();
+        scan.feed(&self.rbuf);
         self.rbuf = Vec::new(); // free, don't just clear
-        out.push(InEvent::Oversize(
-            String::from_utf8_lossy(&prefix).into_owned(),
-        ));
+        scan
+    }
+
+    /// Incremental binary framing: buffer at most one header plus one
+    /// under-cap payload; anything over the cap streams through the
+    /// discard state without ever being buffered.
+    fn frame_frames(&mut self, mut chunk: &[u8], out: &mut Vec<InEvent>) {
+        if let Framing::FrameDiscard { remaining } = self.framing {
+            if chunk.len() < remaining {
+                self.framing =
+                    Framing::FrameDiscard { remaining: remaining - chunk.len() };
+                return;
+            }
+            chunk = &chunk[remaining..];
+            self.framing = Framing::Frames;
+        }
+        self.rbuf.extend_from_slice(chunk);
+        while self.rbuf.len() >= HEADER_BYTES {
+            let header = match frame::parse_header(&self.rbuf[..HEADER_BYTES]) {
+                Ok(h) => h,
+                Err(e) => {
+                    self.rbuf = Vec::new();
+                    self.framing = Framing::Poisoned;
+                    out.push(InEvent::FrameError(e));
+                    return;
+                }
+            };
+            if header.len > self.frame_cap {
+                out.push(InEvent::OversizeFrame {
+                    verb: header.verb,
+                    id: header.id,
+                    declared: header.len,
+                });
+                let have = self.rbuf.len() - HEADER_BYTES;
+                if have >= header.len {
+                    self.rbuf.drain(..HEADER_BYTES + header.len);
+                    continue;
+                }
+                self.rbuf = Vec::new(); // free, don't just clear
+                self.framing =
+                    Framing::FrameDiscard { remaining: header.len - have };
+                return;
+            }
+            if self.rbuf.len() < HEADER_BYTES + header.len {
+                return; // wait for the rest of the payload
+            }
+            let payload =
+                self.rbuf[HEADER_BYTES..HEADER_BYTES + header.len].to_vec();
+            self.rbuf.drain(..HEADER_BYTES + header.len);
+            out.push(InEvent::Frame(Frame {
+                verb: header.verb,
+                id: header.id,
+                payload,
+            }));
+        }
     }
 
     /// Queue one serialized line (newline appended here) for writing.
@@ -176,13 +464,19 @@ impl Conn {
         self.wbuf.push(b'\n');
     }
 
+    /// Queue pre-encoded bytes (a binary frame) for writing — no
+    /// delimiter is appended; frames are self-delimiting.
+    pub fn queue_bytes(&mut self, bytes: &[u8]) {
+        self.wbuf.extend_from_slice(bytes);
+    }
+
     /// Unwritten response bytes.
     pub fn write_backlog(&self) -> usize {
         self.wbuf.len() - self.wpos
     }
 
     pub fn over_write_cap(&self) -> bool {
-        self.write_backlog() > MAX_WRITE_BUF_BYTES
+        self.write_backlog() > self.write_cap
     }
 
     /// Flush as much of the write buffer as the socket accepts.
@@ -232,13 +526,17 @@ mod tests {
     use std::net::{TcpListener, TcpStream};
 
     /// Loopback pair: (client stream, server-side Conn, nonblocking).
-    fn pair() -> (TcpStream, Conn) {
+    fn pair_wire(wire: WireMode, frame_cap: usize) -> (TcpStream, Conn) {
         let l = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = l.local_addr().unwrap();
         let client = TcpStream::connect(addr).unwrap();
         let (server, _) = l.accept().unwrap();
         server.set_nonblocking(true).unwrap();
-        (client, Conn::new(server))
+        (client, Conn::new_wire(server, wire, frame_cap))
+    }
+
+    fn pair() -> (TcpStream, Conn) {
+        pair_wire(WireMode::Json, MAX_FRAME_PAYLOAD_BYTES)
     }
 
     fn lines(events: &[InEvent]) -> Vec<&str> {
@@ -246,30 +544,47 @@ mod tests {
             .iter()
             .filter_map(|e| match e {
                 InEvent::Line(l) => Some(l.as_str()),
-                InEvent::Oversize(_) => None,
+                _ => None,
             })
             .collect()
+    }
+
+    fn settle(client: &mut TcpStream, conn: &mut Conn, out: &mut Vec<InEvent>) {
+        client.flush().unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let mut scratch = vec![0u8; 64 * 1024];
+        assert!(conn.fill(&mut scratch, out));
+    }
+
+    /// Write big payloads in socket-buffer-sized pieces, draining the
+    /// server side between pieces so a non-reading loopback peer can
+    /// never deadlock `write_all`.
+    fn stream_chunks(
+        client: &mut TcpStream,
+        conn: &mut Conn,
+        out: &mut Vec<InEvent>,
+        bytes: &[u8],
+    ) {
+        let mut scratch = vec![0u8; 64 * 1024];
+        for piece in bytes.chunks(32 * 1024) {
+            client.write_all(piece).unwrap();
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            assert!(conn.fill(&mut scratch, out));
+        }
     }
 
     #[test]
     fn frames_split_lines_across_reads() {
         let (mut client, mut conn) = pair();
-        let mut scratch = vec![0u8; 4096];
         let mut out = Vec::new();
         client.write_all(b"hel").unwrap();
-        client.flush().unwrap();
-        std::thread::sleep(std::time::Duration::from_millis(20));
-        assert!(conn.fill(&mut scratch, &mut out));
+        settle(&mut client, &mut conn, &mut out);
         assert!(out.is_empty());
         client.write_all(b"lo\nwor").unwrap();
-        client.flush().unwrap();
-        std::thread::sleep(std::time::Duration::from_millis(20));
-        assert!(conn.fill(&mut scratch, &mut out));
+        settle(&mut client, &mut conn, &mut out);
         assert_eq!(lines(&out), vec!["hello"]);
         client.write_all(b"ld\n\nx\n").unwrap();
-        client.flush().unwrap();
-        std::thread::sleep(std::time::Duration::from_millis(20));
-        assert!(conn.fill(&mut scratch, &mut out));
+        settle(&mut client, &mut conn, &mut out);
         assert_eq!(lines(&out), vec!["hello", "world", "", "x"]);
     }
 
@@ -278,8 +593,9 @@ mod tests {
         let (mut client, mut conn) = pair();
         let mut scratch = vec![0u8; 64 * 1024];
         let mut out = Vec::new();
-        // Stream 4 MB without a newline; the cap must fire once and the
-        // partial-line buffer must never hold more than the cap.
+        // Stream 4 MB without a newline; the partial-line buffer must
+        // never hold more than the cap, and nothing is emitted until
+        // the line actually ends (the id may still be in flight).
         let chunk = vec![b'a'; 64 * 1024];
         for _ in 0..64 {
             client.write_all(&chunk).unwrap();
@@ -287,17 +603,55 @@ mod tests {
             assert!(conn.fill(&mut scratch, &mut out));
             assert!(conn.rbuf.len() <= MAX_LINE_BYTES + 1);
         }
-        let n_oversize = out
-            .iter()
-            .filter(|e| matches!(e, InEvent::Oversize(_)))
-            .count();
-        assert_eq!(n_oversize, 1);
-        assert!(lines(&out).is_empty());
-        // End the bad line; the connection keeps framing fresh lines.
+        assert!(out.is_empty());
+        // End the bad line; exactly one oversize event fires and the
+        // connection keeps framing fresh lines.
         client.write_all(b"\nnext\n").unwrap();
         std::thread::sleep(std::time::Duration::from_millis(20));
         assert!(conn.fill(&mut scratch, &mut out));
+        let n_oversize = out
+            .iter()
+            .filter(|e| matches!(e, InEvent::Oversize { .. }))
+            .count();
+        assert_eq!(n_oversize, 1);
         assert_eq!(lines(&out), vec!["next"]);
+    }
+
+    #[test]
+    fn oversize_id_recovered_even_when_x_precedes_id() {
+        // Regression: the old kept-prefix recovery lost the id when a
+        // big "x" array preceded it.  The streaming matcher must find
+        // it wherever it lands — including split across reads.
+        let (mut client, mut conn) = pair();
+        let mut out = Vec::new();
+        let big_x = "9.5,".repeat(MAX_LINE_BYTES / 2);
+        let head = format!("{{\"op\":\"infer\",\"x\":[{big_x}");
+        stream_chunks(&mut client, &mut conn, &mut out, head.as_bytes());
+        assert!(out.is_empty());
+        // Split the needle itself across two writes.
+        client.write_all(b"0.0],\"i").unwrap();
+        settle(&mut client, &mut conn, &mut out);
+        client.write_all(b"d\" : 7701}\n").unwrap();
+        settle(&mut client, &mut conn, &mut out);
+        assert_eq!(out.len(), 1);
+        match &out[0] {
+            InEvent::Oversize { id } => assert_eq!(*id, Some(7701)),
+            _ => panic!("expected oversize"),
+        }
+    }
+
+    #[test]
+    fn oversize_id_none_when_line_has_no_id() {
+        let (mut client, mut conn) = pair();
+        let mut out = Vec::new();
+        let junk = vec![b'z'; MAX_LINE_BYTES + 10];
+        stream_chunks(&mut client, &mut conn, &mut out, &junk);
+        client.write_all(b"\n").unwrap();
+        settle(&mut client, &mut conn, &mut out);
+        match &out[0] {
+            InEvent::Oversize { id } => assert_eq!(*id, None),
+            _ => panic!("expected oversize"),
+        }
     }
 
     #[test]
@@ -311,5 +665,170 @@ mod tests {
         assert!(conn.fill(&mut scratch, &mut out));
         assert!(conn.read_closed);
         assert_eq!(lines(&out), vec!["tail-no-newline"]);
+    }
+
+    #[test]
+    fn eof_mid_oversize_line_still_reports_the_reject() {
+        let (mut client, mut conn) = pair();
+        let mut scratch = vec![0u8; 64 * 1024];
+        let mut out = Vec::new();
+        let mut line = b"{\"id\":42,\"x\":[".to_vec();
+        line.extend(vec![b'1'; MAX_LINE_BYTES + 10]);
+        stream_chunks(&mut client, &mut conn, &mut out, &line);
+        drop(client); // no newline ever arrives
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(conn.fill(&mut scratch, &mut out));
+        assert!(conn.read_closed);
+        // The digit spill after "x":[ must not clobber the already-
+        // matched id=42... it does extend it: "x":[111... has no "id"
+        // needle, and the id was matched up front.
+        match &out[0] {
+            InEvent::Oversize { id } => assert_eq!(*id, Some(42)),
+            _ => panic!("expected oversize"),
+        }
+    }
+
+    #[test]
+    fn id_scan_matches_across_arbitrary_chunking() {
+        let line = b"{\"x\":[1,2,3],\"note\":\"id 9 \\\"id\\\"\",\"id\":31415926,\"op\":\"infer\"}";
+        for chunk in 1..9usize {
+            let mut scan = IdScan::new();
+            for piece in line.chunks(chunk) {
+                scan.feed(piece);
+            }
+            assert_eq!(scan.finish(), Some(31415926), "chunk={chunk}");
+        }
+        // First complete match wins.
+        let mut scan = IdScan::new();
+        scan.feed(b"{\"id\":5}{\"id\":6}");
+        assert_eq!(scan.finish(), Some(5));
+        // Overflowing digit runs are abandoned, later ids still match.
+        let mut scan = IdScan::new();
+        scan.feed(b"{\"id\":99999999999999999999999,\"id\":8}");
+        assert_eq!(scan.finish(), Some(8));
+    }
+
+    #[test]
+    fn binary_frames_parse_across_split_reads() {
+        let (mut client, mut conn) = pair_wire(WireMode::Binary, 1024);
+        let mut out = Vec::new();
+        let f1 = frame::encode(2, 11, &[1, 2, 3, 4, 5]);
+        let f2 = frame::encode(4, 12, b"");
+        // Dribble the first frame byte by byte through the header
+        // boundary, then the rest plus the second frame at once.
+        client.write_all(&f1[..7]).unwrap();
+        settle(&mut client, &mut conn, &mut out);
+        assert!(out.is_empty());
+        client.write_all(&f1[7..21]).unwrap();
+        settle(&mut client, &mut conn, &mut out);
+        assert!(out.is_empty());
+        client.write_all(&f1[21..]).unwrap();
+        client.write_all(&f2).unwrap();
+        settle(&mut client, &mut conn, &mut out);
+        assert_eq!(out.len(), 2);
+        match &out[0] {
+            InEvent::Frame(f) => {
+                assert_eq!((f.verb, f.id), (2, 11));
+                assert_eq!(f.payload, vec![1, 2, 3, 4, 5]);
+            }
+            _ => panic!("expected frame"),
+        }
+        match &out[1] {
+            InEvent::Frame(f) => {
+                assert_eq!((f.verb, f.id), (4, 12));
+                assert!(f.payload.is_empty());
+            }
+            _ => panic!("expected frame"),
+        }
+    }
+
+    #[test]
+    fn over_cap_frame_discarded_byte_exactly_connection_survives() {
+        let (mut client, mut conn) = pair_wire(WireMode::Binary, 64);
+        let mut scratch = vec![0u8; 4 * 1024];
+        let mut out = Vec::new();
+        let big = frame::encode(2, 77, &vec![0xAB; 300]);
+        let next = frame::encode(3, 78, b"ok");
+        client.write_all(&big).unwrap();
+        client.write_all(&next).unwrap();
+        client.flush().unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(conn.fill(&mut scratch, &mut out));
+        assert_eq!(out.len(), 2);
+        match &out[0] {
+            InEvent::OversizeFrame { verb, id, declared } => {
+                assert_eq!((*verb, *id, *declared), (2, 77, 300));
+            }
+            _ => panic!("expected oversize frame"),
+        }
+        match &out[1] {
+            InEvent::Frame(f) => assert_eq!((f.verb, f.id), (3, 78)),
+            _ => panic!("expected frame after discard"),
+        }
+        // And with the payload dribbled so the discard state persists
+        // across fills.
+        let mut out = Vec::new();
+        let big = frame::encode(2, 79, &vec![0xCD; 500]);
+        client.write_all(&big[..40]).unwrap();
+        settle(&mut client, &mut conn, &mut out);
+        client.write_all(&big[40..]).unwrap();
+        client.write_all(&frame::encode(4, 80, b"")).unwrap();
+        settle(&mut client, &mut conn, &mut out);
+        assert!(matches!(
+            out[0],
+            InEvent::OversizeFrame { verb: 2, id: 79, declared: 500 }
+        ));
+        assert!(
+            matches!(&out[1], InEvent::Frame(f) if f.id == 80),
+            "connection must keep framing after a dribbled discard"
+        );
+    }
+
+    #[test]
+    fn corrupt_header_is_a_terminal_frame_error() {
+        let (mut client, mut conn) = pair_wire(WireMode::Binary, 1024);
+        let mut out = Vec::new();
+        client.write_all(b"RSBFxxxxxxxxxxxxxxxxxxxx").unwrap();
+        settle(&mut client, &mut conn, &mut out);
+        assert_eq!(out.len(), 1);
+        match &out[0] {
+            InEvent::FrameError(e) => assert!(e.contains("version"), "{e}"),
+            _ => panic!("expected frame error"),
+        }
+    }
+
+    #[test]
+    fn auto_wire_sniffs_json_and_binary() {
+        let (mut client, mut conn) = pair_wire(WireMode::Auto, 1024);
+        let mut out = Vec::new();
+        client.write_all(b"{\"id\":1}\n").unwrap();
+        settle(&mut client, &mut conn, &mut out);
+        assert_eq!(lines(&out), vec!["{\"id\":1}"]);
+
+        let (mut client, mut conn) = pair_wire(WireMode::Auto, 1024);
+        let mut out = Vec::new();
+        client.write_all(&frame::encode(1, 9, b"hi")).unwrap();
+        settle(&mut client, &mut conn, &mut out);
+        assert_eq!(out.len(), 1);
+        assert!(matches!(&out[0], InEvent::Frame(f) if f.id == 9));
+
+        // A JSON line at a *binary-only* port is a bad-magic error.
+        let (mut client, mut conn) = pair_wire(WireMode::Binary, 1024);
+        let mut out = Vec::new();
+        client.write_all(b"{\"id\":1,\"op\":\"hello\",\"padpadpad\":0}\n").unwrap();
+        settle(&mut client, &mut conn, &mut out);
+        assert!(matches!(&out[0], InEvent::FrameError(e) if e.contains("magic")));
+    }
+
+    #[test]
+    fn write_cap_refusal_predicate() {
+        let (_client, mut conn) = pair();
+        assert!(conn.fits_write(MAX_WRITE_BUF_BYTES));
+        assert!(!conn.fits_write(MAX_WRITE_BUF_BYTES + 1));
+        conn.set_write_cap(100);
+        assert!(conn.fits_write(100));
+        assert!(!conn.fits_write(101));
+        conn.queue_line(&"y".repeat(200));
+        assert!(conn.over_write_cap());
     }
 }

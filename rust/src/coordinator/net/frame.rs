@@ -1,0 +1,179 @@
+//! The length-prefixed binary frame header: the fixed 20-byte prelude
+//! every binary-wire message starts with, parsed incrementally by
+//! [`super::conn::Conn`]'s frame mode.
+//!
+//! # Header layout (all integers little-endian)
+//!
+//! | offset | size | field                                    |
+//! |--------|------|------------------------------------------|
+//! | 0      | 4    | magic `b"RSBF"`                          |
+//! | 4      | 1    | protocol version (currently 1)           |
+//! | 5      | 1    | verb (service-defined; 0 = error reply)  |
+//! | 6      | 2    | reserved, must be zero                   |
+//! | 8      | 8    | request id (u64, echoed in the reply)    |
+//! | 16     | 4    | payload byte length (u32)                |
+//!
+//! The payload follows immediately: raw bytes whose schema is the
+//! verb's business (the shard plane ships raw little-endian f32 bits —
+//! see `shard::remote`).  The declared length is validated against a
+//! configurable cap BEFORE any payload byte is buffered, so a hostile
+//! length can never force an allocation; an over-cap frame is answered
+//! descriptively and its payload is discarded as it streams in (the
+//! connection survives).  A header whose magic, version, or reserved
+//! bytes are wrong is unrecoverable — a byte stream cannot be
+//! resynchronized past a corrupt length prefix — so the connection is
+//! answered once and closed.
+//!
+//! Verb 0 ([`VERB_ERROR`]) is reserved across every frame service:
+//! an error reply whose payload is the UTF-8 message.  Version
+//! negotiation does not live here: services negotiate via their
+//! `hello` exchange (the shard plane's hello reply carries the same
+//! JSON document on both wires), and a peer speaking a future header
+//! version is rejected at the header with a descriptive error.
+
+/// The four magic bytes every binary frame starts with.
+pub const FRAME_MAGIC: [u8; 4] = *b"RSBF";
+
+/// The one header version this build speaks.
+pub const FRAME_VERSION: u8 = 1;
+
+/// Fixed header size in bytes.
+pub const HEADER_BYTES: usize = 20;
+
+/// Default cap on a single frame's declared payload length.  Generous
+/// next to [`super::conn::MAX_LINE_BYTES`] because raw f32 payloads
+/// are the point of the binary wire; still small enough that a
+/// hostile declared length cannot balloon the heap (the declared
+/// length is checked BEFORE buffering).
+pub const MAX_FRAME_PAYLOAD_BYTES: usize = 64 * 1024 * 1024;
+
+/// Verb 0: an error reply (payload = UTF-8 message).  Shared by every
+/// frame-speaking service; the shard verbs live in `shard::remote`.
+pub const VERB_ERROR: u8 = 0;
+
+/// A parsed frame header.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FrameHeader {
+    pub verb: u8,
+    pub id: u64,
+    /// Declared payload length in bytes.
+    pub len: usize,
+}
+
+/// One complete inbound frame (header + buffered payload).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Frame {
+    pub verb: u8,
+    pub id: u64,
+    pub payload: Vec<u8>,
+}
+
+/// Parse the fixed header.  `Err` is descriptive and terminal: the
+/// stream cannot be resynchronized past a corrupt header.
+pub fn parse_header(h: &[u8]) -> Result<FrameHeader, String> {
+    debug_assert!(h.len() >= HEADER_BYTES);
+    if h[..4] != FRAME_MAGIC {
+        return Err(format!(
+            "bad frame magic {:02x} {:02x} {:02x} {:02x} (want \
+             \"RSBF\") — the peer is not speaking the binary frame \
+             protocol (a JSON-line peer should use the line wire)",
+            h[0], h[1], h[2], h[3]
+        ));
+    }
+    if h[4] != FRAME_VERSION {
+        return Err(format!(
+            "unsupported frame version {} (this build speaks {})",
+            h[4], FRAME_VERSION
+        ));
+    }
+    if h[6] != 0 || h[7] != 0 {
+        return Err(format!(
+            "reserved frame header bytes are nonzero ({:02x} {:02x})",
+            h[6], h[7]
+        ));
+    }
+    let verb = h[5];
+    let id = u64::from_le_bytes([
+        h[8], h[9], h[10], h[11], h[12], h[13], h[14], h[15],
+    ]);
+    let len = u32::from_le_bytes([h[16], h[17], h[18], h[19]]);
+    let len = usize::try_from(len)
+        .map_err(|_| "frame length does not fit usize".to_string())?;
+    Ok(FrameHeader { verb, id, len })
+}
+
+/// Encode one frame (header + payload), ready for `Conn::queue_bytes`.
+///
+/// # Panics
+///
+/// If `payload.len()` exceeds `u32::MAX` — callers validate payload
+/// sizes against their frame cap (<= u32::MAX) before encoding.
+pub fn encode(verb: u8, id: u64, payload: &[u8]) -> Vec<u8> {
+    // PANIC: encode callers cap payloads well below u32::MAX (frame
+    // caps are validated before any payload is built); an over-u32
+    // payload here is a programming error, not reachable from input.
+    let len = u32::try_from(payload.len()).expect("frame payload fits u32");
+    let mut out = Vec::with_capacity(HEADER_BYTES + payload.len());
+    out.extend_from_slice(&FRAME_MAGIC);
+    out.push(FRAME_VERSION);
+    out.push(verb);
+    out.extend_from_slice(&[0u8; 2]);
+    out.extend_from_slice(&id.to_le_bytes());
+    out.extend_from_slice(&len.to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// An error reply frame: [`VERB_ERROR`] with a UTF-8 message payload.
+pub fn error_frame(id: u64, msg: &str) -> Vec<u8> {
+    encode(VERB_ERROR, id, msg.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_roundtrips() {
+        let f = encode(3, 0xDEAD_BEEF_0102_0304, b"xyz");
+        assert_eq!(f.len(), HEADER_BYTES + 3);
+        let h = parse_header(&f[..HEADER_BYTES]).unwrap();
+        assert_eq!(h.verb, 3);
+        assert_eq!(h.id, 0xDEAD_BEEF_0102_0304);
+        assert_eq!(h.len, 3);
+        assert_eq!(&f[HEADER_BYTES..], b"xyz");
+    }
+
+    #[test]
+    fn zero_length_frames_are_legal() {
+        let f = encode(1, 7, b"");
+        let h = parse_header(&f).unwrap();
+        assert_eq!(h.len, 0);
+    }
+
+    #[test]
+    fn bad_magic_version_and_reserved_are_descriptive() {
+        let good = encode(2, 9, b"p");
+        let mut b = good.clone();
+        b[0] = b'{';
+        let e = parse_header(&b[..HEADER_BYTES]).unwrap_err();
+        assert!(e.contains("magic") && e.contains("JSON"), "{e}");
+        let mut b = good.clone();
+        b[4] = 9;
+        let e = parse_header(&b[..HEADER_BYTES]).unwrap_err();
+        assert!(e.contains("version 9"), "{e}");
+        let mut b = good.clone();
+        b[6] = 1;
+        let e = parse_header(&b[..HEADER_BYTES]).unwrap_err();
+        assert!(e.contains("reserved"), "{e}");
+    }
+
+    #[test]
+    fn error_frame_carries_the_message() {
+        let f = error_frame(42, "no such verb");
+        let h = parse_header(&f[..HEADER_BYTES]).unwrap();
+        assert_eq!(h.verb, VERB_ERROR);
+        assert_eq!(h.id, 42);
+        assert_eq!(&f[HEADER_BYTES..], b"no such verb");
+    }
+}

@@ -5,20 +5,56 @@
 //!   `epoll_wait` / `fcntl` / `pipe`) declared via `extern "C"` against
 //!   the already-linked libc — no registry crates, per the offline
 //!   image constraint.
-//! - [`conn`]: per-connection state — incremental line framing with a
-//!   hard [`conn::MAX_LINE_BYTES`] cap (the OOM fix), buffered
+//! - [`conn`]: per-connection state — incremental framing (JSON lines
+//!   with a hard [`conn::MAX_LINE_BYTES`] cap, and length-prefixed
+//!   binary frames with a configurable payload cap), buffered
 //!   nonblocking writes, in-flight accounting for deferred close.
+//! - [`frame`]: the binary frame header — magic, version, verb,
+//!   request id, declared payload length (see the wire-format spec
+//!   below and in `shard::mod`).
 //! - [`reactor`]: the event loop plus [`CompletionSender`], the
 //!   wake-pipe completion path that replaced the seed's
 //!   thread-per-in-flight-request forwarders.  The reactor is
-//!   line-protocol-agnostic over a [`LineHandler`]: the inference
-//!   plane's `Router` and the shard plane's
-//!   `shard::remote::ShardService` both serve behind the same event
-//!   loop, and the remote-shard client reuses [`conn::Conn`] +
+//!   protocol-agnostic over a [`LineHandler`]: the inference plane's
+//!   `Router` serves JSON lines, the shard plane's
+//!   `shard::remote::ShardService` serves both wires behind the same
+//!   event loop, and the remote-shard client reuses [`conn::Conn`] +
 //!   [`sys::Epoll`] from the other side of the wire.
 //!
 //! The non-Linux thread-per-connection fallback lives in
 //! `coordinator::server` (compiled out of Linux builds).
+//!
+//! # Wire framing invariants
+//!
+//! Two framings share one reactor; [`conn::WireMode`] selects per
+//! listener, and `Auto` sniffs per connection from the first byte
+//! (binary frames start with `b'R'` of `"RSBF"`; JSON lines start
+//! with `{`, a digit, or whitespace — never `R`):
+//!
+//! - **Lines** (`\n`-delimited JSON): a line over
+//!   [`conn::MAX_LINE_BYTES`] is discarded as it streams — never
+//!   buffered — while a constant-memory matcher ([`conn::IdScan`])
+//!   recovers the request id from anywhere in the line, so the error
+//!   answer correlates even when a megabyte `"x"` array precedes the
+//!   `"id"` key.  Exactly one error per oversize line, emitted when
+//!   the line ends (newline or EOF); the connection survives.
+//! - **Frames** (20-byte header + raw payload, all integers
+//!   little-endian; layout in [`frame`]): the declared payload length
+//!   is validated against the frame cap BEFORE any payload byte is
+//!   buffered.  An over-cap frame is answered with an error frame
+//!   naming the request id and its payload is discarded byte-exactly;
+//!   the connection survives.  A corrupt header (bad magic, version,
+//!   or reserved bytes) is answered once and the connection closed —
+//!   a byte stream cannot be resynchronized past a bad length prefix.
+//! - **Write cap**: a single response that cannot fit under the
+//!   per-connection write cap at all is refused with a descriptive
+//!   per-request error in the same wire format; only a *cumulative*
+//!   backlog over the cap (a client not reading) tears the connection
+//!   down.
+//! - **Version negotiation** happens in the service-level `hello`
+//!   exchange (same JSON document on both wires), not in the frame
+//!   header: the header version byte only gates header *layout*
+//!   changes, and a mismatch is a descriptive reject.
 //!
 //! # Invariants catalog
 //!
@@ -37,7 +73,8 @@
 //!    carries a `// SAFETY:` comment naming the precondition that makes
 //!    it sound (valid fd, live pointer, signal-handler constraints).
 //!    The reactor's safety story is confined to the [`sys`] wrappers;
-//!    [`conn`] and [`reactor`] are safe code over those wrappers.
+//!    [`conn`], [`frame`], and [`reactor`] are safe code over those
+//!    wrappers.
 //!
 //! 3. **Memory orderings are explained.** Every `Ordering::*` use
 //!    carries an `// ORDERING:` comment naming its pairing: stop flags
@@ -49,17 +86,18 @@
 //!    sites.
 //!
 //! 4. **Wire integers are checked.** In the wire-facing files
-//!    (`coordinator/protocol.rs`, `shard/remote.rs`, `shard/serde.rs`,
+//!    (`coordinator/protocol.rs`, `coordinator/net/frame.rs`,
+//!    `coordinator/net/conn.rs`, `shard/remote.rs`, `shard/serde.rs`,
 //!    `util/json.rs`) every `as` numeric cast is either replaced with
 //!    `try_from` surfacing a descriptive error, or carries a `// CAST:`
 //!    comment proving losslessness (widening, bounds-checked, or
 //!    explicitly tolerated rounding in latency reports).
 //!
 //! 5. **The hot path does not panic.** In the serve-path files
-//!    (reactor, conn, sys, pool, shard/remote) `panic!` / `unwrap` /
-//!    `expect` require a `// PANIC:` justification — allowed only for
-//!    construction-time setup, mutex poison (a prior panic already
-//!    tearing the process down), and stated invariants.
+//!    (reactor, conn, frame, sys, pool, shard/remote) `panic!` /
+//!    `unwrap` / `expect` require a `// PANIC:` justification — allowed
+//!    only for construction-time setup, mutex poison (a prior panic
+//!    already tearing the process down), and stated invariants.
 //!
 //! 6. **The epoch plane is schedule-checked.** The RCU counter-plane
 //!    protocol behind live updates is exercised by
@@ -69,7 +107,9 @@
 //!    battery runs in `cargo test` and in `tests/audit_interleave.rs`.
 
 pub mod conn;
+pub mod frame;
 pub mod reactor;
 pub mod sys;
 
-pub use reactor::{CompletionSender, LineHandler, Reactor};
+pub use conn::WireMode;
+pub use reactor::{CompletionSender, LineHandler, NetOptions, Reactor};

@@ -1,25 +1,28 @@
-//! The epoll reactor: ONE thread owns accept, per-connection line
-//! framing, request submission, and response write-back.  Lane workers
-//! hand finished responses back through an mpsc channel plus a wake
-//! pipe — zero per-request or per-connection thread spawns, so the
-//! process thread count is fixed at reactor + lane workers + pool no
-//! matter how many connections are in flight.
+//! The epoll reactor: ONE thread owns accept, per-connection framing
+//! (JSON lines and/or binary frames), request submission, and response
+//! write-back.  Lane workers hand finished responses back through an
+//! mpsc channel plus a wake pipe — zero per-request or per-connection
+//! thread spawns, so the process thread count is fixed at reactor +
+//! lane workers + pool no matter how many connections are in flight.
 //!
-//! The reactor itself is line-protocol-agnostic: every framed line is
+//! The reactor itself is protocol-agnostic: every framed input is
 //! handed to a [`LineHandler`] together with a [`CompletionSender`],
-//! and every completion is a pre-serialized response line.  The
-//! inference plane plugs in the `Router` (see the `LineHandler` impl in
-//! `coordinator::router`); the shard plane plugs in
-//! `shard::remote::ShardService`.  Only the oversize-line rejection is
-//! answered in place, because both planes share the `{"id": ...,
-//! "error": ...}` error framing and best-effort id recovery.
+//! and every completion is a pre-serialized response (a line or an
+//! encoded frame).  The inference plane plugs in the `Router` (see the
+//! `LineHandler` impl in `coordinator::router`); the shard plane plugs
+//! in `shard::remote::ShardService`, which also implements the binary
+//! `handle_frame` path.  Only protocol-level rejections — oversize
+//! lines, over-cap frames, corrupt frame headers, and responses that
+//! cannot fit under the write cap — are answered in place.
 
-use super::conn::{Conn, InEvent, MAX_LINE_BYTES};
+use super::conn::{Conn, InEvent, WireMode, MAX_LINE_BYTES};
+use super::frame::{self, Frame, HEADER_BYTES, MAX_FRAME_PAYLOAD_BYTES};
 use super::sys::{
     Epoll, EpollEvent, WakePipe, EPOLLERR, EPOLLHUP, EPOLLIN, EPOLLOUT,
     EPOLLRDHUP,
 };
 use crate::coordinator::protocol::{extract_id, Response};
+use crate::metrics::slo::FrameSlo;
 use std::collections::HashMap;
 use std::net::TcpListener;
 use std::os::unix::io::AsRawFd;
@@ -37,30 +40,77 @@ const FIRST_CONN_TOKEN: u64 = 2;
 /// connection at all).
 const IDLE_WAIT_MS: i32 = 50;
 
-/// A line-protocol service behind the reactor.
-///
-/// Contract: for EVERY call, exactly one line must eventually reach the
-/// provided [`CompletionSender`] — synchronously (parse errors) or
-/// asynchronously from a worker thread.  Implementations guard the
-/// asynchronous path with a drop-armed responder (`batcher::Responder`
-/// for the inference plane, `shard::remote`'s line guard for the shard
-/// plane) so a panicking or torn-down worker still answers.  The
-/// reactor counts one in-flight request per handled line and releases
-/// it when the completion arrives; a violated contract leaks the
-/// connection's in-flight accounting.
-pub trait LineHandler: Send + Sync + 'static {
-    fn handle_line(&self, line: String, sender: CompletionSender);
+/// Reactor-level wire options, threaded from `Server::bind_opts` down
+/// to each accepted [`Conn`].
+#[derive(Clone)]
+pub struct NetOptions {
+    /// Framing for accepted connections.  [`WireMode::Auto`] sniffs
+    /// per connection so one port serves binary and JSON peers.
+    pub wire: WireMode,
+    /// Cap on a single binary frame's declared payload length.
+    pub frame_cap: usize,
+    /// Cap on buffered-but-unsent response bytes per connection; also
+    /// the single-response refusal threshold.  Tests shrink it.
+    pub write_cap: usize,
+    /// Frame/line reject counters, surfaced through service stats.
+    pub slo: Arc<FrameSlo>,
 }
 
-/// One completed request's way home: tags the serialized response line
-/// with the owning connection's token and pokes the reactor awake.
+impl Default for NetOptions {
+    fn default() -> NetOptions {
+        NetOptions {
+            wire: WireMode::Json,
+            frame_cap: MAX_FRAME_PAYLOAD_BYTES,
+            write_cap: super::conn::MAX_WRITE_BUF_BYTES,
+            slo: Arc::new(FrameSlo::new()),
+        }
+    }
+}
+
+/// A service behind the reactor.
+///
+/// Contract: for EVERY `handle_line`/`handle_frame` call, exactly one
+/// completion must eventually reach the provided [`CompletionSender`]
+/// — synchronously (parse errors) or asynchronously from a worker
+/// thread.  Implementations guard the asynchronous path with a
+/// drop-armed responder (`batcher::Responder` for the inference plane,
+/// `shard::remote`'s guard for the shard plane) so a panicking or
+/// torn-down worker still answers.  The reactor counts one in-flight
+/// request per handled input and releases it when the completion
+/// arrives; a violated contract leaks the connection's in-flight
+/// accounting.
+///
+/// `handle_frame` has a default implementation that rejects the frame
+/// with a descriptive error frame — a line-only service (the inference
+/// `Router`) satisfies the contract without knowing frames exist.
+pub trait LineHandler: Send + Sync + 'static {
+    fn handle_line(&self, line: String, sender: CompletionSender);
+
+    fn handle_frame(&self, frame: Frame, sender: CompletionSender) {
+        sender.send_frame(frame::error_frame(
+            frame.id,
+            "this service does not speak the binary frame protocol",
+        ));
+    }
+}
+
+/// A completed response on its way back to the reactor: already
+/// serialized on the worker thread (a line without its newline, or a
+/// fully encoded frame).
+enum Outbound {
+    Line(String),
+    Frame(Vec<u8>),
+}
+
+/// One completed request's way home: tags the serialized response with
+/// the owning connection's token and pokes the reactor awake.
 /// Consumed exactly once (see [`LineHandler`]); replaces the seed's one
 /// forwarder thread per in-flight request.  Serialization happens on
 /// the sending (worker) thread, keeping the reactor thread out of the
-/// JSON hot path.
+/// JSON/frame encode path.
 pub struct CompletionSender {
     token: u64,
-    tx: Sender<(u64, String)>,
+    tx: Sender<(u64, Outbound)>,
     wake: Arc<WakePipe>,
 }
 
@@ -72,7 +122,14 @@ impl CompletionSender {
 
     /// Deliver an already-serialized response line (no newline).
     pub fn send_line(self, line: String) {
-        let _ = self.tx.send((self.token, line));
+        let _ = self.tx.send((self.token, Outbound::Line(line)));
+        self.wake.wake();
+    }
+
+    /// Deliver an already-encoded binary frame (see
+    /// [`super::frame::encode`]).
+    pub fn send_frame(self, bytes: Vec<u8>) {
+        let _ = self.tx.send((self.token, Outbound::Frame(bytes)));
         self.wake.wake();
     }
 }
@@ -81,13 +138,14 @@ pub struct Reactor {
     epoll: Epoll,
     listener: TcpListener,
     wake: Arc<WakePipe>,
-    comp_tx: Sender<(u64, String)>,
-    comp_rx: Receiver<(u64, String)>,
+    comp_tx: Sender<(u64, Outbound)>,
+    comp_rx: Receiver<(u64, Outbound)>,
     conns: HashMap<u64, Conn>,
     next_token: u64,
     handler: Arc<dyn LineHandler>,
     stop: Arc<AtomicBool>,
     accepted: Arc<AtomicU64>,
+    opts: NetOptions,
     scratch: Vec<u8>,
 }
 
@@ -97,6 +155,7 @@ impl Reactor {
         listener: &TcpListener,
         stop: Arc<AtomicBool>,
         accepted: Arc<AtomicU64>,
+        opts: NetOptions,
     ) -> std::io::Result<Reactor> {
         let listener = listener.try_clone()?;
         listener.set_nonblocking(true)?;
@@ -116,6 +175,7 @@ impl Reactor {
             handler,
             stop,
             accepted,
+            opts,
             scratch: vec![0u8; 64 * 1024],
         })
     }
@@ -164,7 +224,12 @@ impl Reactor {
                     {
                         continue;
                     }
-                    let mut conn = Conn::new(stream);
+                    let mut conn = Conn::new_wire(
+                        stream,
+                        self.opts.wire,
+                        self.opts.frame_cap,
+                    );
+                    conn.set_write_cap(self.opts.write_cap);
                     conn.interest = interest;
                     self.conns.insert(token, conn);
                     // ORDERING: Relaxed — monotonic stat counter.
@@ -192,17 +257,67 @@ impl Reactor {
         }
     }
 
-    /// Route every completed response line back to its connection.  All
+    /// Route every completed response back to its connection.  All
     /// pending completions are queued first and each touched
     /// connection is settled once, so a pipelined burst coalesces into
     /// one flush per connection instead of one write(2) per response.
+    ///
+    /// A single response that cannot fit under the write cap AT ALL is
+    /// refused here with a descriptive per-request error in the same
+    /// wire format — queueing it would trip `over_write_cap` and tear
+    /// down the whole connection for one outsized answer (the old
+    /// behavior, and a bug: the drop-armed responder already
+    /// guarantees exactly-one-response, so refusal is safe).
     fn drain_completions(&mut self) {
         self.wake.drain();
         let mut touched: Vec<u64> = Vec::new();
-        while let Ok((token, line)) = self.comp_rx.try_recv() {
+        while let Ok((token, outbound)) = self.comp_rx.try_recv() {
             if let Some(conn) = self.conns.get_mut(&token) {
                 conn.in_flight -= 1;
-                conn.queue_line(&line);
+                match outbound {
+                    Outbound::Line(line) => {
+                        if conn.fits_write(line.len() + 1) {
+                            conn.queue_line(&line);
+                        } else {
+                            self.opts.slo.inc_write_refused();
+                            conn.queue_line(
+                                &Response::err(
+                                    extract_id(&line),
+                                    format!(
+                                        "response of {} bytes exceeds \
+                                         the {} byte write cap",
+                                        line.len() + 1,
+                                        conn.write_cap()
+                                    ),
+                                )
+                                .to_line(),
+                            );
+                        }
+                    }
+                    Outbound::Frame(bytes) => {
+                        if conn.fits_write(bytes.len()) {
+                            conn.queue_bytes(&bytes);
+                        } else {
+                            self.opts.slo.inc_write_refused();
+                            let id = if bytes.len() >= HEADER_BYTES {
+                                frame::parse_header(&bytes[..HEADER_BYTES])
+                                    .map(|h| h.id)
+                                    .unwrap_or(0)
+                            } else {
+                                0
+                            };
+                            conn.queue_bytes(&frame::error_frame(
+                                id,
+                                &format!(
+                                    "response frame of {} bytes exceeds \
+                                     the {} byte write cap",
+                                    bytes.len(),
+                                    conn.write_cap()
+                                ),
+                            ));
+                        }
+                    }
+                }
                 if !touched.contains(&token) {
                     touched.push(token);
                 }
@@ -238,11 +353,11 @@ impl Reactor {
         self.settle(token);
     }
 
-    /// One framed input line (or an oversize rejection) from a
-    /// connection.  Every non-blank line goes to the handler, which
-    /// owes the connection exactly one completion; only the oversize
-    /// rejection is answered in place (the line never existed as far as
-    /// the handler is concerned).
+    /// One framed input (or a protocol-level rejection) from a
+    /// connection.  Every non-blank line and every complete frame goes
+    /// to the handler, which owes the connection exactly one
+    /// completion; rejections are answered in place (the request never
+    /// existed as far as the handler is concerned).
     fn handle_in_event(&mut self, token: u64, ev: InEvent) {
         match ev {
             InEvent::Line(line) => {
@@ -263,11 +378,27 @@ impl Reactor {
                     },
                 );
             }
-            InEvent::Oversize(prefix) => {
+            InEvent::Frame(f) => {
+                if let Some(conn) = self.conns.get_mut(&token) {
+                    conn.in_flight += 1;
+                } else {
+                    return;
+                }
+                self.handler.handle_frame(
+                    f,
+                    CompletionSender {
+                        token,
+                        tx: self.comp_tx.clone(),
+                        wake: self.wake.clone(),
+                    },
+                );
+            }
+            InEvent::Oversize { id } => {
+                self.opts.slo.inc_oversize_line();
                 if let Some(conn) = self.conns.get_mut(&token) {
                     conn.queue_line(
                         &Response::err(
-                            extract_id(&prefix),
+                            id,
                             format!(
                                 "bad request: line exceeds the \
                                  {MAX_LINE_BYTES} byte cap"
@@ -275,6 +406,33 @@ impl Reactor {
                         )
                         .to_line(),
                     );
+                }
+            }
+            InEvent::OversizeFrame { verb, id, declared } => {
+                self.opts.slo.inc_oversize_frame();
+                let cap = self.opts.frame_cap;
+                if let Some(conn) = self.conns.get_mut(&token) {
+                    conn.queue_bytes(&frame::error_frame(
+                        id,
+                        &format!(
+                            "frame payload of {declared} bytes (verb \
+                             {verb}) exceeds the {cap} byte frame cap"
+                        ),
+                    ));
+                }
+            }
+            InEvent::FrameError(msg) => {
+                self.opts.slo.inc_bad_header();
+                if let Some(conn) = self.conns.get_mut(&token) {
+                    // Answer once, then close: a corrupt header cannot
+                    // be resynchronized.  Marking the read side closed
+                    // drops EPOLLIN interest; the connection is reaped
+                    // as soon as the answer flushes.
+                    conn.queue_bytes(&frame::error_frame(
+                        0,
+                        &format!("bad frame: {msg}"),
+                    ));
+                    conn.read_closed = true;
                 }
             }
         }

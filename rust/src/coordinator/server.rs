@@ -61,16 +61,25 @@ pub struct Server {
     stop: Arc<AtomicBool>,
     pub connections: Arc<AtomicU64>,
     mode: ServeMode,
+    /// Wire options handed to the reactor (framing mode, frame cap,
+    /// write cap, reject counters).  Unused by the non-Linux fallback,
+    /// which is JSON-lines only.
+    #[cfg(target_os = "linux")]
+    opts: super::net::NetOptions,
 }
 
 impl Server {
     /// Bind the inference plane to an address ("127.0.0.1:0" for an
     /// ephemeral port).  The mode is decided by the target OS (see
-    /// [`ServeMode`]).
+    /// [`ServeMode`]).  The inference wire stays JSON lines.
     pub fn bind(router: Arc<Router>, addr: &str) -> anyhow::Result<Self> {
         #[cfg(target_os = "linux")]
         {
-            Self::bind_handler(router, addr)
+            Self::bind_handler_opts(
+                router,
+                addr,
+                super::net::NetOptions::default(),
+            )
         }
         #[cfg(not(target_os = "linux"))]
         {
@@ -85,14 +94,26 @@ impl Server {
         }
     }
 
-    /// Bind an arbitrary line-protocol service behind the reactor
-    /// (Linux only — the fallback loop is router-specific).  This is
-    /// how the shard plane serves: same accept path, framing, line cap,
-    /// and completion machinery as the inference plane.
+    /// Bind an arbitrary service behind the reactor with default wire
+    /// options (Linux only — the fallback loop is router-specific).
     #[cfg(target_os = "linux")]
     pub fn bind_handler(
         handler: Arc<dyn super::net::LineHandler>,
         addr: &str,
+    ) -> anyhow::Result<Self> {
+        Self::bind_handler_opts(handler, addr, super::net::NetOptions::default())
+    }
+
+    /// Bind an arbitrary service behind the reactor with explicit wire
+    /// options.  This is how the shard plane serves: same accept path,
+    /// framing, caps, and completion machinery as the inference plane,
+    /// but with `WireMode::Auto` so one port answers binary frames and
+    /// JSON lines alike.
+    #[cfg(target_os = "linux")]
+    pub fn bind_handler_opts(
+        handler: Arc<dyn super::net::LineHandler>,
+        addr: &str,
+        opts: super::net::NetOptions,
     ) -> anyhow::Result<Self> {
         let listener = TcpListener::bind(addr)?;
         Ok(Self {
@@ -101,6 +122,7 @@ impl Server {
             stop: Arc::new(AtomicBool::new(false)),
             connections: Arc::new(AtomicU64::new(0)),
             mode: ServeMode::Reactor,
+            opts,
         })
     }
 
@@ -129,6 +151,7 @@ impl Server {
                 &self.listener,
                 self.stop.clone(),
                 self.connections.clone(),
+                self.opts.clone(),
             )
             .context("reactor init failed")?;
             reactor.run();

@@ -6,9 +6,11 @@
 //! repsketch exp figure2 [--csv FILE]       regenerate paper Figure 2
 //! repsketch exp theory [--dataset NAME]    §3.2.1 error-decay check
 //! repsketch serve [--addr A] [--pjrt] [--fused NAME=FILE,...]
+//!                 [--quant NAME=FILE,...] [--srp NAME=FILE,...]
 //!                 [--sharded NAME=FILE:N|NAME=PREFIX,...]
 //!                 [--sharded-remote NAME=a0|a1,b0|b1,...]
 //!                 [--remote-timeout-ms N] [--hedge-ms N]
+//!                 [--wire binary|json]
 //!                                          TCP JSON-line inference server
 //!                                          (epoll reactor; thread-per-
 //!                                          connection only as the
@@ -22,6 +24,7 @@
 //! repsketch shard-sketch --input FILE.rssk|FILE.rsfm|FILE.rsqk|FILE.rsqm
 //!                        --shards N --out PREFIX
 //! repsketch shard-serve --rsfs FILE [--addr A]
+//!                       [--wire auto|json|binary] [--frame-cap-bytes N]
 //!                                          serve ONE shard's kernel over
 //!                                          the wire (Linux)
 //! ```
@@ -52,13 +55,25 @@
 //! `sh`-backend lane scatter/gathers every batch across the shard
 //! kernels on the worker pool.
 //!
+//! `build-sketch --family srp` writes an RSRP sketch over the angular
+//! (sign-random-projection) hash family; `serve --srp model=FILE`
+//! registers it on the same `rs` wire kind an L2 sketch uses — the
+//! hash family is a build-time choice, not a protocol one.
+//!
 //! The shard plane also runs OVER THE WIRE: `shard-serve --rsfs FILE`
 //! hosts one shard's kernel behind the epoll reactor, and `serve
 //! --sharded-remote model=a0|a1,b0|b1,...` (commas separate shards in
 //! shard-index order, `|` separates replicas of one shard) registers
 //! an `sh` lane whose scatter/gather crosses TCP — every replica
 //! handshake-validated like an on-disk set, bit-for-bit identical to
-//! the local lane.  With replicas, a straggling shard is hedged to a
+//! the local lane.  The coordinator→shard hop speaks the length-
+//! prefixed binary frame protocol by default (raw little-endian f32
+//! payloads — same bits as JSON, none of the float-formatting cost or
+//! the line-cap batch ceiling); `serve --wire json` keeps it on JSON
+//! lines for mixed-version fleets, and `shard-serve --wire` pins the
+//! serving side (default `auto`: each connection is sniffed on its
+//! first byte).  The human-facing inference protocol is JSON lines
+//! always — `--wire` only governs the shard hop.  With replicas, a straggling shard is hedged to a
 //! second replica after an adaptive deadline (`--hedge-ms` seeds it
 //! before latency samples exist), a replica death mid-batch fails
 //! over within the batch, and dead replicas are re-probed with capped
@@ -155,9 +170,10 @@ fn print_usage() {
          repsketch exp ablation [--dataset adult]\n  \
          repsketch serve [--addr 127.0.0.1:7878] [--pjrt] [--datasets a,b] \
          [--fused NAME=FILE,...] [--quant NAME=FILE,...] \
+         [--srp NAME=FILE,...] \
          [--sharded NAME=FILE:N|NAME=PREFIX,...] \
          [--sharded-remote NAME=a0|a1,b0|b1,...] [--remote-timeout-ms N] \
-         [--hedge-ms N]\n  \
+         [--hedge-ms N] [--wire binary|json]\n  \
          repsketch eval --dataset NAME [--backend rs|nn|kernel]\n  \
          repsketch build-sketch --dataset NAME [--rows L] [--cols R] \
          [--family l2|srp] --out FILE\n  \
@@ -165,7 +181,8 @@ fn print_usage() {
          repsketch quant-sketch --input FILE --bits 8|16 \
          [--lanes scalar|8] --out FILE\n  \
          repsketch shard-sketch --input FILE --shards N --out PREFIX\n  \
-         repsketch shard-serve --rsfs FILE [--addr 127.0.0.1:7979]"
+         repsketch shard-serve --rsfs FILE [--addr 127.0.0.1:7979] \
+         [--wire auto|json|binary] [--frame-cap-bytes N]"
     );
 }
 
@@ -608,7 +625,31 @@ fn cmd_shard_serve(args: &[String]) -> Result<()> {
         let service = Arc::new(
             repsketch::shard::ShardService::from_loaded(loaded),
         );
-        let server = Server::bind_handler(service, &addr)?;
+        // The shard port answers BOTH wires by default (first-byte
+        // sniff per connection): binary frames from current
+        // coordinators, JSON lines from older ones and debug tooling.
+        // `--wire json|binary` pins the port to one framing for
+        // mixed-version fleets that must not auto-negotiate.
+        let mut opts = service.net_options();
+        use repsketch::coordinator::net::WireMode;
+        match flags.kv.get("wire").map(|s| s.as_str()) {
+            None | Some("auto") => {}
+            Some("json") => opts.wire = WireMode::Json,
+            Some("binary") => opts.wire = WireMode::Binary,
+            Some(other) => bail!(
+                "unknown --wire {other:?} (use auto, json, or binary)"
+            ),
+        }
+        if let Some(cap) = flags.kv.get("frame-cap-bytes") {
+            opts.frame_cap = cap
+                .parse()
+                .context("--frame-cap-bytes must be an integer")?;
+            anyhow::ensure!(
+                opts.frame_cap > 0,
+                "--frame-cap-bytes must be positive"
+            );
+        }
+        let server = Server::bind_handler_opts(service, &addr, opts)?;
         repsketch::coordinator::net::sys::install_stop_signals(
             &server.stop_handle(),
         );
@@ -652,10 +693,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let with_pjrt = flags.kv.contains_key("pjrt");
     let router = Router::new();
     let cfg = RouterConfig::default();
-    // With `--fused`/`--sharded`/`--sharded-remote` and no explicit
-    // `--datasets`, a missing artifacts tree only skips the dataset
-    // lanes (a fused-only or sharded-only server is valid).
+    // With `--fused`/`--quant`/`--srp`/`--sharded`/`--sharded-remote`
+    // and no explicit `--datasets`, a missing artifacts tree only skips
+    // the dataset lanes (an artifact-only server is valid).
     let datasets_optional = (flags.kv.contains_key("fused")
+        || flags.kv.contains_key("quant")
+        || flags.kv.contains_key("srp")
         || flags.kv.contains_key("sharded")
         || flags.kv.contains_key("sharded-remote"))
         && !flags.kv.contains_key("datasets");
@@ -745,6 +788,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     // codes; the contract is the measured score tolerance printed at
     // registration (and by `quant-sketch`).  Quantized lanes are
     // read-only: the update verb is refused, not silently dropped.
+    let mut quant_rs_models: Vec<String> = Vec::new();
     if let Some(spec) = flags.kv.get("quant") {
         for entry in spec.split(',') {
             let (model, path) = entry
@@ -764,6 +808,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
                 );
                 BackendKind::Multiclass
             } else {
+                quant_rs_models.push(model.clone());
                 BackendKind::Sketch
             };
             println!(
@@ -780,6 +825,38 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             );
             router.add_lane(&model, kind, move || {
                 Ok(Box::new(backend::QuantEngine::new(qs)) as _)
+            }, &cfg);
+        }
+    }
+    // SRP lanes: `--srp model=path.rsrp[,...]` serves a `build-sketch
+    // --family srp` artifact on the `rs` wire kind — the lane clients
+    // address exactly like an L2 sketch (the hash family is not a
+    // protocol concern).  This closes the build/serve gap: before this
+    // flag, `build-sketch --family srp` wrote RSRP files `serve` had
+    // no way to register.  Scalar query path, read-only (updates
+    // refused, not dropped).
+    if let Some(spec) = flags.kv.get("srp") {
+        for entry in spec.split(',') {
+            let (model, path) = entry
+                .split_once('=')
+                .with_context(|| format!("bad --srp entry {entry:?} \
+                                          (want NAME=FILE)"))?;
+            let model = model.trim().to_string();
+            // Same wire name as a quantized RSSK lane: refuse the
+            // silent last-wins collision on the rs lane.
+            anyhow::ensure!(
+                !quant_rs_models.contains(&model),
+                "model {model} is registered by both --quant and --srp \
+                 — the rs lane can only have one engine"
+            );
+            let sk = SrpSketch::load(path.trim())
+                .with_context(|| format!("load srp sketch {path}"))?;
+            println!(
+                "registered {model} (srp, {}x{}, dim={})",
+                sk.rows, sk.cols, sk.d
+            );
+            router.add_lane(&model, BackendKind::Sketch, move || {
+                Ok(Box::new(backend::SrpEngine::new(sk)) as _)
             }, &cfg);
         }
     }
@@ -848,6 +925,22 @@ fn cmd_serve(args: &[String]) -> Result<()> {
                         .context("--hedge-ms must be an integer")?,
                 );
             }
+            // `--wire json` keeps the coordinator→shard hop on JSON
+            // lines — the mixed-version fallback while a fleet still
+            // runs pre-frame shard servers (which answer both wires
+            // by default, so `binary` — the default — is safe once
+            // every shard is current).
+            opts.wire = match flags.kv.get("wire").map(|s| s.as_str()) {
+                None | Some("binary") => {
+                    repsketch::coordinator::net::WireMode::Binary
+                }
+                Some("json") => {
+                    repsketch::coordinator::net::WireMode::Json
+                }
+                Some(other) => bail!(
+                    "unknown --wire {other:?} (use binary or json)"
+                ),
+            };
             for (model, groups) in parse_remote_spec(spec)? {
                 // Both flags register the `sh` lane for their model;
                 // refuse the silent last-wins collision.

@@ -105,6 +105,68 @@ impl LaneSlo {
     }
 }
 
+/// Wire-level reject counters for one reactor listener: how often the
+/// framing layer itself refused input or output before any service
+/// logic ran.  Shared `Arc` between the reactor (writer, via
+/// `NetOptions`) and the owning service's `stats` verb (reader).
+///
+/// * `oversize_lines` — JSON lines over the line cap, discarded while
+///   streaming (answered with an id-correlated error).
+/// * `oversize_frames` — binary frames whose declared payload length
+///   exceeded the frame cap (payload discarded byte-exactly, answered
+///   with an error frame; connection survives).
+/// * `bad_headers` — corrupt frame headers (bad magic/version/reserved
+///   bytes); answered once, then the connection is closed because the
+///   stream cannot be resynchronized.
+/// * `write_refused` — single responses too large to ever fit under
+///   the write cap, refused with a per-request error instead of
+///   tearing the connection down.
+#[derive(Debug, Default)]
+pub struct FrameSlo {
+    pub oversize_lines: AtomicU64,
+    pub oversize_frames: AtomicU64,
+    pub bad_headers: AtomicU64,
+    pub write_refused: AtomicU64,
+}
+
+impl FrameSlo {
+    pub fn new() -> FrameSlo {
+        FrameSlo::default()
+    }
+
+    pub fn inc_oversize_line(&self) {
+        // ORDERING: Relaxed — independent monotonic stat counter.
+        self.oversize_lines.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn inc_oversize_frame(&self) {
+        // ORDERING: Relaxed — independent monotonic stat counter.
+        self.oversize_frames.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn inc_bad_header(&self) {
+        // ORDERING: Relaxed — independent monotonic stat counter.
+        self.bad_headers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn inc_write_refused(&self) {
+        // ORDERING: Relaxed — independent monotonic stat counter.
+        self.write_refused.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn to_json(&self) -> Json {
+        // ORDERING: Relaxed — stats-verb snapshot of monotonic
+        // counters; exactness across counters is not promised.
+        let c = |a: &AtomicU64| Json::from_u64(a.load(Ordering::Relaxed));
+        json::obj(vec![
+            ("oversize_lines", c(&self.oversize_lines)),
+            ("oversize_frames", c(&self.oversize_frames)),
+            ("bad_headers", c(&self.bad_headers)),
+            ("write_refused", c(&self.write_refused)),
+        ])
+    }
+}
+
 /// Counter-plane mutation accounting for one lane or shard: how many
 /// `update`s were applied, how many epoch publishes made them visible,
 /// and how stale the oldest unpublished delta currently is.  The
@@ -438,5 +500,25 @@ mod tests {
         assert_eq!(r.ewma_us(), 0.0);
         r.set_ewma_us(42.25);
         assert_eq!(r.ewma_us(), 42.25);
+    }
+
+    #[test]
+    fn frame_slo_counts_and_serializes() {
+        let f = FrameSlo::new();
+        f.inc_oversize_line();
+        f.inc_oversize_frame();
+        f.inc_oversize_frame();
+        f.inc_bad_header();
+        f.inc_write_refused();
+        let j = f.to_json();
+        assert_eq!(j.get("oversize_lines").unwrap().as_u64(), Some(1));
+        assert_eq!(j.get("oversize_frames").unwrap().as_u64(), Some(2));
+        assert_eq!(j.get("bad_headers").unwrap().as_u64(), Some(1));
+        assert_eq!(j.get("write_refused").unwrap().as_u64(), Some(1));
+        let reparsed = json::parse(&j.to_string()).unwrap();
+        assert_eq!(
+            reparsed.get("oversize_frames").unwrap().as_u64(),
+            Some(2)
+        );
     }
 }

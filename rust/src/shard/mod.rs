@@ -65,15 +65,81 @@
 //! kernels across the persistent `WorkerPool` and merges on the lane
 //! thread.  The remote lane keeps the SAME exact-merge contract: each
 //! shard process computes complete group means for its whole groups,
-//! only those means cross the wire (f32 values round-trip the JSON
-//! framing exactly), and the untouched [`merge`] reconstructs the
+//! only those means cross the wire (raw little-endian f32 bits on the
+//! binary framing; shortest-round-trip decimals on the JSON fallback —
+//! exact either way), and the untouched [`merge`] reconstructs the
 //! estimate — so local `sh`, remote, and the unsharded scalar path are
 //! bit-for-bit identical.  The bit-identity (including ragged L,
 //! shards = 1, and the class-interleaved fused sketch) is
 //! property-tested below and, for the remote lane, in
-//! `tests/remote_shard.rs` alongside the fault-injection harness
-//! (kill / stall / restart — every accepted request gets exactly one
-//! response, errors name the dead shard, the lane recovers).
+//! `tests/remote_shard.rs` and `tests/wire_frame.rs` alongside the
+//! fault-injection harness (kill / stall / restart — every accepted
+//! request gets exactly one response, errors name the dead shard, the
+//! lane recovers).
+//!
+//! # Shard-plane wire format
+//!
+//! The shard plane speaks two framings over the same TCP connection
+//! model (persistent, pipelined, FIFO per connection); the INFERENCE
+//! protocol (`serve`, client-facing) remains JSON lines and is not
+//! affected by any of this.
+//!
+//! **Binary frames (default).** Every message is a 20-byte header
+//! followed by `len` raw payload bytes:
+//!
+//! | offset | size | field    | contents                               |
+//! |--------|------|----------|----------------------------------------|
+//! | 0      | 4    | magic    | `RSBF` (`net::frame::FRAME_MAGIC`)     |
+//! | 4      | 1    | version  | 1 (`net::frame::FRAME_VERSION`)        |
+//! | 5      | 1    | verb     | see below                              |
+//! | 6      | 2    | reserved | must be zero                           |
+//! | 8      | 8    | id       | request id, u64 little-endian          |
+//! | 16     | 4    | len      | payload byte length, u32 little-endian |
+//!
+//! Verbs and payload schemas (all integers/floats little-endian):
+//!
+//! * `error = 0` — UTF-8 error text; any request id may be answered
+//!   with this instead of its success verb.
+//! * `hello = 1` — request: empty.  Response: the handshake JSON text
+//!   (same schema as the JSON-wire hello line) carried as the frame
+//!   payload, so one validator serves both wires.
+//! * `means = 2` — request: `u32 B` then `p × B` raw f32s (the
+//!   projected batch, row-major).  Response: `u32 g`, `f32 shard_us`,
+//!   then `g × B` raw f32 group means.  `B` is capped per request
+//!   (`MAX_BATCH`), independent of the frame cap.
+//! * `update = 3` — request: `u32 class`, `u32 publish` (0 or 1),
+//!   `f32 alpha`, then the point's raw f32s.  Response (ack, 28
+//!   bytes): `u64 epoch`, `u64 seq` (applied-update count), `u64
+//!   pending`, `f32 us`.
+//! * `stats = 4` — request: empty.  Response: the stats JSON text as
+//!   the frame payload.
+//!
+//! Payloads are f32 BITS, not decimal text: what the shard computed is
+//! what the coordinator merges, so remote == local bit-identity holds
+//! by construction rather than by round-trip property.  A header that
+//! fails validation (magic/version/reserved) is answered once with an
+//! `error` frame and the connection is closed — after garbage the
+//! stream position is unrecoverable.  A header whose `len` exceeds the
+//! frame cap (`net::frame::MAX_FRAME_PAYLOAD_BYTES`, 64 MB
+//! default, `--frame-cap-bytes` to tune) is refused per-REQUEST: the
+//! declared payload is drained and discarded byte-exactly, an `error`
+//! frame names the verb and both numbers, and the connection survives.
+//!
+//! **JSON lines (fallback).** The pre-frame wire: one JSON object per
+//! `\n`-terminated line, capped at `MAX_LINE_BYTES` (256 KB) — which
+//! caps the projected batch a `means` request can carry (p × B
+//! shortest-f32 decimals must fit one line; the client refuses
+//! over-ceiling batches with actionable numbers).  Binary frames lift
+//! that ceiling by ~256× for the same cap ratio.
+//!
+//! **Wire selection.** The shard SERVER auto-sniffs per connection
+//! (first byte `R` ⇒ frames, else JSON lines) — `repsketch
+//! shard-serve --wire auto|json|binary` pins it for ops.  The
+//! coordinator CLIENT defaults to binary ([`remote::RemoteOptions`]);
+//! `serve --wire json` keeps a mixed fleet serving during a staged
+//! rollout.  Hostile-input behavior on both wires (oversize, corrupt
+//! headers, truncated payloads, wrong verbs) is locked by
+//! `tests/wire_frame.rs`.
 //!
 //! # Live updates on the shard plane
 //!

@@ -4,9 +4,22 @@
 //!
 //! Split of responsibilities:
 //!
-//! * **Messages** — JSON lines, same framing discipline as the
-//!   inference plane (one message per line, hard line cap, `{"id": ...,
-//!   "error": ...}` error shape shared with `protocol::Response`):
+//! * **Two wire framings, one request vocabulary.**  The shard plane
+//!   speaks a length-prefixed binary frame protocol by default
+//!   (`coordinator::net::frame` header + raw little-endian f32
+//!   payloads — the exact bits the kernels hold, no decimal
+//!   round-trip), and keeps the JSON-line wire below as the
+//!   mixed-version fallback (`--wire json`).  The server listens with
+//!   [`WireMode::Auto`], sniffing each connection's first byte, so one
+//!   port serves both; both framings decode into the same
+//!   [`ShardRequest`] and dispatch through the same kernel path.  The
+//!   binary payload schemas live at the `VERB_*` constants; the full
+//!   wire-format spec is in `shard`'s module docs.
+//!
+//! * **Messages (JSON wire)** — JSON lines, same framing discipline as
+//!   the inference plane (one message per line, hard line cap,
+//!   `{"id": ..., "error": ...}` error shape shared with
+//!   `protocol::Response`):
 //!   - `{"id": N, "shard": "hello"}` →
 //!     `{"id": N, "hello": {head + span + index}}` — the handshake.  A
 //!     shard set over the wire is validated exactly like an RSFS file
@@ -74,13 +87,16 @@ use super::serde::heads_identical;
 use super::{LoadedShard, ShardHead, ShardPlan, ShardScratch, ShardSpan,
             ShardedSketch, SketchShard};
 use crate::coordinator::net::conn::{Conn, InEvent, MAX_LINE_BYTES};
+use crate::coordinator::net::frame::{self, Frame, MAX_FRAME_PAYLOAD_BYTES};
 use crate::coordinator::net::sys::{
     Epoll, EpollEvent, EPOLLERR, EPOLLHUP, EPOLLIN, EPOLLOUT, EPOLLRDHUP,
 };
-use crate::coordinator::net::{CompletionSender, LineHandler};
+use crate::coordinator::net::{
+    CompletionSender, LineHandler, NetOptions, WireMode,
+};
 use crate::coordinator::protocol::{extract_id, Response};
-use crate::metrics::slo::{histogram_json, LaneSlo, RemoteShardStats,
-                          UpdateSlo};
+use crate::metrics::slo::{histogram_json, FrameSlo, LaneSlo,
+                          RemoteShardStats, UpdateSlo};
 use crate::sketch::epoch::{CounterPlane, MAX_PENDING};
 use crate::util::json::{self, Json};
 use crate::util::rng::SplitMix64;
@@ -463,21 +479,330 @@ pub fn means_response_line(
 }
 
 // ---------------------------------------------------------------------------
+// Wire messages: binary frame payload schemas
+// ---------------------------------------------------------------------------
+//
+// Shard-plane frame verbs (the header's `verb` byte; verb 0 is the
+// protocol-wide error reply, `frame::VERB_ERROR`, whose payload is the
+// UTF-8 message).  All integers and floats little-endian:
+//
+// | verb     | request payload                  | response payload                |
+// |----------|----------------------------------|---------------------------------|
+// | 1 hello  | empty                            | the hello JSON document (same   |
+// |          |                                  | bytes as the JSON wire's reply) |
+// | 2 means  | u32 B, then p·B raw f32 (proj)   | u32 G_s, f32 us, then B·G_s·C   |
+// |          |                                  | raw f32 (means)                 |
+// | 3 update | u32 class, u32 publish (0 or 1), | u64 epoch, u64 seq, u64 pending,|
+// |          | f32 alpha, then p raw f32 (x)    | f32 us (exactly 28 bytes)       |
+// | 4 stats  | empty                            | the stats JSON document         |
+//
+// The f32 payloads are the SAME bits the in-process kernels hold, so
+// the bit-identity contract (remote == local == unsharded scalar) holds
+// by construction — no decimal round-trip at all.  Non-finite f32 bit
+// patterns ARE representable on this wire, unlike JSON; every parser
+// below rejects them anyway, so both wires enforce the same
+// "finite or fail loudly" contract.  The hello and stats replies stay
+// self-describing JSON (as frame payloads) because the handshake is the
+// version-negotiation point: both wires funnel through `parse_hello`.
+
+/// Binary frame verb: handshake (empty request payload).
+pub const VERB_HELLO: u8 = 1;
+/// Binary frame verb: group means for one projected batch.
+pub const VERB_MEANS: u8 = 2;
+/// Binary frame verb: one live counter-plane update.
+pub const VERB_UPDATE: u8 = 3;
+/// Binary frame verb: kernel-side serve counters (empty request
+/// payload).
+pub const VERB_STATS: u8 = 4;
+
+/// Append raw little-endian f32 bits.
+fn put_f32s(out: &mut Vec<u8>, v: &[f32]) {
+    for &x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn get_u32(b: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes([b[at], b[at + 1], b[at + 2], b[at + 3]])
+}
+
+fn get_u64(b: &[u8], at: usize) -> u64 {
+    u64::from_le_bytes([
+        b[at],
+        b[at + 1],
+        b[at + 2],
+        b[at + 3],
+        b[at + 4],
+        b[at + 5],
+        b[at + 6],
+        b[at + 7],
+    ])
+}
+
+fn get_f32(b: &[u8], at: usize) -> f32 {
+    f32::from_le_bytes([b[at], b[at + 1], b[at + 2], b[at + 3]])
+}
+
+/// Decode a raw little-endian f32 run, rejecting non-finite values —
+/// the binary twin of [`parse_f32_arr`]'s finiteness contract.
+fn parse_f32_bytes(bytes: &[u8], what: &str) -> Result<Vec<f32>, String> {
+    if bytes.len() % 4 != 0 {
+        return Err(format!(
+            "{what} payload is {} bytes — not a whole number of f32s",
+            bytes.len()
+        ));
+    }
+    let mut out = Vec::with_capacity(bytes.len() / 4);
+    for (i, c) in bytes.chunks_exact(4).enumerate() {
+        let v = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        if !v.is_finite() {
+            return Err(format!("{what}[{i}] is not a finite f32"));
+        }
+        out.push(v);
+    }
+    Ok(out)
+}
+
+/// Encode a binary means request (full frame, header included).  `Err`
+/// when the batch or the payload cannot fit its wire field or the
+/// frame cap — checked BEFORE any bytes are built.
+pub fn means_request_frame(
+    id: u64,
+    batch: usize,
+    proj_t: &[f32],
+) -> Result<Vec<u8>, String> {
+    let b = u32::try_from(batch)
+        .map_err(|_| format!("batch {batch} exceeds the u32 wire field"))?;
+    let need = proj_t
+        .len()
+        .checked_mul(4)
+        .and_then(|n| n.checked_add(4))
+        .ok_or_else(|| "proj byte length overflows usize".to_string())?;
+    if need > MAX_FRAME_PAYLOAD_BYTES {
+        return Err(format!(
+            "projected batch (p × B floats) serializes to {need} payload \
+             bytes, over the {MAX_FRAME_PAYLOAD_BYTES}-byte frame cap — \
+             lower the lane's max_batch"
+        ));
+    }
+    let mut payload = Vec::with_capacity(need);
+    payload.extend_from_slice(&b.to_le_bytes());
+    put_f32s(&mut payload, proj_t);
+    Ok(frame::encode(VERB_MEANS, id, &payload))
+}
+
+/// Decode a means request payload → `(batch, proj_t)`.
+pub fn parse_means_request_frame(
+    payload: &[u8],
+) -> Result<(usize, Vec<f32>), String> {
+    if payload.len() < 4 {
+        return Err(
+            "means request payload is shorter than its 4-byte batch field"
+                .to_string(),
+        );
+    }
+    let batch = usize::try_from(get_u32(payload, 0))
+        .map_err(|_| "batch exceeds this platform's usize".to_string())?;
+    if batch == 0 {
+        return Err("b must be at least 1".to_string());
+    }
+    let proj_t = parse_f32_bytes(&payload[4..], "proj")?;
+    Ok((batch, proj_t))
+}
+
+/// Encode a binary means response (full frame, header included).
+pub fn means_response_frame(
+    id: u64,
+    local_groups: usize,
+    means: &[f32],
+    us: f64,
+) -> Vec<u8> {
+    // PANIC: local_groups <= groups <= MAX_DIM = 2^30 (enforced at
+    // load and by parse_hello), which always fits u32.
+    let g = u32::try_from(local_groups).expect("local_groups fits u32");
+    let mut payload = Vec::with_capacity(8 + means.len() * 4);
+    payload.extend_from_slice(&g.to_le_bytes());
+    // CAST: f64 -> f32 kernel-latency report; rounding is tolerated.
+    put_f32s(&mut payload, &[us as f32]);
+    put_f32s(&mut payload, means);
+    frame::encode(VERB_MEANS, id, &payload)
+}
+
+/// Decode a means response payload → `(local_groups, us, means)`.
+pub fn parse_means_response_frame(
+    payload: &[u8],
+) -> Result<(u64, f64, Vec<f32>), String> {
+    if payload.len() < 8 {
+        return Err(
+            "means response payload is shorter than its 8-byte prelude"
+                .to_string(),
+        );
+    }
+    let g = u64::from(get_u32(payload, 0));
+    let us = get_f32(payload, 4);
+    if !us.is_finite() {
+        return Err("means response us is not a finite f32".to_string());
+    }
+    let means = parse_f32_bytes(&payload[8..], "means")?;
+    Ok((g, f64::from(us), means))
+}
+
+/// Encode a binary update request (full frame, header included).
+pub fn update_request_frame(
+    id: u64,
+    x: &[f32],
+    alpha: f32,
+    class: usize,
+    publish: bool,
+) -> Result<Vec<u8>, String> {
+    let c = u32::try_from(class)
+        .map_err(|_| format!("class {class} exceeds the u32 wire field"))?;
+    let need = x
+        .len()
+        .checked_mul(4)
+        .and_then(|n| n.checked_add(12))
+        .ok_or_else(|| "x byte length overflows usize".to_string())?;
+    if need > MAX_FRAME_PAYLOAD_BYTES {
+        return Err(format!(
+            "update x ({} floats) serializes to {need} payload bytes, \
+             over the {MAX_FRAME_PAYLOAD_BYTES}-byte frame cap",
+            x.len()
+        ));
+    }
+    let mut payload = Vec::with_capacity(need);
+    payload.extend_from_slice(&c.to_le_bytes());
+    payload.extend_from_slice(&u32::from(publish).to_le_bytes());
+    put_f32s(&mut payload, &[alpha]);
+    put_f32s(&mut payload, x);
+    Ok(frame::encode(VERB_UPDATE, id, &payload))
+}
+
+/// Decode an update request payload → `(x, alpha, class, publish)`.
+pub fn parse_update_request_frame(
+    payload: &[u8],
+) -> Result<(Vec<f32>, f32, usize, bool), String> {
+    if payload.len() < 12 {
+        return Err(
+            "update request payload is shorter than its 12-byte prelude"
+                .to_string(),
+        );
+    }
+    let class = usize::try_from(get_u32(payload, 0))
+        .map_err(|_| "class exceeds this platform's usize".to_string())?;
+    let publish = match get_u32(payload, 4) {
+        0 => false,
+        1 => true,
+        other => {
+            return Err(format!("publish flag is {other}, want 0 or 1"))
+        }
+    };
+    let alpha = get_f32(payload, 8);
+    if !alpha.is_finite() {
+        return Err("alpha is not a finite f32".to_string());
+    }
+    let x = parse_f32_bytes(&payload[12..], "x")?;
+    Ok((x, alpha, class, publish))
+}
+
+/// Encode a binary update ack (full frame, header included).
+pub fn update_ack_frame(
+    id: u64,
+    epoch: u64,
+    seq: u64,
+    pending: u64,
+    us: f64,
+) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(28);
+    payload.extend_from_slice(&epoch.to_le_bytes());
+    payload.extend_from_slice(&seq.to_le_bytes());
+    payload.extend_from_slice(&pending.to_le_bytes());
+    // CAST: f64 -> f32 kernel-latency report; rounding is tolerated.
+    put_f32s(&mut payload, &[us as f32]);
+    frame::encode(VERB_UPDATE, id, &payload)
+}
+
+/// Decode an update ack payload → `(epoch, seq, pending)`.  The
+/// trailing `us` f32 is a latency report, not load-bearing; it is
+/// length-checked but otherwise ignored here.
+pub fn parse_update_ack_frame(
+    payload: &[u8],
+) -> Result<(u64, u64, u64), String> {
+    if payload.len() != 28 {
+        return Err(format!(
+            "update ack payload is {} bytes, want 28",
+            payload.len()
+        ));
+    }
+    Ok((get_u64(payload, 0), get_u64(payload, 8), get_u64(payload, 16)))
+}
+
+/// Decode one binary frame into the same [`ShardRequest`] the JSON
+/// parser produces — both wires share one dispatch path downstream.
+fn parse_shard_frame(f: &Frame) -> Result<ShardRequest, String> {
+    let call = match f.verb {
+        VERB_HELLO => {
+            if !f.payload.is_empty() {
+                return Err(format!(
+                    "hello request carries {} payload bytes, want none",
+                    f.payload.len()
+                ));
+            }
+            ShardCall::Hello
+        }
+        VERB_STATS => {
+            if !f.payload.is_empty() {
+                return Err(format!(
+                    "stats request carries {} payload bytes, want none",
+                    f.payload.len()
+                ));
+            }
+            ShardCall::Stats
+        }
+        VERB_MEANS => {
+            let (batch, proj_t) = parse_means_request_frame(&f.payload)?;
+            ShardCall::Means { batch, proj_t }
+        }
+        VERB_UPDATE => {
+            let (x, alpha, class, publish) =
+                parse_update_request_frame(&f.payload)?;
+            ShardCall::Update { x, alpha, class, publish }
+        }
+        other => {
+            return Err(format!(
+                "unknown frame verb {other} (want hello = {VERB_HELLO}, \
+                 means = {VERB_MEANS}, update = {VERB_UPDATE}, or \
+                 stats = {VERB_STATS})"
+            ))
+        }
+    };
+    Ok(ShardRequest { id: f.id, call })
+}
+
+// ---------------------------------------------------------------------------
 // Server side: ShardService
 // ---------------------------------------------------------------------------
 
 /// Exactly-once response guard for the shard plane — the shard-side
-/// analog of `batcher::Responder`.  If it is dropped without sending
+/// analog of `batcher::Responder`, wire-aware: it answers in the same
+/// framing the request arrived in.  If it is dropped without sending
 /// (worker panic, service teardown, a full job channel) it answers
-/// `"shard worker dropped"`, so no framed line is ever silently lost.
-struct LineGuard {
+/// `"shard worker dropped"`, so no framed message is ever silently
+/// lost.
+struct ReplyGuard {
     id: Option<u64>,
+    /// Answer with a binary frame (the request arrived as one) instead
+    /// of a JSON line.
+    binary: bool,
     sender: Option<CompletionSender>,
 }
 
-impl LineGuard {
-    fn new(id: Option<u64>, sender: CompletionSender) -> LineGuard {
-        LineGuard { id, sender: Some(sender) }
+impl ReplyGuard {
+    fn for_line(sender: CompletionSender) -> ReplyGuard {
+        ReplyGuard { id: None, binary: false, sender: Some(sender) }
+    }
+
+    fn for_frame(id: u64, sender: CompletionSender) -> ReplyGuard {
+        ReplyGuard { id: Some(id), binary: true, sender: Some(sender) }
     }
 
     fn send_line(mut self, line: String) {
@@ -486,34 +811,65 @@ impl LineGuard {
         }
     }
 
-    fn send_err(self, msg: impl Into<String>) {
-        let id = self.id;
-        self.send_line(Response::err(id, msg).to_line());
-    }
-}
-
-impl Drop for LineGuard {
-    fn drop(&mut self) {
+    fn send_frame(mut self, bytes: Vec<u8>) {
         if let Some(s) = self.sender.take() {
-            s.send_line(
-                Response::err(self.id, "shard worker dropped").to_line(),
-            );
+            s.send_frame(bytes);
+        }
+    }
+
+    fn send_err(self, msg: impl Into<String>) {
+        if self.binary {
+            let id = self.id.unwrap_or(0);
+            let msg = msg.into();
+            self.send_frame(frame::error_frame(id, &msg));
+        } else {
+            let id = self.id;
+            self.send_line(Response::err(id, msg).to_line());
         }
     }
 }
 
+impl Drop for ReplyGuard {
+    fn drop(&mut self) {
+        if let Some(s) = self.sender.take() {
+            if self.binary {
+                s.send_frame(frame::error_frame(
+                    self.id.unwrap_or(0),
+                    "shard worker dropped",
+                ));
+            } else {
+                s.send_line(
+                    Response::err(self.id, "shard worker dropped")
+                        .to_line(),
+                );
+            }
+        }
+    }
+}
+
+/// One framed request on its way to the kernel worker, in whichever
+/// wire framing it arrived.
+enum JobWire {
+    Line(String),
+    Frame(Frame),
+}
+
 struct ShardJob {
-    line: String,
-    guard: LineGuard,
+    wire: JobWire,
+    guard: ReplyGuard,
 }
 
 /// One shard's kernel served behind the epoll reactor: plug into
-/// `Server::bind_handler`.  Requests are parsed AND executed on the
-/// service's single long-lived worker thread, so a fat `proj` payload
-/// never stalls the reactor's event loop.
+/// `Server::bind_handler_opts` with [`ShardService::net_options`].
+/// Requests are parsed AND executed on the service's single long-lived
+/// worker thread, so a fat `proj` payload never stalls the reactor's
+/// event loop.
 pub struct ShardService {
     jobs: Mutex<Option<Sender<ShardJob>>>,
     worker: Mutex<Option<std::thread::JoinHandle<()>>>,
+    /// Wire-level reject counters, shared with the reactor listener via
+    /// [`ShardService::net_options`] and surfaced by the `stats` verb.
+    frame_slo: Arc<FrameSlo>,
 }
 
 impl ShardService {
@@ -537,6 +893,8 @@ impl ShardService {
             head,
         };
         let (tx, rx) = channel::<ShardJob>();
+        let frame_slo = Arc::new(FrameSlo::new());
+        let frames = frame_slo.clone();
         let worker = std::thread::Builder::new()
             .name(format!("shard-serve-{}", shard.shard_index))
             .spawn(move || {
@@ -561,7 +919,8 @@ impl ShardService {
                         std::panic::AssertUnwindSafe(|| {
                             run_job(&mut hello, &shard, &plane,
                                     &mut up_codes, &mut up_cols,
-                                    &mut scratch, &mut out, &slo, job);
+                                    &mut scratch, &mut out, &slo,
+                                    &frames, job);
                         }),
                     );
                 }
@@ -573,6 +932,7 @@ impl ShardService {
         ShardService {
             jobs: Mutex::new(Some(tx)),
             worker: Mutex::new(Some(worker)),
+            frame_slo,
         }
     }
 
@@ -581,10 +941,24 @@ impl ShardService {
         let n = loaded.n_shards;
         Self::new(loaded.head, Arc::new(loaded.shard), n)
     }
+
+    /// The listener options a shard server should bind with:
+    /// [`WireMode::Auto`] (one port answers binary frames and JSON
+    /// lines alike, sniffed per connection) plus this service's
+    /// wire-reject counters, so the `stats` verb surfaces frame-layer
+    /// rejects alongside the kernel counters.
+    pub fn net_options(&self) -> NetOptions {
+        NetOptions {
+            wire: WireMode::Auto,
+            slo: Arc::clone(&self.frame_slo),
+            ..NetOptions::default()
+        }
+    }
 }
 
-/// Answer an error line AND charge it to the shard's error counter.
-fn answer_err(slo: &LaneSlo, guard: LineGuard, msg: String) {
+/// Answer an error (in the request's wire framing) AND charge it to
+/// the shard's error counter.
+fn answer_err(slo: &LaneSlo, guard: ReplyGuard, msg: String) {
     slo.record_error();
     guard.send_err(msg);
 }
@@ -599,21 +973,37 @@ fn run_job(
     scratch: &mut ShardScratch,
     out: &mut Vec<f32>,
     slo: &LaneSlo,
+    frames: &FrameSlo,
     job: ShardJob,
 ) {
-    let ShardJob { line, mut guard } = job;
-    let req = match parse_shard_request(&line) {
-        Ok(r) => r,
-        Err(e) => {
-            // Best-effort id recovery happens HERE, on the worker —
-            // never on the reactor thread (see `handle_line`).
-            guard.id = extract_id(&line);
-            return answer_err(
-                slo,
-                guard,
-                format!("bad shard request: {e}"),
-            );
-        }
+    let ShardJob { wire, mut guard } = job;
+    let req = match &wire {
+        JobWire::Line(line) => match parse_shard_request(line) {
+            Ok(r) => r,
+            Err(e) => {
+                // Best-effort id recovery happens HERE, on the worker —
+                // never on the reactor thread (see `handle_line`).
+                guard.id = extract_id(line);
+                return answer_err(
+                    slo,
+                    guard,
+                    format!("bad shard request: {e}"),
+                );
+            }
+        },
+        JobWire::Frame(f) => match parse_shard_frame(f) {
+            Ok(r) => r,
+            Err(e) => {
+                // The frame header always carries the id (the guard was
+                // armed with it on the reactor thread) — no recovery
+                // scan needed on this wire.
+                return answer_err(
+                    slo,
+                    guard,
+                    format!("bad shard request: {e}"),
+                );
+            }
+        },
     };
     // Arm the guard with the real id so even a panicking kernel
     // answers with a correlatable error.
@@ -621,22 +1011,42 @@ fn run_job(
     match req.call {
         ShardCall::Hello => {
             let line = hello_response_line(req.id, hello);
-            if line.len() > MAX_LINE_BYTES {
-                // The hello embeds the d × p projection; a sketch too
-                // wide for the JSON shard plane must fail with numbers
-                // the operator can act on, not a generic oversize kill
-                // on the client side.
-                return answer_err(slo, guard, format!(
-                    "hello ({} bytes; projection d × p = {} × {} \
-                     floats) exceeds the {MAX_LINE_BYTES}-byte line \
-                     cap — this sketch is too wide for the JSON shard \
-                     plane",
-                    line.len(),
-                    hello.head.d,
-                    hello.head.p
+            // The hello embeds the d × p projection; a sketch too wide
+            // for its wire's cap must fail with numbers the operator
+            // can act on, not a generic oversize kill on the client
+            // side.  The binary wire ships the same JSON document as a
+            // frame payload (the handshake stays self-describing) under
+            // the much larger frame cap.
+            if guard.binary {
+                if line.len() > MAX_FRAME_PAYLOAD_BYTES {
+                    return answer_err(slo, guard, format!(
+                        "hello ({} bytes; projection d × p = {} × {} \
+                         floats) exceeds the \
+                         {MAX_FRAME_PAYLOAD_BYTES}-byte frame cap",
+                        line.len(),
+                        hello.head.d,
+                        hello.head.p
+                    ));
+                }
+                guard.send_frame(frame::encode(
+                    VERB_HELLO,
+                    req.id,
+                    line.as_bytes(),
                 ));
+            } else {
+                if line.len() > MAX_LINE_BYTES {
+                    return answer_err(slo, guard, format!(
+                        "hello ({} bytes; projection d × p = {} × {} \
+                         floats) exceeds the {MAX_LINE_BYTES}-byte line \
+                         cap — this sketch is too wide for the JSON \
+                         shard plane",
+                        line.len(),
+                        hello.head.d,
+                        hello.head.p
+                    ));
+                }
+                guard.send_line(line);
             }
-            guard.send_line(line);
         }
         ShardCall::Stats => {
             let payload = json::obj(vec![
@@ -652,14 +1062,28 @@ fn run_job(
                     plane.stats().pending.load(Ordering::Relaxed),
                 )),
                 ("kernel", histogram_json(&slo.latency)),
+                // Wire-layer rejects recorded by the reactor listener
+                // (oversize lines/frames, corrupt headers, refused
+                // over-cap writes) — the framing slice of the SLO
+                // story.
+                ("wire", frames.to_json()),
             ]);
-            guard.send_line(
-                json::obj(vec![
-                    ("id", Json::from_u64(req.id)),
-                    ("stats", payload),
-                ])
-                .to_string(),
-            );
+            let line = json::obj(vec![
+                ("id", Json::from_u64(req.id)),
+                ("stats", payload),
+            ])
+            .to_string();
+            if guard.binary {
+                // Stats stays self-describing JSON on both wires, as a
+                // frame payload on this one.
+                guard.send_frame(frame::encode(
+                    VERB_STATS,
+                    req.id,
+                    line.as_bytes(),
+                ));
+            } else {
+                guard.send_line(line);
+            }
         }
         ShardCall::Means { batch, proj_t } => {
             let p = hello.head.p;
@@ -671,9 +1095,13 @@ fn run_job(
             }
             // Bound per-request scratch: a huge b with a tiny p could
             // otherwise balloon the hash accumulators, and a means
-            // matrix that cannot possibly fit one response line (≥ 2
-            // bytes per serialized value, a hard lower bound) is
-            // refused before any kernel work.
+            // matrix that cannot possibly fit one response under its
+            // wire's cap is refused before any kernel work.  The bound
+            // is wire-specific: the JSON wire serializes floats at
+            // >= 2 bytes each under the line cap; the binary wire
+            // ships exactly 4 bytes per value (plus the 8-byte
+            // prelude) under the far larger frame cap, which is what
+            // lifts the JSON-era batch ceiling.
             const MAX_BATCH: usize = 8192;
             if batch > MAX_BATCH {
                 return answer_err(slo, guard, format!(
@@ -683,7 +1111,16 @@ fn run_job(
             let cells = batch as u128 // CAST: usize -> u128 widens losslessly
                 * shard.local_groups() as u128 // CAST: see above
                 * hello.head.n_classes as u128; // CAST: see above
-            if cells > (MAX_LINE_BYTES / 2) as u128 { // CAST: see above
+            if guard.binary {
+                let bytes = cells * 4 + 8;
+                if bytes > MAX_FRAME_PAYLOAD_BYTES as u128 { // CAST: usize -> u128 widens losslessly
+                    return answer_err(slo, guard, format!(
+                        "means matrix ({cells} values, {bytes} payload \
+                         bytes) cannot fit the \
+                         {MAX_FRAME_PAYLOAD_BYTES}-byte frame cap"
+                    ));
+                }
+            } else if cells > (MAX_LINE_BYTES / 2) as u128 { // CAST: usize -> u128 widens losslessly
                 return answer_err(slo, guard, format!(
                     "means matrix ({cells} values) cannot fit the \
                      {MAX_LINE_BYTES}-byte response line cap"
@@ -703,6 +1140,18 @@ fn run_job(
             // CAST: u128 -> f64 may round above 2^53 ns (~104 days);
             // fine for a latency report.
             let us = dur.as_nanos() as f64 / 1e3;
+            if guard.binary {
+                // Binary payloads are exactly 4 bytes per value, so
+                // the pre-kernel bound above IS the exact check.
+                slo.record_ok(dur);
+                guard.send_frame(means_response_frame(
+                    req.id,
+                    shard.local_groups(),
+                    out,
+                    us,
+                ));
+                return;
+            }
             let line = means_response_line(
                 req.id,
                 shard.local_groups(),
@@ -760,18 +1209,24 @@ fn run_job(
                 plane.publish();
             }
             let dur = t0.elapsed();
-            let line = update_ack_line(
-                req.id,
-                plane.epoch(),
-                hello.seq,
-                // ORDERING: Relaxed — advisory gauge echoed in the
-                // ack; the authoritative pending count is `apply`'s
-                // return value, not this read.
-                plane.stats().pending.load(Ordering::Relaxed),
-                dur.as_nanos() as f64 / 1e3, // CAST: u128 -> f64 rounds above 2^53 ns; latency report only
-            );
+            let epoch = plane.epoch();
+            // ORDERING: Relaxed — advisory gauge echoed in the ack;
+            // the authoritative pending count is `apply`'s return
+            // value, not this read.
+            let pend = plane.stats().pending.load(Ordering::Relaxed);
+            // CAST: u128 -> f64 rounds above 2^53 ns; latency report
+            // only.
+            let us = dur.as_nanos() as f64 / 1e3;
             slo.record_ok(dur);
-            guard.send_line(line);
+            if guard.binary {
+                guard.send_frame(update_ack_frame(
+                    req.id, epoch, hello.seq, pend, us,
+                ));
+            } else {
+                guard.send_line(update_ack_line(
+                    req.id, epoch, hello.seq, pend, us,
+                ));
+            }
         }
     }
 }
@@ -784,16 +1239,29 @@ impl LineHandler for ShardService {
         // other connection.  The worker recovers the id; the only
         // response that can fire without it (service teardown racing
         // an accepted line) carries `"id": null`.
-        let guard = LineGuard::new(None, sender);
+        let guard = ReplyGuard::for_line(sender);
         // PANIC: mutex poison — a panic while holding the jobs lock
         // already tore the service down; propagating is correct.
         if let Some(tx) = self.jobs.lock().unwrap().as_ref() {
             // A failed send returns the job inside the error; dropping
             // it fires the guard.  Either way: exactly one response.
-            let _ = tx.send(ShardJob { line, guard });
+            let _ = tx.send(ShardJob { wire: JobWire::Line(line), guard });
         }
         // jobs already closed (service tearing down): the guard drops
         // here and answers.
+    }
+
+    fn handle_frame(&self, f: Frame, sender: CompletionSender) {
+        // The frame header always carries the request id, so the guard
+        // is armed immediately — no recovery scan, and still nothing
+        // is parsed on the reactor thread (payload decoding happens on
+        // the worker).
+        let guard = ReplyGuard::for_frame(f.id, sender);
+        // PANIC: mutex poison — a panic while holding the jobs lock
+        // already tore the service down; propagating is correct.
+        if let Some(tx) = self.jobs.lock().unwrap().as_ref() {
+            let _ = tx.send(ShardJob { wire: JobWire::Frame(f), guard });
+        }
     }
 }
 
@@ -834,9 +1302,11 @@ pub fn serve_local(sharded: &ShardedSketch)
             sh.clone(),
             sharded.n_shards(),
         ));
-        let server = crate::coordinator::Server::bind_handler(
+        let opts = service.net_options();
+        let server = crate::coordinator::Server::bind_handler_opts(
             service,
             "127.0.0.1:0",
+            opts,
         )?;
         addrs.push(server.local_addr().to_string());
         stops.push(server.stop_handle());
@@ -905,6 +1375,12 @@ pub struct RemoteOptions {
     /// interval: a restarted replica is reintegrated at most one cap
     /// (plus jitter) after it comes back.
     pub backoff_cap: Duration,
+    /// Which framing the client speaks to the shard servers.  The
+    /// default is the binary frame protocol; [`WireMode::Json`] is the
+    /// mixed-version fallback (`--wire json`).  `Auto` is a
+    /// listener-side concept (sniff per connection) and is treated as
+    /// `Binary` here.
+    pub wire: WireMode,
 }
 
 impl Default for RemoteOptions {
@@ -916,6 +1392,7 @@ impl Default for RemoteOptions {
             hedge_min: Duration::from_millis(1),
             backoff_base: Duration::from_millis(50),
             backoff_cap: Duration::from_secs(2),
+            wire: WireMode::Binary,
         }
     }
 }
@@ -952,6 +1429,21 @@ struct PendingReq {
     abandoned: bool,
 }
 
+/// One framed inbound message, in whichever framing the replica's
+/// connection speaks.
+enum WireMsg {
+    Line(String),
+    Frame(Frame),
+}
+
+/// One serialized outbound request: encoded ONCE per scatter and
+/// queued verbatim on every replica it fans out to (primary, hedge,
+/// failover), so every copy is byte-identical.
+enum WireReq {
+    Line(String),
+    Frame(Vec<u8>),
+}
+
 /// One replica of one shard: its connection (if up), framed input,
 /// in-flight exchanges, and quarantine state.
 struct Replica {
@@ -959,11 +1451,11 @@ struct Replica {
     /// Which shard this replica serves (index into the plan).
     shard: usize,
     conn: Option<Conn>,
-    /// Framed lines, drained by the caller.  NOT cleared when the
+    /// Framed messages, drained by the caller.  NOT cleared when the
     /// connection dies (a final answer that raced an EOF is still
-    /// consumable) — cleared on dial, where stale lines would belong
-    /// to a previous incarnation.
-    inbox: VecDeque<String>,
+    /// consumable) — cleared on dial, where stale messages would
+    /// belong to a previous incarnation.
+    inbox: VecDeque<WireMsg>,
     /// Why the connection was torn down (until the next dial).
     dead: Option<String>,
     /// Exchanges written and not yet answered; `len()` is the load
@@ -1012,10 +1504,20 @@ impl ClientIo {
         self.replicas[r].retry_at = Instant::now() + backoff;
     }
 
-    /// Queue one line on replica `r` and push what the socket will take.
-    fn queue_to(&mut self, r: usize, line: &str) {
+    /// The framing this client dials with (`Auto` collapses to
+    /// `Binary`; see [`RemoteOptions::wire`]).
+    fn binary(&self) -> bool {
+        !matches!(self.opts.wire, WireMode::Json)
+    }
+
+    /// Queue one encoded request on replica `r` and push what the
+    /// socket will take.
+    fn queue_req(&mut self, r: usize, req: &WireReq) {
         if let Some(conn) = self.replicas[r].conn.as_mut() {
-            conn.queue_line(line);
+            match req {
+                WireReq::Line(line) => conn.queue_line(line),
+                WireReq::Frame(bytes) => conn.queue_bytes(bytes),
+            }
         }
         self.settle(r);
     }
@@ -1086,26 +1588,44 @@ impl ClientIo {
                     .conn
                     .as_ref()
                     .map_or(false, |c| c.read_closed);
-                let mut oversize = false;
+                let mut dead_why: Option<&'static str> = None;
                 for e in evs {
                     match e {
                         InEvent::Line(l) => {
                             if !l.trim().is_empty() {
-                                self.replicas[r].inbox.push_back(l);
+                                self.replicas[r]
+                                    .inbox
+                                    .push_back(WireMsg::Line(l));
                             }
                         }
-                        InEvent::Oversize(_) => oversize = true,
+                        InEvent::Frame(f) => {
+                            self.replicas[r]
+                                .inbox
+                                .push_back(WireMsg::Frame(f));
+                        }
+                        // A server that overruns the client's caps or
+                        // corrupts a header is dropped — the caller's
+                        // failover machinery decides what that costs.
+                        InEvent::Oversize { .. } => {
+                            dead_why =
+                                Some("response line exceeded the line cap");
+                        }
+                        InEvent::OversizeFrame { .. } => {
+                            dead_why = Some(
+                                "response frame exceeded the frame cap",
+                            );
+                        }
+                        InEvent::FrameError(_) => {
+                            dead_why = Some("sent a corrupt frame header");
+                        }
                     }
                 }
                 if !ok {
                     self.drop_conn(r, "connection reset");
                     continue;
                 }
-                if oversize {
-                    self.drop_conn(
-                        r,
-                        "response line exceeded the line cap",
-                    );
+                if let Some(why) = dead_why {
+                    self.drop_conn(r, why);
                     continue;
                 }
                 if eof {
@@ -1151,17 +1671,27 @@ impl ClientIo {
             .map_err(|e| {
                 anyhow!("shard {s} ({addr}): epoll registration: {e}")
             })?;
-        let mut conn = Conn::new(stream);
+        let wire = if self.binary() {
+            WireMode::Binary
+        } else {
+            WireMode::Json
+        };
+        let mut conn = Conn::new_wire(stream, wire, MAX_FRAME_PAYLOAD_BYTES);
         conn.interest = interest;
         self.replicas[r].conn = Some(conn);
         self.replicas[r].dead = None;
         self.seq += 1;
         let id = self.seq;
-        self.queue_to(r, &hello_request_line(id));
+        let req = if self.binary() {
+            WireReq::Frame(frame::encode(VERB_HELLO, id, &[]))
+        } else {
+            WireReq::Line(hello_request_line(id))
+        };
+        self.queue_req(r, &req);
         let deadline = Instant::now() + self.opts.timeout;
         loop {
-            if let Some(line) = self.replicas[r].inbox.pop_front() {
-                return match parse_hello(&line, id) {
+            if let Some(msg) = self.replicas[r].inbox.pop_front() {
+                return match hello_from_msg(&msg, id) {
                     Ok(h) => Ok(h),
                     Err(e) => {
                         self.drop_conn(r, "sent a bad hello");
@@ -1181,6 +1711,40 @@ impl ClientIo {
             }
             self.pump(wait_ms_until(deadline))
                 .map_err(|e| anyhow!("shard client epoll wait: {e}"))?;
+        }
+    }
+}
+
+/// Decode a hello reply from either wire.  The binary wire ships the
+/// SAME JSON document as a frame payload (the handshake is the
+/// version-negotiation point, so it stays self-describing), which
+/// funnels both wires through the one validated [`parse_hello`] path.
+fn hello_from_msg(msg: &WireMsg, want_id: u64) -> Result<ShardHello, String> {
+    match msg {
+        WireMsg::Line(l) => parse_hello(l, want_id),
+        WireMsg::Frame(f) => {
+            if f.id != want_id {
+                return Err(format!(
+                    "hello response id {} does not match request {want_id}",
+                    f.id
+                ));
+            }
+            if f.verb == frame::VERB_ERROR {
+                return Err(format!(
+                    "shard answered an error: {}",
+                    String::from_utf8_lossy(&f.payload)
+                ));
+            }
+            if f.verb != VERB_HELLO {
+                return Err(format!(
+                    "hello answered with frame verb {}, want {VERB_HELLO}",
+                    f.verb
+                ));
+            }
+            let text = std::str::from_utf8(&f.payload).map_err(|_| {
+                "hello frame payload is not UTF-8".to_string()
+            })?;
+            parse_hello(text, want_id)
         }
     }
 }
@@ -1451,12 +2015,13 @@ impl RemoteShardSet {
     /// Pick the least-loaded healthy untried replica of shard `s` (tie
     /// → listed order), dialing a quarantined one only when no
     /// connected candidate exists AND its backoff expired, and send
-    /// `line` as exchange `id`.  Returns the replica written to.
+    /// the encoded request as exchange `id`.  Returns the replica
+    /// written to.
     fn pick_and_send(
         &mut self,
         s: usize,
         id: u64,
-        line: &str,
+        req: &WireReq,
         tried: &mut Vec<usize>,
     ) -> anyhow::Result<usize> {
         let mut last_err: Option<anyhow::Error> = None;
@@ -1520,7 +2085,7 @@ impl RemoteShardSet {
             if !tried.contains(&r) {
                 tried.push(r);
             }
-            self.io.queue_to(r, line);
+            self.io.queue_req(r, req);
             if self.io.replicas[r].conn.is_some() {
                 self.io.replicas[r].pending.push_back(PendingReq {
                     id,
@@ -1583,7 +2148,7 @@ impl RemoteShardSet {
         )
     }
 
-    /// Queue the already-serialized update `line` on replica `r`; on
+    /// Queue the already-encoded update request on replica `r`; on
     /// a successful write the exchange is tracked in `sent_to`.  A
     /// write that tears the connection down quarantines the replica
     /// instead (the seq fence keeps it out until restored).
@@ -1591,10 +2156,10 @@ impl RemoteShardSet {
         &mut self,
         r: usize,
         id: u64,
-        line: &str,
+        req: &WireReq,
         sent_to: &mut Vec<usize>,
     ) {
-        self.io.queue_to(r, line);
+        self.io.queue_req(r, req);
         if self.io.replicas[r].conn.is_some() {
             self.io.replicas[r].pending.push_back(PendingReq {
                 id,
@@ -1614,30 +2179,42 @@ impl RemoteShardSet {
         }
     }
 
-    /// Interpret one inbox line from replica `r` while awaiting acks
-    /// for update `want_id`.  The first valid ack per shard wins;
-    /// stale ids (late answers to earlier exchanges) are discarded;
-    /// an error answer, a divergent seq, or a malformed ack
-    /// quarantines the replica — an update a replica cannot apply in
-    /// lockstep means it no longer matches the set.
+    /// Interpret one inbox message from replica `r` while awaiting
+    /// acks for update `want_id`.  The first valid ack per shard wins;
+    /// stale ids (late answers to earlier exchanges) are discarded
+    /// WITHOUT inspecting their body; an error answer, a divergent
+    /// seq, or a malformed ack quarantines the replica — an update a
+    /// replica cannot apply in lockstep means it no longer matches the
+    /// set.
     fn consume_update_ack(
         &mut self,
         r: usize,
-        line: &str,
+        msg: WireMsg,
         want_id: u64,
         acked: &mut [bool],
         epoch_min: &mut u64,
         pending_max: &mut u64,
     ) {
         let s = self.io.replicas[r].shard;
-        let j = match json::parse(line) {
-            Ok(j) => j,
-            Err(_) => {
-                self.quarantine(r, "sent an unparseable line");
-                return;
-            }
+        // On the JSON wire the envelope and the body share one parse;
+        // on the binary wire the id lives in the header, so the body
+        // of a stale answer is never even decoded.
+        let parsed: Option<Json> = match &msg {
+            WireMsg::Line(l) => match json::parse(l) {
+                Ok(j) => Some(j),
+                Err(_) => {
+                    self.quarantine(r, "sent an unparseable line");
+                    return;
+                }
+            },
+            WireMsg::Frame(_) => None,
         };
-        match j.get("id").and_then(|v| v.as_u64()) {
+        let rid: Option<u64> = match (&parsed, &msg) {
+            (Some(j), _) => j.get("id").and_then(|v| v.as_u64()),
+            (None, WireMsg::Frame(f)) => Some(f.id),
+            (None, WireMsg::Line(_)) => None,
+        };
+        match rid {
             Some(x) if x < want_id => {
                 self.take_pending(r, x);
                 self.stats.shards[s]
@@ -1660,18 +2237,38 @@ impl RemoteShardSet {
                 .fetch_add(1, Ordering::Relaxed);
             return;
         }
-        if j.get("error").and_then(|v| v.as_str()).is_some() {
+        let is_error = match (&parsed, &msg) {
+            (Some(j), _) => {
+                j.get("error").and_then(|v| v.as_str()).is_some()
+            }
+            (None, WireMsg::Frame(f)) => f.verb == frame::VERB_ERROR,
+            (None, WireMsg::Line(_)) => false,
+        };
+        if is_error {
             self.quarantine(r, "rejected a live update");
             return;
         }
-        let parsed = (
-            j.get("epoch").and_then(|v| v.as_u64()),
-            j.get("seq").and_then(|v| v.as_u64()),
-            j.get("pending").and_then(|v| v.as_u64()),
-        );
-        let (epoch, seq, pending) = match parsed {
-            (Some(e), Some(q), Some(p)) => (e, q, p),
-            _ => {
+        let body: Option<(u64, u64, u64)> = match (&parsed, &msg) {
+            (Some(j), _) => match (
+                j.get("epoch").and_then(|v| v.as_u64()),
+                j.get("seq").and_then(|v| v.as_u64()),
+                j.get("pending").and_then(|v| v.as_u64()),
+            ) {
+                (Some(e), Some(q), Some(p)) => Some((e, q, p)),
+                _ => None,
+            },
+            (None, WireMsg::Frame(f)) => {
+                if f.verb == VERB_UPDATE {
+                    parse_update_ack_frame(&f.payload).ok()
+                } else {
+                    None
+                }
+            }
+            (None, WireMsg::Line(_)) => None,
+        };
+        let (epoch, seq, pending) = match body {
+            Some(t) => t,
+            None => {
                 self.quarantine(r, "sent a malformed update ack");
                 return;
             }
@@ -1733,20 +2330,31 @@ impl RemoteShardSet {
         let n = self.n_shards();
         self.io.seq += 1;
         let id = self.io.seq;
-        let line = update_request_line(id, x, alpha, class, publish);
-        anyhow::ensure!(
-            line.len() <= MAX_LINE_BYTES,
-            "update line ({} bytes for p = {} floats) exceeds the \
-             {MAX_LINE_BYTES}-byte shard-plane line cap",
-            line.len(),
-            self.head.p
-        );
+        // One request encoded ONCE per wire framing; refused HERE with
+        // actionable numbers when it cannot fit the wire's cap, before
+        // anything is sent.
+        let req = if self.io.binary() {
+            WireReq::Frame(
+                update_request_frame(id, x, alpha, class, publish)
+                    .map_err(|e| anyhow!("live update: {e}"))?,
+            )
+        } else {
+            let line = update_request_line(id, x, alpha, class, publish);
+            anyhow::ensure!(
+                line.len() <= MAX_LINE_BYTES,
+                "update line ({} bytes for p = {} floats) exceeds the \
+                 {MAX_LINE_BYTES}-byte shard-plane line cap",
+                line.len(),
+                self.head.p
+            );
+            WireReq::Line(line)
+        };
         let mut sent: Vec<Vec<usize>> = vec![Vec::new(); n];
         for s in 0..n {
             for gi in 0..self.groups[s].len() {
                 let r = self.groups[s][gi];
                 if self.io.replicas[r].conn.is_some() {
-                    self.send_update_to(r, id, &line, &mut sent[s]);
+                    self.send_update_to(r, id, &req, &mut sent[s]);
                 }
             }
             if sent[s].is_empty() {
@@ -1768,7 +2376,7 @@ impl RemoteShardSet {
                         // ORDERING: Relaxed — monotonic stat counter, sampled only for reporting.
                         .fetch_add(1, Ordering::Relaxed);
                     if self.dial_validated(r).is_ok() {
-                        self.send_update_to(r, id, &line, &mut sent[s]);
+                        self.send_update_to(r, id, &req, &mut sent[s]);
                         if !sent[s].is_empty() {
                             break;
                         }
@@ -1792,7 +2400,7 @@ impl RemoteShardSet {
                     self.io.replicas[r].inbox.pop_front()
                 {
                     self.consume_update_ack(
-                        r, &resp, id, &mut acked, &mut epoch_min,
+                        r, resp, id, &mut acked, &mut epoch_min,
                         &mut pending_max,
                     );
                 }
@@ -1895,25 +2503,34 @@ impl RemoteShardSet {
         partials: &mut Vec<Vec<f32>>,
     ) -> anyhow::Result<()> {
         let n = self.n_shards();
-        // Scatter: one request line serialized ONCE — every shard
-        // receives the identical projected batch and slices its own
-        // repetitions out of the shared hash family.
+        // Scatter: one request serialized ONCE — every shard receives
+        // the identical projected batch and slices its own repetitions
+        // out of the shared hash family.  A batch too fat for its
+        // wire's cap is refused HERE, with actionable numbers, instead
+        // of letting every shard bounce it.  Nothing has been sent, so
+        // the connections stay healthy and smaller batches on this
+        // lane keep working.  (The binary frame cap is ~256× the JSON
+        // line cap at 4 bytes per float — this is what lifts the
+        // JSON-era batch ceiling.)
         self.io.seq += 1;
         let id = self.io.seq;
-        let line = means_request_line(id, batch, proj_t);
-        // The shard plane frames one message per line with a hard cap;
-        // refuse a too-fat projected batch HERE, with actionable
-        // numbers, instead of letting every shard bounce the frame.
-        // Nothing has been sent, so the connections stay healthy and
-        // smaller batches on this lane keep working.
-        anyhow::ensure!(
-            line.len() <= MAX_LINE_BYTES,
-            "projected batch (p × B = {} × {batch} floats) serializes \
-             to {} bytes, over the {MAX_LINE_BYTES}-byte shard-plane \
-             line cap — lower the lane's max_batch",
-            self.head.p,
-            line.len()
-        );
+        let req = if self.io.binary() {
+            WireReq::Frame(
+                means_request_frame(id, batch, proj_t)
+                    .map_err(|e| anyhow!("{e}"))?,
+            )
+        } else {
+            let line = means_request_line(id, batch, proj_t);
+            anyhow::ensure!(
+                line.len() <= MAX_LINE_BYTES,
+                "projected batch (p × B = {} × {batch} floats) \
+                 serializes to {} bytes, over the {MAX_LINE_BYTES}-byte \
+                 shard-plane line cap — lower the lane's max_batch",
+                self.head.p,
+                line.len()
+            );
+            WireReq::Line(line)
+        };
         if partials.len() != n {
             partials.resize_with(n, Vec::new);
         }
@@ -1931,7 +2548,7 @@ impl RemoteShardSet {
             .collect();
         for s in 0..n {
             let mut tried = std::mem::take(&mut slots[s].tried);
-            match self.pick_and_send(s, id, &line, &mut tried) {
+            match self.pick_and_send(s, id, &req, &mut tried) {
                 Ok(r) => {
                     slots[s].primary = Some(r);
                     slots[s].sent = Instant::now();
@@ -1956,8 +2573,8 @@ impl RemoteShardSet {
                 while let Some(resp) =
                     self.io.replicas[r].inbox.pop_front()
                 {
-                    self.consume_line(
-                        r, &resp, id, batch, &line, &mut slots,
+                    self.consume_msg(
+                        r, resp, id, batch, &req, &mut slots,
                         partials, &mut missing,
                     )?;
                 }
@@ -2003,7 +2620,7 @@ impl RemoteShardSet {
                         let mut tried =
                             std::mem::take(&mut slots[s].tried);
                         match self.pick_and_send(
-                            s, id, &line, &mut tried,
+                            s, id, &req, &mut tried,
                         ) {
                             Ok(r2) => {
                                 slots[s].primary = Some(r2);
@@ -2043,7 +2660,7 @@ impl RemoteShardSet {
                 }
                 slots[s].hedged = true;
                 let mut tried = std::mem::take(&mut slots[s].tried);
-                let got = self.pick_and_send(s, id, &line, &mut tried);
+                let got = self.pick_and_send(s, id, &req, &mut tried);
                 slots[s].tried = tried;
                 if let Ok(r2) = got {
                     slots[s].hedge = Some(r2);
@@ -2122,21 +2739,44 @@ impl RemoteShardSet {
         }
     }
 
-    /// Interpret one line from replica `r` during the gather for
-    /// request `want_id`.  Accepts the first valid answer per shard;
-    /// discards stale/duplicate/abandoned answers by request id
-    /// WITHOUT inspecting their content (so they cannot poison
-    /// latency estimates or health state); anything malformed
-    /// quarantines the replica and fails over if no other contender
-    /// is in flight.
+    /// Interpret one inbox message from replica `r` during the gather
+    /// for request `want_id` — dispatching on the framing it arrived
+    /// in.  Accepts the first valid answer per shard; discards
+    /// stale/duplicate/abandoned answers by request id WITHOUT
+    /// inspecting their content (so they cannot poison latency
+    /// estimates or health state); anything malformed quarantines the
+    /// replica and fails over if no other contender is in flight.
     #[allow(clippy::too_many_arguments)]
-    fn consume_line(
+    fn consume_msg(
+        &mut self,
+        r: usize,
+        msg: WireMsg,
+        want_id: u64,
+        batch: usize,
+        req: &WireReq,
+        slots: &mut Vec<AwaitSlot>,
+        partials: &mut [Vec<f32>],
+        missing: &mut usize,
+    ) -> anyhow::Result<()> {
+        match msg {
+            WireMsg::Line(line) => self.consume_gather_line(
+                r, &line, want_id, batch, req, slots, partials, missing,
+            ),
+            WireMsg::Frame(f) => self.consume_gather_frame(
+                r, f, want_id, batch, req, slots, partials, missing,
+            ),
+        }
+    }
+
+    /// The JSON-wire arm of [`Self::consume_msg`].
+    #[allow(clippy::too_many_arguments)]
+    fn consume_gather_line(
         &mut self,
         r: usize,
         line: &str,
         want_id: u64,
         batch: usize,
-        line_req: &str,
+        req: &WireReq,
         slots: &mut Vec<AwaitSlot>,
         partials: &mut [Vec<f32>],
         missing: &mut usize,
@@ -2151,7 +2791,7 @@ impl RemoteShardSet {
                 return self.failover_or(
                     s,
                     want_id,
-                    line_req,
+                    req,
                     slots,
                     format!(
                         "shard {s} ({addr}): unparseable response: {e}"
@@ -2180,7 +2820,7 @@ impl RemoteShardSet {
                 return self.failover_or(
                     s,
                     want_id,
-                    line_req,
+                    req,
                     slots,
                     format!(
                         "shard {s} ({addr}): response id {rid:?} does \
@@ -2211,28 +2851,12 @@ impl RemoteShardSet {
             return self.failover_or(
                 s,
                 want_id,
-                line_req,
+                req,
                 slots,
                 format!("shard {s} ({addr}) answered an error: {err}"),
             );
         }
-        let lg = self.plan.span(s).local_groups();
         let g = j.get("g").and_then(|v| v.as_u64());
-        // CAST: usize -> u64 widens losslessly.
-        if g != Some(lg as u64) {
-            self.quarantine(r, "answered for the wrong group range");
-            Self::remove_from_slot(slots, s, r);
-            return self.failover_or(
-                s,
-                want_id,
-                line_req,
-                slots,
-                format!(
-                    "shard {s} ({addr}) answered {g:?} groups, the \
-                     plan expects {lg}"
-                ),
-            );
-        }
         let means = match j
             .get("means")
             .ok_or_else(|| "missing means".to_string())
@@ -2245,12 +2869,167 @@ impl RemoteShardSet {
                 return self.failover_or(
                     s,
                     want_id,
-                    line_req,
+                    req,
                     slots,
                     format!("shard {s} ({addr}): {e}"),
                 );
             }
         };
+        self.finish_gather_answer(
+            r, s, &addr, want_id, batch, g, means, entry, req, slots,
+            partials, missing,
+        )
+    }
+
+    /// The binary-wire arm of [`Self::consume_msg`].  The reply id is
+    /// in the frame header, so stale and duplicate answers are
+    /// discarded without decoding a single payload byte.
+    #[allow(clippy::too_many_arguments)]
+    fn consume_gather_frame(
+        &mut self,
+        r: usize,
+        f: Frame,
+        want_id: u64,
+        batch: usize,
+        req: &WireReq,
+        slots: &mut Vec<AwaitSlot>,
+        partials: &mut [Vec<f32>],
+        missing: &mut usize,
+    ) -> anyhow::Result<()> {
+        let s = self.io.replicas[r].shard;
+        let addr = self.io.replicas[r].addr.clone();
+        match f.id {
+            x if x < want_id => {
+                // A previous batch answered late: discard by id.
+                self.take_pending(r, x);
+                self.stats.shards[s]
+                    .discarded
+                    // ORDERING: Relaxed — monotonic stat counter, sampled only for reporting.
+                    .fetch_add(1, Ordering::Relaxed);
+                return Ok(());
+            }
+            x if x == want_id => {}
+            _ => {
+                self.quarantine(
+                    r,
+                    "answered with an unknown request id",
+                );
+                Self::remove_from_slot(slots, s, r);
+                return self.failover_or(
+                    s,
+                    want_id,
+                    req,
+                    slots,
+                    format!(
+                        "shard {s} ({addr}): response id {} does not \
+                         match request {want_id}",
+                        f.id
+                    ),
+                );
+            }
+        }
+        let entry = self.take_pending(r, want_id);
+        let abandoned = entry.as_ref().map_or(true, |p| p.abandoned);
+        if self.have[s] || abandoned {
+            // The duplicate from a lost hedge race or a failed-over
+            // exchange: discarded by id, content never inspected.
+            self.stats.shards[s]
+                .discarded
+                // ORDERING: Relaxed — monotonic stat counter, sampled only for reporting.
+                .fetch_add(1, Ordering::Relaxed);
+            return Ok(());
+        }
+        if f.verb == frame::VERB_ERROR {
+            // A well-formed error response leaves the stream framed;
+            // the connection stays up, but this exchange is over.
+            self.stats.replicas[r]
+                .abandoned
+                // ORDERING: Relaxed — monotonic stat counter, sampled only for reporting.
+                .fetch_add(1, Ordering::Relaxed);
+            Self::remove_from_slot(slots, s, r);
+            return self.failover_or(
+                s,
+                want_id,
+                req,
+                slots,
+                format!(
+                    "shard {s} ({addr}) answered an error: {}",
+                    String::from_utf8_lossy(&f.payload)
+                ),
+            );
+        }
+        if f.verb != VERB_MEANS {
+            self.quarantine(r, "answered with the wrong frame verb");
+            Self::remove_from_slot(slots, s, r);
+            return self.failover_or(
+                s,
+                want_id,
+                req,
+                slots,
+                format!(
+                    "shard {s} ({addr}) answered frame verb {}, want \
+                     means = {VERB_MEANS}",
+                    f.verb
+                ),
+            );
+        }
+        let (g, _us, means) = match parse_means_response_frame(&f.payload)
+        {
+            Ok(t) => t,
+            Err(e) => {
+                self.quarantine(r, "sent a malformed mean matrix");
+                Self::remove_from_slot(slots, s, r);
+                return self.failover_or(
+                    s,
+                    want_id,
+                    req,
+                    slots,
+                    format!("shard {s} ({addr}): {e}"),
+                );
+            }
+        };
+        self.finish_gather_answer(
+            r, s, &addr, want_id, batch, Some(g), means, entry, req,
+            slots, partials, missing,
+        )
+    }
+
+    /// The wire-independent tail of a fresh, non-abandoned gather
+    /// answer: shape checks (group span, matrix dimensions), then
+    /// acceptance — first valid answer wins the shard, the losing
+    /// contender is abandoned, latency estimates absorb the sample.
+    #[allow(clippy::too_many_arguments)]
+    fn finish_gather_answer(
+        &mut self,
+        r: usize,
+        s: usize,
+        addr: &str,
+        want_id: u64,
+        batch: usize,
+        g: Option<u64>,
+        means: Vec<f32>,
+        entry: Option<PendingReq>,
+        req: &WireReq,
+        slots: &mut Vec<AwaitSlot>,
+        partials: &mut [Vec<f32>],
+        missing: &mut usize,
+    ) -> anyhow::Result<()> {
+        let lg = self.plan.span(s).local_groups();
+        // CAST: usize -> u64 widens losslessly.
+        if g != Some(lg as u64) {
+            self.quarantine(r, "answered for the wrong group range");
+            Self::remove_from_slot(slots, s, r);
+            return self.failover_or(
+                s,
+                want_id,
+                req,
+                slots,
+                format!(
+                    "shard {s} ({addr}) answered {g:?} groups, the \
+                     plan expects {lg}"
+                ),
+            );
+        }
         let c_n = self.head.n_classes;
         // CAST: usize -> u128 widens losslessly (overflow-free length check).
         let want_len = batch as u128 * lg as u128 * c_n as u128;
@@ -2264,7 +3043,7 @@ impl RemoteShardSet {
             return self.failover_or(
                 s,
                 want_id,
-                line_req,
+                req,
                 slots,
                 format!(
                     "shard {s} ({addr}): mean matrix has {got} \
@@ -2330,7 +3109,7 @@ impl RemoteShardSet {
         &mut self,
         s: usize,
         id: u64,
-        line: &str,
+        req: &WireReq,
         slots: &mut Vec<AwaitSlot>,
         err_msg: String,
     ) -> anyhow::Result<()> {
@@ -2341,7 +3120,7 @@ impl RemoteShardSet {
             return Ok(());
         }
         let mut tried = std::mem::take(&mut slots[s].tried);
-        match self.pick_and_send(s, id, line, &mut tried) {
+        match self.pick_and_send(s, id, req, &mut tried) {
             Ok(r2) => {
                 slots[s].primary = Some(r2);
                 slots[s].sent = Instant::now();
@@ -2634,16 +3413,209 @@ mod tests {
     }
 
     #[test]
+    fn binary_means_request_roundtrips_awkward_f32s_bitwise() {
+        // The same adversarial values the JSON round-trip test uses:
+        // subnormals, negative zero, f32::MIN_POSITIVE, extremes.
+        let proj = vec![
+            0.1f32,
+            -0.0,
+            f32::MIN_POSITIVE,
+            1.0e-45,
+            3.402_823_5e38,
+            -1.234_567_8e-12,
+        ];
+        let f = means_request_frame(77, 3, &proj).unwrap();
+        let h = frame::parse_header(&f[..frame::HEADER_BYTES]).unwrap();
+        assert_eq!(h.verb, VERB_MEANS);
+        assert_eq!(h.id, 77);
+        assert_eq!(h.len, 4 + proj.len() * 4);
+        let (b, got) =
+            parse_means_request_frame(&f[frame::HEADER_BYTES..]).unwrap();
+        assert_eq!(b, 3);
+        assert_eq!(got.len(), proj.len());
+        for (a, b) in got.iter().zip(proj.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn binary_means_response_roundtrips_bitwise() {
+        let means = vec![1.5f32, -0.0, 2.5e-40, 6.125];
+        let f = means_response_frame(9, 2, &means, 12.75);
+        let h = frame::parse_header(&f[..frame::HEADER_BYTES]).unwrap();
+        assert_eq!(h.verb, VERB_MEANS);
+        assert_eq!(h.id, 9);
+        let (g, us, got) =
+            parse_means_response_frame(&f[frame::HEADER_BYTES..]).unwrap();
+        assert_eq!(g, 2);
+        assert!((us - 12.75).abs() < 1e-6, "{us}");
+        for (a, b) in got.iter().zip(means.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn binary_update_request_roundtrips_bitwise() {
+        let x = vec![0.25f32, -1.5, 3.0e-39];
+        let f = update_request_frame(5, &x, -0.75, 1, true).unwrap();
+        let (gx, alpha, class, publish) =
+            parse_update_request_frame(&f[frame::HEADER_BYTES..]).unwrap();
+        assert_eq!(alpha.to_bits(), (-0.75f32).to_bits());
+        assert_eq!(class, 1);
+        assert!(publish);
+        for (a, b) in gx.iter().zip(x.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let f2 = update_request_frame(5, &x, 0.5, 0, false).unwrap();
+        let (_, _, _, publish2) =
+            parse_update_request_frame(&f2[frame::HEADER_BYTES..])
+                .unwrap();
+        assert!(!publish2);
+    }
+
+    #[test]
+    fn binary_update_ack_roundtrips() {
+        let f = update_ack_frame(11, 3, 42, 7, 99.5);
+        let h = frame::parse_header(&f[..frame::HEADER_BYTES]).unwrap();
+        assert_eq!(h.verb, VERB_UPDATE);
+        assert_eq!(h.len, 28);
+        let (epoch, seq, pending) =
+            parse_update_ack_frame(&f[frame::HEADER_BYTES..]).unwrap();
+        assert_eq!((epoch, seq, pending), (3, 42, 7));
+    }
+
+    #[test]
+    fn binary_parsers_reject_non_finite_and_malformed_payloads() {
+        // Non-finite floats are rejected on BOTH wires.
+        let bad = vec![f32::NAN];
+        let f = means_request_frame(1, 1, &bad).unwrap();
+        let e = parse_means_request_frame(&f[frame::HEADER_BYTES..])
+            .unwrap_err();
+        assert!(e.contains("finite"), "{e}");
+        let f = means_response_frame(1, 1, &[f32::INFINITY], 0.0);
+        let e = parse_means_response_frame(&f[frame::HEADER_BYTES..])
+            .unwrap_err();
+        assert!(e.contains("finite"), "{e}");
+        let f = update_request_frame(1, &[f32::NEG_INFINITY], 1.0, 0,
+                                     false)
+            .unwrap();
+        let e = parse_update_request_frame(&f[frame::HEADER_BYTES..])
+            .unwrap_err();
+        assert!(e.contains("finite"), "{e}");
+        // Truncated preludes.
+        assert!(parse_means_request_frame(&[0, 0]).unwrap_err()
+            .contains("4-byte"));
+        assert!(parse_means_response_frame(&[1, 0, 0]).unwrap_err()
+            .contains("8-byte"));
+        assert!(parse_update_request_frame(&[9; 11]).unwrap_err()
+            .contains("12-byte"));
+        assert!(parse_update_ack_frame(&[0; 27]).unwrap_err()
+            .contains("want 28"));
+        // Ragged f32 runs.
+        let mut f = means_request_frame(1, 1, &[1.0]).unwrap();
+        f.push(0xAB);
+        let payload = &f[frame::HEADER_BYTES..];
+        let e = parse_means_request_frame(payload).unwrap_err();
+        assert!(e.contains("whole number of f32s"), "{e}");
+        // b = 0 is refused (same contract as the JSON parser).
+        let f = means_request_frame(1, 0, &[]).unwrap();
+        let e = parse_means_request_frame(&f[frame::HEADER_BYTES..])
+            .unwrap_err();
+        assert!(e.contains("at least 1"), "{e}");
+        // publish flag outside {0, 1}.
+        let mut f = update_request_frame(1, &[1.0], 1.0, 0, false)
+            .unwrap();
+        f[frame::HEADER_BYTES + 4] = 9;
+        let e = parse_update_request_frame(&f[frame::HEADER_BYTES..])
+            .unwrap_err();
+        assert!(e.contains("0 or 1"), "{e}");
+    }
+
+    #[test]
+    fn binary_verb_dispatch_rejects_payloads_and_unknown_verbs() {
+        // Hello/stats must carry no payload.
+        let f = Frame { verb: VERB_HELLO, id: 1, payload: vec![0] };
+        let e = parse_shard_frame(&f).unwrap_err();
+        assert!(e.contains("want none"), "{e}");
+        let f = Frame { verb: VERB_STATS, id: 1, payload: vec![0, 1] };
+        let e = parse_shard_frame(&f).unwrap_err();
+        assert!(e.contains("want none"), "{e}");
+        // Unknown verb names the vocabulary.
+        let f = Frame { verb: 200, id: 1, payload: Vec::new() };
+        let e = parse_shard_frame(&f).unwrap_err();
+        assert!(e.contains("unknown frame verb 200"), "{e}");
+        // A well-formed means frame dispatches.
+        let enc = means_request_frame(8, 2, &[1.0, 2.0]).unwrap();
+        let f = Frame {
+            verb: VERB_MEANS,
+            id: 8,
+            payload: enc[frame::HEADER_BYTES..].to_vec(),
+        };
+        let req = parse_shard_frame(&f).unwrap();
+        assert_eq!(req.id, 8);
+        match req.call {
+            ShardCall::Means { batch, ref proj_t } => {
+                assert_eq!(batch, 2);
+                assert_eq!(proj_t.len(), 2);
+            }
+            _ => panic!("wrong call"),
+        }
+    }
+
+    #[test]
+    fn hello_from_either_wire_funnels_through_parse_hello() {
+        let h = sample_hello();
+        let line = hello_response_line(21, &h);
+        let ok = hello_from_msg(&WireMsg::Line(line.clone()), 21)
+            .unwrap();
+        assert!(heads_identical(&ok.head, &h.head));
+        let fr = Frame {
+            verb: VERB_HELLO,
+            id: 21,
+            payload: line.clone().into_bytes(),
+        };
+        let ok = hello_from_msg(&WireMsg::Frame(fr), 21).unwrap();
+        assert!(heads_identical(&ok.head, &h.head));
+        // Wrong id, error verb, wrong verb, bad UTF-8: all descriptive.
+        let fr = Frame {
+            verb: VERB_HELLO,
+            id: 20,
+            payload: line.clone().into_bytes(),
+        };
+        let e = hello_from_msg(&WireMsg::Frame(fr), 21).unwrap_err();
+        assert!(e.contains("does not match"), "{e}");
+        let fr = Frame {
+            verb: frame::VERB_ERROR,
+            id: 21,
+            payload: b"nope".to_vec(),
+        };
+        let e = hello_from_msg(&WireMsg::Frame(fr), 21).unwrap_err();
+        assert!(e.contains("nope"), "{e}");
+        let fr = Frame { verb: VERB_MEANS, id: 21, payload: Vec::new() };
+        let e = hello_from_msg(&WireMsg::Frame(fr), 21).unwrap_err();
+        assert!(e.contains("verb"), "{e}");
+        let fr = Frame {
+            verb: VERB_HELLO,
+            id: 21,
+            payload: vec![0xFF, 0xFE],
+        };
+        let e = hello_from_msg(&WireMsg::Frame(fr), 21).unwrap_err();
+        assert!(e.contains("UTF-8"), "{e}");
+    }
+
+    #[test]
     fn remote_options_defaults_are_sane() {
         let o = RemoteOptions::default();
         assert_eq!(o.timeout, Duration::from_secs(5));
         assert!(o.hedge_factor > 1.0);
         assert!(o.hedge_min <= o.hedge_initial);
         assert!(o.backoff_base < o.backoff_cap);
+        assert_eq!(o.wire, WireMode::Binary);
         let o2 = RemoteOptions::with_timeout(Duration::from_millis(123));
         assert_eq!(o2.timeout, Duration::from_millis(123));
         assert_eq!(o2.hedge_initial, o.hedge_initial);
         assert_eq!(o2.backoff_cap, o.backoff_cap);
+        assert_eq!(o2.wire, WireMode::Binary);
     }
 
     #[test]

@@ -47,7 +47,7 @@ pub use batch::BatchScratch;
 pub use fused::{FusedMultiSketch, FusedScratch};
 pub use multiclass::MultiSketch;
 pub use quant::{GatherLanes, QuantBits, QuantScratch, QuantSketch};
-pub use srp::SrpSketch;
+pub use srp::{SrpScratch, SrpSketch};
 
 use crate::kernel::KernelParams;
 use crate::lsh::{concat, LshFamily, SparseL2Lsh};

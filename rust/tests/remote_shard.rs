@@ -34,6 +34,7 @@
 #![cfg(target_os = "linux")]
 
 use repsketch::coordinator::batcher::BatcherConfig;
+use repsketch::coordinator::net::WireMode;
 use repsketch::coordinator::{
     backend, BackendKind, Engine, Request, Router, RouterConfig,
 };
@@ -554,6 +555,19 @@ fn shard_server_rejects_malformed_lines_without_dying() {
     assert_eq!(hello.n_shards, 2);
 }
 
+/// Client options pinned to the JSON line wire — what the scripted
+/// line-reading mocks below require (they `read_line` requests, so the
+/// binary-frame default would leave them blocked waiting for a
+/// newline).  Real shard servers in this file stay on the default
+/// binary wire; the JSON lane keeps its own coverage through these
+/// mocks and the bench's framing axis.
+fn json_wire_opts(timeout: Duration) -> RemoteOptions {
+    RemoteOptions {
+        wire: WireMode::Json,
+        ..RemoteOptions::with_timeout(timeout)
+    }
+}
+
 /// A scripted fake shard: answers the handshake honestly (so the
 /// client's connect succeeds), then feeds a crafted means line.  Every
 /// crafted corruption must fail the batch with a protocol error — the
@@ -615,6 +629,7 @@ fn coordinator_rejects_corrupt_mean_matrices() {
             row_start: sh.row_start,
             row_end: sh.row_end,
         },
+        seq: 0,
     };
     let d = sharded.head.d;
     let row = vec![0.25f32; d];
@@ -671,11 +686,12 @@ fn coordinator_rejects_corrupt_mean_matrices() {
     ];
     for (name, craft, needle) in cases {
         let (addr, handle) = mock_shard_once(hello.clone(), craft);
-        let mut engine = backend::RemoteShardedEngine::connect(
-            vec![addr],
-            Duration::from_secs(10),
-        )
-        .unwrap_or_else(|e| panic!("{name}: connect: {e}"));
+        let mut engine =
+            backend::RemoteShardedEngine::connect_replicated(
+                vec![vec![addr]],
+                json_wire_opts(Duration::from_secs(10)),
+            )
+            .unwrap_or_else(|e| panic!("{name}: connect: {e}"));
         let err = engine
             .eval_batch(std::slice::from_ref(&row))
             .expect_err("corrupt means must fail the batch");
@@ -1115,6 +1131,7 @@ fn hedged_duplicate_answers_do_not_poison_estimates() {
             row_start: sh.row_start,
             row_end: sh.row_end,
         },
+        seq: 0,
     };
     // Replica A straggles 700 ms on every means call; replica B
     // answers immediately.  Distinct constants prove who won.
@@ -1125,8 +1142,7 @@ fn hedged_duplicate_answers_do_not_poison_estimates() {
         lg,
     );
     let (addr_b, hb) = mock_replica(hello, Duration::ZERO, 0.5, lg);
-    let mut opts =
-        RemoteOptions::with_timeout(Duration::from_secs(10));
+    let mut opts = json_wire_opts(Duration::from_secs(10));
     opts.hedge_initial = Duration::from_millis(50);
     opts.hedge_min = Duration::from_millis(50);
     let mut set = RemoteShardSet::connect_replicated(

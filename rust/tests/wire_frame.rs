@@ -1,0 +1,965 @@
+//! Binary shard-plane framing: hostile-input battery (both
+//! directions), the wire bugs the JSON era left behind, and
+//! cross-framing bit-identity (Linux-only, artifact-free).
+//!
+//! What is locked here:
+//!
+//! 1. **Server-side hostile frames** — over-cap declared lengths are
+//!    refused per-frame with the id echoed (the connection survives
+//!    and keeps serving), corrupt headers (magic/version/reserved)
+//!    answer once and close, every malformed shard verb payload gets
+//!    a descriptive error frame, and one `Auto` port answers binary
+//!    frames and JSON lines alike.  The `stats` verb surfaces the
+//!    frame-layer reject counters.
+//!
+//! 2. **Oversize-line id recovery** — a request line over the 256 KB
+//!    cap still gets its error correlated by id even when `"id"` sits
+//!    hundreds of KB into the line (the JSON era only recovered ids
+//!    from the first few KB).
+//!
+//! 3. **Write-cap refusal** — a single response larger than the write
+//!    cap is refused per-request with a descriptive error; the
+//!    connection (and the requests behind it) survive.
+//!
+//! 4. **Cross-framing bit-identity** — remote == local == scalar,
+//!    bit-for-bit, on BOTH wires, for `RaceSketch`,
+//!    `FusedMultiSketch` (with scores), and a quantized shard set —
+//!    plus a binary batch far above the old JSON line-cap ceiling.
+//!
+//! 5. **Client-side hostile frames** — a mock shard feeding back
+//!    error frames, wrong verbs, truncated payloads, over-cap
+//!    declared lengths, and corrupt headers fails the batch with an
+//!    error naming the shard; nothing reaches the merge.
+//!
+//! 6. **SRP loopback** — `serve --srp NAME=FILE` round-trips a query
+//!    through a real child process bit-identically to the local
+//!    scalar path.
+#![cfg(target_os = "linux")]
+
+use repsketch::coordinator::batcher::BatcherConfig;
+use repsketch::coordinator::net::frame::{
+    self, FRAME_MAGIC, FRAME_VERSION, HEADER_BYTES,
+    MAX_FRAME_PAYLOAD_BYTES, VERB_ERROR,
+};
+use repsketch::coordinator::net::NetOptions;
+use repsketch::coordinator::net::WireMode;
+use repsketch::coordinator::{
+    backend, BackendKind, BatchOutput, Engine, Request, Router,
+    RouterConfig, ScoreMatrix, Server,
+};
+use repsketch::kernel::KernelParams;
+use repsketch::shard::remote::{
+    hello_response_line, parse_hello, serve_local, RemoteOptions,
+    ShardHello, ShardService, VERB_HELLO, VERB_MEANS, VERB_STATS,
+    VERB_UPDATE,
+};
+use repsketch::shard::ShardedSketch;
+use repsketch::sketch::{
+    FusedMultiSketch, FusedScratch, GatherLanes, QuantBits, QuantSketch,
+    QueryScratch, RaceSketch, SketchConfig, SrpScratch, SrpSketch,
+};
+use repsketch::util::json;
+use repsketch::util::rng::SplitMix64;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Child-process and thread-sensitive tests serialize within this
+/// binary (test binaries themselves run one at a time).
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Same deterministic fixture family as `tests/remote_shard.rs`:
+/// d = 6, p = 4, 48 rows, 6 groups — small enough to serve instantly,
+/// ragged enough to exercise the group plan.
+fn fault_sketch() -> RaceSketch {
+    let mut rng = SplitMix64::new(0x2E04);
+    let (d, p, m) = (6usize, 4usize, 24usize);
+    let kp = KernelParams {
+        d,
+        p,
+        m,
+        a: (0..d * p).map(|_| rng.next_gaussian() as f32 * 0.5).collect(),
+        x: (0..m * p).map(|_| rng.next_gaussian() as f32).collect(),
+        alpha: (0..m).map(|_| 0.5 + rng.next_f32()).collect(),
+        width: 2.0,
+        lsh_seed: rng.next_u64(),
+        k_per_row: 2,
+        default_rows: 48,
+        default_cols: 16,
+    };
+    RaceSketch::build(
+        &kp,
+        &SketchConfig { groups: 6, ..SketchConfig::default() },
+    )
+}
+
+fn random_queries(rng: &mut SplitMix64, batch: usize, d: usize)
+    -> Vec<f32> {
+    (0..batch * d)
+        .map(|_| {
+            if rng.next_f32() < 0.15 {
+                0.0
+            } else {
+                rng.next_gaussian() as f32
+            }
+        })
+        .collect()
+}
+
+fn rows_of(queries: &[f32], d: usize) -> Vec<Vec<f32>> {
+    queries.chunks_exact(d).map(|r| r.to_vec()).collect()
+}
+
+fn json_wire_opts(timeout: Duration) -> RemoteOptions {
+    RemoteOptions {
+        wire: WireMode::Json,
+        ..RemoteOptions::with_timeout(timeout)
+    }
+}
+
+/// A bound reactor served from its own thread, stopped and joined on
+/// drop — the handler-level twin of `server_reactor.rs`'s `Running`.
+struct Bound {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Bound {
+    fn start(server: Server) -> Bound {
+        let addr = server.local_addr();
+        let stop = server.stop_handle();
+        let handle =
+            std::thread::spawn(move || server.serve().expect("serve"));
+        Bound { addr, stop, handle: Some(handle) }
+    }
+
+    fn connect(&self) -> TcpStream {
+        let s = TcpStream::connect(self.addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        s
+    }
+}
+
+impl Drop for Bound {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            h.join().unwrap();
+        }
+    }
+}
+
+/// Read one complete frame (`None` on a clean close mid-header).
+fn read_frame(stream: &mut TcpStream) -> Option<(u8, u64, Vec<u8>)> {
+    let mut h = [0u8; HEADER_BYTES];
+    if stream.read_exact(&mut h).is_err() {
+        return None;
+    }
+    let fh = frame::parse_header(&h).expect("server sent a valid header");
+    let mut payload = vec![0u8; fh.len];
+    stream.read_exact(&mut payload).expect("frame payload");
+    Some((fh.verb, fh.id, payload))
+}
+
+/// Expect an error frame with `id`, return its message.
+fn expect_error_frame(stream: &mut TcpStream, id: u64) -> String {
+    let (verb, got_id, payload) =
+        read_frame(stream).expect("server must answer, not close");
+    assert_eq!(verb, VERB_ERROR, "want an error frame");
+    assert_eq!(got_id, id, "error frame must echo the request id");
+    String::from_utf8(payload).expect("error messages are UTF-8")
+}
+
+/// A raw header with arbitrary field bytes (for corrupting what
+/// `frame::encode` refuses to produce).
+fn raw_header(
+    magic: [u8; 4],
+    version: u8,
+    verb: u8,
+    reserved: [u8; 2],
+    id: u64,
+    len: u32,
+) -> Vec<u8> {
+    let mut h = Vec::with_capacity(HEADER_BYTES);
+    h.extend_from_slice(&magic);
+    h.push(version);
+    h.push(verb);
+    h.extend_from_slice(&reserved);
+    h.extend_from_slice(&id.to_le_bytes());
+    h.extend_from_slice(&len.to_le_bytes());
+    h
+}
+
+fn read_json_line(reader: &mut impl BufRead) -> String {
+    let mut line = String::new();
+    let n = reader.read_line(&mut line).unwrap();
+    assert!(n > 0, "server closed the connection unexpectedly");
+    line.trim().to_string()
+}
+
+/// Bind one shard of a 1-shard set with a test-shrunk frame cap.
+fn tiny_cap_shard_server(frame_cap: usize) -> (ShardedSketch, Bound) {
+    let sharded = ShardedSketch::from_race(&fault_sketch(), 1);
+    let service = Arc::new(ShardService::new(
+        sharded.head.clone(),
+        sharded.shards[0].clone(),
+        1,
+    ));
+    let mut opts = service.net_options();
+    opts.frame_cap = frame_cap;
+    let server =
+        Server::bind_handler_opts(service, "127.0.0.1:0", opts).unwrap();
+    (sharded, Bound::start(server))
+}
+
+// ---------------------------------------------------------------------------
+// 1. Server-side hostile frames
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shard_server_survives_hostile_frames() {
+    let (_sharded, bound) = tiny_cap_shard_server(1024);
+    let mut s = bound.connect();
+
+    // Over-cap declared length: refused with the id echoed, the 2000
+    // payload bytes are discarded as they stream, and the SAME
+    // connection keeps serving.
+    s.write_all(&frame::encode(VERB_MEANS, 21, &vec![0u8; 2000]))
+        .unwrap();
+    let msg = expect_error_frame(&mut s, 21);
+    assert!(
+        msg.contains("2000") && msg.contains("frame cap"),
+        "{msg}"
+    );
+
+    // Proof of life: a real binary hello on the same connection.
+    s.write_all(&frame::encode(VERB_HELLO, 22, &[])).unwrap();
+    let (verb, id, payload) = read_frame(&mut s).expect("hello answer");
+    assert_eq!((verb, id), (VERB_HELLO, 22));
+    let hello = parse_hello(
+        std::str::from_utf8(&payload).expect("hello payload is JSON"),
+        22,
+    )
+    .expect("hello parses");
+    assert_eq!(hello.shard_index, 0);
+    assert_eq!(hello.n_shards, 1);
+
+    // Unknown verb.
+    s.write_all(&frame::encode(9, 23, &[])).unwrap();
+    let msg = expect_error_frame(&mut s, 23);
+    assert!(msg.contains("unknown frame verb"), "{msg}");
+
+    // Hello carries no payload.
+    s.write_all(&frame::encode(VERB_HELLO, 24, &[1, 2, 3, 4])).unwrap();
+    let msg = expect_error_frame(&mut s, 24);
+    assert!(msg.contains("want none"), "{msg}");
+
+    // Means payload that is not a whole number of f32s.
+    let mut bad = 1u32.to_le_bytes().to_vec();
+    bad.extend_from_slice(&[0, 1, 2]);
+    s.write_all(&frame::encode(VERB_MEANS, 25, &bad)).unwrap();
+    let msg = expect_error_frame(&mut s, 25);
+    assert!(msg.contains("whole number of f32s"), "{msg}");
+
+    // Zero batch.
+    s.write_all(&frame::encode(VERB_MEANS, 26, &0u32.to_le_bytes()))
+        .unwrap();
+    let msg = expect_error_frame(&mut s, 26);
+    assert!(msg.contains("b must be at least 1"), "{msg}");
+
+    // Non-finite projection floats.
+    let mut nan = 1u32.to_le_bytes().to_vec();
+    for v in [0.5f32, f32::NAN, 0.25, 0.125] {
+        nan.extend_from_slice(&v.to_le_bytes());
+    }
+    s.write_all(&frame::encode(VERB_MEANS, 27, &nan)).unwrap();
+    let msg = expect_error_frame(&mut s, 27);
+    assert!(msg.contains("finite"), "{msg}");
+
+    // Projection length disagrees with the declared batch (p = 4, so
+    // B = 2 wants 8 floats, not 4).
+    let mut short = 2u32.to_le_bytes().to_vec();
+    for v in [0.5f32, 0.25, 0.125, 0.0625] {
+        short.extend_from_slice(&v.to_le_bytes());
+    }
+    s.write_all(&frame::encode(VERB_MEANS, 28, &short)).unwrap();
+    let msg = expect_error_frame(&mut s, 28);
+    assert!(msg.contains("proj has 4 values"), "{msg}");
+
+    // After all of it the connection still answers hello.
+    s.write_all(&frame::encode(VERB_HELLO, 29, &[])).unwrap();
+    let (verb, id, _) = read_frame(&mut s).expect("still serving");
+    assert_eq!((verb, id), (VERB_HELLO, 29));
+}
+
+#[test]
+fn corrupt_frame_headers_answer_once_and_close() {
+    let (_sharded, bound) = tiny_cap_shard_server(1024);
+
+    // Bad magic.  First byte stays `R` so `WireMode::Auto` sniffs the
+    // binary wire — a non-`R` first byte is, by design, a JSON line.
+    let cases: Vec<(Vec<u8>, &str)> = vec![
+        (
+            raw_header(*b"RXBF", FRAME_VERSION, VERB_HELLO, [0, 0], 7, 0),
+            "magic",
+        ),
+        (
+            raw_header(FRAME_MAGIC, 2, VERB_HELLO, [0, 0], 7, 0),
+            "version",
+        ),
+        (
+            raw_header(FRAME_MAGIC, FRAME_VERSION, VERB_HELLO, [9, 9], 7, 0),
+            "reserved",
+        ),
+    ];
+    for (header, needle) in cases {
+        let mut s = bound.connect();
+        s.write_all(&header).unwrap();
+        // Corrupt headers cannot carry a trustworthy id: answered as
+        // id 0, then the stream is poisoned and closed.
+        let msg = expect_error_frame(&mut s, 0);
+        assert!(
+            msg.contains("bad frame") && msg.contains(needle),
+            "{needle}: {msg}"
+        );
+        assert!(
+            read_frame(&mut s).is_none(),
+            "{needle}: connection must close after a corrupt header"
+        );
+    }
+
+    // A truncated header followed by a disconnect must not wedge the
+    // reactor: the next connection serves normally.
+    {
+        let mut s = bound.connect();
+        s.write_all(&frame::encode(VERB_HELLO, 1, &[])[..7]).unwrap();
+    }
+    let mut s = bound.connect();
+    s.write_all(&frame::encode(VERB_HELLO, 30, &[])).unwrap();
+    let (verb, id, _) = read_frame(&mut s).expect("server survived");
+    assert_eq!((verb, id), (VERB_HELLO, 30));
+
+    // The SAME port answers a JSON hello line (Auto sniff), and the
+    // stats verb surfaces the frame-layer rejects this test caused.
+    let mut s = bound.connect();
+    s.write_all(b"{\"id\":31,\"shard\":\"hello\"}\n").unwrap();
+    let mut reader = BufReader::new(s.try_clone().unwrap());
+    let line = read_json_line(&mut reader);
+    let hello = parse_hello(&line, 31).expect("JSON hello on Auto port");
+    assert_eq!(hello.shard_index, 0);
+
+    let mut s = bound.connect();
+    s.write_all(&frame::encode(VERB_STATS, 32, &[])).unwrap();
+    let (verb, id, payload) = read_frame(&mut s).expect("stats answer");
+    assert_eq!((verb, id), (VERB_STATS, 32));
+    let text = String::from_utf8(payload).expect("stats payload is JSON");
+    let stats = json::parse(&text).expect("stats parses");
+    let wire = stats
+        .get("stats")
+        .and_then(|s| s.get("wire"))
+        .expect("stats carries the wire reject counters");
+    assert!(
+        wire.get("bad_headers").and_then(|v| v.as_u64()).unwrap_or(0)
+            >= 3,
+        "three corrupt headers must be counted: {text}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 2. Oversize-line id recovery (the 4 KB-window bug)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn oversize_line_id_recovered_from_deep_in_the_line() {
+    let sharded = ShardedSketch::from_race(&fault_sketch(), 2);
+    let servers = serve_local(&sharded).expect("serve local shard set");
+    let mut s = TcpStream::connect(&servers.addrs[0]).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut reader = BufReader::new(s.try_clone().unwrap());
+
+    // `"id"` ~200 KB in: past any small scan window, still inside the
+    // buffered prefix when the 256 KB cap fires.
+    let mut line = String::from("{\"x\":[");
+    while line.len() < 200 * 1024 {
+        line.push_str("0,");
+    }
+    line.push_str("0],\"id\":777001,\"pad\":[");
+    while line.len() < 300 * 1024 {
+        line.push_str("0,");
+    }
+    line.push_str("0]}\n");
+    s.write_all(line.as_bytes()).unwrap();
+    let r = read_json_line(&mut reader);
+    assert!(
+        r.contains("\"id\":777001") && r.contains("cap"),
+        "oversize reject must carry the deep id: {r}"
+    );
+
+    // `"id"` ~280 KB in: PAST the cap — recovered from the discarded
+    // spill, not from any buffer.
+    let mut line = String::from("{\"x\":[");
+    while line.len() < 280 * 1024 {
+        line.push_str("0,");
+    }
+    line.push_str("0],\"id\":777002}\n");
+    s.write_all(line.as_bytes()).unwrap();
+    let r = read_json_line(&mut reader);
+    assert!(
+        r.contains("\"id\":777002") && r.contains("cap"),
+        "oversize reject must carry the spilled id: {r}"
+    );
+
+    // The connection survived both rejects.
+    s.write_all(b"{\"id\":33,\"shard\":\"hello\"}\n").unwrap();
+    let r = read_json_line(&mut reader);
+    let hello = parse_hello(&r, 33).expect("hello after oversize lines");
+    assert_eq!(hello.n_shards, 2);
+}
+
+// ---------------------------------------------------------------------------
+// 3. Write-cap refusal (per-request, not per-connection)
+// ---------------------------------------------------------------------------
+
+/// An engine whose score matrix cannot fit a tiny write cap.
+struct WideEngine;
+
+impl Engine for WideEngine {
+    fn dim(&self) -> usize {
+        4
+    }
+    fn eval_batch(&mut self, rows: &[Vec<f32>]) -> anyhow::Result<Vec<f32>> {
+        Ok(vec![0.0; rows.len()])
+    }
+    fn eval_batch_ex(
+        &mut self,
+        rows: &[Vec<f32>],
+        want_scores: bool,
+    ) -> anyhow::Result<BatchOutput> {
+        let n_classes = 4096;
+        let scores = want_scores.then(|| ScoreMatrix {
+            n_classes,
+            flat: vec![0.5; rows.len() * n_classes],
+        });
+        Ok(BatchOutput { values: vec![0.0; rows.len()], scores })
+    }
+}
+
+#[test]
+fn over_cap_response_is_refused_per_request_not_per_connection() {
+    let router = Router::new();
+    let cfg = RouterConfig {
+        batcher: BatcherConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 1 << 16,
+        },
+    };
+    router.add_lane(
+        "wide",
+        BackendKind::Multiclass,
+        || Ok(Box::new(WideEngine) as _),
+        &cfg,
+    );
+    let server = Server::bind_handler_opts(
+        Arc::new(router),
+        "127.0.0.1:0",
+        NetOptions { write_cap: 2048, ..NetOptions::default() },
+    )
+    .unwrap();
+    let bound = Bound::start(server);
+    let mut s = bound.connect();
+    let mut reader = BufReader::new(s.try_clone().unwrap());
+
+    // 4096 scores serialize far past the 2048-byte cap: refused with
+    // the id, descriptively.
+    let mut line = Request {
+        id: 1,
+        model: "wide".into(),
+        backend: BackendKind::Multiclass,
+        features: vec![0.0; 4],
+        want_scores: true,
+        update: None,
+    }
+    .to_line();
+    line.push('\n');
+    s.write_all(line.as_bytes()).unwrap();
+    let r = read_json_line(&mut reader);
+    assert!(
+        r.contains("\"id\":1") && r.contains("write cap"),
+        "over-cap response must be refused by id: {r}"
+    );
+
+    // The refusal was per-REQUEST: the same connection still answers
+    // a response that fits.
+    let mut line = Request {
+        id: 2,
+        model: "wide".into(),
+        backend: BackendKind::Multiclass,
+        features: vec![0.0; 4],
+        want_scores: false,
+        update: None,
+    }
+    .to_line();
+    line.push('\n');
+    s.write_all(line.as_bytes()).unwrap();
+    let r = read_json_line(&mut reader);
+    assert!(
+        r.contains("\"id\":2") && r.contains("\"y\":"),
+        "connection must survive a refused response: {r}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 4. Cross-framing bit-identity
+// ---------------------------------------------------------------------------
+
+/// Remote over BOTH wires == local sharded plane == scalar, bitwise.
+#[test]
+fn race_bit_identical_on_both_wires() {
+    let sk = fault_sketch();
+    let d = sk.d;
+    let mut rng = SplitMix64::new(0xF2A1);
+    let batch = 17;
+    let queries = random_queries(&mut rng, batch, d);
+    let rows = rows_of(&queries, d);
+    let mut qs = QueryScratch::default();
+    let want: Vec<f32> = (0..batch)
+        .map(|b| sk.query_with(&queries[b * d..(b + 1) * d], &mut qs))
+        .collect();
+    for &shards in &[1usize, 2] {
+        let sharded = ShardedSketch::from_race(&sk, shards);
+        let local = sharded.scores_batch(&queries);
+        let servers = serve_local(&sharded).expect("serve");
+        for wire in [WireMode::Binary, WireMode::Json] {
+            let mut engine =
+                backend::RemoteShardedEngine::connect_replicated(
+                    servers.addrs.iter().map(|a| vec![a.clone()]).collect(),
+                    RemoteOptions {
+                        wire,
+                        ..RemoteOptions::with_timeout(
+                            Duration::from_secs(10),
+                        )
+                    },
+                )
+                .expect("connect");
+            let got = engine.eval_batch(&rows).expect("remote eval");
+            for (i, g) in got.iter().enumerate() {
+                assert_eq!(
+                    g.to_bits(),
+                    want[i].to_bits(),
+                    "{wire:?} shards={shards} row {i}: remote vs scalar"
+                );
+                assert_eq!(
+                    g.to_bits(),
+                    local[i].to_bits(),
+                    "{wire:?} shards={shards} row {i}: remote vs local"
+                );
+            }
+        }
+    }
+}
+
+fn fused_fixture() -> (FusedMultiSketch, usize) {
+    let mut rng = SplitMix64::new(0xF2A2);
+    let (n_classes, d, p, rows, cols, k) = (3usize, 5usize, 3usize, 24, 16, 2);
+    let shared_seed = rng.next_u64();
+    let a: Vec<f32> =
+        (0..d * p).map(|_| rng.next_gaussian() as f32 * 0.5).collect();
+    let per_class: Vec<KernelParams> = (0..n_classes)
+        .map(|_| {
+            let m = 8 + rng.next_range(8);
+            KernelParams {
+                d,
+                p,
+                m,
+                a: a.clone(),
+                x: (0..m * p).map(|_| rng.next_gaussian() as f32).collect(),
+                alpha: (0..m).map(|_| 0.5 + rng.next_f32()).collect(),
+                width: 2.0,
+                lsh_seed: shared_seed,
+                k_per_row: k,
+                default_rows: rows,
+                default_cols: cols,
+            }
+        })
+        .collect();
+    let cfg = SketchConfig {
+        rows: 0,
+        cols: 0,
+        groups: 4,
+        ..SketchConfig::default()
+    };
+    (FusedMultiSketch::build(&per_class, &cfg).unwrap(), d)
+}
+
+#[test]
+fn fused_scores_bit_identical_on_both_wires() {
+    let (fused, d) = fused_fixture();
+    let c_n = fused.n_classes();
+    let mut rng = SplitMix64::new(0xF2A3);
+    let batch = 9;
+    let queries = random_queries(&mut rng, batch, d);
+    let rows = rows_of(&queries, d);
+    let mut fs = FusedScratch::default();
+    let mut per = Vec::new();
+    let mut want = Vec::with_capacity(batch * c_n);
+    for b in 0..batch {
+        fused.scores_with(&queries[b * d..(b + 1) * d], &mut fs, &mut per);
+        want.extend_from_slice(&per);
+    }
+    let sharded = ShardedSketch::from_fused(&fused, 2);
+    let local = sharded.scores_batch(&queries);
+    assert_eq!(local.len(), want.len());
+    let servers = serve_local(&sharded).expect("serve");
+    for wire in [WireMode::Binary, WireMode::Json] {
+        let mut engine = backend::RemoteShardedEngine::connect_replicated(
+            servers.addrs.iter().map(|a| vec![a.clone()]).collect(),
+            RemoteOptions {
+                wire,
+                ..RemoteOptions::with_timeout(Duration::from_secs(10))
+            },
+        )
+        .expect("connect");
+        let out = engine.eval_batch_ex(&rows, true).expect("remote eval");
+        let scores = out.scores.expect("scores requested");
+        assert_eq!(scores.flat.len(), want.len());
+        for (i, g) in scores.flat.iter().enumerate() {
+            assert_eq!(
+                g.to_bits(),
+                want[i].to_bits(),
+                "{wire:?} slot {i}: remote vs scalar"
+            );
+            assert_eq!(
+                g.to_bits(),
+                local[i].to_bits(),
+                "{wire:?} slot {i}: remote vs local"
+            );
+        }
+    }
+}
+
+#[test]
+fn quant_bit_identical_on_both_wires() {
+    let sk = fault_sketch();
+    let d = sk.d;
+    let qs = QuantSketch::from_race(&sk, QuantBits::U8, GatherLanes::Lanes8);
+    let mut rng = SplitMix64::new(0xF2A4);
+    let batch = 11;
+    let queries = random_queries(&mut rng, batch, d);
+    let rows = rows_of(&queries, d);
+    let sharded = ShardedSketch::from_quant(&qs, 2);
+    let local = sharded.scores_batch(&queries);
+    let servers = serve_local(&sharded).expect("serve");
+    for wire in [WireMode::Binary, WireMode::Json] {
+        let mut engine = backend::RemoteShardedEngine::connect_replicated(
+            servers.addrs.iter().map(|a| vec![a.clone()]).collect(),
+            RemoteOptions {
+                wire,
+                ..RemoteOptions::with_timeout(Duration::from_secs(10))
+            },
+        )
+        .expect("connect");
+        let got = engine.eval_batch(&rows).expect("remote eval");
+        for (i, g) in got.iter().enumerate() {
+            assert_eq!(
+                g.to_bits(),
+                local[i].to_bits(),
+                "{wire:?} row {i}: remote vs local quant plane"
+            );
+        }
+    }
+}
+
+/// The tentpole's raison d'être: a batch whose projected payload the
+/// JSON line cap could never carry flows over the binary wire
+/// bit-identically, while the JSON wire refuses it with actionable
+/// numbers (and without sending anything).
+#[test]
+fn binary_carries_batches_above_the_json_line_cap() {
+    let sk = fault_sketch(); // p = 4
+    let d = sk.d;
+    let mut rng = SplitMix64::new(0xF2A5);
+    let batch = 8000; // p × B = 32_000 floats: > 256 KB as JSON, 128 KB raw
+    let queries = random_queries(&mut rng, batch, d);
+    let rows = rows_of(&queries, d);
+    let sharded = ShardedSketch::from_race(&sk, 2);
+    let local = sharded.scores_batch(&queries);
+    let servers = serve_local(&sharded).expect("serve");
+
+    let mut binary = backend::RemoteShardedEngine::connect(
+        servers.addrs.clone(),
+        Duration::from_secs(30),
+    )
+    .expect("connect binary");
+    let got = binary.eval_batch(&rows).expect("binary eval above ceiling");
+    assert_eq!(got.len(), batch);
+    for (i, g) in got.iter().enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            local[i].to_bits(),
+            "row {i}: above-ceiling binary batch must stay bit-identical"
+        );
+    }
+
+    let mut json_engine = backend::RemoteShardedEngine::connect_replicated(
+        servers.addrs.iter().map(|a| vec![a.clone()]).collect(),
+        json_wire_opts(Duration::from_secs(30)),
+    )
+    .expect("connect json");
+    let err = json_engine
+        .eval_batch(&rows)
+        .expect_err("the JSON wire cannot carry this batch");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("shard-plane line cap"),
+        "JSON refusal must name the line cap: {msg}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 5. Client-side hostile frames
+// ---------------------------------------------------------------------------
+
+/// A scripted binary mock shard: answers the handshake honestly over
+/// frames, then feeds the crafted bytes back for the means call.
+fn mock_binary_shard_once(
+    hello: ShardHello,
+    reply: impl Fn(u64) -> Vec<u8> + Send + 'static,
+) -> (String, std::thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || {
+        let Ok((mut stream, _)) = listener.accept() else { return };
+        loop {
+            let mut h = [0u8; HEADER_BYTES];
+            if stream.read_exact(&mut h).is_err() {
+                return;
+            }
+            let Ok(fh) = frame::parse_header(&h) else { return };
+            let mut payload = vec![0u8; fh.len];
+            if stream.read_exact(&mut payload).is_err() {
+                return;
+            }
+            let out = if fh.verb == VERB_HELLO {
+                frame::encode(
+                    VERB_HELLO,
+                    fh.id,
+                    hello_response_line(fh.id, &hello).as_bytes(),
+                )
+            } else {
+                reply(fh.id)
+            };
+            if stream.write_all(&out).and_then(|_| stream.flush()).is_err()
+            {
+                return;
+            }
+        }
+    });
+    (addr, handle)
+}
+
+#[test]
+fn coordinator_rejects_hostile_binary_shards() {
+    let sk = fault_sketch();
+    let sharded = ShardedSketch::from_race(&sk, 1);
+    let sh = &sharded.shards[0];
+    let hello = ShardHello {
+        head: sharded.head.clone(),
+        shard_index: 0,
+        n_shards: 1,
+        span: repsketch::shard::ShardSpan {
+            group_start: sh.group_start,
+            group_end: sh.group_end,
+            row_start: sh.row_start,
+            row_end: sh.row_end,
+        },
+        seq: 0,
+    };
+    let d = sharded.head.d;
+    let row = vec![0.25f32; d];
+
+    let cases: Vec<(&str, Box<dyn Fn(u64) -> Vec<u8> + Send>, &str)> = vec![
+        (
+            "error-frame",
+            Box::new(|id| frame::error_frame(id, "kernel exploded")),
+            "answered an error",
+        ),
+        (
+            "wrong-verb",
+            Box::new(|id| frame::encode(VERB_UPDATE, id, &[])),
+            "frame verb",
+        ),
+        (
+            "truncated-means",
+            Box::new(|id| frame::encode(VERB_MEANS, id, &[1, 2, 3, 4, 5])),
+            "prelude",
+        ),
+        (
+            // A header declaring more than the client's frame cap: the
+            // replica is dropped before any payload is buffered.
+            "oversize-declared",
+            Box::new(|id| {
+                raw_header(
+                    FRAME_MAGIC,
+                    FRAME_VERSION,
+                    VERB_MEANS,
+                    [0, 0],
+                    id,
+                    (MAX_FRAME_PAYLOAD_BYTES as u32).saturating_add(1),
+                )
+            }),
+            "frame cap",
+        ),
+        (
+            "corrupt-header",
+            Box::new(|_| vec![0xFF; HEADER_BYTES]),
+            "corrupt frame header",
+        ),
+    ];
+    for (name, craft, needle) in cases {
+        let (addr, handle) = mock_binary_shard_once(hello.clone(), craft);
+        let mut engine = backend::RemoteShardedEngine::connect_replicated(
+            vec![vec![addr]],
+            RemoteOptions::with_timeout(Duration::from_secs(10)),
+        )
+        .unwrap_or_else(|e| panic!("{name}: connect: {e}"));
+        let err = engine
+            .eval_batch(std::slice::from_ref(&row))
+            .expect_err("hostile frames must fail the batch");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("shard 0") && msg.contains(needle),
+            "{name}: error {msg:?} must name shard 0 and contain \
+             {needle:?}"
+        );
+        drop(engine);
+        let _ = handle.join();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 6. SRP loopback through a real `serve --srp` child
+// ---------------------------------------------------------------------------
+
+struct ServeProc {
+    child: Child,
+    addr: String,
+}
+
+impl Drop for ServeProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn spawn_serve_srp(model: &str, rsrp: &std::path::Path) -> ServeProc {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_repsketch"))
+        .args([
+            "serve",
+            "--srp",
+            &format!("{model}={}", rsrp.display()),
+            "--addr",
+            "127.0.0.1:0",
+        ])
+        // Point the artifacts root somewhere empty: with `--srp` and
+        // no `--datasets`, missing dataset lanes are skipped.
+        .env("RS_ARTIFACTS", rsrp.parent().unwrap().join("no-artifacts"))
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn repsketch serve");
+    let stdout = child.stdout.take().expect("child stdout piped");
+    let mut reader = BufReader::new(stdout);
+    let addr;
+    loop {
+        let mut l = String::new();
+        let n = reader.read_line(&mut l).expect("read child stdout");
+        assert!(n > 0, "serve exited before announcing its address");
+        if let Some(rest) = l.trim().strip_prefix("serving on ") {
+            addr = rest
+                .split_whitespace()
+                .next()
+                .expect("address after the banner")
+                .to_string();
+            break;
+        }
+    }
+    ServeProc { child, addr }
+}
+
+#[test]
+fn serve_srp_round_trips_bit_identically() {
+    let _g = serial();
+    let mut rng = SplitMix64::new(0x5249);
+    let (d, p, m) = (7usize, 3usize, 16usize);
+    let kp = KernelParams {
+        d,
+        p,
+        m,
+        a: (0..d * p).map(|_| rng.next_gaussian() as f32 * 0.5).collect(),
+        x: (0..m * p).map(|_| rng.next_gaussian() as f32).collect(),
+        alpha: (0..m).map(|_| 0.5 + rng.next_f32()).collect(),
+        width: 2.0,
+        lsh_seed: rng.next_u64(),
+        k_per_row: 2,
+        default_rows: 32,
+        default_cols: 16,
+    };
+    let cfg = SketchConfig { groups: 4, ..SketchConfig::default() };
+    let sk = SrpSketch::build(&kp, &cfg);
+
+    let dir = std::env::temp_dir()
+        .join(format!("repsketch_wire_frame_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("m.rsrp");
+    sk.save(&path).expect("save RSRP");
+
+    let proc = spawn_serve_srp("m", &path);
+    let mut s = TcpStream::connect(&proc.addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut reader = BufReader::new(s.try_clone().unwrap());
+    let mut scratch = SrpScratch::default();
+    for id in 1..=3u64 {
+        let x: Vec<f32> =
+            (0..d).map(|_| rng.next_gaussian() as f32).collect();
+        let want = sk.query_with(&x, &mut scratch);
+        let mut line = Request {
+            id,
+            model: "m".into(),
+            backend: BackendKind::Sketch,
+            features: x,
+            want_scores: false,
+            update: None,
+        }
+        .to_line();
+        line.push('\n');
+        s.write_all(line.as_bytes()).unwrap();
+        let r = read_json_line(&mut reader);
+        let j = json::parse(&r).expect("response parses");
+        assert_eq!(
+            j.get("id").and_then(|v| v.as_u64()),
+            Some(id),
+            "{r}"
+        );
+        let y = j
+            .get("y")
+            .and_then(|v| v.as_f64())
+            .unwrap_or_else(|| panic!("no y in {r}"));
+        assert_eq!(
+            (y as f32).to_bits(),
+            want.to_bits(),
+            "id {id}: served SRP estimate diverges from the scalar path"
+        );
+    }
+    drop(proc);
+    let _ = std::fs::remove_dir_all(&dir);
+}
